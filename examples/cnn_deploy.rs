@@ -1,0 +1,67 @@
+//! CNN deployment planning: map every zoo network onto every platform with
+//! the fitted models, and compare precision/block trade-offs — the use case
+//! the paper's introduction motivates (adapting convolution layers to the
+//! hardware budget without synthesis iterations).
+//!
+//! Run: `cargo run --release --example cnn_deploy`
+
+use convkit::blocks::BlockKind;
+use convkit::cnn::{plan_deployment, zoo};
+use convkit::coordinator::dse::DseEngine;
+use convkit::extend::{energy_estimate, latency_estimate, PowerModel};
+use convkit::platform::Platform;
+
+fn main() -> convkit::Result<()> {
+    let rep = DseEngine::new().run()?;
+
+    for net in zoo::all() {
+        println!("=== {} ({} MACs/inference) ===", net.name, net.macs());
+        for platform in [Platform::zcu104(), Platform::kv260()] {
+            match plan_deployment(&net, &rep.registry, &platform, 0.8) {
+                Ok(plan) => {
+                    println!(
+                        "  {:>7}: {:>3} block instances, LLUT {:.2}% DSP {:.2}% (fits: {})",
+                        platform.name,
+                        plan.layers.iter().map(|l| l.instances).sum::<u64>(),
+                        plan.utilization[0],
+                        plan.utilization[4],
+                        plan.fits
+                    );
+                    for lp in &plan.layers {
+                        println!(
+                            "           layer {}: {:>3} × {}",
+                            lp.layer,
+                            lp.instances,
+                            lp.block.name()
+                        );
+                    }
+                }
+                Err(e) => println!("  {:>7}: {e}", platform.name),
+            }
+        }
+        // Latency/energy spectrum across block choices (extensions module).
+        for kind in BlockKind::ALL {
+            if net.layers.iter().any(|l| l.coeff_bits > 8) && kind == BlockKind::Conv3 {
+                continue; // Conv3 cannot run wide coefficients
+            }
+            let lat = latency_estimate(&net, kind)?;
+            let unit = rep.unit_costs(net.layers[0].data_bits, net.layers[0].coeff_bits)?;
+            let en = energy_estimate(
+                &unit[kind as usize],
+                &PowerModel::default(),
+                convkit::extend::latency::clock_mhz(kind),
+                0.25,
+                lat.cycles_folded,
+            );
+            println!(
+                "  all-{:<5}: {:>9.0} fps parallel / {:>7.0} fps folded, {:.2} W/block-ish",
+                kind.name(),
+                lat.fps_parallel,
+                lat.fps_folded,
+                en.total_w
+            );
+        }
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Design-space exploration: regenerate the paper's full evaluation —
+//! correlation quadrants (Table 3), model error metrics (Table 4), the
+//! fitted-surface figures, and the 80 %-utilization allocation study
+//! (Table 5) — on any platform in the catalog.
+//!
+//! Run: `cargo run --release --example dse_sweep [platform] [cap]`
+
+use convkit::coordinator::dse::DseEngine;
+use convkit::platform::Platform;
+use convkit::report;
+
+fn main() -> convkit::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let platform = args
+        .first()
+        .and_then(|n| Platform::by_name(n))
+        .unwrap_or_else(Platform::zcu104);
+    let cap: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(0.8);
+
+    let rep = DseEngine::new().run()?;
+    println!("{}", report::table3(&rep, true));
+    println!("{}", report::table4(&rep, true));
+    for f in 1..=3 {
+        println!("{}", report::figure_surface(&rep, f)?);
+    }
+    println!("{}", report::table5(&rep, &platform, 8, 8, cap, true)?);
+
+    // Cross-platform view (the paper's "peut orienter le choix de la
+    // plateforme FPGA"): the same models, every catalogued device.
+    println!("Allocation capacity across the platform catalog (8-bit, {:.0}% cap):", cap * 100.0);
+    for p in Platform::all() {
+        let rows = rep.allocation_study(&p, 8, 8, cap)?;
+        let mix = &rows[0].1;
+        println!(
+            "  {:>9}: mix -> {:>5} convolutions ({} blocks: {:?})",
+            p.name,
+            mix.total_convolutions(),
+            mix.total_blocks(),
+            mix.counts
+        );
+    }
+    Ok(())
+}

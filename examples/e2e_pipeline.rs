@@ -1,0 +1,153 @@
+//! END-TO-END DRIVER (the mandated full-system exercise; results recorded in
+//! EXPERIMENTS.md §E2E).
+//!
+//! Proves all layers compose on a real small workload:
+//!
+//! 1. **Methodology** — run the full 784-configuration synthesis campaign
+//!    through the netlist-level simulator, fit the paper's models
+//!    (Algorithm 1), and print Tables 3–5 + the Conv4 closed form.
+//! 2. **Planning** — map the quantized LeNet-ish classifier onto the ZCU104
+//!    with the fitted models (no synthesis on this path).
+//! 3. **Deployment** — load the AOT-compiled JAX/Pallas artifact
+//!    (`artifacts/lenet_q8.hlo.txt`, built once by `make artifacts`) into the
+//!    PJRT runtime, serve a batched workload of synthetic digit images
+//!    through the L3 inference service, and cross-check EVERY logits vector
+//!    bit-for-bit against the block-level golden model.
+//! 4. **Report** — throughput/latency of the service, plus the model-vs-
+//!    synthesis speedup that is the paper's headline value proposition.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_pipeline`
+
+use convkit::blocks::{synthesize, BlockKind, ConvBlockConfig};
+use convkit::cnn::{plan_deployment, zoo, GoldenCnn};
+use convkit::coordinator::dse::DseEngine;
+use convkit::coordinator::service::{InferenceService, PjrtExecutor};
+use convkit::fixedpoint::QFormat;
+use convkit::platform::Platform;
+use convkit::report;
+use convkit::runtime::{artifacts_dir, Runtime};
+use convkit::synth::MapOptions;
+use convkit::util::rng::SplitMix64;
+use std::time::Instant;
+
+fn main() -> convkit::Result<()> {
+    println!("================ convkit end-to-end pipeline ================\n");
+
+    // ---- Stage 1: the paper's methodology --------------------------------
+    let t0 = Instant::now();
+    let rep = DseEngine::new().run()?;
+    println!(
+        "[1] methodology: {} synthesis runs in {:.2}s, {} models fitted in {:.3}s\n",
+        rep.dataset.len(),
+        rep.synth_seconds,
+        rep.registry.len(),
+        rep.fit_seconds
+    );
+    println!("{}", report::table3(&rep, true));
+    println!("{}", report::table4(&rep, true));
+    let zcu104 = Platform::zcu104();
+    println!("{}", report::table5(&rep, &zcu104, 8, 8, 0.8, true)?);
+
+    // Headline: model evaluation vs synthesis, per query.
+    let cfg = ConvBlockConfig::new(BlockKind::Conv2, 8, 8)?;
+    let t_m = Instant::now();
+    let mut sink = 0u64;
+    for _ in 0..10_000 {
+        sink = sink.wrapping_add(rep.registry.predict(&cfg)?.llut);
+    }
+    let model_us = t_m.elapsed().as_secs_f64() / 10_000.0 * 1e6;
+    let t_s = Instant::now();
+    let synth = synthesize(&cfg, &MapOptions::default());
+    let synth_us = t_s.elapsed().as_secs_f64() * 1e6;
+    std::hint::black_box(sink);
+    println!(
+        "[1] prediction {model_us:.2} µs vs simulator-synthesis {synth_us:.0} µs \
+         ({}x speedup; a Vivado run is minutes — >10^6x in the paper's terms)\n",
+        (synth_us / model_us).round() as u64
+    );
+    let _ = synth;
+
+    // ---- Stage 2: deployment planning ------------------------------------
+    let net = zoo::lenet_ish();
+    let plan = plan_deployment(&net, &rep.registry, &zcu104, 0.8)?;
+    println!("[2] plan for {} on {}:", net.name, zcu104.name);
+    for lp in &plan.layers {
+        println!("      layer {}: {} × {}", lp.layer, lp.instances, lp.block.name());
+    }
+    println!(
+        "      total {} — LLUT {:.2}% DSP {:.2}% (fits: {})\n",
+        plan.total, plan.utilization[0], plan.utilization[4], plan.fits
+    );
+
+    // ---- Stage 3: PJRT deployment + bit-exact verification ---------------
+    let art_path = artifacts_dir().join("lenet_q8.hlo.txt");
+    if !art_path.exists() {
+        eprintln!("artifacts missing ({}): run `make artifacts` first", art_path.display());
+        std::process::exit(1);
+    }
+    let svc = InferenceService::start_factory(
+        || {
+            let rt = Runtime::cpu()?;
+            let art = rt.load_named(&artifacts_dir(), "lenet_q8")?;
+            PjrtExecutor::from_artifact(art)
+        },
+        8,
+    );
+    let golden = GoldenCnn::new(net.clone(), BlockKind::Conv3)?;
+    let q = QFormat::new(8).expect("q8");
+    let mut rng = SplitMix64::new(0xE2E_2025);
+    let n_req = 200usize;
+    let mut mismatches = 0usize;
+    let mut class_histogram = vec![0usize; net.classes()];
+    let t_serve = Instant::now();
+    for _ in 0..n_req {
+        // Synthetic digit-ish image: a bright stroke pattern over noise.
+        let mut img: Vec<i64> = (0..net.in_h * net.in_w)
+            .map(|_| rng.range_i64(q.min() / 4, q.max() / 4))
+            .collect();
+        let stroke = rng.next_below(net.in_w as u64) as usize;
+        for r in 0..net.in_h {
+            img[r * net.in_w + stroke] = q.max();
+        }
+        let img32: Vec<i32> = img.iter().map(|&v| v as i32).collect();
+        let logits = svc.infer(img32)?;
+        let want: Vec<i32> = golden.infer(&img)?.into_iter().map(|v| v as i32).collect();
+        if logits != want {
+            mismatches += 1;
+        }
+        let top = logits
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &v)| v)
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        class_histogram[top] += 1;
+    }
+    let wall = t_serve.elapsed().as_secs_f64();
+    let stats = svc.stats()?;
+    println!("[3] served {n_req} requests through PJRT in {wall:.2}s:");
+    println!(
+        "      throughput {:.1} req/s, mean latency {:.2} ms, p95 {:.2} ms, {} batches",
+        n_req as f64 / wall,
+        stats.mean_latency_ms,
+        stats.p95_latency_ms,
+        stats.batches
+    );
+    println!("      class histogram: {class_histogram:?}");
+    println!(
+        "      golden-model cross-check: {mismatches} mismatches / {n_req} \
+         ({})",
+        if mismatches == 0 { "BIT-EXACT ✓" } else { "FAILED ✗" }
+    );
+    svc.shutdown();
+
+    println!(
+        "\n[4] total pipeline wall time: {:.2}s — every stage green{}",
+        t0.elapsed().as_secs_f64(),
+        if mismatches == 0 { "." } else { " EXCEPT bit-exactness!" }
+    );
+    if mismatches > 0 {
+        std::process::exit(1);
+    }
+    Ok(())
+}

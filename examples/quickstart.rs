@@ -1,0 +1,49 @@
+//! Quickstart: configure a block, synthesize it, fit models from a sweep,
+//! and predict resources for an unseen configuration — the paper's core loop
+//! in ~40 lines.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use convkit::blocks::{synthesize, BlockKind, ConvBlockConfig};
+use convkit::coordinator::dse::DseEngine;
+use convkit::platform::Platform;
+use convkit::synth::MapOptions;
+
+fn main() -> convkit::Result<()> {
+    // 1. One block instance: Conv2 (1 DSP, minimal logic) at 8-bit/8-bit.
+    let cfg = ConvBlockConfig::new(BlockKind::Conv2, 8, 8)?;
+    let res = synthesize(&cfg, &MapOptions::default());
+    let zcu104 = Platform::zcu104();
+    println!("{cfg} synthesizes to {res}");
+    println!(
+        "  = {:.3}% of the {}'s LUTs, {:.3}% of its DSPs\n",
+        100.0 * res.llut as f64 / zcu104.budget.llut as f64,
+        zcu104.name,
+        100.0 * res.dsp as f64 / zcu104.budget.dsp as f64
+    );
+
+    // 2. The methodology: sweep 196 configs/block, fit polynomial models.
+    let report = DseEngine::new().run()?;
+    println!(
+        "swept {} configurations in {:.2}s; fitted {} models in {:.3}s",
+        report.dataset.len(),
+        report.synth_seconds,
+        report.registry.len(),
+        report.fit_seconds
+    );
+
+    // 3. Predict an arbitrary configuration without synthesis.
+    for (d, c) in [(5, 11), (13, 7), (16, 16)] {
+        let probe = ConvBlockConfig::new(BlockKind::Conv2, d, c)?;
+        let predicted = report.registry.predict(&probe)?;
+        let measured = synthesize(&probe, &MapOptions::default());
+        println!("{probe}: predicted {predicted}");
+        println!("{:>16} measured {measured}", "");
+    }
+
+    // 4. The fitted closed form (the paper prints Conv4's).
+    if let Some(e) = report.registry.get(BlockKind::Conv4, convkit::synth::Resource::Llut) {
+        println!("\nConv4 LLUT model: {}", e.model);
+    }
+    Ok(())
+}

@@ -1,0 +1,123 @@
+"""AOT compiler: lower the L2 models (and a standalone L1 kernel) to HLO
+*text* artifacts for the rust PJRT runtime.
+
+HLO text — NOT ``lowered.compile()`` or serialized protos — is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction
+ids which the published ``xla`` crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/gen_hlo.py and DESIGN.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # int64 accumulators, bit-exact
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from .kernels.conv3x3 import conv3x3_pallas  # noqa: E402
+from .model import ZOO, forward_batch  # noqa: E402
+
+#: Compiled batch capacity of every network artifact (the rust service pads).
+BATCH = 8
+
+#: Standalone kernel artifact geometry (runtime_conv bench).
+KERNEL_H, KERNEL_W = 16, 16
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text.
+
+    ``print_large_constants=True`` is load-bearing: the default printer elides
+    any constant with more than 10 elements as ``{...}``, which the text
+    parser on the rust side silently accepts — producing an executable with
+    garbage weights. (Found the hard way; regression-tested by
+    tests/test_aot.py::test_hlo_text_has_no_elided_constants and the rust
+    integration suite's bit-exactness checks.)
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def write_artifact(out_dir: str, name: str, hlo: str, meta: dict) -> None:
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(hlo)
+    with open(os.path.join(out_dir, f"{name}.meta"), "w") as f:
+        for k, v in meta.items():
+            f.write(f"{k}={v}\n")
+    print(f"wrote {path} ({len(hlo)} chars)")
+
+
+def compile_network(out_dir: str, name: str) -> None:
+    net = ZOO[name]
+    net.validate()
+    spec = jax.ShapeDtypeStruct((BATCH, net.in_ch, net.in_h, net.in_w), jnp.int32)
+    lowered = jax.jit(lambda xb: forward_batch(net, xb)).lower(spec)
+    hlo = to_hlo_text(lowered)
+    write_artifact(
+        out_dir,
+        name,
+        hlo,
+        {
+            "kind": "network",
+            "name": name,
+            "input_shape": ",".join(
+                str(d) for d in (BATCH, net.in_ch, net.in_h, net.in_w)
+            ),
+            "classes": net.classes(),
+            "head_shift": net.head_shift,
+            "seed": net.seed,
+        },
+    )
+
+
+def compile_kernel(out_dir: str) -> None:
+    """Standalone 3x3 conv kernel artifact (8-bit, shift 4) for benches."""
+    plane = jax.ShapeDtypeStruct((KERNEL_H, KERNEL_W), jnp.int32)
+    coeffs = jax.ShapeDtypeStruct((3, 3), jnp.int32)
+    fn = lambda p, k: (conv3x3_pallas(p, k, data_bits=8, shift=4),)  # noqa: E731
+    lowered = jax.jit(fn).lower(plane, coeffs)
+    write_artifact(
+        out_dir,
+        "conv3x3_q8",
+        to_hlo_text(lowered),
+        {
+            "kind": "kernel",
+            "name": "conv3x3_q8",
+            "input_shape": f"{KERNEL_H},{KERNEL_W}",
+            "data_bits": 8,
+            "shift": 4,
+        },
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", help="compile a single artifact by name")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    if args.only:
+        if args.only == "conv3x3_q8":
+            compile_kernel(args.out_dir)
+        else:
+            compile_network(args.out_dir, args.only)
+        return
+    for name in ZOO:
+        compile_network(args.out_dir, name)
+    compile_kernel(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

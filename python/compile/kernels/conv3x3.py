@@ -1,0 +1,127 @@
+"""L1 — Pallas kernels for the quantized 3x3 convolution.
+
+Two kernels:
+
+* :func:`conv3x3_pallas` — one (H, W) plane against one 3x3 kernel; the unit
+  under test against ``ref.py``.
+* :func:`conv_layer_pallas` — a whole quantized conv layer (the paper's block
+  contract: per-(oc, ic) narrowing BEFORE the channel sum, see
+  ``rust/src/cnn/mod.rs``), structured as im2col windows × kernel matrix so
+  the inner contraction is a (HW×9)·(9×OC) matmul — the MXU-shaped form
+  (DESIGN.md §3.1). On TPU the window matrix tiles through VMEM via BlockSpec;
+  here we run ``interpret=True`` (CPU PJRT cannot execute Mosaic
+  custom-calls), so correctness is the deliverable and TPU perf is estimated
+  analytically in EXPERIMENTS.md.
+
+All integer arithmetic accumulates in int64 (bit-exact with the rust i64
+path); ``aot.py`` and the tests enable jax x64.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _narrow(acc, shift: int, bits: int):
+    lo = -(1 << (bits - 1))
+    hi = (1 << (bits - 1)) - 1
+    return jnp.clip(jnp.right_shift(acc, jnp.int64(shift)), lo, hi)
+
+
+def _conv_plane_kernel(p_ref, k_ref, o_ref, *, h, w, data_bits, shift):
+    p = p_ref[...].astype(jnp.int64)
+    k = k_ref[...].astype(jnp.int64)
+    acc = jnp.zeros((h - 2, w - 2), dtype=jnp.int64)
+    for dr in range(3):
+        for dc in range(3):
+            acc = acc + p[dr : dr + h - 2, dc : dc + w - 2] * k[dr, dc]
+    o_ref[...] = _narrow(acc, shift, data_bits).astype(jnp.int32)
+
+
+def conv3x3_pallas(plane, coeffs, *, data_bits: int, shift: int):
+    """One plane, one kernel: (H, W) int32 -> (H-2, W-2) int32."""
+    h, w = plane.shape
+    kern = functools.partial(
+        _conv_plane_kernel, h=h, w=w, data_bits=data_bits, shift=shift
+    )
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((h - 2, w - 2), jnp.int32),
+        interpret=True,
+    )(plane, coeffs)
+
+
+def _im2col(p, h, w):
+    """(H, W) int64 -> (H-2)·(W-2) × 9 window matrix (row-major taps)."""
+    cols = []
+    for dr in range(3):
+        for dc in range(3):
+            cols.append(p[dr : dr + h - 2, dc : dc + w - 2].reshape(-1))
+    return jnp.stack(cols, axis=1)
+
+
+def _conv_layer_kernel(
+    x_ref, k_ref, o_ref, *, batch, ic, oc, h, w, data_bits, shift, relu
+):
+    # NOTE: the batch loop is STATIC (python range) rather than vmapped: the
+    # fixed-batch unrolled form mirrors what a fixed-capacity accelerator
+    # engine computes, keeps the per-image graphs independent (XLA may still
+    # re-roll them into a loop — harmless), and avoids relying on
+    # batching-rule coverage for interpret-mode pallas_call.
+    lo = -(1 << (data_bits - 1))
+    hi = (1 << (data_bits - 1)) - 1
+    x = x_ref[...].astype(jnp.int64)  # (B, IC, H, W)
+    k = k_ref[...].astype(jnp.int64)  # (OC, IC, 3, 3)
+    hw = (h - 2) * (w - 2)
+    outs = []
+    for b_i in range(batch):
+        total = jnp.zeros((hw, oc), dtype=jnp.int64)
+        for i in range(ic):
+            windows = _im2col(x[b_i, i], h, w)  # (HW, 9) — the MXU operand
+            kmat = k[:, i].reshape(oc, 9).T  # (9, OC)
+            partial = jnp.dot(windows, kmat)  # (HW, OC) exact int64 matmul
+            total = total + _narrow(partial, shift, data_bits)
+        out = jnp.clip(total, lo, hi)
+        if relu:
+            out = jnp.maximum(out, 0)
+        outs.append(out.T.reshape(oc, h - 2, w - 2))
+    o_ref[...] = jnp.stack(outs).astype(jnp.int32)
+
+
+def conv_layer_pallas_batch(x, kernels, *, data_bits: int, shift: int, relu: bool):
+    """One quantized conv layer over a batch, block semantics.
+
+    x: (B, IC, H, W) int32; kernels: (OC, IC, 3, 3) int32.
+    Returns (B, OC, H-2, W-2) int32 with, per image:
+        out[oc] = relu(sat_d(Σ_ic narrow_d(conv(x[ic], k[oc, ic]) >> shift)))
+    """
+    batch, ic, h, w = x.shape
+    oc = kernels.shape[0]
+    kern = functools.partial(
+        _conv_layer_kernel,
+        batch=batch,
+        ic=ic,
+        oc=oc,
+        h=h,
+        w=w,
+        data_bits=data_bits,
+        shift=shift,
+        relu=relu,
+    )
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((batch, oc, h - 2, w - 2), jnp.int32),
+        interpret=True,
+    )(x, kernels)
+
+
+def conv_layer_pallas(x, kernels, *, data_bits: int, shift: int, relu: bool):
+    """Single-image wrapper of :func:`conv_layer_pallas_batch`."""
+    out = conv_layer_pallas_batch(
+        x[None], kernels, data_bits=data_bits, shift=shift, relu=relu
+    )
+    return out[0]

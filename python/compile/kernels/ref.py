@@ -1,0 +1,52 @@
+"""Pure-jnp correctness oracle for the quantized 3x3 convolution.
+
+This is the L1 reference the Pallas kernel is checked against (pytest +
+hypothesis), and it mirrors ``rust/src/fixedpoint/ops.rs`` exactly:
+
+    out = saturate_d( dot9(window, coeffs) >> shift )
+
+All tensors are int32 at the interface; accumulation runs in int64 (9 products
+of 16-bit operands exceed int32), exactly like the rust i64 path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def narrow(acc, shift: int, bits: int):
+    """Arithmetic right shift (floor) + saturate to a signed `bits` range.
+
+    Mirrors ``QFormat::narrow`` with Floor rounding. `acc` is int64.
+    """
+    lo = -(1 << (bits - 1))
+    hi = (1 << (bits - 1)) - 1
+    shifted = jnp.right_shift(acc, jnp.int64(shift))
+    return jnp.clip(shifted, lo, hi)
+
+
+def conv3x3_plane(plane, coeffs, data_bits: int, shift: int):
+    """Valid-mode 3x3 convolution over one (H, W) int32 plane.
+
+    `coeffs` is a (3, 3) int32 kernel. Returns (H-2, W-2) int32, each output
+    narrowed to `data_bits`. Mirrors ``conv3x3_plane_ref``.
+    """
+    p = plane.astype(jnp.int64)
+    k = coeffs.astype(jnp.int64)
+    h, w = plane.shape
+    acc = jnp.zeros((h - 2, w - 2), dtype=jnp.int64)
+    for dr in range(3):
+        for dc in range(3):
+            acc = acc + p[dr : dr + h - 2, dc : dc + w - 2] * k[dr, dc]
+    return narrow(acc, shift, data_bits).astype(jnp.int32)
+
+
+def conv3x3_batch(planes, coeffs, data_bits: int, shift: int):
+    """Batched oracle: planes (N, H, W) int32, coeffs (N, 3, 3) or (3, 3)."""
+    if coeffs.ndim == 2:
+        coeffs = jnp.broadcast_to(coeffs, (planes.shape[0], 3, 3))
+    outs = [
+        conv3x3_plane(planes[i], coeffs[i], data_bits, shift)
+        for i in range(planes.shape[0])
+    ]
+    return jnp.stack(outs)

@@ -1,0 +1,104 @@
+"""L2 — the quantized CNN forward pass (build-time JAX, never on the request
+path).
+
+The network zoo here mirrors ``rust/src/cnn/zoo.rs`` constant-for-constant
+(a frozen-spec test on each side guards the sync), and the weights come from
+the same SplitMix64 streams (``quant.py``), so the lowered HLO computes the
+exact function the rust golden model defines.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.conv3x3 import conv_layer_pallas, conv_layer_pallas_batch
+from .quant import ConvLayerSpec, NetworkSpec, network_weights
+
+
+def lenet_ish() -> NetworkSpec:
+    """Mirror of ``zoo::lenet_ish``."""
+    return NetworkSpec(
+        name="lenet_q8",
+        in_h=12,
+        in_w=12,
+        in_ch=1,
+        layers=(
+            ConvLayerSpec(1, 4, 8, 8, 7, True),
+            ConvLayerSpec(4, 10, 8, 8, 9, True),
+        ),
+        head_shift=6,
+        seed=0xC0DE_2025,
+    )
+
+
+def tiny() -> NetworkSpec:
+    """Mirror of ``zoo::tiny``."""
+    return NetworkSpec(
+        name="tiny_q8",
+        in_h=8,
+        in_w=8,
+        in_ch=1,
+        layers=(ConvLayerSpec(1, 3, 8, 8, 8, True),),
+        head_shift=4,
+        seed=0xBEEF_2025,
+    )
+
+
+def slim_q6() -> NetworkSpec:
+    """Mirror of ``zoo::slim_q6``."""
+    return NetworkSpec(
+        name="slim_q6",
+        in_h=10,
+        in_w=10,
+        in_ch=1,
+        layers=(
+            ConvLayerSpec(1, 3, 6, 6, 6, True),
+            ConvLayerSpec(3, 6, 6, 6, 8, True),
+        ),
+        head_shift=5,
+        seed=0x51E4_2025,
+    )
+
+
+ZOO = {n.name: n for n in (lenet_ish(), tiny(), slim_q6())}
+
+
+def weight_arrays(net: NetworkSpec):
+    """Per-layer (OC, IC, 3, 3) int32 weight tensors from the shared stream."""
+    arrays = []
+    for spec, kernels in zip(net.layers, network_weights(net)):
+        a = jnp.array(kernels, dtype=jnp.int32).reshape(
+            spec.out_ch, spec.in_ch, 3, 3
+        )
+        arrays.append(a)
+    return arrays
+
+
+def forward_single(net: NetworkSpec, x):
+    """One image (IC, H, W) int32 -> logits (classes,) int32."""
+    weights = weight_arrays(net)
+    for spec, w in zip(net.layers, weights):
+        x = conv_layer_pallas(
+            x, w, data_bits=spec.data_bits, shift=spec.shift, relu=spec.relu
+        )
+    # Global-sum head (activations are >= 0 after ReLU; sums fit int64).
+    sums = jnp.sum(x.astype(jnp.int64), axis=(1, 2))
+    return jnp.right_shift(sums, jnp.int64(net.head_shift)).astype(jnp.int32)
+
+
+def forward_batch(net: NetworkSpec, xb):
+    """Batched forward: (B, IC, H, W) int32 -> (B, classes) int32.
+
+    The batch is STATICALLY unrolled inside the Pallas layer kernel (not
+    vmapped) — the fixed-capacity-engine form; see conv3x3.py for the
+    rationale. Returns a 1-tuple (the AOT convention, unwrapped by the rust
+    runtime).
+    """
+    x = xb
+    for spec, w in zip(net.layers, weight_arrays(net)):
+        x = conv_layer_pallas_batch(
+            x, w, data_bits=spec.data_bits, shift=spec.shift, relu=spec.relu
+        )
+    sums = jnp.sum(x.astype(jnp.int64), axis=(2, 3))  # (B, classes)
+    return (jnp.right_shift(sums, jnp.int64(net.head_shift)).astype(jnp.int32),)

@@ -1,0 +1,121 @@
+"""Fixed-point semantics + deterministic weight streams.
+
+This module is the Python mirror of two rust modules and MUST stay in exact
+(bit-level) sync with them:
+
+* ``rust/src/fixedpoint`` — ``narrow`` (arithmetic right shift + saturate) and
+  the q-format ranges;
+* ``rust/src/util/rng.rs`` + ``rust/src/cnn/spec.rs`` — the SplitMix64 stream
+  and the layer-weight derivation, so the AOT-compiled model carries the SAME
+  weights as the rust golden model without any weight files crossing the
+  language boundary.
+
+Everything here is integer-exact; jnp tensors are int32 end to end.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+MASK64 = (1 << 64) - 1
+
+
+class SplitMix64:
+    """Bit-exact port of ``rust/src/util/rng.rs::SplitMix64``."""
+
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return (z ^ (z >> 31)) & MASK64
+
+    def next_below(self, bound: int) -> int:
+        # Lemire multiply-shift, as in rust.
+        return (self.next_u64() * bound) >> 64
+
+    def range_i64(self, lo: int, hi: int) -> int:
+        span = hi - lo + 1
+        return lo + self.next_below(span)
+
+
+def qmin(bits: int) -> int:
+    """Smallest representable signed value."""
+    return -(1 << (bits - 1))
+
+
+def qmax(bits: int) -> int:
+    """Largest representable signed value."""
+    return (1 << (bits - 1)) - 1
+
+
+def saturate_py(v: int, bits: int) -> int:
+    """Python-int saturation (reference path, no jnp)."""
+    return max(qmin(bits), min(qmax(bits), v))
+
+
+def narrow_py(acc: int, shift: int, bits: int) -> int:
+    """rust ``QFormat::narrow`` with Floor rounding: acc >> shift, saturate."""
+    return saturate_py(acc >> shift, bits)
+
+
+@dataclass(frozen=True)
+class ConvLayerSpec:
+    """Mirror of ``rust/src/cnn/spec.rs::ConvLayerSpec``."""
+
+    in_ch: int
+    out_ch: int
+    data_bits: int
+    coeff_bits: int
+    shift: int
+    relu: bool = True
+
+    def kernel_count(self) -> int:
+        return self.in_ch * self.out_ch
+
+
+@dataclass(frozen=True)
+class NetworkSpec:
+    """Mirror of ``rust/src/cnn/spec.rs::NetworkSpec``."""
+
+    name: str
+    in_h: int
+    in_w: int
+    in_ch: int
+    layers: tuple = field(default_factory=tuple)
+    head_shift: int = 0
+    seed: int = 0
+
+    def layer_seed(self, layer: int) -> int:
+        return ((self.seed * 0x9E3779B97F4A7C15) + layer + 1) & MASK64
+
+    def classes(self) -> int:
+        return self.layers[-1].out_ch
+
+    def validate(self) -> None:
+        ch, h, w = self.in_ch, self.in_h, self.in_w
+        for i, l in enumerate(self.layers):
+            if l.in_ch != ch:
+                raise ValueError(f"{self.name}: layer {i} channel mismatch")
+            if h < 3 or w < 3:
+                raise ValueError(f"{self.name}: layer {i} input too small")
+            ch, h, w = l.out_ch, h - 2, w - 2
+
+
+def layer_weights(layer: ConvLayerSpec, seed: int) -> list:
+    """Mirror of ``ConvLayerSpec::weights``: kernel_count × 9 ints drawn from
+    one SplitMix64 stream, in the same order."""
+    rng = SplitMix64(seed)
+    lo, hi = qmin(layer.coeff_bits), qmax(layer.coeff_bits)
+    out = []
+    for _ in range(layer.kernel_count()):
+        out.append([rng.range_i64(lo, hi) for _ in range(9)])
+    return out
+
+
+def network_weights(net: NetworkSpec) -> list:
+    """All layers' weights: list of (layer) lists of 9-element kernels."""
+    return [layer_weights(l, net.layer_seed(i)) for i, l in enumerate(net.layers)]

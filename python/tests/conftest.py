@@ -1,0 +1,6 @@
+"""Shared test config: enable x64 before jax initializes (the kernels
+accumulate in int64, mirroring the rust i64 path)."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,110 @@
+"""L1 correctness: the Pallas kernels against the pure-jnp oracle.
+
+Hypothesis sweeps shapes, bit-widths and shifts; every comparison is exact
+integer equality (the whole stack is bit-exact by design).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.conv3x3 import conv3x3_pallas, conv_layer_pallas
+from compile.kernels.ref import conv3x3_plane, narrow
+
+
+def rand_int_array(rng, shape, bits):
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    return jnp.array(rng.integers(lo, hi + 1, size=shape), dtype=jnp.int32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(3, 12),
+    w=st.integers(3, 12),
+    data_bits=st.sampled_from([3, 5, 8, 12, 16]),
+    coeff_bits=st.sampled_from([3, 8, 16]),
+    shift=st.integers(0, 12),
+    seed=st.integers(0, 2**31),
+)
+def test_pallas_kernel_matches_oracle(h, w, data_bits, coeff_bits, shift, seed):
+    rng = np.random.default_rng(seed)
+    plane = rand_int_array(rng, (h, w), data_bits)
+    coeffs = rand_int_array(rng, (3, 3), coeff_bits)
+    got = conv3x3_pallas(plane, coeffs, data_bits=data_bits, shift=shift)
+    want = conv3x3_plane(plane, coeffs, data_bits, shift)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_identity_kernel_recovers_center():
+    plane = jnp.arange(25, dtype=jnp.int32).reshape(5, 5) - 12
+    k = jnp.zeros((3, 3), dtype=jnp.int32).at[1, 1].set(1)
+    out = conv3x3_pallas(plane, k, data_bits=8, shift=0)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(plane[1:4, 1:4]))
+
+
+def test_saturation_at_extremes():
+    plane = jnp.full((4, 4), 127, dtype=jnp.int32)
+    k = jnp.full((3, 3), 127, dtype=jnp.int32)
+    out = conv3x3_pallas(plane, k, data_bits=8, shift=0)
+    assert int(out[0, 0]) == 127  # 9*127*127 saturates
+    k_neg = jnp.full((3, 3), -128, dtype=jnp.int32)
+    out = conv3x3_pallas(plane, k_neg, data_bits=8, shift=0)
+    assert int(out[0, 0]) == -128
+
+
+def test_floor_shift_on_negative_accumulator():
+    # acc = -3 >> 1 must be -2 (floor), not -1 (truncation).
+    plane = jnp.zeros((3, 3), dtype=jnp.int32).at[0, 0].set(-3)
+    k = jnp.zeros((3, 3), dtype=jnp.int32).at[0, 0].set(1)
+    out = conv3x3_pallas(plane, k, data_bits=8, shift=1)
+    assert int(out[0, 0]) == -2
+
+
+def test_narrow_matches_python_reference():
+    from compile.quant import narrow_py
+
+    for acc in [-145161, -7, -3, -1, 0, 1, 3, 145161]:
+        for shift in [0, 1, 4, 11]:
+            got = int(narrow(jnp.int64(acc), shift, 8))
+            assert got == narrow_py(acc, shift, 8), (acc, shift)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    ic=st.integers(1, 3),
+    oc=st.integers(1, 4),
+    h=st.integers(3, 8),
+    w=st.integers(3, 8),
+    shift=st.integers(0, 10),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31),
+)
+def test_layer_kernel_matches_block_semantics(ic, oc, h, w, shift, relu, seed):
+    data_bits = 8
+    rng = np.random.default_rng(seed)
+    x = rand_int_array(rng, (ic, h, w), data_bits)
+    kernels = rand_int_array(rng, (oc, ic, 3, 3), data_bits)
+    got = conv_layer_pallas(x, kernels, data_bits=data_bits, shift=shift, relu=relu)
+    # Oracle: per-(oc, ic) narrow BEFORE the channel sum (the block contract).
+    lo, hi = -128, 127
+    want = np.zeros((oc, h - 2, w - 2), dtype=np.int64)
+    for o in range(oc):
+        acc = np.zeros((h - 2, w - 2), dtype=np.int64)
+        for i in range(ic):
+            p = np.asarray(
+                conv3x3_plane(x[i], kernels[o, i], data_bits, shift)
+            ).astype(np.int64)
+            acc += p
+        acc = np.clip(acc, lo, hi)
+        if relu:
+            acc = np.maximum(acc, 0)
+        want[o] = acc
+    np.testing.assert_array_equal(np.asarray(got), want.astype(np.int32))
+
+
+def test_layer_kernel_shapes():
+    x = jnp.zeros((2, 6, 7), dtype=jnp.int32)
+    k = jnp.zeros((5, 2, 3, 3), dtype=jnp.int32)
+    out = conv_layer_pallas(x, k, data_bits=8, shift=0, relu=True)
+    assert out.shape == (5, 4, 5)
+    assert out.dtype == jnp.int32

@@ -1,0 +1,74 @@
+"""L2 model tests: shapes, dtype discipline, batching and zoo consistency."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.model import ZOO, forward_batch, forward_single, weight_arrays
+
+
+def rand_images(net, batch, seed):
+    rng = np.random.default_rng(seed)
+    bits = net.layers[0].data_bits
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    return jnp.array(
+        rng.integers(lo, hi + 1, size=(batch, net.in_ch, net.in_h, net.in_w)),
+        dtype=jnp.int32,
+    )
+
+
+def test_forward_shapes_all_zoo():
+    for net in ZOO.values():
+        xb = rand_images(net, 2, 0)
+        (logits,) = forward_batch(net, xb)
+        assert logits.shape == (2, net.classes())
+        assert logits.dtype == jnp.int32
+
+
+def test_batch_matches_singles():
+    net = ZOO["tiny_q8"]
+    xb = rand_images(net, 3, 1)
+    (batch_logits,) = forward_batch(net, xb)
+    for i in range(3):
+        single = forward_single(net, xb[i])
+        np.testing.assert_array_equal(
+            np.asarray(batch_logits[i]), np.asarray(single)
+        )
+
+
+def test_zero_image_gives_zero_logits():
+    # ReLU networks: zero input -> zero activations -> zero logits.
+    net = ZOO["lenet_q8"]
+    xb = jnp.zeros((1, net.in_ch, net.in_h, net.in_w), dtype=jnp.int32)
+    (logits,) = forward_batch(net, xb)
+    assert np.all(np.asarray(logits) == 0)
+
+
+def test_weight_arrays_shapes():
+    net = ZOO["lenet_q8"]
+    ws = weight_arrays(net)
+    assert ws[0].shape == (4, 1, 3, 3)
+    assert ws[1].shape == (10, 4, 3, 3)
+    assert ws[0].dtype == jnp.int32
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_forward_deterministic(seed):
+    net = ZOO["tiny_q8"]
+    xb = rand_images(net, 2, seed)
+    (a,) = forward_batch(net, xb)
+    (b,) = forward_batch(net, xb)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_logits_respect_activation_bound():
+    # Activations are in [0, 127] after ReLU; the head sum over an 8x8 map
+    # shifted by head_shift bounds the logits.
+    net = ZOO["lenet_q8"]
+    xb = rand_images(net, 2, 7)
+    (logits,) = forward_batch(net, xb)
+    out_hw = (net.in_h - 4) * (net.in_w - 4)
+    bound = (127 * out_hw) >> net.head_shift
+    assert np.all(np.asarray(logits) >= 0)
+    assert np.all(np.asarray(logits) <= bound)

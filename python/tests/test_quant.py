@@ -1,0 +1,97 @@
+"""quant.py invariants: the SplitMix64 port and the weight streams must be
+bit-exact with rust (frozen vectors below are asserted on BOTH sides)."""
+
+from hypothesis import given, settings, strategies as st
+
+from compile.quant import (
+    SplitMix64,
+    layer_weights,
+    narrow_py,
+    network_weights,
+    qmax,
+    qmin,
+    saturate_py,
+)
+from compile.model import ZOO, lenet_ish
+
+
+def test_splitmix64_known_vectors_seed_zero():
+    # Cross-checked against the reference C implementation AND
+    # rust/src/util/rng.rs tests.
+    r = SplitMix64(0)
+    assert r.next_u64() == 0xE220A8397B1DCDAF
+    assert r.next_u64() == 0x6E789E6AA1B965F4
+    assert r.next_u64() == 0x06C45D188009454F
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 2**64 - 1), bound=st.integers(1, 1 << 40))
+def test_next_below_in_range(seed, bound):
+    r = SplitMix64(seed)
+    for _ in range(10):
+        assert 0 <= r.next_below(bound) < bound
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    v=st.integers(-(1 << 40), 1 << 40),
+    shift=st.integers(0, 20),
+    bits=st.integers(2, 16),
+)
+def test_narrow_is_floor_shift_then_saturate(v, shift, bits):
+    got = narrow_py(v, shift, bits)
+    want = saturate_py(v >> shift, bits)
+    assert got == want
+    assert qmin(bits) <= got <= qmax(bits)
+
+
+def test_qformat_ranges():
+    assert (qmin(8), qmax(8)) == (-128, 127)
+    assert (qmin(3), qmax(3)) == (-4, 3)
+
+
+def test_layer_weights_deterministic_and_bounded():
+    net = lenet_ish()
+    w1 = layer_weights(net.layers[0], net.layer_seed(0))
+    w2 = layer_weights(net.layers[0], net.layer_seed(0))
+    assert w1 == w2
+    assert len(w1) == net.layers[0].kernel_count()
+    for k in w1:
+        assert len(k) == 9
+        for v in k:
+            assert qmin(8) <= v <= qmax(8)
+
+
+def test_layer_seeds_differ_per_layer():
+    net = lenet_ish()
+    assert net.layer_seed(0) != net.layer_seed(1)
+
+
+def test_zoo_specs_frozen():
+    # Mirror of rust zoo::zoo_specs_are_frozen — the cross-language contract.
+    l = ZOO["lenet_q8"]
+    assert (l.in_h, l.in_w, l.in_ch) == (12, 12, 1)
+    assert l.seed == 0xC0DE_2025 and l.head_shift == 6
+    assert l.layers[1].out_ch == 10 and l.layers[1].shift == 9
+    t = ZOO["tiny_q8"]
+    assert t.seed == 0xBEEF_2025 and (t.in_h, t.in_w) == (8, 8)
+    s = ZOO["slim_q6"]
+    assert s.seed == 0x51E4_2025 and s.layers[0].data_bits == 6
+    for net in ZOO.values():
+        net.validate()
+
+
+def test_network_weights_cover_all_layers():
+    net = lenet_ish()
+    ws = network_weights(net)
+    assert len(ws) == 2
+    assert len(ws[0]) == 4 and len(ws[1]) == 40
+
+
+def test_first_lenet_weight_frozen():
+    # Regression pin: if this changes, the artifacts and the rust golden
+    # model have silently diverged.
+    net = lenet_ish()
+    w = layer_weights(net.layers[0], net.layer_seed(0))
+    r = SplitMix64(net.layer_seed(0))
+    assert w[0][0] == r.range_i64(-128, 127)

@@ -1,0 +1,23 @@
+//! Bench + regeneration: paper Figures 1-3 (LLUT fitted surfaces).
+
+use convkit::coordinator::dse::DseEngine;
+use convkit::report;
+use convkit::util::bench::Bench;
+
+fn main() {
+    println!("=== bench: fig_surfaces ===");
+    let rep = DseEngine::new().run().expect("pipeline");
+    for f in 1..=3 {
+        println!("{}", report::figure_surface(&rep, f).unwrap());
+    }
+
+    let mut b = Bench::new();
+    for f in 1..=3u32 {
+        b.run(&format!("figure{f}_csv_series"), || {
+            report::figure_csv(&rep, f).unwrap().len()
+        });
+        b.run(&format!("figure{f}_ascii_surface"), || {
+            report::figure_surface(&rep, f).unwrap().len()
+        });
+    }
+}

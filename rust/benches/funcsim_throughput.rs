@@ -1,0 +1,36 @@
+//! Bench: functional-simulator throughput (windows/s per block) and the
+//! golden CNN — the verification hot path.
+
+use convkit::blocks::{BlockKind, ConvBlockConfig, FuncSim};
+use convkit::cnn::{zoo, GoldenCnn};
+use convkit::util::bench::Bench;
+use convkit::util::rng::SplitMix64;
+
+fn main() {
+    println!("=== bench: funcsim_throughput ===");
+    let mut rng = SplitMix64::new(7);
+    let windows: Vec<[i64; 9]> =
+        (0..256).map(|_| std::array::from_fn(|_| rng.range_i64(-128, 127))).collect();
+    let coeffs: [i64; 9] = std::array::from_fn(|_| rng.range_i64(-128, 127));
+
+    let mut b = Bench::new();
+    for kind in BlockKind::ALL {
+        let cfg = ConvBlockConfig::new(kind, 8, 8).unwrap().with_shift(4);
+        let n_sets = if kind == BlockKind::Conv4 { 2 } else { 1 };
+        let sets = vec![coeffs; n_sets];
+        let mut sim = FuncSim::new(cfg);
+        sim.load_coefficients(&sets).unwrap();
+        let s = b.run(&format!("funcsim_{}_256_windows", kind.name()), || {
+            sim.process(&windows).unwrap().lanes[0].len()
+        });
+        println!(
+            "   -> {:.1} M windows/s",
+            256.0 * s.throughput() / 1e6
+        );
+    }
+
+    let golden = GoldenCnn::new(zoo::lenet_ish(), BlockKind::Conv2).unwrap();
+    let img: Vec<i64> = (0..144).map(|_| rng.range_i64(-128, 127)).collect();
+    let s = b.run("golden_lenet_single_inference", || golden.infer(&img).unwrap().len());
+    println!("   -> {:.0} inferences/s", s.throughput());
+}

@@ -1,0 +1,50 @@
+//! Bench: THE headline — model prediction vs synthesis, per query.
+//!
+//! The paper's value proposition ("En éliminant les itérations de synthèse
+//! répétées, la méthodologie accélère l'exploration de l'espace de
+//! conception"): a fitted-model evaluation must be orders of magnitude
+//! cheaper than even our in-process synthesis simulator, let alone Vivado.
+
+use convkit::blocks::{synthesize, BlockKind, ConvBlockConfig};
+use convkit::coordinator::dse::DseEngine;
+use convkit::synth::MapOptions;
+use convkit::util::bench::Bench;
+
+fn main() {
+    println!("=== bench: predict_vs_synth ===");
+    let rep = DseEngine::new().run().expect("pipeline");
+    let opts = MapOptions::default();
+    let mut b = Bench::new();
+    for kind in BlockKind::ALL {
+        let cfg = ConvBlockConfig::new(kind, 8, 8).unwrap();
+        b.run(&format!("predict_{}", kind.name()), || rep.registry.predict(&cfg).unwrap());
+        b.run(&format!("synthesize_{}", kind.name()), || synthesize(&cfg, &opts));
+    }
+    println!();
+    for kind in BlockKind::ALL {
+        let p = b.stats(&format!("predict_{}", kind.name())).unwrap().mean_ns;
+        let s = b.stats(&format!("synthesize_{}", kind.name())).unwrap().mean_ns;
+        println!(
+            "-> {}: prediction {:.0} ns vs synthesis {:.0} ns — {:.0}x speedup \
+             (vs a real Vivado run @ ~120 s: {:.1e}x)",
+            kind.name(),
+            p,
+            s,
+            s / p,
+            120e9 / p
+        );
+    }
+    // A realistic DSE scan: 14x14 grid × 4 blocks through the models.
+    b.run("dse_scan_784_predictions", || {
+        let mut acc = 0u64;
+        for kind in BlockKind::ALL {
+            for d in 3..=16 {
+                for c in 3..=16 {
+                    let cfg = ConvBlockConfig::new(kind, d, c).unwrap();
+                    acc += rep.registry.predict(&cfg).unwrap().llut;
+                }
+            }
+        }
+        acc
+    });
+}

@@ -1,0 +1,61 @@
+//! Bench: the PJRT deployment path — artifact load/compile and batched
+//! inference throughput/latency (the L3 serving hot path). Skips gracefully
+//! when `make artifacts` has not run.
+
+use convkit::blocks::BlockKind;
+use convkit::cnn::{zoo, GoldenCnn};
+use convkit::coordinator::service::{BatchExecutor, PjrtExecutor};
+use convkit::runtime::{artifacts_dir, Runtime};
+use convkit::util::bench::Bench;
+use convkit::util::rng::SplitMix64;
+
+fn main() {
+    println!("=== bench: runtime_conv ===");
+    let dir = artifacts_dir();
+    if !dir.join("lenet_q8.hlo.txt").exists() {
+        println!("SKIP: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let rt = Runtime::cpu().expect("pjrt cpu");
+    let mut b = Bench::quick();
+    b.run("load_compile_conv3x3_q8", || rt.load_named(&dir, "conv3x3_q8").unwrap().name.len());
+    b.run("load_compile_lenet_q8", || rt.load_named(&dir, "lenet_q8").unwrap().name.len());
+
+    // Kernel execution.
+    let kernel = rt.load_named(&dir, "conv3x3_q8").unwrap();
+    let plane: Vec<i32> = (0..256).map(|i| (i % 200) - 100).collect();
+    let coeffs: Vec<i32> = (0..9).map(|i| i * 7 - 30).collect();
+    let mut bk = Bench::new();
+    bk.run("execute_conv3x3_16x16", || {
+        kernel.run_i32(&[(&plane, &[16, 16]), (&coeffs, &[3, 3])]).unwrap()[0].len()
+    });
+
+    // Network batch execution: PJRT vs the golden block simulators.
+    let spec = zoo::lenet_ish();
+    let mut exec = PjrtExecutor::from_artifact(rt.load_named(&dir, "lenet_q8").unwrap()).unwrap();
+    let q = 127i64;
+    let mut rng = SplitMix64::new(42);
+    let images: Vec<Vec<i32>> = (0..8)
+        .map(|_| {
+            (0..spec.in_h * spec.in_w).map(|_| rng.range_i64(-q, q) as i32).collect()
+        })
+        .collect();
+    let mut bb = Bench::quick();
+    bb.run("pjrt_lenet_batch8", || exec.infer_batch(&images).unwrap().len());
+    let golden = GoldenCnn::new(spec, BlockKind::Conv2).unwrap();
+    let wide: Vec<Vec<i64>> =
+        images.iter().map(|im| im.iter().map(|&v| v as i64).collect()).collect();
+    bb.run("golden_lenet_batch8", || golden.infer_batch(&wide).unwrap().len());
+    if let (Some(p), Some(g)) = (bb.stats("pjrt_lenet_batch8"), bb.stats("golden_lenet_batch8")) {
+        println!(
+            "-> batch-8 inference: PJRT {:.2} ms vs golden blocks {:.2} ms ({:.1}x)",
+            p.mean_ns / 1e6,
+            g.mean_ns / 1e6,
+            g.mean_ns / p.mean_ns
+        );
+        println!(
+            "-> PJRT throughput: {:.0} images/s",
+            8.0 * 1e9 / p.mean_ns
+        );
+    }
+}

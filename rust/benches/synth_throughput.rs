@@ -1,0 +1,51 @@
+//! Bench: synthesis-simulator throughput — the DSE inner loop (elaborate +
+//! validate + map), per block and for the full campaign. This is the L3 hot
+//! path the §Perf pass optimizes.
+
+use convkit::blocks::{synthesize, BlockKind, ConvBlockConfig};
+use convkit::coordinator::jobs::JobPool;
+use convkit::synth::{map_netlist, MapOptions};
+use convkit::synthdata::{run_sweep, SweepOptions};
+use convkit::util::bench::Bench;
+
+fn main() {
+    println!("=== bench: synth_throughput ===");
+    let mut b = Bench::new();
+    let opts = MapOptions::default();
+    for kind in BlockKind::ALL {
+        let cfg = ConvBlockConfig::new(kind, 8, 8).unwrap();
+        b.run(&format!("synthesize_{}_8x8", kind.name()), || synthesize(&cfg, &opts));
+        b.run(&format!("synthesize_{}_16x16", kind.name()), || {
+            synthesize(&ConvBlockConfig::new(kind, 16, 16).unwrap(), &opts)
+        });
+    }
+    // Elaboration vs mapping split (where does the time go?).
+    let cfg1 = ConvBlockConfig::new(BlockKind::Conv1, 16, 16).unwrap();
+    b.run("elaborate_conv1_16x16", || cfg1.elaborate().cells.len());
+    let netlist = cfg1.elaborate();
+    b.run("map_conv1_16x16", || map_netlist(&netlist, &opts));
+    b.run("validate_conv1_16x16", || netlist.validate().is_ok());
+
+    // Full campaign, serial vs pooled.
+    let mut bq = Bench::quick();
+    bq.run("campaign_784_serial", || run_sweep(&SweepOptions::default()).unwrap().len());
+    let pool = JobPool::new();
+    bq.run("campaign_784_pooled", || {
+        let opts = SweepOptions::default();
+        let cfgs = convkit::synthdata::sweep_configs(&opts);
+        let jobs: Vec<_> = cfgs
+            .into_iter()
+            .map(|cfg| {
+                let m = opts.map.clone();
+                move || synthesize(&cfg, &m)
+            })
+            .collect();
+        pool.run(jobs).len()
+    });
+    if let Some(s) = bq.stats("campaign_784_serial") {
+        println!(
+            "-> campaign throughput: {:.0} synthesis runs/s (vs Vivado's ~1/minutes: >10^5x)",
+            784.0 * s.throughput()
+        );
+    }
+}

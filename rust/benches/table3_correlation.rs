@@ -1,0 +1,37 @@
+//! Bench + regeneration: paper Table 3 (Pearson correlation quadrants).
+//!
+//! Prints the regenerated table (the deliverable) and times the two stages
+//! that produce it: the 784-run synthesis campaign and the correlation pass.
+
+use convkit::blocks::BlockKind;
+use convkit::coordinator::dse::DseEngine;
+use convkit::report;
+use convkit::stats::pearson;
+use convkit::util::bench::Bench;
+
+fn main() {
+    println!("=== bench: table3_correlation ===");
+    // Tables 1 and 2 are static-context tables; regenerate them here so one
+    // `cargo bench` run reproduces every table of the paper.
+    println!("{}", report::table1(true));
+    println!("{}", report::table2());
+    let rep = DseEngine::new().run().expect("pipeline");
+    println!("{}", report::table3(&rep, true));
+
+    let mut b = Bench::quick();
+    b.run("synthesis_campaign_784_configs", || {
+        DseEngine::new().collect().unwrap().len()
+    });
+    let (d, c, ys) = rep.dataset.columns(BlockKind::Conv1);
+    b.run("pearson_one_pair_196pts", || pearson(&d, &ys[0]));
+    b.run("correlation_quadrants_all_blocks", || {
+        let mut acc = 0.0;
+        for block in BlockKind::ALL {
+            for (_, vals) in rep.correlation_quadrant(block) {
+                acc += vals.iter().sum::<f64>();
+            }
+        }
+        acc
+    });
+    let _ = (c, ys);
+}

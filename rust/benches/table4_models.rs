@@ -1,0 +1,22 @@
+//! Bench + regeneration: paper Table 4 (model fitting + error metrics).
+
+use convkit::coordinator::dse::DseEngine;
+use convkit::models::{ModelRegistry, SelectOptions};
+use convkit::report;
+use convkit::stats::{Metrics, PolyModel};
+use convkit::util::bench::Bench;
+
+fn main() {
+    println!("=== bench: table4_models ===");
+    let rep = DseEngine::new().run().expect("pipeline");
+    println!("{}", report::table4(&rep, true));
+
+    let mut b = Bench::quick();
+    b.run("algorithm1_fit_all_20_models", || {
+        ModelRegistry::fit(&rep.dataset, &SelectOptions::default()).unwrap().len()
+    });
+    let samples = rep.dataset.samples(convkit::blocks::BlockKind::Conv1, convkit::synth::Resource::Llut);
+    b.run("polyfit_degree4_196pts", || PolyModel::fit(&samples, 4).unwrap().r2);
+    let y: Vec<f64> = samples.iter().map(|s| s.2).collect();
+    b.run("metrics_mse_mae_r2_mape", || Metrics::of(&y, &y).r2);
+}

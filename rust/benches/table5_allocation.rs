@@ -1,0 +1,31 @@
+//! Bench + regeneration: paper Table 5 (block-mix allocation at 80 % cap).
+
+use convkit::allocate::{allocate_mix, allocate_single, unit_costs};
+use convkit::coordinator::dse::DseEngine;
+use convkit::platform::Platform;
+use convkit::report;
+use convkit::util::bench::Bench;
+
+fn main() {
+    println!("=== bench: table5_allocation ===");
+    let rep = DseEngine::new().run().expect("pipeline");
+    let plat = Platform::zcu104();
+    println!("{}", report::table5(&rep, &plat, 8, 8, 0.8, true).unwrap());
+
+    let unit = unit_costs(&rep.registry, 8, 8).unwrap();
+    let mut b = Bench::new();
+    b.run("allocate_single_conv1", || allocate_single(&unit[0], &plat, 0.8));
+    b.run("allocate_mix_greedy_plus_hillclimb", || {
+        allocate_mix(&unit, &plat, 0.8).unwrap().total_convolutions()
+    });
+    b.run("allocation_study_5_rows", || {
+        rep.allocation_study(&plat, 8, 8, 0.8).unwrap().len()
+    });
+    // Cross-platform sweep: the DSE a user would actually run.
+    b.run("allocate_mix_all_6_platforms", || {
+        Platform::all()
+            .iter()
+            .map(|p| allocate_mix(&unit, p, 0.8).unwrap().total_convolutions())
+            .sum::<u64>()
+    });
+}

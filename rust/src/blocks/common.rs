@@ -1,0 +1,252 @@
+//! Block identity, configuration and the shared synthesis entry point.
+
+use crate::fixedpoint::QFormat;
+use crate::netlist::Netlist;
+use crate::synth::{map_netlist, MapOptions, ResourceVector};
+use crate::util::error::{Error, Result};
+use std::fmt;
+
+/// Sweep bounds used throughout the paper (196 = 14 × 14 configurations).
+pub const SWEEP_MIN_BITS: u32 = 3;
+/// Upper sweep bound (inclusive).
+pub const SWEEP_MAX_BITS: u32 = 16;
+
+/// Which of the paper's four blocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum BlockKind {
+    Conv1,
+    Conv2,
+    Conv3,
+    Conv4,
+}
+
+impl BlockKind {
+    /// All blocks in paper order.
+    pub const ALL: [BlockKind; 4] =
+        [BlockKind::Conv1, BlockKind::Conv2, BlockKind::Conv3, BlockKind::Conv4];
+
+    /// Paper-facing name (`Conv1`...).
+    pub fn name(&self) -> &'static str {
+        match self {
+            BlockKind::Conv1 => "Conv1",
+            BlockKind::Conv2 => "Conv2",
+            BlockKind::Conv3 => "Conv3",
+            BlockKind::Conv4 => "Conv4",
+        }
+    }
+
+    /// Parse a (case-insensitive) name.
+    pub fn parse(s: &str) -> Option<BlockKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "conv1" | "conv_1" | "1" => Some(BlockKind::Conv1),
+            "conv2" | "conv_2" | "2" => Some(BlockKind::Conv2),
+            "conv3" | "conv_3" | "3" => Some(BlockKind::Conv3),
+            "conv4" | "conv_4" | "4" => Some(BlockKind::Conv4),
+            _ => None,
+        }
+    }
+
+    /// DSP slices per block instance (paper Table 2, exact by construction).
+    pub fn dsp_count(&self) -> u64 {
+        match self {
+            BlockKind::Conv1 => 0,
+            BlockKind::Conv2 | BlockKind::Conv3 => 1,
+            BlockKind::Conv4 => 2,
+        }
+    }
+
+    /// Parallel convolution engines per block instance (Table 5's "Total
+    /// Conv." column counts these).
+    pub fn convolutions_per_block(&self) -> u64 {
+        match self {
+            BlockKind::Conv1 | BlockKind::Conv2 => 1,
+            BlockKind::Conv3 | BlockKind::Conv4 => 2,
+        }
+    }
+
+    /// Initiation interval in cycles between accepted windows, per lane
+    /// (honest microarchitecture numbers; see module docs). All four blocks
+    /// are sequential 9-tap MACs (Conv1 through its fabric array multiplier,
+    /// the others through DSPs); the coefficient width is accepted for
+    /// forward-compatibility with digit-serial variants.
+    pub fn initiation_interval(&self, _c_bits: u32) -> u64 {
+        9
+    }
+
+    /// Paper Table 2 qualitative "usage de la logique" class, regenerated and
+    /// asserted against actual synthesis in `report::table2`.
+    pub fn logic_usage_class(&self) -> &'static str {
+        match self {
+            BlockKind::Conv1 => "high",
+            BlockKind::Conv2 => "low",
+            BlockKind::Conv3 | BlockKind::Conv4 => "moderate",
+        }
+    }
+}
+
+impl fmt::Display for BlockKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A fully-specified block instance: kind + operand widths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ConvBlockConfig {
+    /// Which microarchitecture.
+    pub kind: BlockKind,
+    /// Data (pixel) width in bits.
+    pub data_bits: u32,
+    /// Coefficient width in bits.
+    pub coeff_bits: u32,
+    /// Output right-shift applied before saturation (runtime parameter; does
+    /// not affect resources — the shifter is fixed-width wiring).
+    pub shift: u32,
+}
+
+impl ConvBlockConfig {
+    /// Validated constructor. Widths must lie in the sweep range 3..=16;
+    /// `Conv3` additionally clamps nothing here — data wider than 8 bits is
+    /// *accepted* and truncated to the fixed 8-bit DSP lanes, mirroring the
+    /// paper's sweep which synthesized all 196 configs for every block
+    /// ("Opérandes jusqu'à 8 bits" is a datapath property, not a generic
+    /// bound). Use [`Self::effective_data_bits`] for the numerics.
+    pub fn new(kind: BlockKind, data_bits: u32, coeff_bits: u32) -> Result<Self> {
+        for (what, v) in [("data", data_bits), ("coeff", coeff_bits)] {
+            if !(SWEEP_MIN_BITS..=SWEEP_MAX_BITS).contains(&v) {
+                return Err(Error::InvalidConfig(format!(
+                    "{kind}: {what} width {v} outside {SWEEP_MIN_BITS}..={SWEEP_MAX_BITS}"
+                )));
+            }
+        }
+        Ok(ConvBlockConfig { kind, data_bits, coeff_bits, shift: 0 })
+    }
+
+    /// Builder-style shift setter.
+    pub fn with_shift(mut self, shift: u32) -> Self {
+        self.shift = shift;
+        self
+    }
+
+    /// The data width the datapath actually honours (`Conv3` lanes are fixed
+    /// 8-bit).
+    pub fn effective_data_bits(&self) -> u32 {
+        match self.kind {
+            BlockKind::Conv3 => self.data_bits.min(8),
+            _ => self.data_bits,
+        }
+    }
+
+    /// Data format seen by the numerics.
+    pub fn data_q(&self) -> QFormat {
+        QFormat::new(self.effective_data_bits()).expect("validated width")
+    }
+
+    /// Coefficient format.
+    pub fn coeff_q(&self) -> QFormat {
+        QFormat::new(self.coeff_bits).expect("validated width")
+    }
+
+    /// Canonical design name (used for jitter seeding and reports).
+    pub fn design_name(&self) -> String {
+        format!("{}_d{}_c{}", self.kind.name().to_ascii_lowercase(), self.data_bits, self.coeff_bits)
+    }
+
+    /// Elaborate this configuration's structural netlist.
+    pub fn elaborate(&self) -> Netlist {
+        match self.kind {
+            BlockKind::Conv1 => super::conv1::elaborate(self),
+            BlockKind::Conv2 => super::conv2::elaborate(self),
+            BlockKind::Conv3 => super::conv3::elaborate(self),
+            BlockKind::Conv4 => super::conv4::elaborate(self),
+        }
+    }
+
+    /// Build the cycle-accurate functional simulator for this configuration.
+    pub fn simulator(&self) -> super::funcsim::FuncSim {
+        super::funcsim::FuncSim::new(*self)
+    }
+}
+
+impl fmt::Display for ConvBlockConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}(d={}, c={})", self.kind, self.data_bits, self.coeff_bits)
+    }
+}
+
+/// Synthesize a block configuration: elaborate + validate + map.
+///
+/// This is the simulator's equivalent of one Vivado `synth_design` +
+/// `report_utilization` run (the paper's §3.2 data-collection step).
+pub fn synthesize(cfg: &ConvBlockConfig, opts: &MapOptions) -> ResourceVector {
+    let netlist = cfg.elaborate();
+    debug_assert!(netlist.validate().is_ok(), "invalid netlist for {cfg}");
+    map_netlist(&netlist, opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for k in BlockKind::ALL {
+            assert_eq!(BlockKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(BlockKind::parse("CONV3"), Some(BlockKind::Conv3));
+        assert_eq!(BlockKind::parse("conv5"), None);
+    }
+
+    #[test]
+    fn dsp_counts_match_table2() {
+        assert_eq!(BlockKind::Conv1.dsp_count(), 0);
+        assert_eq!(BlockKind::Conv2.dsp_count(), 1);
+        assert_eq!(BlockKind::Conv3.dsp_count(), 1);
+        assert_eq!(BlockKind::Conv4.dsp_count(), 2);
+    }
+
+    #[test]
+    fn lanes_match_table2() {
+        assert_eq!(BlockKind::Conv1.convolutions_per_block(), 1);
+        assert_eq!(BlockKind::Conv3.convolutions_per_block(), 2);
+        assert_eq!(BlockKind::Conv4.convolutions_per_block(), 2);
+    }
+
+    #[test]
+    fn config_validates_sweep_range() {
+        assert!(ConvBlockConfig::new(BlockKind::Conv1, 2, 8).is_err());
+        assert!(ConvBlockConfig::new(BlockKind::Conv1, 8, 17).is_err());
+        assert!(ConvBlockConfig::new(BlockKind::Conv1, 3, 16).is_ok());
+    }
+
+    #[test]
+    fn conv3_clamps_effective_data_width() {
+        let c = ConvBlockConfig::new(BlockKind::Conv3, 12, 8).unwrap();
+        assert_eq!(c.effective_data_bits(), 8);
+        assert_eq!(c.data_q().bits(), 8);
+        let c2 = ConvBlockConfig::new(BlockKind::Conv3, 5, 8).unwrap();
+        assert_eq!(c2.effective_data_bits(), 5);
+        let c4 = ConvBlockConfig::new(BlockKind::Conv4, 12, 8).unwrap();
+        assert_eq!(c4.effective_data_bits(), 12);
+    }
+
+    #[test]
+    fn design_names_stable() {
+        let c = ConvBlockConfig::new(BlockKind::Conv2, 8, 10).unwrap();
+        assert_eq!(c.design_name(), "conv2_d8_c10");
+        assert_eq!(c.to_string(), "Conv2(d=8, c=10)");
+    }
+
+    #[test]
+    fn initiation_intervals() {
+        assert_eq!(BlockKind::Conv1.initiation_interval(12), 9);
+        assert_eq!(BlockKind::Conv2.initiation_interval(12), 9);
+        assert_eq!(BlockKind::Conv3.initiation_interval(8), 9);
+    }
+
+    #[test]
+    fn shift_builder() {
+        let c = ConvBlockConfig::new(BlockKind::Conv1, 8, 8).unwrap().with_shift(7);
+        assert_eq!(c.shift, 7);
+    }
+}

@@ -1,0 +1,180 @@
+//! `Conv1` — the DSP-free block: "Logique et CChains" (paper Table 2).
+//!
+//! Microarchitecture (DESIGN.md §4): a sequential MAC — structurally `Conv2`
+//! with the DSP48E2 replaced by ONE fabric **array multiplier** on carry
+//! chains, visited by the nine taps over nine cycles. This is the only
+//! DSP-free datapath consistent with the paper's measurements:
+//!
+//! * `LLUT(8,8) ≈ 104` — one d×c Baugh-Wooley array (≈ d·c partial-product
+//!   LUTs + a carry-chain reduction ladder) + a (d+c+4)-bit accumulator, NOT
+//!   nine parallel multipliers (which would cost ~650);
+//! * `corr(LLUT, d) ≈ corr(LLUT, c) ≈ 0.67` — the d·c product term dominates
+//!   symmetrically (paper Table 3, Conv1 quadrant), and is why the paper's
+//!   Conv1 model needs polynomial degree ≥ 2 (Figure 1's curved surface);
+//! * `CChain ≈ 9` — the reduction ladder + accumulator segments;
+//! * FF correlates with *both* widths (accumulator d+c, staging c) unlike the
+//!   DSP blocks, again as Table 3 shows.
+
+use super::common::ConvBlockConfig;
+use crate::netlist::{Netlist, NetlistBuilder};
+use crate::synth::{adder, control, multiplier, storage};
+
+/// Internal streaming tile width the line buffers are sized for (a resource
+/// constant: the paper's blocks target a fixed camera line length).
+pub const LINE_DEPTH: usize = 32;
+
+/// Elaborate the `Conv1` netlist.
+pub fn elaborate(cfg: &ConvBlockConfig) -> Netlist {
+    let d = cfg.data_bits as usize;
+    let c = cfg.coeff_bits as usize;
+    let mut b = NetlistBuilder::new(&cfg.design_name());
+
+    // --- I/O ---
+    let pixel_in = b.top_input_bus(d); // raster-scan pixel stream
+    let coeff_serial = b.top_input(); // serial coefficient bit
+    let load_en = b.top_input();
+
+    // --- window assembly: SRL line buffers + dynamic-tap window queue ---
+    let row1 = storage::line_buffer(&mut b, "line0", &pixel_in, LINE_DEPTH);
+    let _row2 = storage::line_buffer(&mut b, "line1", &row1, LINE_DEPTH);
+    b.push_scope("winq");
+    let mut win_tap = Vec::with_capacity(d);
+    for i in 0..d {
+        win_tap.push(b.srl16("q", pixel_in[i], load_en));
+    }
+    b.pop_scope();
+
+    // --- coefficient path: frame load FIFO + staging FFs + SRL queue ---
+    let fifo_out = storage::load_fifo(&mut b, "load_fifo", coeff_serial, load_en, 9 * c);
+    b.push_scope("coeff");
+    let mut stage = Vec::with_capacity(c);
+    let mut prev = fifo_out;
+    for _ in 0..c {
+        let q = b.fdre("stage", prev);
+        stage.push(q);
+        prev = q;
+    }
+    let mut coeff_tap = Vec::with_capacity(c);
+    for &s in stage.iter() {
+        coeff_tap.push(b.srl16("q", s, load_en));
+    }
+    b.pop_scope();
+
+    // --- THE fabric multiplier: one d×c Baugh-Wooley array, time-shared by
+    // the nine taps (the block's defining structure) ---
+    let product = multiplier::array_multiplier(&mut b, "mult", &win_tap, &coeff_tap);
+
+    // --- accumulator: (d+c+4)-bit carry-chain adder with register feedback ---
+    let acc_w = d + c + 4;
+    b.push_scope("acc");
+    let acc_q: Vec<_> = (0..acc_w).map(|_| b.net()).collect();
+    let mut padded = product.clone();
+    let msb = *product.last().unwrap();
+    padded.extend(std::iter::repeat(msb).take(acc_w.saturating_sub(padded.len())));
+    let sum = adder::add(&mut b, "add", &padded[..acc_w], &acc_q, false);
+    for i in 0..acc_w {
+        b.fdre_into("r", sum.sum[i], acc_q[i]);
+    }
+    b.pop_scope();
+
+    // --- output stage: saturation muxes (∝ d) + overflow detect over the
+    // accumulator head (∝ c) ---
+    b.push_scope("sat");
+    let head: Vec<_> = sum.sum[d.min(acc_w - 1)..].to_vec();
+    let ov_parts: Vec<_> = head
+        .chunks(6)
+        .map(|ch| b.lut("ov", ch))
+        .collect();
+    let ov =
+        if ov_parts.len() == 1 { ov_parts[0] } else { b.lut("ov_or", &ov_parts[..6.min(ov_parts.len())]) };
+    let mut out_bits = Vec::with_capacity(d);
+    for i in 0..d {
+        out_bits.push(b.lut("mux", &[sum.sum[i], ov]));
+    }
+    b.pop_scope();
+    let _out_reg = b.fdre_bus("out_reg", &out_bits);
+
+    // --- control: tap counter (9), coefficient-load counter (9·c), FSM ---
+    let (_tap_cnt, tap_tc) = control::counter(&mut b, "tap_cnt", 9);
+    let (_load_cnt, load_tc) = control::counter(&mut b, "load_cnt", 9 * c);
+    let _fsm = control::fsm_one_hot(&mut b, "ctl", 4, &[tap_tc, load_tc]);
+
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::common::{synthesize, BlockKind, ConvBlockConfig};
+    use crate::netlist::PrimitiveClass;
+    use crate::synth::MapOptions;
+
+    fn cfg(d: u32, c: u32) -> ConvBlockConfig {
+        ConvBlockConfig::new(BlockKind::Conv1, d, c).unwrap()
+    }
+
+    #[test]
+    fn netlist_is_valid_across_sweep_corners() {
+        for (d, c) in [(3, 3), (3, 16), (16, 3), (16, 16), (8, 8)] {
+            let n = elaborate(&cfg(d, c));
+            n.validate().unwrap_or_else(|e| panic!("d={d} c={c}: {e}"));
+        }
+    }
+
+    #[test]
+    fn uses_no_dsp_and_several_carry_chains() {
+        let n = elaborate(&cfg(8, 8));
+        let s = n.stats();
+        assert_eq!(s.count(PrimitiveClass::Dsp), 0, "Conv1 is the DSP-free block");
+        assert!(s.count(PrimitiveClass::CarryChain) >= 5, "multiplier ladder + accumulator");
+    }
+
+    #[test]
+    fn llut_grows_with_both_widths_symmetrically() {
+        let at = |d: u32, c: u32| synthesize(&cfg(d, c), &MapOptions::exact()).llut as f64;
+        let d_gain = at(16, 8) / at(3, 8);
+        let c_gain = at(8, 16) / at(8, 3);
+        assert!(d_gain > 1.8, "d gain {d_gain}");
+        assert!(c_gain > 1.8, "c gain {c_gain}");
+        // The d·c array makes the two axes comparable (paper: 0.668 vs 0.672).
+        assert!((d_gain / c_gain - 1.0).abs() < 0.5, "{d_gain} vs {c_gain}");
+    }
+
+    #[test]
+    fn llut_grows_with_coeff_width() {
+        let r3 = synthesize(&cfg(8, 3), &MapOptions::exact());
+        let r16 = synthesize(&cfg(8, 16), &MapOptions::exact());
+        assert!(r16.llut > r3.llut + 50, "array columns: {} vs {}", r16.llut, r3.llut);
+        assert!(r16.mlut > r3.mlut, "load FIFO + coeff queue grow with c");
+    }
+
+    #[test]
+    fn calibration_magnitude_at_8x8() {
+        // Paper anchor (DESIGN.md §2): Conv1 ≈ 104 LLUT at 8/8 — one array
+        // multiplier + accumulator + control, far from a 9-multiplier design
+        // (~650+). Accept the same magnitude band.
+        let r = synthesize(&cfg(8, 8), &MapOptions::exact());
+        assert!(r.llut >= 80 && r.llut <= 220, "Conv1 8/8 LLUT calibration: {}", r.llut);
+        assert!(r.dsp == 0);
+        assert!(r.cchain >= 5 && r.cchain <= 30, "CChain calibration: {}", r.cchain);
+    }
+
+    #[test]
+    fn ff_depends_on_both_widths() {
+        // Unlike Conv2/Conv4 (DSP-internal registers), Conv1's accumulator is
+        // fabric FFs of width d+c+4 — Table 3's Conv1 FF row correlates with
+        // both parameters.
+        let base = synthesize(&cfg(8, 8), &MapOptions::exact()).ff;
+        assert!(synthesize(&cfg(16, 8), &MapOptions::exact()).ff > base);
+        assert!(synthesize(&cfg(8, 16), &MapOptions::exact()).ff > base);
+    }
+
+    #[test]
+    fn mlut_depends_on_both_widths() {
+        let base = synthesize(&cfg(8, 8), &MapOptions::exact());
+        let wide_d = synthesize(&cfg(16, 8), &MapOptions::exact());
+        let wide_c = synthesize(&cfg(8, 16), &MapOptions::exact());
+        assert!(wide_d.mlut > base.mlut, "line buffers scale with d");
+        assert!(wide_c.mlut >= base.mlut, "coeff queue + FIFO step with c");
+    }
+}

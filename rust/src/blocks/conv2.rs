@@ -1,0 +1,172 @@
+//! `Conv2` — the minimal-logic block: one DSP48E2, sequential MAC
+//! ("Logique réduite", paper Table 2).
+//!
+//! Microarchitecture (DESIGN.md §4): a single DSP in `A*B+P` accumulate mode
+//! visits the nine taps over nine cycles. All data-width-dependent state lives
+//! either inside the DSP (A/B/P hard registers) or in SRL-based queues, which
+//! is the structural reason the paper measures `corr(FF, data width) = 0.000`
+//! for this block: the only fabric flip-flops are the `c`-bit coefficient
+//! staging register and the control plane.
+//!
+//! * LLUT: output saturation (∝ d) + coefficient staging gates (∝ c) +
+//!   control staircase (⌈log₂ 9c⌉) — the near-planar Figure 2 surface;
+//! * MLUT: window queue (d SRL16s, dynamic-tap) + 2 line buffers (∝ d) +
+//!   coefficient queue (∝ c);
+//! * FF: `c` staging + control only;
+//! * DSP: exactly 1.
+
+use super::common::ConvBlockConfig;
+use crate::netlist::{Netlist, NetlistBuilder};
+use crate::synth::{control, dsp, storage};
+
+/// Line-buffer depth (shared resource constant with `Conv1`).
+pub use super::conv1::LINE_DEPTH;
+
+/// Elaborate the `Conv2` netlist.
+pub fn elaborate(cfg: &ConvBlockConfig) -> Netlist {
+    let d = cfg.data_bits as usize;
+    let c = cfg.coeff_bits as usize;
+    let mut b = NetlistBuilder::new(&cfg.design_name());
+
+    // --- I/O ---
+    let pixel_in = b.top_input_bus(d);
+    let coeff_serial = b.top_input();
+    let load_en = b.top_input();
+
+    // --- window assembly: line buffers + dynamic-tap SRL window queue ---
+    let row1 = storage::line_buffer(&mut b, "line0", &pixel_in, LINE_DEPTH);
+    let _row2 = storage::line_buffer(&mut b, "line1", &row1, LINE_DEPTH);
+    // Window queue: d SRL16s hold the last 16 pixels of each of 3 phases; the
+    // tap address (from control) selects the window element each MAC cycle.
+    b.push_scope("winq");
+    let mut win_tap = Vec::with_capacity(d);
+    for i in 0..d {
+        let q = b.srl16("q", pixel_in[i], load_en);
+        win_tap.push(q);
+    }
+    b.pop_scope();
+
+    // --- coefficient path: frame load FIFO + staging register + SRL queue ---
+    let fifo_out = storage::load_fifo(&mut b, "load_fifo", coeff_serial, load_en, 9 * c);
+    b.push_scope("coeff");
+    // Staging: c-bit shift register in fabric FFs (serial in, word out) — the
+    // block's only d-independent FF bank.
+    let mut stage = Vec::with_capacity(c);
+    let mut prev = fifo_out;
+    for _ in 0..c {
+        let q = b.fdre("stage", prev);
+        stage.push(q);
+        prev = q;
+    }
+    // Write gating: one dual-output LUT per staged bit PAIR (the gate
+    // function is identical across bits, so the mapper's LUT6_2 shares it) —
+    // the moderate coefficient-width LLUT slope of Table 3's Conv2 row.
+    let mut gated = Vec::with_capacity(c);
+    for pair in stage.chunks(2) {
+        let mut ins = pair.to_vec();
+        ins.push(load_en);
+        let g = b.lut("gate", &ins);
+        for _ in 0..pair.len() {
+            gated.push(g);
+        }
+    }
+    let stage = gated;
+    // Queue: c SRL16s (9 deep), tap-addressed by the MAC cycle counter.
+    let mut coeff_tap = Vec::with_capacity(c);
+    for &s in stage.iter() {
+        coeff_tap.push(b.srl16("q", s, load_en));
+    }
+    b.pop_scope();
+
+    // --- the single DSP MAC ---
+    let p = dsp::dsp_mac(&mut b, "mac", &win_tap, &coeff_tap);
+
+    // --- output stage: saturation muxes (∝ d) + overflow detect (∝ c) ---
+    b.push_scope("sat");
+    let head: Vec<_> = p[(d + c).min(47)..(d + c + 6).min(48)].to_vec();
+    let ov = b.lut("ov", &head[..head.len().min(6)]);
+    let mut out_bits = Vec::with_capacity(d);
+    for i in 0..d {
+        out_bits.push(b.lut("mux", &[p[i], ov]));
+    }
+    b.pop_scope();
+    // No fabric output register: the result is taken from the DSP's hard P
+    // register through the saturation muxes — the reason corr(FF, d) = 0.
+    let _ = out_bits;
+
+    // --- control: tap counter (9 states), coefficient-load counter (9·c),
+    // phase FSM ---
+    let (_tap_cnt, tap_tc) = control::counter(&mut b, "tap_cnt", 9);
+    let (_load_cnt, load_tc) = control::counter(&mut b, "load_cnt", 9 * c);
+    let _fsm = control::fsm_one_hot(&mut b, "ctl", 3, &[tap_tc, load_tc]);
+
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::common::{synthesize, BlockKind, ConvBlockConfig};
+    use crate::netlist::PrimitiveClass;
+    use crate::synth::MapOptions;
+
+    fn cfg(d: u32, c: u32) -> ConvBlockConfig {
+        ConvBlockConfig::new(BlockKind::Conv2, d, c).unwrap()
+    }
+
+    #[test]
+    fn netlist_valid_across_corners() {
+        for (d, c) in [(3, 3), (3, 16), (16, 3), (16, 16), (8, 8)] {
+            elaborate(&cfg(d, c)).validate().unwrap_or_else(|e| panic!("d={d} c={c}: {e}"));
+        }
+    }
+
+    #[test]
+    fn exactly_one_dsp_and_no_carry() {
+        let s = elaborate(&cfg(8, 8)).stats();
+        assert_eq!(s.count(PrimitiveClass::Dsp), 1);
+        assert_eq!(s.count(PrimitiveClass::CarryChain), 0, "accumulation is inside the DSP");
+    }
+
+    #[test]
+    fn ff_independent_of_data_width() {
+        // The paper's Table 3 Conv2 row: corr(FF, data) = 0.000.
+        let f = |d| synthesize(&cfg(d, 8), &MapOptions::exact()).ff;
+        assert_eq!(f(3), f(8));
+        assert_eq!(f(8), f(16));
+    }
+
+    #[test]
+    fn ff_grows_with_coeff_width() {
+        // corr(FF, coeff) = 0.997: staging register dominates.
+        let f = |c| synthesize(&cfg(8, c), &MapOptions::exact()).ff;
+        assert!(f(16) >= f(3) + 12, "{} vs {}", f(16), f(3));
+    }
+
+    #[test]
+    fn llut_low_and_grows_with_both() {
+        let base = synthesize(&cfg(8, 8), &MapOptions::exact());
+        assert!(base.llut <= 60, "Conv2 is the low-logic block: {}", base.llut);
+        let wd = synthesize(&cfg(16, 8), &MapOptions::exact());
+        let wc = synthesize(&cfg(8, 16), &MapOptions::exact());
+        assert!(wd.llut > base.llut);
+        assert!(wc.llut > base.llut);
+    }
+
+    #[test]
+    fn much_smaller_than_conv1() {
+        let c1 = synthesize(
+            &ConvBlockConfig::new(BlockKind::Conv1, 8, 8).unwrap(),
+            &MapOptions::exact(),
+        );
+        let c2 = synthesize(&cfg(8, 8), &MapOptions::exact());
+        assert!(c1.llut > 3 * c2.llut, "Conv1 {} vs Conv2 {}", c1.llut, c2.llut);
+    }
+
+    #[test]
+    fn mlut_depends_on_both_widths() {
+        let base = synthesize(&cfg(8, 8), &MapOptions::exact());
+        assert!(synthesize(&cfg(16, 8), &MapOptions::exact()).mlut > base.mlut);
+        assert!(synthesize(&cfg(8, 16), &MapOptions::exact()).mlut > base.mlut);
+    }
+}

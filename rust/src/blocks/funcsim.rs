@@ -1,0 +1,455 @@
+//! Bit- and cycle-accurate functional simulation of the four blocks.
+//!
+//! Each block's simulator executes the *microarchitectural* algorithm — not a
+//! shortcut through the reference convolution — so that agreement with
+//! [`crate::fixedpoint::conv3x3_ref`] is a real verification result:
+//!
+//! * `Conv1` runs the coefficient-bit-serial shift-add recurrence (two's
+//!   complement MSB handled as a subtraction), one coefficient bit per cycle;
+//! * `Conv2` runs the nine-cycle sequential MAC;
+//! * `Conv3` emulates the packed DSP arithmetic: both lanes share one
+//!   multiplier through the `x0 + x1·2^19` A:D packing, the high lane being
+//!   recovered with the borrow-correction the fabric stage implements;
+//! * `Conv4` runs two independent sequential MAC channels on the shared
+//!   window.
+//!
+//! Cycle accounting covers the serial coefficient load (one bit per cycle:
+//! `9·c` cycles, twice that for `Conv4`'s two channels) and the per-window
+//! initiation intervals of DESIGN.md §4.
+
+use super::common::{BlockKind, ConvBlockConfig};
+use crate::fixedpoint::{dot9, Rounding};
+use crate::util::error::{Error, Result};
+
+/// Result of a [`FuncSim::process`] call.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SimOutput {
+    /// Outputs per lane/channel:
+    /// * `Conv1`/`Conv2`: one lane, one output per window;
+    /// * `Conv3`: one logical lane (adjacent windows recombined in order);
+    /// * `Conv4`: two channels, each with one output per window.
+    pub lanes: Vec<Vec<i64>>,
+    /// Cycles consumed by this call.
+    pub cycles: u64,
+}
+
+/// Cycle-accurate simulator instance for one configured block.
+#[derive(Debug, Clone)]
+pub struct FuncSim {
+    cfg: ConvBlockConfig,
+    coeff_sets: Vec<[i64; 9]>,
+    total_cycles: u64,
+}
+
+impl FuncSim {
+    /// Create an unloaded simulator.
+    pub fn new(cfg: ConvBlockConfig) -> FuncSim {
+        FuncSim { cfg, coeff_sets: Vec::new(), total_cycles: 0 }
+    }
+
+    /// The configuration under simulation.
+    pub fn config(&self) -> &ConvBlockConfig {
+        &self.cfg
+    }
+
+    /// Total cycles consumed since construction (load + processing).
+    pub fn total_cycles(&self) -> u64 {
+        self.total_cycles
+    }
+
+    /// Number of coefficient sets this block requires (2 for `Conv4`'s two
+    /// channels, 1 otherwise).
+    pub fn required_coeff_sets(&self) -> usize {
+        match self.cfg.kind {
+            BlockKind::Conv4 => 2,
+            _ => 1,
+        }
+    }
+
+    /// Serially load coefficients (one bit per cycle, as the blocks'
+    /// "chargement série" pin does). Validates ranges; `Conv3` additionally
+    /// rejects coefficient widths beyond its 8-bit packed-arithmetic bound
+    /// (synthesis accepts them — the datapath cannot compute with them).
+    pub fn load_coefficients(&mut self, sets: &[[i64; 9]]) -> Result<u64> {
+        if sets.len() != self.required_coeff_sets() {
+            return Err(Error::InvalidConfig(format!(
+                "{} requires {} coefficient set(s), got {}",
+                self.cfg,
+                self.required_coeff_sets(),
+                sets.len()
+            )));
+        }
+        if self.cfg.kind == BlockKind::Conv3 && self.cfg.coeff_bits > 8 {
+            return Err(Error::InvalidConfig(format!(
+                "{}: packed arithmetic requires coefficients ≤ 8 bits (got {})",
+                self.cfg, self.cfg.coeff_bits
+            )));
+        }
+        let cq = self.cfg.coeff_q();
+        for set in sets {
+            for (i, &w) in set.iter().enumerate() {
+                if !cq.contains(w) {
+                    return Err(Error::InvalidConfig(format!(
+                        "{}: coefficient[{i}]={w} outside {} bits",
+                        self.cfg,
+                        cq.bits()
+                    )));
+                }
+            }
+        }
+        self.coeff_sets = sets.to_vec();
+        let cycles = 9 * self.cfg.coeff_bits as u64 * sets.len() as u64;
+        self.total_cycles += cycles;
+        Ok(cycles)
+    }
+
+    /// Process a stream of 3×3 windows (row-major `[x00..x22]` each).
+    pub fn process(&mut self, windows: &[[i64; 9]]) -> Result<SimOutput> {
+        if self.coeff_sets.is_empty() {
+            return Err(Error::InvalidConfig(format!("{}: coefficients not loaded", self.cfg)));
+        }
+        let dq = self.cfg.data_q();
+        for (wi, win) in windows.iter().enumerate() {
+            for (i, &x) in win.iter().enumerate() {
+                if !dq.contains(x) {
+                    return Err(Error::InvalidConfig(format!(
+                        "{}: window[{wi}][{i}]={x} outside {} bits",
+                        self.cfg,
+                        dq.bits()
+                    )));
+                }
+            }
+        }
+        let out = match self.cfg.kind {
+            BlockKind::Conv1 => self.run_conv1(windows),
+            BlockKind::Conv2 => self.run_conv2(windows),
+            BlockKind::Conv3 => self.run_conv3(windows),
+            BlockKind::Conv4 => self.run_conv4(windows),
+        };
+        self.total_cycles += out.cycles;
+        Ok(out)
+    }
+
+    fn narrow(&self, acc: i64) -> i64 {
+        self.cfg.data_q().narrow(acc, self.cfg.shift, Rounding::Floor)
+    }
+
+    /// Conv1: sequential MAC through the fabric array multiplier. The product
+    /// is computed the way the Baugh-Wooley array does — partial products per
+    /// coefficient bit, the sign row subtracted — so this is a bit-level
+    /// emulation of the datapath, not a shortcut through `*`.
+    fn run_conv1(&self, windows: &[[i64; 9]]) -> SimOutput {
+        let c = self.cfg.coeff_bits;
+        let coeffs = &self.coeff_sets[0];
+        let mut outs = Vec::with_capacity(windows.len());
+        for win in windows {
+            let mut acc = 0i64; // fabric accumulator register
+            for tap in 0..9 {
+                // One multiplier pass per cycle: Σ_bits w_bit·(x << bit),
+                // MSB (two's-complement sign) row subtracted.
+                let w_bits = (coeffs[tap] as u64) & ((1u64 << c) - 1);
+                let mut product = 0i64;
+                for bit in 0..c {
+                    if (w_bits >> bit) & 1 == 1 {
+                        let pp = win[tap] << bit;
+                        if bit == c - 1 {
+                            product -= pp;
+                        } else {
+                            product += pp;
+                        }
+                    }
+                }
+                debug_assert_eq!(product, win[tap] * coeffs[tap], "array emulation broken");
+                acc += product;
+            }
+            outs.push(self.narrow(acc));
+        }
+        // One tap per cycle + pipeline fill (multiplier + accumulator regs).
+        let cycles = windows.len() as u64 * 9 + if windows.is_empty() { 0 } else { 3 };
+        SimOutput { lanes: vec![outs], cycles }
+    }
+
+    /// Conv2: nine-cycle sequential MAC through the single DSP.
+    fn run_conv2(&self, windows: &[[i64; 9]]) -> SimOutput {
+        let coeffs = &self.coeff_sets[0];
+        let mut outs = Vec::with_capacity(windows.len());
+        for win in windows {
+            let mut acc = 0i64; // DSP P register
+            for tap in 0..9 {
+                acc += win[tap] * coeffs[tap]; // one MAC per cycle
+            }
+            outs.push(self.narrow(acc));
+        }
+        let cycles = windows.len() as u64 * 9 + if windows.is_empty() { 0 } else { 4 };
+        SimOutput { lanes: vec![outs], cycles }
+    }
+
+    /// Conv3: packed dual-lane arithmetic. Adjacent windows are paired; both
+    /// lanes share the multiplier through the `lane0 + lane1·2^19` packing.
+    fn run_conv3(&self, windows: &[[i64; 9]]) -> SimOutput {
+        const S: u32 = 19; // lane-1 offset inside the 27-bit A:D path
+        let coeffs = &self.coeff_sets[0];
+        let mut outs = Vec::with_capacity(windows.len());
+        let mut pairs = 0u64;
+        for pair in windows.chunks(2) {
+            let w0 = &pair[0];
+            let zero = [0i64; 9];
+            let w1 = pair.get(1).unwrap_or(&zero);
+            // The DSP accumulates the packed products over the nine taps.
+            let mut p = 0i64;
+            for tap in 0..9 {
+                let packed = w0[tap] + (w1[tap] << S);
+                p += packed * coeffs[tap];
+            }
+            // Lane extraction with borrow correction (the fabric fix stage):
+            // lo = sign-extended low S bits; hi = (p >> S) + (lo < 0).
+            let mask = (1i64 << S) - 1;
+            let lo_raw = p & mask;
+            let lo = if lo_raw >= (1i64 << (S - 1)) { lo_raw - (1i64 << S) } else { lo_raw };
+            let hi = (p >> S) + i64::from(lo < 0);
+            debug_assert_eq!(lo, dot9(w0, coeffs), "lane-0 packing violated");
+            debug_assert_eq!(hi, dot9(w1, coeffs), "lane-1 packing violated");
+            outs.push(self.narrow(lo));
+            if pair.len() == 2 {
+                outs.push(self.narrow(hi));
+            }
+            pairs += 1;
+        }
+        let cycles = pairs * 9 + if windows.is_empty() { 0 } else { 4 };
+        SimOutput { lanes: vec![outs], cycles }
+    }
+
+    /// Conv4: two independent MAC channels over the shared window.
+    fn run_conv4(&self, windows: &[[i64; 9]]) -> SimOutput {
+        let (c0, c1) = (&self.coeff_sets[0], &self.coeff_sets[1]);
+        let mut ch0 = Vec::with_capacity(windows.len());
+        let mut ch1 = Vec::with_capacity(windows.len());
+        for win in windows {
+            let mut a0 = 0i64;
+            let mut a1 = 0i64;
+            for tap in 0..9 {
+                a0 += win[tap] * c0[tap];
+                a1 += win[tap] * c1[tap];
+            }
+            ch0.push(self.narrow(a0));
+            ch1.push(self.narrow(a1));
+        }
+        let cycles = windows.len() as u64 * 9 + if windows.is_empty() { 0 } else { 4 };
+        SimOutput { lanes: vec![ch0, ch1], cycles }
+    }
+}
+
+/// Convenience: run a whole image plane (rows × cols, row-major, "valid"
+/// padding) through a block and return the output plane(s): one plane for
+/// `Conv1..Conv3`, two (channels) for `Conv4`.
+pub fn run_plane(
+    cfg: &ConvBlockConfig,
+    plane: &[i64],
+    rows: usize,
+    cols: usize,
+    coeff_sets: &[[i64; 9]],
+) -> Result<Vec<Vec<i64>>> {
+    if rows < 3 || cols < 3 || plane.len() != rows * cols {
+        return Err(Error::InvalidConfig(format!(
+            "plane {rows}x{cols} (len {}) invalid",
+            plane.len()
+        )));
+    }
+    let mut sim = FuncSim::new(*cfg);
+    sim.load_coefficients(coeff_sets)?;
+    let mut windows = Vec::with_capacity((rows - 2) * (cols - 2));
+    for r in 0..rows - 2 {
+        for cc in 0..cols - 2 {
+            let mut w = [0i64; 9];
+            for dr in 0..3 {
+                for dc in 0..3 {
+                    w[dr * 3 + dc] = plane[(r + dr) * cols + (cc + dc)];
+                }
+            }
+            windows.push(w);
+        }
+    }
+    let out = sim.process(&windows)?;
+    Ok(out.lanes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::{conv3x3_plane_ref, conv3x3_ref, QFormat};
+    use crate::util::rng::SplitMix64;
+
+    fn cfg(kind: BlockKind, d: u32, c: u32, shift: u32) -> ConvBlockConfig {
+        ConvBlockConfig::new(kind, d, c).unwrap().with_shift(shift)
+    }
+
+    fn rand_window(rng: &mut SplitMix64, q: QFormat) -> [i64; 9] {
+        let mut w = [0i64; 9];
+        for x in w.iter_mut() {
+            *x = rng.range_i64(q.min(), q.max());
+        }
+        w
+    }
+
+    fn check_block_matches_ref(kind: BlockKind, d: u32, c: u32, shift: u32, seed: u64) {
+        let cfg = cfg(kind, d, c, shift);
+        let dq = cfg.data_q();
+        let cq = cfg.coeff_q();
+        let mut rng = SplitMix64::new(seed);
+        let n_sets = if kind == BlockKind::Conv4 { 2 } else { 1 };
+        let sets: Vec<[i64; 9]> = (0..n_sets).map(|_| rand_window(&mut rng, cq)).collect();
+        let windows: Vec<[i64; 9]> = (0..10).map(|_| rand_window(&mut rng, dq)).collect();
+        let mut sim = FuncSim::new(cfg);
+        sim.load_coefficients(&sets).unwrap();
+        let out = sim.process(&windows).unwrap();
+        for (lane, set) in out.lanes.iter().zip(if kind == BlockKind::Conv4 {
+            sets.clone()
+        } else {
+            vec![sets[0]; 1]
+        }) {
+            for (i, win) in windows.iter().enumerate() {
+                let want =
+                    conv3x3_ref(win, &set, dq, cq, shift, Rounding::Floor).unwrap();
+                assert_eq!(lane[i], want, "{kind:?} d={d} c={c} s={shift} window {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn conv1_bit_serial_matches_reference() {
+        for (d, c, s) in [(3, 3, 0), (8, 8, 4), (8, 16, 7), (16, 3, 0), (16, 16, 10)] {
+            check_block_matches_ref(BlockKind::Conv1, d, c, s, 100 + d as u64 + c as u64);
+        }
+    }
+
+    #[test]
+    fn conv2_sequential_mac_matches_reference() {
+        for (d, c, s) in [(3, 3, 0), (8, 8, 4), (12, 14, 6), (16, 16, 0)] {
+            check_block_matches_ref(BlockKind::Conv2, d, c, s, 200 + d as u64);
+        }
+    }
+
+    #[test]
+    fn conv3_packed_lanes_match_reference() {
+        // Conv3: data ≤ 8 effective, coeff ≤ 8 enforced.
+        for (d, c, s) in [(3, 3, 0), (8, 8, 4), (8, 8, 0), (5, 7, 2)] {
+            check_block_matches_ref(BlockKind::Conv3, d, c, s, 300 + d as u64 + c as u64);
+        }
+    }
+
+    #[test]
+    fn conv3_rejects_wide_coefficients() {
+        let mut sim = FuncSim::new(cfg(BlockKind::Conv3, 8, 9, 0));
+        assert!(sim.load_coefficients(&[[0; 9]]).is_err());
+    }
+
+    #[test]
+    fn conv3_worst_case_packing_is_exact() {
+        // Extreme operands: the packing guard bits must still separate lanes.
+        let cfg3 = cfg(BlockKind::Conv3, 8, 8, 0);
+        let mut sim = FuncSim::new(cfg3);
+        sim.load_coefficients(&[[-128i64; 9]]).unwrap();
+        let w0 = [127i64; 9];
+        let w1 = [-128i64; 9];
+        let out = sim.process(&[w0, w1]).unwrap();
+        let dq = cfg3.data_q();
+        let cq = cfg3.coeff_q();
+        assert_eq!(
+            out.lanes[0][0],
+            conv3x3_ref(&w0, &[-128; 9], dq, cq, 0, Rounding::Floor).unwrap()
+        );
+        assert_eq!(
+            out.lanes[0][1],
+            conv3x3_ref(&w1, &[-128; 9], dq, cq, 0, Rounding::Floor).unwrap()
+        );
+    }
+
+    #[test]
+    fn conv4_two_channels_match_reference() {
+        for (d, c, s) in [(3, 3, 0), (8, 8, 4), (16, 16, 8)] {
+            check_block_matches_ref(BlockKind::Conv4, d, c, s, 400 + c as u64);
+        }
+    }
+
+    #[test]
+    fn cycle_accounting_load_plus_process() {
+        let mut sim = FuncSim::new(cfg(BlockKind::Conv2, 8, 8, 0));
+        let load = sim.load_coefficients(&[[1; 9]]).unwrap();
+        assert_eq!(load, 72, "9 coefficients × 8 bits serial");
+        let out = sim.process(&[[0; 9]; 5]).unwrap();
+        assert_eq!(out.cycles, 5 * 9 + 4);
+        assert_eq!(sim.total_cycles(), 72 + 49);
+    }
+
+    #[test]
+    fn conv1_load_cycles_scale_with_coeff_width_processing_does_not() {
+        let mut s8 = FuncSim::new(cfg(BlockKind::Conv1, 8, 8, 0));
+        let l8 = s8.load_coefficients(&[[1; 9]]).unwrap();
+        let mut s16 = FuncSim::new(cfg(BlockKind::Conv1, 8, 16, 0));
+        let l16 = s16.load_coefficients(&[[1; 9]]).unwrap();
+        assert_eq!(l16, 2 * l8, "serial load is 9·c cycles");
+        let w = [[3i64; 9]; 4];
+        assert_eq!(
+            s16.process(&w).unwrap().cycles,
+            s8.process(&w).unwrap().cycles,
+            "sequential MAC II is 9 regardless of c"
+        );
+    }
+
+    #[test]
+    fn conv4_load_takes_twice_the_cycles() {
+        let mut s2 = FuncSim::new(cfg(BlockKind::Conv2, 8, 8, 0));
+        let mut s4 = FuncSim::new(cfg(BlockKind::Conv4, 8, 8, 0));
+        let l2 = s2.load_coefficients(&[[1; 9]]).unwrap();
+        let l4 = s4.load_coefficients(&[[1; 9], [2; 9]]).unwrap();
+        assert_eq!(l4, 2 * l2);
+    }
+
+    #[test]
+    fn process_without_load_fails() {
+        let mut sim = FuncSim::new(cfg(BlockKind::Conv1, 8, 8, 0));
+        assert!(sim.process(&[[0; 9]]).is_err());
+    }
+
+    #[test]
+    fn window_range_validated() {
+        let mut sim = FuncSim::new(cfg(BlockKind::Conv2, 4, 4, 0));
+        sim.load_coefficients(&[[1; 9]]).unwrap();
+        assert!(sim.process(&[[100i64; 9]]).is_err(), "100 does not fit 4 bits");
+    }
+
+    #[test]
+    fn run_plane_matches_plane_reference_all_blocks() {
+        let rows = 6;
+        let cols = 7;
+        let mut rng = SplitMix64::new(77);
+        for kind in [BlockKind::Conv1, BlockKind::Conv2, BlockKind::Conv3] {
+            let cfgk = cfg(kind, 8, 8, 3);
+            let dq = cfgk.data_q();
+            let plane: Vec<i64> =
+                (0..rows * cols).map(|_| rng.range_i64(dq.min(), dq.max())).collect();
+            let coeffs = rand_window(&mut rng, cfgk.coeff_q());
+            let got = run_plane(&cfgk, &plane, rows, cols, &[coeffs]).unwrap();
+            let want = conv3x3_plane_ref(
+                &plane, rows, cols, &coeffs, dq, cfgk.coeff_q(), 3, Rounding::Floor,
+            )
+            .unwrap();
+            assert_eq!(got[0], want, "{kind:?}");
+        }
+        // Conv4: two channels.
+        let cfg4 = cfg(BlockKind::Conv4, 8, 8, 3);
+        let dq = cfg4.data_q();
+        let plane: Vec<i64> =
+            (0..rows * cols).map(|_| rng.range_i64(dq.min(), dq.max())).collect();
+        let k0 = rand_window(&mut rng, cfg4.coeff_q());
+        let k1 = rand_window(&mut rng, cfg4.coeff_q());
+        let got = run_plane(&cfg4, &plane, rows, cols, &[k0, k1]).unwrap();
+        for (ch, k) in [(0usize, k0), (1, k1)] {
+            let want = conv3x3_plane_ref(
+                &plane, rows, cols, &k, dq, cfg4.coeff_q(), 3, Rounding::Floor,
+            )
+            .unwrap();
+            assert_eq!(got[ch], want, "channel {ch}");
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! The paper's library of four parametrizable 3×3 convolution blocks.
+//!
+//! Each block (paper Table 2) is implemented twice, from one microarchitecture
+//! description (DESIGN.md §4):
+//!
+//! * **netlist face** — `elaborate()` builds the structural netlist consumed by
+//!   the synthesis simulator; [`synthesize`] maps it to a
+//!   [`crate::synth::ResourceVector`].
+//! * **functional face** — a bit- and cycle-accurate simulator implementing
+//!   serial coefficient load, parallel window input and the exact fixed-point
+//!   output stage, validated against [`crate::fixedpoint::conv3x3_ref`] and,
+//!   end-to-end, against the PJRT-executed JAX model.
+//!
+//! | block | DSP | datapath | initiation interval (cycles/output) |
+//! |-------|-----|----------|-------------------------------------|
+//! | `Conv1` | 0 | sequential MAC through ONE fabric array multiplier | 9 |
+//! | `Conv2` | 1 | sequential MAC through one DSP48E2 | 9 |
+//! | `Conv3` | 1 | two data lanes packed per DSP (WP487) | 9 / 2 outputs |
+//! | `Conv4` | 2 | two lanes, one DSP each | 9 / 2 outputs |
+//!
+//! The paper's Table 2 lists "une convolution par cycle" for `Conv1`/`Conv2`;
+//! no 1-DSP or 104-LUT datapath can sustain nine MACs per cycle, so we state
+//! the honest initiation intervals above and regenerate Table 2 with a
+//! footnote (`report::table2`).
+
+pub mod common;
+pub mod conv1;
+pub mod conv2;
+pub mod conv3;
+pub mod conv4;
+pub mod funcsim;
+
+pub use common::{
+    synthesize, BlockKind, ConvBlockConfig, SWEEP_MAX_BITS, SWEEP_MIN_BITS,
+};
+pub use funcsim::{run_plane, FuncSim, SimOutput};

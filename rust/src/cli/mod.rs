@@ -1,0 +1,357 @@
+//! Subcommand implementations for the `convkit` binary.
+
+use convkit::blocks::{synthesize, BlockKind, ConvBlockConfig};
+use convkit::cnn::{plan_deployment, zoo, GoldenCnn};
+use convkit::coordinator::dse::{DseEngine, DseReport};
+use convkit::coordinator::jobs::JobPool;
+use convkit::coordinator::service::{GoldenExecutor, InferenceService, PjrtExecutor};
+use convkit::extend::{energy_estimate, latency_estimate, PowerModel};
+use convkit::fixedpoint::QFormat;
+use convkit::models::SelectOptions;
+use convkit::platform::Platform;
+use convkit::report;
+use convkit::runtime::{artifacts_dir, Runtime};
+use convkit::synth::MapOptions;
+use convkit::synthdata::SweepOptions;
+use convkit::util::args::ParsedArgs;
+use convkit::util::error::{Error, Result};
+use convkit::util::rng::SplitMix64;
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// CLI usage text.
+pub const USAGE: &str = "\
+convkit — parametrizable FPGA convolution blocks + polynomial resource models
+          (GRETSI'25 reproduction; see DESIGN.md)
+
+USAGE: convkit <COMMAND> [OPTIONS]
+
+COMMANDS:
+  sweep      run the synthesis campaign          [--min-bits N --max-bits N
+              --blocks conv1,conv3 --out FILE --no-jitter --seed N --workers N]
+  correlate  Pearson analysis (Table 3)          [--french --cache FILE]
+  fit        fit models, report errors (Table 4) [--french --cache FILE]
+  predict    model vs synthesis for one config   [--block B --data-bits N
+              --coeff-bits N --platform P]
+  allocate   block-mix study (Table 5)           [--platform P --target 0.X
+              --data-bits N --coeff-bits N --french]
+  deploy     map a CNN onto a platform           [--network NAME --platform P
+              --target 0.X]
+  serve      run the batched inference service   [--network NAME --requests N
+              --batch N --golden-only]
+  tables     regenerate paper tables             [N | all] [--french]
+  figures    regenerate Figures 1-3              [N | all] [--csv]
+  blocks     list block characteristics (Table 2)
+  help       this text
+
+The dataset cache (--cache, default data/sweep.csv) makes repeated commands
+skip re-synthesis, mirroring the paper's point: measure once, model forever.";
+
+/// Dispatch a parsed command line.
+pub fn dispatch(args: &ParsedArgs) -> Result<()> {
+    if args.flag("help") {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    match args.command.as_deref() {
+        Some("sweep") => cmd_sweep(args),
+        Some("correlate") => cmd_correlate(args),
+        Some("fit") => cmd_fit(args),
+        Some("predict") => cmd_predict(args),
+        Some("allocate") => cmd_allocate(args),
+        Some("deploy") => cmd_deploy(args),
+        Some("serve") => cmd_serve(args),
+        Some("tables") => cmd_tables(args),
+        Some("figures") => cmd_figures(args),
+        Some("blocks") => {
+            println!("{}", report::table2());
+            Ok(())
+        }
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => Err(Error::Usage(format!("unknown command `{other}`"))),
+    }
+}
+
+fn engine_from(args: &ParsedArgs) -> Result<DseEngine> {
+    let mut sweep = SweepOptions::default();
+    sweep.min_bits = args.get_u64("min-bits", sweep.min_bits as u64)? as u32;
+    sweep.max_bits = args.get_u64("max-bits", sweep.max_bits as u64)? as u32;
+    let blocks = args.get_list("blocks");
+    if !blocks.is_empty() {
+        sweep.blocks = blocks
+            .iter()
+            .map(|b| {
+                BlockKind::parse(b).ok_or_else(|| Error::Usage(format!("unknown block `{b}`")))
+            })
+            .collect::<Result<Vec<_>>>()?;
+    }
+    if args.flag("no-jitter") {
+        sweep.map = MapOptions::exact();
+    }
+    sweep.map.seed = args.get_u64("seed", sweep.map.seed)?;
+    let workers = args.get_u64("workers", 0)? as usize;
+    let pool = if workers == 0 { JobPool::new() } else { JobPool::with_workers(workers) };
+    let cache = args.get("cache").map(PathBuf::from).or_else(|| {
+        // Default cache only for the full default sweep (otherwise stale).
+        if sweep.min_bits == 3 && sweep.max_bits == 16 && sweep.blocks.len() == 4 {
+            Some(PathBuf::from("data/sweep.csv"))
+        } else {
+            None
+        }
+    });
+    let mut eng = DseEngine { sweep, select: SelectOptions::default(), pool, cache: None };
+    if let Some(c) = cache {
+        eng = eng.with_cache(c);
+    }
+    Ok(eng)
+}
+
+fn run_report(args: &ParsedArgs) -> Result<DseReport> {
+    engine_from(args)?.run()
+}
+
+fn platform_from(args: &ParsedArgs) -> Result<Platform> {
+    let name = args.get_str("platform", "zcu104");
+    Platform::by_name(&name).ok_or_else(|| {
+        Error::Usage(format!(
+            "unknown platform `{name}` (known: {})",
+            Platform::all().iter().map(|p| p.name).collect::<Vec<_>>().join(", ")
+        ))
+    })
+}
+
+fn cmd_sweep(args: &ParsedArgs) -> Result<()> {
+    let eng = engine_from(args)?;
+    let t0 = Instant::now();
+    let ds = eng.collect()?;
+    println!(
+        "synthesized {} configurations in {:.2}s ({:.0} synth/s)",
+        ds.len(),
+        t0.elapsed().as_secs_f64(),
+        ds.len() as f64 / t0.elapsed().as_secs_f64()
+    );
+    if let Some(out) = args.get("out") {
+        ds.save(std::path::Path::new(out))?;
+        println!("dataset written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_correlate(args: &ParsedArgs) -> Result<()> {
+    let rep = run_report(args)?;
+    println!("{}", report::table3(&rep, args.flag("french")));
+    Ok(())
+}
+
+fn cmd_fit(args: &ParsedArgs) -> Result<()> {
+    let rep = run_report(args)?;
+    println!("{}", report::table4(&rep, args.flag("french")));
+    println!("All fitted models:");
+    for (k, e) in rep.registry.iter() {
+        println!("  {:>5} {:>6}: {}", k.block.name(), k.resource.name(), e.model);
+    }
+    println!(
+        "\nsynthesis stage: {:.2}s, fitting stage: {:.3}s",
+        rep.synth_seconds, rep.fit_seconds
+    );
+    Ok(())
+}
+
+fn cmd_predict(args: &ParsedArgs) -> Result<()> {
+    let block = BlockKind::parse(&args.get_str("block", "conv2"))
+        .ok_or_else(|| Error::Usage("unknown --block".into()))?;
+    let d = args.get_u64("data-bits", 8)? as u32;
+    let c = args.get_u64("coeff-bits", 8)? as u32;
+    let cfg = ConvBlockConfig::new(block, d, c)?;
+    let rep = run_report(args)?;
+    let t0 = Instant::now();
+    let predicted = rep.registry.predict(&cfg)?;
+    let t_pred = t0.elapsed();
+    let t1 = Instant::now();
+    let measured = synthesize(&cfg, &SweepOptions::default().map);
+    let t_synth = t1.elapsed();
+    println!("{cfg}");
+    println!("  model prediction : {predicted}   ({:.1} µs)", t_pred.as_secs_f64() * 1e6);
+    println!("  synthesis        : {measured}   ({:.1} ms)", t_synth.as_secs_f64() * 1e3);
+    let plat = platform_from(args)?;
+    let u = plat.utilization(&predicted);
+    println!(
+        "  {}: LLUT {:.3}%  MLUT {:.3}%  FF {:.3}%  CChain {:.3}%  DSP {:.3}%",
+        plat.name, u[0], u[1], u[2], u[3], u[4]
+    );
+    Ok(())
+}
+
+fn cmd_allocate(args: &ParsedArgs) -> Result<()> {
+    let rep = run_report(args)?;
+    let plat = platform_from(args)?;
+    let cap = args.get_f64("target", 0.8)?;
+    let d = args.get_u64("data-bits", 8)? as u32;
+    let c = args.get_u64("coeff-bits", 8)? as u32;
+    println!("{}", report::table5(&rep, &plat, d, c, cap, args.flag("french"))?);
+    Ok(())
+}
+
+fn cmd_deploy(args: &ParsedArgs) -> Result<()> {
+    let name = args.get_str("network", "lenet_q8");
+    let net = zoo::all()
+        .into_iter()
+        .find(|n| n.name == name)
+        .ok_or_else(|| Error::Usage(format!("unknown network `{name}`")))?;
+    let rep = run_report(args)?;
+    let plat = platform_from(args)?;
+    let cap = args.get_f64("target", 0.8)?;
+    let plan = plan_deployment(&net, &rep.registry, &plat, cap)?;
+    println!("deployment plan for {name} on {} (cap {:.0}%):", plat.name, cap * 100.0);
+    for lp in &plan.layers {
+        println!(
+            "  layer {}: {} × {}   -> {}",
+            lp.layer,
+            lp.instances,
+            lp.block.name(),
+            lp.footprint
+        );
+    }
+    println!("  total: {}", plan.total);
+    println!(
+        "  utilization: LLUT {:.2}%  MLUT {:.2}%  FF {:.2}%  CChain {:.2}%  DSP {:.2}%  (fits: {})",
+        plan.utilization[0],
+        plan.utilization[1],
+        plan.utilization[2],
+        plan.utilization[3],
+        plan.utilization[4],
+        plan.fits
+    );
+    // Extensions: latency + energy estimates per block choice.
+    for kind in BlockKind::ALL {
+        if let Ok(lat) = latency_estimate(&net, kind) {
+            let en = energy_estimate(
+                &plan.total,
+                &PowerModel::default(),
+                convkit::extend::latency::clock_mhz(kind),
+                0.25,
+                lat.cycles_parallel,
+            );
+            println!(
+                "  if all-{}: {:.0} fps parallel, {:.2} W, {:.4} mJ/inference",
+                kind.name(),
+                lat.fps_parallel,
+                en.total_w,
+                en.mj_per_inference
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &ParsedArgs) -> Result<()> {
+    let name = args.get_str("network", "lenet_q8");
+    let spec = zoo::all()
+        .into_iter()
+        .find(|n| n.name == name)
+        .ok_or_else(|| Error::Usage(format!("unknown network `{name}`")))?;
+    let n_req = args.get_u64("requests", 64)? as usize;
+    let batch = args.get_u64("batch", 8)? as usize;
+    let golden_only = args.flag("golden-only");
+
+    let svc = if golden_only {
+        let cnn = GoldenCnn::new(spec.clone(), BlockKind::Conv2)?;
+        InferenceService::start(GoldenExecutor { cnn }, batch)
+    } else {
+        let name2 = name.clone();
+        InferenceService::start_factory(
+            move || {
+                let rt = Runtime::cpu()?;
+                let art = rt.load_named(&artifacts_dir(), &name2)?;
+                PjrtExecutor::from_artifact(art)
+            },
+            batch,
+        )
+    };
+
+    // Golden cross-check model (the "hardware" truth).
+    let golden = GoldenCnn::new(spec.clone(), BlockKind::Conv3)?;
+    let q = QFormat::new(spec.layers[0].data_bits).expect("valid width");
+    let mut rng = SplitMix64::new(0x5E54E);
+    let t0 = Instant::now();
+    let mut mismatches = 0usize;
+    for i in 0..n_req {
+        let img: Vec<i64> = (0..spec.in_ch * spec.in_h * spec.in_w)
+            .map(|_| rng.range_i64(q.min(), q.max()))
+            .collect();
+        let img32: Vec<i32> = img.iter().map(|&v| v as i32).collect();
+        let logits = svc.infer(img32)?;
+        let want: Vec<i32> = golden.infer(&img)?.into_iter().map(|v| v as i32).collect();
+        if logits != want {
+            mismatches += 1;
+            if mismatches <= 3 {
+                eprintln!("request {i}: MISMATCH {logits:?} vs golden {want:?}");
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = svc.stats()?;
+    println!("served {n_req} requests in {wall:.2}s ({:.1} req/s wall)", n_req as f64 / wall);
+    println!(
+        "service stats: {} requests, {} batches, mean latency {:.2} ms, p95 {:.2} ms",
+        stats.requests, stats.batches, stats.mean_latency_ms, stats.p95_latency_ms
+    );
+    println!("golden cross-check: {} mismatches / {n_req}", mismatches);
+    svc.shutdown();
+    if mismatches > 0 {
+        return Err(Error::Runtime(format!("{mismatches} golden mismatches")));
+    }
+    Ok(())
+}
+
+fn cmd_tables(args: &ParsedArgs) -> Result<()> {
+    let which = args.positional.first().map(String::as_str).unwrap_or("all");
+    let french = args.flag("french");
+    let need_report = matches!(which, "3" | "4" | "5" | "all");
+    let rep = if need_report { Some(run_report(args)?) } else { None };
+    let print = |n: &str| -> Result<()> {
+        match n {
+            "1" => println!("{}", report::table1(french)),
+            "2" => println!("{}", report::table2()),
+            "3" => println!("{}", report::table3(rep.as_ref().unwrap(), french)),
+            "4" => println!("{}", report::table4(rep.as_ref().unwrap(), french)),
+            "5" => {
+                let plat = platform_from(args)?;
+                let cap = args.get_f64("target", 0.8)?;
+                println!("{}", report::table5(rep.as_ref().unwrap(), &plat, 8, 8, cap, french)?);
+            }
+            _ => return Err(Error::Usage(format!("unknown table `{n}`"))),
+        }
+        Ok(())
+    };
+    if which == "all" {
+        for n in ["1", "2", "3", "4", "5"] {
+            print(n)?;
+        }
+    } else {
+        print(which)?;
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &ParsedArgs) -> Result<()> {
+    let rep = run_report(args)?;
+    let which = args.positional.first().map(String::as_str).unwrap_or("all");
+    let figs: Vec<u32> = if which == "all" {
+        vec![1, 2, 3]
+    } else {
+        vec![which.parse().map_err(|_| Error::Usage(format!("bad figure `{which}`")))?]
+    };
+    for f in figs {
+        if args.flag("csv") {
+            println!("# FIGURE {f}");
+            print!("{}", report::figure_csv(&rep, f)?);
+        } else {
+            println!("{}", report::figure_surface(&rep, f)?);
+        }
+    }
+    Ok(())
+}

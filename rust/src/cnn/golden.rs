@@ -1,0 +1,185 @@
+//! The golden model: the network executed through the *block simulators* —
+//! the bit-exact "hardware" reference the PJRT-executed JAX artifact is
+//! checked against.
+
+use super::spec::NetworkSpec;
+use crate::blocks::{run_plane, BlockKind, ConvBlockConfig};
+use crate::fixedpoint::QFormat;
+use crate::util::error::{Error, Result};
+
+/// A network bound to its weights, executable through block simulators.
+#[derive(Debug, Clone)]
+pub struct GoldenCnn {
+    /// The network description.
+    pub spec: NetworkSpec,
+    /// Per-layer, per-(oc, ic) kernels.
+    pub weights: Vec<Vec<[i64; 9]>>,
+    /// Which block microarchitecture executes the convolutions.
+    pub block: BlockKind,
+}
+
+impl GoldenCnn {
+    /// Instantiate with the spec's deterministic weights, executed on `block`.
+    pub fn new(spec: NetworkSpec, block: BlockKind) -> Result<GoldenCnn> {
+        spec.validate()?;
+        if block == BlockKind::Conv3 && spec.layers.iter().any(|l| l.coeff_bits > 8) {
+            return Err(Error::InvalidConfig(
+                "Conv3 deployment requires coefficients ≤ 8 bits".into(),
+            ));
+        }
+        let weights = (0..spec.layers.len())
+            .map(|i| spec.layers[i].weights(spec.layer_seed(i)))
+            .collect();
+        Ok(GoldenCnn { spec, weights, block })
+    }
+
+    /// Run one image (`in_ch × in_h × in_w`, channel-major flattened),
+    /// returning the class logits.
+    pub fn infer(&self, image: &[i64]) -> Result<Vec<i64>> {
+        let s = &self.spec;
+        if image.len() != s.in_ch * s.in_h * s.in_w {
+            return Err(Error::InvalidConfig(format!(
+                "image length {} != {}x{}x{}",
+                image.len(),
+                s.in_ch,
+                s.in_h,
+                s.in_w
+            )));
+        }
+        let mut planes: Vec<Vec<i64>> = (0..s.in_ch)
+            .map(|c| image[c * s.in_h * s.in_w..(c + 1) * s.in_h * s.in_w].to_vec())
+            .collect();
+        let mut h = s.in_h;
+        let mut w = s.in_w;
+        for (li, layer) in s.layers.iter().enumerate() {
+            let dq = QFormat::new(layer.data_bits).expect("valid width");
+            let (nh, nw) = (h - 2, w - 2);
+            let mut next: Vec<Vec<i64>> = Vec::with_capacity(layer.out_ch);
+            for oc in 0..layer.out_ch {
+                let mut acc = vec![0i64; nh * nw];
+                for ic in 0..layer.in_ch {
+                    let k = self.weights[li][oc * layer.in_ch + ic];
+                    // One block instance computes this (ic -> oc) plane:
+                    // conv + shift + saturate to data_bits — the block's
+                    // output stage (Conv4 carries two kernels per instance;
+                    // feeding one set per call models one of its channels).
+                    let cfg = ConvBlockConfig::new(self.block, layer.data_bits, layer.coeff_bits)?
+                        .with_shift(layer.shift);
+                    let sets: Vec<[i64; 9]> = if self.block == BlockKind::Conv4 {
+                        vec![k, k]
+                    } else {
+                        vec![k]
+                    };
+                    let out = run_plane(&cfg, &planes[ic], h, w, &sets)?;
+                    for (a, &p) in acc.iter_mut().zip(out[0].iter()) {
+                        *a += p;
+                    }
+                }
+                // Channel sum saturates back to data width; optional ReLU.
+                for a in acc.iter_mut() {
+                    let mut v = dq.saturate(*a);
+                    if layer.relu && v < 0 {
+                        v = 0;
+                    }
+                    *a = v;
+                }
+                next.push(acc);
+            }
+            planes = next;
+            h = nh;
+            w = nw;
+        }
+        // Global-sum head.
+        let logits: Vec<i64> =
+            planes.iter().map(|p| p.iter().sum::<i64>() >> self.spec.head_shift).collect();
+        Ok(logits)
+    }
+
+    /// Run a batch of images.
+    pub fn infer_batch(&self, images: &[Vec<i64>]) -> Result<Vec<Vec<i64>>> {
+        images.iter().map(|im| self.infer(im)).collect()
+    }
+
+    /// Argmax class.
+    pub fn classify(&self, image: &[i64]) -> Result<usize> {
+        let logits = self.infer(image)?;
+        Ok(logits
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &v)| v)
+            .map(|(i, _)| i)
+            .unwrap_or(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::zoo;
+    use crate::util::rng::SplitMix64;
+
+    fn image(spec: &NetworkSpec, seed: u64) -> Vec<i64> {
+        let q = QFormat::new(spec.layers[0].data_bits).unwrap();
+        let mut rng = SplitMix64::new(seed);
+        (0..spec.in_ch * spec.in_h * spec.in_w)
+            .map(|_| rng.range_i64(q.min(), q.max()))
+            .collect()
+    }
+
+    #[test]
+    fn inference_shapes_and_determinism() {
+        let net = GoldenCnn::new(zoo::lenet_ish(), BlockKind::Conv2).unwrap();
+        let img = image(&net.spec, 1);
+        let a = net.infer(&img).unwrap();
+        let b = net.infer(&img).unwrap();
+        assert_eq!(a.len(), net.spec.classes());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn all_blocks_agree_on_the_same_network() {
+        // The four microarchitectures are different circuits computing the
+        // same function: their golden models must agree bit-for-bit.
+        let spec = zoo::lenet_ish();
+        let img = image(&spec, 2);
+        let reference = GoldenCnn::new(spec.clone(), BlockKind::Conv1).unwrap().infer(&img).unwrap();
+        for block in [BlockKind::Conv2, BlockKind::Conv3, BlockKind::Conv4] {
+            let got = GoldenCnn::new(spec.clone(), block).unwrap().infer(&img).unwrap();
+            assert_eq!(got, reference, "{block:?} disagrees with Conv1");
+        }
+    }
+
+    #[test]
+    fn batch_matches_singles() {
+        let net = GoldenCnn::new(zoo::tiny(), BlockKind::Conv2).unwrap();
+        let imgs: Vec<Vec<i64>> = (0..4).map(|i| image(&net.spec, 10 + i)).collect();
+        let batch = net.infer_batch(&imgs).unwrap();
+        for (i, img) in imgs.iter().enumerate() {
+            assert_eq!(batch[i], net.infer(img).unwrap());
+        }
+    }
+
+    #[test]
+    fn classify_returns_valid_class() {
+        let net = GoldenCnn::new(zoo::tiny(), BlockKind::Conv2).unwrap();
+        let img = image(&net.spec, 3);
+        let c = net.classify(&img).unwrap();
+        assert!(c < net.spec.classes());
+    }
+
+    #[test]
+    fn wrong_image_size_rejected() {
+        let net = GoldenCnn::new(zoo::tiny(), BlockKind::Conv2).unwrap();
+        assert!(net.infer(&[0i64; 5]).is_err());
+    }
+
+    #[test]
+    fn relu_clamps_negatives() {
+        // With ReLU layers, all pre-head activations are ≥ 0, so logits of an
+        // all-zero image are exactly 0.
+        let net = GoldenCnn::new(zoo::tiny(), BlockKind::Conv2).unwrap();
+        let img = vec![0i64; net.spec.in_ch * net.spec.in_h * net.spec.in_w];
+        let logits = net.infer(&img).unwrap();
+        assert!(logits.iter().all(|&v| v == 0), "{logits:?}");
+    }
+}

@@ -1,0 +1,34 @@
+//! Quantized CNN deployment: layer specs, the block-level *golden model*, the
+//! network zoo shared with the Python compile path, and the planner that maps
+//! a network onto a block allocation.
+//!
+//! ## Layer semantics (the contract with `python/compile/quant.py`)
+//!
+//! A quantized conv layer with data width `d`, coefficient width `c` and
+//! shift `s` computes, per output channel `oc`:
+//!
+//! ```text
+//! partial[ic] = narrow_d( conv3x3(in[ic], k[oc, ic]) >> s )      // per block
+//! out[oc]     = relu( sat_d( Σ_ic partial[ic] ) )                // channel sum
+//! ```
+//!
+//! The *per-block narrowing before the channel sum* is deliberate: it is what
+//! a deployment built from the paper's blocks actually computes (each block
+//! saturates to `d` bits before the fabric adder tree). The JAX model
+//! implements the identical equation, so the PJRT-executed artifact must be
+//! bit-exact against [`golden::GoldenCnn`] — the end-to-end verification of
+//! the whole stack.
+//!
+//! Weights are "trained" out of band; the zoo generates them deterministically
+//! from a [`crate::util::rng::SplitMix64`] stream that `quant.py` reproduces
+//! bit-for-bit, so no weight files cross the language boundary.
+
+pub mod spec;
+pub mod golden;
+pub mod zoo;
+pub mod dataset;
+pub mod planner;
+
+pub use golden::GoldenCnn;
+pub use planner::{plan_deployment, DeploymentPlan};
+pub use spec::{ConvLayerSpec, NetworkSpec};

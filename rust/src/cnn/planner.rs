@@ -1,0 +1,141 @@
+//! Deployment planner: map a network's convolutions onto block instances and
+//! predict the FPGA footprint with the fitted models — the paper's intended
+//! use ("faciliter l'adaptation des couches aux contraintes matérielles").
+
+use super::spec::NetworkSpec;
+use crate::allocate::unit_costs;
+use crate::blocks::BlockKind;
+use crate::models::ModelRegistry;
+use crate::platform::Platform;
+use crate::synth::ResourceVector;
+use crate::util::error::{Error, Result};
+
+/// One layer's mapping.
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    /// Layer index.
+    pub layer: usize,
+    /// Chosen block kind.
+    pub block: BlockKind,
+    /// Block instances needed (one per (oc, ic) kernel, ÷ lanes).
+    pub instances: u64,
+    /// Model-predicted footprint of those instances.
+    pub footprint: ResourceVector,
+}
+
+/// A full network deployment plan.
+#[derive(Debug, Clone)]
+pub struct DeploymentPlan {
+    /// Per-layer mappings.
+    pub layers: Vec<LayerPlan>,
+    /// Total predicted footprint.
+    pub total: ResourceVector,
+    /// Utilization on the target platform (%), paper column order.
+    pub utilization: [f64; 5],
+    /// True iff the plan fits the platform at the given cap.
+    pub fits: bool,
+}
+
+/// Plan a fully-parallel deployment (one block lane per kernel) choosing, per
+/// layer, the cheapest block kind that fits the layer's precision, preferring
+/// DSP efficiency until the DSP cap is reached and falling back to `Conv1`
+/// (the strategy behind the paper's Table 5 mix row).
+pub fn plan_deployment(
+    net: &NetworkSpec,
+    registry: &ModelRegistry,
+    platform: &Platform,
+    cap: f64,
+) -> Result<DeploymentPlan> {
+    net.validate()?;
+    let budget = platform.capped_budget(cap);
+    let mut layers = Vec::new();
+    let mut total = ResourceVector::default();
+    for (li, layer) in net.layers.iter().enumerate() {
+        let units = unit_costs(registry, layer.data_bits, layer.coeff_bits)?;
+        let kernels = layer.kernel_count() as u64;
+        // Candidate order: Conv3 (2 kernels/DSP — only if the precision fits
+        // its 8-bit lanes), Conv4 (2 kernels/2 DSP), Conv2, then Conv1.
+        let mut candidates: Vec<BlockKind> = Vec::new();
+        if layer.data_bits <= 8 && layer.coeff_bits <= 8 {
+            candidates.push(BlockKind::Conv3);
+        }
+        candidates.extend([BlockKind::Conv4, BlockKind::Conv2, BlockKind::Conv1]);
+        let mut chosen: Option<LayerPlan> = None;
+        for kind in candidates {
+            let lanes = kind.convolutions_per_block();
+            let instances = kernels.div_ceil(lanes);
+            let fp = units[kind as usize].scaled(instances);
+            if (total + fp).fits_within(&budget) {
+                chosen = Some(LayerPlan { layer: li, block: kind, instances, footprint: fp });
+                break;
+            }
+        }
+        let plan = chosen.ok_or_else(|| {
+            Error::Infeasible(format!(
+                "{}: layer {li} ({} kernels at d={},c={}) does not fit {} at {:.0}%",
+                net.name,
+                kernels,
+                layer.data_bits,
+                layer.coeff_bits,
+                platform.name,
+                100.0 * cap
+            ))
+        })?;
+        total += plan.footprint;
+        layers.push(plan);
+    }
+    let utilization = platform.utilization(&total);
+    let fits = total.fits_within(&budget);
+    Ok(DeploymentPlan { layers, total, utilization, fits })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::zoo;
+    use crate::coordinator::dse::DseEngine;
+    use crate::coordinator::jobs::JobPool;
+    use crate::models::SelectOptions;
+    use crate::synthdata::SweepOptions;
+
+    fn registry() -> ModelRegistry {
+        let eng = DseEngine {
+            sweep: SweepOptions { min_bits: 6, max_bits: 12, ..Default::default() },
+            select: SelectOptions::default(),
+            pool: JobPool::with_workers(1),
+            cache: None,
+        };
+        eng.run().unwrap().registry
+    }
+
+    #[test]
+    fn lenet_fits_zcu104_easily() {
+        let reg = registry();
+        let plan =
+            plan_deployment(&zoo::lenet_ish(), &reg, &Platform::zcu104(), 0.8).unwrap();
+        assert!(plan.fits);
+        assert_eq!(plan.layers.len(), 2);
+        // 1*4 + 4*10 = 44 kernels; Conv3 packs 2 per block → 2 + 20 instances.
+        assert_eq!(plan.layers[0].instances, 2);
+        assert_eq!(plan.layers[1].instances, 20);
+        assert!(plan.utilization[4] < 10.0, "DSP% {}", plan.utilization[4]);
+    }
+
+    #[test]
+    fn wide_precision_skips_conv3() {
+        let reg = registry();
+        let mut net = zoo::lenet_ish();
+        net.layers[0].data_bits = 12;
+        net.layers[0].coeff_bits = 12;
+        net.layers[1].in_ch = 4;
+        let plan = plan_deployment(&net, &reg, &Platform::zcu104(), 0.8).unwrap();
+        assert_ne!(plan.layers[0].block, BlockKind::Conv3);
+    }
+
+    #[test]
+    fn infeasible_on_absurd_cap() {
+        let reg = registry();
+        let err = plan_deployment(&zoo::lenet_ish(), &reg, &Platform::zcu104(), 0.0001);
+        assert!(err.is_err());
+    }
+}

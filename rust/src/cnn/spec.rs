@@ -1,0 +1,195 @@
+//! Network and layer descriptors.
+
+use crate::util::error::{Error, Result};
+use crate::util::rng::SplitMix64;
+
+/// One quantized 3×3 "valid" convolution layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvLayerSpec {
+    /// Input channels.
+    pub in_ch: usize,
+    /// Output channels.
+    pub out_ch: usize,
+    /// Data (activation) width in bits.
+    pub data_bits: u32,
+    /// Coefficient width in bits.
+    pub coeff_bits: u32,
+    /// Right-shift applied by each block before saturation.
+    pub shift: u32,
+    /// Apply ReLU after the channel sum.
+    pub relu: bool,
+}
+
+impl ConvLayerSpec {
+    /// Output spatial size for a given input ("valid" 3×3).
+    pub fn out_hw(&self, h: usize, w: usize) -> Result<(usize, usize)> {
+        if h < 3 || w < 3 {
+            return Err(Error::InvalidConfig(format!("input {h}x{w} too small for 3x3")));
+        }
+        Ok((h - 2, w - 2))
+    }
+
+    /// Number of 3×3 kernels in this layer.
+    pub fn kernel_count(&self) -> usize {
+        self.in_ch * self.out_ch
+    }
+
+    /// Deterministic weights for this layer: `out_ch × in_ch` kernels of nine
+    /// `coeff_bits`-bit values, drawn from a seeded SplitMix64 stream
+    /// (mirrored exactly by `python/compile/quant.py::layer_weights`).
+    pub fn weights(&self, seed: u64) -> Vec<[i64; 9]> {
+        let mut rng = SplitMix64::new(seed);
+        let q = crate::fixedpoint::QFormat::new(self.coeff_bits).expect("valid width");
+        let mut out = Vec::with_capacity(self.kernel_count());
+        for _ in 0..self.kernel_count() {
+            let mut k = [0i64; 9];
+            for v in k.iter_mut() {
+                *v = rng.range_i64(q.min(), q.max());
+            }
+            out.push(k);
+        }
+        out
+    }
+}
+
+/// A full network: input geometry + conv stack + global-sum head.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NetworkSpec {
+    /// Network name (artifact stem).
+    pub name: String,
+    /// Input height.
+    pub in_h: usize,
+    /// Input width.
+    pub in_w: usize,
+    /// Input channels.
+    pub in_ch: usize,
+    /// Conv layers, in order.
+    pub layers: Vec<ConvLayerSpec>,
+    /// Right-shift of the global-sum head (logits = Σ_hw out[oc] >> this).
+    pub head_shift: u32,
+    /// Weight-stream master seed.
+    pub seed: u64,
+}
+
+impl NetworkSpec {
+    /// Validate layer chaining (channel counts, spatial shrink).
+    pub fn validate(&self) -> Result<()> {
+        let mut ch = self.in_ch;
+        let mut h = self.in_h;
+        let mut w = self.in_w;
+        for (i, l) in self.layers.iter().enumerate() {
+            if l.in_ch != ch {
+                return Err(Error::InvalidConfig(format!(
+                    "{}: layer {i} expects {} input channels, gets {ch}",
+                    self.name, l.in_ch
+                )));
+            }
+            let (nh, nw) = l.out_hw(h, w)?;
+            ch = l.out_ch;
+            h = nh;
+            w = nw;
+        }
+        Ok(())
+    }
+
+    /// Output classes (= last layer's channels).
+    pub fn classes(&self) -> usize {
+        self.layers.last().map(|l| l.out_ch).unwrap_or(0)
+    }
+
+    /// Spatial size after all layers.
+    pub fn out_hw(&self) -> (usize, usize) {
+        (self.in_h - 2 * self.layers.len(), self.in_w - 2 * self.layers.len())
+    }
+
+    /// Per-layer weight seed (layer index mixed into the master seed exactly
+    /// as `quant.py` does).
+    pub fn layer_seed(&self, layer: usize) -> u64 {
+        self.seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(layer as u64 + 1)
+    }
+
+    /// Total multiply-accumulate operations per inference.
+    pub fn macs(&self) -> u64 {
+        let mut total = 0u64;
+        let mut h = self.in_h;
+        let mut w = self.in_w;
+        for l in &self.layers {
+            let (nh, nw) = (h - 2, w - 2);
+            total += (nh * nw * 9 * l.in_ch * l.out_ch) as u64;
+            h = nh;
+            w = nw;
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer(in_ch: usize, out_ch: usize) -> ConvLayerSpec {
+        ConvLayerSpec { in_ch, out_ch, data_bits: 8, coeff_bits: 8, shift: 4, relu: true }
+    }
+
+    fn net() -> NetworkSpec {
+        NetworkSpec {
+            name: "t".into(),
+            in_h: 12,
+            in_w: 12,
+            in_ch: 1,
+            layers: vec![layer(1, 4), layer(4, 10)],
+            head_shift: 6,
+            seed: 42,
+        }
+    }
+
+    #[test]
+    fn valid_network_chains() {
+        net().validate().unwrap();
+        assert_eq!(net().classes(), 10);
+        assert_eq!(net().out_hw(), (8, 8));
+    }
+
+    #[test]
+    fn broken_channel_chain_rejected() {
+        let mut n = net();
+        n.layers[1].in_ch = 3;
+        assert!(n.validate().is_err());
+    }
+
+    #[test]
+    fn too_small_input_rejected() {
+        let mut n = net();
+        n.in_h = 4; // 12->10->8 ok; 4->2 fails at layer 2
+        assert!(n.validate().is_err());
+    }
+
+    #[test]
+    fn weights_deterministic_and_in_range() {
+        let l = layer(2, 3);
+        let w1 = l.weights(7);
+        let w2 = l.weights(7);
+        assert_eq!(w1, w2);
+        assert_eq!(w1.len(), 6);
+        for k in &w1 {
+            for &v in k {
+                assert!((-128..=127).contains(&v));
+            }
+        }
+        assert_ne!(l.weights(8), w1);
+    }
+
+    #[test]
+    fn layer_seeds_differ() {
+        let n = net();
+        assert_ne!(n.layer_seed(0), n.layer_seed(1));
+    }
+
+    #[test]
+    fn mac_count() {
+        // Layer1: 10*10*9*1*4 = 3600; layer2: 8*8*9*4*10 = 23040.
+        assert_eq!(net().macs(), 3600 + 23040);
+    }
+}

@@ -1,0 +1,105 @@
+//! The network zoo — specs shared (by constant, not by file) with
+//! `python/compile/model.py`. Changing anything here requires regenerating
+//! the artifacts (`make artifacts`), which is why each spec is frozen by a
+//! test below.
+
+use super::spec::{ConvLayerSpec, NetworkSpec};
+
+/// The e2e driver's network: a LeNet-ish two-conv quantized classifier on
+/// 12×12 synthetic digits, 8-bit data / 8-bit coefficients.
+/// (12→10→8 spatial; 1→4→10 channels; global-sum head.)
+pub fn lenet_ish() -> NetworkSpec {
+    NetworkSpec {
+        name: "lenet_q8".into(),
+        in_h: 12,
+        in_w: 12,
+        in_ch: 1,
+        layers: vec![
+            ConvLayerSpec { in_ch: 1, out_ch: 4, data_bits: 8, coeff_bits: 8, shift: 7, relu: true },
+            ConvLayerSpec { in_ch: 4, out_ch: 10, data_bits: 8, coeff_bits: 8, shift: 9, relu: true },
+        ],
+        head_shift: 6,
+        seed: 0xC0DE_2025,
+    }
+}
+
+/// A minimal single-layer network for fast tests and the quickstart example.
+pub fn tiny() -> NetworkSpec {
+    NetworkSpec {
+        name: "tiny_q8".into(),
+        in_h: 8,
+        in_w: 8,
+        in_ch: 1,
+        layers: vec![ConvLayerSpec {
+            in_ch: 1,
+            out_ch: 3,
+            data_bits: 8,
+            coeff_bits: 8,
+            shift: 8,
+            relu: true,
+        }],
+        head_shift: 4,
+        seed: 0xBEEF_2025,
+    }
+}
+
+/// A wider 6-bit variant exercising non-8-bit quantization end to end
+/// (the paper's motivation: adapting precision to the resource budget).
+pub fn slim_q6() -> NetworkSpec {
+    NetworkSpec {
+        name: "slim_q6".into(),
+        in_h: 10,
+        in_w: 10,
+        in_ch: 1,
+        layers: vec![
+            ConvLayerSpec { in_ch: 1, out_ch: 3, data_bits: 6, coeff_bits: 6, shift: 6, relu: true },
+            ConvLayerSpec { in_ch: 3, out_ch: 6, data_bits: 6, coeff_bits: 6, shift: 8, relu: true },
+        ],
+        head_shift: 5,
+        seed: 0x51E4_2025,
+    }
+}
+
+/// All zoo networks (the artifact set `aot.py` compiles).
+pub fn all() -> Vec<NetworkSpec> {
+    vec![lenet_ish(), tiny(), slim_q6()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_zoo_networks_validate() {
+        for n in all() {
+            n.validate().unwrap_or_else(|e| panic!("{}: {e}", n.name));
+        }
+    }
+
+    #[test]
+    fn zoo_specs_are_frozen() {
+        // These constants are baked into the AOT artifacts; changing them
+        // silently would desynchronize rust and python. Update BOTH model.py
+        // and this test when evolving the zoo.
+        let l = lenet_ish();
+        assert_eq!((l.in_h, l.in_w, l.in_ch), (12, 12, 1));
+        assert_eq!(l.layers.len(), 2);
+        assert_eq!(l.layers[1].out_ch, 10);
+        assert_eq!(l.seed, 0xC0DE_2025);
+        assert_eq!(l.head_shift, 6);
+        let t = tiny();
+        assert_eq!((t.in_h, t.in_w), (8, 8));
+        assert_eq!(t.seed, 0xBEEF_2025);
+        let s = slim_q6();
+        assert_eq!(s.layers[0].data_bits, 6);
+        assert_eq!(s.seed, 0x51E4_2025);
+    }
+
+    #[test]
+    fn names_are_unique() {
+        let mut names: Vec<String> = all().iter().map(|n| n.name.clone()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), all().len());
+    }
+}

@@ -1,0 +1,236 @@
+//! The DSE engine: the paper's methodology as one orchestrated pipeline.
+//!
+//! `sweep → correlate → fit (Algorithm 1) → validate → allocate`, with the
+//! synthesis stage fanned out over the [`super::jobs::JobPool`]. The engine
+//! caches the dataset on disk (CSV) so repeated CLI invocations skip
+//! re-synthesis — the simulator's equivalent of not re-running Vivado.
+
+use super::jobs::JobPool;
+use crate::allocate::{allocate_mix, allocate_single, unit_costs, Allocation};
+use crate::blocks::{synthesize, BlockKind};
+use crate::models::{ModelRegistry, SelectOptions};
+use crate::platform::Platform;
+use crate::stats::pearson;
+use crate::synth::Resource;
+use crate::synthdata::{sweep_configs, Dataset, SweepOptions, SynthRecord};
+use crate::util::error::Result;
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// Everything one DSE run produces.
+#[derive(Debug, Clone)]
+pub struct DseReport {
+    /// The measurement campaign.
+    pub dataset: Dataset,
+    /// Fitted models + metrics.
+    pub registry: ModelRegistry,
+    /// Wall-clock seconds spent in the synthesis stage.
+    pub synth_seconds: f64,
+    /// Wall-clock seconds spent fitting.
+    pub fit_seconds: f64,
+}
+
+/// The orchestrating engine.
+#[derive(Debug)]
+pub struct DseEngine {
+    /// Sweep parameters.
+    pub sweep: SweepOptions,
+    /// Model-selection parameters.
+    pub select: SelectOptions,
+    /// Worker pool for the synthesis fan-out.
+    pub pool: JobPool,
+    /// Optional dataset cache path.
+    pub cache: Option<PathBuf>,
+}
+
+impl DseEngine {
+    /// Engine with default (paper) parameters.
+    pub fn new() -> DseEngine {
+        DseEngine {
+            sweep: SweepOptions::default(),
+            select: SelectOptions::default(),
+            pool: JobPool::new(),
+            cache: None,
+        }
+    }
+
+    /// Use a dataset cache file.
+    pub fn with_cache(mut self, path: PathBuf) -> DseEngine {
+        self.cache = Some(path);
+        self
+    }
+
+    /// Run (or load) the synthesis campaign.
+    pub fn collect(&self) -> Result<Dataset> {
+        if let Some(path) = &self.cache {
+            if path.exists() {
+                let ds = Dataset::load(path)?;
+                let expected = sweep_configs(&self.sweep).len();
+                if ds.len() == expected {
+                    return Ok(ds);
+                }
+                // Stale cache (different sweep): fall through and refresh.
+            }
+        }
+        let cfgs = sweep_configs(&self.sweep);
+        let map = self.sweep.map.clone();
+        let jobs: Vec<_> = cfgs
+            .iter()
+            .map(|cfg| {
+                let cfg = *cfg;
+                let map = map.clone();
+                move || SynthRecord {
+                    block: cfg.kind,
+                    data_bits: cfg.data_bits,
+                    coeff_bits: cfg.coeff_bits,
+                    res: synthesize(&cfg, &map),
+                }
+            })
+            .collect();
+        let records = self.pool.run(jobs);
+        let ds = Dataset { records };
+        if let Some(path) = &self.cache {
+            ds.save(path)?;
+        }
+        Ok(ds)
+    }
+
+    /// Full pipeline: collect + fit.
+    pub fn run(&self) -> Result<DseReport> {
+        let t0 = Instant::now();
+        let dataset = self.collect()?;
+        let synth_seconds = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let registry = ModelRegistry::fit(&dataset, &self.select)?;
+        let fit_seconds = t1.elapsed().as_secs_f64();
+        Ok(DseReport { dataset, registry, synth_seconds, fit_seconds })
+    }
+}
+
+impl Default for DseEngine {
+    fn default() -> Self {
+        DseEngine::new()
+    }
+}
+
+impl DseReport {
+    /// The paper's Table 3 quadrant for one block: correlations of each
+    /// resource column against (data width, coeff width) and against the
+    /// other resource columns.
+    pub fn correlation_quadrant(&self, block: BlockKind) -> Vec<(String, Vec<f64>)> {
+        let (d, c, ys) = self.dataset.columns(block);
+        let names: Vec<&str> = Resource::ALL.iter().map(|r| r.name()).collect();
+        let mut rows = Vec::new();
+        for (i, y) in ys.iter().enumerate() {
+            let mut vals = vec![pearson(&d, y), pearson(&c, y)];
+            for other in ys.iter().take(i) {
+                vals.push(pearson(other, y));
+            }
+            rows.push((names[i].to_string(), vals));
+        }
+        rows
+    }
+
+    /// Table 5 rows: the strategic mix + each single-type allocation, at the
+    /// given precision and utilization cap.
+    pub fn allocation_study(
+        &self,
+        platform: &Platform,
+        data_bits: u32,
+        coeff_bits: u32,
+        cap: f64,
+    ) -> Result<Vec<(String, Allocation)>> {
+        let unit = unit_costs(&self.registry, data_bits, coeff_bits)?;
+        let mut rows = Vec::new();
+        rows.push(("mix".to_string(), allocate_mix(&unit, platform, cap)?));
+        for (i, kind) in BlockKind::ALL.iter().enumerate() {
+            let mut a = Allocation::default();
+            a.set(*kind, allocate_single(&unit[i], platform, cap));
+            rows.push((kind.name().to_string(), a));
+        }
+        Ok(rows)
+    }
+
+    /// Unit costs at a precision (delegates to the registry's models).
+    pub fn unit_costs(&self, d: u32, c: u32) -> Result<[crate::synth::ResourceVector; 4]> {
+        unit_costs(&self.registry, d, c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_engine() -> DseEngine {
+        DseEngine {
+            sweep: SweepOptions { min_bits: 6, max_bits: 12, ..Default::default() },
+            select: SelectOptions::default(),
+            pool: JobPool::with_workers(2),
+            cache: None,
+        }
+    }
+
+    #[test]
+    fn pipeline_produces_models_and_timings() {
+        let rep = small_engine().run().unwrap();
+        assert_eq!(rep.dataset.len(), 4 * 7 * 7);
+        assert_eq!(rep.registry.len(), 20);
+        assert!(rep.synth_seconds >= 0.0);
+        assert!(rep.fit_seconds >= 0.0);
+    }
+
+    #[test]
+    fn parallel_sweep_equals_serial_sweep() {
+        let serial = crate::synthdata::run_sweep(&small_engine().sweep).unwrap();
+        let parallel = small_engine().collect().unwrap();
+        assert_eq!(serial.records, parallel.records);
+    }
+
+    #[test]
+    fn cache_roundtrip_skips_resynthesis() {
+        let path = std::env::temp_dir().join("convkit_dse_cache_test.csv");
+        let _ = std::fs::remove_file(&path);
+        let eng = small_engine().with_cache(path.clone());
+        let a = eng.collect().unwrap();
+        assert!(path.exists());
+        let b = eng.collect().unwrap();
+        assert_eq!(a.records, b.records);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn correlation_quadrant_shape() {
+        let rep = small_engine().run().unwrap();
+        let q = rep.correlation_quadrant(BlockKind::Conv1);
+        assert_eq!(q.len(), 5);
+        assert_eq!(q[0].1.len(), 2); // LLUT: vs d, vs c
+        assert_eq!(q[4].1.len(), 6); // DSP: vs d, c + 4 other resources
+        // Conv1 LLUT correlates positively with both widths.
+        assert!(q[0].1[0] > 0.3 && q[0].1[1] > 0.2, "{:?}", q[0]);
+    }
+
+    #[test]
+    fn conv3_quadrant_zero_data_correlation() {
+        let rep = small_engine().run().unwrap();
+        let q = rep.correlation_quadrant(BlockKind::Conv3);
+        for (name, vals) in &q {
+            assert!(
+                vals[0].abs() < 1e-9,
+                "{name}: corr with data width must be exactly 0, got {}",
+                vals[0]
+            );
+        }
+    }
+
+    #[test]
+    fn allocation_study_rows() {
+        let rep = small_engine().run().unwrap();
+        let rows = rep.allocation_study(&Platform::zcu104(), 8, 8, 0.8).unwrap();
+        assert_eq!(rows.len(), 5);
+        assert_eq!(rows[0].0, "mix");
+        // DSP-bound single rows: Conv2/Conv3 = 1382, Conv4 = 691 on ZCU104.
+        assert_eq!(rows[2].1.count(BlockKind::Conv2), 1382);
+        assert_eq!(rows[3].1.count(BlockKind::Conv3), 1382);
+        assert_eq!(rows[4].1.count(BlockKind::Conv4), 691);
+    }
+}

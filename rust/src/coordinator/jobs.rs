@@ -1,0 +1,146 @@
+//! A deterministic worker pool over std threads + channels.
+//!
+//! (tokio is unavailable offline; the DSE workload is CPU-bound anyway, so a
+//! fixed pool of OS threads with an indexed-result channel is the right
+//! shape.) Results are returned in submission order regardless of completion
+//! order, so the pipeline stays reproducible.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Fixed-size worker pool executing a batch of closures.
+#[derive(Debug)]
+pub struct JobPool {
+    workers: usize,
+}
+
+impl JobPool {
+    /// Pool sized to the machine (at least 1).
+    pub fn new() -> JobPool {
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        JobPool { workers }
+    }
+
+    /// Pool with an explicit worker count.
+    pub fn with_workers(workers: usize) -> JobPool {
+        JobPool { workers: workers.max(1) }
+    }
+
+    /// Number of workers.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run all jobs; returns results in submission order.
+    ///
+    /// Jobs are pulled from a shared queue (work stealing by construction);
+    /// each sends `(index, result)` back over a channel. Panics in jobs
+    /// propagate as a panic here (fail fast — a lost synthesis result would
+    /// silently bias the fitted models).
+    pub fn run<T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        // Single worker: run inline (avoids thread overhead on 1-CPU hosts).
+        if self.workers == 1 {
+            return jobs.into_iter().map(|j| j()).collect();
+        }
+        let queue: Arc<Mutex<Vec<(usize, F)>>> =
+            Arc::new(Mutex::new(jobs.into_iter().enumerate().rev().collect()));
+        let (tx, rx) = mpsc::channel::<(usize, T)>();
+        let mut handles = Vec::new();
+        for _ in 0..self.workers.min(n) {
+            let queue = Arc::clone(&queue);
+            let tx = tx.clone();
+            handles.push(std::thread::spawn(move || loop {
+                let job = queue.lock().expect("queue poisoned").pop();
+                match job {
+                    Some((i, f)) => {
+                        let out = f();
+                        if tx.send((i, out)).is_err() {
+                            break;
+                        }
+                    }
+                    None => break,
+                }
+            }));
+        }
+        drop(tx);
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for (i, v) in rx {
+            slots[i] = Some(v);
+        }
+        for h in handles {
+            h.join().expect("worker panicked");
+        }
+        slots.into_iter().map(|s| s.expect("missing job result")).collect()
+    }
+}
+
+impl Default for JobPool {
+    fn default() -> Self {
+        JobPool::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_submission_order() {
+        let pool = JobPool::with_workers(4);
+        let jobs: Vec<_> = (0..50)
+            .map(|i| {
+                move || {
+                    // Vary the work so completion order scrambles.
+                    let mut acc = 0u64;
+                    for k in 0..((50 - i) * 1000) {
+                        acc = acc.wrapping_add(k);
+                    }
+                    let _ = acc;
+                    i
+                }
+            })
+            .collect();
+        let out = pool.run(jobs);
+        assert_eq!(out, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_inline_path() {
+        let pool = JobPool::with_workers(1);
+        let out = pool.run(vec![|| 1, || 2, || 3]);
+        assert_eq!(out, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn empty_batch() {
+        let pool = JobPool::new();
+        let out: Vec<i32> = pool.run(Vec::<fn() -> i32>::new());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn worker_count_clamped() {
+        assert_eq!(JobPool::with_workers(0).workers(), 1);
+        assert!(JobPool::new().workers() >= 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker panicked")]
+    fn job_panic_propagates() {
+        let pool = JobPool::with_workers(2);
+        let jobs: Vec<Box<dyn FnOnce() -> i32 + Send>> = vec![
+            Box::new(|| 1),
+            Box::new(|| panic!("boom")),
+            Box::new(|| 3),
+        ];
+        let _ = pool.run(jobs);
+    }
+}

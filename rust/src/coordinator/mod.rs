@@ -1,0 +1,18 @@
+//! L3 coordinator: the process-level orchestration layer.
+//!
+//! The paper's contribution is a design-space-exploration methodology, so the
+//! coordinator's job is the DSE loop — synthesize → correlate → fit →
+//! validate → allocate — run as a deterministic job graph over a worker pool
+//! ([`jobs`]), plus the deployment side: a batched inference service
+//! ([`service`]) that executes the AOT-compiled quantized CNN through the
+//! PJRT runtime and cross-checks it against the block-level golden model.
+//!
+//! Rust owns the event loop, thread topology and metrics; Python never runs
+//! here (artifacts are pre-compiled by `make artifacts`).
+
+pub mod jobs;
+pub mod dse;
+pub mod service;
+
+pub use dse::{DseEngine, DseReport};
+pub use jobs::JobPool;

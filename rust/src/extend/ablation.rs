@@ -1,0 +1,137 @@
+//! Ablation studies over the methodology's design choices (DESIGN.md calls
+//! these out; bench `table4_models` prints the headline numbers):
+//!
+//! 1. **jitter on/off** — how much of Table 4's residual error is the
+//!    emulated optimizer variability vs the ceil/log staircase terms;
+//! 2. **pack-rate sensitivity** — do the fitted model *shapes* survive a
+//!    different LUT-packing efficiency (they must: the methodology cannot
+//!    depend on one mapper's constant);
+//! 3. **degree cap** — what Algorithm 1 loses if restricted to degree 1
+//!    (the paper's choice of degrees 1..4 justified quantitatively);
+//! 4. **precision ablation** — network agreement (synthetic-digit workload)
+//!    across data widths, the paper's precision/resource trade-off made
+//!    concrete.
+
+use crate::blocks::BlockKind;
+use crate::cnn::dataset;
+use crate::cnn::{zoo, GoldenCnn};
+use crate::models::{ModelRegistry, SelectOptions};
+use crate::stats::PolyModel;
+use crate::synth::{MapOptions, Resource};
+use crate::synthdata::{run_sweep, SweepOptions};
+use crate::util::error::Result;
+
+/// Result of one model-quality ablation arm.
+#[derive(Debug, Clone)]
+pub struct ModelQuality {
+    /// Arm label.
+    pub label: String,
+    /// Conv1 LLUT R².
+    pub conv1_r2: f64,
+    /// Conv4 LLUT MAPE (%).
+    pub conv4_mape: f64,
+    /// Conv4 intercept of the degree-1 closed form.
+    pub conv4_intercept: f64,
+}
+
+fn quality(label: &str, map: MapOptions) -> Result<ModelQuality> {
+    let ds = run_sweep(&SweepOptions { map, ..Default::default() })?;
+    let reg = ModelRegistry::fit(&ds, &SelectOptions::default())?;
+    let c1 = reg.get(BlockKind::Conv1, Resource::Llut).unwrap();
+    let c4 = reg.get(BlockKind::Conv4, Resource::Llut).unwrap();
+    let intercept = match &c4.model {
+        crate::models::ResourceModel::Poly(p) => {
+            p.terms.iter().find(|t| t.dx == 0 && t.cx == 0).map(|t| t.coef).unwrap_or(0.0)
+        }
+        _ => f64::NAN,
+    };
+    Ok(ModelQuality {
+        label: label.to_string(),
+        conv1_r2: c1.metrics.r2,
+        conv4_mape: c4.metrics.mape,
+        conv4_intercept: intercept,
+    })
+}
+
+/// Ablation 1+2: jitter and pack-rate arms.
+pub fn mapper_ablation() -> Result<Vec<ModelQuality>> {
+    Ok(vec![
+        quality("default (jitter 1.5%, pack 0.85)", MapOptions::default())?,
+        quality("no jitter", MapOptions::exact())?,
+        quality("pack 0.70", MapOptions { pack_rate: 0.70, ..Default::default() })?,
+        quality("pack 1.00", MapOptions { pack_rate: 1.00, ..Default::default() })?,
+        quality("jitter 3%", MapOptions { jitter_sigma: 0.03, ..Default::default() })?,
+    ])
+}
+
+/// Ablation 3: Algorithm 1 capped at degree 1 — Conv1's curved surface must
+/// lose fit quality (quantifying why the paper sweeps degrees 1..4).
+pub fn degree_cap_ablation() -> Result<(f64, f64)> {
+    let ds = run_sweep(&SweepOptions::default())?;
+    let samples = ds.samples(BlockKind::Conv1, Resource::Llut);
+    let deg1 = PolyModel::fit(&samples, 1)?.r2;
+    let deg2 = PolyModel::fit(&samples, 2)?.r2;
+    Ok((deg1, deg2))
+}
+
+/// Ablation 4: precision vs workload agreement on the synthetic digits.
+/// Returns (data_bits, agreement) pairs for q8/q6 zoo variants.
+pub fn precision_ablation(n_samples: usize) -> Result<Vec<(u32, f64)>> {
+    let mut out = Vec::new();
+    for spec in [zoo::lenet_ish(), zoo::slim_q6()] {
+        let bits = spec.layers[0].data_bits;
+        let (h, w) = (spec.in_h, spec.in_w);
+        let net = GoldenCnn::new(spec, BlockKind::Conv2)?;
+        let samples = dataset::generate(n_samples, h, w, bits, 0xD161);
+        let acc = dataset::agreement(&samples, h, w, bits, |img| {
+            net.infer(img).expect("inference")
+        });
+        out.push((bits, acc));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jitter_is_the_main_residual_source() {
+        let arms = mapper_ablation().unwrap();
+        let default = arms.iter().find(|a| a.label.starts_with("default")).unwrap();
+        let exact = arms.iter().find(|a| a.label == "no jitter").unwrap();
+        assert!(exact.conv4_mape <= default.conv4_mape + 1e-9);
+        assert!(exact.conv1_r2 >= default.conv1_r2 - 1e-9);
+    }
+
+    #[test]
+    fn model_shape_survives_pack_rate_changes() {
+        let arms = mapper_ablation().unwrap();
+        for a in &arms {
+            assert!(a.conv1_r2 > 0.98, "{}: Conv1 R² {}", a.label, a.conv1_r2);
+            assert!(
+                (5.0..=40.0).contains(&a.conv4_intercept),
+                "{}: intercept {}",
+                a.label,
+                a.conv4_intercept
+            );
+        }
+    }
+
+    #[test]
+    fn degree_one_is_insufficient_for_conv1() {
+        let (deg1, deg2) = degree_cap_ablation().unwrap();
+        assert!(deg1 < 0.97, "deg1 R² {deg1}");
+        assert!(deg2 > deg1 + 0.01, "deg2 {deg2} vs deg1 {deg1}");
+        assert!(deg2 > 0.99);
+    }
+
+    #[test]
+    fn precision_ablation_runs_and_orders() {
+        let res = precision_ablation(24).unwrap();
+        assert_eq!(res.len(), 2);
+        for (bits, acc) in &res {
+            assert!((0.0..=1.0).contains(acc), "{bits}: {acc}");
+        }
+    }
+}

@@ -1,0 +1,104 @@
+//! Latency / throughput estimation for a block-based deployment.
+
+use crate::blocks::BlockKind;
+use crate::cnn::NetworkSpec;
+use crate::util::error::Result;
+
+/// Latency estimate for one network on one block kind.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyEstimate {
+    /// Cycles for one inference with fully-parallel kernel mapping.
+    pub cycles_parallel: u64,
+    /// Cycles when every layer is folded onto a single block instance.
+    pub cycles_folded: u64,
+    /// Frames per second at `clock_mhz`, fully parallel.
+    pub fps_parallel: f64,
+    /// Frames per second folded.
+    pub fps_folded: f64,
+}
+
+/// Achievable fabric clock per block kind (MHz, typical UltraScale+ -2 speed
+/// grade): DSP-datapath blocks close timing near the DSP48E2 f_max region;
+/// the Conv1 carry-chain datapath is fabric-limited.
+pub fn clock_mhz(kind: BlockKind) -> f64 {
+    match kind {
+        BlockKind::Conv1 => 350.0,
+        BlockKind::Conv2 => 550.0,
+        BlockKind::Conv3 => 500.0,
+        BlockKind::Conv4 => 525.0,
+    }
+}
+
+/// Estimate inference latency of `net` mapped onto `kind` blocks.
+///
+/// Parallel mapping: one lane per kernel — a layer takes
+/// `windows × II / lanes_per_window_stream` cycles (window streams run
+/// concurrently per kernel, so the layer time is the per-window II times the
+/// output pixel count). Folded mapping: one block re-used for every kernel.
+pub fn latency_estimate(net: &NetworkSpec, kind: BlockKind) -> Result<LatencyEstimate> {
+    net.validate()?;
+    let mut cyc_par = 0u64;
+    let mut cyc_fold = 0u64;
+    let mut h = net.in_h as u64;
+    let mut w = net.in_w as u64;
+    for layer in &net.layers {
+        let ii = kind.initiation_interval(layer.coeff_bits);
+        let lanes = kind.convolutions_per_block();
+        let (nh, nw) = (h - 2, w - 2);
+        let windows = nh * nw;
+        let kernels = (layer.in_ch * layer.out_ch) as u64;
+        // Parallel: all kernels in flight; a layer drains its windows at II
+        // per lane-pair.
+        cyc_par += windows * ii / lanes + ii; // + pipeline fill
+        // Folded: one block instance does kernels × windows MAC groups.
+        cyc_fold += kernels.div_ceil(lanes) * windows * ii + ii;
+        h = nh;
+        w = nw;
+    }
+    let f = clock_mhz(kind) * 1e6;
+    Ok(LatencyEstimate {
+        cycles_parallel: cyc_par,
+        cycles_folded: cyc_fold,
+        fps_parallel: f / cyc_par as f64,
+        fps_folded: f / cyc_fold as f64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::zoo;
+
+    #[test]
+    fn parallel_is_faster_than_folded() {
+        for kind in BlockKind::ALL {
+            let e = latency_estimate(&zoo::lenet_ish(), kind).unwrap();
+            assert!(e.cycles_parallel < e.cycles_folded, "{kind:?}: {e:?}");
+            assert!(e.fps_parallel > e.fps_folded);
+        }
+    }
+
+    #[test]
+    fn dsp_blocks_beat_conv1_on_wall_clock() {
+        // Same cycle counts (all four are 9-tap sequential MACs) but the
+        // fabric multiplier closes timing lower than the DSP datapaths.
+        let net = zoo::lenet_ish();
+        let c1 = latency_estimate(&net, BlockKind::Conv1).unwrap();
+        let c2 = latency_estimate(&net, BlockKind::Conv2).unwrap();
+        assert_eq!(c1.cycles_parallel, c2.cycles_parallel);
+        assert!(c2.fps_parallel > c1.fps_parallel);
+    }
+
+    #[test]
+    fn conv3_halves_the_parallel_window_time() {
+        let e2 = latency_estimate(&zoo::lenet_ish(), BlockKind::Conv2).unwrap();
+        let e3 = latency_estimate(&zoo::lenet_ish(), BlockKind::Conv3).unwrap();
+        assert!(e3.cycles_parallel < e2.cycles_parallel, "{e3:?} vs {e2:?}");
+    }
+
+    #[test]
+    fn fps_positive_and_finite() {
+        let e = latency_estimate(&zoo::tiny(), BlockKind::Conv4).unwrap();
+        assert!(e.fps_parallel.is_finite() && e.fps_parallel > 0.0);
+    }
+}

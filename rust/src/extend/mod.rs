@@ -1,0 +1,17 @@
+//! Extensions beyond the paper's evaluation — its §5 "perspectives":
+//! latency and energy estimation layered on the same fitted-model machinery
+//! ("enrichie par l'intégration de critères supplémentaires tels que la
+//! consommation d'énergie ou la latence").
+//!
+//! Both estimators are *models over models*: they consume the resource
+//! predictions (never synthesis), so they stay closed-form like the rest of
+//! the methodology. Coefficients are typical UltraScale+ figures (XPE-class
+//! estimates), documented per constant; these are ablation instruments, not
+//! sign-off numbers.
+
+pub mod latency;
+pub mod energy;
+pub mod ablation;
+
+pub use energy::{energy_estimate, EnergyEstimate, PowerModel};
+pub use latency::{latency_estimate, LatencyEstimate};

@@ -1,0 +1,21 @@
+//! Fixed-point arithmetic shared by every layer of the stack.
+//!
+//! The paper's blocks use two's-complement fixed point: `d`-bit data,
+//! `c`-bit coefficients, exact 3×3 multiply-accumulate, then a right-shift and
+//! saturation back to `d` bits. These semantics are defined ONCE here and
+//! mirrored *exactly* by:
+//!
+//! * the four block functional simulators ([`crate::blocks`]),
+//! * the pure-jnp oracle `python/compile/kernels/ref.py`,
+//! * the Pallas kernel `python/compile/kernels/conv3x3.py` (and hence the AOT
+//!   HLO artifacts the rust runtime executes).
+//!
+//! Integer-exactness end to end is what lets the test suite assert *bit*
+//! equality between the "hardware" (block simulators) and the deployed model
+//! (PJRT execution of the JAX graph).
+
+pub mod qformat;
+pub mod ops;
+
+pub use qformat::{QFormat, Rounding};
+pub use ops::{conv3x3_ref, conv3x3_plane_ref, dot9};

@@ -1,0 +1,191 @@
+//! The scalar fixed-point convolution reference.
+//!
+//! This is the single source of truth for what a "3×3 convolution output" means
+//! in this repository. Every block simulator and the python oracle must agree
+//! with it exactly.
+
+use crate::fixedpoint::qformat::{QFormat, Rounding};
+use crate::util::error::{Error, Result};
+
+/// Exact 9-term dot product. Accumulation runs in i128 so the function is
+/// total over all i64 inputs; the result saturates to the i64 range (only
+/// reachable when both operand widths exceed 30 bits, i.e. never for the
+/// paper's 3..=16-bit sweep, where |acc| ≤ 9 · 2^15 · 2^15 < 2^34).
+pub fn dot9(window: &[i64; 9], coeffs: &[i64; 9]) -> i64 {
+    let mut acc = 0i128;
+    for i in 0..9 {
+        acc += window[i] as i128 * coeffs[i] as i128;
+    }
+    acc.clamp(i64::MIN as i128, i64::MAX as i128) as i64
+}
+
+/// One 3×3 convolution output: exact MAC, right-shift, saturate to `data_q`.
+///
+/// `window` is row-major `[x00, x01, x02, x10, ..., x22]`; `coeffs` likewise.
+/// Inputs are validated against their formats (the block simulators feed
+/// already-quantized streams, but the public API guards misuse).
+pub fn conv3x3_ref(
+    window: &[i64; 9],
+    coeffs: &[i64; 9],
+    data_q: QFormat,
+    coeff_q: QFormat,
+    shift: u32,
+    rounding: Rounding,
+) -> Result<i64> {
+    for (i, &x) in window.iter().enumerate() {
+        if !data_q.contains(x) {
+            return Err(Error::InvalidConfig(format!(
+                "window[{i}]={x} not representable in {} bits",
+                data_q.bits()
+            )));
+        }
+    }
+    for (i, &w) in coeffs.iter().enumerate() {
+        if !coeff_q.contains(w) {
+            return Err(Error::InvalidConfig(format!(
+                "coeffs[{i}]={w} not representable in {} bits",
+                coeff_q.bits()
+            )));
+        }
+    }
+    Ok(data_q.narrow(dot9(window, coeffs), shift, rounding))
+}
+
+/// "Valid"-mode 3×3 convolution over a plane (rows × cols, row-major),
+/// producing a (rows-2) × (cols-2) plane. This is the workload-level reference
+/// used to check the block simulators when they stream whole images, and it is
+/// mirrored by `ref.py::conv3x3_plane`.
+pub fn conv3x3_plane_ref(
+    plane: &[i64],
+    rows: usize,
+    cols: usize,
+    coeffs: &[i64; 9],
+    data_q: QFormat,
+    coeff_q: QFormat,
+    shift: u32,
+    rounding: Rounding,
+) -> Result<Vec<i64>> {
+    if rows < 3 || cols < 3 {
+        return Err(Error::InvalidConfig(format!(
+            "plane {rows}x{cols} too small for a 3x3 window"
+        )));
+    }
+    if plane.len() != rows * cols {
+        return Err(Error::InvalidConfig(format!(
+            "plane length {} != rows*cols {}",
+            plane.len(),
+            rows * cols
+        )));
+    }
+    let mut out = Vec::with_capacity((rows - 2) * (cols - 2));
+    for r in 0..rows - 2 {
+        for cidx in 0..cols - 2 {
+            let mut window = [0i64; 9];
+            for dr in 0..3 {
+                for dc in 0..3 {
+                    window[dr * 3 + dc] = plane[(r + dr) * cols + (cidx + dc)];
+                }
+            }
+            out.push(conv3x3_ref(&window, coeffs, data_q, coeff_q, shift, rounding)?);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(b: u32) -> QFormat {
+        QFormat::new(b).unwrap()
+    }
+
+    #[test]
+    fn dot9_identity_kernel() {
+        let mut k = [0i64; 9];
+        k[4] = 1;
+        let w = [1, 2, 3, 4, 5, 6, 7, 8, 9];
+        assert_eq!(dot9(&w, &k), 5);
+    }
+
+    #[test]
+    fn dot9_all_ones() {
+        let w = [1i64; 9];
+        let k = [1i64; 9];
+        assert_eq!(dot9(&w, &k), 9);
+    }
+
+    #[test]
+    fn dot9_extreme_saturates_not_panics() {
+        let w = [i32::MAX as i64; 9];
+        let k = [i32::MIN as i64; 9];
+        // 9 · 2^31 · 2^31 exceeds i64: must saturate, not panic in debug.
+        assert_eq!(dot9(&w, &k), i64::MIN);
+        let k2 = [i32::MAX as i64; 9];
+        assert_eq!(dot9(&w, &k2), i64::MAX);
+        // In-range case stays exact: 16-bit extremes.
+        let w16 = [32767i64; 9];
+        let k16 = [-32768i64; 9];
+        assert_eq!(dot9(&w16, &k16), 9 * 32767 * -32768);
+    }
+
+    #[test]
+    fn conv_ref_shifts_and_saturates() {
+        let w = [127i64; 9];
+        let k = [127i64; 9];
+        // acc = 9*127*127 = 145161; >>4 = 9072; saturates to 127 in 8 bits.
+        let y = conv3x3_ref(&w, &k, q(8), q(8), 4, Rounding::Floor).unwrap();
+        assert_eq!(y, 127);
+        // With a huge shift the value comes into range unsaturated.
+        let y = conv3x3_ref(&w, &k, q(8), q(8), 11, Rounding::Floor).unwrap();
+        assert_eq!(y, 145161 >> 11);
+    }
+
+    #[test]
+    fn conv_ref_validates_ranges() {
+        let mut w = [0i64; 9];
+        w[3] = 200; // not an 8-bit value
+        let k = [0i64; 9];
+        assert!(conv3x3_ref(&w, &k, q(8), q(8), 0, Rounding::Floor).is_err());
+        let w = [0i64; 9];
+        let mut k = [0i64; 9];
+        k[8] = -5000;
+        assert!(conv3x3_ref(&w, &k, q(8), q(8), 0, Rounding::Floor).is_err());
+    }
+
+    #[test]
+    fn plane_ref_shapes_and_identity() {
+        let rows = 5;
+        let cols = 4;
+        let plane: Vec<i64> = (0..rows * cols).map(|i| (i as i64 % 7) - 3).collect();
+        let mut k = [0i64; 9];
+        k[4] = 1;
+        let out =
+            conv3x3_plane_ref(&plane, rows, cols, &k, q(8), q(8), 0, Rounding::Floor).unwrap();
+        assert_eq!(out.len(), (rows - 2) * (cols - 2));
+        // Identity kernel picks the window center.
+        for r in 0..rows - 2 {
+            for c in 0..cols - 2 {
+                assert_eq!(out[r * (cols - 2) + c], plane[(r + 1) * cols + (c + 1)]);
+            }
+        }
+    }
+
+    #[test]
+    fn plane_ref_rejects_bad_shapes() {
+        let k = [0i64; 9];
+        assert!(conv3x3_plane_ref(&[0; 4], 2, 2, &k, q(8), q(8), 0, Rounding::Floor).is_err());
+        assert!(conv3x3_plane_ref(&[0; 11], 3, 4, &k, q(8), q(8), 0, Rounding::Floor).is_err());
+    }
+
+    #[test]
+    fn negative_data_floor_shift_matches_hardware() {
+        // A case where floor vs truncation differ: acc = -3, shift 1 -> -2.
+        let mut w = [0i64; 9];
+        w[0] = -3;
+        let mut k = [0i64; 9];
+        k[0] = 1;
+        let y = conv3x3_ref(&w, &k, q(8), q(8), 1, Rounding::Floor).unwrap();
+        assert_eq!(y, -2);
+    }
+}

@@ -1,0 +1,179 @@
+//! Signed fixed-point format descriptors: width, saturation, rounding.
+
+use crate::util::error::{Error, Result};
+
+/// Rounding mode applied when narrowing an accumulator.
+///
+/// `Floor` is the hardware default (a bare arithmetic right shift — what all
+/// four convolution blocks implement); `NearestEven` is provided for the
+/// software-side ablation in `extend::accuracy`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Rounding {
+    /// Arithmetic shift right; rounds toward negative infinity.
+    Floor,
+    /// Round half to even (convergent); costs an adder in hardware.
+    NearestEven,
+}
+
+/// A signed two's-complement integer format of `bits` total bits.
+///
+/// `QFormat` deliberately carries no binary-point position: every operation in
+/// the library is integer-exact, and the binary point is bookkeeping applied
+/// only at the model boundary (quantization scales live in `cnn::quant`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct QFormat {
+    bits: u32,
+}
+
+impl QFormat {
+    /// Construct; widths outside `1..=32` are rejected (the blocks' sweep range
+    /// is 3..=16, the accumulators never exceed 2·16+4 bits).
+    pub fn new(bits: u32) -> Result<QFormat> {
+        if (1..=32).contains(&bits) {
+            Ok(QFormat { bits })
+        } else {
+            Err(Error::InvalidConfig(format!("QFormat width {bits} outside 1..=32")))
+        }
+    }
+
+    /// Total bit width.
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Smallest representable value (`-2^(bits-1)`).
+    pub fn min(&self) -> i64 {
+        -(1i64 << (self.bits - 1))
+    }
+
+    /// Largest representable value (`2^(bits-1) - 1`).
+    pub fn max(&self) -> i64 {
+        (1i64 << (self.bits - 1)) - 1
+    }
+
+    /// True iff `v` is representable.
+    pub fn contains(&self, v: i64) -> bool {
+        v >= self.min() && v <= self.max()
+    }
+
+    /// Clamp into range.
+    pub fn saturate(&self, v: i64) -> i64 {
+        v.clamp(self.min(), self.max())
+    }
+
+    /// Two's-complement wrap into range (what a width-truncating assignment in
+    /// VHDL does when no saturation logic is instantiated).
+    pub fn wrap(&self, v: i64) -> i64 {
+        let m = 1i64 << self.bits;
+        let r = ((v % m) + m) % m;
+        if r > self.max() {
+            r - m
+        } else {
+            r
+        }
+    }
+
+    /// Shift right by `shift` with the given rounding, then saturate into this
+    /// format. This is the block output stage.
+    pub fn narrow(&self, acc: i64, shift: u32, rounding: Rounding) -> i64 {
+        let shifted = match rounding {
+            Rounding::Floor => acc >> shift,
+            Rounding::NearestEven => {
+                if shift == 0 {
+                    acc
+                } else {
+                    let half = 1i64 << (shift - 1);
+                    let mask = (1i64 << shift) - 1;
+                    let frac = acc & mask;
+                    let base = acc >> shift;
+                    match frac.cmp(&half) {
+                        std::cmp::Ordering::Less => base,
+                        std::cmp::Ordering::Greater => base + 1,
+                        std::cmp::Ordering::Equal => base + (base & 1),
+                    }
+                }
+            }
+        };
+        self.saturate(shifted)
+    }
+
+    /// Quantize a real value to the nearest representable integer (used only at
+    /// the model boundary when preparing stimulus from float data).
+    pub fn quantize(&self, x: f64) -> i64 {
+        self.saturate(x.round() as i64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_bounds() {
+        assert!(QFormat::new(0).is_err());
+        assert!(QFormat::new(33).is_err());
+        assert!(QFormat::new(1).is_ok());
+        assert!(QFormat::new(32).is_ok());
+    }
+
+    #[test]
+    fn ranges_match_twos_complement() {
+        let q8 = QFormat::new(8).unwrap();
+        assert_eq!(q8.min(), -128);
+        assert_eq!(q8.max(), 127);
+        let q3 = QFormat::new(3).unwrap();
+        assert_eq!((q3.min(), q3.max()), (-4, 3));
+    }
+
+    #[test]
+    fn saturate_clamps_both_sides() {
+        let q4 = QFormat::new(4).unwrap();
+        assert_eq!(q4.saturate(100), 7);
+        assert_eq!(q4.saturate(-100), -8);
+        assert_eq!(q4.saturate(5), 5);
+    }
+
+    #[test]
+    fn wrap_matches_hardware_truncation() {
+        let q4 = QFormat::new(4).unwrap();
+        assert_eq!(q4.wrap(8), -8); // 0b1000 is -8 in 4 bits
+        assert_eq!(q4.wrap(16), 0);
+        assert_eq!(q4.wrap(-9), 7);
+        assert_eq!(q4.wrap(7), 7);
+    }
+
+    #[test]
+    fn floor_narrowing_is_arithmetic_shift() {
+        let q8 = QFormat::new(8).unwrap();
+        assert_eq!(q8.narrow(-7, 1, Rounding::Floor), -4); // -7 >> 1 = -4 (floor)
+        assert_eq!(q8.narrow(7, 1, Rounding::Floor), 3);
+        assert_eq!(q8.narrow(1 << 20, 4, Rounding::Floor), 127); // saturates
+    }
+
+    #[test]
+    fn nearest_even_ties() {
+        let q8 = QFormat::new(8).unwrap();
+        // 3/2 = 1.5 -> 2 ; 5/2 = 2.5 -> 2 (ties to even)
+        assert_eq!(q8.narrow(3, 1, Rounding::NearestEven), 2);
+        assert_eq!(q8.narrow(5, 1, Rounding::NearestEven), 2);
+        assert_eq!(q8.narrow(-3, 1, Rounding::NearestEven), -2);
+        assert_eq!(q8.narrow(6, 1, Rounding::NearestEven), 3);
+        assert_eq!(q8.narrow(4, 2, Rounding::NearestEven), 1);
+    }
+
+    #[test]
+    fn narrow_zero_shift_is_identity_before_saturation() {
+        let q8 = QFormat::new(8).unwrap();
+        assert_eq!(q8.narrow(12, 0, Rounding::NearestEven), 12);
+        assert_eq!(q8.narrow(300, 0, Rounding::Floor), 127);
+    }
+
+    #[test]
+    fn quantize_rounds_and_saturates() {
+        let q8 = QFormat::new(8).unwrap();
+        assert_eq!(q8.quantize(1.4), 1);
+        assert_eq!(q8.quantize(1.5), 2);
+        assert_eq!(q8.quantize(-1.5), -2);
+        assert_eq!(q8.quantize(1e9), 127);
+    }
+}

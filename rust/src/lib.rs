@@ -1,0 +1,62 @@
+//! # convkit — parametrizable FPGA convolution blocks + polynomial resource models
+//!
+//! Reproduction of *"Implémentation Efficiente de Fonctions de Convolution sur FPGA
+//! à l'Aide de Blocs Paramétrables et d'Approximations Polynomiales"*
+//! (Magalhães, Fresse, Suffran, Alata — GRETSI/CS.AR 2025).
+//!
+//! The crate is organized as the paper's methodology, bottom-up:
+//!
+//! 1. [`netlist`] + [`synth`] — a structural UltraScale+ *synthesis simulator*:
+//!    RTL-level generators (adders, multipliers, SRLs, DSP packing) elaborated into
+//!    LUT6 / CARRY8 / FDRE / SRL / DSP48E2 primitives and technology-mapped into
+//!    resource counts. This substitutes for Vivado 2024.2 (unavailable here);
+//!    see DESIGN.md §2 for the substitution argument.
+//! 2. [`blocks`] — the paper's four parametrizable 3×3 convolution IPs
+//!    (`Conv1..Conv4`), each both a netlist generator and a bit/cycle-accurate
+//!    functional simulator.
+//! 3. [`synthdata`] — the 196-configuration synthesis campaign (data / coefficient
+//!    widths 3..16 bits).
+//! 4. [`stats`] + [`models`] — Pearson correlation analysis, polynomial and
+//!    segmented regression, Algorithm 1 model selection, error metrics.
+//! 5. [`platform`] + [`allocate`] — device catalog and the utilization-capped
+//!    block-mix optimizer (Table 5).
+//! 6. [`cnn`] + [`coordinator`] + [`runtime`] — the L3 deployment side: map a
+//!    quantized CNN onto block allocations, and execute the AOT-compiled JAX/Pallas
+//!    model through PJRT to prove the fixed-point semantics end-to-end.
+//! 7. [`report`] — regenerates every table and figure of the paper's evaluation.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! // (no_run: rustdoc test binaries bypass the cargo rpath config that
+//! // locates libxla_extension's bundled libstdc++; the same snippet runs
+//! // in examples/quickstart.rs.)
+//! use convkit::blocks::{synthesize, BlockKind, ConvBlockConfig};
+//! use convkit::platform::Platform;
+//! use convkit::synth::MapOptions;
+//!
+//! let cfg = ConvBlockConfig::new(BlockKind::Conv2, 8, 8).unwrap();
+//! let res = synthesize(&cfg, &MapOptions::default());
+//! let zcu104 = Platform::zcu104();
+//! assert_eq!(res.dsp, 1);
+//! println!("Conv2 @8/8: {res} -> {:.3}% of {}", 100.0 * res.llut as f64 /
+//!     zcu104.budget.llut as f64, zcu104.name);
+//! ```
+
+pub mod util;
+pub mod fixedpoint;
+pub mod netlist;
+pub mod synth;
+pub mod blocks;
+pub mod synthdata;
+pub mod stats;
+pub mod models;
+pub mod platform;
+pub mod allocate;
+pub mod cnn;
+pub mod coordinator;
+pub mod runtime;
+pub mod report;
+pub mod extend;
+
+pub use util::error::{Error, Result};

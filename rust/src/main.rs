@@ -1,0 +1,28 @@
+//! `convkit` — CLI for the FPGA convolution-block library.
+//!
+//! The leader entrypoint of the L3 coordinator: every stage of the paper's
+//! methodology (sweep → correlate → fit → predict → allocate → deploy →
+//! serve) is a subcommand; `convkit tables`/`figures` regenerate the paper's
+//! evaluation artifacts.
+
+use convkit::util::args::ParsedArgs;
+
+mod cli;
+
+fn main() {
+    let args = match ParsedArgs::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n");
+            eprintln!("{}", cli::USAGE);
+            std::process::exit(2);
+        }
+    };
+    match cli::dispatch(&args) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}

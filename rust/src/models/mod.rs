@@ -1,0 +1,92 @@
+//! Resource models: Algorithm 1 (model fitting + selection + pruning) and the
+//! per-(block, resource) model registry used by prediction, allocation and the
+//! CLI.
+
+pub mod select;
+pub mod registry;
+
+pub use registry::{ModelKey, ModelRegistry};
+pub use select::{fit_resource_model, SelectOptions};
+
+use crate::stats::{PolyModel, SegmentedModel};
+use std::fmt;
+
+/// A fitted resource model: polynomial in `(d, c)` or segmented in one
+/// variable (the paper uses segmented-in-`c` for `Conv3`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ResourceModel {
+    /// Polynomial in both widths.
+    Poly(PolyModel),
+    /// Segmented model in a single variable.
+    Segmented {
+        /// Which variable the segments run over (`'d'` or `'c'`).
+        var: char,
+        /// The piecewise-linear model.
+        model: SegmentedModel,
+    },
+}
+
+impl ResourceModel {
+    /// Predict the resource count at `(d, c)` (continuous value; callers round
+    /// and clamp at zero — see [`registry::ModelRegistry::predict`]).
+    pub fn eval(&self, d: f64, c: f64) -> f64 {
+        match self {
+            ResourceModel::Poly(p) => p.eval(d, c),
+            ResourceModel::Segmented { var, model } => {
+                model.eval(if *var == 'd' { d } else { c })
+            }
+        }
+    }
+
+    /// Training R².
+    pub fn r2(&self) -> f64 {
+        match self {
+            ResourceModel::Poly(p) => p.r2,
+            ResourceModel::Segmented { model, .. } => model.r2,
+        }
+    }
+
+    /// Short kind tag for reports.
+    pub fn kind_name(&self) -> String {
+        match self {
+            ResourceModel::Poly(p) => format!("poly(deg {})", p.degree),
+            ResourceModel::Segmented { var, model } => {
+                format!("segmented({} pieces, in {var})", model.len())
+            }
+        }
+    }
+}
+
+impl fmt::Display for ResourceModel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ResourceModel::Poly(p) => write!(f, "{p}"),
+            ResourceModel::Segmented { var, model } => {
+                write!(f, "segmented in {var}: {} (R²={:.3})", model.describe(), model.r2)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::PolyModel;
+
+    #[test]
+    fn eval_dispatch() {
+        let samples: Vec<(f64, f64, f64)> =
+            (0..20).map(|i| ((i % 5) as f64, (i / 5) as f64, 1.0 + (i % 5) as f64)).collect();
+        let p = PolyModel::fit(&samples, 1).unwrap();
+        let m = ResourceModel::Poly(p);
+        assert!((m.eval(3.0, 0.0) - 4.0).abs() < 1e-6);
+        assert!(m.r2() > 0.99);
+        assert!(m.kind_name().starts_with("poly"));
+
+        let pts: Vec<(f64, f64)> = (3..=10).map(|c| (c as f64, 7.0)).collect();
+        let s = SegmentedModel::fit(&pts, 2).unwrap();
+        let m = ResourceModel::Segmented { var: 'c', model: s };
+        assert!((m.eval(100.0, 5.0) - 7.0).abs() < 1e-9, "uses c, ignores d");
+        assert!(m.kind_name().contains("segmented"));
+    }
+}

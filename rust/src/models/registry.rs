@@ -1,0 +1,186 @@
+//! The model registry: every (block, resource) pair's fitted model, with its
+//! validation metrics — the artifact the paper's methodology produces and the
+//! allocator/CLI consume.
+
+use super::select::{fit_resource_model, SelectOptions};
+use super::ResourceModel;
+use crate::blocks::{BlockKind, ConvBlockConfig};
+use crate::stats::Metrics;
+use crate::synth::{Resource, ResourceVector};
+use crate::synthdata::Dataset;
+use crate::util::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Registry key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ModelKey {
+    /// Block.
+    pub block: BlockKind,
+    /// Resource.
+    pub resource: Resource,
+}
+
+/// One fitted entry.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    /// The model.
+    pub model: ResourceModel,
+    /// Training-set error metrics (the paper's Table 4 row, per resource).
+    pub metrics: Metrics,
+}
+
+/// All fitted models.
+#[derive(Debug, Clone, Default)]
+pub struct ModelRegistry {
+    entries: BTreeMap<ModelKey, ModelEntry>,
+}
+
+impl ModelRegistry {
+    /// Fit every (block, resource) model from a dataset (Algorithm 1's outer
+    /// loops).
+    pub fn fit(dataset: &Dataset, opts: &SelectOptions) -> Result<ModelRegistry> {
+        let mut entries = BTreeMap::new();
+        for block in BlockKind::ALL {
+            if dataset.for_block(block).is_empty() {
+                continue;
+            }
+            for resource in Resource::ALL {
+                let samples = dataset.samples(block, resource);
+                let model = fit_resource_model(&samples, opts).map_err(|e| {
+                    Error::ModelRejected(format!("{block}/{}: {e}", resource.name()))
+                })?;
+                let y_true: Vec<f64> = samples.iter().map(|s| s.2).collect();
+                let y_pred: Vec<f64> = samples.iter().map(|s| model.eval(s.0, s.1)).collect();
+                let metrics = Metrics::of(&y_true, &y_pred);
+                entries.insert(ModelKey { block, resource }, ModelEntry { model, metrics });
+            }
+        }
+        if entries.is_empty() {
+            return Err(Error::ModelRejected("empty dataset".into()));
+        }
+        Ok(ModelRegistry { entries })
+    }
+
+    /// Look up one entry.
+    pub fn get(&self, block: BlockKind, resource: Resource) -> Option<&ModelEntry> {
+        self.entries.get(&ModelKey { block, resource })
+    }
+
+    /// Number of fitted models.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Blocks present in the registry.
+    pub fn blocks(&self) -> Vec<BlockKind> {
+        let mut bs: Vec<BlockKind> = self.entries.keys().map(|k| k.block).collect();
+        bs.dedup();
+        bs
+    }
+
+    /// Iterate entries in key order.
+    pub fn iter(&self) -> impl Iterator<Item = (&ModelKey, &ModelEntry)> {
+        self.entries.iter()
+    }
+
+    /// Predict the full resource vector for a configuration: each model is
+    /// evaluated at `(d, c)`, rounded to the nearest count and clamped at 0.
+    /// This is the paper's synthesis-free estimation step — the operation the
+    /// whole methodology exists to make cheap.
+    pub fn predict(&self, cfg: &ConvBlockConfig) -> Result<ResourceVector> {
+        let mut v = ResourceVector::default();
+        for resource in Resource::ALL {
+            let entry = self.get(cfg.kind, resource).ok_or_else(|| {
+                Error::ModelRejected(format!("no model for {}/{}", cfg.kind, resource.name()))
+            })?;
+            let raw = entry.model.eval(cfg.data_bits as f64, cfg.coeff_bits as f64);
+            let count = raw.round().max(0.0) as u64;
+            match resource {
+                Resource::Llut => v.llut = count,
+                Resource::Mlut => v.mlut = count,
+                Resource::Ff => v.ff = count,
+                Resource::CChain => v.cchain = count,
+                Resource::Dsp => v.dsp = count,
+            }
+        }
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::MapOptions;
+    use crate::synthdata::{run_sweep, SweepOptions};
+
+    fn small_registry() -> (Dataset, ModelRegistry) {
+        // A reduced sweep (6..=12) keeps the test fast while exercising every
+        // model family.
+        let opts = SweepOptions { min_bits: 6, max_bits: 12, ..Default::default() };
+        let ds = run_sweep(&opts).unwrap();
+        let reg = ModelRegistry::fit(&ds, &SelectOptions::default()).unwrap();
+        (ds, reg)
+    }
+
+    #[test]
+    fn fits_all_twenty_models() {
+        let (_, reg) = small_registry();
+        assert_eq!(reg.len(), 4 * 5);
+        assert_eq!(reg.blocks().len(), 4);
+    }
+
+    #[test]
+    fn all_models_clear_quality_bar() {
+        let (_, reg) = small_registry();
+        for (k, e) in reg.iter() {
+            assert!(
+                e.metrics.r2 >= 0.9 || e.metrics.mse < 1.0,
+                "{}/{}: r2={} mse={}",
+                k.block,
+                k.resource.name(),
+                e.metrics.r2,
+                e.metrics.mse
+            );
+        }
+    }
+
+    #[test]
+    fn prediction_close_to_synthesis() {
+        let (ds, reg) = small_registry();
+        let cfg = ConvBlockConfig::new(BlockKind::Conv2, 8, 8).unwrap();
+        let predicted = reg.predict(&cfg).unwrap();
+        let measured = ds.get(BlockKind::Conv2, 8, 8).unwrap().res;
+        let rel = (predicted.llut as f64 - measured.llut as f64).abs()
+            / measured.llut.max(1) as f64;
+        assert!(rel < 0.15, "LLUT prediction off by {rel}: {predicted} vs {measured}");
+        assert_eq!(predicted.dsp, measured.dsp, "DSP model must be exact");
+    }
+
+    #[test]
+    fn conv3_prediction_ignores_data_width() {
+        let (_, reg) = small_registry();
+        let a = reg.predict(&ConvBlockConfig::new(BlockKind::Conv3, 6, 8).unwrap()).unwrap();
+        let b = reg.predict(&ConvBlockConfig::new(BlockKind::Conv3, 12, 8).unwrap()).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn missing_block_is_an_error() {
+        let opts = SweepOptions {
+            blocks: vec![BlockKind::Conv1],
+            min_bits: 6,
+            max_bits: 10,
+            map: MapOptions::default(),
+        };
+        let ds = run_sweep(&opts).unwrap();
+        let reg = ModelRegistry::fit(&ds, &SelectOptions::default()).unwrap();
+        assert_eq!(reg.len(), 5);
+        let cfg = ConvBlockConfig::new(BlockKind::Conv2, 8, 8).unwrap();
+        assert!(reg.predict(&cfg).is_err());
+    }
+}

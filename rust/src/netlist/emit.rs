@@ -1,0 +1,135 @@
+//! Structural VHDL emission.
+//!
+//! The paper ships its blocks as VHDL IPs; we can emit our elaborated
+//! netlists as structural VHDL-2008 (UNISIM-style component instantiations)
+//! so a user with real Vivado can synthesize them and compare against the
+//! simulator's predictions — the natural validation bridge this reproduction
+//! cannot run in-container but a downstream user can.
+
+use super::{Netlist, Primitive};
+use std::fmt::Write as _;
+
+fn vhdl_ident(path: &str) -> String {
+    let mut s: String = path
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect();
+    if s.chars().next().map_or(true, |c| c.is_ascii_digit() || c == '_') {
+        s.insert_str(0, "i_");
+    }
+    s
+}
+
+fn component_name(p: &Primitive) -> &'static str {
+    match p {
+        Primitive::Lut { .. } => "LUT6",
+        Primitive::Carry8 => "CARRY8",
+        Primitive::Fdre => "FDRE",
+        Primitive::Srl16 => "SRL16E",
+        Primitive::Srl32 => "SRLC32E",
+        Primitive::Ram32m => "RAM32M",
+        Primitive::Dsp48e2 => "DSP48E2",
+        Primitive::MuxF => "MUXF7",
+    }
+}
+
+/// Emit a structural VHDL entity for the netlist. Ports: every top input as
+/// `std_logic`, plus clk; all internal nets become signals; every cell an
+/// instantiation with positional-ish named maps (`Ix`/`Ox` pins — a neutral
+/// convention documented in the header comment; a UNISIM shim maps them to
+/// the real pin names).
+pub fn emit_vhdl(n: &Netlist) -> String {
+    let entity = vhdl_ident(&n.name);
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "-- Structural netlist emitted by convkit (see rust/src/netlist/emit.rs).\n\
+         -- Pin convention: inputs I0..In, outputs O0..Om; wrap with a UNISIM\n\
+         -- shim to synthesize on a real UltraScale+ part.\n\
+         library ieee;\nuse ieee.std_logic_1164.all;\n"
+    );
+    let _ = writeln!(out, "entity {entity} is\n  port (");
+    let _ = writeln!(out, "    clk : in std_logic;");
+    for (i, t) in n.top_inputs.iter().enumerate() {
+        let sep = if i + 1 == n.top_inputs.len() { "" } else { ";" };
+        let _ = writeln!(out, "    top_in_{} : in std_logic{sep}", t.0);
+    }
+    let _ = writeln!(out, "  );\nend entity;\n");
+    let _ = writeln!(out, "architecture structural of {entity} is");
+    for net in 0..n.net_count {
+        let _ = writeln!(out, "  signal n{net} : std_logic;");
+    }
+    let _ = writeln!(out, "begin");
+    for t in &n.top_inputs {
+        let _ = writeln!(out, "  n{} <= top_in_{};", t.0, t.0);
+    }
+    for (idx, cell) in n.cells.iter().enumerate() {
+        let comp = component_name(&cell.prim);
+        let inst = format!("u{}_{}", idx, vhdl_ident(&cell.path));
+        let _ = writeln!(out, "  {inst}: entity work.{comp}_shim port map (");
+        let mut pins = Vec::new();
+        if matches!(
+            cell.prim,
+            Primitive::Fdre | Primitive::Srl16 | Primitive::Srl32 | Primitive::Ram32m | Primitive::Dsp48e2
+        ) {
+            pins.push("    clk => clk".to_string());
+        }
+        for (i, net) in cell.inputs.iter().enumerate() {
+            pins.push(format!("    I{i} => n{}", net.0));
+        }
+        for (o, net) in cell.outputs.iter().enumerate() {
+            pins.push(format!("    O{o} => n{}", net.0));
+        }
+        let _ = writeln!(out, "{}\n  );", pins.join(",\n"));
+    }
+    let _ = writeln!(out, "end architecture;");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::{BlockKind, ConvBlockConfig};
+    use crate::netlist::NetlistBuilder;
+
+    #[test]
+    fn tiny_netlist_emits_wellformed_vhdl() {
+        let mut b = NetlistBuilder::new("tiny-block");
+        let x = b.top_input();
+        let y = b.lut("and1", &[x]);
+        b.fdre("q", y);
+        let vhdl = emit_vhdl(&b.finish());
+        assert!(vhdl.contains("entity tiny_block is"));
+        assert!(vhdl.contains("architecture structural of tiny_block"));
+        assert!(vhdl.contains("LUT6_shim"));
+        assert!(vhdl.contains("FDRE_shim"));
+        assert!(vhdl.contains("clk => clk"));
+        assert!(vhdl.contains("end architecture;"));
+    }
+
+    #[test]
+    fn identifiers_are_sanitized() {
+        assert_eq!(vhdl_ident("taps/tap3/pg[2]"), "taps_tap3_pg_2_");
+        assert_eq!(vhdl_ident("3bad"), "i_3bad");
+    }
+
+    #[test]
+    fn full_block_emission_scales() {
+        let cfg = ConvBlockConfig::new(BlockKind::Conv2, 8, 8).unwrap();
+        let netlist = cfg.elaborate();
+        let vhdl = emit_vhdl(&netlist);
+        // One instantiation per cell.
+        assert_eq!(vhdl.matches("port map").count(), netlist.cells.len());
+        // All nets declared.
+        assert!(vhdl.contains(&format!("signal n{} :", netlist.net_count - 1)));
+    }
+
+    #[test]
+    fn every_block_emits_without_panicking() {
+        for kind in BlockKind::ALL {
+            let cfg = ConvBlockConfig::new(kind, 8, 8).unwrap();
+            let vhdl = emit_vhdl(&cfg.elaborate());
+            assert!(vhdl.len() > 1000, "{kind}");
+        }
+    }
+}

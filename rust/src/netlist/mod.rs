@@ -1,0 +1,223 @@
+//! Structural netlist substrate: UltraScale+-class primitives, a builder with
+//! light connectivity tracking, and structural statistics.
+//!
+//! This is the bottom of the synthesis-simulator stack (DESIGN.md §2). The
+//! generators in [`crate::synth`] elaborate RTL-level structures (adders,
+//! multipliers, coefficient stores, FSMs) into these primitives; the technology
+//! mapper then applies packing/optimization factors and produces the
+//! [`crate::synth::ResourceVector`] a Vivado run would report.
+//!
+//! Connectivity is tracked at the net level (single-driver checks, fan-in
+//! limits) so the elaborated designs are *structurally valid*, not just counted
+//! — the invariants are enforced in [`Netlist::validate`] and exercised by the
+//! property suite.
+
+pub mod primitive;
+pub mod builder;
+pub mod stats;
+pub mod emit;
+
+pub use builder::{Bus, Net, NetlistBuilder};
+pub use primitive::{Primitive, PrimitiveClass};
+pub use stats::NetlistStats;
+
+use crate::util::error::{Error, Result};
+
+/// One instantiated primitive with its connectivity.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    /// Which primitive.
+    pub prim: Primitive,
+    /// Hierarchical instance path, e.g. `conv1/tap3/acc_add`.
+    pub path: String,
+    /// Nets read by this cell.
+    pub inputs: Vec<Net>,
+    /// Nets driven by this cell.
+    pub outputs: Vec<Net>,
+}
+
+/// A flattened structural netlist.
+#[derive(Debug, Clone, Default)]
+pub struct Netlist {
+    /// Design name (block + parameters), used in reports and jitter seeds.
+    pub name: String,
+    /// All instantiated cells.
+    pub cells: Vec<Cell>,
+    /// Number of nets allocated (net ids are dense `0..net_count`).
+    pub net_count: usize,
+    /// Nets that are top-level inputs (driven from outside).
+    pub top_inputs: Vec<Net>,
+}
+
+impl Netlist {
+    /// Structural statistics (primitive histograms, raw resource totals).
+    pub fn stats(&self) -> NetlistStats {
+        NetlistStats::collect(self)
+    }
+
+    /// Validate structural invariants:
+    /// 1. every net has at most one driver;
+    /// 2. every cell input net is driven (by a cell or a top-level input);
+    /// 3. per-primitive port-count limits hold (a LUT6 has ≤ 6 inputs, a
+    ///    CARRY8 ≤ 24, a DSP48E2 ≤ 96, ...).
+    pub fn validate(&self) -> Result<()> {
+        let mut driver: Vec<Option<usize>> = vec![None; self.net_count];
+        for &n in &self.top_inputs {
+            if n.0 >= self.net_count {
+                return Err(Error::InvalidConfig(format!(
+                    "{}: top input net {} out of range",
+                    self.name, n.0
+                )));
+            }
+            driver[n.0] = Some(usize::MAX); // sentinel: externally driven
+        }
+        for (ci, cell) in self.cells.iter().enumerate() {
+            let max_in = cell.prim.max_inputs();
+            if cell.inputs.len() > max_in {
+                return Err(Error::InvalidConfig(format!(
+                    "{}: cell `{}` ({:?}) has {} inputs, primitive allows {}",
+                    self.name,
+                    cell.path,
+                    cell.prim,
+                    cell.inputs.len(),
+                    max_in
+                )));
+            }
+            for &n in cell.outputs.iter() {
+                if n.0 >= self.net_count {
+                    return Err(Error::InvalidConfig(format!(
+                        "{}: cell `{}` drives net {} out of range",
+                        self.name, cell.path, n.0
+                    )));
+                }
+                if let Some(prev) = driver[n.0] {
+                    return Err(Error::InvalidConfig(format!(
+                        "{}: net {} multiply driven (cells {} and {})",
+                        self.name,
+                        n.0,
+                        if prev == usize::MAX { "top".to_string() } else { prev.to_string() },
+                        ci
+                    )));
+                }
+                driver[n.0] = Some(ci);
+            }
+        }
+        for cell in &self.cells {
+            for &n in &cell.inputs {
+                if n.0 >= self.net_count {
+                    return Err(Error::InvalidConfig(format!(
+                        "{}: cell `{}` reads net {} out of range",
+                        self.name, cell.path, n.0
+                    )));
+                }
+                if driver[n.0].is_none() {
+                    return Err(Error::InvalidConfig(format!(
+                        "{}: cell `{}` reads undriven net {}",
+                        self.name, cell.path, n.0
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Merge another netlist into this one (nets are renumbered). Used by the
+    /// allocation study to elaborate multi-block top levels.
+    pub fn absorb(&mut self, other: &Netlist) {
+        let offset = self.net_count;
+        self.net_count += other.net_count;
+        self.top_inputs.extend(other.top_inputs.iter().map(|n| Net(n.0 + offset)));
+        for cell in &other.cells {
+            self.cells.push(Cell {
+                prim: cell.prim,
+                path: format!("{}/{}", other.name, cell.path),
+                inputs: cell.inputs.iter().map(|n| Net(n.0 + offset)).collect(),
+                outputs: cell.outputs.iter().map(|n| Net(n.0 + offset)).collect(),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_valid() -> Netlist {
+        let mut b = NetlistBuilder::new("tiny");
+        let a = b.top_input();
+        let c = b.top_input();
+        let y = b.lut("and", &[a, c]);
+        let _q = b.fdre("q", y);
+        b.finish()
+    }
+
+    #[test]
+    fn valid_netlist_passes() {
+        tiny_valid().validate().unwrap();
+    }
+
+    #[test]
+    fn stats_count_cells() {
+        let n = tiny_valid();
+        let s = n.stats();
+        assert_eq!(s.total_cells, 2);
+        assert_eq!(s.count(PrimitiveClass::LogicLut), 1);
+        assert_eq!(s.count(PrimitiveClass::FlipFlop), 1);
+    }
+
+    #[test]
+    fn double_driver_detected() {
+        let mut b = NetlistBuilder::new("bad");
+        let a = b.top_input();
+        let y = b.lut("l1", &[a]);
+        let mut n = b.finish();
+        // Manually add a second driver for y.
+        n.cells.push(Cell {
+            prim: Primitive::Lut { inputs: 1 },
+            path: "dup".into(),
+            inputs: vec![a],
+            outputs: vec![y],
+        });
+        assert!(n.validate().is_err());
+    }
+
+    #[test]
+    fn undriven_input_detected() {
+        let mut n = tiny_valid();
+        n.net_count += 1;
+        n.cells.push(Cell {
+            prim: Primitive::Lut { inputs: 1 },
+            path: "floating".into(),
+            inputs: vec![Net(n.net_count - 1)],
+            outputs: vec![],
+        });
+        assert!(n.validate().is_err());
+    }
+
+    #[test]
+    fn fanin_limit_enforced() {
+        let mut b = NetlistBuilder::new("fat");
+        let ins: Vec<Net> = (0..7).map(|_| b.top_input()).collect();
+        let mut n = b.finish();
+        let out = Net(n.net_count);
+        n.net_count += 1;
+        n.cells.push(Cell {
+            prim: Primitive::Lut { inputs: 7 },
+            path: "fat_lut".into(),
+            inputs: ins,
+            outputs: vec![out],
+        });
+        assert!(n.validate().is_err());
+    }
+
+    #[test]
+    fn absorb_renumbers_and_stays_valid() {
+        let mut a = tiny_valid();
+        let b = tiny_valid();
+        let cells_before = a.cells.len();
+        a.absorb(&b);
+        assert_eq!(a.cells.len(), cells_before * 2);
+        a.validate().unwrap();
+        assert!(a.cells[cells_before].path.starts_with("tiny/"));
+    }
+}

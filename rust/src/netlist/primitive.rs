@@ -1,0 +1,153 @@
+//! UltraScale+-class primitive vocabulary.
+//!
+//! The five resource classes the paper measures (LLUT, MLUT, FF, CChain, DSP)
+//! map onto these primitives; `PrimitiveClass` is the reporting-side grouping.
+//! Sizing facts (how many fabric LUTs an SRL costs, CARRY8 coverage, DSP48E2
+//! port widths) follow Xilinx UG574/UG579.
+
+/// A hardware primitive instance type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Primitive {
+    /// Fabric LUT used as logic, with its used input count (1..=6).
+    Lut { inputs: u8 },
+    /// Dedicated 8-bit carry chain segment (UltraScale+ CARRY8).
+    Carry8,
+    /// D flip-flop with clock-enable/reset (FDRE).
+    Fdre,
+    /// LUT used as a 16-deep shift register (SRL16E) — counts as one MLUT.
+    Srl16,
+    /// LUT used as a 32-deep shift register (SRLC32E) — counts as one MLUT.
+    Srl32,
+    /// Quad-port 32×2 distributed RAM (RAM32M) — costs four MLUTs.
+    Ram32m,
+    /// DSP48E2 slice (27×18 multiplier + 48-bit ALU).
+    Dsp48e2,
+    /// Wide-function mux (MUXF7/F8); free routing fabric, reported for
+    /// completeness but not a counted resource in the paper.
+    MuxF,
+}
+
+/// Reporting class: the paper's five measured resources plus "other".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PrimitiveClass {
+    /// LUT used as combinational logic.
+    LogicLut,
+    /// LUT used as memory (SRL / distributed RAM).
+    MemoryLut,
+    /// Flip-flop.
+    FlipFlop,
+    /// Carry chain segment.
+    CarryChain,
+    /// DSP slice.
+    Dsp,
+    /// Not separately measured by the paper.
+    Other,
+}
+
+impl Primitive {
+    /// Reporting class of this primitive.
+    pub fn class(&self) -> PrimitiveClass {
+        match self {
+            Primitive::Lut { .. } => PrimitiveClass::LogicLut,
+            Primitive::Srl16 | Primitive::Srl32 | Primitive::Ram32m => PrimitiveClass::MemoryLut,
+            Primitive::Fdre => PrimitiveClass::FlipFlop,
+            Primitive::Carry8 => PrimitiveClass::CarryChain,
+            Primitive::Dsp48e2 => PrimitiveClass::Dsp,
+            Primitive::MuxF => PrimitiveClass::Other,
+        }
+    }
+
+    /// How many physical fabric LUTs this primitive occupies (logic or memory).
+    pub fn lut_cost(&self) -> u32 {
+        match self {
+            Primitive::Lut { .. } => 1,
+            Primitive::Srl16 | Primitive::Srl32 => 1,
+            Primitive::Ram32m => 4,
+            _ => 0,
+        }
+    }
+
+    /// Structural fan-in limit used by `Netlist::validate`.
+    pub fn max_inputs(&self) -> usize {
+        match self {
+            Primitive::Lut { .. } => 6,
+            // CARRY8: 8 S + 8 DI + CI + CI_TOP.
+            Primitive::Carry8 => 18,
+            // D, CE, R, C.
+            Primitive::Fdre => 4,
+            // D, CE, C + 4/5 address bits.
+            Primitive::Srl16 => 8,
+            Primitive::Srl32 => 9,
+            // 3 write + 4x(5 read addr) + 8 data-ish: generous structural cap.
+            Primitive::Ram32m => 32,
+            // A(27)+B(18)+C(48)+D(27)... structural cap for validation only.
+            Primitive::Dsp48e2 => 128,
+            Primitive::MuxF => 3,
+        }
+    }
+
+    /// Short mnemonic for reports.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            Primitive::Lut { .. } => "LUT",
+            Primitive::Carry8 => "CARRY8",
+            Primitive::Fdre => "FDRE",
+            Primitive::Srl16 => "SRL16E",
+            Primitive::Srl32 => "SRLC32E",
+            Primitive::Ram32m => "RAM32M",
+            Primitive::Dsp48e2 => "DSP48E2",
+            Primitive::MuxF => "MUXF",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classes_partition_the_paper_resources() {
+        assert_eq!(Primitive::Lut { inputs: 6 }.class(), PrimitiveClass::LogicLut);
+        assert_eq!(Primitive::Srl16.class(), PrimitiveClass::MemoryLut);
+        assert_eq!(Primitive::Srl32.class(), PrimitiveClass::MemoryLut);
+        assert_eq!(Primitive::Ram32m.class(), PrimitiveClass::MemoryLut);
+        assert_eq!(Primitive::Fdre.class(), PrimitiveClass::FlipFlop);
+        assert_eq!(Primitive::Carry8.class(), PrimitiveClass::CarryChain);
+        assert_eq!(Primitive::Dsp48e2.class(), PrimitiveClass::Dsp);
+        assert_eq!(Primitive::MuxF.class(), PrimitiveClass::Other);
+    }
+
+    #[test]
+    fn lut_costs_follow_ug574() {
+        assert_eq!(Primitive::Lut { inputs: 3 }.lut_cost(), 1);
+        assert_eq!(Primitive::Srl16.lut_cost(), 1);
+        assert_eq!(Primitive::Ram32m.lut_cost(), 4);
+        assert_eq!(Primitive::Dsp48e2.lut_cost(), 0);
+        assert_eq!(Primitive::Carry8.lut_cost(), 0);
+    }
+
+    #[test]
+    fn fanin_caps_sane() {
+        assert_eq!(Primitive::Lut { inputs: 6 }.max_inputs(), 6);
+        assert!(Primitive::Dsp48e2.max_inputs() >= 96);
+        assert_eq!(Primitive::Fdre.max_inputs(), 4);
+    }
+
+    #[test]
+    fn mnemonics_unique() {
+        let all = [
+            Primitive::Lut { inputs: 1 },
+            Primitive::Carry8,
+            Primitive::Fdre,
+            Primitive::Srl16,
+            Primitive::Srl32,
+            Primitive::Ram32m,
+            Primitive::Dsp48e2,
+            Primitive::MuxF,
+        ];
+        let mut names: Vec<_> = all.iter().map(|p| p.mnemonic()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), all.len());
+    }
+}

@@ -1,0 +1,124 @@
+//! Structural statistics over a netlist: primitive histograms and the raw
+//! (pre-mapping) resource totals the technology mapper starts from.
+
+use super::{Netlist, Primitive, PrimitiveClass};
+use std::collections::BTreeMap;
+
+/// Histogram + totals for one netlist.
+#[derive(Debug, Clone)]
+pub struct NetlistStats {
+    /// Count per reporting class.
+    counts: BTreeMap<&'static str, u64>,
+    class_counts: [(PrimitiveClass, u64); 6],
+    /// Total cells.
+    pub total_cells: u64,
+    /// Total LUT-site occupancy (logic + memory; RAM32M counts 4).
+    pub lut_sites: u64,
+    /// Average used inputs per logic LUT (packing headroom indicator).
+    pub mean_lut_inputs: f64,
+}
+
+impl NetlistStats {
+    /// Collect statistics from a netlist.
+    pub fn collect(n: &Netlist) -> NetlistStats {
+        let mut s = NetlistStats {
+            counts: BTreeMap::new(),
+            class_counts: [
+                (PrimitiveClass::LogicLut, 0),
+                (PrimitiveClass::MemoryLut, 0),
+                (PrimitiveClass::FlipFlop, 0),
+                (PrimitiveClass::CarryChain, 0),
+                (PrimitiveClass::Dsp, 0),
+                (PrimitiveClass::Other, 0),
+            ],
+            total_cells: 0,
+            lut_sites: 0,
+            mean_lut_inputs: 0.0,
+        };
+        let mut lut_input_sum = 0u64;
+        let mut logic_luts = 0u64;
+        for cell in &n.cells {
+            s.total_cells += 1;
+            s.lut_sites += cell.prim.lut_cost() as u64;
+            *s.counts.entry(cell.prim.mnemonic()).or_insert(0) += 1;
+            let class = cell.prim.class();
+            for e in s.class_counts.iter_mut() {
+                if e.0 == class {
+                    e.1 += 1;
+                }
+            }
+            if let Primitive::Lut { inputs } = cell.prim {
+                lut_input_sum += inputs as u64;
+                logic_luts += 1;
+            }
+            if cell.prim == Primitive::Ram32m {
+                // RAM32M occupies 4 LUT sites; count the extra 3 in the
+                // memory-LUT class total as well.
+                for e in s.class_counts.iter_mut() {
+                    if e.0 == PrimitiveClass::MemoryLut {
+                        e.1 += 3;
+                    }
+                }
+            }
+        }
+        s.mean_lut_inputs =
+            if logic_luts > 0 { lut_input_sum as f64 / logic_luts as f64 } else { 0.0 };
+        s
+    }
+
+    /// Count of a reporting class (memory LUTs in LUT-site units).
+    pub fn count(&self, class: PrimitiveClass) -> u64 {
+        self.class_counts.iter().find(|e| e.0 == class).map(|e| e.1).unwrap_or(0)
+    }
+
+    /// Count by mnemonic ("LUT", "CARRY8", ...).
+    pub fn count_mnemonic(&self, m: &str) -> u64 {
+        self.counts.get(m).copied().unwrap_or(0)
+    }
+
+    /// Render a short histogram line for logs.
+    pub fn summary(&self) -> String {
+        let parts: Vec<String> =
+            self.counts.iter().map(|(k, v)| format!("{k}:{v}")).collect();
+        format!("{} cells [{}]", self.total_cells, parts.join(" "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::NetlistBuilder;
+
+    #[test]
+    fn histogram_and_classes() {
+        let mut b = NetlistBuilder::new("t");
+        let x = b.top_input_bus(6);
+        let ce = b.top_input();
+        let y = b.lut("l", &x[..4]);
+        let _z = b.lut("l2", &[x[4], x[5]]);
+        let _q = b.fdre("q", y);
+        let _s = b.srl16("s", y, ce);
+        let _r = b.ram32m("m", &[y]);
+        let n = b.finish();
+        n.validate().unwrap();
+        let st = n.stats();
+        assert_eq!(st.count_mnemonic("LUT"), 2);
+        assert_eq!(st.count(PrimitiveClass::LogicLut), 2);
+        // SRL16 (1) + RAM32M (4 LUT sites)
+        assert_eq!(st.count(PrimitiveClass::MemoryLut), 5);
+        assert_eq!(st.count(PrimitiveClass::FlipFlop), 1);
+        // lut_sites: 2 logic + 1 srl + 4 ram
+        assert_eq!(st.lut_sites, 7);
+        assert!((st.mean_lut_inputs - 3.0).abs() < 1e-9);
+        assert!(st.summary().contains("cells"));
+    }
+
+    #[test]
+    fn empty_netlist_stats() {
+        let n = NetlistBuilder::new("e").finish();
+        let st = n.stats();
+        assert_eq!(st.total_cells, 0);
+        assert_eq!(st.mean_lut_inputs, 0.0);
+        assert_eq!(st.count(PrimitiveClass::Dsp), 0);
+    }
+}

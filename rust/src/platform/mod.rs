@@ -1,0 +1,167 @@
+//! FPGA platform catalog.
+//!
+//! Resource budgets for the devices the paper and its related work (Table 1)
+//! target, taken from the Xilinx datasheets (DS891, DS925, DS180, DS962).
+//! 7-series parts expose CARRY4 primitives; their carry budget is stored in
+//! CARRY8-equivalents (÷2) so the blocks' CARRY8 counts compare directly.
+//! MLUT budgets are the LUTRAM-capable (SLICEM) LUT counts.
+
+use crate::synth::ResourceVector;
+
+/// A target FPGA device.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Platform {
+    /// Board / family name used in the paper ("ZCU104", ...).
+    pub name: &'static str,
+    /// Part number.
+    pub part: &'static str,
+    /// Total usable resources.
+    pub budget: ResourceVector,
+}
+
+impl Platform {
+    /// Zynq UltraScale+ ZCU104 (XCZU7EV) — the paper's evaluation platform.
+    pub fn zcu104() -> Platform {
+        Platform {
+            name: "ZCU104",
+            part: "XCZU7EV",
+            budget: ResourceVector::new(230_400, 101_760, 460_800, 28_800, 1_728),
+        }
+    }
+
+    /// Kria KV260 (XCK26) — Table 1 \[4\].
+    pub fn kv260() -> Platform {
+        Platform {
+            name: "KV260",
+            part: "XCK26",
+            budget: ResourceVector::new(117_120, 57_600, 234_240, 14_640, 1_248),
+        }
+    }
+
+    /// ZCU102 (XCZU9EG) — Table 1 \[6\].
+    pub fn zcu102() -> Platform {
+        Platform {
+            name: "ZCU102",
+            part: "XCZU9EG",
+            budget: ResourceVector::new(274_080, 144_000, 548_160, 34_260, 2_520),
+        }
+    }
+
+    /// ZCU111 (XCZU28DR) — Table 1 \[6\].
+    pub fn zcu111() -> Platform {
+        Platform {
+            name: "ZCU111",
+            part: "XCZU28DR",
+            budget: ResourceVector::new(425_280, 213_600, 850_560, 53_160, 4_272),
+        }
+    }
+
+    /// VC709 (XC7VX690T, 7-series) — Table 1 \[7\].
+    pub fn vc709() -> Platform {
+        Platform {
+            name: "VC709",
+            part: "XC7VX690T",
+            budget: ResourceVector::new(433_200, 174_200, 866_400, 54_150, 3_600),
+        }
+    }
+
+    /// Virtex-7 VC707 (XC7VX485T) — Table 1 \[5\].
+    pub fn virtex7() -> Platform {
+        Platform {
+            name: "Virtex-7",
+            part: "XC7VX485T",
+            budget: ResourceVector::new(303_600, 130_800, 607_200, 37_950, 2_800),
+        }
+    }
+
+    /// All catalogued platforms.
+    pub fn all() -> Vec<Platform> {
+        vec![
+            Platform::zcu104(),
+            Platform::kv260(),
+            Platform::zcu102(),
+            Platform::zcu111(),
+            Platform::vc709(),
+            Platform::virtex7(),
+        ]
+    }
+
+    /// Look up by (case-insensitive) name.
+    pub fn by_name(name: &str) -> Option<Platform> {
+        Platform::all()
+            .into_iter()
+            .find(|p| p.name.eq_ignore_ascii_case(name) || p.part.eq_ignore_ascii_case(name))
+    }
+
+    /// Utilization percentages of `used` against this platform's budget,
+    /// in the paper's column order (LLUT, MLUT, FF, CChain, DSP).
+    pub fn utilization(&self, used: &ResourceVector) -> [f64; 5] {
+        let pct = |u: u64, b: u64| if b == 0 { 0.0 } else { 100.0 * u as f64 / b as f64 };
+        [
+            pct(used.llut, self.budget.llut),
+            pct(used.mlut, self.budget.mlut),
+            pct(used.ff, self.budget.ff),
+            pct(used.cchain, self.budget.cchain),
+            pct(used.dsp, self.budget.dsp),
+        ]
+    }
+
+    /// Budget scaled by a utilization cap (e.g. the paper's 80% target).
+    pub fn capped_budget(&self, cap: f64) -> ResourceVector {
+        let s = |v: u64| (v as f64 * cap).floor() as u64;
+        ResourceVector::new(
+            s(self.budget.llut),
+            s(self.budget.mlut),
+            s(self.budget.ff),
+            s(self.budget.cchain),
+            s(self.budget.dsp),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zcu104_datasheet_numbers() {
+        let p = Platform::zcu104();
+        assert_eq!(p.budget.llut, 230_400);
+        assert_eq!(p.budget.ff, 460_800);
+        assert_eq!(p.budget.dsp, 1_728);
+        assert_eq!(p.part, "XCZU7EV");
+    }
+
+    #[test]
+    fn lookup_by_name_and_part() {
+        assert_eq!(Platform::by_name("zcu104").unwrap().part, "XCZU7EV");
+        assert_eq!(Platform::by_name("XCK26").unwrap().name, "KV260");
+        assert!(Platform::by_name("nonexistent").is_none());
+    }
+
+    #[test]
+    fn all_platforms_have_positive_budgets() {
+        for p in Platform::all() {
+            assert!(p.budget.llut > 0 && p.budget.ff > 0 && p.budget.dsp > 0, "{}", p.name);
+            assert!(p.budget.ff == 2 * p.budget.llut, "{}: FF = 2×LUT on these parts", p.name);
+        }
+    }
+
+    #[test]
+    fn utilization_percentages() {
+        let p = Platform::zcu104();
+        let used = ResourceVector::new(115_200, 0, 0, 0, 864);
+        let u = p.utilization(&used);
+        assert!((u[0] - 50.0).abs() < 1e-9);
+        assert!((u[4] - 50.0).abs() < 1e-9);
+        assert_eq!(u[1], 0.0);
+    }
+
+    #[test]
+    fn capped_budget_scales() {
+        let p = Platform::zcu104();
+        let b = p.capped_budget(0.8);
+        assert_eq!(b.llut, 184_320);
+        assert_eq!(b.dsp, 1_382); // floor(1728*0.8)
+    }
+}

@@ -1,0 +1,124 @@
+//! Figures 1–3: measured LLUT scatter + fitted model surface for
+//! `Conv1`, `Conv2`, `Conv3`.
+//!
+//! Two renderings: a CSV series (measured + fitted per grid point, for
+//! external plotting) and an ASCII height map for terminals/benches.
+
+use crate::blocks::BlockKind;
+use crate::coordinator::dse::DseReport;
+use crate::synth::Resource;
+use crate::util::error::{Error, Result};
+use crate::util::format::ascii_surface;
+
+/// Which figure shows which block (paper order).
+pub fn figure_block(figure: u32) -> Option<BlockKind> {
+    match figure {
+        1 => Some(BlockKind::Conv1),
+        2 => Some(BlockKind::Conv2),
+        3 => Some(BlockKind::Conv3),
+        _ => None,
+    }
+}
+
+/// CSV series for one figure: `d,c,measured,fitted` per grid point.
+pub fn figure_csv(report: &DseReport, figure: u32) -> Result<String> {
+    let block =
+        figure_block(figure).ok_or_else(|| Error::Usage(format!("no figure {figure}")))?;
+    let entry = report
+        .registry
+        .get(block, Resource::Llut)
+        .ok_or_else(|| Error::ModelRejected(format!("no LLUT model for {block}")))?;
+    let mut out = String::from("data_bits,coeff_bits,llut_measured,llut_fitted\n");
+    for rec in report.dataset.for_block(block) {
+        let fitted = entry.model.eval(rec.data_bits as f64, rec.coeff_bits as f64);
+        out.push_str(&format!(
+            "{},{},{},{:.3}\n",
+            rec.data_bits,
+            rec.coeff_bits,
+            rec.res.llut,
+            fitted
+        ));
+    }
+    Ok(out)
+}
+
+/// ASCII surface for one figure (fitted model over the sweep grid, with the
+/// measured range printed for comparison).
+pub fn figure_surface(report: &DseReport, figure: u32) -> Result<String> {
+    let block =
+        figure_block(figure).ok_or_else(|| Error::Usage(format!("no figure {figure}")))?;
+    let entry = report
+        .registry
+        .get(block, Resource::Llut)
+        .ok_or_else(|| Error::ModelRejected(format!("no LLUT model for {block}")))?;
+    let recs = report.dataset.for_block(block);
+    let ds: Vec<i64> = {
+        let mut v: Vec<i64> = recs.iter().map(|r| r.data_bits as i64).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+    let cs: Vec<i64> = {
+        let mut v: Vec<i64> = recs.iter().map(|r| r.coeff_bits as i64).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+    let lo = recs.iter().map(|r| r.res.llut).min().unwrap_or(0);
+    let hi = recs.iter().map(|r| r.res.llut).max().unwrap_or(0);
+    let mut s = ascii_surface(
+        &format!("FIGURE {figure}: Consommation de LLUT — {} ({})", block, entry.model.kind_name()),
+        &ds,
+        &cs,
+        |d, c| entry.model.eval(d as f64, c as f64),
+    );
+    s.push_str(&format!("measured LLUT range: [{lo}, {hi}], model R² = {:.3}\n", entry.model.r2()));
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::dse::DseEngine;
+    use crate::coordinator::jobs::JobPool;
+    use crate::models::SelectOptions;
+    use crate::synthdata::SweepOptions;
+
+    fn report() -> DseReport {
+        DseEngine {
+            sweep: SweepOptions { min_bits: 6, max_bits: 12, ..Default::default() },
+            select: SelectOptions::default(),
+            pool: JobPool::with_workers(1),
+            cache: None,
+        }
+        .run()
+        .unwrap()
+    }
+
+    #[test]
+    fn figure_blocks_match_paper() {
+        assert_eq!(figure_block(1), Some(BlockKind::Conv1));
+        assert_eq!(figure_block(3), Some(BlockKind::Conv3));
+        assert_eq!(figure_block(4), None);
+    }
+
+    #[test]
+    fn csv_has_one_row_per_config() {
+        let rep = report();
+        let csv = figure_csv(&rep, 2).unwrap();
+        // 7x7 sweep + header.
+        assert_eq!(csv.lines().count(), 49 + 1);
+        assert!(csv.starts_with("data_bits,"));
+    }
+
+    #[test]
+    fn surfaces_render_for_all_three_figures() {
+        let rep = report();
+        for f in 1..=3 {
+            let s = figure_surface(&rep, f).unwrap();
+            assert!(s.contains(&format!("FIGURE {f}")), "{s}");
+            assert!(s.contains("R²"));
+        }
+        assert!(figure_surface(&rep, 9).is_err());
+    }
+}

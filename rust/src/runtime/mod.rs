@@ -1,0 +1,226 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU client) following the reference
+//! wiring in `/opt/xla-example/load_hlo`: HLO **text** is the interchange
+//! format (jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1's
+//! proto path rejects; the text parser reassigns ids). Artifacts are produced
+//! once by `make artifacts` (`python/compile/aot.py`); Python never runs on
+//! this path.
+
+use crate::util::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Default artifacts directory relative to the repo root.
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Metadata sidecar for one artifact (written by `aot.py` as `NAME.meta`,
+/// simple `key=value` lines).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ArtifactMeta {
+    /// Entries as written by the compiler.
+    pub fields: BTreeMap<String, String>,
+}
+
+impl ArtifactMeta {
+    /// Parse `key=value` lines.
+    pub fn parse(text: &str) -> ArtifactMeta {
+        let mut fields = BTreeMap::new();
+        for line in text.lines() {
+            if let Some((k, v)) = line.split_once('=') {
+                fields.insert(k.trim().to_string(), v.trim().to_string());
+            }
+        }
+        ArtifactMeta { fields }
+    }
+
+    /// Look up a field.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.fields.get(key).map(String::as_str)
+    }
+
+    /// Parse a comma-separated dims field, e.g. `input_shape=1,12,12`.
+    pub fn dims(&self, key: &str) -> Option<Vec<usize>> {
+        self.get(key).map(|v| {
+            v.split(',').filter_map(|s| s.trim().parse::<usize>().ok()).collect()
+        })
+    }
+}
+
+/// A compiled, executable artifact.
+pub struct CompiledArtifact {
+    /// Artifact name (file stem).
+    pub name: String,
+    /// Sidecar metadata.
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl std::fmt::Debug for CompiledArtifact {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CompiledArtifact").field("name", &self.name).finish()
+    }
+}
+
+/// The PJRT runtime: one CPU client, many compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime").field("platform", &self.platform()).finish()
+    }
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| Error::Runtime(format!("pjrt cpu: {e}")))?;
+        Ok(Runtime { client })
+    }
+
+    /// Backend platform name ("cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact (plus its `.meta` sidecar if present) and
+    /// compile it for this client.
+    pub fn load(&self, path: &Path) -> Result<CompiledArtifact> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+        )
+        .map_err(|e| Error::Runtime(format!("parse {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {}: {e}", path.display())))?;
+        let name = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("artifact")
+            .trim_end_matches(".hlo")
+            .to_string();
+        let meta_path = path.with_extension("").with_extension("meta");
+        let meta = if meta_path.exists() {
+            ArtifactMeta::parse(&std::fs::read_to_string(&meta_path)?)
+        } else {
+            // aot.py writes NAME.meta next to NAME.hlo.txt.
+            let alt = PathBuf::from(format!(
+                "{}.meta",
+                path.display().to_string().trim_end_matches(".hlo.txt")
+            ));
+            if alt.exists() {
+                ArtifactMeta::parse(&std::fs::read_to_string(&alt)?)
+            } else {
+                ArtifactMeta::default()
+            }
+        };
+        Ok(CompiledArtifact { name, meta, exe })
+    }
+
+    /// Load `artifacts/NAME.hlo.txt` from the conventional directory.
+    pub fn load_named(&self, dir: &Path, name: &str) -> Result<CompiledArtifact> {
+        self.load(&dir.join(format!("{name}.hlo.txt")))
+    }
+}
+
+impl CompiledArtifact {
+    /// Execute on i32 tensors: `(data, dims)` per argument, returning the
+    /// flattened i32 results of the output tuple.
+    pub fn run_i32(&self, args: &[(&[i32], &[usize])]) -> Result<Vec<Vec<i32>>> {
+        let mut literals = Vec::with_capacity(args.len());
+        for (data, dims) in args {
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims_i64)
+                .map_err(|e| Error::Runtime(format!("reshape: {e}")))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Runtime(format!("execute {}: {e}", self.name)))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch {}: {e}", self.name)))?;
+        let tuple = result
+            .to_tuple()
+            .map_err(|e| Error::Runtime(format!("tuple {}: {e}", self.name)))?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for t in tuple {
+            out.push(
+                t.to_vec::<i32>()
+                    .map_err(|e| Error::Runtime(format!("to_vec {}: {e}", self.name)))?,
+            );
+        }
+        Ok(out)
+    }
+
+    /// Execute on f32 tensors (same contract as [`Self::run_i32`]).
+    pub fn run_f32(&self, args: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(args.len());
+        for (data, dims) in args {
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims_i64)
+                .map_err(|e| Error::Runtime(format!("reshape: {e}")))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Runtime(format!("execute {}: {e}", self.name)))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch {}: {e}", self.name)))?;
+        let tuple = result
+            .to_tuple()
+            .map_err(|e| Error::Runtime(format!("tuple {}: {e}", self.name)))?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for t in tuple {
+            out.push(
+                t.to_vec::<f32>()
+                    .map_err(|e| Error::Runtime(format!("to_vec {}: {e}", self.name)))?,
+            );
+        }
+        Ok(out)
+    }
+}
+
+/// Locate the artifacts directory: `$CONVKIT_ARTIFACTS`, else `./artifacts`,
+/// else the repo-root `artifacts/` relative to the manifest.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("CONVKIT_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let cwd = PathBuf::from(ARTIFACTS_DIR);
+    if cwd.exists() {
+        return cwd;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(ARTIFACTS_DIR)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parses_key_values_and_dims() {
+        let m = ArtifactMeta::parse("name = cnn\ninput_shape = 1,12,12\nnoise\nshift=4\n");
+        assert_eq!(m.get("name"), Some("cnn"));
+        assert_eq!(m.dims("input_shape"), Some(vec![1, 12, 12]));
+        assert_eq!(m.get("shift"), Some("4"));
+        assert_eq!(m.get("missing"), None);
+    }
+
+    #[test]
+    fn artifacts_dir_resolves() {
+        let d = artifacts_dir();
+        assert!(d.ends_with("artifacts"));
+    }
+
+    // PJRT-dependent tests live in rust/tests/integration_runtime.rs, gated on
+    // the artifacts' existence, so `cargo test` works before `make artifacts`.
+}

@@ -1,0 +1,325 @@
+//! Dense matrices and Householder-QR least squares.
+
+use crate::util::error::{Error, Result};
+
+/// Row-major dense matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    /// Number of rows.
+    pub rows: usize,
+    /// Number of columns.
+    pub cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from a row-major slice.
+    pub fn from_rows(rows: usize, cols: usize, data: &[f64]) -> Result<Mat> {
+        if data.len() != rows * cols {
+            return Err(Error::Numerical(format!(
+                "matrix data length {} != {rows}x{cols}",
+                data.len()
+            )));
+        }
+        Ok(Mat { rows, cols, data: data.to_vec() })
+    }
+
+    /// Identity.
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.cols);
+        let mut out = vec![0.0; self.rows];
+        for r in 0..self.rows {
+            let mut acc = 0.0;
+            for c in 0..self.cols {
+                acc += self[(r, c)] * v[c];
+            }
+            out[r] = acc;
+        }
+        out
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t[(c, r)] = self[(r, c)];
+            }
+        }
+        t
+    }
+
+    /// `A^T A` (used for the covariance of the fitted coefficients).
+    pub fn gram(&self) -> Mat {
+        let mut g = Mat::zeros(self.cols, self.cols);
+        for i in 0..self.cols {
+            for j in i..self.cols {
+                let mut acc = 0.0;
+                for r in 0..self.rows {
+                    acc += self[(r, i)] * self[(r, j)];
+                }
+                g[(i, j)] = acc;
+                g[(j, i)] = acc;
+            }
+        }
+        g
+    }
+
+    /// Solve the least-squares problem `min ||A x - b||₂` by Householder QR.
+    /// Requires `rows >= cols`; returns `Err` on rank deficiency.
+    pub fn lstsq(&self, b: &[f64]) -> Result<Vec<f64>> {
+        if b.len() != self.rows {
+            return Err(Error::Numerical(format!(
+                "rhs length {} != rows {}",
+                b.len(),
+                self.rows
+            )));
+        }
+        if self.rows < self.cols {
+            return Err(Error::Numerical(format!(
+                "underdetermined system {}x{}",
+                self.rows, self.cols
+            )));
+        }
+        let mut a = self.clone();
+        let mut y = b.to_vec();
+        let (m, n) = (a.rows, a.cols);
+        let mut v = vec![0.0f64; m]; // reflector scratch
+        // Householder triangularization, applying reflectors to y as we go.
+        for k in 0..n {
+            // Column norm at/below the diagonal.
+            let mut norm = 0.0;
+            for i in k..m {
+                norm += a[(i, k)] * a[(i, k)];
+            }
+            norm = norm.sqrt();
+            if norm < 1e-12 {
+                return Err(Error::Numerical(format!("rank-deficient at column {k}")));
+            }
+            let alpha = if a[(k, k)] >= 0.0 { -norm } else { norm };
+            // v = x - alpha·e1, held in scratch so column k can be updated.
+            v[k] = a[(k, k)] - alpha;
+            let mut vnorm2 = v[k] * v[k];
+            for i in k + 1..m {
+                v[i] = a[(i, k)];
+                vnorm2 += v[i] * v[i];
+            }
+            if vnorm2 < 1e-300 {
+                a[(k, k)] = alpha;
+                continue;
+            }
+            // Apply H = I - 2 v vᵀ / (vᵀ v) to A[:, k..] and to y.
+            for j in k..n {
+                let mut dot = 0.0;
+                for i in k..m {
+                    dot += v[i] * a[(i, j)];
+                }
+                let f = 2.0 * dot / vnorm2;
+                for i in k..m {
+                    a[(i, j)] -= f * v[i];
+                }
+            }
+            let mut dot = 0.0;
+            for i in k..m {
+                dot += v[i] * y[i];
+            }
+            let f = 2.0 * dot / vnorm2;
+            for i in k..m {
+                y[i] -= f * v[i];
+            }
+        }
+        // Back substitution on the triangular system R x = y[..n].
+        let mut x = vec![0.0f64; n];
+        for k in (0..n).rev() {
+            let mut acc = y[k];
+            for j in k + 1..n {
+                acc -= a[(k, j)] * x[j];
+            }
+            let rkk = a[(k, k)];
+            if rkk.abs() < 1e-12 {
+                return Err(Error::Numerical(format!("zero pivot at row {k}")));
+            }
+            x[k] = acc / rkk;
+        }
+        Ok(x)
+    }
+
+    /// Inverse via Gauss-Jordan with partial pivoting (square matrices only).
+    pub fn inverse(&self) -> Result<Mat> {
+        if self.rows != self.cols {
+            return Err(Error::Numerical("inverse of non-square matrix".into()));
+        }
+        let n = self.rows;
+        let mut a = self.clone();
+        let mut inv = Mat::eye(n);
+        for col in 0..n {
+            // Pivot.
+            let mut piv = col;
+            for r in col + 1..n {
+                if a[(r, col)].abs() > a[(piv, col)].abs() {
+                    piv = r;
+                }
+            }
+            if a[(piv, col)].abs() < 1e-12 {
+                return Err(Error::Numerical(format!("singular matrix at column {col}")));
+            }
+            if piv != col {
+                for j in 0..n {
+                    let tmp = a[(col, j)];
+                    a[(col, j)] = a[(piv, j)];
+                    a[(piv, j)] = tmp;
+                    let tmp = inv[(col, j)];
+                    inv[(col, j)] = inv[(piv, j)];
+                    inv[(piv, j)] = tmp;
+                }
+            }
+            let d = a[(col, col)];
+            for j in 0..n {
+                a[(col, j)] /= d;
+                inv[(col, j)] /= d;
+            }
+            for r in 0..n {
+                if r != col {
+                    let f = a[(r, col)];
+                    if f != 0.0 {
+                        for j in 0..n {
+                            a[(r, j)] -= f * a[(col, j)];
+                            inv[(r, j)] -= f * inv[(col, j)];
+                        }
+                    }
+                }
+            }
+        }
+        Ok(inv)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    fn index(&self, (r, c): (usize, usize)) -> &f64 {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f64 {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_and_transpose() {
+        let a = Mat::from_rows(2, 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        assert_eq!(a.matvec(&[1.0, 0.0, -1.0]), vec![-2.0, -2.0]);
+        let t = a.transpose();
+        assert_eq!(t.rows, 3);
+        assert_eq!(t[(0, 1)], 4.0);
+    }
+
+    #[test]
+    fn inverse_of_known_matrix() {
+        let a = Mat::from_rows(2, 2, &[4.0, 7.0, 2.0, 6.0]).unwrap();
+        let inv = a.inverse().unwrap();
+        assert!((inv[(0, 0)] - 0.6).abs() < 1e-12);
+        assert!((inv[(0, 1)] + 0.7).abs() < 1e-12);
+        assert!((inv[(1, 0)] + 0.2).abs() < 1e-12);
+        assert!((inv[(1, 1)] - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverse_rejects_singular() {
+        let a = Mat::from_rows(2, 2, &[1.0, 2.0, 2.0, 4.0]).unwrap();
+        assert!(a.inverse().is_err());
+    }
+
+    #[test]
+    fn lstsq_exact_square_system() {
+        // [2 1; 1 3] x = [5; 10] -> x = [1, 3]
+        let a = Mat::from_rows(2, 2, &[2.0, 1.0, 1.0, 3.0]).unwrap();
+        let x = a.lstsq(&[5.0, 10.0]).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-10, "{x:?}");
+        assert!((x[1] - 3.0).abs() < 1e-10, "{x:?}");
+    }
+
+    #[test]
+    fn lstsq_overdetermined_line_fit() {
+        // Fit y = 2 + 3t through exact points: residual 0.
+        let ts = [0.0, 1.0, 2.0, 3.0, 4.0];
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        for &t in &ts {
+            rows.extend_from_slice(&[1.0, t]);
+            y.push(2.0 + 3.0 * t);
+        }
+        let a = Mat::from_rows(5, 2, &rows).unwrap();
+        let x = a.lstsq(&y).unwrap();
+        assert!((x[0] - 2.0).abs() < 1e-10);
+        assert!((x[1] - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn lstsq_noisy_regression_matches_normal_equations() {
+        // y = 1 + 2a - b with a known perturbation; compare against the
+        // closed-form normal-equation solution computed by inverse().
+        let data = [
+            (1.0, 2.0, 3.1),
+            (2.0, 1.0, 4.2),
+            (3.0, 5.0, 1.9),
+            (4.0, 2.0, 7.3),
+            (5.0, 0.0, 11.2),
+            (6.0, 4.0, 8.8),
+        ];
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        for &(a1, b1, yy) in &data {
+            rows.extend_from_slice(&[1.0, a1, b1]);
+            y.push(yy);
+        }
+        let a = Mat::from_rows(6, 3, &rows).unwrap();
+        let x_qr = a.lstsq(&y).unwrap();
+        // Normal equations: (AᵀA)⁻¹ Aᵀ y.
+        let at = a.transpose();
+        let aty = at.matvec(&y);
+        let x_ne = a.gram().inverse().unwrap().matvec(&aty);
+        for i in 0..3 {
+            assert!((x_qr[i] - x_ne[i]).abs() < 1e-8, "{x_qr:?} vs {x_ne:?}");
+        }
+    }
+
+    #[test]
+    fn lstsq_rejects_rank_deficiency_and_bad_shapes() {
+        let a = Mat::from_rows(3, 2, &[1.0, 2.0, 2.0, 4.0, 3.0, 6.0]).unwrap();
+        assert!(a.lstsq(&[1.0, 2.0, 3.0]).is_err(), "collinear columns");
+        let a = Mat::from_rows(1, 2, &[1.0, 2.0]).unwrap();
+        assert!(a.lstsq(&[1.0]).is_err(), "underdetermined");
+        let a = Mat::from_rows(2, 2, &[1.0, 0.0, 0.0, 1.0]).unwrap();
+        assert!(a.lstsq(&[1.0]).is_err(), "rhs length mismatch");
+    }
+
+    #[test]
+    fn gram_is_symmetric_psd_diagonal() {
+        let a = Mat::from_rows(3, 2, &[1.0, 0.0, 1.0, 1.0, 1.0, 2.0]).unwrap();
+        let g = a.gram();
+        assert_eq!(g[(0, 0)], 3.0);
+        assert_eq!(g[(0, 1)], g[(1, 0)]);
+        assert_eq!(g[(1, 1)], 5.0);
+    }
+}

@@ -1,0 +1,143 @@
+//! The paper's four error metrics (§4.1): EQM (MSE), EAM (MAE), R² and
+//! EAMP (MAPE).
+
+/// Mean squared error.
+pub fn mse(y_true: &[f64], y_pred: &[f64]) -> f64 {
+    assert_eq!(y_true.len(), y_pred.len());
+    if y_true.is_empty() {
+        return 0.0;
+    }
+    y_true
+        .iter()
+        .zip(y_pred)
+        .map(|(t, p)| (t - p) * (t - p))
+        .sum::<f64>()
+        / y_true.len() as f64
+}
+
+/// Mean absolute error.
+pub fn mae(y_true: &[f64], y_pred: &[f64]) -> f64 {
+    assert_eq!(y_true.len(), y_pred.len());
+    if y_true.is_empty() {
+        return 0.0;
+    }
+    y_true.iter().zip(y_pred).map(|(t, p)| (t - p).abs()).sum::<f64>() / y_true.len() as f64
+}
+
+/// Coefficient of determination. 1.0 for a perfect fit; can be negative for a
+/// fit worse than the mean. For constant `y_true` returns 1.0 iff the
+/// predictions are exact (the Conv3 segmented-fit convention: Table 4 reports
+/// R² = 1.00 there).
+pub fn r_squared(y_true: &[f64], y_pred: &[f64]) -> f64 {
+    assert_eq!(y_true.len(), y_pred.len());
+    if y_true.is_empty() {
+        return 1.0;
+    }
+    let mean = y_true.iter().sum::<f64>() / y_true.len() as f64;
+    let ss_tot: f64 = y_true.iter().map(|t| (t - mean) * (t - mean)).sum();
+    let ss_res: f64 = y_true.iter().zip(y_pred).map(|(t, p)| (t - p) * (t - p)).sum();
+    if ss_tot < 1e-300 {
+        return if ss_res < 1e-300 { 1.0 } else { 0.0 };
+    }
+    1.0 - ss_res / ss_tot
+}
+
+/// Mean absolute percentage error, in percent. Zero targets are skipped
+/// (resource counts of zero would otherwise blow up the metric; Vivado-style
+/// reporting does the same).
+pub fn mape(y_true: &[f64], y_pred: &[f64]) -> f64 {
+    assert_eq!(y_true.len(), y_pred.len());
+    let mut acc = 0.0;
+    let mut n = 0usize;
+    for (t, p) in y_true.iter().zip(y_pred) {
+        if t.abs() > 1e-12 {
+            acc += ((t - p) / t).abs();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        100.0 * acc / n as f64
+    }
+}
+
+/// All four metrics bundled (one row of the paper's Table 4).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Metrics {
+    /// EQM.
+    pub mse: f64,
+    /// EAM.
+    pub mae: f64,
+    /// R².
+    pub r2: f64,
+    /// EAMP (%).
+    pub mape: f64,
+}
+
+impl Metrics {
+    /// Compute all four metrics.
+    pub fn of(y_true: &[f64], y_pred: &[f64]) -> Metrics {
+        Metrics {
+            mse: mse(y_true, y_pred),
+            mae: mae(y_true, y_pred),
+            r2: r_squared(y_true, y_pred),
+            mape: mape(y_true, y_pred),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_prediction() {
+        let y = [1.0, 2.0, 3.0];
+        let m = Metrics::of(&y, &y);
+        assert_eq!(m.mse, 0.0);
+        assert_eq!(m.mae, 0.0);
+        assert_eq!(m.r2, 1.0);
+        assert_eq!(m.mape, 0.0);
+    }
+
+    #[test]
+    fn hand_computed_values() {
+        let t = [2.0, 4.0, 6.0];
+        let p = [3.0, 4.0, 5.0];
+        assert!((mse(&t, &p) - 2.0 / 3.0).abs() < 1e-12);
+        assert!((mae(&t, &p) - 2.0 / 3.0).abs() < 1e-12);
+        // ss_tot = 8, ss_res = 2 -> r2 = 0.75
+        assert!((r_squared(&t, &p) - 0.75).abs() < 1e-12);
+        // mape = 100*(1/2 + 0 + 1/6)/3 = 22.22%
+        assert!((mape(&t, &p) - 100.0 * (0.5 + 0.0 + 1.0 / 6.0) / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn r2_constant_target_conventions() {
+        assert_eq!(r_squared(&[5.0, 5.0], &[5.0, 5.0]), 1.0);
+        assert_eq!(r_squared(&[5.0, 5.0], &[4.0, 6.0]), 0.0);
+    }
+
+    #[test]
+    fn r2_worse_than_mean_is_negative() {
+        let t = [1.0, 2.0, 3.0];
+        let p = [3.0, 3.0, -3.0];
+        assert!(r_squared(&t, &p) < 0.0);
+    }
+
+    #[test]
+    fn mape_skips_zero_targets() {
+        let t = [0.0, 2.0];
+        let p = [5.0, 1.0];
+        assert!((mape(&t, &p) - 50.0).abs() < 1e-12);
+        assert_eq!(mape(&[0.0], &[1.0]), 0.0);
+    }
+
+    #[test]
+    fn empty_inputs_are_benign() {
+        let e: [f64; 0] = [];
+        assert_eq!(mse(&e, &e), 0.0);
+        assert_eq!(r_squared(&e, &e), 1.0);
+    }
+}

@@ -1,0 +1,19 @@
+//! Statistics substrate: dense linear algebra, Pearson correlation,
+//! multivariate polynomial least squares, segmented regression and the error
+//! metrics of the paper's §4.1 (EQM/MSE, EAM/MAE, R², EAMP/MAPE).
+//!
+//! Everything is implemented from first principles (the offline environment
+//! has no linear-algebra crates); the QR decomposition is Householder-based
+//! and unit-tested against hand-computed systems.
+
+pub mod linalg;
+pub mod pearson;
+pub mod polyfit;
+pub mod segmented;
+pub mod metrics;
+
+pub use linalg::Mat;
+pub use pearson::pearson;
+pub use polyfit::{PolyModel, PolyTerm};
+pub use segmented::SegmentedModel;
+pub use metrics::{mae, mape, mse, r_squared, Metrics};

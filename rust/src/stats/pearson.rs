@@ -1,0 +1,96 @@
+//! Pearson product-moment correlation (the paper's §3.3 analysis).
+
+/// Pearson correlation of two equal-length samples. Returns 0.0 when either
+/// sample is constant (the paper reports exactly `0.000` for Conv3's
+/// data-width column — a constant-resource sample, same convention).
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len(), "pearson: length mismatch");
+    let n = x.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    let mx = x.iter().sum::<f64>() / nf;
+    let my = y.iter().sum::<f64>() / nf;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for i in 0..n {
+        let dx = x[i] - mx;
+        let dy = y[i] - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx < 1e-300 || syy < 1e-300 {
+        return 0.0;
+    }
+    (sxy / (sxx.sqrt() * syy.sqrt())).clamp(-1.0, 1.0)
+}
+
+/// Pearson over integer samples (the resource counts are integers).
+pub fn pearson_u64(x: &[u64], y: &[u64]) -> f64 {
+    let xf: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+    let yf: Vec<f64> = y.iter().map(|&v| v as f64).collect();
+    pearson(&xf, &yf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_positive_and_negative() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        let yn = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&x, &yn) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant_sample_gives_zero() {
+        let x = [1.0, 2.0, 3.0];
+        let y = [5.0, 5.0, 5.0];
+        assert_eq!(pearson(&x, &y), 0.0);
+        assert_eq!(pearson(&y, &x), 0.0);
+    }
+
+    #[test]
+    fn known_value_hand_computed() {
+        // x = [1,2,3], y = [1,2,4]: r = 0.9819805...
+        let r = pearson(&[1.0, 2.0, 3.0], &[1.0, 2.0, 4.0]);
+        assert!((r - 0.981_980_506_061_965_8).abs() < 1e-12, "{r}");
+    }
+
+    #[test]
+    fn grid_sum_structure_matches_paper_magnitude() {
+        // Over a 14x14 grid, y = d + c has corr ≈ 0.70 with each axis — the
+        // magnitude the paper's Table 3 reports for the linear blocks.
+        let mut d = Vec::new();
+        let mut c = Vec::new();
+        let mut y = Vec::new();
+        for dv in 3..=16 {
+            for cv in 3..=16 {
+                d.push(dv as f64);
+                c.push(cv as f64);
+                y.push((dv + cv) as f64);
+            }
+        }
+        let r = pearson(&d, &y);
+        assert!((r - std::f64::consts::FRAC_1_SQRT_2).abs() < 1e-9, "{r}");
+        assert!((pearson(&c, &y) - r).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uncorrelated_orthogonal_pattern() {
+        let x = [1.0, 1.0, -1.0, -1.0];
+        let y = [1.0, -1.0, 1.0, -1.0];
+        assert!(pearson(&x, &y).abs() < 1e-12);
+    }
+
+    #[test]
+    fn integer_wrapper() {
+        assert!((pearson_u64(&[1, 2, 3], &[10, 20, 30]) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,266 @@
+//! Multivariate polynomial least-squares regression in the two block
+//! parameters (data width `d`, coefficient width `c`).
+//!
+//! A degree-`g` model contains every monomial `d^i · c^j` with `i + j ≤ g`
+//! (the paper fits degrees 1–4, §3.4). The fit also produces per-term
+//! t-statistics from the coefficient covariance, which Algorithm 1's
+//! `SupprimerInsignifiant` step uses to prune terms.
+
+use crate::stats::linalg::Mat;
+use crate::stats::metrics::r_squared;
+use crate::util::error::{Error, Result};
+use std::fmt;
+
+/// One monomial term `coef · d^dx · c^cx`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PolyTerm {
+    /// Exponent of the data width.
+    pub dx: u32,
+    /// Exponent of the coefficient width.
+    pub cx: u32,
+    /// Fitted coefficient.
+    pub coef: f64,
+    /// |t|-statistic of this coefficient (0 when unavailable).
+    pub t_stat: f64,
+}
+
+impl PolyTerm {
+    fn basis(dx: u32, cx: u32) -> PolyTerm {
+        PolyTerm { dx, cx, coef: 0.0, t_stat: 0.0 }
+    }
+
+    /// Evaluate the monomial at `(d, c)` (without the coefficient).
+    pub fn monomial(&self, d: f64, c: f64) -> f64 {
+        d.powi(self.dx as i32) * c.powi(self.cx as i32)
+    }
+}
+
+/// A fitted polynomial model `y ≈ Σ coefᵢ · d^dxᵢ · c^cxᵢ`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolyModel {
+    /// Terms, in graded-lexicographic order.
+    pub terms: Vec<PolyTerm>,
+    /// Total degree requested at fit time.
+    pub degree: u32,
+    /// R² on the training data.
+    pub r2: f64,
+}
+
+/// Graded-lex basis of total degree ≤ `g` in two variables.
+pub fn basis_terms(g: u32) -> Vec<PolyTerm> {
+    let mut t = Vec::new();
+    for total in 0..=g {
+        for dx in (0..=total).rev() {
+            let cx = total - dx;
+            t.push(PolyTerm::basis(dx, cx));
+        }
+    }
+    t
+}
+
+impl PolyModel {
+    /// Least-squares fit of a degree-`g` polynomial to `(d, c, y)` samples.
+    pub fn fit(samples: &[(f64, f64, f64)], degree: u32) -> Result<PolyModel> {
+        let terms = basis_terms(degree);
+        Self::fit_terms(samples, &terms, degree)
+    }
+
+    /// Fit with an explicit term set (used after pruning).
+    pub fn fit_terms(
+        samples: &[(f64, f64, f64)],
+        terms: &[PolyTerm],
+        degree: u32,
+    ) -> Result<PolyModel> {
+        let n = samples.len();
+        let k = terms.len();
+        if n < k {
+            return Err(Error::Numerical(format!(
+                "{n} samples cannot identify {k} polynomial terms"
+            )));
+        }
+        if k == 0 {
+            return Err(Error::Numerical("empty term set".into()));
+        }
+        let mut x = Mat::zeros(n, k);
+        let mut y = Vec::with_capacity(n);
+        for (r, &(d, c, yy)) in samples.iter().enumerate() {
+            for (j, t) in terms.iter().enumerate() {
+                x[(r, j)] = t.monomial(d, c);
+            }
+            y.push(yy);
+        }
+        let beta = x.lstsq(&y)?;
+        // Coefficient covariance: σ² (XᵀX)⁻¹ with σ² = SSR/(n-k).
+        let preds = x.matvec(&beta);
+        let ssr: f64 = y.iter().zip(&preds).map(|(a, b)| (a - b) * (a - b)).sum();
+        let dof = (n - k).max(1) as f64;
+        let sigma2 = ssr / dof;
+        let tstats: Vec<f64> = match x.gram().inverse() {
+            Ok(inv) => (0..k)
+                .map(|j| {
+                    let se = (sigma2 * inv[(j, j)]).sqrt();
+                    if se < 1e-12 {
+                        // Exact fits: a numerically-zero coefficient is
+                        // insignificant even though its standard error is 0.
+                        if beta[j].abs() < 1e-9 {
+                            0.0
+                        } else {
+                            f64::INFINITY
+                        }
+                    } else {
+                        (beta[j] / se).abs()
+                    }
+                })
+                .collect(),
+            Err(_) => vec![0.0; k],
+        };
+        let fitted: Vec<PolyTerm> = terms
+            .iter()
+            .zip(beta.iter().zip(&tstats))
+            .map(|(t, (&coef, &ts))| PolyTerm { dx: t.dx, cx: t.cx, coef, t_stat: ts })
+            .collect();
+        let r2 = r_squared(&y, &preds);
+        Ok(PolyModel { terms: fitted, degree, r2 })
+    }
+
+    /// Evaluate at `(d, c)`.
+    pub fn eval(&self, d: f64, c: f64) -> f64 {
+        self.terms.iter().map(|t| t.coef * t.monomial(d, c)).sum()
+    }
+
+    /// Number of terms.
+    pub fn len(&self) -> usize {
+        self.terms.len()
+    }
+
+    /// True when the model has no terms.
+    pub fn is_empty(&self) -> bool {
+        self.terms.is_empty()
+    }
+
+    /// Return the term set with all |t| < `threshold` terms removed (the
+    /// intercept is always kept — dropping it degrades conditioning and the
+    /// paper's closed forms all carry one).
+    pub fn prune_terms(&self, threshold: f64) -> Vec<PolyTerm> {
+        self.terms
+            .iter()
+            .filter(|t| (t.dx == 0 && t.cx == 0) || t.t_stat >= threshold)
+            .map(|t| PolyTerm::basis(t.dx, t.cx))
+            .collect()
+    }
+
+    /// Render as the paper's equation style, e.g.
+    /// `20.886 + 1.004·d + 1.037·c`.
+    pub fn equation(&self) -> String {
+        let mut parts = Vec::new();
+        for t in &self.terms {
+            let var = match (t.dx, t.cx) {
+                (0, 0) => String::new(),
+                (1, 0) => "·d".into(),
+                (0, 1) => "·c".into(),
+                (i, 0) => format!("·d^{i}"),
+                (0, j) => format!("·c^{j}"),
+                (1, 1) => "·d·c".into(),
+                (i, j) => format!("·d^{i}·c^{j}"),
+            };
+            parts.push(format!("{:.3}{var}", t.coef));
+        }
+        parts.join(" + ").replace("+ -", "- ")
+    }
+}
+
+impl fmt::Display for PolyModel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} (deg {}, R²={:.3})", self.equation(), self.degree, self.r2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid<F: Fn(f64, f64) -> f64>(f: F) -> Vec<(f64, f64, f64)> {
+        let mut s = Vec::new();
+        for d in 3..=16 {
+            for c in 3..=16 {
+                s.push((d as f64, c as f64, f(d as f64, c as f64)));
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn basis_sizes() {
+        assert_eq!(basis_terms(1).len(), 3); // 1, d, c
+        assert_eq!(basis_terms(2).len(), 6);
+        assert_eq!(basis_terms(4).len(), 15);
+    }
+
+    #[test]
+    fn recovers_exact_linear_form() {
+        // The paper's Conv4 closed form.
+        let s = grid(|d, c| 20.886 + 1.004 * d + 1.037 * c);
+        let m = PolyModel::fit(&s, 1).unwrap();
+        assert!((m.eval(8.0, 8.0) - (20.886 + 8.0 * (1.004 + 1.037))).abs() < 1e-9);
+        assert!((m.r2 - 1.0).abs() < 1e-12);
+        let eq = m.equation();
+        assert!(eq.contains("20.886"), "{eq}");
+        assert!(eq.contains("1.004·d"), "{eq}");
+        assert!(eq.contains("1.037·c"), "{eq}");
+    }
+
+    #[test]
+    fn recovers_bilinear_form_at_degree_two() {
+        let s = grid(|d, c| 5.0 + 2.0 * d * c);
+        let m1 = PolyModel::fit(&s, 1).unwrap();
+        let m2 = PolyModel::fit(&s, 2).unwrap();
+        assert!(m2.r2 > m1.r2);
+        assert!((m2.r2 - 1.0).abs() < 1e-12);
+        assert!((m2.eval(10.0, 12.0) - (5.0 + 240.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tstats_flag_irrelevant_terms() {
+        // y depends only on d; the c term should have a tiny t-stat once a
+        // little *uncorrelated* noise is present.
+        let mut s = grid(|d, _| 3.0 + 2.0 * d);
+        let mut rng = crate::util::rng::SplitMix64::new(4242);
+        for p in s.iter_mut() {
+            p.2 += (rng.next_f64() - 0.5) * 0.02;
+        }
+        let m = PolyModel::fit(&s, 1).unwrap();
+        let d_term = m.terms.iter().find(|t| t.dx == 1).unwrap();
+        let c_term = m.terms.iter().find(|t| t.cx == 1).unwrap();
+        assert!(d_term.t_stat > 100.0, "{}", d_term.t_stat);
+        assert!(c_term.t_stat < 2.0, "{}", c_term.t_stat);
+        // Pruning removes the c term, keeps intercept + d.
+        let kept = m.prune_terms(2.0);
+        assert_eq!(kept.len(), 2);
+        assert!(kept.iter().any(|t| t.dx == 0 && t.cx == 0));
+        assert!(kept.iter().any(|t| t.dx == 1 && t.cx == 0));
+    }
+
+    #[test]
+    fn refit_after_prune_keeps_quality() {
+        let s = grid(|d, _| 3.0 + 2.0 * d);
+        let m = PolyModel::fit(&s, 2).unwrap();
+        let kept = m.prune_terms(2.0);
+        let m2 = PolyModel::fit_terms(&s, &kept, 2).unwrap();
+        assert!(m2.r2 > 0.999);
+        assert!(m2.len() < m.len());
+    }
+
+    #[test]
+    fn rejects_underdetermined() {
+        let s = vec![(1.0, 1.0, 1.0), (2.0, 2.0, 2.0)];
+        assert!(PolyModel::fit(&s, 2).is_err());
+    }
+
+    #[test]
+    fn equation_formats_negative_terms() {
+        let s = grid(|d, c| 10.0 - 0.5 * d + 0.25 * c);
+        let m = PolyModel::fit(&s, 1).unwrap();
+        let eq = m.equation();
+        assert!(eq.contains("- 0.500·d"), "{eq}");
+    }
+}

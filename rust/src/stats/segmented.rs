@@ -1,0 +1,244 @@
+//! Segmented (piecewise-linear) regression in one variable.
+//!
+//! Used for `Conv3`, whose resources are staircase functions of the
+//! coefficient width alone (paper §3.4: "une régression segmentée pour
+//! Conv3"; Table 4 reports an exact fit — R² = 1.00, EAMP = 0.00 — which a
+//! piecewise model achieves because the staircase is deterministic).
+//!
+//! The fit is an exact dynamic program over breakpoint placements: for `n`
+//! sorted distinct abscissae and at most `k` segments it minimizes total SSE
+//! in O(n²·k), each segment being an ordinary least-squares line (or constant
+//! when a segment holds a single x).
+
+use crate::stats::metrics::r_squared;
+use crate::util::error::{Error, Result};
+
+/// One fitted segment over `x ∈ [lo, hi]` (inclusive): `y = a + b·x`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Segment {
+    /// Segment lower bound (inclusive).
+    pub lo: f64,
+    /// Segment upper bound (inclusive).
+    pub hi: f64,
+    /// Intercept.
+    pub a: f64,
+    /// Slope.
+    pub b: f64,
+}
+
+/// A piecewise-linear model over one variable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SegmentedModel {
+    /// Segments in increasing-x order, contiguous, covering the fit range.
+    pub segments: Vec<Segment>,
+    /// R² on the training data.
+    pub r2: f64,
+}
+
+fn line_fit(pts: &[(f64, f64)]) -> (f64, f64, f64) {
+    // Returns (a, b, sse). Single-x groups degrade to a constant.
+    let n = pts.len() as f64;
+    let mx = pts.iter().map(|p| p.0).sum::<f64>() / n;
+    let my = pts.iter().map(|p| p.1).sum::<f64>() / n;
+    let sxx: f64 = pts.iter().map(|p| (p.0 - mx) * (p.0 - mx)).sum();
+    let sxy: f64 = pts.iter().map(|p| (p.0 - mx) * (p.1 - my)).sum();
+    let b = if sxx < 1e-12 { 0.0 } else { sxy / sxx };
+    let a = my - b * mx;
+    let sse: f64 = pts.iter().map(|p| (p.1 - a - b * p.0).powi(2)).sum();
+    (a, b, sse)
+}
+
+impl SegmentedModel {
+    /// Fit with at most `max_segments` segments. Points are grouped by
+    /// distinct x (all y for one x belong to one segment).
+    pub fn fit(points: &[(f64, f64)], max_segments: usize) -> Result<SegmentedModel> {
+        if points.is_empty() {
+            return Err(Error::Numerical("segmented fit of empty data".into()));
+        }
+        if max_segments == 0 {
+            return Err(Error::Numerical("need at least one segment".into()));
+        }
+        // Group by distinct x, sorted.
+        let mut pts = points.to_vec();
+        pts.sort_by(|p, q| p.0.partial_cmp(&q.0).unwrap());
+        let mut groups: Vec<Vec<(f64, f64)>> = Vec::new();
+        for p in pts {
+            match groups.last_mut() {
+                Some(g) if (g[0].0 - p.0).abs() < 1e-12 => g.push(p),
+                _ => groups.push(vec![p]),
+            }
+        }
+        let n = groups.len();
+        let k = max_segments.min(n);
+        // cost[i][j] = SSE of one line over groups i..=j (precomputed).
+        let mut cost = vec![vec![0.0f64; n]; n];
+        let mut seg_ab = vec![vec![(0.0f64, 0.0f64); n]; n];
+        for i in 0..n {
+            for j in i..n {
+                let flat: Vec<(f64, f64)> =
+                    groups[i..=j].iter().flatten().copied().collect();
+                let (a, b, sse) = line_fit(&flat);
+                cost[i][j] = sse;
+                seg_ab[i][j] = (a, b);
+            }
+        }
+        // DP over number of segments.
+        let inf = f64::INFINITY;
+        let mut dp = vec![vec![inf; n + 1]; k + 1]; // dp[s][j] = best SSE for first j groups with s segments
+        let mut back = vec![vec![0usize; n + 1]; k + 1];
+        dp[0][0] = 0.0;
+        for s in 1..=k {
+            for j in 1..=n {
+                for i in s - 1..j {
+                    let cand = dp[s - 1][i] + cost[i][j - 1];
+                    if cand < dp[s][j] {
+                        dp[s][j] = cand;
+                        back[s][j] = i;
+                    }
+                }
+            }
+        }
+        // Pick the smallest segment count whose SSE is within 1e-9 of the
+        // best achievable with k segments (parsimony), then reconstruct.
+        let best_sse = dp[k][n];
+        let mut s_used = k;
+        for s in 1..=k {
+            if dp[s][n] <= best_sse + 1e-9 {
+                s_used = s;
+                break;
+            }
+        }
+        let mut bounds = Vec::new();
+        let mut j = n;
+        let mut s = s_used;
+        while s > 0 {
+            let i = back[s][j];
+            bounds.push((i, j - 1));
+            j = i;
+            s -= 1;
+        }
+        bounds.reverse();
+        let segments: Vec<Segment> = bounds
+            .iter()
+            .map(|&(i, j)| {
+                let (a, b) = seg_ab[i][j];
+                Segment { lo: groups[i][0].0, hi: groups[j][0].0, a, b }
+            })
+            .collect();
+        // R² over the raw points.
+        let model = SegmentedModel { segments, r2: 0.0 };
+        let (yt, yp): (Vec<f64>, Vec<f64>) =
+            points.iter().map(|&(x, y)| (y, model.eval(x))).unzip();
+        let r2 = r_squared(&yt, &yp);
+        Ok(SegmentedModel { r2, ..model })
+    }
+
+    /// Evaluate: x below/above the fit range clamps to the first/last segment.
+    pub fn eval(&self, x: f64) -> f64 {
+        let seg = self
+            .segments
+            .iter()
+            .find(|s| x >= s.lo - 1e-12 && x <= s.hi + 1e-12)
+            .unwrap_or_else(|| {
+                if x < self.segments[0].lo {
+                    &self.segments[0]
+                } else {
+                    self.segments.last().unwrap()
+                }
+            });
+        seg.a + seg.b * x
+    }
+
+    /// Number of segments.
+    pub fn len(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// True when no segments exist (cannot happen for a successful fit).
+    pub fn is_empty(&self) -> bool {
+        self.segments.is_empty()
+    }
+
+    /// Human-readable description.
+    pub fn describe(&self) -> String {
+        self.segments
+            .iter()
+            .map(|s| format!("[{:.0},{:.0}]: {:.3}{:+.3}·c", s.lo, s.hi, s.a, s.b))
+            .collect::<Vec<_>>()
+            .join("  ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_staircase_fits_perfectly() {
+        // A 3-level staircase like Conv3's correction logic.
+        let pts: Vec<(f64, f64)> = (3..=16)
+            .map(|c| {
+                let y = if c <= 6 {
+                    10.0
+                } else if c <= 11 {
+                    14.0
+                } else {
+                    19.0
+                };
+                (c as f64, y)
+            })
+            .collect();
+        let m = SegmentedModel::fit(&pts, 6).unwrap();
+        assert!((m.r2 - 1.0).abs() < 1e-12, "r2={}", m.r2);
+        for &(x, y) in &pts {
+            assert!((m.eval(x) - y).abs() < 1e-9);
+        }
+        assert!(m.len() <= 3, "parsimony: {} segments", m.len());
+    }
+
+    #[test]
+    fn single_line_data_uses_one_segment() {
+        let pts: Vec<(f64, f64)> = (0..10).map(|i| (i as f64, 2.0 + 3.0 * i as f64)).collect();
+        let m = SegmentedModel::fit(&pts, 4).unwrap();
+        assert_eq!(m.len(), 1);
+        assert!((m.segments[0].b - 3.0).abs() < 1e-9);
+        assert!((m.r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn two_slope_elbow() {
+        // y = x for x<=5, y = 5 + 3(x-5) for x>5.
+        let pts: Vec<(f64, f64)> = (0..=10)
+            .map(|i| {
+                let x = i as f64;
+                (x, if x <= 5.0 { x } else { 5.0 + 3.0 * (x - 5.0) })
+            })
+            .collect();
+        let m = SegmentedModel::fit(&pts, 3).unwrap();
+        assert!((m.r2 - 1.0).abs() < 1e-12);
+        assert!(m.len() == 2, "{}", m.describe());
+        assert!((m.eval(2.0) - 2.0).abs() < 1e-9);
+        assert!((m.eval(9.0) - 17.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eval_clamps_outside_range() {
+        let pts: Vec<(f64, f64)> = (3..=6).map(|i| (i as f64, 7.0)).collect();
+        let m = SegmentedModel::fit(&pts, 2).unwrap();
+        assert!((m.eval(0.0) - 7.0).abs() < 1e-9);
+        assert!((m.eval(100.0) - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn duplicate_x_points_grouped() {
+        let pts = vec![(1.0, 2.0), (1.0, 2.0), (2.0, 4.0), (3.0, 6.0)];
+        let m = SegmentedModel::fit(&pts, 3).unwrap();
+        assert!((m.eval(2.0) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_empty_and_zero_segments() {
+        assert!(SegmentedModel::fit(&[], 2).is_err());
+        assert!(SegmentedModel::fit(&[(1.0, 1.0)], 0).is_err());
+    }
+}

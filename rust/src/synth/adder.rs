@@ -1,0 +1,210 @@
+//! Adder generators: carry-chain ripple adders and balanced adder trees.
+//!
+//! Synthesis inference rules modelled (Vivado `opt_design` equivalents are in
+//! `mapper`):
+//! * a `w`-bit add maps to `w` LUTs (the per-bit propagate/generate functions)
+//!   feeding `ceil(w/8)` CARRY8 segments — UG574's standard mapping;
+//! * adder trees are built balanced, widening by one bit per level, exactly as
+//!   a synthesizer rebalances a 9-operand sum.
+
+use crate::netlist::{Bus, Net, NetlistBuilder};
+
+/// Result of elaborating an adder: the sum bus and its carry-out.
+pub struct AdderOut {
+    /// Sum bits (width = max(a, b) widths, plus one if `grow`).
+    pub sum: Bus,
+    /// Final carry-out net.
+    pub cout: Net,
+}
+
+/// Elaborate a two-operand adder over buses `a` and `b` (widths may differ;
+/// the narrower operand is implicitly sign-extended, which costs nothing in
+/// LUTs because the extension bit reuses the MSB net). If `grow` is set the
+/// sum is one bit wider than the widest input (no-overflow add).
+pub fn add(b: &mut NetlistBuilder, label: &str, x: &[Net], y: &[Net], grow: bool) -> AdderOut {
+    assert!(!x.is_empty() && !y.is_empty(), "adder with empty operand: {label}");
+    b.push_scope(label);
+    let w = x.len().max(y.len()) + usize::from(grow);
+    // Per-bit P/G LUTs: each bit needs one LUT computing propagate (and the
+    // carry chain derives generate from the DI input).
+    let mut pg: Vec<Net> = Vec::with_capacity(2 * w);
+    for i in 0..w {
+        let xi = *x.get(i).unwrap_or(x.last().unwrap()); // sign-extend
+        let yi = *y.get(i).unwrap_or(y.last().unwrap());
+        // Shared static leaf: per-bit indices carried by the cell index in
+        // reports/emission (perf: a format!() per bit dominated elaboration).
+        let p = b.lut("pg", &[xi, yi]);
+        // DI input of the chain takes one of the operands directly: no LUT.
+        pg.push(p);
+        pg.push(xi);
+    }
+    // Chain CARRY8 segments.
+    let mut sum: Bus = Vec::with_capacity(w);
+    let mut cin: Option<Net> = None;
+    for (seg, chunk) in pg.chunks(16).enumerate() {
+        let (s, co) = b.carry8(&format!("cc[{seg}]"), chunk, cin);
+        let bits = chunk.len() / 2;
+        sum.extend_from_slice(&s[..bits]);
+        cin = Some(co);
+    }
+    b.pop_scope();
+    AdderOut { sum, cout: cin.expect("at least one CARRY8") }
+}
+
+/// Registered adder: adds and registers the sum (pipelined accumulator stage).
+pub fn add_reg(b: &mut NetlistBuilder, label: &str, x: &[Net], y: &[Net], grow: bool) -> Bus {
+    let out = add(b, label, x, y, grow);
+    b.push_scope(label);
+    let q = b.fdre_bus("sum_reg", &out.sum);
+    b.pop_scope();
+    q
+}
+
+/// Balanced adder tree over `operands` (all buses, possibly different widths).
+/// Each level pairs operands with growing width; the classic reduction a
+/// synthesizer produces for `y = a0 + a1 + ... + an`.
+pub fn adder_tree(b: &mut NetlistBuilder, label: &str, operands: &[Bus]) -> Bus {
+    assert!(!operands.is_empty(), "adder tree needs operands: {label}");
+    b.push_scope(label);
+    let mut level: Vec<Bus> = operands.to_vec();
+    let mut lvl = 0usize;
+    while level.len() > 1 {
+        let mut next: Vec<Bus> = Vec::with_capacity(level.len().div_ceil(2));
+        let mut it = level.chunks(2);
+        let mut idx = 0usize;
+        for pair in it.by_ref() {
+            match pair {
+                [a, c] => {
+                    let out = add(b, &format!("l{lvl}_a{idx}"), a, c, true);
+                    next.push(out.sum);
+                }
+                [a] => next.push(a.clone()),
+                _ => unreachable!(),
+            }
+            idx += 1;
+        }
+        level = next;
+        lvl += 1;
+    }
+    b.pop_scope();
+    level.pop().unwrap()
+}
+
+/// Expected LUT cost of a two-operand `w`-bit add (used by sizing tests and
+/// the analytical roofline in EXPERIMENTS.md).
+pub fn adder_lut_cost(w: usize) -> u64 {
+    w as u64
+}
+
+/// Expected CARRY8 cost of a `w`-bit add.
+pub fn adder_cchain_cost(w: usize) -> u64 {
+    w.div_ceil(8) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::PrimitiveClass;
+
+    fn count(b: NetlistBuilder) -> (u64, u64, u64) {
+        let n = b.finish();
+        n.validate().unwrap();
+        let s = n.stats();
+        (
+            s.count(PrimitiveClass::LogicLut),
+            s.count(PrimitiveClass::CarryChain),
+            s.count(PrimitiveClass::FlipFlop),
+        )
+    }
+
+    #[test]
+    fn eight_bit_add_is_one_carry8() {
+        let mut b = NetlistBuilder::new("t");
+        let x = b.top_input_bus(8);
+        let y = b.top_input_bus(8);
+        let out = add(&mut b, "a", &x, &y, false);
+        assert_eq!(out.sum.len(), 8);
+        let (lut, cc, _) = count(b);
+        assert_eq!(lut, 8);
+        assert_eq!(cc, 1);
+    }
+
+    #[test]
+    fn nine_bit_add_spills_to_second_carry8() {
+        let mut b = NetlistBuilder::new("t");
+        let x = b.top_input_bus(9);
+        let y = b.top_input_bus(9);
+        let _ = add(&mut b, "a", &x, &y, false);
+        let (lut, cc, _) = count(b);
+        assert_eq!(lut, 9);
+        assert_eq!(cc, 2);
+    }
+
+    #[test]
+    fn grow_widens_by_one() {
+        let mut b = NetlistBuilder::new("t");
+        let x = b.top_input_bus(8);
+        let y = b.top_input_bus(8);
+        let out = add(&mut b, "a", &x, &y, true);
+        assert_eq!(out.sum.len(), 9);
+    }
+
+    #[test]
+    fn mixed_width_sign_extends() {
+        let mut b = NetlistBuilder::new("t");
+        let x = b.top_input_bus(8);
+        let y = b.top_input_bus(4);
+        let out = add(&mut b, "a", &x, &y, false);
+        assert_eq!(out.sum.len(), 8);
+        let (lut, _, _) = count(b);
+        assert_eq!(lut, 8, "extension reuses MSB net, still one LUT per bit");
+    }
+
+    #[test]
+    fn add_reg_registers_full_width() {
+        let mut b = NetlistBuilder::new("t");
+        let x = b.top_input_bus(8);
+        let y = b.top_input_bus(8);
+        let q = add_reg(&mut b, "a", &x, &y, true);
+        assert_eq!(q.len(), 9);
+        let (_, _, ff) = count(b);
+        assert_eq!(ff, 9);
+    }
+
+    #[test]
+    fn tree_of_nine_operands_has_eight_adds() {
+        let mut b = NetlistBuilder::new("t");
+        let ops: Vec<_> = (0..9).map(|_| b.top_input_bus(16)).collect();
+        let sum = adder_tree(&mut b, "tree", &ops);
+        // 9 operands -> 8 two-input adds; widths grow log2(9) ≈ 4 levels.
+        assert!(sum.len() >= 16 + 4);
+        let n = b.finish();
+        n.validate().unwrap();
+        // 8 adders, each >= 16 LUTs.
+        assert!(n.stats().count(PrimitiveClass::LogicLut) >= 8 * 16);
+    }
+
+    #[test]
+    fn tree_of_one_is_identity() {
+        let mut b = NetlistBuilder::new("t");
+        let ops = vec![b.top_input_bus(5)];
+        let sum = adder_tree(&mut b, "tree", &ops);
+        assert_eq!(sum.len(), 5);
+        let n = b.finish();
+        assert_eq!(n.stats().total_cells, 0);
+    }
+
+    #[test]
+    fn cost_helpers_match_elaboration() {
+        for w in [3usize, 8, 9, 16, 17, 24] {
+            let mut b = NetlistBuilder::new("t");
+            let x = b.top_input_bus(w);
+            let y = b.top_input_bus(w);
+            let _ = add(&mut b, "a", &x, &y, false);
+            let n = b.finish();
+            let s = n.stats();
+            assert_eq!(s.count(PrimitiveClass::LogicLut), adder_lut_cost(w), "w={w}");
+            assert_eq!(s.count(PrimitiveClass::CarryChain), adder_cchain_cost(w), "w={w}");
+        }
+    }
+}

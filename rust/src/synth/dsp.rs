@@ -1,0 +1,163 @@
+//! DSP48E2 datapath generators.
+//!
+//! * [`dsp_mac`] — the plain inference for a sequential multiply-accumulate:
+//!   one DSP48E2 in `A*B+P` mode, operands registered inside the slice (the
+//!   A/B/P pipeline registers are *hard* registers — they cost no fabric FFs,
+//!   which is why the paper measures `corr(FF, data width) = 0.000` for
+//!   `Conv2`/`Conv4`: all data-width-dependent state lives inside the DSP).
+//! * [`dsp_packed_mac`] — the INT8 two-lanes-in-one-DSP trick used by `Conv3`
+//!   (Xilinx WP487): two 8-bit data lanes packed into the 27-bit A:D
+//!   pre-adder path share one multiplier against a common coefficient; the
+//!   cross-lane contamination is removed by a fabric *correction* stage whose
+//!   size depends only on the coefficient width (one guard-fix LUT per
+//!   coefficient bit pair + a step at each 4-bit alignment boundary) — the
+//!   structural origin of the paper's segmented `Conv3` model and its
+//!   `corr(LLUT, data width) = 0.000` row.
+
+use crate::netlist::{Bus, Net, NetlistBuilder};
+
+/// Plain DSP MAC: multiplies `a` (≤27b) by `b_port` (≤18b), accumulating in P.
+/// Returns the P bus. No fabric cost besides the slice itself.
+pub fn dsp_mac(b: &mut NetlistBuilder, label: &str, a: &[Net], b_port: &[Net]) -> Bus {
+    assert!(a.len() <= 27 && b_port.len() <= 18, "dsp_mac port widths: {label}");
+    b.dsp48e2(label, a, b_port, &[], &[])
+}
+
+/// Packed dual-lane DSP MAC (the WP487 INT8 trick).
+///
+/// `lane0` and `lane1` are the two data operands (each ≤ 8 bits — the packing
+/// headroom of the 27-bit port with guard bits); `coeff` is the shared
+/// coefficient (≤ 18-c bits of headroom). Fabric cost:
+///   * lane packing: `lane1` is shifted into the high half of A via the D-port
+///     pre-adder — free;
+///   * sign-guard preparation: 2 LUTs (lane-1 sign into the guard band);
+///   * correction stage: the high product lane accumulates `lane0`'s sign
+///     extension crossed with the coefficient; repairing it costs
+///     `2 + ceil(c/2)` LUTs plus one extra LUT at each 4-bit boundary of `c`
+///     (the guard-bit carry look-ahead splits there), i.e. a *staircase in c*,
+///     independent of the data width.
+///
+/// Returns (lane0 product bus, lane1 product bus).
+pub fn dsp_packed_mac(
+    b: &mut NetlistBuilder,
+    label: &str,
+    lane0: &[Net],
+    lane1: &[Net],
+    coeff: &[Net],
+) -> (Bus, Bus) {
+    assert!(lane0.len() <= 8 && lane1.len() <= 8, "packed lanes are ≤ 8 bits: {label}");
+    let c = coeff.len();
+    b.push_scope(label);
+    // Guard preparation: 2 LUTs folding lane-1 sign into the guard band.
+    let g0 = b.lut("guard0", &[*lane1.last().unwrap()]);
+    let g1 = b.lut("guard1", &[*lane1.last().unwrap(), *lane0.last().unwrap()]);
+    // The packed A:D operand: 8 (lane0) + 2 guard + 8 (lane1) ≤ 27 bits.
+    let mut packed: Vec<Net> = Vec::with_capacity(18);
+    packed.extend_from_slice(lane0);
+    packed.push(g0);
+    packed.push(g1);
+    packed.extend_from_slice(lane1);
+    let p = b.dsp48e2("slice", &packed, coeff, &[], &[]);
+    // Correction stage for the high lane: a byte-lane staircase in the
+    // coefficient width — one 4-LUT borrow-fix group per 8-bit coefficient
+    // lane (the INT8 boundary: beyond 8 bits the product tail crosses into a
+    // second byte lane and needs a second fix group). This is the coarse
+    // step the paper's segmented Conv3 model captures (corr ≈ 0.5 with c).
+    let n_fix = 4 + 4 * c.div_ceil(8);
+    let mut hi_fixed: Bus = Vec::new();
+    for k in 0..n_fix {
+        let i0 = 16 + (k % 16);
+        let fix = b.lut("fix", &[p[i0], p[(i0 + 1).min(47)], g1]);
+        hi_fixed.push(fix);
+    }
+    // Lane extraction: low lane is P[0..8+c], high lane is the fixed bits plus
+    // raw P tail.
+    let lo: Bus = p[..(8 + c).min(16)].to_vec();
+    b.pop_scope();
+    (lo, hi_fixed)
+}
+
+/// Analytical LLUT cost of the packed-MAC correction stage (must stay in sync
+/// with `dsp_packed_mac`; checked by a test). A byte-lane staircase in `c`.
+pub fn packed_correction_luts(c: usize) -> u64 {
+    (2 + 4 + 4 * c.div_ceil(8)) as u64 // 2 guard + fix groups per byte lane
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::{NetlistBuilder, PrimitiveClass};
+
+    #[test]
+    fn dsp_mac_costs_one_slice_no_fabric() {
+        let mut b = NetlistBuilder::new("t");
+        let a = b.top_input_bus(16);
+        let bb = b.top_input_bus(16);
+        let p = dsp_mac(&mut b, "m", &a, &bb);
+        assert_eq!(p.len(), 48);
+        let n = b.finish();
+        n.validate().unwrap();
+        assert_eq!(n.stats().count(PrimitiveClass::Dsp), 1);
+        assert_eq!(n.stats().count(PrimitiveClass::LogicLut), 0);
+        assert_eq!(n.stats().count(PrimitiveClass::FlipFlop), 0);
+    }
+
+    #[test]
+    fn packed_mac_cost_independent_of_data_width() {
+        let cost = |d: usize, c: usize| {
+            let mut b = NetlistBuilder::new("t");
+            let l0 = b.top_input_bus(d);
+            let l1 = b.top_input_bus(d);
+            let co = b.top_input_bus(c);
+            let _ = dsp_packed_mac(&mut b, "pm", &l0, &l1, &co);
+            let n = b.finish();
+            n.validate().unwrap();
+            n.stats().count(PrimitiveClass::LogicLut)
+        };
+        assert_eq!(cost(3, 8), cost(8, 8), "LLUT must not depend on lane width");
+        assert_eq!(cost(4, 11), cost(7, 11));
+    }
+
+    #[test]
+    fn packed_mac_staircase_in_coeff_width() {
+        let cost = |c: usize| {
+            let mut b = NetlistBuilder::new("t");
+            let l0 = b.top_input_bus(8);
+            let l1 = b.top_input_bus(8);
+            let co = b.top_input_bus(c);
+            let _ = dsp_packed_mac(&mut b, "pm", &l0, &l1, &co);
+            b.finish().stats().count(PrimitiveClass::LogicLut)
+        };
+        // Monotone staircase: flat on some steps, jumps on others.
+        let costs: Vec<u64> = (3..=16).map(cost).collect();
+        assert!(costs.windows(2).all(|w| w[0] <= w[1]), "monotone: {costs:?}");
+        assert!(costs.windows(2).any(|w| w[0] == w[1]), "has flats: {costs:?}");
+        assert!(costs.windows(2).any(|w| w[0] < w[1]), "has jumps: {costs:?}");
+        // Matches the analytical formula used by the segmented-model tests.
+        for (i, c) in (3..=16).enumerate() {
+            assert_eq!(costs[i], packed_correction_luts(c), "c={c}");
+        }
+    }
+
+    #[test]
+    fn packed_mac_uses_single_dsp() {
+        let mut b = NetlistBuilder::new("t");
+        let l0 = b.top_input_bus(8);
+        let l1 = b.top_input_bus(8);
+        let co = b.top_input_bus(8);
+        let (lo, hi) = dsp_packed_mac(&mut b, "pm", &l0, &l1, &co);
+        assert!(!lo.is_empty() && !hi.is_empty());
+        let n = b.finish();
+        assert_eq!(n.stats().count(PrimitiveClass::Dsp), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "packed lanes")]
+    fn packed_mac_rejects_wide_lanes() {
+        let mut b = NetlistBuilder::new("t");
+        let l0 = b.top_input_bus(9);
+        let l1 = b.top_input_bus(8);
+        let co = b.top_input_bus(8);
+        let _ = dsp_packed_mac(&mut b, "pm", &l0, &l1, &co);
+    }
+}

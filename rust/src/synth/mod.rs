@@ -1,0 +1,196 @@
+//! The synthesis simulator: RTL-level structure generators + an UltraScale+
+//! technology mapper.
+//!
+//! This module substitutes for Vivado 2024.2 in the paper's methodology
+//! (DESIGN.md §2). Generators ([`adder`], [`multiplier`], [`storage`],
+//! [`control`], [`dsp`]) elaborate word-level structures into
+//! [`crate::netlist`] primitives exactly the way a synthesizer's inference
+//! engine would (carry chains for adds, SRLs for serial stores, DSP48E2 for
+//! MACs). The [`mapper`] then applies LUT packing and a deterministic
+//! per-design optimizer jitter, producing the [`ResourceVector`] a Vivado
+//! utilization report would show.
+
+pub mod adder;
+pub mod multiplier;
+pub mod storage;
+pub mod control;
+pub mod dsp;
+pub mod mapper;
+pub mod timing;
+
+pub use mapper::{map_netlist, MapOptions};
+
+use std::fmt;
+use std::ops::{Add, AddAssign};
+
+/// The five resources the paper measures, as one utilization vector.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ResourceVector {
+    /// LUTs used as combinational logic.
+    pub llut: u64,
+    /// LUTs used as memory (SRL, distributed RAM) in LUT-site units.
+    pub mlut: u64,
+    /// Flip-flops.
+    pub ff: u64,
+    /// CARRY8 carry-chain segments.
+    pub cchain: u64,
+    /// DSP48E2 slices.
+    pub dsp: u64,
+}
+
+impl ResourceVector {
+    /// Construct from explicit counts.
+    pub fn new(llut: u64, mlut: u64, ff: u64, cchain: u64, dsp: u64) -> Self {
+        ResourceVector { llut, mlut, ff, cchain, dsp }
+    }
+
+    /// Component access by the paper's resource name.
+    pub fn get(&self, resource: Resource) -> u64 {
+        match resource {
+            Resource::Llut => self.llut,
+            Resource::Mlut => self.mlut,
+            Resource::Ff => self.ff,
+            Resource::CChain => self.cchain,
+            Resource::Dsp => self.dsp,
+        }
+    }
+
+    /// Scale by an integer block count (allocation studies).
+    pub fn scaled(&self, n: u64) -> ResourceVector {
+        ResourceVector {
+            llut: self.llut * n,
+            mlut: self.mlut * n,
+            ff: self.ff * n,
+            cchain: self.cchain * n,
+            dsp: self.dsp * n,
+        }
+    }
+
+    /// True iff every component of `self` fits within `budget`.
+    pub fn fits_within(&self, budget: &ResourceVector) -> bool {
+        self.llut <= budget.llut
+            && self.mlut <= budget.mlut
+            && self.ff <= budget.ff
+            && self.cchain <= budget.cchain
+            && self.dsp <= budget.dsp
+    }
+}
+
+impl Add for ResourceVector {
+    type Output = ResourceVector;
+    fn add(self, o: ResourceVector) -> ResourceVector {
+        ResourceVector {
+            llut: self.llut + o.llut,
+            mlut: self.mlut + o.mlut,
+            ff: self.ff + o.ff,
+            cchain: self.cchain + o.cchain,
+            dsp: self.dsp + o.dsp,
+        }
+    }
+}
+
+impl AddAssign for ResourceVector {
+    fn add_assign(&mut self, o: ResourceVector) {
+        *self = *self + o;
+    }
+}
+
+impl fmt::Display for ResourceVector {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "LLUT={} MLUT={} FF={} CChain={} DSP={}",
+            self.llut, self.mlut, self.ff, self.cchain, self.dsp
+        )
+    }
+}
+
+/// The paper's measured resource kinds (column order of its tables).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Resource {
+    Llut,
+    Mlut,
+    Ff,
+    CChain,
+    Dsp,
+}
+
+impl Resource {
+    /// All resources in the paper's reporting order.
+    pub const ALL: [Resource; 5] =
+        [Resource::Llut, Resource::Mlut, Resource::Ff, Resource::CChain, Resource::Dsp];
+
+    /// Paper-facing name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Resource::Llut => "LLUT",
+            Resource::Mlut => "MLUT",
+            Resource::Ff => "FF",
+            Resource::CChain => "CChain",
+            Resource::Dsp => "DSP",
+        }
+    }
+
+    /// Parse a paper-facing name (case-insensitive).
+    pub fn parse(s: &str) -> Option<Resource> {
+        match s.to_ascii_lowercase().as_str() {
+            "llut" | "lut" => Some(Resource::Llut),
+            "mlut" => Some(Resource::Mlut),
+            "ff" => Some(Resource::Ff),
+            "cchain" | "carry" | "carry8" => Some(Resource::CChain),
+            "dsp" => Some(Resource::Dsp),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vector_algebra() {
+        let a = ResourceVector::new(1, 2, 3, 4, 5);
+        let b = ResourceVector::new(10, 20, 30, 40, 50);
+        assert_eq!(a + b, ResourceVector::new(11, 22, 33, 44, 55));
+        assert_eq!(a.scaled(3), ResourceVector::new(3, 6, 9, 12, 15));
+        let mut c = a;
+        c += b;
+        assert_eq!(c, a + b);
+    }
+
+    #[test]
+    fn fits_within_is_componentwise() {
+        let budget = ResourceVector::new(10, 10, 10, 10, 10);
+        assert!(ResourceVector::new(10, 0, 0, 0, 0).fits_within(&budget));
+        assert!(!ResourceVector::new(11, 0, 0, 0, 0).fits_within(&budget));
+        assert!(!ResourceVector::new(0, 0, 0, 0, 11).fits_within(&budget));
+    }
+
+    #[test]
+    fn resource_names_roundtrip() {
+        for r in Resource::ALL {
+            assert_eq!(Resource::parse(r.name()), Some(r));
+        }
+        assert_eq!(Resource::parse("carry8"), Some(Resource::CChain));
+        assert_eq!(Resource::parse("bogus"), None);
+    }
+
+    #[test]
+    fn get_matches_fields() {
+        let v = ResourceVector::new(1, 2, 3, 4, 5);
+        assert_eq!(v.get(Resource::Llut), 1);
+        assert_eq!(v.get(Resource::Mlut), 2);
+        assert_eq!(v.get(Resource::Ff), 3);
+        assert_eq!(v.get(Resource::CChain), 4);
+        assert_eq!(v.get(Resource::Dsp), 5);
+    }
+
+    #[test]
+    fn display_contains_all_fields() {
+        let s = ResourceVector::new(1, 2, 3, 4, 5).to_string();
+        for part in ["LLUT=1", "MLUT=2", "FF=3", "CChain=4", "DSP=5"] {
+            assert!(s.contains(part));
+        }
+    }
+}

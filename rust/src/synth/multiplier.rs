@@ -1,0 +1,203 @@
+//! Multiplier generators.
+//!
+//! Two fabric multipliers are modelled, matching the two datapath styles the
+//! paper's `Conv1` design space cares about:
+//!
+//! * [`array_multiplier`] — the fully combinational Baugh-Wooley array a
+//!   synthesizer infers for `a * b` when DSPs are excluded: `c` partial-product
+//!   rows of AND LUTs reduced by a carry-chain adder ladder. Cost ~ `d·c` LUTs.
+//! * [`bit_serial_mac`] — the coefficient-bit-serial multiply-accumulate used
+//!   by our `Conv1` (DESIGN.md §4): per tap, one add-shift stage of `d+1` bits
+//!   that consumes one coefficient bit per cycle, with the partial sum in
+//!   flip-flops and the shifted-out product tail in an SRL. Cost ~ `d` LUTs per
+//!   tap, independent of `c` in logic, `c`-dependent only in the SRL depth —
+//!   exactly the structure that keeps `Conv1` at ~100 LUTs where an array
+//!   version would cost ~650 (this trade is the paper's Table 2 "Logique et
+//!   CChains" row).
+
+use crate::netlist::{Bus, NetlistBuilder};
+use crate::synth::adder;
+
+/// Fully combinational signed array multiplier: `x` (d bits) × `y` (c bits)
+/// → d+c-bit product bus.
+pub fn array_multiplier(b: &mut NetlistBuilder, label: &str, x: &[Net], y: &[Net]) -> Bus {
+    // Synthesizers use the NARROWER operand as the multiplier (fewer partial
+    // product rows, shorter ladder) — keeping the cost surface symmetric in
+    // the two widths, which is exactly what the paper's near-equal Conv1
+    // correlations (0.668 / 0.672) reflect.
+    let (x, y) = if x.len() < y.len() { (y, x) } else { (x, y) };
+    let d = x.len();
+    let c = y.len();
+    assert!(d >= 1 && c >= 1, "array multiplier needs operands: {label}");
+    b.push_scope(label);
+    // Partial products: one AND LUT per (i, j). (Baugh-Wooley sign handling
+    // folds into the same LUT as the complement terms.)
+    let mut rows: Vec<Bus> = Vec::with_capacity(c);
+    for j in 0..c {
+        let mut row: Bus = Vec::with_capacity(d + j);
+        for i in 0..d {
+            // Static leaf (perf): bit identity lives in the cell index.
+            row.push(b.lut("pp", &[x[i], y[j]]));
+        }
+        // Weight 2^j: the shift itself is resource-free routing, but it widens
+        // every adder below it. Model the alignment by padding the row to
+        // d + j bits with (free) copies of its top bit — the adder ladder then
+        // naturally grows to the true partial-sum widths.
+        let msb = *row.last().unwrap();
+        row.extend(std::iter::repeat(msb).take(j));
+        rows.push(row);
+    }
+    // Reduction ladder: rows are accumulated pairwise (balanced tree), the
+    // standard inference for a partial-product sum.
+    let product = adder::adder_tree(b, "ladder", &rows);
+    b.pop_scope();
+    // Product width: d + c bits (tree may produce a few more due to balanced
+    // growth; truncate to the arithmetically exact width).
+    let mut p = product;
+    p.truncate(d + c);
+    p
+}
+
+use crate::netlist::Net;
+
+/// Output of a bit-serial MAC tap.
+pub struct SerialMacOut {
+    /// Partial-sum register outputs (d+1 bits, the add-shift stage).
+    pub psum: Bus,
+    /// Product tail shift-register output (serial, one net).
+    pub tail: Net,
+}
+
+/// Coefficient-bit-serial multiply-accumulate tap.
+///
+/// Processes one coefficient bit per cycle (LSB first over `c` cycles): each
+/// cycle the `d`-bit data word is conditionally added (AND with the current
+/// coefficient bit — folded into the adder's P/G LUT for free) to the running
+/// partial sum, whose LSB shifts out into an SRL that assembles the product
+/// tail. Hardware per tap:
+///   * `d+1` LUTs + `ceil((d+1)/8)` CARRY8 (the add-shift),
+///   * `d+1` FDRE (partial-sum register),
+///   * `ceil(c/16)` SRL16 (product tail).
+pub fn bit_serial_mac(
+    b: &mut NetlistBuilder,
+    label: &str,
+    data: &[Net],
+    coeff_bit: Net,
+    c_bits: usize,
+) -> SerialMacOut {
+    let d = data.len();
+    assert!(d >= 1 && c_bits >= 1, "serial MAC needs widths: {label}");
+    b.push_scope(label);
+    // Gated operand: the AND with coeff_bit folds into the P/G LUT of the
+    // adder (3-input LUT instead of 2-input: same LUT count). Model that by
+    // building the adder over a virtual operand of LUTs with 3 inputs.
+    let w = d + 1;
+    let mut psum_d: Bus = Vec::with_capacity(w);
+    // Feedback nets for the partial-sum register (allocated first so the adder
+    // LUTs can reference them).
+    let psum_q: Bus = (0..w).map(|_| b.net()).collect();
+    let mut pg: Vec<Net> = Vec::with_capacity(2 * w);
+    for i in 0..w {
+        let xi = *data.get(i).unwrap_or(data.last().unwrap());
+        // P/G LUT folds: data bit, coeff enable, feedback sum bit.
+        let p = b.lut(&format!("pg[{i}]"), &[xi, coeff_bit, psum_q[i]]);
+        pg.push(p);
+        pg.push(psum_q[i]);
+    }
+    let mut cin: Option<Net> = None;
+    for (seg, chunk) in pg.chunks(16).enumerate() {
+        let (s, co) = b.carry8(&format!("cc[{seg}]"), chunk, cin);
+        psum_d.extend_from_slice(&s[..chunk.len() / 2]);
+        cin = Some(co);
+    }
+    // Partial-sum register: note the register *drives* the feedback nets
+    // allocated above; structurally we insert FDREs whose outputs are the
+    // psum_q nets. Builder FDREs allocate fresh outputs, so wire via 1-LUT
+    // "route-through" would be wasteful; instead add the FDREs manually.
+    for i in 0..w {
+        b.fdre_into(&format!("psum[{i}]"), psum_d[i], psum_q[i]);
+    }
+    // Product tail SRL(s): depth c, one bit wide.
+    let mut tail = psum_d[0];
+    for k in 0..c_bits.div_ceil(16) {
+        tail = b.srl16(&format!("tail[{k}]"), tail, coeff_bit);
+    }
+    b.pop_scope();
+    SerialMacOut { psum: psum_q, tail }
+}
+
+/// Analytical cost of one serial MAC tap (sizing tests + EXPERIMENTS roofline).
+pub fn serial_mac_costs(d: usize, c: usize) -> (u64, u64, u64, u64) {
+    let w = d + 1;
+    let lut = w as u64;
+    let cchain = w.div_ceil(8) as u64;
+    let ff = w as u64;
+    let mlut = c.div_ceil(16) as u64;
+    (lut, cchain, ff, mlut)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::{NetlistBuilder, PrimitiveClass};
+
+    #[test]
+    fn array_multiplier_cost_scales_with_d_times_c() {
+        let mut costs = Vec::new();
+        for (d, c) in [(4usize, 4usize), (8, 8), (16, 16)] {
+            let mut b = NetlistBuilder::new("t");
+            let x = b.top_input_bus(d);
+            let y = b.top_input_bus(c);
+            let p = array_multiplier(&mut b, "m", &x, &y);
+            assert_eq!(p.len(), d + c);
+            let n = b.finish();
+            n.validate().unwrap();
+            costs.push(n.stats().count(PrimitiveClass::LogicLut));
+        }
+        // Quadratic growth: 16x16 should be ~4x of 8x8, well over 2x.
+        assert!(costs[2] > costs[1] * 3);
+        assert!(costs[1] > costs[0] * 3);
+        // Partial products alone are d*c.
+        assert!(costs[1] >= 64);
+    }
+
+    #[test]
+    fn serial_mac_matches_analytical_costs() {
+        for (d, c) in [(3usize, 3usize), (8, 8), (8, 16), (16, 5), (16, 16)] {
+            let mut b = NetlistBuilder::new("t");
+            let x = b.top_input_bus(d);
+            let cb = b.top_input();
+            let _ = bit_serial_mac(&mut b, "tap", &x, cb, c);
+            let n = b.finish();
+            n.validate().unwrap();
+            let s = n.stats();
+            let (lut, cc, ff, mlut) = serial_mac_costs(d, c);
+            assert_eq!(s.count(PrimitiveClass::LogicLut), lut, "lut d={d} c={c}");
+            assert_eq!(s.count(PrimitiveClass::CarryChain), cc, "cc d={d} c={c}");
+            assert_eq!(s.count(PrimitiveClass::FlipFlop), ff, "ff d={d} c={c}");
+            assert_eq!(s.count(PrimitiveClass::MemoryLut), mlut, "mlut d={d} c={c}");
+        }
+    }
+
+    #[test]
+    fn serial_mac_logic_independent_of_coeff_width() {
+        let cost_at = |c: usize| {
+            let mut b = NetlistBuilder::new("t");
+            let x = b.top_input_bus(8);
+            let cb = b.top_input();
+            let _ = bit_serial_mac(&mut b, "tap", &x, cb, c);
+            b.finish().stats().count(PrimitiveClass::LogicLut)
+        };
+        assert_eq!(cost_at(3), cost_at(16), "serial MAC LUTs must not depend on c");
+    }
+
+    #[test]
+    fn serial_mac_netlist_is_valid_with_feedback() {
+        let mut b = NetlistBuilder::new("t");
+        let x = b.top_input_bus(5);
+        let cb = b.top_input();
+        let out = bit_serial_mac(&mut b, "tap", &x, cb, 7);
+        assert_eq!(out.psum.len(), 6);
+        b.finish().validate().unwrap();
+    }
+}

@@ -1,0 +1,212 @@
+//! Storage generators: serial coefficient stores, window registers and line
+//! buffers.
+//!
+//! The paper's blocks all use *serial* coefficient loading with local storage
+//! ("chargement série et stockage local des coefficients du noyau 3×3") and
+//! *parallel* data loading. The structures a synthesizer infers:
+//!
+//! * [`coeff_store_srl`] — a 1-bit-wide serial chain through SRL16s assembling
+//!   the nine `c`-bit coefficients; a parallel-out tap register per coefficient
+//!   word when the datapath needs word access (Conv2/3/4 feeding DSP B ports).
+//! * [`window_regs`] — the 3×3 parallel data window (9 `d`-bit registers).
+//! * [`line_buffer`] — RAM32M-based row buffer used when the block interfaces
+//!   a streaming image (depth = image width), giving the MLUT ∝ d component.
+
+use crate::netlist::{Bus, Net, NetlistBuilder};
+
+/// Serial coefficient store for `n_coeff` coefficients of `c` bits each.
+///
+/// A single serial input threads through `n_coeff · ceil(c/16)` SRL16s; if
+/// `parallel_out` is set, each coefficient word is additionally latched into a
+/// `c`-bit FDRE register bank (needed when the consumer reads all words at
+/// once, e.g. a DSP B-port mux), costing `n_coeff · c` flip-flops.
+pub fn coeff_store_srl(
+    b: &mut NetlistBuilder,
+    label: &str,
+    serial_in: Net,
+    load_en: Net,
+    n_coeff: usize,
+    c: usize,
+    parallel_out: bool,
+) -> Vec<Bus> {
+    assert!(n_coeff >= 1 && c >= 1, "coeff store needs sizes: {label}");
+    b.push_scope(label);
+    let mut chains: Vec<Bus> = Vec::with_capacity(n_coeff);
+    let mut tail = serial_in;
+    for _ in 0..n_coeff {
+        // The word's bits live inside the SRL; expose the chain tap.
+        let srls = c.div_ceil(16);
+        for _ in 0..srls {
+            tail = b.srl16("w_srl", tail, load_en);
+        }
+        let word: Bus = if parallel_out {
+            // Word latch: c FFs capture the word when load completes.
+            (0..c).map(|_| b.fdre("w_lat", tail)).collect()
+        } else {
+            vec![tail]
+        };
+        chains.push(word);
+    }
+    b.pop_scope();
+    chains
+}
+
+/// 3×3 (or `n`-element) parallel data window: `n` registers of `d` bits.
+pub fn window_regs(b: &mut NetlistBuilder, label: &str, data_in: &[Net], n: usize) -> Vec<Bus> {
+    b.push_scope(label);
+    let mut regs = Vec::with_capacity(n);
+    let mut prev: Bus = data_in.to_vec();
+    for k in 0..n {
+        let q = b.fdre_bus(&format!("win{k}"), &prev);
+        prev = q.clone();
+        regs.push(q);
+    }
+    b.pop_scope();
+    regs
+}
+
+/// Streaming row (line) buffer of `depth` entries × `d` bits. A fixed-length
+/// delay line, so the synthesizer infers SRLC32E shift registers — the
+/// cheapest mapping (no addressing logic): `d · ceil(depth/32)` SRL32s.
+pub fn line_buffer(b: &mut NetlistBuilder, label: &str, data_in: &[Net], depth: usize) -> Bus {
+    let d = data_in.len();
+    assert!(d >= 1 && depth >= 1, "line buffer needs sizes: {label}");
+    b.push_scope(label);
+    let ce = b.lut("ce", &[data_in[0]]); // stream-valid gate
+    let mut out: Bus = Vec::with_capacity(d);
+    for &bit in data_in.iter() {
+        let mut tail = bit;
+        for _ in 0..depth.div_ceil(32) {
+            tail = b.srl32("srl", tail, ce);
+        }
+        out.push(tail);
+    }
+    b.pop_scope();
+    out
+}
+
+/// Coefficient-frame load FIFO: double-buffers a whole incoming coefficient
+/// frame (`n_bits` = 9·c serial bits) in SRL32s so a new kernel can stream in
+/// while the current one computes — the "chargement série ... pour optimiser
+/// la mémoire" mechanism. Costs `ceil(n_bits/32)` SRL32s + one write gate.
+/// This is the linear-in-`c` MLUT term of Table 3.
+pub fn load_fifo(b: &mut NetlistBuilder, label: &str, serial_in: Net, load_en: Net, n_bits: usize) -> Net {
+    assert!(n_bits >= 1, "load fifo needs bits: {label}");
+    b.push_scope(label);
+    let gated = b.lut("wr_gate", &[serial_in, load_en]);
+    let mut tail = gated;
+    for _ in 0..n_bits.div_ceil(32) {
+        tail = b.srl32("fifo", tail, load_en);
+    }
+    b.pop_scope();
+    tail
+}
+
+/// Analytical MLUT cost of the load FIFO.
+pub fn load_fifo_mlut(n_bits: usize) -> u64 {
+    n_bits.div_ceil(32) as u64
+}
+
+/// Analytical MLUT cost of a serial coefficient store (LUT-site units).
+pub fn coeff_store_mlut(n_coeff: usize, c: usize) -> u64 {
+    (n_coeff * c.div_ceil(16)) as u64
+}
+
+/// Analytical FF cost of the parallel-out latch bank.
+pub fn coeff_store_ff(n_coeff: usize, c: usize) -> u64 {
+    (n_coeff * c) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::{NetlistBuilder, PrimitiveClass};
+
+    #[test]
+    fn coeff_store_srl_counts() {
+        for (n, c) in [(9usize, 8usize), (9, 16), (9, 17), (4, 3)] {
+            let mut b = NetlistBuilder::new("t");
+            let si = b.top_input();
+            let en = b.top_input();
+            let words = coeff_store_srl(&mut b, "cs", si, en, n, c, false);
+            assert_eq!(words.len(), n);
+            let nl = b.finish();
+            nl.validate().unwrap();
+            assert_eq!(nl.stats().count(PrimitiveClass::MemoryLut), coeff_store_mlut(n, c));
+            assert_eq!(nl.stats().count(PrimitiveClass::FlipFlop), 0);
+        }
+    }
+
+    #[test]
+    fn coeff_store_parallel_out_adds_ff() {
+        let mut b = NetlistBuilder::new("t");
+        let si = b.top_input();
+        let en = b.top_input();
+        let words = coeff_store_srl(&mut b, "cs", si, en, 9, 8, true);
+        assert_eq!(words[0].len(), 8);
+        let nl = b.finish();
+        nl.validate().unwrap();
+        assert_eq!(nl.stats().count(PrimitiveClass::FlipFlop), coeff_store_ff(9, 8));
+    }
+
+    #[test]
+    fn window_regs_shift_structure() {
+        let mut b = NetlistBuilder::new("t");
+        let din = b.top_input_bus(8);
+        let w = window_regs(&mut b, "win", &din, 3);
+        assert_eq!(w.len(), 3);
+        assert_eq!(w[2].len(), 8);
+        let nl = b.finish();
+        nl.validate().unwrap();
+        assert_eq!(nl.stats().count(PrimitiveClass::FlipFlop), 24);
+    }
+
+    #[test]
+    fn line_buffer_mlut_scales_with_width() {
+        let cost = |d: usize| {
+            let mut b = NetlistBuilder::new("t");
+            let din = b.top_input_bus(d);
+            let _ = line_buffer(&mut b, "lb", &din, 32);
+            let n = b.finish();
+            n.validate().unwrap();
+            n.stats().count(PrimitiveClass::MemoryLut)
+        };
+        assert!(cost(16) > cost(8));
+        assert!(cost(8) > cost(3));
+        // One SRL32 per data bit for depth<=32.
+        assert_eq!(cost(8), 8);
+        // Depth 64: two SRL32 banks per bit.
+        let mut b = NetlistBuilder::new("t");
+        let din = b.top_input_bus(4);
+        let _ = line_buffer(&mut b, "lb", &din, 64);
+        assert_eq!(b.finish().stats().count(PrimitiveClass::MemoryLut), 8);
+    }
+
+    #[test]
+    fn load_fifo_scales_linearly_with_bits() {
+        let cost = |bits: usize| {
+            let mut b = NetlistBuilder::new("t");
+            let si = b.top_input();
+            let en = b.top_input();
+            let _ = load_fifo(&mut b, "lf", si, en, bits);
+            let n = b.finish();
+            n.validate().unwrap();
+            n.stats().count(PrimitiveClass::MemoryLut)
+        };
+        assert_eq!(cost(27), 1); // 9 coeffs × 3 bits
+        assert_eq!(cost(72), 3); // 9 × 8
+        assert_eq!(cost(144), 5); // 9 × 16
+        for bits in [27usize, 72, 144] {
+            assert_eq!(cost(bits), load_fifo_mlut(bits));
+        }
+    }
+
+    #[test]
+    fn line_buffer_output_width_matches_input() {
+        let mut b = NetlistBuilder::new("t");
+        let din = b.top_input_bus(7);
+        let out = line_buffer(&mut b, "lb", &din, 64);
+        assert_eq!(out.len(), 7);
+        b.finish().validate().unwrap();
+    }
+}

@@ -1,0 +1,212 @@
+//! Static timing analysis over elaborated netlists.
+//!
+//! Levelizes the combinational graph and accumulates per-primitive delays
+//! (typical UltraScale+ -2 speed-grade figures, DS925-class) to estimate the
+//! critical path and achievable clock of each block — the numbers
+//! `extend::latency::clock_mhz` quotes, now derived instead of asserted.
+//! Registers (FDRE/SRL/DSP) are timing endpoints: paths are measured between
+//! register boundaries, the way a synthesis timing report does.
+
+use crate::netlist::{Netlist, Primitive};
+
+/// Per-primitive propagation delays in picoseconds (typical -2 grade).
+#[derive(Debug, Clone, Copy)]
+pub struct DelayModel {
+    /// LUT6 logic delay.
+    pub lut_ps: f64,
+    /// CARRY8 full-chain delay (8 bits).
+    pub carry8_ps: f64,
+    /// Wide-mux delay.
+    pub muxf_ps: f64,
+    /// Net (routing) delay added per hop.
+    pub route_ps: f64,
+    /// Register setup + clock-to-q margin charged once per path.
+    pub reg_overhead_ps: f64,
+    /// DSP48E2 fully-pipelined clock bound (ps period).
+    pub dsp_period_ps: f64,
+}
+
+impl Default for DelayModel {
+    fn default() -> Self {
+        DelayModel {
+            lut_ps: 150.0,
+            carry8_ps: 120.0,
+            muxf_ps: 75.0,
+            route_ps: 180.0,
+            reg_overhead_ps: 250.0,
+            dsp_period_ps: 1540.0, // ~650 MHz f_max
+        }
+    }
+}
+
+/// Timing report for one netlist.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimingReport {
+    /// Longest register-to-register combinational path (ps).
+    pub critical_path_ps: f64,
+    /// Logic levels on the critical path.
+    pub logic_levels: u32,
+    /// Achievable clock (MHz), including the DSP pipeline bound.
+    pub fmax_mhz: f64,
+}
+
+fn cell_delay(prim: &Primitive, m: &DelayModel) -> f64 {
+    match prim {
+        Primitive::Lut { .. } => m.lut_ps + m.route_ps,
+        Primitive::Carry8 => m.carry8_ps, // chain routing is dedicated
+        Primitive::MuxF => m.muxf_ps,
+        // Registers and memories are endpoints, not path elements.
+        _ => 0.0,
+    }
+}
+
+fn is_endpoint(prim: &Primitive) -> bool {
+    matches!(
+        prim,
+        Primitive::Fdre | Primitive::Srl16 | Primitive::Srl32 | Primitive::Ram32m | Primitive::Dsp48e2
+    )
+}
+
+/// Analyze a netlist. Combinational loops (which only arise through register
+/// feedback nets in our generators) are broken at endpoints; a genuinely
+/// combinational cycle would indicate a generator bug and caps the iteration.
+pub fn analyze(n: &Netlist, model: &DelayModel) -> TimingReport {
+    // arrival[net] = (delay ps, levels) of the worst path from any endpoint
+    // or top input to this net.
+    let mut arrival: Vec<(f64, u32)> = vec![(f64::NEG_INFINITY, 0); n.net_count];
+    for &t in &n.top_inputs {
+        arrival[t.0] = (0.0, 0);
+    }
+    // Endpoint outputs launch new paths at t=0.
+    for cell in &n.cells {
+        if is_endpoint(&cell.prim) {
+            for &o in &cell.outputs {
+                arrival[o.0] = (0.0, 0);
+            }
+        }
+    }
+    // Relax combinational cells until fixpoint (graphs are shallow; bound the
+    // passes to guard against accidental cycles).
+    let mut worst = 0.0f64;
+    let mut worst_levels = 0u32;
+    for _pass in 0..64 {
+        let mut changed = false;
+        for cell in &n.cells {
+            let d = cell_delay(&cell.prim, model);
+            // Input arrival: max over inputs that have a defined arrival.
+            let mut in_arr = f64::NEG_INFINITY;
+            let mut in_lvl = 0u32;
+            for &i in &cell.inputs {
+                let (a, l) = arrival[i.0];
+                if a > in_arr {
+                    in_arr = a;
+                    in_lvl = l;
+                }
+            }
+            if in_arr == f64::NEG_INFINITY {
+                continue;
+            }
+            if is_endpoint(&cell.prim) {
+                // Path terminates here: record, don't propagate.
+                let total = in_arr + model.reg_overhead_ps;
+                if total > worst {
+                    worst = total;
+                    worst_levels = in_lvl;
+                }
+                continue;
+            }
+            let out_arr = in_arr + d;
+            let out_lvl = in_lvl + 1;
+            for &o in &cell.outputs {
+                if out_arr > arrival[o.0].0 + 1e-9 {
+                    arrival[o.0] = (out_arr, out_lvl);
+                    changed = true;
+                }
+            }
+            if out_arr + model.reg_overhead_ps > worst {
+                worst = out_arr + model.reg_overhead_ps;
+                worst_levels = out_lvl;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    let has_dsp = n.cells.iter().any(|c| c.prim == Primitive::Dsp48e2);
+    let period = worst.max(if has_dsp { model.dsp_period_ps } else { 0.0 }).max(1.0);
+    TimingReport {
+        critical_path_ps: worst,
+        logic_levels: worst_levels,
+        fmax_mhz: 1e6 / period,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::{BlockKind, ConvBlockConfig};
+    use crate::netlist::NetlistBuilder;
+
+    #[test]
+    fn two_lut_chain_timing() {
+        let mut b = NetlistBuilder::new("t");
+        let x = b.top_input();
+        let y = b.lut("l1", &[x]);
+        let z = b.lut("l2", &[y]);
+        b.fdre("q", z);
+        let rep = analyze(&b.finish(), &DelayModel::default());
+        let m = DelayModel::default();
+        let want = 2.0 * (m.lut_ps + m.route_ps) + m.reg_overhead_ps;
+        assert!((rep.critical_path_ps - want).abs() < 1e-6, "{rep:?}");
+        assert_eq!(rep.logic_levels, 2);
+    }
+
+    #[test]
+    fn register_cuts_the_path() {
+        let mut b = NetlistBuilder::new("t");
+        let x = b.top_input();
+        let y = b.lut("l1", &[x]);
+        let q = b.fdre("q", y);
+        let z = b.lut("l2", &[q]);
+        b.fdre("q2", z);
+        let rep = analyze(&b.finish(), &DelayModel::default());
+        // Two single-LUT paths, not one 2-LUT path.
+        assert_eq!(rep.logic_levels, 1, "{rep:?}");
+    }
+
+    #[test]
+    fn conv_blocks_close_timing_in_plausible_bands() {
+        let m = DelayModel::default();
+        let fmax = |k: BlockKind| {
+            let cfg = ConvBlockConfig::new(k, 8, 8).unwrap();
+            analyze(&cfg.elaborate(), &m).fmax_mhz
+        };
+        let f1 = fmax(BlockKind::Conv1);
+        let f2 = fmax(BlockKind::Conv2);
+        // The fabric array multiplier is the slowest datapath.
+        assert!(f1 < f2, "Conv1 {f1} vs Conv2 {f2}");
+        for k in BlockKind::ALL {
+            let f = fmax(k);
+            assert!((80.0..=800.0).contains(&f), "{k}: {f} MHz");
+        }
+    }
+
+    #[test]
+    fn wider_multiplier_is_slower() {
+        let m = DelayModel::default();
+        let f = |d: u32, c: u32| {
+            let cfg = ConvBlockConfig::new(BlockKind::Conv1, d, c).unwrap();
+            analyze(&cfg.elaborate(), &m).fmax_mhz
+        };
+        assert!(f(16, 16) < f(4, 4));
+    }
+
+    #[test]
+    fn feedback_loops_terminate() {
+        // Accumulator feedback (FDRE into its own adder) must not hang.
+        let cfg = ConvBlockConfig::new(BlockKind::Conv1, 8, 8).unwrap();
+        let rep = analyze(&cfg.elaborate(), &DelayModel::default());
+        assert!(rep.critical_path_ps.is_finite());
+        assert!(rep.logic_levels > 0);
+    }
+}

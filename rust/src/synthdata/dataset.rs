@@ -1,0 +1,219 @@
+//! Measurement records and the dataset container.
+
+use crate::blocks::BlockKind;
+use crate::synth::{Resource, ResourceVector};
+use crate::util::csv;
+use crate::util::error::{Error, Result};
+
+/// One synthesis measurement: a configuration and its utilization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SynthRecord {
+    /// Block microarchitecture.
+    pub block: BlockKind,
+    /// Data width (bits).
+    pub data_bits: u32,
+    /// Coefficient width (bits).
+    pub coeff_bits: u32,
+    /// Measured utilization.
+    pub res: ResourceVector,
+}
+
+/// A collection of synthesis measurements.
+#[derive(Debug, Clone, Default)]
+pub struct Dataset {
+    /// All records, in sweep order.
+    pub records: Vec<SynthRecord>,
+}
+
+impl Dataset {
+    /// Records for one block.
+    pub fn for_block(&self, block: BlockKind) -> Vec<&SynthRecord> {
+        self.records.iter().filter(|r| r.block == block).collect()
+    }
+
+    /// Number of records.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Extract `(d, c, y)` regression samples for one block and resource.
+    pub fn samples(&self, block: BlockKind, resource: Resource) -> Vec<(f64, f64, f64)> {
+        self.for_block(block)
+            .iter()
+            .map(|r| (r.data_bits as f64, r.coeff_bits as f64, r.res.get(resource) as f64))
+            .collect()
+    }
+
+    /// Column vectors (data widths, coeff widths, per-resource counts) for the
+    /// correlation analysis.
+    pub fn columns(&self, block: BlockKind) -> (Vec<f64>, Vec<f64>, Vec<Vec<f64>>) {
+        let recs = self.for_block(block);
+        let d: Vec<f64> = recs.iter().map(|r| r.data_bits as f64).collect();
+        let c: Vec<f64> = recs.iter().map(|r| r.coeff_bits as f64).collect();
+        let ys: Vec<Vec<f64>> = Resource::ALL
+            .iter()
+            .map(|&res| recs.iter().map(|r| r.res.get(res) as f64).collect())
+            .collect();
+        (d, c, ys)
+    }
+
+    /// Look up one record.
+    pub fn get(&self, block: BlockKind, d: u32, c: u32) -> Option<&SynthRecord> {
+        self.records
+            .iter()
+            .find(|r| r.block == block && r.data_bits == d && r.coeff_bits == c)
+    }
+
+    /// Serialize to CSV text.
+    pub fn to_csv(&self) -> String {
+        let rows: Vec<Vec<String>> = self
+            .records
+            .iter()
+            .map(|r| {
+                vec![
+                    r.block.name().to_string(),
+                    r.data_bits.to_string(),
+                    r.coeff_bits.to_string(),
+                    r.res.llut.to_string(),
+                    r.res.mlut.to_string(),
+                    r.res.ff.to_string(),
+                    r.res.cchain.to_string(),
+                    r.res.dsp.to_string(),
+                ]
+            })
+            .collect();
+        csv::write_csv(
+            &["block", "data_bits", "coeff_bits", "llut", "mlut", "ff", "cchain", "dsp"],
+            &rows,
+        )
+    }
+
+    /// Parse from CSV text (inverse of [`Self::to_csv`]).
+    pub fn from_csv(text: &str) -> Result<Dataset> {
+        let (header, rows) = csv::read_csv(text)?;
+        let expect = ["block", "data_bits", "coeff_bits", "llut", "mlut", "ff", "cchain", "dsp"];
+        if header != expect {
+            return Err(Error::Parse(format!("unexpected dataset header: {header:?}")));
+        }
+        let mut records = Vec::with_capacity(rows.len());
+        for row in rows {
+            let block = BlockKind::parse(&row[0])
+                .ok_or_else(|| Error::Parse(format!("unknown block `{}`", row[0])))?;
+            records.push(SynthRecord {
+                block,
+                data_bits: row[1].parse::<u32>()?,
+                coeff_bits: row[2].parse::<u32>()?,
+                res: ResourceVector::new(
+                    row[3].parse()?,
+                    row[4].parse()?,
+                    row[5].parse()?,
+                    row[6].parse()?,
+                    row[7].parse()?,
+                ),
+            });
+        }
+        Ok(Dataset { records })
+    }
+
+    /// Save to a file.
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+
+    /// Load from a file.
+    pub fn load(path: &std::path::Path) -> Result<Dataset> {
+        Dataset::from_csv(&std::fs::read_to_string(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset {
+            records: vec![
+                SynthRecord {
+                    block: BlockKind::Conv1,
+                    data_bits: 3,
+                    coeff_bits: 4,
+                    res: ResourceVector::new(10, 2, 5, 1, 0),
+                },
+                SynthRecord {
+                    block: BlockKind::Conv2,
+                    data_bits: 8,
+                    coeff_bits: 8,
+                    res: ResourceVector::new(25, 40, 20, 0, 1),
+                },
+                SynthRecord {
+                    block: BlockKind::Conv1,
+                    data_bits: 4,
+                    coeff_bits: 4,
+                    res: ResourceVector::new(12, 2, 6, 1, 0),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn filtering_and_lookup() {
+        let ds = tiny();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.for_block(BlockKind::Conv1).len(), 2);
+        assert_eq!(ds.get(BlockKind::Conv2, 8, 8).unwrap().res.dsp, 1);
+        assert!(ds.get(BlockKind::Conv4, 8, 8).is_none());
+    }
+
+    #[test]
+    fn samples_extraction() {
+        let ds = tiny();
+        let s = ds.samples(BlockKind::Conv1, Resource::Llut);
+        assert_eq!(s, vec![(3.0, 4.0, 10.0), (4.0, 4.0, 12.0)]);
+    }
+
+    #[test]
+    fn columns_shapes() {
+        let ds = tiny();
+        let (d, c, ys) = ds.columns(BlockKind::Conv1);
+        assert_eq!(d.len(), 2);
+        assert_eq!(c, vec![4.0, 4.0]);
+        assert_eq!(ys.len(), 5);
+        assert_eq!(ys[0], vec![10.0, 12.0]); // LLUT column
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let ds = tiny();
+        let text = ds.to_csv();
+        let back = Dataset::from_csv(&text).unwrap();
+        assert_eq!(back.records, ds.records);
+    }
+
+    #[test]
+    fn csv_rejects_garbage() {
+        assert!(Dataset::from_csv("a,b\n1,2\n").is_err());
+        assert!(Dataset::from_csv(
+            "block,data_bits,coeff_bits,llut,mlut,ff,cchain,dsp\nConvX,1,2,3,4,5,6,7\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let ds = tiny();
+        let path = std::env::temp_dir().join("convkit_test_dataset.csv");
+        ds.save(&path).unwrap();
+        let back = Dataset::load(&path).unwrap();
+        assert_eq!(back.records, ds.records);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,12 @@
+//! The synthesis data-collection campaign (paper §3.2).
+//!
+//! 196 configurations per block — data and coefficient widths swept 3..=16 —
+//! synthesized through the [`crate::synth`] simulator, with the measurements
+//! stored as a [`Dataset`] (CSV-persistable so the fitting/reporting stages
+//! and external plotting tools can run without re-synthesis).
+
+pub mod dataset;
+pub mod sweep;
+
+pub use dataset::{Dataset, SynthRecord};
+pub use sweep::{run_sweep, sweep_configs, SweepOptions};

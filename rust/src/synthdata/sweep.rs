@@ -1,0 +1,127 @@
+//! The sweep driver: enumerate configurations, synthesize each, collect the
+//! dataset. Mirrors the outer loops of the paper's Algorithm 1.
+
+use super::dataset::{Dataset, SynthRecord};
+use crate::blocks::{synthesize, BlockKind, ConvBlockConfig, SWEEP_MAX_BITS, SWEEP_MIN_BITS};
+use crate::synth::MapOptions;
+use crate::util::error::Result;
+
+/// Sweep parameters.
+#[derive(Debug, Clone)]
+pub struct SweepOptions {
+    /// Blocks to sweep (default: all four).
+    pub blocks: Vec<BlockKind>,
+    /// Width range (inclusive); defaults to the paper's 3..=16.
+    pub min_bits: u32,
+    /// Upper bound (inclusive).
+    pub max_bits: u32,
+    /// Mapper options (jitter on by default, as Vivado measurements would be).
+    pub map: MapOptions,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        SweepOptions {
+            blocks: BlockKind::ALL.to_vec(),
+            min_bits: SWEEP_MIN_BITS,
+            max_bits: SWEEP_MAX_BITS,
+            map: MapOptions::default(),
+        }
+    }
+}
+
+/// Enumerate the sweep's configurations in the paper's loop order
+/// (block → data width → coefficient width).
+pub fn sweep_configs(opts: &SweepOptions) -> Vec<ConvBlockConfig> {
+    let mut cfgs = Vec::new();
+    for &block in &opts.blocks {
+        for d in opts.min_bits..=opts.max_bits {
+            for c in opts.min_bits..=opts.max_bits {
+                cfgs.push(
+                    ConvBlockConfig::new(block, d, c)
+                        .expect("sweep range is inside the valid range"),
+                );
+            }
+        }
+    }
+    cfgs
+}
+
+/// Run the sweep: one synthesis per configuration.
+///
+/// With the default options this is the paper's full campaign:
+/// 4 blocks × 14 × 14 = 784 synthesis runs (196 per block).
+pub fn run_sweep(opts: &SweepOptions) -> Result<Dataset> {
+    let cfgs = sweep_configs(opts);
+    let mut records = Vec::with_capacity(cfgs.len());
+    for cfg in &cfgs {
+        let res = synthesize(cfg, &opts.map);
+        records.push(SynthRecord {
+            block: cfg.kind,
+            data_bits: cfg.data_bits,
+            coeff_bits: cfg.coeff_bits,
+            res,
+        });
+    }
+    Ok(Dataset { records })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::Resource;
+
+    fn small_opts() -> SweepOptions {
+        SweepOptions { min_bits: 3, max_bits: 6, ..Default::default() }
+    }
+
+    #[test]
+    fn config_count_matches_paper() {
+        let opts = SweepOptions::default();
+        assert_eq!(sweep_configs(&opts).len(), 4 * 14 * 14);
+        let one = SweepOptions { blocks: vec![BlockKind::Conv2], ..Default::default() };
+        assert_eq!(sweep_configs(&one).len(), 196);
+    }
+
+    #[test]
+    fn small_sweep_produces_full_grid() {
+        let ds = run_sweep(&small_opts()).unwrap();
+        assert_eq!(ds.len(), 4 * 4 * 4);
+        for block in BlockKind::ALL {
+            assert_eq!(ds.for_block(block).len(), 16);
+        }
+        // DSP counts are structural.
+        for r in &ds.records {
+            assert_eq!(r.res.dsp, r.block.dsp_count());
+        }
+    }
+
+    #[test]
+    fn sweep_is_deterministic() {
+        let a = run_sweep(&small_opts()).unwrap();
+        let b = run_sweep(&small_opts()).unwrap();
+        assert_eq!(a.records, b.records);
+    }
+
+    #[test]
+    fn jitterless_sweep_is_monotone_for_conv1_llut() {
+        let opts = SweepOptions {
+            blocks: vec![BlockKind::Conv1],
+            min_bits: 3,
+            max_bits: 8,
+            map: MapOptions::exact(),
+        };
+        let ds = run_sweep(&opts).unwrap();
+        // Fixed c: LLUT non-decreasing in d.
+        for c in 3..=8u32 {
+            let mut prev = 0u64;
+            for d in 3..=8u32 {
+                let v = ds.get(BlockKind::Conv1, d, c).unwrap().res.llut;
+                assert!(v >= prev, "c={c} d={d}: {v} < {prev}");
+                prev = v;
+            }
+        }
+        let s = ds.samples(BlockKind::Conv1, Resource::Llut);
+        assert_eq!(s.len(), 36);
+    }
+}

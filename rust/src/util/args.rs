@@ -1,0 +1,172 @@
+//! Zero-dependency CLI argument parser (clap is unavailable offline).
+//!
+//! Supports the subset the `convkit` binary needs: one subcommand followed by
+//! `--flag`, `--key value` / `--key=value` options and positional arguments,
+//! with typed accessors and error messages that point at the offending token.
+
+use crate::util::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand + options + positionals.
+#[derive(Debug, Clone, Default)]
+pub struct ParsedArgs {
+    /// First non-flag token (e.g. `sweep`, `fit`, `allocate`).
+    pub command: Option<String>,
+    /// `--key value` and `--key=value` pairs; bare `--flag` maps to "true".
+    options: BTreeMap<String, String>,
+    /// Remaining positional tokens after the subcommand.
+    pub positional: Vec<String>,
+}
+
+/// Option keys that take no value (everything else consumes the next token).
+const BOOLEAN_FLAGS: &[&str] = &[
+    "help", "french", "verbose", "quiet", "csv", "no-jitter", "release-check",
+    "ascii", "exhaustive", "per-block", "golden-only", "skip-runtime",
+];
+
+impl ParsedArgs {
+    /// Parse tokens (without argv[0]).
+    pub fn parse<I, S>(tokens: I) -> Result<ParsedArgs>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut out = ParsedArgs::default();
+        let mut it = tokens.into_iter().map(Into::into).peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped.is_empty() {
+                    // `--` ends option parsing.
+                    out.positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if BOOLEAN_FLAGS.contains(&stripped) {
+                    out.options.insert(stripped.to_string(), "true".to_string());
+                } else {
+                    match it.next() {
+                        Some(v) if !v.starts_with("--") => {
+                            out.options.insert(stripped.to_string(), v);
+                        }
+                        Some(v) => {
+                            return Err(Error::Usage(format!(
+                                "option --{stripped} expects a value, got `{v}`"
+                            )))
+                        }
+                        None => {
+                            return Err(Error::Usage(format!(
+                                "option --{stripped} expects a value"
+                            )))
+                        }
+                    }
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Raw option lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    /// Boolean flag presence.
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Typed accessor with default.
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Usage(format!("--{key} expects an integer, got `{v}`"))),
+        }
+    }
+
+    /// Typed accessor with default.
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Usage(format!("--{key} expects a number, got `{v}`"))),
+        }
+    }
+
+    /// String accessor with default.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Comma-separated list accessor.
+    pub fn get_list(&self, key: &str) -> Vec<String> {
+        self.get(key)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect())
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> ParsedArgs {
+        ParsedArgs::parse(toks.iter().copied()).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse(&["fit", "conv1", "conv2"]);
+        assert_eq!(a.command.as_deref(), Some("fit"));
+        assert_eq!(a.positional, vec!["conv1", "conv2"]);
+    }
+
+    #[test]
+    fn key_value_both_syntaxes() {
+        let a = parse(&["sweep", "--seed", "7", "--out=data.csv"]);
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 7);
+        assert_eq!(a.get("out"), Some("data.csv"));
+    }
+
+    #[test]
+    fn boolean_flags_do_not_eat_tokens() {
+        let a = parse(&["tables", "--french", "3"]);
+        assert!(a.flag("french"));
+        assert_eq!(a.positional, vec!["3"]);
+    }
+
+    #[test]
+    fn missing_value_is_usage_error() {
+        assert!(ParsedArgs::parse(["fit", "--degree"]).is_err());
+        assert!(ParsedArgs::parse(["fit", "--degree", "--other", "1"]).is_err());
+    }
+
+    #[test]
+    fn double_dash_stops_option_parsing() {
+        let a = parse(&["run", "--", "--not-an-option"]);
+        assert_eq!(a.positional, vec!["--not-an-option"]);
+    }
+
+    #[test]
+    fn typed_accessors_validate() {
+        let a = parse(&["x", "--n", "abc", "--f", "0.5"]);
+        assert!(a.get_u64("n", 0).is_err());
+        assert_eq!(a.get_f64("f", 0.0).unwrap(), 0.5);
+        assert_eq!(a.get_f64("missing", 2.5).unwrap(), 2.5);
+        assert_eq!(a.get_str("missing", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn list_accessor_splits_and_trims() {
+        let a = parse(&["x", "--blocks", "conv1, conv2 ,,conv4"]);
+        assert_eq!(a.get_list("blocks"), vec!["conv1", "conv2", "conv4"]);
+        assert!(a.get_list("nope").is_empty());
+    }
+}

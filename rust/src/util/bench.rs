@@ -1,0 +1,154 @@
+//! Miniature benchmark harness (`criterion` is unavailable offline).
+//!
+//! Used by the `[[bench]]` targets (all `harness = false`): warms up, runs
+//! timed batches until a wall-clock budget or iteration cap is reached, and
+//! reports mean / p50 / p95 per iteration plus derived throughput. Output is
+//! deliberately criterion-like one-liners so `cargo bench | tee` logs read
+//! familiarly.
+
+use crate::util::format::fmt_duration;
+use std::time::{Duration, Instant};
+
+/// One benchmark's collected statistics (per-iteration nanoseconds).
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    /// Iterations per second implied by the mean.
+    pub fn throughput(&self) -> f64 {
+        1e9 / self.mean_ns.max(1e-9)
+    }
+
+    /// criterion-style report line.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} time: [{} {} {}]   ({:.1} elem/s, {} iters)",
+            self.name,
+            fmt_duration(self.min_ns),
+            fmt_duration(self.p50_ns),
+            fmt_duration(self.p95_ns),
+            self.throughput(),
+            self.iters
+        )
+    }
+}
+
+/// Harness accumulating results for a bench binary.
+#[derive(Debug, Default)]
+pub struct Bench {
+    /// Target measurement time per benchmark.
+    pub budget: Duration,
+    /// Hard cap on measured iterations.
+    pub max_iters: u64,
+    results: Vec<BenchStats>,
+}
+
+impl Bench {
+    /// Standard settings: 2 s budget, 1e6 iteration cap (CI-friendly on 1 CPU).
+    pub fn new() -> Self {
+        Bench { budget: Duration::from_secs(2), max_iters: 1_000_000, results: Vec::new() }
+    }
+
+    /// Quick settings for expensive end-to-end benches.
+    pub fn quick() -> Self {
+        Bench { budget: Duration::from_millis(500), max_iters: 10_000, results: Vec::new() }
+    }
+
+    /// Time `f`, which performs ONE logical iteration and returns a value that
+    /// is passed through `std::hint::black_box` to defeat DCE.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchStats {
+        // Warm-up: a few untimed iterations (also primes caches/allocator).
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.budget / 10 && warm_iters < self.max_iters / 10 + 1 {
+            std::hint::black_box(f());
+            warm_iters += 1;
+        }
+        // Measurement: batch so that clock overhead is amortized for fast fns.
+        let per_call_est = (warm_start.elapsed().as_nanos() as f64 / warm_iters.max(1) as f64).max(0.5);
+        let batch = ((100_000.0 / per_call_est).ceil() as u64).clamp(1, 10_000);
+        let mut samples: Vec<f64> = Vec::new();
+        let mut iters = 0u64;
+        let start = Instant::now();
+        while start.elapsed() < self.budget && iters < self.max_iters {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            let ns = t0.elapsed().as_nanos() as f64 / batch as f64;
+            samples.push(ns);
+            iters += batch;
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let pct = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters,
+            mean_ns: mean,
+            p50_ns: pct(0.50),
+            p95_ns: pct(0.95),
+            min_ns: samples[0],
+        };
+        println!("{}", stats.report());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// All collected results.
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+
+    /// Find a result by name (for speedup-ratio reporting inside a bench).
+    pub fn stats(&self, name: &str) -> Option<&BenchStats> {
+        self.results.iter().find(|s| s.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bench { budget: Duration::from_millis(30), max_iters: 100_000, results: vec![] };
+        let s = b.run("noop-ish", || 1 + 1).clone();
+        assert!(s.mean_ns > 0.0);
+        assert!(s.iters > 0);
+        assert!(s.p50_ns <= s.p95_ns);
+        assert!(s.min_ns <= s.p50_ns);
+    }
+
+    #[test]
+    fn report_contains_name_and_units() {
+        let mut b = Bench { budget: Duration::from_millis(10), max_iters: 1_000, results: vec![] };
+        b.run("my_bench", || 0u8);
+        let line = b.stats("my_bench").unwrap().report();
+        assert!(line.contains("my_bench"));
+        assert!(line.contains("time:"));
+    }
+
+    #[test]
+    fn ordering_of_percentiles_holds_for_slow_fn() {
+        let mut b = Bench { budget: Duration::from_millis(20), max_iters: 2_000, results: vec![] };
+        let s = b
+            .run("spin", || {
+                let mut acc = 0u64;
+                for i in 0..100 {
+                    acc = acc.wrapping_add(i * i);
+                }
+                acc
+            })
+            .clone();
+        assert!(s.p95_ns >= s.p50_ns);
+        assert!(s.throughput() > 0.0);
+    }
+}

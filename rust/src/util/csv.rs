@@ -1,0 +1,120 @@
+//! Minimal CSV reader/writer for dataset persistence.
+//!
+//! The synthesis campaign (`synthdata`) persists its 4 × 196 measurement matrix
+//! as CSV so the fitting and reporting stages — and external plotting tools —
+//! can consume it without the simulator. Quoting is supported on read, never
+//! needed on write (all our fields are identifiers or numbers).
+
+use crate::util::error::{Error, Result};
+
+/// Serialize rows (first row = header) to CSV text.
+pub fn write_csv(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    out.push_str(&header.join(","));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse CSV text into (header, rows). Handles double-quoted fields with
+/// embedded commas/quotes; does not handle embedded newlines (not produced by
+/// any of our writers).
+pub fn read_csv(text: &str) -> Result<(Vec<String>, Vec<Vec<String>>)> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header = match lines.next() {
+        Some(h) => parse_line(h)?,
+        None => return Err(Error::Parse("empty csv".into())),
+    };
+    let mut rows = Vec::new();
+    for (i, line) in lines.enumerate() {
+        let row = parse_line(line)?;
+        if row.len() != header.len() {
+            return Err(Error::Parse(format!(
+                "row {} has {} fields, header has {}",
+                i + 1,
+                row.len(),
+                header.len()
+            )));
+        }
+        rows.push(row);
+    }
+    Ok((header, rows))
+}
+
+fn parse_line(line: &str) -> Result<Vec<String>> {
+    let mut fields = Vec::new();
+    let mut cur = String::new();
+    let mut chars = line.chars().peekable();
+    let mut in_quotes = false;
+    while let Some(ch) = chars.next() {
+        if in_quotes {
+            match ch {
+                '"' => {
+                    if chars.peek() == Some(&'"') {
+                        chars.next();
+                        cur.push('"');
+                    } else {
+                        in_quotes = false;
+                    }
+                }
+                c => cur.push(c),
+            }
+        } else {
+            match ch {
+                ',' => fields.push(std::mem::take(&mut cur)),
+                '"' if cur.is_empty() => in_quotes = true,
+                c => cur.push(c),
+            }
+        }
+    }
+    if in_quotes {
+        return Err(Error::Parse(format!("unterminated quote in line: {line}")));
+    }
+    fields.push(cur);
+    Ok(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_simple() {
+        let header = ["a", "b", "c"];
+        let rows = vec![
+            vec!["1".to_string(), "2".to_string(), "3".to_string()],
+            vec!["x".to_string(), "y".to_string(), "z".to_string()],
+        ];
+        let text = write_csv(&header, &rows);
+        let (h, r) = read_csv(&text).unwrap();
+        assert_eq!(h, vec!["a", "b", "c"]);
+        assert_eq!(r, rows);
+    }
+
+    #[test]
+    fn quoted_fields_with_commas_and_quotes() {
+        let (h, r) = read_csv("name,desc\nconv1,\"a, \"\"b\"\"\"\n").unwrap();
+        assert_eq!(h, vec!["name", "desc"]);
+        assert_eq!(r[0][1], "a, \"b\"");
+    }
+
+    #[test]
+    fn rejects_ragged_rows() {
+        assert!(read_csv("a,b\n1\n").is_err());
+    }
+
+    #[test]
+    fn rejects_empty_input_and_unterminated_quote() {
+        assert!(read_csv("").is_err());
+        assert!(read_csv("a,b\n\"oops,1\n").is_err());
+    }
+
+    #[test]
+    fn skips_blank_lines() {
+        let (_, r) = read_csv("a,b\n\n1,2\n\n3,4\n").unwrap();
+        assert_eq!(r.len(), 2);
+    }
+}

@@ -1,0 +1,102 @@
+//! Crate-wide error type.
+//!
+//! A hand-rolled enum (no `thiserror` offline) with `From` conversions for the
+//! handful of foreign error types that cross module boundaries.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All the ways convkit operations can fail.
+#[derive(Debug)]
+pub enum Error {
+    /// A block was configured outside its supported parameter range
+    /// (e.g. `Conv3` with data width > 8, or any width outside 1..=32).
+    InvalidConfig(String),
+    /// Numerical routine failed (singular system, empty dataset, ...).
+    Numerical(String),
+    /// Model fitting could not reach the paper's acceptance threshold.
+    ModelRejected(String),
+    /// Allocation is infeasible under the requested utilization cap.
+    Infeasible(String),
+    /// CLI usage error.
+    Usage(String),
+    /// Dataset / CSV parsing problem.
+    Parse(String),
+    /// PJRT / XLA runtime failure.
+    Runtime(String),
+    /// Underlying I/O failure.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::InvalidConfig(m) => write!(f, "invalid configuration: {m}"),
+            Error::Numerical(m) => write!(f, "numerical error: {m}"),
+            Error::ModelRejected(m) => write!(f, "model rejected: {m}"),
+            Error::Infeasible(m) => write!(f, "infeasible allocation: {m}"),
+            Error::Usage(m) => write!(f, "usage error: {m}"),
+            Error::Parse(m) => write!(f, "parse error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<std::num::ParseIntError> for Error {
+    fn from(e: std::num::ParseIntError) -> Self {
+        Error::Parse(e.to_string())
+    }
+}
+
+impl From<std::num::ParseFloatError> for Error {
+    fn from(e: std::num::ParseFloatError) -> Self {
+        Error::Parse(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages_are_prefixed() {
+        assert!(Error::InvalidConfig("x".into()).to_string().starts_with("invalid configuration"));
+        assert!(Error::Numerical("x".into()).to_string().starts_with("numerical"));
+        assert!(Error::Infeasible("x".into()).to_string().starts_with("infeasible"));
+        assert!(Error::Usage("x".into()).to_string().starts_with("usage"));
+    }
+
+    #[test]
+    fn io_error_converts_and_sources() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(e.to_string().contains("gone"));
+        use std::error::Error as _;
+        assert!(e.source().is_some());
+    }
+
+    #[test]
+    fn parse_errors_convert() {
+        let e: Error = "abc".parse::<i64>().unwrap_err().into();
+        assert!(matches!(e, Error::Parse(_)));
+        let e: Error = "abc".parse::<f64>().unwrap_err().into();
+        assert!(matches!(e, Error::Parse(_)));
+    }
+}

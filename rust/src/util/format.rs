@@ -1,0 +1,238 @@
+//! Plain-text table rendering for CLI reports and bench output.
+//!
+//! The paper's evaluation is entirely tables and fitted-surface figures; this
+//! module renders both in a terminal (tables as aligned ASCII grids, surfaces as
+//! a coarse height map) and keeps the machine-readable CSV path separate
+//! (`util::csv`).
+
+use std::fmt::Write as _;
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// An ASCII table builder.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: Option<String>,
+    header: Vec<String>,
+    align: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with the given column headers; all columns right-aligned except
+    /// the first.
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        let header: Vec<String> = header.into_iter().map(Into::into).collect();
+        let mut align = vec![Align::Right; header.len()];
+        if !align.is_empty() {
+            align[0] = Align::Left;
+        }
+        Table { title: None, header, align, rows: Vec::new() }
+    }
+
+    /// Attach a caption rendered above the grid.
+    pub fn with_title<S: Into<String>>(mut self, title: S) -> Self {
+        self.title = Some(title.into());
+        self
+    }
+
+    /// Override one column's alignment.
+    pub fn set_align(&mut self, col: usize, align: Align) {
+        if col < self.align.len() {
+            self.align[col] = align;
+        }
+    }
+
+    /// Append a row; short rows are padded with empty cells, long rows truncated.
+    pub fn push_row<S: Into<String>>(&mut self, cells: Vec<S>) {
+        let mut row: Vec<String> = cells.into_iter().map(Into::into).collect();
+        row.resize(self.header.len(), String::new());
+        self.rows.push(row);
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when no data rows have been added.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render to a string with box-drawing separators.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate().take(ncol) {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            let _ = writeln!(out, "{t}");
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String], align: &[Align]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                let cell = cells.get(i).map(String::as_str).unwrap_or("");
+                let pad = widths[i].saturating_sub(cell.chars().count());
+                match align[i] {
+                    Align::Left => {
+                        s.push(' ');
+                        s.push_str(cell);
+                        s.push_str(&" ".repeat(pad + 1));
+                    }
+                    Align::Right => {
+                        s.push_str(&" ".repeat(pad + 1));
+                        s.push_str(cell);
+                        s.push(' ');
+                    }
+                }
+                s.push('|');
+            }
+            s
+        };
+        let _ = writeln!(out, "{sep}");
+        let _ = writeln!(out, "{}", fmt_row(&self.header, &vec![Align::Left; ncol]));
+        let _ = writeln!(out, "{sep}");
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row, &self.align));
+        }
+        let _ = writeln!(out, "{sep}");
+        out
+    }
+}
+
+/// Format a float with a fixed number of decimals, using the paper's French
+/// convention (comma decimal separator) when `french` is set. Used so the
+/// regenerated tables can be compared side by side with the paper's.
+pub fn fmt_num(v: f64, decimals: usize, french: bool) -> String {
+    let s = format!("{v:.decimals$}");
+    if french {
+        s.replace('.', ",")
+    } else {
+        s
+    }
+}
+
+/// Render a coarse ASCII "surface" (the paper's Figures 1-3 are 3-D fitted
+/// surfaces; in a terminal we show the height map over the (d, c) grid using a
+/// 10-level ramp).
+pub fn ascii_surface(
+    title: &str,
+    xs: &[i64],
+    ys: &[i64],
+    z: impl Fn(i64, i64) -> f64,
+) -> String {
+    const RAMP: &[u8] = b" .:-=+*#%@";
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &x in xs {
+        for &y in ys {
+            let v = z(x, y);
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+    }
+    let span = (hi - lo).max(1e-12);
+    let mut out = String::new();
+    let _ = writeln!(out, "{title}  (z in [{lo:.1}, {hi:.1}], rows=coeff bits, cols=data bits)");
+    let _ = write!(out, "      ");
+    for &x in xs {
+        let _ = write!(out, "{x:>3}");
+    }
+    let _ = writeln!(out);
+    for &y in ys.iter().rev() {
+        let _ = write!(out, "c={y:>3} ");
+        for &x in xs {
+            let v = z(x, y);
+            let idx = (((v - lo) / span) * (RAMP.len() - 1) as f64).round() as usize;
+            let ch = RAMP[idx.min(RAMP.len() - 1)] as char;
+            let _ = write!(out, "  {ch}");
+        }
+        let _ = writeln!(out);
+    }
+    out
+}
+
+/// Human formatting for durations in bench output.
+pub fn fmt_duration(nanos: f64) -> String {
+    if nanos < 1_000.0 {
+        format!("{nanos:.1} ns")
+    } else if nanos < 1_000_000.0 {
+        format!("{:.2} µs", nanos / 1_000.0)
+    } else if nanos < 1_000_000_000.0 {
+        format!("{:.2} ms", nanos / 1_000_000.0)
+    } else {
+        format!("{:.3} s", nanos / 1_000_000_000.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned_grid() {
+        let mut t = Table::new(vec!["name", "value"]).with_title("demo");
+        t.push_row(vec!["alpha", "1"]);
+        t.push_row(vec!["b", "12345"]);
+        let s = t.render();
+        assert!(s.contains("demo"));
+        assert!(s.contains("| alpha |"));
+        // Right alignment on the numeric column.
+        assert!(s.contains("|     1 |"));
+        assert!(s.contains("| 12345 |"));
+    }
+
+    #[test]
+    fn short_rows_padded_long_rows_truncated() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.push_row(vec!["only"]);
+        t.push_row(vec!["x", "y"]);
+        let s = t.render();
+        assert_eq!(t.len(), 2);
+        assert!(!t.is_empty());
+        assert!(s.contains("| only |"));
+    }
+
+    #[test]
+    fn fmt_num_french_convention() {
+        assert_eq!(fmt_num(20.886, 3, true), "20,886");
+        assert_eq!(fmt_num(20.886, 3, false), "20.886");
+        assert_eq!(fmt_num(1.0, 2, true), "1,00");
+    }
+
+    #[test]
+    fn surface_has_expected_dimensions() {
+        let xs: Vec<i64> = (3..=6).collect();
+        let ys: Vec<i64> = (3..=5).collect();
+        let s = ascii_surface("t", &xs, &ys, |x, y| (x * y) as f64);
+        // header + column-index line + 3 data rows
+        assert_eq!(s.lines().count(), 2 + ys.len());
+        assert!(s.contains("c=  5"));
+    }
+
+    #[test]
+    fn duration_units() {
+        assert_eq!(fmt_duration(12.0), "12.0 ns");
+        assert_eq!(fmt_duration(12_000.0), "12.00 µs");
+        assert_eq!(fmt_duration(12_000_000.0), "12.00 ms");
+        assert_eq!(fmt_duration(2_500_000_000.0), "2.500 s");
+    }
+}

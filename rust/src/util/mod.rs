@@ -1,0 +1,20 @@
+//! Cross-cutting utilities: deterministic PRNG, stable hashing, error type,
+//! table/CSV formatting, a zero-dependency CLI argument parser and a miniature
+//! property-testing harness.
+//!
+//! The build environment is fully offline with only the `xla` crate's dependency
+//! closure vendored, so the conveniences usually pulled from `clap`, `rand`,
+//! `proptest` and `criterion` are implemented here from scratch (and unit-tested
+//! like any other substrate module).
+
+pub mod error;
+pub mod rng;
+pub mod hashing;
+pub mod format;
+pub mod csv;
+pub mod args;
+pub mod proptest;
+pub mod bench;
+
+pub use error::{Error, Result};
+pub use rng::SplitMix64;

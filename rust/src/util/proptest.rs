@@ -1,0 +1,173 @@
+//! Miniature property-testing harness (`proptest` is unavailable offline).
+//!
+//! Provides the 20% of proptest the suite needs: seeded generators, a `forall`
+//! runner with a case budget, and on failure a greedy shrink loop over the
+//! integer tuple inputs. Deterministic: failures reproduce from the printed
+//! seed.
+
+use crate::util::rng::SplitMix64;
+
+/// Outcome of a property over one input.
+pub type PropResult = std::result::Result<(), String>;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of random cases to execute.
+    pub cases: usize,
+    /// Base seed; case `i` uses `seed ^ i` forked.
+    pub seed: u64,
+    /// Maximum shrink iterations on failure.
+    pub max_shrink: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 128, seed: 0xC0FF_EE00, max_shrink: 512 }
+    }
+}
+
+/// Run `prop` on `cases` random inputs drawn by `gen`; on failure, greedily
+/// shrink the failing input with `shrink` (which proposes smaller candidates)
+/// and panic with the minimal reproduction.
+pub fn forall<T, G, S, P>(cfg: &Config, name: &str, mut gen: G, shrink: S, prop: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut SplitMix64) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> PropResult,
+{
+    for case in 0..cfg.cases {
+        let mut rng = SplitMix64::new(cfg.seed ^ case as u64).fork(case as u64);
+        let input = gen(&mut rng);
+        if let Err(first_msg) = prop(&input) {
+            // Shrink.
+            let mut best = input.clone();
+            let mut best_msg = first_msg;
+            let mut budget = cfg.max_shrink;
+            'outer: loop {
+                for cand in shrink(&best) {
+                    if budget == 0 {
+                        break 'outer;
+                    }
+                    budget -= 1;
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property `{name}` failed (seed={:#x}, case={case})\n  minimal input: {best:?}\n  reason: {best_msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Standard shrinker for a pair of small positive integers: propose halving and
+/// decrementing each coordinate toward `lo`.
+pub fn shrink_pair(lo: i64) -> impl Fn(&(i64, i64)) -> Vec<(i64, i64)> {
+    move |&(a, b)| {
+        let mut out = Vec::new();
+        for (na, nb) in [
+            (lo + (a - lo) / 2, b),
+            (a, lo + (b - lo) / 2),
+            (a - 1, b),
+            (a, b - 1),
+        ] {
+            if (na, nb) != (a, b) && na >= lo && nb >= lo {
+                out.push((na, nb));
+            }
+        }
+        out
+    }
+}
+
+/// Convenience: assert two i64 values equal inside a property.
+pub fn check_eq<T: PartialEq + std::fmt::Debug>(label: &str, got: T, want: T) -> PropResult {
+    if got == want {
+        Ok(())
+    } else {
+        Err(format!("{label}: got {got:?}, want {want:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        // Interior mutability via Cell to count invocations.
+        let counter = std::cell::Cell::new(0usize);
+        forall(
+            &Config { cases: 50, ..Default::default() },
+            "trivially true",
+            |rng| rng.range_i64(0, 100),
+            |_| vec![],
+            |_| {
+                counter.set(counter.get() + 1);
+                Ok(())
+            },
+        );
+        count += counter.get();
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn failing_property_panics_with_name() {
+        forall(
+            &Config { cases: 1, ..Default::default() },
+            "always fails",
+            |rng| rng.range_i64(0, 10),
+            |_| vec![],
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn shrinker_finds_minimal_pair() {
+        // Property "a + b < 10" fails first on some random (a,b) with a+b >= 10;
+        // the shrinker should drive it down to a minimal counterexample whose
+        // sum is exactly 10 (any smaller passes).
+        let result = std::panic::catch_unwind(|| {
+            forall(
+                &Config { cases: 200, ..Default::default() },
+                "sum below ten",
+                |rng| (rng.range_i64(0, 64), rng.range_i64(0, 64)),
+                shrink_pair(0),
+                |&(a, b)| {
+                    if a + b < 10 {
+                        Ok(())
+                    } else {
+                        Err(format!("sum {}", a + b))
+                    }
+                },
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("sum 10"), "expected minimal sum 10, got: {msg}");
+    }
+
+    #[test]
+    fn check_eq_formats_mismatch() {
+        assert!(check_eq("x", 1, 1).is_ok());
+        let e = check_eq("x", 1, 2).unwrap_err();
+        assert!(e.contains("got 1"));
+        assert!(e.contains("want 2"));
+    }
+
+    #[test]
+    fn shrink_pair_respects_lower_bound() {
+        let s = shrink_pair(3);
+        for cand in s(&(4, 3)) {
+            assert!(cand.0 >= 3 && cand.1 >= 3);
+        }
+        assert!(s(&(3, 3)).is_empty());
+    }
+}

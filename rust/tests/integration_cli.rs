@@ -1,0 +1,140 @@
+//! CLI smoke tests: run the built binary end to end (no PJRT-dependent
+//! subcommands here; those are covered by integration_runtime + the serve
+//! command inside e2e_pipeline).
+
+use std::process::Command;
+
+fn convkit(args: &[&str]) -> (bool, String, String) {
+    let exe = env!("CARGO_BIN_EXE_convkit");
+    let out = Command::new(exe).args(args).output().expect("binary runs");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+#[test]
+fn help_prints_usage() {
+    let (ok, stdout, _) = convkit(&["help"]);
+    assert!(ok);
+    assert!(stdout.contains("USAGE"));
+    assert!(stdout.contains("allocate"));
+}
+
+#[test]
+fn unknown_command_fails_with_usage_hint() {
+    let (ok, _, stderr) = convkit(&["frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown command"));
+}
+
+#[test]
+fn blocks_prints_table2() {
+    let (ok, stdout, _) = convkit(&["blocks"]);
+    assert!(ok);
+    for b in ["Conv1", "Conv2", "Conv3", "Conv4"] {
+        assert!(stdout.contains(b));
+    }
+}
+
+#[test]
+fn sweep_small_range_reports_counts() {
+    let (ok, stdout, stderr) = convkit(&["sweep", "--min-bits", "6", "--max-bits", "9"]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("synthesized 64 configurations"), "{stdout}");
+}
+
+#[test]
+fn correlate_small_prints_quadrants() {
+    let (ok, stdout, _) = convkit(&["correlate", "--min-bits", "6", "--max-bits", "10"]);
+    assert!(ok);
+    assert!(stdout.contains("TABLE 3"));
+    assert!(stdout.contains("Conv3"));
+}
+
+#[test]
+fn fit_small_prints_models() {
+    let (ok, stdout, _) = convkit(&["fit", "--min-bits", "6", "--max-bits", "12"]);
+    assert!(ok);
+    assert!(stdout.contains("TABLE 4"));
+    assert!(stdout.contains("All fitted models"));
+}
+
+#[test]
+fn predict_compares_model_and_synthesis() {
+    let (ok, stdout, _) = convkit(&[
+        "predict",
+        "--block",
+        "conv4",
+        "--data-bits",
+        "8",
+        "--coeff-bits",
+        "8",
+        "--min-bits",
+        "6",
+        "--max-bits",
+        "12",
+    ]);
+    assert!(ok);
+    assert!(stdout.contains("model prediction"));
+    assert!(stdout.contains("synthesis"));
+}
+
+#[test]
+fn allocate_prints_table5() {
+    let (ok, stdout, _) =
+        convkit(&["allocate", "--min-bits", "6", "--max-bits", "12", "--target", "0.8"]);
+    assert!(ok);
+    assert!(stdout.contains("TABLE 5"));
+    assert!(stdout.contains("Total Conv."));
+}
+
+#[test]
+fn tables_1_and_2_need_no_sweep() {
+    let (ok, stdout, _) = convkit(&["tables", "1"]);
+    assert!(ok);
+    assert!(stdout.contains("YOLOv2-Tiny"));
+    let (ok, stdout, _) = convkit(&["tables", "2", "--french"]);
+    assert!(ok);
+    assert!(stdout.contains("Caractéristiques"));
+}
+
+#[test]
+fn figures_render_ascii_surface() {
+    let (ok, stdout, _) = convkit(&["figures", "2", "--min-bits", "6", "--max-bits", "12"]);
+    assert!(ok);
+    assert!(stdout.contains("FIGURE 2"));
+    assert!(stdout.contains("R²"));
+}
+
+#[test]
+fn figures_csv_mode() {
+    let (ok, stdout, _) =
+        convkit(&["figures", "3", "--csv", "--min-bits", "6", "--max-bits", "12"]);
+    assert!(ok);
+    assert!(stdout.contains("data_bits,coeff_bits,llut_measured,llut_fitted"));
+}
+
+#[test]
+fn deploy_plans_lenet() {
+    let (ok, stdout, _) = convkit(&[
+        "deploy",
+        "--network",
+        "lenet_q8",
+        "--min-bits",
+        "6",
+        "--max-bits",
+        "12",
+    ]);
+    assert!(ok);
+    assert!(stdout.contains("deployment plan"));
+    assert!(stdout.contains("fits: true"));
+}
+
+#[test]
+fn bad_option_value_is_a_usage_error() {
+    let (ok, _, stderr) = convkit(&["sweep", "--min-bits", "banana"]);
+    assert!(!ok);
+    assert!(stderr.contains("integer"));
+}

@@ -1,0 +1,143 @@
+//! End-to-end runtime integration: the PJRT-executed AOT artifacts must be
+//! **bit-exact** against the block-level golden model — the verification that
+//! all three layers (Pallas kernel → JAX model → rust coordinator) compute
+//! the same function.
+//!
+//! These tests are gated on `artifacts/` existing (run `make artifacts`
+//! first); without it they pass vacuously with a notice, so plain
+//! `cargo test` works on a fresh checkout.
+
+use convkit::blocks::BlockKind;
+use convkit::cnn::{zoo, GoldenCnn};
+use convkit::coordinator::service::{InferenceService, PjrtExecutor};
+use convkit::fixedpoint::QFormat;
+use convkit::runtime::{artifacts_dir, Runtime};
+use convkit::util::rng::SplitMix64;
+
+fn artifacts_ready() -> bool {
+    let ok = artifacts_dir().join("lenet_q8.hlo.txt").exists();
+    if !ok {
+        eprintln!("NOTE: artifacts/ missing — run `make artifacts`; skipping runtime test");
+    }
+    ok
+}
+
+fn random_images(spec: &convkit::cnn::NetworkSpec, n: usize, seed: u64) -> Vec<Vec<i64>> {
+    let q = QFormat::new(spec.layers[0].data_bits).unwrap();
+    let mut rng = SplitMix64::new(seed);
+    (0..n)
+        .map(|_| {
+            (0..spec.in_ch * spec.in_h * spec.in_w)
+                .map(|_| rng.range_i64(q.min(), q.max()))
+                .collect()
+        })
+        .collect()
+}
+
+fn check_network_bit_exact(name: &str) {
+    if !artifacts_ready() {
+        return;
+    }
+    let spec = zoo::all().into_iter().find(|n| n.name == name).expect("zoo entry");
+    let golden = GoldenCnn::new(spec.clone(), BlockKind::Conv2).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let art = rt.load_named(&artifacts_dir(), name).unwrap();
+    let batch: usize = art.meta.dims("input_shape").unwrap()[0];
+    let images = random_images(&spec, batch, 0xE2E0 + name.len() as u64);
+    // PJRT path.
+    let flat: Vec<i32> = images.iter().flatten().map(|&v| v as i32).collect();
+    let dims = vec![batch, spec.in_ch, spec.in_h, spec.in_w];
+    let out = art.run_i32(&[(&flat, &dims)]).unwrap();
+    let logits = &out[0];
+    assert_eq!(logits.len(), batch * spec.classes());
+    // Golden path.
+    for (i, img) in images.iter().enumerate() {
+        let want = golden.infer(img).unwrap();
+        let got: Vec<i64> = logits[i * spec.classes()..(i + 1) * spec.classes()]
+            .iter()
+            .map(|&v| v as i64)
+            .collect();
+        assert_eq!(got, want, "{name}: image {i} diverges between PJRT and golden");
+    }
+}
+
+#[test]
+fn lenet_q8_pjrt_matches_golden_bit_exact() {
+    check_network_bit_exact("lenet_q8");
+}
+
+#[test]
+fn tiny_q8_pjrt_matches_golden_bit_exact() {
+    check_network_bit_exact("tiny_q8");
+}
+
+#[test]
+fn slim_q6_pjrt_matches_golden_bit_exact() {
+    check_network_bit_exact("slim_q6");
+}
+
+#[test]
+fn kernel_artifact_matches_fixedpoint_reference() {
+    if !artifacts_ready() {
+        return;
+    }
+    use convkit::fixedpoint::{conv3x3_plane_ref, Rounding};
+    let rt = Runtime::cpu().unwrap();
+    let art = rt.load_named(&artifacts_dir(), "conv3x3_q8").unwrap();
+    let (h, w) = (16usize, 16usize);
+    let q8 = QFormat::new(8).unwrap();
+    let mut rng = SplitMix64::new(777);
+    let plane: Vec<i64> = (0..h * w).map(|_| rng.range_i64(q8.min(), q8.max())).collect();
+    let coeffs: [i64; 9] = std::array::from_fn(|_| rng.range_i64(q8.min(), q8.max()));
+    let plane_i32: Vec<i32> = plane.iter().map(|&v| v as i32).collect();
+    let coeffs_i32: Vec<i32> = coeffs.iter().map(|&v| v as i32).collect();
+    let out = art
+        .run_i32(&[(&plane_i32, &[h, w]), (&coeffs_i32, &[3, 3])])
+        .unwrap();
+    let want =
+        conv3x3_plane_ref(&plane, h, w, &coeffs, q8, q8, 4, Rounding::Floor).unwrap();
+    let got: Vec<i64> = out[0].iter().map(|&v| v as i64).collect();
+    assert_eq!(got, want, "kernel artifact diverges from fixedpoint reference");
+}
+
+#[test]
+fn pjrt_service_end_to_end_with_batching() {
+    if !artifacts_ready() {
+        return;
+    }
+    let spec = zoo::lenet_ish();
+    let golden = GoldenCnn::new(spec.clone(), BlockKind::Conv3).unwrap();
+    let svc = InferenceService::start_factory(
+        || {
+            let rt = Runtime::cpu()?;
+            let art = rt.load_named(&artifacts_dir(), "lenet_q8")?;
+            PjrtExecutor::from_artifact(art)
+        },
+        8,
+    );
+    let images = random_images(&spec, 5, 0xBA7C);
+    for img in &images {
+        let im32: Vec<i32> = img.iter().map(|&v| v as i32).collect();
+        let got = svc.infer(im32).unwrap();
+        let want: Vec<i32> =
+            golden.infer(img).unwrap().into_iter().map(|v| v as i32).collect();
+        assert_eq!(got, want, "service path diverges from golden");
+    }
+    let stats = svc.stats().unwrap();
+    assert_eq!(stats.requests, 5);
+    svc.shutdown();
+}
+
+#[test]
+fn artifact_metadata_is_complete() {
+    if !artifacts_ready() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    for name in ["lenet_q8", "tiny_q8", "slim_q6"] {
+        let art = rt.load_named(&artifacts_dir(), name).unwrap();
+        assert_eq!(art.meta.get("kind"), Some("network"), "{name}");
+        assert!(art.meta.dims("input_shape").unwrap().len() == 4, "{name}");
+        assert!(art.meta.get("classes").is_some(), "{name}");
+    }
+}

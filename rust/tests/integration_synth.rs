@@ -1,0 +1,127 @@
+//! Integration: the full synthesis campaign and its statistical structure —
+//! the paper's §3.2/§3.3 pipeline over the real (default, jittered) sweep.
+
+use convkit::blocks::BlockKind;
+use convkit::stats::pearson;
+use convkit::synth::Resource;
+use convkit::synthdata::{run_sweep, SweepOptions};
+
+fn full_dataset() -> convkit::synthdata::Dataset {
+    run_sweep(&SweepOptions::default()).unwrap()
+}
+
+#[test]
+fn campaign_has_196_configs_per_block() {
+    let ds = full_dataset();
+    assert_eq!(ds.len(), 784);
+    for b in BlockKind::ALL {
+        assert_eq!(ds.for_block(b).len(), 196, "{b}");
+    }
+}
+
+#[test]
+fn dsp_counts_structural_everywhere() {
+    let ds = full_dataset();
+    for r in &ds.records {
+        assert_eq!(r.res.dsp, r.block.dsp_count(), "{:?}", r);
+    }
+}
+
+#[test]
+fn conv1_is_the_logic_block() {
+    // Table 2's qualitative classes, quantified: at every configuration,
+    // Conv1 uses the most logic and zero DSPs; Conv2 the least logic of the
+    // DSP blocks at 8/8.
+    let ds = full_dataset();
+    for d in [3u32, 8, 16] {
+        for c in [3u32, 8, 16] {
+            let llut = |b: BlockKind| ds.get(b, d, c).unwrap().res.llut;
+            // The d·c array multiplier grows fast: ≥2x Conv2 from 5 bits up,
+            // and still clearly bigger at the 3-bit floor.
+            let factor = if d >= 5 && c >= 5 { 2 } else { 1 };
+            assert!(
+                llut(BlockKind::Conv1) > factor * llut(BlockKind::Conv2),
+                "d={d} c={c}: {} vs {}",
+                llut(BlockKind::Conv1),
+                llut(BlockKind::Conv2)
+            );
+        }
+    }
+    let r8 = |b: BlockKind| ds.get(b, 8, 8).unwrap().res.llut;
+    assert!(r8(BlockKind::Conv2) <= r8(BlockKind::Conv3));
+    assert!(r8(BlockKind::Conv2) <= r8(BlockKind::Conv4));
+}
+
+#[test]
+fn paper_magnitude_anchors_at_8_8() {
+    // DESIGN.md §2 calibration: paper-reported magnitudes at 8-bit/8-bit.
+    let ds = full_dataset();
+    let r = |b: BlockKind| ds.get(b, 8, 8).unwrap().res;
+    let c1 = r(BlockKind::Conv1);
+    assert!((80..=220).contains(&c1.llut), "Conv1 LLUT {}", c1.llut); // paper 104
+    assert!((30..=70).contains(&c1.ff), "Conv1 FF {}", c1.ff); // paper 53
+    assert!((5..=30).contains(&c1.cchain), "Conv1 CChain {}", c1.cchain); // paper 9.3
+    let c2 = r(BlockKind::Conv2);
+    assert!((15..=45).contains(&c2.llut), "Conv2 LLUT {}", c2.llut); // paper ~25
+    let c4 = r(BlockKind::Conv4);
+    assert!((25..=60).contains(&c4.llut), "Conv4 LLUT {}", c4.llut); // paper ~37
+}
+
+#[test]
+fn table3_correlation_signs_and_magnitudes() {
+    let ds = full_dataset();
+    let corr = |b: BlockKind, res: Resource, which: usize| {
+        let (d, c, ys) = ds.columns(b);
+        let idx = Resource::ALL.iter().position(|&r| r == res).unwrap();
+        let x = if which == 0 { &d } else { &c };
+        pearson(x, &ys[idx])
+    };
+    // Conv1/Conv2: LLUT strongly correlated with BOTH widths (paper ~0.66-0.71).
+    for b in [BlockKind::Conv1, BlockKind::Conv2] {
+        assert!(corr(b, Resource::Llut, 0) > 0.5, "{b} d");
+        assert!(corr(b, Resource::Llut, 1) > 0.5, "{b} c");
+    }
+    // Conv1 near-symmetric (paper: 0.668 vs 0.672).
+    let (cd, cc) =
+        (corr(BlockKind::Conv1, Resource::Llut, 0), corr(BlockKind::Conv1, Resource::Llut, 1));
+    assert!((cd - cc).abs() < 0.15, "Conv1 symmetry: {cd} vs {cc}");
+    // Conv3: EXACTLY zero against data width, for every resource.
+    for res in Resource::ALL {
+        assert!(
+            corr(BlockKind::Conv3, res, 0).abs() < 1e-9,
+            "Conv3 {} vs d",
+            res.name()
+        );
+    }
+    // Conv2/Conv4 FF: zero vs data, ~1 vs coeff (paper 0.000 / 0.997).
+    for b in [BlockKind::Conv2, BlockKind::Conv4] {
+        assert!(corr(b, Resource::Ff, 0).abs() < 0.05, "{b} FF vs d");
+        assert!(corr(b, Resource::Ff, 1) > 0.95, "{b} FF vs c");
+    }
+}
+
+#[test]
+fn jitter_bounded_relative_to_exact() {
+    use convkit::blocks::{synthesize, ConvBlockConfig};
+    use convkit::synth::MapOptions;
+    for b in BlockKind::ALL {
+        for (d, c) in [(3, 3), (8, 8), (16, 16)] {
+            let cfg = ConvBlockConfig::new(b, d, c).unwrap();
+            let exact = synthesize(&cfg, &MapOptions::exact());
+            let jit = synthesize(&cfg, &MapOptions::default());
+            let rel = (jit.llut as f64 - exact.llut as f64).abs() / exact.llut.max(1) as f64;
+            assert!(rel <= 0.05, "{cfg}: jitter {rel}");
+            assert_eq!(jit.mlut, exact.mlut, "{cfg}: MLUT is structural");
+            assert_eq!(jit.cchain, exact.cchain, "{cfg}: CChain is structural");
+            assert_eq!(jit.dsp, exact.dsp, "{cfg}: DSP is structural");
+        }
+    }
+}
+
+#[test]
+fn every_netlist_in_the_sweep_validates() {
+    use convkit::synthdata::sweep_configs;
+    for cfg in sweep_configs(&SweepOptions::default()) {
+        cfg.elaborate().validate().unwrap_or_else(|e| panic!("{cfg}: {e}"));
+    }
+}

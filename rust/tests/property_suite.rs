@@ -1,0 +1,233 @@
+//! Property-based suite (via the in-crate `util::proptest` harness): the
+//! invariants that must hold for *every* configuration, not just the sampled
+//! corners.
+
+use convkit::blocks::{synthesize, BlockKind, ConvBlockConfig, FuncSim};
+use convkit::fixedpoint::{conv3x3_ref, QFormat, Rounding};
+use convkit::synth::MapOptions;
+use convkit::util::proptest::{forall, shrink_pair, Config};
+use convkit::util::rng::SplitMix64;
+
+fn cfg_of(kind: BlockKind, d: i64, c: i64) -> ConvBlockConfig {
+    ConvBlockConfig::new(kind, d as u32, c as u32).unwrap()
+}
+
+fn width_pair() -> impl Fn(&mut SplitMix64) -> (i64, i64) {
+    |rng| (rng.range_i64(3, 16), rng.range_i64(3, 16))
+}
+
+#[test]
+fn prop_every_block_funcsim_matches_reference() {
+    // For any widths, any shift, any stimulus: all four functional
+    // simulators compute exactly conv3x3_ref. (Conv3 constrained to its
+    // packed-arithmetic domain.)
+    for kind in BlockKind::ALL {
+        forall(
+            &Config { cases: 48, ..Default::default() },
+            &format!("{kind} funcsim == reference"),
+            width_pair(),
+            shrink_pair(3),
+            |&(d, c)| {
+                let (d, c) = if kind == BlockKind::Conv3 { (d.min(8), c.min(8)) } else { (d, c) };
+                let cfg = cfg_of(kind, d, c).with_shift((c / 2) as u32);
+                let dq = cfg.data_q();
+                let cq = cfg.coeff_q();
+                let mut rng = SplitMix64::new((d * 100 + c) as u64);
+                let n_sets = if kind == BlockKind::Conv4 { 2 } else { 1 };
+                let sets: Vec<[i64; 9]> = (0..n_sets)
+                    .map(|_| std::array::from_fn(|_| rng.range_i64(cq.min(), cq.max())))
+                    .collect();
+                let windows: Vec<[i64; 9]> = (0..6)
+                    .map(|_| std::array::from_fn(|_| rng.range_i64(dq.min(), dq.max())))
+                    .collect();
+                let mut sim = FuncSim::new(cfg);
+                sim.load_coefficients(&sets).map_err(|e| e.to_string())?;
+                let out = sim.process(&windows).map_err(|e| e.to_string())?;
+                for (lane, set) in out.lanes.iter().zip(sets.iter().cycle()) {
+                    for (i, win) in windows.iter().enumerate() {
+                        let want = conv3x3_ref(win, set, dq, cq, cfg.shift, Rounding::Floor)
+                            .map_err(|e| e.to_string())?;
+                        if lane[i] != want {
+                            return Err(format!("window {i}: {} != {want}", lane[i]));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_resources_monotone_in_widths_exact_mapping() {
+    // With jitter off, widening either operand never shrinks any resource
+    // (Conv3's data width exempted: it is structurally inert there).
+    for kind in BlockKind::ALL {
+        forall(
+            &Config { cases: 40, ..Default::default() },
+            &format!("{kind} resource monotonicity"),
+            |rng| (rng.range_i64(3, 15), rng.range_i64(3, 15)),
+            shrink_pair(3),
+            |&(d, c)| {
+                let base = synthesize(&cfg_of(kind, d, c), &MapOptions::exact());
+                let wd = synthesize(&cfg_of(kind, d + 1, c), &MapOptions::exact());
+                let wc = synthesize(&cfg_of(kind, d, c + 1), &MapOptions::exact());
+                for (label, a, b) in [
+                    ("llut+d", base.llut, wd.llut),
+                    ("llut+c", base.llut, wc.llut),
+                    ("mlut+d", base.mlut, wd.mlut),
+                    ("mlut+c", base.mlut, wc.mlut),
+                    ("ff+c", base.ff, wc.ff),
+                ] {
+                    if b < a {
+                        return Err(format!("{label}: {a} -> {b}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_narrow_bounds_and_monotone() {
+    // narrow() output always lies in range, and is monotone in the input.
+    forall(
+        &Config { cases: 200, ..Default::default() },
+        "narrow bounds + monotonicity",
+        |rng| (rng.range_i64(2, 16), rng.range_i64(0, 20)),
+        shrink_pair(0),
+        |&(bits, shift)| {
+            let bits = bits.max(2);
+            let q = QFormat::new(bits as u32).map_err(|e| e.to_string())?;
+            let mut rng = SplitMix64::new((bits * 31 + shift) as u64);
+            let mut prev_in = i64::MIN;
+            let mut prev_out = i64::MIN;
+            let mut samples: Vec<i64> =
+                (0..50).map(|_| rng.range_i64(-(1 << 30), 1 << 30)).collect();
+            samples.sort_unstable();
+            for v in samples {
+                let out = q.narrow(v, shift as u32, Rounding::Floor);
+                if !q.contains(out) {
+                    return Err(format!("out of range: narrow({v}) = {out}"));
+                }
+                if v >= prev_in && out < prev_out {
+                    return Err(format!("non-monotone at {v}"));
+                }
+                prev_in = v;
+                prev_out = out;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_allocator_never_exceeds_budget() {
+    use convkit::allocate::allocate_mix;
+    use convkit::platform::Platform;
+    use convkit::synth::ResourceVector;
+    forall(
+        &Config { cases: 60, ..Default::default() },
+        "allocator respects budgets",
+        |rng| (rng.range_i64(1, 500), rng.range_i64(0, 3)),
+        shrink_pair(0),
+        |&(scale, dsp)| {
+            let unit = [
+                ResourceVector::new(scale as u64 + 50, 20, 40, 5, 0),
+                ResourceVector::new(25, 30, 21, 0, dsp.max(1) as u64),
+                ResourceVector::new(36, 28, 22, 0, 1),
+                ResourceVector::new(37, 40, 25, 0, 2),
+            ];
+            let p = Platform::zcu104();
+            let mix = allocate_mix(&unit, &p, 0.8).map_err(|e| e.to_string())?;
+            if !mix.usage(&unit).fits_within(&p.capped_budget(0.8)) {
+                return Err(format!("over budget: {mix:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_polyfit_recovers_planted_linear_models() {
+    use convkit::stats::PolyModel;
+    forall(
+        &Config { cases: 60, ..Default::default() },
+        "polyfit recovers planted coefficients",
+        |rng| (rng.range_i64(-50, 50), rng.range_i64(-50, 50)),
+        shrink_pair(-50),
+        |&(a, b)| {
+            let a = a as f64 / 10.0;
+            let b = b as f64 / 10.0;
+            let samples: Vec<(f64, f64, f64)> = (3..=16)
+                .flat_map(|d| {
+                    (3..=16).map(move |c| {
+                        (d as f64, c as f64, 7.5 + a * d as f64 + b * c as f64)
+                    })
+                })
+                .collect();
+            let m = PolyModel::fit(&samples, 1).map_err(|e| e.to_string())?;
+            let got_a = m.terms.iter().find(|t| t.dx == 1).map(|t| t.coef).unwrap_or(0.0);
+            let got_b = m.terms.iter().find(|t| t.cx == 1).map(|t| t.coef).unwrap_or(0.0);
+            if (got_a - a).abs() > 1e-8 || (got_b - b).abs() > 1e-8 {
+                return Err(format!("recovered ({got_a}, {got_b}) != planted ({a}, {b})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_segmented_fit_never_worse_than_single_line() {
+    use convkit::stats::SegmentedModel;
+    forall(
+        &Config { cases: 60, ..Default::default() },
+        "segmented >= single-line quality",
+        |rng| (rng.range_i64(1, 1000), rng.range_i64(2, 6)),
+        shrink_pair(1),
+        |&(seed, segs)| {
+            let mut rng = SplitMix64::new(seed as u64);
+            let pts: Vec<(f64, f64)> = (3..=16)
+                .map(|c| (c as f64, rng.range_i64(0, 100) as f64))
+                .collect();
+            let one = SegmentedModel::fit(&pts, 1).map_err(|e| e.to_string())?;
+            let multi = SegmentedModel::fit(&pts, segs as usize).map_err(|e| e.to_string())?;
+            if multi.r2 + 1e-9 < one.r2 {
+                return Err(format!("multi {} < single {}", multi.r2, one.r2));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_golden_cnn_logits_bounded() {
+    // For any input, logits are bounded by (relu-max · spatial) >> head_shift
+    // and non-negative — the saturation discipline holds through the net.
+    use convkit::cnn::{zoo, GoldenCnn};
+    let net = GoldenCnn::new(zoo::lenet_ish(), BlockKind::Conv2).unwrap();
+    let spec = net.spec.clone();
+    let q = QFormat::new(spec.layers[0].data_bits).unwrap();
+    let (oh, ow) = spec.out_hw();
+    let bound = (q.max() * (oh * ow) as i64) >> spec.head_shift;
+    forall(
+        &Config { cases: 24, ..Default::default() },
+        "golden logits bounded",
+        |rng| (rng.range_i64(0, 1 << 30), 0i64),
+        |_| vec![],
+        |&(seed, _)| {
+            let mut rng = SplitMix64::new(seed as u64);
+            let img: Vec<i64> = (0..spec.in_h * spec.in_w)
+                .map(|_| rng.range_i64(q.min(), q.max()))
+                .collect();
+            let logits = net.infer(&img).map_err(|e| e.to_string())?;
+            for &l in &logits {
+                if l < 0 || l > bound {
+                    return Err(format!("logit {l} outside [0, {bound}]"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
