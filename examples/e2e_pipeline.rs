@@ -80,6 +80,10 @@ fn main() -> convkit::Result<()> {
     );
 
     // ---- Stage 3: PJRT deployment + bit-exact verification ---------------
+    if !convkit::runtime::runtime_available() {
+        eprintln!("built without the `pjrt` feature: rebuild with --features pjrt for stage 3");
+        std::process::exit(1);
+    }
     let art_path = artifacts_dir().join("lenet_q8.hlo.txt");
     if !art_path.exists() {
         eprintln!("artifacts missing ({}): run `make artifacts` first", art_path.display());

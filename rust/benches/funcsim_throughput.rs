@@ -16,7 +16,7 @@ fn main() {
     let mut b = Bench::new();
     for kind in BlockKind::ALL {
         let cfg = ConvBlockConfig::new(kind, 8, 8).unwrap().with_shift(4);
-        let n_sets = if kind == BlockKind::Conv4 { 2 } else { 1 };
+        let n_sets = kind.block().required_coeff_sets();
         let sets = vec![coeffs; n_sets];
         let mut sim = FuncSim::new(cfg);
         sim.load_coefficients(&sets).unwrap();

@@ -1,38 +1,28 @@
-//! Bench: the PJRT deployment path — artifact load/compile and batched
-//! inference throughput/latency (the L3 serving hot path). Skips gracefully
-//! when `make artifacts` has not run.
+//! Bench: the deployment/serving hot path, with a machine-readable baseline.
+//!
+//! Always benches the golden (block-simulator) serving path — serial vs
+//! parallel batch fan-out — and additionally the PJRT artifact path when
+//! `make artifacts` has run. Every run writes `BENCH_runtime.json` at the
+//! repo root so future PRs have a perf trajectory to compare against.
 
 use convkit::blocks::BlockKind;
 use convkit::cnn::{zoo, GoldenCnn};
-use convkit::coordinator::service::{BatchExecutor, PjrtExecutor};
+use convkit::coordinator::service::{BatchExecutor, GoldenExecutor, PjrtExecutor};
 use convkit::runtime::{artifacts_dir, Runtime};
 use convkit::util::bench::Bench;
 use convkit::util::rng::SplitMix64;
+use std::path::PathBuf;
+
+fn baseline_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_runtime.json")
+}
 
 fn main() {
     println!("=== bench: runtime_conv ===");
-    let dir = artifacts_dir();
-    if !dir.join("lenet_q8.hlo.txt").exists() {
-        println!("SKIP: artifacts missing (run `make artifacts`)");
-        return;
-    }
-    let rt = Runtime::cpu().expect("pjrt cpu");
     let mut b = Bench::quick();
-    b.run("load_compile_conv3x3_q8", || rt.load_named(&dir, "conv3x3_q8").unwrap().name.len());
-    b.run("load_compile_lenet_q8", || rt.load_named(&dir, "lenet_q8").unwrap().name.len());
 
-    // Kernel execution.
-    let kernel = rt.load_named(&dir, "conv3x3_q8").unwrap();
-    let plane: Vec<i32> = (0..256).map(|i| (i % 200) - 100).collect();
-    let coeffs: Vec<i32> = (0..9).map(|i| i * 7 - 30).collect();
-    let mut bk = Bench::new();
-    bk.run("execute_conv3x3_16x16", || {
-        kernel.run_i32(&[(&plane, &[16, 16]), (&coeffs, &[3, 3])]).unwrap()[0].len()
-    });
-
-    // Network batch execution: PJRT vs the golden block simulators.
+    // --- golden serving path (always available) ---
     let spec = zoo::lenet_ish();
-    let mut exec = PjrtExecutor::from_artifact(rt.load_named(&dir, "lenet_q8").unwrap()).unwrap();
     let q = 127i64;
     let mut rng = SplitMix64::new(42);
     let images: Vec<Vec<i32>> = (0..8)
@@ -40,22 +30,71 @@ fn main() {
             (0..spec.in_h * spec.in_w).map(|_| rng.range_i64(-q, q) as i32).collect()
         })
         .collect();
-    let mut bb = Bench::quick();
-    bb.run("pjrt_lenet_batch8", || exec.infer_batch(&images).unwrap().len());
-    let golden = GoldenCnn::new(spec, BlockKind::Conv2).unwrap();
-    let wide: Vec<Vec<i64>> =
-        images.iter().map(|im| im.iter().map(|&v| v as i64).collect()).collect();
-    bb.run("golden_lenet_batch8", || golden.infer_batch(&wide).unwrap().len());
-    if let (Some(p), Some(g)) = (bb.stats("pjrt_lenet_batch8"), bb.stats("golden_lenet_batch8")) {
+    let golden = GoldenCnn::new(spec.clone(), BlockKind::Conv2).unwrap();
+    let mut serial = GoldenExecutor::with_workers(golden.clone(), 1);
+    let mut parallel = GoldenExecutor::new(golden.clone());
+    b.run("golden_lenet_batch8_serial", || serial.infer_batch(&images).unwrap().len());
+    b.run("golden_lenet_batch8_parallel", || parallel.infer_batch(&images).unwrap().len());
+    if let (Some(s), Some(p)) = (
+        b.stats("golden_lenet_batch8_serial").cloned(),
+        b.stats("golden_lenet_batch8_parallel").cloned(),
+    ) {
         println!(
-            "-> batch-8 inference: PJRT {:.2} ms vs golden blocks {:.2} ms ({:.1}x)",
+            "-> golden batch-8: serial {:.2} ms vs {}-way parallel {:.2} ms ({:.2}x)",
+            s.mean_ns / 1e6,
+            parallel.parallelism(),
             p.mean_ns / 1e6,
-            g.mean_ns / 1e6,
-            g.mean_ns / p.mean_ns
+            s.mean_ns / p.mean_ns
         );
+    }
+
+    // --- PJRT artifact path (gated on `make artifacts`) ---
+    let dir = artifacts_dir();
+    if convkit::runtime::runtime_available() && dir.join("lenet_q8.hlo.txt").exists() {
+        let rt = Runtime::cpu().expect("pjrt cpu");
+        b.run("load_compile_conv3x3_q8", || {
+            rt.load_named(&dir, "conv3x3_q8").unwrap().name.len()
+        });
+        b.run("load_compile_lenet_q8", || rt.load_named(&dir, "lenet_q8").unwrap().name.len());
+
+        // Kernel execution.
+        let kernel = rt.load_named(&dir, "conv3x3_q8").unwrap();
+        let plane: Vec<i32> = (0..256).map(|i| (i % 200) - 100).collect();
+        let coeffs: Vec<i32> = (0..9).map(|i| i * 7 - 30).collect();
+        b.run("execute_conv3x3_16x16", || {
+            kernel.run_i32(&[(&plane, &[16, 16]), (&coeffs, &[3, 3])]).unwrap()[0].len()
+        });
+
+        // Network batch execution: PJRT vs the golden block simulators.
+        let mut exec =
+            PjrtExecutor::from_artifact(rt.load_named(&dir, "lenet_q8").unwrap()).unwrap();
+        b.run("pjrt_lenet_batch8", || exec.infer_batch(&images).unwrap().len());
+        if let (Some(p), Some(g)) =
+            (b.stats("pjrt_lenet_batch8"), b.stats("golden_lenet_batch8_serial"))
+        {
+            println!(
+                "-> batch-8 inference: PJRT {:.2} ms vs golden blocks {:.2} ms ({:.1}x)",
+                p.mean_ns / 1e6,
+                g.mean_ns / 1e6,
+                g.mean_ns / p.mean_ns
+            );
+            println!("-> PJRT throughput: {:.0} images/s", 8.0 * 1e9 / p.mean_ns);
+        }
+    } else {
         println!(
-            "-> PJRT throughput: {:.0} images/s",
-            8.0 * 1e9 / p.mean_ns
+            "NOTE: PJRT benches skipped ({})",
+            if convkit::runtime::runtime_available() {
+                "artifacts missing — run `make artifacts`"
+            } else {
+                "built without the `pjrt` feature"
+            }
         );
+    }
+
+    // --- perf-trajectory baseline ---
+    let path = baseline_path();
+    match b.write_json("runtime_conv", &path) {
+        Ok(()) => println!("baseline written to {}", path.display()),
+        Err(e) => eprintln!("could not write baseline {}: {e}", path.display()),
     }
 }

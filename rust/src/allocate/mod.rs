@@ -6,11 +6,15 @@
 //! * [`allocate_single`] — how many instances of ONE block fit (Table 5's
 //!   single-type rows);
 //! * [`allocate_mix`] — a greedy + hill-climbing mix: DSP-efficient blocks
-//!   first (`Conv3` delivers 2 convolutions per DSP), then the DSP-free
-//!   `Conv1` soaks up the remaining fabric (the Table 5 strategy row: "les
-//!   modèles ont été utilisés pour répartir stratégiquement les blocs ...
-//!   jusqu'à 80 % des ressources"), followed by a local search that trades
-//!   instances between kinds while it improves the objective.
+//!   first, the DSP-free fabric blocks last to soak up the remaining LUTs
+//!   (the Table 5 strategy row: "les modèles ont été utilisés pour répartir
+//!   stratégiquement les blocs ... jusqu'à 80 % des ressources"), followed by
+//!   a local search that trades instances between kinds while it improves
+//!   the objective.
+//!
+//! The greedy phase order is *derived from the registry* (lanes-per-DSP
+//! descending, DSP-free last), not hardcoded — a newly registered block
+//! slots into the strategy without edits here.
 //!
 //! All resource requirements come from the fitted models (NOT from synthesis)
 //! — that is the paper's point: allocation studies become closed-form.
@@ -21,11 +25,14 @@ use crate::platform::Platform;
 use crate::synth::ResourceVector;
 use crate::util::error::{Error, Result};
 
+/// Per-kind unit costs, indexed in [`BlockKind::ALL`] order.
+pub type UnitCosts = [ResourceVector; BlockKind::COUNT];
+
 /// An allocation result: instance counts per block kind.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct Allocation {
     /// Instances per kind, indexed in `BlockKind::ALL` order.
-    pub counts: [u64; 4],
+    pub counts: [u64; BlockKind::COUNT],
 }
 
 impl Allocation {
@@ -53,7 +60,7 @@ impl Allocation {
     }
 
     /// Aggregate resource usage given per-kind unit costs.
-    pub fn usage(&self, unit: &[ResourceVector; 4]) -> ResourceVector {
+    pub fn usage(&self, unit: &UnitCosts) -> ResourceVector {
         let mut acc = ResourceVector::default();
         for (i, &n) in self.counts.iter().enumerate() {
             acc += unit[i].scaled(n);
@@ -67,13 +74,27 @@ pub fn unit_costs(
     registry: &ModelRegistry,
     data_bits: u32,
     coeff_bits: u32,
-) -> Result<[ResourceVector; 4]> {
-    let mut out = [ResourceVector::default(); 4];
+) -> Result<UnitCosts> {
+    let mut out = [ResourceVector::default(); BlockKind::COUNT];
     for (i, kind) in BlockKind::ALL.iter().enumerate() {
         let cfg = ConvBlockConfig::new(*kind, data_bits, coeff_bits)?;
         out[i] = registry.predict(&cfg)?;
     }
     Ok(out)
+}
+
+/// The greedy insertion order, derived from the registry: DSP blocks by
+/// descending convolutions-per-DSP (ties to the fewer-DSP block), DSP-free
+/// blocks last (they soak up the fabric left over).
+pub fn greedy_order() -> Vec<BlockKind> {
+    let mut kinds: Vec<BlockKind> = BlockKind::ALL.to_vec();
+    kinds.sort_by_key(|k| {
+        let b = k.block();
+        let dsp = b.dsp_count();
+        let lanes_per_kdsp = b.convolutions_per_block() * 1000 / dsp.max(1);
+        (dsp == 0, std::cmp::Reverse(lanes_per_kdsp), dsp)
+    });
+    kinds
 }
 
 /// Max instances of a single kind under `cap` utilization of `platform`.
@@ -104,7 +125,7 @@ pub fn allocate_single(
 
 /// Greedy + local-search mixed allocation maximizing total convolutions.
 pub fn allocate_mix(
-    unit: &[ResourceVector; 4],
+    unit: &UnitCosts,
     platform: &Platform,
     cap: f64,
 ) -> Result<Allocation> {
@@ -116,11 +137,9 @@ pub fn allocate_mix(
         return Err(Error::Infeasible("empty allocation exceeds budget?".into()));
     }
 
-    // Phase 1 — greedy by convolutions-per-DSP, then convolutions-per-LLUT:
-    // Conv3 (2 conv / 1 DSP) > Conv4 (2 conv / 2 DSP) ≈ Conv2 (1 conv / 1 DSP);
-    // Conv1 last (0 DSP, fabric-bound).
-    let order = [BlockKind::Conv3, BlockKind::Conv2, BlockKind::Conv4, BlockKind::Conv1];
-    for kind in order {
+    // Phase 1 — greedy in registry-derived order (e.g. Conv3's 2 conv/DSP
+    // first, the DSP-free Conv1 last).
+    for kind in greedy_order() {
         // Binary-search the largest additional count that still fits.
         let mut lo = 0u64;
         let mut hi = 10_000_000u64;
@@ -179,15 +198,29 @@ pub fn allocate_mix(
 mod tests {
     use super::*;
 
-    fn paperish_units() -> [ResourceVector; 4] {
+    fn paperish_units() -> UnitCosts {
         // Magnitudes in the neighbourhood of the paper's 8-bit anchors:
-        // Conv1 ~104 LLUT / 0 DSP, Conv2 ~25/1, Conv3 ~36/1, Conv4 ~37/2.
+        // Conv1 ~104 LLUT / 0 DSP, Conv2 ~25/1, Conv3 ~36/1, Conv4 ~37/2,
+        // Conv2Act ~ Conv2 + an activation stage / 2 DSP.
         [
             ResourceVector::new(104, 35, 53, 10, 0),
             ResourceVector::new(25, 30, 21, 0, 1),
             ResourceVector::new(36, 28, 22, 0, 1),
             ResourceVector::new(37, 40, 25, 0, 2),
+            ResourceVector::new(60, 30, 45, 3, 2),
         ]
+    }
+
+    #[test]
+    fn greedy_order_is_registry_derived() {
+        let order = greedy_order();
+        assert_eq!(order.len(), BlockKind::COUNT);
+        // Conv3 (2 conv / 1 DSP) leads; the DSP-free Conv1 closes.
+        assert_eq!(order[0], BlockKind::Conv3);
+        assert_eq!(*order.last().unwrap(), BlockKind::Conv1);
+        // Conv2 (1 conv / 1 DSP) precedes Conv2Act (1 conv / 2 DSP).
+        let pos = |k: BlockKind| order.iter().position(|&o| o == k).unwrap();
+        assert!(pos(BlockKind::Conv2) < pos(BlockKind::Conv2Act));
     }
 
     #[test]
@@ -246,6 +279,9 @@ mod tests {
         let mix = allocate_mix(&u, &p, 0.8).unwrap();
         assert!(mix.count(BlockKind::Conv3) >= 1000, "{mix:?}");
         assert!(mix.count(BlockKind::Conv1) >= 500, "{mix:?}");
+        // Conv2Act (1 conv / 2 DSP) is strictly dominated for this
+        // objective: the mix must not spend DSPs on it.
+        assert_eq!(mix.count(BlockKind::Conv2Act), 0, "{mix:?}");
     }
 
     #[test]

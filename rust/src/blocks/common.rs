@@ -1,86 +1,95 @@
 //! Block identity, configuration and the shared synthesis entry point.
+//!
+//! [`BlockKind`] is a pure *identity*: every behavioral question (names,
+//! DSP counts, lanes, widths, elaboration, simulation) is answered by the
+//! [`crate::blocks::ConvBlock`] implementation it resolves to through the
+//! registry — `BlockKind` itself contains no per-block `match` arms, so the
+//! library stays open for extension (see [`super::registry`]).
 
-use crate::fixedpoint::QFormat;
+use super::registry::{all_blocks, lookup, ConvBlock};
+use crate::fixedpoint::{QFormat, Rounding};
 use crate::netlist::Netlist;
+use crate::polyapprox::Activation;
 use crate::synth::{map_netlist, MapOptions, ResourceVector};
 use crate::util::error::{Error, Result};
 use std::fmt;
 
-/// Sweep bounds used throughout the paper (196 = 14 × 14 configurations).
+/// Sweep bounds used throughout the paper (196 = 14 × 14 configurations per
+/// block).
 pub const SWEEP_MIN_BITS: u32 = 3;
 /// Upper sweep bound (inclusive).
 pub const SWEEP_MAX_BITS: u32 = 16;
 
-/// Which of the paper's four blocks.
+/// Identity of a registered block microarchitecture.
+///
+/// The discriminant doubles as the index into [`super::registry::BLOCKS`]
+/// and into allocation count vectors, so `ALL` order, discriminant order and
+/// registry order must agree (test-enforced).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum BlockKind {
+    /// DSP-free sequential MAC through a fabric array multiplier.
     Conv1,
+    /// Single-DSP sequential MAC.
     Conv2,
+    /// Packed dual-lane DSP MAC (WP487).
     Conv3,
+    /// Two independent DSP MAC channels.
     Conv4,
+    /// `Conv2` datapath with a fused fixed-point polynomial activation stage.
+    Conv2Act,
 }
 
 impl BlockKind {
-    /// All blocks in paper order.
-    pub const ALL: [BlockKind; 4] =
+    /// Number of registered blocks.
+    pub const COUNT: usize = 5;
+
+    /// All blocks, in registry order (the four paper blocks first).
+    pub const ALL: [BlockKind; BlockKind::COUNT] = [
+        BlockKind::Conv1,
+        BlockKind::Conv2,
+        BlockKind::Conv3,
+        BlockKind::Conv4,
+        BlockKind::Conv2Act,
+    ];
+
+    /// The paper's original four blocks (Tables 2–5 parity subsets).
+    pub const PAPER: [BlockKind; 4] =
         [BlockKind::Conv1, BlockKind::Conv2, BlockKind::Conv3, BlockKind::Conv4];
+
+    /// Resolve to the registered implementation.
+    pub fn block(self) -> &'static dyn ConvBlock {
+        all_blocks()[self as usize]
+    }
 
     /// Paper-facing name (`Conv1`...).
     pub fn name(&self) -> &'static str {
-        match self {
-            BlockKind::Conv1 => "Conv1",
-            BlockKind::Conv2 => "Conv2",
-            BlockKind::Conv3 => "Conv3",
-            BlockKind::Conv4 => "Conv4",
-        }
+        self.block().name()
     }
 
-    /// Parse a (case-insensitive) name.
+    /// Parse a (case-insensitive) name or alias via the registry.
     pub fn parse(s: &str) -> Option<BlockKind> {
-        match s.to_ascii_lowercase().as_str() {
-            "conv1" | "conv_1" | "1" => Some(BlockKind::Conv1),
-            "conv2" | "conv_2" | "2" => Some(BlockKind::Conv2),
-            "conv3" | "conv_3" | "3" => Some(BlockKind::Conv3),
-            "conv4" | "conv_4" | "4" => Some(BlockKind::Conv4),
-            _ => None,
-        }
+        lookup(s)
     }
 
-    /// DSP slices per block instance (paper Table 2, exact by construction).
+    /// DSP slices per block instance (exact by construction).
     pub fn dsp_count(&self) -> u64 {
-        match self {
-            BlockKind::Conv1 => 0,
-            BlockKind::Conv2 | BlockKind::Conv3 => 1,
-            BlockKind::Conv4 => 2,
-        }
+        self.block().dsp_count()
     }
 
     /// Parallel convolution engines per block instance (Table 5's "Total
     /// Conv." column counts these).
     pub fn convolutions_per_block(&self) -> u64 {
-        match self {
-            BlockKind::Conv1 | BlockKind::Conv2 => 1,
-            BlockKind::Conv3 | BlockKind::Conv4 => 2,
-        }
+        self.block().convolutions_per_block()
     }
 
-    /// Initiation interval in cycles between accepted windows, per lane
-    /// (honest microarchitecture numbers; see module docs). All four blocks
-    /// are sequential 9-tap MACs (Conv1 through its fabric array multiplier,
-    /// the others through DSPs); the coefficient width is accepted for
-    /// forward-compatibility with digit-serial variants.
-    pub fn initiation_interval(&self, _c_bits: u32) -> u64 {
-        9
+    /// Initiation interval in cycles between accepted windows, per lane.
+    pub fn initiation_interval(&self, c_bits: u32) -> u64 {
+        self.block().initiation_interval(c_bits)
     }
 
-    /// Paper Table 2 qualitative "usage de la logique" class, regenerated and
-    /// asserted against actual synthesis in `report::table2`.
+    /// Table 2 qualitative "usage de la logique" class.
     pub fn logic_usage_class(&self) -> &'static str {
-        match self {
-            BlockKind::Conv1 => "high",
-            BlockKind::Conv2 => "low",
-            BlockKind::Conv3 | BlockKind::Conv4 => "moderate",
-        }
+        self.block().logic_usage_class()
     }
 }
 
@@ -90,7 +99,7 @@ impl fmt::Display for BlockKind {
     }
 }
 
-/// A fully-specified block instance: kind + operand widths.
+/// A fully-specified block instance: kind + operand widths + output stage.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ConvBlockConfig {
     /// Which microarchitecture.
@@ -102,15 +111,18 @@ pub struct ConvBlockConfig {
     /// Output right-shift applied before saturation (runtime parameter; does
     /// not affect resources — the shifter is fixed-width wiring).
     pub shift: u32,
+    /// Activation applied to each narrowed output. Defaults to the block's
+    /// fused stage (`Identity` for the plain conv blocks); the fused blocks'
+    /// netlists size their Horner datapath from this.
+    pub activation: Activation,
 }
 
 impl ConvBlockConfig {
     /// Validated constructor. Widths must lie in the sweep range 3..=16;
-    /// `Conv3` additionally clamps nothing here — data wider than 8 bits is
-    /// *accepted* and truncated to the fixed 8-bit DSP lanes, mirroring the
-    /// paper's sweep which synthesized all 196 configs for every block
-    /// ("Opérandes jusqu'à 8 bits" is a datapath property, not a generic
-    /// bound). Use [`Self::effective_data_bits`] for the numerics.
+    /// blocks with narrower datapaths (e.g. `Conv3`'s fixed 8-bit lanes)
+    /// *accept* wider requests and truncate, mirroring the paper's sweep
+    /// which synthesized all 196 configs for every block. Use
+    /// [`Self::effective_data_bits`] for the numerics.
     pub fn new(kind: BlockKind, data_bits: u32, coeff_bits: u32) -> Result<Self> {
         for (what, v) in [("data", data_bits), ("coeff", coeff_bits)] {
             if !(SWEEP_MIN_BITS..=SWEEP_MAX_BITS).contains(&v) {
@@ -119,7 +131,13 @@ impl ConvBlockConfig {
                 )));
             }
         }
-        Ok(ConvBlockConfig { kind, data_bits, coeff_bits, shift: 0 })
+        Ok(ConvBlockConfig {
+            kind,
+            data_bits,
+            coeff_bits,
+            shift: 0,
+            activation: kind.block().fused_activation(),
+        })
     }
 
     /// Builder-style shift setter.
@@ -128,13 +146,15 @@ impl ConvBlockConfig {
         self
     }
 
-    /// The data width the datapath actually honours (`Conv3` lanes are fixed
-    /// 8-bit).
+    /// Builder-style activation override.
+    pub fn with_activation(mut self, activation: Activation) -> Self {
+        self.activation = activation;
+        self
+    }
+
+    /// The data width the datapath actually honours.
     pub fn effective_data_bits(&self) -> u32 {
-        match self.kind {
-            BlockKind::Conv3 => self.data_bits.min(8),
-            _ => self.data_bits,
-        }
+        self.kind.block().effective_data_bits(self.data_bits)
     }
 
     /// Data format seen by the numerics.
@@ -147,6 +167,11 @@ impl ConvBlockConfig {
         QFormat::new(self.coeff_bits).expect("validated width")
     }
 
+    /// The block's output stage: shift right, saturate into the data format.
+    pub fn narrow_output(&self, acc: i64) -> i64 {
+        self.data_q().narrow(acc, self.shift, Rounding::Floor)
+    }
+
     /// Canonical design name (used for jitter seeding and reports).
     pub fn design_name(&self) -> String {
         format!("{}_d{}_c{}", self.kind.name().to_ascii_lowercase(), self.data_bits, self.coeff_bits)
@@ -154,12 +179,7 @@ impl ConvBlockConfig {
 
     /// Elaborate this configuration's structural netlist.
     pub fn elaborate(&self) -> Netlist {
-        match self.kind {
-            BlockKind::Conv1 => super::conv1::elaborate(self),
-            BlockKind::Conv2 => super::conv2::elaborate(self),
-            BlockKind::Conv3 => super::conv3::elaborate(self),
-            BlockKind::Conv4 => super::conv4::elaborate(self),
-        }
+        self.kind.block().elaborate(self)
     }
 
     /// Build the cycle-accurate functional simulator for this configuration.
@@ -194,7 +214,8 @@ mod tests {
             assert_eq!(BlockKind::parse(k.name()), Some(k));
         }
         assert_eq!(BlockKind::parse("CONV3"), Some(BlockKind::Conv3));
-        assert_eq!(BlockKind::parse("conv5"), None);
+        assert_eq!(BlockKind::parse("conv2act"), Some(BlockKind::Conv2Act));
+        assert_eq!(BlockKind::parse("conv9"), None);
     }
 
     #[test]
@@ -203,6 +224,7 @@ mod tests {
         assert_eq!(BlockKind::Conv2.dsp_count(), 1);
         assert_eq!(BlockKind::Conv3.dsp_count(), 1);
         assert_eq!(BlockKind::Conv4.dsp_count(), 2);
+        assert_eq!(BlockKind::Conv2Act.dsp_count(), 2, "conv MAC + Horner MAC");
     }
 
     #[test]
@@ -210,6 +232,7 @@ mod tests {
         assert_eq!(BlockKind::Conv1.convolutions_per_block(), 1);
         assert_eq!(BlockKind::Conv3.convolutions_per_block(), 2);
         assert_eq!(BlockKind::Conv4.convolutions_per_block(), 2);
+        assert_eq!(BlockKind::Conv2Act.convolutions_per_block(), 1);
     }
 
     #[test]
@@ -248,5 +271,23 @@ mod tests {
     fn shift_builder() {
         let c = ConvBlockConfig::new(BlockKind::Conv1, 8, 8).unwrap().with_shift(7);
         assert_eq!(c.shift, 7);
+    }
+
+    #[test]
+    fn default_activation_comes_from_the_block() {
+        for k in BlockKind::PAPER {
+            let c = ConvBlockConfig::new(k, 8, 8).unwrap();
+            assert_eq!(c.activation, Activation::Identity, "{k}");
+        }
+        let fused = ConvBlockConfig::new(BlockKind::Conv2Act, 8, 8).unwrap();
+        assert!(fused.activation.is_poly(), "{:?}", fused.activation);
+    }
+
+    #[test]
+    fn activation_builder_overrides() {
+        let c = ConvBlockConfig::new(BlockKind::Conv2, 8, 8)
+            .unwrap()
+            .with_activation(Activation::Relu);
+        assert_eq!(c.activation, Activation::Relu);
     }
 }

@@ -15,9 +15,85 @@
 //! * FF correlates with *both* widths (accumulator d+c, staging c) unlike the
 //!   DSP blocks, again as Table 3 shows.
 
-use super::common::ConvBlockConfig;
+use super::common::{BlockKind, ConvBlockConfig};
+use super::funcsim::SimOutput;
+use super::registry::ConvBlock;
 use crate::netlist::{Netlist, NetlistBuilder};
 use crate::synth::{adder, control, multiplier, storage};
+
+/// The registered `Conv1` implementation.
+pub struct Conv1Block;
+
+impl ConvBlock for Conv1Block {
+    fn kind(&self) -> BlockKind {
+        BlockKind::Conv1
+    }
+
+    fn name(&self) -> &'static str {
+        "Conv1"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["conv_1", "1"]
+    }
+
+    fn dsp_count(&self) -> u64 {
+        0
+    }
+
+    fn logic_usage_class(&self) -> &'static str {
+        "high"
+    }
+
+    /// The fabric array-multiplier datapath is carry-chain limited.
+    fn clock_mhz(&self) -> f64 {
+        350.0
+    }
+
+    fn elaborate(&self, cfg: &ConvBlockConfig) -> Netlist {
+        elaborate(cfg)
+    }
+
+    /// Sequential MAC through the fabric array multiplier. The product is
+    /// computed the way the Baugh-Wooley array does — partial products per
+    /// coefficient bit, the sign row subtracted — so this is a bit-level
+    /// emulation of the datapath, not a shortcut through `*`.
+    fn process(
+        &self,
+        cfg: &ConvBlockConfig,
+        coeff_sets: &[[i64; 9]],
+        windows: &[[i64; 9]],
+    ) -> SimOutput {
+        let c = cfg.coeff_bits;
+        let coeffs = &coeff_sets[0];
+        let mut outs = Vec::with_capacity(windows.len());
+        for win in windows {
+            let mut acc = 0i64; // fabric accumulator register
+            for tap in 0..9 {
+                // One multiplier pass per cycle: Σ_bits w_bit·(x << bit),
+                // MSB (two's-complement sign) row subtracted.
+                let w_bits = (coeffs[tap] as u64) & ((1u64 << c) - 1);
+                let mut product = 0i64;
+                for bit in 0..c {
+                    if (w_bits >> bit) & 1 == 1 {
+                        let pp = win[tap] << bit;
+                        if bit == c - 1 {
+                            product -= pp;
+                        } else {
+                            product += pp;
+                        }
+                    }
+                }
+                debug_assert_eq!(product, win[tap] * coeffs[tap], "array emulation broken");
+                acc += product;
+            }
+            outs.push(cfg.narrow_output(acc));
+        }
+        // One tap per cycle + pipeline fill (multiplier + accumulator regs).
+        let cycles = windows.len() as u64 * 9 + if windows.is_empty() { 0 } else { 3 };
+        SimOutput { lanes: vec![outs], cycles }
+    }
+}
 
 /// Internal streaming tile width the line buffers are sized for (a resource
 /// constant: the paper's blocks target a fixed camera line length).

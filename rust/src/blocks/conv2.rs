@@ -15,18 +15,90 @@
 //! * FF: `c` staging + control only;
 //! * DSP: exactly 1.
 
-use super::common::ConvBlockConfig;
-use crate::netlist::{Netlist, NetlistBuilder};
+use super::common::{BlockKind, ConvBlockConfig};
+use super::funcsim::SimOutput;
+use super::registry::ConvBlock;
+use crate::netlist::{Net, Netlist, NetlistBuilder};
 use crate::synth::{control, dsp, storage};
 
 /// Line-buffer depth (shared resource constant with `Conv1`).
 pub use super::conv1::LINE_DEPTH;
 
+/// The registered `Conv2` implementation.
+pub struct Conv2Block;
+
+impl ConvBlock for Conv2Block {
+    fn kind(&self) -> BlockKind {
+        BlockKind::Conv2
+    }
+
+    fn name(&self) -> &'static str {
+        "Conv2"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["conv_2", "2"]
+    }
+
+    fn dsp_count(&self) -> u64 {
+        1
+    }
+
+    fn logic_usage_class(&self) -> &'static str {
+        "low"
+    }
+
+    /// Closes timing near the DSP48E2 f_max region.
+    fn clock_mhz(&self) -> f64 {
+        550.0
+    }
+
+    fn elaborate(&self, cfg: &ConvBlockConfig) -> Netlist {
+        elaborate(cfg)
+    }
+
+    fn process(
+        &self,
+        cfg: &ConvBlockConfig,
+        coeff_sets: &[[i64; 9]],
+        windows: &[[i64; 9]],
+    ) -> SimOutput {
+        sequential_mac(cfg, &coeff_sets[0], windows)
+    }
+}
+
+/// The nine-cycle sequential MAC through the single DSP — shared with the
+/// fused `Conv2Act`, whose conv datapath is structurally identical.
+pub(super) fn sequential_mac(
+    cfg: &ConvBlockConfig,
+    coeffs: &[i64; 9],
+    windows: &[[i64; 9]],
+) -> SimOutput {
+    let mut outs = Vec::with_capacity(windows.len());
+    for win in windows {
+        let mut acc = 0i64; // DSP P register
+        for tap in 0..9 {
+            acc += win[tap] * coeffs[tap]; // one MAC per cycle
+        }
+        outs.push(cfg.narrow_output(acc));
+    }
+    let cycles = windows.len() as u64 * 9 + if windows.is_empty() { 0 } else { 4 };
+    SimOutput { lanes: vec![outs], cycles }
+}
+
 /// Elaborate the `Conv2` netlist.
 pub fn elaborate(cfg: &ConvBlockConfig) -> Netlist {
+    let mut b = NetlistBuilder::new(&cfg.design_name());
+    let _out = build_datapath(&mut b, cfg);
+    b.finish()
+}
+
+/// Build the `Conv2` datapath onto an existing builder, returning the
+/// saturated output bits (so the fused `Conv2Act` can chain its activation
+/// stage onto them).
+pub(super) fn build_datapath(b: &mut NetlistBuilder, cfg: &ConvBlockConfig) -> Vec<Net> {
     let d = cfg.data_bits as usize;
     let c = cfg.coeff_bits as usize;
-    let mut b = NetlistBuilder::new(&cfg.design_name());
 
     // --- I/O ---
     let pixel_in = b.top_input_bus(d);
@@ -92,15 +164,14 @@ pub fn elaborate(cfg: &ConvBlockConfig) -> Netlist {
     b.pop_scope();
     // No fabric output register: the result is taken from the DSP's hard P
     // register through the saturation muxes — the reason corr(FF, d) = 0.
-    let _ = out_bits;
 
     // --- control: tap counter (9 states), coefficient-load counter (9·c),
     // phase FSM ---
-    let (_tap_cnt, tap_tc) = control::counter(&mut b, "tap_cnt", 9);
-    let (_load_cnt, load_tc) = control::counter(&mut b, "load_cnt", 9 * c);
-    let _fsm = control::fsm_one_hot(&mut b, "ctl", 3, &[tap_tc, load_tc]);
+    let (_tap_cnt, tap_tc) = control::counter(b, "tap_cnt", 9);
+    let (_load_cnt, load_tc) = control::counter(b, "load_cnt", 9 * c);
+    let _fsm = control::fsm_one_hot(b, "ctl", 3, &[tap_tc, load_tc]);
 
-    b.finish()
+    out_bits
 }
 
 #[cfg(test)]

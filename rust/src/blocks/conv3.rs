@@ -18,12 +18,106 @@
 //!   exactly (paper Table 4: R² = 1.00, EAMP = 0.00 for `Conv3`);
 //! * the `c`-bit staging register again dominates FF (`corr(FF, c) ≈ 1`).
 
-use super::common::ConvBlockConfig;
+use super::common::{BlockKind, ConvBlockConfig};
+use super::funcsim::SimOutput;
+use super::registry::ConvBlock;
+use crate::fixedpoint::dot9;
 use crate::netlist::{Netlist, NetlistBuilder};
 use crate::synth::{control, dsp, storage};
 
 /// The fixed packed-lane width (WP487: two 8-bit lanes + guard in 27 bits).
 pub const LANE_BITS: usize = 8;
+
+/// The registered `Conv3` implementation.
+pub struct Conv3Block;
+
+impl ConvBlock for Conv3Block {
+    fn kind(&self) -> BlockKind {
+        BlockKind::Conv3
+    }
+
+    fn name(&self) -> &'static str {
+        "Conv3"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["conv_3", "3"]
+    }
+
+    fn dsp_count(&self) -> u64 {
+        1
+    }
+
+    fn convolutions_per_block(&self) -> u64 {
+        2
+    }
+
+    fn logic_usage_class(&self) -> &'static str {
+        "moderate"
+    }
+
+    /// The packed datapath's correction stage sits after the DSP.
+    fn clock_mhz(&self) -> f64 {
+        500.0
+    }
+
+    /// Packed arithmetic computes with ≤ 8-bit coefficients only.
+    fn max_coeff_bits(&self) -> u32 {
+        LANE_BITS as u32
+    }
+
+    /// The lanes are hard 8-bit regardless of the configured width.
+    fn effective_data_bits(&self, data_bits: u32) -> u32 {
+        data_bits.min(LANE_BITS as u32)
+    }
+
+    fn elaborate(&self, cfg: &ConvBlockConfig) -> Netlist {
+        elaborate(cfg)
+    }
+
+    /// Packed dual-lane arithmetic: adjacent windows are paired; both lanes
+    /// share the multiplier through the `lane0 + lane1·2^19` packing, the
+    /// high lane recovered with the borrow correction the fabric stage
+    /// implements.
+    fn process(
+        &self,
+        cfg: &ConvBlockConfig,
+        coeff_sets: &[[i64; 9]],
+        windows: &[[i64; 9]],
+    ) -> SimOutput {
+        const S: u32 = 19; // lane-1 offset inside the 27-bit A:D path
+        let coeffs = &coeff_sets[0];
+        let mut outs = Vec::with_capacity(windows.len());
+        let mut pairs = 0u64;
+        for pair in windows.chunks(2) {
+            let w0 = &pair[0];
+            let zero = [0i64; 9];
+            let w1 = pair.get(1).unwrap_or(&zero);
+            // The DSP accumulates the packed products over the nine taps.
+            let mut p = 0i64;
+            for tap in 0..9 {
+                let packed = w0[tap] + (w1[tap] << S);
+                p += packed * coeffs[tap];
+            }
+            // Lane extraction with borrow correction (the fabric fix stage):
+            // lo = sign-extended low S bits; hi = (p >> S) + (lo < 0).
+            let mask = (1i64 << S) - 1;
+            let lo_raw = p & mask;
+            let lo =
+                if lo_raw >= (1i64 << (S - 1)) { lo_raw - (1i64 << S) } else { lo_raw };
+            let hi = (p >> S) + i64::from(lo < 0);
+            debug_assert_eq!(lo, dot9(w0, coeffs), "lane-0 packing violated");
+            debug_assert_eq!(hi, dot9(w1, coeffs), "lane-1 packing violated");
+            outs.push(cfg.narrow_output(lo));
+            if pair.len() == 2 {
+                outs.push(cfg.narrow_output(hi));
+            }
+            pairs += 1;
+        }
+        let cycles = pairs * 9 + if windows.is_empty() { 0 } else { 4 };
+        SimOutput { lanes: vec![outs], cycles }
+    }
+}
 
 /// Elaborate the `Conv3` netlist.
 pub fn elaborate(cfg: &ConvBlockConfig) -> Netlist {

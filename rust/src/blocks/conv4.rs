@@ -13,9 +13,77 @@
 //! FF is again coefficient-only (`corr(FF, c) = 0.997` / `corr(FF, d) = 0`):
 //! the two `c`-bit staging registers plus control.
 
-use super::common::ConvBlockConfig;
+use super::common::{BlockKind, ConvBlockConfig};
+use super::funcsim::SimOutput;
+use super::registry::ConvBlock;
 use crate::netlist::{Netlist, NetlistBuilder};
 use crate::synth::{control, dsp, storage};
+
+/// The registered `Conv4` implementation.
+pub struct Conv4Block;
+
+impl ConvBlock for Conv4Block {
+    fn kind(&self) -> BlockKind {
+        BlockKind::Conv4
+    }
+
+    fn name(&self) -> &'static str {
+        "Conv4"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["conv_4", "4"]
+    }
+
+    fn dsp_count(&self) -> u64 {
+        2
+    }
+
+    fn convolutions_per_block(&self) -> u64 {
+        2
+    }
+
+    fn logic_usage_class(&self) -> &'static str {
+        "moderate"
+    }
+
+    fn clock_mhz(&self) -> f64 {
+        525.0
+    }
+
+    /// Two kernels per instance → two coefficient sets per load.
+    fn required_coeff_sets(&self) -> usize {
+        2
+    }
+
+    fn elaborate(&self, cfg: &ConvBlockConfig) -> Netlist {
+        elaborate(cfg)
+    }
+
+    /// Two independent MAC channels over the shared window.
+    fn process(
+        &self,
+        cfg: &ConvBlockConfig,
+        coeff_sets: &[[i64; 9]],
+        windows: &[[i64; 9]],
+    ) -> SimOutput {
+        let (c0, c1) = (&coeff_sets[0], &coeff_sets[1]);
+        let mut ch0 = Vec::with_capacity(windows.len());
+        let mut ch1 = Vec::with_capacity(windows.len());
+        for win in windows {
+            let mut a0 = 0i64;
+            let mut a1 = 0i64;
+            for tap in 0..9 {
+                a0 += win[tap] * c0[tap];
+                a1 += win[tap] * c1[tap];
+            }
+            ch0.push(cfg.narrow_output(a0));
+            ch1.push(cfg.narrow_output(a1));
+        }
+        let cycles = windows.len() as u64 * 9 + if windows.is_empty() { 0 } else { 4 };
+        SimOutput { lanes: vec![ch0, ch1], cycles }
+    }
+}
 
 /// Elaborate the `Conv4` netlist.
 pub fn elaborate(cfg: &ConvBlockConfig) -> Netlist {

@@ -1,31 +1,28 @@
-//! Bit- and cycle-accurate functional simulation of the four blocks.
+//! Bit- and cycle-accurate functional simulation driver.
 //!
-//! Each block's simulator executes the *microarchitectural* algorithm — not a
-//! shortcut through the reference convolution — so that agreement with
-//! [`crate::fixedpoint::conv3x3_ref`] is a real verification result:
+//! The per-block algorithms live with their blocks (each
+//! [`super::ConvBlock::process`] executes the *microarchitectural* recipe —
+//! Conv1's coefficient-bit-serial array emulation, Conv2's nine-cycle MAC,
+//! Conv3's packed-lane arithmetic with borrow correction, Conv4's dual
+//! channels — not a shortcut through the reference convolution, so agreement
+//! with [`crate::fixedpoint::conv3x3_ref`] is a real verification result).
 //!
-//! * `Conv1` runs the coefficient-bit-serial shift-add recurrence (two's
-//!   complement MSB handled as a subtraction), one coefficient bit per cycle;
-//! * `Conv2` runs the nine-cycle sequential MAC;
-//! * `Conv3` emulates the packed DSP arithmetic: both lanes share one
-//!   multiplier through the `x0 + x1·2^19` A:D packing, the high lane being
-//!   recovered with the borrow-correction the fabric stage implements;
-//! * `Conv4` runs two independent sequential MAC channels on the shared
-//!   window.
-//!
-//! Cycle accounting covers the serial coefficient load (one bit per cycle:
-//! `9·c` cycles, twice that for `Conv4`'s two channels) and the per-window
-//! initiation intervals of DESIGN.md §4.
+//! [`FuncSim`] is the block-agnostic driver: it validates coefficient /
+//! window ranges against the configuration, accounts the serial coefficient
+//! load (one bit per cycle: `9·c` per set), dispatches the window stream to
+//! the block, and applies the configuration's [`Activation`] to every
+//! narrowed output — the same fixed-point evaluation the fused blocks
+//! implement in hardware ([`crate::polyapprox`]).
 
-use super::common::{BlockKind, ConvBlockConfig};
-use crate::fixedpoint::{dot9, Rounding};
+use super::common::ConvBlockConfig;
+use crate::polyapprox::{stage_fill_cycles, Activation, BoundActivation};
 use crate::util::error::{Error, Result};
 
 /// Result of a [`FuncSim::process`] call.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SimOutput {
     /// Outputs per lane/channel:
-    /// * `Conv1`/`Conv2`: one lane, one output per window;
+    /// * single-lane blocks: one lane, one output per window;
     /// * `Conv3`: one logical lane (adjacent windows recombined in order);
     /// * `Conv4`: two channels, each with one output per window.
     pub lanes: Vec<Vec<i64>>,
@@ -39,12 +36,16 @@ pub struct FuncSim {
     cfg: ConvBlockConfig,
     coeff_sets: Vec<[i64; 9]>,
     total_cycles: u64,
+    /// The configured activation, bound to the effective data width.
+    act: BoundActivation,
 }
 
 impl FuncSim {
-    /// Create an unloaded simulator.
+    /// Create an unloaded simulator (fits the activation polynomial once, at
+    /// the configuration's effective data width).
     pub fn new(cfg: ConvBlockConfig) -> FuncSim {
-        FuncSim { cfg, coeff_sets: Vec::new(), total_cycles: 0 }
+        let act = cfg.activation.bind(cfg.effective_data_bits());
+        FuncSim { cfg, coeff_sets: Vec::new(), total_cycles: 0, act }
     }
 
     /// The configuration under simulation.
@@ -57,19 +58,17 @@ impl FuncSim {
         self.total_cycles
     }
 
-    /// Number of coefficient sets this block requires (2 for `Conv4`'s two
-    /// channels, 1 otherwise).
+    /// Number of coefficient sets this block requires (2 for dual-kernel
+    /// blocks, 1 otherwise).
     pub fn required_coeff_sets(&self) -> usize {
-        match self.cfg.kind {
-            BlockKind::Conv4 => 2,
-            _ => 1,
-        }
+        self.cfg.kind.block().required_coeff_sets()
     }
 
     /// Serially load coefficients (one bit per cycle, as the blocks'
-    /// "chargement série" pin does). Validates ranges; `Conv3` additionally
-    /// rejects coefficient widths beyond its 8-bit packed-arithmetic bound
-    /// (synthesis accepts them — the datapath cannot compute with them).
+    /// "chargement série" pin does). Validates ranges; blocks with a narrower
+    /// coefficient datapath (e.g. `Conv3`'s 8-bit packed arithmetic) reject
+    /// widths beyond it (synthesis accepts them — the datapath cannot compute
+    /// with them).
     pub fn load_coefficients(&mut self, sets: &[[i64; 9]]) -> Result<u64> {
         if sets.len() != self.required_coeff_sets() {
             return Err(Error::InvalidConfig(format!(
@@ -79,9 +78,10 @@ impl FuncSim {
                 sets.len()
             )));
         }
-        if self.cfg.kind == BlockKind::Conv3 && self.cfg.coeff_bits > 8 {
+        let max_c = self.cfg.kind.block().max_coeff_bits();
+        if self.cfg.coeff_bits > max_c {
             return Err(Error::InvalidConfig(format!(
-                "{}: packed arithmetic requires coefficients ≤ 8 bits (got {})",
+                "{}: datapath requires coefficients ≤ {max_c} bits (got {})",
                 self.cfg, self.cfg.coeff_bits
             )));
         }
@@ -120,128 +120,34 @@ impl FuncSim {
                 }
             }
         }
-        let out = match self.cfg.kind {
-            BlockKind::Conv1 => self.run_conv1(windows),
-            BlockKind::Conv2 => self.run_conv2(windows),
-            BlockKind::Conv3 => self.run_conv3(windows),
-            BlockKind::Conv4 => self.run_conv4(windows),
-        };
+        let mut out = self.cfg.kind.block().process(&self.cfg, &self.coeff_sets, windows);
+        // Activation stage on every narrowed output (pipelined: it adds fill
+        // latency, not initiation interval).
+        if self.cfg.activation != Activation::Identity {
+            for lane in &mut out.lanes {
+                for v in lane.iter_mut() {
+                    *v = self.act.apply(*v);
+                }
+            }
+        }
+        if !windows.is_empty() {
+            out.cycles += stage_fill_cycles(self.cfg.activation);
+        }
         self.total_cycles += out.cycles;
         Ok(out)
-    }
-
-    fn narrow(&self, acc: i64) -> i64 {
-        self.cfg.data_q().narrow(acc, self.cfg.shift, Rounding::Floor)
-    }
-
-    /// Conv1: sequential MAC through the fabric array multiplier. The product
-    /// is computed the way the Baugh-Wooley array does — partial products per
-    /// coefficient bit, the sign row subtracted — so this is a bit-level
-    /// emulation of the datapath, not a shortcut through `*`.
-    fn run_conv1(&self, windows: &[[i64; 9]]) -> SimOutput {
-        let c = self.cfg.coeff_bits;
-        let coeffs = &self.coeff_sets[0];
-        let mut outs = Vec::with_capacity(windows.len());
-        for win in windows {
-            let mut acc = 0i64; // fabric accumulator register
-            for tap in 0..9 {
-                // One multiplier pass per cycle: Σ_bits w_bit·(x << bit),
-                // MSB (two's-complement sign) row subtracted.
-                let w_bits = (coeffs[tap] as u64) & ((1u64 << c) - 1);
-                let mut product = 0i64;
-                for bit in 0..c {
-                    if (w_bits >> bit) & 1 == 1 {
-                        let pp = win[tap] << bit;
-                        if bit == c - 1 {
-                            product -= pp;
-                        } else {
-                            product += pp;
-                        }
-                    }
-                }
-                debug_assert_eq!(product, win[tap] * coeffs[tap], "array emulation broken");
-                acc += product;
-            }
-            outs.push(self.narrow(acc));
-        }
-        // One tap per cycle + pipeline fill (multiplier + accumulator regs).
-        let cycles = windows.len() as u64 * 9 + if windows.is_empty() { 0 } else { 3 };
-        SimOutput { lanes: vec![outs], cycles }
-    }
-
-    /// Conv2: nine-cycle sequential MAC through the single DSP.
-    fn run_conv2(&self, windows: &[[i64; 9]]) -> SimOutput {
-        let coeffs = &self.coeff_sets[0];
-        let mut outs = Vec::with_capacity(windows.len());
-        for win in windows {
-            let mut acc = 0i64; // DSP P register
-            for tap in 0..9 {
-                acc += win[tap] * coeffs[tap]; // one MAC per cycle
-            }
-            outs.push(self.narrow(acc));
-        }
-        let cycles = windows.len() as u64 * 9 + if windows.is_empty() { 0 } else { 4 };
-        SimOutput { lanes: vec![outs], cycles }
-    }
-
-    /// Conv3: packed dual-lane arithmetic. Adjacent windows are paired; both
-    /// lanes share the multiplier through the `lane0 + lane1·2^19` packing.
-    fn run_conv3(&self, windows: &[[i64; 9]]) -> SimOutput {
-        const S: u32 = 19; // lane-1 offset inside the 27-bit A:D path
-        let coeffs = &self.coeff_sets[0];
-        let mut outs = Vec::with_capacity(windows.len());
-        let mut pairs = 0u64;
-        for pair in windows.chunks(2) {
-            let w0 = &pair[0];
-            let zero = [0i64; 9];
-            let w1 = pair.get(1).unwrap_or(&zero);
-            // The DSP accumulates the packed products over the nine taps.
-            let mut p = 0i64;
-            for tap in 0..9 {
-                let packed = w0[tap] + (w1[tap] << S);
-                p += packed * coeffs[tap];
-            }
-            // Lane extraction with borrow correction (the fabric fix stage):
-            // lo = sign-extended low S bits; hi = (p >> S) + (lo < 0).
-            let mask = (1i64 << S) - 1;
-            let lo_raw = p & mask;
-            let lo = if lo_raw >= (1i64 << (S - 1)) { lo_raw - (1i64 << S) } else { lo_raw };
-            let hi = (p >> S) + i64::from(lo < 0);
-            debug_assert_eq!(lo, dot9(w0, coeffs), "lane-0 packing violated");
-            debug_assert_eq!(hi, dot9(w1, coeffs), "lane-1 packing violated");
-            outs.push(self.narrow(lo));
-            if pair.len() == 2 {
-                outs.push(self.narrow(hi));
-            }
-            pairs += 1;
-        }
-        let cycles = pairs * 9 + if windows.is_empty() { 0 } else { 4 };
-        SimOutput { lanes: vec![outs], cycles }
-    }
-
-    /// Conv4: two independent MAC channels over the shared window.
-    fn run_conv4(&self, windows: &[[i64; 9]]) -> SimOutput {
-        let (c0, c1) = (&self.coeff_sets[0], &self.coeff_sets[1]);
-        let mut ch0 = Vec::with_capacity(windows.len());
-        let mut ch1 = Vec::with_capacity(windows.len());
-        for win in windows {
-            let mut a0 = 0i64;
-            let mut a1 = 0i64;
-            for tap in 0..9 {
-                a0 += win[tap] * c0[tap];
-                a1 += win[tap] * c1[tap];
-            }
-            ch0.push(self.narrow(a0));
-            ch1.push(self.narrow(a1));
-        }
-        let cycles = windows.len() as u64 * 9 + if windows.is_empty() { 0 } else { 4 };
-        SimOutput { lanes: vec![ch0, ch1], cycles }
     }
 }
 
 /// Convenience: run a whole image plane (rows × cols, row-major, "valid"
 /// padding) through a block and return the output plane(s): one plane for
-/// `Conv1..Conv3`, two (channels) for `Conv4`.
+/// single-lane blocks and `Conv3`, two (channels) for `Conv4`.
+///
+/// Windows are *streamed* through a rolling three-row view — one output row
+/// of windows is materialized at a time (`cols-2` windows) instead of the
+/// whole plane's `(rows-2)·(cols-2)`, which cuts peak memory by ~`rows/3`×
+/// and keeps the golden-model hot path in cache. Output values are identical
+/// to the all-at-once formulation (every window's result is independent;
+/// only pipeline-fill cycle accounting differs, by one fill per row).
 pub fn run_plane(
     cfg: &ConvBlockConfig,
     plane: &[i64],
@@ -257,26 +163,43 @@ pub fn run_plane(
     }
     let mut sim = FuncSim::new(*cfg);
     sim.load_coefficients(coeff_sets)?;
-    let mut windows = Vec::with_capacity((rows - 2) * (cols - 2));
+    let out_cols = cols - 2;
+    let mut lanes: Vec<Vec<i64>> = Vec::new();
+    let mut row_windows: Vec<[i64; 9]> = Vec::with_capacity(out_cols);
     for r in 0..rows - 2 {
-        for cc in 0..cols - 2 {
-            let mut w = [0i64; 9];
-            for dr in 0..3 {
-                for dc in 0..3 {
-                    w[dr * 3 + dc] = plane[(r + dr) * cols + (cc + dc)];
-                }
+        // Rolling three-row view over the plane; only this row's windows are
+        // ever materialized.
+        let (r0, r1, r2) = (
+            &plane[r * cols..(r + 1) * cols],
+            &plane[(r + 1) * cols..(r + 2) * cols],
+            &plane[(r + 2) * cols..(r + 3) * cols],
+        );
+        row_windows.clear();
+        for c in 0..out_cols {
+            row_windows.push([
+                r0[c], r0[c + 1], r0[c + 2],
+                r1[c], r1[c + 1], r1[c + 2],
+                r2[c], r2[c + 1], r2[c + 2],
+            ]);
+        }
+        let out = sim.process(&row_windows)?;
+        if lanes.is_empty() {
+            lanes = out.lanes;
+        } else {
+            for (lane, mut chunk) in lanes.iter_mut().zip(out.lanes) {
+                lane.append(&mut chunk);
             }
-            windows.push(w);
         }
     }
-    let out = sim.process(&windows)?;
-    Ok(out.lanes)
+    Ok(lanes)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fixedpoint::{conv3x3_plane_ref, conv3x3_ref, QFormat};
+    use crate::blocks::common::BlockKind;
+    use crate::fixedpoint::{conv3x3_plane_ref, conv3x3_ref, QFormat, Rounding};
+    use crate::polyapprox::FixedActivation;
     use crate::util::rng::SplitMix64;
 
     fn cfg(kind: BlockKind, d: u32, c: u32, shift: u32) -> ConvBlockConfig {
@@ -296,13 +219,13 @@ mod tests {
         let dq = cfg.data_q();
         let cq = cfg.coeff_q();
         let mut rng = SplitMix64::new(seed);
-        let n_sets = if kind == BlockKind::Conv4 { 2 } else { 1 };
+        let n_sets = kind.block().required_coeff_sets();
         let sets: Vec<[i64; 9]> = (0..n_sets).map(|_| rand_window(&mut rng, cq)).collect();
         let windows: Vec<[i64; 9]> = (0..10).map(|_| rand_window(&mut rng, dq)).collect();
         let mut sim = FuncSim::new(cfg);
         sim.load_coefficients(&sets).unwrap();
         let out = sim.process(&windows).unwrap();
-        for (lane, set) in out.lanes.iter().zip(if kind == BlockKind::Conv4 {
+        for (lane, set) in out.lanes.iter().zip(if n_sets == 2 {
             sets.clone()
         } else {
             vec![sets[0]; 1]
@@ -372,6 +295,43 @@ mod tests {
     }
 
     #[test]
+    fn conv2act_is_conv2_plus_fixed_activation() {
+        // The fused block's stream = activation(conv2's stream), bit for bit.
+        let fused = cfg(BlockKind::Conv2Act, 8, 8, 4);
+        let plain = cfg(BlockKind::Conv2, 8, 8, 4);
+        let act = match fused.activation {
+            Activation::Poly { f, degree } => FixedActivation::new(f, degree, 8),
+            other => panic!("Conv2Act must default to a polynomial stage, got {other:?}"),
+        };
+        let mut rng = SplitMix64::new(77);
+        let coeffs = rand_window(&mut rng, fused.coeff_q());
+        let windows: Vec<[i64; 9]> =
+            (0..12).map(|_| rand_window(&mut rng, fused.data_q())).collect();
+        let mut fsim = FuncSim::new(fused);
+        fsim.load_coefficients(&[coeffs]).unwrap();
+        let mut psim = FuncSim::new(plain);
+        psim.load_coefficients(&[coeffs]).unwrap();
+        let f_out = fsim.process(&windows).unwrap();
+        let p_out = psim.process(&windows).unwrap();
+        for (got, conv) in f_out.lanes[0].iter().zip(p_out.lanes[0].iter()) {
+            assert_eq!(*got, act.eval(*conv));
+        }
+        // The pipelined stage costs fill cycles, not initiation interval.
+        assert!(f_out.cycles > p_out.cycles);
+        assert!(f_out.cycles <= p_out.cycles + 8);
+    }
+
+    #[test]
+    fn relu_activation_clamps_stream() {
+        let c = cfg(BlockKind::Conv2, 8, 8, 0).with_activation(Activation::Relu);
+        let mut sim = FuncSim::new(c);
+        sim.load_coefficients(&[[-10; 9]]).unwrap();
+        let out = sim.process(&[[5i64; 9], [-5i64; 9]]).unwrap();
+        assert_eq!(out.lanes[0][0], 0, "negative conv output clamped");
+        assert!(out.lanes[0][1] > 0);
+    }
+
+    #[test]
     fn cycle_accounting_load_plus_process() {
         let mut sim = FuncSim::new(cfg(BlockKind::Conv2, 8, 8, 0));
         let load = sim.load_coefficients(&[[1; 9]]).unwrap();
@@ -419,7 +379,7 @@ mod tests {
     }
 
     #[test]
-    fn run_plane_matches_plane_reference_all_blocks() {
+    fn run_plane_matches_plane_reference_all_single_set_blocks() {
         let rows = 6;
         let cols = 7;
         let mut rng = SplitMix64::new(77);
@@ -450,6 +410,44 @@ mod tests {
             )
             .unwrap();
             assert_eq!(got[ch], want, "channel {ch}");
+        }
+    }
+
+    #[test]
+    fn streamed_plane_equals_batch_process() {
+        // The streaming row buffer must reproduce the all-windows-at-once
+        // result for every registered block, including odd window counts per
+        // row (cols-2 = 7 exercises Conv3's per-row half-pair padding, where
+        // streaming genuinely re-pairs windows relative to the batch run).
+        let rows = 9;
+        let cols = 9;
+        let mut rng = SplitMix64::new(41);
+        for kind in BlockKind::ALL {
+            let cfgk = cfg(kind, 8, 8, 2);
+            let dq = cfgk.data_q();
+            let plane: Vec<i64> =
+                (0..rows * cols).map(|_| rng.range_i64(dq.min(), dq.max())).collect();
+            let n_sets = kind.block().required_coeff_sets();
+            let sets: Vec<[i64; 9]> =
+                (0..n_sets).map(|_| rand_window(&mut rng, cfgk.coeff_q())).collect();
+            let streamed = run_plane(&cfgk, &plane, rows, cols, &sets).unwrap();
+            // All-at-once reference formulation.
+            let mut windows = Vec::new();
+            for r in 0..rows - 2 {
+                for c in 0..cols - 2 {
+                    let mut w = [0i64; 9];
+                    for dr in 0..3 {
+                        for dc in 0..3 {
+                            w[dr * 3 + dc] = plane[(r + dr) * cols + (c + dc)];
+                        }
+                    }
+                    windows.push(w);
+                }
+            }
+            let mut sim = FuncSim::new(cfgk);
+            sim.load_coefficients(&sets).unwrap();
+            let batch = sim.process(&windows).unwrap();
+            assert_eq!(streamed, batch.lanes, "{kind:?}");
         }
     }
 }

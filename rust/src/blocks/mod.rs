@@ -1,36 +1,63 @@
-//! The paper's library of four parametrizable 3×3 convolution blocks.
+//! The parametrizable convolution-block library: the paper's four blocks
+//! plus the fused conv+activation extension, behind a trait-based registry.
 //!
-//! Each block (paper Table 2) is implemented twice, from one microarchitecture
-//! description (DESIGN.md §4):
+//! Each block (paper Table 2, extended) is implemented from one
+//! microarchitecture description (DESIGN.md §4) with two faces, both behind
+//! the [`ConvBlock`] trait:
 //!
-//! * **netlist face** — `elaborate()` builds the structural netlist consumed by
-//!   the synthesis simulator; [`synthesize`] maps it to a
+//! * **netlist face** — `elaborate()` builds the structural netlist consumed
+//!   by the synthesis simulator; [`synthesize`] maps it to a
 //!   [`crate::synth::ResourceVector`].
-//! * **functional face** — a bit- and cycle-accurate simulator implementing
-//!   serial coefficient load, parallel window input and the exact fixed-point
-//!   output stage, validated against [`crate::fixedpoint::conv3x3_ref`] and,
-//!   end-to-end, against the PJRT-executed JAX model.
+//! * **functional face** — `process()` runs the bit- and cycle-accurate
+//!   simulation (serial coefficient load, parallel window input, the exact
+//!   fixed-point output stage), validated against
+//!   [`crate::fixedpoint::conv3x3_ref`] and, end-to-end, against the
+//!   PJRT-executed JAX model. [`FuncSim`] drives it and applies the
+//!   configured [`crate::polyapprox::Activation`].
 //!
-//! | block | DSP | datapath | initiation interval (cycles/output) |
-//! |-------|-----|----------|-------------------------------------|
-//! | `Conv1` | 0 | sequential MAC through ONE fabric array multiplier | 9 |
-//! | `Conv2` | 1 | sequential MAC through one DSP48E2 | 9 |
-//! | `Conv3` | 1 | two data lanes packed per DSP (WP487) | 9 / 2 outputs |
-//! | `Conv4` | 2 | two lanes, one DSP each | 9 / 2 outputs |
+//! | block | DSP | datapath | lanes | II (cycles/output) | activation |
+//! |-------|-----|----------|-------|--------------------|------------|
+//! | `Conv1` | 0 | sequential MAC through ONE fabric array multiplier | 1 | 9 | — |
+//! | `Conv2` | 1 | sequential MAC through one DSP48E2 | 1 | 9 | — |
+//! | `Conv3` | 1 | two data lanes packed per DSP (WP487) | 2 | 9 / 2 outputs | — |
+//! | `Conv4` | 2 | two lanes, one DSP each | 2 | 9 / 2 outputs | — |
+//! | `Conv2Act` | 2 | `Conv2` MAC + time-shared Horner DSP | 1 | 9 (+fill) | fused polynomial |
 //!
 //! The paper's Table 2 lists "une convolution par cycle" for `Conv1`/`Conv2`;
 //! no 1-DSP or 104-LUT datapath can sustain nine MACs per cycle, so we state
 //! the honest initiation intervals above and regenerate Table 2 with a
 //! footnote (`report::table2`).
+//!
+//! ## Architecture: the registry is the single dispatch point
+//!
+//! [`BlockKind`] is a pure identity; every behavioral question dispatches
+//! through [`registry::BLOCKS`] to a `ConvBlock` implementation. The
+//! downstream layers (`synthdata`, `models`, `allocate`, `cnn`, `report`,
+//! `cli`, `extend`) iterate [`BlockKind::ALL`] or call the delegating
+//! methods — none of them match on the enum.
+//!
+//! ### Adding a block (one file)
+//!
+//! 1. create `blocks/mynew.rs` with a unit struct implementing
+//!    [`ConvBlock`] — descriptors, `elaborate()`, `process()`;
+//! 2. add a `BlockKind::MyNew` variant, append it to `BlockKind::ALL`,
+//!    bump `BlockKind::COUNT`, and append the struct to
+//!    [`registry::BLOCKS`] (order must match — test-enforced);
+//! 3. done: the block appears in the default sweep, gets resource models
+//!    fitted, participates in allocation studies and deployment planning,
+//!    and parses on the CLI. `conv2act.rs` is the worked example.
 
 pub mod common;
+pub mod registry;
 pub mod conv1;
 pub mod conv2;
 pub mod conv3;
 pub mod conv4;
+pub mod conv2act;
 pub mod funcsim;
 
 pub use common::{
     synthesize, BlockKind, ConvBlockConfig, SWEEP_MAX_BITS, SWEEP_MIN_BITS,
 };
 pub use funcsim::{run_plane, FuncSim, SimOutput};
+pub use registry::{all_blocks, ConvBlock};

@@ -1,0 +1,173 @@
+//! The block registry — the library's single dispatch point.
+//!
+//! Every block microarchitecture implements [`ConvBlock`] (its functional
+//! face, its netlist face, and its scalar descriptors) and registers itself
+//! in [`BLOCKS`]. Everything downstream — the sweep, the model registry, the
+//! allocator, the planner, the report tables, the CLI — consumes blocks
+//! through [`BlockKind`]'s delegating methods or by iterating
+//! [`all_blocks`], never by matching on the enum.
+//!
+//! **Adding a block** therefore touches exactly one area: drop a new module
+//! in `blocks/` with a unit struct implementing [`ConvBlock`], add the enum
+//! variant, and append the struct to [`BLOCKS`] (the `ALL`/`BLOCKS` order
+//! must match — enforced by a test). No edits in `allocate/`, `models/`,
+//! `synthdata/`, `report/`, `cnn/` or `cli/` are needed; the new block shows
+//! up in DSE sweeps, resource tables and CLI output automatically.
+//! `Conv2Act` (fused conv + polynomial activation) is the demonstration.
+
+use super::common::{BlockKind, ConvBlockConfig, SWEEP_MAX_BITS};
+use super::funcsim::SimOutput;
+use crate::netlist::Netlist;
+use crate::polyapprox::Activation;
+
+/// One block microarchitecture: descriptors + both implementation faces.
+///
+/// Scalar descriptors default to the common case (single lane, one
+/// coefficient set, full sweep range, no fused activation); blocks override
+/// what differs.
+pub trait ConvBlock: Send + Sync {
+    /// The identity this implementation registers under.
+    fn kind(&self) -> BlockKind;
+
+    /// Paper-facing name (`Conv1`, …).
+    fn name(&self) -> &'static str;
+
+    /// Additional parse aliases (lower-case).
+    fn aliases(&self) -> &'static [&'static str] {
+        &[]
+    }
+
+    /// DSP48E2 slices per instance (structural; asserted against synthesis).
+    fn dsp_count(&self) -> u64;
+
+    /// Parallel convolution lanes per instance.
+    fn convolutions_per_block(&self) -> u64 {
+        1
+    }
+
+    /// Initiation interval in cycles between accepted windows.
+    fn initiation_interval(&self, _c_bits: u32) -> u64 {
+        9
+    }
+
+    /// Table 2 qualitative logic-usage class.
+    fn logic_usage_class(&self) -> &'static str;
+
+    /// Coefficient sets consumed per load (2 for dual-kernel blocks).
+    fn required_coeff_sets(&self) -> usize {
+        1
+    }
+
+    /// Widest coefficient the datapath can compute with (synthesis may accept
+    /// more — the paper swept all 196 configs for every block).
+    fn max_coeff_bits(&self) -> u32 {
+        SWEEP_MAX_BITS
+    }
+
+    /// The data width the datapath actually honours at a requested width.
+    fn effective_data_bits(&self, data_bits: u32) -> u32 {
+        data_bits
+    }
+
+    /// The activation stage fused into this block's output path
+    /// ([`Activation::Identity`] for the plain conv blocks). New
+    /// [`ConvBlockConfig`]s default to this.
+    fn fused_activation(&self) -> Activation {
+        Activation::Identity
+    }
+
+    /// Achievable fabric clock (MHz, UltraScale+ -2 speed grade).
+    fn clock_mhz(&self) -> f64;
+
+    /// Can this block execute one conv lane of a layer with the given
+    /// precision / channel structure / activation? The default accepts any
+    /// precision the datapath honours and any *layer-level* activation
+    /// (Identity/ReLU are free at the channel sum; polynomial activations get
+    /// a standalone stage priced by the planner). Fused-activation blocks
+    /// override this: they require their own activation and a single input
+    /// channel (the stage runs before the channel sum).
+    fn deployable(&self, data_bits: u32, coeff_bits: u32, _in_ch: usize, _act: Activation) -> bool {
+        coeff_bits <= self.max_coeff_bits() && self.effective_data_bits(data_bits) == data_bits
+    }
+
+    /// Netlist face: elaborate the structural netlist for one configuration.
+    fn elaborate(&self, cfg: &ConvBlockConfig) -> Netlist;
+
+    /// Functional face: bit/cycle-accurate processing of a window stream with
+    /// pre-validated coefficients. Outputs are the *narrowed conv results*;
+    /// the configured activation is applied by [`super::FuncSim`] on top.
+    fn process(&self, cfg: &ConvBlockConfig, coeff_sets: &[[i64; 9]], windows: &[[i64; 9]])
+        -> SimOutput;
+}
+
+/// The registered block library, in [`BlockKind::ALL`] order.
+pub static BLOCKS: [&'static dyn ConvBlock; BlockKind::COUNT] = [
+    &super::conv1::Conv1Block,
+    &super::conv2::Conv2Block,
+    &super::conv3::Conv3Block,
+    &super::conv4::Conv4Block,
+    &super::conv2act::Conv2ActBlock,
+];
+
+/// All registered blocks.
+pub fn all_blocks() -> &'static [&'static dyn ConvBlock] {
+    &BLOCKS
+}
+
+/// Parse a block name / alias (case-insensitive) through the registry.
+pub fn lookup(name: &str) -> Option<BlockKind> {
+    let lower = name.to_ascii_lowercase();
+    BLOCKS
+        .iter()
+        .find(|b| {
+            b.name().to_ascii_lowercase() == lower
+                || b.aliases().iter().any(|a| *a == lower)
+        })
+        .map(|b| b.kind())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_order_matches_kind_indices() {
+        // The registry is indexed by `kind as usize`; a mismatch here would
+        // silently dispatch to the wrong microarchitecture.
+        for (i, block) in BLOCKS.iter().enumerate() {
+            assert_eq!(block.kind() as usize, i, "{} out of order", block.name());
+        }
+        assert_eq!(BLOCKS.len(), BlockKind::ALL.len());
+    }
+
+    #[test]
+    fn names_are_unique() {
+        let mut names: Vec<&str> = BLOCKS.iter().map(|b| b.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), BLOCKS.len());
+    }
+
+    #[test]
+    fn lookup_finds_names_and_aliases() {
+        for b in BLOCKS {
+            assert_eq!(lookup(b.name()), Some(b.kind()));
+            for a in b.aliases() {
+                assert_eq!(lookup(a), Some(b.kind()), "alias {a}");
+            }
+        }
+        assert_eq!(lookup("not_a_block"), None);
+    }
+
+    #[test]
+    fn descriptors_are_consistent() {
+        for b in BLOCKS {
+            assert!(b.convolutions_per_block() >= 1);
+            assert!(b.required_coeff_sets() >= 1);
+            assert!(b.initiation_interval(8) >= 1);
+            assert!(b.clock_mhz() > 0.0);
+            assert!(b.max_coeff_bits() <= SWEEP_MAX_BITS);
+            assert!(!b.logic_usage_class().is_empty());
+        }
+    }
+}

@@ -96,7 +96,8 @@ fn engine_from(args: &ParsedArgs) -> Result<DseEngine> {
     let pool = if workers == 0 { JobPool::new() } else { JobPool::with_workers(workers) };
     let cache = args.get("cache").map(PathBuf::from).or_else(|| {
         // Default cache only for the full default sweep (otherwise stale).
-        if sweep.min_bits == 3 && sweep.max_bits == 16 && sweep.blocks.len() == 4 {
+        if sweep.min_bits == 3 && sweep.max_bits == 16 && sweep.blocks.len() == BlockKind::ALL.len()
+        {
             Some(PathBuf::from("data/sweep.csv"))
         } else {
             None
@@ -207,11 +208,17 @@ fn cmd_deploy(args: &ParsedArgs) -> Result<()> {
     let plan = plan_deployment(&net, &rep.registry, &plat, cap)?;
     println!("deployment plan for {name} on {} (cap {:.0}%):", plat.name, cap * 100.0);
     for lp in &plan.layers {
+        let stages = if lp.act_stages > 0 {
+            format!(" + {} act stage(s)", lp.act_stages)
+        } else {
+            String::new()
+        };
         println!(
-            "  layer {}: {} × {}   -> {}",
+            "  layer {}: {} × {}{}   -> {}",
             lp.layer,
             lp.instances,
             lp.block.name(),
+            stages,
             lp.footprint
         );
     }
@@ -259,8 +266,19 @@ fn cmd_serve(args: &ParsedArgs) -> Result<()> {
 
     let svc = if golden_only {
         let cnn = GoldenCnn::new(spec.clone(), BlockKind::Conv2)?;
-        InferenceService::start(GoldenExecutor { cnn }, batch)
+        InferenceService::start(GoldenExecutor::new(cnn), batch)
     } else {
+        // Fail with an actionable message before spinning up the worker:
+        // some zoo networks (e.g. the activation demo) are golden-only until
+        // `aot.py` compiles a matching artifact.
+        let art = artifacts_dir().join(format!("{name}.hlo.txt"));
+        if !art.exists() {
+            return Err(Error::Usage(format!(
+                "no AOT artifact for `{name}` ({} missing) — run `make artifacts`, or pass \
+                 --golden-only to serve through the block simulators",
+                art.display()
+            )));
+        }
         let name2 = name.clone();
         InferenceService::start_factory(
             move || {
@@ -296,8 +314,8 @@ fn cmd_serve(args: &ParsedArgs) -> Result<()> {
     let stats = svc.stats()?;
     println!("served {n_req} requests in {wall:.2}s ({:.1} req/s wall)", n_req as f64 / wall);
     println!(
-        "service stats: {} requests, {} batches, mean latency {:.2} ms, p95 {:.2} ms",
-        stats.requests, stats.batches, stats.mean_latency_ms, stats.p95_latency_ms
+        "service stats: {} requests, {} batches, mean latency {:.2} ms, p95 {:.2} ms, executor fan-out {}x",
+        stats.requests, stats.batches, stats.mean_latency_ms, stats.p95_latency_ms, stats.parallelism
     );
     println!("golden cross-check: {} mismatches / {n_req}", mismatches);
     svc.shutdown();

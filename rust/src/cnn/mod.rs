@@ -9,8 +9,14 @@
 //!
 //! ```text
 //! partial[ic] = narrow_d( conv3x3(in[ic], k[oc, ic]) >> s )      // per block
-//! out[oc]     = relu( sat_d( Σ_ic partial[ic] ) )                // channel sum
+//! out[oc]     = act( sat_d( Σ_ic partial[ic] ) )                 // channel sum
 //! ```
+//!
+//! where `act` is the layer's [`crate::polyapprox::Activation`]: identity,
+//! exact ReLU (the artifact networks), or a fixed-point polynomial stage
+//! (sigmoid/tanh/SiLU) evaluated with the very same
+//! [`crate::polyapprox::FixedActivation`] numerics the fused `Conv2Act`
+//! block implements in hardware.
 //!
 //! The *per-block narrowing before the channel sum* is deliberate: it is what
 //! a deployment built from the paper's blocks actually computes (each block

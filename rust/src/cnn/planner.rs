@@ -1,12 +1,24 @@
 //! Deployment planner: map a network's convolutions onto block instances and
 //! predict the FPGA footprint with the fitted models — the paper's intended
 //! use ("faciliter l'adaptation des couches aux contraintes matérielles").
+//!
+//! Candidate blocks are *derived from the registry* per layer: every
+//! registered block that reports itself [`deployable`] for the layer's
+//! precision / channel structure / activation is considered, fused-activation
+//! matches first (they absorb the activation for free), then DSP-efficient
+//! blocks, the DSP-free fabric blocks last. A layer with a polynomial
+//! activation deployed on *plain* conv blocks additionally pays one
+//! standalone [`crate::polyapprox`] stage per output channel — which is how
+//! the DSE trades activation precision (degree) against resources.
+//!
+//! [`deployable`]: crate::blocks::ConvBlock::deployable
 
 use super::spec::NetworkSpec;
 use crate::allocate::unit_costs;
 use crate::blocks::BlockKind;
 use crate::models::ModelRegistry;
 use crate::platform::Platform;
+use crate::polyapprox::stage_cost;
 use crate::synth::ResourceVector;
 use crate::util::error::{Error, Result};
 
@@ -19,7 +31,10 @@ pub struct LayerPlan {
     pub block: BlockKind,
     /// Block instances needed (one per (oc, ic) kernel, ÷ lanes).
     pub instances: u64,
-    /// Model-predicted footprint of those instances.
+    /// Standalone activation-stage instances (0 when the activation is free
+    /// or fused into the chosen block).
+    pub act_stages: u64,
+    /// Model-predicted footprint of those instances (conv blocks + stages).
     pub footprint: ResourceVector,
 }
 
@@ -36,10 +51,8 @@ pub struct DeploymentPlan {
     pub fits: bool,
 }
 
-/// Plan a fully-parallel deployment (one block lane per kernel) choosing, per
-/// layer, the cheapest block kind that fits the layer's precision, preferring
-/// DSP efficiency until the DSP cap is reached and falling back to `Conv1`
-/// (the strategy behind the paper's Table 5 mix row).
+/// Plan a fully-parallel deployment (one block lane per kernel), choosing per
+/// layer the first registry candidate that fits.
 pub fn plan_deployment(
     net: &NetworkSpec,
     registry: &ModelRegistry,
@@ -53,20 +66,60 @@ pub fn plan_deployment(
     for (li, layer) in net.layers.iter().enumerate() {
         let units = unit_costs(registry, layer.data_bits, layer.coeff_bits)?;
         let kernels = layer.kernel_count() as u64;
-        // Candidate order: Conv3 (2 kernels/DSP — only if the precision fits
-        // its 8-bit lanes), Conv4 (2 kernels/2 DSP), Conv2, then Conv1.
-        let mut candidates: Vec<BlockKind> = Vec::new();
-        if layer.data_bits <= 8 && layer.coeff_bits <= 8 {
-            candidates.push(BlockKind::Conv3);
-        }
-        candidates.extend([BlockKind::Conv4, BlockKind::Conv2, BlockKind::Conv1]);
+        // Candidates: registry-filtered, fused-activation matches first, then
+        // by DSP efficiency with multi-lane blocks ahead of single-lane ties
+        // (fewer instances: Conv4 before Conv2 when Conv3 is out), DSP-free
+        // fabric blocks last. One sort key is the single source of truth for
+        // this ordering (the allocator's greedy_order optimizes a different
+        // objective — total convolutions — and is deliberately not reused).
+        let mut candidates: Vec<BlockKind> = BlockKind::ALL
+            .into_iter()
+            .filter(|k| {
+                k.block().deployable(
+                    layer.data_bits,
+                    layer.coeff_bits,
+                    layer.in_ch,
+                    layer.activation,
+                )
+            })
+            .collect();
+        candidates.sort_by_key(|k| {
+            let b = k.block();
+            let dsp = b.dsp_count();
+            let lanes = b.convolutions_per_block();
+            (
+                !b.fused_activation().is_poly(),
+                dsp == 0,
+                std::cmp::Reverse(lanes * 1000 / dsp.max(1)),
+                std::cmp::Reverse(lanes),
+                dsp,
+            )
+        });
         let mut chosen: Option<LayerPlan> = None;
         for kind in candidates {
             let lanes = kind.convolutions_per_block();
             let instances = kernels.div_ceil(lanes);
-            let fp = units[kind as usize].scaled(instances);
+            let mut fp = units[kind as usize].scaled(instances);
+            // Standalone activation stages: one per output channel, unless
+            // the block fuses the activation (then it is already in the
+            // block's own resource model).
+            let fused = kind.block().fused_activation().is_poly();
+            let act_stages = if layer.activation.is_poly() && !fused {
+                layer.out_ch as u64
+            } else {
+                0
+            };
+            if act_stages > 0 {
+                fp += stage_cost(layer.data_bits, layer.activation).scaled(act_stages);
+            }
             if (total + fp).fits_within(&budget) {
-                chosen = Some(LayerPlan { layer: li, block: kind, instances, footprint: fp });
+                chosen = Some(LayerPlan {
+                    layer: li,
+                    block: kind,
+                    instances,
+                    act_stages,
+                    footprint: fp,
+                });
                 break;
             }
         }
@@ -96,6 +149,7 @@ mod tests {
     use crate::coordinator::dse::DseEngine;
     use crate::coordinator::jobs::JobPool;
     use crate::models::SelectOptions;
+    use crate::polyapprox::{ActFn, Activation, PolyDegree};
     use crate::synthdata::SweepOptions;
 
     fn registry() -> ModelRegistry {
@@ -118,6 +172,8 @@ mod tests {
         // 1*4 + 4*10 = 44 kernels; Conv3 packs 2 per block → 2 + 20 instances.
         assert_eq!(plan.layers[0].instances, 2);
         assert_eq!(plan.layers[1].instances, 20);
+        // ReLU layers need no standalone activation stages.
+        assert!(plan.layers.iter().all(|l| l.act_stages == 0));
         assert!(plan.utilization[4] < 10.0, "DSP% {}", plan.utilization[4]);
     }
 
@@ -130,6 +186,9 @@ mod tests {
         net.layers[1].in_ch = 4;
         let plan = plan_deployment(&net, &reg, &Platform::zcu104(), 0.8).unwrap();
         assert_ne!(plan.layers[0].block, BlockKind::Conv3);
+        // With Conv3 out, the dual-lane Conv4 (half the instances of Conv2
+        // at the same DSP total) must keep its historical preference.
+        assert_eq!(plan.layers[0].block, BlockKind::Conv4);
     }
 
     #[test]
@@ -137,5 +196,48 @@ mod tests {
         let reg = registry();
         let err = plan_deployment(&zoo::lenet_ish(), &reg, &Platform::zcu104(), 0.0001);
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn sigmoid_layer_fuses_onto_conv2act_when_single_channel() {
+        let reg = registry();
+        let plan =
+            plan_deployment(&zoo::sigmoid_q8(), &reg, &Platform::zcu104(), 0.8).unwrap();
+        // Layer 0: in_ch = 1 + polynomial activation → the fused block, no
+        // standalone stages.
+        assert_eq!(plan.layers[0].block, BlockKind::Conv2Act);
+        assert_eq!(plan.layers[0].act_stages, 0);
+        // Layer 1: multi-channel → plain conv blocks + one stage per output
+        // channel.
+        assert_ne!(plan.layers[1].block, BlockKind::Conv2Act);
+        assert_eq!(plan.layers[1].act_stages, 6);
+        assert!(plan.fits);
+    }
+
+    #[test]
+    fn higher_degree_costs_more_resources() {
+        // The precision/resource trade the DSE exercises: degree-3 stages
+        // are strictly bigger than degree-2 on the same network. (tanh is
+        // never fused — Conv2Act bakes sigmoid — so both plans pay
+        // standalone stages on every layer and differ only in degree.)
+        let reg = registry();
+        let mut net2 = zoo::sigmoid_q8();
+        let mut net3 = zoo::sigmoid_q8();
+        for l in net2.layers.iter_mut() {
+            l.activation = Activation::Poly { f: ActFn::Tanh, degree: PolyDegree::Two };
+        }
+        for l in net3.layers.iter_mut() {
+            l.activation = Activation::Poly { f: ActFn::Tanh, degree: PolyDegree::Three };
+        }
+        net2.name = "tanh_d2".into();
+        net3.name = "tanh_d3".into();
+        let p2 = plan_deployment(&net2, &reg, &Platform::zcu104(), 0.8).unwrap();
+        let p3 = plan_deployment(&net3, &reg, &Platform::zcu104(), 0.8).unwrap();
+        assert!(
+            p3.total.llut > p2.total.llut,
+            "deg3 {} !> deg2 {}",
+            p3.total.llut,
+            p2.total.llut
+        );
     }
 }

@@ -1,5 +1,6 @@
 //! Network and layer descriptors.
 
+use crate::polyapprox::Activation;
 use crate::util::error::{Error, Result};
 use crate::util::rng::SplitMix64;
 
@@ -16,8 +17,9 @@ pub struct ConvLayerSpec {
     pub coeff_bits: u32,
     /// Right-shift applied by each block before saturation.
     pub shift: u32,
-    /// Apply ReLU after the channel sum.
-    pub relu: bool,
+    /// Activation applied after the channel sum (exact ReLU, or a
+    /// fixed-point polynomial stage from [`crate::polyapprox`]).
+    pub activation: Activation,
 }
 
 impl ConvLayerSpec {
@@ -130,7 +132,7 @@ mod tests {
     use super::*;
 
     fn layer(in_ch: usize, out_ch: usize) -> ConvLayerSpec {
-        ConvLayerSpec { in_ch, out_ch, data_bits: 8, coeff_bits: 8, shift: 4, relu: true }
+        ConvLayerSpec { in_ch, out_ch, data_bits: 8, coeff_bits: 8, shift: 4, activation: Activation::Relu }
     }
 
     fn net() -> NetworkSpec {

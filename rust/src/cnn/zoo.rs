@@ -4,6 +4,7 @@
 //! test below.
 
 use super::spec::{ConvLayerSpec, NetworkSpec};
+use crate::polyapprox::{ActFn, Activation, PolyDegree};
 
 /// The e2e driver's network: a LeNet-ish two-conv quantized classifier on
 /// 12×12 synthetic digits, 8-bit data / 8-bit coefficients.
@@ -15,8 +16,8 @@ pub fn lenet_ish() -> NetworkSpec {
         in_w: 12,
         in_ch: 1,
         layers: vec![
-            ConvLayerSpec { in_ch: 1, out_ch: 4, data_bits: 8, coeff_bits: 8, shift: 7, relu: true },
-            ConvLayerSpec { in_ch: 4, out_ch: 10, data_bits: 8, coeff_bits: 8, shift: 9, relu: true },
+            ConvLayerSpec { in_ch: 1, out_ch: 4, data_bits: 8, coeff_bits: 8, shift: 7, activation: Activation::Relu },
+            ConvLayerSpec { in_ch: 4, out_ch: 10, data_bits: 8, coeff_bits: 8, shift: 9, activation: Activation::Relu },
         ],
         head_shift: 6,
         seed: 0xC0DE_2025,
@@ -36,7 +37,7 @@ pub fn tiny() -> NetworkSpec {
             data_bits: 8,
             coeff_bits: 8,
             shift: 8,
-            relu: true,
+            activation: Activation::Relu,
         }],
         head_shift: 4,
         seed: 0xBEEF_2025,
@@ -52,17 +53,52 @@ pub fn slim_q6() -> NetworkSpec {
         in_w: 10,
         in_ch: 1,
         layers: vec![
-            ConvLayerSpec { in_ch: 1, out_ch: 3, data_bits: 6, coeff_bits: 6, shift: 6, relu: true },
-            ConvLayerSpec { in_ch: 3, out_ch: 6, data_bits: 6, coeff_bits: 6, shift: 8, relu: true },
+            ConvLayerSpec { in_ch: 1, out_ch: 3, data_bits: 6, coeff_bits: 6, shift: 6, activation: Activation::Relu },
+            ConvLayerSpec { in_ch: 3, out_ch: 6, data_bits: 6, coeff_bits: 6, shift: 8, activation: Activation::Relu },
         ],
         head_shift: 5,
         seed: 0x51E4_2025,
     }
 }
 
-/// All zoo networks (the artifact set `aot.py` compiles).
+/// Polynomial-activation demo: a two-layer sigmoid classifier. Layer 0
+/// (single input channel) is fusable onto `Conv2Act`; layer 1 needs a
+/// standalone post-sum activation stage per output channel — together they
+/// exercise both deployment paths of the activation subsystem. Golden-model
+/// only until `aot.py` grows a matching artifact.
+pub fn sigmoid_q8() -> NetworkSpec {
+    NetworkSpec {
+        name: "sigmoid_q8".into(),
+        in_h: 10,
+        in_w: 10,
+        in_ch: 1,
+        layers: vec![
+            ConvLayerSpec {
+                in_ch: 1,
+                out_ch: 4,
+                data_bits: 8,
+                coeff_bits: 8,
+                shift: 7,
+                activation: Activation::Poly { f: ActFn::Sigmoid, degree: PolyDegree::Two },
+            },
+            ConvLayerSpec {
+                in_ch: 4,
+                out_ch: 6,
+                data_bits: 8,
+                coeff_bits: 8,
+                shift: 9,
+                activation: Activation::Poly { f: ActFn::Sigmoid, degree: PolyDegree::Two },
+            },
+        ],
+        head_shift: 5,
+        seed: 0x516_2025,
+    }
+}
+
+/// All zoo networks (the artifact set `aot.py` compiles, plus the
+/// golden-model-only activation demo).
 pub fn all() -> Vec<NetworkSpec> {
-    vec![lenet_ish(), tiny(), slim_q6()]
+    vec![lenet_ish(), tiny(), slim_q6(), sigmoid_q8()]
 }
 
 #[cfg(test)]
@@ -93,6 +129,9 @@ mod tests {
         let s = slim_q6();
         assert_eq!(s.layers[0].data_bits, 6);
         assert_eq!(s.seed, 0x51E4_2025);
+        let g = sigmoid_q8();
+        assert_eq!(g.seed, 0x516_2025);
+        assert!(g.layers.iter().all(|l| l.activation.is_poly()));
     }
 
     #[test]

@@ -152,7 +152,7 @@ impl DseReport {
     }
 
     /// Unit costs at a precision (delegates to the registry's models).
-    pub fn unit_costs(&self, d: u32, c: u32) -> Result<[crate::synth::ResourceVector; 4]> {
+    pub fn unit_costs(&self, d: u32, c: u32) -> Result<crate::allocate::UnitCosts> {
         unit_costs(&self.registry, d, c)
     }
 }
@@ -160,6 +160,10 @@ impl DseReport {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn convkit_block_count() -> usize {
+        BlockKind::ALL.len()
+    }
 
     fn small_engine() -> DseEngine {
         DseEngine {
@@ -173,8 +177,8 @@ mod tests {
     #[test]
     fn pipeline_produces_models_and_timings() {
         let rep = small_engine().run().unwrap();
-        assert_eq!(rep.dataset.len(), 4 * 7 * 7);
-        assert_eq!(rep.registry.len(), 20);
+        assert_eq!(rep.dataset.len(), convkit_block_count() * 7 * 7);
+        assert_eq!(rep.registry.len(), convkit_block_count() * 5);
         assert!(rep.synth_seconds >= 0.0);
         assert!(rep.fit_seconds >= 0.0);
     }
@@ -226,7 +230,7 @@ mod tests {
     fn allocation_study_rows() {
         let rep = small_engine().run().unwrap();
         let rows = rep.allocation_study(&Platform::zcu104(), 8, 8, 0.8).unwrap();
-        assert_eq!(rows.len(), 5);
+        assert_eq!(rows.len(), 1 + convkit_block_count());
         assert_eq!(rows[0].0, "mix");
         // DSP-bound single rows: Conv2/Conv3 = 1382, Conv4 = 691 on ZCU104.
         assert_eq!(rows[2].1.count(BlockKind::Conv2), 1382);

@@ -21,32 +21,80 @@ pub trait BatchExecutor: 'static {
     fn infer_batch(&mut self, images: &[Vec<i32>]) -> Result<Vec<Vec<i32>>>;
     /// Executor label for metrics.
     fn label(&self) -> String;
+    /// Worker threads the executor fans a batch out over (1 = serial);
+    /// surfaced in [`ServiceStats::parallelism`].
+    fn parallelism(&self) -> usize {
+        1
+    }
 }
 
 /// Golden-model executor (block simulators; no artifacts needed).
+///
+/// Unlike the PJRT executable, the golden model is NOT thread-affine — it is
+/// pure data — so batches fan out over scoped threads, one chunk per worker
+/// (§Perf: the block-simulator hot path is embarrassingly parallel across
+/// images; the recorded [`ServiceStats::parallelism`] documents the
+/// speedup source).
 pub struct GoldenExecutor {
     /// The golden network.
     pub cnn: GoldenCnn,
+    /// Worker threads for batch fan-out (clamped to ≥ 1).
+    pub workers: usize,
+}
+
+impl GoldenExecutor {
+    /// Executor sized to the machine.
+    pub fn new(cnn: GoldenCnn) -> GoldenExecutor {
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        GoldenExecutor { cnn, workers }
+    }
+
+    /// Executor with an explicit worker count.
+    pub fn with_workers(cnn: GoldenCnn, workers: usize) -> GoldenExecutor {
+        GoldenExecutor { cnn, workers: workers.max(1) }
+    }
+
+    fn infer_one(cnn: &GoldenCnn, im: &[i32]) -> Result<Vec<i32>> {
+        let wide: Vec<i64> = im.iter().map(|&v| v as i64).collect();
+        Ok(cnn
+            .infer(&wide)?
+            .into_iter()
+            .map(|v| v.clamp(i32::MIN as i64, i32::MAX as i64) as i32)
+            .collect())
+    }
 }
 
 impl BatchExecutor for GoldenExecutor {
     fn infer_batch(&mut self, images: &[Vec<i32>]) -> Result<Vec<Vec<i32>>> {
-        images
-            .iter()
-            .map(|im| {
-                let wide: Vec<i64> = im.iter().map(|&v| v as i64).collect();
-                Ok(self
-                    .cnn
-                    .infer(&wide)?
-                    .into_iter()
-                    .map(|v| v.clamp(i32::MIN as i64, i32::MAX as i64) as i32)
-                    .collect())
-            })
-            .collect()
+        let workers = self.workers.max(1).min(images.len().max(1));
+        if workers <= 1 || images.len() <= 1 {
+            return images.iter().map(|im| Self::infer_one(&self.cnn, im)).collect();
+        }
+        let chunk = images.len().div_ceil(workers);
+        let cnn = &self.cnn;
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = images
+                .chunks(chunk)
+                .map(|ch| {
+                    scope.spawn(move || {
+                        ch.iter().map(|im| Self::infer_one(cnn, im)).collect::<Result<Vec<_>>>()
+                    })
+                })
+                .collect();
+            let mut out = Vec::with_capacity(images.len());
+            for h in handles {
+                out.extend(h.join().expect("golden worker panicked")?);
+            }
+            Ok(out)
+        })
     }
 
     fn label(&self) -> String {
         format!("golden:{}", self.cnn.spec.name)
+    }
+
+    fn parallelism(&self) -> usize {
+        self.workers.max(1)
     }
 }
 
@@ -134,6 +182,8 @@ pub struct ServiceStats {
     pub p95_latency_ms: f64,
     /// Requests per second over the service lifetime.
     pub throughput_rps: f64,
+    /// Executor-side batch fan-out (worker threads; 1 = serial executor).
+    pub parallelism: u64,
 }
 
 enum Msg {
@@ -185,6 +235,7 @@ impl InferenceService {
                 }
             };
             let started = Instant::now();
+            let parallelism = executor.parallelism() as u64;
             let mut latencies_us: Vec<u64> = Vec::new();
             let mut batches = 0u64;
             loop {
@@ -258,6 +309,7 @@ impl InferenceService {
                         mean_latency_ms: mean,
                         p95_latency_ms: p95,
                         throughput_rps: latencies_us.len() as f64 / elapsed,
+                        parallelism,
                     });
                 }
                 if shutdown {
@@ -314,7 +366,7 @@ mod tests {
 
     fn golden_service() -> (InferenceService, GoldenCnn) {
         let cnn = GoldenCnn::new(zoo::tiny(), BlockKind::Conv2).unwrap();
-        let svc = InferenceService::start(GoldenExecutor { cnn: cnn.clone() }, 4);
+        let svc = InferenceService::start(GoldenExecutor::new(cnn.clone()), 4);
         (svc, cnn)
     }
 
@@ -362,6 +414,29 @@ mod tests {
         assert_eq!(stats.requests, 12);
         assert!(stats.batches <= 12, "some batching should occur: {stats:?}");
         assert!(stats.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn parallel_batches_match_serial() {
+        let cnn = GoldenCnn::new(zoo::tiny(), BlockKind::Conv2).unwrap();
+        let images: Vec<Vec<i32>> = (0..9).map(|s| image(&cnn, 50 + s)).collect();
+        let mut serial = GoldenExecutor::with_workers(cnn.clone(), 1);
+        let mut parallel = GoldenExecutor::with_workers(cnn, 4);
+        assert_eq!(
+            serial.infer_batch(&images).unwrap(),
+            parallel.infer_batch(&images).unwrap()
+        );
+        assert_eq!(parallel.parallelism(), 4);
+    }
+
+    #[test]
+    fn stats_report_executor_parallelism() {
+        let cnn = GoldenCnn::new(zoo::tiny(), BlockKind::Conv2).unwrap();
+        let svc = InferenceService::start(GoldenExecutor::with_workers(cnn.clone(), 3), 4);
+        let _ = svc.infer(image(&cnn, 1)).unwrap();
+        let stats = svc.stats().unwrap();
+        assert_eq!(stats.parallelism, 3);
+        svc.shutdown();
     }
 
     #[test]

@@ -18,15 +18,10 @@ pub struct LatencyEstimate {
 }
 
 /// Achievable fabric clock per block kind (MHz, typical UltraScale+ -2 speed
-/// grade): DSP-datapath blocks close timing near the DSP48E2 f_max region;
-/// the Conv1 carry-chain datapath is fabric-limited.
+/// grade) — a registry delegate: DSP-datapath blocks close timing near the
+/// DSP48E2 f_max region; the Conv1 carry-chain datapath is fabric-limited.
 pub fn clock_mhz(kind: BlockKind) -> f64 {
-    match kind {
-        BlockKind::Conv1 => 350.0,
-        BlockKind::Conv2 => 550.0,
-        BlockKind::Conv3 => 500.0,
-        BlockKind::Conv4 => 525.0,
-    }
+    kind.block().clock_mhz()
 }
 
 /// Estimate inference latency of `net` mapped onto `kind` blocks.

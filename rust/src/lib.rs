@@ -11,19 +11,24 @@
 //!    LUT6 / CARRY8 / FDRE / SRL / DSP48E2 primitives and technology-mapped into
 //!    resource counts. This substitutes for Vivado 2024.2 (unavailable here);
 //!    see DESIGN.md §2 for the substitution argument.
-//! 2. [`blocks`] — the paper's four parametrizable 3×3 convolution IPs
-//!    (`Conv1..Conv4`), each both a netlist generator and a bit/cycle-accurate
-//!    functional simulator.
-//! 3. [`synthdata`] — the 196-configuration synthesis campaign (data / coefficient
-//!    widths 3..16 bits).
-//! 4. [`stats`] + [`models`] — Pearson correlation analysis, polynomial and
+//! 2. [`polyapprox`] — fixed-point polynomial activation approximation
+//!    (sigmoid/tanh/SiLU via degree-2/3 Horner), with coefficient fitting
+//!    against `f64` references, a netlist/synthesis cost model, and a
+//!    documented ULP accuracy contract.
+//! 3. [`blocks`] — the parametrizable 3×3 convolution IPs (`Conv1..Conv4`
+//!    plus the fused `Conv2Act`) behind a trait-based registry, each both a
+//!    netlist generator and a bit/cycle-accurate functional simulator.
+//! 4. [`synthdata`] — the 196-configuration-per-block synthesis campaign
+//!    (data / coefficient widths 3..16 bits).
+//! 5. [`stats`] + [`models`] — Pearson correlation analysis, polynomial and
 //!    segmented regression, Algorithm 1 model selection, error metrics.
-//! 5. [`platform`] + [`allocate`] — device catalog and the utilization-capped
+//! 6. [`platform`] + [`allocate`] — device catalog and the utilization-capped
 //!    block-mix optimizer (Table 5).
-//! 6. [`cnn`] + [`coordinator`] + [`runtime`] — the L3 deployment side: map a
+//! 7. [`cnn`] + [`coordinator`] + [`runtime`] — the L3 deployment side: map a
 //!    quantized CNN onto block allocations, and execute the AOT-compiled JAX/Pallas
-//!    model through PJRT to prove the fixed-point semantics end-to-end.
-//! 7. [`report`] — regenerates every table and figure of the paper's evaluation.
+//!    model through PJRT to prove the fixed-point semantics end-to-end
+//!    (PJRT behind the `pjrt` feature; stubbed otherwise).
+//! 8. [`report`] — regenerates every table and figure of the paper's evaluation.
 //!
 //! ## Quickstart
 //!
@@ -47,6 +52,7 @@ pub mod util;
 pub mod fixedpoint;
 pub mod netlist;
 pub mod synth;
+pub mod polyapprox;
 pub mod blocks;
 pub mod synthdata;
 pub mod stats;

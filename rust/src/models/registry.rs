@@ -128,10 +128,10 @@ mod tests {
     }
 
     #[test]
-    fn fits_all_twenty_models() {
+    fn fits_one_model_per_block_resource_pair() {
         let (_, reg) = small_registry();
-        assert_eq!(reg.len(), 4 * 5);
-        assert_eq!(reg.blocks().len(), 4);
+        assert_eq!(reg.len(), BlockKind::ALL.len() * 5);
+        assert_eq!(reg.blocks().len(), BlockKind::ALL.len());
     }
 
     #[test]

@@ -1,0 +1,130 @@
+//! One-dimensional least-squares polynomial fitting against an `f64`
+//! reference function — the "coefficient training" step of the activation
+//! subsystem. Reuses the Householder-QR solver from [`crate::stats::linalg`]
+//! (the same machinery that fits the resource models).
+
+use crate::stats::linalg::Mat;
+use crate::util::error::{Error, Result};
+
+/// Node placement for the fit grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodePlacement {
+    /// Uniformly spaced nodes (best for functions without boundary trouble).
+    Uniform,
+    /// Chebyshev nodes (denser near the interval ends, suppressing the
+    /// boundary overshoot of saturating functions).
+    Chebyshev,
+}
+
+/// Number of fit nodes (well above any supported degree; keeps the
+/// Vandermonde system heavily overdetermined and the QR well conditioned).
+pub const FIT_NODES: usize = 129;
+
+/// Fit nodes on `[lo, hi]`.
+pub fn nodes(lo: f64, hi: f64, n: usize, placement: NodePlacement) -> Vec<f64> {
+    let mid = 0.5 * (hi + lo);
+    let half = 0.5 * (hi - lo);
+    match placement {
+        NodePlacement::Uniform => {
+            (0..n).map(|i| lo + (hi - lo) * i as f64 / (n - 1) as f64).collect()
+        }
+        NodePlacement::Chebyshev => (0..n)
+            .map(|k| {
+                let theta = (2 * k + 1) as f64 * std::f64::consts::PI / (2 * n) as f64;
+                mid + half * theta.cos()
+            })
+            .collect(),
+    }
+}
+
+/// Least-squares fit of `f` by a degree-`degree` polynomial on `[lo, hi]`.
+/// Returns coefficients in increasing-power order (`c0 + c1·x + …`).
+pub fn fit_poly(
+    f: impl Fn(f64) -> f64,
+    degree: u32,
+    lo: f64,
+    hi: f64,
+    placement: NodePlacement,
+) -> Result<Vec<f64>> {
+    if !(lo < hi) {
+        return Err(Error::Numerical(format!("bad fit interval [{lo}, {hi}]")));
+    }
+    let xs = nodes(lo, hi, FIT_NODES, placement);
+    let cols = degree as usize + 1;
+    let mut data = Vec::with_capacity(xs.len() * cols);
+    let mut y = Vec::with_capacity(xs.len());
+    for &x in &xs {
+        let mut p = 1.0f64;
+        for _ in 0..cols {
+            data.push(p);
+            p *= x;
+        }
+        y.push(f(x));
+    }
+    let v = Mat::from_rows(xs.len(), cols, &data)?;
+    v.lstsq(&y)
+}
+
+/// Evaluate an increasing-power coefficient vector at `x` (Horner, `f64`).
+pub fn eval_poly(coeffs: &[f64], x: f64) -> f64 {
+    let mut acc = 0.0;
+    for &c in coeffs.iter().rev() {
+        acc = acc * x + c;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_polynomial_recovered() {
+        // f(x) = 1 - 2x + 0.5x² fits degree 2 exactly.
+        let c = fit_poly(|x| 1.0 - 2.0 * x + 0.5 * x * x, 2, -4.0, 4.0, NodePlacement::Uniform)
+            .unwrap();
+        assert!((c[0] - 1.0).abs() < 1e-9, "{c:?}");
+        assert!((c[1] + 2.0).abs() < 1e-9, "{c:?}");
+        assert!((c[2] - 0.5).abs() < 1e-9, "{c:?}");
+    }
+
+    #[test]
+    fn chebyshev_nodes_stay_inside_interval() {
+        let xs = nodes(-4.0, 4.0, FIT_NODES, NodePlacement::Chebyshev);
+        assert_eq!(xs.len(), FIT_NODES);
+        assert!(xs.iter().all(|&x| (-4.0..=4.0).contains(&x)));
+        // Denser near the ends than in the middle.
+        let near_end = xs.iter().filter(|&&x| x.abs() > 3.5).count();
+        let near_mid = xs.iter().filter(|&&x| x.abs() < 0.5).count();
+        assert!(near_end > near_mid, "{near_end} vs {near_mid}");
+    }
+
+    #[test]
+    fn sigmoid_cubic_fit_is_close() {
+        let c = fit_poly(
+            |x| 1.0 / (1.0 + (-x).exp()),
+            3,
+            -4.0,
+            4.0,
+            NodePlacement::Chebyshev,
+        )
+        .unwrap();
+        let worst = nodes(-4.0, 4.0, 400, NodePlacement::Uniform)
+            .into_iter()
+            .map(|x| (eval_poly(&c, x) - 1.0 / (1.0 + (-x).exp())).abs())
+            .fold(0.0f64, f64::max);
+        assert!(worst < 0.04, "cubic sigmoid max error {worst}");
+    }
+
+    #[test]
+    fn degenerate_interval_rejected() {
+        assert!(fit_poly(|x| x, 1, 2.0, 2.0, NodePlacement::Uniform).is_err());
+    }
+
+    #[test]
+    fn horner_eval_matches_direct() {
+        let c = [1.0, -0.5, 0.25];
+        let x = 1.7;
+        assert!((eval_poly(&c, x) - (1.0 - 0.5 * x + 0.25 * x * x)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,293 @@
+//! Bit-exact fixed-point Horner evaluation of the fitted activations.
+//!
+//! ## Number formats
+//!
+//! * **Input** — the d-bit block output `x`, interpreted as
+//!   `x_real = x / 2^(d-3)`, i.e. the domain is always `[-4, 4)` regardless
+//!   of the sweep width. Internally `x` is aligned (exactly, by left shift)
+//!   to `t` in Q3.[`ACT_CFRAC`].
+//! * **Coefficients / accumulator** — Q·[`ACT_CFRAC`] two's complement. Each
+//!   Horner step computes `acc = ((acc · t) >> ACT_CFRAC) + c_k` with a
+//!   truncating (floor) shift — exactly what the DSP datapath implements.
+//! * **Output** — sigmoid/tanh scale the accumulator onto the d-bit range
+//!   (`y = (acc · (2^(d-1)-1)) >> ACT_CFRAC`); SiLU stays in the *input's*
+//!   units (`y = acc >> (16 - d)`); everything saturates into d bits.
+//!
+//! `tanh` additionally hard-saturates for `|x_real| ≥ 1.75` (the polynomial
+//! is fitted only on the core interval; beyond it the function is within
+//! 0.002 of ±1) — the comparator the hardware stage implements anyway.
+//!
+//! The same `eval` is used by the block functional simulators and the CNN
+//! golden model, so HW/SW agreement is by construction; what the tests
+//! establish is agreement with the *`f64` reference* under the documented
+//! ULP bound.
+
+use super::fit::{fit_poly, NodePlacement};
+use super::{ActFn, PolyDegree};
+use crate::fixedpoint::QFormat;
+
+/// Fraction bits of the coefficient / accumulator format (Q·13: enough for
+/// the 3..=16 sweep — `t` alignment `x << (13 - (d-3))` is exact for every
+/// width, and the coefficient quantization error stays below the fit error).
+pub const ACT_CFRAC: u32 = 13;
+
+/// Documented worst-case relative error ε per (function, degree):
+/// `|eval(x) - round(f(x_real)·scale)| ≤ 2 + ceil(ε · 2^(d-1))` ULP for every
+/// d in 3..=16 and every representable x. Measured exhaustively across the
+/// sweep (see `tests::ulp_bound_holds_exhaustively`), then padded ~20 %.
+pub const ULP_EPS: [(ActFn, u32, f64); 6] = [
+    (ActFn::Sigmoid, 2, 0.13),
+    (ActFn::Sigmoid, 3, 0.035),
+    (ActFn::Tanh, 2, 0.21),
+    (ActFn::Tanh, 3, 0.075),
+    (ActFn::Silu, 2, 0.07),
+    (ActFn::Silu, 3, 0.07),
+];
+
+/// Look up the documented ε for a (function, degree) pair.
+pub fn ulp_eps(f: ActFn, degree: PolyDegree) -> f64 {
+    ULP_EPS
+        .iter()
+        .find(|(g, d, _)| *g == f && *d == degree.as_u32())
+        .map(|(_, _, e)| *e)
+        .expect("every supported pair is tabulated")
+}
+
+/// The saturation threshold for tanh (in x_real units): beyond it the stage
+/// outputs the clamped ±1 directly and the polynomial never runs.
+const TANH_SAT: f64 = 1.75;
+
+/// A fitted activation bound to one data width: quantized coefficients plus
+/// the format bookkeeping needed for bit-exact evaluation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FixedActivation {
+    f: ActFn,
+    degree: PolyDegree,
+    data_bits: u32,
+    /// Q·13 Horner coefficients, increasing power.
+    coeffs_q: Vec<i64>,
+    /// Hard-saturation threshold on `t` (Q3.13), if the function uses one.
+    sat_q: Option<i64>,
+    /// Accumulator clamp (Q·13) — the function's output range.
+    acc_clamp: (i64, i64),
+}
+
+impl FixedActivation {
+    /// Fit + quantize for one function, degree and data width.
+    ///
+    /// Width must be a valid [`QFormat`] width; the blocks' sweep guarantees
+    /// 3..=16 (the domain scale `2^(d-3)` assumes `d ≥ 3`).
+    pub fn new(f: ActFn, degree: PolyDegree, data_bits: u32) -> FixedActivation {
+        let one = (1i64) << ACT_CFRAC;
+        let (lo, hi, placement, sat_q, acc_clamp) = match f {
+            ActFn::Sigmoid => (-4.0, 4.0, NodePlacement::Chebyshev, None, (0, one)),
+            ActFn::Tanh => (
+                -TANH_SAT,
+                TANH_SAT,
+                NodePlacement::Chebyshev,
+                Some((TANH_SAT * one as f64) as i64),
+                (-one, one),
+            ),
+            // SiLU range on [-4, 4): min ≈ -0.2785, max < 4.
+            ActFn::Silu => (-4.0, 4.0, NodePlacement::Uniform, None, (-(one * 3 / 10), 4 * one)),
+        };
+        let coeffs = fit_poly(|x| f.eval_f64(x), degree.as_u32(), lo, hi, placement)
+            .expect("vandermonde system is full rank");
+        let coeffs_q: Vec<i64> =
+            coeffs.iter().map(|c| (c * one as f64).round() as i64).collect();
+        FixedActivation { f, degree, data_bits, coeffs_q, sat_q, acc_clamp }
+    }
+
+    /// The approximated function.
+    pub fn function(&self) -> ActFn {
+        self.f
+    }
+
+    /// The Horner degree.
+    pub fn degree(&self) -> PolyDegree {
+        self.degree
+    }
+
+    /// The bound data width.
+    pub fn data_bits(&self) -> u32 {
+        self.data_bits
+    }
+
+    /// Quantized coefficients (Q·13, increasing power) — exposed for the
+    /// netlist ROM and for inspection.
+    pub fn coeffs_q(&self) -> &[i64] {
+        &self.coeffs_q
+    }
+
+    fn out_q(&self) -> QFormat {
+        QFormat::new(self.data_bits).expect("validated width")
+    }
+
+    /// Bit-exact evaluation of one d-bit input.
+    pub fn eval(&self, x: i64) -> i64 {
+        let d = self.data_bits;
+        let xfrac = d - 3;
+        // Exact alignment into Q3.13.
+        let t = x << (ACT_CFRAC - xfrac);
+        let q = self.out_q();
+        let outmax = q.max();
+        // Hard saturation region (tanh): comparator bypasses the polynomial.
+        if let Some(sat) = self.sat_q {
+            if t >= sat {
+                return match self.f {
+                    ActFn::Tanh => outmax,
+                    _ => unreachable!("only tanh saturates"),
+                };
+            }
+            if t <= -sat {
+                return match self.f {
+                    ActFn::Tanh => -outmax,
+                    _ => unreachable!("only tanh saturates"),
+                };
+            }
+        }
+        // Integer Horner in Q·13 with truncating rescale per step.
+        let mut acc = *self.coeffs_q.last().expect("non-empty");
+        for &c in self.coeffs_q.iter().rev().skip(1) {
+            acc = ((acc * t) >> ACT_CFRAC) + c;
+        }
+        // Clamp onto the function's own range before output scaling.
+        acc = acc.clamp(self.acc_clamp.0, self.acc_clamp.1);
+        let y = match self.f {
+            // Map [0,1] / [-1,1] onto the d-bit range.
+            ActFn::Sigmoid | ActFn::Tanh => (acc * outmax) >> ACT_CFRAC,
+            // Same units as the input: Q·13 → Q·(d-3).
+            ActFn::Silu => acc >> (ACT_CFRAC - xfrac),
+        };
+        q.saturate(y)
+    }
+
+    /// The rounded `f64` reference the ULP bound is measured against.
+    pub fn reference(&self, x: i64) -> i64 {
+        let d = self.data_bits;
+        let xfrac = d - 3;
+        let q = self.out_q();
+        let x_real = x as f64 / (1u64 << xfrac) as f64;
+        let scale = match self.f {
+            ActFn::Sigmoid | ActFn::Tanh => q.max() as f64,
+            ActFn::Silu => (1u64 << xfrac) as f64,
+        };
+        q.saturate((self.f.eval_f64(x_real) * scale).round() as i64)
+    }
+
+    /// The documented ULP bound at this width:
+    /// `2 + ceil(ε · 2^(d-1))`.
+    pub fn ulp_bound(&self) -> i64 {
+        2 + (ulp_eps(self.f, self.degree) * (1u64 << (self.data_bits - 1)) as f64).ceil()
+            as i64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coefficients_are_q13_and_plausible() {
+        let a = FixedActivation::new(ActFn::Sigmoid, PolyDegree::Two, 8);
+        // σ(0) = 0.5 → c0 ≈ 0.5·2^13 = 4096.
+        assert_eq!(a.coeffs_q()[0], 4096, "{:?}", a.coeffs_q());
+        assert!(a.coeffs_q()[1] > 0, "sigmoid is increasing at 0");
+        // tanh is odd: even coefficients quantize to (near) zero.
+        let t = FixedActivation::new(ActFn::Tanh, PolyDegree::Three, 8);
+        assert!(t.coeffs_q()[0].abs() <= 1, "{:?}", t.coeffs_q());
+        assert!(t.coeffs_q()[2].abs() <= 1, "{:?}", t.coeffs_q());
+    }
+
+    #[test]
+    fn sigmoid_midpoint_and_saturation() {
+        let a = FixedActivation::new(ActFn::Sigmoid, PolyDegree::Three, 8);
+        // σ(0)·127 = 63.5 → 63 or 64.
+        let mid = a.eval(0);
+        assert!((63..=64).contains(&mid), "{mid}");
+        // Large |x| approaches the rails.
+        assert!(a.eval(120) >= 120, "{}", a.eval(120));
+        assert!(a.eval(-120) <= 3, "{}", a.eval(-120));
+        // Monotone-ish: big positive beats big negative by nearly full scale
+        // (the cubic pulls back slightly at the domain corners: 122 vs 4).
+        assert!(a.eval(127) - a.eval(-128) > 110);
+    }
+
+    #[test]
+    fn tanh_saturates_exactly_past_threshold() {
+        let a = FixedActivation::new(ActFn::Tanh, PolyDegree::Two, 8);
+        // x = 127 → x_real ≈ 3.97 ≥ 1.75 → exactly +127.
+        assert_eq!(a.eval(127), 127);
+        assert_eq!(a.eval(-128), -127);
+    }
+
+    #[test]
+    fn silu_tracks_identity_for_large_inputs() {
+        let a = FixedActivation::new(ActFn::Silu, PolyDegree::Two, 8);
+        // silu(3.5) ≈ 3.396 → in Q·5 units: ≈ 108.7 at x = 112.
+        let y = a.eval(112);
+        assert!((104..=113).contains(&y), "{y}");
+        // Negative side is small but nonzero.
+        let yn = a.eval(-32); // x_real = -1, silu = -0.269 → ≈ -9
+        assert!((-12..=-6).contains(&yn), "{yn}");
+    }
+
+    #[test]
+    fn ulp_bound_holds_exhaustively() {
+        // The module's accuracy contract, enforced over EVERY representable
+        // input of EVERY sweep width for EVERY (function, degree).
+        for f in ActFn::ALL {
+            for degree in [PolyDegree::Two, PolyDegree::Three] {
+                for d in 3..=16u32 {
+                    let a = FixedActivation::new(f, degree, d);
+                    let bound = a.ulp_bound();
+                    let q = QFormat::new(d).unwrap();
+                    let mut worst = 0i64;
+                    for x in q.min()..=q.max() {
+                        let err = (a.eval(x) - a.reference(x)).abs();
+                        worst = worst.max(err);
+                    }
+                    assert!(
+                        worst <= bound,
+                        "{}{} d={d}: worst {worst} > bound {bound}",
+                        f.name(),
+                        degree.as_u32()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degree_three_is_tighter_than_degree_two() {
+        for f in [ActFn::Sigmoid, ActFn::Tanh] {
+            let d2 = FixedActivation::new(f, PolyDegree::Two, 12);
+            let d3 = FixedActivation::new(f, PolyDegree::Three, 12);
+            let q = QFormat::new(12).unwrap();
+            let worst = |a: &FixedActivation| {
+                (q.min()..=q.max())
+                    .map(|x| (a.eval(x) - a.reference(x)).abs())
+                    .max()
+                    .unwrap()
+            };
+            assert!(
+                worst(&d3) < worst(&d2),
+                "{}: deg3 {} !< deg2 {}",
+                f.name(),
+                worst(&d3),
+                worst(&d2)
+            );
+        }
+    }
+
+    #[test]
+    fn output_always_in_range() {
+        let q = QFormat::new(6).unwrap();
+        for f in ActFn::ALL {
+            let a = FixedActivation::new(f, PolyDegree::Two, 6);
+            for x in q.min()..=q.max() {
+                assert!(q.contains(a.eval(x)), "{} eval({x})", f.name());
+            }
+        }
+    }
+}

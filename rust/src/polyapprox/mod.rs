@@ -1,0 +1,222 @@
+//! Fixed-point polynomial activation approximation — the paper title's second
+//! half ("… et d'Approximations Polynomiales") as a first-class subsystem.
+//!
+//! FPGA CNN dataflows fuse the nonlinearity into the convolution engine's
+//! output stage (Abdelouahab et al.'s survey calls this the standard layout);
+//! E-methodHW-style work shows polynomial/rational evaluation is its own
+//! hardware subsystem with its own resource trade-offs. This module provides
+//! all three faces of that subsystem, mirroring how [`crate::blocks`] treats
+//! convolution:
+//!
+//! * **numerics** ([`fixed`]) — degree-2/3 Horner evaluation of sigmoid /
+//!   tanh / SiLU in two's-complement fixed point, with coefficients fitted
+//!   against the `f64` reference by least squares ([`fit`]) and quantized to
+//!   Q·13. The input scale is fixed at `x_real = x / 2^(d-3)` (domain
+//!   `[-4, 4)`), so every sweep width 3..=16 shares one coefficient set.
+//! * **netlist face** ([`stage`]) — the Horner datapath as a structural
+//!   netlist (one time-shared DSP48E2 + coefficient ROM + output scaling),
+//!   mappable by [`crate::synth`] exactly like a convolution block.
+//! * **deployment face** — [`Activation`] rides on
+//!   [`crate::blocks::ConvBlockConfig`] and [`crate::cnn::ConvLayerSpec`]; the
+//!   fused `Conv2Act` block bakes the stage into its netlist, and the planner
+//!   accounts a standalone stage per output channel otherwise.
+//!
+//! ## Accuracy contract
+//!
+//! [`fixed::FixedActivation::eval`] differs from the rounded `f64` reference
+//! by at most `2 + ceil(ε · 2^(d-1))` ULP of the d-bit output, with ε per
+//! (function, degree) documented in [`fixed::ULP_EPS`] (measured worst case
+//! across the full 3..=16 sweep, plus margin). The bound is enforced
+//! exhaustively by `fixed::tests` and by the property suite.
+
+pub mod fit;
+pub mod fixed;
+pub mod stage;
+
+pub use fixed::{ulp_eps, FixedActivation, ACT_CFRAC, ULP_EPS};
+pub use stage::{build_stage, elaborate_stage, stage_cost, stage_fill_cycles};
+
+use std::fmt;
+
+/// The approximated nonlinearities (plus exact ReLU at the [`Activation`]
+/// level, which needs no polynomial).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ActFn {
+    /// Logistic sigmoid, output mapped onto `[0, outmax]`.
+    Sigmoid,
+    /// Hyperbolic tangent, output mapped onto `[-outmax, outmax]`.
+    Tanh,
+    /// SiLU / swish (`x · σ(x)`), output in the *input's* units.
+    Silu,
+}
+
+impl ActFn {
+    /// All approximated functions.
+    pub const ALL: [ActFn; 3] = [ActFn::Sigmoid, ActFn::Tanh, ActFn::Silu];
+
+    /// Reference evaluation in `f64`.
+    pub fn eval_f64(&self, x: f64) -> f64 {
+        match self {
+            ActFn::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+            ActFn::Tanh => x.tanh(),
+            ActFn::Silu => x / (1.0 + (-x).exp()),
+        }
+    }
+
+    /// Lower-case name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ActFn::Sigmoid => "sigmoid",
+            ActFn::Tanh => "tanh",
+            ActFn::Silu => "silu",
+        }
+    }
+}
+
+/// Supported Horner degrees (the enum makes invalid degrees unrepresentable,
+/// so configs stay `Copy + Eq + Hash` with no runtime validation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum PolyDegree {
+    /// Degree-2 Horner: cheapest, loosest ULP bound.
+    Two,
+    /// Degree-3 Horner: one more MAC step, ~3x tighter bound.
+    Three,
+}
+
+impl PolyDegree {
+    /// Numeric degree.
+    pub fn as_u32(&self) -> u32 {
+        match self {
+            PolyDegree::Two => 2,
+            PolyDegree::Three => 3,
+        }
+    }
+}
+
+/// The activation stage carried by a block configuration or a CNN layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Activation {
+    /// No activation (plain convolution output).
+    Identity,
+    /// Exact ReLU (`max(x, 0)`) — free in hardware (sign-select muxes).
+    Relu,
+    /// Fixed-point polynomial approximation of `f` at the given degree.
+    Poly {
+        /// Approximated function.
+        f: ActFn,
+        /// Horner degree.
+        degree: PolyDegree,
+    },
+}
+
+impl Activation {
+    /// Parse a CLI-facing name: `identity`, `relu`, `sigmoid2`, `tanh3`,
+    /// `silu2`, … (trailing digit = degree, default 2).
+    pub fn parse(s: &str) -> Option<Activation> {
+        let s = s.to_ascii_lowercase();
+        match s.as_str() {
+            "identity" | "none" | "linear" => return Some(Activation::Identity),
+            "relu" => return Some(Activation::Relu),
+            _ => {}
+        }
+        let (stem, degree) = if let Some(st) = s.strip_suffix('3') {
+            (st, PolyDegree::Three)
+        } else if let Some(st) = s.strip_suffix('2') {
+            (st, PolyDegree::Two)
+        } else {
+            (s.as_str(), PolyDegree::Two)
+        };
+        let f = ActFn::ALL.iter().find(|f| f.name() == stem)?;
+        Some(Activation::Poly { f: *f, degree })
+    }
+
+    /// True for the polynomial variants.
+    pub fn is_poly(&self) -> bool {
+        matches!(self, Activation::Poly { .. })
+    }
+
+    /// Bind to a data width, fitting the polynomial once if needed. The
+    /// returned evaluator is THE single implementation of activation
+    /// semantics — the block simulators, the CNN golden model and the test
+    /// references all apply activations through it, so they cannot diverge.
+    pub fn bind(self, data_bits: u32) -> BoundActivation {
+        match self {
+            Activation::Identity => BoundActivation::Identity,
+            Activation::Relu => BoundActivation::Relu,
+            Activation::Poly { f, degree } => {
+                BoundActivation::Poly(FixedActivation::new(f, degree, data_bits))
+            }
+        }
+    }
+}
+
+/// An [`Activation`] bound to a data width, ready to evaluate.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BoundActivation {
+    /// Pass-through.
+    Identity,
+    /// Exact `max(x, 0)`.
+    Relu,
+    /// Fitted fixed-point polynomial.
+    Poly(FixedActivation),
+}
+
+impl BoundActivation {
+    /// Apply to one (already narrowed/saturated) value.
+    pub fn apply(&self, v: i64) -> i64 {
+        match self {
+            BoundActivation::Identity => v,
+            BoundActivation::Relu => v.max(0),
+            BoundActivation::Poly(fx) => fx.eval(v),
+        }
+    }
+}
+
+impl fmt::Display for Activation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Activation::Identity => f.write_str("identity"),
+            Activation::Relu => f.write_str("relu"),
+            Activation::Poly { f: func, degree } => {
+                write!(f, "{}{}", func.name(), degree.as_u32())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn actfn_references_are_sane() {
+        assert!((ActFn::Sigmoid.eval_f64(0.0) - 0.5).abs() < 1e-12);
+        assert!((ActFn::Tanh.eval_f64(0.0)).abs() < 1e-12);
+        assert!((ActFn::Silu.eval_f64(0.0)).abs() < 1e-12);
+        assert!(ActFn::Sigmoid.eval_f64(10.0) > 0.999);
+        assert!(ActFn::Tanh.eval_f64(-10.0) < -0.999);
+        // SiLU tends to x for large x.
+        assert!((ActFn::Silu.eval_f64(8.0) - 8.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn activation_parse_roundtrip() {
+        for act in [
+            Activation::Identity,
+            Activation::Relu,
+            Activation::Poly { f: ActFn::Sigmoid, degree: PolyDegree::Two },
+            Activation::Poly { f: ActFn::Tanh, degree: PolyDegree::Three },
+            Activation::Poly { f: ActFn::Silu, degree: PolyDegree::Two },
+        ] {
+            assert_eq!(Activation::parse(&act.to_string()), Some(act), "{act}");
+        }
+        assert_eq!(Activation::parse("sigmoid"), Activation::parse("sigmoid2"));
+        assert_eq!(Activation::parse("bogus"), None);
+    }
+
+    #[test]
+    fn degrees_expose_numeric_value() {
+        assert_eq!(PolyDegree::Two.as_u32(), 2);
+        assert_eq!(PolyDegree::Three.as_u32(), 3);
+    }
+}

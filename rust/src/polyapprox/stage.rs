@@ -1,0 +1,190 @@
+//! The activation stage's netlist face: the Horner datapath as structure,
+//! mappable by [`crate::synth::map_netlist`] exactly like a convolution
+//! block.
+//!
+//! Microarchitecture (one stage instance, shared by the fused `Conv2Act`
+//! block and by standalone post-sum stages):
+//!
+//! * **input staging** — the d-bit conv output is registered; the Q3.13
+//!   alignment is pure routing (exact left shift);
+//! * **Horner MAC** — ONE time-shared DSP48E2 computes
+//!   `acc·t + c_k` per step (`degree` steps), coefficients delivered by a
+//!   LUT ROM addressed by the step counter ([`ACT_CFRAC`]+1 = 14 output
+//!   bits);
+//! * **range clamp / saturation** — comparator + clamp LUTs on the
+//!   accumulator head (∝ d), including tanh's hard-saturation compare;
+//! * **output scaling** — `(acc · (2^(d-1)-1)) >> 13` implemented as the
+//!   shift-subtract `acc·2^(d-1) − acc`: one (d+14)-bit carry-chain adder;
+//! * **control** — step counter + per-step rounding-correction LUTs (the
+//!   truncating rescale needs a guard-bit fix-up per Horner step, which is
+//!   what makes LUT cost grow with the degree).
+//!
+//! ReLU degenerates to d sign-select muxes and Identity to nothing — both
+//! handled here so every [`Activation`] has a (possibly empty) structural
+//! cost.
+
+use super::{Activation, ACT_CFRAC};
+use crate::netlist::{Net, Netlist, NetlistBuilder};
+use crate::synth::{adder, control, dsp, map_netlist, MapOptions, ResourceVector};
+
+/// Coefficient ROM word width (Q·13 plus sign).
+const ROM_BITS: usize = ACT_CFRAC as usize + 1;
+
+/// Build the activation stage onto an existing netlist, consuming the d-bit
+/// conv output bus `x`; returns the stage's registered output bus (empty for
+/// [`Activation::Identity`]).
+pub fn build_stage(b: &mut NetlistBuilder, x: &[Net], act: Activation) -> Vec<Net> {
+    match act {
+        Activation::Identity => Vec::new(),
+        Activation::Relu => {
+            // Sign-select muxes: out[i] = x[i] & !sign.
+            b.push_scope("relu");
+            let sign = *x.last().expect("non-empty output bus");
+            let out: Vec<Net> = x.iter().map(|&bit| b.lut("sel", &[bit, sign])).collect();
+            b.pop_scope();
+            out
+        }
+        Activation::Poly { degree, .. } => {
+            let d = x.len();
+            let degree = degree.as_u32() as usize;
+            b.push_scope("act");
+
+            // Input staging register (t alignment is routing).
+            let t: Vec<Net> = x.iter().map(|&bit| b.fdre("t", bit)).collect();
+
+            // Step counter (degree Horner steps + load + drain).
+            let (step, _tc) = control::counter(b, "step", degree + 2);
+
+            // Coefficient ROM: one LUT per output bit, addressed by the step.
+            let sel: Vec<Net> = step.iter().copied().take(6).collect();
+            let rom: Vec<Net> = (0..ROM_BITS).map(|_| b.lut("rom", &sel)).collect();
+
+            // The time-shared Horner DSP (acc feedback lives in P).
+            let p = dsp::dsp_mac(b, "horner", &t, &rom);
+
+            // Per-step rounding-correction guard LUTs + pipeline FFs: the
+            // truncating per-step rescale needs its guard bits patched, once
+            // per Horner step — the degree-proportional fabric cost.
+            for _ in 0..degree {
+                let g = b.lut("rnd", &[p[ACT_CFRAC as usize], p[ACT_CFRAC as usize + 1], t[0]]);
+                let g2 = b.lut("rnd", &[p[0], p[1], g]);
+                b.fdre("rnd_r", g);
+                b.fdre("rnd_r", g2);
+            }
+
+            // Range clamp / saturation compare on the accumulator head.
+            let head: Vec<Net> =
+                p[(ACT_CFRAC as usize).min(47)..(ACT_CFRAC as usize + 6).min(48)].to_vec();
+            let ov = b.lut("clamp", &head[..head.len().min(6)]);
+
+            // Output scaling: acc·(2^(d-1)-1) as shift-subtract — one
+            // (d + ROM_BITS)-bit adder on the carry chain.
+            let w = (d + ROM_BITS).min(48);
+            let scale = adder::add(b, "scale", &p[..w], &p[..w], false);
+
+            // Saturation muxes back to d bits.
+            let sat: Vec<Net> =
+                (0..d).map(|i| b.lut("sat", &[scale.sum[i], ov])).collect();
+            let out = b.fdre_bus("out_reg", &sat);
+            b.pop_scope();
+            out
+        }
+    }
+}
+
+/// Elaborate a *standalone* activation stage (its own top-level netlist) for
+/// a d-bit datapath — what the deployment planner prices per output channel
+/// when a layer's activation is not fused into its conv blocks.
+pub fn elaborate_stage(data_bits: u32, act: Activation) -> Netlist {
+    let mut b = NetlistBuilder::new(&format!("actstage_{act}_d{data_bits}"));
+    let x = b.top_input_bus(data_bits as usize);
+    let _ = build_stage(&mut b, &x, act);
+    b.finish()
+}
+
+/// Model-free resource cost of one standalone stage (exact mapping — the
+/// stage is small enough that the closed-form models add nothing).
+pub fn stage_cost(data_bits: u32, act: Activation) -> ResourceVector {
+    match act {
+        Activation::Identity => ResourceVector::default(),
+        _ => map_netlist(&elaborate_stage(data_bits, act), &MapOptions::exact()),
+    }
+}
+
+/// Pipeline-fill cycles the stage adds to a window stream (the Horner steps
+/// overlap the next window's MAC, so the initiation interval is unchanged;
+/// only the fill grows).
+pub fn stage_fill_cycles(act: Activation) -> u64 {
+    match act {
+        Activation::Identity => 0,
+        Activation::Relu => 1,
+        Activation::Poly { degree, .. } => degree.as_u32() as u64 + 2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::PrimitiveClass;
+    use crate::polyapprox::{ActFn, PolyDegree};
+
+    fn poly(f: ActFn, degree: PolyDegree) -> Activation {
+        Activation::Poly { f, degree }
+    }
+
+    #[test]
+    fn stage_netlists_validate_across_widths() {
+        for d in [3u32, 8, 16] {
+            for act in [
+                Activation::Relu,
+                poly(ActFn::Sigmoid, PolyDegree::Two),
+                poly(ActFn::Tanh, PolyDegree::Three),
+            ] {
+                elaborate_stage(d, act)
+                    .validate()
+                    .unwrap_or_else(|e| panic!("d={d} {act}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn poly_stage_uses_exactly_one_dsp() {
+        let n = elaborate_stage(8, poly(ActFn::Sigmoid, PolyDegree::Two));
+        assert_eq!(n.stats().count(PrimitiveClass::Dsp), 1);
+        let relu = elaborate_stage(8, Activation::Relu);
+        assert_eq!(relu.stats().count(PrimitiveClass::Dsp), 0);
+    }
+
+    #[test]
+    fn identity_stage_is_free() {
+        assert_eq!(stage_cost(8, Activation::Identity), ResourceVector::default());
+    }
+
+    #[test]
+    fn cost_grows_with_degree_and_width() {
+        let c2 = stage_cost(8, poly(ActFn::Sigmoid, PolyDegree::Two));
+        let c3 = stage_cost(8, poly(ActFn::Sigmoid, PolyDegree::Three));
+        assert!(c3.llut > c2.llut, "degree: {} !> {}", c3.llut, c2.llut);
+        assert!(c3.ff > c2.ff);
+        let w = stage_cost(16, poly(ActFn::Sigmoid, PolyDegree::Two));
+        assert!(w.llut > c2.llut, "width: {} !> {}", w.llut, c2.llut);
+        assert_eq!(c2.dsp, 1);
+    }
+
+    #[test]
+    fn relu_is_much_cheaper_than_poly() {
+        let relu = stage_cost(8, Activation::Relu);
+        let p = stage_cost(8, poly(ActFn::Tanh, PolyDegree::Two));
+        assert!(relu.llut * 3 < p.llut, "{} vs {}", relu.llut, p.llut);
+        assert_eq!(relu.dsp, 0);
+    }
+
+    #[test]
+    fn fill_cycles_ordered() {
+        assert_eq!(stage_fill_cycles(Activation::Identity), 0);
+        assert!(
+            stage_fill_cycles(poly(ActFn::Silu, PolyDegree::Three))
+                > stage_fill_cycles(poly(ActFn::Silu, PolyDegree::Two))
+        );
+    }
+}

@@ -48,6 +48,7 @@ pub fn table2() -> String {
         "Usage de la logique",
         "Lanes",
         "II (cycles/output @ c=8)",
+        "Activation",
     ])
     .with_title("TABLE 2: Caractéristiques des blocs de convolution");
     for kind in BlockKind::ALL {
@@ -56,6 +57,7 @@ pub fn table2() -> String {
             1 => "1 DSP".to_string(),
             n => format!("{n} DSPs"),
         };
+        let act = kind.block().fused_activation();
         t.push_row(vec![
             kind.name().to_string(),
             dsp,
@@ -65,6 +67,11 @@ pub fn table2() -> String {
                 "{}",
                 kind.initiation_interval(8) / kind.convolutions_per_block()
             ),
+            if act == crate::polyapprox::Activation::Identity {
+                "—".to_string()
+            } else {
+                format!("fusée: {act}")
+            },
         ]);
     }
     let mut s = t.render();
@@ -136,11 +143,13 @@ pub fn table5(
 ) -> Result<String> {
     let rows = report.allocation_study(platform, data_bits, coeff_bits, cap)?;
     let unit = report.unit_costs(data_bits, coeff_bits)?;
-    let mut t = Table::new(vec![
-        "Conv1", "Conv2", "Conv3", "Conv4", "LLUT (%)", "FF (%)", "DSP (%)", "CChain (%)",
-        "Total Conv.",
-    ])
-    .with_title(format!(
+    let mut header: Vec<String> = BlockKind::ALL.iter().map(|k| k.name().to_string()).collect();
+    header.extend(
+        ["LLUT (%)", "FF (%)", "DSP (%)", "CChain (%)", "Total Conv."]
+            .into_iter()
+            .map(String::from),
+    );
+    let mut t = Table::new(header).with_title(format!(
         "TABLE 5: Consommation prévue des ressources (%) — {} @ {:.0}% cap, d={data_bits}, c={coeff_bits}",
         platform.name,
         cap * 100.0
@@ -148,17 +157,16 @@ pub fn table5(
     for (_label, alloc) in &rows {
         let usage = alloc.usage(&unit);
         let u = platform.utilization(&usage);
-        t.push_row(vec![
-            alloc.count(BlockKind::Conv1).to_string(),
-            alloc.count(BlockKind::Conv2).to_string(),
-            alloc.count(BlockKind::Conv3).to_string(),
-            alloc.count(BlockKind::Conv4).to_string(),
+        let mut row: Vec<String> =
+            BlockKind::ALL.iter().map(|k| alloc.count(*k).to_string()).collect();
+        row.extend([
             fmt_num(u[0], 1, french),
             fmt_num(u[2], 1, french),
             fmt_num(u[4], 1, french),
             fmt_num(u[3], 1, french),
             alloc.total_convolutions().to_string(),
         ]);
+        t.push_row(row);
     }
     Ok(t.render())
 }
@@ -208,6 +216,7 @@ mod tests {
         }
         assert!(s.contains("Aucun"));
         assert!(s.contains("NOTE"));
+        assert!(s.contains("fusée: sigmoid2"), "{s}");
     }
 
     #[test]
@@ -235,6 +244,10 @@ mod tests {
         let rep = report();
         let s = table5(&rep, &Platform::zcu104(), 8, 8, 0.8, true).unwrap();
         assert!(s.contains("Total Conv."));
-        assert_eq!(s.lines().filter(|l| l.starts_with('|')).count(), 6); // header + 5 rows
+        // header + mix row + one single-type row per registered block
+        assert_eq!(
+            s.lines().filter(|l| l.starts_with('|')).count(),
+            2 + BlockKind::ALL.len()
+        );
     }
 }

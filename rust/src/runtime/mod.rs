@@ -6,13 +6,30 @@
 //! proto path rejects; the text parser reassigns ids). Artifacts are produced
 //! once by `make artifacts` (`python/compile/aot.py`); Python never runs on
 //! this path.
+//!
+//! ## Feature gate
+//!
+//! The `xla` crate is not vendorable in offline environments, so the real
+//! runtime compiles only with `--features pjrt` (add `xla = "0.5"` to the
+//! manifest's `[dependencies]` where the crate is available). Without the
+//! feature this module provides an API-identical **stub** whose entry points
+//! return [`Error::Runtime`]. PJRT consumers (tests, benches, `serve`)
+//! gate on BOTH [`runtime_available`] and the artifacts directory existing,
+//! so the default build degrades gracefully instead of failing to link —
+//! even on a machine where `make artifacts` has run.
 
-use crate::util::error::{Error, Result};
 use std::collections::BTreeMap;
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
 /// Default artifacts directory relative to the repo root.
 pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// True when this build carries the real PJRT runtime (`--features pjrt`);
+/// false for the stub, whose entry points only return errors. Artifact-gated
+/// tests and benches must check this alongside the artifacts directory.
+pub fn runtime_available() -> bool {
+    cfg!(feature = "pjrt")
+}
 
 /// Metadata sidecar for one artifact (written by `aot.py` as `NAME.meta`,
 /// simple `key=value` lines).
@@ -47,147 +64,230 @@ impl ArtifactMeta {
     }
 }
 
-/// A compiled, executable artifact.
-pub struct CompiledArtifact {
-    /// Artifact name (file stem).
-    pub name: String,
-    /// Sidecar metadata.
-    pub meta: ArtifactMeta,
-    exe: xla::PjRtLoadedExecutable,
-}
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use super::ArtifactMeta;
+    use crate::util::error::{Error, Result};
+    use std::path::Path;
 
-impl std::fmt::Debug for CompiledArtifact {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("CompiledArtifact").field("name", &self.name).finish()
+    fn unavailable(what: &str) -> Error {
+        Error::Runtime(format!(
+            "{what}: convkit was built without the `pjrt` feature (the xla crate is not \
+             vendored here); rebuild with `--features pjrt` on a machine that has it"
+        ))
+    }
+
+    /// A compiled, executable artifact (stub: never constructible — loading
+    /// requires the PJRT client).
+    pub struct CompiledArtifact {
+        /// Artifact name (file stem).
+        pub name: String,
+        /// Sidecar metadata.
+        pub meta: ArtifactMeta,
+        _priv: (),
+    }
+
+    impl std::fmt::Debug for CompiledArtifact {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("CompiledArtifact").field("name", &self.name).finish()
+        }
+    }
+
+    impl CompiledArtifact {
+        /// Stub: always an error.
+        pub fn run_i32(&self, _args: &[(&[i32], &[usize])]) -> Result<Vec<Vec<i32>>> {
+            Err(unavailable("run_i32"))
+        }
+
+        /// Stub: always an error.
+        pub fn run_f32(&self, _args: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+            Err(unavailable("run_f32"))
+        }
+    }
+
+    /// The PJRT runtime (stub).
+    #[derive(Debug)]
+    pub struct Runtime {
+        _priv: (),
+    }
+
+    impl Runtime {
+        /// Stub: always an error (callers gate on artifacts existing first).
+        pub fn cpu() -> Result<Runtime> {
+            Err(unavailable("Runtime::cpu"))
+        }
+
+        /// Backend platform name.
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        /// Stub: always an error.
+        pub fn load(&self, path: &Path) -> Result<CompiledArtifact> {
+            Err(unavailable(&format!("load {}", path.display())))
+        }
+
+        /// Stub: always an error.
+        pub fn load_named(&self, dir: &Path, name: &str) -> Result<CompiledArtifact> {
+            self.load(&dir.join(format!("{name}.hlo.txt")))
+        }
     }
 }
 
-/// The PJRT runtime: one CPU client, many compiled artifacts.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{CompiledArtifact, Runtime};
 
-impl std::fmt::Debug for Runtime {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("Runtime").field("platform", &self.platform()).finish()
-    }
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use super::ArtifactMeta;
+    use crate::util::error::{Error, Result};
+    use std::path::{Path, PathBuf};
 
-impl Runtime {
-    /// Create the CPU PJRT client.
-    pub fn cpu() -> Result<Runtime> {
-        let client =
-            xla::PjRtClient::cpu().map_err(|e| Error::Runtime(format!("pjrt cpu: {e}")))?;
-        Ok(Runtime { client })
-    }
-
-    /// Backend platform name ("cpu").
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// A compiled, executable artifact.
+    pub struct CompiledArtifact {
+        /// Artifact name (file stem).
+        pub name: String,
+        /// Sidecar metadata.
+        pub meta: ArtifactMeta,
+        exe: xla::PjRtLoadedExecutable,
     }
 
-    /// Load an HLO-text artifact (plus its `.meta` sidecar if present) and
-    /// compile it for this client.
-    pub fn load(&self, path: &Path) -> Result<CompiledArtifact> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
-        )
-        .map_err(|e| Error::Runtime(format!("parse {}: {e}", path.display())))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| Error::Runtime(format!("compile {}: {e}", path.display())))?;
-        let name = path
-            .file_stem()
-            .and_then(|s| s.to_str())
-            .unwrap_or("artifact")
-            .trim_end_matches(".hlo")
-            .to_string();
-        let meta_path = path.with_extension("").with_extension("meta");
-        let meta = if meta_path.exists() {
-            ArtifactMeta::parse(&std::fs::read_to_string(&meta_path)?)
-        } else {
-            // aot.py writes NAME.meta next to NAME.hlo.txt.
-            let alt = PathBuf::from(format!(
-                "{}.meta",
-                path.display().to_string().trim_end_matches(".hlo.txt")
-            ));
-            if alt.exists() {
-                ArtifactMeta::parse(&std::fs::read_to_string(&alt)?)
+    impl std::fmt::Debug for CompiledArtifact {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("CompiledArtifact").field("name", &self.name).finish()
+        }
+    }
+
+    /// The PJRT runtime: one CPU client, many compiled artifacts.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+    }
+
+    impl std::fmt::Debug for Runtime {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("Runtime").field("platform", &self.platform()).finish()
+        }
+    }
+
+    impl Runtime {
+        /// Create the CPU PJRT client.
+        pub fn cpu() -> Result<Runtime> {
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| Error::Runtime(format!("pjrt cpu: {e}")))?;
+            Ok(Runtime { client })
+        }
+
+        /// Backend platform name ("cpu").
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load an HLO-text artifact (plus its `.meta` sidecar if present) and
+        /// compile it for this client.
+        pub fn load(&self, path: &Path) -> Result<CompiledArtifact> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+            )
+            .map_err(|e| Error::Runtime(format!("parse {}: {e}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| Error::Runtime(format!("compile {}: {e}", path.display())))?;
+            let name = path
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .unwrap_or("artifact")
+                .trim_end_matches(".hlo")
+                .to_string();
+            let meta_path = path.with_extension("").with_extension("meta");
+            let meta = if meta_path.exists() {
+                ArtifactMeta::parse(&std::fs::read_to_string(&meta_path)?)
             } else {
-                ArtifactMeta::default()
+                // aot.py writes NAME.meta next to NAME.hlo.txt.
+                let alt = PathBuf::from(format!(
+                    "{}.meta",
+                    path.display().to_string().trim_end_matches(".hlo.txt")
+                ));
+                if alt.exists() {
+                    ArtifactMeta::parse(&std::fs::read_to_string(&alt)?)
+                } else {
+                    ArtifactMeta::default()
+                }
+            };
+            Ok(CompiledArtifact { name, meta, exe })
+        }
+
+        /// Load `artifacts/NAME.hlo.txt` from the conventional directory.
+        pub fn load_named(&self, dir: &Path, name: &str) -> Result<CompiledArtifact> {
+            self.load(&dir.join(format!("{name}.hlo.txt")))
+        }
+    }
+
+    impl CompiledArtifact {
+        /// Execute on i32 tensors: `(data, dims)` per argument, returning the
+        /// flattened i32 results of the output tuple.
+        pub fn run_i32(&self, args: &[(&[i32], &[usize])]) -> Result<Vec<Vec<i32>>> {
+            let mut literals = Vec::with_capacity(args.len());
+            for (data, dims) in args {
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(data)
+                    .reshape(&dims_i64)
+                    .map_err(|e| Error::Runtime(format!("reshape: {e}")))?;
+                literals.push(lit);
             }
-        };
-        Ok(CompiledArtifact { name, meta, exe })
-    }
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| Error::Runtime(format!("execute {}: {e}", self.name)))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| Error::Runtime(format!("fetch {}: {e}", self.name)))?;
+            let tuple = result
+                .to_tuple()
+                .map_err(|e| Error::Runtime(format!("tuple {}: {e}", self.name)))?;
+            let mut out = Vec::with_capacity(tuple.len());
+            for t in tuple {
+                out.push(
+                    t.to_vec::<i32>()
+                        .map_err(|e| Error::Runtime(format!("to_vec {}: {e}", self.name)))?,
+                );
+            }
+            Ok(out)
+        }
 
-    /// Load `artifacts/NAME.hlo.txt` from the conventional directory.
-    pub fn load_named(&self, dir: &Path, name: &str) -> Result<CompiledArtifact> {
-        self.load(&dir.join(format!("{name}.hlo.txt")))
+        /// Execute on f32 tensors (same contract as [`Self::run_i32`]).
+        pub fn run_f32(&self, args: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+            let mut literals = Vec::with_capacity(args.len());
+            for (data, dims) in args {
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(data)
+                    .reshape(&dims_i64)
+                    .map_err(|e| Error::Runtime(format!("reshape: {e}")))?;
+                literals.push(lit);
+            }
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| Error::Runtime(format!("execute {}: {e}", self.name)))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| Error::Runtime(format!("fetch {}: {e}", self.name)))?;
+            let tuple = result
+                .to_tuple()
+                .map_err(|e| Error::Runtime(format!("tuple {}: {e}", self.name)))?;
+            let mut out = Vec::with_capacity(tuple.len());
+            for t in tuple {
+                out.push(
+                    t.to_vec::<f32>()
+                        .map_err(|e| Error::Runtime(format!("to_vec {}: {e}", self.name)))?,
+                );
+            }
+            Ok(out)
+        }
     }
 }
 
-impl CompiledArtifact {
-    /// Execute on i32 tensors: `(data, dims)` per argument, returning the
-    /// flattened i32 results of the output tuple.
-    pub fn run_i32(&self, args: &[(&[i32], &[usize])]) -> Result<Vec<Vec<i32>>> {
-        let mut literals = Vec::with_capacity(args.len());
-        for (data, dims) in args {
-            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(data)
-                .reshape(&dims_i64)
-                .map_err(|e| Error::Runtime(format!("reshape: {e}")))?;
-            literals.push(lit);
-        }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| Error::Runtime(format!("execute {}: {e}", self.name)))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| Error::Runtime(format!("fetch {}: {e}", self.name)))?;
-        let tuple = result
-            .to_tuple()
-            .map_err(|e| Error::Runtime(format!("tuple {}: {e}", self.name)))?;
-        let mut out = Vec::with_capacity(tuple.len());
-        for t in tuple {
-            out.push(
-                t.to_vec::<i32>()
-                    .map_err(|e| Error::Runtime(format!("to_vec {}: {e}", self.name)))?,
-            );
-        }
-        Ok(out)
-    }
-
-    /// Execute on f32 tensors (same contract as [`Self::run_i32`]).
-    pub fn run_f32(&self, args: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
-        let mut literals = Vec::with_capacity(args.len());
-        for (data, dims) in args {
-            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(data)
-                .reshape(&dims_i64)
-                .map_err(|e| Error::Runtime(format!("reshape: {e}")))?;
-            literals.push(lit);
-        }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| Error::Runtime(format!("execute {}: {e}", self.name)))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| Error::Runtime(format!("fetch {}: {e}", self.name)))?;
-        let tuple = result
-            .to_tuple()
-            .map_err(|e| Error::Runtime(format!("tuple {}: {e}", self.name)))?;
-        let mut out = Vec::with_capacity(tuple.len());
-        for t in tuple {
-            out.push(
-                t.to_vec::<f32>()
-                    .map_err(|e| Error::Runtime(format!("to_vec {}: {e}", self.name)))?,
-            );
-        }
-        Ok(out)
-    }
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::{CompiledArtifact, Runtime};
 
 /// Locate the artifacts directory: `$CONVKIT_ARTIFACTS`, else `./artifacts`,
 /// else the repo-root `artifacts/` relative to the manifest.

@@ -9,7 +9,7 @@ use crate::util::error::Result;
 /// Sweep parameters.
 #[derive(Debug, Clone)]
 pub struct SweepOptions {
-    /// Blocks to sweep (default: all four).
+    /// Blocks to sweep (default: every registered block).
     pub blocks: Vec<BlockKind>,
     /// Width range (inclusive); defaults to the paper's 3..=16.
     pub min_bits: u32,
@@ -77,8 +77,12 @@ mod tests {
 
     #[test]
     fn config_count_matches_paper() {
+        // 196 configurations per registered block; the paper's four-block
+        // subset reproduces its 784-run campaign exactly.
         let opts = SweepOptions::default();
-        assert_eq!(sweep_configs(&opts).len(), 4 * 14 * 14);
+        assert_eq!(sweep_configs(&opts).len(), BlockKind::ALL.len() * 196);
+        let paper = SweepOptions { blocks: BlockKind::PAPER.to_vec(), ..Default::default() };
+        assert_eq!(sweep_configs(&paper).len(), 4 * 14 * 14);
         let one = SweepOptions { blocks: vec![BlockKind::Conv2], ..Default::default() };
         assert_eq!(sweep_configs(&one).len(), 196);
     }
@@ -86,7 +90,7 @@ mod tests {
     #[test]
     fn small_sweep_produces_full_grid() {
         let ds = run_sweep(&small_opts()).unwrap();
-        assert_eq!(ds.len(), 4 * 4 * 4);
+        assert_eq!(ds.len(), BlockKind::ALL.len() * 4 * 4);
         for block in BlockKind::ALL {
             assert_eq!(ds.for_block(block).len(), 16);
         }

@@ -107,6 +107,39 @@ impl Bench {
         &self.results
     }
 
+    /// Serialize all collected results as a JSON baseline (hand-rolled —
+    /// no serde offline). Shape:
+    /// `{"bench": NAME, "results": [{"name": ..., "iters": N,
+    /// "mean_ns": ..., "p50_ns": ..., "p95_ns": ..., "min_ns": ...,
+    /// "throughput_per_s": ...}, ...]}`.
+    pub fn to_json(&self, bench_name: &str) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"bench\": \"{}\",\n  \"results\": [\n", bench_name));
+        for (i, s) in self.results.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"iters\": {}, \"mean_ns\": {:.1}, \
+                 \"p50_ns\": {:.1}, \"p95_ns\": {:.1}, \"min_ns\": {:.1}, \
+                 \"throughput_per_s\": {:.1}}}{}\n",
+                s.name,
+                s.iters,
+                s.mean_ns,
+                s.p50_ns,
+                s.p95_ns,
+                s.min_ns,
+                s.throughput(),
+                if i + 1 == self.results.len() { "" } else { "," }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write the JSON baseline next to the repo root (or wherever `path`
+    /// points) so CI can archive a perf trajectory across PRs.
+    pub fn write_json(&self, bench_name: &str, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json(bench_name))
+    }
+
     /// Find a result by name (for speedup-ratio reporting inside a bench).
     pub fn stats(&self, name: &str) -> Option<&BenchStats> {
         self.results.iter().find(|s| s.name == name)
@@ -134,6 +167,20 @@ mod tests {
         let line = b.stats("my_bench").unwrap().report();
         assert!(line.contains("my_bench"));
         assert!(line.contains("time:"));
+    }
+
+    #[test]
+    fn json_baseline_well_formed() {
+        let mut b = Bench { budget: Duration::from_millis(10), max_iters: 1_000, results: vec![] };
+        b.run("alpha", || 1u8);
+        b.run("beta", || 2u8);
+        let j = b.to_json("runtime_conv");
+        assert!(j.contains("\"bench\": \"runtime_conv\""));
+        assert!(j.contains("\"name\": \"alpha\""));
+        assert!(j.contains("\"throughput_per_s\""));
+        // Exactly one comma-separated pair of result objects.
+        assert_eq!(j.matches("\"name\":").count(), 2);
+        assert!(j.trim_end().ends_with('}'));
     }
 
     #[test]

@@ -33,7 +33,7 @@ fn unknown_command_fails_with_usage_hint() {
 fn blocks_prints_table2() {
     let (ok, stdout, _) = convkit(&["blocks"]);
     assert!(ok);
-    for b in ["Conv1", "Conv2", "Conv3", "Conv4"] {
+    for b in ["Conv1", "Conv2", "Conv3", "Conv4", "Conv2Act"] {
         assert!(stdout.contains(b));
     }
 }
@@ -42,7 +42,7 @@ fn blocks_prints_table2() {
 fn sweep_small_range_reports_counts() {
     let (ok, stdout, stderr) = convkit(&["sweep", "--min-bits", "6", "--max-bits", "9"]);
     assert!(ok, "{stderr}");
-    assert!(stdout.contains("synthesized 64 configurations"), "{stdout}");
+    assert!(stdout.contains("synthesized 80 configurations"), "{stdout}");
 }
 
 #[test]

@@ -11,9 +11,9 @@ fn report() -> convkit::coordinator::dse::DseReport {
 }
 
 #[test]
-fn all_twenty_models_fit() {
+fn every_registered_block_gets_five_models() {
     let rep = report();
-    assert_eq!(rep.registry.len(), 20);
+    assert_eq!(rep.registry.len(), BlockKind::ALL.len() * 5);
 }
 
 #[test]

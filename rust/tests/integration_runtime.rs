@@ -15,6 +15,10 @@ use convkit::runtime::{artifacts_dir, Runtime};
 use convkit::util::rng::SplitMix64;
 
 fn artifacts_ready() -> bool {
+    if !convkit::runtime::runtime_available() {
+        eprintln!("NOTE: built without the `pjrt` feature; skipping runtime test");
+        return false;
+    }
     let ok = artifacts_dir().join("lenet_q8.hlo.txt").exists();
     if !ok {
         eprintln!("NOTE: artifacts/ missing — run `make artifacts`; skipping runtime test");

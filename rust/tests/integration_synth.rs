@@ -13,7 +13,7 @@ fn full_dataset() -> convkit::synthdata::Dataset {
 #[test]
 fn campaign_has_196_configs_per_block() {
     let ds = full_dataset();
-    assert_eq!(ds.len(), 784);
+    assert_eq!(ds.len(), BlockKind::ALL.len() * 196);
     for b in BlockKind::ALL {
         assert_eq!(ds.for_block(b).len(), 196, "{b}");
     }

@@ -4,6 +4,7 @@
 
 use convkit::blocks::{synthesize, BlockKind, ConvBlockConfig, FuncSim};
 use convkit::fixedpoint::{conv3x3_ref, QFormat, Rounding};
+use convkit::polyapprox::{ulp_eps, ActFn, FixedActivation, PolyDegree};
 use convkit::synth::MapOptions;
 use convkit::util::proptest::{forall, shrink_pair, Config};
 use convkit::util::rng::SplitMix64;
@@ -18,9 +19,11 @@ fn width_pair() -> impl Fn(&mut SplitMix64) -> (i64, i64) {
 
 #[test]
 fn prop_every_block_funcsim_matches_reference() {
-    // For any widths, any shift, any stimulus: all four functional
-    // simulators compute exactly conv3x3_ref. (Conv3 constrained to its
-    // packed-arithmetic domain.)
+    // For any widths, any shift, any stimulus: EVERY registered block's
+    // functional simulator computes exactly conv3x3_ref composed with the
+    // configuration's activation stage. Datapath domain constraints
+    // (Conv3's packed 8-bit arithmetic) come from the registry, not from
+    // per-block special cases here.
     for kind in BlockKind::ALL {
         forall(
             &Config { cases: 48, ..Default::default() },
@@ -28,12 +31,15 @@ fn prop_every_block_funcsim_matches_reference() {
             width_pair(),
             shrink_pair(3),
             |&(d, c)| {
-                let (d, c) = if kind == BlockKind::Conv3 { (d.min(8), c.min(8)) } else { (d, c) };
+                let blk = kind.block();
+                let d = d.min(blk.effective_data_bits(d as u32) as i64);
+                let c = c.min(blk.max_coeff_bits() as i64);
                 let cfg = cfg_of(kind, d, c).with_shift((c / 2) as u32);
                 let dq = cfg.data_q();
                 let cq = cfg.coeff_q();
+                let act = cfg.activation.bind(cfg.effective_data_bits());
                 let mut rng = SplitMix64::new((d * 100 + c) as u64);
-                let n_sets = if kind == BlockKind::Conv4 { 2 } else { 1 };
+                let n_sets = blk.required_coeff_sets();
                 let sets: Vec<[i64; 9]> = (0..n_sets)
                     .map(|_| std::array::from_fn(|_| rng.range_i64(cq.min(), cq.max())))
                     .collect();
@@ -45,8 +51,9 @@ fn prop_every_block_funcsim_matches_reference() {
                 let out = sim.process(&windows).map_err(|e| e.to_string())?;
                 for (lane, set) in out.lanes.iter().zip(sets.iter().cycle()) {
                     for (i, win) in windows.iter().enumerate() {
-                        let want = conv3x3_ref(win, set, dq, cq, cfg.shift, Rounding::Floor)
+                        let conv = conv3x3_ref(win, set, dq, cq, cfg.shift, Rounding::Floor)
                             .map_err(|e| e.to_string())?;
+                        let want = act.apply(conv);
                         if lane[i] != want {
                             return Err(format!("window {i}: {} != {want}", lane[i]));
                         }
@@ -55,6 +62,41 @@ fn prop_every_block_funcsim_matches_reference() {
                 Ok(())
             },
         );
+    }
+}
+
+#[test]
+fn prop_activation_error_under_documented_ulp_bound() {
+    // For any width and any input, the fixed-point polynomial activations
+    // stay within `2 + ceil(ε·2^(d-1))` ULP of the rounded f64 reference,
+    // with ε per (function, degree) as documented in polyapprox::ULP_EPS.
+    for f in ActFn::ALL {
+        for degree in [PolyDegree::Two, PolyDegree::Three] {
+            forall(
+                &Config { cases: 40, ..Default::default() },
+                &format!("{}{} ULP bound", f.name(), degree.as_u32()),
+                |rng| (rng.range_i64(3, 16), rng.range_i64(0, 1 << 20)),
+                shrink_pair(0),
+                |&(d, seed)| {
+                    let d = d.clamp(3, 16) as u32;
+                    let a = FixedActivation::new(f, degree, d);
+                    let bound = a.ulp_bound();
+                    let q = QFormat::new(d).map_err(|e| e.to_string())?;
+                    let mut rng = SplitMix64::new(seed as u64);
+                    for _ in 0..64 {
+                        let x = rng.range_i64(q.min(), q.max());
+                        let err = (a.eval(x) - a.reference(x)).abs();
+                        if err > bound {
+                            return Err(format!(
+                                "eps {}: x={x} err {err} > bound {bound} at d={d}",
+                                ulp_eps(f, degree)
+                            ));
+                        }
+                    }
+                    Ok(())
+                },
+            );
+        }
     }
 }
 
@@ -138,6 +180,7 @@ fn prop_allocator_never_exceeds_budget() {
                 ResourceVector::new(25, 30, 21, 0, dsp.max(1) as u64),
                 ResourceVector::new(36, 28, 22, 0, 1),
                 ResourceVector::new(37, 40, 25, 0, 2),
+                ResourceVector::new(60, 30, 45, 3, 2),
             ];
             let p = Platform::zcu104();
             let mix = allocate_mix(&unit, &p, 0.8).map_err(|e| e.to_string())?;
