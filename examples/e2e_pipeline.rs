@@ -8,12 +8,16 @@
 //!    (Algorithm 1), and print Tables 3–5 + the Conv4 closed form.
 //! 2. **Planning** — map the quantized LeNet-ish classifier onto the ZCU104
 //!    with the fitted models (no synthesis on this path).
-//! 3. **Deployment** — load the AOT-compiled JAX/Pallas artifact
+//! 3. **Fleet serving** — stand up the sharded multi-network serving layer
+//!    (`ShardedService`: two networks, one replicated, golden-backed) and
+//!    drive interleaved client threads through its bounded-admission
+//!    front-end, cross-checking every reply against direct golden inference.
+//! 4. **Deployment** — load the AOT-compiled JAX/Pallas artifact
 //!    (`artifacts/lenet_q8.hlo.txt`, built once by `make artifacts`) into the
 //!    PJRT runtime, serve a batched workload of synthetic digit images
 //!    through the L3 inference service, and cross-check EVERY logits vector
 //!    bit-for-bit against the block-level golden model.
-//! 4. **Report** — throughput/latency of the service, plus the model-vs-
+//! 5. **Report** — throughput/latency of the service, plus the model-vs-
 //!    synthesis speedup that is the paper's headline value proposition.
 //!
 //! Run: `make artifacts && cargo run --release --example e2e_pipeline`
@@ -22,6 +26,7 @@ use convkit::blocks::{synthesize, BlockKind, ConvBlockConfig};
 use convkit::cnn::{plan_deployment, zoo, GoldenCnn};
 use convkit::coordinator::dse::DseEngine;
 use convkit::coordinator::service::{InferenceService, PjrtExecutor};
+use convkit::coordinator::{drive_golden_clients, ShardSpec, ShardedService};
 use convkit::fixedpoint::QFormat;
 use convkit::platform::Platform;
 use convkit::report;
@@ -79,9 +84,49 @@ fn main() -> convkit::Result<()> {
         plan.total, plan.utilization[0], plan.utilization[4], plan.fits
     );
 
-    // ---- Stage 3: PJRT deployment + bit-exact verification ---------------
+    // ---- Stage 3: sharded multi-network fleet (golden-backed) ------------
+    let fleet = ShardedService::start(&[
+        ShardSpec::golden("lenet_q8").with_replicas(2),
+        ShardSpec::golden("tiny_q8"),
+    ])?;
+    println!(
+        "[3] fleet: {} shards over networks {:?}",
+        fleet.shards().len(),
+        fleet.networks()
+    );
+    let fleet_mismatches =
+        drive_golden_clients(&fleet, &[zoo::lenet_ish(), zoo::tiny()], 24, BlockKind::Conv2)?;
+    let fleet_stats = fleet.stats();
+    for row in &fleet_stats.shards {
+        println!(
+            "      shard {}#{}: {} req ({} err), {} batches, mean {:.3} ms, p95 {:.3} ms{}",
+            row.network,
+            row.replica,
+            row.service.requests,
+            row.service.errors,
+            row.service.batches,
+            row.service.mean_latency_ms,
+            row.service.p95_latency_ms,
+            if row.stale { " [STALE]" } else { "" }
+        );
+    }
+    println!(
+        "      fleet: {} requests ({} errors, {} stale shards), worst p95 {:.3} ms — golden cross-check: {} mismatches ({})\n",
+        fleet_stats.fleet.requests,
+        fleet_stats.fleet.errors,
+        fleet_stats.fleet.stale_shards,
+        fleet_stats.fleet.p95_latency_ms,
+        fleet_mismatches,
+        if fleet_mismatches == 0 { "BIT-EXACT ✓" } else { "FAILED ✗" }
+    );
+    fleet.shutdown();
+    if fleet_mismatches > 0 {
+        std::process::exit(1);
+    }
+
+    // ---- Stage 4: PJRT deployment + bit-exact verification ---------------
     if !convkit::runtime::runtime_available() {
-        eprintln!("built without the `pjrt` feature: rebuild with --features pjrt for stage 3");
+        eprintln!("built without the `pjrt` feature: rebuild with --features pjrt for stage 4");
         std::process::exit(1);
     }
     let art_path = artifacts_dir().join("lenet_q8.hlo.txt");
@@ -129,7 +174,7 @@ fn main() -> convkit::Result<()> {
     }
     let wall = t_serve.elapsed().as_secs_f64();
     let stats = svc.stats()?;
-    println!("[3] served {n_req} requests through PJRT in {wall:.2}s:");
+    println!("[4] served {n_req} requests through PJRT in {wall:.2}s:");
     println!(
         "      throughput {:.1} req/s, mean latency {:.2} ms, p95 {:.2} ms, {} batches",
         n_req as f64 / wall,
@@ -146,7 +191,7 @@ fn main() -> convkit::Result<()> {
     svc.shutdown();
 
     println!(
-        "\n[4] total pipeline wall time: {:.2}s — every stage green{}",
+        "\n[5] total pipeline wall time: {:.2}s — every stage green{}",
         t0.elapsed().as_secs_f64(),
         if mismatches == 0 { "." } else { " EXCEPT bit-exactness!" }
     );

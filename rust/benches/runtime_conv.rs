@@ -91,9 +91,9 @@ fn main() {
         );
     }
 
-    // --- perf-trajectory baseline ---
+    // --- perf-trajectory baseline (multi-section: shared with runtime_serve) ---
     let path = baseline_path();
-    match b.write_json("runtime_conv", &path) {
+    match b.write_json_sections("runtime_conv", &path) {
         Ok(()) => println!("baseline written to {}", path.display()),
         Err(e) => eprintln!("could not write baseline {}: {e}", path.display()),
     }

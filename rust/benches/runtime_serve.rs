@@ -1,0 +1,119 @@
+//! Bench: fleet-level throughput of the sharded multi-network serving layer.
+//!
+//! Spins up a `ShardedService` over two golden-backed zoo networks (one of
+//! them replicated) and measures the three serving shapes that matter for
+//! capacity planning: a single client alternating networks, a concurrent
+//! multi-client burst, and the bounded-admission (`try_infer`) path. Results
+//! are merged into the shared `BENCH_runtime.json` baseline (section
+//! `runtime_serve`) so future PRs can diff fleet throughput the same way
+//! they diff the single-service numbers from `runtime_conv`.
+
+use convkit::cnn::zoo;
+use convkit::coordinator::{ShardSpec, ShardedService};
+use convkit::util::bench::Bench;
+use std::path::PathBuf;
+
+fn baseline_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_runtime.json")
+}
+
+
+fn main() {
+    println!("=== bench: runtime_serve ===");
+    let mut b = Bench::quick();
+
+    // Two networks, one replicated: the smallest fleet that still exercises
+    // routing, replica tie-breaking, and per-network stats aggregation.
+    let fleet = ShardedService::start(&[
+        ShardSpec::golden("tiny_q8").with_replicas(2).with_batch_size(8),
+        ShardSpec::golden("slim_q6").with_batch_size(8),
+    ])
+    .expect("fleet start");
+    println!(
+        "fleet: {} shards over networks {:?}",
+        fleet.shards().len(),
+        fleet.networks()
+    );
+
+    let tiny_imgs = zoo::tiny().synthetic_images_i32(16, 0xBE);
+    let slim_imgs = zoo::slim_q6().synthetic_images_i32(16, 0x5E);
+
+    // One client alternating between the two networks.
+    let mut turn = 0usize;
+    b.run("fleet_single_client_alternate", || {
+        turn += 1;
+        if turn % 2 == 0 {
+            fleet.infer("tiny_q8", tiny_imgs[turn % tiny_imgs.len()].clone()).unwrap().len()
+        } else {
+            fleet.infer("slim_q6", slim_imgs[turn % slim_imgs.len()].clone()).unwrap().len()
+        }
+    });
+
+    // Concurrent burst: 4 clients × 8 requests, interleaved across networks —
+    // one iteration = 32 fleet requests.
+    b.run("fleet_4clients_x8_concurrent", || {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..4usize)
+                .map(|c| {
+                    let (fleet, tiny_imgs, slim_imgs) = (&fleet, &tiny_imgs, &slim_imgs);
+                    scope.spawn(move || {
+                        let mut served = 0usize;
+                        for r in 0..8usize {
+                            let k = (c * 8 + r) % 16;
+                            served += if (c + r) % 2 == 0 {
+                                fleet.infer("tiny_q8", tiny_imgs[k].clone()).unwrap().len()
+                            } else {
+                                fleet.infer("slim_q6", slim_imgs[k].clone()).unwrap().len()
+                            };
+                        }
+                        served
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).sum::<usize>()
+        })
+    });
+
+    // Bounded admission path (cap is never hit single-threaded: measures the
+    // routing + slot-accounting overhead on top of plain infer).
+    let mut i = 0usize;
+    b.run("fleet_try_infer_admission", || {
+        i += 1;
+        fleet.try_infer("tiny_q8", tiny_imgs[i % tiny_imgs.len()].clone()).unwrap().len()
+    });
+
+    if let Some(s) = b.stats("fleet_4clients_x8_concurrent") {
+        println!("-> fleet throughput (4 clients): {:.0} req/s", 32.0 * 1e9 / s.mean_ns);
+    }
+    let stats = fleet.stats();
+    for row in &stats.shards {
+        println!(
+            "   shard {}#{}: {} req ({} err), mean {:.3} ms, p95 {:.3} ms, depth {}/{}{}",
+            row.network,
+            row.replica,
+            row.service.requests,
+            row.service.errors,
+            row.service.mean_latency_ms,
+            row.service.p95_latency_ms,
+            row.queue_depth,
+            row.queue_cap,
+            if row.stale { " [STALE]" } else { "" }
+        );
+    }
+    println!(
+        "-> fleet total: {} requests, {} errors, {} stale shards, {:.0} rps lifetime, worst p95 {:.3} ms",
+        stats.fleet.requests,
+        stats.fleet.errors,
+        stats.fleet.stale_shards,
+        stats.fleet.throughput_rps,
+        stats.fleet.p95_latency_ms
+    );
+    fleet.shutdown();
+
+    // --- perf-trajectory baseline (multi-section: shared with runtime_conv) ---
+    let path = baseline_path();
+    match b.write_json_sections("runtime_serve", &path) {
+        Ok(()) => println!("baseline written to {}", path.display()),
+        Err(e) => eprintln!("could not write baseline {}: {e}", path.display()),
+    }
+}

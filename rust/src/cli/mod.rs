@@ -1,10 +1,11 @@
 //! Subcommand implementations for the `convkit` binary.
 
 use convkit::blocks::{synthesize, BlockKind, ConvBlockConfig};
-use convkit::cnn::{plan_deployment, zoo, GoldenCnn};
+use convkit::cnn::{plan_deployment, zoo, GoldenCnn, NetworkSpec};
 use convkit::coordinator::dse::{DseEngine, DseReport};
 use convkit::coordinator::jobs::JobPool;
 use convkit::coordinator::service::{GoldenExecutor, InferenceService, PjrtExecutor};
+use convkit::coordinator::{drive_golden_clients, ShardSpec, ShardedService, DEFAULT_QUEUE_CAP};
 use convkit::extend::{energy_estimate, latency_estimate, PowerModel};
 use convkit::fixedpoint::QFormat;
 use convkit::models::SelectOptions;
@@ -39,6 +40,8 @@ COMMANDS:
               --target 0.X]
   serve      run the batched inference service   [--network NAME --requests N
               --batch N --golden-only]
+  fleet      sharded multi-network serving       [--networks A,B --replicas N
+              --requests N --batch N --queue-cap N]
   tables     regenerate paper tables             [N | all] [--french]
   figures    regenerate Figures 1-3              [N | all] [--csv]
   blocks     list block characteristics (Table 2)
@@ -61,6 +64,7 @@ pub fn dispatch(args: &ParsedArgs) -> Result<()> {
         Some("allocate") => cmd_allocate(args),
         Some("deploy") => cmd_deploy(args),
         Some("serve") => cmd_serve(args),
+        Some("fleet") => cmd_fleet(args),
         Some("tables") => cmd_tables(args),
         Some("figures") => cmd_figures(args),
         Some("blocks") => {
@@ -314,13 +318,106 @@ fn cmd_serve(args: &ParsedArgs) -> Result<()> {
     let stats = svc.stats()?;
     println!("served {n_req} requests in {wall:.2}s ({:.1} req/s wall)", n_req as f64 / wall);
     println!(
-        "service stats: {} requests, {} batches, mean latency {:.2} ms, p95 {:.2} ms, executor fan-out {}x",
-        stats.requests, stats.batches, stats.mean_latency_ms, stats.p95_latency_ms, stats.parallelism
+        "service stats: {} requests ({} errors), {} batches, mean latency {:.2} ms, p95 {:.2} ms, executor fan-out {}x",
+        stats.requests, stats.errors, stats.batches, stats.mean_latency_ms, stats.p95_latency_ms, stats.parallelism
     );
     println!("golden cross-check: {} mismatches / {n_req}", mismatches);
     svc.shutdown();
     if mismatches > 0 {
         return Err(Error::Runtime(format!("{mismatches} golden mismatches")));
+    }
+    Ok(())
+}
+
+fn cmd_fleet(args: &ParsedArgs) -> Result<()> {
+    let names = {
+        let list = args.get_list("networks");
+        if list.is_empty() {
+            vec!["lenet_q8".to_string(), "tiny_q8".to_string()]
+        } else {
+            list
+        }
+    };
+    let replicas = args.get_u64("replicas", 2)?.max(1) as usize;
+    let batch = args.get_u64("batch", 8)? as usize;
+    let cap = args.get_u64("queue-cap", DEFAULT_QUEUE_CAP as u64)? as usize;
+    let n_req = args.get_u64("requests", 64)? as usize;
+
+    // Resolve the zoo entries up front so typos fail before threads start.
+    let zoo_specs: Vec<NetworkSpec> = names
+        .iter()
+        .map(|name| {
+            zoo::all()
+                .into_iter()
+                .find(|n| &n.name == name)
+                .ok_or_else(|| Error::Usage(format!("unknown network `{name}`")))
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let shard_specs: Vec<ShardSpec> = names
+        .iter()
+        .map(|n| {
+            ShardSpec::golden(n).with_replicas(replicas).with_batch_size(batch).with_queue_cap(cap)
+        })
+        .collect();
+    let fleet = ShardedService::start(&shard_specs)?;
+    println!(
+        "fleet: {} shard(s) serving {} network(s) (golden-backed)",
+        fleet.shards().len(),
+        names.len()
+    );
+    for s in fleet.shards() {
+        println!("  shard {}#{}  (queue cap {})", s.network, s.replica, s.queue_cap());
+    }
+
+    // One client thread per network, pipelined past the queue cap through
+    // the shared admission front-end (so --queue-cap backpressure really
+    // fires when requests outnumber it); every reply is cross-checked
+    // against a direct golden inference — all conv blocks compute the same
+    // function, so the check is bit-exact whatever block the shards run.
+    let t0 = Instant::now();
+    let mismatch_total = drive_golden_clients(&fleet, &zoo_specs, n_req, BlockKind::Conv2)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let total_req = n_req * names.len();
+    println!(
+        "\nserved {total_req} requests across {} network(s) in {wall:.2}s ({:.1} req/s wall)",
+        names.len(),
+        total_req as f64 / wall
+    );
+
+    let st = fleet.stats();
+    println!(
+        "  {:<18} {:>6} {:>5} {:>7} {:>9} {:>9} {:>7}",
+        "shard", "req", "err", "batches", "mean ms", "p95 ms", "depth"
+    );
+    for row in &st.shards {
+        let label = format!("{}#{}", row.network, row.replica);
+        println!(
+            "  {:<18} {:>6} {:>5} {:>7} {:>9.3} {:>9.3} {:>5}/{}{}",
+            label,
+            row.service.requests,
+            row.service.errors,
+            row.service.batches,
+            row.service.mean_latency_ms,
+            row.service.p95_latency_ms,
+            row.queue_depth,
+            row.queue_cap,
+            if row.stale { "  STALE (worker did not answer)" } else { "" }
+        );
+    }
+    println!(
+        "  fleet: {} requests ({} errors), {} batches, mean {:.3} ms, worst p95 {:.3} ms, {} stale shard(s)",
+        st.fleet.requests,
+        st.fleet.errors,
+        st.fleet.batches,
+        st.fleet.mean_latency_ms,
+        st.fleet.p95_latency_ms,
+        st.fleet.stale_shards
+    );
+    println!("golden cross-check: {mismatch_total} mismatches / {total_req}");
+    fleet.shutdown();
+    if mismatch_total > 0 {
+        return Err(Error::Runtime(format!("{mismatch_total} golden mismatches")));
     }
     Ok(())
 }

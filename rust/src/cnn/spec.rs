@@ -112,6 +112,32 @@ impl NetworkSpec {
             .wrapping_add(layer as u64 + 1)
     }
 
+    /// Deterministic synthetic input images (channel-major flattened, values
+    /// spanning the layer-0 quantization range): the shared workload
+    /// generator for serving drivers, benches and tests, so they all
+    /// exercise identical inputs for a given seed.
+    pub fn synthetic_images(&self, n: usize, seed: u64) -> Vec<Vec<i64>> {
+        let bits = self.layers.first().map(|l| l.data_bits).unwrap_or(8);
+        let q = crate::fixedpoint::QFormat::new(bits).expect("valid width");
+        let mut rng = SplitMix64::new(seed);
+        (0..n)
+            .map(|_| {
+                (0..self.in_ch * self.in_h * self.in_w)
+                    .map(|_| rng.range_i64(q.min(), q.max()))
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// [`NetworkSpec::synthetic_images`] pre-cast to the `i32` domain the
+    /// serving layer speaks (same seed → same workload in both domains).
+    pub fn synthetic_images_i32(&self, n: usize, seed: u64) -> Vec<Vec<i32>> {
+        self.synthetic_images(n, seed)
+            .into_iter()
+            .map(|im| im.into_iter().map(|v| v as i32).collect())
+            .collect()
+    }
+
     /// Total multiply-accumulate operations per inference.
     pub fn macs(&self) -> u64 {
         let mut total = 0u64;
@@ -152,6 +178,20 @@ mod tests {
         net().validate().unwrap();
         assert_eq!(net().classes(), 10);
         assert_eq!(net().out_hw(), (8, 8));
+    }
+
+    #[test]
+    fn synthetic_images_deterministic_and_in_range() {
+        let n = net();
+        let a = n.synthetic_images(3, 7);
+        assert_eq!(a, n.synthetic_images(3, 7), "same seed → same workload");
+        assert_eq!(a.len(), 3);
+        let q = crate::fixedpoint::QFormat::new(n.layers[0].data_bits).unwrap();
+        for im in &a {
+            assert_eq!(im.len(), n.in_ch * n.in_h * n.in_w);
+            assert!(im.iter().all(|&v| v >= q.min() && v <= q.max()));
+        }
+        assert_ne!(n.synthetic_images(1, 1), n.synthetic_images(1, 2));
     }
 
     #[test]

@@ -3,16 +3,37 @@
 //! The paper's contribution is a design-space-exploration methodology, so the
 //! coordinator's job is the DSE loop — synthesize → correlate → fit →
 //! validate → allocate — run as a deterministic job graph over a worker pool
-//! ([`jobs`]), plus the deployment side: a batched inference service
-//! ([`service`]) that executes the AOT-compiled quantized CNN through the
-//! PJRT runtime and cross-checks it against the block-level golden model.
+//! ([`jobs`]), plus the deployment side, split across three modules with
+//! distinct responsibilities:
+//!
+//! - [`service`] — ONE worker: the batched inference event loop. A worker
+//!   thread owns a `BatchExecutor` (PJRT artifact or block-level golden
+//!   model), coalesces concurrent requests into dynamic batches, and keeps
+//!   the latency/throughput/error counters behind `ServiceStats`. It knows
+//!   nothing about networks other than its own.
+//! - [`shard`] — MANY workers: `Shard` pairs one service replica with an
+//!   admission counter; `ShardedService` owns the fleet (several networks ×
+//!   several replicas), enforces bounded admission (`try_*` returns
+//!   `Error::Overloaded` at a shard's queue cap), and aggregates per-shard
+//!   rows into fleet-wide `ShardedStats`.
+//! - [`router`] — the dispatch policy: a static network-name → replica-set
+//!   table consulted with a dynamic load signal, picking the replica with
+//!   the fewest outstanding requests (lowest index on ties). Pure and
+//!   thread-free so policy changes stay unit-testable.
 //!
 //! Rust owns the event loop, thread topology and metrics; Python never runs
 //! here (artifacts are pre-compiled by `make artifacts`).
 
 pub mod jobs;
 pub mod dse;
+pub mod router;
 pub mod service;
+pub mod shard;
 
 pub use dse::{DseEngine, DseReport};
 pub use jobs::JobPool;
+pub use router::Router;
+pub use shard::{
+    drive_golden_clients, FleetStats, Shard, ShardBackend, ShardSpec, ShardedService,
+    ShardedStats, ShardStats, Ticket, DEFAULT_QUEUE_CAP, DEFAULT_STATS_TIMEOUT,
+};

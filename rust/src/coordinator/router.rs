@@ -1,0 +1,108 @@
+//! Request routing for the sharded serving layer.
+//!
+//! A [`Router`] is a static name → replica-set table built once at fleet
+//! startup (shards never change identity at runtime), combined with a dynamic
+//! load signal at dispatch time: among the replicas of the requested network,
+//! the one with the fewest outstanding requests wins, lowest shard index
+//! breaking ties. The load signal is supplied by the caller as a closure so
+//! the router stays a pure, thread-free policy object that is trivially
+//! unit-testable without starting worker threads.
+
+use crate::util::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Name-based routing table over a shard fleet.
+///
+/// Shard indices refer to positions in the fleet slice the table was built
+/// from; `ShardedService` owns both and keeps them consistent.
+#[derive(Debug, Clone, Default)]
+pub struct Router {
+    by_network: BTreeMap<String, Vec<usize>>,
+}
+
+impl Router {
+    /// Index shards by network name, in fleet order.
+    pub fn new<'a, I>(networks: I) -> Router
+    where
+        I: IntoIterator<Item = &'a str>,
+    {
+        let mut by_network: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        for (i, n) in networks.into_iter().enumerate() {
+            by_network.entry(n.to_string()).or_default().push(i);
+        }
+        Router { by_network }
+    }
+
+    /// Served network names (sorted).
+    pub fn networks(&self) -> Vec<&str> {
+        self.by_network.keys().map(String::as_str).collect()
+    }
+
+    /// Shard indices serving `network` (empty if unknown).
+    pub fn replicas(&self, network: &str) -> &[usize] {
+        self.by_network.get(network).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Pick a shard for `network`: least outstanding requests per `load`,
+    /// lowest index on ties. `load` maps a shard index to its current
+    /// outstanding-request count.
+    pub fn route_by<F>(&self, network: &str, load: F) -> Result<usize>
+    where
+        F: Fn(usize) -> usize,
+    {
+        let replicas = self.by_network.get(network).ok_or_else(|| {
+            Error::Usage(format!(
+                "no shard serves network `{network}` (known: {})",
+                self.networks().join(", ")
+            ))
+        })?;
+        replicas
+            .iter()
+            .copied()
+            .min_by_key(|&i| (load(i), i))
+            .ok_or_else(|| Error::Usage(format!("network `{network}` has no replicas")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn router() -> Router {
+        // Fleet order: a#0, a#1, b#0, a#2.
+        Router::new(["neta", "neta", "netb", "neta"])
+    }
+
+    #[test]
+    fn networks_and_replicas_are_indexed() {
+        let r = router();
+        assert_eq!(r.networks(), vec!["neta", "netb"]);
+        assert_eq!(r.replicas("neta"), &[0, 1, 3]);
+        assert_eq!(r.replicas("netb"), &[2]);
+        assert!(r.replicas("nope").is_empty());
+    }
+
+    #[test]
+    fn routes_to_least_outstanding_replica() {
+        let r = router();
+        let loads = [5usize, 1, 9, 4];
+        assert_eq!(r.route_by("neta", |i| loads[i]).unwrap(), 1);
+        assert_eq!(r.route_by("netb", |i| loads[i]).unwrap(), 2);
+    }
+
+    #[test]
+    fn ties_break_toward_lowest_index() {
+        let r = router();
+        assert_eq!(r.route_by("neta", |_| 7).unwrap(), 0);
+        let loads = [3usize, 2, 0, 2];
+        assert_eq!(r.route_by("neta", |i| loads[i]).unwrap(), 1);
+    }
+
+    #[test]
+    fn unknown_network_is_a_usage_error() {
+        let err = router().route_by("ghost", |_| 0).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("ghost"), "{msg}");
+        assert!(msg.contains("neta"), "should list known networks: {msg}");
+    }
+}

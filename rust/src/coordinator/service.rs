@@ -8,6 +8,7 @@
 
 use crate::cnn::GoldenCnn;
 use crate::util::error::{Error, Result};
+use std::any::Any;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
@@ -172,13 +173,17 @@ impl BatchExecutor for PjrtExecutor {
 /// Service statistics snapshot.
 #[derive(Debug, Clone, Default)]
 pub struct ServiceStats {
-    /// Requests served.
+    /// Requests answered (successes AND failures — see [`ServiceStats::errors`]).
     pub requests: u64,
+    /// Requests answered with an error (executor failure or init failure).
+    pub errors: u64,
     /// Batches executed.
     pub batches: u64,
-    /// Mean request latency (milliseconds).
+    /// Mean request latency (milliseconds; successful requests only, over
+    /// the most recent window of completions — see `LATENCY_WINDOW`).
     pub mean_latency_ms: f64,
-    /// p95 request latency (milliseconds).
+    /// p95 request latency (milliseconds, nearest-rank with ceiling rank,
+    /// over the same recent window).
     pub p95_latency_ms: f64,
     /// Requests per second over the service lifetime.
     pub throughput_rps: f64,
@@ -186,10 +191,151 @@ pub struct ServiceStats {
     pub parallelism: u64,
 }
 
+/// Nearest-rank percentile over an ascending-sorted sample: the smallest
+/// element with at least `pct`% of the sample at or below it, i.e. rank
+/// ⌈n·pct/100⌉ (1-based). Returns 0 for an empty sample.
+///
+/// The ceiling is load-bearing: a floored rank `(n-1)·pct/100` reads *below*
+/// the requested percentile for small n (at n = 2 it reports the minimum as
+/// the p95 — the bug fixed in PR 2; see the regression test).
+pub fn percentile_nearest_rank(sorted: &[u64], pct: u64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = (sorted.len() as u64 * pct).div_ceil(100).max(1) as usize;
+    sorted[rank.min(sorted.len()) - 1]
+}
+
+/// Opaque object the worker drops when its request completes (just before
+/// the reply is sent) — or on the floor if the service stops first. The
+/// sharding layer passes its admission-slot guard here, so a shard's
+/// outstanding count tracks the worker's true backlog rather than caller
+/// interest (an abandoned reply does not free the slot early).
+pub type CompletionGuard = Box<dyn Any + Send>;
+
 enum Msg {
-    Infer(Vec<i32>, mpsc::Sender<Result<Vec<i32>>>),
+    /// An image, its reply channel, its *enqueue* timestamp — latency is
+    /// measured from admission, not from when the worker dequeues it, so
+    /// queue-wait under load is visible in the stats (the overload signal
+    /// the sharding layer's bounded admission exists to surface) — and an
+    /// optional [`CompletionGuard`].
+    Infer(Vec<i32>, mpsc::Sender<Result<Vec<i32>>>, Instant, Option<CompletionGuard>),
     Stats(mpsc::Sender<ServiceStats>),
     Shutdown,
+}
+
+/// An inference request absorbed into the current batch window.
+type PendingInfer =
+    (Vec<i32>, mpsc::Sender<Result<Vec<i32>>>, Instant, Option<CompletionGuard>);
+
+/// Batching window: long enough to coalesce concurrent clients, short enough
+/// not to dominate single-client latency (§Perf: 200 µs → 100 µs cut mean
+/// latency ~20% with no batching regression on the concurrent test).
+const BATCH_WINDOW: Duration = Duration::from_micros(100);
+
+/// Latency samples retained for mean/percentile estimation: a ring of the
+/// most recent completions, so snapshots stay O(window) and worker memory
+/// stays bounded on a long-running fleet (the full-lifetime request count
+/// and throughput come from `completed`, which is just a counter).
+const LATENCY_WINDOW: usize = 4096;
+
+/// Worker-side counters behind every [`ServiceStats`] snapshot.
+struct WorkerCounters {
+    started: Instant,
+    parallelism: u64,
+    /// Ring buffer of the last [`LATENCY_WINDOW`] successful-request
+    /// latencies; `next_lat` is the overwrite cursor once full.
+    latencies_us: Vec<u64>,
+    next_lat: usize,
+    batches: u64,
+    completed: u64,
+    errors: u64,
+}
+
+impl WorkerCounters {
+    fn new(parallelism: u64) -> WorkerCounters {
+        WorkerCounters {
+            started: Instant::now(),
+            parallelism,
+            latencies_us: Vec::new(),
+            next_lat: 0,
+            batches: 0,
+            completed: 0,
+            errors: 0,
+        }
+    }
+
+    fn record_latency(&mut self, us: u64) {
+        if self.latencies_us.len() < LATENCY_WINDOW {
+            self.latencies_us.push(us);
+        } else {
+            self.latencies_us[self.next_lat] = us;
+        }
+        self.next_lat = (self.next_lat + 1) % LATENCY_WINDOW;
+    }
+
+    fn snapshot(&self) -> ServiceStats {
+        let mut lats = self.latencies_us.clone();
+        lats.sort_unstable();
+        let mean = if lats.is_empty() {
+            0.0
+        } else {
+            lats.iter().sum::<u64>() as f64 / lats.len() as f64 / 1000.0
+        };
+        let p95 = percentile_nearest_rank(&lats, 95) as f64 / 1000.0;
+        let elapsed = self.started.elapsed().as_secs_f64().max(1e-9);
+        ServiceStats {
+            requests: self.completed,
+            errors: self.errors,
+            batches: self.batches,
+            mean_latency_ms: mean,
+            p95_latency_ms: p95,
+            throughput_rps: self.completed as f64 / elapsed,
+            parallelism: self.parallelism,
+        }
+    }
+}
+
+/// Assemble one batch: block for the first inference request, then coalesce
+/// arrivals inside [`BATCH_WINDOW`] up to `batch_size`. Returns the batch and
+/// whether a shutdown was observed.
+///
+/// Two correctness properties (both regression-tested):
+/// - `Msg::Stats` is answered *inline*, never parked until after the batch
+///   executes — a monitor polling a busy (or idle) service gets an immediate
+///   snapshot of everything completed so far.
+/// - `Msg::Shutdown` ends the window *immediately*: requests already absorbed
+///   are still served, but the worker stops coalescing instead of spinning
+///   until `batch_size` fills under a steady request stream.
+fn collect_batch(
+    rx: &mpsc::Receiver<Msg>,
+    batch_size: usize,
+    counters: &WorkerCounters,
+) -> (Vec<PendingInfer>, bool) {
+    let mut pending: Vec<PendingInfer> = Vec::new();
+    loop {
+        match rx.recv() {
+            Ok(Msg::Infer(im, reply, t0, guard)) => {
+                pending.push((im, reply, t0, guard));
+                break;
+            }
+            Ok(Msg::Stats(reply)) => {
+                let _ = reply.send(counters.snapshot());
+            }
+            Ok(Msg::Shutdown) | Err(_) => return (pending, true),
+        }
+    }
+    while pending.len() < batch_size {
+        match rx.recv_timeout(BATCH_WINDOW) {
+            Ok(Msg::Infer(im, reply, t0, guard)) => pending.push((im, reply, t0, guard)),
+            Ok(Msg::Stats(reply)) => {
+                let _ = reply.send(counters.snapshot());
+            }
+            Ok(Msg::Shutdown) => return (pending, true),
+            Err(_) => break,
+        }
+    }
+    (pending, false)
 }
 
 /// Handle to a running inference service.
@@ -218,15 +364,23 @@ impl InferenceService {
             let mut executor = match factory() {
                 Ok(e) => e,
                 Err(init_err) => {
-                    // Answer everything with the init failure until shutdown.
+                    // Answer everything with the init failure until shutdown;
+                    // stats snapshots surface the failures as `errors`.
                     let msg = init_err.to_string();
+                    let mut errors = 0u64;
                     for m in rx {
                         match m {
-                            Msg::Infer(_, reply) => {
+                            Msg::Infer(_, reply, _, guard) => {
+                                errors += 1;
+                                drop(guard);
                                 let _ = reply.send(Err(Error::Runtime(msg.clone())));
                             }
                             Msg::Stats(reply) => {
-                                let _ = reply.send(ServiceStats::default());
+                                let _ = reply.send(ServiceStats {
+                                    requests: errors,
+                                    errors,
+                                    ..ServiceStats::default()
+                                });
                             }
                             Msg::Shutdown => break,
                         }
@@ -234,83 +388,37 @@ impl InferenceService {
                     return;
                 }
             };
-            let started = Instant::now();
-            let parallelism = executor.parallelism() as u64;
-            let mut latencies_us: Vec<u64> = Vec::new();
-            let mut batches = 0u64;
+            let mut counters = WorkerCounters::new(executor.parallelism() as u64);
             loop {
-                // Block for the first request, then drain greedily.
-                let first = match rx.recv() {
-                    Ok(m) => m,
-                    Err(_) => break,
-                };
-                let mut pending: Vec<(Vec<i32>, mpsc::Sender<Result<Vec<i32>>>, Instant)> =
-                    Vec::new();
-                let mut stats_reqs: Vec<mpsc::Sender<ServiceStats>> = Vec::new();
-                let mut shutdown = false;
-                let absorb = |m: Msg,
-                                  pending: &mut Vec<(
-                    Vec<i32>,
-                    mpsc::Sender<Result<Vec<i32>>>,
-                    Instant,
-                )>,
-                                  stats_reqs: &mut Vec<mpsc::Sender<ServiceStats>>,
-                                  shutdown: &mut bool| {
-                    match m {
-                        Msg::Infer(im, reply) => pending.push((im, reply, Instant::now())),
-                        Msg::Stats(reply) => stats_reqs.push(reply),
-                        Msg::Shutdown => *shutdown = true,
-                    }
-                };
-                absorb(first, &mut pending, &mut stats_reqs, &mut shutdown);
-                while pending.len() < batch_size {
-                    // Batching window: long enough to coalesce concurrent
-                    // clients, short enough not to dominate single-client
-                    // latency (§Perf: 200 µs → 100 µs cut mean latency ~20%
-                    // with no batching regression on the concurrent test).
-                    match rx.recv_timeout(Duration::from_micros(100)) {
-                        Ok(m) => absorb(m, &mut pending, &mut stats_reqs, &mut shutdown),
-                        Err(_) => break,
-                    }
-                }
+                let (pending, shutdown) = collect_batch(&rx, batch_size, &counters);
                 if !pending.is_empty() {
                     let images: Vec<Vec<i32>> =
-                        pending.iter().map(|(im, _, _)| im.clone()).collect();
+                        pending.iter().map(|(im, _, _, _)| im.clone()).collect();
                     let results = executor.infer_batch(&images);
-                    batches += 1;
+                    counters.batches += 1;
                     match results {
                         Ok(outs) => {
-                            for ((_, reply, t0), out) in pending.into_iter().zip(outs) {
-                                latencies_us.push(t0.elapsed().as_micros() as u64);
+                            for ((_, reply, t0, guard), out) in pending.into_iter().zip(outs) {
+                                counters.record_latency(t0.elapsed().as_micros() as u64);
+                                counters.completed += 1;
+                                // Release the admission slot before replying so
+                                // a caller unblocked by the reply observes the
+                                // slot already freed (keeps tests and
+                                // cap-accounting deterministic).
+                                drop(guard);
                                 let _ = reply.send(Ok(out));
                             }
                         }
                         Err(e) => {
                             let msg = e.to_string();
-                            for (_, reply, _) in pending {
+                            for (_, reply, _, guard) in pending {
+                                counters.completed += 1;
+                                counters.errors += 1;
+                                drop(guard);
                                 let _ = reply.send(Err(Error::Runtime(msg.clone())));
                             }
                         }
                     }
-                }
-                for reply in stats_reqs {
-                    let mut lats = latencies_us.clone();
-                    lats.sort_unstable();
-                    let n = lats.len().max(1);
-                    let mean =
-                        lats.iter().sum::<u64>() as f64 / n as f64 / 1000.0;
-                    let p95 = lats.get((lats.len().saturating_sub(1)) * 95 / 100).copied()
-                        .unwrap_or(0) as f64
-                        / 1000.0;
-                    let elapsed = started.elapsed().as_secs_f64().max(1e-9);
-                    let _ = reply.send(ServiceStats {
-                        requests: latencies_us.len() as u64,
-                        batches,
-                        mean_latency_ms: mean,
-                        p95_latency_ms: p95,
-                        throughput_rps: latencies_us.len() as f64 / elapsed,
-                        parallelism,
-                    });
                 }
                 if shutdown {
                     break;
@@ -320,22 +428,70 @@ impl InferenceService {
         InferenceService { tx, worker: Some(worker) }
     }
 
-    /// Blocking inference of one image.
-    pub fn infer(&self, image: Vec<i32>) -> Result<Vec<i32>> {
-        let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .send(Msg::Infer(image, rtx))
-            .map_err(|_| Error::Runtime("service stopped".into()))?;
-        rrx.recv().map_err(|_| Error::Runtime("service dropped reply".into()))?
+    /// Non-blocking admission: enqueue one image and return the reply channel.
+    /// The sharding layer builds its bounded admission queue on top of this
+    /// (see `coordinator::shard`); `recv()` on the returned channel blocks
+    /// until the batch containing the request executes. Latency is measured
+    /// from this call, so time spent queued counts toward the stats.
+    pub fn enqueue(&self, image: Vec<i32>) -> Result<mpsc::Receiver<Result<Vec<i32>>>> {
+        self.enqueue_with_guard(image, None)
     }
 
-    /// Fetch statistics.
-    pub fn stats(&self) -> Result<ServiceStats> {
+    /// [`InferenceService::enqueue`] with a [`CompletionGuard`] attached: the
+    /// worker drops the guard the moment this request completes (success,
+    /// failure, or service teardown), letting callers tie resource release —
+    /// e.g. a shard's admission slot — to actual completion.
+    pub fn enqueue_with_guard(
+        &self,
+        image: Vec<i32>,
+        guard: Option<CompletionGuard>,
+    ) -> Result<mpsc::Receiver<Result<Vec<i32>>>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Msg::Infer(image, rtx, Instant::now(), guard))
+            .map_err(|_| Error::Runtime("service stopped".into()))?;
+        Ok(rrx)
+    }
+
+    /// Blocking inference of one image.
+    pub fn infer(&self, image: Vec<i32>) -> Result<Vec<i32>> {
+        self.enqueue(image)?
+            .recv()
+            .map_err(|_| Error::Runtime("service dropped reply".into()))?
+    }
+
+    /// Send a stats request and return the reply channel without waiting —
+    /// lets a fleet snapshot query every worker concurrently against one
+    /// shared deadline instead of paying each worker's wait in sequence.
+    pub fn request_stats(&self) -> Result<mpsc::Receiver<ServiceStats>> {
         let (rtx, rrx) = mpsc::channel();
         self.tx
             .send(Msg::Stats(rtx))
             .map_err(|_| Error::Runtime("service stopped".into()))?;
-        rrx.recv().map_err(|_| Error::Runtime("service dropped stats".into()))
+        Ok(rrx)
+    }
+
+    /// Fetch statistics (blocks until the worker answers — which can be a
+    /// full batch execution if the worker is inside its executor; use
+    /// [`InferenceService::stats_within`] for a bounded wait).
+    pub fn stats(&self) -> Result<ServiceStats> {
+        self.request_stats()?
+            .recv()
+            .map_err(|_| Error::Runtime("service dropped stats".into()))
+    }
+
+    /// Fetch statistics, waiting at most `timeout` for the worker to answer.
+    /// `Ok(None)` means the worker did not answer in time (it is executing a
+    /// batch — wedged or just slow); `Err` means the service is stopped. The
+    /// late reply, if any, is discarded harmlessly.
+    pub fn stats_within(&self, timeout: Duration) -> Result<Option<ServiceStats>> {
+        match self.request_stats()?.recv_timeout(timeout) {
+            Ok(stats) => Ok(Some(stats)),
+            Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Err(Error::Runtime("service dropped stats".into()))
+            }
+        }
     }
 
     /// Stop the worker and join it.
@@ -436,6 +592,97 @@ mod tests {
         let _ = svc.infer(image(&cnn, 1)).unwrap();
         let stats = svc.stats().unwrap();
         assert_eq!(stats.parallelism, 3);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn p95_uses_ceiling_rank_not_floor() {
+        // 10-sample vector: nearest-rank p95 = rank ⌈10·0.95⌉ = the 10th value.
+        let lats: Vec<u64> = (1..=10).collect();
+        assert_eq!(percentile_nearest_rank(&lats, 95), 10);
+        // The pre-fix formula `(n-1)*95/100` floors to index 8 → reports 9.
+        assert_ne!(lats[(lats.len() - 1) * 95 / 100], 10, "old formula must disagree");
+        // Two samples: the old formula reported the MINIMUM as the p95.
+        let two = [3u64, 400];
+        assert_eq!(percentile_nearest_rank(&two, 95), 400);
+        assert_eq!(two[(two.len() - 1) * 95 / 100], 3, "old formula reported the minimum");
+        // Degenerate and mid-range cases.
+        assert_eq!(percentile_nearest_rank(&[], 95), 0);
+        assert_eq!(percentile_nearest_rank(&[7], 95), 7);
+        assert_eq!(percentile_nearest_rank(&lats, 50), 5);
+        assert_eq!(percentile_nearest_rank(&lats, 100), 10);
+    }
+
+    #[test]
+    fn shutdown_mid_window_ends_coalescing_immediately() {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (r1, _keep1) = mpsc::channel();
+        let (r2, _keep2) = mpsc::channel();
+        let (r3, _keep3) = mpsc::channel();
+        tx.send(Msg::Infer(vec![1], r1, Instant::now(), None)).unwrap();
+        tx.send(Msg::Infer(vec![2], r2, Instant::now(), None)).unwrap();
+        tx.send(Msg::Shutdown).unwrap();
+        tx.send(Msg::Infer(vec![3], r3, Instant::now(), None)).unwrap();
+        let counters = WorkerCounters::new(1);
+        let (pending, shutdown) = collect_batch(&rx, 100, &counters);
+        assert!(shutdown);
+        assert_eq!(pending.len(), 2, "requests absorbed before shutdown ride the final batch");
+        // The post-shutdown request was NOT absorbed: the window closed at
+        // once instead of coalescing toward batch_size = 100.
+        assert!(matches!(rx.try_recv(), Ok(Msg::Infer(im, _, _, _)) if im == vec![3]));
+    }
+
+    #[test]
+    fn stats_answered_inside_batching_window() {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (reply_tx, _reply_keep) = mpsc::channel();
+        let (stats_tx, stats_rx) = mpsc::channel();
+        tx.send(Msg::Infer(vec![0], reply_tx, Instant::now(), None)).unwrap();
+        tx.send(Msg::Stats(stats_tx)).unwrap();
+        let mut counters = WorkerCounters::new(1);
+        counters.completed = 3;
+        counters.errors = 1;
+        let (pending, shutdown) = collect_batch(&rx, 8, &counters);
+        assert_eq!(pending.len(), 1);
+        assert!(!shutdown);
+        // Answered during the window — before any batch executed — instead of
+        // being parked until the whole batch ran.
+        let snap = stats_rx.try_recv().expect("stats reply must already be queued");
+        assert_eq!(snap.requests, 3);
+        assert_eq!(snap.errors, 1);
+    }
+
+    #[test]
+    fn latency_ring_buffer_stays_bounded() {
+        let mut c = WorkerCounters::new(1);
+        for i in 0..(LATENCY_WINDOW as u64 + 100) {
+            c.record_latency(i);
+        }
+        assert_eq!(c.latencies_us.len(), LATENCY_WINDOW, "memory stays bounded");
+        // The overwrite cursor replaced the 100 oldest samples (0..99), so
+        // the minimum retained latency is sample 100.
+        assert_eq!(*c.latencies_us.iter().min().unwrap(), 100);
+        assert_eq!(*c.latencies_us.iter().max().unwrap(), LATENCY_WINDOW as u64 + 99);
+    }
+
+    #[test]
+    fn failed_requests_are_counted_with_errors() {
+        struct FailingExecutor;
+        impl BatchExecutor for FailingExecutor {
+            fn infer_batch(&mut self, _images: &[Vec<i32>]) -> Result<Vec<Vec<i32>>> {
+                Err(Error::Runtime("injected failure".into()))
+            }
+            fn label(&self) -> String {
+                "failing".into()
+            }
+        }
+        let svc = InferenceService::start(FailingExecutor, 2);
+        assert!(svc.infer(vec![0; 4]).is_err());
+        assert!(svc.infer(vec![1; 4]).is_err());
+        let stats = svc.stats().unwrap();
+        assert_eq!(stats.requests, 2, "failed requests must still be counted");
+        assert_eq!(stats.errors, 2);
+        assert_eq!(stats.mean_latency_ms, 0.0, "failures do not pollute latency stats");
         svc.shutdown();
     }
 

@@ -1,0 +1,631 @@
+//! Sharded multi-network serving: many [`InferenceService`] workers behind
+//! one admission front-end.
+//!
+//! A [`Shard`] is one network replica — an `InferenceService` (golden- or
+//! PJRT-backed via the existing factory path) plus an admission counter. A
+//! [`ShardedService`] owns a fleet of shards and a
+//! [`Router`](super::router::Router): requests are routed by network name to
+//! the replica with the fewest outstanding requests, and admission is
+//! *bounded* — [`Shard::try_submit`]/[`ShardedService::try_infer`] reject
+//! with [`Error::Overloaded`] once a shard's outstanding count reaches its
+//! queue cap, instead of letting queues grow without bound under a traffic
+//! spike. Blocking [`infer`](ShardedService::infer) remains available for
+//! cooperative clients.
+//!
+//! Admission accounting tracks the worker's *true backlog*: the atomic is
+//! incremented at submit and decremented — via a completion guard the worker
+//! drops just before replying — only when the request actually completes.
+//! Abandoning a [`Ticket`] therefore does NOT free the slot early; the cap
+//! genuinely bounds queued work, not caller interest. Queue-depth reads
+//! (`outstanding`) are plain atomic loads, so they stay accurate even while
+//! a worker is wedged inside its executor, and [`Shard::stats`] degrades to
+//! a `stale` row (with live depth) rather than hanging in that case.
+
+use crate::blocks::BlockKind;
+use crate::cnn::{zoo, GoldenCnn, NetworkSpec};
+use crate::coordinator::router::Router;
+use crate::coordinator::service::{
+    GoldenExecutor, InferenceService, PjrtExecutor, ServiceStats,
+};
+use crate::runtime::{artifacts_dir, Runtime};
+use crate::util::error::{Error, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// Default per-shard admission cap (outstanding requests).
+pub const DEFAULT_QUEUE_CAP: usize = 64;
+
+/// How long [`Shard::stats`] waits for a worker's answer before reporting
+/// the shard as stale (a worker mid-batch answers as soon as the batch
+/// returns; one stuck in a hung executor never would).
+pub const DEFAULT_STATS_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// How a shard executes its network.
+#[derive(Debug, Clone)]
+pub enum ShardBackend {
+    /// Block-simulator golden model (always available, no artifacts needed).
+    Golden {
+        /// Block microarchitecture running the convolutions.
+        block: BlockKind,
+        /// Executor batch fan-out threads (0 = size to the machine).
+        workers: usize,
+    },
+    /// AOT artifact through PJRT (needs `--features pjrt` + `make artifacts`;
+    /// the executor is built inside the worker thread — it is not `Send`).
+    Pjrt,
+}
+
+/// Declarative description of one network's serving allotment; expanded by
+/// [`ShardedService::start`] into `replicas` shards.
+#[derive(Debug, Clone)]
+pub struct ShardSpec {
+    /// Zoo network name (e.g. `lenet_q8`).
+    pub network: String,
+    /// Replica count (≥ 1).
+    pub replicas: usize,
+    /// Dynamic-batch size of each replica's service.
+    pub batch_size: usize,
+    /// Per-replica admission cap for `try_*` calls.
+    pub queue_cap: usize,
+    /// Execution backend.
+    pub backend: ShardBackend,
+}
+
+impl ShardSpec {
+    /// Golden-backed single replica with serving defaults.
+    pub fn golden(network: &str) -> ShardSpec {
+        ShardSpec {
+            network: network.to_string(),
+            replicas: 1,
+            batch_size: 8,
+            queue_cap: DEFAULT_QUEUE_CAP,
+            backend: ShardBackend::Golden { block: BlockKind::Conv2, workers: 0 },
+        }
+    }
+
+    /// PJRT-backed single replica with serving defaults.
+    pub fn pjrt(network: &str) -> ShardSpec {
+        ShardSpec { backend: ShardBackend::Pjrt, ..ShardSpec::golden(network) }
+    }
+
+    /// Set the replica count.
+    pub fn with_replicas(mut self, replicas: usize) -> ShardSpec {
+        self.replicas = replicas;
+        self
+    }
+
+    /// Set the per-replica batch size.
+    pub fn with_batch_size(mut self, batch_size: usize) -> ShardSpec {
+        self.batch_size = batch_size;
+        self
+    }
+
+    /// Set the per-replica admission cap.
+    pub fn with_queue_cap(mut self, queue_cap: usize) -> ShardSpec {
+        self.queue_cap = queue_cap;
+        self
+    }
+
+    /// Set the execution backend.
+    pub fn with_backend(mut self, backend: ShardBackend) -> ShardSpec {
+        self.backend = backend;
+        self
+    }
+}
+
+/// Decrements the shard's outstanding counter on drop (panic- and
+/// early-return-safe slot release). Handed to the worker as a
+/// [`CompletionGuard`](crate::coordinator::service::CompletionGuard) so the
+/// slot is released exactly when the request completes — whether the caller
+/// still holds its ticket or not.
+struct SlotGuard(Arc<AtomicUsize>);
+
+impl Drop for SlotGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// An admitted in-flight request. [`Ticket::wait`] blocks for the reply.
+/// Dropping the ticket abandons the reply but does NOT free the admission
+/// slot — the request is still queued or executing, and the worker releases
+/// the slot when it finishes (so `queue_cap` bounds real backlog).
+pub struct Ticket {
+    rx: mpsc::Receiver<Result<Vec<i32>>>,
+}
+
+impl Ticket {
+    /// Block until the batch containing this request executes.
+    pub fn wait(self) -> Result<Vec<i32>> {
+        self.rx.recv().map_err(|_| Error::Runtime("service dropped reply".into()))?
+    }
+}
+
+/// One network replica: an inference service plus its admission counter.
+pub struct Shard {
+    /// Network this replica serves (routing key).
+    pub network: String,
+    /// Replica ordinal within the network (0-based, display only).
+    pub replica: usize,
+    queue_cap: usize,
+    outstanding: Arc<AtomicUsize>,
+    service: InferenceService,
+}
+
+impl Shard {
+    /// Wrap an already-started service (tests inject custom executors here).
+    pub fn from_service(
+        network: &str,
+        replica: usize,
+        queue_cap: usize,
+        service: InferenceService,
+    ) -> Shard {
+        Shard {
+            network: network.to_string(),
+            replica,
+            queue_cap: queue_cap.max(1),
+            outstanding: Arc::new(AtomicUsize::new(0)),
+            service,
+        }
+    }
+
+    /// Start replica `replica` of `spec` (network resolved from the zoo).
+    pub fn start(spec: &ShardSpec, replica: usize) -> Result<Shard> {
+        let net = zoo::all()
+            .into_iter()
+            .find(|n| n.name == spec.network)
+            .ok_or_else(|| Error::Usage(format!("unknown network `{}`", spec.network)))?;
+        let service = match &spec.backend {
+            ShardBackend::Golden { block, workers } => {
+                let cnn = GoldenCnn::new(net, *block)?;
+                let exec = if *workers == 0 {
+                    GoldenExecutor::new(cnn)
+                } else {
+                    GoldenExecutor::with_workers(cnn, *workers)
+                };
+                InferenceService::start(exec, spec.batch_size)
+            }
+            ShardBackend::Pjrt => {
+                let name = spec.network.clone();
+                InferenceService::start_factory(
+                    move || {
+                        let rt = Runtime::cpu()?;
+                        let art = rt.load_named(&artifacts_dir(), &name)?;
+                        PjrtExecutor::from_artifact(art)
+                    },
+                    spec.batch_size,
+                )
+            }
+        };
+        Ok(Shard::from_service(&spec.network, replica, spec.queue_cap, service))
+    }
+
+    /// Outstanding (admitted, unanswered) requests right now.
+    pub fn outstanding(&self) -> usize {
+        self.outstanding.load(Ordering::SeqCst)
+    }
+
+    /// Admission cap for `try_*` calls.
+    pub fn queue_cap(&self) -> usize {
+        self.queue_cap
+    }
+
+    /// Unconditionally take a slot (blocking-path accounting).
+    fn acquire(&self) -> SlotGuard {
+        self.outstanding.fetch_add(1, Ordering::SeqCst);
+        SlotGuard(Arc::clone(&self.outstanding))
+    }
+
+    /// Take a slot only below the cap (optimistic increment, rolled back by
+    /// the guard if over).
+    fn try_acquire(&self) -> Option<SlotGuard> {
+        let prev = self.outstanding.fetch_add(1, Ordering::SeqCst);
+        let guard = SlotGuard(Arc::clone(&self.outstanding));
+        if prev >= self.queue_cap {
+            None // guard drop rolls the increment back
+        } else {
+            Some(guard)
+        }
+    }
+
+    /// Non-blocking admission without a cap check (cooperative clients).
+    pub fn submit(&self, image: Vec<i32>) -> Result<Ticket> {
+        let slot = self.acquire();
+        // If the send fails the guard inside the dead message is dropped,
+        // rolling the increment back.
+        let rx = self.service.enqueue_with_guard(image, Some(Box::new(slot)))?;
+        Ok(Ticket { rx })
+    }
+
+    /// Non-blocking *bounded* admission: [`Error::Overloaded`] at the cap.
+    pub fn try_submit(&self, image: Vec<i32>) -> Result<Ticket> {
+        let slot = self.try_acquire().ok_or_else(|| {
+            Error::Overloaded(format!(
+                "shard {}#{} at queue cap {}",
+                self.network, self.replica, self.queue_cap
+            ))
+        })?;
+        let rx = self.service.enqueue_with_guard(image, Some(Box::new(slot)))?;
+        Ok(Ticket { rx })
+    }
+
+    /// Blocking inference (uncapped admission).
+    pub fn infer(&self, image: Vec<i32>) -> Result<Vec<i32>> {
+        self.submit(image)?.wait()
+    }
+
+    /// Blocking inference behind bounded admission.
+    pub fn try_infer(&self, image: Vec<i32>) -> Result<Vec<i32>> {
+        self.try_submit(image)?.wait()
+    }
+
+    /// Build this shard's stats row from a worker answer (or the lack of
+    /// one): no answer — timed out, wedged, or dead — degrades to
+    /// `stale: true` with zeroed service counters but a live queue depth,
+    /// so one bad shard never makes the fleet unobservable.
+    fn row(&self, answer: Option<ServiceStats>) -> ShardStats {
+        let (service, stale) = match answer {
+            Some(s) => (s, false),
+            None => (ServiceStats::default(), true),
+        };
+        ShardStats {
+            network: self.network.clone(),
+            replica: self.replica,
+            queue_depth: self.outstanding() as u64,
+            queue_cap: self.queue_cap as u64,
+            stale,
+            service,
+        }
+    }
+
+    /// Snapshot this shard's service counters plus its queue depth, waiting
+    /// at most [`DEFAULT_STATS_TIMEOUT`] for the worker. A worker stuck
+    /// inside its executor (or dead) yields a `stale` row instead of
+    /// hanging or failing the caller.
+    pub fn stats(&self) -> ShardStats {
+        self.stats_within(DEFAULT_STATS_TIMEOUT)
+    }
+
+    /// [`Shard::stats`] with an explicit worker-answer timeout.
+    pub fn stats_within(&self, timeout: Duration) -> ShardStats {
+        self.row(self.service.stats_within(timeout).ok().flatten())
+    }
+
+    /// Stop the worker and join it.
+    pub fn shutdown(self) {
+        self.service.shutdown();
+    }
+}
+
+/// Per-shard statistics snapshot.
+#[derive(Debug, Clone)]
+pub struct ShardStats {
+    /// Network served.
+    pub network: String,
+    /// Replica ordinal.
+    pub replica: usize,
+    /// Outstanding requests at snapshot time.
+    pub queue_depth: u64,
+    /// Admission cap.
+    pub queue_cap: u64,
+    /// True when the worker did not answer within the stats timeout (stuck
+    /// or slow executor): `service` is zeroed, `queue_depth` is still live.
+    pub stale: bool,
+    /// The underlying service counters.
+    pub service: ServiceStats,
+}
+
+/// Fleet-wide aggregate across all shards.
+#[derive(Debug, Clone, Default)]
+pub struct FleetStats {
+    /// Requests answered fleet-wide (successes + failures).
+    pub requests: u64,
+    /// Requests answered with an error.
+    pub errors: u64,
+    /// Batches executed fleet-wide.
+    pub batches: u64,
+    /// Request-weighted mean latency (ms).
+    pub mean_latency_ms: f64,
+    /// Worst per-shard p95 (ms) — conservative fleet tail latency.
+    pub p95_latency_ms: f64,
+    /// Summed shard throughput (requests/s).
+    pub throughput_rps: f64,
+    /// Summed outstanding requests at snapshot time.
+    pub queue_depth: u64,
+    /// Shards whose worker did not answer within the stats timeout.
+    pub stale_shards: u64,
+}
+
+/// Aggregated serving statistics: per-shard rows plus the fleet roll-up.
+#[derive(Debug, Clone)]
+pub struct ShardedStats {
+    /// One row per shard, in fleet order.
+    pub shards: Vec<ShardStats>,
+    /// Fleet-wide aggregate.
+    pub fleet: FleetStats,
+}
+
+/// Roll per-shard rows up into a fleet aggregate.
+fn aggregate(shards: &[ShardStats]) -> FleetStats {
+    let mut fleet = FleetStats::default();
+    let mut weighted_mean = 0.0;
+    let mut success_weight = 0u64;
+    for s in shards {
+        fleet.requests += s.service.requests;
+        fleet.errors += s.service.errors;
+        fleet.batches += s.service.batches;
+        fleet.throughput_rps += s.service.throughput_rps;
+        fleet.queue_depth += s.queue_depth;
+        fleet.stale_shards += u64::from(s.stale);
+        fleet.p95_latency_ms = fleet.p95_latency_ms.max(s.service.p95_latency_ms);
+        // Latency means cover successful requests only.
+        let ok = s.service.requests - s.service.errors;
+        weighted_mean += s.service.mean_latency_ms * ok as f64;
+        success_weight += ok;
+    }
+    if success_weight > 0 {
+        fleet.mean_latency_ms = weighted_mean / success_weight as f64;
+    }
+    fleet
+}
+
+/// A fleet of shards serving several networks behind one admission
+/// front-end. All methods take `&self`; clients on many threads share one
+/// `ShardedService` (or an `Arc` of it) directly.
+pub struct ShardedService {
+    shards: Vec<Shard>,
+    router: Router,
+}
+
+impl ShardedService {
+    /// Start every replica of every spec. Fails fast (shutting down the
+    /// already-started shards via drop) if any network is unknown.
+    pub fn start(specs: &[ShardSpec]) -> Result<ShardedService> {
+        let mut shards = Vec::new();
+        for spec in specs {
+            if spec.replicas == 0 {
+                return Err(Error::InvalidConfig(format!(
+                    "network `{}`: replicas must be ≥ 1",
+                    spec.network
+                )));
+            }
+            for r in 0..spec.replicas {
+                shards.push(Shard::start(spec, r)?);
+            }
+        }
+        ShardedService::from_shards(shards)
+    }
+
+    /// Assemble a fleet from pre-built shards (tests inject custom executors
+    /// through [`Shard::from_service`] here).
+    pub fn from_shards(shards: Vec<Shard>) -> Result<ShardedService> {
+        if shards.is_empty() {
+            return Err(Error::InvalidConfig("sharded service needs ≥ 1 shard".into()));
+        }
+        let router = Router::new(shards.iter().map(|s| s.network.as_str()));
+        Ok(ShardedService { shards, router })
+    }
+
+    /// Served network names (sorted).
+    pub fn networks(&self) -> Vec<&str> {
+        self.router.networks()
+    }
+
+    /// The fleet, in index order.
+    pub fn shards(&self) -> &[Shard] {
+        &self.shards
+    }
+
+    /// Route to the least-loaded replica of `network`.
+    fn shard_for(&self, network: &str) -> Result<&Shard> {
+        let idx = self.router.route_by(network, |i| self.shards[i].outstanding())?;
+        Ok(&self.shards[idx])
+    }
+
+    /// Non-blocking uncapped admission to `network`'s least-loaded replica.
+    pub fn submit(&self, network: &str, image: Vec<i32>) -> Result<Ticket> {
+        self.shard_for(network)?.submit(image)
+    }
+
+    /// Non-blocking *bounded* admission: [`Error::Overloaded`] once the
+    /// routed replica is at its cap.
+    pub fn try_submit(&self, network: &str, image: Vec<i32>) -> Result<Ticket> {
+        self.shard_for(network)?.try_submit(image)
+    }
+
+    /// Blocking inference on `network` (uncapped admission).
+    pub fn infer(&self, network: &str, image: Vec<i32>) -> Result<Vec<i32>> {
+        self.shard_for(network)?.infer(image)
+    }
+
+    /// Blocking inference behind bounded admission.
+    pub fn try_infer(&self, network: &str, image: Vec<i32>) -> Result<Vec<i32>> {
+        self.shard_for(network)?.try_infer(image)
+    }
+
+    /// Per-shard + fleet-wide statistics. All workers are queried
+    /// *concurrently* against one shared [`DEFAULT_STATS_TIMEOUT`] deadline
+    /// (requests fan out first, replies are collected second), so the
+    /// snapshot costs one timeout total — not one per busy shard — and a
+    /// wedged or dead worker shows up as a `stale` row rather than hanging
+    /// or failing the whole fleet.
+    pub fn stats(&self) -> ShardedStats {
+        let deadline = Instant::now() + DEFAULT_STATS_TIMEOUT;
+        let pending: Vec<Option<mpsc::Receiver<ServiceStats>>> =
+            self.shards.iter().map(|s| s.service.request_stats().ok()).collect();
+        let shards: Vec<ShardStats> = self
+            .shards
+            .iter()
+            .zip(pending)
+            .map(|(shard, rx)| {
+                let answer = rx.and_then(|rx| {
+                    let remaining = deadline.saturating_duration_since(Instant::now());
+                    rx.recv_timeout(remaining).ok()
+                });
+                shard.row(answer)
+            })
+            .collect();
+        let fleet = aggregate(&shards);
+        ShardedStats { shards, fleet }
+    }
+
+    /// Stop and join every shard worker.
+    pub fn shutdown(self) {
+        for shard in self.shards {
+            shard.shutdown();
+        }
+    }
+}
+
+/// Drive one client thread per network through the fleet's *bounded*
+/// admission path: submissions are pipelined (the in-flight window is sized
+/// past the network's replica cap), so whenever `requests_per_network`
+/// exceeds the queue cap, `try_submit` genuinely hits
+/// [`Error::Overloaded`] and the client drains its oldest in-flight request
+/// to make room — real backpressure, not a decorative retry loop. Every
+/// reply is cross-checked against a direct golden inference on `block`
+/// (all conv blocks compute the same function, so the check is bit-exact
+/// whatever block each shard runs). Workloads are deterministic
+/// ([`NetworkSpec::synthetic_images`] seeded from each spec's own seed).
+/// Returns the total mismatch count. Shared by the `convkit fleet`
+/// subcommand and the e2e driver so the two stay behaviourally identical.
+pub fn drive_golden_clients(
+    fleet: &ShardedService,
+    specs: &[NetworkSpec],
+    requests_per_network: usize,
+    block: BlockKind,
+) -> Result<usize> {
+    std::thread::scope(|scope| -> Result<usize> {
+        let handles: Vec<_> = specs
+            .iter()
+            .map(|spec| {
+                scope.spawn(move || -> Result<usize> {
+                    let golden = GoldenCnn::new(spec.clone(), block)?;
+                    let verify = |ticket: Ticket, img: &[i64]| -> Result<bool> {
+                        let logits = ticket.wait()?;
+                        let want: Vec<i32> =
+                            golden.infer(img)?.into_iter().map(|v| v as i32).collect();
+                        Ok(logits != want)
+                    };
+                    // Pipeline deep enough to overrun the network's largest
+                    // replica cap (capped by the request count itself).
+                    let cap = fleet
+                        .shards()
+                        .iter()
+                        .filter(|s| s.network == spec.name)
+                        .map(Shard::queue_cap)
+                        .max()
+                        .unwrap_or(1);
+                    let window = (cap + 2).min(requests_per_network.max(1));
+                    let mut inflight: VecDeque<(Ticket, Vec<i64>)> = VecDeque::new();
+                    let mut mismatches = 0usize;
+                    for img in spec.synthetic_images(requests_per_network, 0xF1EE7 ^ spec.seed)
+                    {
+                        let img32: Vec<i32> = img.iter().map(|&v| v as i32).collect();
+                        let ticket = loop {
+                            match fleet.try_submit(&spec.name, img32.clone()) {
+                                Ok(t) => break t,
+                                Err(Error::Overloaded(_)) => match inflight.pop_front() {
+                                    // Backpressure: drain our oldest in-flight
+                                    // request to free an admission slot.
+                                    Some((t, im)) => {
+                                        if verify(t, &im)? {
+                                            mismatches += 1;
+                                        }
+                                    }
+                                    // Another client holds the slots — yield
+                                    // until the live worker drains them.
+                                    None => std::thread::yield_now(),
+                                },
+                                Err(e) => return Err(e),
+                            }
+                        };
+                        inflight.push_back((ticket, img));
+                        while inflight.len() >= window {
+                            let (t, im) = inflight.pop_front().expect("window is >= 1");
+                            if verify(t, &im)? {
+                                mismatches += 1;
+                            }
+                        }
+                    }
+                    for (t, im) in inflight {
+                        if verify(t, &im)? {
+                            mismatches += 1;
+                        }
+                    }
+                    Ok(mismatches)
+                })
+            })
+            .collect();
+        let mut total = 0usize;
+        for h in handles {
+            total += h.join().expect("fleet client panicked")?;
+        }
+        Ok(total)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_spec_builders_compose() {
+        let s = ShardSpec::golden("tiny_q8").with_replicas(3).with_batch_size(4).with_queue_cap(2);
+        assert_eq!(s.network, "tiny_q8");
+        assert_eq!((s.replicas, s.batch_size, s.queue_cap), (3, 4, 2));
+        assert!(matches!(s.backend, ShardBackend::Golden { .. }));
+        assert!(matches!(ShardSpec::pjrt("tiny_q8").backend, ShardBackend::Pjrt));
+    }
+
+    #[test]
+    fn unknown_network_fails_fast() {
+        assert!(Shard::start(&ShardSpec::golden("no_such_net"), 0).is_err());
+        assert!(ShardedService::start(&[ShardSpec::golden("no_such_net")]).is_err());
+        assert!(ShardedService::from_shards(Vec::new()).is_err());
+        assert!(
+            ShardedService::start(&[ShardSpec::golden("tiny_q8").with_replicas(0)]).is_err()
+        );
+    }
+
+    #[test]
+    fn fleet_aggregation_rolls_up() {
+        let row = |net: &str, replica, requests, errors, mean, p95, rps, depth| ShardStats {
+            network: net.to_string(),
+            replica,
+            queue_depth: depth,
+            queue_cap: 8,
+            stale: false,
+            service: ServiceStats {
+                requests,
+                errors,
+                batches: 2,
+                mean_latency_ms: mean,
+                p95_latency_ms: p95,
+                throughput_rps: rps,
+                parallelism: 1,
+            },
+        };
+        let rows = vec![
+            row("a", 0, 10, 0, 2.0, 5.0, 100.0, 1),
+            row("a", 1, 30, 10, 4.0, 9.0, 200.0, 2),
+            ShardStats { stale: true, ..row("b", 0, 0, 0, 0.0, 0.0, 0.0, 0) },
+        ];
+        let fleet = aggregate(&rows);
+        assert_eq!(fleet.requests, 40);
+        assert_eq!(fleet.errors, 10);
+        assert_eq!(fleet.batches, 6);
+        assert_eq!(fleet.queue_depth, 3);
+        assert_eq!(fleet.stale_shards, 1);
+        assert_eq!(fleet.p95_latency_ms, 9.0);
+        assert!((fleet.throughput_rps - 300.0).abs() < 1e-9);
+        // Success-weighted mean: (10·2 + 20·4) / 30.
+        assert!((fleet.mean_latency_ms - 100.0 / 30.0).abs() < 1e-9);
+        // Empty fleet aggregates to zeros without dividing by zero.
+        let empty = aggregate(&[]);
+        assert_eq!(empty.requests, 0);
+        assert_eq!(empty.mean_latency_ms, 0.0);
+    }
+}

@@ -107,17 +107,12 @@ impl Bench {
         &self.results
     }
 
-    /// Serialize all collected results as a JSON baseline (hand-rolled —
-    /// no serde offline). Shape:
-    /// `{"bench": NAME, "results": [{"name": ..., "iters": N,
-    /// "mean_ns": ..., "p50_ns": ..., "p95_ns": ..., "min_ns": ...,
-    /// "throughput_per_s": ...}, ...]}`.
-    pub fn to_json(&self, bench_name: &str) -> String {
-        let mut out = String::from("{\n");
-        out.push_str(&format!("  \"bench\": \"{}\",\n  \"results\": [\n", bench_name));
+    /// The results array, serialized (hand-rolled — no serde offline).
+    fn results_json(&self, indent: &str) -> String {
+        let mut out = String::new();
         for (i, s) in self.results.iter().enumerate() {
             out.push_str(&format!(
-                "    {{\"name\": \"{}\", \"iters\": {}, \"mean_ns\": {:.1}, \
+                "{indent}{{\"name\": \"{}\", \"iters\": {}, \"mean_ns\": {:.1}, \
                  \"p50_ns\": {:.1}, \"p95_ns\": {:.1}, \"min_ns\": {:.1}, \
                  \"throughput_per_s\": {:.1}}}{}\n",
                 s.name,
@@ -130,20 +125,111 @@ impl Bench {
                 if i + 1 == self.results.len() { "" } else { "," }
             ));
         }
+        out
+    }
+
+    /// Serialize all collected results as a single-bench JSON baseline.
+    /// Shape: `{"bench": NAME, "results": [{"name": ..., "iters": N,
+    /// "mean_ns": ..., "p50_ns": ..., "p95_ns": ..., "min_ns": ...,
+    /// "throughput_per_s": ...}, ...]}`.
+    pub fn to_json(&self, bench_name: &str) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"bench\": \"{}\",\n  \"results\": [\n", bench_name));
+        out.push_str(&self.results_json("    "));
         out.push_str("  ]\n}\n");
         out
     }
 
-    /// Write the JSON baseline next to the repo root (or wherever `path`
-    /// points) so CI can archive a perf trajectory across PRs.
+    /// Write the single-bench JSON baseline (overwrites `path`).
     pub fn write_json(&self, bench_name: &str, path: &std::path::Path) -> std::io::Result<()> {
         std::fs::write(path, self.to_json(bench_name))
+    }
+
+    /// This bench's section body for the multi-section baseline format.
+    fn section_json(&self) -> String {
+        format!("{{\"results\": [\n{}    ]}}", self.results_json("      "))
+    }
+
+    /// Read-modify-write `path` as a *multi-section* baseline so several
+    /// bench binaries can share one perf-trajectory file (CI archives a
+    /// single `BENCH_runtime.json`). Shape:
+    /// `{"benches": {NAME: {"results": [...]}, ...}}` — this bench's section
+    /// replaces any previous section of the same name, other sections are
+    /// preserved. A missing, old-format, or unparsable file starts fresh.
+    pub fn write_json_sections(
+        &self,
+        bench_name: &str,
+        path: &std::path::Path,
+    ) -> std::io::Result<()> {
+        let mut sections = match std::fs::read_to_string(path) {
+            Ok(text) => parse_sections(&text),
+            Err(_) => Vec::new(),
+        };
+        sections.retain(|(name, _)| name != bench_name);
+        sections.push((bench_name.to_string(), self.section_json()));
+        let mut out = String::from("{\n  \"benches\": {\n");
+        for (i, (name, body)) in sections.iter().enumerate() {
+            out.push_str(&format!(
+                "    \"{}\": {}{}\n",
+                name,
+                body,
+                if i + 1 == sections.len() { "" } else { "," }
+            ));
+        }
+        out.push_str("  }\n}\n");
+        std::fs::write(path, out)
     }
 
     /// Find a result by name (for speedup-ratio reporting inside a bench).
     pub fn stats(&self, name: &str) -> Option<&BenchStats> {
         self.results.iter().find(|s| s.name == name)
     }
+}
+
+/// Extract `(name, body)` pairs from a multi-section baseline written by
+/// [`Bench::write_json_sections`]. Minimal by design: section bodies are
+/// located by balanced-brace scanning, which is sound because the writer
+/// never emits `{`/`}` inside string values (bench names are identifiers).
+/// Returns an empty list for old-format or foreign files — callers then
+/// start a fresh baseline.
+fn parse_sections(text: &str) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    let Some(benches_at) = text.find("\"benches\"") else {
+        return out;
+    };
+    let after_key = &text[benches_at + "\"benches\"".len()..];
+    let Some(open) = after_key.find('{') else {
+        return out;
+    };
+    let mut rest = &after_key[open + 1..];
+    loop {
+        // `"<name>": { ... }` — name, then the balanced-brace body.
+        let Some(q0) = rest.find('"') else { break };
+        let after_quote = &rest[q0 + 1..];
+        let Some(q1) = after_quote.find('"') else { break };
+        let name = &after_quote[..q1];
+        let after_name = &after_quote[q1 + 1..];
+        let Some(b0) = after_name.find('{') else { break };
+        let mut depth = 0usize;
+        let mut body_end = None;
+        for (i, c) in after_name[b0..].char_indices() {
+            match c {
+                '{' => depth += 1,
+                '}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        body_end = Some(b0 + i);
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        let Some(end) = body_end else { break };
+        out.push((name.to_string(), after_name[b0..=end].to_string()));
+        rest = &after_name[end + 1..];
+    }
+    out
 }
 
 #[cfg(test)]
@@ -181,6 +267,52 @@ mod tests {
         // Exactly one comma-separated pair of result objects.
         assert_eq!(j.matches("\"name\":").count(), 2);
         assert!(j.trim_end().ends_with('}'));
+    }
+
+    #[test]
+    fn sectioned_baseline_merges_across_benches() {
+        let dir = std::env::temp_dir().join("convkit_bench_sections_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        let _ = std::fs::remove_file(&path);
+
+        let mut conv = Bench { budget: Duration::from_millis(5), max_iters: 500, results: vec![] };
+        conv.run("conv_a", || 1u8);
+        conv.write_json_sections("runtime_conv", &path).unwrap();
+
+        let mut serve = Bench { budget: Duration::from_millis(5), max_iters: 500, results: vec![] };
+        serve.run("fleet_a", || 2u8);
+        serve.write_json_sections("runtime_serve", &path).unwrap();
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"runtime_conv\""), "{text}");
+        assert!(text.contains("\"runtime_serve\""), "{text}");
+        assert!(text.contains("\"conv_a\""), "{text}");
+        assert!(text.contains("\"fleet_a\""), "{text}");
+
+        // Re-writing one section replaces it without duplicating the other.
+        let mut serve2 = Bench { budget: Duration::from_millis(5), max_iters: 500, results: vec![] };
+        serve2.run("fleet_b", || 3u8);
+        serve2.write_json_sections("runtime_serve", &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.matches("\"runtime_serve\"").count(), 1, "{text}");
+        assert!(text.contains("\"conv_a\""), "other section preserved: {text}");
+        assert!(!text.contains("\"fleet_a\""), "stale section dropped: {text}");
+        assert!(text.contains("\"fleet_b\""), "{text}");
+
+        let sections = parse_sections(&text);
+        assert_eq!(sections.len(), 2);
+        assert_eq!(sections[0].0, "runtime_conv");
+        assert_eq!(sections[1].0, "runtime_serve");
+        assert!(sections[1].1.contains("\"fleet_b\""));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn old_format_baseline_starts_fresh() {
+        assert!(parse_sections("{\"bench\": \"runtime_conv\", \"results\": []}").is_empty());
+        assert!(parse_sections("").is_empty());
+        assert!(parse_sections("{\"benches\": {}}").is_empty());
     }
 
     #[test]

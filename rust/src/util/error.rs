@@ -26,6 +26,9 @@ pub enum Error {
     Parse(String),
     /// PJRT / XLA runtime failure.
     Runtime(String),
+    /// Admission rejected: a serving shard's bounded request queue is at
+    /// capacity (backpressure — retry later or route elsewhere).
+    Overloaded(String),
     /// Underlying I/O failure.
     Io(std::io::Error),
 }
@@ -40,6 +43,7 @@ impl fmt::Display for Error {
             Error::Usage(m) => write!(f, "usage error: {m}"),
             Error::Parse(m) => write!(f, "parse error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Overloaded(m) => write!(f, "overloaded: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }
@@ -82,6 +86,7 @@ mod tests {
         assert!(Error::Numerical("x".into()).to_string().starts_with("numerical"));
         assert!(Error::Infeasible("x".into()).to_string().starts_with("infeasible"));
         assert!(Error::Usage("x".into()).to_string().starts_with("usage"));
+        assert!(Error::Overloaded("x".into()).to_string().starts_with("overloaded"));
     }
 
     #[test]

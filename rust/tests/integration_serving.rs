@@ -1,0 +1,253 @@
+//! Integration tests for the sharded multi-network serving layer
+//! (`coordinator::shard` + `coordinator::router` on top of the reworked
+//! batching service): concurrent routing correctness against the golden
+//! model, bounded-admission backpressure, and fleet statistics aggregation.
+//!
+//! The backpressure tests use a *gated* executor — one that blocks until the
+//! test releases it through a channel — so queue-full conditions are
+//! constructed deterministically instead of with sleeps.
+
+use convkit::cnn::{zoo, GoldenCnn};
+use convkit::blocks::BlockKind;
+use convkit::coordinator::service::{BatchExecutor, InferenceService};
+use convkit::coordinator::{Shard, ShardSpec, ShardedService};
+use convkit::util::error::{Error, Result};
+use std::sync::mpsc;
+
+fn image(spec: &convkit::cnn::NetworkSpec, seed: u64) -> Vec<i32> {
+    spec.synthetic_images_i32(1, seed).pop().unwrap()
+}
+
+/// Executes one batch per token received on `gate`; blocks otherwise.
+struct GatedExecutor {
+    gate: mpsc::Receiver<()>,
+    classes: usize,
+}
+
+impl BatchExecutor for GatedExecutor {
+    fn infer_batch(&mut self, images: &[Vec<i32>]) -> Result<Vec<Vec<i32>>> {
+        self.gate.recv().map_err(|_| Error::Runtime("gate closed".into()))?;
+        Ok(images.iter().map(|_| vec![0i32; self.classes]).collect())
+    }
+
+    fn label(&self) -> String {
+        "gated".into()
+    }
+}
+
+/// A single-shard fleet around a gated executor with `queue_cap` slots.
+/// Returns the gate sender the test uses to release batches one by one.
+fn gated_fleet(queue_cap: usize) -> (ShardedService, mpsc::Sender<()>) {
+    let (gate_tx, gate_rx) = mpsc::channel();
+    // batch_size 1 → every request is its own batch → one gate token each.
+    let svc = InferenceService::start(GatedExecutor { gate: gate_rx, classes: 3 }, 1);
+    let shard = Shard::from_service("gated_net", 0, queue_cap, svc);
+    let fleet = ShardedService::from_shards(vec![shard]).unwrap();
+    (fleet, gate_tx)
+}
+
+#[test]
+fn concurrent_multi_network_routing_matches_golden() {
+    let fleet = ShardedService::start(&[
+        ShardSpec::golden("tiny_q8").with_replicas(2).with_batch_size(4),
+        ShardSpec::golden("slim_q6").with_batch_size(4),
+    ])
+    .unwrap();
+    assert_eq!(fleet.networks(), vec!["slim_q6", "tiny_q8"]);
+    assert_eq!(fleet.shards().len(), 3);
+
+    // Two client threads per network, interleaved through one front-end.
+    let fleet_ref = &fleet;
+    std::thread::scope(|scope| {
+        for (net_idx, spec) in [zoo::tiny(), zoo::slim_q6()].into_iter().enumerate() {
+            for client in 0..2u64 {
+                let spec = spec.clone();
+                scope.spawn(move || {
+                    let golden = GoldenCnn::new(spec.clone(), BlockKind::Conv2).unwrap();
+                    for r in 0..6u64 {
+                        let seed = 1000 * (net_idx as u64 + 1) + 10 * client + r;
+                        let im = image(&spec, seed);
+                        let got = fleet_ref.infer(&spec.name, im.clone()).unwrap();
+                        let want: Vec<i32> = golden
+                            .infer(&im.iter().map(|&v| v as i64).collect::<Vec<_>>())
+                            .unwrap()
+                            .into_iter()
+                            .map(|v| v as i32)
+                            .collect();
+                        assert_eq!(got, want, "{}: request {r} of client {client}", spec.name);
+                    }
+                });
+            }
+        }
+    });
+
+    // 4 clients × 6 requests, all answered, none failed, queues drained.
+    let stats = fleet.stats();
+    assert_eq!(stats.fleet.requests, 24);
+    assert_eq!(stats.fleet.errors, 0);
+    assert_eq!(stats.fleet.queue_depth, 0);
+    assert!(stats.fleet.p95_latency_ms >= stats.shards[0].service.p95_latency_ms);
+    // Per-network sums: tiny (2 replicas) served 12, slim served 12.
+    let sum_for = |net: &str| -> u64 {
+        stats.shards.iter().filter(|s| s.network == net).map(|s| s.service.requests).sum()
+    };
+    assert_eq!(sum_for("tiny_q8"), 12);
+    assert_eq!(sum_for("slim_q6"), 12);
+    fleet.shutdown();
+}
+
+#[test]
+fn routing_unknown_network_is_rejected() {
+    let fleet = ShardedService::start(&[ShardSpec::golden("tiny_q8")]).unwrap();
+    let err = fleet.infer("no_such_net", vec![0; 64]).unwrap_err();
+    assert!(matches!(err, Error::Usage(_)), "got {err}");
+    assert!(err.to_string().contains("tiny_q8"), "should list known networks: {err}");
+    fleet.shutdown();
+}
+
+#[test]
+fn try_infer_rejects_at_cap_then_recovers_after_drain() {
+    let (fleet, gate) = gated_fleet(2);
+
+    // Fill both admission slots; the worker is blocked on the gate, so
+    // neither completes until the test says so.
+    let t1 = fleet.try_submit("gated_net", vec![1, 2, 3]).unwrap();
+    let t2 = fleet.try_submit("gated_net", vec![4, 5, 6]).unwrap();
+    assert_eq!(fleet.shards()[0].outstanding(), 2);
+
+    // At cap: bounded admission rejects with Overloaded...
+    let err = fleet.try_infer("gated_net", vec![7, 8, 9]).unwrap_err();
+    assert!(matches!(err, Error::Overloaded(_)), "got {err}");
+    assert!(err.to_string().contains("queue cap"), "{err}");
+    // ...and rejection rolled its optimistic slot back.
+    assert_eq!(fleet.shards()[0].outstanding(), 2);
+
+    // Drain: release one batch per queued request, collect the replies.
+    gate.send(()).unwrap();
+    gate.send(()).unwrap();
+    assert_eq!(t1.wait().unwrap(), vec![0, 0, 0]);
+    assert_eq!(t2.wait().unwrap(), vec![0, 0, 0]);
+    assert_eq!(fleet.shards()[0].outstanding(), 0);
+
+    // Below cap again: admission succeeds end to end.
+    gate.send(()).unwrap();
+    assert_eq!(fleet.try_infer("gated_net", vec![1]).unwrap(), vec![0, 0, 0]);
+
+    let stats = fleet.stats();
+    assert_eq!(stats.fleet.requests, 3, "the rejected request never reached the worker");
+    drop(gate);
+    fleet.shutdown();
+}
+
+#[test]
+fn abandoned_ticket_keeps_slot_until_worker_completes() {
+    let (fleet, gate) = gated_fleet(1);
+    let ticket = fleet.try_submit("gated_net", vec![1]).unwrap();
+    assert_eq!(fleet.shards()[0].outstanding(), 1);
+    // Cap 1 → a second admission is rejected while the request is queued.
+    assert!(matches!(fleet.try_submit("gated_net", vec![2]), Err(Error::Overloaded(_))));
+    // Abandoning the reply does NOT free the slot: the request still sits in
+    // the worker's queue, so the cap keeps bounding real backlog — a client
+    // looping try_submit/drop cannot grow the queue past the cap.
+    drop(ticket);
+    assert_eq!(fleet.shards()[0].outstanding(), 1);
+    assert!(matches!(fleet.try_submit("gated_net", vec![3]), Err(Error::Overloaded(_))));
+    // Only worker-side completion releases the slot (bounded wait: the
+    // worker drops the guard as soon as the gated batch executes).
+    gate.send(()).unwrap();
+    let mut released = false;
+    for _ in 0..2000 {
+        if fleet.shards()[0].outstanding() == 0 {
+            released = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    assert!(released, "worker completion must release the abandoned slot");
+    drop(gate);
+    fleet.shutdown();
+}
+
+#[test]
+fn blocking_submit_is_not_capped() {
+    let (fleet, gate) = gated_fleet(1);
+    // submit() bypasses the cap (cooperative clients): three concurrent
+    // tickets on a cap-1 shard.
+    let tickets: Vec<_> =
+        (0..3).map(|i| fleet.submit("gated_net", vec![i]).unwrap()).collect();
+    assert_eq!(fleet.shards()[0].outstanding(), 3);
+    for _ in 0..3 {
+        gate.send(()).unwrap();
+    }
+    for t in tickets {
+        assert_eq!(t.wait().unwrap(), vec![0, 0, 0]);
+    }
+    assert_eq!(fleet.shards()[0].outstanding(), 0);
+    drop(gate);
+    fleet.shutdown();
+}
+
+#[test]
+fn stats_of_wedged_worker_degrade_to_stale_instead_of_hanging() {
+    let (fleet, gate) = gated_fleet(4);
+    let ticket = fleet.try_submit("gated_net", vec![1]).unwrap();
+    // The worker is (or will be) blocked inside its executor; a bounded
+    // stats query returns a stale row with live queue depth instead of
+    // hanging the monitor.
+    let row =
+        fleet.shards()[0].stats_within(std::time::Duration::from_millis(50));
+    assert!(row.stale);
+    assert_eq!(row.queue_depth, 1);
+    assert_eq!(row.service.requests, 0);
+    // Unwedge; the late reply to the abandoned query is discarded and a
+    // fresh query sees the completed request.
+    gate.send(()).unwrap();
+    assert_eq!(ticket.wait().unwrap(), vec![0, 0, 0]);
+    let row = fleet.shards()[0].stats();
+    assert!(!row.stale);
+    assert_eq!(row.service.requests, 1);
+    let fleet_stats = fleet.stats();
+    assert_eq!(fleet_stats.fleet.stale_shards, 0);
+    drop(gate);
+    fleet.shutdown();
+}
+
+#[test]
+fn replicas_share_load_by_outstanding_count() {
+    // Two gated replicas of one network, cap 4 each: with replica 0 wedged
+    // (one outstanding request), new admissions route to replica 1.
+    let (gate0_tx, gate0_rx) = mpsc::channel();
+    let (gate1_tx, gate1_rx) = mpsc::channel();
+    let s0 = Shard::from_service(
+        "gated_net",
+        0,
+        4,
+        InferenceService::start(GatedExecutor { gate: gate0_rx, classes: 1 }, 1),
+    );
+    let s1 = Shard::from_service(
+        "gated_net",
+        1,
+        4,
+        InferenceService::start(GatedExecutor { gate: gate1_rx, classes: 1 }, 1),
+    );
+    let fleet = ShardedService::from_shards(vec![s0, s1]).unwrap();
+
+    // Tie (0 vs 0) → lowest index: replica 0 takes the first request.
+    let t0 = fleet.try_submit("gated_net", vec![1]).unwrap();
+    assert_eq!(fleet.shards()[0].outstanding(), 1);
+    assert_eq!(fleet.shards()[1].outstanding(), 0);
+    // Load 1 vs 0 → replica 1 takes the next two (released immediately).
+    gate1_tx.send(()).unwrap();
+    assert_eq!(fleet.try_infer("gated_net", vec![2]).unwrap(), vec![0]);
+    gate1_tx.send(()).unwrap();
+    assert_eq!(fleet.try_infer("gated_net", vec![3]).unwrap(), vec![0]);
+    assert_eq!(fleet.shards()[1].stats().service.requests, 2);
+
+    // Unwedge replica 0 before querying its stats (a worker blocked inside
+    // its executor cannot answer until the batch returns).
+    gate0_tx.send(()).unwrap();
+    assert_eq!(t0.wait().unwrap(), vec![0]);
+    assert_eq!(fleet.shards()[0].stats().service.requests, 1);
+    drop((gate0_tx, gate1_tx));
+    fleet.shutdown();
+}
