@@ -12,28 +12,67 @@
 //!    (`ShardedService`: two networks, one replicated, golden-backed) and
 //!    drive interleaved client threads through its bounded-admission
 //!    front-end, cross-checking every reply against direct golden inference.
-//! 4. **Deployment** — load the AOT-compiled JAX/Pallas artifact
+//! 4. **Autoscaling** — solve a model-priced capacity plan (`fleetplan`),
+//!    spike one network past its admission caps, and watch the controller
+//!    scale the live fleet up with a predicted-resource justification, then
+//!    drain a replica back down once the fleet goes idle.
+//! 5. **Deployment** — load the AOT-compiled JAX/Pallas artifact
 //!    (`artifacts/lenet_q8.hlo.txt`, built once by `make artifacts`) into the
 //!    PJRT runtime, serve a batched workload of synthetic digit images
 //!    through the L3 inference service, and cross-check EVERY logits vector
 //!    bit-for-bit against the block-level golden model.
-//! 5. **Report** — throughput/latency of the service, plus the model-vs-
+//! 6. **Report** — throughput/latency of the service, plus the model-vs-
 //!    synthesis speedup that is the paper's headline value proposition.
 //!
 //! Run: `make artifacts && cargo run --release --example e2e_pipeline`
 
 use convkit::blocks::{synthesize, BlockKind, ConvBlockConfig};
-use convkit::cnn::{plan_deployment, zoo, GoldenCnn};
+use convkit::cnn::{plan_deployment, zoo, GoldenCnn, NetworkSpec};
 use convkit::coordinator::dse::DseEngine;
 use convkit::coordinator::service::{InferenceService, PjrtExecutor};
-use convkit::coordinator::{drive_golden_clients, ShardSpec, ShardedService};
+use convkit::coordinator::{drive_golden_clients, ShardSpec, ShardedService, Ticket};
 use convkit::fixedpoint::QFormat;
+use convkit::fleetplan::{plan_fleet, Autoscaler, NetworkDemand, ScaleAction, SloPolicy};
 use convkit::platform::Platform;
 use convkit::report;
 use convkit::runtime::{artifacts_dir, Runtime};
 use convkit::synth::MapOptions;
+use convkit::util::error::Error;
 use convkit::util::rng::SplitMix64;
+use std::collections::VecDeque;
 use std::time::Instant;
+
+/// Pipelined burst against one network's bounded admission: tickets are not
+/// awaited until the caps push back, so admission rejections (the
+/// autoscaler's overload signal) genuinely fire. Returns observed rejections.
+fn spike(fleet: &ShardedService, spec: &NetworkSpec, requests: usize, seed: u64)
+    -> convkit::Result<usize>
+{
+    let mut inflight: VecDeque<Ticket> = VecDeque::new();
+    let mut rejected = 0usize;
+    for img in spec.synthetic_images_i32(requests, seed) {
+        loop {
+            match fleet.try_submit(&spec.name, img.clone()) {
+                Ok(t) => {
+                    inflight.push_back(t);
+                    break;
+                }
+                Err(Error::Overloaded(_)) => {
+                    rejected += 1;
+                    match inflight.pop_front() {
+                        Some(t) => drop(t.wait()?),
+                        None => std::thread::yield_now(),
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+    for t in inflight {
+        t.wait()?;
+    }
+    Ok(rejected)
+}
 
 fn main() -> convkit::Result<()> {
     println!("================ convkit end-to-end pipeline ================\n");
@@ -124,9 +163,58 @@ fn main() -> convkit::Result<()> {
         std::process::exit(1);
     }
 
-    // ---- Stage 4: PJRT deployment + bit-exact verification ---------------
+    // ---- Stage 4: model-driven autoscaling (fleetplan) -------------------
+    let demands =
+        vec![NetworkDemand::new(zoo::lenet_ish()), NetworkDemand::new(zoo::tiny())];
+    let autoplan = plan_fleet(&demands, &rep.registry, &zcu104, 0.8)?;
+    println!("[4] capacity plan (replicas priced by the fitted models):");
+    for n in &autoplan.networks {
+        println!(
+            "      {:<10} unit {}  -> platform ceiling {} replicas",
+            n.network, n.unit, n.replicas
+        );
+    }
+    let template = |name: &str| ShardSpec::golden(name).with_batch_size(4).with_queue_cap(2);
+    let autofleet = ShardedService::start(&[template("lenet_q8"), template("tiny_q8")])?;
+    let mut scaler = Autoscaler::new(
+        autoplan,
+        SloPolicy { window: 1, ..SloPolicy::default() },
+        vec![template("lenet_q8"), template("tiny_q8")],
+    );
+    let mut ups = 0usize;
+    let mut downs = 0usize;
+    for round in 1..=2u64 {
+        let rejected = spike(&autofleet, &net, 64, 0xE2E ^ round)?;
+        let decisions = scaler.step(&autofleet)?;
+        println!("      spike round {round}: {rejected} admission rejections");
+        for d in &decisions {
+            println!("      controller: {d}");
+            ups += usize::from(matches!(d.action, ScaleAction::Up));
+        }
+    }
+    for round in 1..=3u64 {
+        let decisions = scaler.step(&autofleet)?;
+        for d in &decisions {
+            println!("      idle round {round}: {d}");
+            downs += usize::from(matches!(d.action, ScaleAction::Down));
+        }
+    }
+    println!(
+        "      lenet_q8 replicas now: {} — {} scale-up(s), {} drained scale-down(s) ({})",
+        autofleet.replica_count("lenet_q8"),
+        ups,
+        downs,
+        if ups > 0 && downs > 0 { "AUTOSCALE ✓" } else { "AUTOSCALE ✗" }
+    );
+    let autoscale_ok = ups > 0 && downs > 0;
+    autofleet.shutdown();
+    if !autoscale_ok {
+        std::process::exit(1);
+    }
+
+    // ---- Stage 5: PJRT deployment + bit-exact verification ---------------
     if !convkit::runtime::runtime_available() {
-        eprintln!("built without the `pjrt` feature: rebuild with --features pjrt for stage 4");
+        eprintln!("built without the `pjrt` feature: rebuild with --features pjrt for stage 5");
         std::process::exit(1);
     }
     let art_path = artifacts_dir().join("lenet_q8.hlo.txt");
@@ -174,7 +262,7 @@ fn main() -> convkit::Result<()> {
     }
     let wall = t_serve.elapsed().as_secs_f64();
     let stats = svc.stats()?;
-    println!("[4] served {n_req} requests through PJRT in {wall:.2}s:");
+    println!("[5] served {n_req} requests through PJRT in {wall:.2}s:");
     println!(
         "      throughput {:.1} req/s, mean latency {:.2} ms, p95 {:.2} ms, {} batches",
         n_req as f64 / wall,
@@ -191,7 +279,7 @@ fn main() -> convkit::Result<()> {
     svc.shutdown();
 
     println!(
-        "\n[5] total pipeline wall time: {:.2}s — every stage green{}",
+        "\n[6] total pipeline wall time: {:.2}s — every stage green{}",
         t0.elapsed().as_secs_f64(),
         if mismatches == 0 { "." } else { " EXCEPT bit-exactness!" }
     );

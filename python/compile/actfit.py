@@ -1,0 +1,166 @@
+"""Python mirror of the rust activation-fitting pipeline.
+
+This module ports, operation-for-operation and in the same order:
+
+* ``rust/src/polyapprox/fit.rs`` — Chebyshev fit nodes, Vandermonde assembly,
+  and the least-squares solve;
+* ``rust/src/stats/linalg.rs::Mat::lstsq`` — Householder-QR;
+* ``rust/src/polyapprox/fixed.rs`` — Q·13 coefficient quantization and the
+  bit-exact integer Horner evaluator (sigmoid path).
+
+CPython floats are IEEE-754 doubles with correctly-rounded ``+ - * /`` and
+``sqrt``, so replicating the rust operation order reproduces the rust
+coefficients bit-for-bit up to the platform's shared libm (``cos``/``exp``);
+after quantization to Q·13 integers any sub-ulp libm difference vanishes.
+The quantized coefficients and the integer evaluator are pure-int, hence
+exactly portable. ``gen_act_fixture.py`` freezes the result as a JSON parity
+fixture checked by BOTH the rust suite (against ``polyapprox``) and the
+python suite (against the Pallas kernel in ``kernels/act.py``).
+"""
+
+from __future__ import annotations
+
+import math
+
+#: Mirror of ``polyapprox::ACT_CFRAC`` (Q·13 coefficients/accumulator).
+ACT_CFRAC = 13
+
+#: Mirror of ``polyapprox::fit::FIT_NODES``.
+FIT_NODES = 129
+
+
+def chebyshev_nodes(lo: float, hi: float, n: int) -> list:
+    """Mirror of ``fit::nodes`` with ``NodePlacement::Chebyshev``."""
+    mid = 0.5 * (hi + lo)
+    half = 0.5 * (hi - lo)
+    out = []
+    for k in range(n):
+        theta = (2 * k + 1) * math.pi / (2 * n)
+        out.append(mid + half * math.cos(theta))
+    return out
+
+
+def lstsq(rows: int, cols: int, data: list, b: list) -> list:
+    """Mirror of ``Mat::lstsq`` (Householder QR, row-major flat data)."""
+    if rows < cols:
+        raise ValueError("underdetermined system")
+    a = list(data)
+    y = list(b)
+
+    def idx(r, c):
+        return r * cols + c
+
+    m, n = rows, cols
+    v = [0.0] * m
+    for k in range(n):
+        norm = 0.0
+        for i in range(k, m):
+            norm += a[idx(i, k)] * a[idx(i, k)]
+        norm = math.sqrt(norm)
+        if norm < 1e-12:
+            raise ValueError(f"rank-deficient at column {k}")
+        alpha = -norm if a[idx(k, k)] >= 0.0 else norm
+        v[k] = a[idx(k, k)] - alpha
+        vnorm2 = v[k] * v[k]
+        for i in range(k + 1, m):
+            v[i] = a[idx(i, k)]
+            vnorm2 += v[i] * v[i]
+        if vnorm2 < 1e-300:
+            a[idx(k, k)] = alpha
+            continue
+        for j in range(k, n):
+            dot = 0.0
+            for i in range(k, m):
+                dot += v[i] * a[idx(i, j)]
+            f = 2.0 * dot / vnorm2
+            for i in range(k, m):
+                a[idx(i, j)] -= f * v[i]
+        dot = 0.0
+        for i in range(k, m):
+            dot += v[i] * y[i]
+        f = 2.0 * dot / vnorm2
+        for i in range(k, m):
+            y[i] -= f * v[i]
+    x = [0.0] * n
+    for k in range(n - 1, -1, -1):
+        acc = y[k]
+        for j in range(k + 1, n):
+            acc -= a[idx(k, j)] * x[j]
+        rkk = a[idx(k, k)]
+        if abs(rkk) < 1e-12:
+            raise ValueError(f"zero pivot at row {k}")
+        x[k] = acc / rkk
+    return x
+
+
+def fit_poly(f, degree: int, lo: float, hi: float) -> list:
+    """Mirror of ``fit::fit_poly`` with Chebyshev placement."""
+    xs = chebyshev_nodes(lo, hi, FIT_NODES)
+    cols = degree + 1
+    data = []
+    y = []
+    for x in xs:
+        p = 1.0
+        for _ in range(cols):
+            data.append(p)
+            p *= x
+        y.append(f(x))
+    return lstsq(len(xs), cols, data, y)
+
+
+def _round_half_away(v: float) -> int:
+    """Rust ``f64::round``: half away from zero (python round() is banker's)."""
+    return int(math.floor(v + 0.5)) if v >= 0.0 else -int(math.floor(-v + 0.5))
+
+
+def sigmoid(x: float) -> float:
+    """Mirror of ``ActFn::Sigmoid.eval_f64``."""
+    return 1.0 / (1.0 + math.exp(-x))
+
+
+def sigmoid_coeffs_q(degree: int = 2) -> list:
+    """Mirror of ``FixedActivation::new(Sigmoid, degree, _)``: Q·13 Horner
+    coefficients (increasing power) fitted on [-4, 4] at Chebyshev nodes."""
+    one = 1 << ACT_CFRAC
+    coeffs = fit_poly(sigmoid, degree, -4.0, 4.0)
+    return [_round_half_away(c * one) for c in coeffs]
+
+
+def qmax(bits: int) -> int:
+    return (1 << (bits - 1)) - 1
+
+
+def qmin(bits: int) -> int:
+    return -(1 << (bits - 1))
+
+
+def sigmoid_eval_q(x: int, coeffs_q: list, data_bits: int = 8) -> int:
+    """Mirror of ``FixedActivation::eval`` for the sigmoid path: integer
+    Horner in Q·13 with truncating rescale, [0, 1] clamp, output scaling onto
+    the d-bit range, final saturation. Pure int — exactly portable."""
+    xfrac = data_bits - 3
+    t = x << (ACT_CFRAC - xfrac)
+    acc = coeffs_q[-1]
+    for c in reversed(coeffs_q[:-1]):
+        acc = ((acc * t) >> ACT_CFRAC) + c
+    one = 1 << ACT_CFRAC
+    acc = max(0, min(one, acc))
+    outmax = qmax(data_bits)
+    y = (acc * outmax) >> ACT_CFRAC
+    return max(qmin(data_bits), min(outmax, y))
+
+
+def sigmoid_reference_q(x: int, data_bits: int = 8) -> int:
+    """Mirror of ``FixedActivation::reference`` for sigmoid: the rounded
+    float reference the ULP contract is measured against."""
+    xfrac = data_bits - 3
+    x_real = x / (1 << xfrac)
+    outmax = qmax(data_bits)
+    v = _round_half_away(sigmoid(x_real) * outmax)
+    return max(qmin(data_bits), min(outmax, v))
+
+
+def sigmoid_ulp_bound(degree: int, data_bits: int) -> int:
+    """Mirror of ``FixedActivation::ulp_bound`` with ``ULP_EPS`` for sigmoid."""
+    eps = {2: 0.13, 3: 0.035}[degree]
+    return 2 + math.ceil(eps * (1 << (data_bits - 1)))

@@ -22,6 +22,7 @@ jax.config.update("jax_enable_x64", True)  # int64 accumulators, bit-exact
 import jax.numpy as jnp  # noqa: E402
 from jax._src.lib import xla_client as xc  # noqa: E402
 
+from .kernels.act import sigmoid_q8_pallas  # noqa: E402
 from .kernels.conv3x3 import conv3x3_pallas  # noqa: E402
 from .model import ZOO, forward_batch  # noqa: E402
 
@@ -102,6 +103,26 @@ def compile_kernel(out_dir: str) -> None:
     )
 
 
+def compile_act_kernel(out_dir: str) -> None:
+    """Standalone fixed-point sigmoid activation artifact (8-bit, degree-2
+    Horner — the stage `polyapprox` fuses after the channel sum)."""
+    vec = jax.ShapeDtypeStruct((256,), jnp.int32)
+    fn = lambda x: (sigmoid_q8_pallas(x),)  # noqa: E731
+    lowered = jax.jit(fn).lower(vec)
+    write_artifact(
+        out_dir,
+        "sigmoid_q8_act",
+        to_hlo_text(lowered),
+        {
+            "kind": "kernel",
+            "name": "sigmoid_q8_act",
+            "input_shape": "256",
+            "data_bits": 8,
+            "degree": 2,
+        },
+    )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out-dir", default="../artifacts")
@@ -111,12 +132,15 @@ def main() -> None:
     if args.only:
         if args.only == "conv3x3_q8":
             compile_kernel(args.out_dir)
+        elif args.only == "sigmoid_q8_act":
+            compile_act_kernel(args.out_dir)
         else:
             compile_network(args.out_dir, args.only)
         return
     for name in ZOO:
         compile_network(args.out_dir, name)
     compile_kernel(args.out_dir)
+    compile_act_kernel(args.out_dir)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,51 @@
+"""Regenerate the cross-language activation parity fixture.
+
+Writes ``compile/fixtures/sigmoid_q8.json``: the Q·13 sigmoid coefficients
+(degree 2, the zoo's ``sigmoid_q8`` configuration) plus the full 8-bit
+input/output table of the integer Horner evaluator. The fixture is checked
+in; the rust suite (``rust/tests/integration_activation.rs``) asserts it
+matches ``polyapprox::FixedActivation``, and the python suite
+(``tests/test_act.py``) asserts it matches the Pallas kernel — making the
+fixture the bridge that proves both languages compute the same stage.
+
+Usage:  cd python && python -m compile.gen_act_fixture
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from .actfit import ACT_CFRAC, sigmoid_coeffs_q, sigmoid_eval_q
+
+DEGREE = 2
+DATA_BITS = 8
+
+
+def fixture() -> dict:
+    coeffs = sigmoid_coeffs_q(DEGREE)
+    inputs = list(range(-(1 << (DATA_BITS - 1)), 1 << (DATA_BITS - 1)))
+    outputs = [sigmoid_eval_q(x, coeffs, DATA_BITS) for x in inputs]
+    return {
+        "function": "sigmoid",
+        "degree": DEGREE,
+        "data_bits": DATA_BITS,
+        "q_fraction_bits": ACT_CFRAC,
+        "coeffs_q13": coeffs,
+        "inputs": inputs,
+        "outputs": outputs,
+    }
+
+
+def main() -> None:
+    out_dir = os.path.join(os.path.dirname(__file__), "fixtures")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "sigmoid_q8.json")
+    with open(path, "w") as f:
+        json.dump(fixture(), f, indent=1)
+        f.write("\n")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+# L1: Pallas kernel for the fixed-point polynomial activation stage.
+"""L1 — Pallas kernel mirroring ``rust/src/polyapprox/fixed.rs``'s sigmoid.
+
+The rust side evaluates activations with an integer Horner datapath (Q·13
+coefficients, truncating rescale per step, output scaling onto the d-bit
+range). This kernel is the AOT twin of that stage: same coefficients (fitted
+by ``actfit.py``, the operation-for-operation port of the rust fitting
+pipeline), same integer arithmetic, elementwise over an int32 tensor — so a
+compiled network can fuse the activation on the accelerator exactly as the
+FPGA fuses it after the channel sum.
+
+All arithmetic runs in int64 (``conftest`` enables x64) and is bit-exact
+with ``FixedActivation::eval``; parity is frozen by the JSON fixture
+(``compile/fixtures/sigmoid_q8.json``) that both language suites check.
+Like ``conv3x3.py`` we run ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls): correctness is the deliverable.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..actfit import ACT_CFRAC, qmax, qmin, sigmoid_coeffs_q
+
+
+def _sigmoid_kernel(x_ref, o_ref, *, data_bits, coeffs_q):
+    xfrac = data_bits - 3
+    # Exact alignment into Q3.13 (mirror: `let t = x << (ACT_CFRAC - xfrac)`).
+    t = jnp.left_shift(x_ref[...].astype(jnp.int64), ACT_CFRAC - xfrac)
+    # Integer Horner with truncating (arithmetic-shift) rescale per step.
+    acc = jnp.full(t.shape, coeffs_q[-1], dtype=jnp.int64)
+    for c in reversed(coeffs_q[:-1]):
+        acc = jnp.right_shift(acc * t, ACT_CFRAC) + jnp.int64(c)
+    # Clamp onto sigmoid's own [0, 1] range (Q·13), then scale to d bits.
+    one = jnp.int64(1 << ACT_CFRAC)
+    acc = jnp.clip(acc, jnp.int64(0), one)
+    y = jnp.right_shift(acc * jnp.int64(qmax(data_bits)), ACT_CFRAC)
+    o_ref[...] = jnp.clip(y, qmin(data_bits), qmax(data_bits)).astype(jnp.int32)
+
+
+def sigmoid_q8_pallas(x, *, degree: int = 2, data_bits: int = 8):
+    """Elementwise fixed-point sigmoid: int32 tensor -> int32 tensor.
+
+    ``x`` carries d-bit block outputs (domain ``x_real = x / 2^(d-3)``);
+    the result is ``round-ish(σ(x_real) · (2^(d-1)-1))`` within the rust
+    module's documented ULP bound, bit-exact with the rust evaluator.
+    """
+    coeffs = tuple(sigmoid_coeffs_q(degree))
+    kern = functools.partial(_sigmoid_kernel, data_bits=data_bits, coeffs_q=coeffs)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.int32),
+        interpret=True,
+    )(x)

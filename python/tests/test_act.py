@@ -1,0 +1,80 @@
+"""Parity tests for the fixed-point sigmoid Pallas kernel.
+
+Chain of custody: the rust suite proves the JSON fixture matches
+``polyapprox::FixedActivation``; this suite proves the Pallas kernel matches
+the same fixture — so the kernel and the FPGA-side evaluator agree without
+any value crossing the language boundary at test time.
+"""
+
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from compile.actfit import (
+    sigmoid_coeffs_q,
+    sigmoid_eval_q,
+    sigmoid_reference_q,
+    sigmoid_ulp_bound,
+)
+from compile.gen_act_fixture import fixture
+from compile.kernels.act import sigmoid_q8_pallas
+
+FIXTURE = os.path.join(
+    os.path.dirname(__file__), "..", "compile", "fixtures", "sigmoid_q8.json"
+)
+
+
+@pytest.fixture(scope="module")
+def fx():
+    with open(FIXTURE) as f:
+        return json.load(f)
+
+
+def test_fixture_is_fresh(fx):
+    """The checked-in fixture regenerates byte-identically from actfit."""
+    assert fx == fixture()
+
+
+def test_fixture_covers_the_full_8bit_domain(fx):
+    assert fx["inputs"] == list(range(-128, 128))
+    assert len(fx["outputs"]) == 256
+    assert fx["coeffs_q13"][0] == 4096  # σ(0) = 0.5 in Q·13
+
+
+def test_pallas_kernel_matches_fixture_exactly(fx):
+    x = jnp.array(fx["inputs"], dtype=jnp.int32)
+    got = sigmoid_q8_pallas(x, degree=fx["degree"], data_bits=fx["data_bits"])
+    assert got.dtype == jnp.int32
+    assert got.tolist() == fx["outputs"]
+
+
+def test_pallas_kernel_matches_integer_evaluator_on_2d_tensors():
+    # Shape-polymorphism: the kernel is elementwise over any tensor shape
+    # (the fused post-conv layout is (OC, H, W)).
+    coeffs = sigmoid_coeffs_q(2)
+    x = jnp.arange(-128, 128, dtype=jnp.int32).reshape(16, 16)
+    got = sigmoid_q8_pallas(x)
+    want = [[sigmoid_eval_q(int(v), coeffs) for v in row] for row in x.tolist()]
+    assert got.tolist() == want
+
+
+def test_kernel_respects_the_documented_ulp_bound(fx):
+    bound = sigmoid_ulp_bound(fx["degree"], fx["data_bits"])
+    x = jnp.array(fx["inputs"], dtype=jnp.int32)
+    got = sigmoid_q8_pallas(x).tolist()
+    worst = max(
+        abs(y - sigmoid_reference_q(xi, fx["data_bits"]))
+        for xi, y in zip(fx["inputs"], got)
+    )
+    assert worst <= bound, f"worst {worst} ULP exceeds documented bound {bound}"
+
+
+def test_kernel_output_is_monotone_nondecreasing(fx):
+    # σ is monotone; on the fitted core the quadratic is too (the clamp
+    # handles the tails). The hardware stage relies on this for its
+    # comparator-free layout.
+    x = jnp.array(fx["inputs"], dtype=jnp.int32)
+    ys = sigmoid_q8_pallas(x).tolist()
+    assert all(b >= a for a, b in zip(ys, ys[1:]))

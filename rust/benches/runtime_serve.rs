@@ -1,12 +1,14 @@
 //! Bench: fleet-level throughput of the sharded multi-network serving layer.
 //!
 //! Spins up a `ShardedService` over two golden-backed zoo networks (one of
-//! them replicated) and measures the three serving shapes that matter for
+//! them replicated) and measures the serving shapes that matter for
 //! capacity planning: a single client alternating networks, a concurrent
-//! multi-client burst, and the bounded-admission (`try_infer`) path. Results
-//! are merged into the shared `BENCH_runtime.json` baseline (section
-//! `runtime_serve`) so future PRs can diff fleet throughput the same way
-//! they diff the single-service numbers from `runtime_conv`.
+//! multi-client burst, the bounded-admission (`try_infer`) path, and the
+//! autoscaler's actuation cost (an add_shard + drain-based remove_shard
+//! cycle on the live fleet). Results are merged into the shared
+//! `BENCH_runtime.json` baseline (section `runtime_serve`) so future PRs can
+//! diff fleet throughput the same way they diff the single-service numbers
+//! from `runtime_conv`.
 
 use convkit::cnn::zoo;
 use convkit::coordinator::{ShardSpec, ShardedService};
@@ -80,6 +82,18 @@ fn main() {
     b.run("fleet_try_infer_admission", || {
         i += 1;
         fleet.try_infer("tiny_q8", tiny_imgs[i % tiny_imgs.len()].clone()).unwrap().len()
+    });
+
+    // Reconfiguration cost (the autoscaler's actuation path): one
+    // add_shard — golden build + worker start + router rebuild — followed by
+    // a drain-based remove_shard — unroute + drain + join. One iteration =
+    // one full scale-up/scale-down cycle on a LIVE fleet; tiny_q8 keeps its
+    // two base replicas throughout, so the cycle always removes the replica
+    // it just added.
+    let add_spec = ShardSpec::golden("tiny_q8").with_batch_size(8);
+    b.run("fleet_add_remove_shard_cycle", || {
+        fleet.add_shard(&add_spec).expect("add shard");
+        fleet.remove_shard("tiny_q8").expect("remove shard")
     });
 
     if let Some(s) = b.stats("fleet_4clients_x8_concurrent") {

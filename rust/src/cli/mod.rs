@@ -5,9 +5,14 @@ use convkit::cnn::{plan_deployment, zoo, GoldenCnn, NetworkSpec};
 use convkit::coordinator::dse::{DseEngine, DseReport};
 use convkit::coordinator::jobs::JobPool;
 use convkit::coordinator::service::{GoldenExecutor, InferenceService, PjrtExecutor};
-use convkit::coordinator::{drive_golden_clients, ShardSpec, ShardedService, DEFAULT_QUEUE_CAP};
+use convkit::coordinator::{
+    drive_golden_clients, ShardSpec, ShardedService, Ticket, DEFAULT_QUEUE_CAP,
+};
 use convkit::extend::{energy_estimate, latency_estimate, PowerModel};
 use convkit::fixedpoint::QFormat;
+use convkit::fleetplan::{
+    plan_fleet, select_platform, Autoscaler, NetworkDemand, SloPolicy,
+};
 use convkit::models::SelectOptions;
 use convkit::platform::Platform;
 use convkit::report;
@@ -42,6 +47,8 @@ COMMANDS:
               --batch N --golden-only]
   fleet      sharded multi-network serving       [--networks A,B --replicas N
               --requests N --batch N --queue-cap N]
+  autoscale  model-driven fleet autoscaler       [--networks A,B --platform P
+              --target 0.X --requests N --rounds N --queue-cap N --batch N]
   tables     regenerate paper tables             [N | all] [--french]
   figures    regenerate Figures 1-3              [N | all] [--csv]
   blocks     list block characteristics (Table 2)
@@ -65,6 +72,7 @@ pub fn dispatch(args: &ParsedArgs) -> Result<()> {
         Some("deploy") => cmd_deploy(args),
         Some("serve") => cmd_serve(args),
         Some("fleet") => cmd_fleet(args),
+        Some("autoscale") => cmd_autoscale(args),
         Some("tables") => cmd_tables(args),
         Some("figures") => cmd_figures(args),
         Some("blocks") => {
@@ -419,6 +427,174 @@ fn cmd_fleet(args: &ParsedArgs) -> Result<()> {
     if mismatch_total > 0 {
         return Err(Error::Runtime(format!("{mismatch_total} golden mismatches")));
     }
+    Ok(())
+}
+
+/// Pipelined one-network burst through the fleet's bounded admission:
+/// submissions never wait for replies, so whenever the burst outruns the
+/// replicas' combined queue caps, `try_submit` rejects with `Overloaded`
+/// (counted by the shards — the autoscaler's overload signal) and the driver
+/// drains its oldest in-flight ticket to make room. Every ticket is
+/// eventually awaited; returns (served, admission rejections observed).
+fn burst_network(
+    fleet: &ShardedService,
+    spec: &NetworkSpec,
+    requests: usize,
+    seed: u64,
+) -> Result<(usize, usize)> {
+    let mut inflight: std::collections::VecDeque<Ticket> = std::collections::VecDeque::new();
+    let mut served = 0usize;
+    let mut rejected = 0usize;
+    for img in spec.synthetic_images_i32(requests, seed) {
+        loop {
+            match fleet.try_submit(&spec.name, img.clone()) {
+                Ok(t) => {
+                    inflight.push_back(t);
+                    break;
+                }
+                Err(Error::Overloaded(_)) => {
+                    rejected += 1;
+                    match inflight.pop_front() {
+                        Some(t) => {
+                            t.wait()?;
+                            served += 1;
+                        }
+                        None => std::thread::yield_now(),
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+    for t in inflight {
+        t.wait()?;
+        served += 1;
+    }
+    Ok((served, rejected))
+}
+
+fn cmd_autoscale(args: &ParsedArgs) -> Result<()> {
+    let names = {
+        let list = args.get_list("networks");
+        if list.is_empty() {
+            vec!["lenet_q8".to_string(), "tiny_q8".to_string()]
+        } else {
+            list
+        }
+    };
+    let plat = platform_from(args)?;
+    let cap = args.get_f64("target", 0.8)?;
+    let batch = args.get_u64("batch", 8)? as usize;
+    let queue_cap = args.get_u64("queue-cap", 4)?.max(1) as usize;
+    let n_req = args.get_u64("requests", 192)?.max(1) as usize;
+    let rounds = args.get_u64("rounds", 3)?.max(1) as usize;
+
+    let zoo_specs: Vec<NetworkSpec> = names
+        .iter()
+        .map(|name| {
+            zoo::all()
+                .into_iter()
+                .find(|n| &n.name == name)
+                .ok_or_else(|| Error::Usage(format!("unknown network `{name}`")))
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    // -- the paper side: fit models, price replicas, solve the plan --------
+    let rep = run_report(args)?;
+    let demands: Vec<NetworkDemand> =
+        zoo_specs.iter().map(|s| NetworkDemand::new(s.clone())).collect();
+    let plan = plan_fleet(&demands, &rep.registry, &plat, cap)?;
+    println!(
+        "capacity plan on {} at {:.0}% cap (prices from the fitted models):",
+        plat.name,
+        100.0 * cap
+    );
+    for n in &plan.networks {
+        println!(
+            "  {:<12} one replica costs {}  -> platform ceiling {} replicas",
+            n.network, n.unit, n.replicas
+        );
+    }
+    println!(
+        "  solved fleet: {} replicas total, util LLUT {:.2}% MLUT {:.2}% FF {:.2}% CChain {:.2}% DSP {:.2}%",
+        plan.total_replicas(),
+        plan.utilization[0],
+        plan.utilization[1],
+        plan.utilization[2],
+        plan.utilization[3],
+        plan.utilization[4]
+    );
+    match select_platform(&demands, &rep.registry, &Platform::all(), cap) {
+        Ok((p, _)) => println!("  FPGA selection: smallest catalog device that fits = {}", p.name),
+        Err(e) => println!("  FPGA selection: {e}"),
+    }
+
+    // -- the serving side: start at the floors, let the controller grow ----
+    let template = |n: &str| {
+        ShardSpec::golden(n).with_batch_size(batch).with_queue_cap(queue_cap)
+    };
+    let fleet = ShardedService::start(
+        &names.iter().map(|n| template(n)).collect::<Vec<_>>(),
+    )?;
+    let policy = SloPolicy { window: 2, ..SloPolicy::default() };
+    let idle_rounds = policy.window + 1;
+    let mut scaler =
+        Autoscaler::new(plan, policy, names.iter().map(|n| template(n)).collect());
+    println!(
+        "\nfleet up: {} network(s) × 1 replica, queue cap {queue_cap} — spiking {} with {} pipelined requests/round",
+        names.len(),
+        zoo_specs[0].name,
+        n_req
+    );
+
+    let hot = &zoo_specs[0];
+    let mut scale_ups = 0usize;
+    for round in 1..=rounds {
+        let (served, rejected) = burst_network(&fleet, hot, n_req, 0xA57A ^ round as u64)?;
+        let decisions = scaler.step(&fleet)?;
+        println!("spike round {round}: served {served}, rejected-at-admission {rejected}");
+        if decisions.is_empty() {
+            println!("  controller: no reconfiguration");
+        }
+        for d in &decisions {
+            println!("  controller: {d}");
+            if matches!(d.action, convkit::fleetplan::ScaleAction::Up) {
+                scale_ups += 1;
+            }
+        }
+    }
+    println!(
+        "after spike: {} serves with {} replica(s)",
+        hot.name,
+        fleet.replica_count(&hot.name)
+    );
+
+    println!("\nidle phase ({idle_rounds} calm rounds):");
+    let mut scale_downs = 0usize;
+    for round in 1..=idle_rounds {
+        let decisions = scaler.step(&fleet)?;
+        if decisions.is_empty() {
+            println!("  idle round {round}: no reconfiguration");
+        }
+        for d in &decisions {
+            println!("  idle round {round}: {d}");
+            if matches!(d.action, convkit::fleetplan::ScaleAction::Down) {
+                scale_downs += 1;
+            }
+        }
+    }
+
+    let st = fleet.stats();
+    println!(
+        "\nfinal fleet: {} shard(s), {} requests ({} errors), {} admission rejections, worst p95 {:.3} ms",
+        st.shards.len(),
+        st.fleet.requests,
+        st.fleet.errors,
+        st.fleet.rejected,
+        st.fleet.p95_latency_ms
+    );
+    println!("autoscale summary: {scale_ups} scale-up(s), {scale_downs} drain-based scale-down(s)");
+    fleet.shutdown();
     Ok(())
 }
 

@@ -61,18 +61,31 @@ impl DseEngine {
     }
 
     /// Run (or load) the synthesis campaign.
+    ///
+    /// Cache revalidation checks the *actual configuration set*, not just the
+    /// record count: the cached records must match the sweep's
+    /// `(block, data_bits, coeff_bits)` grid one-for-one, in sweep order.
+    /// A cache written by a different grid that happens to have the same
+    /// cardinality (e.g. `conv1 6..=12` vs `conv2 6..=12`, or `6..=12` vs
+    /// `7..=13`) is treated as stale and refreshed — silently reusing it
+    /// would fit models to the wrong configurations.
     pub fn collect(&self) -> Result<Dataset> {
+        let cfgs = sweep_configs(&self.sweep);
         if let Some(path) = &self.cache {
             if path.exists() {
                 let ds = Dataset::load(path)?;
-                let expected = sweep_configs(&self.sweep).len();
-                if ds.len() == expected {
+                let fresh = ds.len() == cfgs.len()
+                    && ds.records.iter().zip(&cfgs).all(|(r, c)| {
+                        r.block == c.kind
+                            && r.data_bits == c.data_bits
+                            && r.coeff_bits == c.coeff_bits
+                    });
+                if fresh {
                     return Ok(ds);
                 }
-                // Stale cache (different sweep): fall through and refresh.
+                // Stale cache (different sweep grid): fall through, refresh.
             }
         }
-        let cfgs = sweep_configs(&self.sweep);
         let map = self.sweep.map.clone();
         let jobs: Vec<_> = cfgs
             .iter()
@@ -199,6 +212,44 @@ mod tests {
         assert!(path.exists());
         let b = eng.collect().unwrap();
         assert_eq!(a.records, b.records);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn same_cardinality_cache_from_different_grid_is_refreshed() {
+        // Regression: revalidation used to check only `ds.len() == expected`,
+        // so a cache from a DIFFERENT sweep grid with the same record count
+        // was silently reused. Both grids below have 7×7 = 49 records.
+        let path = std::env::temp_dir().join("convkit_dse_cache_fingerprint_test.csv");
+        let _ = std::fs::remove_file(&path);
+        let grid = |blocks: Vec<BlockKind>, lo: u32, hi: u32| DseEngine {
+            sweep: SweepOptions {
+                blocks,
+                min_bits: lo,
+                max_bits: hi,
+                ..Default::default()
+            },
+            select: SelectOptions::default(),
+            pool: JobPool::with_workers(1),
+            cache: Some(path.clone()),
+        };
+        // Seed the cache with a conv1-only sweep.
+        let a = grid(vec![BlockKind::Conv1], 6, 12).collect().unwrap();
+        assert!(a.records.iter().all(|r| r.block == BlockKind::Conv1));
+        // Same cardinality, different block: must NOT reuse the cache.
+        let b = grid(vec![BlockKind::Conv2], 6, 12).collect().unwrap();
+        assert_eq!(b.len(), a.len(), "grids are deliberately same-sized");
+        assert!(
+            b.records.iter().all(|r| r.block == BlockKind::Conv2),
+            "stale conv1 cache was reused for a conv2 sweep"
+        );
+        // Same block and cardinality, shifted width range: also refreshed.
+        let c = grid(vec![BlockKind::Conv2], 7, 13).collect().unwrap();
+        assert_eq!(c.len(), b.len());
+        assert!(c.records.iter().all(|r| r.data_bits >= 7 && r.coeff_bits >= 7));
+        // And a genuinely matching grid still hits the cache byte-for-byte.
+        let d = grid(vec![BlockKind::Conv2], 7, 13).collect().unwrap();
+        assert_eq!(c.records, d.records);
         let _ = std::fs::remove_file(&path);
     }
 

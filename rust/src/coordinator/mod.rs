@@ -15,10 +15,14 @@
 //!   admission counter; `ShardedService` owns the fleet (several networks ×
 //!   several replicas), enforces bounded admission (`try_*` returns
 //!   `Error::Overloaded` at a shard's queue cap), and aggregates per-shard
-//!   rows into fleet-wide `ShardedStats`.
-//! - [`router`] — the dispatch policy: a static network-name → replica-set
-//!   table consulted with a dynamic load signal, picking the replica with
-//!   the fewest outstanding requests (lowest index on ties). Pure and
+//!   rows into fleet-wide `ShardedStats`. The replica set is *dynamic*:
+//!   `add_shard`/`remove_shard` reconfigure it live for the fleetplan
+//!   autoscaler, removal draining (never dropping) in-flight tickets.
+//! - [`router`] — the dispatch policy: a network-name → replica-set table
+//!   (rebuilt on reconfiguration) consulted with a dynamic load signal,
+//!   picking the replica with the fewest outstanding requests (lowest index
+//!   on ties); bounded admission walks the full load-ordered replica list so
+//!   `Overloaded` surfaces only when every replica is at its cap. Pure and
 //!   thread-free so policy changes stay unit-testable.
 //!
 //! Rust owns the event loop, thread topology and metrics; Python never runs

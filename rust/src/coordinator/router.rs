@@ -62,6 +62,26 @@ impl Router {
             .min_by_key(|&i| (load(i), i))
             .ok_or_else(|| Error::Usage(format!("network `{network}` has no replicas")))
     }
+
+    /// All of `network`'s replicas in dispatch-preference order — ascending
+    /// load, lowest index on ties. The first element is what
+    /// [`Router::route_by`] returns; the rest are the fallback sequence a
+    /// bounded-admission caller walks when the preferred replica rejects
+    /// with `Overloaded` (ROADMAP "retry policy in the router").
+    pub fn route_all_by<F>(&self, network: &str, load: F) -> Result<Vec<usize>>
+    where
+        F: Fn(usize) -> usize,
+    {
+        let replicas = self.by_network.get(network).ok_or_else(|| {
+            Error::Usage(format!(
+                "no shard serves network `{network}` (known: {})",
+                self.networks().join(", ")
+            ))
+        })?;
+        let mut order = replicas.clone();
+        order.sort_by_key(|&i| (load(i), i));
+        Ok(order)
+    }
 }
 
 #[cfg(test)]
@@ -96,6 +116,22 @@ mod tests {
         assert_eq!(r.route_by("neta", |_| 7).unwrap(), 0);
         let loads = [3usize, 2, 0, 2];
         assert_eq!(r.route_by("neta", |i| loads[i]).unwrap(), 1);
+    }
+
+    #[test]
+    fn route_all_orders_by_load_then_index() {
+        let r = router();
+        // neta replicas are fleet indices [0, 1, 3].
+        let loads = [5usize, 1, 9, 4];
+        assert_eq!(r.route_all_by("neta", |i| loads[i]).unwrap(), vec![1, 3, 0]);
+        // Ties resolve toward the lowest index at every rank.
+        assert_eq!(r.route_all_by("neta", |_| 7).unwrap(), vec![0, 1, 3]);
+        // Head of the order is exactly the single-route choice.
+        assert_eq!(
+            r.route_all_by("neta", |i| loads[i]).unwrap()[0],
+            r.route_by("neta", |i| loads[i]).unwrap()
+        );
+        assert!(r.route_all_by("ghost", |_| 0).is_err());
     }
 
     #[test]

@@ -494,6 +494,16 @@ impl InferenceService {
         }
     }
 
+    /// Ask the worker to stop *without* joining it — the drain primitive the
+    /// dynamic sharding layer builds `remove_shard` on. The request channel
+    /// is FIFO, so every request enqueued before this call is still absorbed
+    /// and answered before the worker exits; only requests enqueued *after*
+    /// (which the sharding layer prevents by unrouting the shard first) would
+    /// be dropped. Join happens in [`InferenceService::shutdown`] or on drop.
+    pub fn request_shutdown(&self) {
+        let _ = self.tx.send(Msg::Shutdown);
+    }
+
     /// Stop the worker and join it.
     pub fn shutdown(mut self) {
         let _ = self.tx.send(Msg::Shutdown);
@@ -683,6 +693,21 @@ mod tests {
         assert_eq!(stats.requests, 2, "failed requests must still be counted");
         assert_eq!(stats.errors, 2);
         assert_eq!(stats.mean_latency_ms, 0.0, "failures do not pollute latency stats");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn request_shutdown_answers_all_prior_requests() {
+        // The drain contract remove_shard relies on: everything enqueued
+        // before the shutdown request rides FIFO ahead of it and is answered
+        // before the worker exits.
+        let (svc, cnn) = golden_service();
+        let rxs: Vec<_> = (0..5).map(|s| svc.enqueue(image(&cnn, s)).unwrap()).collect();
+        svc.request_shutdown();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let reply = rx.recv().expect("worker answers before exiting");
+            assert!(reply.is_ok(), "request {i} must drain successfully");
+        }
         svc.shutdown();
     }
 

@@ -20,6 +20,15 @@
 //! (`outstanding`) are plain atomic loads, so they stay accurate even while
 //! a worker is wedged inside its executor, and [`Shard::stats`] degrades to
 //! a `stale` row (with live depth) rather than hanging in that case.
+//!
+//! Since the fleetplan autoscaler landed, the replica set is *dynamic*:
+//! [`ShardedService::add_shard`] / [`ShardedService::remove_shard`] grow and
+//! shrink a network's replica set live, rebuilding the [`Router`] under a
+//! write lock while request paths proceed under read locks. Removal *drains*:
+//! the shard is unrouted first (no new admissions can reach it), then the
+//! worker is asked to shut down — the request channel is FIFO, so every
+//! ticket admitted before the removal is still answered before the worker
+//! exits. No in-flight ticket is ever dropped by a scale-down.
 
 use crate::blocks::BlockKind;
 use crate::cnn::{zoo, GoldenCnn, NetworkSpec};
@@ -30,8 +39,8 @@ use crate::coordinator::service::{
 use crate::runtime::{artifacts_dir, Runtime};
 use crate::util::error::{Error, Result};
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, RwLock};
 use std::time::{Duration, Instant};
 
 /// Default per-shard admission cap (outstanding requests).
@@ -151,6 +160,10 @@ pub struct Shard {
     pub replica: usize,
     queue_cap: usize,
     outstanding: Arc<AtomicUsize>,
+    /// Bounded admissions rejected at the cap (the SLO tracker's overload
+    /// signal — executor `errors` never see these, they are turned away at
+    /// the front door).
+    rejected: AtomicU64,
     service: InferenceService,
 }
 
@@ -167,6 +180,7 @@ impl Shard {
             replica,
             queue_cap: queue_cap.max(1),
             outstanding: Arc::new(AtomicUsize::new(0)),
+            rejected: AtomicU64::new(0),
             service,
         }
     }
@@ -207,6 +221,11 @@ impl Shard {
         self.outstanding.load(Ordering::SeqCst)
     }
 
+    /// Bounded admissions this replica has rejected at its cap, lifetime.
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::SeqCst)
+    }
+
     /// Admission cap for `try_*` calls.
     pub fn queue_cap(&self) -> usize {
         self.queue_cap
@@ -239,8 +258,23 @@ impl Shard {
         Ok(Ticket { rx })
     }
 
-    /// Non-blocking *bounded* admission: [`Error::Overloaded`] at the cap.
+    /// Non-blocking *bounded* admission: [`Error::Overloaded`] at the cap
+    /// (counted in [`Shard::rejected`]).
     pub fn try_submit(&self, image: Vec<i32>) -> Result<Ticket> {
+        let ticket = self.try_submit_quiet(image);
+        if matches!(ticket, Err(Error::Overloaded(_))) {
+            self.note_rejection();
+        }
+        ticket
+    }
+
+    /// [`Shard::try_submit`] without rejection accounting. The fleet's
+    /// fallback path probes several replicas per admission; a probe that
+    /// merely redirects to a sibling is NOT a turned-away request, so the
+    /// fleet counts one rejection only when EVERY replica is at cap (via
+    /// [`Shard::note_rejection`]) — otherwise a healthy fleet would read as
+    /// overloaded to the SLO tracker.
+    fn try_submit_quiet(&self, image: Vec<i32>) -> Result<Ticket> {
         let slot = self.try_acquire().ok_or_else(|| {
             Error::Overloaded(format!(
                 "shard {}#{} at queue cap {}",
@@ -249,6 +283,11 @@ impl Shard {
         })?;
         let rx = self.service.enqueue_with_guard(image, Some(Box::new(slot)))?;
         Ok(Ticket { rx })
+    }
+
+    /// Record one turned-away admission (the SLO overload signal).
+    fn note_rejection(&self) {
+        self.rejected.fetch_add(1, Ordering::SeqCst);
     }
 
     /// Blocking inference (uncapped admission).
@@ -275,6 +314,7 @@ impl Shard {
             replica: self.replica,
             queue_depth: self.outstanding() as u64,
             queue_cap: self.queue_cap as u64,
+            rejected: self.rejected(),
             stale,
             service,
         }
@@ -291,6 +331,13 @@ impl Shard {
     /// [`Shard::stats`] with an explicit worker-answer timeout.
     pub fn stats_within(&self, timeout: Duration) -> ShardStats {
         self.row(self.service.stats_within(timeout).ok().flatten())
+    }
+
+    /// Begin draining: ask the worker to stop after answering everything
+    /// already enqueued (FIFO guarantees ordering), without joining it.
+    /// Callers must unroute the shard *first* so nothing new is admitted.
+    pub fn drain(&self) {
+        self.service.request_shutdown();
     }
 
     /// Stop the worker and join it.
@@ -310,6 +357,12 @@ pub struct ShardStats {
     pub queue_depth: u64,
     /// Admission cap.
     pub queue_cap: u64,
+    /// Turned-away bounded admissions, lifetime (live atomic — valid even on
+    /// a `stale` row, since rejection happens caller-side). The fleet path
+    /// counts one per request that found EVERY replica at cap, charged to
+    /// the preferred replica; fallback probes that redirected to a sibling
+    /// are not counted.
+    pub rejected: u64,
     /// True when the worker did not answer within the stats timeout (stuck
     /// or slow executor): `service` is zeroed, `queue_depth` is still live.
     pub stale: bool,
@@ -334,6 +387,8 @@ pub struct FleetStats {
     pub throughput_rps: f64,
     /// Summed outstanding requests at snapshot time.
     pub queue_depth: u64,
+    /// Summed bounded-admission rejections (overload pressure fleet-wide).
+    pub rejected: u64,
     /// Shards whose worker did not answer within the stats timeout.
     pub stale_shards: u64,
 }
@@ -358,6 +413,7 @@ fn aggregate(shards: &[ShardStats]) -> FleetStats {
         fleet.batches += s.service.batches;
         fleet.throughput_rps += s.service.throughput_rps;
         fleet.queue_depth += s.queue_depth;
+        fleet.rejected += s.rejected;
         fleet.stale_shards += u64::from(s.stale);
         fleet.p95_latency_ms = fleet.p95_latency_ms.max(s.service.p95_latency_ms);
         // Latency means cover successful requests only.
@@ -371,12 +427,32 @@ fn aggregate(shards: &[ShardStats]) -> FleetStats {
     fleet
 }
 
+/// The mutable fleet: shards plus the router indexing them. Kept behind one
+/// lock so the router's indices can never dangle relative to the shard vec.
+struct FleetState {
+    shards: Vec<Arc<Shard>>,
+    router: Router,
+}
+
+impl FleetState {
+    fn rebuild_router(&mut self) {
+        self.router = Router::new(self.shards.iter().map(|s| s.network.as_str()));
+    }
+}
+
 /// A fleet of shards serving several networks behind one admission
 /// front-end. All methods take `&self`; clients on many threads share one
 /// `ShardedService` (or an `Arc` of it) directly.
+///
+/// The replica set is dynamic: request paths hold a read lock only for the
+/// (non-blocking) route + enqueue step, while [`ShardedService::add_shard`]
+/// and [`ShardedService::remove_shard`] reconfigure under a write lock. An
+/// admission therefore either lands in a shard's FIFO *before* a removal
+/// unroutes it (and is drained — answered — before the worker exits) or
+/// happens after, when the router no longer lists the shard. Blocking waits
+/// ([`Ticket::wait`]) never hold the lock.
 pub struct ShardedService {
-    shards: Vec<Shard>,
-    router: Router,
+    state: RwLock<FleetState>,
 }
 
 impl ShardedService {
@@ -404,45 +480,164 @@ impl ShardedService {
         if shards.is_empty() {
             return Err(Error::InvalidConfig("sharded service needs ≥ 1 shard".into()));
         }
-        let router = Router::new(shards.iter().map(|s| s.network.as_str()));
-        Ok(ShardedService { shards, router })
+        let mut state = FleetState {
+            shards: shards.into_iter().map(Arc::new).collect(),
+            router: Router::default(),
+        };
+        state.rebuild_router();
+        Ok(ShardedService { state: RwLock::new(state) })
+    }
+
+    fn read(&self) -> std::sync::RwLockReadGuard<'_, FleetState> {
+        self.state.read().expect("fleet lock poisoned")
     }
 
     /// Served network names (sorted).
-    pub fn networks(&self) -> Vec<&str> {
-        self.router.networks()
+    pub fn networks(&self) -> Vec<String> {
+        self.read().router.networks().into_iter().map(str::to_string).collect()
     }
 
-    /// The fleet, in index order.
-    pub fn shards(&self) -> &[Shard] {
-        &self.shards
+    /// Snapshot of the fleet, in index order (cheap `Arc` clones). Holders
+    /// observe live counters; the fleet itself may be reconfigured after the
+    /// snapshot is taken.
+    pub fn shards(&self) -> Vec<Arc<Shard>> {
+        self.read().shards.clone()
     }
 
-    /// Route to the least-loaded replica of `network`.
-    fn shard_for(&self, network: &str) -> Result<&Shard> {
-        let idx = self.router.route_by(network, |i| self.shards[i].outstanding())?;
-        Ok(&self.shards[idx])
+    /// Current replica count of `network`.
+    pub fn replica_count(&self, network: &str) -> usize {
+        self.read().router.replicas(network).len()
+    }
+
+    /// Start and register one more replica of `spec.network` (ordinal = one
+    /// past the highest live ordinal). The worker is started *outside* the
+    /// lock; request paths stall only for the final registration. Returns
+    /// the new replica's ordinal.
+    pub fn add_shard(&self, spec: &ShardSpec) -> Result<usize> {
+        let next_ordinal = |st: &FleetState| {
+            st.shards
+                .iter()
+                .filter(|s| s.network == spec.network)
+                .map(|s| s.replica + 1)
+                .max()
+                .unwrap_or(0)
+        };
+        // Bind the guess in its own statement so the read guard drops BEFORE
+        // the (comparatively slow) worker start.
+        let guess = {
+            let st = self.read();
+            next_ordinal(&st)
+        };
+        let mut shard = Shard::start(spec, guess)?;
+        let mut st = self.state.write().expect("fleet lock poisoned");
+        // Recompute under the write lock: a concurrent add between the read
+        // above and here must not duplicate ordinals.
+        shard.replica = next_ordinal(&st);
+        let replica = shard.replica;
+        st.shards.push(Arc::new(shard));
+        st.rebuild_router();
+        Ok(replica)
+    }
+
+    /// Remove (and drain) `network`'s highest-ordinal replica. The shard is
+    /// unrouted under the write lock first, so no new request can reach it;
+    /// every ticket admitted before that point sits in the worker's FIFO
+    /// ahead of the shutdown request and is answered before the worker
+    /// exits — a scale-down never loses an in-flight ticket. Refuses to
+    /// remove the last replica (scale a network to zero by tearing the
+    /// fleet down instead). Returns the removed ordinal.
+    pub fn remove_shard(&self, network: &str) -> Result<usize> {
+        let shard = {
+            let mut st = self.state.write().expect("fleet lock poisoned");
+            let mut idx: Option<usize> = None;
+            let mut count = 0usize;
+            for (i, s) in st.shards.iter().enumerate() {
+                if s.network == network {
+                    count += 1;
+                    match idx {
+                        Some(j) if st.shards[j].replica >= s.replica => {}
+                        _ => idx = Some(i),
+                    }
+                }
+            }
+            let idx = idx.ok_or_else(|| {
+                Error::Usage(format!("no shard serves network `{network}`"))
+            })?;
+            if count == 1 {
+                return Err(Error::InvalidConfig(format!(
+                    "refusing to remove the last replica of `{network}`"
+                )));
+            }
+            let shard = st.shards.remove(idx);
+            st.rebuild_router();
+            shard
+        }; // write lock released: admissions resume on the remaining replicas
+        let replica = shard.replica;
+        shard.drain();
+        // Join deterministically when we hold the last reference; otherwise
+        // the worker still drains (the shutdown request is already queued)
+        // and is joined when the last observer drops its handle.
+        match Arc::try_unwrap(shard) {
+            Ok(s) => s.shutdown(),
+            Err(arc) => drop(arc),
+        }
+        Ok(replica)
+    }
+
+    /// Route to the least-loaded replica of `network` and run `f` on it
+    /// while still holding the read lock — so an admission can never race a
+    /// concurrent `remove_shard` into a dead worker's queue.
+    fn with_routed<R>(&self, network: &str, f: impl FnOnce(&Shard) -> Result<R>) -> Result<R> {
+        let st = self.read();
+        let idx = st.router.route_by(network, |i| st.shards[i].outstanding())?;
+        f(st.shards[idx].as_ref())
     }
 
     /// Non-blocking uncapped admission to `network`'s least-loaded replica.
     pub fn submit(&self, network: &str, image: Vec<i32>) -> Result<Ticket> {
-        self.shard_for(network)?.submit(image)
+        self.with_routed(network, |s| s.submit(image))
     }
 
-    /// Non-blocking *bounded* admission: [`Error::Overloaded`] once the
-    /// routed replica is at its cap.
+    /// Non-blocking *bounded* admission with replica fallback: the replicas
+    /// of `network` are tried in load order (fewest outstanding first,
+    /// lowest index on ties) and [`Error::Overloaded`] surfaces only when
+    /// EVERY replica is at its cap — a single hot replica no longer rejects
+    /// requests its siblings have room for.
     pub fn try_submit(&self, network: &str, image: Vec<i32>) -> Result<Ticket> {
-        self.shard_for(network)?.try_submit(image)
+        let st = self.read();
+        let order = st.router.route_all_by(network, |i| st.shards[i].outstanding())?;
+        let mut image = image;
+        let last_pos = order.len().saturating_sub(1);
+        let mut last: Option<Error> = None;
+        for (pos, &idx) in order.iter().enumerate() {
+            // The common case (first replica admits) moves the image; only
+            // an actual fallback pays a clone.
+            let img =
+                if pos == last_pos { std::mem::take(&mut image) } else { image.clone() };
+            match st.shards[idx].try_submit_quiet(img) {
+                Ok(ticket) => return Ok(ticket),
+                Err(e @ Error::Overloaded(_)) => last = Some(e),
+                Err(e) => return Err(e),
+            }
+        }
+        // Every replica is at cap: THIS is a turned-away request — count it
+        // once, against the preferred replica (probes that merely redirected
+        // to a sibling were not rejections and stay uncounted).
+        if let Some(&first) = order.first() {
+            st.shards[first].note_rejection();
+        }
+        Err(last
+            .unwrap_or_else(|| Error::Usage(format!("network `{network}` has no replicas"))))
     }
 
     /// Blocking inference on `network` (uncapped admission).
     pub fn infer(&self, network: &str, image: Vec<i32>) -> Result<Vec<i32>> {
-        self.shard_for(network)?.infer(image)
+        self.submit(network, image)?.wait()
     }
 
-    /// Blocking inference behind bounded admission.
+    /// Blocking inference behind bounded admission (with replica fallback).
     pub fn try_infer(&self, network: &str, image: Vec<i32>) -> Result<Vec<i32>> {
-        self.shard_for(network)?.try_infer(image)
+        self.try_submit(network, image)?.wait()
     }
 
     /// Per-shard + fleet-wide statistics. All workers are queried
@@ -450,13 +645,14 @@ impl ShardedService {
     /// (requests fan out first, replies are collected second), so the
     /// snapshot costs one timeout total — not one per busy shard — and a
     /// wedged or dead worker shows up as a `stale` row rather than hanging
-    /// or failing the whole fleet.
+    /// or failing the whole fleet. The shard list is snapshotted up front;
+    /// the lock is NOT held while waiting.
     pub fn stats(&self) -> ShardedStats {
+        let shards = self.shards();
         let deadline = Instant::now() + DEFAULT_STATS_TIMEOUT;
         let pending: Vec<Option<mpsc::Receiver<ServiceStats>>> =
-            self.shards.iter().map(|s| s.service.request_stats().ok()).collect();
-        let shards: Vec<ShardStats> = self
-            .shards
+            shards.iter().map(|s| s.service.request_stats().ok()).collect();
+        let shards: Vec<ShardStats> = shards
             .iter()
             .zip(pending)
             .map(|(shard, rx)| {
@@ -473,8 +669,15 @@ impl ShardedService {
 
     /// Stop and join every shard worker.
     pub fn shutdown(self) {
-        for shard in self.shards {
-            shard.shutdown();
+        let state = self.state.into_inner().expect("fleet lock poisoned");
+        for shard in state.shards {
+            shard.drain();
+            match Arc::try_unwrap(shard) {
+                Ok(s) => s.shutdown(),
+                // An observer still holds the Arc: the worker is already
+                // draining and is joined when that last handle drops.
+                Err(arc) => drop(arc),
+            }
         }
     }
 }
@@ -509,15 +712,17 @@ pub fn drive_golden_clients(
                             golden.infer(img)?.into_iter().map(|v| v as i32).collect();
                         Ok(logits != want)
                     };
-                    // Pipeline deep enough to overrun the network's largest
-                    // replica cap (capped by the request count itself).
-                    let cap = fleet
+                    // Pipeline deep enough to overrun the network's COMBINED
+                    // replica capacity — try_submit now falls back across
+                    // replicas, so backpressure only fires once every replica
+                    // is at its cap (capped by the request count itself).
+                    let cap: usize = fleet
                         .shards()
                         .iter()
                         .filter(|s| s.network == spec.name)
-                        .map(Shard::queue_cap)
-                        .max()
-                        .unwrap_or(1);
+                        .map(|s| s.queue_cap())
+                        .sum::<usize>()
+                        .max(1);
                     let window = (cap + 2).min(requests_per_network.max(1));
                     let mut inflight: VecDeque<(Ticket, Vec<i64>)> = VecDeque::new();
                     let mut mismatches = 0usize;
@@ -597,6 +802,7 @@ mod tests {
             replica,
             queue_depth: depth,
             queue_cap: 8,
+            rejected: 2,
             stale: false,
             service: ServiceStats {
                 requests,
@@ -618,6 +824,7 @@ mod tests {
         assert_eq!(fleet.errors, 10);
         assert_eq!(fleet.batches, 6);
         assert_eq!(fleet.queue_depth, 3);
+        assert_eq!(fleet.rejected, 6);
         assert_eq!(fleet.stale_shards, 1);
         assert_eq!(fleet.p95_latency_ms, 9.0);
         assert!((fleet.throughput_rps - 300.0).abs() < 1e-9);

@@ -1,0 +1,389 @@
+//! The autoscale controller: SLO state × capacity plan → live reconfiguration.
+//!
+//! [`Autoscaler::decide`] is a *pure* policy step — fleet snapshot in,
+//! [`ScaleDecision`]s out — so every scaling rule is unit-testable without a
+//! thread in sight. [`Autoscaler::apply`] (and the convenience
+//! [`Autoscaler::step`]) then executes decisions against a live
+//! [`ShardedService`] via `add_shard` / drain-based `remove_shard`.
+//!
+//! Every decision is justified by the fitted models: a scale-up is emitted
+//! only when the *predicted* fleet footprint with one more replica —
+//! per-replica prices from the [`FleetPlan`], live replica counts from the
+//! snapshot — still fits the platform's capped budget. No replica count and
+//! no capacity figure in this module is hardcoded; remove the registry and
+//! nothing here can run.
+
+use super::planner::FleetPlan;
+use super::slo::{NetworkSlo, SloPolicy, SloTracker, SloVerdict};
+use crate::coordinator::{ShardSpec, ShardedService, ShardedStats};
+use crate::synth::ResourceVector;
+use crate::util::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Direction of a reconfiguration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleAction {
+    /// Add one replica.
+    Up,
+    /// Drain and remove one replica.
+    Down,
+}
+
+/// One justified reconfiguration step.
+#[derive(Debug, Clone)]
+pub struct ScaleDecision {
+    /// Network being rescaled.
+    pub network: String,
+    /// Direction.
+    pub action: ScaleAction,
+    /// Live replicas before.
+    pub from_replicas: u64,
+    /// Replicas after this decision.
+    pub to_replicas: u64,
+    /// Model-predicted cost of one replica of this network.
+    pub unit: ResourceVector,
+    /// Predicted fleet-wide footprint AFTER the decision.
+    pub predicted_total: ResourceVector,
+    /// Predicted utilization AFTER, on the plan's platform (%).
+    pub utilization_after: [f64; 5],
+    /// Human-readable trigger (SLO numbers that motivated the step).
+    pub reason: String,
+}
+
+impl fmt::Display for ScaleDecision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let dir = match self.action {
+            ScaleAction::Up => "scale-up",
+            ScaleAction::Down => "scale-down",
+        };
+        write!(
+            f,
+            "{dir} {} {}→{}: {}; replica costs {}; predicted fleet util LLUT {:.2}% DSP {:.2}%",
+            self.network,
+            self.from_replicas,
+            self.to_replicas,
+            self.reason,
+            self.unit,
+            self.utilization_after[0],
+            self.utilization_after[4],
+        )
+    }
+}
+
+/// The controller: plan + policy + per-network shard templates.
+pub struct Autoscaler {
+    plan: FleetPlan,
+    tracker: SloTracker,
+    templates: BTreeMap<String, ShardSpec>,
+}
+
+impl Autoscaler {
+    /// Controller over `plan`, judging snapshots with `policy`, growing
+    /// networks from the matching template in `templates` (one [`ShardSpec`]
+    /// per planned network; its `replicas` field is ignored — replicas are
+    /// added one at a time).
+    pub fn new(plan: FleetPlan, policy: SloPolicy, templates: Vec<ShardSpec>) -> Autoscaler {
+        let templates =
+            templates.into_iter().map(|t| (t.network.clone(), t)).collect();
+        Autoscaler { plan, tracker: SloTracker::new(policy), templates }
+    }
+
+    /// The capacity plan decisions are judged against.
+    pub fn plan(&self) -> &FleetPlan {
+        &self.plan
+    }
+
+    /// Pure decision step: fold `stats` into the SLO tracker and emit the
+    /// justified reconfigurations. Scale-ups require headroom in the
+    /// *predicted* budget; scale-downs require a full calm window and more
+    /// than the planned floor. Unplanned networks are left alone.
+    pub fn decide(&mut self, stats: &ShardedStats) -> Vec<ScaleDecision> {
+        let slos = self.tracker.observe(stats);
+        // Working replica counts: starts at the live snapshot and absorbs
+        // each emitted decision, so several same-round decisions are
+        // budget-checked JOINTLY — two scale-ups cannot each claim the same
+        // remaining headroom.
+        let mut working: BTreeMap<String, u64> = slos
+            .iter()
+            .map(|s| (s.network.clone(), s.replicas as u64))
+            .collect();
+        let budget = self.plan.capped_budget();
+        let mut decisions = Vec::new();
+        for slo in &slos {
+            let Some(np) = self.plan.get(&slo.network) else { continue };
+            let current = working.get(slo.network.as_str()).copied().unwrap_or(0);
+            match slo.verdict {
+                SloVerdict::Overloaded => {
+                    if np.max_replicas != 0 && current >= np.max_replicas {
+                        continue;
+                    }
+                    let predicted_total = self.plan.predicted_usage(|name| {
+                        let base = working.get(name).copied().unwrap_or(0);
+                        base + u64::from(name == slo.network)
+                    });
+                    if !predicted_total.fits_within(&budget) {
+                        // Platform exhausted: the models say one more replica
+                        // cannot fit under the cap — shed load instead.
+                        continue;
+                    }
+                    decisions.push(self.decision(slo, ScaleAction::Up, current, predicted_total));
+                    working.insert(slo.network.clone(), current + 1);
+                }
+                SloVerdict::Idle => {
+                    if current <= np.min_replicas {
+                        continue;
+                    }
+                    let predicted_total = self.plan.predicted_usage(|name| {
+                        let base = working.get(name).copied().unwrap_or(0);
+                        base - u64::from(name == slo.network)
+                    });
+                    decisions.push(self.decision(slo, ScaleAction::Down, current, predicted_total));
+                    working.insert(slo.network.clone(), current - 1);
+                }
+                SloVerdict::Healthy => {}
+            }
+        }
+        decisions
+    }
+
+    fn decision(
+        &self,
+        slo: &NetworkSlo,
+        action: ScaleAction,
+        current: u64,
+        predicted_total: ResourceVector,
+    ) -> ScaleDecision {
+        let np = self.plan.get(&slo.network).expect("caller checked membership");
+        let to = match action {
+            ScaleAction::Up => current + 1,
+            ScaleAction::Down => current - 1,
+        };
+        let reason = match action {
+            ScaleAction::Up => format!(
+                "overload {:.1}% / p95 {:.3} ms breach the SLO (targets {:.1}% / {:.1} ms)",
+                100.0 * slo.overload_rate,
+                slo.p95_ms,
+                100.0 * self.tracker.policy().overload_target,
+                self.tracker.policy().p95_target_ms,
+            ),
+            ScaleAction::Down => format!(
+                "idle for a full window (overload 0.0%, queue {:.1}%)",
+                100.0 * slo.queue_util,
+            ),
+        };
+        ScaleDecision {
+            network: slo.network.clone(),
+            action,
+            from_replicas: current,
+            to_replicas: to,
+            unit: np.unit,
+            predicted_total,
+            utilization_after: self.plan.platform.utilization(&predicted_total),
+            reason,
+        }
+    }
+
+    /// Execute one decision against a live fleet.
+    pub fn apply(&self, fleet: &ShardedService, decision: &ScaleDecision) -> Result<()> {
+        match decision.action {
+            ScaleAction::Up => {
+                let template = self.templates.get(&decision.network).ok_or_else(|| {
+                    Error::InvalidConfig(format!(
+                        "no shard template for network `{}`",
+                        decision.network
+                    ))
+                })?;
+                let spec = ShardSpec { replicas: 1, ..template.clone() };
+                fleet.add_shard(&spec)?;
+            }
+            ScaleAction::Down => {
+                fleet.remove_shard(&decision.network)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// One full control round: snapshot → decide → apply every decision.
+    pub fn step(&mut self, fleet: &ShardedService) -> Result<Vec<ScaleDecision>> {
+        let stats = fleet.stats();
+        let decisions = self.decide(&stats);
+        for d in &decisions {
+            self.apply(fleet, d)?;
+        }
+        Ok(decisions)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::planner::{FleetPlan, NetworkPlan};
+    use crate::coordinator::service::ServiceStats;
+    use crate::coordinator::{FleetStats, ShardStats};
+    use crate::platform::Platform;
+
+    /// A hand-built plan: network `a` costs 100 DSP per replica on a ZCU104
+    /// (capped budget 1382 DSP at 80%), floor 1, platform-bounded ceiling.
+    fn plan() -> FleetPlan {
+        let platform = Platform::zcu104();
+        let unit = ResourceVector::new(1_000, 0, 0, 0, 100);
+        FleetPlan {
+            platform: platform.clone(),
+            cap: 0.8,
+            networks: vec![NetworkPlan {
+                network: "a".into(),
+                unit,
+                replicas: 13,
+                min_replicas: 1,
+                max_replicas: 0,
+                weight: 1.0,
+            }],
+            total: unit.scaled(13),
+            utilization: platform.utilization(&unit.scaled(13)),
+        }
+    }
+
+    fn policy() -> SloPolicy {
+        SloPolicy {
+            p95_target_ms: 10.0,
+            overload_target: 0.05,
+            idle_queue_util: 0.25,
+            window: 1,
+        }
+    }
+
+    fn rows(replicas: usize, requests: u64, rejected: u64, p95: f64) -> ShardedStats {
+        let shards = (0..replicas)
+            .map(|r| ShardStats {
+                network: "a".into(),
+                replica: r,
+                queue_depth: 0,
+                queue_cap: 4,
+                rejected,
+                stale: false,
+                service: ServiceStats {
+                    requests,
+                    p95_latency_ms: p95,
+                    ..ServiceStats::default()
+                },
+            })
+            .collect();
+        ShardedStats { shards, fleet: FleetStats::default() }
+    }
+
+    fn scaler() -> Autoscaler {
+        Autoscaler::new(plan(), policy(), vec![])
+    }
+
+    #[test]
+    fn overload_triggers_a_budgeted_scale_up() {
+        let mut a = scaler();
+        let d = a.decide(&rows(1, 10, 10, 1.0));
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].action, ScaleAction::Up);
+        assert_eq!((d[0].from_replicas, d[0].to_replicas), (1, 2));
+        // The justification is the model prediction itself.
+        assert_eq!(d[0].predicted_total.dsp, 200);
+        assert!(d[0].predicted_total.fits_within(&a.plan().capped_budget()));
+        let line = d[0].to_string();
+        assert!(line.contains("scale-up a 1→2"), "{line}");
+        assert!(line.contains("DSP=100"), "{line}");
+    }
+
+    #[test]
+    fn scale_up_is_suppressed_when_the_predicted_budget_is_exhausted() {
+        // 13 replicas × 100 DSP = 1300; a 14th would need 1400 > 1382.
+        let mut a = scaler();
+        let d = a.decide(&rows(13, 10, 10, 1.0));
+        assert!(d.is_empty(), "model says no replica fits: {d:?}");
+    }
+
+    #[test]
+    fn idle_scales_down_to_the_floor_and_not_past_it() {
+        let mut a = scaler();
+        let d = a.decide(&rows(2, 10, 0, 1.0));
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].action, ScaleAction::Down);
+        assert_eq!((d[0].from_replicas, d[0].to_replicas), (2, 1));
+        assert_eq!(d[0].predicted_total.dsp, 100);
+        // At the floor, idleness no longer produces decisions.
+        let mut a = scaler();
+        assert!(a.decide(&rows(1, 10, 0, 1.0)).is_empty());
+    }
+
+    #[test]
+    fn same_round_scale_ups_share_one_budget() {
+        // Two networks at 100 DSP/replica, 6 live replicas each (1200 DSP);
+        // the 1382-DSP capped budget has room for ONE more replica, not two.
+        // Both networks overloaded in the same snapshot: exactly one Up may
+        // be emitted — the second must see the first's claim on the headroom.
+        let platform = Platform::zcu104();
+        let unit = ResourceVector::new(1_000, 0, 0, 0, 100);
+        let net = |name: &str| NetworkPlan {
+            network: name.into(),
+            unit,
+            replicas: 6,
+            min_replicas: 1,
+            max_replicas: 0,
+            weight: 1.0,
+        };
+        let plan = FleetPlan {
+            platform: platform.clone(),
+            cap: 0.8,
+            networks: vec![net("a"), net("b")],
+            total: unit.scaled(12),
+            utilization: platform.utilization(&unit.scaled(12)),
+        };
+        let mut scaler = Autoscaler::new(plan, policy(), vec![]);
+        let mut shards = rows(6, 10, 10, 1.0).shards;
+        shards.extend(rows(6, 10, 10, 1.0).shards.into_iter().map(|mut s| {
+            s.network = "b".into();
+            s
+        }));
+        let stats = ShardedStats { shards, fleet: FleetStats::default() };
+        let d = scaler.decide(&stats);
+        assert_eq!(d.len(), 1, "joint budget allows exactly one scale-up: {d:?}");
+        assert_eq!(d[0].action, ScaleAction::Up);
+        assert_eq!(d[0].predicted_total.dsp, 1300);
+        assert!(d[0].predicted_total.fits_within(&scaler.plan().capped_budget()));
+    }
+
+    #[test]
+    fn healthy_networks_are_left_alone() {
+        let mut a = scaler();
+        // Light but nonzero pressure: queue busy enough not to be idle.
+        let mut stats = rows(2, 100, 0, 1.0);
+        stats.shards[0].queue_depth = 4;
+        assert!(a.decide(&stats).is_empty());
+    }
+
+    #[test]
+    fn unplanned_networks_are_ignored() {
+        let mut a = scaler();
+        let mut stats = rows(1, 10, 10, 1.0);
+        stats.shards[0].network = "ghost".into();
+        assert!(a.decide(&stats).is_empty());
+    }
+
+    #[test]
+    fn apply_without_a_template_is_an_error() {
+        let a = scaler();
+        let d = ScaleDecision {
+            network: "a".into(),
+            action: ScaleAction::Up,
+            from_replicas: 1,
+            to_replicas: 2,
+            unit: ResourceVector::default(),
+            predicted_total: ResourceVector::default(),
+            utilization_after: [0.0; 5],
+            reason: "test".into(),
+        };
+        let fleet = crate::coordinator::ShardedService::start(&[
+            crate::coordinator::ShardSpec::golden("tiny_q8"),
+        ])
+        .unwrap();
+        assert!(a.apply(&fleet, &d).is_err());
+        fleet.shutdown();
+    }
+}

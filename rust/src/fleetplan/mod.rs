@@ -1,0 +1,47 @@
+//! Model-driven fleet planning + live autoscaling — the paper's resource
+//! models closed into the serving loop.
+//!
+//! The paper's claim is that fitted per-block resource models make FPGA
+//! capacity questions *closed-form* ("a useful tool for FPGA selection and
+//! optimized CNN deployment"); its Table 5 study allocates convolution
+//! blocks onto a ZCU104 under an 80% utilization cap from model predictions
+//! alone. This module lifts that study one level up — from blocks to
+//! serving replicas — and closes the loop against live traffic, mirroring
+//! the resource-driven adaptive-IP deployments of the related work
+//! (arXiv:2510.02990) and the automated design-space exploration of
+//! CNN2Gate (arXiv:2004.04641). Three layers:
+//!
+//! 1. **[`planner`]** — price one replica of each network with the fitted
+//!    [`crate::models::ModelRegistry`] (via the deployment planner's
+//!    per-layer block mix), then solve replica counts per network under the
+//!    utilization cap with a weighted max-min fill ([`plan_fleet`]), or rank
+//!    devices by whether the fleet fits at all ([`select_platform`] — FPGA
+//!    selection as a query).
+//! 2. **[`slo`]** — fold [`crate::coordinator::ShardedStats`] snapshots into
+//!    per-network rolling objectives: overload rate (bounded-admission
+//!    rejections over a window), worst-replica p95 latency, queue
+//!    utilization — with idle hysteresis so scale-downs don't flap.
+//! 3. **[`controller`]** — compare SLO state to the plan and reconfigure the
+//!    live fleet: scale-ups are emitted only when the *predicted* footprint
+//!    of one more replica still fits the capped budget (the justification is
+//!    printed with every decision), scale-downs drain — never drop —
+//!    in-flight tickets via [`crate::coordinator::ShardedService::remove_shard`].
+//!
+//! No capacity number in this module is hardcoded: replica prices come from
+//! the registry, budgets from the [`crate::platform::Platform`] catalog, and
+//! the 80% cap is the caller's to choose — exactly the paper's methodology,
+//! running in the request path's control plane.
+//!
+//! Surfaces: `convkit autoscale` (synthetic spike → justified scale-up →
+//! idle → drained scale-down), the e2e pipeline's autoscale stage, and the
+//! `runtime_serve` bench's reconfiguration-cost section.
+
+pub mod controller;
+pub mod planner;
+pub mod slo;
+
+pub use controller::{Autoscaler, ScaleAction, ScaleDecision};
+pub use planner::{
+    plan_fleet, plan_platforms, select_platform, FleetPlan, NetworkDemand, NetworkPlan,
+};
+pub use slo::{NetworkSlo, SloPolicy, SloTracker, SloVerdict};

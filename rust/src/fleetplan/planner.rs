@@ -1,0 +1,353 @@
+//! The capacity planner: replica counts from fitted models, not from guesses.
+//!
+//! One replica of a network is priced by the deployment planner's per-layer
+//! block mix ([`plan_deployment`] → `unit_costs` under the hood), i.e. by the
+//! paper's fitted resource models alone — no synthesis on this path. Given a
+//! set of [`NetworkDemand`]s and a [`Platform`], [`plan_fleet`] then solves
+//! for replica counts under the utilization cap with a weighted max-min fill:
+//! every network gets its floor, then replicas are granted one at a time to
+//! the network with the lowest replicas-to-weight ratio that still fits.
+//! The result is the Table 5 allocation study lifted from "blocks on a
+//! device" to "network replicas on a device".
+//!
+//! [`select_platform`] inverts the question — *which FPGA fits this fleet* —
+//! by ranking the catalog smallest-first and returning the first device whose
+//! plan is feasible: the paper's "useful tool for FPGA selection" claim, made
+//! executable.
+
+use crate::cnn::{plan_deployment, NetworkSpec};
+use crate::models::ModelRegistry;
+use crate::platform::Platform;
+use crate::synth::ResourceVector;
+use crate::util::error::{Error, Result};
+
+/// One network's serving demand, in planner terms.
+#[derive(Debug, Clone)]
+pub struct NetworkDemand {
+    /// The network to serve.
+    pub spec: NetworkSpec,
+    /// Relative traffic share (replicas are granted proportionally to this).
+    pub weight: f64,
+    /// Replica floor (≥ 1; the fleet is infeasible if the floors don't fit).
+    pub min_replicas: u64,
+    /// Replica ceiling (0 = bounded only by the platform).
+    pub max_replicas: u64,
+}
+
+impl NetworkDemand {
+    /// Demand with weight 1, floor 1, platform-bounded ceiling.
+    pub fn new(spec: NetworkSpec) -> NetworkDemand {
+        NetworkDemand { spec, weight: 1.0, min_replicas: 1, max_replicas: 0 }
+    }
+
+    /// Set the traffic weight (clamped to a positive value).
+    pub fn with_weight(mut self, weight: f64) -> NetworkDemand {
+        self.weight = if weight > 0.0 { weight } else { 1.0 };
+        self
+    }
+
+    /// Set the replica floor.
+    pub fn with_min_replicas(mut self, min: u64) -> NetworkDemand {
+        self.min_replicas = min.max(1);
+        self
+    }
+
+    /// Set the replica ceiling (0 = unbounded).
+    pub fn with_max_replicas(mut self, max: u64) -> NetworkDemand {
+        self.max_replicas = max;
+        self
+    }
+}
+
+/// One network's row in a solved fleet plan.
+#[derive(Debug, Clone)]
+pub struct NetworkPlan {
+    /// Network name.
+    pub network: String,
+    /// Model-predicted footprint of ONE replica (per-layer block mix).
+    pub unit: ResourceVector,
+    /// Replicas the platform supports for this network at the solved fill
+    /// (the autoscaler's ceiling when the demand sets none of its own).
+    pub replicas: u64,
+    /// Replica floor carried over from the demand.
+    pub min_replicas: u64,
+    /// Replica ceiling carried over from the demand (0 = platform-bounded).
+    pub max_replicas: u64,
+    /// Traffic weight carried over from the demand.
+    pub weight: f64,
+}
+
+/// A solved capacity plan: per-network replica counts plus the aggregate.
+#[derive(Debug, Clone)]
+pub struct FleetPlan {
+    /// Target device.
+    pub platform: Platform,
+    /// Utilization cap the plan was solved under (e.g. the paper's 0.8).
+    pub cap: f64,
+    /// Per-network rows, in demand order.
+    pub networks: Vec<NetworkPlan>,
+    /// Predicted usage of the full solved fleet.
+    pub total: ResourceVector,
+    /// Utilization (%) of the solved fleet on the platform, paper order.
+    pub utilization: [f64; 5],
+}
+
+impl FleetPlan {
+    /// Row for one network.
+    pub fn get(&self, network: &str) -> Option<&NetworkPlan> {
+        self.networks.iter().find(|n| n.network == network)
+    }
+
+    /// Solved replica count for one network (0 if unplanned).
+    pub fn replicas_for(&self, network: &str) -> u64 {
+        self.get(network).map(|n| n.replicas).unwrap_or(0)
+    }
+
+    /// Total replicas across all networks.
+    pub fn total_replicas(&self) -> u64 {
+        self.networks.iter().map(|n| n.replicas).sum()
+    }
+
+    /// The platform budget at the plan's cap.
+    pub fn capped_budget(&self) -> ResourceVector {
+        self.platform.capped_budget(self.cap)
+    }
+
+    /// Predicted fleet usage for an arbitrary replica assignment (the
+    /// controller's what-if primitive: "does one more replica of X fit?").
+    /// Networks outside the plan contribute nothing.
+    pub fn predicted_usage<F>(&self, replicas: F) -> ResourceVector
+    where
+        F: Fn(&str) -> u64,
+    {
+        let mut total = ResourceVector::default();
+        for n in &self.networks {
+            total += n.unit.scaled(replicas(&n.network));
+        }
+        total
+    }
+}
+
+/// Solve replica counts for `demands` on `platform` under `cap`.
+///
+/// Per-replica prices come from [`plan_deployment`] (the fitted models);
+/// the fill is weighted max-min: floors first, then one replica at a time to
+/// the network with the smallest `replicas / weight` ratio whose next
+/// replica still fits every resource column, lowest demand index on ties.
+/// Deterministic for a given registry.
+pub fn plan_fleet(
+    demands: &[NetworkDemand],
+    registry: &ModelRegistry,
+    platform: &Platform,
+    cap: f64,
+) -> Result<FleetPlan> {
+    if demands.is_empty() {
+        return Err(Error::InvalidConfig("fleet plan needs ≥ 1 network demand".into()));
+    }
+    let budget = platform.capped_budget(cap);
+    // Price one replica of each network via the per-layer block mix.
+    let mut networks: Vec<NetworkPlan> = Vec::with_capacity(demands.len());
+    for d in demands {
+        let deployment = plan_deployment(&d.spec, registry, platform, cap)?;
+        networks.push(NetworkPlan {
+            network: d.spec.name.clone(),
+            unit: deployment.total,
+            replicas: 0,
+            min_replicas: d.min_replicas.max(1),
+            max_replicas: d.max_replicas,
+            weight: if d.weight > 0.0 { d.weight } else { 1.0 },
+        });
+    }
+    // Floors.
+    let mut total = ResourceVector::default();
+    for n in networks.iter_mut() {
+        n.replicas = n.min_replicas;
+        total += n.unit.scaled(n.replicas);
+    }
+    if !total.fits_within(&budget) {
+        return Err(Error::Infeasible(format!(
+            "replica floors do not fit {} at {:.0}% ({total} vs budget {budget})",
+            platform.name,
+            100.0 * cap
+        )));
+    }
+    // Weighted max-min fill.
+    loop {
+        let mut best: Option<usize> = None;
+        for (i, n) in networks.iter().enumerate() {
+            if n.max_replicas != 0 && n.replicas >= n.max_replicas {
+                continue;
+            }
+            // A zero-cost unit can never bound the fill — skip it so the
+            // loop terminates (cannot happen with real deployment plans).
+            if n.unit == ResourceVector::default() {
+                continue;
+            }
+            if !(total + n.unit).fits_within(&budget) {
+                continue;
+            }
+            let ratio = n.replicas as f64 / n.weight;
+            match best {
+                Some(j) => {
+                    let jr = networks[j].replicas as f64 / networks[j].weight;
+                    if ratio < jr {
+                        best = Some(i);
+                    }
+                }
+                None => best = Some(i),
+            }
+        }
+        match best {
+            Some(i) => {
+                networks[i].replicas += 1;
+                total += networks[i].unit;
+            }
+            None => break,
+        }
+    }
+    let utilization = platform.utilization(&total);
+    Ok(FleetPlan { platform: platform.clone(), cap, networks, total, utilization })
+}
+
+/// Plan `demands` on every candidate platform (feasible or not) — the raw
+/// material for an FPGA-selection table.
+pub fn plan_platforms(
+    demands: &[NetworkDemand],
+    registry: &ModelRegistry,
+    platforms: &[Platform],
+    cap: f64,
+) -> Vec<(Platform, Result<FleetPlan>)> {
+    platforms
+        .iter()
+        .map(|p| (p.clone(), plan_fleet(demands, registry, p, cap)))
+        .collect()
+}
+
+/// The smallest platform (by capped LLUT budget, DSP tie-break) whose plan is
+/// feasible — "which FPGA fits this fleet", answered from the models alone.
+pub fn select_platform(
+    demands: &[NetworkDemand],
+    registry: &ModelRegistry,
+    platforms: &[Platform],
+    cap: f64,
+) -> Result<(Platform, FleetPlan)> {
+    let mut candidates: Vec<Platform> = platforms.to_vec();
+    candidates.sort_by_key(|p| (p.budget.llut, p.budget.dsp));
+    for p in candidates {
+        if let Ok(plan) = plan_fleet(demands, registry, &p, cap) {
+            return Ok((p, plan));
+        }
+    }
+    Err(Error::Infeasible(format!(
+        "no candidate platform fits the demanded fleet at {:.0}%",
+        100.0 * cap
+    )))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::zoo;
+    use crate::coordinator::dse::DseEngine;
+    use crate::coordinator::jobs::JobPool;
+    use crate::models::SelectOptions;
+    use crate::synthdata::SweepOptions;
+
+    fn registry() -> ModelRegistry {
+        let eng = DseEngine {
+            sweep: SweepOptions { min_bits: 6, max_bits: 12, ..Default::default() },
+            select: SelectOptions::default(),
+            pool: JobPool::with_workers(2),
+            cache: None,
+        };
+        eng.run().unwrap().registry
+    }
+
+    #[test]
+    fn plan_respects_floors_cap_and_prices_from_models() {
+        let reg = registry();
+        let demands = [
+            NetworkDemand::new(zoo::lenet_ish()).with_min_replicas(2),
+            NetworkDemand::new(zoo::tiny()),
+        ];
+        let plan = plan_fleet(&demands, &reg, &Platform::zcu104(), 0.8).unwrap();
+        assert_eq!(plan.networks.len(), 2);
+        assert!(plan.replicas_for("lenet_q8") >= 2);
+        assert!(plan.replicas_for("tiny_q8") >= 1);
+        // Prices come straight from the deployment planner.
+        let unit = plan.get("lenet_q8").unwrap().unit;
+        let direct =
+            plan_deployment(&zoo::lenet_ish(), &reg, &Platform::zcu104(), 0.8).unwrap().total;
+        assert_eq!(unit, direct);
+        // The solved fleet respects every resource column of the cap.
+        assert!(plan.total.fits_within(&plan.capped_budget()));
+        // And the fill is saturated: no network below its ceiling has room
+        // for one more replica.
+        for n in &plan.networks {
+            if n.max_replicas == 0 || n.replicas < n.max_replicas {
+                let probe = plan.total + n.unit;
+                assert!(
+                    !probe.fits_within(&plan.capped_budget()),
+                    "{}: fill left headroom for another replica",
+                    n.network
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_fill_tracks_traffic_share() {
+        let reg = registry();
+        let demands = [
+            NetworkDemand::new(zoo::tiny()).with_weight(3.0),
+            NetworkDemand::new(zoo::slim_q6()).with_weight(1.0),
+        ];
+        let plan = plan_fleet(&demands, &reg, &Platform::zcu104(), 0.8).unwrap();
+        let heavy = plan.replicas_for("tiny_q8");
+        let light = plan.replicas_for("slim_q6");
+        assert!(
+            heavy > light,
+            "3:1 weights must grant the heavy network more replicas ({heavy} vs {light})"
+        );
+    }
+
+    #[test]
+    fn max_replicas_ceiling_is_respected() {
+        let reg = registry();
+        let demands = [NetworkDemand::new(zoo::tiny()).with_max_replicas(3)];
+        let plan = plan_fleet(&demands, &reg, &Platform::zcu104(), 0.8).unwrap();
+        assert_eq!(plan.replicas_for("tiny_q8"), 3);
+    }
+
+    #[test]
+    fn predicted_usage_is_linear_in_replicas() {
+        let reg = registry();
+        let demands = [NetworkDemand::new(zoo::tiny()).with_max_replicas(4)];
+        let plan = plan_fleet(&demands, &reg, &Platform::zcu104(), 0.8).unwrap();
+        let unit = plan.get("tiny_q8").unwrap().unit;
+        assert_eq!(plan.predicted_usage(|_| 5), unit.scaled(5));
+        assert_eq!(plan.predicted_usage(|_| 0), ResourceVector::default());
+    }
+
+    #[test]
+    fn infeasible_floors_are_rejected() {
+        let reg = registry();
+        let demands = [NetworkDemand::new(zoo::lenet_ish()).with_min_replicas(2)];
+        let err = plan_fleet(&demands, &reg, &Platform::zcu104(), 0.000_1);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn select_platform_prefers_the_smallest_fitting_device() {
+        let reg = registry();
+        // A modest fleet fits the smallest catalog device (KV260).
+        let demands = [NetworkDemand::new(zoo::tiny()).with_max_replicas(2)];
+        let (p, plan) =
+            select_platform(&demands, &reg, &Platform::all(), 0.8).unwrap();
+        assert_eq!(p.name, "KV260");
+        assert_eq!(plan.replicas_for("tiny_q8"), 2);
+        // Ranking is by size: the chosen device has the smallest LLUT budget.
+        let min_llut = Platform::all().iter().map(|q| q.budget.llut).min().unwrap();
+        assert_eq!(p.budget.llut, min_llut);
+    }
+}

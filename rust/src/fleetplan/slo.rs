@@ -1,0 +1,306 @@
+//! Per-network SLO tracking over [`ShardedStats`] snapshots.
+//!
+//! The serving layer's counters are cumulative and per-shard; the autoscaler
+//! needs *per-network rates over a recent window*. [`SloTracker::observe`]
+//! folds one fleet snapshot into per-network rolling state and returns a
+//! [`NetworkSlo`] row per served network:
+//!
+//! * **overload rate** — bounded-admission rejections as a fraction of all
+//!   admission attempts over the last `window` snapshots (rejections are
+//!   counted caller-side by the shards, so they stay live even when a worker
+//!   is wedged and its stats row degrades to `stale`);
+//! * **p95 latency** — the worst per-replica p95 in the latest snapshot
+//!   (conservative fleet tail, matching `FleetStats`);
+//! * **queue utilization** — summed depth over summed cap right now.
+//!
+//! Verdicts: a network is [`SloVerdict::Overloaded`] when the overload rate
+//! or p95 breaches its target, and [`SloVerdict::Idle`] only after a *full
+//! window* of calm snapshots (zero rejections, near-empty queues, p95 under
+//! target) — the hysteresis that keeps scale-downs from flapping against a
+//! bursty client.
+
+use crate::coordinator::{ShardStats, ShardedStats};
+use std::collections::{BTreeMap, VecDeque};
+
+/// Scale-triggering objectives, per network (one policy for the fleet).
+#[derive(Debug, Clone)]
+pub struct SloPolicy {
+    /// p95 latency objective (milliseconds).
+    pub p95_target_ms: f64,
+    /// Tolerated overload rate (rejected / attempted) over the window.
+    pub overload_target: f64,
+    /// Queue depth / cap below which a calm network counts as idle.
+    pub idle_queue_util: f64,
+    /// Snapshots per rolling window (also the idle-hysteresis length).
+    pub window: usize,
+}
+
+impl Default for SloPolicy {
+    fn default() -> Self {
+        SloPolicy {
+            p95_target_ms: 50.0,
+            overload_target: 0.01,
+            idle_queue_util: 0.05,
+            window: 3,
+        }
+    }
+}
+
+/// One network's standing against the policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SloVerdict {
+    /// Objectives breached: a scale-up candidate.
+    Overloaded,
+    /// Objectives met under live load.
+    Healthy,
+    /// A full window of calm: a scale-down candidate.
+    Idle,
+}
+
+/// One network's rolled-up SLO view at the latest snapshot.
+#[derive(Debug, Clone)]
+pub struct NetworkSlo {
+    /// Network name.
+    pub network: String,
+    /// Live replica count in the snapshot.
+    pub replicas: usize,
+    /// Worst per-replica p95 (ms) in the latest snapshot.
+    pub p95_ms: f64,
+    /// Rejected / attempted admissions over the rolling window.
+    pub overload_rate: f64,
+    /// Summed queue depth over summed cap in the latest snapshot.
+    pub queue_util: f64,
+    /// Standing against the policy.
+    pub verdict: SloVerdict,
+}
+
+impl NetworkSlo {
+    /// One-line human summary (CLI + e2e narration).
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: {:?} ({} replicas, overload {:.1}%, p95 {:.3} ms, queue {:.1}%)",
+            self.network,
+            self.verdict,
+            self.replicas,
+            100.0 * self.overload_rate,
+            self.p95_ms,
+            100.0 * self.queue_util,
+        )
+    }
+}
+
+/// Per-network window entry: admission-attempt deltas between snapshots.
+#[derive(Debug, Clone, Copy, Default)]
+struct Sample {
+    admitted: u64,
+    rejected: u64,
+}
+
+/// Cumulative totals at the previous snapshot (for delta extraction).
+#[derive(Debug, Clone, Copy, Default)]
+struct Totals {
+    admitted: u64,
+    rejected: u64,
+}
+
+/// Rolling per-network SLO state across fleet snapshots.
+#[derive(Debug)]
+pub struct SloTracker {
+    policy: SloPolicy,
+    last: BTreeMap<String, Totals>,
+    windows: BTreeMap<String, VecDeque<Sample>>,
+}
+
+impl SloTracker {
+    /// Tracker with the given policy (window clamped to ≥ 1).
+    pub fn new(mut policy: SloPolicy) -> SloTracker {
+        policy.window = policy.window.max(1);
+        SloTracker { policy, last: BTreeMap::new(), windows: BTreeMap::new() }
+    }
+
+    /// The active policy.
+    pub fn policy(&self) -> &SloPolicy {
+        &self.policy
+    }
+
+    /// Fold one fleet snapshot in; returns one row per network, sorted by
+    /// name. Cumulative counters that *dip* (a shard was drained away, or a
+    /// wedged worker reported a zeroed `stale` row) contribute a zero delta
+    /// rather than wrapping.
+    pub fn observe(&mut self, stats: &ShardedStats) -> Vec<NetworkSlo> {
+        // Group the snapshot rows by network.
+        let mut groups: BTreeMap<&str, Vec<&ShardStats>> = BTreeMap::new();
+        for row in &stats.shards {
+            groups.entry(row.network.as_str()).or_default().push(row);
+        }
+        let mut out = Vec::with_capacity(groups.len());
+        for (network, rows) in groups {
+            let admitted: u64 = rows.iter().map(|r| r.service.requests).sum();
+            let rejected: u64 = rows.iter().map(|r| r.rejected).sum();
+            let depth: u64 = rows.iter().map(|r| r.queue_depth).sum();
+            let cap: u64 = rows.iter().map(|r| r.queue_cap).sum();
+            let p95_ms = rows
+                .iter()
+                .map(|r| r.service.p95_latency_ms)
+                .fold(0.0f64, f64::max);
+
+            let prev = self.last.get(network).copied().unwrap_or_default();
+            let sample = Sample {
+                admitted: admitted.saturating_sub(prev.admitted),
+                rejected: rejected.saturating_sub(prev.rejected),
+            };
+            self.last.insert(network.to_string(), Totals { admitted, rejected });
+            let window = self.windows.entry(network.to_string()).or_default();
+            window.push_back(sample);
+            while window.len() > self.policy.window {
+                window.pop_front();
+            }
+
+            let (adm, rej) = window
+                .iter()
+                .fold((0u64, 0u64), |(a, r), s| (a + s.admitted, r + s.rejected));
+            let attempts = adm + rej;
+            let overload_rate =
+                if attempts == 0 { 0.0 } else { rej as f64 / attempts as f64 };
+            let queue_util = if cap == 0 { 0.0 } else { depth as f64 / cap as f64 };
+
+            let breached = overload_rate > self.policy.overload_target
+                || p95_ms > self.policy.p95_target_ms;
+            let calm = rej == 0
+                && queue_util <= self.policy.idle_queue_util
+                && p95_ms <= self.policy.p95_target_ms;
+            let verdict = if breached {
+                SloVerdict::Overloaded
+            } else if calm && window.len() >= self.policy.window {
+                SloVerdict::Idle
+            } else {
+                SloVerdict::Healthy
+            };
+            out.push(NetworkSlo {
+                network: network.to_string(),
+                replicas: rows.len(),
+                p95_ms,
+                overload_rate,
+                queue_util,
+                verdict,
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::service::ServiceStats;
+    use crate::coordinator::FleetStats;
+
+    fn row(
+        network: &str,
+        replica: usize,
+        requests: u64,
+        rejected: u64,
+        p95: f64,
+        depth: u64,
+    ) -> ShardStats {
+        ShardStats {
+            network: network.to_string(),
+            replica,
+            queue_depth: depth,
+            queue_cap: 4,
+            rejected,
+            stale: false,
+            service: ServiceStats {
+                requests,
+                errors: 0,
+                batches: 1,
+                mean_latency_ms: p95 / 2.0,
+                p95_latency_ms: p95,
+                throughput_rps: 10.0,
+                parallelism: 1,
+            },
+        }
+    }
+
+    fn snapshot(rows: Vec<ShardStats>) -> ShardedStats {
+        ShardedStats { shards: rows, fleet: FleetStats::default() }
+    }
+
+    fn tracker(window: usize) -> SloTracker {
+        SloTracker::new(SloPolicy {
+            p95_target_ms: 10.0,
+            overload_target: 0.05,
+            idle_queue_util: 0.25,
+            window,
+        })
+    }
+
+    #[test]
+    fn overload_rate_uses_deltas_not_lifetime_counters() {
+        let mut t = tracker(1);
+        // Snapshot 1: 100 admissions, 100 rejections — overloaded history.
+        let s1 = t.observe(&snapshot(vec![row("a", 0, 100, 100, 1.0, 0)]));
+        assert_eq!(s1[0].verdict, SloVerdict::Overloaded);
+        assert!((s1[0].overload_rate - 0.5).abs() < 1e-9);
+        // Snapshot 2: counters unchanged — nothing happened in the window,
+        // so lifetime rejections must NOT keep the network overloaded.
+        let s2 = t.observe(&snapshot(vec![row("a", 0, 100, 100, 1.0, 0)]));
+        assert_eq!(s2[0].overload_rate, 0.0);
+        assert_eq!(s2[0].verdict, SloVerdict::Idle, "window 1 → calm at once");
+    }
+
+    #[test]
+    fn p95_breach_alone_is_overloaded() {
+        let mut t = tracker(2);
+        let s = t.observe(&snapshot(vec![row("a", 0, 10, 0, 99.0, 0)]));
+        assert_eq!(s[0].verdict, SloVerdict::Overloaded);
+        assert_eq!(s[0].overload_rate, 0.0);
+    }
+
+    #[test]
+    fn idle_requires_a_full_calm_window() {
+        let mut t = tracker(3);
+        let calm = || snapshot(vec![row("a", 0, 10, 0, 1.0, 0)]);
+        assert_eq!(t.observe(&calm())[0].verdict, SloVerdict::Healthy);
+        assert_eq!(t.observe(&calm())[0].verdict, SloVerdict::Healthy);
+        // Third calm snapshot fills the window → idle.
+        assert_eq!(t.observe(&calm())[0].verdict, SloVerdict::Idle);
+        // A rejection burst resets the verdict immediately.
+        let busy = snapshot(vec![row("a", 0, 10, 8, 1.0, 4)]);
+        assert_eq!(t.observe(&busy)[0].verdict, SloVerdict::Overloaded);
+    }
+
+    #[test]
+    fn networks_are_grouped_and_sorted() {
+        let mut t = tracker(1);
+        let s = t.observe(&snapshot(vec![
+            row("b", 0, 5, 0, 1.0, 0),
+            row("a", 0, 5, 0, 1.0, 0),
+            row("a", 1, 5, 0, 20.0, 0),
+        ]));
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].network, "a");
+        assert_eq!(s[0].replicas, 2);
+        assert!(s[0].p95_ms > 10.0, "worst replica p95 wins");
+        assert_eq!(s[1].network, "b");
+        assert_eq!(s[1].replicas, 1);
+    }
+
+    #[test]
+    fn counter_dips_do_not_wrap() {
+        let mut t = tracker(1);
+        t.observe(&snapshot(vec![row("a", 0, 100, 2, 1.0, 0)]));
+        // A drained replica took its counters with it: totals dip.
+        let s = t.observe(&snapshot(vec![row("a", 0, 40, 1, 1.0, 0)]));
+        assert_eq!(s[0].overload_rate, 0.0, "dip folds to zero delta, not u64 wrap");
+    }
+
+    #[test]
+    fn summary_mentions_network_and_verdict() {
+        let mut t = tracker(1);
+        let s = t.observe(&snapshot(vec![row("a", 0, 10, 90, 1.0, 4)]));
+        let line = s[0].summary();
+        assert!(line.contains("a:"), "{line}");
+        assert!(line.contains("Overloaded"), "{line}");
+    }
+}

@@ -28,6 +28,10 @@
 //!    quantized CNN onto block allocations, and execute the AOT-compiled JAX/Pallas
 //!    model through PJRT to prove the fixed-point semantics end-to-end
 //!    (PJRT behind the `pjrt` feature; stubbed otherwise).
+//!    [`fleetplan`] closes the loop: the fitted models price serving
+//!    replicas, a capacity planner solves replica counts per platform under
+//!    the utilization cap, and an SLO-driven controller rescales the live
+//!    sharded fleet — with every decision justified by predicted resources.
 //! 8. [`report`] — regenerates every table and figure of the paper's evaluation.
 //!
 //! ## Quickstart
@@ -61,6 +65,7 @@ pub mod platform;
 pub mod allocate;
 pub mod cnn;
 pub mod coordinator;
+pub mod fleetplan;
 pub mod runtime;
 pub mod report;
 pub mod extend;

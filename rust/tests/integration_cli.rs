@@ -133,6 +133,36 @@ fn deploy_plans_lenet() {
 }
 
 #[test]
+fn autoscale_demonstrates_model_driven_scale_up_and_down() {
+    let (ok, stdout, stderr) = convkit(&[
+        "autoscale",
+        "--networks",
+        "tiny_q8",
+        "--min-bits",
+        "6",
+        "--max-bits",
+        "12",
+        "--requests",
+        "64",
+        "--rounds",
+        "2",
+        "--queue-cap",
+        "2",
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("capacity plan"), "{stdout}");
+    assert!(stdout.contains("platform ceiling"), "{stdout}");
+    // A pipelined 64-request burst against a cap-2 replica must overload it
+    // (the worker cannot complete anything inside the coalescing window),
+    // and the controller must answer with a justified, budgeted scale-up.
+    assert!(stdout.contains("scale-up tiny_q8"), "{stdout}");
+    assert!(stdout.contains("predicted fleet util"), "{stdout}");
+    // The idle phase drains at least one replica back down.
+    assert!(stdout.contains("scale-down tiny_q8"), "{stdout}");
+    assert!(stdout.contains("autoscale summary"), "{stdout}");
+}
+
+#[test]
 fn bad_option_value_is_a_usage_error() {
     let (ok, _, stderr) = convkit(&["sweep", "--min-bits", "banana"]);
     assert!(!ok);

@@ -140,6 +140,69 @@ fn try_infer_rejects_at_cap_then_recovers_after_drain() {
 }
 
 #[test]
+fn try_submit_falls_back_across_replicas_in_load_order() {
+    // Replica 0: cap 1. Replica 1: cap 4. Both gated (wedged), so loads are
+    // fully deterministic — completions cannot race the assertions.
+    let (gate0_tx, gate0_rx) = mpsc::channel();
+    let (gate1_tx, gate1_rx) = mpsc::channel();
+    let s0 = Shard::from_service(
+        "net",
+        0,
+        1,
+        InferenceService::start(GatedExecutor { gate: gate0_rx, classes: 1 }, 1),
+    );
+    let s1 = Shard::from_service(
+        "net",
+        1,
+        4,
+        InferenceService::start(GatedExecutor { gate: gate1_rx, classes: 1 }, 1),
+    );
+    let fleet = ShardedService::from_shards(vec![s0, s1]).unwrap();
+    let shards = fleet.shards();
+
+    // t0: tie (0, 0) → replica 0. t1: loads (1, 0) → replica 1.
+    let t0 = fleet.try_submit("net", vec![1]).unwrap();
+    let t1 = fleet.try_submit("net", vec![2]).unwrap();
+    assert_eq!((shards[0].outstanding(), shards[1].outstanding()), (1, 1));
+
+    // t2: tie (1, 1) prefers replica 0 — which is AT ITS CAP. Pre-retry
+    // routing surfaced Overloaded here; now the router's fallback order
+    // carries the request to replica 1, which has room. A redirected probe
+    // is NOT a turned-away request, so no rejection is counted.
+    let t2 = fleet.try_submit("net", vec![3]).unwrap();
+    assert_eq!((shards[0].outstanding(), shards[1].outstanding()), (1, 2));
+    assert_eq!(shards[0].rejected(), 0, "fallback admission is not a rejection");
+    assert_eq!(shards[1].rejected(), 0);
+
+    // Fill replica 1 to its cap through the same fallback path...
+    let t3 = fleet.try_submit("net", vec![4]).unwrap();
+    let t4 = fleet.try_submit("net", vec![5]).unwrap();
+    assert_eq!((shards[0].outstanding(), shards[1].outstanding()), (1, 4));
+
+    // ...and only with EVERY replica at cap does Overloaded surface —
+    // counted exactly once, against the preferred replica.
+    let err = fleet.try_submit("net", vec![6]).unwrap_err();
+    assert!(matches!(err, Error::Overloaded(_)), "got {err}");
+    assert_eq!(shards[0].rejected(), 1, "one turn-away, charged to the preferred replica");
+    assert_eq!(shards[1].rejected(), 0);
+
+    // The direct shard-level path still counts its own rejections.
+    assert!(matches!(shards[0].try_submit(vec![9]), Err(Error::Overloaded(_))));
+    assert_eq!(shards[0].rejected(), 2);
+
+    // Drain everything (one gate token per batch; batch_size is 1).
+    gate0_tx.send(()).unwrap();
+    for _ in 0..4 {
+        gate1_tx.send(()).unwrap();
+    }
+    for t in [t0, t1, t2, t3, t4] {
+        assert_eq!(t.wait().unwrap(), vec![0]);
+    }
+    drop((gate0_tx, gate1_tx));
+    fleet.shutdown();
+}
+
+#[test]
 fn abandoned_ticket_keeps_slot_until_worker_completes() {
     let (fleet, gate) = gated_fleet(1);
     let ticket = fleet.try_submit("gated_net", vec![1]).unwrap();

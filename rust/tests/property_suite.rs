@@ -274,3 +274,72 @@ fn prop_golden_cnn_logits_bounded() {
         },
     );
 }
+
+#[test]
+fn prop_allocations_never_exceed_any_platform_budget_column() {
+    // The Table 5 invariant, generalized: for ANY precision pair, ANY
+    // catalogued platform and ANY utilization cap, both allocators stay
+    // within EVERY resource column of the capped budget — the property the
+    // fleetplan controller's "does one more replica fit" check inherits.
+    use convkit::allocate::{allocate_mix, allocate_single, unit_costs};
+    use convkit::coordinator::dse::DseEngine;
+    use convkit::coordinator::jobs::JobPool;
+    use convkit::models::SelectOptions;
+    use convkit::platform::Platform;
+    use convkit::synthdata::SweepOptions;
+
+    // One registry for the whole property (fitting is the expensive part).
+    let registry = DseEngine {
+        sweep: SweepOptions { min_bits: 6, max_bits: 12, ..Default::default() },
+        select: SelectOptions::default(),
+        pool: JobPool::with_workers(2),
+        cache: None,
+    }
+    .run()
+    .unwrap()
+    .registry;
+    let platforms = Platform::all();
+
+    forall(
+        &Config { cases: 48, ..Default::default() },
+        "allocations respect every budget column",
+        |rng| (rng.range_i64(3, 16), rng.range_i64(3, 16)),
+        shrink_pair(3),
+        |&(d, c)| {
+            let unit = unit_costs(&registry, d as u32, c as u32).map_err(|e| e.to_string())?;
+            // Derive a cap from the pair so shrinking keeps it reproducible:
+            // spread over {0.2, 0.35, 0.5, 0.65, 0.8}.
+            let cap = 0.2 + 0.15 * ((d * 7 + c) % 5) as f64;
+            for platform in &platforms {
+                let budget = platform.capped_budget(cap);
+                let mix = allocate_mix(&unit, platform, cap).map_err(|e| e.to_string())?;
+                let usage = mix.usage(&unit);
+                if !usage.fits_within(&budget) {
+                    return Err(format!(
+                        "mix on {} at cap {cap}: {usage} exceeds {budget}",
+                        platform.name
+                    ));
+                }
+                for (i, u) in unit.iter().enumerate() {
+                    let n = allocate_single(u, platform, cap);
+                    let usage = u.scaled(n);
+                    if !usage.fits_within(&budget) {
+                        return Err(format!(
+                            "single[{i}] on {} at cap {cap}: {usage} exceeds {budget}",
+                            platform.name
+                        ));
+                    }
+                    // Maximality: one more instance must NOT fit (unless the
+                    // block is free, which allocate_single reports as 0).
+                    if n > 0 && u.scaled(n + 1).fits_within(&budget) {
+                        return Err(format!(
+                            "single[{i}] on {} at cap {cap}: {n} is not maximal",
+                            platform.name
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,105 @@
+#!/usr/bin/env python3
+"""Diff two multi-section BENCH_runtime.json baselines (CI perf trajectory).
+
+The bench harness (`rust/src/util/bench.rs::write_json_sections`) merges every
+bench binary into one file shaped
+``{"benches": {SECTION: {"results": [{"name", "mean_ns", ...}]}}}``.
+This script compares a current baseline against the previously archived one
+and emits a per-section markdown table of mean-latency deltas — appended to
+the GitHub job summary by the CI bench job so perf PRs carry their own
+before/after evidence.
+
+Exit code is always 0: the diff is evidence, not a gate (noise on shared CI
+runners would make a hard threshold flaky). Regressions are flagged inline.
+
+Usage: bench_diff.py CURRENT.json PREVIOUS.json [--regress-pct 25]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_sections(path: str) -> dict:
+    """{section: {bench_name: mean_ns}} (empty on missing/old-format files)."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"note: could not read {path}: {e}", file=sys.stderr)
+        return {}
+    out = {}
+    for section, body in doc.get("benches", {}).items():
+        out[section] = {
+            r["name"]: float(r["mean_ns"]) for r in body.get("results", [])
+        }
+    return out
+
+
+def fmt_ns(ns: float) -> str:
+    if ns >= 1e9:
+        return f"{ns / 1e9:.2f} s"
+    if ns >= 1e6:
+        return f"{ns / 1e6:.2f} ms"
+    if ns >= 1e3:
+        return f"{ns / 1e3:.2f} µs"
+    return f"{ns:.0f} ns"
+
+
+def diff(current: dict, previous: dict, regress_pct: float) -> str:
+    lines = ["## Bench baseline diff (mean per iteration)", ""]
+    if not previous:
+        lines.append("_No previous baseline artifact — nothing to diff "
+                     "(first run on this branch?)._")
+        return "\n".join(lines) + "\n"
+    regressions = 0
+    for section in sorted(set(current) | set(previous)):
+        cur = current.get(section, {})
+        prev = previous.get(section, {})
+        lines.append(f"### `{section}`")
+        lines.append("")
+        lines.append("| bench | previous | current | delta |")
+        lines.append("|---|---:|---:|---:|")
+        for name in sorted(set(cur) | set(prev)):
+            c, p = cur.get(name), prev.get(name)
+            if c is None:
+                lines.append(f"| {name} | {fmt_ns(p)} | _removed_ | |")
+            elif p is None:
+                lines.append(f"| {name} | _new_ | {fmt_ns(c)} | |")
+            else:
+                pct = 100.0 * (c - p) / p if p > 0 else 0.0
+                flag = ""
+                if pct >= regress_pct:
+                    flag = " ⚠️ regression?"
+                    regressions += 1
+                elif pct <= -regress_pct:
+                    flag = " 🚀"
+                lines.append(
+                    f"| {name} | {fmt_ns(p)} | {fmt_ns(c)} | {pct:+.1f}%{flag} |"
+                )
+        lines.append("")
+    lines.append(
+        f"_{regressions} section entr{'y' if regressions == 1 else 'ies'} "
+        f"slower by ≥ {regress_pct:.0f}% (advisory — CI runner noise applies)._"
+    )
+    return "\n".join(lines) + "\n"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current")
+    ap.add_argument("previous")
+    ap.add_argument("--regress-pct", type=float, default=25.0,
+                    help="flag entries slower by at least this percentage")
+    args = ap.parse_args()
+    report = diff(
+        load_sections(args.current), load_sections(args.previous), args.regress_pct
+    )
+    print(report)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
