@@ -1,0 +1,102 @@
+//! What-if capacity exploration on a virtual clock — the paper's "explore
+//! without synthesizing" promise, extended to serving capacity.
+//!
+//! Fits the resource models once, then answers three questions no real
+//! executor ever runs for:
+//!
+//! 1. *Which FPGA hosts this two-network fleet, and what can it sustain?*
+//!    (platform selection + max-QPS bisection)
+//! 2. *How does the production autoscaler behave under a burst vs a
+//!    heavy-tail workload?* (same `Autoscaler` code path, virtual time)
+//! 3. *What if the fleet had to split across two devices?* (the planner's
+//!    spill path)
+//!
+//! Run: `cargo run --release --example simulate_whatif`
+
+use convkit::cnn::zoo;
+use convkit::coordinator::dse::DseEngine;
+use convkit::coordinator::jobs::JobPool;
+use convkit::fleetplan::{plan_with_spill, NetworkDemand};
+use convkit::models::SelectOptions;
+use convkit::platform::Platform;
+use convkit::report;
+use convkit::simulate::{explore, Scenario, ScenarioShape, WhatIfOptions};
+use convkit::synthdata::SweepOptions;
+use std::time::Instant;
+
+fn main() -> convkit::Result<()> {
+    println!("=============== virtual-clock what-if explorer ===============\n");
+
+    // Fit the models (the only slow step — everything after is model math).
+    let t0 = Instant::now();
+    let eng = DseEngine {
+        sweep: SweepOptions { min_bits: 6, max_bits: 12, ..Default::default() },
+        select: SelectOptions::default(),
+        pool: JobPool::new(),
+        cache: None,
+    };
+    let rep = eng.run()?;
+    println!("models fitted in {:.2}s\n", t0.elapsed().as_secs_f64());
+
+    let demands = vec![
+        NetworkDemand::new(zoo::lenet_ish()).with_weight(2.0),
+        NetworkDemand::new(zoo::tiny()),
+    ];
+    let opts = WhatIfOptions {
+        min_arrivals: 60_000,
+        probe_arrivals: 2_000,
+        control_interval_ms: 1.0,
+        ..WhatIfOptions::default()
+    };
+
+    // One report per scenario shape: same fleet, same policy, different
+    // traffic — each runs tens of thousands of virtual events in
+    // milliseconds of wall time.
+    for shape in [ScenarioShape::Burst, ScenarioShape::HeavyTail] {
+        let scenario = Scenario::new(shape, Vec::new(), 0.0, 0.0, 42);
+        let t1 = Instant::now();
+        let r = explore(&demands, &rep.registry, &Platform::all(), &scenario, &opts)?;
+        println!("{}", report::capacity_table(&r));
+        println!(
+            "({} virtual events in {:.0} ms wall)\n",
+            r.events,
+            t1.elapsed().as_secs_f64() * 1e3
+        );
+    }
+
+    // The spill path: floors that overflow the smallest device split
+    // across two platforms instead of failing.
+    let kv260 = Platform::kv260();
+    let lenet_ceiling = convkit::fleetplan::plan_fleet(
+        &[NetworkDemand::new(zoo::lenet_ish())],
+        &rep.registry,
+        &kv260,
+        0.8,
+    )?
+    .replicas_for("lenet_q8");
+    let heavy = vec![
+        NetworkDemand::new(zoo::lenet_ish()).with_min_replicas(lenet_ceiling),
+        NetworkDemand::new(zoo::tiny()).with_min_replicas(8),
+    ];
+    match plan_with_spill(&heavy, &rep.registry, &kv260, &Platform::zcu111(), 0.8) {
+        Ok(sp) => match &sp.spill {
+            Some(spill) => {
+                println!("spill study: floors overflow {} alone —", kv260.name);
+                println!(
+                    "  primary {}: {} replica(s), spill {}: {} replica(s)",
+                    sp.primary.platform.name,
+                    sp.primary.total_replicas(),
+                    spill.platform.name,
+                    spill.total_replicas(),
+                );
+            }
+            None => println!(
+                "spill study: {} held every floor after all ({} replicas)",
+                kv260.name,
+                sp.primary.total_replicas()
+            ),
+        },
+        Err(e) => println!("spill study: {e}"),
+    }
+    Ok(())
+}

@@ -12,6 +12,9 @@
 
 use convkit::cnn::zoo;
 use convkit::coordinator::{ShardSpec, ShardedService};
+use convkit::simulate::{
+    simulate_trace, Scenario, ScenarioShape, SimFleet, SimRunOptions, SimServiceModel,
+};
 use convkit::util::bench::Bench;
 use std::path::PathBuf;
 
@@ -95,6 +98,39 @@ fn main() {
         fleet.add_shard(&add_spec).expect("add shard");
         fleet.remove_shard("tiny_q8").expect("remove shard")
     });
+
+    // Virtual-clock simulator throughput: one iteration replays a steady
+    // two-network scenario of ~550k arrivals (≥ 1M virtual events once
+    // completions are counted) through the discrete-event engine — virtual
+    // time is fully decoupled from wall time, so this measures pure
+    // events/sec of the simulation machinery, no executors and no sleeping.
+    let sim_models = [
+        SimServiceModel::new("simnet_a", 0.003, 64, 2),
+        SimServiceModel::new("simnet_b", 0.001, 64, 1),
+    ];
+    let sim_trace = Scenario::new(
+        ScenarioShape::Steady,
+        vec![("simnet_a".to_string(), 2.0), ("simnet_b".to_string(), 1.0)],
+        550_000.0,
+        1_000.0,
+        0x51_AE75,
+    )
+    .arrivals();
+    let mut sim_events = 0u64;
+    b.run("simulate_million_events", || {
+        let mut fleet = SimFleet::new(&sim_models).expect("sim fleet");
+        let run = simulate_trace(&mut fleet, &sim_trace, &mut [], &SimRunOptions::default())
+            .expect("sim run");
+        sim_events = run.events;
+        run.events
+    });
+    if let Some(s) = b.stats("simulate_million_events") {
+        println!(
+            "-> simulator: {} virtual events/iter, {:.2}M events/s wall",
+            sim_events,
+            sim_events as f64 / (s.mean_ns / 1e9) / 1e6
+        );
+    }
 
     if let Some(s) = b.stats("fleet_4clients_x8_concurrent") {
         println!("-> fleet throughput (4 clients): {:.0} req/s", 32.0 * 1e9 / s.mean_ns);

@@ -6,7 +6,7 @@ use convkit::coordinator::dse::{DseEngine, DseReport};
 use convkit::coordinator::jobs::JobPool;
 use convkit::coordinator::service::{GoldenExecutor, InferenceService, PjrtExecutor};
 use convkit::coordinator::{
-    drive_golden_clients, ShardSpec, ShardedService, Ticket, DEFAULT_QUEUE_CAP,
+    drive_golden_clients_traced, ShardSpec, ShardedService, Ticket, DEFAULT_QUEUE_CAP,
 };
 use convkit::extend::{energy_estimate, latency_estimate, PowerModel};
 use convkit::fixedpoint::QFormat;
@@ -17,6 +17,9 @@ use convkit::models::SelectOptions;
 use convkit::platform::Platform;
 use convkit::report;
 use convkit::runtime::{artifacts_dir, Runtime};
+use convkit::simulate::{
+    explore, explore_replay, Scenario, ScenarioShape, Trace, TraceRecorder, WhatIfOptions,
+};
 use convkit::synth::MapOptions;
 use convkit::synthdata::SweepOptions;
 use convkit::util::args::ParsedArgs;
@@ -46,9 +49,14 @@ COMMANDS:
   serve      run the batched inference service   [--network NAME --requests N
               --batch N --golden-only]
   fleet      sharded multi-network serving       [--networks A,B --replicas N
-              --requests N --batch N --queue-cap N]
+              --requests N --batch N --queue-cap N --record FILE]
   autoscale  model-driven fleet autoscaler       [--networks A,B --platform P
-              --target 0.X --requests N --rounds N --queue-cap N --batch N]
+              --target 0.X --requests N --rounds N --queue-cap N --batch N
+              --latency-slo]
+  simulate   virtual-clock what-if explorer      [--scenario steady|diurnal|
+              burst|heavytail --seed N --networks A,B --platform P|auto
+              --target 0.X --qps N --duration-ms N --events N --queue-cap N
+              --control-ms N --replay FILE --out FILE --no-latency-slo]
   tables     regenerate paper tables             [N | all] [--french]
   figures    regenerate Figures 1-3              [N | all] [--csv]
   blocks     list block characteristics (Table 2)
@@ -73,6 +81,7 @@ pub fn dispatch(args: &ParsedArgs) -> Result<()> {
         Some("serve") => cmd_serve(args),
         Some("fleet") => cmd_fleet(args),
         Some("autoscale") => cmd_autoscale(args),
+        Some("simulate") => cmd_simulate(args),
         Some("tables") => cmd_tables(args),
         Some("figures") => cmd_figures(args),
         Some("blocks") => {
@@ -124,6 +133,19 @@ fn engine_from(args: &ParsedArgs) -> Result<DseEngine> {
 
 fn run_report(args: &ParsedArgs) -> Result<DseReport> {
     engine_from(args)?.run()
+}
+
+/// Resolve zoo networks by name, failing fast on the first typo.
+fn zoo_specs_from(names: &[String]) -> Result<Vec<NetworkSpec>> {
+    names
+        .iter()
+        .map(|name| {
+            zoo::all()
+                .into_iter()
+                .find(|n| &n.name == name)
+                .ok_or_else(|| Error::Usage(format!("unknown network `{name}`")))
+        })
+        .collect()
 }
 
 fn platform_from(args: &ParsedArgs) -> Result<Platform> {
@@ -352,15 +374,7 @@ fn cmd_fleet(args: &ParsedArgs) -> Result<()> {
     let n_req = args.get_u64("requests", 64)? as usize;
 
     // Resolve the zoo entries up front so typos fail before threads start.
-    let zoo_specs: Vec<NetworkSpec> = names
-        .iter()
-        .map(|name| {
-            zoo::all()
-                .into_iter()
-                .find(|n| &n.name == name)
-                .ok_or_else(|| Error::Usage(format!("unknown network `{name}`")))
-        })
-        .collect::<Result<Vec<_>>>()?;
+    let zoo_specs = zoo_specs_from(&names)?;
 
     let shard_specs: Vec<ShardSpec> = names
         .iter()
@@ -383,9 +397,30 @@ fn cmd_fleet(args: &ParsedArgs) -> Result<()> {
     // fires when requests outnumber it); every reply is cross-checked
     // against a direct golden inference — all conv blocks compute the same
     // function, so the check is bit-exact whatever block the shards run.
+    // With --record, every offered request is captured into a trace the
+    // `simulate` subcommand can replay against the model-predicted fleet.
+    let record = args.get("record").map(PathBuf::from);
+    let recorder = record.as_ref().map(|_| TraceRecorder::new());
     let t0 = Instant::now();
-    let mismatch_total = drive_golden_clients(&fleet, &zoo_specs, n_req, BlockKind::Conv2)?;
+    let mismatch_total = drive_golden_clients_traced(
+        &fleet,
+        &zoo_specs,
+        n_req,
+        BlockKind::Conv2,
+        recorder.as_ref(),
+    )?;
     let wall = t0.elapsed().as_secs_f64();
+    if let (Some(path), Some(rec)) = (record, recorder) {
+        let trace = rec.into_trace();
+        trace.save(&path)?;
+        println!(
+            "recorded {} arrivals over {:.1} ms to {} (replay: convkit simulate --replay {})",
+            trace.len(),
+            trace.duration_ms(),
+            path.display(),
+            path.display()
+        );
+    }
     let total_req = n_req * names.len();
     println!(
         "\nserved {total_req} requests across {} network(s) in {wall:.2}s ({:.1} req/s wall)",
@@ -489,15 +524,7 @@ fn cmd_autoscale(args: &ParsedArgs) -> Result<()> {
     let n_req = args.get_u64("requests", 192)?.max(1) as usize;
     let rounds = args.get_u64("rounds", 3)?.max(1) as usize;
 
-    let zoo_specs: Vec<NetworkSpec> = names
-        .iter()
-        .map(|name| {
-            zoo::all()
-                .into_iter()
-                .find(|n| &n.name == name)
-                .ok_or_else(|| Error::Usage(format!("unknown network `{name}`")))
-        })
-        .collect::<Result<Vec<_>>>()?;
+    let zoo_specs = zoo_specs_from(&names)?;
 
     // -- the paper side: fit models, price replicas, solve the plan --------
     let rep = run_report(args)?;
@@ -511,8 +538,8 @@ fn cmd_autoscale(args: &ParsedArgs) -> Result<()> {
     );
     for n in &plan.networks {
         println!(
-            "  {:<12} one replica costs {}  -> platform ceiling {} replicas",
-            n.network, n.unit, n.replicas
+            "  {:<12} one replica costs {} ({:.4} ms predicted service)  -> platform ceiling {} replicas",
+            n.network, n.unit, n.predicted_ms, n.replicas
         );
     }
     println!(
@@ -538,8 +565,17 @@ fn cmd_autoscale(args: &ParsedArgs) -> Result<()> {
     )?;
     let policy = SloPolicy { window: 2, ..SloPolicy::default() };
     let idle_rounds = policy.window + 1;
-    let mut scaler =
-        Autoscaler::new(plan, policy, names.iter().map(|n| template(n)).collect());
+    // --latency-slo judges p95 against the model-predicted service latency
+    // × the policy ratio instead of the absolute constant (golden-backed
+    // software latencies dwarf predicted-hardware ones, so this is opt-in
+    // here; the simulator — whose latencies ARE the predictions — defaults
+    // to it).
+    let templates: Vec<ShardSpec> = names.iter().map(|n| template(n)).collect();
+    let mut scaler = if args.flag("latency-slo") {
+        Autoscaler::with_latency_slo(plan, policy, templates)
+    } else {
+        Autoscaler::new(plan, policy, templates)
+    };
     println!(
         "\nfleet up: {} network(s) × 1 replica, queue cap {queue_cap} — spiking {} with {} pipelined requests/round",
         names.len(),
@@ -595,6 +631,86 @@ fn cmd_autoscale(args: &ParsedArgs) -> Result<()> {
     );
     println!("autoscale summary: {scale_ups} scale-up(s), {scale_downs} drain-based scale-down(s)");
     fleet.shutdown();
+    Ok(())
+}
+
+fn cmd_simulate(args: &ParsedArgs) -> Result<()> {
+    let names = {
+        let list = args.get_list("networks");
+        if list.is_empty() {
+            vec!["lenet_q8".to_string(), "tiny_q8".to_string()]
+        } else {
+            list
+        }
+    };
+    let shape_name = args.get_str("scenario", "burst");
+    let shape = ScenarioShape::parse(&shape_name)
+        .ok_or_else(|| Error::Usage(format!("unknown scenario `{shape_name}`")))?;
+    let seed = args.get_u64("seed", 42)?;
+    let zoo_specs = zoo_specs_from(&names)?;
+    let demands: Vec<NetworkDemand> =
+        zoo_specs.iter().map(|s| NetworkDemand::new(s.clone())).collect();
+    let plat_arg = args.get_str("platform", "auto");
+    let platforms: Vec<Platform> = if plat_arg.eq_ignore_ascii_case("auto") {
+        Platform::all()
+    } else {
+        vec![platform_from(args)?]
+    };
+
+    // The paper side: fitted models price every replica and service rate.
+    let rep = run_report(args)?;
+    let defaults = WhatIfOptions::default();
+    let opts = WhatIfOptions {
+        cap: args.get_f64("target", defaults.cap)?,
+        queue_cap: args.get_u64("queue-cap", defaults.queue_cap as u64)?.max(1) as usize,
+        control_interval_ms: args.get_f64("control-ms", defaults.control_interval_ms)?,
+        min_arrivals: args.get_u64("events", defaults.min_arrivals)?.max(1),
+        latency_slo: !args.flag("no-latency-slo"),
+        ..defaults
+    };
+
+    // --events is the auto-sizing floor: an explicit --duration-ms pins the
+    // virtual window instead, so say so rather than silently dropping it.
+    if args.get("events").is_some() && args.get("duration-ms").is_some() {
+        eprintln!(
+            "note: --duration-ms is set, so the --events arrival floor is ignored \
+             (arrivals = qps × duration)"
+        );
+    }
+
+    let t0 = Instant::now();
+    let report = if let Some(replay) = args.get("replay") {
+        let trace = Trace::load(std::path::Path::new(replay))?;
+        println!(
+            "replaying {} recorded arrivals ({:.1} ms of traffic) from {replay}\n",
+            trace.len(),
+            trace.duration_ms()
+        );
+        explore_replay(&demands, &rep.registry, &platforms, &trace, seed, &opts)?
+    } else {
+        // qps/duration 0 = auto-size: overload the floors, generate at
+        // least --events arrivals (≥ 1M virtual events by default).
+        let scenario = Scenario::new(
+            shape,
+            Vec::new(),
+            args.get_f64("qps", 0.0)?,
+            args.get_f64("duration-ms", 0.0)?,
+            seed,
+        );
+        explore(&demands, &rep.registry, &platforms, &scenario, &opts)?
+    };
+    let wall = t0.elapsed().as_secs_f64();
+    println!("{}", report::capacity_table(&report));
+    println!(
+        "simulated {} virtual events ({:.1} virtual ms) in {wall:.2}s wall — {:.0} events/s, no executors",
+        report.events,
+        report.virtual_ms,
+        report.events as f64 / wall.max(1e-9)
+    );
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, report.to_json())?;
+        println!("capacity report written to {out}");
+    }
     Ok(())
 }
 

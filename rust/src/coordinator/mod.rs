@@ -38,6 +38,7 @@ pub use dse::{DseEngine, DseReport};
 pub use jobs::JobPool;
 pub use router::Router;
 pub use shard::{
-    drive_golden_clients, FleetStats, Shard, ShardBackend, ShardSpec, ShardedService,
-    ShardedStats, ShardStats, Ticket, DEFAULT_QUEUE_CAP, DEFAULT_STATS_TIMEOUT,
+    drive_golden_clients, drive_golden_clients_traced, FleetStats, Shard, ShardBackend,
+    ShardSpec, ShardedService, ShardedStats, ShardStats, Ticket, DEFAULT_QUEUE_CAP,
+    DEFAULT_STATS_TIMEOUT,
 };

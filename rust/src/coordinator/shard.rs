@@ -402,8 +402,9 @@ pub struct ShardedStats {
     pub fleet: FleetStats,
 }
 
-/// Roll per-shard rows up into a fleet aggregate.
-fn aggregate(shards: &[ShardStats]) -> FleetStats {
+/// Roll per-shard rows up into a fleet aggregate (shared with the
+/// virtual-clock simulator, whose synthetic rows aggregate identically).
+pub fn aggregate(shards: &[ShardStats]) -> FleetStats {
     let mut fleet = FleetStats::default();
     let mut weighted_mean = 0.0;
     let mut success_weight = 0u64;
@@ -700,6 +701,23 @@ pub fn drive_golden_clients(
     requests_per_network: usize,
     block: BlockKind,
 ) -> Result<usize> {
+    drive_golden_clients_traced(fleet, specs, requests_per_network, block, None)
+}
+
+/// [`drive_golden_clients`] with an optional arrival recorder: every
+/// *offered* request (including ones the bounded admission pushes back on)
+/// is noted with a wall-clock-relative timestamp, producing a
+/// [`crate::simulate::TraceRecorder`] trace that the virtual-clock
+/// simulator replays against the model-predicted fleet — live runs become
+/// reproducible what-if inputs (`convkit fleet --record` →
+/// `convkit simulate --replay`).
+pub fn drive_golden_clients_traced(
+    fleet: &ShardedService,
+    specs: &[NetworkSpec],
+    requests_per_network: usize,
+    block: BlockKind,
+    recorder: Option<&crate::simulate::TraceRecorder>,
+) -> Result<usize> {
     std::thread::scope(|scope| -> Result<usize> {
         let handles: Vec<_> = specs
             .iter()
@@ -728,6 +746,9 @@ pub fn drive_golden_clients(
                     let mut mismatches = 0usize;
                     for img in spec.synthetic_images(requests_per_network, 0xF1EE7 ^ spec.seed)
                     {
+                        if let Some(rec) = recorder {
+                            rec.note(&spec.name);
+                        }
                         let img32: Vec<i32> = img.iter().map(|&v| v as i32).collect();
                         let ticket = loop {
                             match fleet.try_submit(&spec.name, img32.clone()) {

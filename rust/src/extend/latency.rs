@@ -1,8 +1,8 @@
 //! Latency / throughput estimation for a block-based deployment.
 
 use crate::blocks::BlockKind;
-use crate::cnn::NetworkSpec;
-use crate::util::error::Result;
+use crate::cnn::{DeploymentPlan, NetworkSpec};
+use crate::util::error::{Error, Result};
 
 /// Latency estimate for one network on one block kind.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -17,6 +17,19 @@ pub struct LatencyEstimate {
     pub fps_folded: f64,
 }
 
+impl LatencyEstimate {
+    /// Milliseconds per inference, fully parallel (the model-predicted
+    /// *service time* the SLO tracker and the traffic simulator consume).
+    pub fn ms_parallel(&self) -> f64 {
+        1e3 / self.fps_parallel
+    }
+
+    /// Milliseconds per inference, folded.
+    pub fn ms_folded(&self) -> f64 {
+        1e3 / self.fps_folded
+    }
+}
+
 /// Achievable fabric clock per block kind (MHz, typical UltraScale+ -2 speed
 /// grade) — a registry delegate: DSP-datapath blocks close timing near the
 /// DSP48E2 f_max region; the Conv1 carry-chain datapath is fabric-limited.
@@ -24,19 +37,29 @@ pub fn clock_mhz(kind: BlockKind) -> f64 {
     kind.block().clock_mhz()
 }
 
-/// Estimate inference latency of `net` mapped onto `kind` blocks.
+/// Shared cycle model: per-layer block kinds supplied by `kind_of`, the
+/// whole pipeline clocked at the slowest chosen block (one fabric clock
+/// domain).
 ///
 /// Parallel mapping: one lane per kernel — a layer takes
 /// `windows × II / lanes_per_window_stream` cycles (window streams run
 /// concurrently per kernel, so the layer time is the per-window II times the
 /// output pixel count). Folded mapping: one block re-used for every kernel.
-pub fn latency_estimate(net: &NetworkSpec, kind: BlockKind) -> Result<LatencyEstimate> {
+fn estimate_with<F>(net: &NetworkSpec, kind_of: F) -> Result<LatencyEstimate>
+where
+    F: Fn(usize) -> BlockKind,
+{
     net.validate()?;
+    if net.layers.is_empty() {
+        return Err(Error::InvalidConfig(format!("{}: network has no layers", net.name)));
+    }
     let mut cyc_par = 0u64;
     let mut cyc_fold = 0u64;
+    let mut clock = f64::INFINITY;
     let mut h = net.in_h as u64;
     let mut w = net.in_w as u64;
-    for layer in &net.layers {
+    for (li, layer) in net.layers.iter().enumerate() {
+        let kind = kind_of(li);
         let ii = kind.initiation_interval(layer.coeff_bits);
         let lanes = kind.convolutions_per_block();
         let (nh, nw) = (h - 2, w - 2);
@@ -47,16 +70,38 @@ pub fn latency_estimate(net: &NetworkSpec, kind: BlockKind) -> Result<LatencyEst
         cyc_par += windows * ii / lanes + ii; // + pipeline fill
         // Folded: one block instance does kernels × windows MAC groups.
         cyc_fold += kernels.div_ceil(lanes) * windows * ii + ii;
+        clock = clock.min(clock_mhz(kind));
         h = nh;
         w = nw;
     }
-    let f = clock_mhz(kind) * 1e6;
+    let f = clock * 1e6;
     Ok(LatencyEstimate {
         cycles_parallel: cyc_par,
         cycles_folded: cyc_fold,
         fps_parallel: f / cyc_par as f64,
         fps_folded: f / cyc_fold as f64,
     })
+}
+
+/// Estimate inference latency of `net` mapped uniformly onto `kind` blocks.
+pub fn latency_estimate(net: &NetworkSpec, kind: BlockKind) -> Result<LatencyEstimate> {
+    estimate_with(net, |_| kind)
+}
+
+/// Estimate inference latency of `net` mapped per the *deployment plan's
+/// block mix* — each layer uses its planner-chosen block kind. This is the
+/// per-replica service rate the capacity planner and the traffic simulator
+/// work from: no synthesis, no wall clock, models only.
+pub fn deployment_latency(net: &NetworkSpec, plan: &DeploymentPlan) -> Result<LatencyEstimate> {
+    if net.layers.len() != plan.layers.len() {
+        return Err(Error::InvalidConfig(format!(
+            "{}: deployment plan covers {} layers, network has {}",
+            net.name,
+            plan.layers.len(),
+            net.layers.len()
+        )));
+    }
+    estimate_with(net, |li| plan.layers[li].block)
 }
 
 #[cfg(test)]

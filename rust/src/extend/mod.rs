@@ -14,4 +14,4 @@ pub mod energy;
 pub mod ablation;
 
 pub use energy::{energy_estimate, EnergyEstimate, PowerModel};
-pub use latency::{latency_estimate, LatencyEstimate};
+pub use latency::{deployment_latency, latency_estimate, LatencyEstimate};

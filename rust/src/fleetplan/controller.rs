@@ -1,10 +1,13 @@
-//! The autoscale controller: SLO state × capacity plan → live reconfiguration.
+//! The autoscale controller: SLO state × capacity plan → reconfiguration.
 //!
 //! [`Autoscaler::decide`] is a *pure* policy step — fleet snapshot in,
 //! [`ScaleDecision`]s out — so every scaling rule is unit-testable without a
-//! thread in sight. [`Autoscaler::apply`] (and the convenience
-//! [`Autoscaler::step`]) then executes decisions against a live
-//! [`ShardedService`] via `add_shard` / drain-based `remove_shard`.
+//! thread in sight. Actuation goes through the [`ScaleTarget`] trait: a
+//! pluggable stats source + clock + scale actuator, so the SAME policy code
+//! path drives a live [`ShardedService`] (via the [`LiveFleet`] adapter,
+//! wall clock, real `add_shard`/drain-based `remove_shard`) and the
+//! virtual-clock traffic simulator (`crate::simulate::SimFleet`, virtual
+//! time, model-predicted service rates) — never a fork of the policy.
 //!
 //! Every decision is justified by the fitted models: a scale-up is emitted
 //! only when the *predicted* fleet footprint with one more replica —
@@ -20,6 +23,65 @@ use crate::synth::ResourceVector;
 use crate::util::error::{Error, Result};
 use std::collections::BTreeMap;
 use std::fmt;
+use std::time::Instant;
+
+/// Anything the autoscaler can observe and reconfigure: a pluggable stats
+/// source, clock, and scale actuator. Implemented by [`LiveFleet`] (real
+/// shards, wall clock) and by the discrete-event simulator's
+/// `crate::simulate::SimFleet` (virtual queues, virtual clock), so one
+/// policy code path serves both — the simulator is a rehearsal of exactly
+/// the controller that runs in production.
+pub trait ScaleTarget {
+    /// Snapshot the fleet's per-shard statistics.
+    fn observe(&mut self) -> ShardedStats;
+
+    /// Add one replica built from `template` (its `replicas` field is 1).
+    fn scale_up(&mut self, template: &ShardSpec) -> Result<()>;
+
+    /// Drain and remove one replica of `network`.
+    fn scale_down(&mut self, network: &str) -> Result<()>;
+
+    /// The target's clock (milliseconds; wall time for a live fleet,
+    /// virtual time inside a simulation) — stamped onto every decision.
+    fn now_ms(&self) -> f64;
+}
+
+/// [`ScaleTarget`] adapter over a live [`ShardedService`].
+pub struct LiveFleet<'a> {
+    fleet: &'a ShardedService,
+    epoch: Instant,
+}
+
+/// One wall-clock epoch shared by every [`LiveFleet`] in the process, so
+/// decisions stamped across successive `step` calls (each of which builds a
+/// fresh adapter) stay on one comparable timeline.
+static LIVE_EPOCH: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+
+impl<'a> LiveFleet<'a> {
+    /// Adapter over `fleet`; `now_ms` counts from the first adapter ever
+    /// created in this process (a shared monotonic epoch).
+    pub fn new(fleet: &'a ShardedService) -> LiveFleet<'a> {
+        LiveFleet { fleet, epoch: *LIVE_EPOCH.get_or_init(Instant::now) }
+    }
+}
+
+impl ScaleTarget for LiveFleet<'_> {
+    fn observe(&mut self) -> ShardedStats {
+        self.fleet.stats()
+    }
+
+    fn scale_up(&mut self, template: &ShardSpec) -> Result<()> {
+        self.fleet.add_shard(template).map(|_| ())
+    }
+
+    fn scale_down(&mut self, network: &str) -> Result<()> {
+        self.fleet.remove_shard(network).map(|_| ())
+    }
+
+    fn now_ms(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64() * 1e3
+    }
+}
 
 /// Direction of a reconfiguration.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -49,6 +111,10 @@ pub struct ScaleDecision {
     pub utilization_after: [f64; 5],
     /// Human-readable trigger (SLO numbers that motivated the step).
     pub reason: String,
+    /// When the decision was taken, per the target's clock (ms; wall time
+    /// live, virtual time in a simulation). Stamped by
+    /// [`Autoscaler::step_target`]; 0 for bare [`Autoscaler::decide`] calls.
+    pub at_ms: f64,
 }
 
 impl fmt::Display for ScaleDecision {
@@ -87,6 +153,28 @@ impl Autoscaler {
         let templates =
             templates.into_iter().map(|t| (t.network.clone(), t)).collect();
         Autoscaler { plan, tracker: SloTracker::new(policy), templates }
+    }
+
+    /// [`Autoscaler::new`] with the latency-aware SLO: each planned
+    /// network's p95 objective becomes its model-predicted service latency
+    /// (`NetworkPlan::predicted_ms`) × `policy.p95_ratio` — the scale
+    /// signal fires on the predicted-vs-observed ratio rather than an
+    /// absolute constant (ROADMAP: "marry extend/latency into the SLO
+    /// tracker").
+    pub fn with_latency_slo(
+        plan: FleetPlan,
+        policy: SloPolicy,
+        templates: Vec<ShardSpec>,
+    ) -> Autoscaler {
+        let predicted: BTreeMap<String, f64> = plan
+            .networks
+            .iter()
+            .filter(|n| n.predicted_ms > 0.0)
+            .map(|n| (n.network.clone(), n.predicted_ms))
+            .collect();
+        let templates =
+            templates.into_iter().map(|t| (t.network.clone(), t)).collect();
+        Autoscaler { plan, tracker: SloTracker::with_predicted(policy, predicted), templates }
     }
 
     /// The capacity plan decisions are judged against.
@@ -165,7 +253,7 @@ impl Autoscaler {
                 100.0 * slo.overload_rate,
                 slo.p95_ms,
                 100.0 * self.tracker.policy().overload_target,
-                self.tracker.policy().p95_target_ms,
+                slo.p95_target_ms,
             ),
             ScaleAction::Down => format!(
                 "idle for a full window (overload 0.0%, queue {:.1}%)",
@@ -181,11 +269,17 @@ impl Autoscaler {
             predicted_total,
             utilization_after: self.plan.platform.utilization(&predicted_total),
             reason,
+            at_ms: 0.0,
         }
     }
 
-    /// Execute one decision against a live fleet.
-    pub fn apply(&self, fleet: &ShardedService, decision: &ScaleDecision) -> Result<()> {
+    /// Execute one decision against any [`ScaleTarget`] — the single
+    /// actuation path shared by the live fleet and the simulator.
+    pub fn apply_to<T: ScaleTarget + ?Sized>(
+        &self,
+        target: &mut T,
+        decision: &ScaleDecision,
+    ) -> Result<()> {
         match decision.action {
             ScaleAction::Up => {
                 let template = self.templates.get(&decision.network).ok_or_else(|| {
@@ -195,23 +289,38 @@ impl Autoscaler {
                     ))
                 })?;
                 let spec = ShardSpec { replicas: 1, ..template.clone() };
-                fleet.add_shard(&spec)?;
+                target.scale_up(&spec)
             }
-            ScaleAction::Down => {
-                fleet.remove_shard(&decision.network)?;
-            }
+            ScaleAction::Down => target.scale_down(&decision.network),
         }
-        Ok(())
     }
 
-    /// One full control round: snapshot → decide → apply every decision.
-    pub fn step(&mut self, fleet: &ShardedService) -> Result<Vec<ScaleDecision>> {
-        let stats = fleet.stats();
-        let decisions = self.decide(&stats);
-        for d in &decisions {
-            self.apply(fleet, d)?;
+    /// Execute one decision against a live fleet.
+    pub fn apply(&self, fleet: &ShardedService, decision: &ScaleDecision) -> Result<()> {
+        self.apply_to(&mut LiveFleet::new(fleet), decision)
+    }
+
+    /// One full control round against any [`ScaleTarget`]: observe → decide
+    /// → apply every decision, each stamped with the target's clock. This is
+    /// THE control loop — live autoscaling and the what-if simulator both
+    /// call it; neither has a private copy of the policy.
+    pub fn step_target<T: ScaleTarget + ?Sized>(
+        &mut self,
+        target: &mut T,
+    ) -> Result<Vec<ScaleDecision>> {
+        let stats = target.observe();
+        let mut decisions = self.decide(&stats);
+        let now = target.now_ms();
+        for d in decisions.iter_mut() {
+            d.at_ms = now;
+            self.apply_to(target, d)?;
         }
         Ok(decisions)
+    }
+
+    /// One full control round against a live fleet (wall-clock adapter).
+    pub fn step(&mut self, fleet: &ShardedService) -> Result<Vec<ScaleDecision>> {
+        self.step_target(&mut LiveFleet::new(fleet))
     }
 }
 
@@ -234,6 +343,7 @@ mod tests {
             networks: vec![NetworkPlan {
                 network: "a".into(),
                 unit,
+                predicted_ms: 1.0,
                 replicas: 13,
                 min_replicas: 1,
                 max_replicas: 0,
@@ -247,6 +357,7 @@ mod tests {
     fn policy() -> SloPolicy {
         SloPolicy {
             p95_target_ms: 10.0,
+            p95_ratio: 4.0,
             overload_target: 0.05,
             idle_queue_util: 0.25,
             window: 1,
@@ -323,6 +434,7 @@ mod tests {
         let net = |name: &str| NetworkPlan {
             network: name.into(),
             unit,
+            predicted_ms: 1.0,
             replicas: 6,
             min_replicas: 1,
             max_replicas: 0,
@@ -378,6 +490,7 @@ mod tests {
             predicted_total: ResourceVector::default(),
             utilization_after: [0.0; 5],
             reason: "test".into(),
+            at_ms: 0.0,
         };
         let fleet = crate::coordinator::ShardedService::start(&[
             crate::coordinator::ShardSpec::golden("tiny_q8"),

@@ -35,13 +35,25 @@
 //! Surfaces: `convkit autoscale` (synthetic spike → justified scale-up →
 //! idle → drained scale-down), the e2e pipeline's autoscale stage, and the
 //! `runtime_serve` bench's reconfiguration-cost section.
+//!
+//! Since the `simulate/` subsystem landed, the controller actuates through
+//! the pluggable [`ScaleTarget`] trait (stats source + clock + actuator):
+//! [`LiveFleet`] adapts a real [`crate::coordinator::ShardedService`], and
+//! the virtual-clock simulator's `SimFleet` implements the same trait — so
+//! scaling policies are rehearsed in milliseconds of wall time before they
+//! ever touch live traffic, through the *identical* code path. The SLO
+//! tracker is latency-aware: [`SloTracker::with_predicted`] judges each
+//! network against its model-predicted service latency × a ratio instead of
+//! an absolute constant, and [`plan_with_spill`] splits a fleet across two
+//! devices when one cannot hold every replica floor.
 
 pub mod controller;
 pub mod planner;
 pub mod slo;
 
-pub use controller::{Autoscaler, ScaleAction, ScaleDecision};
+pub use controller::{Autoscaler, LiveFleet, ScaleAction, ScaleDecision, ScaleTarget};
 pub use planner::{
-    plan_fleet, plan_platforms, select_platform, FleetPlan, NetworkDemand, NetworkPlan,
+    plan_fleet, plan_platforms, plan_with_spill, select_platform, select_platform_or_spill,
+    FleetPlan, NetworkDemand, NetworkPlan, SpillPlan,
 };
 pub use slo::{NetworkSlo, SloPolicy, SloTracker, SloVerdict};

@@ -66,6 +66,11 @@ pub struct NetworkPlan {
     pub network: String,
     /// Model-predicted footprint of ONE replica (per-layer block mix).
     pub unit: ResourceVector,
+    /// Model-predicted service latency of ONE replica (ms per inference,
+    /// fully-parallel mapping of the plan's block mix at the mix's slowest
+    /// clock) — the latency-aware SLO target and the simulator's service
+    /// rate both derive from this.
+    pub predicted_ms: f64,
     /// Replicas the platform supports for this network at the solved fill
     /// (the autoscaler's ceiling when the demand sets none of its own).
     pub replicas: u64,
@@ -149,9 +154,12 @@ pub fn plan_fleet(
     let mut networks: Vec<NetworkPlan> = Vec::with_capacity(demands.len());
     for d in demands {
         let deployment = plan_deployment(&d.spec, registry, platform, cap)?;
+        let predicted_ms =
+            crate::extend::latency::deployment_latency(&d.spec, &deployment)?.ms_parallel();
         networks.push(NetworkPlan {
             network: d.spec.name.clone(),
             unit: deployment.total,
+            predicted_ms,
             replicas: 0,
             min_replicas: d.min_replicas.max(1),
             max_replicas: d.max_replicas,
@@ -240,6 +248,138 @@ pub fn select_platform(
     }
     Err(Error::Infeasible(format!(
         "no candidate platform fits the demanded fleet at {:.0}%",
+        100.0 * cap
+    )))
+}
+
+/// A fleet split across at most two devices: the primary plan, plus the
+/// replicas that had to *spill* onto a second platform when the primary
+/// could not hold every network's floor.
+#[derive(Debug, Clone)]
+pub struct SpillPlan {
+    /// The plan on the primary (preferred) platform.
+    pub primary: FleetPlan,
+    /// The overflow plan on the spill platform (`None` when everything fit
+    /// on the primary).
+    pub spill: Option<FleetPlan>,
+}
+
+impl SpillPlan {
+    /// Every per-network row, primary first, then spill.
+    pub fn networks(&self) -> Vec<&NetworkPlan> {
+        let mut out: Vec<&NetworkPlan> = self.primary.networks.iter().collect();
+        if let Some(s) = &self.spill {
+            out.extend(s.networks.iter());
+        }
+        out
+    }
+
+    /// Solved replicas for one network across both devices.
+    pub fn replicas_for(&self, network: &str) -> u64 {
+        self.primary.replicas_for(network)
+            + self.spill.as_ref().map(|s| s.replicas_for(network)).unwrap_or(0)
+    }
+
+    /// Total replicas across both devices.
+    pub fn total_replicas(&self) -> u64 {
+        self.primary.total_replicas()
+            + self.spill.as_ref().map(FleetPlan::total_replicas).unwrap_or(0)
+    }
+}
+
+/// Plan `demands` on `primary`, spilling whole networks onto `spill` when
+/// the primary cannot hold every floor — a two-platform split instead of an
+/// `Infeasible` error.
+///
+/// The partition is deterministic first-fit-decreasing over the *priced
+/// floors*: each demand's floor footprint (unit × `min_replicas`, priced on
+/// the primary) is packed biggest-LLUT-first onto the primary's capped
+/// budget; whatever does not fit — including networks the primary cannot
+/// price at all (a layer too big for the device) — goes to the spill
+/// platform. Both sub-fleets are then solved independently with
+/// [`plan_fleet`], so each device's fill still saturates its own budget.
+pub fn plan_with_spill(
+    demands: &[NetworkDemand],
+    registry: &ModelRegistry,
+    primary: &Platform,
+    spill: &Platform,
+    cap: f64,
+) -> Result<SpillPlan> {
+    if let Ok(plan) = plan_fleet(demands, registry, primary, cap) {
+        return Ok(SpillPlan { primary: plan, spill: None });
+    }
+    // Price every demand's floor on the primary; unpriceable demands are
+    // forced spillers.
+    let budget = primary.capped_budget(cap);
+    let mut priced: Vec<(usize, ResourceVector)> = Vec::new();
+    let mut forced: Vec<usize> = Vec::new();
+    for (i, d) in demands.iter().enumerate() {
+        match plan_deployment(&d.spec, registry, primary, cap) {
+            Ok(dep) => priced.push((i, dep.total.scaled(d.min_replicas.max(1)))),
+            Err(_) => forced.push(i),
+        }
+    }
+    // First-fit-decreasing by LLUT (DSP tie-break, demand index last so the
+    // partition is fully deterministic).
+    priced.sort_by_key(|(i, fp)| (std::cmp::Reverse((fp.llut, fp.dsp)), *i));
+    let mut on_primary: Vec<usize> = Vec::new();
+    let mut spilled: Vec<usize> = forced;
+    let mut packed = ResourceVector::default();
+    for (i, fp) in priced {
+        if (packed + fp).fits_within(&budget) {
+            packed += fp;
+            on_primary.push(i);
+        } else {
+            spilled.push(i);
+        }
+    }
+    if on_primary.is_empty() || spilled.is_empty() {
+        return Err(Error::Infeasible(format!(
+            "demands do not split across {} + {} at {:.0}% (floors fit {} platform(s))",
+            primary.name,
+            spill.name,
+            100.0 * cap,
+            if spilled.is_empty() { "one — use plan_fleet" } else { "neither" },
+        )));
+    }
+    on_primary.sort_unstable();
+    spilled.sort_unstable();
+    let pick = |idx: &[usize]| -> Vec<NetworkDemand> {
+        idx.iter().map(|&i| demands[i].clone()).collect()
+    };
+    let primary_plan = plan_fleet(&pick(&on_primary), registry, primary, cap)?;
+    let spill_plan = plan_fleet(&pick(&spilled), registry, spill, cap)?;
+    Ok(SpillPlan { primary: primary_plan, spill: Some(spill_plan) })
+}
+
+/// [`select_platform`] with a spill fallback: if no single catalog device
+/// fits the fleet, try two-device splits — primary candidates smallest-first
+/// (same ranking as [`select_platform`]), each paired with the largest
+/// remaining device as the spill target — and return the first feasible
+/// [`SpillPlan`].
+pub fn select_platform_or_spill(
+    demands: &[NetworkDemand],
+    registry: &ModelRegistry,
+    platforms: &[Platform],
+    cap: f64,
+) -> Result<SpillPlan> {
+    if let Ok((_, plan)) = select_platform(demands, registry, platforms, cap) {
+        return Ok(SpillPlan { primary: plan, spill: None });
+    }
+    let mut candidates: Vec<Platform> = platforms.to_vec();
+    candidates.sort_by_key(|p| (p.budget.llut, p.budget.dsp));
+    for primary in &candidates {
+        for spill in candidates.iter().rev() {
+            if spill.name == primary.name {
+                continue;
+            }
+            if let Ok(plan) = plan_with_spill(demands, registry, primary, spill, cap) {
+                return Ok(plan);
+            }
+        }
+    }
+    Err(Error::Infeasible(format!(
+        "no single device or two-device split fits the demanded fleet at {:.0}%",
         100.0 * cap
     )))
 }
@@ -335,6 +475,77 @@ mod tests {
         let demands = [NetworkDemand::new(zoo::lenet_ish()).with_min_replicas(2)];
         let err = plan_fleet(&demands, &reg, &Platform::zcu104(), 0.000_1);
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn replica_prices_carry_a_predicted_latency() {
+        let reg = registry();
+        let demands = [NetworkDemand::new(zoo::tiny()).with_max_replicas(1)];
+        let plan = plan_fleet(&demands, &reg, &Platform::zcu104(), 0.8).unwrap();
+        let row = plan.get("tiny_q8").unwrap();
+        // The row's latency is exactly the deployment-mix estimate.
+        let dep = plan_deployment(&zoo::tiny(), &reg, &Platform::zcu104(), 0.8).unwrap();
+        let want = crate::extend::latency::deployment_latency(&zoo::tiny(), &dep)
+            .unwrap()
+            .ms_parallel();
+        assert!(row.predicted_ms > 0.0 && row.predicted_ms.is_finite());
+        assert_eq!(row.predicted_ms, want);
+    }
+
+    #[test]
+    fn spill_is_a_noop_when_the_primary_fits() {
+        let reg = registry();
+        let demands = [NetworkDemand::new(zoo::tiny()).with_max_replicas(2)];
+        let sp = plan_with_spill(&demands, &reg, &Platform::zcu104(), &Platform::zcu111(), 0.8)
+            .unwrap();
+        assert!(sp.spill.is_none());
+        assert_eq!(sp.replicas_for("tiny_q8"), 2);
+    }
+
+    #[test]
+    fn spill_boundary_splits_overfull_floors_across_two_devices() {
+        let reg = registry();
+        // Find the primary's ceiling for lenet replicas, then demand floors
+        // that exceed it by one network: lenet fills the device, tiny must
+        // spill. This probes the exact boundary where one platform stops
+        // being enough.
+        let primary = Platform::kv260();
+        let ceiling = plan_fleet(
+            &[NetworkDemand::new(zoo::lenet_ish())],
+            &reg,
+            &primary,
+            0.8,
+        )
+        .unwrap()
+        .replicas_for("lenet_q8");
+        assert!(ceiling >= 1);
+        let demands = [
+            NetworkDemand::new(zoo::lenet_ish()).with_min_replicas(ceiling),
+            NetworkDemand::new(zoo::tiny()).with_min_replicas(
+                plan_fleet(&[NetworkDemand::new(zoo::tiny())], &reg, &primary, 0.8)
+                    .unwrap()
+                    .replicas_for("tiny_q8"),
+            ),
+        ];
+        // One device cannot hold both floors...
+        assert!(plan_fleet(&demands, &reg, &primary, 0.8).is_err());
+        // ...but the split can: every demand lands on exactly one device and
+        // each sub-plan respects its own platform budget.
+        let sp =
+            plan_with_spill(&demands, &reg, &primary, &Platform::zcu111(), 0.8).unwrap();
+        let spill = sp.spill.as_ref().expect("two-device split required");
+        assert_eq!(sp.networks().len(), 2, "no network dropped or duplicated");
+        assert!(sp.replicas_for("lenet_q8") >= ceiling);
+        assert!(sp.replicas_for("tiny_q8") >= 1);
+        assert!(sp.primary.total.fits_within(&sp.primary.capped_budget()));
+        assert!(spill.total.fits_within(&spill.capped_budget()));
+        // Deterministic: the same call partitions identically.
+        let again =
+            plan_with_spill(&demands, &reg, &primary, &Platform::zcu111(), 0.8).unwrap();
+        let names = |p: &SpillPlan| {
+            p.networks().iter().map(|n| n.network.clone()).collect::<Vec<_>>()
+        };
+        assert_eq!(names(&sp), names(&again));
     }
 
     #[test]

@@ -18,6 +18,18 @@
 //! window* of calm snapshots (zero rejections, near-empty queues, p95 under
 //! target) — the hysteresis that keeps scale-downs from flapping against a
 //! bursty client.
+//!
+//! ## Latency-aware targets
+//!
+//! The p95 objective can be *model-derived* instead of an absolute constant:
+//! a tracker built with [`SloTracker::with_predicted`] carries the fitted
+//! models' per-network service latency (see
+//! [`crate::extend::latency::deployment_latency`] and
+//! `NetworkPlan::predicted_ms`), and judges a network against
+//! `predicted × SloPolicy::p95_ratio` — "the tail may queue at most N
+//! service times deep" — falling back to the absolute
+//! [`SloPolicy::p95_target_ms`] for networks without a prediction. The
+//! effective target is reported per row in [`NetworkSlo::p95_target_ms`].
 
 use crate::coordinator::{ShardStats, ShardedStats};
 use std::collections::{BTreeMap, VecDeque};
@@ -25,8 +37,13 @@ use std::collections::{BTreeMap, VecDeque};
 /// Scale-triggering objectives, per network (one policy for the fleet).
 #[derive(Debug, Clone)]
 pub struct SloPolicy {
-    /// p95 latency objective (milliseconds).
+    /// Absolute p95 latency objective (milliseconds) — the fallback for
+    /// networks without a model-predicted service latency.
     pub p95_target_ms: f64,
+    /// Latency-aware objective: observed p95 may be at most this multiple of
+    /// the model-predicted service latency (used only for networks the
+    /// tracker has a prediction for; see [`SloTracker::with_predicted`]).
+    pub p95_ratio: f64,
     /// Tolerated overload rate (rejected / attempted) over the window.
     pub overload_target: f64,
     /// Queue depth / cap below which a calm network counts as idle.
@@ -39,6 +56,7 @@ impl Default for SloPolicy {
     fn default() -> Self {
         SloPolicy {
             p95_target_ms: 50.0,
+            p95_ratio: 4.0,
             overload_target: 0.01,
             idle_queue_util: 0.05,
             window: 3,
@@ -70,6 +88,10 @@ pub struct NetworkSlo {
     pub overload_rate: f64,
     /// Summed queue depth over summed cap in the latest snapshot.
     pub queue_util: f64,
+    /// The p95 objective this row was judged against (milliseconds):
+    /// `predicted × p95_ratio` when the tracker carries a model prediction
+    /// for this network, the policy's absolute target otherwise.
+    pub p95_target_ms: f64,
     /// Standing against the policy.
     pub verdict: SloVerdict,
 }
@@ -107,20 +129,41 @@ struct Totals {
 #[derive(Debug)]
 pub struct SloTracker {
     policy: SloPolicy,
+    predicted_ms: BTreeMap<String, f64>,
     last: BTreeMap<String, Totals>,
     windows: BTreeMap<String, VecDeque<Sample>>,
 }
 
 impl SloTracker {
-    /// Tracker with the given policy (window clamped to ≥ 1).
-    pub fn new(mut policy: SloPolicy) -> SloTracker {
+    /// Tracker with the given policy (window clamped to ≥ 1); every network
+    /// is judged against the absolute p95 target.
+    pub fn new(policy: SloPolicy) -> SloTracker {
+        SloTracker::with_predicted(policy, BTreeMap::new())
+    }
+
+    /// Tracker with model-predicted per-network service latencies (ms):
+    /// networks present in `predicted_ms` are judged against
+    /// `predicted × policy.p95_ratio` instead of the absolute constant —
+    /// the scale signal fires on the predicted-vs-observed ratio.
+    pub fn with_predicted(
+        mut policy: SloPolicy,
+        predicted_ms: BTreeMap<String, f64>,
+    ) -> SloTracker {
         policy.window = policy.window.max(1);
-        SloTracker { policy, last: BTreeMap::new(), windows: BTreeMap::new() }
+        SloTracker { policy, predicted_ms, last: BTreeMap::new(), windows: BTreeMap::new() }
     }
 
     /// The active policy.
     pub fn policy(&self) -> &SloPolicy {
         &self.policy
+    }
+
+    /// The effective p95 objective for one network (ms).
+    pub fn p95_target_ms(&self, network: &str) -> f64 {
+        self.predicted_ms
+            .get(network)
+            .map(|&p| p * self.policy.p95_ratio)
+            .unwrap_or(self.policy.p95_target_ms)
     }
 
     /// Fold one fleet snapshot in; returns one row per network, sorted by
@@ -159,19 +202,22 @@ impl SloTracker {
             let (adm, rej) = window
                 .iter()
                 .fold((0u64, 0u64), |(a, r), s| (a + s.admitted, r + s.rejected));
+            // End the `window` borrow before the &self method call below.
+            let window_full = window.len() >= self.policy.window;
             let attempts = adm + rej;
             let overload_rate =
                 if attempts == 0 { 0.0 } else { rej as f64 / attempts as f64 };
             let queue_util = if cap == 0 { 0.0 } else { depth as f64 / cap as f64 };
 
-            let breached = overload_rate > self.policy.overload_target
-                || p95_ms > self.policy.p95_target_ms;
+            let p95_target_ms = self.p95_target_ms(network);
+            let breached =
+                overload_rate > self.policy.overload_target || p95_ms > p95_target_ms;
             let calm = rej == 0
                 && queue_util <= self.policy.idle_queue_util
-                && p95_ms <= self.policy.p95_target_ms;
+                && p95_ms <= p95_target_ms;
             let verdict = if breached {
                 SloVerdict::Overloaded
-            } else if calm && window.len() >= self.policy.window {
+            } else if calm && window_full {
                 SloVerdict::Idle
             } else {
                 SloVerdict::Healthy
@@ -182,6 +228,7 @@ impl SloTracker {
                 p95_ms,
                 overload_rate,
                 queue_util,
+                p95_target_ms,
                 verdict,
             });
         }
@@ -229,6 +276,7 @@ mod tests {
     fn tracker(window: usize) -> SloTracker {
         SloTracker::new(SloPolicy {
             p95_target_ms: 10.0,
+            p95_ratio: 4.0,
             overload_target: 0.05,
             idle_queue_util: 0.25,
             window,
@@ -293,6 +341,34 @@ mod tests {
         // A drained replica took its counters with it: totals dip.
         let s = t.observe(&snapshot(vec![row("a", 0, 40, 1, 1.0, 0)]));
         assert_eq!(s[0].overload_rate, 0.0, "dip folds to zero delta, not u64 wrap");
+    }
+
+    #[test]
+    fn predicted_latency_scales_the_p95_target() {
+        // Prediction 2 ms × ratio 4 → target 8 ms for network `a`; network
+        // `b` has no prediction and keeps the absolute 10 ms constant.
+        let policy = SloPolicy {
+            p95_target_ms: 10.0,
+            p95_ratio: 4.0,
+            overload_target: 0.05,
+            idle_queue_util: 0.25,
+            window: 1,
+        };
+        let mut predicted = BTreeMap::new();
+        predicted.insert("a".to_string(), 2.0);
+        let mut t = SloTracker::with_predicted(policy, predicted);
+        assert_eq!(t.p95_target_ms("a"), 8.0);
+        assert_eq!(t.p95_target_ms("b"), 10.0);
+        // 9 ms observed: breaches a's ratio-derived target, not b's absolute.
+        let s = t.observe(&snapshot(vec![
+            row("a", 0, 10, 0, 9.0, 0),
+            row("b", 0, 10, 0, 9.0, 0),
+        ]));
+        assert_eq!(s[0].network, "a");
+        assert_eq!(s[0].verdict, SloVerdict::Overloaded);
+        assert_eq!(s[0].p95_target_ms, 8.0);
+        assert_ne!(s[1].verdict, SloVerdict::Overloaded);
+        assert_eq!(s[1].p95_target_ms, 10.0);
     }
 
     #[test]

@@ -32,6 +32,10 @@
 //!    replicas, a capacity planner solves replica counts per platform under
 //!    the utilization cap, and an SLO-driven controller rescales the live
 //!    sharded fleet — with every decision justified by predicted resources.
+//!    [`simulate`] rehearses those decisions on a virtual clock: seeded
+//!    traffic scenarios (or recorded traces) replay against the
+//!    model-predicted fleet through the same controller code path, turning
+//!    fleet-plan and policy questions into millisecond what-if reports.
 //! 8. [`report`] — regenerates every table and figure of the paper's evaluation.
 //!
 //! ## Quickstart
@@ -66,6 +70,7 @@ pub mod allocate;
 pub mod cnn;
 pub mod coordinator;
 pub mod fleetplan;
+pub mod simulate;
 pub mod runtime;
 pub mod report;
 pub mod extend;

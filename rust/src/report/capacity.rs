@@ -1,0 +1,140 @@
+//! Rendering of what-if capacity reports (the simulator's Table-5-style
+//! output: capacity per network per device, under a named traffic shape).
+
+use crate::simulate::CapacityReport;
+
+/// Render one capacity report as a fixed-width text block: the selected
+/// platform(s), per-network capacity rows (predicted service latency,
+/// replica trajectory plan/start/peak/end, overload rate, simulated p95),
+/// the max sustainable QPS, the replica trajectory, and every controller
+/// decision with its virtual timestamp.
+pub fn capacity_table(r: &CapacityReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "=== what-if capacity report: scenario `{}` (seed {}) ===\n",
+        r.scenario, r.seed
+    ));
+    let host = match &r.spill_platform {
+        Some(s) => format!("{} + spill {}", r.platform, s),
+        None => r.platform.clone(),
+    };
+    out.push_str(&format!(
+        "platform: {host}   cap {:.0}%   offered ~{:.0} qps (virtual)\n",
+        100.0 * r.cap,
+        r.qps
+    ));
+    out.push_str(&format!(
+        "virtual time: {:.1} ms   events: {}   max sustainable: {:.1} qps \
+         (overload-bounded, planned replicas)\n\n",
+        r.virtual_ms, r.events, r.max_sustainable_qps
+    ));
+    out.push_str(&format!(
+        "  {:<12} {:<9} {:>10} {:>20} {:>9} {:>9} {:>9} {:>9}\n",
+        "network", "host", "svc pred", "repl plan/start/pk/end", "offered", "rejected",
+        "overload", "p95 ms"
+    ));
+    for n in &r.networks {
+        let repl = format!(
+            "{}/{}/{}/{}",
+            n.planned_replicas, n.start_replicas, n.peak_replicas, n.final_replicas
+        );
+        out.push_str(&format!(
+            "  {:<12} {:<9} {:>7.4}ms {:>20} {:>9} {:>9} {:>8.2}% {:>9.4}\n",
+            n.network,
+            n.platform,
+            n.predicted_ms,
+            repl,
+            n.offered,
+            n.rejected,
+            100.0 * n.overload_rate,
+            n.p95_ms,
+        ));
+    }
+    out.push_str(&format!(
+        "\nreplica trajectory ({} change point(s)):\n",
+        r.trajectory.len()
+    ));
+    for p in &r.trajectory {
+        out.push_str(&format!(
+            "  t=+{:<10.3}ms {:<12} ×{}\n",
+            p.t_ms, p.network, p.replicas
+        ));
+    }
+    out.push_str(&format!(
+        "\ncontroller decisions ({} up, {} down):\n",
+        r.scale_ups, r.scale_downs
+    ));
+    if r.decisions.is_empty() {
+        out.push_str("  (none — the floors absorbed the scenario)\n");
+    }
+    for d in &r.decisions {
+        out.push_str(&format!("  {d}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulate::{NetworkCapacity, TrajectoryPoint};
+
+    fn report() -> CapacityReport {
+        CapacityReport {
+            scenario: "burst".into(),
+            seed: 42,
+            platform: "ZCU104".into(),
+            spill_platform: Some("ZCU111".into()),
+            cap: 0.8,
+            qps: 1234.0,
+            events: 1_000_001,
+            virtual_ms: 2000.0,
+            max_sustainable_qps: 4321.5,
+            networks: vec![NetworkCapacity {
+                network: "lenet_q8".into(),
+                platform: "ZCU104".into(),
+                predicted_ms: 0.0042,
+                planned_replicas: 13,
+                start_replicas: 1,
+                peak_replicas: 3,
+                final_replicas: 1,
+                offered: 1000,
+                admitted: 990,
+                rejected: 10,
+                overload_rate: 0.01,
+                mean_ms: 0.005,
+                p95_ms: 0.009,
+            }],
+            trajectory: vec![TrajectoryPoint {
+                t_ms: 0.0,
+                network: "lenet_q8".into(),
+                replicas: 1,
+            }],
+            decisions: vec!["t=+50.000ms scale-up lenet_q8 1→2: test".into()],
+            scale_ups: 1,
+            scale_downs: 0,
+        }
+    }
+
+    #[test]
+    fn table_names_platform_trajectory_qps_and_p95() {
+        let text = capacity_table(&report());
+        assert!(text.contains("ZCU104"), "{text}");
+        assert!(text.contains("spill ZCU111"), "{text}");
+        assert!(text.contains("max sustainable: 4321.5 qps"), "{text}");
+        assert!(text.contains("lenet_q8"), "{text}");
+        assert!(text.contains("13/1/3/1"), "{text}");
+        assert!(text.contains("scale-up lenet_q8 1→2"), "{text}");
+        assert!(text.contains("events: 1000001"), "{text}");
+    }
+
+    #[test]
+    fn json_round_trips_through_the_report_shape() {
+        let j = report().to_json();
+        assert!(j.contains("\"simulate\""), "{j}");
+        assert!(j.contains("\"max_sustainable_qps\": 4321.5"), "{j}");
+        assert!(j.contains("\"spill_platform\": \"ZCU111\""), "{j}");
+        assert!(j.contains("\"network\": \"lenet_q8\""), "{j}");
+        // Deterministic: rendering twice is byte-identical.
+        assert_eq!(j, report().to_json());
+    }
+}

@@ -2,8 +2,10 @@
 //! (per-experiment index in DESIGN.md §6). Each function returns the rendered
 //! text so the CLI, benches and tests share one implementation.
 
+pub mod capacity;
 pub mod tables;
 pub mod figures;
 
+pub use capacity::capacity_table;
 pub use figures::{figure_csv, figure_surface};
 pub use tables::{table1, table2, table3, table4, table5};

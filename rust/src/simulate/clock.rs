@@ -1,0 +1,173 @@
+//! Virtual time and the deterministic event heap.
+//!
+//! Simulated time is a `u64` nanosecond counter ([`SimNs`]) that only ever
+//! moves forward by explicit [`VirtualClock::advance_to`] calls — nothing in
+//! the simulator sleeps, so a million virtual seconds cost exactly as much
+//! wall time as the events scheduled inside them. The [`EventHeap`] is a
+//! min-heap keyed by `(time, insertion sequence)`: two events scheduled for
+//! the same instant pop in insertion order, which makes every simulation a
+//! pure function of its inputs — no `HashMap` iteration order, no thread
+//! scheduling, no wall clock anywhere.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Virtual time in nanoseconds since the start of the simulation.
+pub type SimNs = u64;
+
+/// A forward-only virtual clock.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct VirtualClock {
+    now: SimNs,
+}
+
+impl VirtualClock {
+    /// A clock at t = 0.
+    pub fn new() -> VirtualClock {
+        VirtualClock { now: 0 }
+    }
+
+    /// Current virtual time (ns).
+    pub fn now(&self) -> SimNs {
+        self.now
+    }
+
+    /// Current virtual time in milliseconds.
+    pub fn now_ms(&self) -> f64 {
+        self.now as f64 / 1e6
+    }
+
+    /// Advance to `t` (a no-op when `t` is in the past — time never rewinds).
+    pub fn advance_to(&mut self, t: SimNs) {
+        self.now = self.now.max(t);
+    }
+}
+
+/// One scheduled entry: ordering key is `(at, seq)` only, so the payload
+/// type needs no `Ord`.
+struct Entry<E> {
+    at: SimNs,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        (self.at, self.seq) == (other.at, other.seq)
+    }
+}
+
+impl<E> Eq for Entry<E> {}
+
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+/// Deterministic future-event list: min-heap by time, FIFO within a tick.
+pub struct EventHeap<E> {
+    heap: BinaryHeap<Reverse<Entry<E>>>,
+    seq: u64,
+}
+
+impl<E> Default for EventHeap<E> {
+    fn default() -> Self {
+        EventHeap::new()
+    }
+}
+
+impl<E> EventHeap<E> {
+    /// An empty heap.
+    pub fn new() -> EventHeap<E> {
+        EventHeap { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    /// Schedule `event` at virtual time `at`.
+    pub fn push(&mut self, at: SimNs, event: E) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Reverse(Entry { at, seq, event }));
+    }
+
+    /// Pop the earliest event (ties in insertion order).
+    pub fn pop(&mut self) -> Option<(SimNs, E)> {
+        self.heap.pop().map(|Reverse(e)| (e.at, e.event))
+    }
+
+    /// Time of the next event, if any.
+    pub fn peek_at(&self) -> Option<SimNs> {
+        self.heap.peek().map(|Reverse(e)| e.at)
+    }
+
+    /// Scheduled events still pending.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True when nothing is scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_never_rewinds() {
+        let mut c = VirtualClock::new();
+        c.advance_to(100);
+        c.advance_to(50);
+        assert_eq!(c.now(), 100);
+        c.advance_to(2_500_000);
+        assert!((c.now_ms() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn events_pop_in_time_order() {
+        let mut h = EventHeap::new();
+        h.push(30, "c");
+        h.push(10, "a");
+        h.push(20, "b");
+        assert_eq!(h.len(), 3);
+        assert_eq!(h.peek_at(), Some(10));
+        assert_eq!(h.pop(), Some((10, "a")));
+        assert_eq!(h.pop(), Some((20, "b")));
+        assert_eq!(h.pop(), Some((30, "c")));
+        assert_eq!(h.pop(), None);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn same_tick_events_pop_in_insertion_order() {
+        let mut h = EventHeap::new();
+        for i in 0..32u32 {
+            h.push(7, i);
+        }
+        for i in 0..32u32 {
+            assert_eq!(h.pop(), Some((7, i)), "FIFO within a tick");
+        }
+    }
+
+    #[test]
+    fn interleaved_pushes_and_pops_stay_ordered() {
+        let mut h = EventHeap::new();
+        h.push(5, 'x');
+        h.push(1, 'y');
+        assert_eq!(h.pop(), Some((1, 'y')));
+        h.push(3, 'z');
+        h.push(5, 'w');
+        assert_eq!(h.pop(), Some((3, 'z')));
+        // Both at t=5: 'x' was inserted before 'w'.
+        assert_eq!(h.pop(), Some((5, 'x')));
+        assert_eq!(h.pop(), Some((5, 'w')));
+    }
+}

@@ -1,0 +1,525 @@
+//! The what-if capacity explorer: FleetPlan × Platform × policy → report.
+//!
+//! [`explore`] answers the question the paper's fast models exist for:
+//! *"what happens to this fleet under that traffic, on which device?"* —
+//! without synthesis, executors, or wall-clock waiting. It selects a
+//! platform with the spill-aware planner
+//! ([`crate::fleetplan::select_platform_or_spill`]), prices each network's
+//! virtual service rate from the plan's model-predicted latency, replays a
+//! seeded [`Scenario`] (or a recorded trace, via [`explore_replay`])
+//! through the discrete-event engine with the *production* autoscaler in
+//! the loop, and then bisects for the maximum sustainable QPS — the
+//! offered load the fully-planned fleet can absorb while keeping the
+//! admission overload rate under a target.
+//!
+//! The resulting [`CapacityReport`] is a pure function of its inputs
+//! (byte-identical JSON for the same seed + scenario + registry), so CI can
+//! archive it next to the perf baseline and diff capacity the way it diffs
+//! latency.
+
+use super::engine::{
+    simulate_trace, SimFleet, SimRunOptions, SimServiceModel, TrajectoryPoint,
+};
+use super::workload::{Scenario, Trace};
+use crate::coordinator::ShardSpec;
+use crate::fleetplan::{
+    select_platform_or_spill, Autoscaler, FleetPlan, NetworkDemand, ScaleAction, SloPolicy,
+    SpillPlan,
+};
+use crate::models::ModelRegistry;
+use crate::platform::Platform;
+use crate::util::error::{Error, Result};
+
+/// Knobs for a what-if exploration.
+#[derive(Debug, Clone)]
+pub struct WhatIfOptions {
+    /// Utilization cap plans are solved under (the paper's 0.8).
+    pub cap: f64,
+    /// Per-replica bounded-admission cap inside the simulation.
+    pub queue_cap: usize,
+    /// SLO policy handed to the (real) autoscaler.
+    pub policy: SloPolicy,
+    /// Virtual controller cadence (ms).
+    pub control_interval_ms: f64,
+    /// Calm ticks appended after the trace drains.
+    pub cooldown_ticks: usize,
+    /// Judge p95 against model-predicted latency × ratio (the latency-aware
+    /// SLO) instead of the absolute constant.
+    pub latency_slo: bool,
+    /// Overload rate the max-QPS bisection must stay under.
+    pub sustain_overload: f64,
+    /// Arrivals per bisection probe run.
+    pub probe_arrivals: u64,
+    /// When the scenario's duration is 0 (auto), size it so at least this
+    /// many arrivals are generated — the ≥1M-virtual-event knob.
+    pub min_arrivals: u64,
+}
+
+impl Default for WhatIfOptions {
+    fn default() -> Self {
+        WhatIfOptions {
+            cap: 0.8,
+            queue_cap: 64,
+            policy: SloPolicy::default(),
+            control_interval_ms: 50.0,
+            cooldown_ticks: 6,
+            latency_slo: true,
+            sustain_overload: 0.01,
+            probe_arrivals: 4_000,
+            min_arrivals: 1_000_000,
+        }
+    }
+}
+
+/// One network's row in the capacity report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkCapacity {
+    /// Network name.
+    pub network: String,
+    /// Device hosting this network's replicas.
+    pub platform: String,
+    /// Model-predicted service latency per replica (ms).
+    pub predicted_ms: f64,
+    /// Replica ceiling the plan solved for this device.
+    pub planned_replicas: u64,
+    /// Replicas the simulation started with (the plan floors).
+    pub start_replicas: u64,
+    /// Highest routable replica count seen during the run.
+    pub peak_replicas: usize,
+    /// Routable replicas when the run ended.
+    pub final_replicas: usize,
+    /// Requests offered.
+    pub offered: u64,
+    /// Requests admitted.
+    pub admitted: u64,
+    /// Requests rejected at admission (every replica at cap).
+    pub rejected: u64,
+    /// rejected / offered.
+    pub overload_rate: f64,
+    /// Mean virtual completion latency (ms).
+    pub mean_ms: f64,
+    /// Simulated p95 latency (ms) — the model-predicted tail under this
+    /// traffic.
+    pub p95_ms: f64,
+}
+
+/// The full what-if outcome for one scenario.
+#[derive(Debug, Clone)]
+pub struct CapacityReport {
+    /// Scenario name (`replay` for recorded traces).
+    pub scenario: String,
+    /// Scenario seed.
+    pub seed: u64,
+    /// Selected primary platform.
+    pub platform: String,
+    /// Spill platform, when one device could not hold the floors.
+    pub spill_platform: Option<String>,
+    /// Utilization cap used for planning.
+    pub cap: f64,
+    /// Mean offered load of the main run (requests per virtual second).
+    pub qps: f64,
+    /// Virtual events processed in the main run.
+    pub events: u64,
+    /// Virtual end time of the main run (ms).
+    pub virtual_ms: f64,
+    /// Max offered QPS the fully-planned fleet sustains with admission
+    /// overload ≤ the target (bisected over steady probe runs).
+    pub max_sustainable_qps: f64,
+    /// Per-network rows (sorted by name).
+    pub networks: Vec<NetworkCapacity>,
+    /// Replica trajectory of the main run.
+    pub trajectory: Vec<TrajectoryPoint>,
+    /// Controller decisions, rendered with their virtual timestamps.
+    pub decisions: Vec<String>,
+    /// Scale-up count.
+    pub scale_ups: usize,
+    /// Scale-down count.
+    pub scale_downs: usize,
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl CapacityReport {
+    /// Deterministic hand-rolled JSON (no serde offline): top-level key
+    /// `simulate`, diffable by `scripts/bench_diff.py --simulate`.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n  \"simulate\": {\n");
+        out.push_str(&format!("    \"scenario\": \"{}\",\n", json_escape(&self.scenario)));
+        out.push_str(&format!("    \"seed\": {},\n", self.seed));
+        out.push_str(&format!("    \"platform\": \"{}\",\n", json_escape(&self.platform)));
+        match &self.spill_platform {
+            Some(p) => {
+                out.push_str(&format!("    \"spill_platform\": \"{}\",\n", json_escape(p)))
+            }
+            None => out.push_str("    \"spill_platform\": null,\n"),
+        }
+        out.push_str(&format!("    \"cap\": {:.3},\n", self.cap));
+        out.push_str(&format!("    \"qps\": {:.1},\n", self.qps));
+        out.push_str(&format!("    \"events\": {},\n", self.events));
+        out.push_str(&format!("    \"virtual_ms\": {:.3},\n", self.virtual_ms));
+        out.push_str(&format!(
+            "    \"max_sustainable_qps\": {:.1},\n",
+            self.max_sustainable_qps
+        ));
+        out.push_str(&format!("    \"scale_ups\": {},\n", self.scale_ups));
+        out.push_str(&format!("    \"scale_downs\": {},\n", self.scale_downs));
+        out.push_str("    \"networks\": [\n");
+        for (i, n) in self.networks.iter().enumerate() {
+            out.push_str(&format!(
+                "      {{\"network\": \"{}\", \"platform\": \"{}\", \"predicted_ms\": {:.6}, \
+                 \"planned_replicas\": {}, \"start_replicas\": {}, \"peak_replicas\": {}, \
+                 \"final_replicas\": {}, \"offered\": {}, \"admitted\": {}, \"rejected\": {}, \
+                 \"overload_rate\": {:.6}, \"mean_ms\": {:.6}, \"p95_ms\": {:.6}}}{}\n",
+                json_escape(&n.network),
+                json_escape(&n.platform),
+                n.predicted_ms,
+                n.planned_replicas,
+                n.start_replicas,
+                n.peak_replicas,
+                n.final_replicas,
+                n.offered,
+                n.admitted,
+                n.rejected,
+                n.overload_rate,
+                n.mean_ms,
+                n.p95_ms,
+                if i + 1 == self.networks.len() { "" } else { "," }
+            ));
+        }
+        out.push_str("    ],\n    \"trajectory\": [\n");
+        for (i, p) in self.trajectory.iter().enumerate() {
+            out.push_str(&format!(
+                "      {{\"t_ms\": {:.3}, \"network\": \"{}\", \"replicas\": {}}}{}\n",
+                p.t_ms,
+                json_escape(&p.network),
+                p.replicas,
+                if i + 1 == self.trajectory.len() { "" } else { "," }
+            ));
+        }
+        out.push_str("    ],\n    \"decisions\": [\n");
+        for (i, d) in self.decisions.iter().enumerate() {
+            out.push_str(&format!(
+                "      \"{}\"{}\n",
+                json_escape(d),
+                if i + 1 == self.decisions.len() { "" } else { "," }
+            ));
+        }
+        out.push_str("    ]\n  }\n}\n");
+        out
+    }
+}
+
+/// `(plan, hosting platform name)` rows across a spill split.
+fn plan_rows(spill: &SpillPlan) -> Vec<(&FleetPlan, String)> {
+    let mut out = vec![(&spill.primary, spill.primary.platform.name.to_string())];
+    if let Some(s) = &spill.spill {
+        out.push((s, s.platform.name.to_string()));
+    }
+    out
+}
+
+/// Weight fraction of each network in the mix. Non-positive weights are
+/// substituted with 1.0 — the SAME rule [`Scenario::arrivals`] applies when
+/// generating traffic — so capacity math and workload generation always
+/// agree on who gets how much.
+fn mix_fraction(mix: &[(String, f64)], network: &str) -> f64 {
+    let weight = |w: f64| if w > 0.0 { w } else { 1.0 };
+    let total: f64 = mix.iter().map(|(_, w)| weight(*w)).sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    mix.iter()
+        .find(|(n, _)| n == network)
+        .map(|(_, w)| weight(*w) / total)
+        .unwrap_or(0.0)
+}
+
+/// Closed-form aggregate capacity (requests/s) of `replicas(row)` replicas
+/// per network under the mix: the bottleneck network saturates first.
+fn capacity_qps<F>(spill: &SpillPlan, mix: &[(String, f64)], replicas: F) -> f64
+where
+    F: Fn(&crate::fleetplan::NetworkPlan) -> u64,
+{
+    let mut qps = f64::INFINITY;
+    for (plan, _) in plan_rows(spill) {
+        for row in &plan.networks {
+            let f = mix_fraction(mix, &row.network);
+            if f <= 0.0 {
+                continue;
+            }
+            let service_s = (row.predicted_ms / 1e3).max(1e-12);
+            let rate = replicas(row) as f64 / service_s;
+            qps = qps.min(rate / f);
+        }
+    }
+    if qps.is_finite() {
+        qps
+    } else {
+        0.0
+    }
+}
+
+/// Simulated service models at a chosen replica count per plan row.
+fn service_models<F>(spill: &SpillPlan, queue_cap: usize, replicas: F) -> Vec<SimServiceModel>
+where
+    F: Fn(&crate::fleetplan::NetworkPlan) -> u64,
+{
+    let mut models = Vec::new();
+    for (plan, _) in plan_rows(spill) {
+        for row in &plan.networks {
+            models.push(SimServiceModel::new(
+                &row.network,
+                row.predicted_ms,
+                queue_cap,
+                replicas(row) as usize,
+            ));
+        }
+    }
+    models
+}
+
+/// One production-configured [`Autoscaler`] per device sub-plan (each
+/// budget-checks its own platform; `decide` ignores the other device's
+/// networks).
+fn scalers_for(spill: &SpillPlan, opts: &WhatIfOptions) -> Vec<Autoscaler> {
+    plan_rows(spill)
+        .into_iter()
+        .map(|(plan, _)| {
+            let templates: Vec<ShardSpec> = plan
+                .networks
+                .iter()
+                .map(|n| ShardSpec::golden(&n.network).with_queue_cap(opts.queue_cap))
+                .collect();
+            if opts.latency_slo {
+                Autoscaler::with_latency_slo(plan.clone(), opts.policy.clone(), templates)
+            } else {
+                Autoscaler::new(plan.clone(), opts.policy.clone(), templates)
+            }
+        })
+        .collect()
+}
+
+/// Bisect the max steady offered load the *fully-planned* fleet absorbs.
+///
+/// A probe rate is "sustained" only when BOTH hold: admission overload ≤
+/// `opts.sustain_overload`, AND the run finishes close to the trace's own
+/// duration. The second criterion matters because bounded queues can
+/// swallow a short probe's entire excess without a single rejection (total
+/// slots = replicas × queue_cap can exceed the end-of-probe backlog); a
+/// fleet that is merely *buffering* an unsustainable rate reveals itself by
+/// the drain tail — completions lag arrivals, so virtual end time runs past
+/// the offered window. The 2% lag margin leaves room for ordinary queueing
+/// fluctuation at capacity while rejecting any rate meaningfully above it.
+fn max_sustainable_qps(
+    spill: &SpillPlan,
+    mix: &[(String, f64)],
+    seed: u64,
+    opts: &WhatIfOptions,
+) -> Result<f64> {
+    let ceiling = capacity_qps(spill, mix, |row| row.replicas);
+    if ceiling <= 0.0 {
+        return Ok(0.0);
+    }
+    let (mut lo, mut hi) = (0.0f64, ceiling * 1.25 + 1.0);
+    for probe in 0..14u64 {
+        let qps = 0.5 * (lo + hi);
+        let duration_ms = (opts.probe_arrivals as f64 / qps * 1e3).max(1.0);
+        let scenario = Scenario::new(
+            super::workload::ScenarioShape::Steady,
+            mix.to_vec(),
+            qps,
+            duration_ms,
+            seed ^ (0xB15E_C7 + probe),
+        );
+        let trace = scenario.arrivals();
+        let models = service_models(spill, opts.queue_cap, |row| row.replicas);
+        let max_service_ms = models
+            .iter()
+            .map(|m| m.service_ns as f64 / 1e6)
+            .fold(0.0f64, f64::max);
+        let mut fleet = SimFleet::new(&models)?;
+        let run = simulate_trace(
+            &mut fleet,
+            &trace,
+            &mut [],
+            &SimRunOptions {
+                control_interval_ms: opts.control_interval_ms,
+                cooldown_ticks: 0,
+            },
+        )?;
+        let overload =
+            if run.offered == 0 { 0.0 } else { run.rejected as f64 / run.offered as f64 };
+        let lag_ok = run.virtual_ms <= duration_ms * 1.02 + 4.0 * max_service_ms;
+        if overload <= opts.sustain_overload && lag_ok {
+            lo = qps;
+        } else {
+            hi = qps;
+        }
+    }
+    Ok((lo * 10.0).round() / 10.0)
+}
+
+/// Shared back half of [`explore`] / [`explore_replay`]: run the main trace
+/// with the production controller in the loop and assemble the report.
+fn explore_with_trace(
+    spill: &SpillPlan,
+    scenario_name: &str,
+    seed: u64,
+    qps: f64,
+    mix: &[(String, f64)],
+    trace: &Trace,
+    opts: &WhatIfOptions,
+) -> Result<CapacityReport> {
+    // Start at the floors; the controller earns every further replica.
+    let mut fleet =
+        SimFleet::new(&service_models(spill, opts.queue_cap, |row| row.min_replicas))?;
+    let mut scalers = scalers_for(spill, opts);
+    let run = simulate_trace(
+        &mut fleet,
+        trace,
+        &mut scalers,
+        &SimRunOptions {
+            control_interval_ms: opts.control_interval_ms,
+            cooldown_ticks: opts.cooldown_ticks,
+        },
+    )?;
+    let final_counts = fleet.replica_counts();
+
+    let mut networks = Vec::new();
+    for (plan, host) in plan_rows(spill) {
+        for row in &plan.networks {
+            let sim = run.networks.iter().find(|n| n.network == row.network);
+            let peak = run
+                .trajectory
+                .iter()
+                .filter(|p| p.network == row.network)
+                .map(|p| p.replicas)
+                .max()
+                .unwrap_or(row.min_replicas as usize);
+            networks.push(NetworkCapacity {
+                network: row.network.clone(),
+                platform: host.clone(),
+                predicted_ms: row.predicted_ms,
+                planned_replicas: row.replicas,
+                start_replicas: row.min_replicas,
+                peak_replicas: peak,
+                final_replicas: final_counts.get(&row.network).copied().unwrap_or(0),
+                offered: sim.map(|s| s.offered).unwrap_or(0),
+                admitted: sim.map(|s| s.admitted).unwrap_or(0),
+                rejected: sim.map(|s| s.rejected).unwrap_or(0),
+                overload_rate: sim.map(|s| s.overload_rate).unwrap_or(0.0),
+                mean_ms: sim.map(|s| s.mean_ms).unwrap_or(0.0),
+                p95_ms: sim.map(|s| s.p95_ms).unwrap_or(0.0),
+            });
+        }
+    }
+    networks.sort_by(|a, b| a.network.cmp(&b.network));
+
+    let scale_ups =
+        run.decisions.iter().filter(|d| d.action == ScaleAction::Up).count();
+    let scale_downs = run.decisions.len() - scale_ups;
+    let decisions: Vec<String> =
+        run.decisions.iter().map(|d| format!("t=+{:.3}ms {}", d.at_ms, d)).collect();
+
+    let max_qps = max_sustainable_qps(spill, mix, seed, opts)?;
+    Ok(CapacityReport {
+        scenario: scenario_name.to_string(),
+        seed,
+        platform: spill.primary.platform.name.to_string(),
+        spill_platform: spill.spill.as_ref().map(|s| s.platform.name.to_string()),
+        cap: opts.cap,
+        qps,
+        events: run.events,
+        virtual_ms: run.virtual_ms,
+        max_sustainable_qps: max_qps,
+        networks,
+        trajectory: run.trajectory,
+        decisions,
+        scale_ups,
+        scale_downs,
+    })
+}
+
+/// Explore one scenario: plan (with spill fallback), auto-size the
+/// workload, simulate with the production controller, bisect capacity.
+///
+/// Scenario auto-completion: an empty `mix` is filled from the demand
+/// weights; `qps == 0` becomes 1.5× the floor configuration's closed-form
+/// capacity (so the floors overload and the controller must act);
+/// `duration_ms == 0` is sized so at least `opts.min_arrivals` arrivals are
+/// generated (burst/diurnal periods rescale with it).
+pub fn explore(
+    demands: &[NetworkDemand],
+    registry: &ModelRegistry,
+    platforms: &[Platform],
+    scenario: &Scenario,
+    opts: &WhatIfOptions,
+) -> Result<CapacityReport> {
+    let spill = select_platform_or_spill(demands, registry, platforms, opts.cap)?;
+    let mut sc = scenario.clone();
+    if sc.mix.is_empty() {
+        sc.mix = demands
+            .iter()
+            .map(|d| (d.spec.name.clone(), if d.weight > 0.0 { d.weight } else { 1.0 }))
+            .collect();
+    }
+    if sc.qps <= 0.0 {
+        let floors = capacity_qps(&spill, &sc.mix, |row| row.min_replicas);
+        if floors <= 0.0 {
+            return Err(Error::InvalidConfig(
+                "cannot auto-size QPS: zero floor capacity (check the traffic mix)".into(),
+            ));
+        }
+        sc.qps = 1.5 * floors;
+    }
+    if sc.duration_ms <= 0.0 {
+        sc.duration_ms = (opts.min_arrivals as f64 / sc.qps * 1e3).max(1.0);
+        let period = (sc.duration_ms / 5.0).max(1.0);
+        sc.burst_period_ms = period;
+        sc.burst_len_ms = period * 0.15;
+    }
+    let trace = sc.arrivals();
+    explore_with_trace(&spill, sc.shape.name(), sc.seed, sc.qps, &sc.mix, &trace, opts)
+}
+
+/// Explore a *recorded* trace (see
+/// `coordinator::drive_golden_clients_traced`): the live run's arrival
+/// pattern replays against the model-predicted fleet, mix and QPS are
+/// derived from the trace itself.
+pub fn explore_replay(
+    demands: &[NetworkDemand],
+    registry: &ModelRegistry,
+    platforms: &[Platform],
+    trace: &Trace,
+    seed: u64,
+    opts: &WhatIfOptions,
+) -> Result<CapacityReport> {
+    if trace.is_empty() {
+        return Err(Error::InvalidConfig("replay trace has no arrivals".into()));
+    }
+    let spill = select_platform_or_spill(demands, registry, platforms, opts.cap)?;
+    let mut mix: Vec<(String, f64)> = Vec::new();
+    for e in &trace.events {
+        let name = trace.network_of(e);
+        match mix.iter_mut().find(|(n, _)| n == name) {
+            Some((_, w)) => *w += 1.0,
+            None => mix.push((name.to_string(), 1.0)),
+        }
+    }
+    mix.sort_by(|a, b| a.0.cmp(&b.0));
+    let qps = trace.len() as f64 / (trace.duration_ms() / 1e3).max(1e-9);
+    explore_with_trace(&spill, "replay", seed, qps, &mix, trace, opts)
+}

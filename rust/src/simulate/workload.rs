@@ -1,0 +1,480 @@
+//! Seeded traffic scenarios and the trace record/replay format.
+//!
+//! A [`Scenario`] turns `(shape, seed, qps, duration, network mix)` into a
+//! [`Trace`] — a time-sorted list of request arrivals — via a seeded
+//! [`SplitMix64`] stream, so the same scenario always produces the
+//! byte-identical workload. Non-homogeneous shapes (diurnal, burst) are
+//! sampled by *thinning*: candidate arrivals are drawn from a homogeneous
+//! Poisson process at the peak rate and accepted with probability
+//! `rate(t) / peak`, which keeps the generator exact for any rate curve.
+//! The heavy-tail shape draws Pareto inter-arrival gaps (same mean as the
+//! requested QPS, shape `tail_alpha`), modelling the bursty arrival
+//! clumping real traffic shows.
+//!
+//! Traces are also how real runs become simulations: a [`TraceRecorder`]
+//! passed to `coordinator::drive_golden_clients_traced` captures every
+//! offered request with a wall-clock-relative timestamp, and the resulting
+//! trace replays through the simulator exactly like a synthetic one
+//! ([`Trace::save`] / [`Trace::load`] round-trip through a one-line-per-
+//! event CSV).
+
+use super::clock::SimNs;
+use crate::util::error::{Error, Result};
+use crate::util::rng::SplitMix64;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// The shape of a traffic scenario's offered-rate curve.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScenarioShape {
+    /// Constant mean rate (Poisson arrivals).
+    Steady,
+    /// Sinusoidal day/night modulation around the mean rate.
+    Diurnal,
+    /// Baseline with periodic spike windows at a multiple of the base rate.
+    Burst,
+    /// Pareto inter-arrival gaps: same mean rate, heavy-tailed clumping.
+    HeavyTail,
+}
+
+impl ScenarioShape {
+    /// Parse a CLI scenario name (`spike` is an alias for `burst`).
+    pub fn parse(name: &str) -> Option<ScenarioShape> {
+        match name.to_ascii_lowercase().as_str() {
+            "steady" => Some(ScenarioShape::Steady),
+            "diurnal" => Some(ScenarioShape::Diurnal),
+            "burst" | "spike" => Some(ScenarioShape::Burst),
+            "heavytail" | "heavy-tail" | "heavy_tail" => Some(ScenarioShape::HeavyTail),
+            _ => None,
+        }
+    }
+
+    /// Canonical name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScenarioShape::Steady => "steady",
+            ScenarioShape::Diurnal => "diurnal",
+            ScenarioShape::Burst => "burst",
+            ScenarioShape::HeavyTail => "heavytail",
+        }
+    }
+}
+
+/// A parameterized traffic scenario over a multi-network mix.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Rate-curve shape.
+    pub shape: ScenarioShape,
+    /// Generator seed (same seed + parameters ⇒ byte-identical trace).
+    pub seed: u64,
+    /// Mean offered load, aggregate over all networks (requests/s of
+    /// *virtual* time).
+    pub qps: f64,
+    /// Virtual duration of the scenario (ms).
+    pub duration_ms: f64,
+    /// `(network, weight)` traffic mix; each arrival picks a network with
+    /// probability proportional to its weight.
+    pub mix: Vec<(String, f64)>,
+    /// Burst peak as a multiple of the baseline rate (also sets the
+    /// diurnal peak-to-trough ratio).
+    pub burst_factor: f64,
+    /// Burst (and diurnal) period (virtual ms).
+    pub burst_period_ms: f64,
+    /// Burst window length within each period (virtual ms).
+    pub burst_len_ms: f64,
+    /// Pareto shape for [`ScenarioShape::HeavyTail`] (> 1; smaller = wilder).
+    pub tail_alpha: f64,
+}
+
+impl Scenario {
+    /// A scenario with shape-appropriate defaults: burst/diurnal period is a
+    /// fifth of the duration (so every run sees several cycles), bursts
+    /// occupy 15% of each period at 8× the baseline, and the heavy tail is
+    /// Pareto(1.5).
+    pub fn new(
+        shape: ScenarioShape,
+        mix: Vec<(String, f64)>,
+        qps: f64,
+        duration_ms: f64,
+        seed: u64,
+    ) -> Scenario {
+        let period = (duration_ms / 5.0).max(1.0);
+        Scenario {
+            shape,
+            seed,
+            qps,
+            duration_ms,
+            mix,
+            burst_factor: 8.0,
+            burst_period_ms: period,
+            burst_len_ms: period * 0.15,
+            tail_alpha: 1.5,
+        }
+    }
+
+    /// Diurnal amplitude in (0, 1) such that peak/trough = `burst_factor`.
+    fn diurnal_amplitude(&self) -> f64 {
+        let f = self.burst_factor.max(1.0);
+        (f - 1.0) / (f + 1.0)
+    }
+
+    /// Burst baseline rate such that the long-run mean is `qps`.
+    fn burst_base(&self) -> f64 {
+        let frac = (self.burst_len_ms / self.burst_period_ms).clamp(0.0, 1.0);
+        self.qps / (1.0 - frac + self.burst_factor.max(1.0) * frac)
+    }
+
+    /// Instantaneous offered rate at virtual second `t_s`.
+    fn rate_at(&self, t_s: f64) -> f64 {
+        match self.shape {
+            ScenarioShape::Steady | ScenarioShape::HeavyTail => self.qps,
+            ScenarioShape::Diurnal => {
+                let period_s = self.burst_period_ms / 1e3;
+                let a = self.diurnal_amplitude();
+                self.qps * (1.0 + a * (std::f64::consts::TAU * t_s / period_s).sin())
+            }
+            ScenarioShape::Burst => {
+                let period_s = self.burst_period_ms / 1e3;
+                let phase = t_s % period_s;
+                let base = self.burst_base();
+                if phase < self.burst_len_ms / 1e3 {
+                    base * self.burst_factor.max(1.0)
+                } else {
+                    base
+                }
+            }
+        }
+    }
+
+    /// Peak of the rate curve (the thinning envelope).
+    fn peak_rate(&self) -> f64 {
+        match self.shape {
+            ScenarioShape::Steady | ScenarioShape::HeavyTail => self.qps,
+            ScenarioShape::Diurnal => self.qps * (1.0 + self.diurnal_amplitude()),
+            ScenarioShape::Burst => self.burst_base() * self.burst_factor.max(1.0),
+        }
+    }
+
+    /// Generate the arrival trace: deterministic in every field + `seed`.
+    /// An empty mix produces an empty trace (there is no one to call).
+    pub fn arrivals(&self) -> Trace {
+        if self.mix.is_empty() {
+            return Trace::default();
+        }
+        let mut rng = SplitMix64::new(self.seed ^ 0x5C3A_AA10_7A11_F00D);
+        let networks: Vec<String> = self.mix.iter().map(|(n, _)| n.clone()).collect();
+        let weights: Vec<f64> =
+            self.mix.iter().map(|(_, w)| if *w > 0.0 { *w } else { 1.0 }).collect();
+        let total_w: f64 = weights.iter().sum();
+        let qps = self.qps.max(1e-9);
+        let peak = self.peak_rate().max(1e-9);
+        let alpha = self.tail_alpha.max(1.01);
+        let dur_s = self.duration_ms / 1e3;
+        let mut events = Vec::new();
+        let mut t_s = 0.0f64;
+        loop {
+            match self.shape {
+                ScenarioShape::HeavyTail => {
+                    // Pareto(xm, alpha) with mean 1/qps: xm = mean·(α−1)/α.
+                    let xm = (1.0 / qps) * (alpha - 1.0) / alpha;
+                    t_s += xm / (1.0 - rng.next_f64()).powf(1.0 / alpha);
+                }
+                _ => {
+                    // Homogeneous candidate at the peak rate...
+                    t_s += -(1.0 - rng.next_f64()).ln() / peak;
+                }
+            }
+            if t_s >= dur_s {
+                break;
+            }
+            // ...thinned to the instantaneous rate (always accepted for the
+            // constant-envelope shapes).
+            if !matches!(self.shape, ScenarioShape::HeavyTail)
+                && rng.next_f64() * peak > self.rate_at(t_s)
+            {
+                continue;
+            }
+            let mut pick = rng.next_f64() * total_w;
+            let mut net = 0u32;
+            for (i, w) in weights.iter().enumerate() {
+                pick -= w;
+                if pick <= 0.0 {
+                    net = i as u32;
+                    break;
+                }
+            }
+            events.push(TraceEvent { at_ns: (t_s * 1e9) as SimNs, net });
+        }
+        Trace { networks, events }
+    }
+}
+
+/// One offered request: arrival time + interned network index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Virtual arrival time (ns).
+    pub at_ns: SimNs,
+    /// Index into [`Trace::networks`].
+    pub net: u32,
+}
+
+/// A time-sorted arrival list over an interned network table (interning
+/// keeps a million-event trace at 12 bytes per event instead of a `String`
+/// allocation each).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Trace {
+    /// Interned network names.
+    pub networks: Vec<String>,
+    /// Arrivals, ascending `at_ns` (insertion order within a tick).
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    /// Number of arrivals.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True when the trace has no arrivals.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Time of the last arrival (ms).
+    pub fn duration_ms(&self) -> f64 {
+        self.events.last().map(|e| e.at_ns as f64 / 1e6).unwrap_or(0.0)
+    }
+
+    /// Network name of one event.
+    pub fn network_of(&self, e: &TraceEvent) -> &str {
+        &self.networks[e.net as usize]
+    }
+
+    /// Save as CSV (`at_ns,network`; header line included).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut out = String::with_capacity(self.events.len() * 24 + 16);
+        out.push_str("at_ns,network\n");
+        for e in &self.events {
+            out.push_str(&format!("{},{}\n", e.at_ns, self.network_of(e)));
+        }
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+
+    /// Load a CSV written by [`Trace::save`] (events re-sorted by time, so
+    /// hand-edited traces are tolerated).
+    pub fn load(path: &Path) -> Result<Trace> {
+        let text = std::fs::read_to_string(path)?;
+        let mut trace = Trace::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with("at_ns") {
+                continue;
+            }
+            let (at, name) = line.split_once(',').ok_or_else(|| {
+                Error::Parse(format!("{}:{}: expected `at_ns,network`", path.display(), lineno + 1))
+            })?;
+            let at_ns: SimNs = at.trim().parse().map_err(|_| {
+                Error::Parse(format!("{}:{}: bad timestamp `{at}`", path.display(), lineno + 1))
+            })?;
+            let name = name.trim();
+            let net = match trace.networks.iter().position(|n| n == name) {
+                Some(i) => i as u32,
+                None => {
+                    trace.networks.push(name.to_string());
+                    (trace.networks.len() - 1) as u32
+                }
+            };
+            trace.events.push(TraceEvent { at_ns, net });
+        }
+        trace.events.sort_by_key(|e| e.at_ns);
+        Ok(trace)
+    }
+}
+
+/// Captures offered requests from a *live* run (wall-clock timestamps
+/// relative to construction) into a replayable [`Trace`]. Thread-safe: the
+/// serving drivers call [`TraceRecorder::note`] from one client thread per
+/// network.
+pub struct TraceRecorder {
+    epoch: Instant,
+    inner: Mutex<RecorderInner>,
+}
+
+#[derive(Default)]
+struct RecorderInner {
+    networks: Vec<String>,
+    events: Vec<TraceEvent>,
+}
+
+impl Default for TraceRecorder {
+    fn default() -> Self {
+        TraceRecorder::new()
+    }
+}
+
+impl TraceRecorder {
+    /// A recorder whose t = 0 is now.
+    pub fn new() -> TraceRecorder {
+        TraceRecorder { epoch: Instant::now(), inner: Mutex::new(RecorderInner::default()) }
+    }
+
+    /// Record one offered request for `network` at the current wall offset.
+    pub fn note(&self, network: &str) {
+        let at_ns = self.epoch.elapsed().as_nanos() as SimNs;
+        let mut inner = self.inner.lock().expect("trace recorder poisoned");
+        let net = match inner.networks.iter().position(|n| n == network) {
+            Some(i) => i as u32,
+            None => {
+                inner.networks.push(network.to_string());
+                (inner.networks.len() - 1) as u32
+            }
+        };
+        inner.events.push(TraceEvent { at_ns, net });
+    }
+
+    /// Finish recording: a time-sorted, replayable trace.
+    pub fn into_trace(self) -> Trace {
+        let inner = self.inner.into_inner().expect("trace recorder poisoned");
+        let mut trace = Trace { networks: inner.networks, events: inner.events };
+        trace.events.sort_by_key(|e| e.at_ns);
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mix() -> Vec<(String, f64)> {
+        vec![("a".to_string(), 3.0), ("b".to_string(), 1.0)]
+    }
+
+    #[test]
+    fn scenario_names_round_trip() {
+        for shape in [
+            ScenarioShape::Steady,
+            ScenarioShape::Diurnal,
+            ScenarioShape::Burst,
+            ScenarioShape::HeavyTail,
+        ] {
+            assert_eq!(ScenarioShape::parse(shape.name()), Some(shape));
+        }
+        assert_eq!(ScenarioShape::parse("spike"), Some(ScenarioShape::Burst));
+        assert_eq!(ScenarioShape::parse("heavy-tail"), Some(ScenarioShape::HeavyTail));
+        assert_eq!(ScenarioShape::parse("nope"), None);
+    }
+
+    #[test]
+    fn same_seed_same_trace_different_seed_different() {
+        for shape in [
+            ScenarioShape::Steady,
+            ScenarioShape::Diurnal,
+            ScenarioShape::Burst,
+            ScenarioShape::HeavyTail,
+        ] {
+            let s = Scenario::new(shape, mix(), 500.0, 2_000.0, 42);
+            let a = s.arrivals();
+            let b = s.arrivals();
+            assert_eq!(a, b, "{shape:?}: same seed must replay identically");
+            let other = Scenario::new(shape, mix(), 500.0, 2_000.0, 43).arrivals();
+            assert_ne!(a, other, "{shape:?}: different seed must diverge");
+        }
+    }
+
+    #[test]
+    fn arrival_counts_track_the_requested_qps() {
+        for shape in [ScenarioShape::Steady, ScenarioShape::Diurnal, ScenarioShape::Burst] {
+            let s = Scenario::new(shape, mix(), 1_000.0, 10_000.0, 7);
+            let t = s.arrivals();
+            let expected = 1_000.0 * 10.0;
+            let got = t.len() as f64;
+            assert!(
+                (got - expected).abs() < expected * 0.15,
+                "{shape:?}: {got} arrivals vs ~{expected} expected"
+            );
+        }
+    }
+
+    #[test]
+    fn arrivals_are_sorted_and_within_duration() {
+        let s = Scenario::new(ScenarioShape::Burst, mix(), 2_000.0, 3_000.0, 9);
+        let t = s.arrivals();
+        let dur_ns = 3_000u64 * 1_000_000;
+        let mut last = 0;
+        for e in &t.events {
+            assert!(e.at_ns >= last, "sorted");
+            assert!(e.at_ns < dur_ns, "within duration");
+            last = e.at_ns;
+        }
+    }
+
+    #[test]
+    fn mix_weights_shape_the_network_split() {
+        let s = Scenario::new(ScenarioShape::Steady, mix(), 2_000.0, 5_000.0, 11);
+        let t = s.arrivals();
+        let a = t.events.iter().filter(|e| t.network_of(e) == "a").count() as f64;
+        let b = t.events.iter().filter(|e| t.network_of(e) == "b").count() as f64;
+        let ratio = a / b.max(1.0);
+        assert!((2.0..4.5).contains(&ratio), "3:1 weights, observed {ratio:.2}:1");
+    }
+
+    #[test]
+    fn heavy_tail_keeps_the_mean_but_clumps() {
+        let s = Scenario::new(ScenarioShape::HeavyTail, mix(), 1_000.0, 20_000.0, 13);
+        let t = s.arrivals();
+        let expected = 1_000.0 * 20.0;
+        // Pareto(1.5) sums converge slowly (infinite variance): very
+        // generous mean tolerance — the assertion is about magnitude, the
+        // seeded stream keeps the exact count reproducible.
+        assert!(
+            (t.len() as f64) > expected * 0.3 && (t.len() as f64) < expected * 3.0,
+            "{} arrivals vs ~{expected}",
+            t.len()
+        );
+        // Clumping: the maximum gap dwarfs the mean gap.
+        let mut max_gap = 0u64;
+        for w in t.events.windows(2) {
+            max_gap = max_gap.max(w[1].at_ns - w[0].at_ns);
+        }
+        let mean_gap_ns = 1e9 / 1_000.0;
+        assert!(
+            max_gap as f64 > 8.0 * mean_gap_ns,
+            "heavy tail should show gaps ≫ mean ({max_gap} ns vs mean {mean_gap_ns} ns)"
+        );
+    }
+
+    #[test]
+    fn trace_save_load_round_trips() {
+        let dir = std::env::temp_dir().join("convkit_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.csv");
+        let s = Scenario::new(ScenarioShape::Steady, mix(), 200.0, 1_000.0, 21);
+        let t = s.arrivals();
+        t.save(&path).unwrap();
+        let back = Trace::load(&path).unwrap();
+        assert_eq!(t.len(), back.len());
+        for (x, y) in t.events.iter().zip(&back.events) {
+            assert_eq!(x.at_ns, y.at_ns);
+            assert_eq!(t.network_of(x), back.network_of(y));
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn recorder_produces_a_sorted_replayable_trace() {
+        let rec = TraceRecorder::new();
+        rec.note("beta");
+        rec.note("alpha");
+        rec.note("beta");
+        let t = rec.into_trace();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.networks, vec!["beta".to_string(), "alpha".to_string()]);
+        let mut last = 0;
+        for e in &t.events {
+            assert!(e.at_ns >= last);
+            last = e.at_ns;
+        }
+    }
+}

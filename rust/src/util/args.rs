@@ -22,6 +22,7 @@ pub struct ParsedArgs {
 const BOOLEAN_FLAGS: &[&str] = &[
     "help", "french", "verbose", "quiet", "csv", "no-jitter", "release-check",
     "ascii", "exhaustive", "per-block", "golden-only", "skip-runtime",
+    "latency-slo", "no-latency-slo",
 ];
 
 impl ParsedArgs {

@@ -163,6 +163,50 @@ fn autoscale_demonstrates_model_driven_scale_up_and_down() {
 }
 
 #[test]
+fn simulate_emits_a_deterministic_capacity_report() {
+    let run = || {
+        convkit(&[
+            "simulate",
+            "--scenario",
+            "burst",
+            "--seed",
+            "42",
+            "--networks",
+            "tiny_q8",
+            "--min-bits",
+            "6",
+            "--max-bits",
+            "12",
+            "--events",
+            "5000",
+            "--control-ms",
+            "0.5",
+        ])
+    };
+    let (ok, stdout, stderr) = run();
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("what-if capacity report"), "{stdout}");
+    assert!(stdout.contains("scenario `burst`"), "{stdout}");
+    assert!(stdout.contains("max sustainable"), "{stdout}");
+    assert!(stdout.contains("tiny_q8"), "{stdout}");
+    assert!(stdout.contains("replica trajectory"), "{stdout}");
+    assert!(stdout.contains("virtual events"), "{stdout}");
+    // Determinism across whole processes: the virtual-time report block is
+    // identical (only the wall-clock timing line may differ).
+    let (ok2, stdout2, _) = run();
+    assert!(ok2);
+    let report = |s: &str| {
+        s.lines()
+            .skip_while(|l| !l.contains("what-if capacity report"))
+            .take_while(|l| !l.contains("s wall"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    assert_eq!(report(&stdout), report(&stdout2), "same seed ⇒ same report");
+    assert!(!report(&stdout).is_empty());
+}
+
+#[test]
 fn bad_option_value_is_a_usage_error() {
     let (ok, _, stderr) = convkit(&["sweep", "--min-bits", "banana"]);
     assert!(!ok);

@@ -12,7 +12,16 @@ before/after evidence.
 Exit code is always 0: the diff is evidence, not a gate (noise on shared CI
 runners would make a hard threshold flaky). Regressions are flagged inline.
 
+It can additionally diff the simulator's capacity report (the JSON written
+by ``convkit simulate --out``, top-level key ``simulate``): pass
+``--simulate CURRENT_SIM.json PREVIOUS_SIM.json`` to append a section with
+max-sustainable-QPS and per-network p95 deltas. Capacity reports are
+deterministic for a fixed seed/scenario/registry, so a delta here means the
+models or the serving semantics actually changed — unlike the timing
+tables, it is noise-free evidence.
+
 Usage: bench_diff.py CURRENT.json PREVIOUS.json [--regress-pct 25]
+                     [--simulate CURRENT_SIM.json PREVIOUS_SIM.json]
 """
 
 from __future__ import annotations
@@ -87,17 +96,89 @@ def diff(current: dict, previous: dict, regress_pct: float) -> str:
     return "\n".join(lines) + "\n"
 
 
+def load_simulate(path: str) -> dict:
+    """The `simulate` object of a capacity report (empty when unreadable)."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"note: could not read {path}: {e}", file=sys.stderr)
+        return {}
+    return doc.get("simulate", {})
+
+
+def fmt_delta(cur: float, prev: float) -> str:
+    if prev == 0:
+        return "n/a" if cur == 0 else "new"
+    return f"{100.0 * (cur - prev) / prev:+.1f}%"
+
+
+def diff_simulate(current: dict, previous: dict) -> str:
+    lines = ["## Simulated capacity diff (`convkit simulate`)", ""]
+    if not current:
+        lines.append("_No current capacity report._")
+        return "\n".join(lines) + "\n"
+    if not previous:
+        lines.append("_No previous capacity report artifact — nothing to diff._")
+        return "\n".join(lines) + "\n"
+    lines.append(
+        f"Scenario `{current.get('scenario', '?')}` seed {current.get('seed', '?')} "
+        f"on {current.get('platform', '?')}: "
+        f"{current.get('events', 0)} virtual events."
+    )
+    lines.append("")
+    lines.append("| metric | previous | current | delta |")
+    lines.append("|---|---:|---:|---:|")
+    cq = float(current.get("max_sustainable_qps", 0.0))
+    pq = float(previous.get("max_sustainable_qps", 0.0))
+    lines.append(
+        f"| max sustainable QPS | {pq:.1f} | {cq:.1f} | {fmt_delta(cq, pq)} |"
+    )
+    prev_nets = {n["network"]: n for n in previous.get("networks", [])}
+    cur_names = set()
+    for n in current.get("networks", []):
+        name = n["network"]
+        cur_names.add(name)
+        p = prev_nets.get(name)
+        c95 = float(n.get("p95_ms", 0.0))
+        if p is None:
+            cov = float(n.get("overload_rate", 0.0))
+            lines.append(f"| {name} p95 (ms) | _new_ | {c95:.4f} | |")
+            lines.append(f"| {name} overload | _new_ | {100 * cov:.2f}% | |")
+            continue
+        p95 = float(p.get("p95_ms", 0.0))
+        lines.append(
+            f"| {name} p95 (ms) | {p95:.4f} | {c95:.4f} | {fmt_delta(c95, p95)} |"
+        )
+        cov = float(n.get("overload_rate", 0.0))
+        pov = float(p.get("overload_rate", 0.0))
+        lines.append(
+            f"| {name} overload | {100 * pov:.2f}% | {100 * cov:.2f}% "
+            f"| {fmt_delta(cov, pov)} |"
+        )
+    for name in sorted(set(prev_nets) - cur_names):
+        p95 = float(prev_nets[name].get("p95_ms", 0.0))
+        lines.append(f"| {name} p95 (ms) | {p95:.4f} | _removed_ | |")
+    lines.append("")
+    return "\n".join(lines) + "\n"
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("current")
     ap.add_argument("previous")
     ap.add_argument("--regress-pct", type=float, default=25.0,
                     help="flag entries slower by at least this percentage")
+    ap.add_argument("--simulate", nargs=2, metavar=("CUR_SIM", "PREV_SIM"),
+                    help="also diff two `convkit simulate --out` reports")
     args = ap.parse_args()
     report = diff(
         load_sections(args.current), load_sections(args.previous), args.regress_pct
     )
     print(report)
+    if args.simulate:
+        cur_sim, prev_sim = args.simulate
+        print(diff_simulate(load_simulate(cur_sim), load_simulate(prev_sim)))
     return 0
 
 
