@@ -132,6 +132,34 @@ fn main() {
         );
     }
 
+    // Same trace through the contention-aware batched service model (the
+    // PR 5 engine): coalesced batches amortize the pipeline fill while
+    // co-located replicas stretch each other — this section tracks the cost
+    // of the higher-fidelity event loop relative to the serial one above.
+    let batched_models = [
+        SimServiceModel::new("simnet_a", 0.003, 64, 2)
+            .with_batching(8, 0.001)
+            .on_platform("ZCU104", 0.2),
+        SimServiceModel::new("simnet_b", 0.001, 64, 1)
+            .with_batching(8, 0.0004)
+            .on_platform("ZCU104", 0.1),
+    ];
+    let mut batched_events = 0u64;
+    b.run("simulate_batched_contended", || {
+        let mut fleet = SimFleet::new(&batched_models).expect("sim fleet");
+        let run = simulate_trace(&mut fleet, &sim_trace, &mut [], &SimRunOptions::default())
+            .expect("sim run");
+        batched_events = run.events;
+        run.events
+    });
+    if let Some(s) = b.stats("simulate_batched_contended") {
+        println!(
+            "-> batched simulator: {} virtual events/iter, {:.2}M events/s wall",
+            batched_events,
+            batched_events as f64 / (s.mean_ns / 1e9) / 1e6
+        );
+    }
+
     if let Some(s) = b.stats("fleet_4clients_x8_concurrent") {
         println!("-> fleet throughput (4 clients): {:.0} req/s", 32.0 * 1e9 / s.mean_ns);
     }

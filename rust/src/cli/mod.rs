@@ -18,7 +18,8 @@ use convkit::platform::Platform;
 use convkit::report;
 use convkit::runtime::{artifacts_dir, Runtime};
 use convkit::simulate::{
-    explore, explore_replay, Scenario, ScenarioShape, Trace, TraceRecorder, WhatIfOptions,
+    explore, explore_replay, policysearch, PolicyGrid, Scenario, ScenarioShape, Trace,
+    TraceRecorder, WhatIfOptions,
 };
 use convkit::synth::MapOptions;
 use convkit::synthdata::SweepOptions;
@@ -56,7 +57,12 @@ COMMANDS:
   simulate   virtual-clock what-if explorer      [--scenario steady|diurnal|
               burst|heavytail --seed N --networks A,B --platform P|auto
               --target 0.X --qps N --duration-ms N --events N --queue-cap N
-              --control-ms N --replay FILE --out FILE --no-latency-slo]
+              --control-ms N --max-batch N --coalesce-ms X --alpha X
+              --replay FILE --out FILE --no-latency-slo]
+  policysearch  sweep SloPolicy grids, report the Pareto front
+              [simulate's scenario/fidelity options (not --replay), plus
+              --overload A,B --p95-ratio A,B --idle-queue A,B
+              --window A,B --out FILE]
   tables     regenerate paper tables             [N | all] [--french]
   figures    regenerate Figures 1-3              [N | all] [--csv]
   blocks     list block characteristics (Table 2)
@@ -82,6 +88,7 @@ pub fn dispatch(args: &ParsedArgs) -> Result<()> {
         Some("fleet") => cmd_fleet(args),
         Some("autoscale") => cmd_autoscale(args),
         Some("simulate") => cmd_simulate(args),
+        Some("policysearch") => cmd_policysearch(args),
         Some("tables") => cmd_tables(args),
         Some("figures") => cmd_figures(args),
         Some("blocks") => {
@@ -634,7 +641,11 @@ fn cmd_autoscale(args: &ParsedArgs) -> Result<()> {
     Ok(())
 }
 
-fn cmd_simulate(args: &ParsedArgs) -> Result<()> {
+/// The simulation traffic setup shared by `simulate` and `policysearch`:
+/// scenario shape/seed, resolved demands, candidate platforms.
+fn traffic_from(
+    args: &ParsedArgs,
+) -> Result<(ScenarioShape, u64, Vec<NetworkDemand>, Vec<Platform>)> {
     let names = {
         let list = args.get_list("networks");
         if list.is_empty() {
@@ -656,18 +667,32 @@ fn cmd_simulate(args: &ParsedArgs) -> Result<()> {
     } else {
         vec![platform_from(args)?]
     };
+    Ok((shape, seed, demands, platforms))
+}
+
+/// What-if options from the shared simulation flags (`default_events` is
+/// the `--events` auto-sizing floor when the flag is absent).
+fn whatif_opts_from(args: &ParsedArgs, default_events: u64) -> Result<WhatIfOptions> {
+    let defaults = WhatIfOptions::default();
+    Ok(WhatIfOptions {
+        cap: args.get_f64("target", defaults.cap)?,
+        queue_cap: args.get_u64("queue-cap", defaults.queue_cap as u64)?.max(1) as usize,
+        max_batch: args.get_u64("max-batch", defaults.max_batch as u64)?.max(1) as usize,
+        coalesce_window_ms: args.get_f64("coalesce-ms", defaults.coalesce_window_ms)?,
+        contention_alpha: args.get_f64("alpha", defaults.contention_alpha)?.max(0.0),
+        control_interval_ms: args.get_f64("control-ms", defaults.control_interval_ms)?,
+        min_arrivals: args.get_u64("events", default_events)?.max(1),
+        latency_slo: !args.flag("no-latency-slo"),
+        ..defaults
+    })
+}
+
+fn cmd_simulate(args: &ParsedArgs) -> Result<()> {
+    let (shape, seed, demands, platforms) = traffic_from(args)?;
 
     // The paper side: fitted models price every replica and service rate.
     let rep = run_report(args)?;
-    let defaults = WhatIfOptions::default();
-    let opts = WhatIfOptions {
-        cap: args.get_f64("target", defaults.cap)?,
-        queue_cap: args.get_u64("queue-cap", defaults.queue_cap as u64)?.max(1) as usize,
-        control_interval_ms: args.get_f64("control-ms", defaults.control_interval_ms)?,
-        min_arrivals: args.get_u64("events", defaults.min_arrivals)?.max(1),
-        latency_slo: !args.flag("no-latency-slo"),
-        ..defaults
-    };
+    let opts = whatif_opts_from(args, WhatIfOptions::default().min_arrivals)?;
 
     // --events is the auto-sizing floor: an explicit --duration-ms pins the
     // virtual window instead, so say so rather than silently dropping it.
@@ -710,6 +735,71 @@ fn cmd_simulate(args: &ParsedArgs) -> Result<()> {
     if let Some(out) = args.get("out") {
         std::fs::write(out, report.to_json())?;
         println!("capacity report written to {out}");
+    }
+    Ok(())
+}
+
+/// Parse a comma-separated `--key` list of numbers, with a default.
+fn num_list<T: std::str::FromStr + Clone>(
+    args: &ParsedArgs,
+    key: &str,
+    default: &[T],
+) -> Result<Vec<T>> {
+    let raw = args.get_list(key);
+    if raw.is_empty() {
+        return Ok(default.to_vec());
+    }
+    raw.iter()
+        .map(|v| {
+            v.parse()
+                .map_err(|_| Error::Usage(format!("--{key} expects numbers, got `{v}`")))
+        })
+        .collect()
+}
+
+fn cmd_policysearch(args: &ParsedArgs) -> Result<()> {
+    if args.get("replay").is_some() {
+        return Err(Error::Usage(
+            "policysearch sweeps a synthetic scenario; --replay is not supported \
+             (replay a recorded trace with `convkit simulate --replay` instead)"
+                .into(),
+        ));
+    }
+    let (shape, seed, demands, platforms) = traffic_from(args)?;
+    // Every grid row replays the full trace, so the default arrival floor
+    // is smaller than `simulate`'s single-run one.
+    let opts = whatif_opts_from(args, 100_000)?;
+    let base = PolicyGrid::default();
+    let grid = PolicyGrid {
+        overload_targets: num_list(args, "overload", &base.overload_targets)?,
+        p95_ratios: num_list(args, "p95-ratio", &base.p95_ratios)?,
+        idle_queue_utils: num_list(args, "idle-queue", &base.idle_queue_utils)?,
+        windows: num_list(args, "window", &base.windows)?,
+    };
+
+    // The paper side: fitted models price every replica and service rate.
+    let rep = run_report(args)?;
+    let scenario = Scenario::new(
+        shape,
+        Vec::new(),
+        args.get_f64("qps", 0.0)?,
+        args.get_f64("duration-ms", 0.0)?,
+        seed,
+    );
+    let t0 = Instant::now();
+    let report =
+        policysearch::search(&demands, &rep.registry, &platforms, &scenario, &grid, &opts)?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!("{}", report::pareto_table(&report));
+    println!(
+        "swept {} policies over {} arrivals in {wall:.2}s wall — every run on the \
+         virtual clock, no executors",
+        report.rows.len(),
+        report.arrivals
+    );
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, report.to_json())?;
+        println!("policy-search report written to {out}");
     }
     Ok(())
 }

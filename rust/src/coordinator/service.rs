@@ -231,7 +231,15 @@ type PendingInfer =
 /// Batching window: long enough to coalesce concurrent clients, short enough
 /// not to dominate single-client latency (§Perf: 200 µs → 100 µs cut mean
 /// latency ~20% with no batching regression on the concurrent test).
-const BATCH_WINDOW: Duration = Duration::from_micros(100);
+///
+/// Public because the traffic simulator mirrors this coalescing behaviour
+/// (`simulate::SimServiceModel`): the live worker blocks for the first
+/// request, then absorbs arrivals for up to this window (capped at
+/// `batch_size`) before executing the batch — under backlog the window is
+/// never waited out, because queued messages return from `recv_timeout`
+/// immediately, so batches chain back-to-back. The virtual service model
+/// reproduces exactly that two-regime curve.
+pub const BATCH_WINDOW: Duration = Duration::from_micros(100);
 
 /// Latency samples retained for mean/percentile estimation: a ring of the
 /// most recent completions, so snapshots stay O(window) and worker memory

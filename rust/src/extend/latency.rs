@@ -11,6 +11,10 @@ pub struct LatencyEstimate {
     pub cycles_parallel: u64,
     /// Cycles when every layer is folded onto a single block instance.
     pub cycles_folded: u64,
+    /// Pipeline-fill cycles of the parallel mapping (one initiation
+    /// interval per layer): the component of `cycles_parallel` paid once
+    /// per *batch* when inferences stream back-to-back, not once per image.
+    pub cycles_fill: u64,
     /// Frames per second at `clock_mhz`, fully parallel.
     pub fps_parallel: f64,
     /// Frames per second folded.
@@ -27,6 +31,23 @@ impl LatencyEstimate {
     /// Milliseconds per inference, folded.
     pub fn ms_folded(&self) -> f64 {
         1e3 / self.fps_folded
+    }
+
+    /// Milliseconds of the parallel pipeline fill — the amortizable part of
+    /// [`LatencyEstimate::ms_parallel`]. A coalesced batch of `b` images
+    /// streamed through the pipeline takes
+    /// `ms_fill() + b × (ms_parallel() − ms_fill())`: the fill is paid once,
+    /// the drain once per image (see [`LatencyEstimate::ms_batch`]).
+    pub fn ms_fill(&self) -> f64 {
+        self.ms_parallel() * self.cycles_fill as f64 / (self.cycles_parallel as f64).max(1.0)
+    }
+
+    /// Model-predicted latency (ms) of a coalesced batch of `b` images on
+    /// one replica — the batch latency curve the traffic simulator's
+    /// virtual service model drains queues with.
+    pub fn ms_batch(&self, b: u64) -> f64 {
+        let fill = self.ms_fill();
+        fill + (self.ms_parallel() - fill) * b.max(1) as f64
     }
 }
 
@@ -55,6 +76,7 @@ where
     }
     let mut cyc_par = 0u64;
     let mut cyc_fold = 0u64;
+    let mut cyc_fill = 0u64;
     let mut clock = f64::INFINITY;
     let mut h = net.in_h as u64;
     let mut w = net.in_w as u64;
@@ -68,6 +90,7 @@ where
         // Parallel: all kernels in flight; a layer drains its windows at II
         // per lane-pair.
         cyc_par += windows * ii / lanes + ii; // + pipeline fill
+        cyc_fill += ii;
         // Folded: one block instance does kernels × windows MAC groups.
         cyc_fold += kernels.div_ceil(lanes) * windows * ii + ii;
         clock = clock.min(clock_mhz(kind));
@@ -78,6 +101,7 @@ where
     Ok(LatencyEstimate {
         cycles_parallel: cyc_par,
         cycles_folded: cyc_fold,
+        cycles_fill: cyc_fill,
         fps_parallel: f / cyc_par as f64,
         fps_folded: f / cyc_fold as f64,
     })
@@ -140,5 +164,19 @@ mod tests {
     fn fps_positive_and_finite() {
         let e = latency_estimate(&zoo::tiny(), BlockKind::Conv4).unwrap();
         assert!(e.fps_parallel.is_finite() && e.fps_parallel > 0.0);
+    }
+
+    #[test]
+    fn batch_curve_amortizes_the_pipeline_fill() {
+        let e = latency_estimate(&zoo::tiny(), BlockKind::Conv2).unwrap();
+        assert!(e.cycles_fill > 0 && e.cycles_fill < e.cycles_parallel);
+        assert!(e.ms_fill() > 0.0 && e.ms_fill() < e.ms_parallel());
+        // b = 1 is exactly the single-inference latency.
+        assert!((e.ms_batch(1) - e.ms_parallel()).abs() < 1e-12);
+        // Per-image cost strictly improves with batch size: the fill is paid
+        // once per batch instead of once per image.
+        let per8 = e.ms_batch(8) / 8.0;
+        assert!(per8 < e.ms_parallel(), "{per8} vs {}", e.ms_parallel());
+        assert!(per8 > e.ms_parallel() - e.ms_fill(), "bounded by the drain time");
     }
 }

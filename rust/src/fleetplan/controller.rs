@@ -344,6 +344,8 @@ mod tests {
                 network: "a".into(),
                 unit,
                 predicted_ms: 1.0,
+                fill_ms: 0.1,
+                util_frac: 100.0 / 1382.0,
                 replicas: 13,
                 min_replicas: 1,
                 max_replicas: 0,
@@ -435,6 +437,8 @@ mod tests {
             network: name.into(),
             unit,
             predicted_ms: 1.0,
+            fill_ms: 0.1,
+            util_frac: 100.0 / 1382.0,
             replicas: 6,
             min_replicas: 1,
             max_replicas: 0,

@@ -46,6 +46,16 @@
 //! network against its model-predicted service latency × a ratio instead of
 //! an absolute constant, and [`plan_with_spill`] splits a fleet across two
 //! devices when one cannot hold every replica floor.
+//!
+//! Each [`NetworkPlan`] row also carries the simulator's service-model
+//! inputs: `predicted_ms` (service rate), `fill_ms` (the amortizable
+//! pipeline-fill component of the batch latency curve) and `util_frac`
+//! (the replica's share of the device's capped budget — the
+//! device-contention driver). And [`SloPolicy`] is no longer hand-picked
+//! only: `simulate::policysearch` sweeps its knob grid through the what-if
+//! simulator and reports the Pareto front (`convkit policysearch`), so a
+//! deployment ships the policy the models recommend. See `docs/GUIDE.md`
+//! for the end-to-end operator walkthrough.
 
 pub mod controller;
 pub mod planner;

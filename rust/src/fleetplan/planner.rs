@@ -36,6 +36,15 @@ pub struct NetworkDemand {
 
 impl NetworkDemand {
     /// Demand with weight 1, floor 1, platform-bounded ceiling.
+    ///
+    /// ```
+    /// use convkit::cnn::zoo;
+    /// use convkit::fleetplan::NetworkDemand;
+    /// let d = NetworkDemand::new(zoo::tiny()).with_weight(3.0).with_min_replicas(2);
+    /// assert_eq!(d.weight, 3.0);
+    /// assert_eq!(d.min_replicas, 2);
+    /// assert_eq!(d.max_replicas, 0, "0 = bounded only by the platform");
+    /// ```
     pub fn new(spec: NetworkSpec) -> NetworkDemand {
         NetworkDemand { spec, weight: 1.0, min_replicas: 1, max_replicas: 0 }
     }
@@ -71,6 +80,18 @@ pub struct NetworkPlan {
     /// clock) — the latency-aware SLO target and the simulator's service
     /// rate both derive from this.
     pub predicted_ms: f64,
+    /// Pipeline-fill component of `predicted_ms` (ms): paid once per
+    /// *coalesced batch* instead of once per inference when requests stream
+    /// back-to-back (see [`crate::extend::latency::LatencyEstimate::ms_batch`]).
+    /// The simulator's batch latency curve is
+    /// `fill_ms + b × (predicted_ms − fill_ms)`.
+    pub fill_ms: f64,
+    /// Share of the hosting platform's *capped* budget one replica occupies
+    /// (the worst resource column of `unit` over the capped budget, in
+    /// `[0, 1]`) — the same per-column capacity math [`plan_fleet`]'s fill
+    /// packs against. The simulator derives device-contention slowdowns
+    /// from the sum of co-located shares.
+    pub util_frac: f64,
     /// Replicas the platform supports for this network at the solved fill
     /// (the autoscaler's ceiling when the demand sets none of its own).
     pub replicas: u64,
@@ -133,6 +154,21 @@ impl FleetPlan {
     }
 }
 
+/// Worst-column share of `budget` that `unit` occupies (0 when the budget
+/// column is empty — an empty column can never be the packing bottleneck
+/// because [`plan_fleet`] rejects any unit that overflows it outright).
+fn unit_utilization(unit: &ResourceVector, budget: &ResourceVector) -> f64 {
+    use crate::synth::Resource;
+    let mut frac = 0.0f64;
+    for r in Resource::ALL {
+        let (u, b) = (unit.get(r), budget.get(r));
+        if b > 0 {
+            frac = frac.max(u as f64 / b as f64);
+        }
+    }
+    frac
+}
+
 /// Solve replica counts for `demands` on `platform` under `cap`.
 ///
 /// Per-replica prices come from [`plan_deployment`] (the fitted models);
@@ -154,12 +190,13 @@ pub fn plan_fleet(
     let mut networks: Vec<NetworkPlan> = Vec::with_capacity(demands.len());
     for d in demands {
         let deployment = plan_deployment(&d.spec, registry, platform, cap)?;
-        let predicted_ms =
-            crate::extend::latency::deployment_latency(&d.spec, &deployment)?.ms_parallel();
+        let lat = crate::extend::latency::deployment_latency(&d.spec, &deployment)?;
         networks.push(NetworkPlan {
             network: d.spec.name.clone(),
             unit: deployment.total,
-            predicted_ms,
+            predicted_ms: lat.ms_parallel(),
+            fill_ms: lat.ms_fill(),
+            util_frac: unit_utilization(&deployment.total, &budget),
             replicas: 0,
             min_replicas: d.min_replicas.max(1),
             max_replicas: d.max_replicas,
@@ -485,11 +522,16 @@ mod tests {
         let row = plan.get("tiny_q8").unwrap();
         // The row's latency is exactly the deployment-mix estimate.
         let dep = plan_deployment(&zoo::tiny(), &reg, &Platform::zcu104(), 0.8).unwrap();
-        let want = crate::extend::latency::deployment_latency(&zoo::tiny(), &dep)
-            .unwrap()
-            .ms_parallel();
+        let lat = crate::extend::latency::deployment_latency(&zoo::tiny(), &dep).unwrap();
         assert!(row.predicted_ms > 0.0 && row.predicted_ms.is_finite());
-        assert_eq!(row.predicted_ms, want);
+        assert_eq!(row.predicted_ms, lat.ms_parallel());
+        // The batch-curve fill and the device share ride along.
+        assert_eq!(row.fill_ms, lat.ms_fill());
+        assert!(row.fill_ms > 0.0 && row.fill_ms < row.predicted_ms);
+        assert!(row.util_frac > 0.0 && row.util_frac <= 1.0, "{}", row.util_frac);
+        // util_frac mirrors the fill's capacity math: the solved replica
+        // ceiling times the share cannot meaningfully exceed the budget.
+        assert!(row.util_frac * plan.replicas_for("tiny_q8") as f64 <= 1.0 + 1e-9);
     }
 
     #[test]

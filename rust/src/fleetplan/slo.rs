@@ -35,6 +35,22 @@ use crate::coordinator::{ShardStats, ShardedStats};
 use std::collections::{BTreeMap, VecDeque};
 
 /// Scale-triggering objectives, per network (one policy for the fleet).
+///
+/// The four knobs below (overload target, p95 ratio, idle-queue threshold,
+/// hysteresis window) are exactly the grid `simulate::policysearch` sweeps
+/// — hand-pick them, or let the simulator's Pareto front pick for you.
+///
+/// ```
+/// use std::collections::BTreeMap;
+/// use convkit::fleetplan::{SloPolicy, SloTracker};
+/// let policy = SloPolicy { p95_ratio: 4.0, p95_target_ms: 50.0, ..SloPolicy::default() };
+/// // A network with a model-predicted 2 ms service latency is judged
+/// // against predicted × ratio; one without falls back to the constant.
+/// let predicted = BTreeMap::from([("lenet_q8".to_string(), 2.0)]);
+/// let tracker = SloTracker::with_predicted(policy, predicted);
+/// assert_eq!(tracker.p95_target_ms("lenet_q8"), 8.0);
+/// assert_eq!(tracker.p95_target_ms("unknown"), 50.0);
+/// ```
 #[derive(Debug, Clone)]
 pub struct SloPolicy {
     /// Absolute p95 latency objective (milliseconds) — the fallback for

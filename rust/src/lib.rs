@@ -34,9 +34,16 @@
 //!    sharded fleet — with every decision justified by predicted resources.
 //!    [`simulate`] rehearses those decisions on a virtual clock: seeded
 //!    traffic scenarios (or recorded traces) replay against the
-//!    model-predicted fleet through the same controller code path, turning
-//!    fleet-plan and policy questions into millisecond what-if reports.
+//!    model-predicted fleet through the same controller code path — with
+//!    batch coalescing and device contention in the virtual service model —
+//!    turning fleet-plan and policy questions into millisecond what-if
+//!    reports, and `simulate::policysearch` sweeps the autoscaler's SLO
+//!    policy grid over one scenario to a Pareto front.
 //! 8. [`report`] — regenerates every table and figure of the paper's evaluation.
+//!
+//! An operator-facing walkthrough of the whole chain — paper tables →
+//! fitted models → fleet plan → simulation → policy search, with a runnable
+//! CLI session per stage — lives in `docs/GUIDE.md`.
 //!
 //! ## Quickstart
 //!

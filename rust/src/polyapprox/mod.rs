@@ -112,6 +112,17 @@ pub enum Activation {
 impl Activation {
     /// Parse a CLI-facing name: `identity`, `relu`, `sigmoid2`, `tanh3`,
     /// `silu2`, … (trailing digit = degree, default 2).
+    ///
+    /// ```
+    /// use convkit::polyapprox::{ActFn, Activation, PolyDegree};
+    /// let act = Activation::parse("tanh3").unwrap();
+    /// assert_eq!(act, Activation::Poly { f: ActFn::Tanh, degree: PolyDegree::Three });
+    /// assert_eq!(act.to_string(), "tanh3"); // round-trips
+    /// // ReLU needs no polynomial and is exact after binding.
+    /// let relu = Activation::parse("relu").unwrap();
+    /// assert_eq!(relu.bind(8).apply(-7), 0);
+    /// assert_eq!(relu.bind(8).apply(5), 5);
+    /// ```
     pub fn parse(s: &str) -> Option<Activation> {
         let s = s.to_ascii_lowercase();
         match s.as_str() {

@@ -3,9 +3,11 @@
 //! text so the CLI, benches and tests share one implementation.
 
 pub mod capacity;
+pub mod pareto;
 pub mod tables;
 pub mod figures;
 
 pub use capacity::capacity_table;
 pub use figures::{figure_csv, figure_surface};
+pub use pareto::pareto_table;
 pub use tables::{table1, table2, table3, table4, table5};

@@ -1,0 +1,122 @@
+//! Rendering of SLO policy-search reports: the swept grid as a fixed-width
+//! table with the Pareto front starred (the simulator's Table-5-style
+//! output for *control policies* instead of block mixes).
+
+use crate::simulate::PolicySearchReport;
+
+/// Render one policy-search report: scenario header, one row per swept
+/// policy (knobs, sustained QPS, p95, reject rate, replica-seconds, scale
+/// activity), `*` marking Pareto-front rows, and a front summary.
+pub fn pareto_table(r: &PolicySearchReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "=== SLO policy search: scenario `{}` (seed {}) ===\n",
+        r.scenario, r.seed
+    ));
+    let host = match &r.spill_platform {
+        Some(s) => format!("{} + spill {}", r.platform, s),
+        None => r.platform.clone(),
+    };
+    out.push_str(&format!(
+        "platform: {host}   cap {:.0}%   offered ~{:.0} qps over {} arrivals   \
+         grid: {} policies\n\n",
+        100.0 * r.cap,
+        r.qps,
+        r.arrivals,
+        r.rows.len()
+    ));
+    out.push_str(&format!(
+        "  {:<1} {:>8} {:>6} {:>6} {:>4} {:>12} {:>10} {:>8} {:>10} {:>5} {:>5}\n",
+        "", "overload", "ratio", "idle", "win", "sustained", "p95 ms", "reject", "repl-sec",
+        "ups", "downs"
+    ));
+    for row in &r.rows {
+        out.push_str(&format!(
+            "  {:<1} {:>8.4} {:>6.2} {:>6.3} {:>4} {:>9.1}qps {:>10.4} {:>7.2}% {:>10.3} {:>5} {:>5}\n",
+            if row.pareto { "*" } else { " " },
+            row.policy.overload_target,
+            row.policy.p95_ratio,
+            row.policy.idle_queue_util,
+            row.policy.window,
+            row.sustained_qps,
+            row.p95_ms,
+            100.0 * row.reject_rate,
+            row.replica_seconds,
+            row.scale_ups,
+            row.scale_downs,
+        ));
+    }
+    let front = r.front();
+    out.push_str(&format!(
+        "\nPareto front: {} of {} policies (no other policy is at least as \
+         good on every objective)\n",
+        front.len(),
+        r.rows.len()
+    ));
+    for row in front {
+        out.push_str(&format!(
+            "  * overload {:.4} / ratio {:.2} / idle {:.3} / window {} -> \
+             {:.1} qps, p95 {:.4} ms, {:.2}% rejected, {:.3} replica-sec\n",
+            row.policy.overload_target,
+            row.policy.p95_ratio,
+            row.policy.idle_queue_util,
+            row.policy.window,
+            row.sustained_qps,
+            row.p95_ms,
+            100.0 * row.reject_rate,
+            row.replica_seconds,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleetplan::SloPolicy;
+    use crate::simulate::PolicyScore;
+
+    fn report() -> PolicySearchReport {
+        let score = |ratio: f64, qps: f64, pareto: bool| PolicyScore {
+            policy: SloPolicy { p95_ratio: ratio, ..SloPolicy::default() },
+            sustained_qps: qps,
+            p95_ms: 0.0123,
+            reject_rate: 0.01,
+            replica_seconds: 7.5,
+            scale_ups: 3,
+            scale_downs: 1,
+            pareto,
+        };
+        PolicySearchReport {
+            scenario: "burst".into(),
+            seed: 42,
+            platform: "KV260".into(),
+            spill_platform: None,
+            cap: 0.8,
+            qps: 1500.0,
+            arrivals: 20_000,
+            rows: vec![score(2.0, 1400.0, true), score(6.0, 1200.0, false)],
+        }
+    }
+
+    #[test]
+    fn table_names_scenario_front_and_knobs() {
+        let text = pareto_table(&report());
+        assert!(text.contains("scenario `burst`"), "{text}");
+        assert!(text.contains("KV260"), "{text}");
+        assert!(text.contains("grid: 2 policies"), "{text}");
+        assert!(text.contains("Pareto front: 1 of 2"), "{text}");
+        assert!(text.contains("1400.0"), "{text}");
+    }
+
+    #[test]
+    fn json_is_deterministic_and_carries_the_front() {
+        let r = report();
+        let j = r.to_json();
+        assert!(j.contains("\"policysearch\""), "{j}");
+        assert!(j.contains("\"front\": [0]"), "{j}");
+        assert!(j.contains("\"pareto\": true"), "{j}");
+        assert!(j.contains("\"p95_ratio\": 2.00"), "{j}");
+        assert_eq!(j, report().to_json());
+    }
+}

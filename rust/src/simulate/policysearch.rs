@@ -1,0 +1,385 @@
+//! SLO policy search: sweep `SloPolicy` grids through the what-if
+//! simulator and report the Pareto front.
+//!
+//! PR 3 hand-picked the autoscaler's [`SloPolicy`] knobs; this module turns
+//! them into a searched design space, the same move the paper makes for
+//! block configurations (and CNN2Gate, arXiv:2004.04641, makes for whole
+//! accelerator designs): when evaluation is cheap — a controlled traffic
+//! run costs milliseconds of wall time on the virtual clock — exhaustive
+//! sweeps beat intuition. [`search`] replays ONE fixed scenario trace
+//! against every policy in a [`PolicyGrid`] (queue-idle threshold, overload
+//! target, p95 ratio, hysteresis window) through the *production*
+//! controller path (`whatif::run_controlled` →
+//! [`crate::fleetplan::Autoscaler::step_target`]), scores each run on
+//!
+//! * **sustained QPS** — completions per virtual second (a policy that
+//!   falls behind drags its drain tail and scores lower),
+//! * **p95 latency** — worst per-network all-time virtual p95,
+//! * **reject rate** — bounded-admission turn-aways over offers,
+//! * **replica-seconds** — the trajectory's ∫ replicas dt cost,
+//!
+//! and marks the policies no other policy beats on every axis
+//! ([`pareto_front`]). Everything is a pure function of
+//! `(scenario, seed, registry, grid, options)`, so the report JSON is
+//! byte-identical across runs and CI archives and diffs it like
+//! `SIM_capacity.json`. Surfaces: `convkit policysearch`,
+//! [`crate::report::pareto_table`].
+
+use super::whatif::{
+    autosize_scenario, json_escape, plan_rows, run_controlled, WhatIfOptions,
+};
+use super::workload::Scenario;
+use crate::fleetplan::{select_platform_or_spill, NetworkDemand, ScaleAction, SloPolicy};
+use crate::models::ModelRegistry;
+use crate::platform::Platform;
+use crate::simulate::TrajectoryPoint;
+use crate::util::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// The swept `SloPolicy` knob grid (cartesian product; row order is the
+/// nested iteration order: overload → ratio → idle-queue → window).
+#[derive(Debug, Clone)]
+pub struct PolicyGrid {
+    /// Tolerated overload rates ([`SloPolicy::overload_target`]).
+    pub overload_targets: Vec<f64>,
+    /// Latency-aware p95 ratios ([`SloPolicy::p95_ratio`]).
+    pub p95_ratios: Vec<f64>,
+    /// Idle queue-utilization thresholds ([`SloPolicy::idle_queue_util`]).
+    pub idle_queue_utils: Vec<f64>,
+    /// Hysteresis windows in snapshots ([`SloPolicy::window`]).
+    pub windows: Vec<usize>,
+}
+
+impl Default for PolicyGrid {
+    /// A 2×2×2×2 grid bracketing the PR 3 hand-picked defaults.
+    fn default() -> Self {
+        PolicyGrid {
+            overload_targets: vec![0.005, 0.02],
+            p95_ratios: vec![2.0, 6.0],
+            idle_queue_utils: vec![0.05, 0.25],
+            windows: vec![2, 4],
+        }
+    }
+}
+
+impl PolicyGrid {
+    /// Grid size (number of policies swept).
+    pub fn len(&self) -> usize {
+        self.overload_targets.len()
+            * self.p95_ratios.len()
+            * self.idle_queue_utils.len()
+            * self.windows.len()
+    }
+
+    /// True when any axis is empty (nothing to sweep).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Materialize the grid over `base` (which contributes the absolute
+    /// p95 fallback target), in deterministic row order.
+    pub fn policies(&self, base: &SloPolicy) -> Vec<SloPolicy> {
+        let mut out = Vec::with_capacity(self.len());
+        for &overload_target in &self.overload_targets {
+            for &p95_ratio in &self.p95_ratios {
+                for &idle_queue_util in &self.idle_queue_utils {
+                    for &window in &self.windows {
+                        out.push(SloPolicy {
+                            p95_target_ms: base.p95_target_ms,
+                            p95_ratio,
+                            overload_target,
+                            idle_queue_util,
+                            window,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One policy's scored run.
+#[derive(Debug, Clone)]
+pub struct PolicyScore {
+    /// The policy that produced this row.
+    pub policy: SloPolicy,
+    /// Completions per virtual second over the whole run (drain included).
+    pub sustained_qps: f64,
+    /// Worst per-network all-time p95 completion latency (virtual ms).
+    pub p95_ms: f64,
+    /// Rejected / offered across all networks.
+    pub reject_rate: f64,
+    /// ∫ routable replicas dt over the run (virtual replica-seconds) — the
+    /// fleet-cost axis.
+    pub replica_seconds: f64,
+    /// Scale-up decisions taken.
+    pub scale_ups: usize,
+    /// Scale-down decisions taken.
+    pub scale_downs: usize,
+    /// On the Pareto front (no other row is at least as good on every
+    /// objective and strictly better on one).
+    pub pareto: bool,
+}
+
+/// The full sweep outcome for one scenario.
+#[derive(Debug, Clone)]
+pub struct PolicySearchReport {
+    /// Scenario name.
+    pub scenario: String,
+    /// Scenario seed.
+    pub seed: u64,
+    /// Selected primary platform.
+    pub platform: String,
+    /// Spill platform, when one device could not hold the floors.
+    pub spill_platform: Option<String>,
+    /// Utilization cap used for planning.
+    pub cap: f64,
+    /// Mean offered load of the swept trace (requests per virtual second).
+    pub qps: f64,
+    /// Arrivals in the swept trace (every policy sees the same one).
+    pub arrivals: u64,
+    /// One scored row per policy, in grid order.
+    pub rows: Vec<PolicyScore>,
+}
+
+impl PolicySearchReport {
+    /// The Pareto-front rows, in grid order.
+    pub fn front(&self) -> Vec<&PolicyScore> {
+        self.rows.iter().filter(|r| r.pareto).collect()
+    }
+
+    /// Deterministic hand-rolled JSON (no serde offline), byte-identical
+    /// for a fixed `(scenario, seed, registry, grid, options)` — archived
+    /// and diffed by CI alongside `SIM_capacity.json`.
+    ///
+    /// Schema (top-level key `policysearch`):
+    ///
+    /// ```json
+    /// {"policysearch": {
+    ///   "scenario": "burst", "seed": 42, "platform": "KV260",
+    ///   "spill_platform": null, "cap": 0.800, "qps": 1234.5,
+    ///   "arrivals": 20000, "grid": 16, "front": [0, 3],
+    ///   "rows": [
+    ///     {"overload_target": 0.0050, "p95_ratio": 2.00,
+    ///      "idle_queue_util": 0.050, "window": 2,
+    ///      "sustained_qps": 1200.0, "p95_ms": 0.012345,
+    ///      "reject_rate": 0.001000, "replica_seconds": 12.345,
+    ///      "scale_ups": 3, "scale_downs": 2, "pareto": true}]}}
+    /// ```
+    ///
+    /// `front` lists the indices of `rows` on the Pareto front; row order
+    /// is the grid's nested iteration order.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n  \"policysearch\": {\n");
+        out.push_str(&format!("    \"scenario\": \"{}\",\n", json_escape(&self.scenario)));
+        out.push_str(&format!("    \"seed\": {},\n", self.seed));
+        out.push_str(&format!("    \"platform\": \"{}\",\n", json_escape(&self.platform)));
+        match &self.spill_platform {
+            Some(p) => {
+                out.push_str(&format!("    \"spill_platform\": \"{}\",\n", json_escape(p)))
+            }
+            None => out.push_str("    \"spill_platform\": null,\n"),
+        }
+        out.push_str(&format!("    \"cap\": {:.3},\n", self.cap));
+        out.push_str(&format!("    \"qps\": {:.1},\n", self.qps));
+        out.push_str(&format!("    \"arrivals\": {},\n", self.arrivals));
+        out.push_str(&format!("    \"grid\": {},\n", self.rows.len()));
+        let front: Vec<String> = self
+            .rows
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.pareto)
+            .map(|(i, _)| i.to_string())
+            .collect();
+        out.push_str(&format!("    \"front\": [{}],\n", front.join(", ")));
+        out.push_str("    \"rows\": [\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            out.push_str(&format!(
+                "      {{\"overload_target\": {:.4}, \"p95_ratio\": {:.2}, \
+                 \"idle_queue_util\": {:.3}, \"window\": {}, \
+                 \"sustained_qps\": {:.1}, \"p95_ms\": {:.6}, \
+                 \"reject_rate\": {:.6}, \"replica_seconds\": {:.3}, \
+                 \"scale_ups\": {}, \"scale_downs\": {}, \"pareto\": {}}}{}\n",
+                r.policy.overload_target,
+                r.policy.p95_ratio,
+                r.policy.idle_queue_util,
+                r.policy.window,
+                r.sustained_qps,
+                r.p95_ms,
+                r.reject_rate,
+                r.replica_seconds,
+                r.scale_ups,
+                r.scale_downs,
+                r.pareto,
+                if i + 1 == self.rows.len() { "" } else { "," }
+            ));
+        }
+        out.push_str("    ]\n  }\n}\n");
+        out
+    }
+}
+
+/// Pareto-front flags for a set of points under *minimization* of every
+/// coordinate: `true` where no other point is ≤ on every coordinate and
+/// strictly < on at least one. Duplicated points all stay on the front.
+///
+/// ```
+/// use convkit::simulate::policysearch::pareto_front;
+/// let pts = vec![
+///     vec![0.0, 1.0], // best on axis 0
+///     vec![1.0, 0.0], // best on axis 1
+///     vec![1.0, 1.0], // dominated by [0.5, 0.5]
+///     vec![0.5, 0.5], // a trade-off nobody beats
+/// ];
+/// assert_eq!(pareto_front(&pts), vec![true, true, false, true]);
+/// ```
+pub fn pareto_front(points: &[Vec<f64>]) -> Vec<bool> {
+    let dominates = |a: &[f64], b: &[f64]| {
+        a.iter().zip(b).all(|(x, y)| x <= y) && a.iter().zip(b).any(|(x, y)| x < y)
+    };
+    points
+        .iter()
+        .map(|p| !points.iter().any(|q| dominates(q, p)))
+        .collect()
+}
+
+/// ∫ routable replicas dt (virtual seconds) over a replica trajectory that
+/// records the initial counts plus every change point.
+fn replica_seconds(trajectory: &[TrajectoryPoint], end_ms: f64) -> f64 {
+    let mut per: BTreeMap<&str, Vec<(f64, usize)>> = BTreeMap::new();
+    for p in trajectory {
+        per.entry(p.network.as_str()).or_default().push((p.t_ms, p.replicas));
+    }
+    let mut total = 0.0;
+    for pts in per.values() {
+        for (i, (t, n)) in pts.iter().enumerate() {
+            let t_next = pts.get(i + 1).map(|(t2, _)| *t2).unwrap_or(end_ms).max(*t);
+            total += *n as f64 * (t_next - t) / 1e3;
+        }
+    }
+    total
+}
+
+/// Sweep `grid` over one auto-sized scenario: plan (with spill fallback),
+/// generate ONE trace, replay it through the production controller once per
+/// policy, score, and mark the Pareto front. `opts.policy` supplies the
+/// absolute p95 fallback target; its swept knobs are overridden per row.
+pub fn search(
+    demands: &[NetworkDemand],
+    registry: &ModelRegistry,
+    platforms: &[Platform],
+    scenario: &Scenario,
+    grid: &PolicyGrid,
+    opts: &WhatIfOptions,
+) -> Result<PolicySearchReport> {
+    if grid.is_empty() {
+        return Err(Error::InvalidConfig(
+            "policy grid is empty: every axis needs at least one value".into(),
+        ));
+    }
+    let spill = select_platform_or_spill(demands, registry, platforms, opts.cap)?;
+    let sc = autosize_scenario(scenario, demands, &spill, opts)?;
+    let trace = sc.arrivals();
+    if trace.is_empty() {
+        return Err(Error::InvalidConfig("policy search trace has no arrivals".into()));
+    }
+
+    let mut rows = Vec::with_capacity(grid.len());
+    for policy in grid.policies(&opts.policy) {
+        let (run, _) = run_controlled(&spill, &trace, &policy, opts)?;
+        let virtual_s = (run.virtual_ms / 1e3).max(1e-9);
+        let p95_ms = run.networks.iter().map(|n| n.p95_ms).fold(0.0f64, f64::max);
+        let reject_rate = if run.offered == 0 {
+            0.0
+        } else {
+            run.rejected as f64 / run.offered as f64
+        };
+        let scale_ups =
+            run.decisions.iter().filter(|d| d.action == ScaleAction::Up).count();
+        rows.push(PolicyScore {
+            policy,
+            sustained_qps: run.completed as f64 / virtual_s,
+            p95_ms,
+            reject_rate,
+            replica_seconds: replica_seconds(&run.trajectory, run.virtual_ms),
+            scale_ups,
+            scale_downs: run.decisions.len() - scale_ups,
+            pareto: false,
+        });
+    }
+
+    // Objectives as a minimization problem: −QPS, p95, rejects, cost.
+    let points: Vec<Vec<f64>> = rows
+        .iter()
+        .map(|r| vec![-r.sustained_qps, r.p95_ms, r.reject_rate, r.replica_seconds])
+        .collect();
+    for (row, flag) in rows.iter_mut().zip(pareto_front(&points)) {
+        row.pareto = flag;
+    }
+
+    let hosts = plan_rows(&spill);
+    Ok(PolicySearchReport {
+        scenario: sc.shape.name().to_string(),
+        seed: sc.seed,
+        platform: hosts[0].1.clone(),
+        spill_platform: hosts.get(1).map(|(_, h)| h.clone()),
+        cap: opts.cap,
+        qps: sc.qps,
+        arrivals: trace.len() as u64,
+        rows,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_grid_brackets_the_defaults() {
+        let g = PolicyGrid::default();
+        assert_eq!(g.len(), 16);
+        assert!(!g.is_empty());
+        let base = SloPolicy::default();
+        let policies = g.policies(&base);
+        assert_eq!(policies.len(), 16);
+        // Row order is the nested iteration order: the LAST axis varies
+        // fastest (the determinism the JSON archive relies on).
+        assert_eq!(policies[0].window, 2);
+        assert_eq!(policies[1].window, 4);
+        assert_eq!(policies[0].overload_target, policies[1].overload_target);
+        // The absolute fallback rides along unchanged.
+        assert!(policies.iter().all(|p| p.p95_target_ms == base.p95_target_ms));
+    }
+
+    #[test]
+    fn pareto_front_keeps_trade_offs_and_drops_dominated_rows() {
+        let pts = vec![
+            vec![1.0, 5.0, 0.0],
+            vec![2.0, 1.0, 0.0],
+            vec![2.0, 5.0, 0.0], // dominated by both
+            vec![1.0, 5.0, 0.0], // duplicate of row 0: stays
+        ];
+        assert_eq!(pareto_front(&pts), vec![true, true, false, true]);
+    }
+
+    #[test]
+    fn replica_seconds_integrates_the_step_function() {
+        let traj = vec![
+            TrajectoryPoint { t_ms: 0.0, network: "a".into(), replicas: 1 },
+            TrajectoryPoint { t_ms: 1000.0, network: "a".into(), replicas: 3 },
+            TrajectoryPoint { t_ms: 0.0, network: "b".into(), replicas: 2 },
+        ];
+        // a: 1×1s + 3×1s = 4; b: 2×2s = 4.
+        let got = replica_seconds(&traj, 2000.0);
+        assert!((got - 8.0).abs() < 1e-9, "{got}");
+    }
+
+    #[test]
+    fn empty_grid_is_rejected() {
+        let g = PolicyGrid { windows: vec![], ..PolicyGrid::default() };
+        assert!(g.is_empty());
+        assert_eq!(g.len(), 0);
+    }
+}

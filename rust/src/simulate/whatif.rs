@@ -19,6 +19,7 @@
 
 use super::engine::{
     simulate_trace, SimFleet, SimRunOptions, SimServiceModel, TrajectoryPoint,
+    DEFAULT_CONTENTION_ALPHA,
 };
 use super::workload::{Scenario, Trace};
 use crate::coordinator::ShardSpec;
@@ -37,6 +38,22 @@ pub struct WhatIfOptions {
     pub cap: f64,
     /// Per-replica bounded-admission cap inside the simulation.
     pub queue_cap: usize,
+    /// Requests coalesced per virtual service event (the live
+    /// `ShardSpec::batch_size` default; 1 = the PR 4
+    /// one-request-one-service-time model).
+    pub max_batch: usize,
+    /// Coalescing window opened when a request reaches an idle replica (ms
+    /// of virtual time). The live worker waits
+    /// [`crate::coordinator::service::BATCH_WINDOW`] (100 µs) of *wall*
+    /// time — tuned for software service times; against µs-scale
+    /// model-predicted hardware latencies that constant would dominate
+    /// every tail, so the default is 0: batches then form exactly when a
+    /// backlog exists, which is the regime the live window exists to reach.
+    pub coalesce_window_ms: f64,
+    /// Device-contention slope: co-located replicas stretch each other's
+    /// service by `1 + alpha × (co-located utilization share excluding
+    /// self)`. 0 disables contention.
+    pub contention_alpha: f64,
     /// SLO policy handed to the (real) autoscaler.
     pub policy: SloPolicy,
     /// Virtual controller cadence (ms).
@@ -60,6 +77,9 @@ impl Default for WhatIfOptions {
         WhatIfOptions {
             cap: 0.8,
             queue_cap: 64,
+            max_batch: 8,
+            coalesce_window_ms: 0.0,
+            contention_alpha: DEFAULT_CONTENTION_ALPHA,
             policy: SloPolicy::default(),
             control_interval_ms: 50.0,
             cooldown_ticks: 6,
@@ -137,7 +157,7 @@ pub struct CapacityReport {
     pub scale_downs: usize,
 }
 
-fn json_escape(s: &str) -> String {
+pub(crate) fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
         match c {
@@ -153,7 +173,30 @@ fn json_escape(s: &str) -> String {
 
 impl CapacityReport {
     /// Deterministic hand-rolled JSON (no serde offline): top-level key
-    /// `simulate`, diffable by `scripts/bench_diff.py --simulate`.
+    /// `simulate`, diffable by `scripts/bench_diff.py --simulate`. This is
+    /// the `SIM_capacity.json` artifact the CI bench job archives.
+    ///
+    /// Schema:
+    ///
+    /// ```json
+    /// {"simulate": {
+    ///   "scenario": "burst", "seed": 42, "platform": "KV260",
+    ///   "spill_platform": null, "cap": 0.800, "qps": 1234.5,
+    ///   "events": 100000, "virtual_ms": 123.456,
+    ///   "max_sustainable_qps": 2000.0, "scale_ups": 3, "scale_downs": 2,
+    ///   "networks": [
+    ///     {"network": "tiny_q8", "platform": "KV260", "predicted_ms": 0.004,
+    ///      "planned_replicas": 13, "start_replicas": 1, "peak_replicas": 3,
+    ///      "final_replicas": 1, "offered": 1000, "admitted": 990,
+    ///      "rejected": 10, "overload_rate": 0.01, "mean_ms": 0.005,
+    ///      "p95_ms": 0.009}],
+    ///   "trajectory": [{"t_ms": 0.0, "network": "tiny_q8", "replicas": 1}],
+    ///   "decisions": ["t=+50.000ms scale-up tiny_q8 1→2: ..."]}}
+    /// ```
+    ///
+    /// `networks` rows are sorted by name; `trajectory` records the initial
+    /// replica counts plus every change point; `decisions` renders each
+    /// controller step with its virtual timestamp.
     pub fn to_json(&self) -> String {
         let mut out = String::new();
         out.push_str("{\n  \"simulate\": {\n");
@@ -223,7 +266,7 @@ impl CapacityReport {
 }
 
 /// `(plan, hosting platform name)` rows across a spill split.
-fn plan_rows(spill: &SpillPlan) -> Vec<(&FleetPlan, String)> {
+pub(crate) fn plan_rows(spill: &SpillPlan) -> Vec<(&FleetPlan, String)> {
     let mut out = vec![(&spill.primary, spill.primary.platform.name.to_string())];
     if let Some(s) = &spill.spill {
         out.push((s, s.platform.name.to_string()));
@@ -248,11 +291,20 @@ fn mix_fraction(mix: &[(String, f64)], network: &str) -> f64 {
 }
 
 /// Closed-form aggregate capacity (requests/s) of `replicas(row)` replicas
-/// per network under the mix: the bottleneck network saturates first.
-fn capacity_qps<F>(spill: &SpillPlan, mix: &[(String, f64)], replicas: F) -> f64
+/// per network under the mix: the bottleneck network saturates first. Uses
+/// the *amortized* per-replica rate at `opts.max_batch` (fill paid once per
+/// batch) and ignores contention, so it upper-bounds what the simulation
+/// can actually sustain — exactly what the bisection needs for its ceiling.
+pub(crate) fn capacity_qps<F>(
+    spill: &SpillPlan,
+    mix: &[(String, f64)],
+    opts: &WhatIfOptions,
+    replicas: F,
+) -> f64
 where
     F: Fn(&crate::fleetplan::NetworkPlan) -> u64,
 {
+    let b = opts.max_batch.max(1) as f64;
     let mut qps = f64::INFINITY;
     for (plan, _) in plan_rows(spill) {
         for row in &plan.networks {
@@ -260,7 +312,9 @@ where
             if f <= 0.0 {
                 continue;
             }
-            let service_s = (row.predicted_ms / 1e3).max(1e-12);
+            let fill = row.fill_ms.clamp(0.0, row.predicted_ms);
+            let per_item_ms = (fill + (row.predicted_ms - fill) * b) / b;
+            let service_s = (per_item_ms / 1e3).max(1e-12);
             let rate = replicas(row) as f64 / service_s;
             qps = qps.min(rate / f);
         }
@@ -272,29 +326,58 @@ where
     }
 }
 
-/// Simulated service models at a chosen replica count per plan row.
-fn service_models<F>(spill: &SpillPlan, queue_cap: usize, replicas: F) -> Vec<SimServiceModel>
+/// Simulated service models at a chosen replica count per plan row: service
+/// rate, batch curve and device share all from the plan's fitted-model
+/// predictions; batching and contention knobs from the options.
+pub(crate) fn service_models<F>(
+    spill: &SpillPlan,
+    opts: &WhatIfOptions,
+    replicas: F,
+) -> Vec<SimServiceModel>
 where
     F: Fn(&crate::fleetplan::NetworkPlan) -> u64,
 {
     let mut models = Vec::new();
-    for (plan, _) in plan_rows(spill) {
+    for (plan, host) in plan_rows(spill) {
         for row in &plan.networks {
-            models.push(SimServiceModel::new(
-                &row.network,
-                row.predicted_ms,
-                queue_cap,
-                replicas(row) as usize,
-            ));
+            models.push(
+                SimServiceModel::new(
+                    &row.network,
+                    row.predicted_ms,
+                    opts.queue_cap,
+                    replicas(row) as usize,
+                )
+                .with_batching(opts.max_batch, row.fill_ms)
+                .with_window_ms(opts.coalesce_window_ms)
+                .on_platform(&host, row.util_frac),
+            );
         }
     }
     models
 }
 
+/// A contention-configured [`SimFleet`] at a chosen replica count per row.
+pub(crate) fn sim_fleet<F>(
+    spill: &SpillPlan,
+    opts: &WhatIfOptions,
+    replicas: F,
+) -> Result<SimFleet>
+where
+    F: Fn(&crate::fleetplan::NetworkPlan) -> u64,
+{
+    let mut fleet = SimFleet::new(&service_models(spill, opts, replicas))?;
+    fleet.set_contention_alpha(opts.contention_alpha);
+    Ok(fleet)
+}
+
 /// One production-configured [`Autoscaler`] per device sub-plan (each
 /// budget-checks its own platform; `decide` ignores the other device's
-/// networks).
-fn scalers_for(spill: &SpillPlan, opts: &WhatIfOptions) -> Vec<Autoscaler> {
+/// networks), judging with `policy`.
+pub(crate) fn scalers_for(
+    spill: &SpillPlan,
+    opts: &WhatIfOptions,
+    policy: &SloPolicy,
+) -> Vec<Autoscaler> {
     plan_rows(spill)
         .into_iter()
         .map(|(plan, _)| {
@@ -304,9 +387,9 @@ fn scalers_for(spill: &SpillPlan, opts: &WhatIfOptions) -> Vec<Autoscaler> {
                 .map(|n| ShardSpec::golden(&n.network).with_queue_cap(opts.queue_cap))
                 .collect();
             if opts.latency_slo {
-                Autoscaler::with_latency_slo(plan.clone(), opts.policy.clone(), templates)
+                Autoscaler::with_latency_slo(plan.clone(), policy.clone(), templates)
             } else {
-                Autoscaler::new(plan.clone(), opts.policy.clone(), templates)
+                Autoscaler::new(plan.clone(), policy.clone(), templates)
             }
         })
         .collect()
@@ -329,7 +412,7 @@ fn max_sustainable_qps(
     seed: u64,
     opts: &WhatIfOptions,
 ) -> Result<f64> {
-    let ceiling = capacity_qps(spill, mix, |row| row.replicas);
+    let ceiling = capacity_qps(spill, mix, opts, |row| row.replicas);
     if ceiling <= 0.0 {
         return Ok(0.0);
     }
@@ -345,12 +428,21 @@ fn max_sustainable_qps(
             seed ^ (0xB15E_C7 + probe),
         );
         let trace = scenario.arrivals();
-        let models = service_models(spill, opts.queue_cap, |row| row.replicas);
+        // Lag margin: a full coalesced batch is the largest indivisible
+        // chunk of virtual service time, so the drain tail of a healthy
+        // run is a few of those, not a few single-request times.
+        let models = service_models(spill, opts, |row| row.replicas);
         let max_service_ms = models
             .iter()
-            .map(|m| m.service_ns as f64 / 1e6)
+            .map(|m| {
+                let fill = m.fill_ns.min(m.service_ns.saturating_sub(1));
+                let batch =
+                    fill + (m.service_ns - fill).saturating_mul(m.max_batch.max(1) as u64);
+                batch as f64 / 1e6
+            })
             .fold(0.0f64, f64::max);
         let mut fleet = SimFleet::new(&models)?;
+        fleet.set_contention_alpha(opts.contention_alpha);
         let run = simulate_trace(
             &mut fleet,
             &trace,
@@ -372,6 +464,32 @@ fn max_sustainable_qps(
     Ok((lo * 10.0).round() / 10.0)
 }
 
+/// One controlled run: floors-start fleet + production autoscalers judging
+/// with `policy`, over `trace`. Returns the run and the final routable
+/// replica counts. The shared engine entry of [`explore`] and
+/// `policysearch::search`.
+pub(crate) fn run_controlled(
+    spill: &SpillPlan,
+    trace: &Trace,
+    policy: &SloPolicy,
+    opts: &WhatIfOptions,
+) -> Result<(super::engine::SimRun, std::collections::BTreeMap<String, usize>)> {
+    // Start at the floors; the controller earns every further replica.
+    let mut fleet = sim_fleet(spill, opts, |row| row.min_replicas)?;
+    let mut scalers = scalers_for(spill, opts, policy);
+    let run = simulate_trace(
+        &mut fleet,
+        trace,
+        &mut scalers,
+        &SimRunOptions {
+            control_interval_ms: opts.control_interval_ms,
+            cooldown_ticks: opts.cooldown_ticks,
+        },
+    )?;
+    let final_counts = fleet.replica_counts();
+    Ok((run, final_counts))
+}
+
 /// Shared back half of [`explore`] / [`explore_replay`]: run the main trace
 /// with the production controller in the loop and assemble the report.
 fn explore_with_trace(
@@ -383,20 +501,7 @@ fn explore_with_trace(
     trace: &Trace,
     opts: &WhatIfOptions,
 ) -> Result<CapacityReport> {
-    // Start at the floors; the controller earns every further replica.
-    let mut fleet =
-        SimFleet::new(&service_models(spill, opts.queue_cap, |row| row.min_replicas))?;
-    let mut scalers = scalers_for(spill, opts);
-    let run = simulate_trace(
-        &mut fleet,
-        trace,
-        &mut scalers,
-        &SimRunOptions {
-            control_interval_ms: opts.control_interval_ms,
-            cooldown_ticks: opts.cooldown_ticks,
-        },
-    )?;
-    let final_counts = fleet.replica_counts();
+    let (run, final_counts) = run_controlled(spill, trace, &opts.policy, opts)?;
 
     let mut networks = Vec::new();
     for (plan, host) in plan_rows(spill) {
@@ -469,6 +574,22 @@ pub fn explore(
     opts: &WhatIfOptions,
 ) -> Result<CapacityReport> {
     let spill = select_platform_or_spill(demands, registry, platforms, opts.cap)?;
+    let sc = autosize_scenario(scenario, demands, &spill, opts)?;
+    let trace = sc.arrivals();
+    explore_with_trace(&spill, sc.shape.name(), sc.seed, sc.qps, &sc.mix, &trace, opts)
+}
+
+/// Scenario auto-completion shared by [`explore`] and
+/// `policysearch::search`: fill an empty mix from the demand weights, an
+/// unset QPS from 1.5× the floor configuration's closed-form capacity, an
+/// unset duration from the `min_arrivals` floor (burst/diurnal periods
+/// rescale with it).
+pub(crate) fn autosize_scenario(
+    scenario: &Scenario,
+    demands: &[NetworkDemand],
+    spill: &SpillPlan,
+    opts: &WhatIfOptions,
+) -> Result<Scenario> {
     let mut sc = scenario.clone();
     if sc.mix.is_empty() {
         sc.mix = demands
@@ -477,7 +598,7 @@ pub fn explore(
             .collect();
     }
     if sc.qps <= 0.0 {
-        let floors = capacity_qps(&spill, &sc.mix, |row| row.min_replicas);
+        let floors = capacity_qps(spill, &sc.mix, opts, |row| row.min_replicas);
         if floors <= 0.0 {
             return Err(Error::InvalidConfig(
                 "cannot auto-size QPS: zero floor capacity (check the traffic mix)".into(),
@@ -491,8 +612,7 @@ pub fn explore(
         sc.burst_period_ms = period;
         sc.burst_len_ms = period * 0.15;
     }
-    let trace = sc.arrivals();
-    explore_with_trace(&spill, sc.shape.name(), sc.seed, sc.qps, &sc.mix, &trace, opts)
+    Ok(sc)
 }
 
 /// Explore a *recorded* trace (see

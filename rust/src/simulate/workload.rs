@@ -92,6 +92,20 @@ impl Scenario {
     /// fifth of the duration (so every run sees several cycles), bursts
     /// occupy 15% of each period at 8× the baseline, and the heavy tail is
     /// Pareto(1.5).
+    ///
+    /// ```
+    /// use convkit::simulate::{Scenario, ScenarioShape};
+    /// let s = Scenario::new(
+    ///     ScenarioShape::Steady,
+    ///     vec![("lenet_q8".to_string(), 1.0)],
+    ///     1_000.0, // mean offered qps (virtual)
+    ///     100.0,   // duration (virtual ms)
+    ///     7,       // seed
+    /// );
+    /// let trace = s.arrivals();
+    /// assert!(!trace.is_empty());
+    /// assert_eq!(trace, s.arrivals(), "same seed ⇒ byte-identical trace");
+    /// ```
     pub fn new(
         shape: ScenarioShape,
         mix: Vec<(String, f64)>,
@@ -251,7 +265,22 @@ impl Trace {
         &self.networks[e.net as usize]
     }
 
-    /// Save as CSV (`at_ns,network`; header line included).
+    /// Save as CSV. The trace format (produced here and by
+    /// `convkit fleet --record`, consumed by `convkit simulate --replay`):
+    ///
+    /// ```text
+    /// at_ns,network
+    /// 0,lenet_q8
+    /// 137208,tiny_q8
+    /// 212992,lenet_q8
+    /// ```
+    ///
+    /// One line per offered request: `at_ns` is the arrival instant in
+    /// nanoseconds (virtual time for generated traces, wall offset from
+    /// recorder construction for recorded ones) and `network` is the
+    /// routing key. Lines need not be sorted on disk —
+    /// [`Trace::load`] re-sorts by timestamp — and blank lines or repeated
+    /// header lines are skipped, so hand-edited traces are tolerated.
     pub fn save(&self, path: &Path) -> Result<()> {
         let mut out = String::with_capacity(self.events.len() * 24 + 16);
         out.push_str("at_ns,network\n");

@@ -207,6 +207,54 @@ fn simulate_emits_a_deterministic_capacity_report() {
 }
 
 #[test]
+fn policysearch_emits_a_deterministic_pareto_report() {
+    let run = || {
+        convkit(&[
+            "policysearch",
+            "--scenario",
+            "burst",
+            "--seed",
+            "42",
+            "--networks",
+            "tiny_q8",
+            "--min-bits",
+            "6",
+            "--max-bits",
+            "12",
+            "--events",
+            "3000",
+            "--control-ms",
+            "0.5",
+            "--overload",
+            "0.005,0.05",
+            "--p95-ratio",
+            "3",
+            "--idle-queue",
+            "0.05",
+            "--window",
+            "2",
+        ])
+    };
+    let (ok, stdout, stderr) = run();
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("SLO policy search"), "{stdout}");
+    assert!(stdout.contains("grid: 2 policies"), "{stdout}");
+    assert!(stdout.contains("Pareto front:"), "{stdout}");
+    // Determinism across whole processes (only the wall line may differ).
+    let (ok2, stdout2, _) = run();
+    assert!(ok2);
+    let report = |s: &str| {
+        s.lines()
+            .skip_while(|l| !l.contains("SLO policy search"))
+            .take_while(|l| !l.contains("s wall"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    assert_eq!(report(&stdout), report(&stdout2), "same seed ⇒ same report");
+    assert!(!report(&stdout).is_empty());
+}
+
+#[test]
 fn bad_option_value_is_a_usage_error() {
     let (ok, _, stderr) = convkit(&["sweep", "--min-bits", "banana"]);
     assert!(!ok);

@@ -1,0 +1,140 @@
+//! Integration tests for the SLO policy search:
+//!
+//! * **Determinism** — the same seed + scenario + grid produces a
+//!   byte-identical Pareto JSON across runs (the property that lets CI
+//!   archive and diff `POLICY_pareto.json`), and different seeds diverge.
+//! * **Front consistency** — the reported front is non-empty, its flags
+//!   match `front()`, no front row is dominated, and every non-front row
+//!   is dominated by some front row.
+//! * **Structure** — rows ride in deterministic grid order with the swept
+//!   knobs, and the text rendering names the essentials.
+
+use convkit::cnn::zoo;
+use convkit::coordinator::dse::DseEngine;
+use convkit::coordinator::jobs::JobPool;
+use convkit::fleetplan::NetworkDemand;
+use convkit::models::{ModelRegistry, SelectOptions};
+use convkit::platform::Platform;
+use convkit::simulate::{
+    policysearch, PolicyGrid, PolicyScore, Scenario, ScenarioShape, WhatIfOptions,
+};
+use convkit::synthdata::SweepOptions;
+
+fn registry() -> ModelRegistry {
+    let eng = DseEngine {
+        sweep: SweepOptions { min_bits: 6, max_bits: 12, ..Default::default() },
+        select: SelectOptions::default(),
+        pool: JobPool::with_workers(2),
+        cache: None,
+    };
+    eng.run().unwrap().registry
+}
+
+fn test_grid() -> PolicyGrid {
+    PolicyGrid {
+        overload_targets: vec![0.005, 0.05],
+        p95_ratios: vec![2.0, 8.0],
+        idle_queue_utils: vec![0.05],
+        windows: vec![2],
+    }
+}
+
+fn test_options() -> WhatIfOptions {
+    WhatIfOptions {
+        // Small + fast: every grid row replays the trace once.
+        min_arrivals: 3_000,
+        control_interval_ms: 0.25,
+        ..WhatIfOptions::default()
+    }
+}
+
+#[test]
+fn policysearch_json_is_byte_identical_per_seed_and_differs_across_seeds() {
+    let reg = registry();
+    let demands =
+        [NetworkDemand::new(zoo::tiny()), NetworkDemand::new(zoo::slim_q6())];
+    let platforms = Platform::all();
+    let (grid, opts) = (test_grid(), test_options());
+    let run = |seed: u64| {
+        let scenario = Scenario::new(ScenarioShape::Burst, Vec::new(), 0.0, 0.0, seed);
+        policysearch::search(&demands, &reg, &platforms, &scenario, &grid, &opts)
+            .unwrap()
+            .to_json()
+    };
+    let mut per_seed = Vec::new();
+    for seed in [42u64, 43] {
+        let a = run(seed);
+        let b = run(seed);
+        assert_eq!(a, b, "seed {seed}: Pareto JSON must be byte-identical across runs");
+        per_seed.push(a);
+    }
+    assert_ne!(per_seed[0], per_seed[1], "different seeds must diverge");
+}
+
+#[test]
+fn pareto_front_is_nonempty_consistent_and_dominance_correct() {
+    let reg = registry();
+    let demands =
+        [NetworkDemand::new(zoo::tiny()), NetworkDemand::new(zoo::slim_q6())];
+    let scenario = Scenario::new(ScenarioShape::Burst, Vec::new(), 0.0, 0.0, 42);
+    let report = policysearch::search(
+        &demands,
+        &reg,
+        &Platform::all(),
+        &scenario,
+        &test_grid(),
+        &test_options(),
+    )
+    .unwrap();
+
+    assert_eq!(report.rows.len(), test_grid().len(), "one scored row per grid point");
+    assert!(report.arrivals >= 3_000);
+    for r in &report.rows {
+        assert!(r.sustained_qps > 0.0, "{r:?}");
+        assert!(r.p95_ms > 0.0, "{r:?}");
+        assert!(r.replica_seconds > 0.0, "{r:?}");
+        assert!((0.0..=1.0).contains(&r.reject_rate), "{r:?}");
+    }
+
+    let objectives = |r: &PolicyScore| {
+        [-r.sustained_qps, r.p95_ms, r.reject_rate, r.replica_seconds]
+    };
+    let dominates = |a: &PolicyScore, b: &PolicyScore| {
+        let (oa, ob) = (objectives(a), objectives(b));
+        oa.iter().zip(&ob).all(|(x, y)| x <= y) && oa.iter().zip(&ob).any(|(x, y)| x < y)
+    };
+    let front = report.front();
+    assert!(!front.is_empty(), "a finite sweep always has a non-dominated row");
+    assert_eq!(
+        front.len(),
+        report.rows.iter().filter(|r| r.pareto).count(),
+        "front() mirrors the pareto flags"
+    );
+    for &f in &front {
+        assert!(
+            !report.rows.iter().any(|other| dominates(other, f)),
+            "front row is dominated: {f:?}"
+        );
+    }
+    for r in report.rows.iter().filter(|r| !r.pareto) {
+        assert!(
+            report.rows.iter().any(|other| dominates(other, r)),
+            "non-front row must be dominated by someone: {r:?}"
+        );
+    }
+
+    // Rows ride in grid order with the swept knobs attached.
+    let expected = test_grid().policies(&test_options().policy);
+    for (row, want) in report.rows.iter().zip(&expected) {
+        assert_eq!(row.policy.overload_target, want.overload_target);
+        assert_eq!(row.policy.p95_ratio, want.p95_ratio);
+        assert_eq!(row.policy.idle_queue_util, want.idle_queue_util);
+        assert_eq!(row.policy.window, want.window);
+    }
+
+    // The text rendering names the essentials.
+    let text = convkit::report::pareto_table(&report);
+    assert!(text.contains("SLO policy search"), "{text}");
+    assert!(text.contains("Pareto front:"), "{text}");
+    assert!(text.contains(&report.platform), "{text}");
+}

@@ -20,8 +20,15 @@ deterministic for a fixed seed/scenario/registry, so a delta here means the
 models or the serving semantics actually changed — unlike the timing
 tables, it is noise-free evidence.
 
+Likewise for the SLO policy search (``convkit policysearch --out``,
+top-level key ``policysearch``): pass ``--policysearch CURRENT PREVIOUS``
+to append the Pareto-front movement — front size, best sustained QPS and
+best p95 across the front. Byte-deterministic for a fixed seed, same as
+the capacity report.
+
 Usage: bench_diff.py CURRENT.json PREVIOUS.json [--regress-pct 25]
                      [--simulate CURRENT_SIM.json PREVIOUS_SIM.json]
+                     [--policysearch CURRENT_POL.json PREVIOUS_POL.json]
 """
 
 from __future__ import annotations
@@ -163,6 +170,67 @@ def diff_simulate(current: dict, previous: dict) -> str:
     return "\n".join(lines) + "\n"
 
 
+def load_policysearch(path: str) -> dict:
+    """The `policysearch` object of a Pareto report (empty when unreadable)."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"note: could not read {path}: {e}", file=sys.stderr)
+        return {}
+    return doc.get("policysearch", {})
+
+
+def front_rows(doc: dict) -> list:
+    return [r for r in doc.get("rows", []) if r.get("pareto")]
+
+
+def diff_policysearch(current: dict, previous: dict) -> str:
+    lines = ["## SLO policy-search diff (`convkit policysearch`)", ""]
+    if not current:
+        lines.append("_No current policy-search report._")
+        return "\n".join(lines) + "\n"
+    cur_front = front_rows(current)
+    lines.append(
+        f"Scenario `{current.get('scenario', '?')}` seed {current.get('seed', '?')} "
+        f"on {current.get('platform', '?')}: grid of {current.get('grid', 0)} "
+        f"policies over {current.get('arrivals', 0)} arrivals, "
+        f"Pareto front of {len(cur_front)}."
+    )
+    lines.append("")
+    if not previous:
+        lines.append("_No previous policy-search artifact — nothing to diff._")
+        return "\n".join(lines) + "\n"
+    prev_front = front_rows(previous)
+
+    def best(rows: list, key: str, biggest: bool) -> float:
+        vals = [float(r.get(key, 0.0)) for r in rows]
+        if not vals:
+            return 0.0
+        return max(vals) if biggest else min(vals)
+
+    lines.append("| metric | previous | current | delta |")
+    lines.append("|---|---:|---:|---:|")
+    lines.append(
+        f"| Pareto front size | {len(prev_front)} | {len(cur_front)} "
+        f"| {len(cur_front) - len(prev_front):+d} |"
+    )
+    for key, biggest, fmt in [
+        ("sustained_qps", True, "{:.1f}"),
+        ("p95_ms", False, "{:.4f}"),
+        ("replica_seconds", False, "{:.3f}"),
+    ]:
+        c = best(cur_front, key, biggest)
+        p = best(prev_front, key, biggest)
+        word = "best" if biggest else "min"
+        lines.append(
+            f"| front {word} {key} | {fmt.format(p)} | {fmt.format(c)} "
+            f"| {fmt_delta(c, p)} |"
+        )
+    lines.append("")
+    return "\n".join(lines) + "\n"
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("current")
@@ -171,6 +239,8 @@ def main() -> int:
                     help="flag entries slower by at least this percentage")
     ap.add_argument("--simulate", nargs=2, metavar=("CUR_SIM", "PREV_SIM"),
                     help="also diff two `convkit simulate --out` reports")
+    ap.add_argument("--policysearch", nargs=2, metavar=("CUR_POL", "PREV_POL"),
+                    help="also diff two `convkit policysearch --out` reports")
     args = ap.parse_args()
     report = diff(
         load_sections(args.current), load_sections(args.previous), args.regress_pct
@@ -179,6 +249,11 @@ def main() -> int:
     if args.simulate:
         cur_sim, prev_sim = args.simulate
         print(diff_simulate(load_simulate(cur_sim), load_simulate(prev_sim)))
+    if args.policysearch:
+        cur_pol, prev_pol = args.policysearch
+        print(diff_policysearch(
+            load_policysearch(cur_pol), load_policysearch(prev_pol)
+        ))
     return 0
 
 
