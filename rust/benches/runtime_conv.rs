@@ -1,9 +1,11 @@
 //! Bench: the deployment/serving hot path, with a machine-readable baseline.
 //!
 //! Always benches the golden (block-simulator) serving path — serial vs
-//! parallel batch fan-out — and additionally the PJRT artifact path when
-//! `make artifacts` has run. Every run writes `BENCH_runtime.json` at the
-//! repo root so future PRs have a perf trajectory to compare against.
+//! parallel batch fan-out, plus the flat single-image fast path against its
+//! blockwise reference (`golden_simd_inner`) — and additionally the PJRT
+//! artifact path when `make artifacts` has run. Every run writes
+//! `BENCH_runtime.json` at the repo root so future PRs have a perf
+//! trajectory to compare against.
 
 use convkit::blocks::BlockKind;
 use convkit::cnn::{zoo, GoldenCnn};
@@ -25,9 +27,14 @@ fn main() {
     let spec = zoo::lenet_ish();
     let q = 127i64;
     let mut rng = SplitMix64::new(42);
-    let images: Vec<Vec<i32>> = (0..8)
+    // Shared `Arc` buffers, allocated once — the payload type the serving
+    // layer ships end-to-end (executors take `&[Arc<[i32]>]`).
+    let images: Vec<std::sync::Arc<[i32]>> = (0..8)
         .map(|_| {
-            (0..spec.in_h * spec.in_w).map(|_| rng.range_i64(-q, q) as i32).collect()
+            (0..spec.in_h * spec.in_w)
+                .map(|_| rng.range_i64(-q, q) as i32)
+                .collect::<Vec<i32>>()
+                .into()
         })
         .collect();
     let golden = GoldenCnn::new(spec.clone(), BlockKind::Conv2).unwrap();
@@ -45,6 +52,26 @@ fn main() {
             parallel.parallelism(),
             p.mean_ns / 1e6,
             s.mean_ns / p.mean_ns
+        );
+    }
+
+    // Single-image inner loops, head to head: the flat fast path
+    // (`infer_i32` — tap-major i32×i32 MACs over contiguous row slices,
+    // per-plane shift/clamp) vs the structural block simulator it is proven
+    // bit-exact against (`infer_blockwise` — one FuncSim window walk per
+    // (layer, out-channel, in-channel) pair).
+    let img0: &[i32] = &images[0];
+    let img0_i64: Vec<i64> = img0.iter().map(|&v| v as i64).collect();
+    b.run("golden_simd_inner", || golden.infer_i32(img0).unwrap().len());
+    b.run("golden_blockwise_reference", || golden.infer_blockwise(&img0_i64).unwrap().len());
+    if let (Some(f), Some(r)) =
+        (b.stats("golden_simd_inner"), b.stats("golden_blockwise_reference"))
+    {
+        println!(
+            "-> single-image lenet: flat fast path {:.3} ms vs blockwise {:.3} ms ({:.1}x)",
+            f.mean_ns / 1e6,
+            r.mean_ns / 1e6,
+            r.mean_ns / f.mean_ns
         );
     }
 

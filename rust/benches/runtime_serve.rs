@@ -3,20 +3,27 @@
 //! Spins up a `ShardedService` over two golden-backed zoo networks (one of
 //! them replicated) and measures the serving shapes that matter for
 //! capacity planning: a single client alternating networks, a concurrent
-//! multi-client burst, the bounded-admission (`try_infer`) path, and the
-//! autoscaler's actuation cost (an add_shard + drain-based remove_shard
-//! cycle on the live fleet). Results are merged into the shared
+//! multi-client burst, the bounded-admission (`try_infer`) path, the
+//! lock-free stats snapshot (`stats_snapshot_lockfree`), the autoscaler's
+//! actuation cost (an add_shard + drain-based remove_shard cycle on the
+//! live fleet), and the adaptive-coalescing batch driver
+//! (`fleet_adaptive_window`). Request payloads are `Arc<[i32]>` buffers
+//! allocated once per image — the zero-copy path the serving layer ships.
+//! Results are merged into the shared
 //! `BENCH_runtime.json` baseline (section `runtime_serve`) so future PRs can
 //! diff fleet throughput the same way they diff the single-service numbers
 //! from `runtime_conv`.
 
+use convkit::blocks::BlockKind;
 use convkit::cnn::zoo;
-use convkit::coordinator::{ShardSpec, ShardedService};
+use convkit::coordinator::{drive_golden_clients, ShardSpec, ShardedService};
 use convkit::simulate::{
     simulate_trace, Scenario, ScenarioShape, SimFleet, SimRunOptions, SimServiceModel,
 };
 use convkit::util::bench::Bench;
 use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
 
 fn baseline_path() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_runtime.json")
@@ -40,17 +47,28 @@ fn main() {
         fleet.networks()
     );
 
-    let tiny_imgs = zoo::tiny().synthetic_images_i32(16, 0xBE);
-    let slim_imgs = zoo::slim_q6().synthetic_images_i32(16, 0x5E);
+    // Payloads are allocated ONCE and reference-counted through admission,
+    // coalescing, and batch execution — each request clones an `Arc`, not
+    // the image buffer (the zero-copy hot path this bench exists to track).
+    let tiny_imgs: Vec<Arc<[i32]>> =
+        zoo::tiny().synthetic_images_i32(16, 0xBE).into_iter().map(Into::into).collect();
+    let slim_imgs: Vec<Arc<[i32]>> =
+        zoo::slim_q6().synthetic_images_i32(16, 0x5E).into_iter().map(Into::into).collect();
 
     // One client alternating between the two networks.
     let mut turn = 0usize;
     b.run("fleet_single_client_alternate", || {
         turn += 1;
         if turn % 2 == 0 {
-            fleet.infer("tiny_q8", tiny_imgs[turn % tiny_imgs.len()].clone()).unwrap().len()
+            fleet
+                .infer("tiny_q8", Arc::clone(&tiny_imgs[turn % tiny_imgs.len()]))
+                .unwrap()
+                .len()
         } else {
-            fleet.infer("slim_q6", slim_imgs[turn % slim_imgs.len()].clone()).unwrap().len()
+            fleet
+                .infer("slim_q6", Arc::clone(&slim_imgs[turn % slim_imgs.len()]))
+                .unwrap()
+                .len()
         }
     });
 
@@ -66,9 +84,9 @@ fn main() {
                         for r in 0..8usize {
                             let k = (c * 8 + r) % 16;
                             served += if (c + r) % 2 == 0 {
-                                fleet.infer("tiny_q8", tiny_imgs[k].clone()).unwrap().len()
+                                fleet.infer("tiny_q8", Arc::clone(&tiny_imgs[k])).unwrap().len()
                             } else {
-                                fleet.infer("slim_q6", slim_imgs[k].clone()).unwrap().len()
+                                fleet.infer("slim_q6", Arc::clone(&slim_imgs[k])).unwrap().len()
                             };
                         }
                         served
@@ -84,7 +102,19 @@ fn main() {
     let mut i = 0usize;
     b.run("fleet_try_infer_admission", || {
         i += 1;
-        fleet.try_infer("tiny_q8", tiny_imgs[i % tiny_imgs.len()].clone()).unwrap().len()
+        fleet
+            .try_infer("tiny_q8", Arc::clone(&tiny_imgs[i % tiny_imgs.len()]))
+            .unwrap()
+            .len()
+    });
+
+    // Lock-free stats snapshot: `stats()` is a pure memory read of each
+    // shard's counter mirror + admission atomics — no worker round-trip, no
+    // deadline. One iteration = one full fleet snapshot (every shard row +
+    // the aggregate), taken while the fleet is live.
+    b.run("stats_snapshot_lockfree", || {
+        let s = fleet.stats();
+        s.shards.len() + s.fleet.requests as usize
     });
 
     // Reconfiguration cost (the autoscaler's actuation path): one
@@ -98,6 +128,30 @@ fn main() {
         fleet.add_shard(&add_spec).expect("add shard");
         fleet.remove_shard("tiny_q8").expect("remove shard")
     });
+
+    // Adaptive coalescing end-to-end: a dedicated two-replica fleet whose
+    // workers grow the batch window from the latency model
+    // (`CoalescePolicy::with_model`) instead of sleeping a fixed interval,
+    // driven through the pipelined `try_submit_batch` admission path by the
+    // same chunked client the `convkit fleet` subcommand uses. One iteration
+    // = 24 bit-verified requests against the tiny_q8 network.
+    let adaptive_fleet = ShardedService::start(&[ShardSpec::golden("tiny_q8")
+        .with_replicas(2)
+        .with_batch_size(8)
+        .with_adaptive_coalesce(Duration::from_micros(200), Duration::from_micros(40))])
+    .expect("adaptive fleet start");
+    let adaptive_specs = [zoo::tiny()];
+    b.run("fleet_adaptive_window", || {
+        drive_golden_clients(&adaptive_fleet, &adaptive_specs, 24, BlockKind::Conv2)
+            .expect("adaptive drive")
+    });
+    if let Some(s) = b.stats("fleet_adaptive_window") {
+        println!(
+            "-> adaptive-window driver: {:.0} req/s (24 pipelined, model-grown batches)",
+            24.0 * 1e9 / s.mean_ns
+        );
+    }
+    adaptive_fleet.shutdown();
 
     // Virtual-clock simulator throughput: one iteration replays a steady
     // two-network scenario of ~550k arrivals (≥ 1M virtual events once

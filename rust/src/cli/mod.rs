@@ -352,7 +352,7 @@ fn cmd_serve(args: &ParsedArgs) -> Result<()> {
         }
     }
     let wall = t0.elapsed().as_secs_f64();
-    let stats = svc.stats()?;
+    let stats = svc.stats();
     println!("served {n_req} requests in {wall:.2}s ({:.1} req/s wall)", n_req as f64 / wall);
     println!(
         "service stats: {} requests ({} errors), {} batches, mean latency {:.2} ms, p95 {:.2} ms, executor fan-out {}x",
@@ -488,8 +488,11 @@ fn burst_network(
     let mut served = 0usize;
     let mut rejected = 0usize;
     for img in spec.synthetic_images_i32(requests, seed) {
+        // One allocation per request, shared across retries and with the
+        // worker (zero-copy admission) instead of cloned per attempt.
+        let img: std::sync::Arc<[i32]> = img.into();
         loop {
-            match fleet.try_submit(&spec.name, img.clone()) {
+            match fleet.try_submit(&spec.name, std::sync::Arc::clone(&img)) {
                 Ok(t) => {
                     inflight.push_back(t);
                     break;
@@ -567,9 +570,13 @@ fn cmd_autoscale(args: &ParsedArgs) -> Result<()> {
     let template = |n: &str| {
         ShardSpec::golden(n).with_batch_size(batch).with_queue_cap(queue_cap)
     };
-    let fleet = ShardedService::start(
-        &names.iter().map(|n| template(n)).collect::<Vec<_>>(),
-    )?;
+    // Templates carry the plan's latency model into each shard's *adaptive*
+    // coalescing policy: the initial floor replicas AND every replica the
+    // controller adds batch exactly as the simulator models them (one
+    // CoalescePolicy on both sides).
+    let templates: Vec<ShardSpec> =
+        convkit::fleetplan::adaptive_templates(&plan, |n| template(n));
+    let fleet = ShardedService::start(&templates)?;
     let policy = SloPolicy { window: 2, ..SloPolicy::default() };
     let idle_rounds = policy.window + 1;
     // --latency-slo judges p95 against the model-predicted service latency
@@ -577,11 +584,10 @@ fn cmd_autoscale(args: &ParsedArgs) -> Result<()> {
     // software latencies dwarf predicted-hardware ones, so this is opt-in
     // here; the simulator — whose latencies ARE the predictions — defaults
     // to it).
-    let templates: Vec<ShardSpec> = names.iter().map(|n| template(n)).collect();
     let mut scaler = if args.flag("latency-slo") {
-        Autoscaler::with_latency_slo(plan, policy, templates)
+        Autoscaler::with_latency_slo(plan, policy, templates.clone())
     } else {
-        Autoscaler::new(plan, policy, templates)
+        Autoscaler::new(plan, policy, templates.clone())
     };
     println!(
         "\nfleet up: {} network(s) × 1 replica, queue cap {queue_cap} — spiking {} with {} pipelined requests/round",

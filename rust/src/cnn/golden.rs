@@ -1,6 +1,21 @@
-//! The golden model: the network executed through the *block simulators* —
-//! the bit-exact "hardware" reference the PJRT-executed JAX artifact is
+//! The golden model: the network executed bit-exactly against the *block
+//! simulators* — the "hardware" reference the PJRT-executed JAX artifact is
 //! checked against.
+//!
+//! Two execution paths compute the same function:
+//!
+//! - [`GoldenCnn::infer_i32`] — the serving fast path. Flat row-major `i32`
+//!   planes, tap-major stride-1 inner loops (i32×i32 products accumulated in
+//!   i64) that the compiler autovectorizes, with the block's whole output
+//!   stage (shift + clamp at the datapath's effective width) hoisted out of
+//!   the pixel loops and the fixed-point Horner activation applied once per
+//!   plane. This is what the live coordinator executes per batch (see
+//!   `docs/HOTPATH.md`).
+//! - [`GoldenCnn::infer_blockwise`] — the structural reference: every
+//!   `(ic → oc)` plane streamed through a cycle-accurate block simulator
+//!   ([`run_plane`]). Slow, but it *is* the hardware semantics; the fast
+//!   path's bit-exactness against it is pinned by tests for every block
+//!   microarchitecture.
 
 use super::spec::NetworkSpec;
 use crate::blocks::{run_plane, BlockKind, ConvBlockConfig};
@@ -21,6 +36,31 @@ pub struct GoldenCnn {
     acts: Vec<BoundActivation>,
 }
 
+/// Accumulate the raw 9-tap MAC of `plane` (`h × w`, row-major) into `out`
+/// (`(h-2) × (w-2)`), "valid" padding. Tap-major over contiguous row slices:
+/// each innermost loop is a stride-1 widening multiply-add over one output
+/// row, which autovectorizes cleanly. Accumulation in i64 is exact — inputs
+/// and coefficients are ≤ 16 bits in the paper's sweep, so
+/// `|dot9| ≤ 9 · 2^15 · 2^15 < 2^34` and [`crate::fixedpoint::dot9`]'s i64
+/// saturation is unreachable.
+fn accumulate_taps(plane: &[i32], h: usize, w: usize, k: &[i64; 9], out: &mut [i64]) {
+    debug_assert_eq!(plane.len(), h * w);
+    let ow = w - 2;
+    debug_assert_eq!(out.len(), (h - 2) * ow);
+    for r in 0..h - 2 {
+        let dst = &mut out[r * ow..(r + 1) * ow];
+        for dr in 0..3 {
+            let row = &plane[(r + dr) * w..(r + dr + 1) * w];
+            for dc in 0..3 {
+                let kk = k[dr * 3 + dc];
+                for (o, &x) in dst.iter_mut().zip(&row[dc..dc + ow]) {
+                    *o += x as i64 * kk;
+                }
+            }
+        }
+    }
+}
+
 impl GoldenCnn {
     /// Instantiate with the spec's deterministic weights, executed on `block`.
     pub fn new(spec: NetworkSpec, block: BlockKind) -> Result<GoldenCnn> {
@@ -39,8 +79,129 @@ impl GoldenCnn {
     }
 
     /// Run one image (`in_ch × in_h × in_w`, channel-major flattened),
-    /// returning the class logits.
+    /// returning the class logits. Delegates to the [`Self::infer_i32`] fast
+    /// path (all serving payloads are i32; wider values cannot be valid pixels
+    /// in the ≤16-bit sweep and are rejected the same way out-of-format ones
+    /// are).
     pub fn infer(&self, image: &[i64]) -> Result<Vec<i64>> {
+        let mut img32 = Vec::with_capacity(image.len());
+        for &v in image {
+            img32.push(i32::try_from(v).map_err(|_| {
+                Error::InvalidConfig(format!("image value {v} outside the i32 payload range"))
+            })?);
+        }
+        self.infer_i32(&img32)
+    }
+
+    /// The serving fast path: same logits as [`Self::infer_blockwise`],
+    /// bit for bit, from flat loops instead of streamed block simulators.
+    ///
+    /// Per layer, the block's per-element semantics
+    /// (`data_q.narrow(dot9, shift, Floor)` at the datapath's *effective*
+    /// width — `Conv3` computes in 8-bit lanes regardless of the requested
+    /// width) collapse to an arithmetic shift plus clamp with all bounds
+    /// hoisted out of the pixel loops; the channel sum then saturates at the
+    /// layer width and the bound Horner activation runs once per output
+    /// plane.
+    pub fn infer_i32(&self, image: &[i32]) -> Result<Vec<i64>> {
+        let s = &self.spec;
+        if image.len() != s.in_ch * s.in_h * s.in_w {
+            return Err(Error::InvalidConfig(format!(
+                "image length {} != {}x{}x{}",
+                image.len(),
+                s.in_ch,
+                s.in_h,
+                s.in_w
+            )));
+        }
+        let hw = s.in_h * s.in_w;
+        let mut planes: Vec<Vec<i32>> =
+            (0..s.in_ch).map(|c| image[c * hw..(c + 1) * hw].to_vec()).collect();
+        let mut h = s.in_h;
+        let mut w = s.in_w;
+        // Raw per-(oc, ic) MAC plane, reused across the whole network.
+        let mut conv: Vec<i64> = Vec::new();
+        for (li, layer) in s.layers.iter().enumerate() {
+            if h < 3 || w < 3 {
+                return Err(Error::InvalidConfig(format!(
+                    "layer {li}: plane {h}x{w} too small for a 3x3 convolution"
+                )));
+            }
+            // One config per *layer* (the blockwise path builds one per
+            // (oc, ic) plane; they are identical) — its data format is the
+            // effective datapath width the conv outputs clamp to.
+            let cfg = ConvBlockConfig::new(self.block, layer.data_bits, layer.coeff_bits)?
+                .with_shift(layer.shift)
+                .with_activation(Activation::Identity);
+            let conv_q = cfg.data_q();
+            let (qmin, qmax) = (conv_q.min(), conv_q.max());
+            let shift = cfg.shift;
+            let cq = cfg.coeff_q();
+            for (ki, k) in self.weights[li].iter().enumerate() {
+                for (i, &cw) in k.iter().enumerate() {
+                    if !cq.contains(cw) {
+                        return Err(Error::InvalidConfig(format!(
+                            "layer {li} kernel {ki}: coefficient[{i}]={cw} outside {} bits",
+                            cq.bits()
+                        )));
+                    }
+                }
+            }
+            // Every element of a ≥3×3 plane appears in at least one 3×3
+            // window, so validating the flat plane once is exactly the block
+            // simulator's per-window input validation.
+            for (ic, plane) in planes.iter().enumerate() {
+                for &x in plane.iter() {
+                    if !conv_q.contains(x as i64) {
+                        return Err(Error::InvalidConfig(format!(
+                            "layer {li} input plane {ic}: value {x} outside {} bits",
+                            conv_q.bits()
+                        )));
+                    }
+                }
+            }
+            let sum_q = QFormat::new(layer.data_bits).expect("validated width");
+            let act = &self.acts[li];
+            let (oh, ow) = (h - 2, w - 2);
+            let mut next: Vec<Vec<i32>> = Vec::with_capacity(layer.out_ch);
+            for oc in 0..layer.out_ch {
+                let mut acc = vec![0i64; oh * ow];
+                for ic in 0..layer.in_ch {
+                    let k = &self.weights[li][oc * layer.in_ch + ic];
+                    conv.clear();
+                    conv.resize(oh * ow, 0);
+                    accumulate_taps(&planes[ic], h, w, k, &mut conv);
+                    // The block's output stage: the channel sum accumulates
+                    // *narrowed* per-block outputs, not raw MACs.
+                    for (a, &d) in acc.iter_mut().zip(conv.iter()) {
+                        *a += (d >> shift).clamp(qmin, qmax);
+                    }
+                }
+                // Channel sum saturates back to the layer width, then the
+                // layer's activation stage runs over the whole plane (exact
+                // ReLU, or the fixed-point Horner polynomial the fused
+                // blocks evaluate in hardware). Activation outputs live in
+                // the layer format, so the i32 store is lossless.
+                next.push(
+                    acc.iter().map(|&a| act.apply(sum_q.saturate(a)) as i32).collect(),
+                );
+            }
+            planes = next;
+            h = oh;
+            w = ow;
+        }
+        // Global-sum head.
+        let logits: Vec<i64> = planes
+            .iter()
+            .map(|p| p.iter().map(|&v| v as i64).sum::<i64>() >> s.head_shift)
+            .collect();
+        Ok(logits)
+    }
+
+    /// The structural reference: every (ic → oc) plane streamed through a
+    /// cycle-accurate block simulator. Kept as the bit-exactness anchor for
+    /// [`Self::infer_i32`]; the serving path never calls it.
+    pub fn infer_blockwise(&self, image: &[i64]) -> Result<Vec<i64>> {
         let s = &self.spec;
         if image.len() != s.in_ch * s.in_h * s.in_w {
             return Err(Error::InvalidConfig(format!(
@@ -142,6 +303,49 @@ mod tests {
     }
 
     #[test]
+    fn fast_path_matches_blockwise_reference_bit_for_bit() {
+        // The serving fast path and the streamed block simulators are the
+        // same function — including Conv3's narrower 8-bit effective
+        // datapath and the fused-activation blocks.
+        for spec in [zoo::lenet_ish(), zoo::tiny(), zoo::sigmoid_q8()] {
+            for block in [
+                BlockKind::Conv1,
+                BlockKind::Conv2,
+                BlockKind::Conv3,
+                BlockKind::Conv4,
+                BlockKind::Conv2Act,
+            ] {
+                let net = GoldenCnn::new(spec.clone(), block).unwrap();
+                for seed in [21u64, 22] {
+                    let img = image(&net.spec, seed);
+                    let blockwise = net.infer_blockwise(&img).unwrap();
+                    let fast = net.infer(&img).unwrap();
+                    assert_eq!(fast, blockwise, "{block:?} seed {seed}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn infer_i32_agrees_with_infer() {
+        let net = GoldenCnn::new(zoo::tiny(), BlockKind::Conv2).unwrap();
+        let img = image(&net.spec, 17);
+        let img32: Vec<i32> = img.iter().map(|&v| v as i32).collect();
+        assert_eq!(net.infer_i32(&img32).unwrap(), net.infer(&img).unwrap());
+    }
+
+    #[test]
+    fn out_of_format_input_rejected_by_both_paths() {
+        let net = GoldenCnn::new(zoo::tiny(), BlockKind::Conv2).unwrap();
+        let mut img = image(&net.spec, 4);
+        img[0] = QFormat::new(net.spec.layers[0].data_bits).unwrap().max() + 1;
+        assert!(net.infer(&img).is_err());
+        assert!(net.infer_blockwise(&img).is_err());
+        let img32: Vec<i32> = img.iter().map(|&v| v as i32).collect();
+        assert!(net.infer_i32(&img32).is_err());
+    }
+
+    #[test]
     fn all_blocks_agree_on_the_same_network() {
         // The microarchitectures are different circuits computing the same
         // function: their golden models must agree bit-for-bit. (Conv2Act's
@@ -184,6 +388,7 @@ mod tests {
     fn wrong_image_size_rejected() {
         let net = GoldenCnn::new(zoo::tiny(), BlockKind::Conv2).unwrap();
         assert!(net.infer(&[0i64; 5]).is_err());
+        assert!(net.infer_i32(&[0i32; 5]).is_err());
     }
 
     #[test]

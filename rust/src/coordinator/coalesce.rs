@@ -1,0 +1,320 @@
+//! Batch-coalescing policy shared by the live inference worker and the
+//! virtual-clock traffic simulator.
+//!
+//! Before PR 6 the live worker waited a fixed 100 µs window
+//! (`service::BATCH_WINDOW`) for every batch, while `simulate::engine`
+//! priced batches with the model curve `fill + b×(service − fill)` — two
+//! independent notions of coalescing that could drift apart. This module is
+//! the single source of truth for both: [`CoalescePolicy::window_ns`] is the
+//! waiting law (how long to hold a partial batch open, as a function of the
+//! backlog), [`CoalescePolicy::batch_ns`] is the pricing law (what the batch
+//! costs once dispatched), and [`schedule`] is a pure reference interpreter
+//! of the waiting law on a virtual clock. The live worker
+//! (`service::collect_batch`) implements the same decision procedure on
+//! wall-clock time; the simulator (`simulate::engine::SimFleet`) implements
+//! it on event time; the parity test in `simulate::engine` pins all three to
+//! the same batch schedule on a deterministic arrival trace.
+//!
+//! The waiting law. A replica with `queued` requests already absorbed keeps
+//! the batch open for
+//!
+//! - `idle_window_ns` when `queued ≤ 1` — at idle the policy degenerates to
+//!   the fixed window (regression-tested), so single-request latency never
+//!   pays for adaptivity;
+//! - `0` when `queued ≥ max_batch` — a full batch has nothing to wait for;
+//! - otherwise `idle_window_ns + fill_ns×(queued − 1)`, capped at
+//!   [`CoalescePolicy::batch_ns`]`(queued)`. Each absorbed request earns one
+//!   pipeline-fill of extra patience: absorbing the *next* arrival into this
+//!   batch saves a whole `fill_ns` versus giving it a batch of its own,
+//!   so under backlog the window grows toward the model-predicted optimum —
+//!   but never beyond what the batch would take to just run.
+//!
+//! Policies without a model (`service_ns == 0`, from
+//! [`CoalescePolicy::fixed`]) always wait the fixed window: there is no
+//! amortization estimate to grow on.
+//!
+//! See `docs/HOTPATH.md` for where the policy sits in the request path.
+
+use std::time::Duration;
+
+/// Backlog-aware batch-coalescing law (see the module docs).
+///
+/// Copy-sized and immutable: the live worker keeps one per service, the
+/// simulator one per replica, both by value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CoalescePolicy {
+    /// Window opened by a request that finds the replica idle (ns).
+    pub idle_window_ns: u64,
+    /// Model-predicted single-request service time (ns); 0 = no model
+    /// (the policy stays a fixed window).
+    pub service_ns: u64,
+    /// Amortizable pipeline-fill share of `service_ns` (ns); clamped to
+    /// `service_ns − 1` so a batch always costs more than its fill.
+    pub fill_ns: u64,
+    /// Largest batch one dispatch drains.
+    pub max_batch: usize,
+}
+
+impl CoalescePolicy {
+    /// Model-less policy: always wait `window`, whatever the backlog.
+    /// This is the pre-PR 6 behaviour and the default for services started
+    /// without a plan row to derive a model from.
+    pub fn fixed(window: Duration) -> CoalescePolicy {
+        CoalescePolicy {
+            idle_window_ns: window.as_nanos() as u64,
+            service_ns: 0,
+            fill_ns: 0,
+            max_batch: usize::MAX,
+        }
+    }
+
+    /// Attach a service-time model: `service` per single request, of which
+    /// `fill` is the amortizable pipeline fill (the `fill_ms` column of a
+    /// fleetplan `NetworkPlan`, or a measured value).
+    pub fn with_model(mut self, service: Duration, fill: Duration) -> CoalescePolicy {
+        self.service_ns = (service.as_nanos() as u64).max(1);
+        self.fill_ns = (fill.as_nanos() as u64).min(self.service_ns - 1);
+        self
+    }
+
+    /// Same as [`CoalescePolicy::with_model`] from raw nanoseconds — the
+    /// simulator's unit.
+    pub fn with_model_ns(mut self, service_ns: u64, fill_ns: u64) -> CoalescePolicy {
+        self.service_ns = service_ns.max(1);
+        self.fill_ns = fill_ns.min(self.service_ns - 1);
+        self
+    }
+
+    /// Cap one dispatch at `batch` requests (the service's `batch_size`,
+    /// the simulator's `max_batch`).
+    pub fn with_max_batch(mut self, batch: usize) -> CoalescePolicy {
+        self.max_batch = batch.max(1);
+        self
+    }
+
+    /// Pricing law: predicted execution time of a `batch`-request dispatch,
+    /// `fill + (service − fill) × max(batch, 1)` — the curve the simulator
+    /// has always used and the window growth is derived from. 0 without a
+    /// model.
+    pub fn batch_ns(&self, batch: u64) -> u64 {
+        let fill = self.fill_ns.min(self.service_ns.saturating_sub(1));
+        fill + (self.service_ns - fill).saturating_mul(batch.max(1))
+    }
+
+    /// Waiting law: how long a replica holding `queued` requests keeps the
+    /// batch open for more arrivals (ns). See the module docs for the three
+    /// regimes.
+    pub fn window_ns(&self, queued: usize) -> u64 {
+        if queued >= self.max_batch {
+            return 0;
+        }
+        if queued <= 1 || self.service_ns == 0 || self.fill_ns == 0 {
+            return self.idle_window_ns;
+        }
+        let credit =
+            self.idle_window_ns.saturating_add(self.fill_ns.saturating_mul(queued as u64 - 1));
+        credit.min(self.batch_ns(queued as u64))
+    }
+}
+
+/// One batch decided by [`schedule`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScheduledBatch {
+    /// Virtual time the batch left the queue for the executor (ns).
+    pub dispatch_ns: u64,
+    /// Requests it carried.
+    pub size: usize,
+    /// Virtual completion time: dispatch + [`CoalescePolicy::batch_ns`].
+    pub complete_ns: u64,
+}
+
+/// Reference interpreter for the coalescing law on a virtual clock.
+///
+/// Replays `arrivals` (ns, ascending) through ONE replica exactly as the
+/// live worker decides batches: block until a request is visible, absorb
+/// everything already waiting, then extend the window as the backlog grows —
+/// dispatching at the deadline, or immediately once `max_batch` fills.
+/// Batches are priced with [`CoalescePolicy::batch_ns`]; a new window only
+/// opens once the previous batch completes (one executor).
+///
+/// This is the schedule the simulator-parity test pins `SimFleet` to, and
+/// the specification `service::collect_batch` implements on wall-clock time.
+/// Arrivals sharing one timestamp are absorbed together (they are "already
+/// waiting" by the time the replica looks); parity traces use distinct
+/// timestamps so event-at-a-time engines agree.
+pub fn schedule(policy: &CoalescePolicy, arrivals: &[u64]) -> Vec<ScheduledBatch> {
+    let mut out = Vec::new();
+    let mut next = 0usize;
+    let mut free_at = 0u64;
+    while next < arrivals.len() {
+        // The replica sees the head request when it arrives, or when the
+        // previous batch completes — whichever is later.
+        let opened = arrivals[next].max(free_at);
+        let mut queued = 1usize;
+        while next + queued < arrivals.len()
+            && queued < policy.max_batch
+            && arrivals[next + queued] <= opened
+        {
+            queued += 1;
+        }
+        let mut dispatch_at = opened;
+        if queued < policy.max_batch {
+            loop {
+                let deadline = opened.saturating_add(policy.window_ns(queued));
+                match arrivals.get(next + queued) {
+                    Some(&a) if a <= deadline => {
+                        queued += 1;
+                        if queued >= policy.max_batch {
+                            dispatch_at = a;
+                            break;
+                        }
+                    }
+                    _ => {
+                        dispatch_at = deadline;
+                        break;
+                    }
+                }
+            }
+        }
+        let complete_ns = dispatch_at + policy.batch_ns(queued as u64);
+        out.push(ScheduledBatch { dispatch_ns: dispatch_at, size: queued, complete_ns });
+        free_at = complete_ns;
+        next += queued;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn modeled() -> CoalescePolicy {
+        // 1 ms service, 0.4 ms fill, batches of 4, 0.5 ms idle window —
+        // the same shape as the simulator's batching doctest model.
+        CoalescePolicy::fixed(Duration::from_micros(500))
+            .with_model_ns(1_000_000, 400_000)
+            .with_max_batch(4)
+    }
+
+    #[test]
+    fn idle_degenerates_to_the_fixed_window() {
+        // The regression the satellite task demands: with no backlog the
+        // adaptive policy IS the fixed window — single-request latency never
+        // pays for adaptivity.
+        let p = modeled();
+        assert_eq!(p.window_ns(0), 500_000);
+        assert_eq!(p.window_ns(1), 500_000);
+        // And a model-less policy never grows at any backlog.
+        let f = CoalescePolicy::fixed(Duration::from_micros(100)).with_max_batch(64);
+        for queued in 0..64 {
+            assert_eq!(f.window_ns(queued), 100_000);
+        }
+        assert_eq!(f.window_ns(64), 0, "a full batch never waits");
+    }
+
+    #[test]
+    fn window_grows_one_fill_per_absorbed_request() {
+        let p = modeled();
+        assert_eq!(p.window_ns(2), 500_000 + 400_000);
+        assert_eq!(p.window_ns(3), 500_000 + 2 * 400_000);
+        assert_eq!(p.window_ns(4), 0, "max_batch dispatches immediately");
+    }
+
+    #[test]
+    fn window_never_exceeds_the_batch_runtime() {
+        // Strongly amortizable model: fill ≈ service, so the credit would
+        // grow ~fill per request — the cap keeps the wait below the cost of
+        // just running the batch.
+        let p = CoalescePolicy::fixed(Duration::from_millis(1))
+            .with_model_ns(1_000_000, 999_999)
+            .with_max_batch(64);
+        for queued in 2..64usize {
+            assert!(
+                p.window_ns(queued) <= p.batch_ns(queued as u64),
+                "queued {queued}: window {} > batch {}",
+                p.window_ns(queued),
+                p.batch_ns(queued as u64)
+            );
+        }
+    }
+
+    #[test]
+    fn batch_pricing_matches_the_simulator_curve() {
+        let p = modeled();
+        assert_eq!(p.batch_ns(0), 1_000_000, "empty prices like a single");
+        assert_eq!(p.batch_ns(1), 1_000_000);
+        assert_eq!(p.batch_ns(2), 400_000 + 2 * 600_000);
+        assert_eq!(p.batch_ns(4), 400_000 + 4 * 600_000);
+    }
+
+    #[test]
+    fn fill_is_clamped_below_service() {
+        let p = CoalescePolicy::fixed(Duration::ZERO).with_model_ns(10, 10_000);
+        assert_eq!(p.fill_ns, 9);
+        let q = CoalescePolicy::fixed(Duration::ZERO)
+            .with_model(Duration::from_nanos(10), Duration::from_nanos(10_000));
+        assert_eq!(q.fill_ns, 9);
+    }
+
+    #[test]
+    fn schedule_extends_the_window_under_backlog() {
+        // Arrivals at 0 and 0.2 ms. The first opens a 0.5 ms idle window;
+        // absorbing the second earns one fill (0.4 ms) of extra patience, so
+        // dispatch slides to 0.9 ms and the pair rides one batch priced
+        // 0.4 + 2×0.6 = 1.6 ms.
+        let batches = schedule(&modeled(), &[0, 200_000]);
+        assert_eq!(
+            batches,
+            vec![ScheduledBatch { dispatch_ns: 900_000, size: 2, complete_ns: 2_500_000 }]
+        );
+    }
+
+    #[test]
+    fn schedule_dispatches_immediately_when_the_batch_fills() {
+        // Four quick arrivals fill max_batch before any deadline: dispatch
+        // rides the fourth arrival, not the stretched window.
+        let batches = schedule(&modeled(), &[0, 100_000, 200_000, 300_000]);
+        assert_eq!(
+            batches,
+            vec![ScheduledBatch {
+                dispatch_ns: 300_000,
+                size: 4,
+                complete_ns: 300_000 + 2_800_000,
+            }]
+        );
+    }
+
+    #[test]
+    fn schedule_absorbs_backlog_waiting_at_completion() {
+        // A lone request, then three arrivals while its batch runs: the
+        // replica frees at 1.5 ms (0.5 window + 1.0 batch), finds all three
+        // waiting, and owes them a stretched window from that instant.
+        let p = modeled();
+        let batches = schedule(&p, &[0, 600_000, 700_000, 800_000]);
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0], ScheduledBatch {
+            dispatch_ns: 500_000,
+            size: 1,
+            complete_ns: 1_500_000,
+        });
+        // window_ns(3) = 0.5 + 2×0.4 = 1.3 ms after opening at 1.5 ms; no
+        // fourth arrival ever comes, so dispatch waits out the deadline.
+        assert_eq!(batches[1], ScheduledBatch {
+            dispatch_ns: 2_800_000,
+            size: 3,
+            complete_ns: 2_800_000 + 400_000 + 3 * 600_000,
+        });
+    }
+
+    #[test]
+    fn fixed_policy_schedule_is_the_legacy_window() {
+        let p = CoalescePolicy::fixed(Duration::from_micros(100)).with_max_batch(8);
+        let batches = schedule(&p, &[0]);
+        // No model: the batch "costs" nothing on the virtual clock, but the
+        // window is still waited out before dispatch.
+        assert_eq!(
+            batches,
+            vec![ScheduledBatch { dispatch_ns: 100_000, size: 1, complete_ns: 100_000 }]
+        );
+    }
+}

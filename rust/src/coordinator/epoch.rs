@@ -1,0 +1,158 @@
+//! Epoch-pinned snapshot cell: lock-free reads of a rarely-reconfigured
+//! value.
+//!
+//! [`EpochCell`] is the std-only core of the PR 6 lock-free fleet state
+//! (`ArcSwap`-style, but with reclamation made trivial instead of clever):
+//! readers follow one `Acquire` pointer load to an immutable snapshot;
+//! writers serialize on a mutex, build the *next* snapshot, publish it with
+//! a `Release` store, and **retire** the old one into a list owned by the
+//! cell. Retired snapshots are only freed when the cell itself drops, so a
+//! reader can never observe a dangling pointer — no hazard pointers, no
+//! grace periods, no reader registration.
+//!
+//! The cost of that simplicity is bounded, deliberate garbage: one retired
+//! snapshot per [`EpochCell::update`]. The fleet reconfigures at
+//! autoscaler cadence (milliseconds to seconds), not request cadence, so the
+//! retired list grows by a few `Vec<Arc<Shard>>`-sized entries per scaling
+//! action and is reclaimed at fleet teardown. See `docs/HOTPATH.md` for the
+//! ordering argument in context.
+
+use std::sync::atomic::{AtomicPtr, Ordering};
+use std::sync::Mutex;
+
+/// Shared cell whose readers never lock (see the module docs).
+pub struct EpochCell<T> {
+    /// Pointer to the live snapshot, always one of the boxes in `epochs`.
+    current: AtomicPtr<T>,
+    /// Every snapshot ever published (live one last). Owns the allocations
+    /// `current` points into; also the writer-serialization lock.
+    epochs: Mutex<Vec<*mut T>>,
+}
+
+// SAFETY: the raw pointers in `epochs` are uniquely owned by the cell
+// (created from `Box::into_raw`, freed only in `Drop`), so sending the cell
+// is sending the `T`s; sharing it hands out `&T`s, hence the `Sync` bound.
+unsafe impl<T: Send + Sync> Send for EpochCell<T> {}
+unsafe impl<T: Send + Sync> Sync for EpochCell<T> {}
+
+impl<T: Send + Sync> EpochCell<T> {
+    /// Cell holding `value` as its first epoch.
+    pub fn new(value: T) -> EpochCell<T> {
+        let ptr = Box::into_raw(Box::new(value));
+        EpochCell { current: AtomicPtr::new(ptr), epochs: Mutex::new(vec![ptr]) }
+    }
+
+    /// The live snapshot. One `Acquire` load — never blocks, never spins.
+    ///
+    /// The `Acquire` pairs with the `Release` store in
+    /// [`EpochCell::update`]: a reader that observes the new pointer also
+    /// observes the fully-built snapshot behind it.
+    pub fn load(&self) -> &T {
+        // SAFETY: `current` always points at an allocation owned by
+        // `epochs`, which never frees entries while the cell is alive; the
+        // returned borrow is tied to `&self`, so it cannot outlive the cell.
+        unsafe { &*self.current.load(Ordering::Acquire) }
+    }
+
+    /// Publish the snapshot `f` builds from the current one, retiring the
+    /// old epoch. Writers serialize on the internal mutex (readers are
+    /// unaffected); `f`'s second return value passes results out.
+    pub fn update<R>(&self, f: impl FnOnce(&T) -> (T, R)) -> R {
+        let mut epochs = self.epochs.lock().unwrap();
+        let (next, out) = f(self.load());
+        let ptr = Box::into_raw(Box::new(next));
+        epochs.push(ptr);
+        self.current.store(ptr, Ordering::Release);
+        out
+    }
+
+    /// Epochs ever published, the live one included (diagnostics/tests).
+    pub fn epoch_count(&self) -> usize {
+        self.epochs.lock().unwrap().len()
+    }
+}
+
+impl<T> Drop for EpochCell<T> {
+    fn drop(&mut self) {
+        for &ptr in self.epochs.get_mut().unwrap().iter() {
+            // SAFETY: each pointer came from `Box::into_raw` in
+            // `new`/`update` and is freed exactly once, here.
+            drop(unsafe { Box::from_raw(ptr) });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    #[test]
+    fn readers_see_published_updates() {
+        let cell = EpochCell::new(vec![1, 2, 3]);
+        assert_eq!(cell.load(), &[1, 2, 3]);
+        let removed = cell.update(|cur| {
+            let mut next = cur.clone();
+            let removed = next.pop();
+            (next, removed)
+        });
+        assert_eq!(removed, Some(3));
+        assert_eq!(cell.load(), &[1, 2]);
+        assert_eq!(cell.epoch_count(), 2);
+    }
+
+    #[test]
+    fn old_epoch_borrows_survive_an_update() {
+        // The retire-don't-free contract: a reader holding the previous
+        // snapshot keeps a valid borrow across a concurrent publish.
+        let cell = EpochCell::new(String::from("first"));
+        let before = cell.load();
+        cell.update(|_| (String::from("second"), ()));
+        assert_eq!(before, "first");
+        assert_eq!(cell.load(), "second");
+    }
+
+    #[test]
+    fn drop_frees_every_epoch_exactly_once() {
+        struct Counted(Arc<AtomicUsize>);
+        impl Drop for Counted {
+            fn drop(&mut self) {
+                self.0.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let drops = Arc::new(AtomicUsize::new(0));
+        let cell = EpochCell::new(Counted(Arc::clone(&drops)));
+        for _ in 0..5 {
+            cell.update(|_| (Counted(Arc::clone(&drops)), ()));
+        }
+        assert_eq!(drops.load(Ordering::SeqCst), 0, "epochs retire, not free");
+        drop(cell);
+        assert_eq!(drops.load(Ordering::SeqCst), 6);
+    }
+
+    #[test]
+    fn concurrent_readers_and_writers_agree_eventually() {
+        let cell = Arc::new(EpochCell::new(0u64));
+        std::thread::scope(|scope| {
+            let writer_cell = Arc::clone(&cell);
+            let writer = scope.spawn(move || {
+                for i in 1..=1000u64 {
+                    writer_cell.update(|&cur| {
+                        assert_eq!(cur, i - 1, "writers are serialized");
+                        (i, ())
+                    });
+                }
+            });
+            let mut last = 0u64;
+            for _ in 0..10_000 {
+                let seen = *cell.load();
+                assert!(seen >= last, "epochs publish monotonically");
+                last = seen;
+            }
+            writer.join().unwrap();
+        });
+        assert_eq!(*cell.load(), 1000);
+        assert_eq!(cell.epoch_count(), 1001);
+    }
+}

@@ -3,42 +3,57 @@
 //! The paper's contribution is a design-space-exploration methodology, so the
 //! coordinator's job is the DSE loop — synthesize → correlate → fit →
 //! validate → allocate — run as a deterministic job graph over a worker pool
-//! ([`jobs`]), plus the deployment side, split across three modules with
-//! distinct responsibilities:
+//! ([`jobs`]), plus the deployment side, split across modules with distinct
+//! responsibilities (the serving request path end-to-end is documented in
+//! `docs/HOTPATH.md`):
 //!
 //! - [`service`] — ONE worker: the batched inference event loop. A worker
 //!   thread owns a `BatchExecutor` (PJRT artifact or block-level golden
-//!   model), coalesces concurrent requests into dynamic batches, and keeps
-//!   the latency/throughput/error counters behind `ServiceStats`. It knows
-//!   nothing about networks other than its own.
+//!   model), coalesces concurrent requests into dynamic batches under a
+//!   [`CoalescePolicy`], and mirrors its latency/throughput/error counters
+//!   into lock-free atomics readable as `ServiceStats` without messaging the
+//!   worker. It knows nothing about networks other than its own.
+//! - [`coalesce`] — the batching policy shared VERBATIM by the live worker
+//!   and the virtual-clock traffic simulator: a fixed idle window that grows
+//!   with the backlog toward the model-predicted batch optimum, plus a pure
+//!   reference interpreter (`schedule`) used for live/sim parity tests.
 //! - [`shard`] — MANY workers: `Shard` pairs one service replica with an
 //!   admission counter; `ShardedService` owns the fleet (several networks ×
 //!   several replicas), enforces bounded admission (`try_*` returns
 //!   `Error::Overloaded` at a shard's queue cap), and aggregates per-shard
-//!   rows into fleet-wide `ShardedStats`. The replica set is *dynamic*:
-//!   `add_shard`/`remove_shard` reconfigure it live for the fleetplan
-//!   autoscaler, removal draining (never dropping) in-flight tickets.
+//!   rows into fleet-wide `ShardedStats` with a pure memory read. The
+//!   replica set is *dynamic*: `add_shard`/`remove_shard` reconfigure it
+//!   live for the fleetplan autoscaler, removal draining (never dropping)
+//!   in-flight tickets.
+//! - [`epoch`] — `EpochCell`, the std-only snapshot cell that makes the
+//!   dynamic fleet lock-free on the request path: admissions follow one
+//!   atomic pointer load; reconfiguration publishes a new immutable snapshot
+//!   and retires the old one.
 //! - [`router`] — the dispatch policy: a network-name → replica-set table
 //!   (rebuilt on reconfiguration) consulted with a dynamic load signal,
 //!   picking the replica with the fewest outstanding requests (lowest index
 //!   on ties); bounded admission walks the full load-ordered replica list so
-//!   `Overloaded` surfaces only when every replica is at its cap. Pure and
-//!   thread-free so policy changes stay unit-testable.
+//!   `Overloaded` surfaces only when every replica is at its cap, and
+//!   pipelined drivers plan a whole chunk with one scan (`route_many`). Pure
+//!   and thread-free so policy changes stay unit-testable.
 //!
 //! Rust owns the event loop, thread topology and metrics; Python never runs
 //! here (artifacts are pre-compiled by `make artifacts`).
 
 pub mod jobs;
 pub mod dse;
+pub mod coalesce;
+pub mod epoch;
 pub mod router;
 pub mod service;
 pub mod shard;
 
+pub use coalesce::{schedule, CoalescePolicy, ScheduledBatch};
 pub use dse::{DseEngine, DseReport};
+pub use epoch::EpochCell;
 pub use jobs::JobPool;
 pub use router::Router;
 pub use shard::{
     drive_golden_clients, drive_golden_clients_traced, FleetStats, Shard, ShardBackend,
     ShardSpec, ShardedService, ShardedStats, ShardStats, Ticket, DEFAULT_QUEUE_CAP,
-    DEFAULT_STATS_TIMEOUT,
 };

@@ -82,6 +82,38 @@ impl Router {
         order.sort_by_key(|&i| (load(i), i));
         Ok(order)
     }
+
+    /// Assign `n` dispatches for `network` with ONE load scan.
+    ///
+    /// [`Router::route_by`] re-evaluates the load closure over every replica
+    /// per call, so a driver pipelining N submissions pays N full fleet
+    /// scans. `route_many` seeds each replica's load once, then greedily
+    /// hands every slot to the currently least-loaded replica (lowest index
+    /// on ties) and increments its *seeded* count — the exact sequence N
+    /// successive `route_by` calls would produce if each admission landed
+    /// before the next scan, without re-reading the fleet in between.
+    pub fn route_many<F>(&self, network: &str, n: usize, load: F) -> Result<Vec<usize>>
+    where
+        F: Fn(usize) -> usize,
+    {
+        let replicas = self.by_network.get(network).ok_or_else(|| {
+            Error::Usage(format!(
+                "no shard serves network `{network}` (known: {})",
+                self.networks().join(", ")
+            ))
+        })?;
+        let mut loads: Vec<(usize, usize)> = replicas.iter().map(|&i| (load(i), i)).collect();
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let best = loads
+                .iter_mut()
+                .min_by_key(|slot| **slot)
+                .ok_or_else(|| Error::Usage(format!("network `{network}` has no replicas")))?;
+            out.push(best.1);
+            best.0 += 1;
+        }
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -132,6 +164,29 @@ mod tests {
             r.route_by("neta", |i| loads[i]).unwrap()
         );
         assert!(r.route_all_by("ghost", |_| 0).is_err());
+    }
+
+    #[test]
+    fn route_many_matches_sequential_route_by_with_one_scan() {
+        let r = router();
+        // neta replicas are fleet indices [0, 1, 3] with seeded loads
+        // 5, 1, 4: slots drain the gap to the next-loaded replica first.
+        let loads = [5usize, 1, 9, 4];
+        assert_eq!(r.route_many("neta", 5, |i| loads[i]).unwrap(), vec![1, 1, 1, 1, 3]);
+        // Head of the plan is exactly the single-route choice.
+        assert_eq!(
+            r.route_many("neta", 1, |i| loads[i]).unwrap()[0],
+            r.route_by("neta", |i| loads[i]).unwrap()
+        );
+        assert!(r.route_many("neta", 0, |i| loads[i]).unwrap().is_empty());
+        assert!(r.route_many("ghost", 1, |_| 0).is_err());
+    }
+
+    #[test]
+    fn route_many_ties_break_toward_lowest_index() {
+        let r = router();
+        // All-equal seeds: round-robin in index order, wrapping lowest-first.
+        assert_eq!(r.route_many("neta", 4, |_| 7).unwrap(), vec![0, 1, 3, 0]);
     }
 
     #[test]

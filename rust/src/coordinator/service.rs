@@ -2,14 +2,29 @@
 //!
 //! A worker thread owns a [`BatchExecutor`] (either the PJRT-compiled JAX
 //! artifact or the block-level golden model) and drains an MPSC request
-//! queue, assembling dynamic batches up to `batch_size` (requests that arrive
-//! while a batch executes ride the next one). Callers block on a per-request
-//! reply channel. Latency/throughput statistics are collected on the worker.
+//! queue, assembling dynamic batches up to `batch_size`. How long a partial
+//! batch is held open for more arrivals is decided by a
+//! [`CoalescePolicy`] — by default the fixed [`BATCH_WINDOW`], optionally a
+//! backlog-aware adaptive window shared with the traffic simulator (see
+//! [`InferenceService::start_with_policy`] and `coordinator::coalesce`).
+//! Callers block on a per-request reply channel; request payloads travel as
+//! `Arc<[i32]>`, allocated once by the client and reference-counted through
+//! admission, batching and execution instead of cloned per hop.
+//!
+//! Latency/throughput statistics are mirrored into lock-free atomic counters
+//! ([`ServiceCounters`]) as the worker completes batches, so
+//! [`InferenceService::stats`] reads a snapshot without messaging the worker
+//! — a monitor never waits behind a running batch. The full request path and
+//! its ordering invariants are documented in `docs/HOTPATH.md`.
 
 use crate::cnn::GoldenCnn;
+use crate::coordinator::coalesce::CoalescePolicy;
 use crate::util::error::{Error, Result};
+pub use crate::util::stats::percentile_nearest_rank;
+use crate::util::stats::{window_mean_p95, LatencyRing};
 use std::any::Any;
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 /// Something that can run a batch of images to logits.
@@ -18,8 +33,10 @@ use std::time::{Duration, Instant};
 /// (`Rc` internals), so PJRT-backed services construct their executor
 /// *inside* the worker thread via [`InferenceService::start_factory`].
 pub trait BatchExecutor: 'static {
-    /// Run a batch; one logits vector per image.
-    fn infer_batch(&mut self, images: &[Vec<i32>]) -> Result<Vec<Vec<i32>>>;
+    /// Run a batch; one logits vector per image. Images arrive as shared
+    /// buffers (`Arc<[i32]>` derefs to `&[i32]`) — executors must not
+    /// assume exclusive ownership.
+    fn infer_batch(&mut self, images: &[Arc<[i32]>]) -> Result<Vec<Vec<i32>>>;
     /// Executor label for metrics.
     fn label(&self) -> String;
     /// Worker threads the executor fans a batch out over (1 = serial);
@@ -56,9 +73,10 @@ impl GoldenExecutor {
     }
 
     fn infer_one(cnn: &GoldenCnn, im: &[i32]) -> Result<Vec<i32>> {
-        let wide: Vec<i64> = im.iter().map(|&v| v as i64).collect();
+        // `infer_i32` consumes the shared request buffer directly — no
+        // per-request widening copy on the hot path (PR 6 zero-copy).
         Ok(cnn
-            .infer(&wide)?
+            .infer_i32(im)?
             .into_iter()
             .map(|v| v.clamp(i32::MIN as i64, i32::MAX as i64) as i32)
             .collect())
@@ -66,7 +84,7 @@ impl GoldenExecutor {
 }
 
 impl BatchExecutor for GoldenExecutor {
-    fn infer_batch(&mut self, images: &[Vec<i32>]) -> Result<Vec<Vec<i32>>> {
+    fn infer_batch(&mut self, images: &[Arc<[i32]>]) -> Result<Vec<Vec<i32>>> {
         let workers = self.workers.max(1).min(images.len().max(1));
         if workers <= 1 || images.len() <= 1 {
             return images.iter().map(|im| Self::infer_one(&self.cnn, im)).collect();
@@ -138,7 +156,7 @@ impl PjrtExecutor {
 }
 
 impl BatchExecutor for PjrtExecutor {
-    fn infer_batch(&mut self, images: &[Vec<i32>]) -> Result<Vec<Vec<i32>>> {
+    fn infer_batch(&mut self, images: &[Arc<[i32]>]) -> Result<Vec<Vec<i32>>> {
         let mut out = Vec::with_capacity(images.len());
         for chunk in images.chunks(self.batch_capacity) {
             let mut flat = Vec::with_capacity(self.batch_capacity * self.image_len);
@@ -191,21 +209,6 @@ pub struct ServiceStats {
     pub parallelism: u64,
 }
 
-/// Nearest-rank percentile over an ascending-sorted sample: the smallest
-/// element with at least `pct`% of the sample at or below it, i.e. rank
-/// ⌈n·pct/100⌉ (1-based). Returns 0 for an empty sample.
-///
-/// The ceiling is load-bearing: a floored rank `(n-1)·pct/100` reads *below*
-/// the requested percentile for small n (at n = 2 it reports the minimum as
-/// the p95 — the bug fixed in PR 2; see the regression test).
-pub fn percentile_nearest_rank(sorted: &[u64], pct: u64) -> u64 {
-    if sorted.is_empty() {
-        return 0;
-    }
-    let rank = (sorted.len() as u64 * pct).div_ceil(100).max(1) as usize;
-    sorted[rank.min(sorted.len()) - 1]
-}
-
 /// Opaque object the worker drops when its request completes (just before
 /// the reply is sent) — or on the floor if the service stops first. The
 /// sharding layer passes its admission-slot guard here, so a shard's
@@ -214,31 +217,29 @@ pub fn percentile_nearest_rank(sorted: &[u64], pct: u64) -> u64 {
 pub type CompletionGuard = Box<dyn Any + Send>;
 
 enum Msg {
-    /// An image, its reply channel, its *enqueue* timestamp — latency is
-    /// measured from admission, not from when the worker dequeues it, so
-    /// queue-wait under load is visible in the stats (the overload signal
-    /// the sharding layer's bounded admission exists to surface) — and an
-    /// optional [`CompletionGuard`].
-    Infer(Vec<i32>, mpsc::Sender<Result<Vec<i32>>>, Instant, Option<CompletionGuard>),
-    Stats(mpsc::Sender<ServiceStats>),
+    /// An image (a shared buffer, allocated once by the client), its reply
+    /// channel, its *enqueue* timestamp — latency is measured from
+    /// admission, not from when the worker dequeues it, so queue-wait under
+    /// load is visible in the stats (the overload signal the sharding
+    /// layer's bounded admission exists to surface) — and an optional
+    /// [`CompletionGuard`].
+    Infer(Arc<[i32]>, mpsc::Sender<Result<Vec<i32>>>, Instant, Option<CompletionGuard>),
     Shutdown,
 }
 
 /// An inference request absorbed into the current batch window.
 type PendingInfer =
-    (Vec<i32>, mpsc::Sender<Result<Vec<i32>>>, Instant, Option<CompletionGuard>);
+    (Arc<[i32]>, mpsc::Sender<Result<Vec<i32>>>, Instant, Option<CompletionGuard>);
 
-/// Batching window: long enough to coalesce concurrent clients, short enough
-/// not to dominate single-client latency (§Perf: 200 µs → 100 µs cut mean
-/// latency ~20% with no batching regression on the concurrent test).
+/// Default idle batching window: long enough to coalesce concurrent clients,
+/// short enough not to dominate single-client latency (§Perf: 200 µs →
+/// 100 µs cut mean latency ~20% with no batching regression on the
+/// concurrent test).
 ///
-/// Public because the traffic simulator mirrors this coalescing behaviour
-/// (`simulate::SimServiceModel`): the live worker blocks for the first
-/// request, then absorbs arrivals for up to this window (capped at
-/// `batch_size`) before executing the batch — under backlog the window is
-/// never waited out, because queued messages return from `recv_timeout`
-/// immediately, so batches chain back-to-back. The virtual service model
-/// reproduces exactly that two-regime curve.
+/// This is the `idle_window_ns` of the default [`CoalescePolicy`]; services
+/// started with a *modeled* policy grow the window with the backlog toward
+/// the `fill + b×(service−fill)` optimum — see `coordinator::coalesce` for
+/// the shared law and the simulator parity contract.
 pub const BATCH_WINDOW: Duration = Duration::from_micros(100);
 
 /// Latency samples retained for mean/percentile estimation: a ring of the
@@ -247,98 +248,98 @@ pub const BATCH_WINDOW: Duration = Duration::from_micros(100);
 /// and throughput come from `completed`, which is just a counter).
 const LATENCY_WINDOW: usize = 4096;
 
-/// Worker-side counters behind every [`ServiceStats`] snapshot.
-struct WorkerCounters {
+/// Lock-free mirror of the worker's progress, shared between the worker
+/// (sole writer) and any number of monitors.
+///
+/// Counters are plain monotonic `Relaxed` atomics: each is independently
+/// meaningful, and a reader that needs "all effects of request N" has
+/// already synchronized with the worker through N's reply channel, which
+/// carries the happens-before edge. Latencies go through the lock-striped
+/// [`LatencyRing`], so recording never blocks behind a reader summarizing
+/// the window. See `docs/HOTPATH.md` for the full ordering argument.
+pub struct ServiceCounters {
     started: Instant,
-    parallelism: u64,
-    /// Ring buffer of the last [`LATENCY_WINDOW`] successful-request
-    /// latencies; `next_lat` is the overwrite cursor once full.
-    latencies_us: Vec<u64>,
-    next_lat: usize,
-    batches: u64,
-    completed: u64,
-    errors: u64,
+    parallelism: AtomicU64,
+    completed: AtomicU64,
+    errors: AtomicU64,
+    batches: AtomicU64,
+    latencies: LatencyRing,
 }
 
-impl WorkerCounters {
-    fn new(parallelism: u64) -> WorkerCounters {
-        WorkerCounters {
+impl ServiceCounters {
+    fn new() -> ServiceCounters {
+        ServiceCounters {
             started: Instant::now(),
-            parallelism,
-            latencies_us: Vec::new(),
-            next_lat: 0,
-            batches: 0,
-            completed: 0,
-            errors: 0,
+            parallelism: AtomicU64::new(1),
+            completed: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            latencies: LatencyRing::new(LATENCY_WINDOW),
         }
     }
 
-    fn record_latency(&mut self, us: u64) {
-        if self.latencies_us.len() < LATENCY_WINDOW {
-            self.latencies_us.push(us);
-        } else {
-            self.latencies_us[self.next_lat] = us;
-        }
-        self.next_lat = (self.next_lat + 1) % LATENCY_WINDOW;
-    }
-
-    fn snapshot(&self) -> ServiceStats {
-        let mut lats = self.latencies_us.clone();
-        lats.sort_unstable();
-        let mean = if lats.is_empty() {
-            0.0
-        } else {
-            lats.iter().sum::<u64>() as f64 / lats.len() as f64 / 1000.0
-        };
-        let p95 = percentile_nearest_rank(&lats, 95) as f64 / 1000.0;
+    /// Consistent-enough snapshot for monitoring: individual counters are
+    /// exact; the set is not cut atomically (a request can complete between
+    /// two loads), which monitoring tolerates by construction.
+    pub fn snapshot(&self) -> ServiceStats {
+        let window = self.latencies.snapshot();
+        let (mean_us, p95_us) = window_mean_p95(&window);
+        let completed = self.completed.load(Ordering::Relaxed);
         let elapsed = self.started.elapsed().as_secs_f64().max(1e-9);
         ServiceStats {
-            requests: self.completed,
-            errors: self.errors,
-            batches: self.batches,
-            mean_latency_ms: mean,
-            p95_latency_ms: p95,
-            throughput_rps: self.completed as f64 / elapsed,
-            parallelism: self.parallelism,
+            requests: completed,
+            errors: self.errors.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            mean_latency_ms: mean_us / 1000.0,
+            p95_latency_ms: p95_us as f64 / 1000.0,
+            throughput_rps: completed as f64 / elapsed,
+            parallelism: self.parallelism.load(Ordering::Relaxed),
         }
     }
 }
 
-/// Assemble one batch: block for the first inference request, then coalesce
-/// arrivals inside [`BATCH_WINDOW`] up to `batch_size`. Returns the batch and
-/// whether a shutdown was observed.
+/// Assemble one batch. Three phases, each mirrored by the simulator and the
+/// [`crate::coordinator::coalesce::schedule`] reference interpreter:
 ///
-/// Two correctness properties (both regression-tested):
-/// - `Msg::Stats` is answered *inline*, never parked until after the batch
-///   executes — a monitor polling a busy (or idle) service gets an immediate
-///   snapshot of everything completed so far.
-/// - `Msg::Shutdown` ends the window *immediately*: requests already absorbed
-///   are still served, but the worker stops coalescing instead of spinning
-///   until `batch_size` fills under a steady request stream.
+/// 1. Block for the first inference request (the window "opens").
+/// 2. Drain everything already queued, up to `batch_size` — backlog that
+///    accumulated while the previous batch ran is owed no window.
+/// 3. Coalesce: wait out `policy.window_ns(pending)` from the open instant,
+///    re-computing the deadline as absorbed arrivals extend it (adaptive
+///    policies grow the window under backlog; fixed policies keep the
+///    legacy constant window).
+///
+/// Returns the batch and whether a shutdown was observed. `Msg::Shutdown`
+/// ends the window *immediately* (regression-tested): requests already
+/// absorbed are still served, but the worker stops coalescing instead of
+/// spinning until `batch_size` fills under a steady request stream.
 fn collect_batch(
     rx: &mpsc::Receiver<Msg>,
     batch_size: usize,
-    counters: &WorkerCounters,
+    policy: &CoalescePolicy,
 ) -> (Vec<PendingInfer>, bool) {
     let mut pending: Vec<PendingInfer> = Vec::new();
-    loop {
-        match rx.recv() {
-            Ok(Msg::Infer(im, reply, t0, guard)) => {
-                pending.push((im, reply, t0, guard));
-                break;
-            }
-            Ok(Msg::Stats(reply)) => {
-                let _ = reply.send(counters.snapshot());
-            }
-            Ok(Msg::Shutdown) | Err(_) => return (pending, true),
-        }
+    match rx.recv() {
+        Ok(Msg::Infer(im, reply, t0, guard)) => pending.push((im, reply, t0, guard)),
+        Ok(Msg::Shutdown) | Err(_) => return (pending, true),
     }
     while pending.len() < batch_size {
-        match rx.recv_timeout(BATCH_WINDOW) {
+        match rx.try_recv() {
             Ok(Msg::Infer(im, reply, t0, guard)) => pending.push((im, reply, t0, guard)),
-            Ok(Msg::Stats(reply)) => {
-                let _ = reply.send(counters.snapshot());
-            }
+            Ok(Msg::Shutdown) => return (pending, true),
+            Err(mpsc::TryRecvError::Empty) => break,
+            Err(mpsc::TryRecvError::Disconnected) => return (pending, true),
+        }
+    }
+    let opened = Instant::now();
+    while pending.len() < batch_size {
+        let deadline = opened + Duration::from_nanos(policy.window_ns(pending.len()));
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(Msg::Infer(im, reply, t0, guard)) => pending.push((im, reply, t0, guard)),
             Ok(Msg::Shutdown) => return (pending, true),
             Err(_) => break,
         }
@@ -350,12 +351,26 @@ fn collect_batch(
 pub struct InferenceService {
     tx: mpsc::Sender<Msg>,
     worker: Option<std::thread::JoinHandle<()>>,
+    counters: Arc<ServiceCounters>,
 }
 
 impl InferenceService {
-    /// Start the service with an already-built (Send) executor.
+    /// Start the service with an already-built (Send) executor and the
+    /// default fixed-window policy.
     pub fn start<E: BatchExecutor + Send>(executor: E, batch_size: usize) -> InferenceService {
-        Self::start_factory(move || Ok(executor), batch_size)
+        Self::start_with_policy(executor, batch_size, CoalescePolicy::fixed(BATCH_WINDOW))
+    }
+
+    /// [`InferenceService::start`] with an explicit [`CoalescePolicy`] —
+    /// pass a modeled policy (`CoalescePolicy::fixed(..).with_model(..)`) to
+    /// let the batch window grow with the backlog exactly as the traffic
+    /// simulator models it.
+    pub fn start_with_policy<E: BatchExecutor + Send>(
+        executor: E,
+        batch_size: usize,
+        policy: CoalescePolicy,
+    ) -> InferenceService {
+        Self::start_factory_with_policy(move || Ok(executor), batch_size, policy)
     }
 
     /// Start the service with an executor built *inside* the worker thread —
@@ -366,8 +381,25 @@ impl InferenceService {
         E: BatchExecutor,
         F: FnOnce() -> Result<E> + Send + 'static,
     {
+        Self::start_factory_with_policy(factory, batch_size, CoalescePolicy::fixed(BATCH_WINDOW))
+    }
+
+    /// [`InferenceService::start_factory`] with an explicit coalescing
+    /// policy.
+    pub fn start_factory_with_policy<E, F>(
+        factory: F,
+        batch_size: usize,
+        policy: CoalescePolicy,
+    ) -> InferenceService
+    where
+        E: BatchExecutor,
+        F: FnOnce() -> Result<E> + Send + 'static,
+    {
         let (tx, rx) = mpsc::channel::<Msg>();
         let batch_size = batch_size.max(1);
+        let policy = policy.with_max_batch(batch_size);
+        let counters = Arc::new(ServiceCounters::new());
+        let mirror = Arc::clone(&counters);
         let worker = std::thread::spawn(move || {
             let mut executor = match factory() {
                 Ok(e) => e,
@@ -375,20 +407,13 @@ impl InferenceService {
                     // Answer everything with the init failure until shutdown;
                     // stats snapshots surface the failures as `errors`.
                     let msg = init_err.to_string();
-                    let mut errors = 0u64;
                     for m in rx {
                         match m {
                             Msg::Infer(_, reply, _, guard) => {
-                                errors += 1;
+                                mirror.completed.fetch_add(1, Ordering::Relaxed);
+                                mirror.errors.fetch_add(1, Ordering::Relaxed);
                                 drop(guard);
                                 let _ = reply.send(Err(Error::Runtime(msg.clone())));
-                            }
-                            Msg::Stats(reply) => {
-                                let _ = reply.send(ServiceStats {
-                                    requests: errors,
-                                    errors,
-                                    ..ServiceStats::default()
-                                });
                             }
                             Msg::Shutdown => break,
                         }
@@ -396,19 +421,21 @@ impl InferenceService {
                     return;
                 }
             };
-            let mut counters = WorkerCounters::new(executor.parallelism() as u64);
+            mirror.parallelism.store(executor.parallelism() as u64, Ordering::Relaxed);
             loop {
-                let (pending, shutdown) = collect_batch(&rx, batch_size, &counters);
+                let (pending, shutdown) = collect_batch(&rx, batch_size, &policy);
                 if !pending.is_empty() {
-                    let images: Vec<Vec<i32>> =
-                        pending.iter().map(|(im, _, _, _)| im.clone()).collect();
+                    // Reference-count the shared buffers into the batch —
+                    // pointer copies, not payload clones.
+                    let images: Vec<Arc<[i32]>> =
+                        pending.iter().map(|(im, _, _, _)| Arc::clone(im)).collect();
                     let results = executor.infer_batch(&images);
-                    counters.batches += 1;
+                    mirror.batches.fetch_add(1, Ordering::Relaxed);
                     match results {
                         Ok(outs) => {
                             for ((_, reply, t0, guard), out) in pending.into_iter().zip(outs) {
-                                counters.record_latency(t0.elapsed().as_micros() as u64);
-                                counters.completed += 1;
+                                mirror.latencies.record(t0.elapsed().as_micros() as u64);
+                                mirror.completed.fetch_add(1, Ordering::Relaxed);
                                 // Release the admission slot before replying so
                                 // a caller unblocked by the reply observes the
                                 // slot already freed (keeps tests and
@@ -420,8 +447,8 @@ impl InferenceService {
                         Err(e) => {
                             let msg = e.to_string();
                             for (_, reply, _, guard) in pending {
-                                counters.completed += 1;
-                                counters.errors += 1;
+                                mirror.completed.fetch_add(1, Ordering::Relaxed);
+                                mirror.errors.fetch_add(1, Ordering::Relaxed);
                                 drop(guard);
                                 let _ = reply.send(Err(Error::Runtime(msg.clone())));
                             }
@@ -433,7 +460,7 @@ impl InferenceService {
                 }
             }
         });
-        InferenceService { tx, worker: Some(worker) }
+        InferenceService { tx, worker: Some(worker), counters }
     }
 
     /// Non-blocking admission: enqueue one image and return the reply channel.
@@ -441,7 +468,14 @@ impl InferenceService {
     /// (see `coordinator::shard`); `recv()` on the returned channel blocks
     /// until the batch containing the request executes. Latency is measured
     /// from this call, so time spent queued counts toward the stats.
-    pub fn enqueue(&self, image: Vec<i32>) -> Result<mpsc::Receiver<Result<Vec<i32>>>> {
+    ///
+    /// The image is any shared buffer convertible to `Arc<[i32]>` — pass an
+    /// `Arc` directly to share one allocation across retries and replicas,
+    /// or a `Vec<i32>` for the one-off case (converted once, here).
+    pub fn enqueue(
+        &self,
+        image: impl Into<Arc<[i32]>>,
+    ) -> Result<mpsc::Receiver<Result<Vec<i32>>>> {
         self.enqueue_with_guard(image, None)
     }
 
@@ -451,55 +485,34 @@ impl InferenceService {
     /// e.g. a shard's admission slot — to actual completion.
     pub fn enqueue_with_guard(
         &self,
-        image: Vec<i32>,
+        image: impl Into<Arc<[i32]>>,
         guard: Option<CompletionGuard>,
     ) -> Result<mpsc::Receiver<Result<Vec<i32>>>> {
         let (rtx, rrx) = mpsc::channel();
         self.tx
-            .send(Msg::Infer(image, rtx, Instant::now(), guard))
+            .send(Msg::Infer(image.into(), rtx, Instant::now(), guard))
             .map_err(|_| Error::Runtime("service stopped".into()))?;
         Ok(rrx)
     }
 
     /// Blocking inference of one image.
-    pub fn infer(&self, image: Vec<i32>) -> Result<Vec<i32>> {
+    pub fn infer(&self, image: impl Into<Arc<[i32]>>) -> Result<Vec<i32>> {
         self.enqueue(image)?
             .recv()
             .map_err(|_| Error::Runtime("service dropped reply".into()))?
     }
 
-    /// Send a stats request and return the reply channel without waiting —
-    /// lets a fleet snapshot query every worker concurrently against one
-    /// shared deadline instead of paying each worker's wait in sequence.
-    pub fn request_stats(&self) -> Result<mpsc::Receiver<ServiceStats>> {
-        let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .send(Msg::Stats(rtx))
-            .map_err(|_| Error::Runtime("service stopped".into()))?;
-        Ok(rrx)
+    /// Statistics snapshot, read from the lock-free counter mirror — never
+    /// messages the worker, never waits behind a running batch. Always
+    /// current: the worker publishes per-request, not per-batch-window.
+    pub fn stats(&self) -> ServiceStats {
+        self.counters.snapshot()
     }
 
-    /// Fetch statistics (blocks until the worker answers — which can be a
-    /// full batch execution if the worker is inside its executor; use
-    /// [`InferenceService::stats_within`] for a bounded wait).
-    pub fn stats(&self) -> Result<ServiceStats> {
-        self.request_stats()?
-            .recv()
-            .map_err(|_| Error::Runtime("service dropped stats".into()))
-    }
-
-    /// Fetch statistics, waiting at most `timeout` for the worker to answer.
-    /// `Ok(None)` means the worker did not answer in time (it is executing a
-    /// batch — wedged or just slow); `Err` means the service is stopped. The
-    /// late reply, if any, is discarded harmlessly.
-    pub fn stats_within(&self, timeout: Duration) -> Result<Option<ServiceStats>> {
-        match self.request_stats()?.recv_timeout(timeout) {
-            Ok(stats) => Ok(Some(stats)),
-            Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
-            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                Err(Error::Runtime("service dropped stats".into()))
-            }
-        }
+    /// The shared counter mirror itself, for callers aggregating many
+    /// services (the sharding layer's fleet snapshot).
+    pub fn counters(&self) -> &Arc<ServiceCounters> {
+        &self.counters
     }
 
     /// Ask the worker to stop *without* joining it — the drain primitive the
@@ -584,7 +597,7 @@ mod tests {
             let logits = h.join().unwrap();
             assert_eq!(logits.len(), cnn.spec.classes());
         }
-        let stats = svc.stats().unwrap();
+        let stats = svc.stats();
         assert_eq!(stats.requests, 12);
         assert!(stats.batches <= 12, "some batching should occur: {stats:?}");
         assert!(stats.throughput_rps > 0.0);
@@ -593,7 +606,8 @@ mod tests {
     #[test]
     fn parallel_batches_match_serial() {
         let cnn = GoldenCnn::new(zoo::tiny(), BlockKind::Conv2).unwrap();
-        let images: Vec<Vec<i32>> = (0..9).map(|s| image(&cnn, 50 + s)).collect();
+        let images: Vec<Arc<[i32]>> =
+            (0..9).map(|s| image(&cnn, 50 + s).into()).collect();
         let mut serial = GoldenExecutor::with_workers(cnn.clone(), 1);
         let mut parallel = GoldenExecutor::with_workers(cnn, 4);
         assert_eq!(
@@ -608,7 +622,7 @@ mod tests {
         let cnn = GoldenCnn::new(zoo::tiny(), BlockKind::Conv2).unwrap();
         let svc = InferenceService::start(GoldenExecutor::with_workers(cnn.clone(), 3), 4);
         let _ = svc.infer(image(&cnn, 1)).unwrap();
-        let stats = svc.stats().unwrap();
+        let stats = svc.stats();
         assert_eq!(stats.parallelism, 3);
         svc.shutdown();
     }
@@ -637,57 +651,87 @@ mod tests {
         let (r1, _keep1) = mpsc::channel();
         let (r2, _keep2) = mpsc::channel();
         let (r3, _keep3) = mpsc::channel();
-        tx.send(Msg::Infer(vec![1], r1, Instant::now(), None)).unwrap();
-        tx.send(Msg::Infer(vec![2], r2, Instant::now(), None)).unwrap();
+        tx.send(Msg::Infer(vec![1].into(), r1, Instant::now(), None)).unwrap();
+        tx.send(Msg::Infer(vec![2].into(), r2, Instant::now(), None)).unwrap();
         tx.send(Msg::Shutdown).unwrap();
-        tx.send(Msg::Infer(vec![3], r3, Instant::now(), None)).unwrap();
-        let counters = WorkerCounters::new(1);
-        let (pending, shutdown) = collect_batch(&rx, 100, &counters);
+        tx.send(Msg::Infer(vec![3].into(), r3, Instant::now(), None)).unwrap();
+        let policy = CoalescePolicy::fixed(BATCH_WINDOW).with_max_batch(100);
+        let (pending, shutdown) = collect_batch(&rx, 100, &policy);
         assert!(shutdown);
         assert_eq!(pending.len(), 2, "requests absorbed before shutdown ride the final batch");
         // The post-shutdown request was NOT absorbed: the window closed at
         // once instead of coalescing toward batch_size = 100.
-        assert!(matches!(rx.try_recv(), Ok(Msg::Infer(im, _, _, _)) if im == vec![3]));
+        assert!(matches!(rx.try_recv(), Ok(Msg::Infer(im, _, _, _)) if im[..] == [3]));
     }
 
     #[test]
-    fn stats_answered_inside_batching_window() {
+    fn queued_backlog_is_drained_without_waiting_a_window() {
+        // Requests already in the channel when the worker looks ride the
+        // same batch with no window owed — the live half of the simulator's
+        // completion-time backlog dispatch.
         let (tx, rx) = mpsc::channel::<Msg>();
-        let (reply_tx, _reply_keep) = mpsc::channel();
-        let (stats_tx, stats_rx) = mpsc::channel();
-        tx.send(Msg::Infer(vec![0], reply_tx, Instant::now(), None)).unwrap();
-        tx.send(Msg::Stats(stats_tx)).unwrap();
-        let mut counters = WorkerCounters::new(1);
-        counters.completed = 3;
-        counters.errors = 1;
-        let (pending, shutdown) = collect_batch(&rx, 8, &counters);
-        assert_eq!(pending.len(), 1);
+        let keep: Vec<_> = (0..3)
+            .map(|i| {
+                let (r, keep) = mpsc::channel();
+                tx.send(Msg::Infer(vec![i].into(), r, Instant::now(), None)).unwrap();
+                keep
+            })
+            .collect();
+        // Adaptive policy with a huge idle window: if draining waited on the
+        // window law this test would hang for seconds.
+        let policy = CoalescePolicy::fixed(Duration::from_secs(30))
+            .with_model_ns(1_000_000, 400_000)
+            .with_max_batch(3);
+        let t0 = Instant::now();
+        let (pending, shutdown) = collect_batch(&rx, 3, &policy);
+        assert!(t0.elapsed() < Duration::from_secs(5), "no window waited at full batch");
         assert!(!shutdown);
-        // Answered during the window — before any batch executed — instead of
-        // being parked until the whole batch ran.
-        let snap = stats_rx.try_recv().expect("stats reply must already be queued");
-        assert_eq!(snap.requests, 3);
-        assert_eq!(snap.errors, 1);
+        assert_eq!(pending.len(), 3);
+        drop(keep);
     }
 
     #[test]
-    fn latency_ring_buffer_stays_bounded() {
-        let mut c = WorkerCounters::new(1);
-        for i in 0..(LATENCY_WINDOW as u64 + 100) {
-            c.record_latency(i);
+    fn stats_never_message_the_worker() {
+        // The lock-free stats contract: snapshots come from the counter
+        // mirror, so they are answered even while the worker is wedged
+        // inside its executor (the old Msg::Stats round-trip would block).
+        let (svc, cnn) = golden_service();
+        let s0 = svc.stats();
+        assert_eq!((s0.requests, s0.errors, s0.batches), (0, 0, 0));
+        for seed in 0..3 {
+            let _ = svc.infer(image(&cnn, seed)).unwrap();
         }
-        assert_eq!(c.latencies_us.len(), LATENCY_WINDOW, "memory stays bounded");
-        // The overwrite cursor replaced the 100 oldest samples (0..99), so
-        // the minimum retained latency is sample 100.
-        assert_eq!(*c.latencies_us.iter().min().unwrap(), 100);
-        assert_eq!(*c.latencies_us.iter().max().unwrap(), LATENCY_WINDOW as u64 + 99);
+        let t0 = Instant::now();
+        let s = svc.stats();
+        assert!(t0.elapsed() < Duration::from_millis(100), "snapshot is a memory read");
+        assert_eq!(s.requests, 3);
+        assert!(s.mean_latency_ms > 0.0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn payload_allocation_is_shared_not_cloned() {
+        let (svc, cnn) = golden_service();
+        let img: Arc<[i32]> = image(&cnn, 9).into();
+        let logits = svc.infer(Arc::clone(&img)).unwrap();
+        assert_eq!(logits.len(), cnn.spec.classes());
+        // The worker's references are dropped once the request completes;
+        // the client's allocation was shared, never copied.
+        for _ in 0..100 {
+            if Arc::strong_count(&img) == 1 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(Arc::strong_count(&img), 1);
+        svc.shutdown();
     }
 
     #[test]
     fn failed_requests_are_counted_with_errors() {
         struct FailingExecutor;
         impl BatchExecutor for FailingExecutor {
-            fn infer_batch(&mut self, _images: &[Vec<i32>]) -> Result<Vec<Vec<i32>>> {
+            fn infer_batch(&mut self, _images: &[Arc<[i32]>]) -> Result<Vec<Vec<i32>>> {
                 Err(Error::Runtime("injected failure".into()))
             }
             fn label(&self) -> String {
@@ -697,7 +741,7 @@ mod tests {
         let svc = InferenceService::start(FailingExecutor, 2);
         assert!(svc.infer(vec![0; 4]).is_err());
         assert!(svc.infer(vec![1; 4]).is_err());
-        let stats = svc.stats().unwrap();
+        let stats = svc.stats();
         assert_eq!(stats.requests, 2, "failed requests must still be counted");
         assert_eq!(stats.errors, 2);
         assert_eq!(stats.mean_latency_ms, 0.0, "failures do not pollute latency stats");
@@ -720,12 +764,30 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_policy_serves_single_requests_promptly() {
+        // Idle degeneration, live side: a modeled policy behaves exactly
+        // like the fixed window when there is no backlog — one request, one
+        // batch, answered without waiting out any grown window.
+        let cnn = GoldenCnn::new(zoo::tiny(), BlockKind::Conv2).unwrap();
+        let policy = CoalescePolicy::fixed(BATCH_WINDOW)
+            .with_model(Duration::from_millis(1), Duration::from_micros(400));
+        let svc =
+            InferenceService::start_with_policy(GoldenExecutor::new(cnn.clone()), 4, policy);
+        let t0 = Instant::now();
+        let _ = svc.infer(image(&cnn, 3)).unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        let s = svc.stats();
+        assert_eq!((s.requests, s.batches), (1, 1));
+        svc.shutdown();
+    }
+
+    #[test]
     fn stats_latency_percentiles_ordered() {
         let (svc, cnn) = golden_service();
         for seed in 0..5 {
             let _ = svc.infer(image(&cnn, seed)).unwrap();
         }
-        let s = svc.stats().unwrap();
+        let s = svc.stats();
         assert!(s.p95_latency_ms >= 0.0);
         assert!(s.mean_latency_ms > 0.0);
         svc.shutdown();

@@ -10,46 +10,49 @@
 //! with [`Error::Overloaded`] once a shard's outstanding count reaches its
 //! queue cap, instead of letting queues grow without bound under a traffic
 //! spike. Blocking [`infer`](ShardedService::infer) remains available for
-//! cooperative clients.
+//! cooperative clients. Request payloads are shared `Arc<[i32]>` buffers:
+//! a client allocates once, and routing fallback, retries and the worker's
+//! batch assembly all reference-count that one allocation.
 //!
 //! Admission accounting tracks the worker's *true backlog*: the atomic is
 //! incremented at submit and decremented — via a completion guard the worker
 //! drops just before replying — only when the request actually completes.
 //! Abandoning a [`Ticket`] therefore does NOT free the slot early; the cap
 //! genuinely bounds queued work, not caller interest. Queue-depth reads
-//! (`outstanding`) are plain atomic loads, so they stay accurate even while
-//! a worker is wedged inside its executor, and [`Shard::stats`] degrades to
-//! a `stale` row (with live depth) rather than hanging in that case.
+//! (`outstanding`) are plain atomic loads, and [`Shard::stats`] reads the
+//! service's lock-free counter mirror, so a fleet snapshot never messages a
+//! worker and never waits behind a running batch.
 //!
 //! Since the fleetplan autoscaler landed, the replica set is *dynamic*:
 //! [`ShardedService::add_shard`] / [`ShardedService::remove_shard`] grow and
-//! shrink a network's replica set live, rebuilding the [`Router`] under a
-//! write lock while request paths proceed under read locks. Removal *drains*:
-//! the shard is unrouted first (no new admissions can reach it), then the
-//! worker is asked to shut down — the request channel is FIFO, so every
-//! ticket admitted before the removal is still answered before the worker
-//! exits. No in-flight ticket is ever dropped by a scale-down.
+//! shrink a network's replica set live. PR 6 made the request path
+//! lock-free: the fleet state lives in an
+//! [`EpochCell`](crate::coordinator::epoch::EpochCell) — admissions follow
+//! one atomic pointer load to an immutable snapshot, while reconfiguration
+//! publishes a new snapshot and *retires* the old one (reclaimed at fleet
+//! teardown). Removal *drains*: the shard is unrouted (a new epoch without
+//! it is published) and marked closed first, then the worker is asked to
+//! shut down — and the worker answers everything still queued before it
+//! exits, so no admitted ticket is ever dropped by a scale-down. See
+//! `docs/HOTPATH.md` for the path end-to-end with the ordering invariants.
 
 use crate::blocks::BlockKind;
 use crate::cnn::{zoo, GoldenCnn, NetworkSpec};
+use crate::coordinator::coalesce::CoalescePolicy;
+use crate::coordinator::epoch::EpochCell;
 use crate::coordinator::router::Router;
 use crate::coordinator::service::{
-    GoldenExecutor, InferenceService, PjrtExecutor, ServiceStats,
+    GoldenExecutor, InferenceService, PjrtExecutor, ServiceStats, BATCH_WINDOW,
 };
 use crate::runtime::{artifacts_dir, Runtime};
 use crate::util::error::{Error, Result};
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, RwLock};
-use std::time::{Duration, Instant};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
 
 /// Default per-shard admission cap (outstanding requests).
 pub const DEFAULT_QUEUE_CAP: usize = 64;
-
-/// How long [`Shard::stats`] waits for a worker's answer before reporting
-/// the shard as stale (a worker mid-batch answers as soon as the batch
-/// returns; one stuck in a hung executor never would).
-pub const DEFAULT_STATS_TIMEOUT: Duration = Duration::from_secs(2);
 
 /// How a shard executes its network.
 #[derive(Debug, Clone)]
@@ -80,6 +83,11 @@ pub struct ShardSpec {
     pub queue_cap: usize,
     /// Execution backend.
     pub backend: ShardBackend,
+    /// Batch-coalescing policy for each replica's service (default: the
+    /// fixed [`BATCH_WINDOW`]; attach a model via
+    /// [`ShardSpec::with_adaptive_coalesce`] to grow the window with the
+    /// backlog exactly as the traffic simulator does).
+    pub coalesce: CoalescePolicy,
 }
 
 impl ShardSpec {
@@ -91,6 +99,7 @@ impl ShardSpec {
             batch_size: 8,
             queue_cap: DEFAULT_QUEUE_CAP,
             backend: ShardBackend::Golden { block: BlockKind::Conv2, workers: 0 },
+            coalesce: CoalescePolicy::fixed(BATCH_WINDOW),
         }
     }
 
@@ -120,6 +129,21 @@ impl ShardSpec {
     /// Set the execution backend.
     pub fn with_backend(mut self, backend: ShardBackend) -> ShardSpec {
         self.backend = backend;
+        self
+    }
+
+    /// Replace the coalescing policy wholesale.
+    pub fn with_coalesce(mut self, policy: CoalescePolicy) -> ShardSpec {
+        self.coalesce = policy;
+        self
+    }
+
+    /// Keep the idle window but let it grow with the backlog using a
+    /// service-time model (`service` per single request, `fill` its
+    /// amortizable pipeline-fill share — a fleetplan `NetworkPlan`'s
+    /// `predicted_ms`/`fill_ms`, or measured values).
+    pub fn with_adaptive_coalesce(mut self, service: Duration, fill: Duration) -> ShardSpec {
+        self.coalesce = self.coalesce.with_model(service, fill);
         self
     }
 }
@@ -164,6 +188,10 @@ pub struct Shard {
     /// signal — executor `errors` never see these, they are turned away at
     /// the front door).
     rejected: AtomicU64,
+    /// Set by [`Shard::drain`] before the shutdown request: admissions that
+    /// reach this replica through a stale fleet epoch observe it and
+    /// redirect to a sibling instead of racing the worker's exit.
+    closed: AtomicBool,
     service: InferenceService,
 }
 
@@ -181,6 +209,7 @@ impl Shard {
             queue_cap: queue_cap.max(1),
             outstanding: Arc::new(AtomicUsize::new(0)),
             rejected: AtomicU64::new(0),
+            closed: AtomicBool::new(false),
             service,
         }
     }
@@ -199,17 +228,18 @@ impl Shard {
                 } else {
                     GoldenExecutor::with_workers(cnn, *workers)
                 };
-                InferenceService::start(exec, spec.batch_size)
+                InferenceService::start_with_policy(exec, spec.batch_size, spec.coalesce)
             }
             ShardBackend::Pjrt => {
                 let name = spec.network.clone();
-                InferenceService::start_factory(
+                InferenceService::start_factory_with_policy(
                     move || {
                         let rt = Runtime::cpu()?;
                         let art = rt.load_named(&artifacts_dir(), &name)?;
                         PjrtExecutor::from_artifact(art)
                     },
                     spec.batch_size,
+                    spec.coalesce,
                 )
             }
         };
@@ -238,8 +268,11 @@ impl Shard {
     }
 
     /// Take a slot only below the cap (optimistic increment, rolled back by
-    /// the guard if over).
+    /// the guard if over) — and never on a draining replica.
     fn try_acquire(&self) -> Option<SlotGuard> {
+        if self.closed.load(Ordering::SeqCst) {
+            return None;
+        }
         let prev = self.outstanding.fetch_add(1, Ordering::SeqCst);
         let guard = SlotGuard(Arc::clone(&self.outstanding));
         if prev >= self.queue_cap {
@@ -250,7 +283,7 @@ impl Shard {
     }
 
     /// Non-blocking admission without a cap check (cooperative clients).
-    pub fn submit(&self, image: Vec<i32>) -> Result<Ticket> {
+    pub fn submit(&self, image: impl Into<Arc<[i32]>>) -> Result<Ticket> {
         let slot = self.acquire();
         // If the send fails the guard inside the dead message is dropped,
         // rolling the increment back.
@@ -260,8 +293,8 @@ impl Shard {
 
     /// Non-blocking *bounded* admission: [`Error::Overloaded`] at the cap
     /// (counted in [`Shard::rejected`]).
-    pub fn try_submit(&self, image: Vec<i32>) -> Result<Ticket> {
-        let ticket = self.try_submit_quiet(image);
+    pub fn try_submit(&self, image: impl Into<Arc<[i32]>>) -> Result<Ticket> {
+        let ticket = self.try_submit_quiet(image.into());
         if matches!(ticket, Err(Error::Overloaded(_))) {
             self.note_rejection();
         }
@@ -274,7 +307,7 @@ impl Shard {
     /// fleet counts one rejection only when EVERY replica is at cap (via
     /// [`Shard::note_rejection`]) — otherwise a healthy fleet would read as
     /// overloaded to the SLO tracker.
-    fn try_submit_quiet(&self, image: Vec<i32>) -> Result<Ticket> {
+    fn try_submit_quiet(&self, image: Arc<[i32]>) -> Result<Ticket> {
         let slot = self.try_acquire().ok_or_else(|| {
             Error::Overloaded(format!(
                 "shard {}#{} at queue cap {}",
@@ -291,52 +324,39 @@ impl Shard {
     }
 
     /// Blocking inference (uncapped admission).
-    pub fn infer(&self, image: Vec<i32>) -> Result<Vec<i32>> {
+    pub fn infer(&self, image: impl Into<Arc<[i32]>>) -> Result<Vec<i32>> {
         self.submit(image)?.wait()
     }
 
     /// Blocking inference behind bounded admission.
-    pub fn try_infer(&self, image: Vec<i32>) -> Result<Vec<i32>> {
+    pub fn try_infer(&self, image: impl Into<Arc<[i32]>>) -> Result<Vec<i32>> {
         self.try_submit(image)?.wait()
     }
 
-    /// Build this shard's stats row from a worker answer (or the lack of
-    /// one): no answer — timed out, wedged, or dead — degrades to
-    /// `stale: true` with zeroed service counters but a live queue depth,
-    /// so one bad shard never makes the fleet unobservable.
-    fn row(&self, answer: Option<ServiceStats>) -> ShardStats {
-        let (service, stale) = match answer {
-            Some(s) => (s, false),
-            None => (ServiceStats::default(), true),
-        };
+    /// Snapshot this shard's service counters plus its queue depth. A pure
+    /// memory read of the service's lock-free counter mirror: never messages
+    /// the worker, so it is instant even while the worker is wedged inside
+    /// its executor (the pre-PR 6 round-trip degraded to a `stale` row after
+    /// a 2 s timeout instead).
+    pub fn stats(&self) -> ShardStats {
         ShardStats {
             network: self.network.clone(),
             replica: self.replica,
             queue_depth: self.outstanding() as u64,
             queue_cap: self.queue_cap as u64,
             rejected: self.rejected(),
-            stale,
-            service,
+            stale: false,
+            service: self.service.stats(),
         }
     }
 
-    /// Snapshot this shard's service counters plus its queue depth, waiting
-    /// at most [`DEFAULT_STATS_TIMEOUT`] for the worker. A worker stuck
-    /// inside its executor (or dead) yields a `stale` row instead of
-    /// hanging or failing the caller.
-    pub fn stats(&self) -> ShardStats {
-        self.stats_within(DEFAULT_STATS_TIMEOUT)
-    }
-
-    /// [`Shard::stats`] with an explicit worker-answer timeout.
-    pub fn stats_within(&self, timeout: Duration) -> ShardStats {
-        self.row(self.service.stats_within(timeout).ok().flatten())
-    }
-
-    /// Begin draining: ask the worker to stop after answering everything
-    /// already enqueued (FIFO guarantees ordering), without joining it.
-    /// Callers must unroute the shard *first* so nothing new is admitted.
+    /// Begin draining: close admission, then ask the worker to stop after
+    /// answering everything already enqueued (FIFO guarantees ordering),
+    /// without joining it. Callers unroute the shard first; the `closed`
+    /// flag additionally turns away admissions arriving through stale fleet
+    /// epochs.
     pub fn drain(&self) {
+        self.closed.store(true, Ordering::SeqCst);
         self.service.request_shutdown();
     }
 
@@ -357,14 +377,15 @@ pub struct ShardStats {
     pub queue_depth: u64,
     /// Admission cap.
     pub queue_cap: u64,
-    /// Turned-away bounded admissions, lifetime (live atomic — valid even on
-    /// a `stale` row, since rejection happens caller-side). The fleet path
-    /// counts one per request that found EVERY replica at cap, charged to
-    /// the preferred replica; fallback probes that redirected to a sibling
-    /// are not counted.
+    /// Turned-away bounded admissions, lifetime (live atomic — rejection
+    /// happens caller-side). The fleet path counts one per request that
+    /// found EVERY replica at cap, charged to the preferred replica;
+    /// fallback probes that redirected to a sibling are not counted.
     pub rejected: u64,
-    /// True when the worker did not answer within the stats timeout (stuck
-    /// or slow executor): `service` is zeroed, `queue_depth` is still live.
+    /// Always `false` for live rows since the lock-free stats mirror landed
+    /// (a snapshot is a memory read; there is no worker round-trip to time
+    /// out). Kept because simulator reports and archived fleet snapshots
+    /// share this schema.
     pub stale: bool,
     /// The underlying service counters.
     pub service: ServiceStats,
@@ -389,7 +410,7 @@ pub struct FleetStats {
     pub queue_depth: u64,
     /// Summed bounded-admission rejections (overload pressure fleet-wide).
     pub rejected: u64,
-    /// Shards whose worker did not answer within the stats timeout.
+    /// Rows marked stale (0 on live fleets; see [`ShardStats::stale`]).
     pub stale_shards: u64,
 }
 
@@ -428,16 +449,19 @@ pub fn aggregate(shards: &[ShardStats]) -> FleetStats {
     fleet
 }
 
-/// The mutable fleet: shards plus the router indexing them. Kept behind one
-/// lock so the router's indices can never dangle relative to the shard vec.
+/// One immutable fleet epoch: shards plus the router indexing them. Built
+/// whole, published whole — the router's indices can never dangle relative
+/// to the shard vec a reader is looking at.
+#[derive(Clone)]
 struct FleetState {
     shards: Vec<Arc<Shard>>,
     router: Router,
 }
 
 impl FleetState {
-    fn rebuild_router(&mut self) {
-        self.router = Router::new(self.shards.iter().map(|s| s.network.as_str()));
+    fn with_router(shards: Vec<Arc<Shard>>) -> FleetState {
+        let router = Router::new(shards.iter().map(|s| s.network.as_str()));
+        FleetState { shards, router }
     }
 }
 
@@ -445,15 +469,17 @@ impl FleetState {
 /// front-end. All methods take `&self`; clients on many threads share one
 /// `ShardedService` (or an `Arc` of it) directly.
 ///
-/// The replica set is dynamic: request paths hold a read lock only for the
-/// (non-blocking) route + enqueue step, while [`ShardedService::add_shard`]
-/// and [`ShardedService::remove_shard`] reconfigure under a write lock. An
-/// admission therefore either lands in a shard's FIFO *before* a removal
-/// unroutes it (and is drained — answered — before the worker exits) or
-/// happens after, when the router no longer lists the shard. Blocking waits
-/// ([`Ticket::wait`]) never hold the lock.
+/// The replica set is dynamic, but the request path is LOCK-FREE: routing
+/// and admission follow one atomic pointer load into the current
+/// [`EpochCell`] snapshot — no read lock, no writer can stall a submit.
+/// [`ShardedService::add_shard`] / [`ShardedService::remove_shard`] build
+/// and publish a new snapshot (writers serialize among themselves); readers
+/// mid-flight keep the old epoch, which stays valid until fleet teardown.
+/// An admission that lands on a shard a concurrent removal just unrouted is
+/// turned away by the shard's `closed` flag and falls back to a sibling;
+/// requests admitted before the drain are answered before the worker exits.
 pub struct ShardedService {
-    state: RwLock<FleetState>,
+    state: EpochCell<FleetState>,
 }
 
 impl ShardedService {
@@ -481,39 +507,31 @@ impl ShardedService {
         if shards.is_empty() {
             return Err(Error::InvalidConfig("sharded service needs ≥ 1 shard".into()));
         }
-        let mut state = FleetState {
-            shards: shards.into_iter().map(Arc::new).collect(),
-            router: Router::default(),
-        };
-        state.rebuild_router();
-        Ok(ShardedService { state: RwLock::new(state) })
-    }
-
-    fn read(&self) -> std::sync::RwLockReadGuard<'_, FleetState> {
-        self.state.read().expect("fleet lock poisoned")
+        let state = FleetState::with_router(shards.into_iter().map(Arc::new).collect());
+        Ok(ShardedService { state: EpochCell::new(state) })
     }
 
     /// Served network names (sorted).
     pub fn networks(&self) -> Vec<String> {
-        self.read().router.networks().into_iter().map(str::to_string).collect()
+        self.state.load().router.networks().into_iter().map(str::to_string).collect()
     }
 
     /// Snapshot of the fleet, in index order (cheap `Arc` clones). Holders
     /// observe live counters; the fleet itself may be reconfigured after the
     /// snapshot is taken.
     pub fn shards(&self) -> Vec<Arc<Shard>> {
-        self.read().shards.clone()
+        self.state.load().shards.clone()
     }
 
     /// Current replica count of `network`.
     pub fn replica_count(&self, network: &str) -> usize {
-        self.read().router.replicas(network).len()
+        self.state.load().router.replicas(network).len()
     }
 
     /// Start and register one more replica of `spec.network` (ordinal = one
-    /// past the highest live ordinal). The worker is started *outside* the
-    /// lock; request paths stall only for the final registration. Returns
-    /// the new replica's ordinal.
+    /// past the highest live ordinal). The worker is started *before* the
+    /// new epoch is built, so request paths never see a half-started shard.
+    /// Returns the new replica's ordinal.
     pub fn add_shard(&self, spec: &ShardSpec) -> Result<usize> {
         let next_ordinal = |st: &FleetState| {
             st.shards
@@ -523,33 +541,30 @@ impl ShardedService {
                 .max()
                 .unwrap_or(0)
         };
-        // Bind the guess in its own statement so the read guard drops BEFORE
-        // the (comparatively slow) worker start.
-        let guess = {
-            let st = self.read();
-            next_ordinal(&st)
-        };
-        let mut shard = Shard::start(spec, guess)?;
-        let mut st = self.state.write().expect("fleet lock poisoned");
-        // Recompute under the write lock: a concurrent add between the read
-        // above and here must not duplicate ordinals.
-        shard.replica = next_ordinal(&st);
-        let replica = shard.replica;
-        st.shards.push(Arc::new(shard));
-        st.rebuild_router();
+        // The guess only sizes the display ordinal for the (slow) worker
+        // start; it is recomputed under the writer lock before publishing,
+        // so concurrent adds never duplicate ordinals.
+        let mut shard = Shard::start(spec, next_ordinal(self.state.load()))?;
+        let replica = self.state.update(|st| {
+            shard.replica = next_ordinal(st);
+            let replica = shard.replica;
+            let mut shards = st.shards.clone();
+            shards.push(Arc::new(shard));
+            (FleetState::with_router(shards), replica)
+        });
         Ok(replica)
     }
 
-    /// Remove (and drain) `network`'s highest-ordinal replica. The shard is
-    /// unrouted under the write lock first, so no new request can reach it;
-    /// every ticket admitted before that point sits in the worker's FIFO
-    /// ahead of the shutdown request and is answered before the worker
-    /// exits — a scale-down never loses an in-flight ticket. Refuses to
-    /// remove the last replica (scale a network to zero by tearing the
-    /// fleet down instead). Returns the removed ordinal.
+    /// Remove (and drain) `network`'s highest-ordinal replica. A new epoch
+    /// without the shard is published first (no new admission routes to it;
+    /// stragglers on stale epochs bounce off the shard's `closed` flag),
+    /// then the worker is asked to shut down — every ticket admitted before
+    /// that point is answered before the worker exits, so a scale-down never
+    /// loses an in-flight ticket. Refuses to remove the last replica (scale
+    /// a network to zero by tearing the fleet down instead). Returns the
+    /// removed ordinal.
     pub fn remove_shard(&self, network: &str) -> Result<usize> {
-        let shard = {
-            let mut st = self.state.write().expect("fleet lock poisoned");
+        let removed = self.state.update(|st| {
             let mut idx: Option<usize> = None;
             let mut count = 0usize;
             for (i, s) in st.shards.iter().enumerate() {
@@ -561,41 +576,45 @@ impl ShardedService {
                     }
                 }
             }
-            let idx = idx.ok_or_else(|| {
-                Error::Usage(format!("no shard serves network `{network}`"))
-            })?;
+            let Some(idx) = idx else {
+                let err = Error::Usage(format!("no shard serves network `{network}`"));
+                return (st.clone(), Err(err));
+            };
             if count == 1 {
-                return Err(Error::InvalidConfig(format!(
+                let err = Error::InvalidConfig(format!(
                     "refusing to remove the last replica of `{network}`"
-                )));
+                ));
+                return (st.clone(), Err(err));
             }
-            let shard = st.shards.remove(idx);
-            st.rebuild_router();
-            shard
-        }; // write lock released: admissions resume on the remaining replicas
-        let replica = shard.replica;
-        shard.drain();
-        // Join deterministically when we hold the last reference; otherwise
-        // the worker still drains (the shutdown request is already queued)
-        // and is joined when the last observer drops its handle.
-        match Arc::try_unwrap(shard) {
+            let mut shards = st.shards.clone();
+            let shard = shards.remove(idx);
+            (FleetState::with_router(shards), Ok(shard))
+        })?;
+        let replica = removed.replica;
+        removed.drain();
+        // Retired epochs may still reference the shard, so the handle is
+        // usually shared: the worker drains now (the shutdown request is
+        // already queued) and is joined when the last reference drops — at
+        // the latest, fleet teardown.
+        match Arc::try_unwrap(removed) {
             Ok(s) => s.shutdown(),
             Err(arc) => drop(arc),
         }
         Ok(replica)
     }
 
-    /// Route to the least-loaded replica of `network` and run `f` on it
-    /// while still holding the read lock — so an admission can never race a
-    /// concurrent `remove_shard` into a dead worker's queue.
+    /// Route to the least-loaded replica of `network` and run `f` on it.
+    /// The epoch snapshot keeps the shard alive for the duration of `f`;
+    /// a concurrent removal can only mark it closed, never free it.
     fn with_routed<R>(&self, network: &str, f: impl FnOnce(&Shard) -> Result<R>) -> Result<R> {
-        let st = self.read();
+        let st = self.state.load();
         let idx = st.router.route_by(network, |i| st.shards[i].outstanding())?;
         f(st.shards[idx].as_ref())
     }
 
     /// Non-blocking uncapped admission to `network`'s least-loaded replica.
-    pub fn submit(&self, network: &str, image: Vec<i32>) -> Result<Ticket> {
+    pub fn submit(&self, network: &str, image: impl Into<Arc<[i32]>>) -> Result<Ticket> {
+        let image: Arc<[i32]> = image.into();
         self.with_routed(network, |s| s.submit(image))
     }
 
@@ -603,19 +622,15 @@ impl ShardedService {
     /// of `network` are tried in load order (fewest outstanding first,
     /// lowest index on ties) and [`Error::Overloaded`] surfaces only when
     /// EVERY replica is at its cap — a single hot replica no longer rejects
-    /// requests its siblings have room for.
-    pub fn try_submit(&self, network: &str, image: Vec<i32>) -> Result<Ticket> {
-        let st = self.read();
+    /// requests its siblings have room for. Lock-free: one epoch load, then
+    /// per-shard atomics; fallback probes share the image's allocation.
+    pub fn try_submit(&self, network: &str, image: impl Into<Arc<[i32]>>) -> Result<Ticket> {
+        let image: Arc<[i32]> = image.into();
+        let st = self.state.load();
         let order = st.router.route_all_by(network, |i| st.shards[i].outstanding())?;
-        let mut image = image;
-        let last_pos = order.len().saturating_sub(1);
         let mut last: Option<Error> = None;
-        for (pos, &idx) in order.iter().enumerate() {
-            // The common case (first replica admits) moves the image; only
-            // an actual fallback pays a clone.
-            let img =
-                if pos == last_pos { std::mem::take(&mut image) } else { image.clone() };
-            match st.shards[idx].try_submit_quiet(img) {
+        for &idx in &order {
+            match st.shards[idx].try_submit_quiet(Arc::clone(&image)) {
                 Ok(ticket) => return Ok(ticket),
                 Err(e @ Error::Overloaded(_)) => last = Some(e),
                 Err(e) => return Err(e),
@@ -631,52 +646,62 @@ impl ShardedService {
             .unwrap_or_else(|| Error::Usage(format!("network `{network}` has no replicas"))))
     }
 
+    /// Bounded admission for a whole pipelined chunk: ONE load scan plans
+    /// every submission ([`Router::route_many`]), then each image goes to
+    /// its planned replica — falling back to the full load-ordered walk only
+    /// for images whose planned target filled up in the meantime. Returns
+    /// one result per image, in order; per-image `Overloaded` errors are the
+    /// same backpressure signal [`ShardedService::try_submit`] raises.
+    pub fn try_submit_batch(
+        &self,
+        network: &str,
+        images: &[Arc<[i32]>],
+    ) -> Result<Vec<Result<Ticket>>> {
+        let st = self.state.load();
+        let plan = st.router.route_many(network, images.len(), |i| st.shards[i].outstanding())?;
+        Ok(images
+            .iter()
+            .zip(plan)
+            .map(|(image, idx)| match st.shards[idx].try_submit_quiet(Arc::clone(image)) {
+                Ok(ticket) => Ok(ticket),
+                Err(Error::Overloaded(_)) => self.try_submit(network, Arc::clone(image)),
+                Err(e) => Err(e),
+            })
+            .collect())
+    }
+
     /// Blocking inference on `network` (uncapped admission).
-    pub fn infer(&self, network: &str, image: Vec<i32>) -> Result<Vec<i32>> {
+    pub fn infer(&self, network: &str, image: impl Into<Arc<[i32]>>) -> Result<Vec<i32>> {
         self.submit(network, image)?.wait()
     }
 
     /// Blocking inference behind bounded admission (with replica fallback).
-    pub fn try_infer(&self, network: &str, image: Vec<i32>) -> Result<Vec<i32>> {
+    pub fn try_infer(&self, network: &str, image: impl Into<Arc<[i32]>>) -> Result<Vec<i32>> {
         self.try_submit(network, image)?.wait()
     }
 
-    /// Per-shard + fleet-wide statistics. All workers are queried
-    /// *concurrently* against one shared [`DEFAULT_STATS_TIMEOUT`] deadline
-    /// (requests fan out first, replies are collected second), so the
-    /// snapshot costs one timeout total — not one per busy shard — and a
-    /// wedged or dead worker shows up as a `stale` row rather than hanging
-    /// or failing the whole fleet. The shard list is snapshotted up front;
-    /// the lock is NOT held while waiting.
+    /// Per-shard + fleet-wide statistics — a pure memory read. Every row
+    /// comes from its shard's lock-free counter mirror and live admission
+    /// atomics; no worker is messaged, no deadline is needed, and a wedged
+    /// executor cannot make the fleet unobservable (the pre-PR 6 fan-out
+    /// waited up to 2 s for such a worker and zeroed its row as `stale`).
     pub fn stats(&self) -> ShardedStats {
-        let shards = self.shards();
-        let deadline = Instant::now() + DEFAULT_STATS_TIMEOUT;
-        let pending: Vec<Option<mpsc::Receiver<ServiceStats>>> =
-            shards.iter().map(|s| s.service.request_stats().ok()).collect();
-        let shards: Vec<ShardStats> = shards
-            .iter()
-            .zip(pending)
-            .map(|(shard, rx)| {
-                let answer = rx.and_then(|rx| {
-                    let remaining = deadline.saturating_duration_since(Instant::now());
-                    rx.recv_timeout(remaining).ok()
-                });
-                shard.row(answer)
-            })
-            .collect();
+        let st = self.state.load();
+        let shards: Vec<ShardStats> = st.shards.iter().map(|s| s.stats()).collect();
         let fleet = aggregate(&shards);
         ShardedStats { shards, fleet }
     }
 
     /// Stop and join every shard worker.
     pub fn shutdown(self) {
-        let state = self.state.into_inner().expect("fleet lock poisoned");
-        for shard in state.shards {
+        for shard in self.shards() {
             shard.drain();
             match Arc::try_unwrap(shard) {
                 Ok(s) => s.shutdown(),
-                // An observer still holds the Arc: the worker is already
-                // draining and is joined when that last handle drops.
+                // The epoch store (or an observer) still holds the Arc: the
+                // worker is already draining and is joined when the last
+                // handle drops — for epoch references, when `self` drops at
+                // the end of this call.
                 Err(arc) => drop(arc),
             }
         }
@@ -685,16 +710,18 @@ impl ShardedService {
 
 /// Drive one client thread per network through the fleet's *bounded*
 /// admission path: submissions are pipelined (the in-flight window is sized
-/// past the network's replica cap), so whenever `requests_per_network`
-/// exceeds the queue cap, `try_submit` genuinely hits
-/// [`Error::Overloaded`] and the client drains its oldest in-flight request
-/// to make room — real backpressure, not a decorative retry loop. Every
-/// reply is cross-checked against a direct golden inference on `block`
-/// (all conv blocks compute the same function, so the check is bit-exact
-/// whatever block each shard runs). Workloads are deterministic
-/// ([`NetworkSpec::synthetic_images`] seeded from each spec's own seed).
-/// Returns the total mismatch count. Shared by the `convkit fleet`
-/// subcommand and the e2e driver so the two stay behaviourally identical.
+/// past the network's replica cap) in [`ShardedService::try_submit_batch`]
+/// chunks, so a chunk of admissions costs one routing scan instead of one
+/// per request. Whenever `requests_per_network` exceeds the queue cap,
+/// admission genuinely hits [`Error::Overloaded`] and the client drains its
+/// oldest in-flight request to make room — real backpressure, not a
+/// decorative retry loop. Every reply is cross-checked against a direct
+/// golden inference on `block` (all conv blocks compute the same function,
+/// so the check is bit-exact whatever block each shard runs). Workloads are
+/// deterministic ([`NetworkSpec::synthetic_images`] seeded from each spec's
+/// own seed). Returns the total mismatch count. Shared by the
+/// `convkit fleet` subcommand and the e2e driver so the two stay
+/// behaviourally identical.
 pub fn drive_golden_clients(
     fleet: &ShardedService,
     specs: &[NetworkSpec],
@@ -731,7 +758,7 @@ pub fn drive_golden_clients_traced(
                         Ok(logits != want)
                     };
                     // Pipeline deep enough to overrun the network's COMBINED
-                    // replica capacity — try_submit now falls back across
+                    // replica capacity — try_submit falls back across
                     // replicas, so backpressure only fires once every replica
                     // is at its cap (capped by the request count itself).
                     let cap: usize = fleet
@@ -742,37 +769,69 @@ pub fn drive_golden_clients_traced(
                         .sum::<usize>()
                         .max(1);
                     let window = (cap + 2).min(requests_per_network.max(1));
+                    let chunk_size = window.min(8).max(1);
                     let mut inflight: VecDeque<(Ticket, Vec<i64>)> = VecDeque::new();
                     let mut mismatches = 0usize;
-                    for img in spec.synthetic_images(requests_per_network, 0xF1EE7 ^ spec.seed)
-                    {
-                        if let Some(rec) = recorder {
-                            rec.note(&spec.name);
-                        }
-                        let img32: Vec<i32> = img.iter().map(|&v| v as i32).collect();
-                        let ticket = loop {
-                            match fleet.try_submit(&spec.name, img32.clone()) {
-                                Ok(t) => break t,
-                                Err(Error::Overloaded(_)) => match inflight.pop_front() {
-                                    // Backpressure: drain our oldest in-flight
-                                    // request to free an admission slot.
-                                    Some((t, im)) => {
-                                        if verify(t, &im)? {
-                                            mismatches += 1;
-                                        }
+                    let mut images =
+                        spec.synthetic_images(requests_per_network, 0xF1EE7 ^ spec.seed)
+                            .into_iter();
+                    // One shared buffer per request, allocated here and
+                    // reference-counted through admission and batching.
+                    let mut chunk: Vec<(Arc<[i32]>, Vec<i64>)> =
+                        Vec::with_capacity(chunk_size);
+                    loop {
+                        while chunk.len() < chunk_size {
+                            match images.next() {
+                                Some(img) => {
+                                    if let Some(rec) = recorder {
+                                        rec.note(&spec.name);
                                     }
-                                    // Another client holds the slots — yield
-                                    // until the live worker drains them.
-                                    None => std::thread::yield_now(),
+                                    let img32: Arc<[i32]> = img
+                                        .iter()
+                                        .map(|&v| v as i32)
+                                        .collect::<Vec<i32>>()
+                                        .into();
+                                    chunk.push((img32, img));
+                                }
+                                None => break,
+                            }
+                        }
+                        if chunk.is_empty() {
+                            break;
+                        }
+                        let payloads: Vec<Arc<[i32]>> =
+                            chunk.iter().map(|(a, _)| Arc::clone(a)).collect();
+                        let outcomes = fleet.try_submit_batch(&spec.name, &payloads)?;
+                        for ((img32, img64), outcome) in chunk.drain(..).zip(outcomes) {
+                            let ticket = match outcome {
+                                Ok(t) => t,
+                                Err(Error::Overloaded(_)) => loop {
+                                    // Backpressure: drain our oldest
+                                    // in-flight request to free a slot (or
+                                    // yield while another client holds
+                                    // them), then re-offer the same buffer.
+                                    match inflight.pop_front() {
+                                        Some((t, im)) => {
+                                            if verify(t, &im)? {
+                                                mismatches += 1;
+                                            }
+                                        }
+                                        None => std::thread::yield_now(),
+                                    }
+                                    match fleet.try_submit(&spec.name, Arc::clone(&img32)) {
+                                        Ok(t) => break t,
+                                        Err(Error::Overloaded(_)) => {}
+                                        Err(e) => return Err(e),
+                                    }
                                 },
                                 Err(e) => return Err(e),
-                            }
-                        };
-                        inflight.push_back((ticket, img));
-                        while inflight.len() >= window {
-                            let (t, im) = inflight.pop_front().expect("window is >= 1");
-                            if verify(t, &im)? {
-                                mismatches += 1;
+                            };
+                            inflight.push_back((ticket, img64));
+                            while inflight.len() >= window {
+                                let (t, im) = inflight.pop_front().expect("window is >= 1");
+                                if verify(t, &im)? {
+                                    mismatches += 1;
+                                }
                             }
                         }
                     }
@@ -804,6 +863,13 @@ mod tests {
         assert_eq!((s.replicas, s.batch_size, s.queue_cap), (3, 4, 2));
         assert!(matches!(s.backend, ShardBackend::Golden { .. }));
         assert!(matches!(ShardSpec::pjrt("tiny_q8").backend, ShardBackend::Pjrt));
+        // The default policy is the fixed legacy window; the adaptive
+        // builder attaches a model without touching the idle window.
+        assert_eq!(s.coalesce, CoalescePolicy::fixed(BATCH_WINDOW));
+        let a = s.with_adaptive_coalesce(Duration::from_millis(1), Duration::from_micros(400));
+        assert_eq!(a.coalesce.idle_window_ns, BATCH_WINDOW.as_nanos() as u64);
+        assert_eq!(a.coalesce.service_ns, 1_000_000);
+        assert_eq!(a.coalesce.fill_ns, 400_000);
     }
 
     #[test]

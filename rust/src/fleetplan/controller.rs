@@ -23,7 +23,35 @@ use crate::synth::ResourceVector;
 use crate::util::error::{Error, Result};
 use std::collections::BTreeMap;
 use std::fmt;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// Build per-network shard templates from a capacity plan, wiring each
+/// network's model-predicted service and pipeline-fill times into the
+/// shard's *adaptive* coalescing policy (`ShardSpec::with_adaptive_coalesce`)
+/// — replicas the autoscaler adds batch exactly as the traffic simulator
+/// models them, one [`crate::coordinator::CoalescePolicy`] on both sides.
+/// `base` supplies the non-coalescing template knobs (backend, batch size,
+/// queue cap); networks without a usable latency model keep its fixed
+/// window.
+pub fn adaptive_templates<F>(plan: &FleetPlan, base: F) -> Vec<ShardSpec>
+where
+    F: Fn(&str) -> ShardSpec,
+{
+    plan.networks
+        .iter()
+        .map(|n| {
+            let spec = base(&n.network);
+            if n.predicted_ms > 0.0 {
+                spec.with_adaptive_coalesce(
+                    Duration::from_secs_f64(n.predicted_ms / 1e3),
+                    Duration::from_secs_f64(n.fill_ms.max(0.0) / 1e3),
+                )
+            } else {
+                spec
+            }
+        })
+        .collect()
+}
 
 /// Anything the autoscaler can observe and reconfigure: a pluggable stats
 /// source, clock, and scale actuator. Implemented by [`LiveFleet`] (real
@@ -480,6 +508,18 @@ mod tests {
         let mut stats = rows(1, 10, 10, 1.0);
         stats.shards[0].network = "ghost".into();
         assert!(a.decide(&stats).is_empty());
+    }
+
+    #[test]
+    fn adaptive_templates_wire_the_plan_latency_model_into_coalescing() {
+        let p = plan();
+        let t = adaptive_templates(&p, |n| ShardSpec::golden(n).with_batch_size(4));
+        assert_eq!(t.len(), 1);
+        assert_eq!(t[0].network, "a");
+        assert_eq!(t[0].batch_size, 4, "base template knobs survive");
+        // plan(): predicted 1.0 ms service, 0.1 ms pipeline fill.
+        assert_eq!(t[0].coalesce.service_ns, 1_000_000);
+        assert_eq!(t[0].coalesce.fill_ns, 100_000);
     }
 
     #[test]

@@ -61,7 +61,9 @@ pub mod controller;
 pub mod planner;
 pub mod slo;
 
-pub use controller::{Autoscaler, LiveFleet, ScaleAction, ScaleDecision, ScaleTarget};
+pub use controller::{
+    adaptive_templates, Autoscaler, LiveFleet, ScaleAction, ScaleDecision, ScaleTarget,
+};
 pub use planner::{
     plan_fleet, plan_platforms, plan_with_spill, select_platform, select_platform_or_spill,
     FleetPlan, NetworkDemand, NetworkPlan, SpillPlan,

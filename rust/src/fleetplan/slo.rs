@@ -7,8 +7,9 @@
 //!
 //! * **overload rate** — bounded-admission rejections as a fraction of all
 //!   admission attempts over the last `window` snapshots (rejections are
-//!   counted caller-side by the shards, so they stay live even when a worker
-//!   is wedged and its stats row degrades to `stale`);
+//!   counted caller-side by the shards, and since PR 6 every row reads from
+//!   the lock-free counter mirror — a wedged worker can no longer stall or
+//!   zero a snapshot, see `docs/HOTPATH.md`);
 //! * **p95 latency** — the worst per-replica p95 in the latest snapshot
 //!   (conservative fleet tail, matching `FleetStats`);
 //! * **queue utilization** — summed depth over summed cap right now.
@@ -183,9 +184,8 @@ impl SloTracker {
     }
 
     /// Fold one fleet snapshot in; returns one row per network, sorted by
-    /// name. Cumulative counters that *dip* (a shard was drained away, or a
-    /// wedged worker reported a zeroed `stale` row) contribute a zero delta
-    /// rather than wrapping.
+    /// name. Cumulative counters that *dip* (a shard was drained away)
+    /// contribute a zero delta rather than wrapping.
     pub fn observe(&mut self, stats: &ShardedStats) -> Vec<NetworkSlo> {
         // Group the snapshot rows by network.
         let mut groups: BTreeMap<&str, Vec<&ShardStats>> = BTreeMap::new();

@@ -1,0 +1,108 @@
+//! Contention-slope calibration: fit the engine's `1 + α·x` interference
+//! model to measured co-location slowdowns.
+//!
+//! The virtual-clock engine stretches a batch's service time by
+//! `1 + α · x`, where `x` is the co-located utilization share on the same
+//! device *excluding the replica itself* (see
+//! [`super::engine::DEFAULT_CONTENTION_ALPHA`]). The default slope ships
+//! calibrated from a shared-bandwidth microbenchmark
+//! (`scripts/calibrate_alpha.py`); fleets running on different hosts should
+//! re-fit it against their own silicon and install the result with
+//! `SimFleet::set_contention_alpha`:
+//!
+//! 1. Measure a solo replica's per-pass time `t₁`, then the per-worker time
+//!    `t_K` with `K` co-located replicas streaming simultaneously.
+//! 2. Estimate one worker's device share `u` = solo bandwidth / peak
+//!    aggregate bandwidth (`u = 1` when a single worker already saturates
+//!    the device; `u ≈ 1/cores` when the memory system scales out).
+//! 3. Each `K`-worker run samples the curve at `x = (K-1)·u` with slowdown
+//!    `s = t_K / t₁`; feed the `(x, s)` points with `x ≤ 1` to [`fit_alpha`]
+//!    — the simulator packs devices to at most their capped budget, so
+//!    oversubscribed samples (`x > 1`) extrapolate interference the model
+//!    never evaluates.
+//!
+//! The estimator here and the one in `scripts/calibrate_alpha.py` are the
+//! same formula; the calibration report the shipped default came from is
+//! archived at `docs/alpha_calibration.json` and the procedure is documented
+//! in `docs/GUIDE.md`.
+
+/// Least-squares fit of `slowdown = 1 + α·x` through the origin:
+/// `α = Σ((s−1)·x) / Σ(x²)` over `(x, slowdown)` points. Returns 0.0 when the
+/// points carry no signal (empty, or all `x = 0`) — the caller keeps its
+/// current slope in that case.
+pub fn fit_alpha(points: &[(f64, f64)]) -> f64 {
+    let num: f64 = points.iter().map(|&(x, s)| (s - 1.0) * x).sum();
+    let den: f64 = points.iter().map(|&(x, _)| x * x).sum();
+    if den > 0.0 {
+        num / den
+    } else {
+        0.0
+    }
+}
+
+/// Convert raw co-location measurements into fit points for [`fit_alpha`]:
+/// `(K, t_K)` per-worker pass times (seconds, including the solo `K = 1`
+/// run) plus the estimated per-worker device share `u`, filtered to the
+/// simulator's operating regime `x ≤ 1`. Returns an empty vector when no
+/// solo baseline is present.
+pub fn contention_points(samples: &[(usize, f64)], share_u: f64) -> Vec<(f64, f64)> {
+    let Some(&(_, solo)) = samples.iter().find(|&&(k, _)| k == 1) else {
+        return Vec::new();
+    };
+    if solo <= 0.0 {
+        return Vec::new();
+    }
+    samples
+        .iter()
+        .filter(|&&(k, _)| k > 1)
+        .map(|&(k, t)| ((k as f64 - 1.0) * share_u, t / solo))
+        .filter(|&(x, _)| x <= 1.0)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_line_is_recovered() {
+        // Points on slowdown = 1 + 0.75x fit back to exactly 0.75.
+        let pts: Vec<(f64, f64)> =
+            [0.25, 0.5, 1.0].iter().map(|&x| (x, 1.0 + 0.75 * x)).collect();
+        assert!((fit_alpha(&pts) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn no_signal_fits_zero() {
+        assert_eq!(fit_alpha(&[]), 0.0);
+        assert_eq!(fit_alpha(&[(0.0, 3.0)]), 0.0);
+    }
+
+    #[test]
+    fn shipped_default_reproduces_from_its_archived_measurement() {
+        // docs/alpha_calibration.json: 1-CPU host, u = 1.0, K=2 slowdown
+        // 3.0662 at x = 1.0 (the K=4 x=3.0 point is outside the fit regime).
+        let samples = [(1usize, 0.005576321), (2, 0.0170981695), (4, 0.0395663512)];
+        let pts = contention_points(&samples, 1.0);
+        assert_eq!(pts.len(), 1, "oversubscribed x=3 point must be dropped");
+        let alpha = fit_alpha(&pts);
+        assert!((alpha - 2.066).abs() < 1e-2, "alpha = {alpha}");
+        // ... and the shipped default is that value rounded.
+        assert!((super::super::engine::DEFAULT_CONTENTION_ALPHA - alpha).abs() < 0.01);
+    }
+
+    #[test]
+    fn contention_points_needs_a_solo_baseline() {
+        assert!(contention_points(&[(2, 0.02), (4, 0.04)], 0.5).is_empty());
+        assert!(contention_points(&[(1, 0.0), (2, 0.02)], 0.5).is_empty());
+    }
+
+    #[test]
+    fn weighted_fit_prefers_far_points() {
+        // Two inconsistent samples: the x-weighted estimator leans toward
+        // the larger-share point, where interference actually matters.
+        let pts = [(0.1, 1.5), (1.0, 2.0)];
+        let alpha = fit_alpha(&pts);
+        assert!(alpha > 1.0 && alpha < 1.5, "alpha = {alpha}");
+    }
+}

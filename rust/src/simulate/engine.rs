@@ -15,19 +15,23 @@
 //!
 //! ## Batch coalescing
 //!
-//! Service mirrors the live worker's coalescing loop
-//! ([`crate::coordinator::service::BATCH_WINDOW`]) instead of
-//! one-request-one-service-time: a request admitted to an *idle* replica
-//! opens a coalescing window of [`SimServiceModel::window_ns`] (absorbing
-//! further arrivals), then the replica drains up to
-//! [`SimServiceModel::max_batch`] queued requests as ONE batch whose
-//! latency follows the model-predicted curve
-//! `fill_ns + b × (service_ns − fill_ns)` — the pipeline fill is paid once
-//! per batch, the drain once per image (see
-//! [`crate::extend::latency::LatencyEstimate::ms_batch`]). When the batch
-//! completes and the queue is non-empty, the next batch starts
-//! *immediately* — exactly the live loop, where queued messages return from
-//! `recv_timeout` without waiting the window out.
+//! Service runs the live worker's coalescing loop — literally the same
+//! policy object. Each replica carries a
+//! [`CoalescePolicy`](crate::coordinator::CoalescePolicy) (built by
+//! [`SimServiceModel::policy`]): a request admitted to an *idle* replica
+//! opens the policy's idle window; each further absorbed arrival *extends*
+//! the deadline to `window_ns(queued)` past the window's opening (growing
+//! one pipeline-fill per request toward the model optimum, capped at the
+//! batch runtime); the batch dispatches at the deadline — or immediately
+//! once `max_batch` fills — and is priced by the policy's
+//! `fill_ns + b × (service_ns − fill_ns)` curve (see
+//! [`crate::extend::latency::LatencyEstimate::ms_batch`]). When a batch
+//! completes over a backlog, the backlog is absorbed at once and owed
+//! `window_ns(backlog)` from that instant — exactly the live
+//! `collect_batch`, which drains the channel and only then opens a
+//! deadline. The parity test below pins the engine to
+//! [`crate::coordinator::coalesce::schedule`], the policy's pure reference
+//! interpreter, on a deterministic arrival trace.
 //!
 //! ## Device contention
 //!
@@ -52,11 +56,12 @@
 
 use super::clock::{EventHeap, SimNs, VirtualClock};
 use super::workload::Trace;
-use crate::coordinator::service::{percentile_nearest_rank, ServiceStats};
+use crate::coordinator::service::ServiceStats;
 use crate::coordinator::shard::aggregate;
-use crate::coordinator::{Router, ShardSpec, ShardStats, ShardedStats};
+use crate::coordinator::{CoalescePolicy, Router, ShardSpec, ShardStats, ShardedStats};
 use crate::fleetplan::{Autoscaler, ScaleDecision, ScaleTarget};
 use crate::util::error::{Error, Result};
+use crate::util::stats::window_mean_p95;
 use std::collections::{BTreeMap, VecDeque};
 
 /// Per-replica rolling latency window (mirrors the live service's bounded
@@ -64,9 +69,20 @@ use std::collections::{BTreeMap, VecDeque};
 pub const SIM_LATENCY_WINDOW: usize = 1024;
 
 /// Default co-located-share slowdown slope (see the module docs): a device
-/// packed to 100% of its capped budget serves each batch 1.5× slower than
-/// an uncontended replica would.
-pub const DEFAULT_CONTENTION_ALPHA: f64 = 0.5;
+/// packed to 100% of its capped budget serves each batch `1 + α` times
+/// slower than an uncontended replica would.
+///
+/// Calibrated, not guessed: fitted by least squares from the
+/// shared-bandwidth microbenchmark in `scripts/calibrate_alpha.py` (memory-
+/// streaming workers co-located on one host; measured slowdown vs
+/// co-location share), run on the CI reference container — a single-core
+/// host whose solo worker saturates the device, so co-location is full
+/// serialization plus cache interference. The raw report is archived at
+/// `docs/alpha_calibration.json` and the procedure documented in
+/// `docs/GUIDE.md`; fleets on beefier hosts should re-fit with
+/// `simulate::calibrate::fit_alpha` and
+/// [`SimFleet::set_contention_alpha`].
+pub const DEFAULT_CONTENTION_ALPHA: f64 = 2.07;
 
 /// One network's service model inside the simulator.
 ///
@@ -157,6 +173,18 @@ impl SimServiceModel {
         self.util_frac = util_frac.clamp(0.0, 1.0);
         self
     }
+
+    /// The model's fields as the [`CoalescePolicy`] the live worker would
+    /// run with — the shared waiting/pricing law every simulated replica of
+    /// this network carries.
+    pub fn policy(&self) -> CoalescePolicy {
+        CoalescePolicy {
+            idle_window_ns: self.window_ns,
+            service_ns: self.service_ns,
+            fill_ns: self.fill_ns.min(self.service_ns.saturating_sub(1)),
+            max_batch: self.max_batch.max(1),
+        }
+    }
 }
 
 /// One virtual replica: a bounded FIFO drained in model-predicted batches.
@@ -165,18 +193,23 @@ struct SimReplica {
     net: u32,
     replica: usize,
     queue_cap: usize,
-    service_ns: u64,
-    fill_ns: u64,
-    max_batch: usize,
-    window_ns: u64,
+    /// The SAME waiting/pricing law the live worker runs
+    /// ([`crate::coordinator::CoalescePolicy`]): window growth, dispatch
+    /// deadline and batch cost all come from here.
+    policy: CoalescePolicy,
     device: Option<u32>,
     util_frac: f64,
     /// Arrival times of admitted requests waiting for a batch.
     queue: VecDeque<SimNs>,
     /// Arrival times of the batch currently in service (empty = idle).
     in_flight: Vec<SimNs>,
-    /// A `Dispatch` event is scheduled (coalescing window open).
-    dispatch_pending: bool,
+    /// Virtual time the open coalescing window started (deadlines extend
+    /// from here as the backlog grows, never from "now").
+    window_opened_at: SimNs,
+    /// Deadline of the scheduled `Dispatch` event, if a window is open.
+    /// Superseded deadlines stay in the heap; their events are recognized
+    /// as stale (`at != dispatch_at`) and ignored.
+    dispatch_at: Option<SimNs>,
     served: u64,
     batches: u64,
     rejected: u64,
@@ -191,13 +224,6 @@ impl SimReplica {
     /// shard's slot accounting, where a slot frees at *completion*.
     fn outstanding(&self) -> usize {
         self.queue.len() + self.in_flight.len()
-    }
-
-    /// Model-predicted virtual duration of a `b`-request batch (ns,
-    /// before contention): fill once, drain per request.
-    fn batch_service_ns(&self, b: u64) -> u64 {
-        let fill = self.fill_ns.min(self.service_ns.saturating_sub(1));
-        fill + (self.service_ns - fill).saturating_mul(b.max(1))
     }
 
     fn record_latency(&mut self, ns: u64) {
@@ -352,18 +378,19 @@ impl SimFleet {
     /// [`SimServiceModel`] when one exists. Public so tests can build
     /// heterogeneous-cap fleets; `scale_up` uses it too.
     pub fn push_replica(&mut self, network: &str, queue_cap: usize, service_ns: u64) -> usize {
+        let (mut policy, platform, util_frac) = match self.models.get(network) {
+            Some(m) => (m.policy(), m.platform.clone(), m.util_frac),
+            None => (
+                CoalescePolicy { idle_window_ns: 0, service_ns: 0, fill_ns: 0, max_batch: 1 },
+                None,
+                0.0,
+            ),
+        };
+        // The caller's service time wins over the model's (tests build
+        // heterogeneous-rate fleets this way); re-clamp the fill under it.
+        policy.service_ns = service_ns.max(1);
+        policy.fill_ns = policy.fill_ns.min(policy.service_ns - 1);
         let net = self.intern(network);
-        let (fill_ns, max_batch, window_ns, platform, util_frac) =
-            match self.models.get(network) {
-                Some(m) => (
-                    m.fill_ns,
-                    m.max_batch,
-                    m.window_ns,
-                    m.platform.clone(),
-                    m.util_frac,
-                ),
-                None => (0, 1, 0, None, 0.0),
-            };
         let device = platform.as_deref().map(|p| self.intern_device(p));
         let ordinal = self
             .replicas
@@ -379,15 +406,13 @@ impl SimFleet {
             net,
             replica: ordinal,
             queue_cap: queue_cap.max(1),
-            service_ns: service_ns.max(1),
-            fill_ns,
-            max_batch: max_batch.max(1),
-            window_ns,
+            policy,
             device,
             util_frac,
             queue: VecDeque::new(),
             in_flight: Vec::new(),
-            dispatch_pending: false,
+            window_opened_at: 0,
+            dispatch_at: None,
             served: 0,
             batches: 0,
             rejected: 0,
@@ -505,15 +530,15 @@ impl SimFleet {
     fn dispatch(&mut self, idx: usize, now: SimNs) {
         let factor = self.contention_factor(idx);
         let r = &mut self.replicas[idx];
-        r.dispatch_pending = false;
-        let b = r.queue.len().min(r.max_batch);
+        r.dispatch_at = None;
+        let b = r.queue.len().min(r.policy.max_batch);
         if b == 0 {
             return;
         }
         r.in_flight.clear();
         r.in_flight.extend(r.queue.drain(..b));
         r.batches += 1;
-        let base = r.batch_service_ns(b as u64);
+        let base = r.policy.batch_ns(b as u64);
         let service = if factor <= 1.0 {
             base
         } else {
@@ -523,6 +548,23 @@ impl SimFleet {
         self.heap.push(now.saturating_add(service), SimEvent::Completion { replica_id: id });
     }
 
+    /// Open (or reopen) a coalescing window on `idx` over its current
+    /// backlog at virtual time `now`, dispatching straight away when the
+    /// policy owes the backlog no wait.
+    fn open_window(&mut self, idx: usize, now: SimNs) {
+        let r = &mut self.replicas[idx];
+        let w = r.policy.window_ns(r.queue.len());
+        if w == 0 {
+            self.dispatch(idx, now);
+        } else {
+            let deadline = now.saturating_add(w);
+            r.window_opened_at = now;
+            r.dispatch_at = Some(deadline);
+            let id = r.id;
+            self.heap.push(deadline, SimEvent::Dispatch { replica_id: id });
+        }
+    }
+
     fn service_event(&mut self, at: SimNs, ev: SimEvent) {
         self.clock.advance_to(at);
         self.events += 1;
@@ -530,12 +572,22 @@ impl SimFleet {
             SimEvent::Dispatch { replica_id } => (replica_id, false),
             SimEvent::Completion { replica_id } => (replica_id, true),
         };
-        let idx = self
-            .replicas
-            .iter()
-            .position(|r| r.id == replica_id)
-            .expect("service event for a removed replica (draining keeps it alive)");
+        let idx = match self.replicas.iter().position(|r| r.id == replica_id) {
+            Some(i) => i,
+            None => {
+                // A superseded Dispatch deadline can outlive its replica
+                // (window extended, batch ran, idle replica removed);
+                // completions cannot — draining keeps the replica alive.
+                assert!(!is_completion, "completion event for a removed replica");
+                return;
+            }
+        };
         if !is_completion {
+            // Extended windows leave their earlier deadlines in the heap;
+            // only the event matching the replica's CURRENT deadline fires.
+            if self.replicas[idx].dispatch_at != Some(at) {
+                return;
+            }
             self.dispatch(idx, at);
             return;
         }
@@ -557,9 +609,11 @@ impl SimFleet {
             self.replicas.remove(idx);
             self.rebuild_routing();
         } else if !self.replicas[idx].queue.is_empty() {
-            // Backlog: the next batch starts immediately, no window — the
-            // live worker's recv_timeout returns queued messages at once.
-            self.dispatch(idx, at);
+            // Backlog absorbed at completion is owed `window_ns(backlog)`
+            // from this instant — the live worker drains the channel and
+            // only then opens a deadline for MORE arrivals. A full (or
+            // window-less) backlog dispatches immediately.
+            self.open_window(idx, at);
         }
     }
 
@@ -586,17 +640,31 @@ impl SimFleet {
             if r.outstanding() < r.queue_cap {
                 r.queue.push_back(at);
                 let ordinal = r.replica;
-                let idle = r.in_flight.is_empty() && !r.dispatch_pending;
-                if idle {
-                    if r.window_ns == 0 {
-                        self.dispatch(idx, at);
-                    } else {
-                        let (id, window) = (r.id, r.window_ns);
-                        r.dispatch_pending = true;
-                        self.heap.push(
-                            at.saturating_add(window),
-                            SimEvent::Dispatch { replica_id: id },
-                        );
+                if r.in_flight.is_empty() {
+                    match r.dispatch_at {
+                        // Idle replica: this request opens the window.
+                        None => self.open_window(idx, at),
+                        // Window already open: dispatch the instant the
+                        // batch fills, else extend the deadline to
+                        // `window_ns(queued)` past the window's opening
+                        // (monotone in the backlog, so it never moves
+                        // earlier; the superseded event goes stale).
+                        Some(current) => {
+                            let queued = r.queue.len();
+                            if queued >= r.policy.max_batch {
+                                self.dispatch(idx, at);
+                            } else {
+                                let deadline = r
+                                    .window_opened_at
+                                    .saturating_add(r.policy.window_ns(queued));
+                                if deadline > current {
+                                    r.dispatch_at = Some(deadline);
+                                    let id = r.id;
+                                    self.heap
+                                        .push(deadline, SimEvent::Dispatch { replica_id: id });
+                                }
+                            }
+                        }
                     }
                 }
                 return Ok(Admission::Admitted { replica: ordinal });
@@ -626,18 +694,8 @@ impl SimFleet {
             .iter()
             .map(|&i| {
                 let r = &self.replicas[i];
-                let mut win = r.lat_win_ns.clone();
-                win.sort_unstable();
-                let p95_ms = if win.is_empty() {
-                    0.0
-                } else {
-                    percentile_nearest_rank(&win, 95) as f64 / 1e6
-                };
-                let mean_ms = if win.is_empty() {
-                    0.0
-                } else {
-                    win.iter().sum::<u64>() as f64 / win.len() as f64 / 1e6
-                };
+                let (mean_ns, p95_ns) = window_mean_p95(&r.lat_win_ns);
+                let (mean_ms, p95_ms) = (mean_ns / 1e6, p95_ns as f64 / 1e6);
                 let elapsed_s = now.saturating_sub(r.started_at) as f64 / 1e9;
                 ShardStats {
                     network: self.networks[r.net as usize].clone(),
@@ -674,18 +732,8 @@ impl SimFleet {
             .into_iter()
             .map(|i| {
                 let t = &self.totals[i];
-                let mut lat = t.lat_ns.clone();
-                lat.sort_unstable();
-                let p95_ms = if lat.is_empty() {
-                    0.0
-                } else {
-                    percentile_nearest_rank(&lat, 95) as f64 / 1e6
-                };
-                let mean_ms = if lat.is_empty() {
-                    0.0
-                } else {
-                    lat.iter().sum::<u64>() as f64 / lat.len() as f64 / 1e6
-                };
+                let (mean_ns, p95_ns) = window_mean_p95(&t.lat_ns);
+                let (mean_ms, p95_ms) = (mean_ns / 1e6, p95_ns as f64 / 1e6);
                 SimNetStats {
                     network: self.networks[i].clone(),
                     offered: t.offered,
@@ -975,8 +1023,9 @@ mod tests {
 
     #[test]
     fn coalescing_window_delays_the_first_dispatch_to_absorb_arrivals() {
-        // A 0.5 ms window on an idle replica: two arrivals 0.2 ms apart
-        // ride ONE batch (the second lands inside the open window).
+        // A 0.5 ms idle window: two arrivals 0.2 ms apart ride ONE batch —
+        // and absorbing the second EXTENDS the window by one fill (the
+        // adaptive law), exactly as `coalesce::schedule` predicts.
         let model =
             SimServiceModel::new("a", 1.0, 8, 1).with_batching(4, 0.4).with_window_ms(0.5);
         let mut f = SimFleet::new(&[model]).unwrap();
@@ -985,8 +1034,49 @@ mod tests {
         f.drain();
         let s = f.stats();
         assert_eq!(s.shards[0].service.batches, 1, "window coalesced both");
-        // Dispatch at 0.5 ms + batch(2) = 0.4 + 2×0.6 = 1.6 ms → done 2.1.
-        assert!((f.now_ms() - 2.1).abs() < 1e-6, "{}", f.now_ms());
+        // window_ns(2) = 0.5 + 0.4 = 0.9 ms, so dispatch at 0.9 ms +
+        // batch(2) = 0.4 + 2×0.6 = 1.6 ms → done at 2.5 ms.
+        assert!((f.now_ms() - 2.5).abs() < 1e-6, "{}", f.now_ms());
+    }
+
+    #[test]
+    fn adaptive_sim_matches_the_policy_reference_interpreter() {
+        // The tentpole parity requirement: on a deterministic arrival trace
+        // (strictly increasing timestamps, one replica), the event-driven
+        // engine must produce EXACTLY the batch schedule of
+        // `coalesce::schedule`, the shared policy's pure interpreter —
+        // covering idle windows, backlog-stretched windows, fill-the-batch
+        // dispatch and backlog absorbed at completion.
+        use crate::coordinator::schedule;
+        let model =
+            SimServiceModel::new("a", 1.0, 64, 1).with_batching(4, 0.4).with_window_ms(0.5);
+        let policy = model.policy();
+        let arrivals: Vec<u64> = vec![
+            0, 200_000, 350_000, 1_900_000, 2_000_000, 2_050_000, 2_100_000, 6_000_000,
+            9_500_000, 9_600_000,
+        ];
+        let mut f = SimFleet::new(&[model]).unwrap();
+        for &at in &arrivals {
+            assert_eq!(f.offer("a", at).unwrap(), Admission::Admitted { replica: 0 });
+        }
+        f.drain();
+        let reference = schedule(&policy, &arrivals);
+        assert_eq!(
+            reference.iter().map(|b| b.size).collect::<Vec<_>>(),
+            vec![3, 4, 1, 2],
+            "the trace exercises every regime"
+        );
+        let s = f.stats();
+        assert_eq!(s.shards[0].service.batches, reference.len() as u64);
+        assert_eq!(
+            s.shards[0].service.requests,
+            reference.iter().map(|b| b.size as u64).sum::<u64>()
+        );
+        assert_eq!(
+            f.now_ns(),
+            reference.last().unwrap().complete_ns,
+            "virtual clock ends at the reference schedule's last completion"
+        );
     }
 
     #[test]
@@ -996,6 +1086,9 @@ mod tests {
         // replica at t = 0.
         let packed = SimServiceModel::new("a", 1.0, 8, 2).on_platform("ZCU104", 0.3);
         let mut f = SimFleet::new(&[packed]).unwrap();
+        // Pin the slope: the default is the host-calibrated value, and this
+        // test checks the contention FORMULA, not the calibration.
+        f.set_contention_alpha(0.5);
         f.offer("a", 0).unwrap();
         f.offer("a", 0).unwrap();
         f.drain();

@@ -15,6 +15,7 @@ pub mod csv;
 pub mod args;
 pub mod proptest;
 pub mod bench;
+pub mod stats;
 
 pub use error::{Error, Result};
 pub use rng::SplitMix64;

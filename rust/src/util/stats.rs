@@ -1,0 +1,199 @@
+//! Shared latency statistics: the single nearest-rank percentile
+//! implementation plus a lock-striped latency ring.
+//!
+//! Percentile math used to live in `coordinator::service` and was re-derived
+//! ad hoc by the traffic simulator's roll-ups; PR 6 hoists it here so
+//! `ServiceStats`, the fleetplan SLO tracker and the simulator all share one
+//! definition (and one set of regression tests — see the ceiling-rank note
+//! below).
+//!
+//! [`LatencyRing`] is the recording side: a bounded window of recent latency
+//! samples built for the lock-free stats path (`docs/HOTPATH.md`). The
+//! single writer (a service worker) round-robins samples across independently
+//! locked stripes, so a reader summarizing the ring only ever contends with
+//! the writer on one stripe at a time — the worker never blocks behind a
+//! whole-window lock while a monitor aggregates.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Nearest-rank percentile over an ascending-sorted sample: the smallest
+/// element with at least `pct`% of the sample at or below it, i.e. rank
+/// ⌈n·pct/100⌉ (1-based). Returns 0 for an empty sample.
+///
+/// The ceiling is load-bearing: a floored rank `(n-1)·pct/100` reads *below*
+/// the requested percentile for small n (at n = 2 it reports the minimum as
+/// the p95 — the bug fixed in PR 2; see the regression test in
+/// `coordinator::service`).
+pub fn percentile_nearest_rank(sorted: &[u64], pct: u64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = (sorted.len() as u64 * pct).div_ceil(100).max(1) as usize;
+    sorted[rank.min(sorted.len()) - 1]
+}
+
+/// Mean and nearest-rank p95 of an unsorted sample window, in the sample's
+/// own unit (callers scale µs or ns to ms themselves). Returns `(0.0, 0)`
+/// for an empty window.
+pub fn window_mean_p95(samples: &[u64]) -> (f64, u64) {
+    if samples.is_empty() {
+        return (0.0, 0);
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_unstable();
+    let mean = sorted.iter().sum::<u64>() as f64 / sorted.len() as f64;
+    (mean, percentile_nearest_rank(&sorted, 95))
+}
+
+/// Stripes in a [`LatencyRing`]; a power of two so the cursor modulo is a
+/// mask. 8 stripes keep the per-stripe critical section tiny while staying
+/// cheap to concatenate on snapshot.
+const STRIPES: usize = 8;
+
+/// One stripe: a fixed-capacity overwrite ring of samples.
+struct Stripe {
+    samples: Vec<u64>,
+    next: usize,
+}
+
+/// Bounded window of recent latency samples, striped over [`STRIPES`]
+/// independent locks.
+///
+/// Writer side ([`LatencyRing::record`]): the owning worker advances a
+/// relaxed atomic cursor and appends to `cursor % STRIPES`, overwriting the
+/// stripe's oldest sample once full — so the ring as a whole retains the
+/// most recent `window` samples (the striping preserves the plain ring's
+/// eviction order because the writer visits stripes round-robin).
+///
+/// Reader side ([`LatencyRing::snapshot`]): locks stripes one at a time and
+/// concatenates, so a snapshot never stalls the writer for more than one
+/// stripe's critical section. Sample order across stripes is not
+/// chronological; consumers sort anyway (see [`window_mean_p95`]).
+pub struct LatencyRing {
+    stripes: Vec<Mutex<Stripe>>,
+    /// Round-robin write cursor. Relaxed: it only picks a stripe; the
+    /// stripe mutex orders the sample data itself.
+    cursor: AtomicUsize,
+    stripe_cap: usize,
+}
+
+impl LatencyRing {
+    /// Ring retaining the most recent `window` samples (rounded up to a
+    /// multiple of the stripe count).
+    pub fn new(window: usize) -> LatencyRing {
+        let stripe_cap = window.div_ceil(STRIPES).max(1);
+        LatencyRing {
+            stripes: (0..STRIPES)
+                .map(|_| Mutex::new(Stripe { samples: Vec::new(), next: 0 }))
+                .collect(),
+            cursor: AtomicUsize::new(0),
+            stripe_cap,
+        }
+    }
+
+    /// Record one sample, evicting the window's oldest once full.
+    pub fn record(&self, sample: u64) {
+        let at = self.cursor.fetch_add(1, Ordering::Relaxed);
+        let mut stripe = self.stripes[at % STRIPES].lock().unwrap();
+        if stripe.samples.len() < self.stripe_cap {
+            stripe.samples.push(sample);
+        } else {
+            let slot = stripe.next;
+            stripe.samples[slot] = sample;
+        }
+        stripe.next = (stripe.next + 1) % self.stripe_cap;
+    }
+
+    /// Samples currently retained (≤ the configured window).
+    pub fn len(&self) -> usize {
+        self.stripes.iter().map(|s| s.lock().unwrap().samples.len()).sum()
+    }
+
+    /// True when no sample has been recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Copy out the retained window (unsorted; stripe-interleaved order).
+    pub fn snapshot(&self) -> Vec<u64> {
+        let mut out = Vec::with_capacity(self.stripe_cap * STRIPES);
+        for stripe in &self.stripes {
+            out.extend_from_slice(&stripe.lock().unwrap().samples);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_matches_service_semantics() {
+        let lats: Vec<u64> = (1..=10).collect();
+        assert_eq!(percentile_nearest_rank(&lats, 95), 10);
+        assert_eq!(percentile_nearest_rank(&lats, 50), 5);
+        assert_eq!(percentile_nearest_rank(&lats, 100), 10);
+        assert_eq!(percentile_nearest_rank(&[], 95), 0);
+        assert_eq!(percentile_nearest_rank(&[7], 95), 7);
+        assert_eq!(percentile_nearest_rank(&[3, 400], 95), 400);
+    }
+
+    #[test]
+    fn window_summary_sorts_internally() {
+        let (mean, p95) = window_mean_p95(&[400, 3]);
+        assert!((mean - 201.5).abs() < 1e-9);
+        assert_eq!(p95, 400, "p95 must come from the sorted window");
+        assert_eq!(window_mean_p95(&[]), (0.0, 0));
+    }
+
+    #[test]
+    fn ring_retains_exactly_the_most_recent_window() {
+        // Same invariant the old single-vector ring was tested for: after
+        // window + 100 inserts of 0..window+100, the 100 oldest samples are
+        // gone and memory stays bounded — striping must not change eviction.
+        let window = 4096u64;
+        let ring = LatencyRing::new(window as usize);
+        for i in 0..(window + 100) {
+            ring.record(i);
+        }
+        let snap = ring.snapshot();
+        assert_eq!(snap.len(), window as usize, "memory stays bounded");
+        assert_eq!(*snap.iter().min().unwrap(), 100);
+        assert_eq!(*snap.iter().max().unwrap(), window + 99);
+    }
+
+    #[test]
+    fn ring_rounds_tiny_windows_up_to_the_stripe_count() {
+        let ring = LatencyRing::new(1);
+        assert!(ring.is_empty());
+        for i in 0..100 {
+            ring.record(i);
+        }
+        // One slot per stripe: the last STRIPES samples survive.
+        let mut snap = ring.snapshot();
+        snap.sort_unstable();
+        assert_eq!(snap, (100 - STRIPES as u64..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn ring_snapshot_is_safe_under_concurrent_recording() {
+        use std::sync::Arc;
+        let ring = Arc::new(LatencyRing::new(64));
+        std::thread::scope(|scope| {
+            let r = Arc::clone(&ring);
+            let writer = scope.spawn(move || {
+                for i in 0..10_000 {
+                    r.record(i);
+                }
+            });
+            for _ in 0..50 {
+                let snap = ring.snapshot();
+                assert!(snap.len() <= 64);
+            }
+            writer.join().unwrap();
+        });
+        assert_eq!(ring.len(), 64);
+    }
+}

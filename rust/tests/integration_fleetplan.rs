@@ -27,7 +27,7 @@ struct GatedExecutor {
 }
 
 impl BatchExecutor for GatedExecutor {
-    fn infer_batch(&mut self, images: &[Vec<i32>]) -> Result<Vec<Vec<i32>>> {
+    fn infer_batch(&mut self, images: &[std::sync::Arc<[i32]>]) -> Result<Vec<Vec<i32>>> {
         self.gate.recv().map_err(|_| Error::Runtime("gate closed".into()))?;
         Ok(images.iter().map(|_| vec![0i32; self.classes]).collect())
     }

@@ -127,7 +127,7 @@ fn pjrt_service_end_to_end_with_batching() {
             golden.infer(img).unwrap().into_iter().map(|v| v as i32).collect();
         assert_eq!(got, want, "service path diverges from golden");
     }
-    let stats = svc.stats().unwrap();
+    let stats = svc.stats();
     assert_eq!(stats.requests, 5);
     svc.shutdown();
 }

@@ -9,8 +9,15 @@ and emits a per-section markdown table of mean-latency deltas — appended to
 the GitHub job summary by the CI bench job so perf PRs carry their own
 before/after evidence.
 
-Exit code is always 0: the diff is evidence, not a gate (noise on shared CI
-runners would make a hard threshold flaky). Regressions are flagged inline.
+By default the exit code is 0: the diff is evidence, not a gate (noise on
+shared CI runners would make a hard threshold flaky), and regressions are
+flagged inline. Sections named with ``--fail-on SECTION`` (repeatable) are
+the exception — they ARE gated: if any bench present in both baselines
+under a gated section is slower by more than ``--fail-pct`` percent
+(default 20), the script prints the offending entries and exits 1. The
+serving hot-path sections (`runtime_serve`) are gated in CI so a perf PR
+cannot silently undo them; a gated section that disappears from the
+current baseline also fails.
 
 It can additionally diff the simulator's capacity report (the JSON written
 by ``convkit simulate --out``, top-level key ``simulate``): pass
@@ -27,6 +34,7 @@ best p95 across the front. Byte-deterministic for a fixed seed, same as
 the capacity report.
 
 Usage: bench_diff.py CURRENT.json PREVIOUS.json [--regress-pct 25]
+                     [--fail-on SECTION]... [--fail-pct 20]
                      [--simulate CURRENT_SIM.json PREVIOUS_SIM.json]
                      [--policysearch CURRENT_POL.json PREVIOUS_POL.json]
 """
@@ -101,6 +109,38 @@ def diff(current: dict, previous: dict, regress_pct: float) -> str:
         f"slower by ≥ {regress_pct:.0f}% (advisory — CI runner noise applies)._"
     )
     return "\n".join(lines) + "\n"
+
+
+def gate(current: dict, previous: dict, sections: list, fail_pct: float) -> list:
+    """Hard-gate failures: entries in a gated section slower by > fail_pct.
+
+    Returns a list of human-readable failure strings (empty = gate passes).
+    With no previous baseline there is nothing to regress against, so the
+    gate passes vacuously — but a gated section missing from the *current*
+    baseline is a failure (the bench was removed or did not run).
+    """
+    failures = []
+    for section in sections:
+        cur = current.get(section)
+        if cur is None:
+            failures.append(
+                f"{section}: gated section missing from the current baseline"
+            )
+            continue
+        if not previous:
+            continue
+        prev = previous.get(section, {})
+        for name in sorted(set(cur) & set(prev)):
+            c, p = cur[name], prev[name]
+            if p <= 0:
+                continue
+            pct = 100.0 * (c - p) / p
+            if pct > fail_pct:
+                failures.append(
+                    f"{section}/{name}: {fmt_ns(p)} -> {fmt_ns(c)} "
+                    f"({pct:+.1f}%, limit +{fail_pct:.0f}%)"
+                )
+    return failures
 
 
 def load_simulate(path: str) -> dict:
@@ -237,15 +277,19 @@ def main() -> int:
     ap.add_argument("previous")
     ap.add_argument("--regress-pct", type=float, default=25.0,
                     help="flag entries slower by at least this percentage")
+    ap.add_argument("--fail-on", action="append", default=[], metavar="SECTION",
+                    help="hard-gate this baseline section (repeatable): exit 1 "
+                         "if any of its benches regress by more than --fail-pct")
+    ap.add_argument("--fail-pct", type=float, default=20.0,
+                    help="regression threshold for --fail-on sections")
     ap.add_argument("--simulate", nargs=2, metavar=("CUR_SIM", "PREV_SIM"),
                     help="also diff two `convkit simulate --out` reports")
     ap.add_argument("--policysearch", nargs=2, metavar=("CUR_POL", "PREV_POL"),
                     help="also diff two `convkit policysearch --out` reports")
     args = ap.parse_args()
-    report = diff(
-        load_sections(args.current), load_sections(args.previous), args.regress_pct
-    )
-    print(report)
+    current = load_sections(args.current)
+    previous = load_sections(args.previous)
+    print(diff(current, previous, args.regress_pct))
     if args.simulate:
         cur_sim, prev_sim = args.simulate
         print(diff_simulate(load_simulate(cur_sim), load_simulate(prev_sim)))
@@ -254,6 +298,17 @@ def main() -> int:
         print(diff_policysearch(
             load_policysearch(cur_pol), load_policysearch(prev_pol)
         ))
+    if args.fail_on:
+        failures = gate(current, previous, args.fail_on, args.fail_pct)
+        if failures:
+            print(f"## PERF GATE FAILED (> +{args.fail_pct:.0f}% on a gated "
+                  "section)")
+            print()
+            for f in failures:
+                print(f"- {f}")
+            return 1
+        gated = ", ".join(f"`{s}`" for s in args.fail_on)
+        print(f"_Perf gate OK: {gated} within +{args.fail_pct:.0f}%._")
     return 0
 
 
