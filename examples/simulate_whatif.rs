@@ -10,17 +10,20 @@
 //!    heavy-tail workload?* (same `Autoscaler` code path, virtual time)
 //! 3. *What if the fleet had to split across two devices?* (the planner's
 //!    spill path)
+//! 4. *What can a mixed pool of three devices sustain, reconfiguration
+//!    outages included?* (the N-device fleet plane: `plan_pool` +
+//!    `explore_pool`, rebinds amortized by the pool-attached controller)
 //!
 //! Run: `cargo run --release --example simulate_whatif`
 
 use convkit::cnn::zoo;
 use convkit::coordinator::dse::DseEngine;
 use convkit::coordinator::jobs::JobPool;
-use convkit::fleetplan::{plan_with_spill, NetworkDemand};
+use convkit::fleetplan::{plan_pool, plan_with_spill, DevicePool, NetworkDemand};
 use convkit::models::SelectOptions;
 use convkit::platform::Platform;
 use convkit::report;
-use convkit::simulate::{explore, Scenario, ScenarioShape, WhatIfOptions};
+use convkit::simulate::{explore, explore_pool, Scenario, ScenarioShape, WhatIfOptions};
 use convkit::synthdata::SweepOptions;
 use std::time::Instant;
 
@@ -98,5 +101,30 @@ fn main() -> convkit::Result<()> {
         },
         Err(e) => println!("spill study: {e}"),
     }
+
+    // The N-device fleet plane: pack the VGG-16-scale stressor plus the two
+    // small networks across a mixed three-device pool, then run the same
+    // what-if machinery against it — per-device contention groups, and a
+    // pool-attached controller that may rebind an idle device (paying the
+    // reconfiguration outage on the virtual clock) when the primary runs
+    // out of headroom.
+    println!();
+    let pool = DevicePool::parse("kv260,zcu104,zcu111", 0.8)?;
+    let pool_demands = vec![
+        NetworkDemand::new(zoo::vgg16_q8()),
+        NetworkDemand::new(zoo::lenet_ish()).with_weight(2.0),
+        NetworkDemand::new(zoo::tiny()),
+    ];
+    let pool_plan = plan_pool(&pool_demands, &rep.registry, &pool)?;
+    println!("{}", report::pool_table(&pool_plan));
+    let scenario = Scenario::new(ScenarioShape::Burst, Vec::new(), 0.0, 0.0, 42);
+    let t2 = Instant::now();
+    let r = explore_pool(&pool_demands, &rep.registry, &pool, &scenario, &opts)?;
+    println!("{}", report::capacity_table(&r));
+    println!(
+        "({} virtual events in {:.0} ms wall)",
+        r.events,
+        t2.elapsed().as_secs_f64() * 1e3
+    );
     Ok(())
 }

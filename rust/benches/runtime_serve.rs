@@ -6,8 +6,10 @@
 //! multi-client burst, the bounded-admission (`try_infer`) path, the
 //! lock-free stats snapshot (`stats_snapshot_lockfree`), the autoscaler's
 //! actuation cost (an add_shard + drain-based remove_shard cycle on the
-//! live fleet), and the adaptive-coalescing batch driver
-//! (`fleet_adaptive_window`). Request payloads are `Arc<[i32]>` buffers
+//! live fleet), the adaptive-coalescing batch driver
+//! (`fleet_adaptive_window`), and the heterogeneous pool planner
+//! (`fleet_pool_plan`: the VGG-16-scale demand set packed across a mixed
+//! three-device pool). Request payloads are `Arc<[i32]>` buffers
 //! allocated once per image — the zero-copy path the serving layer ships.
 //! Results are merged into the shared
 //! `BENCH_runtime.json` baseline (section `runtime_serve`) so future PRs can
@@ -16,10 +18,13 @@
 
 use convkit::blocks::BlockKind;
 use convkit::cnn::zoo;
-use convkit::coordinator::{drive_golden_clients, ShardSpec, ShardedService};
+use convkit::coordinator::{drive_golden_clients, DseEngine, JobPool, ShardSpec, ShardedService};
+use convkit::fleetplan::{plan_pool, DevicePool, NetworkDemand};
+use convkit::models::SelectOptions;
 use convkit::simulate::{
     simulate_trace, Scenario, ScenarioShape, SimFleet, SimRunOptions, SimServiceModel,
 };
+use convkit::synthdata::SweepOptions;
 use convkit::util::bench::Bench;
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -211,6 +216,45 @@ fn main() {
             "-> batched simulator: {} virtual events/iter, {:.2}M events/s wall",
             batched_events,
             batched_events as f64 / (s.mean_ns / 1e9) / 1e6
+        );
+    }
+
+    // Heterogeneous pool planning (the N-device fleet plane): one iteration
+    // packs the three-network demand set — including the VGG-16-scale
+    // stressor — across a mixed KV260 + ZCU104 + ZCU111 pool and solves each
+    // device's sub-fleet. The fitted-model registry is built once outside
+    // the timed loop; the section tracks pure planner cost as pools grow
+    // beyond the old two-platform spill pair.
+    let pool_registry = DseEngine {
+        sweep: SweepOptions { min_bits: 6, max_bits: 12, ..Default::default() },
+        select: SelectOptions::default(),
+        pool: JobPool::with_workers(2),
+        cache: None,
+    }
+    .run()
+    .expect("dse for pool planning")
+    .registry;
+    let pool_demands = vec![
+        NetworkDemand::new(zoo::vgg16_q8()),
+        NetworkDemand::new(zoo::lenet_ish()),
+        NetworkDemand::new(zoo::tiny()),
+    ];
+    let device_pool = DevicePool::parse("kv260,zcu104,zcu111", 0.8).expect("pool spec");
+    let mut pool_replicas = 0u64;
+    let mut pool_used = 0usize;
+    b.run("fleet_pool_plan", || {
+        let plan = plan_pool(&pool_demands, &pool_registry, &device_pool).expect("pool plan");
+        pool_replicas = plan.total_replicas();
+        pool_used = plan.used_devices();
+        plan.total_replicas()
+    });
+    if let Some(s) = b.stats("fleet_pool_plan") {
+        println!(
+            "-> pool planner: {} replica(s) across {}/{} device(s), {:.3} ms/plan",
+            pool_replicas,
+            pool_used,
+            device_pool.devices.len(),
+            s.mean_ns / 1e6
         );
     }
 

@@ -11,15 +11,16 @@ use convkit::coordinator::{
 use convkit::extend::{energy_estimate, latency_estimate, PowerModel};
 use convkit::fixedpoint::QFormat;
 use convkit::fleetplan::{
-    plan_fleet, select_platform, Autoscaler, NetworkDemand, SloPolicy,
+    plan_fleet, plan_pool, select_platform, Autoscaler, DevicePool, NetworkDemand,
+    ReconfigPolicy, SloPolicy,
 };
 use convkit::models::SelectOptions;
 use convkit::platform::Platform;
 use convkit::report;
 use convkit::runtime::{artifacts_dir, Runtime};
 use convkit::simulate::{
-    explore, explore_replay, policysearch, PolicyGrid, Scenario, ScenarioShape, Trace,
-    TraceRecorder, WhatIfOptions,
+    explore, explore_pool, explore_replay, policysearch, PolicyGrid, Scenario, ScenarioShape,
+    Trace, TraceRecorder, WhatIfOptions, DEFAULT_CONTENTION_ALPHA,
 };
 use convkit::synth::MapOptions;
 use convkit::synthdata::SweepOptions;
@@ -47,18 +48,20 @@ COMMANDS:
               --data-bits N --coeff-bits N --french]
   deploy     map a CNN onto a platform           [--network NAME --platform P
               --target 0.X]
+  plan       pack a fleet across a device pool   [--networks A,B
+              --pool kv260,zcu104@0.7,... --target 0.X --out FILE]
   serve      run the batched inference service   [--network NAME --requests N
               --batch N --golden-only]
   fleet      sharded multi-network serving       [--networks A,B --replicas N
               --requests N --batch N --queue-cap N --record FILE]
   autoscale  model-driven fleet autoscaler       [--networks A,B --platform P
               --target 0.X --requests N --rounds N --queue-cap N --batch N
-              --latency-slo]
+              --latency-slo --alpha X --pool SPEC]
   simulate   virtual-clock what-if explorer      [--scenario steady|diurnal|
               burst|heavytail --seed N --networks A,B --platform P|auto
-              --target 0.X --qps N --duration-ms N --events N --queue-cap N
-              --control-ms N --max-batch N --coalesce-ms X --alpha X
-              --replay FILE --out FILE --no-latency-slo]
+              --pool SPEC --target 0.X --qps N --duration-ms N --events N
+              --queue-cap N --control-ms N --max-batch N --coalesce-ms X
+              --alpha X --replay FILE --out FILE --no-latency-slo]
   policysearch  sweep SloPolicy grids, report the Pareto front
               [simulate's scenario/fidelity options (not --replay), plus
               --overload A,B --p95-ratio A,B --idle-queue A,B
@@ -84,6 +87,7 @@ pub fn dispatch(args: &ParsedArgs) -> Result<()> {
         Some("predict") => cmd_predict(args),
         Some("allocate") => cmd_allocate(args),
         Some("deploy") => cmd_deploy(args),
+        Some("plan") => cmd_plan(args),
         Some("serve") => cmd_serve(args),
         Some("fleet") => cmd_fleet(args),
         Some("autoscale") => cmd_autoscale(args),
@@ -291,6 +295,36 @@ fn cmd_deploy(args: &ParsedArgs) -> Result<()> {
                 en.mj_per_inference
             );
         }
+    }
+    Ok(())
+}
+
+/// Pack a fleet across a heterogeneous device pool (the N-device
+/// generalization of `deploy`'s single-platform study): price every network
+/// with the fitted models, first-fit-decreasing across the pool, weighted
+/// max-min fill per device. `--out` writes the deterministic `POOL_plan.json`
+/// artifact CI archives and diffs (`scripts/bench_diff.py --pool`).
+fn cmd_plan(args: &ParsedArgs) -> Result<()> {
+    let names = {
+        let list = args.get_list("networks");
+        if list.is_empty() {
+            vec!["lenet_q8".to_string(), "tiny_q8".to_string()]
+        } else {
+            list
+        }
+    };
+    let zoo_specs = zoo_specs_from(&names)?;
+    let cap = args.get_f64("target", 0.8)?;
+    let pool_spec = args.get_str("pool", "zcu104,kv260");
+    let pool = DevicePool::parse(&pool_spec, cap)?;
+    let rep = run_report(args)?;
+    let demands: Vec<NetworkDemand> =
+        zoo_specs.iter().map(|s| NetworkDemand::new(s.clone())).collect();
+    let plan = plan_pool(&demands, &rep.registry, &pool)?;
+    println!("{}", report::pool_table(&plan));
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, plan.to_json())?;
+        println!("pool plan written to {out}");
     }
     Ok(())
 }
@@ -535,15 +569,41 @@ fn cmd_autoscale(args: &ParsedArgs) -> Result<()> {
     let rounds = args.get_u64("rounds", 3)?.max(1) as usize;
 
     let zoo_specs = zoo_specs_from(&names)?;
+    // Same override as `simulate`: the calibrated device-contention slope
+    // (docs/alpha_calibration.json; re-calibrate on real silicon).
+    let alpha = args.get_f64("alpha", DEFAULT_CONTENTION_ALPHA)?.max(0.0);
+    let pool = match args.get("pool") {
+        Some(spec) => Some(DevicePool::parse(spec, cap)?),
+        None => None,
+    };
 
     // -- the paper side: fit models, price replicas, solve the plan --------
     let rep = run_report(args)?;
     let demands: Vec<NetworkDemand> =
         zoo_specs.iter().map(|s| NetworkDemand::new(s.clone())).collect();
-    let plan = plan_fleet(&demands, &rep.registry, &plat, cap)?;
+    // With --pool, pack across the whole pool and run the live demo on the
+    // first used device's sub-plan (the golden-backed fleet is one host);
+    // the pool stays attached to the controller so an exhausted budget can
+    // emit an amortized rebind onto a spare device.
+    let plan = match &pool {
+        Some(p) => {
+            let pp = plan_pool(&demands, &rep.registry, p)?;
+            println!("{}", report::pool_table(&pp));
+            let first = pp
+                .devices
+                .iter()
+                .find(|d| !d.plan.networks.is_empty())
+                .ok_or_else(|| {
+                    Error::Usage("the pool plan placed no replicas on any device".into())
+                })?;
+            println!("live demo runs the {} sub-plan\n", first.device);
+            first.plan.clone()
+        }
+        None => plan_fleet(&demands, &rep.registry, &plat, cap)?,
+    };
     println!(
         "capacity plan on {} at {:.0}% cap (prices from the fitted models):",
-        plat.name,
+        plan.platform.name,
         100.0 * cap
     );
     for n in &plan.networks {
@@ -564,6 +624,19 @@ fn cmd_autoscale(args: &ParsedArgs) -> Result<()> {
     match select_platform(&demands, &rep.registry, &Platform::all(), cap) {
         Ok((p, _)) => println!("  FPGA selection: smallest catalog device that fits = {}", p.name),
         Err(e) => println!("  FPGA selection: {e}"),
+    }
+    // Contention outlook at the planned packing: co-located replicas stretch
+    // each other's service by 1 + alpha × (co-located share excluding self) —
+    // the simulator's calibrated model, evaluated here at full fill.
+    let fill: f64 = plan.networks.iter().map(|n| n.replicas as f64 * n.util_frac).sum();
+    for n in &plan.networks {
+        let stretch = 1.0 + alpha * (fill - n.util_frac).max(0.0);
+        println!(
+            "  {:<12} contention stretch at full pack ×{:.2} (alpha {alpha:.2}) -> {:.4} ms effective",
+            n.network,
+            stretch,
+            n.predicted_ms * stretch
+        );
     }
 
     // -- the serving side: start at the floors, let the controller grow ----
@@ -589,6 +662,9 @@ fn cmd_autoscale(args: &ParsedArgs) -> Result<()> {
     } else {
         Autoscaler::new(plan, policy, templates.clone())
     };
+    if let Some(p) = pool {
+        scaler = scaler.with_pool(p, ReconfigPolicy::default());
+    }
     println!(
         "\nfleet up: {} network(s) × 1 replica, queue cap {queue_cap} — spiking {} with {} pipelined requests/round",
         names.len(),
@@ -711,6 +787,13 @@ fn cmd_simulate(args: &ParsedArgs) -> Result<()> {
 
     let t0 = Instant::now();
     let report = if let Some(replay) = args.get("replay") {
+        if args.get("pool").is_some() {
+            return Err(Error::Usage(
+                "--replay and --pool are mutually exclusive (replay derives its \
+                 fleet from platform selection)"
+                    .into(),
+            ));
+        }
         let trace = Trace::load(std::path::Path::new(replay))?;
         println!(
             "replaying {} recorded arrivals ({:.1} ms of traffic) from {replay}\n",
@@ -718,6 +801,19 @@ fn cmd_simulate(args: &ParsedArgs) -> Result<()> {
             trace.duration_ms()
         );
         explore_replay(&demands, &rep.registry, &platforms, &trace, seed, &opts)?
+    } else if let Some(spec) = args.get("pool") {
+        // A pool replaces platform selection: pack across the named devices
+        // and simulate per-device contention groups + amortized rebinds.
+        let pool = DevicePool::parse(spec, opts.cap)?;
+        println!("pool: {}\n", pool.label());
+        let scenario = Scenario::new(
+            shape,
+            Vec::new(),
+            args.get_f64("qps", 0.0)?,
+            args.get_f64("duration-ms", 0.0)?,
+            seed,
+        );
+        explore_pool(&demands, &rep.registry, &pool, &scenario, &opts)?
     } else {
         // qps/duration 0 = auto-size: overload the floors, generate at
         // least --events arrivals (≥ 1M virtual events by default).

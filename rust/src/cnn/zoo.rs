@@ -95,10 +95,54 @@ pub fn sigmoid_q8() -> NetworkSpec {
     }
 }
 
+/// A VGG-16-scale stress spec: 13 convolution layers on a 64×64 input with
+/// a doubling channel ladder — 1,598 3×3 kernels in total, the same order
+/// of magnitude as VGG-16's 13-layer convolutional trunk (scaled to what a
+/// mid-range FPGA actually holds). Built for the heterogeneous-pool
+/// planner: one replica saturates a small device, so packing it forces
+/// multi-device pools and amortized rebinds. Golden-model only — `aot.py`
+/// has no matching artifact.
+pub fn vgg16_q8() -> NetworkSpec {
+    let ladder: [(usize, usize); 13] = [
+        (1, 2),
+        (2, 2),
+        (2, 4),
+        (4, 4),
+        (4, 8),
+        (8, 8),
+        (8, 8),
+        (8, 16),
+        (16, 16),
+        (16, 16),
+        (16, 16),
+        (16, 16),
+        (16, 16),
+    ];
+    NetworkSpec {
+        name: "vgg16_q8".into(),
+        in_h: 64,
+        in_w: 64,
+        in_ch: 1,
+        layers: ladder
+            .iter()
+            .map(|&(in_ch, out_ch)| ConvLayerSpec {
+                in_ch,
+                out_ch,
+                data_bits: 8,
+                coeff_bits: 8,
+                shift: 8,
+                activation: Activation::Relu,
+            })
+            .collect(),
+        head_shift: 8,
+        seed: 0xB16_2025,
+    }
+}
+
 /// All zoo networks (the artifact set `aot.py` compiles, plus the
-/// golden-model-only activation demo).
+/// golden-model-only activation demo and the VGG-16-scale pool stressor).
 pub fn all() -> Vec<NetworkSpec> {
-    vec![lenet_ish(), tiny(), slim_q6(), sigmoid_q8()]
+    vec![lenet_ish(), tiny(), slim_q6(), sigmoid_q8(), vgg16_q8()]
 }
 
 #[cfg(test)]
@@ -132,6 +176,16 @@ mod tests {
         let g = sigmoid_q8();
         assert_eq!(g.seed, 0x516_2025);
         assert!(g.layers.iter().all(|l| l.activation.is_poly()));
+        let v = vgg16_q8();
+        assert_eq!((v.in_h, v.in_w, v.in_ch), (64, 64, 1));
+        assert_eq!(v.layers.len(), 13);
+        assert_eq!(
+            v.layers.iter().map(|l| l.kernel_count()).sum::<usize>(),
+            1598,
+            "the kernel total is the pool-pressure constant — keep it frozen"
+        );
+        assert_eq!(v.seed, 0xB16_2025);
+        assert_eq!(v.head_shift, 8);
     }
 
     #[test]

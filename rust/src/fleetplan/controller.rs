@@ -17,6 +17,7 @@
 //! nothing here can run.
 
 use super::planner::FleetPlan;
+use super::pool::{DevicePool, ReconfigPolicy};
 use super::slo::{NetworkSlo, SloPolicy, SloTracker, SloVerdict};
 use crate::coordinator::{ShardSpec, ShardedService, ShardedStats};
 use crate::synth::ResourceVector;
@@ -72,6 +73,21 @@ pub trait ScaleTarget {
     /// The target's clock (milliseconds; wall time for a live fleet,
     /// virtual time inside a simulation) — stamped onto every decision.
     fn now_ms(&self) -> f64;
+
+    /// Rebind a device to `spec.network`: drain whatever the device
+    /// currently serves, pay `downtime_ms` of reconfiguration outage, then
+    /// bring up `spec.replicas` fresh replicas. The default forwards to
+    /// [`ScaleTarget::scale_up`] once per replica with no outage — targets
+    /// without device identity (the live fleet, for now) model a rebind as
+    /// plain added capacity. The simulator overrides this with a true
+    /// drain + outage + activation sequence on the virtual clock.
+    fn rebind(&mut self, device: &str, spec: &ShardSpec, downtime_ms: f64) -> Result<()> {
+        let _ = (device, downtime_ms);
+        for _ in 0..spec.replicas.max(1) {
+            self.scale_up(&ShardSpec { replicas: 1, ..spec.clone() })?;
+        }
+        Ok(())
+    }
 }
 
 /// [`ScaleTarget`] adapter over a live [`ShardedService`].
@@ -118,6 +134,12 @@ pub enum ScaleAction {
     Up,
     /// Drain and remove one replica.
     Down,
+    /// Reprogram a pool device with this network's bitstream (drain the old
+    /// binding, pay the reconfiguration outage, come up with fresh
+    /// replicas). Emitted only by a pool-attached controller
+    /// ([`Autoscaler::with_pool`]) and only when the model-predicted gain
+    /// amortizes the downtime.
+    Rebind,
 }
 
 /// One justified reconfiguration step.
@@ -143,6 +165,9 @@ pub struct ScaleDecision {
     /// live, virtual time in a simulation). Stamped by
     /// [`Autoscaler::step_target`]; 0 for bare [`Autoscaler::decide`] calls.
     pub at_ms: f64,
+    /// Pool device being reprogrammed (`Some` only for
+    /// [`ScaleAction::Rebind`]).
+    pub device: Option<String>,
 }
 
 impl fmt::Display for ScaleDecision {
@@ -150,6 +175,7 @@ impl fmt::Display for ScaleDecision {
         let dir = match self.action {
             ScaleAction::Up => "scale-up",
             ScaleAction::Down => "scale-down",
+            ScaleAction::Rebind => "rebind",
         };
         write!(
             f,
@@ -165,11 +191,40 @@ impl fmt::Display for ScaleDecision {
     }
 }
 
+/// A device pool attached to the controller, plus the reconfiguration cost
+/// model. Bindings are updated as rebinds are emitted so one device is never
+/// reprogrammed twice for the same standing overload.
+struct PoolAttachment {
+    pool: DevicePool,
+    reconfig: ReconfigPolicy,
+}
+
+/// Replicas of a `unit`-priced network that fit `budget` (worst-column
+/// integer fill; 0 for a zero-cost unit — nothing real is free).
+fn replicas_that_fit(unit: &ResourceVector, budget: &ResourceVector) -> u64 {
+    use crate::synth::Resource;
+    let mut k = u64::MAX;
+    let mut any = false;
+    for r in Resource::ALL {
+        let (u, b) = (unit.get(r), budget.get(r));
+        if u > 0 {
+            any = true;
+            k = k.min(b / u);
+        }
+    }
+    if any {
+        k
+    } else {
+        0
+    }
+}
+
 /// The controller: plan + policy + per-network shard templates.
 pub struct Autoscaler {
     plan: FleetPlan,
     tracker: SloTracker,
     templates: BTreeMap<String, ShardSpec>,
+    pool: Option<PoolAttachment>,
 }
 
 impl Autoscaler {
@@ -180,7 +235,7 @@ impl Autoscaler {
     pub fn new(plan: FleetPlan, policy: SloPolicy, templates: Vec<ShardSpec>) -> Autoscaler {
         let templates =
             templates.into_iter().map(|t| (t.network.clone(), t)).collect();
-        Autoscaler { plan, tracker: SloTracker::new(policy), templates }
+        Autoscaler { plan, tracker: SloTracker::new(policy), templates, pool: None }
     }
 
     /// [`Autoscaler::new`] with the latency-aware SLO: each planned
@@ -202,7 +257,24 @@ impl Autoscaler {
             .collect();
         let templates =
             templates.into_iter().map(|t| (t.network.clone(), t)).collect();
-        Autoscaler { plan, tracker: SloTracker::with_predicted(policy, predicted), templates }
+        Autoscaler {
+            plan,
+            tracker: SloTracker::with_predicted(policy, predicted),
+            templates,
+            pool: None,
+        }
+    }
+
+    /// Attach a heterogeneous device pool and a reconfiguration cost model.
+    /// A pool-attached controller has one more move when the primary budget
+    /// is exhausted: reprogram an idle pool device with the overloaded
+    /// network's bitstream ([`ScaleAction::Rebind`]) — but only when the
+    /// model-predicted throughput gain amortizes the configured downtime
+    /// (see [`ReconfigPolicy`]); the arithmetic is printed in the decision's
+    /// justification like every budget check.
+    pub fn with_pool(mut self, pool: DevicePool, reconfig: ReconfigPolicy) -> Autoscaler {
+        self.pool = Some(PoolAttachment { pool, reconfig });
+        self
     }
 
     /// The capacity plan decisions are judged against.
@@ -225,6 +297,11 @@ impl Autoscaler {
             .map(|s| (s.network.clone(), s.replicas as u64))
             .collect();
         let budget = self.plan.capped_budget();
+        // Verdicts by network, for the rebind candidate search: a pool device
+        // bound to a network that is currently live and non-idle must not be
+        // stolen from under it.
+        let verdicts: BTreeMap<String, SloVerdict> =
+            slos.iter().map(|s| (s.network.clone(), s.verdict)).collect();
         let mut decisions = Vec::new();
         for slo in &slos {
             let Some(np) = self.plan.get(&slo.network) else { continue };
@@ -240,7 +317,16 @@ impl Autoscaler {
                     });
                     if !predicted_total.fits_within(&budget) {
                         // Platform exhausted: the models say one more replica
-                        // cannot fit under the cap — shed load instead.
+                        // cannot fit under the cap. With a pool attached, try
+                        // reprogramming an idle device instead of shedding
+                        // load — the candidate search amortizes the
+                        // reconfiguration outage before emitting anything.
+                        // Off-platform replicas do not touch `working`: the
+                        // primary's joint budget is unchanged by a rebind.
+                        if let Some(d) = self.rebind_candidate(slo, current, &verdicts, &working)
+                        {
+                            decisions.push(d);
+                        }
                         continue;
                     }
                     decisions.push(self.decision(slo, ScaleAction::Up, current, predicted_total));
@@ -263,6 +349,106 @@ impl Autoscaler {
         decisions
     }
 
+    /// Search the attached pool for a device worth reprogramming with
+    /// `slo.network`'s bitstream, and amortize the reconfiguration outage:
+    ///
+    /// * **gain** — `k` replicas fit the candidate's threshold budget
+    ///   (worst-column fill, capped by the plan's `max_replicas`), each worth
+    ///   `1e3 / predicted_ms` QPS by the fitted latency model;
+    /// * **backlog** — the demand currently going unmet
+    ///   (`overload/(1−overload) × current × per-replica QPS`) keeps accruing
+    ///   for `downtime_s` while the device reprograms;
+    /// * **payback** — the post-rebind surplus must clear that backlog within
+    ///   `payback_limit_s`, or the rebind is suppressed.
+    ///
+    /// Skipped candidates: the plan's own (exhausted) platform, devices
+    /// already bound to this network, and devices bound to a live non-idle
+    /// network. On success the chosen device's binding is updated in place so
+    /// the same standing overload cannot reprogram it twice.
+    fn rebind_candidate(
+        &mut self,
+        slo: &NetworkSlo,
+        current: u64,
+        verdicts: &BTreeMap<String, SloVerdict>,
+        working: &BTreeMap<String, u64>,
+    ) -> Option<ScaleDecision> {
+        let att = self.pool.as_mut()?;
+        let np = self.plan.get(&slo.network)?;
+        if np.predicted_ms <= 0.0 {
+            // No latency model → no throughput estimate → nothing to amortize
+            // the outage against.
+            return None;
+        }
+        let per_replica_qps = 1e3 / np.predicted_ms;
+        for di in 0..att.pool.devices.len() {
+            let dev = &att.pool.devices[di];
+            if dev.name == self.plan.platform.name {
+                continue; // the plan's own platform — just found exhausted
+            }
+            if dev.binding.as_deref() == Some(slo.network.as_str()) {
+                continue; // already holds this bitstream (thrash guard)
+            }
+            if let Some(bound) = dev.binding.as_deref() {
+                if verdicts.get(bound).map_or(false, |v| *v != SloVerdict::Idle) {
+                    continue; // busy serving a live network
+                }
+            }
+            let mut k = replicas_that_fit(&np.unit, &dev.budget());
+            if np.max_replicas != 0 {
+                k = k.min(np.max_replicas.saturating_sub(current));
+            }
+            if k == 0 {
+                continue;
+            }
+            let gain_qps = k as f64 * per_replica_qps;
+            let overload = slo.overload_rate.clamp(0.0, 0.95);
+            let unmet_qps = overload / (1.0 - overload) * current as f64 * per_replica_qps;
+            let backlog = unmet_qps * att.reconfig.downtime_s;
+            let surplus = gain_qps - unmet_qps;
+            if surplus <= 0.0 {
+                continue; // the rebind cannot even absorb the standing unmet demand
+            }
+            let payback_s = if backlog > 0.0 { backlog / surplus } else { 0.0 };
+            if payback_s > att.reconfig.payback_limit_s {
+                continue;
+            }
+            // The primary's predicted footprint is unchanged — the new
+            // replicas live on the rebound device, not on the plan platform.
+            let predicted_total = self
+                .plan
+                .predicted_usage(|name| working.get(name).copied().unwrap_or(0));
+            let reason = format!(
+                "overload {:.1}% with the {} budget exhausted; reprogramming {} adds \
+                 {} replica(s) (+{:.1} QPS), amortizing the {:.1} s outage in {:.1} s \
+                 (unmet {:.1} QPS, payback limit {:.0} s)",
+                100.0 * slo.overload_rate,
+                self.plan.platform.name,
+                dev.name,
+                k,
+                gain_qps,
+                att.reconfig.downtime_s,
+                payback_s,
+                unmet_qps,
+                att.reconfig.payback_limit_s,
+            );
+            let decision = ScaleDecision {
+                network: slo.network.clone(),
+                action: ScaleAction::Rebind,
+                from_replicas: current,
+                to_replicas: current + k,
+                unit: np.unit,
+                predicted_total,
+                utilization_after: self.plan.platform.utilization(&predicted_total),
+                reason,
+                at_ms: 0.0,
+                device: Some(dev.name.clone()),
+            };
+            att.pool.devices[di].binding = Some(slo.network.clone());
+            return Some(decision);
+        }
+        None
+    }
+
     fn decision(
         &self,
         slo: &NetworkSlo,
@@ -274,8 +460,10 @@ impl Autoscaler {
         let to = match action {
             ScaleAction::Up => current + 1,
             ScaleAction::Down => current - 1,
+            ScaleAction::Rebind => unreachable!("rebinds are built by rebind_candidate"),
         };
         let reason = match action {
+            ScaleAction::Rebind => unreachable!("rebinds are built by rebind_candidate"),
             ScaleAction::Up => format!(
                 "overload {:.1}% / p95 {:.3} ms breach the SLO (targets {:.1}% / {:.1} ms)",
                 100.0 * slo.overload_rate,
@@ -298,6 +486,7 @@ impl Autoscaler {
             utilization_after: self.plan.platform.utilization(&predicted_total),
             reason,
             at_ms: 0.0,
+            device: None,
         }
     }
 
@@ -320,6 +509,26 @@ impl Autoscaler {
                 target.scale_up(&spec)
             }
             ScaleAction::Down => target.scale_down(&decision.network),
+            ScaleAction::Rebind => {
+                let template = self.templates.get(&decision.network).ok_or_else(|| {
+                    Error::InvalidConfig(format!(
+                        "no shard template for network `{}`",
+                        decision.network
+                    ))
+                })?;
+                let k = decision
+                    .to_replicas
+                    .saturating_sub(decision.from_replicas)
+                    .max(1);
+                let spec = ShardSpec { replicas: k as usize, ..template.clone() };
+                let device = decision.device.as_deref().unwrap_or("");
+                let downtime_ms = self
+                    .pool
+                    .as_ref()
+                    .map(|p| p.reconfig.downtime_s * 1e3)
+                    .unwrap_or(0.0);
+                target.rebind(device, &spec, downtime_ms)
+            }
         }
     }
 
@@ -522,6 +731,57 @@ mod tests {
         assert_eq!(t[0].coalesce.fill_ns, 100_000);
     }
 
+    /// A pool-attached scaler: ZCU104 primary (exhausted at 13×100 DSP
+    /// replicas, see [`plan`]) plus a blank ZCU111 spare.
+    fn pooled(reconfig: ReconfigPolicy) -> Autoscaler {
+        use super::super::pool::{DevicePool, PoolDevice};
+        let pool = DevicePool::new(vec![
+            PoolDevice::new(Platform::zcu104(), 0.8),
+            PoolDevice::new(Platform::zcu111(), 0.8),
+        ])
+        .unwrap();
+        scaler().with_pool(pool, reconfig)
+    }
+
+    #[test]
+    fn exhausted_budget_with_an_idle_pool_device_emits_an_amortized_rebind() {
+        let mut a = pooled(ReconfigPolicy::default());
+        // 13 replicas saturate the primary (a 14th needs 1400 > 1382 DSP);
+        // overload 50% → a rebind candidate search runs.
+        let d = a.decide(&rows(13, 10, 10, 1.0));
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].action, ScaleAction::Rebind);
+        assert_eq!(d[0].device.as_deref(), Some("ZCU111"));
+        // The ZCU111 spare at 80%: LLUT 340224/1000 = 340, DSP 3417/100 = 34
+        // → worst column gives k = 34 fresh replicas.
+        assert_eq!((d[0].from_replicas, d[0].to_replicas), (13, 47));
+        // The primary's predicted footprint is untouched by the rebind.
+        assert_eq!(d[0].predicted_total.dsp, 1300);
+        let line = d[0].to_string();
+        assert!(line.contains("rebind a 13→47"), "{line}");
+        assert!(line.contains("reprogramming ZCU111"), "{line}");
+        assert!(line.contains("amortizing the 2.0 s outage"), "{line}");
+    }
+
+    #[test]
+    fn a_rebound_device_is_not_reprogrammed_twice_for_the_same_overload() {
+        let mut a = pooled(ReconfigPolicy::default());
+        assert_eq!(a.decide(&rows(13, 10, 10, 1.0)).len(), 1);
+        // Same standing overload next round: the spare is now bound to `a`,
+        // so the candidate search comes up empty — no binding flapping.
+        let again = a.decide(&rows(13, 20, 20, 1.0));
+        assert!(again.is_empty(), "{again:?}");
+    }
+
+    #[test]
+    fn a_zero_payback_limit_suppresses_the_rebind() {
+        // With unmet demand accruing during the outage, payback time is
+        // strictly positive — a 0 s limit can never be met.
+        let mut a = pooled(ReconfigPolicy { downtime_s: 2.0, payback_limit_s: 0.0 });
+        let d = a.decide(&rows(13, 10, 10, 1.0));
+        assert!(d.is_empty(), "{d:?}");
+    }
+
     #[test]
     fn apply_without_a_template_is_an_error() {
         let a = scaler();
@@ -535,6 +795,7 @@ mod tests {
             utilization_after: [0.0; 5],
             reason: "test".into(),
             at_ms: 0.0,
+            device: None,
         };
         let fleet = crate::coordinator::ShardedService::start(&[
             crate::coordinator::ShardSpec::golden("tiny_q8"),

@@ -57,8 +57,17 @@
 //! deployment ships the policy the models recommend. See `docs/GUIDE.md`
 //! for the end-to-end operator walkthrough.
 
+//! Since the device-pool refactor, the two-platform spill is the 2-device
+//! degenerate case of [`pool::plan_pool`]: an N-device [`DevicePool`] of
+//! named [`PoolDevice`]s (mixed platforms, per-resource
+//! [`DeviceThresholds`], an optional bitstream *binding*) is packed with
+//! deterministic first-fit-decreasing across devices, and the controller
+//! amortizes FPGA reconfiguration downtime ([`ReconfigPolicy`]) before it
+//! ever emits a rebind.
+
 pub mod controller;
 pub mod planner;
+pub mod pool;
 pub mod slo;
 
 pub use controller::{
@@ -67,5 +76,9 @@ pub use controller::{
 pub use planner::{
     plan_fleet, plan_platforms, plan_with_spill, select_platform, select_platform_or_spill,
     FleetPlan, NetworkDemand, NetworkPlan, SpillPlan,
+};
+pub use pool::{
+    plan_pool, DevicePlan, DevicePool, DeviceThresholds, PoolDevice, PoolPlan,
+    ReconfigPolicy,
 };
 pub use slo::{NetworkSlo, SloPolicy, SloTracker, SloVerdict};

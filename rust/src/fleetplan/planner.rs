@@ -182,10 +182,25 @@ pub fn plan_fleet(
     platform: &Platform,
     cap: f64,
 ) -> Result<FleetPlan> {
+    plan_fleet_budgeted(demands, registry, platform, cap, &platform.capped_budget(cap))
+}
+
+/// [`plan_fleet`] against an explicit budget vector — the device-pool
+/// planner's entry point, where per-resource thresholds make the budget
+/// something other than a uniform scale of the platform's. `cap` is only
+/// recorded on the plan (and printed in errors); the packing runs entirely
+/// against `budget`.
+pub(crate) fn plan_fleet_budgeted(
+    demands: &[NetworkDemand],
+    registry: &ModelRegistry,
+    platform: &Platform,
+    cap: f64,
+    budget: &ResourceVector,
+) -> Result<FleetPlan> {
     if demands.is_empty() {
         return Err(Error::InvalidConfig("fleet plan needs ≥ 1 network demand".into()));
     }
-    let budget = platform.capped_budget(cap);
+    let budget = *budget;
     // Price one replica of each network via the per-layer block mix.
     let mut networks: Vec<NetworkPlan> = Vec::with_capacity(demands.len());
     for d in demands {
@@ -322,19 +337,87 @@ impl SpillPlan {
         self.primary.total_replicas()
             + self.spill.as_ref().map(FleetPlan::total_replicas).unwrap_or(0)
     }
+
+    /// Deterministic JSON (stable key order, fixed float precision — the
+    /// regression harness for the pool refactor diffs this byte for byte):
+    ///
+    /// ```json
+    /// {
+    ///   "spill_plan": {
+    ///     "primary": {"platform": "KV260", ...},
+    ///     "spill": {"platform": "ZCU111", ...} | null
+    ///   }
+    /// }
+    /// ```
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n  \"spill_plan\": {\n    \"primary\": ");
+        s.push_str(&fleet_plan_json(&self.primary));
+        match &self.spill {
+            Some(sp) => {
+                s.push_str(",\n    \"spill\": ");
+                s.push_str(&fleet_plan_json(sp));
+            }
+            None => s.push_str(",\n    \"spill\": null"),
+        }
+        s.push_str("\n  }\n}\n");
+        s
+    }
+}
+
+/// One fleet plan as a deterministic JSON object (shared by
+/// [`SpillPlan::to_json`]; float precision mirrors the pool report).
+fn fleet_plan_json(plan: &FleetPlan) -> String {
+    use super::pool::json_escape;
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!(
+        "      \"platform\": \"{}\",\n",
+        json_escape(plan.platform.name)
+    ));
+    s.push_str(&format!("      \"part\": \"{}\",\n", json_escape(plan.platform.part)));
+    s.push_str(&format!("      \"cap\": {:.3},\n", plan.cap));
+    s.push_str(&format!("      \"total_replicas\": {},\n", plan.total_replicas()));
+    let u = plan.utilization;
+    s.push_str(&format!(
+        "      \"utilization\": {{\"llut\": {:.3}, \"mlut\": {:.3}, \"ff\": {:.3}, \"cchain\": {:.3}, \"dsp\": {:.3}}},\n",
+        u[0], u[1], u[2], u[3], u[4]
+    ));
+    s.push_str("      \"networks\": [");
+    for (j, n) in plan.networks.iter().enumerate() {
+        if j > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "\n        {{\"network\": \"{}\", \"replicas\": {}, \"min_replicas\": {}, \"weight\": {:.3}, \"predicted_ms\": {:.6}, \"fill_ms\": {:.6}, \"util_frac\": {:.6}}}",
+            json_escape(&n.network),
+            n.replicas,
+            n.min_replicas,
+            n.weight,
+            n.predicted_ms,
+            n.fill_ms,
+            n.util_frac
+        ));
+    }
+    if !plan.networks.is_empty() {
+        s.push_str("\n      ");
+    }
+    s.push_str("]\n    }");
+    s
 }
 
 /// Plan `demands` on `primary`, spilling whole networks onto `spill` when
 /// the primary cannot hold every floor — a two-platform split instead of an
 /// `Infeasible` error.
 ///
-/// The partition is deterministic first-fit-decreasing over the *priced
-/// floors*: each demand's floor footprint (unit × `min_replicas`, priced on
-/// the primary) is packed biggest-LLUT-first onto the primary's capped
-/// budget; whatever does not fit — including networks the primary cannot
-/// price at all (a layer too big for the device) — goes to the spill
-/// platform. Both sub-fleets are then solved independently with
-/// [`plan_fleet`], so each device's fill still saturates its own budget.
+/// Since the pool refactor this is a thin wrapper over
+/// [`super::pool::plan_pool`] on the 2-device degenerate
+/// [`super::pool::DevicePool::pair`]: the pool planner's per-device
+/// first-fit-decreasing over the priced floors *is* the historical
+/// two-platform partition (biggest-LLUT-first into the primary's capped
+/// budget, unpriceable networks forced to spill, both sub-fleets solved
+/// independently with [`plan_fleet`]), verified byte-identical by the
+/// regression test in `fleetplan::pool`.
 pub fn plan_with_spill(
     demands: &[NetworkDemand],
     registry: &ModelRegistry,
@@ -342,50 +425,27 @@ pub fn plan_with_spill(
     spill: &Platform,
     cap: f64,
 ) -> Result<SpillPlan> {
-    if let Ok(plan) = plan_fleet(demands, registry, primary, cap) {
-        return Ok(SpillPlan { primary: plan, spill: None });
-    }
-    // Price every demand's floor on the primary; unpriceable demands are
-    // forced spillers.
-    let budget = primary.capped_budget(cap);
-    let mut priced: Vec<(usize, ResourceVector)> = Vec::new();
-    let mut forced: Vec<usize> = Vec::new();
-    for (i, d) in demands.iter().enumerate() {
-        match plan_deployment(&d.spec, registry, primary, cap) {
-            Ok(dep) => priced.push((i, dep.total.scaled(d.min_replicas.max(1)))),
-            Err(_) => forced.push(i),
-        }
-    }
-    // First-fit-decreasing by LLUT (DSP tie-break, demand index last so the
-    // partition is fully deterministic).
-    priced.sort_by_key(|(i, fp)| (std::cmp::Reverse((fp.llut, fp.dsp)), *i));
-    let mut on_primary: Vec<usize> = Vec::new();
-    let mut spilled: Vec<usize> = forced;
-    let mut packed = ResourceVector::default();
-    for (i, fp) in priced {
-        if (packed + fp).fits_within(&budget) {
-            packed += fp;
-            on_primary.push(i);
-        } else {
-            spilled.push(i);
-        }
-    }
-    if on_primary.is_empty() || spilled.is_empty() {
+    let pool = super::pool::DevicePool::pair(primary, spill, cap);
+    let pp = super::pool::plan_pool(demands, registry, &pool)?;
+    let mut devices = pp.devices.into_iter();
+    let primary_plan = devices.next().expect("pair pool plans two devices").plan;
+    let spill_plan = devices.next().expect("pair pool plans two devices").plan;
+    if primary_plan.networks.is_empty() {
+        // Nothing fits the primary at all. The pool planner happily parks
+        // the whole fleet on the second device, but the two-platform
+        // contract has always treated that as infeasible (the caller asked
+        // for a *split*, not a swap) — preserve the historical error.
         return Err(Error::Infeasible(format!(
             "demands do not split across {} + {} at {:.0}% (floors fit {} platform(s))",
             primary.name,
             spill.name,
             100.0 * cap,
-            if spilled.is_empty() { "one — use plan_fleet" } else { "neither" },
+            "neither",
         )));
     }
-    on_primary.sort_unstable();
-    spilled.sort_unstable();
-    let pick = |idx: &[usize]| -> Vec<NetworkDemand> {
-        idx.iter().map(|&i| demands[i].clone()).collect()
-    };
-    let primary_plan = plan_fleet(&pick(&on_primary), registry, primary, cap)?;
-    let spill_plan = plan_fleet(&pick(&spilled), registry, spill, cap)?;
+    if spill_plan.networks.is_empty() {
+        return Ok(SpillPlan { primary: primary_plan, spill: None });
+    }
     Ok(SpillPlan { primary: primary_plan, spill: Some(spill_plan) })
 }
 

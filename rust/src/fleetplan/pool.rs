@@ -1,0 +1,732 @@
+//! Heterogeneous device pools: the N-device generalization of the
+//! two-platform spill special case.
+//!
+//! A [`DevicePool`] is an ordered set of named devices, each a
+//! [`Platform`] plus per-resource utilization thresholds (the
+//! fpgaConvnet-style `dsp_threshold`/`bram_threshold` descriptors,
+//! generalized to every column of [`ResourceVector`]) and an optional
+//! *binding* — the network whose bitstream the device currently holds.
+//! [`plan_pool`] packs replica floors across the pool with deterministic
+//! first-fit-decreasing over the priced floors (the same partition rule the
+//! old two-platform `plan_with_spill` used), then solves each device's
+//! sub-fleet with the weighted max-min fill so every device still saturates
+//! its own budget. `plan_with_spill` is now literally the 2-device
+//! degenerate case of this planner.
+//!
+//! Rebinding a device to a different network is not free: a full-bitstream
+//! reconfiguration pays seconds of downtime. [`ReconfigPolicy`] makes that
+//! cost a first-class controller input — the autoscaler only emits a rebind
+//! when the model-predicted gain amortizes the outage (see
+//! [`crate::fleetplan::Autoscaler::with_pool`]).
+
+use super::planner::{plan_fleet_budgeted, FleetPlan, NetworkDemand, NetworkPlan};
+use crate::cnn::plan_deployment;
+use crate::models::ModelRegistry;
+use crate::platform::Platform;
+use crate::synth::{Resource, ResourceVector};
+use crate::util::error::{Error, Result};
+
+/// Per-resource utilization thresholds for one device, as fractions of the
+/// raw budget in `[0, 1]`. The uniform case reproduces
+/// [`Platform::capped_budget`] bit for bit; heterogeneous thresholds let an
+/// operator keep, say, DSP columns under 70% while LUTs run to 85%.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceThresholds {
+    /// Logic-LUT share.
+    pub llut: f64,
+    /// Memory-LUT share.
+    pub mlut: f64,
+    /// Flip-flop share.
+    pub ff: f64,
+    /// Carry-chain share.
+    pub cchain: f64,
+    /// DSP share.
+    pub dsp: f64,
+}
+
+impl DeviceThresholds {
+    /// The same cap on every resource column (the classic `--target 0.8`).
+    pub fn uniform(cap: f64) -> DeviceThresholds {
+        DeviceThresholds { llut: cap, mlut: cap, ff: cap, cchain: cap, dsp: cap }
+    }
+
+    /// Threshold for one resource column.
+    pub fn get(&self, r: Resource) -> f64 {
+        match r as usize {
+            0 => self.llut,
+            1 => self.mlut,
+            2 => self.ff,
+            3 => self.cchain,
+            _ => self.dsp,
+        }
+    }
+
+    /// The most conservative column — used as the scalar cap wherever a
+    /// single fraction is needed (deployment pricing, report labels). For
+    /// uniform thresholds this is exactly the original cap.
+    pub fn pricing_cap(&self) -> f64 {
+        self.llut.min(self.mlut).min(self.ff).min(self.cchain).min(self.dsp)
+    }
+
+    /// The device budget under these thresholds (per-column floor, the same
+    /// rounding as [`Platform::capped_budget`]).
+    pub fn budget(&self, platform: &Platform) -> ResourceVector {
+        let s = |v: u64, f: f64| (v as f64 * f).floor() as u64;
+        ResourceVector::new(
+            s(platform.budget.llut, self.llut),
+            s(platform.budget.mlut, self.mlut),
+            s(platform.budget.ff, self.ff),
+            s(platform.budget.cchain, self.cchain),
+            s(platform.budget.dsp, self.dsp),
+        )
+    }
+}
+
+/// One device in a pool: a platform, its thresholds, and (optionally) the
+/// network whose bitstream it currently holds.
+#[derive(Debug, Clone)]
+pub struct PoolDevice {
+    /// Pool-unique device name. Defaults to the platform name; duplicated
+    /// platforms get `#2`, `#3`, … suffixes from [`DevicePool::parse`].
+    pub name: String,
+    /// The FPGA.
+    pub platform: Platform,
+    /// Per-resource utilization thresholds.
+    pub thresholds: DeviceThresholds,
+    /// Network currently programmed onto the device (`None` = blank or
+    /// unknown). The controller's rebind amortization reads this.
+    pub binding: Option<String>,
+}
+
+impl PoolDevice {
+    /// Device named after its platform, with a uniform cap.
+    pub fn new(platform: Platform, cap: f64) -> PoolDevice {
+        PoolDevice {
+            name: platform.name.to_string(),
+            platform,
+            thresholds: DeviceThresholds::uniform(cap),
+            binding: None,
+        }
+    }
+
+    /// Override the pool-unique device name.
+    pub fn named(mut self, name: impl Into<String>) -> PoolDevice {
+        self.name = name.into();
+        self
+    }
+
+    /// Override the per-resource thresholds.
+    pub fn with_thresholds(mut self, t: DeviceThresholds) -> PoolDevice {
+        self.thresholds = t;
+        self
+    }
+
+    /// Record the network currently bound to the device.
+    pub fn with_binding(mut self, network: impl Into<String>) -> PoolDevice {
+        self.binding = Some(network.into());
+        self
+    }
+
+    /// The device budget under its thresholds.
+    pub fn budget(&self) -> ResourceVector {
+        self.thresholds.budget(&self.platform)
+    }
+
+    /// Scalar cap for deployment pricing (most conservative column).
+    pub fn pricing_cap(&self) -> f64 {
+        self.thresholds.pricing_cap()
+    }
+}
+
+/// An ordered pool of named devices. Order matters: [`plan_pool`] packs
+/// first-fit in pool order, so put the preferred (cheapest / already
+/// powered) devices first.
+#[derive(Debug, Clone)]
+pub struct DevicePool {
+    /// The devices, in packing order.
+    pub devices: Vec<PoolDevice>,
+}
+
+impl DevicePool {
+    /// Build a pool (≥ 1 device, pool-unique names).
+    pub fn new(devices: Vec<PoolDevice>) -> Result<DevicePool> {
+        if devices.is_empty() {
+            return Err(Error::InvalidConfig("device pool needs ≥ 1 device".into()));
+        }
+        for (i, d) in devices.iter().enumerate() {
+            if devices[..i].iter().any(|p| p.name == d.name) {
+                return Err(Error::InvalidConfig(format!(
+                    "duplicate device name `{}` in pool",
+                    d.name
+                )));
+            }
+        }
+        Ok(DevicePool { devices })
+    }
+
+    /// The 2-device degenerate pool `plan_with_spill` reduces to. Device
+    /// names are exactly the platform names, which keeps every downstream
+    /// label (simulator contention groups, capacity reports) byte-identical
+    /// with the historical spill path.
+    pub fn pair(primary: &Platform, spill: &Platform, cap: f64) -> DevicePool {
+        DevicePool {
+            devices: vec![
+                PoolDevice::new(primary.clone(), cap),
+                PoolDevice::new(spill.clone(), cap),
+            ],
+        }
+    }
+
+    /// Parse a CLI pool spec: a comma-separated list of catalog platform
+    /// names, each with an optional `@cap` per-device uniform threshold —
+    /// e.g. `kv260,zcu104@0.7,zcu111`. Repeated platforms get `#2`, `#3`, …
+    /// name suffixes. `default_cap` applies where no `@cap` is given.
+    pub fn parse(spec: &str, default_cap: f64) -> Result<DevicePool> {
+        let mut devices: Vec<PoolDevice> = Vec::new();
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let (name, cap) = match entry.split_once('@') {
+                Some((n, c)) => {
+                    let cap: f64 = c.trim().parse().map_err(|_| {
+                        Error::InvalidConfig(format!("bad device cap in `{entry}`"))
+                    })?;
+                    if !(cap > 0.0 && cap <= 1.0) {
+                        return Err(Error::InvalidConfig(format!(
+                            "device cap must be in (0, 1], got `{c}`"
+                        )));
+                    }
+                    (n.trim(), cap)
+                }
+                None => (entry, default_cap),
+            };
+            let platform = Platform::by_name(name).ok_or_else(|| {
+                Error::InvalidConfig(format!("unknown platform `{name}` in pool spec"))
+            })?;
+            let mut dev = PoolDevice::new(platform, cap);
+            let clones = devices.iter().filter(|d| d.platform.name == dev.platform.name).count();
+            if clones > 0 {
+                dev.name = format!("{}#{}", dev.platform.name, clones + 1);
+            }
+            devices.push(dev);
+        }
+        DevicePool::new(devices)
+    }
+
+    /// Device by name.
+    pub fn get(&self, name: &str) -> Option<&PoolDevice> {
+        self.devices.iter().find(|d| d.name == name)
+    }
+
+    /// Human label: `KV260 + ZCU104 + ZCU111`.
+    pub fn label(&self) -> String {
+        self.devices.iter().map(|d| d.name.as_str()).collect::<Vec<_>>().join(" + ")
+    }
+}
+
+/// The cost model for swapping a device's bitstream — a first-class
+/// controller input: the [`crate::fleetplan::Autoscaler`] only emits a
+/// rebind when the accrued outage amortizes inside `payback_limit_s`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReconfigPolicy {
+    /// Full-bitstream reprogram outage, in seconds. During this window the
+    /// device serves nothing for either network.
+    pub downtime_s: f64,
+    /// Maximum acceptable time for the post-rebind capacity surplus to
+    /// clear the backlog the outage accrued. Rebinds with a longer payback
+    /// are suppressed (thrash guard).
+    pub payback_limit_s: f64,
+}
+
+impl Default for ReconfigPolicy {
+    fn default() -> ReconfigPolicy {
+        // ~2 s covers a full Zynq UltraScale+ bitstream load; a 20 s payback
+        // bound keeps the controller from flapping bindings under noise.
+        ReconfigPolicy { downtime_s: 2.0, payback_limit_s: 20.0 }
+    }
+}
+
+/// One device's solved sub-fleet inside a [`PoolPlan`].
+#[derive(Debug, Clone)]
+pub struct DevicePlan {
+    /// Pool device name.
+    pub device: String,
+    /// The device's binding carried over from the pool input.
+    pub binding: Option<String>,
+    /// The solved sub-fleet (empty `networks` = device unused).
+    pub plan: FleetPlan,
+}
+
+/// A fleet packed across a whole [`DevicePool`], one [`DevicePlan`] per
+/// device in pool order.
+#[derive(Debug, Clone)]
+pub struct PoolPlan {
+    /// Per-device sub-plans, pool order (unused devices keep empty plans).
+    pub devices: Vec<DevicePlan>,
+}
+
+impl PoolPlan {
+    /// Every per-network row, pool order.
+    pub fn networks(&self) -> Vec<&NetworkPlan> {
+        self.devices.iter().flat_map(|d| d.plan.networks.iter()).collect()
+    }
+
+    /// Solved replicas for one network across the whole pool.
+    pub fn replicas_for(&self, network: &str) -> u64 {
+        self.devices.iter().map(|d| d.plan.replicas_for(network)).sum()
+    }
+
+    /// Total replicas across the pool.
+    pub fn total_replicas(&self) -> u64 {
+        self.devices.iter().map(|d| d.plan.total_replicas()).sum()
+    }
+
+    /// Name of the device hosting a network (a network lands on exactly one
+    /// device).
+    pub fn device_for(&self, network: &str) -> Option<&str> {
+        self.devices
+            .iter()
+            .find(|d| d.plan.get(network).is_some())
+            .map(|d| d.device.as_str())
+    }
+
+    /// Devices actually used (≥ 1 planned network).
+    pub fn used_devices(&self) -> usize {
+        self.devices.iter().filter(|d| !d.plan.networks.is_empty()).count()
+    }
+
+    /// Deterministic JSON (hand-rolled like the capacity report — stable
+    /// key order, fixed float precision — so CI can archive and diff it):
+    ///
+    /// ```json
+    /// {
+    ///   "pool": {
+    ///     "devices": [
+    ///       {
+    ///         "device": "KV260", "platform": "KV260", "part": "XCK26",
+    ///         "binding": null, "cap": 0.800, "total_replicas": 13,
+    ///         "utilization": {"llut": 79.1, "mlut": 0.0, ...},
+    ///         "networks": [
+    ///           {"network": "lenet_q8", "replicas": 13, "min_replicas": 1,
+    ///            "weight": 1.000, "predicted_ms": 0.123456,
+    ///            "fill_ms": 0.012345, "util_frac": 0.061728}
+    ///         ]
+    ///       }
+    ///     ],
+    ///     "total_replicas": 21
+    ///   }
+    /// }
+    /// ```
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n  \"pool\": {\n    \"devices\": [");
+        for (i, d) in self.devices.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str("\n      {\n");
+            s.push_str(&format!("        \"device\": \"{}\",\n", json_escape(&d.device)));
+            s.push_str(&format!(
+                "        \"platform\": \"{}\",\n",
+                json_escape(d.plan.platform.name)
+            ));
+            s.push_str(&format!(
+                "        \"part\": \"{}\",\n",
+                json_escape(d.plan.platform.part)
+            ));
+            match &d.binding {
+                Some(b) => {
+                    s.push_str(&format!("        \"binding\": \"{}\",\n", json_escape(b)))
+                }
+                None => s.push_str("        \"binding\": null,\n"),
+            }
+            s.push_str(&format!("        \"cap\": {:.3},\n", d.plan.cap));
+            s.push_str(&format!(
+                "        \"total_replicas\": {},\n",
+                d.plan.total_replicas()
+            ));
+            let u = d.plan.utilization;
+            s.push_str(&format!(
+                "        \"utilization\": {{\"llut\": {:.3}, \"mlut\": {:.3}, \"ff\": {:.3}, \"cchain\": {:.3}, \"dsp\": {:.3}}},\n",
+                u[0], u[1], u[2], u[3], u[4]
+            ));
+            s.push_str("        \"networks\": [");
+            for (j, n) in d.plan.networks.iter().enumerate() {
+                if j > 0 {
+                    s.push(',');
+                }
+                s.push_str(&format!(
+                    "\n          {{\"network\": \"{}\", \"replicas\": {}, \"min_replicas\": {}, \"weight\": {:.3}, \"predicted_ms\": {:.6}, \"fill_ms\": {:.6}, \"util_frac\": {:.6}}}",
+                    json_escape(&n.network),
+                    n.replicas,
+                    n.min_replicas,
+                    n.weight,
+                    n.predicted_ms,
+                    n.fill_ms,
+                    n.util_frac
+                ));
+            }
+            if !d.plan.networks.is_empty() {
+                s.push_str("\n        ");
+            }
+            s.push_str("]\n      }");
+        }
+        s.push_str("\n    ],\n");
+        s.push_str(&format!("    \"total_replicas\": {}\n", self.total_replicas()));
+        s.push_str("  }\n}\n");
+        s
+    }
+}
+
+/// Minimal JSON string escaping for names (mirrors the capacity report's).
+pub(crate) fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// An all-empty sub-plan for an unused pool device.
+fn empty_plan(dev: &PoolDevice) -> FleetPlan {
+    let total = ResourceVector::default();
+    let utilization = dev.platform.utilization(&total);
+    FleetPlan {
+        platform: dev.platform.clone(),
+        cap: dev.pricing_cap(),
+        networks: Vec::new(),
+        total,
+        utilization,
+    }
+}
+
+/// Pack `demands` across the pool.
+///
+/// Devices are considered in pool order. At each device, if every remaining
+/// demand fits it outright the whole tail is placed there (the historical
+/// "primary holds everything → no spill" fast path, per device). Otherwise
+/// each remaining demand's *floor footprint* (unit price × `min_replicas`,
+/// priced on this device) is packed first-fit-decreasing by LLUT (DSP
+/// tie-break, demand index last — fully deterministic); demands that do not
+/// fit, or that this device cannot price at all (a layer too big for the
+/// part), stay for later devices. The last device takes everything left.
+/// Each device's sub-fleet is then solved independently with the weighted
+/// max-min fill against the device's own threshold budget.
+///
+/// A demand the *last* device cannot hold makes the whole pool infeasible
+/// (the planner does not split a single network across devices — that is
+/// the layer-pipeline item on the roadmap).
+pub fn plan_pool(
+    demands: &[NetworkDemand],
+    registry: &ModelRegistry,
+    pool: &DevicePool,
+) -> Result<PoolPlan> {
+    if demands.is_empty() {
+        return Err(Error::InvalidConfig("fleet plan needs ≥ 1 network demand".into()));
+    }
+    if pool.devices.is_empty() {
+        return Err(Error::InvalidConfig("device pool needs ≥ 1 device".into()));
+    }
+    let mut remaining: Vec<usize> = (0..demands.len()).collect();
+    let mut assigned: Vec<Vec<usize>> = vec![Vec::new(); pool.devices.len()];
+    for (k, dev) in pool.devices.iter().enumerate() {
+        if remaining.is_empty() {
+            break;
+        }
+        if k + 1 == pool.devices.len() {
+            assigned[k] = std::mem::take(&mut remaining);
+            break;
+        }
+        let budget = dev.budget();
+        let cap = dev.pricing_cap();
+        let subset: Vec<NetworkDemand> =
+            remaining.iter().map(|&i| demands[i].clone()).collect();
+        if plan_fleet_budgeted(&subset, registry, &dev.platform, cap, &budget).is_ok() {
+            assigned[k] = std::mem::take(&mut remaining);
+            break;
+        }
+        let mut priced: Vec<(usize, ResourceVector)> = Vec::new();
+        let mut leftover: Vec<usize> = Vec::new();
+        for &i in &remaining {
+            match plan_deployment(&demands[i].spec, registry, &dev.platform, cap) {
+                Ok(dep) => {
+                    priced.push((i, dep.total.scaled(demands[i].min_replicas.max(1))))
+                }
+                Err(_) => leftover.push(i),
+            }
+        }
+        priced.sort_by_key(|(i, fp)| (std::cmp::Reverse((fp.llut, fp.dsp)), *i));
+        let mut packed = ResourceVector::default();
+        for (i, fp) in priced {
+            if (packed + fp).fits_within(&budget) {
+                packed += fp;
+                assigned[k].push(i);
+            } else {
+                leftover.push(i);
+            }
+        }
+        assigned[k].sort_unstable();
+        leftover.sort_unstable();
+        remaining = leftover;
+    }
+    let mut devices = Vec::with_capacity(pool.devices.len());
+    for (k, dev) in pool.devices.iter().enumerate() {
+        let plan = if assigned[k].is_empty() {
+            empty_plan(dev)
+        } else {
+            let subset: Vec<NetworkDemand> =
+                assigned[k].iter().map(|&i| demands[i].clone()).collect();
+            plan_fleet_budgeted(
+                &subset,
+                registry,
+                &dev.platform,
+                dev.pricing_cap(),
+                &dev.budget(),
+            )?
+        };
+        devices.push(DevicePlan {
+            device: dev.name.clone(),
+            binding: dev.binding.clone(),
+            plan,
+        });
+    }
+    Ok(PoolPlan { devices })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::zoo;
+    use crate::coordinator::dse::DseEngine;
+    use crate::coordinator::jobs::JobPool;
+    use crate::models::{ModelRegistry, SelectOptions};
+    use crate::synthdata::SweepOptions;
+
+    fn registry() -> ModelRegistry {
+        let eng = DseEngine {
+            sweep: SweepOptions { min_bits: 6, max_bits: 12, ..Default::default() },
+            select: SelectOptions::default(),
+            pool: JobPool::with_workers(2),
+            cache: None,
+        };
+        eng.run().unwrap().registry
+    }
+
+    #[test]
+    fn uniform_thresholds_reproduce_capped_budget() {
+        for p in Platform::all() {
+            for cap in [0.5, 0.8, 0.93] {
+                assert_eq!(
+                    DeviceThresholds::uniform(cap).budget(&p),
+                    p.capped_budget(cap),
+                    "{} at {cap}",
+                    p.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn heterogeneous_thresholds_bind_per_column() {
+        let t = DeviceThresholds { dsp: 0.5, ..DeviceThresholds::uniform(0.9) };
+        let b = t.budget(&Platform::zcu104());
+        assert_eq!(b.dsp, (1_728f64 * 0.5).floor() as u64);
+        assert_eq!(b.llut, (230_400f64 * 0.9).floor() as u64);
+        assert!((t.pricing_cap() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pool_parse_names_caps_and_duplicates() {
+        let pool = DevicePool::parse("kv260,zcu104@0.7,zcu104", 0.8).unwrap();
+        assert_eq!(pool.devices.len(), 3);
+        assert_eq!(pool.devices[0].name, "KV260");
+        assert_eq!(pool.devices[1].name, "ZCU104");
+        assert_eq!(pool.devices[2].name, "ZCU104#2");
+        assert!((pool.devices[1].pricing_cap() - 0.7).abs() < 1e-12);
+        assert!((pool.devices[2].pricing_cap() - 0.8).abs() < 1e-12);
+        assert_eq!(pool.label(), "KV260 + ZCU104 + ZCU104#2");
+        assert!(DevicePool::parse("notapart", 0.8).is_err());
+        assert!(DevicePool::parse("kv260@1.5", 0.8).is_err());
+        assert!(DevicePool::parse("", 0.8).is_err());
+    }
+
+    #[test]
+    fn single_device_pool_matches_plan_fleet() {
+        let reg = registry();
+        let demands = [
+            super::super::planner::NetworkDemand::new(zoo::lenet_ish()),
+            super::super::planner::NetworkDemand::new(zoo::tiny()),
+        ];
+        let pool =
+            DevicePool::new(vec![PoolDevice::new(Platform::zcu104(), 0.8)]).unwrap();
+        let pp = plan_pool(&demands, &reg, &pool).unwrap();
+        let direct =
+            super::super::planner::plan_fleet(&demands, &reg, &Platform::zcu104(), 0.8)
+                .unwrap();
+        assert_eq!(pp.devices.len(), 1);
+        assert_eq!(pp.total_replicas(), direct.total_replicas());
+        assert_eq!(
+            pp.replicas_for("lenet_q8"),
+            direct.replicas_for("lenet_q8")
+        );
+        assert_eq!(pp.device_for("tiny_q8"), Some("ZCU104"));
+    }
+
+    #[test]
+    fn three_device_pool_spreads_overfull_floors() {
+        let reg = registry();
+        // Floors sized to each device's own ceiling so no single part — and
+        // no pair — holds everything: the pool must use all three devices.
+        let primary = Platform::kv260();
+        let lenet_ceiling = super::super::planner::plan_fleet(
+            &[NetworkDemand::new(zoo::lenet_ish())],
+            &reg,
+            &primary,
+            0.8,
+        )
+        .unwrap()
+        .replicas_for("lenet_q8");
+        let tiny_ceiling_104 = super::super::planner::plan_fleet(
+            &[NetworkDemand::new(zoo::tiny())],
+            &reg,
+            &Platform::zcu104(),
+            0.8,
+        )
+        .unwrap()
+        .replicas_for("tiny_q8");
+        let demands = [
+            NetworkDemand::new(zoo::lenet_ish()).with_min_replicas(lenet_ceiling),
+            NetworkDemand::new(zoo::tiny()).with_min_replicas(tiny_ceiling_104),
+            NetworkDemand::new(zoo::slim_q6()),
+        ];
+        let pool = DevicePool::parse("kv260,zcu104,zcu111", 0.8).unwrap();
+        let pp = plan_pool(&demands, &reg, &pool).unwrap();
+        assert_eq!(pp.networks().len(), 3, "every network lands somewhere");
+        for d in &pp.devices {
+            assert!(
+                d.plan.total.fits_within(&pool.get(&d.device).unwrap().budget()),
+                "{} overflows its threshold budget",
+                d.device
+            );
+        }
+        assert!(pp.replicas_for("lenet_q8") >= lenet_ceiling);
+        assert!(pp.replicas_for("tiny_q8") >= tiny_ceiling_104);
+        assert!(pp.replicas_for("slim_q6") >= 1);
+        // Deterministic partition.
+        let again = plan_pool(&demands, &reg, &pool).unwrap();
+        let names = |p: &PoolPlan| {
+            p.devices
+                .iter()
+                .map(|d| {
+                    (
+                        d.device.clone(),
+                        d.plan.networks.iter().map(|n| n.network.clone()).collect::<Vec<_>>(),
+                    )
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(names(&pp), names(&again));
+    }
+
+    #[test]
+    fn pool_json_is_deterministic_and_lists_every_device() {
+        let reg = registry();
+        let demands = [NetworkDemand::new(zoo::tiny()).with_max_replicas(2)];
+        let pool = DevicePool::parse("kv260,zcu111", 0.8).unwrap();
+        let pp = plan_pool(&demands, &reg, &pool).unwrap();
+        let j = pp.to_json();
+        assert_eq!(j, plan_pool(&demands, &reg, &pool).unwrap().to_json());
+        assert!(j.contains("\"device\": \"KV260\""));
+        assert!(j.contains("\"device\": \"ZCU111\""));
+        assert!(j.contains("\"total_replicas\""));
+        assert!(j.ends_with("}\n"));
+    }
+
+    #[test]
+    fn legacy_spill_is_byte_identical_to_the_pool_degenerate_case() {
+        // The regression the refactor promises: `plan_with_spill` (now a
+        // thin wrapper over `plan_pool` on a 2-device pool) must reproduce
+        // the historical two-platform algorithm byte for byte. The legacy
+        // algorithm is restated inline from public primitives: price every
+        // floor on the primary, first-fit-decreasing by (LLUT, DSP, index)
+        // into the primary's capped budget, spill the rest, solve each side
+        // with plan_fleet.
+        use super::super::planner::{plan_fleet, plan_with_spill, SpillPlan};
+        let reg = registry();
+        let primary = Platform::kv260();
+        let spill = Platform::zcu111();
+        let cap = 0.8;
+        let lenet_ceiling =
+            plan_fleet(&[NetworkDemand::new(zoo::lenet_ish())], &reg, &primary, cap)
+                .unwrap()
+                .replicas_for("lenet_q8");
+        let tiny_ceiling =
+            plan_fleet(&[NetworkDemand::new(zoo::tiny())], &reg, &primary, cap)
+                .unwrap()
+                .replicas_for("tiny_q8");
+        let fixtures: Vec<Vec<NetworkDemand>> = vec![
+            // The overfull-floors boundary fixture (forces a real split).
+            vec![
+                NetworkDemand::new(zoo::lenet_ish()).with_min_replicas(lenet_ceiling),
+                NetworkDemand::new(zoo::tiny()).with_min_replicas(tiny_ceiling),
+            ],
+            // The no-op fixture (everything fits the primary).
+            vec![NetworkDemand::new(zoo::tiny()).with_max_replicas(2)],
+        ];
+        for demands in &fixtures {
+            let legacy: SpillPlan = match plan_fleet(demands, &reg, &primary, cap) {
+                Ok(plan) => SpillPlan { primary: plan, spill: None },
+                Err(_) => {
+                    let budget = primary.capped_budget(cap);
+                    let mut priced: Vec<(usize, ResourceVector)> = Vec::new();
+                    let mut spilled: Vec<usize> = Vec::new();
+                    for (i, d) in demands.iter().enumerate() {
+                        match plan_deployment(&d.spec, &reg, &primary, cap) {
+                            Ok(dep) => priced
+                                .push((i, dep.total.scaled(d.min_replicas.max(1)))),
+                            Err(_) => spilled.push(i),
+                        }
+                    }
+                    priced.sort_by_key(|(i, fp)| {
+                        (std::cmp::Reverse((fp.llut, fp.dsp)), *i)
+                    });
+                    let mut on_primary: Vec<usize> = Vec::new();
+                    let mut packed = ResourceVector::default();
+                    for (i, fp) in priced {
+                        if (packed + fp).fits_within(&budget) {
+                            packed += fp;
+                            on_primary.push(i);
+                        } else {
+                            spilled.push(i);
+                        }
+                    }
+                    assert!(!on_primary.is_empty() && !spilled.is_empty());
+                    on_primary.sort_unstable();
+                    spilled.sort_unstable();
+                    let pick = |idx: &[usize]| -> Vec<NetworkDemand> {
+                        idx.iter().map(|&i| demands[i].clone()).collect()
+                    };
+                    SpillPlan {
+                        primary: plan_fleet(&pick(&on_primary), &reg, &primary, cap)
+                            .unwrap(),
+                        spill: Some(
+                            plan_fleet(&pick(&spilled), &reg, &spill, cap).unwrap(),
+                        ),
+                    }
+                }
+            };
+            let wrapped = plan_with_spill(demands, &reg, &primary, &spill, cap).unwrap();
+            assert_eq!(
+                legacy.to_json(),
+                wrapped.to_json(),
+                "pool-backed spill diverged from the legacy algorithm"
+            );
+        }
+    }
+}

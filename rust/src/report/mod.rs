@@ -4,10 +4,12 @@
 
 pub mod capacity;
 pub mod pareto;
+pub mod pool;
 pub mod tables;
 pub mod figures;
 
 pub use capacity::capacity_table;
 pub use figures::{figure_csv, figure_surface};
 pub use pareto::pareto_table;
+pub use pool::pool_table;
 pub use tables::{table1, table2, table3, table4, table5};

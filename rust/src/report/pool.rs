@@ -1,0 +1,116 @@
+//! Rendering of heterogeneous pool plans — the N-device generalization of
+//! the paper's Table-5-style allocation study: which networks land on which
+//! named device, at what replica count, under which utilization columns.
+
+use crate::fleetplan::PoolPlan;
+
+/// Render a pool plan as a fixed-width text block: one section per device
+/// (platform/part, current binding, utilization of the binding resource
+/// columns) with its per-network replica rows, then the pool totals.
+/// Unused devices are listed too — they are the controller's rebind
+/// headroom, so hiding them would misstate the pool.
+pub fn pool_table(p: &PoolPlan) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "=== pool plan: {} device(s), {} used, {} replica(s) ===\n",
+        p.devices.len(),
+        p.used_devices(),
+        p.total_replicas()
+    ));
+    for d in &p.devices {
+        let binding = d.binding.as_deref().unwrap_or("-");
+        let u = d.plan.utilization;
+        out.push_str(&format!(
+            "\n{} ({} {}, cap {:.0}%, binding {})  \
+             util llut {:.1}% mlut {:.1}% ff {:.1}% cchain {:.1}% dsp {:.1}%\n",
+            d.device,
+            d.plan.platform.name,
+            d.plan.platform.part,
+            100.0 * d.plan.cap,
+            binding,
+            u[0],
+            u[1],
+            u[2],
+            u[3],
+            u[4],
+        ));
+        if d.plan.networks.is_empty() {
+            out.push_str("  (unused — available as a rebind target)\n");
+            continue;
+        }
+        out.push_str(&format!(
+            "  {:<14} {:>8} {:>6} {:>10} {:>10} {:>10}\n",
+            "network", "replicas", "min", "svc pred", "fill ms", "util/repl"
+        ));
+        for n in &d.plan.networks {
+            out.push_str(&format!(
+                "  {:<14} {:>8} {:>6} {:>8.4}ms {:>10.4} {:>9.2}%\n",
+                n.network,
+                n.replicas,
+                n.min_replicas,
+                n.predicted_ms,
+                n.fill_ms,
+                100.0 * n.util_frac,
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleetplan::{DevicePlan, FleetPlan, NetworkPlan};
+    use crate::platform::Platform;
+    use crate::synth::ResourceVector;
+
+    fn plan() -> PoolPlan {
+        let row = NetworkPlan {
+            network: "lenet_q8".into(),
+            unit: ResourceVector::default(),
+            predicted_ms: 0.1234,
+            fill_ms: 0.01,
+            util_frac: 0.0617,
+            replicas: 13,
+            min_replicas: 1,
+            max_replicas: 0,
+            weight: 1.0,
+        };
+        let used = FleetPlan {
+            platform: Platform::zcu104(),
+            cap: 0.8,
+            networks: vec![row],
+            total: ResourceVector::default(),
+            utilization: [79.1, 0.0, 12.5, 3.0, 41.0],
+        };
+        let spare = FleetPlan {
+            platform: Platform::kv260(),
+            cap: 0.8,
+            networks: vec![],
+            total: ResourceVector::default(),
+            utilization: [0.0; 5],
+        };
+        PoolPlan {
+            devices: vec![
+                DevicePlan { device: "ZCU104".into(), binding: None, plan: used },
+                DevicePlan {
+                    device: "KV260-spare".into(),
+                    binding: Some("tiny_q8".into()),
+                    plan: spare,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn table_lists_every_device_and_marks_unused_ones() {
+        let text = pool_table(&plan());
+        assert!(text.contains("2 device(s), 1 used, 13 replica(s)"), "{text}");
+        assert!(text.contains("ZCU104"), "{text}");
+        assert!(text.contains("KV260-spare"), "{text}");
+        assert!(text.contains("binding tiny_q8"), "{text}");
+        assert!(text.contains("lenet_q8"), "{text}");
+        assert!(text.contains("unused — available as a rebind target"), "{text}");
+        assert!(text.contains("llut 79.1%"), "{text}");
+    }
+}

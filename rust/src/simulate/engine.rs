@@ -251,6 +251,10 @@ enum SimEvent {
     Dispatch { replica_id: u64 },
     /// The batch in service on this replica finished.
     Completion { replica_id: u64 },
+    /// A rebound device finished reprogramming: bring up one fresh replica
+    /// of `net`, tagged onto `device`'s contention group (see
+    /// [`SimFleet::rebind_device`]).
+    Activate { net: u32, device: u32 },
 }
 
 /// Outcome of offering one request to the fleet's bounded admission.
@@ -571,6 +575,10 @@ impl SimFleet {
         let (replica_id, is_completion) = match ev {
             SimEvent::Dispatch { replica_id } => (replica_id, false),
             SimEvent::Completion { replica_id } => (replica_id, true),
+            SimEvent::Activate { net, device } => {
+                self.activate(net, device);
+                return;
+            }
         };
         let idx = match self.replicas.iter().position(|r| r.id == replica_id) {
             Some(i) => i,
@@ -681,6 +689,86 @@ impl SimFleet {
     /// every controller invocation so "events" covers the whole run).
     pub fn note_tick(&mut self) {
         self.events += 1;
+    }
+
+    /// Take every replica on `device` out of service *drain-safely*: each is
+    /// unrouted immediately, but replicas with admitted work keep serving
+    /// until their backlog completes — no in-flight virtual request is ever
+    /// dropped, exactly the live `remove_shard` drain semantics, applied to
+    /// a whole contention group at once (a device loss or the tear-down half
+    /// of a rebind). Unlike [`SimFleet::scale_down`] this deliberately
+    /// bypasses the last-replica refusal: a dead device holds nothing.
+    /// Returns how many replicas were taken out.
+    pub fn fail_device(&mut self, device: &str) -> usize {
+        let Some(d) = self.devices.iter().position(|x| x == device) else {
+            return 0;
+        };
+        let d = d as u32;
+        let mut hit = 0usize;
+        let mut i = 0usize;
+        while i < self.replicas.len() {
+            let r = &mut self.replicas[i];
+            if r.device == Some(d) && !r.draining {
+                hit += 1;
+                if r.outstanding() == 0 {
+                    // Idle: gone at once. A stale Dispatch deadline left in
+                    // the heap is recognized and ignored by `service_event`.
+                    self.replicas.remove(i);
+                    continue;
+                }
+                r.draining = true;
+            }
+            i += 1;
+        }
+        if hit > 0 {
+            self.rebuild_routing();
+        }
+        hit
+    }
+
+    /// Reprogram `device` with `network`'s bitstream: drain-safely tear down
+    /// whatever the device currently serves ([`SimFleet::fail_device`]),
+    /// then pay `downtime_ms` of virtual outage before `replicas` fresh
+    /// replicas activate — the reconfiguration cost the controller amortized
+    /// ([`crate::fleetplan::ReconfigPolicy`]) made physical on the virtual
+    /// clock. Returns how many old replicas were drained away.
+    pub fn rebind_device(
+        &mut self,
+        device: &str,
+        network: &str,
+        replicas: usize,
+        downtime_ms: f64,
+    ) -> Result<usize> {
+        if !self.models.contains_key(network) {
+            return Err(Error::InvalidConfig(format!(
+                "no simulated service model for network `{network}`"
+            )));
+        }
+        let net = self.intern(network);
+        let dev = self.intern_device(device);
+        let drained = self.fail_device(device);
+        let at = self
+            .clock
+            .now()
+            .saturating_add((downtime_ms.max(0.0) * 1e6) as SimNs);
+        for _ in 0..replicas.max(1) {
+            self.heap.push(at, SimEvent::Activate { net, device: dev });
+        }
+        Ok(drained)
+    }
+
+    /// An `Activate` event fired: one fresh replica of `net` comes up on
+    /// `device` (overriding the model's home platform — the whole point of a
+    /// rebind is that the network now runs somewhere else).
+    fn activate(&mut self, net: u32, device: u32) {
+        let name = self.networks[net as usize].clone();
+        let (queue_cap, service_ns) = match self.models.get(&name) {
+            Some(m) => (m.queue_cap, m.service_ns),
+            None => (1, 1),
+        };
+        self.push_replica(&name, queue_cap, service_ns);
+        let r = self.replicas.last_mut().expect("push_replica appended");
+        r.device = Some(device);
     }
 
     /// Synthesize the live stats plane's [`ShardedStats`] from the virtual
@@ -803,6 +891,14 @@ impl ScaleTarget for SimFleet {
 
     fn now_ms(&self) -> f64 {
         self.clock.now_ms()
+    }
+
+    /// A controller-emitted rebind becomes a physical sequence on the
+    /// virtual clock: drain the device, wait out the reprogramming outage,
+    /// activate the fresh replicas ([`SimFleet::rebind_device`]).
+    fn rebind(&mut self, device: &str, spec: &ShardSpec, downtime_ms: f64) -> Result<()> {
+        self.rebind_device(device, &spec.network, spec.replicas.max(1), downtime_ms)
+            .map(|_| ())
     }
 }
 
@@ -1179,6 +1275,54 @@ mod tests {
         let ns = f.network_stats();
         assert_eq!(ns[0].completed, 2, "draining replica completed its backlog");
         assert!(f.stats().fleet.requests >= before);
+    }
+
+    #[test]
+    fn fail_device_unroutes_at_once_but_drops_no_in_flight_request() {
+        let models = vec![
+            SimServiceModel::new("a", 1.0, 8, 2).on_platform("dev0", 0.1),
+            SimServiceModel::new("b", 1.0, 8, 1).on_platform("dev1", 0.1),
+        ];
+        let mut f = SimFleet::new(&models).unwrap();
+        f.set_contention_alpha(0.0);
+        f.offer("a", 0).unwrap();
+        f.offer("a", 0).unwrap();
+        f.offer("b", 0).unwrap();
+        // Both `a` replicas have a batch in service when the device dies.
+        assert_eq!(f.fail_device("dev0"), 2);
+        assert_eq!(f.replica_count("a"), 0, "dead device unrouted immediately");
+        assert_eq!(f.replica_count("b"), 1, "the other device is untouched");
+        f.drain();
+        let ns = f.network_stats();
+        assert_eq!(ns[0].network, "a");
+        assert_eq!(ns[0].completed, 2, "in-flight work drained, never dropped");
+        assert_eq!(ns[1].completed, 1);
+        assert_eq!(f.fail_device("dev0"), 0, "nothing left on the device");
+        assert_eq!(f.fail_device("ghost"), 0, "unknown devices are a no-op");
+    }
+
+    #[test]
+    fn rebind_pays_the_outage_before_activating_on_the_new_device() {
+        let models = vec![
+            SimServiceModel::new("a", 1.0, 8, 1).on_platform("dev0", 0.2),
+            SimServiceModel::new("b", 1.0, 8, 1).on_platform("dev1", 0.2),
+        ];
+        let mut f = SimFleet::new(&models).unwrap();
+        f.set_contention_alpha(0.0);
+        // Reprogram dev1 (currently b's) with a's bitstream: 2 fresh
+        // replicas after a 5 ms outage.
+        assert!(f.rebind_device("dev1", "ghost", 1, 5.0).is_err());
+        assert_eq!(f.rebind_device("dev1", "a", 2, 5.0).unwrap(), 1);
+        assert_eq!(f.replica_count("b"), 0, "evicted binding is gone at once");
+        assert_eq!(f.replica_count("a"), 1, "no capacity during the outage");
+        f.run_until(4_999_999);
+        assert_eq!(f.replica_count("a"), 1);
+        f.run_until(5_000_000);
+        assert_eq!(f.replica_count("a"), 3, "outage over: fresh replicas up");
+        // The fresh replicas serve and their ordinals extend a's sequence.
+        f.offer("a", 5_000_000).unwrap();
+        f.drain();
+        assert_eq!(f.network_stats()[0].completed, 1);
     }
 
     #[test]

@@ -298,6 +298,10 @@ pub fn search(
         };
         let scale_ups =
             run.decisions.iter().filter(|d| d.action == ScaleAction::Up).count();
+        // Explicit Down filter: `len - ups` would miscount rebinds as
+        // scale-downs now that ScaleAction has a third variant.
+        let scale_downs =
+            run.decisions.iter().filter(|d| d.action == ScaleAction::Down).count();
         rows.push(PolicyScore {
             policy,
             sustained_qps: run.completed as f64 / virtual_s,
@@ -305,7 +309,7 @@ pub fn search(
             reject_rate,
             replica_seconds: replica_seconds(&run.trajectory, run.virtual_ms),
             scale_ups,
-            scale_downs: run.decisions.len() - scale_ups,
+            scale_downs,
             pareto: false,
         });
     }

@@ -24,8 +24,8 @@ use super::engine::{
 use super::workload::{Scenario, Trace};
 use crate::coordinator::ShardSpec;
 use crate::fleetplan::{
-    select_platform_or_spill, Autoscaler, FleetPlan, NetworkDemand, ScaleAction, SloPolicy,
-    SpillPlan,
+    plan_pool, select_platform_or_spill, Autoscaler, DevicePool, FleetPlan, NetworkDemand,
+    PoolPlan, ReconfigPolicy, ScaleAction, SloPolicy, SpillPlan,
 };
 use crate::models::ModelRegistry;
 use crate::platform::Platform;
@@ -274,6 +274,20 @@ pub(crate) fn plan_rows(spill: &SpillPlan) -> Vec<(&FleetPlan, String)> {
     out
 }
 
+/// `(plan, hosting device name)` rows across a pool plan. Device names are
+/// the engine's contention groups, so a mixed pool gets per-device
+/// contention for free; devices the planner left empty are skipped. For the
+/// 2-device degenerate pool these rows are exactly [`plan_rows`]'s
+/// ([`DevicePool::pair`] names devices after their platforms).
+pub(crate) fn pool_rows(pool_plan: &PoolPlan) -> Vec<(&FleetPlan, String)> {
+    pool_plan
+        .devices
+        .iter()
+        .filter(|d| !d.plan.networks.is_empty())
+        .map(|d| (&d.plan, d.device.clone()))
+        .collect()
+}
+
 /// Weight fraction of each network in the mix. Non-positive weights are
 /// substituted with 1.0 — the SAME rule [`Scenario::arrivals`] applies when
 /// generating traffic — so capacity math and workload generation always
@@ -296,7 +310,7 @@ fn mix_fraction(mix: &[(String, f64)], network: &str) -> f64 {
 /// batch) and ignores contention, so it upper-bounds what the simulation
 /// can actually sustain — exactly what the bisection needs for its ceiling.
 pub(crate) fn capacity_qps<F>(
-    spill: &SpillPlan,
+    rows: &[(&FleetPlan, String)],
     mix: &[(String, f64)],
     opts: &WhatIfOptions,
     replicas: F,
@@ -306,7 +320,7 @@ where
 {
     let b = opts.max_batch.max(1) as f64;
     let mut qps = f64::INFINITY;
-    for (plan, _) in plan_rows(spill) {
+    for (plan, _) in rows {
         for row in &plan.networks {
             let f = mix_fraction(mix, &row.network);
             if f <= 0.0 {
@@ -330,7 +344,7 @@ where
 /// rate, batch curve and device share all from the plan's fitted-model
 /// predictions; batching and contention knobs from the options.
 pub(crate) fn service_models<F>(
-    spill: &SpillPlan,
+    rows: &[(&FleetPlan, String)],
     opts: &WhatIfOptions,
     replicas: F,
 ) -> Vec<SimServiceModel>
@@ -338,7 +352,7 @@ where
     F: Fn(&crate::fleetplan::NetworkPlan) -> u64,
 {
     let mut models = Vec::new();
-    for (plan, host) in plan_rows(spill) {
+    for (plan, host) in rows {
         for row in &plan.networks {
             models.push(
                 SimServiceModel::new(
@@ -349,7 +363,7 @@ where
                 )
                 .with_batching(opts.max_batch, row.fill_ms)
                 .with_window_ms(opts.coalesce_window_ms)
-                .on_platform(&host, row.util_frac),
+                .on_platform(host, row.util_frac),
             );
         }
     }
@@ -358,38 +372,45 @@ where
 
 /// A contention-configured [`SimFleet`] at a chosen replica count per row.
 pub(crate) fn sim_fleet<F>(
-    spill: &SpillPlan,
+    rows: &[(&FleetPlan, String)],
     opts: &WhatIfOptions,
     replicas: F,
 ) -> Result<SimFleet>
 where
     F: Fn(&crate::fleetplan::NetworkPlan) -> u64,
 {
-    let mut fleet = SimFleet::new(&service_models(spill, opts, replicas))?;
+    let mut fleet = SimFleet::new(&service_models(rows, opts, replicas))?;
     fleet.set_contention_alpha(opts.contention_alpha);
     Ok(fleet)
 }
 
 /// One production-configured [`Autoscaler`] per device sub-plan (each
-/// budget-checks its own platform; `decide` ignores the other device's
-/// networks), judging with `policy`.
+/// budget-checks its own platform; `decide` ignores the other devices'
+/// networks), judging with `policy`. With a `pool` attached, every scaler
+/// also gets the pool and the default [`ReconfigPolicy`] — an exhausted
+/// device may then emit amortized rebinds onto idle pool devices, rehearsed
+/// on the virtual clock through `SimFleet::rebind_device`.
 pub(crate) fn scalers_for(
-    spill: &SpillPlan,
+    rows: &[(&FleetPlan, String)],
+    pool: Option<&DevicePool>,
     opts: &WhatIfOptions,
     policy: &SloPolicy,
 ) -> Vec<Autoscaler> {
-    plan_rows(spill)
-        .into_iter()
+    rows.iter()
         .map(|(plan, _)| {
             let templates: Vec<ShardSpec> = plan
                 .networks
                 .iter()
                 .map(|n| ShardSpec::golden(&n.network).with_queue_cap(opts.queue_cap))
                 .collect();
-            if opts.latency_slo {
-                Autoscaler::with_latency_slo(plan.clone(), policy.clone(), templates)
+            let scaler = if opts.latency_slo {
+                Autoscaler::with_latency_slo((*plan).clone(), policy.clone(), templates)
             } else {
-                Autoscaler::new(plan.clone(), policy.clone(), templates)
+                Autoscaler::new((*plan).clone(), policy.clone(), templates)
+            };
+            match pool {
+                Some(p) => scaler.with_pool(p.clone(), ReconfigPolicy::default()),
+                None => scaler,
             }
         })
         .collect()
@@ -407,12 +428,12 @@ pub(crate) fn scalers_for(
 /// the offered window. The 2% lag margin leaves room for ordinary queueing
 /// fluctuation at capacity while rejecting any rate meaningfully above it.
 fn max_sustainable_qps(
-    spill: &SpillPlan,
+    rows: &[(&FleetPlan, String)],
     mix: &[(String, f64)],
     seed: u64,
     opts: &WhatIfOptions,
 ) -> Result<f64> {
-    let ceiling = capacity_qps(spill, mix, opts, |row| row.replicas);
+    let ceiling = capacity_qps(rows, mix, opts, |row| row.replicas);
     if ceiling <= 0.0 {
         return Ok(0.0);
     }
@@ -431,7 +452,7 @@ fn max_sustainable_qps(
         // Lag margin: a full coalesced batch is the largest indivisible
         // chunk of virtual service time, so the drain tail of a healthy
         // run is a few of those, not a few single-request times.
-        let models = service_models(spill, opts, |row| row.replicas);
+        let models = service_models(rows, opts, |row| row.replicas);
         let max_service_ms = models
             .iter()
             .map(|m| {
@@ -474,9 +495,22 @@ pub(crate) fn run_controlled(
     policy: &SloPolicy,
     opts: &WhatIfOptions,
 ) -> Result<(super::engine::SimRun, std::collections::BTreeMap<String, usize>)> {
+    run_controlled_rows(&plan_rows(spill), None, trace, policy, opts)
+}
+
+/// N-device generalization of [`run_controlled`]: one `(plan, host)` row per
+/// device, plus the optional [`DevicePool`] that arms the controllers'
+/// reconfiguration-aware rebind path.
+pub(crate) fn run_controlled_rows(
+    rows: &[(&FleetPlan, String)],
+    pool: Option<&DevicePool>,
+    trace: &Trace,
+    policy: &SloPolicy,
+    opts: &WhatIfOptions,
+) -> Result<(super::engine::SimRun, std::collections::BTreeMap<String, usize>)> {
     // Start at the floors; the controller earns every further replica.
-    let mut fleet = sim_fleet(spill, opts, |row| row.min_replicas)?;
-    let mut scalers = scalers_for(spill, opts, policy);
+    let mut fleet = sim_fleet(rows, opts, |row| row.min_replicas)?;
+    let mut scalers = scalers_for(rows, pool, opts, policy);
     let run = simulate_trace(
         &mut fleet,
         trace,
@@ -490,10 +524,16 @@ pub(crate) fn run_controlled(
     Ok((run, final_counts))
 }
 
-/// Shared back half of [`explore`] / [`explore_replay`]: run the main trace
-/// with the production controller in the loop and assemble the report.
+/// Shared back half of [`explore`] / [`explore_replay`] / [`explore_pool`]:
+/// run the main trace with the production controller in the loop and
+/// assemble the report. `platform` / `spill_platform` label the report (for
+/// pool runs: the first used device, no spill).
+#[allow(clippy::too_many_arguments)]
 fn explore_with_trace(
-    spill: &SpillPlan,
+    rows: &[(&FleetPlan, String)],
+    pool: Option<&DevicePool>,
+    platform: String,
+    spill_platform: Option<String>,
     scenario_name: &str,
     seed: u64,
     qps: f64,
@@ -501,10 +541,10 @@ fn explore_with_trace(
     trace: &Trace,
     opts: &WhatIfOptions,
 ) -> Result<CapacityReport> {
-    let (run, final_counts) = run_controlled(spill, trace, &opts.policy, opts)?;
+    let (run, final_counts) = run_controlled_rows(rows, pool, trace, &opts.policy, opts)?;
 
     let mut networks = Vec::new();
-    for (plan, host) in plan_rows(spill) {
+    for (plan, host) in rows {
         for row in &plan.networks {
             let sim = run.networks.iter().find(|n| n.network == row.network);
             let peak = run
@@ -535,16 +575,18 @@ fn explore_with_trace(
 
     let scale_ups =
         run.decisions.iter().filter(|d| d.action == ScaleAction::Up).count();
-    let scale_downs = run.decisions.len() - scale_ups;
+    // Explicit Down filter: rebinds belong to neither counter.
+    let scale_downs =
+        run.decisions.iter().filter(|d| d.action == ScaleAction::Down).count();
     let decisions: Vec<String> =
         run.decisions.iter().map(|d| format!("t=+{:.3}ms {}", d.at_ms, d)).collect();
 
-    let max_qps = max_sustainable_qps(spill, mix, seed, opts)?;
+    let max_qps = max_sustainable_qps(rows, mix, seed, opts)?;
     Ok(CapacityReport {
         scenario: scenario_name.to_string(),
         seed,
-        platform: spill.primary.platform.name.to_string(),
-        spill_platform: spill.spill.as_ref().map(|s| s.platform.name.to_string()),
+        platform,
+        spill_platform,
         cap: opts.cap,
         qps,
         events: run.events,
@@ -576,7 +618,69 @@ pub fn explore(
     let spill = select_platform_or_spill(demands, registry, platforms, opts.cap)?;
     let sc = autosize_scenario(scenario, demands, &spill, opts)?;
     let trace = sc.arrivals();
-    explore_with_trace(&spill, sc.shape.name(), sc.seed, sc.qps, &sc.mix, &trace, opts)
+    explore_with_trace(
+        &plan_rows(&spill),
+        None,
+        spill.primary.platform.name.to_string(),
+        spill.spill.as_ref().map(|s| s.platform.name.to_string()),
+        sc.shape.name(),
+        sc.seed,
+        sc.qps,
+        &sc.mix,
+        &trace,
+        opts,
+    )
+}
+
+/// Explore a heterogeneous [`DevicePool`]: pack the fleet across the pool
+/// with [`plan_pool`], then run the same controller-in-the-loop simulation
+/// against the per-device contention groups. Devices the plan left empty
+/// stay out of the simulation but remain available to the controller as
+/// rebind targets — each unused device keeps its input binding, each used
+/// device is bound to its first planned network so the controller's
+/// thrash guard sees the live bitstreams.
+///
+/// The report's `platform` is the first *used* device's name;
+/// `spill_platform` is `None` (a pool has no special spill device).
+pub fn explore_pool(
+    demands: &[NetworkDemand],
+    registry: &ModelRegistry,
+    pool: &DevicePool,
+    scenario: &Scenario,
+    opts: &WhatIfOptions,
+) -> Result<CapacityReport> {
+    let pool_plan = plan_pool(demands, registry, pool)?;
+    let mut bound = pool.clone();
+    for dev in bound.devices.iter_mut() {
+        if dev.binding.is_none() {
+            if let Some(dp) = pool_plan.devices.iter().find(|dp| dp.device == dev.name) {
+                dev.binding = dp.plan.networks.first().map(|row| row.network.clone());
+            }
+        }
+    }
+    let rows = pool_rows(&pool_plan);
+    let platform = match rows.first() {
+        Some((_, host)) => host.clone(),
+        None => {
+            return Err(Error::InvalidConfig(
+                "the pool plan placed no replicas on any device".into(),
+            ))
+        }
+    };
+    let sc = autosize_scenario_rows(scenario, demands, &rows, opts)?;
+    let trace = sc.arrivals();
+    explore_with_trace(
+        &rows,
+        Some(&bound),
+        platform,
+        None,
+        sc.shape.name(),
+        sc.seed,
+        sc.qps,
+        &sc.mix,
+        &trace,
+        opts,
+    )
 }
 
 /// Scenario auto-completion shared by [`explore`] and
@@ -590,6 +694,16 @@ pub(crate) fn autosize_scenario(
     spill: &SpillPlan,
     opts: &WhatIfOptions,
 ) -> Result<Scenario> {
+    autosize_scenario_rows(scenario, demands, &plan_rows(spill), opts)
+}
+
+/// Row-slice core of [`autosize_scenario`], shared with [`explore_pool`].
+pub(crate) fn autosize_scenario_rows(
+    scenario: &Scenario,
+    demands: &[NetworkDemand],
+    rows: &[(&FleetPlan, String)],
+    opts: &WhatIfOptions,
+) -> Result<Scenario> {
     let mut sc = scenario.clone();
     if sc.mix.is_empty() {
         sc.mix = demands
@@ -598,7 +712,7 @@ pub(crate) fn autosize_scenario(
             .collect();
     }
     if sc.qps <= 0.0 {
-        let floors = capacity_qps(spill, &sc.mix, opts, |row| row.min_replicas);
+        let floors = capacity_qps(rows, &sc.mix, opts, |row| row.min_replicas);
         if floors <= 0.0 {
             return Err(Error::InvalidConfig(
                 "cannot auto-size QPS: zero floor capacity (check the traffic mix)".into(),
@@ -641,5 +755,16 @@ pub fn explore_replay(
     }
     mix.sort_by(|a, b| a.0.cmp(&b.0));
     let qps = trace.len() as f64 / (trace.duration_ms() / 1e3).max(1e-9);
-    explore_with_trace(&spill, "replay", seed, qps, &mix, trace, opts)
+    explore_with_trace(
+        &plan_rows(&spill),
+        None,
+        spill.primary.platform.name.to_string(),
+        spill.spill.as_ref().map(|s| s.platform.name.to_string()),
+        "replay",
+        seed,
+        qps,
+        &mix,
+        trace,
+        opts,
+    )
 }

@@ -1,0 +1,230 @@
+//! Heterogeneous-pool integration: the N-device fleet plane end to end.
+//!
+//! * **Planning at scale** — `plan_pool` packs the VGG-16-scale zoo spec
+//!   plus two small networks across a mixed KV260 + ZCU104 + ZCU111 pool:
+//!   every network lands somewhere, every used device respects its own
+//!   threshold budget, and the JSON plan is deterministic.
+//! * **Device loss mid-trace** — `SimFleet::fail_device` tears a whole
+//!   contention group out of routing while every admitted request still
+//!   completes (the live drain semantics on the virtual clock), and
+//!   `rebind_device` replans the work onto a spare after the outage.
+//! * **Amortized rebind** — the same `Autoscaler::step_target` path that
+//!   drives live fleets emits a justified `ScaleAction::Rebind` when the
+//!   primary platform is exhausted and the reconfiguration outage pays
+//!   back, then refuses to thrash on the next round.
+
+use convkit::cnn::zoo;
+use convkit::coordinator::dse::DseEngine;
+use convkit::coordinator::jobs::JobPool;
+use convkit::coordinator::ShardSpec;
+use convkit::fleetplan::{
+    plan_pool, Autoscaler, DevicePool, FleetPlan, NetworkDemand, NetworkPlan, PoolDevice,
+    ReconfigPolicy, ScaleAction, SloPolicy,
+};
+use convkit::models::{ModelRegistry, SelectOptions};
+use convkit::platform::Platform;
+use convkit::simulate::{Admission, SimFleet, SimServiceModel};
+use convkit::synth::ResourceVector;
+use convkit::synthdata::SweepOptions;
+
+fn registry() -> ModelRegistry {
+    let eng = DseEngine {
+        sweep: SweepOptions { min_bits: 6, max_bits: 12, ..Default::default() },
+        select: SelectOptions::default(),
+        pool: JobPool::with_workers(2),
+        cache: None,
+    };
+    eng.run().unwrap().registry
+}
+
+#[test]
+fn a_mixed_three_device_pool_plans_the_vgg16_scale_spec() {
+    let reg = registry();
+    let demands = vec![
+        NetworkDemand::new(zoo::vgg16_q8()),
+        NetworkDemand::new(zoo::lenet_ish()),
+        NetworkDemand::new(zoo::tiny()),
+    ];
+    let pool = DevicePool::parse("kv260,zcu104,zcu111", 0.8).unwrap();
+    let plan = plan_pool(&demands, &reg, &pool).unwrap();
+
+    // Every demanded network is placed somewhere in the pool.
+    for name in ["vgg16_q8", "lenet_q8", "tiny_q8"] {
+        assert!(plan.replicas_for(name) >= 1, "{name} was not placed on any device");
+    }
+
+    // Each used device's sub-fleet respects that device's own threshold
+    // budget — the invariant the per-device max-min fill solves under.
+    assert_eq!(plan.devices.len(), pool.devices.len());
+    let mut used = 0;
+    for (dp, dev) in plan.devices.iter().zip(&pool.devices) {
+        assert_eq!(dp.device, dev.name);
+        if dp.plan.networks.is_empty() {
+            continue;
+        }
+        used += 1;
+        assert!(
+            dp.plan.total.fits_within(&dev.budget()),
+            "{}: solved total {:?} exceeds the device budget",
+            dp.device,
+            dp.plan.total,
+        );
+    }
+    assert!(used >= 1, "the pool plan used no device at all");
+
+    // Same inputs, same bytes: the plan JSON is the CI-archived artifact.
+    let json = plan.to_json();
+    assert_eq!(json, plan_pool(&demands, &reg, &pool).unwrap().to_json());
+    assert!(json.contains("\"pool\""));
+    assert!(json.contains("\"vgg16_q8\""));
+
+    // The operator rendering names every device, used or not.
+    let table = convkit::report::pool_table(&plan);
+    for dp in &plan.devices {
+        assert!(table.contains(&dp.device), "pool table misses {}", dp.device);
+    }
+}
+
+#[test]
+fn killing_a_device_mid_trace_drops_nothing_and_the_pool_replans() {
+    let model = SimServiceModel::new("svc", 5.0, 2, 2).on_platform("ZCU104", 0.4);
+    let mut fleet = SimFleet::new(&[model]).unwrap();
+
+    // Fill both replicas to their cap at t=0: 4 admitted, in flight/queued.
+    let mut admitted = 0u64;
+    for _ in 0..4 {
+        if matches!(fleet.offer("svc", 0).unwrap(), Admission::Admitted { .. }) {
+            admitted += 1;
+        }
+    }
+    assert_eq!(admitted, 4);
+
+    // The device dies mid-trace: both replicas leave routing immediately,
+    // but their admitted backlog keeps draining — nothing is dropped.
+    fleet.run_until(1_000_000); // 1 ms: batches are in service
+    assert_eq!(fleet.fail_device("ZCU104"), 2);
+    assert_eq!(fleet.replica_count("svc"), 0);
+
+    // The pool replans: a spare device is reprogrammed with the same
+    // bitstream and pays a 10 ms outage before its replicas activate.
+    assert_eq!(fleet.rebind_device("ZCU111", "svc", 2, 10.0).unwrap(), 0);
+
+    // During the outage there is nothing routable: offers bounce (bounded
+    // admission), they do not error and they do not strand anything.
+    assert!(matches!(fleet.offer("svc", 5_000_000).unwrap(), Admission::Rejected));
+
+    // Past the outage the replacement replicas serve new load.
+    fleet.run_until(30_000_000);
+    assert_eq!(fleet.replica_count("svc"), 2);
+    for _ in 0..4 {
+        if matches!(fleet.offer("svc", 30_000_000).unwrap(), Admission::Admitted { .. }) {
+            admitted += 1;
+        }
+    }
+    assert_eq!(admitted, 8);
+    fleet.drain();
+
+    let stats = fleet.network_stats();
+    assert_eq!(stats.len(), 1);
+    let s = &stats[0];
+    assert_eq!(s.offered, 9);
+    assert_eq!(s.rejected, 1);
+    assert_eq!(s.admitted, 8);
+    assert_eq!(
+        s.completed, s.admitted,
+        "an admitted request was dropped across the device loss"
+    );
+}
+
+/// Hand-built plan: one network priced at 700 DSP per replica on a ZCU104,
+/// so a second replica cannot fit under the 80% cap (2×700 > 1382) and the
+/// only way out is a pool rebind.
+fn exhausted_plan() -> FleetPlan {
+    let platform = Platform::zcu104();
+    let unit = ResourceVector::new(100, 0, 200, 0, 700);
+    FleetPlan {
+        platform: platform.clone(),
+        cap: 0.8,
+        networks: vec![NetworkPlan {
+            network: "hot".into(),
+            unit,
+            predicted_ms: 1.0,
+            fill_ms: 0.0,
+            util_frac: 700.0 / 1382.0,
+            replicas: 1,
+            min_replicas: 1,
+            max_replicas: 0,
+            weight: 1.0,
+        }],
+        total: unit,
+        utilization: platform.utilization(&unit),
+    }
+}
+
+#[test]
+fn an_exhausted_platform_rebinds_a_spare_device_once_the_outage_amortizes() {
+    // Virtual fleet: one replica on the primary, overloaded 60% (4 of 10
+    // offered requests admitted at its cap of 4).
+    let model = SimServiceModel::new("hot", 1.0, 4, 1).on_platform("ZCU104", 0.5);
+    let mut fleet = SimFleet::new(&[model]).unwrap();
+    for _ in 0..10 {
+        let _ = fleet.offer("hot", 0).unwrap();
+    }
+    // Let the admitted backlog complete so the window holds both sides of
+    // the overload ratio (completions AND rejections).
+    fleet.run_until(10_000_000);
+
+    // Controller over the exhausted plan, pool-attached: the ZCU104 is the
+    // primary (never a rebind target), the ZCU111 is an idle spare. A 50 ms
+    // outage against a 4-replica gain amortizes in well under the limit.
+    let pool = DevicePool::new(vec![
+        PoolDevice::new(Platform::zcu104(), 0.8),
+        PoolDevice::new(Platform::zcu111(), 0.8),
+    ])
+    .unwrap();
+    let reconfig = ReconfigPolicy { downtime_s: 0.05, payback_limit_s: 20.0 };
+    let mut scaler = Autoscaler::new(
+        exhausted_plan(),
+        SloPolicy { window: 1, ..SloPolicy::default() },
+        vec![ShardSpec::golden("hot").with_queue_cap(4)],
+    )
+    .with_pool(pool, reconfig);
+
+    let decisions = scaler.step_target(&mut fleet).unwrap();
+    assert_eq!(decisions.len(), 1);
+    let d = &decisions[0];
+    assert_eq!(d.action, ScaleAction::Rebind);
+    assert_eq!(d.device.as_deref(), Some("ZCU111"));
+    assert_eq!((d.from_replicas, d.to_replicas), (1, 5));
+    assert!((d.at_ms - 10.0).abs() < 1e-9, "stamped at virtual now, got {}", d.at_ms);
+    assert!(d.reason.contains("amortizing"), "unjustified rebind: {}", d.reason);
+    assert!(d.reason.contains("ZCU111"), "reason names no device: {}", d.reason);
+
+    // The rebind is physical on the virtual clock: 4 fresh replicas come up
+    // only after the 50 ms reprogramming outage.
+    fleet.run_until(30_000_000);
+    assert_eq!(fleet.replica_count("hot"), 1, "replicas appeared during the outage");
+    fleet.run_until(70_000_000);
+    assert_eq!(fleet.replica_count("hot"), 5);
+
+    // A bigger burst overloads even the widened fleet (capacity 5×4 = 20
+    // outstanding), so the next control round sees Overloaded again…
+    let mut admitted = 0;
+    for _ in 0..30 {
+        if matches!(fleet.offer("hot", 70_000_000).unwrap(), Admission::Admitted { .. }) {
+            admitted += 1;
+        }
+    }
+    assert_eq!(admitted, 20);
+    fleet.run_until(150_000_000);
+
+    // …but the primary is still exhausted and the spare already holds this
+    // bitstream: the thrash guard suppresses a second rebind — no decision.
+    assert!(scaler.step_target(&mut fleet).unwrap().is_empty());
+
+    fleet.drain();
+    let s = &fleet.network_stats()[0];
+    assert_eq!(s.offered, 40);
+    assert_eq!(s.rejected, 16);
+    assert_eq!(s.completed, s.admitted, "a rebind dropped admitted work");
+}

@@ -1,0 +1,95 @@
+//! Registry-discipline lint (ROADMAP carried-forward item): dispatch over
+//! conv block kinds belongs to the `blocks/` registry — `blocks/conv2act.rs`
+//! is the worked example of routing through it instead of matching. Any
+//! other layer that `match`es on `BlockKind` variants re-hardcodes knowledge
+//! the registry owns and silently falls out of date when a block is added,
+//! so this test greps the source tree and fails on the first match pattern
+//! found outside `blocks/`. Value uses (`BlockKind::Conv2` as an argument,
+//! `== BlockKind::Conv3` comparisons, `BlockKind::ALL`) stay legal.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// True when the text directly after a `BlockKind::Variant` path continues,
+/// past whitespace, with a match-pattern separator: a match arm (`=>`) or an
+/// or-pattern (`|`, but not the logical `||` of a value comparison).
+fn is_match_pattern(rest: &str) -> bool {
+    let rest = rest.trim_start();
+    rest.starts_with("=>") || (rest.starts_with('|') && !rest.starts_with("||"))
+}
+
+/// 1-based line numbers of every `BlockKind::<Variant>` used as a match
+/// pattern in `src`.
+fn scan(src: &str) -> Vec<usize> {
+    let needle = "BlockKind::";
+    let mut hits = Vec::new();
+    let mut start = 0;
+    while let Some(pos) = src[start..].find(needle) {
+        let at = start + pos;
+        let after = at + needle.len();
+        let ident_end = src[after..]
+            .find(|c: char| !(c.is_ascii_alphanumeric() || c == '_'))
+            .map(|o| after + o)
+            .unwrap_or(src.len());
+        if is_match_pattern(&src[ident_end..]) {
+            hits.push(src[..at].bytes().filter(|&b| b == b'\n').count() + 1);
+        }
+        start = after;
+    }
+    hits
+}
+
+/// Every `.rs` file under `dir`, skipping any directory named `blocks`.
+fn rust_sources(dir: &Path, out: &mut Vec<PathBuf>) {
+    let entries = fs::read_dir(dir).unwrap_or_else(|e| panic!("read {dir:?}: {e}"));
+    for entry in entries {
+        let p = entry.expect("dir entry").path();
+        if p.is_dir() {
+            if p.file_name().map(|n| n == "blocks").unwrap_or(false) {
+                continue;
+            }
+            rust_sources(&p, out);
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+}
+
+#[test]
+fn only_the_blocks_registry_matches_on_block_kinds() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust").join("src");
+    let mut files = Vec::new();
+    rust_sources(&root, &mut files);
+    files.sort();
+    assert!(
+        files.len() > 10,
+        "the lint walked only {} files — wrong root?",
+        files.len()
+    );
+    let mut offenders = Vec::new();
+    for f in &files {
+        let src = fs::read_to_string(f).unwrap_or_else(|e| panic!("read {f:?}: {e}"));
+        for line in scan(&src) {
+            offenders.push(format!("{}:{line}", f.display()));
+        }
+    }
+    assert!(
+        offenders.is_empty(),
+        "BlockKind match patterns outside blocks/ — route through the \
+         registry (see blocks/conv2act.rs) instead:\n  {}",
+        offenders.join("\n  ")
+    );
+}
+
+#[test]
+fn the_matcher_recognizes_patterns_and_ignores_value_uses() {
+    // Match arms and or-patterns are flagged…
+    assert_eq!(scan("match k { BlockKind::Conv2 => 1, _ => 0 }"), vec![1]);
+    assert_eq!(scan("BlockKind::Conv2 | BlockKind::Conv3 => 2,").len(), 2);
+    assert_eq!(scan("BlockKind::Conv1\n    => 3,"), vec![1]);
+    // …value uses are not.
+    assert!(scan("k == BlockKind::Conv2 || other").is_empty());
+    assert!(scan("BlockKind::ALL.len()").is_empty());
+    assert!(scan("GoldenCnn::new(net, BlockKind::Conv2)?").is_empty());
+    assert!(scan("let b = BlockKind::Conv4;").is_empty());
+}

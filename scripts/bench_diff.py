@@ -33,10 +33,18 @@ to append the Pareto-front movement — front size, best sustained QPS and
 best p95 across the front. Byte-deterministic for a fixed seed, same as
 the capacity report.
 
+And for the heterogeneous pool plan (``convkit plan --out``, top-level key
+``pool``): pass ``--pool CURRENT_POOL.json PREVIOUS_POOL.json`` to append a
+per-device table of replica counts, bindings and worst-column utilization,
+plus per-network replica totals across the pool. The plan is deterministic
+for a fixed registry and pool spec, so any delta is a real planner or
+model change — advisory, never gated.
+
 Usage: bench_diff.py CURRENT.json PREVIOUS.json [--regress-pct 25]
                      [--fail-on SECTION]... [--fail-pct 20]
                      [--simulate CURRENT_SIM.json PREVIOUS_SIM.json]
                      [--policysearch CURRENT_POL.json PREVIOUS_POL.json]
+                     [--pool CURRENT_POOL.json PREVIOUS_POOL.json]
 """
 
 from __future__ import annotations
@@ -271,6 +279,86 @@ def diff_policysearch(current: dict, previous: dict) -> str:
     return "\n".join(lines) + "\n"
 
 
+def load_pool(path: str) -> dict:
+    """The `pool` object of a pool plan (empty when unreadable)."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"note: could not read {path}: {e}", file=sys.stderr)
+        return {}
+    return doc.get("pool", {})
+
+
+def worst_util(device: dict) -> float:
+    return max([float(v) for v in device.get("utilization", {}).values()] or [0.0])
+
+
+def network_totals(pool: dict) -> dict:
+    """{network: replicas summed across every device of the pool}."""
+    totals: dict = {}
+    for d in pool.get("devices", []):
+        for n in d.get("networks", []):
+            totals[n["network"]] = totals.get(n["network"], 0) + int(n["replicas"])
+    return totals
+
+
+def diff_pool(current: dict, previous: dict) -> str:
+    lines = ["## Heterogeneous pool-plan diff (`convkit plan`)", ""]
+    if not current:
+        lines.append("_No current pool plan._")
+        return "\n".join(lines) + "\n"
+    devices = current.get("devices", [])
+    used = sum(1 for d in devices if d.get("networks"))
+    lines.append(
+        f"{len(devices)} device(s), {used} used, "
+        f"{current.get('total_replicas', 0)} replica(s) in total."
+    )
+    lines.append("")
+    if not previous:
+        lines.append("_No previous pool-plan artifact — nothing to diff._")
+        return "\n".join(lines) + "\n"
+    prev_devs = {d["device"]: d for d in previous.get("devices", [])}
+    cur_names = set()
+    lines.append("| device | previous | current | binding |")
+    lines.append("|---|---:|---:|---|")
+    for d in devices:
+        name = d["device"]
+        cur_names.add(name)
+        cur_cell = f"{d.get('total_replicas', 0)} repl, {worst_util(d):.1f}%"
+        binding = d.get("binding") or "—"
+        p = prev_devs.get(name)
+        if p is None:
+            lines.append(f"| {name} | _new_ | {cur_cell} | {binding} |")
+            continue
+        prev_cell = f"{p.get('total_replicas', 0)} repl, {worst_util(p):.1f}%"
+        prev_binding = p.get("binding") or "—"
+        if prev_binding != binding:
+            binding = f"{prev_binding} → {binding}"
+        lines.append(f"| {name} | {prev_cell} | {cur_cell} | {binding} |")
+    for name in sorted(set(prev_devs) - cur_names):
+        p = prev_devs[name]
+        lines.append(
+            f"| {name} | {p.get('total_replicas', 0)} repl, "
+            f"{worst_util(p):.1f}% | _removed_ | |"
+        )
+    lines.append("")
+    cur_nets = network_totals(current)
+    prev_nets = network_totals(previous)
+    lines.append("| network | previous replicas | current | delta |")
+    lines.append("|---|---:|---:|---:|")
+    for name in sorted(set(cur_nets) | set(prev_nets)):
+        c, p = cur_nets.get(name), prev_nets.get(name)
+        if c is None:
+            lines.append(f"| {name} | {p} | _removed_ | |")
+        elif p is None:
+            lines.append(f"| {name} | _new_ | {c} | |")
+        else:
+            lines.append(f"| {name} | {p} | {c} | {c - p:+d} |")
+    lines.append("")
+    return "\n".join(lines) + "\n"
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("current")
@@ -286,6 +374,8 @@ def main() -> int:
                     help="also diff two `convkit simulate --out` reports")
     ap.add_argument("--policysearch", nargs=2, metavar=("CUR_POL", "PREV_POL"),
                     help="also diff two `convkit policysearch --out` reports")
+    ap.add_argument("--pool", nargs=2, metavar=("CUR_POOL", "PREV_POOL"),
+                    help="also diff two `convkit plan --out` pool plans")
     args = ap.parse_args()
     current = load_sections(args.current)
     previous = load_sections(args.previous)
@@ -298,6 +388,9 @@ def main() -> int:
         print(diff_policysearch(
             load_policysearch(cur_pol), load_policysearch(prev_pol)
         ))
+    if args.pool:
+        cur_pool, prev_pool = args.pool
+        print(diff_pool(load_pool(cur_pool), load_pool(prev_pool)))
     if args.fail_on:
         failures = gate(current, previous, args.fail_on, args.fail_pct)
         if failures:
