@@ -14,13 +14,17 @@
 //! Results are merged into the shared
 //! `BENCH_runtime.json` baseline (section `runtime_serve`) so future PRs can
 //! diff fleet throughput the same way they diff the single-service numbers
-//! from `runtime_conv`.
+//! from `runtime_conv`. A second section, `obs_span_overhead`, pits a bare
+//! single-replica fleet against an identical one with the telemetry plane's
+//! span recorder attached — the gated proof that observing the hot path
+//! costs almost nothing.
 
 use convkit::blocks::BlockKind;
 use convkit::cnn::zoo;
 use convkit::coordinator::{drive_golden_clients, DseEngine, JobPool, ShardSpec, ShardedService};
 use convkit::fleetplan::{plan_pool, DevicePool, NetworkDemand};
 use convkit::models::SelectOptions;
+use convkit::obs::Telemetry;
 use convkit::simulate::{
     simulate_trace, Scenario, ScenarioShape, SimFleet, SimRunOptions, SimServiceModel,
 };
@@ -286,10 +290,55 @@ fn main() {
     );
     fleet.shutdown();
 
+    // --- obs_span_overhead: the telemetry plane's hot-path cost -----------
+    // Two identical single-replica golden fleets, one with the span
+    // recorder + stage histograms attached (`start_observed`), driven by
+    // the same single client. The recorder is a per-shard lock-free bounded
+    // ring written with Relaxed stores, so the observed path must stay
+    // within a few percent of the bare one — CI archives this section and
+    // gates regressions via `bench_diff.py --fail-on obs_span_overhead`.
+    let mut ob = Bench::quick();
+    let bare = ShardedService::start(&[ShardSpec::golden("tiny_q8").with_batch_size(8)])
+        .expect("bare fleet start");
+    let mut k = 0usize;
+    ob.run("span_recorder_off", || {
+        k += 1;
+        bare.infer("tiny_q8", Arc::clone(&tiny_imgs[k % tiny_imgs.len()])).unwrap().len()
+    });
+    bare.shutdown();
+
+    let telemetry = Arc::new(Telemetry::new());
+    let observed = ShardedService::start_observed(
+        &[ShardSpec::golden("tiny_q8").with_batch_size(8)],
+        Arc::clone(&telemetry),
+    )
+    .expect("observed fleet start");
+    let mut k = 0usize;
+    ob.run("span_recorder_on", || {
+        k += 1;
+        observed.infer("tiny_q8", Arc::clone(&tiny_imgs[k % tiny_imgs.len()])).unwrap().len()
+    });
+    observed.shutdown();
+    let off_on = (ob.stats("span_recorder_off"), ob.stats("span_recorder_on"));
+    if let (Some(off), Some(on)) = off_on {
+        println!(
+            "-> span recorder: off {:.1} µs/req, on {:.1} µs/req ({:+.2}% — {} span(s), {} dropped)",
+            off.mean_ns / 1e3,
+            on.mean_ns / 1e3,
+            100.0 * (on.mean_ns - off.mean_ns) / off.mean_ns,
+            telemetry.spans_recorded(),
+            telemetry.spans_dropped()
+        );
+    }
+
     // --- perf-trajectory baseline (multi-section: shared with runtime_conv) ---
     let path = baseline_path();
     match b.write_json_sections("runtime_serve", &path) {
         Ok(()) => println!("baseline written to {}", path.display()),
         Err(e) => eprintln!("could not write baseline {}: {e}", path.display()),
+    }
+    match ob.write_json_sections("obs_span_overhead", &path) {
+        Ok(()) => println!("obs overhead section written to {}", path.display()),
+        Err(e) => eprintln!("could not write obs section {}: {e}", path.display()),
     }
 }

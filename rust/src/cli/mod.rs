@@ -15,12 +15,14 @@ use convkit::fleetplan::{
     ReconfigPolicy, SloPolicy,
 };
 use convkit::models::SelectOptions;
+use convkit::obs::Telemetry;
 use convkit::platform::Platform;
 use convkit::report;
 use convkit::runtime::{artifacts_dir, Runtime};
 use convkit::simulate::{
-    explore, explore_pool, explore_replay, policysearch, PolicyGrid, Scenario, ScenarioShape,
-    Trace, TraceRecorder, WhatIfOptions, DEFAULT_CONTENTION_ALPHA,
+    explore, explore_pool, explore_replay, policysearch, Admission, PolicyGrid, Scenario,
+    ScenarioShape, SimFleet, SimServiceModel, Trace, TraceRecorder, WhatIfOptions,
+    DEFAULT_CONTENTION_ALPHA,
 };
 use convkit::synth::MapOptions;
 use convkit::synthdata::SweepOptions;
@@ -28,6 +30,7 @@ use convkit::util::args::ParsedArgs;
 use convkit::util::error::{Error, Result};
 use convkit::util::rng::SplitMix64;
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// CLI usage text.
@@ -61,11 +64,14 @@ COMMANDS:
               burst|heavytail --seed N --networks A,B --platform P|auto
               --pool SPEC --target 0.X --qps N --duration-ms N --events N
               --queue-cap N --control-ms N --max-batch N --coalesce-ms X
-              --alpha X --replay FILE --out FILE --no-latency-slo]
+              --alpha X --replay FILE --out FILE --obs-out FILE
+              --no-latency-slo]
   policysearch  sweep SloPolicy grids, report the Pareto front
               [simulate's scenario/fidelity options (not --replay), plus
               --overload A,B --p95-ratio A,B --idle-queue A,B
               --window A,B --out FILE]
+  obs        telemetry-plane demo + snapshot    [--seed N --events N
+              --format json|prom --out FILE --flight-dir DIR]
   tables     regenerate paper tables             [N | all] [--french]
   figures    regenerate Figures 1-3              [N | all] [--csv]
   blocks     list block characteristics (Table 2)
@@ -93,6 +99,7 @@ pub fn dispatch(args: &ParsedArgs) -> Result<()> {
         Some("autoscale") => cmd_autoscale(args),
         Some("simulate") => cmd_simulate(args),
         Some("policysearch") => cmd_policysearch(args),
+        Some("obs") => cmd_obs(args),
         Some("tables") => cmd_tables(args),
         Some("figures") => cmd_figures(args),
         Some("blocks") => {
@@ -774,7 +781,13 @@ fn cmd_simulate(args: &ParsedArgs) -> Result<()> {
 
     // The paper side: fitted models price every replica and service rate.
     let rep = run_report(args)?;
-    let opts = whatif_opts_from(args, WhatIfOptions::default().min_arrivals)?;
+    let mut opts = whatif_opts_from(args, WhatIfOptions::default().min_arrivals)?;
+    // --obs-out attaches the telemetry plane to the controlled main run
+    // (bisection probes stay silent) and writes its snapshot next to the
+    // capacity report — the OBS_snapshot.json artifact CI archives and
+    // diffs (`scripts/bench_diff.py --obs`).
+    let obs = args.get("obs-out").map(|_| Arc::new(Telemetry::new()));
+    opts.obs = obs.clone();
 
     // --events is the auto-sizing floor: an explicit --duration-ms pins the
     // virtual window instead, so say so rather than silently dropping it.
@@ -837,6 +850,16 @@ fn cmd_simulate(args: &ParsedArgs) -> Result<()> {
     if let Some(out) = args.get("out") {
         std::fs::write(out, report.to_json())?;
         println!("capacity report written to {out}");
+    }
+    if let (Some(path), Some(obs)) = (args.get("obs-out"), &obs) {
+        std::fs::write(path, obs.export_json())?;
+        println!(
+            "observability snapshot written to {path} ({} spans recorded, {} dropped, \
+             {} journal event(s))",
+            obs.spans_recorded(),
+            obs.spans_dropped(),
+            obs.journal().len()
+        );
     }
     Ok(())
 }
@@ -902,6 +925,79 @@ fn cmd_policysearch(args: &ParsedArgs) -> Result<()> {
     if let Some(out) = args.get("out") {
         std::fs::write(out, report.to_json())?;
         println!("policy-search report written to {out}");
+    }
+    Ok(())
+}
+
+/// Exercise the telemetry plane end to end on the virtual clock and export
+/// its snapshot (`--format json|prom`). No models are fitted and no
+/// executors run: two fixed-rate service models (one replica each) serve a
+/// seeded burst scenario sized to overload them, so span rings, stage
+/// histograms, admission counters and the SLO-breach flight recorder all
+/// populate — byte-identically for a given `--seed`/`--events`.
+fn cmd_obs(args: &ParsedArgs) -> Result<()> {
+    let seed = args.get_u64("seed", 42)?;
+    let events = args.get_u64("events", 20_000)?.max(1);
+    let format = args.get_str("format", "json");
+    if format != "json" && format != "prom" {
+        return Err(Error::Usage(format!("--format expects `json` or `prom`, got `{format}`")));
+    }
+
+    // Fixed demo fleet: 0.05 ms and 0.02 ms service, queue cap 4, one
+    // replica each (~70k qps combined ceiling), overloaded on purpose so
+    // admission rejections — the breach signal — are guaranteed.
+    let models =
+        vec![SimServiceModel::new("alpha", 0.05, 4, 1), SimServiceModel::new("beta", 0.02, 4, 1)];
+    let mut fleet = SimFleet::new(&models)?;
+    let obs = Arc::new(Telemetry::new());
+    fleet.set_sink(Arc::clone(&obs));
+
+    let qps = 100_000.0;
+    let duration_ms = events as f64 / qps * 1e3;
+    let mix = vec![("alpha".to_string(), 2.0), ("beta".to_string(), 1.0)];
+    let trace = Scenario::new(ScenarioShape::Burst, mix, qps, duration_ms, seed).arrivals();
+    let mut rejected: std::collections::BTreeMap<String, u64> = Default::default();
+    for e in &trace.events {
+        let net = trace.network_of(e);
+        if matches!(fleet.offer(net, e.at_ns)?, Admission::Rejected) {
+            *rejected.entry(net.to_string()).or_default() += 1;
+        }
+    }
+    fleet.drain();
+
+    // Rejections are the overload breach; freeze one flight window per
+    // breached network (first breach wins, like the controller's path).
+    for (net, n) in &rejected {
+        let reason = format!("{n} admission rejections under the `burst` demo scenario");
+        let _ = obs.flight_on_breach(net, fleet.now_ms(), &reason);
+    }
+    let flights = obs.take_flights();
+
+    println!(
+        "obs demo: {} arrivals over {:.1} virtual ms — {} span(s) recorded, {} dropped, \
+         {} flight dump(s)",
+        trace.len(),
+        fleet.now_ms(),
+        obs.spans_recorded(),
+        obs.spans_dropped(),
+        flights.len()
+    );
+    if let Some(dir) = args.get("flight-dir") {
+        let dir = PathBuf::from(dir);
+        std::fs::create_dir_all(&dir)?;
+        for d in &flights {
+            let path = dir.join(d.file_name());
+            std::fs::write(&path, d.to_json())?;
+            println!("flight dump written to {}", path.display());
+        }
+    }
+    let snapshot = if format == "prom" { obs.export_prometheus() } else { obs.export_json() };
+    match args.get("out") {
+        Some(out) => {
+            std::fs::write(out, &snapshot)?;
+            println!("observability snapshot written to {out}");
+        }
+        None => print!("{snapshot}"),
     }
     Ok(())
 }

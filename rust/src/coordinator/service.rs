@@ -19,6 +19,7 @@
 
 use crate::cnn::GoldenCnn;
 use crate::coordinator::coalesce::CoalescePolicy;
+use crate::obs::{SpanKind, SpanScope, Stage};
 use crate::util::error::{Error, Result};
 pub use crate::util::stats::percentile_nearest_rank;
 use crate::util::stats::{window_mean_p95, LatencyRing};
@@ -317,18 +318,38 @@ fn collect_batch(
     rx: &mpsc::Receiver<Msg>,
     batch_size: usize,
     policy: &CoalescePolicy,
+    obs: Option<&SpanScope>,
 ) -> (Vec<PendingInfer>, bool) {
+    // Close the window: one WindowClose span + one coalesce stage sample per
+    // non-empty batch, whatever path ended collection (full batch, expired
+    // window, or shutdown). `Option` check only when the recorder is off.
+    let close = |pending: Vec<PendingInfer>, shutdown: bool, opened: Instant| {
+        if let Some(o) = obs {
+            if !pending.is_empty() {
+                o.span(SpanKind::WindowClose, pending.len() as u64);
+                o.stage(Stage::Coalesce, opened.elapsed().as_nanos() as u64);
+            }
+        }
+        (pending, shutdown)
+    };
     let mut pending: Vec<PendingInfer> = Vec::new();
     match rx.recv() {
         Ok(Msg::Infer(im, reply, t0, guard)) => pending.push((im, reply, t0, guard)),
         Ok(Msg::Shutdown) | Err(_) => return (pending, true),
     }
+    // The first request's arrival opens the window (docs/HOTPATH.md §3); the
+    // span is emitted even for windows that close instantly, so per-batch
+    // span counts match the simulator's exactly.
+    let window_opened = Instant::now();
+    if let Some(o) = obs {
+        o.span(SpanKind::WindowOpen, 1);
+    }
     while pending.len() < batch_size {
         match rx.try_recv() {
             Ok(Msg::Infer(im, reply, t0, guard)) => pending.push((im, reply, t0, guard)),
-            Ok(Msg::Shutdown) => return (pending, true),
+            Ok(Msg::Shutdown) => return close(pending, true, window_opened),
             Err(mpsc::TryRecvError::Empty) => break,
-            Err(mpsc::TryRecvError::Disconnected) => return (pending, true),
+            Err(mpsc::TryRecvError::Disconnected) => return close(pending, true, window_opened),
         }
     }
     let opened = Instant::now();
@@ -340,11 +361,11 @@ fn collect_batch(
         }
         match rx.recv_timeout(deadline - now) {
             Ok(Msg::Infer(im, reply, t0, guard)) => pending.push((im, reply, t0, guard)),
-            Ok(Msg::Shutdown) => return (pending, true),
+            Ok(Msg::Shutdown) => return close(pending, true, window_opened),
             Err(_) => break,
         }
     }
-    (pending, false)
+    close(pending, false, window_opened)
 }
 
 /// Handle to a running inference service.
@@ -395,6 +416,25 @@ impl InferenceService {
         E: BatchExecutor,
         F: FnOnce() -> Result<E> + Send + 'static,
     {
+        Self::start_factory_observed(factory, batch_size, policy, None)
+    }
+
+    /// [`InferenceService::start_factory_with_policy`] with an optional
+    /// telemetry scope. When `obs` is `Some`, the worker emits window / batch
+    /// / guard-release spans into the scope's lock-free ring and per-request
+    /// stage latencies into its histograms; when `None`, every recording
+    /// point is a single branch on an `Option` (the `obs_span_overhead`
+    /// bench section keeps the delta under 5%).
+    pub fn start_factory_observed<E, F>(
+        factory: F,
+        batch_size: usize,
+        policy: CoalescePolicy,
+        obs: Option<SpanScope>,
+    ) -> InferenceService
+    where
+        E: BatchExecutor,
+        F: FnOnce() -> Result<E> + Send + 'static,
+    {
         let (tx, rx) = mpsc::channel::<Msg>();
         let batch_size = batch_size.max(1);
         let policy = policy.with_max_batch(batch_size);
@@ -423,14 +463,28 @@ impl InferenceService {
             };
             mirror.parallelism.store(executor.parallelism() as u64, Ordering::Relaxed);
             loop {
-                let (pending, shutdown) = collect_batch(&rx, batch_size, &policy);
+                let (pending, shutdown) = collect_batch(&rx, batch_size, &policy, obs.as_ref());
                 if !pending.is_empty() {
                     // Reference-count the shared buffers into the batch —
                     // pointer copies, not payload clones.
                     let images: Vec<Arc<[i32]>> =
                         pending.iter().map(|(im, _, _, _)| Arc::clone(im)).collect();
+                    let dispatched = Instant::now();
+                    if let Some(o) = &obs {
+                        o.span(SpanKind::BatchStart, images.len() as u64);
+                        for (_, _, t0, _) in &pending {
+                            o.stage(
+                                Stage::QueueWait,
+                                dispatched.saturating_duration_since(*t0).as_nanos() as u64,
+                            );
+                        }
+                    }
                     let results = executor.infer_batch(&images);
                     mirror.batches.fetch_add(1, Ordering::Relaxed);
+                    if let Some(o) = &obs {
+                        o.span(SpanKind::BatchEnd, images.len() as u64);
+                        o.stage(Stage::Exec, dispatched.elapsed().as_nanos() as u64);
+                    }
                     match results {
                         Ok(outs) => {
                             for ((_, reply, t0, guard), out) in pending.into_iter().zip(outs) {
@@ -441,6 +495,9 @@ impl InferenceService {
                                 // slot already freed (keeps tests and
                                 // cap-accounting deterministic).
                                 drop(guard);
+                                if let Some(o) = &obs {
+                                    o.span(SpanKind::GuardRelease, 0);
+                                }
                                 let _ = reply.send(Ok(out));
                             }
                         }
@@ -450,6 +507,9 @@ impl InferenceService {
                                 mirror.completed.fetch_add(1, Ordering::Relaxed);
                                 mirror.errors.fetch_add(1, Ordering::Relaxed);
                                 drop(guard);
+                                if let Some(o) = &obs {
+                                    o.span(SpanKind::GuardRelease, 0);
+                                }
                                 let _ = reply.send(Err(Error::Runtime(msg.clone())));
                             }
                         }
@@ -656,7 +716,7 @@ mod tests {
         tx.send(Msg::Shutdown).unwrap();
         tx.send(Msg::Infer(vec![3].into(), r3, Instant::now(), None)).unwrap();
         let policy = CoalescePolicy::fixed(BATCH_WINDOW).with_max_batch(100);
-        let (pending, shutdown) = collect_batch(&rx, 100, &policy);
+        let (pending, shutdown) = collect_batch(&rx, 100, &policy, None);
         assert!(shutdown);
         assert_eq!(pending.len(), 2, "requests absorbed before shutdown ride the final batch");
         // The post-shutdown request was NOT absorbed: the window closed at
@@ -683,7 +743,7 @@ mod tests {
             .with_model_ns(1_000_000, 400_000)
             .with_max_batch(3);
         let t0 = Instant::now();
-        let (pending, shutdown) = collect_batch(&rx, 3, &policy);
+        let (pending, shutdown) = collect_batch(&rx, 3, &policy, None);
         assert!(t0.elapsed() < Duration::from_secs(5), "no window waited at full batch");
         assert!(!shutdown);
         assert_eq!(pending.len(), 3);

@@ -44,6 +44,7 @@ use crate::coordinator::router::Router;
 use crate::coordinator::service::{
     GoldenExecutor, InferenceService, PjrtExecutor, ServiceStats, BATCH_WINDOW,
 };
+use crate::obs::{SpanKind, SpanScope, Telemetry};
 use crate::runtime::{artifacts_dir, Runtime};
 use crate::util::error::{Error, Result};
 use std::collections::VecDeque;
@@ -88,6 +89,10 @@ pub struct ShardSpec {
     /// [`ShardSpec::with_adaptive_coalesce`] to grow the window with the
     /// backlog exactly as the traffic simulator does).
     pub coalesce: CoalescePolicy,
+    /// Telemetry plane the expanded shards record spans and stage latencies
+    /// into (default: none — every recording point compiles to a single
+    /// `Option` branch).
+    pub obs: Option<Arc<Telemetry>>,
 }
 
 impl ShardSpec {
@@ -100,6 +105,7 @@ impl ShardSpec {
             queue_cap: DEFAULT_QUEUE_CAP,
             backend: ShardBackend::Golden { block: BlockKind::Conv2, workers: 0 },
             coalesce: CoalescePolicy::fixed(BATCH_WINDOW),
+            obs: None,
         }
     }
 
@@ -144,6 +150,13 @@ impl ShardSpec {
     /// `predicted_ms`/`fill_ms`, or measured values).
     pub fn with_adaptive_coalesce(mut self, service: Duration, fill: Duration) -> ShardSpec {
         self.coalesce = self.coalesce.with_model(service, fill);
+        self
+    }
+
+    /// Record this spec's shards into `telemetry` (span rings + stage
+    /// histograms; see [`crate::obs`]).
+    pub fn with_telemetry(mut self, telemetry: Arc<Telemetry>) -> ShardSpec {
+        self.obs = Some(telemetry);
         self
     }
 }
@@ -192,6 +205,9 @@ pub struct Shard {
     /// reach this replica through a stale fleet epoch observe it and
     /// redirect to a sibling instead of racing the worker's exit.
     closed: AtomicBool,
+    /// Telemetry scope for admission-side spans (enqueue, route). `None`
+    /// keeps the hot path exactly one branch away from the pre-obs code.
+    obs: Option<SpanScope>,
     service: InferenceService,
 }
 
@@ -210,8 +226,17 @@ impl Shard {
             outstanding: Arc::new(AtomicUsize::new(0)),
             rejected: AtomicU64::new(0),
             closed: AtomicBool::new(false),
+            obs: None,
             service,
         }
+    }
+
+    /// Attach a telemetry scope for admission-side spans (tests compose this
+    /// with [`Shard::from_service`]; [`Shard::start`] attaches one
+    /// automatically when its spec carries a telemetry plane).
+    pub fn observed(mut self, scope: SpanScope) -> Shard {
+        self.obs = Some(scope);
+        self
     }
 
     /// Start replica `replica` of `spec` (network resolved from the zoo).
@@ -220,6 +245,9 @@ impl Shard {
             .into_iter()
             .find(|n| n.name == spec.network)
             .ok_or_else(|| Error::Usage(format!("unknown network `{}`", spec.network)))?;
+        // One scope per replica: the worker and the admission path share the
+        // same lock-free ring, so a flight dump shows the whole request walk.
+        let scope = spec.obs.as_ref().map(|t| t.scope_for(&spec.network, replica));
         let service = match &spec.backend {
             ShardBackend::Golden { block, workers } => {
                 let cnn = GoldenCnn::new(net, *block)?;
@@ -228,11 +256,16 @@ impl Shard {
                 } else {
                     GoldenExecutor::with_workers(cnn, *workers)
                 };
-                InferenceService::start_with_policy(exec, spec.batch_size, spec.coalesce)
+                InferenceService::start_factory_observed(
+                    move || Ok(exec),
+                    spec.batch_size,
+                    spec.coalesce,
+                    scope.clone(),
+                )
             }
             ShardBackend::Pjrt => {
                 let name = spec.network.clone();
-                InferenceService::start_factory_with_policy(
+                InferenceService::start_factory_observed(
                     move || {
                         let rt = Runtime::cpu()?;
                         let art = rt.load_named(&artifacts_dir(), &name)?;
@@ -240,10 +273,13 @@ impl Shard {
                     },
                     spec.batch_size,
                     spec.coalesce,
+                    scope.clone(),
                 )
             }
         };
-        Ok(Shard::from_service(&spec.network, replica, spec.queue_cap, service))
+        let mut shard = Shard::from_service(&spec.network, replica, spec.queue_cap, service);
+        shard.obs = scope;
+        Ok(shard)
     }
 
     /// Outstanding (admitted, unanswered) requests right now.
@@ -288,7 +324,18 @@ impl Shard {
         // If the send fails the guard inside the dead message is dropped,
         // rolling the increment back.
         let rx = self.service.enqueue_with_guard(image, Some(Box::new(slot)))?;
+        self.note_admission();
         Ok(Ticket { rx })
+    }
+
+    /// Record route + enqueue spans for one admitted request. Lock-free
+    /// (`SpanRing::record`), so the admission paths stay lock-free with the
+    /// recorder on; a single branch with it off.
+    fn note_admission(&self) {
+        if let Some(o) = &self.obs {
+            o.span(SpanKind::Route, self.replica as u64);
+            o.span(SpanKind::Enqueue, self.outstanding() as u64);
+        }
     }
 
     /// Non-blocking *bounded* admission: [`Error::Overloaded`] at the cap
@@ -315,6 +362,7 @@ impl Shard {
             ))
         })?;
         let rx = self.service.enqueue_with_guard(image, Some(Box::new(slot)))?;
+        self.note_admission();
         Ok(Ticket { rx })
     }
 
@@ -480,6 +528,7 @@ impl FleetState {
 /// requests admitted before the drain are answered before the worker exits.
 pub struct ShardedService {
     state: EpochCell<FleetState>,
+    obs: Option<Arc<Telemetry>>,
 }
 
 impl ShardedService {
@@ -501,6 +550,23 @@ impl ShardedService {
         ShardedService::from_shards(shards)
     }
 
+    /// [`ShardedService::start`] with every spec recording into one shared
+    /// telemetry plane; the fleet keeps the handle so
+    /// [`ShardedService::telemetry`] and later [`ShardedService::add_shard`]
+    /// calls see the same plane.
+    pub fn start_observed(
+        specs: &[ShardSpec],
+        telemetry: Arc<Telemetry>,
+    ) -> Result<ShardedService> {
+        let specs: Vec<ShardSpec> = specs
+            .iter()
+            .map(|s| s.clone().with_telemetry(Arc::clone(&telemetry)))
+            .collect();
+        let mut fleet = ShardedService::start(&specs)?;
+        fleet.obs = Some(telemetry);
+        Ok(fleet)
+    }
+
     /// Assemble a fleet from pre-built shards (tests inject custom executors
     /// through [`Shard::from_service`] here).
     pub fn from_shards(shards: Vec<Shard>) -> Result<ShardedService> {
@@ -508,7 +574,14 @@ impl ShardedService {
             return Err(Error::InvalidConfig("sharded service needs ≥ 1 shard".into()));
         }
         let state = FleetState::with_router(shards.into_iter().map(Arc::new).collect());
-        Ok(ShardedService { state: EpochCell::new(state) })
+        Ok(ShardedService { state: EpochCell::new(state), obs: None })
+    }
+
+    /// The telemetry plane this fleet records into, if observed (the
+    /// snapshot side of `convkit obs`: callers export JSON/Prometheus or
+    /// pull flight dumps from it).
+    pub fn telemetry(&self) -> Option<&Arc<Telemetry>> {
+        self.obs.as_ref()
     }
 
     /// Served network names (sorted).
@@ -533,6 +606,16 @@ impl ShardedService {
     /// new epoch is built, so request paths never see a half-started shard.
     /// Returns the new replica's ordinal.
     pub fn add_shard(&self, spec: &ShardSpec) -> Result<usize> {
+        // An observed fleet observes its scale-ups too: inherit the plane
+        // unless the spec already carries one.
+        let inherited;
+        let spec = match (&self.obs, &spec.obs) {
+            (Some(t), None) => {
+                inherited = spec.clone().with_telemetry(Arc::clone(t));
+                &inherited
+            }
+            _ => spec,
+        };
         let next_ordinal = |st: &FleetState| {
             st.shards
                 .iter()

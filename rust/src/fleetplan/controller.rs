@@ -20,10 +20,12 @@ use super::planner::FleetPlan;
 use super::pool::{DevicePool, ReconfigPolicy};
 use super::slo::{NetworkSlo, SloPolicy, SloTracker, SloVerdict};
 use crate::coordinator::{ShardSpec, ShardedService, ShardedStats};
+use crate::obs::{names, JournalEvent, JournalKind, Telemetry};
 use crate::synth::ResourceVector;
 use crate::util::error::{Error, Result};
 use std::collections::BTreeMap;
 use std::fmt;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Build per-network shard templates from a capacity plan, wiring each
@@ -127,6 +129,138 @@ impl ScaleTarget for LiveFleet<'_> {
     }
 }
 
+/// The structured justification behind a decision: ONE place renders the
+/// human reason string AND names the numeric inputs the journal event
+/// carries, so the free text and the machine-readable record can never
+/// diverge (pinned by `reason_text_and_journal_inputs_never_diverge`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScaleReason {
+    /// SLO breach justifying a scale-up.
+    Overload {
+        /// Observed rejected/offered rate over the window.
+        overload_rate: f64,
+        /// Observed p95 latency (ms).
+        p95_ms: f64,
+        /// Policy overload objective.
+        overload_target: f64,
+        /// This network's p95 objective (ms).
+        p95_target_ms: f64,
+    },
+    /// A full calm window justifying a scale-down.
+    Idle {
+        /// Observed queue utilization over the window.
+        queue_util: f64,
+    },
+    /// An amortized pool rebind when the primary budget is exhausted.
+    Rebind {
+        /// Observed rejected/offered rate over the window.
+        overload_rate: f64,
+        /// The exhausted primary platform's name.
+        platform: String,
+        /// Pool device being reprogrammed.
+        device: String,
+        /// Fresh replicas the device fits.
+        added_replicas: u64,
+        /// Model-predicted throughput gain (QPS).
+        gain_qps: f64,
+        /// Reconfiguration outage (s).
+        downtime_s: f64,
+        /// Predicted time for the surplus to clear the outage backlog (s).
+        payback_s: f64,
+        /// Demand currently going unmet (QPS).
+        unmet_qps: f64,
+        /// Policy ceiling on the payback time (s).
+        payback_limit_s: f64,
+    },
+}
+
+impl ScaleReason {
+    /// Render the human-readable reason text (the exact strings pre-dating
+    /// the journal — downstream log scrapers and tests pin substrings).
+    pub fn render(&self) -> String {
+        match self {
+            ScaleReason::Overload {
+                overload_rate,
+                p95_ms,
+                overload_target,
+                p95_target_ms,
+            } => format!(
+                "overload {:.1}% / p95 {:.3} ms breach the SLO (targets {:.1}% / {:.1} ms)",
+                100.0 * overload_rate,
+                p95_ms,
+                100.0 * overload_target,
+                p95_target_ms,
+            ),
+            ScaleReason::Idle { queue_util } => format!(
+                "idle for a full window (overload 0.0%, queue {:.1}%)",
+                100.0 * queue_util,
+            ),
+            ScaleReason::Rebind {
+                overload_rate,
+                platform,
+                device,
+                added_replicas,
+                gain_qps,
+                downtime_s,
+                payback_s,
+                unmet_qps,
+                payback_limit_s,
+            } => format!(
+                "overload {:.1}% with the {} budget exhausted; reprogramming {} adds \
+                 {} replica(s) (+{:.1} QPS), amortizing the {:.1} s outage in {:.1} s \
+                 (unmet {:.1} QPS, payback limit {:.0} s)",
+                100.0 * overload_rate,
+                platform,
+                device,
+                added_replicas,
+                gain_qps,
+                downtime_s,
+                payback_s,
+                unmet_qps,
+                payback_limit_s,
+            ),
+        }
+    }
+
+    /// The named numeric inputs, in rendering order — the journal event's
+    /// machine-readable twin of [`ScaleReason::render`].
+    pub fn inputs(&self) -> Vec<(String, f64)> {
+        let f = |n: &str, v: f64| (n.to_string(), v);
+        match self {
+            ScaleReason::Overload {
+                overload_rate,
+                p95_ms,
+                overload_target,
+                p95_target_ms,
+            } => vec![
+                f("overload_rate", *overload_rate),
+                f("p95_ms", *p95_ms),
+                f("overload_target", *overload_target),
+                f("p95_target_ms", *p95_target_ms),
+            ],
+            ScaleReason::Idle { queue_util } => vec![f("queue_util", *queue_util)],
+            ScaleReason::Rebind {
+                overload_rate,
+                added_replicas,
+                gain_qps,
+                downtime_s,
+                payback_s,
+                unmet_qps,
+                payback_limit_s,
+                ..
+            } => vec![
+                f("overload_rate", *overload_rate),
+                f("added_replicas", *added_replicas as f64),
+                f("gain_qps", *gain_qps),
+                f("downtime_s", *downtime_s),
+                f("payback_s", *payback_s),
+                f("unmet_qps", *unmet_qps),
+                f("payback_limit_s", *payback_limit_s),
+            ],
+        }
+    }
+}
+
 /// Direction of a reconfiguration.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ScaleAction {
@@ -159,8 +293,12 @@ pub struct ScaleDecision {
     pub predicted_total: ResourceVector,
     /// Predicted utilization AFTER, on the plan's platform (%).
     pub utilization_after: [f64; 5],
-    /// Human-readable trigger (SLO numbers that motivated the step).
+    /// Human-readable trigger (SLO numbers that motivated the step),
+    /// rendered by [`ScaleReason::render`].
     pub reason: String,
+    /// The named numeric inputs behind `reason`
+    /// ([`ScaleReason::inputs`]) — carried into the decision journal.
+    pub inputs: Vec<(String, f64)>,
     /// When the decision was taken, per the target's clock (ms; wall time
     /// live, virtual time in a simulation). Stamped by
     /// [`Autoscaler::step_target`]; 0 for bare [`Autoscaler::decide`] calls.
@@ -225,6 +363,7 @@ pub struct Autoscaler {
     tracker: SloTracker,
     templates: BTreeMap<String, ShardSpec>,
     pool: Option<PoolAttachment>,
+    obs: Option<Arc<Telemetry>>,
 }
 
 impl Autoscaler {
@@ -235,7 +374,7 @@ impl Autoscaler {
     pub fn new(plan: FleetPlan, policy: SloPolicy, templates: Vec<ShardSpec>) -> Autoscaler {
         let templates =
             templates.into_iter().map(|t| (t.network.clone(), t)).collect();
-        Autoscaler { plan, tracker: SloTracker::new(policy), templates, pool: None }
+        Autoscaler { plan, tracker: SloTracker::new(policy), templates, pool: None, obs: None }
     }
 
     /// [`Autoscaler::new`] with the latency-aware SLO: each planned
@@ -262,6 +401,7 @@ impl Autoscaler {
             tracker: SloTracker::with_predicted(policy, predicted),
             templates,
             pool: None,
+            obs: None,
         }
     }
 
@@ -274,6 +414,16 @@ impl Autoscaler {
     /// justification like every budget check.
     pub fn with_pool(mut self, pool: DevicePool, reconfig: ReconfigPolicy) -> Autoscaler {
         self.pool = Some(PoolAttachment { pool, reconfig });
+        self
+    }
+
+    /// Attach a telemetry plane: every applied decision lands in the
+    /// plane's decision journal (kind, fleet-stats-derived inputs, and the
+    /// identical reason text), overload decisions trip the flight recorder,
+    /// and the fleet replica total is mirrored into the
+    /// [`crate::obs::names::FLEET_REPLICAS`] gauge each control round.
+    pub fn with_obs(mut self, obs: Arc<Telemetry>) -> Autoscaler {
+        self.obs = Some(obs);
         self
     }
 
@@ -417,20 +567,17 @@ impl Autoscaler {
             let predicted_total = self
                 .plan
                 .predicted_usage(|name| working.get(name).copied().unwrap_or(0));
-            let reason = format!(
-                "overload {:.1}% with the {} budget exhausted; reprogramming {} adds \
-                 {} replica(s) (+{:.1} QPS), amortizing the {:.1} s outage in {:.1} s \
-                 (unmet {:.1} QPS, payback limit {:.0} s)",
-                100.0 * slo.overload_rate,
-                self.plan.platform.name,
-                dev.name,
-                k,
+            let reason = ScaleReason::Rebind {
+                overload_rate: slo.overload_rate,
+                platform: self.plan.platform.name.clone(),
+                device: dev.name.clone(),
+                added_replicas: k,
                 gain_qps,
-                att.reconfig.downtime_s,
+                downtime_s: att.reconfig.downtime_s,
                 payback_s,
                 unmet_qps,
-                att.reconfig.payback_limit_s,
-            );
+                payback_limit_s: att.reconfig.payback_limit_s,
+            };
             let decision = ScaleDecision {
                 network: slo.network.clone(),
                 action: ScaleAction::Rebind,
@@ -439,7 +586,8 @@ impl Autoscaler {
                 unit: np.unit,
                 predicted_total,
                 utilization_after: self.plan.platform.utilization(&predicted_total),
-                reason,
+                reason: reason.render(),
+                inputs: reason.inputs(),
                 at_ms: 0.0,
                 device: Some(dev.name.clone()),
             };
@@ -464,17 +612,13 @@ impl Autoscaler {
         };
         let reason = match action {
             ScaleAction::Rebind => unreachable!("rebinds are built by rebind_candidate"),
-            ScaleAction::Up => format!(
-                "overload {:.1}% / p95 {:.3} ms breach the SLO (targets {:.1}% / {:.1} ms)",
-                100.0 * slo.overload_rate,
-                slo.p95_ms,
-                100.0 * self.tracker.policy().overload_target,
-                slo.p95_target_ms,
-            ),
-            ScaleAction::Down => format!(
-                "idle for a full window (overload 0.0%, queue {:.1}%)",
-                100.0 * slo.queue_util,
-            ),
+            ScaleAction::Up => ScaleReason::Overload {
+                overload_rate: slo.overload_rate,
+                p95_ms: slo.p95_ms,
+                overload_target: self.tracker.policy().overload_target,
+                p95_target_ms: slo.p95_target_ms,
+            },
+            ScaleAction::Down => ScaleReason::Idle { queue_util: slo.queue_util },
         };
         ScaleDecision {
             network: slo.network.clone(),
@@ -484,7 +628,8 @@ impl Autoscaler {
             unit: np.unit,
             predicted_total,
             utilization_after: self.plan.platform.utilization(&predicted_total),
-            reason,
+            reason: reason.render(),
+            inputs: reason.inputs(),
             at_ms: 0.0,
             device: None,
         }
@@ -546,13 +691,74 @@ impl Autoscaler {
         target: &mut T,
     ) -> Result<Vec<ScaleDecision>> {
         let stats = target.observe();
+        if let Some(obs) = &self.obs {
+            obs.registry().gauge(names::FLEET_REPLICAS).set(stats.shards.len() as u64);
+        }
         let mut decisions = self.decide(&stats);
         let now = target.now_ms();
         for d in decisions.iter_mut() {
             d.at_ms = now;
             self.apply_to(target, d)?;
+            self.journal_decision(d);
         }
         Ok(decisions)
+    }
+
+    /// Mirror one applied decision into the decision journal, and trip the
+    /// flight recorder on the overload-driven kinds (scale-up, rebind) —
+    /// those are the moments the trailing telemetry window explains.
+    fn journal_decision(&self, d: &ScaleDecision) {
+        let Some(obs) = &self.obs else { return };
+        let kind = match d.action {
+            ScaleAction::Up => JournalKind::ScaleUp,
+            ScaleAction::Down => JournalKind::ScaleDown,
+            ScaleAction::Rebind => JournalKind::Rebind,
+        };
+        obs.record_decision(JournalEvent {
+            t_ms: d.at_ms,
+            kind,
+            network: d.network.clone(),
+            device: d.device.clone(),
+            from_replicas: d.from_replicas,
+            to_replicas: d.to_replicas,
+            reason: d.reason.clone(),
+            inputs: d.inputs.clone(),
+        });
+        if matches!(d.action, ScaleAction::Up | ScaleAction::Rebind) {
+            obs.flight_on_breach(&d.network, d.at_ms, &d.reason);
+        }
+    }
+
+    /// Swap the SLO policy at runtime (windowed verdict state restarts) and
+    /// journal the swap as a [`JournalKind::PolicySwap`] event carrying the
+    /// new objectives. `at_ms` is the caller's clock, matching the decisions
+    /// around it.
+    pub fn swap_policy(&mut self, policy: SloPolicy, at_ms: f64) {
+        if let Some(obs) = &self.obs {
+            obs.record_decision(JournalEvent {
+                t_ms: at_ms,
+                kind: JournalKind::PolicySwap,
+                network: String::new(),
+                device: None,
+                from_replicas: 0,
+                to_replicas: 0,
+                reason: format!(
+                    "SLO policy swapped (p95 target {:.1} ms, overload target {:.1}%, \
+                     window {})",
+                    policy.p95_target_ms,
+                    100.0 * policy.overload_target,
+                    policy.window,
+                ),
+                inputs: vec![
+                    ("p95_target_ms".to_string(), policy.p95_target_ms),
+                    ("p95_ratio".to_string(), policy.p95_ratio),
+                    ("overload_target".to_string(), policy.overload_target),
+                    ("idle_queue_util".to_string(), policy.idle_queue_util),
+                    ("window".to_string(), policy.window as f64),
+                ],
+            });
+        }
+        self.tracker.set_policy(policy);
     }
 
     /// One full control round against a live fleet (wall-clock adapter).
@@ -794,6 +1000,7 @@ mod tests {
             predicted_total: ResourceVector::default(),
             utilization_after: [0.0; 5],
             reason: "test".into(),
+            inputs: vec![],
             at_ms: 0.0,
             device: None,
         };
@@ -803,5 +1010,131 @@ mod tests {
         .unwrap();
         assert!(a.apply(&fleet, &d).is_err());
         fleet.shutdown();
+    }
+
+    /// Rebuild the [`ScaleReason`] a decision was rendered from, using only
+    /// what the journal event carries (named inputs + decision fields).
+    fn reason_from_journal(d: &ScaleDecision, platform: &str) -> ScaleReason {
+        let input = |name: &str| -> f64 {
+            d.inputs
+                .iter()
+                .find(|(n, _)| n == name)
+                .unwrap_or_else(|| panic!("missing journal input {name}: {:?}", d.inputs))
+                .1
+        };
+        match d.action {
+            ScaleAction::Up => ScaleReason::Overload {
+                overload_rate: input("overload_rate"),
+                p95_ms: input("p95_ms"),
+                overload_target: input("overload_target"),
+                p95_target_ms: input("p95_target_ms"),
+            },
+            ScaleAction::Down => ScaleReason::Idle { queue_util: input("queue_util") },
+            ScaleAction::Rebind => ScaleReason::Rebind {
+                overload_rate: input("overload_rate"),
+                platform: platform.to_string(),
+                device: d.device.clone().expect("rebind carries a device"),
+                added_replicas: input("added_replicas") as u64,
+                gain_qps: input("gain_qps"),
+                downtime_s: input("downtime_s"),
+                payback_s: input("payback_s"),
+                unmet_qps: input("unmet_qps"),
+                payback_limit_s: input("payback_limit_s"),
+            },
+        }
+    }
+
+    #[test]
+    fn reason_text_and_journal_inputs_never_diverge() {
+        // One decision of each kind; re-rendering the reason from the
+        // journal's named inputs must reproduce the human text byte-for-byte
+        // — the helper is the single formatting site.
+        let mut a = scaler();
+        let up = a.decide(&rows(1, 10, 10, 1.0));
+        let mut a = scaler();
+        let down = a.decide(&rows(2, 10, 0, 1.0));
+        let mut a = pooled(ReconfigPolicy::default());
+        let rebind = a.decide(&rows(13, 10, 10, 1.0));
+        let platform = a.plan().platform.name.clone();
+        for d in up.iter().chain(down.iter()).chain(rebind.iter()) {
+            let rebuilt = reason_from_journal(d, &platform);
+            assert_eq!(rebuilt.render(), d.reason, "{:?}", d.action);
+            assert_eq!(rebuilt.inputs(), d.inputs, "{:?}", d.action);
+        }
+    }
+
+    /// A scripted [`ScaleTarget`]: fixed stats snapshot, fixed clock, scale
+    /// actions are counted and otherwise succeed.
+    struct ScriptedTarget {
+        stats: ShardedStats,
+        ups: u64,
+    }
+
+    impl ScaleTarget for ScriptedTarget {
+        fn observe(&mut self) -> ShardedStats {
+            self.stats.clone()
+        }
+
+        fn scale_up(&mut self, _template: &ShardSpec) -> Result<()> {
+            self.ups += 1;
+            Ok(())
+        }
+
+        fn scale_down(&mut self, _network: &str) -> Result<()> {
+            Ok(())
+        }
+
+        fn now_ms(&self) -> f64 {
+            125.0
+        }
+    }
+
+    #[test]
+    fn applied_decisions_land_in_the_journal_and_trip_the_flight_recorder() {
+        let obs = Arc::new(crate::obs::Telemetry::new());
+        let mut a = Autoscaler::new(plan(), policy(), vec![ShardSpec::golden("a")])
+            .with_obs(Arc::clone(&obs));
+        let mut target = ScriptedTarget { stats: rows(1, 10, 10, 1.0), ups: 0 };
+        let decisions = a.step_target(&mut target).unwrap();
+        assert_eq!(decisions.len(), 1);
+        assert_eq!(target.ups, 1);
+        // Gauge mirrors the observed replica total; journal carries the
+        // decision verbatim, stamped with the target's clock.
+        assert_eq!(obs.registry().gauge(names::FLEET_REPLICAS).get(), 1);
+        let events = obs.journal().snapshot();
+        assert_eq!(events.len(), 1);
+        let ev = &events[0];
+        assert_eq!(ev.kind, JournalKind::ScaleUp);
+        assert_eq!(ev.network, "a");
+        assert_eq!((ev.from_replicas, ev.to_replicas), (1, 2));
+        assert_eq!(ev.t_ms, 125.0);
+        assert_eq!(ev.reason, decisions[0].reason);
+        assert_eq!(ev.inputs, decisions[0].inputs);
+        // The overload decision froze a flight dump for this network.
+        let flights = obs.take_flights();
+        assert_eq!(flights.len(), 1);
+        assert_eq!(flights[0].network, "a");
+        assert_eq!(flights[0].journal.len(), 1);
+    }
+
+    #[test]
+    fn swap_policy_is_journaled_and_rejudges_with_the_new_objectives() {
+        let obs = Arc::new(crate::obs::Telemetry::new());
+        let mut a = scaler().with_obs(Arc::clone(&obs));
+        // Original policy: 50% overload breaches. Swap to a tolerant one.
+        a.swap_policy(
+            SloPolicy { overload_target: 0.99, ..policy() },
+            7.0,
+        );
+        assert!(a.decide(&rows(1, 10, 5, 1.0)).is_empty(), "tolerant policy holds");
+        let events = obs.journal().snapshot();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].kind, JournalKind::PolicySwap);
+        assert_eq!(events[0].t_ms, 7.0);
+        let named: Vec<&str> = events[0].inputs.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(
+            named,
+            ["p95_target_ms", "p95_ratio", "overload_target", "idle_queue_util", "window"],
+        );
     }
 }

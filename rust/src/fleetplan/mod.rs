@@ -71,7 +71,8 @@ pub mod pool;
 pub mod slo;
 
 pub use controller::{
-    adaptive_templates, Autoscaler, LiveFleet, ScaleAction, ScaleDecision, ScaleTarget,
+    adaptive_templates, Autoscaler, LiveFleet, ScaleAction, ScaleDecision, ScaleReason,
+    ScaleTarget,
 };
 pub use planner::{
     plan_fleet, plan_platforms, plan_with_spill, select_platform, select_platform_or_spill,

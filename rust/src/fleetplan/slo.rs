@@ -175,6 +175,14 @@ impl SloTracker {
         &self.policy
     }
 
+    /// Swap the policy at runtime (window clamped to ≥ 1, matching the
+    /// constructors). Rolling windows keep their samples; a shrunken
+    /// `window` takes effect as each network's next snapshot is folded in.
+    pub fn set_policy(&mut self, mut policy: SloPolicy) {
+        policy.window = policy.window.max(1);
+        self.policy = policy;
+    }
+
     /// The effective p95 objective for one network (ms).
     pub fn p95_target_ms(&self, network: &str) -> f64 {
         self.predicted_ms

@@ -75,6 +75,7 @@ pub mod models;
 pub mod platform;
 pub mod allocate;
 pub mod cnn;
+pub mod obs;
 pub mod coordinator;
 pub mod fleetplan;
 pub mod simulate;

@@ -1,0 +1,143 @@
+//! SLO-breach flight recorder: when the tracker flags a breach, freeze the
+//! trailing window of span events and journal entries into one
+//! deterministic JSON document — the post-incident artifact that answers
+//! "which stage ate the time" without anyone having had tracing enabled in
+//! advance, because the span rings were already recording.
+
+use super::json_escape;
+use super::journal::JournalEvent;
+use super::span::SpanEvent;
+
+/// One frozen breach capture: the last `window_ms` of telemetry before the
+/// breach instant, plus the breach verdict itself.
+#[derive(Debug, Clone)]
+pub struct FlightDump {
+    /// Network whose SLO breached.
+    pub network: String,
+    /// Breach instant (ms, caller's clock).
+    pub t_ms: f64,
+    /// The breach verdict / reason text.
+    pub reason: String,
+    /// Width of the frozen window (ms).
+    pub window_ms: f64,
+    /// Span events inside the window, oldest first.
+    pub spans: Vec<SpanEvent>,
+    /// Journal events inside the window, oldest first.
+    pub journal: Vec<JournalEvent>,
+}
+
+impl FlightDump {
+    /// Deterministic file name: `FLIGHT_<network>_<t_ms rounded>.json`.
+    /// Non-alphanumeric network characters are flattened to `_` so the name
+    /// is filesystem-safe on every platform.
+    pub fn file_name(&self) -> String {
+        let safe: String = self
+            .network
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+            .collect();
+        format!("FLIGHT_{}_{}.json", safe, self.t_ms.round() as i64)
+    }
+
+    /// Deterministic JSON document (top-level key `"flight"`).
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n  \"flight\": {\n");
+        out.push_str(&format!(
+            "    \"network\": \"{}\",\n    \"t_ms\": {:.3},\n    \"reason\": \"{}\",\n    \
+             \"window_ms\": {:.3},\n",
+            json_escape(&self.network),
+            self.t_ms,
+            json_escape(&self.reason),
+            self.window_ms
+        ));
+        out.push_str("    \"spans\": [");
+        for (i, s) in self.spans.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n      {{\"t_ns\": {}, \"kind\": \"{}\", \"value\": {}}}",
+                s.t_ns,
+                s.kind.name(),
+                s.value
+            ));
+        }
+        if !self.spans.is_empty() {
+            out.push_str("\n    ");
+        }
+        out.push_str("],\n    \"journal\": [");
+        for (i, ev) in self.journal.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("\n      ");
+            out.push_str(&ev.to_json());
+        }
+        if !self.journal.is_empty() {
+            out.push_str("\n    ");
+        }
+        out.push_str("]\n  }\n}\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::journal::JournalKind;
+    use crate::obs::span::SpanKind;
+
+    fn dump() -> FlightDump {
+        FlightDump {
+            network: "tiny_q8".to_string(),
+            t_ms: 1234.56,
+            reason: "overload 25.0% / p95 80.000 ms breach the SLO".to_string(),
+            window_ms: 10_000.0,
+            spans: vec![
+                SpanEvent::new(100, SpanKind::Enqueue, 0),
+                SpanEvent::new(200, SpanKind::BatchStart, 4),
+            ],
+            journal: vec![JournalEvent {
+                t_ms: 1200.0,
+                kind: JournalKind::ScaleUp,
+                network: "tiny_q8".to_string(),
+                device: None,
+                from_replicas: 1,
+                to_replicas: 2,
+                reason: "overload".to_string(),
+                inputs: vec![],
+            }],
+        }
+    }
+
+    #[test]
+    fn file_name_is_deterministic_and_filesystem_safe() {
+        let mut d = dump();
+        assert_eq!(d.file_name(), "FLIGHT_tiny_q8_1235.json");
+        d.network = "slim/q6:v2".to_string();
+        assert_eq!(d.file_name(), "FLIGHT_slim_q6_v2_1235.json");
+    }
+
+    #[test]
+    fn json_round_trips_deterministically_with_both_sections() {
+        let d = dump();
+        let json = d.to_json();
+        assert_eq!(json, d.to_json());
+        assert!(json.starts_with("{\n  \"flight\": {"));
+        assert!(json.contains("\"kind\": \"enqueue\""));
+        assert!(json.contains("\"kind\": \"batch_start\""));
+        assert!(json.contains("\"kind\": \"scale_up\""));
+        assert!(json.contains("\"window_ms\": 10000.000"));
+    }
+
+    #[test]
+    fn empty_sections_render_as_empty_arrays() {
+        let mut d = dump();
+        d.spans.clear();
+        d.journal.clear();
+        let json = d.to_json();
+        assert!(json.contains("\"spans\": [],"));
+        assert!(json.contains("\"journal\": []\n"));
+    }
+}

@@ -1,0 +1,234 @@
+//! Control-plane decision journal: every autoscaler decision (scale-up,
+//! scale-down, rebind, policy swap) recorded as a structured event carrying
+//! the fleet-stats snapshot and the model-predicted arithmetic that
+//! justified it — the machine-readable twin of the free-text `reason`
+//! string.
+//!
+//! The journal is control-plane-rate (autoscaler cadence: seconds), so a
+//! mutex-guarded deque is the right tool — no lock-free heroics off the hot
+//! path. Capacity is bounded; the oldest events roll off and a monotonic
+//! total counter keeps the accounting exact, mirroring the span ring's
+//! drop-don't-block discipline at the opposite end of the rate spectrum.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::json_escape;
+
+/// What kind of control-plane decision an event records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum JournalKind {
+    /// Replica added within the committed plan.
+    ScaleUp,
+    /// Replica retired after a full idle window.
+    ScaleDown,
+    /// Device reprogrammed to another network's bitstream.
+    Rebind,
+    /// SLO policy swapped at runtime.
+    PolicySwap,
+}
+
+impl JournalKind {
+    /// Stable snake_case name used in JSON exports.
+    pub fn name(self) -> &'static str {
+        match self {
+            JournalKind::ScaleUp => "scale_up",
+            JournalKind::ScaleDown => "scale_down",
+            JournalKind::Rebind => "rebind",
+            JournalKind::PolicySwap => "policy_swap",
+        }
+    }
+}
+
+/// One structured control-plane decision. `inputs` carries the named
+/// numbers that fed the decision arithmetic (observed overload rate, p95,
+/// predicted gain, payback seconds, …) so a reader can re-derive the
+/// rendered reason without parsing it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JournalEvent {
+    /// Decision timestamp (milliseconds on the caller's clock — wall for
+    /// the live controller, virtual for the simulator).
+    pub t_ms: f64,
+    /// Decision kind.
+    pub kind: JournalKind,
+    /// Network the decision concerns (empty for fleet-wide policy swaps).
+    pub network: String,
+    /// Device touched, when the decision binds one (rebinds).
+    pub device: Option<String>,
+    /// Replica count before.
+    pub from_replicas: u64,
+    /// Replica count after.
+    pub to_replicas: u64,
+    /// Human-rendered reason (byte-identical to the `ScaleDecision` text).
+    pub reason: String,
+    /// Named decision inputs, in rendering order.
+    pub inputs: Vec<(String, f64)>,
+}
+
+impl JournalEvent {
+    /// Deterministic single-object JSON.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{{\"t_ms\": {:.3}, \"kind\": \"{}\", \"network\": \"{}\", ",
+            self.t_ms,
+            self.kind.name(),
+            json_escape(&self.network)
+        ));
+        match &self.device {
+            Some(d) => out.push_str(&format!("\"device\": \"{}\", ", json_escape(d))),
+            None => out.push_str("\"device\": null, "),
+        }
+        out.push_str(&format!(
+            "\"from_replicas\": {}, \"to_replicas\": {}, \"reason\": \"{}\", \"inputs\": {{",
+            self.from_replicas,
+            self.to_replicas,
+            json_escape(&self.reason)
+        ));
+        for (i, (name, v)) in self.inputs.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!("\"{}\": {:.6}", json_escape(name), v));
+        }
+        out.push_str("}}");
+        out
+    }
+}
+
+/// Bounded journal of [`JournalEvent`]s, oldest-rolls-off.
+#[derive(Debug)]
+pub struct DecisionJournal {
+    events: Mutex<VecDeque<JournalEvent>>,
+    cap: usize,
+    total: AtomicU64,
+}
+
+/// Default journal capacity — generous for autoscaler cadence.
+pub const DEFAULT_JOURNAL_CAPACITY: usize = 1024;
+
+impl DecisionJournal {
+    /// Journal retaining at most `cap` events (min 1).
+    pub fn new(cap: usize) -> DecisionJournal {
+        DecisionJournal {
+            events: Mutex::new(VecDeque::new()),
+            cap: cap.max(1),
+            total: AtomicU64::new(0),
+        }
+    }
+
+    /// Append an event, evicting the oldest past capacity.
+    pub fn record(&self, ev: JournalEvent) {
+        let mut q = self.events.lock().unwrap();
+        if q.len() == self.cap {
+            q.pop_front();
+        }
+        q.push_back(ev);
+        self.total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Events currently retained, oldest first.
+    pub fn snapshot(&self) -> Vec<JournalEvent> {
+        self.events.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// Events currently retained.
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    /// True when no events are retained.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Monotonic count of all events ever recorded (survives eviction).
+    pub fn total_recorded(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// Deterministic JSON array of the retained events, oldest first.
+    pub fn to_json(&self) -> String {
+        let events = self.events.lock().unwrap();
+        let mut out = String::from("[");
+        for (i, ev) in events.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&ev.to_json());
+        }
+        out.push(']');
+        out
+    }
+}
+
+impl Default for DecisionJournal {
+    fn default() -> Self {
+        DecisionJournal::new(DEFAULT_JOURNAL_CAPACITY)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t_ms: f64, network: &str) -> JournalEvent {
+        JournalEvent {
+            t_ms,
+            kind: JournalKind::ScaleUp,
+            network: network.to_string(),
+            device: None,
+            from_replicas: 1,
+            to_replicas: 2,
+            reason: "overload".to_string(),
+            inputs: vec![("overload_rate".to_string(), 0.25)],
+        }
+    }
+
+    #[test]
+    fn bounded_journal_evicts_oldest_but_keeps_total_exact() {
+        let j = DecisionJournal::new(3);
+        for i in 0..5 {
+            j.record(ev(i as f64, "tiny_q8"));
+        }
+        assert_eq!(j.len(), 3);
+        assert_eq!(j.total_recorded(), 5);
+        let kept: Vec<f64> = j.snapshot().iter().map(|e| e.t_ms).collect();
+        assert_eq!(kept, vec![2.0, 3.0, 4.0], "oldest rolled off");
+    }
+
+    #[test]
+    fn event_json_is_deterministic_and_escapes_strings() {
+        let mut e = ev(12.5, "tiny_q8");
+        e.reason = "overload \"25%\"".to_string();
+        e.device = Some("ZCU111".to_string());
+        let json = e.to_json();
+        assert_eq!(json, e.to_json());
+        assert!(json.contains("\\\"25%\\\""));
+        assert!(json.contains("\"device\": \"ZCU111\""));
+        assert!(json.contains("\"kind\": \"scale_up\""));
+        assert!(json.contains("\"overload_rate\": 0.250000"));
+    }
+
+    #[test]
+    fn journal_json_is_an_array_oldest_first() {
+        let j = DecisionJournal::default();
+        assert_eq!(j.to_json(), "[]");
+        assert!(j.is_empty());
+        j.record(ev(1.0, "a"));
+        j.record(ev(2.0, "b"));
+        let json = j.to_json();
+        let a = json.find("\"network\": \"a\"").unwrap();
+        let b = json.find("\"network\": \"b\"").unwrap();
+        assert!(a < b);
+    }
+
+    #[test]
+    fn kind_names_are_stable() {
+        assert_eq!(JournalKind::ScaleUp.name(), "scale_up");
+        assert_eq!(JournalKind::ScaleDown.name(), "scale_down");
+        assert_eq!(JournalKind::Rebind.name(), "rebind");
+        assert_eq!(JournalKind::PolicySwap.name(), "policy_swap");
+    }
+}

@@ -1,0 +1,478 @@
+//! Unified metrics registry: named counters, gauges, and a log-linear
+//! histogram whose percentile law is the same ceiling-rank rule as
+//! [`crate::util::stats::percentile_nearest_rank`].
+//!
+//! The histogram subsumes the latency ring's nearest-rank p95: where the
+//! ring keeps the raw last-N samples and sorts on read, the histogram keeps
+//! bounded bucket counts forever and walks them with the identical 1-based
+//! ceiling rank `⌈n·pct/100⌉` — so on the same samples its percentile bucket
+//! always brackets the ring's exact answer, within one sub-bucket of
+//! resolution (≤ 1/32 relative error; exact below 32). The parity is pinned
+//! by tests here and in `rust/tests/integration_obs.rs`.
+//!
+//! Hot-path discipline: recording into a counter/gauge/histogram is a few
+//! `Relaxed` atomic RMWs on preallocated storage — no locking, no
+//! allocation. The registry's name→handle maps are mutex-guarded, but the
+//! mutex is paid at *registration* (worker start, control plane), never per
+//! sample: hot-path callers hold pre-resolved `Arc` handles.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotonic named counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    /// Zeroed counter.
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Add one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins named gauge.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicU64,
+}
+
+impl Gauge {
+    /// Zeroed gauge.
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    /// Overwrite the value.
+    pub fn set(&self, v: u64) {
+        self.v.store(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Sub-buckets per octave as a power of two: 32 linear steps between
+/// successive powers of two, i.e. ≤ 1/32 (~3%) relative bucket width.
+const SUB_BITS: u32 = 5;
+const SUB: usize = 1 << SUB_BITS;
+/// Total buckets: the exact linear range `[0, 32)` plus 59 sub-divided
+/// octaves covering the rest of u64.
+const BUCKETS: usize = SUB * (64 - SUB_BITS as usize + 1);
+
+/// Bucket index for a value (monotonic in `v`).
+fn bucket_index(v: u64) -> usize {
+    if v < SUB as u64 {
+        return v as usize;
+    }
+    let exp = 63 - v.leading_zeros(); // position of the most significant bit
+    let shift = exp - SUB_BITS;
+    let sub = (v >> shift) as usize - SUB;
+    (exp - SUB_BITS + 1) as usize * SUB + sub
+}
+
+/// Inclusive `[lower, upper]` value range of one bucket.
+fn bucket_bounds(index: usize) -> (u64, u64) {
+    if index < SUB {
+        return (index as u64, index as u64);
+    }
+    let shift = (index / SUB - 1) as u32;
+    let lower = ((index % SUB + SUB) as u64) << shift;
+    (lower, lower + (1u64 << shift) - 1)
+}
+
+/// Lock-free log-linear histogram over `u64` samples (nanoseconds, by
+/// convention). Bounded memory whatever the sample count; every operation is
+/// `Relaxed` atomics on preallocated buckets.
+pub struct LogLinearHistogram {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl LogLinearHistogram {
+    /// Empty histogram.
+    pub fn new() -> LogLinearHistogram {
+        LogLinearHistogram {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample.
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all samples.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Largest sample seen (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Mean sample (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / n as f64
+        }
+    }
+
+    /// `[lower, upper]` bounds of the bucket holding the nearest-rank
+    /// percentile sample — the same 1-based ceiling rank `⌈n·pct/100⌉` as
+    /// [`crate::util::stats::percentile_nearest_rank`], so the exact
+    /// nearest-rank answer over the same samples always lies inside the
+    /// returned range. `(0, 0)` when empty.
+    pub fn percentile_bounds(&self, pct: u64) -> (u64, u64) {
+        let n = self.count();
+        if n == 0 {
+            return (0, 0);
+        }
+        let rank = (n * pct).div_ceil(100).max(1);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= rank {
+                let (lo, hi) = bucket_bounds(i);
+                return (lo, hi.min(self.max()));
+            }
+        }
+        let m = self.max();
+        (m, m)
+    }
+
+    /// Conservative nearest-rank percentile: the upper bound of the
+    /// ceiling-rank bucket (never under-reports the tail; exact below 32).
+    pub fn percentile(&self, pct: u64) -> u64 {
+        self.percentile_bounds(pct).1
+    }
+}
+
+impl Default for LogLinearHistogram {
+    fn default() -> Self {
+        LogLinearHistogram::new()
+    }
+}
+
+impl std::fmt::Debug for LogLinearHistogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LogLinearHistogram")
+            .field("count", &self.count())
+            .field("max", &self.max())
+            .finish()
+    }
+}
+
+/// Hot-path latency stages broken out per request (live worker and simulator
+/// emit the same three through [`crate::obs::Sink::stage`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Stage {
+    /// Enqueue → batch dispatch (admission queue wait).
+    QueueWait,
+    /// Window open → batch dispatch (coalescing hold).
+    Coalesce,
+    /// Batch dispatch → batch completion (execution, contention included).
+    Exec,
+}
+
+impl Stage {
+    /// Every stage, in export order.
+    pub const ALL: [Stage; 3] = [Stage::QueueWait, Stage::Coalesce, Stage::Exec];
+
+    /// The registry metric name this stage records under (a
+    /// [`crate::obs::names`] constant — the registry-discipline lint keeps
+    /// call sites from minting ad-hoc strings).
+    pub fn metric_name(self) -> &'static str {
+        match self {
+            Stage::QueueWait => crate::obs::names::STAGE_QUEUE_WAIT_NS,
+            Stage::Coalesce => crate::obs::names::STAGE_COALESCE_NS,
+            Stage::Exec => crate::obs::names::STAGE_EXEC_NS,
+        }
+    }
+}
+
+/// Named metric registry: one instance per telemetry plane. Registration is
+/// idempotent and returns a shared handle; names must be `'static` constants
+/// (see [`crate::obs::names`]) so the set of metric names is a reviewable
+/// table, not scattered literals — enforced by `rust/tests/registry_discipline.rs`.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<&'static str, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<&'static str, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<&'static str, Arc<LogLinearHistogram>>>,
+}
+
+impl MetricsRegistry {
+    /// Empty registry.
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Counter handle for `name`, registering it on first use.
+    pub fn counter(&self, name: &'static str) -> Arc<Counter> {
+        Arc::clone(self.counters.lock().unwrap().entry(name).or_default())
+    }
+
+    /// Gauge handle for `name`, registering it on first use.
+    pub fn gauge(&self, name: &'static str) -> Arc<Gauge> {
+        Arc::clone(self.gauges.lock().unwrap().entry(name).or_default())
+    }
+
+    /// Histogram handle for `name`, registering it on first use.
+    pub fn histogram(&self, name: &'static str) -> Arc<LogLinearHistogram> {
+        Arc::clone(self.histograms.lock().unwrap().entry(name).or_default())
+    }
+
+    /// Deterministic JSON fragment (no surrounding braces' key): sorted
+    /// names, integer-or-fixed-point values only.
+    pub(crate) fn json_body(&self) -> String {
+        let mut out = String::new();
+        out.push_str("    \"counters\": {");
+        let counters = self.counters.lock().unwrap();
+        for (i, (name, c)) in counters.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!("\"{}\": {}", name, c.get()));
+        }
+        drop(counters);
+        out.push_str("},\n    \"gauges\": {");
+        let gauges = self.gauges.lock().unwrap();
+        for (i, (name, g)) in gauges.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!("\"{}\": {}", name, g.get()));
+        }
+        drop(gauges);
+        out.push_str("},\n    \"histograms\": [");
+        let hists = self.histograms.lock().unwrap();
+        for (i, (name, h)) in hists.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n      {{\"name\": \"{}\", \"count\": {}, \"mean_ns\": {:.3}, \
+                 \"p50_ns\": {}, \"p95_ns\": {}, \"max_ns\": {}}}",
+                name,
+                h.count(),
+                h.mean(),
+                h.percentile(50),
+                h.percentile(95),
+                h.max()
+            ));
+        }
+        if !hists.is_empty() {
+            out.push_str("\n    ");
+        }
+        out.push(']');
+        out
+    }
+
+    /// Prometheus text exposition: counters/gauges as-is, histograms as
+    /// summaries with p50/p95 quantiles. Deterministic (sorted names).
+    pub(crate) fn prometheus_body(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("# TYPE {name} counter\n{name} {}\n", c.get()));
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", g.get()));
+        }
+        for (name, h) in self.histograms.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "# TYPE {name} summary\n\
+                 {name}{{quantile=\"0.5\"}} {}\n\
+                 {name}{{quantile=\"0.95\"}} {}\n\
+                 {name}_sum {}\n\
+                 {name}_count {}\n",
+                h.percentile(50),
+                h.percentile(95),
+                h.sum(),
+                h.count()
+            ));
+        }
+        out
+    }
+
+    /// Registered histogram names with their summary numbers, sorted by
+    /// name (the per-stage breakdown a capacity report embeds).
+    pub fn histogram_rows(&self) -> Vec<HistogramRow> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(name, h)| HistogramRow {
+                name,
+                count: h.count(),
+                mean_ns: h.mean(),
+                p50_ns: h.percentile(50),
+                p95_ns: h.percentile(95),
+                max_ns: h.max(),
+            })
+            .collect()
+    }
+}
+
+/// One histogram's exported summary (see [`MetricsRegistry::histogram_rows`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramRow {
+    /// Registered metric name.
+    pub name: &'static str,
+    /// Samples recorded.
+    pub count: u64,
+    /// Mean sample (ns).
+    pub mean_ns: f64,
+    /// Ceiling-rank p50 (bucket upper bound, ns).
+    pub p50_ns: u64,
+    /// Ceiling-rank p95 (bucket upper bound, ns).
+    pub p95_ns: u64,
+    /// Largest sample (ns).
+    pub max_ns: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::percentile_nearest_rank;
+
+    #[test]
+    fn bucket_index_is_monotonic_and_bounds_bracket_the_value() {
+        let mut last = 0usize;
+        for &v in &[0u64, 1, 31, 32, 33, 63, 64, 100, 1_000, 65_535, 1 << 40, u64::MAX] {
+            let i = bucket_index(v);
+            assert!(i >= last, "index must not decrease: v={v}");
+            last = i;
+            let (lo, hi) = bucket_bounds(i);
+            assert!(lo <= v && v <= hi, "v={v} outside [{lo}, {hi}]");
+            assert!(i < BUCKETS);
+        }
+        // Linear region: exact single-value buckets.
+        for v in 0..SUB as u64 {
+            assert_eq!(bucket_bounds(bucket_index(v)), (v, v));
+        }
+    }
+
+    #[test]
+    fn histogram_p95_matches_nearest_rank_on_identical_samples() {
+        // The acceptance criterion: same samples into the histogram and the
+        // exact sorted computation — the ceiling-rank bucket must bracket
+        // the exact nearest-rank answer, and be exact below 32.
+        let cases: Vec<Vec<u64>> = vec![
+            (1..=10).collect(),
+            vec![7],
+            vec![3, 400],
+            (0..32).collect(),
+            (0..5000).map(|i| (i * 7919) % 100_000).collect(),
+        ];
+        for samples in cases {
+            let h = LogLinearHistogram::new();
+            for &s in &samples {
+                h.record(s);
+            }
+            let mut sorted = samples.clone();
+            sorted.sort_unstable();
+            for pct in [50u64, 95, 100] {
+                let exact = percentile_nearest_rank(&sorted, pct);
+                let (lo, hi) = h.percentile_bounds(pct);
+                assert!(
+                    lo <= exact && exact <= hi,
+                    "pct {pct}: exact {exact} outside [{lo}, {hi}] (n={})",
+                    samples.len()
+                );
+                if exact < SUB as u64 {
+                    assert_eq!((lo, hi), (exact, exact), "linear range is exact");
+                }
+                // Sub-bucket resolution: ≤ 1/32 relative width.
+                assert!(hi - lo <= lo / SUB as u64 + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeroes() {
+        let h = LogLinearHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(95), 0);
+        assert_eq!(h.percentile_bounds(95), (0, 0));
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn percentile_is_clamped_to_the_observed_max() {
+        let h = LogLinearHistogram::new();
+        h.record(1_000_000);
+        // The raw bucket upper bound exceeds the sample; the clamp keeps the
+        // reported tail at the observed maximum.
+        assert_eq!(h.percentile(95), 1_000_000);
+    }
+
+    #[test]
+    fn registry_registration_is_idempotent_and_shared() {
+        let reg = MetricsRegistry::new();
+        let c1 = reg.counter(crate::obs::names::SPANS_DROPPED);
+        let c2 = reg.counter(crate::obs::names::SPANS_DROPPED);
+        c1.add(3);
+        c2.inc();
+        assert_eq!(c1.get(), 4, "same underlying counter");
+        let g = reg.gauge(crate::obs::names::FLEET_REPLICAS);
+        g.set(7);
+        assert_eq!(reg.gauge(crate::obs::names::FLEET_REPLICAS).get(), 7);
+    }
+
+    #[test]
+    fn exports_are_deterministic_for_identical_contents() {
+        let build = || {
+            let reg = MetricsRegistry::new();
+            reg.counter(crate::obs::names::SPANS_DROPPED).add(2);
+            reg.gauge(crate::obs::names::FLEET_REPLICAS).set(3);
+            let h = reg.histogram(crate::obs::names::STAGE_EXEC_NS);
+            for v in [10u64, 20, 30, 4000] {
+                h.record(v);
+            }
+            reg
+        };
+        let a = build();
+        let b = build();
+        assert_eq!(a.json_body(), b.json_body());
+        assert_eq!(a.prometheus_body(), b.prometheus_body());
+        assert!(a.json_body().contains("\"p95_ns\""));
+        assert!(a.prometheus_body().contains("quantile=\"0.95\""));
+    }
+}

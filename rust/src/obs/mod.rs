@@ -1,0 +1,575 @@
+//! Zero-overhead telemetry plane: hot-path span recorder, unified metrics
+//! registry, control-plane decision journal, and SLO-breach flight
+//! recorder.
+//!
+//! The plane has two rate regimes and keeps them strictly apart:
+//!
+//! - **Hot path** (per request / per batch): span events go into per-shard
+//!   lock-free [`SpanRing`]s and stage latencies into pre-resolved
+//!   [`LogLinearHistogram`] handles — `Relaxed` atomics on preallocated
+//!   storage, drop-don't-block on overflow. The ordering argument lives in
+//!   `docs/HOTPATH.md` §9. The cost is bench-gated (<5%) by the
+//!   `obs_span_overhead` section of `runtime_serve`.
+//! - **Control plane** (autoscaler cadence): scale decisions land in the
+//!   mutex-guarded [`DecisionJournal`]; an SLO breach freezes the trailing
+//!   telemetry window into a [`FlightDump`].
+//!
+//! Live and simulated fleets emit through one [`Sink`] trait, so a
+//! simulated trace and a live trace of the same scenario produce
+//! comparable per-kind span timelines (pinned by
+//! `rust/tests/integration_obs.rs`).
+
+pub mod flight;
+pub mod journal;
+pub mod metrics;
+pub mod span;
+
+pub use flight::FlightDump;
+pub use journal::{DecisionJournal, JournalEvent, JournalKind, DEFAULT_JOURNAL_CAPACITY};
+pub use metrics::{
+    Counter, Gauge, HistogramRow, LogLinearHistogram, MetricsRegistry, Stage,
+};
+pub use span::{SpanEvent, SpanKind, SpanRing, DEFAULT_SPAN_CAPACITY};
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// The metric-name constant table. Every obs metric name used anywhere in
+/// the crate lives here — call sites pass these constants into
+/// [`MetricsRegistry::counter`]/[`gauge`](MetricsRegistry::gauge)/
+/// [`histogram`](MetricsRegistry::histogram), never ad-hoc string literals
+/// (`rust/tests/registry_discipline.rs` lints this).
+pub mod names {
+    /// Enqueue → batch-dispatch wait, per request (ns histogram).
+    pub const STAGE_QUEUE_WAIT_NS: &str = "obs_stage_queue_wait_ns";
+    /// Window-open → batch-dispatch hold, per batch (ns histogram).
+    pub const STAGE_COALESCE_NS: &str = "obs_stage_coalesce_ns";
+    /// Batch-dispatch → completion, per batch (ns histogram).
+    pub const STAGE_EXEC_NS: &str = "obs_stage_exec_ns";
+    /// Spans committed across all rings (derived counter).
+    pub const SPANS_RECORDED: &str = "obs_spans_recorded";
+    /// Spans refused by full rings (derived counter).
+    pub const SPANS_DROPPED: &str = "obs_spans_dropped";
+    /// Control-plane journal events recorded (counter).
+    pub const JOURNAL_EVENTS: &str = "obs_journal_events";
+    /// Flight-recorder dumps captured (counter).
+    pub const FLIGHTS_CAPTURED: &str = "obs_flights_captured";
+    /// Current fleet replica total (gauge, set by the controller).
+    pub const FLEET_REPLICAS: &str = "obs_fleet_replicas";
+
+    /// Every obs metric name (export and lint tests iterate it).
+    pub const ALL: &[&str] = &[
+        STAGE_QUEUE_WAIT_NS,
+        STAGE_COALESCE_NS,
+        STAGE_EXEC_NS,
+        SPANS_RECORDED,
+        SPANS_DROPPED,
+        JOURNAL_EVENTS,
+        FLIGHTS_CAPTURED,
+        FLEET_REPLICAS,
+    ];
+}
+
+/// Minimal JSON string escaping for the deterministic hand-rolled exports.
+pub(crate) fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// The one event interface both fleets emit through. The live coordinator
+/// implements it over wall-clock spans and per-shard rings; `SimFleet`
+/// calls the same methods on the virtual clock — which is exactly what
+/// makes simulated and live timelines comparable.
+pub trait Sink: Send + Sync {
+    /// A hot-path span event fired.
+    fn span(&self, ev: SpanEvent);
+    /// A per-request or per-batch stage latency sample (ns).
+    fn stage(&self, stage: Stage, ns: u64);
+    /// A control-plane decision was taken.
+    fn journal(&self, ev: JournalEvent);
+}
+
+/// A shard-local recording handle: the shard's span ring plus pre-resolved
+/// stage-histogram `Arc`s. Cloned once at worker start; recording through
+/// it never touches a registry map or any mutex.
+#[derive(Clone, Debug)]
+pub struct SpanScope {
+    ring: Arc<SpanRing>,
+    epoch: Instant,
+    queue_wait: Arc<LogLinearHistogram>,
+    coalesce: Arc<LogLinearHistogram>,
+    exec: Arc<LogLinearHistogram>,
+}
+
+impl SpanScope {
+    /// Nanoseconds since the telemetry epoch.
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Record a span stamped with the current time.
+    pub fn span(&self, kind: SpanKind, value: u64) {
+        self.ring.record(SpanEvent::new(self.now_ns(), kind, value));
+    }
+
+    /// Record a span at an explicit timestamp (virtual-clock emitters).
+    pub fn span_at(&self, t_ns: u64, kind: SpanKind, value: u64) {
+        self.ring.record(SpanEvent::new(t_ns, kind, value));
+    }
+
+    /// Record a stage latency sample.
+    pub fn stage(&self, stage: Stage, ns: u64) {
+        match stage {
+            Stage::QueueWait => self.queue_wait.record(ns),
+            Stage::Coalesce => self.coalesce.record(ns),
+            Stage::Exec => self.exec.record(ns),
+        }
+    }
+
+    /// The scope's backing ring (tests inspect drop accounting through it).
+    pub fn ring(&self) -> &Arc<SpanRing> {
+        &self.ring
+    }
+}
+
+struct RingEntry {
+    network: String,
+    replica: usize,
+    ring: Arc<SpanRing>,
+}
+
+/// The telemetry plane: owns the span rings, the metrics registry, the
+/// decision journal, and the flight recorder. One instance per fleet
+/// (live or simulated); shared by `Arc`.
+pub struct Telemetry {
+    epoch: Instant,
+    span_capacity: usize,
+    /// Ring for emitters without a shard identity (the [`Sink`] path the
+    /// simulator uses).
+    hub: Arc<SpanRing>,
+    rings: Mutex<Vec<RingEntry>>,
+    registry: MetricsRegistry,
+    queue_wait: Arc<LogLinearHistogram>,
+    coalesce: Arc<LogLinearHistogram>,
+    exec: Arc<LogLinearHistogram>,
+    journal: DecisionJournal,
+    journal_events: Arc<Counter>,
+    flights_captured: Arc<Counter>,
+    flight_window_ms: f64,
+    flights: Mutex<Vec<FlightDump>>,
+    flight_armed: Mutex<BTreeSet<String>>,
+}
+
+/// Default flight-recorder window: the trailing telemetry frozen on breach.
+pub const DEFAULT_FLIGHT_WINDOW_MS: f64 = 10_000.0;
+
+impl Telemetry {
+    /// Telemetry plane with default span capacity and flight window.
+    pub fn new() -> Telemetry {
+        Telemetry::with_span_capacity(DEFAULT_SPAN_CAPACITY)
+    }
+
+    /// Telemetry plane whose rings hold `span_capacity` events each.
+    pub fn with_span_capacity(span_capacity: usize) -> Telemetry {
+        let registry = MetricsRegistry::new();
+        let queue_wait = registry.histogram(names::STAGE_QUEUE_WAIT_NS);
+        let coalesce = registry.histogram(names::STAGE_COALESCE_NS);
+        let exec = registry.histogram(names::STAGE_EXEC_NS);
+        let journal_events = registry.counter(names::JOURNAL_EVENTS);
+        let flights_captured = registry.counter(names::FLIGHTS_CAPTURED);
+        Telemetry {
+            epoch: Instant::now(),
+            span_capacity,
+            hub: Arc::new(SpanRing::new(span_capacity)),
+            rings: Mutex::new(Vec::new()),
+            registry,
+            queue_wait,
+            coalesce,
+            exec,
+            journal: DecisionJournal::default(),
+            journal_events,
+            flights_captured,
+            flight_window_ms: DEFAULT_FLIGHT_WINDOW_MS,
+            flights: Mutex::new(Vec::new()),
+            flight_armed: Mutex::new(BTreeSet::new()),
+        }
+    }
+
+    /// Override the flight-recorder window.
+    pub fn with_flight_window_ms(mut self, window_ms: f64) -> Telemetry {
+        self.flight_window_ms = window_ms.max(0.0);
+        self
+    }
+
+    /// Nanoseconds since this plane attached.
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// The span ring registered for `(network, replica)`, creating it on
+    /// first use. Control-plane rate: shards call this once at start.
+    pub fn ring_for(&self, network: &str, replica: usize) -> Arc<SpanRing> {
+        let mut rings = self.rings.lock().unwrap();
+        if let Some(e) =
+            rings.iter().find(|e| e.network == network && e.replica == replica)
+        {
+            return Arc::clone(&e.ring);
+        }
+        let ring = Arc::new(SpanRing::new(self.span_capacity));
+        rings.push(RingEntry {
+            network: network.to_string(),
+            replica,
+            ring: Arc::clone(&ring),
+        });
+        ring
+    }
+
+    /// A shard-local recording scope over `(network, replica)`'s ring with
+    /// the stage histograms pre-resolved.
+    pub fn scope_for(&self, network: &str, replica: usize) -> SpanScope {
+        SpanScope {
+            ring: self.ring_for(network, replica),
+            epoch: self.epoch,
+            queue_wait: Arc::clone(&self.queue_wait),
+            coalesce: Arc::clone(&self.coalesce),
+            exec: Arc::clone(&self.exec),
+        }
+    }
+
+    /// A recording scope over the hub ring (virtual-clock emitters).
+    pub fn hub_scope(&self) -> SpanScope {
+        SpanScope {
+            ring: Arc::clone(&self.hub),
+            epoch: self.epoch,
+            queue_wait: Arc::clone(&self.queue_wait),
+            coalesce: Arc::clone(&self.coalesce),
+            exec: Arc::clone(&self.exec),
+        }
+    }
+
+    /// The unified metrics registry.
+    pub fn registry(&self) -> &MetricsRegistry {
+        &self.registry
+    }
+
+    /// The control-plane decision journal.
+    pub fn journal(&self) -> &DecisionJournal {
+        &self.journal
+    }
+
+    /// Record one control-plane decision.
+    pub fn record_decision(&self, ev: JournalEvent) {
+        self.journal_events.inc();
+        self.journal.record(ev);
+    }
+
+    fn all_spans(&self) -> Vec<SpanEvent> {
+        let mut spans = self.hub.snapshot();
+        for e in self.rings.lock().unwrap().iter() {
+            spans.extend(e.ring.snapshot());
+        }
+        spans.sort_by_key(|s| (s.t_ns, s.kind as u8, s.value));
+        spans
+    }
+
+    /// Committed span count per kind, summed across every ring.
+    pub fn span_kind_counts(&self) -> BTreeMap<&'static str, u64> {
+        let mut counts: BTreeMap<&'static str, u64> =
+            SpanKind::ALL.iter().map(|k| (k.name(), 0)).collect();
+        for s in self.all_spans() {
+            *counts.get_mut(s.kind.name()).unwrap() += 1;
+        }
+        counts
+    }
+
+    /// Spans claimed across every ring over the plane's lifetime.
+    pub fn spans_recorded(&self) -> u64 {
+        let rings = self.rings.lock().unwrap();
+        self.hub.recorded() + rings.iter().map(|e| e.ring.recorded()).sum::<u64>()
+    }
+
+    /// Spans refused by full rings across every ring.
+    pub fn spans_dropped(&self) -> u64 {
+        let rings = self.rings.lock().unwrap();
+        self.hub.dropped() + rings.iter().map(|e| e.ring.dropped()).sum::<u64>()
+    }
+
+    /// Freeze the trailing telemetry window into a [`FlightDump`]. Fires at
+    /// most once per network until [`rearm_flight`](Telemetry::rearm_flight);
+    /// returns whether a capture happened. The span window is anchored at
+    /// the newest span (and the journal window at the newest journal event)
+    /// rather than at `t_ms`, so the capture is exact even when the
+    /// breach clock and the telemetry epoch differ.
+    pub fn flight_on_breach(&self, network: &str, t_ms: f64, reason: &str) -> bool {
+        {
+            let mut armed = self.flight_armed.lock().unwrap();
+            if armed.contains(network) {
+                return false;
+            }
+            armed.insert(network.to_string());
+        }
+        let window_ns = (self.flight_window_ms * 1e6) as u64;
+        let spans = self.all_spans();
+        let anchor_ns = spans.last().map(|s| s.t_ns).unwrap_or(0);
+        let lo_ns = anchor_ns.saturating_sub(window_ns);
+        let spans: Vec<SpanEvent> =
+            spans.into_iter().filter(|s| s.t_ns >= lo_ns).collect();
+        let journal = self.journal.snapshot();
+        let anchor_ms = journal.last().map(|e| e.t_ms).unwrap_or(0.0);
+        let lo_ms = anchor_ms - self.flight_window_ms;
+        let journal: Vec<JournalEvent> =
+            journal.into_iter().filter(|e| e.t_ms >= lo_ms).collect();
+        self.flights_captured.inc();
+        self.flights.lock().unwrap().push(FlightDump {
+            network: network.to_string(),
+            t_ms,
+            reason: reason.to_string(),
+            window_ms: self.flight_window_ms,
+            spans,
+            journal,
+        });
+        true
+    }
+
+    /// Take ownership of every captured flight dump (oldest first).
+    pub fn take_flights(&self) -> Vec<FlightDump> {
+        std::mem::take(&mut *self.flights.lock().unwrap())
+    }
+
+    /// Re-arm the flight recorder for `network` so the next breach captures
+    /// again.
+    pub fn rearm_flight(&self, network: &str) {
+        self.flight_armed.lock().unwrap().remove(network);
+    }
+
+    /// Deterministic JSON snapshot of the whole plane (top-level key
+    /// `"obs"`): span accounting, registry contents (counters, gauges,
+    /// stage histograms), and journal summary with retained events.
+    pub fn export_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n  \"obs\": {\n");
+        out.push_str(&format!(
+            "    \"spans\": {{\"{}\": {}, \"{}\": {}, \"kinds\": {{",
+            names::SPANS_RECORDED,
+            self.spans_recorded(),
+            names::SPANS_DROPPED,
+            self.spans_dropped()
+        ));
+        for (i, (name, n)) in self.span_kind_counts().iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!("\"{name}\": {n}"));
+        }
+        out.push_str("}},\n");
+        out.push_str(&self.registry.json_body());
+        out.push_str(",\n");
+        out.push_str(&format!(
+            "    \"journal\": {{\"total_recorded\": {}, \"retained\": {}, \"events\": {}}}\n",
+            self.journal.total_recorded(),
+            self.journal.len(),
+            self.journal.to_json()
+        ));
+        out.push_str("  }\n}\n");
+        out
+    }
+
+    /// Prometheus text exposition of the registry plus the derived span
+    /// counters.
+    pub fn export_prometheus(&self) -> String {
+        let mut out = self.registry.prometheus_body();
+        out.push_str(&format!(
+            "# TYPE {name} counter\n{name} {}\n",
+            self.spans_recorded(),
+            name = names::SPANS_RECORDED
+        ));
+        out.push_str(&format!(
+            "# TYPE {name} counter\n{name} {}\n",
+            self.spans_dropped(),
+            name = names::SPANS_DROPPED
+        ));
+        out
+    }
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Telemetry::new()
+    }
+}
+
+impl Sink for Telemetry {
+    fn span(&self, ev: SpanEvent) {
+        self.hub.record(ev);
+    }
+
+    fn stage(&self, stage: Stage, ns: u64) {
+        match stage {
+            Stage::QueueWait => self.queue_wait.record(ns),
+            Stage::Coalesce => self.coalesce.record(ns),
+            Stage::Exec => self.exec.record(ns),
+        }
+    }
+
+    fn journal(&self, ev: JournalEvent) {
+        self.record_decision(ev);
+    }
+}
+
+impl std::fmt::Debug for Telemetry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Telemetry")
+            .field("spans_recorded", &self.spans_recorded())
+            .field("spans_dropped", &self.spans_dropped())
+            .field("journal_len", &self.journal.len())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scope_records_into_the_shard_ring_and_shared_stage_histograms() {
+        let t = Telemetry::new();
+        let scope = t.scope_for("tiny_q8", 0);
+        scope.span_at(10, SpanKind::Enqueue, 1);
+        scope.span_at(20, SpanKind::Route, 0);
+        scope.stage(Stage::QueueWait, 500);
+        scope.stage(Stage::Exec, 9_000);
+        assert_eq!(t.spans_recorded(), 2);
+        assert_eq!(t.span_kind_counts()["enqueue"], 1);
+        assert_eq!(t.span_kind_counts()["route"], 1);
+        assert_eq!(t.registry().histogram(names::STAGE_QUEUE_WAIT_NS).count(), 1);
+        assert_eq!(t.registry().histogram(names::STAGE_EXEC_NS).count(), 1);
+    }
+
+    #[test]
+    fn ring_for_is_idempotent_per_shard_identity() {
+        let t = Telemetry::new();
+        let a = t.ring_for("net", 0);
+        let b = t.ring_for("net", 0);
+        let c = t.ring_for("net", 1);
+        a.record(SpanEvent::new(1, SpanKind::Enqueue, 0));
+        assert_eq!(b.recorded(), 1, "same ring");
+        assert_eq!(c.recorded(), 0, "distinct replica, distinct ring");
+    }
+
+    #[test]
+    fn sink_impl_routes_to_hub_ring_and_stage_histograms() {
+        let t = Telemetry::new();
+        let sink: &dyn Sink = &t;
+        sink.span(SpanEvent::new(5, SpanKind::WindowOpen, 0));
+        sink.stage(Stage::Coalesce, 1_000);
+        sink.journal(JournalEvent {
+            t_ms: 1.0,
+            kind: JournalKind::PolicySwap,
+            network: String::new(),
+            device: None,
+            from_replicas: 0,
+            to_replicas: 0,
+            reason: "swap".to_string(),
+            inputs: vec![],
+        });
+        assert_eq!(t.span_kind_counts()["window_open"], 1);
+        assert_eq!(t.registry().histogram(names::STAGE_COALESCE_NS).count(), 1);
+        assert_eq!(t.journal().len(), 1);
+        assert_eq!(t.registry().counter(names::JOURNAL_EVENTS).get(), 1);
+    }
+
+    #[test]
+    fn flight_fires_once_per_network_until_rearmed() {
+        let t = Telemetry::with_span_capacity(64).with_flight_window_ms(1_000.0);
+        let scope = t.scope_for("tiny_q8", 0);
+        scope.span_at(100, SpanKind::Enqueue, 0);
+        assert!(t.flight_on_breach("tiny_q8", 5.0, "p95 breach"));
+        assert!(!t.flight_on_breach("tiny_q8", 6.0, "p95 breach again"));
+        assert!(t.flight_on_breach("other", 6.0, "independent network"));
+        t.rearm_flight("tiny_q8");
+        assert!(t.flight_on_breach("tiny_q8", 7.0, "after rearm"));
+        let flights = t.take_flights();
+        assert_eq!(flights.len(), 3);
+        assert_eq!(flights[0].spans.len(), 1, "trailing window captured");
+        assert!(t.take_flights().is_empty(), "take drains");
+        assert_eq!(t.registry().counter(names::FLIGHTS_CAPTURED).get(), 3);
+    }
+
+    #[test]
+    fn flight_window_filters_old_spans_anchored_at_the_newest() {
+        let t = Telemetry::with_span_capacity(64).with_flight_window_ms(1.0);
+        let scope = t.scope_for("n", 0);
+        scope.span_at(0, SpanKind::Enqueue, 0); // 2 ms before the newest
+        scope.span_at(2_000_000, SpanKind::Enqueue, 1);
+        assert!(t.flight_on_breach("n", 99.0, "breach"));
+        let flights = t.take_flights();
+        assert_eq!(flights[0].spans.len(), 1, "1 ms window keeps only the newest");
+        assert_eq!(flights[0].spans[0].value, 1);
+    }
+
+    #[test]
+    fn export_json_is_deterministic_and_carries_every_section() {
+        let build = || {
+            let t = Telemetry::new();
+            let scope = t.scope_for("tiny_q8", 0);
+            scope.span_at(10, SpanKind::Enqueue, 0);
+            scope.span_at(20, SpanKind::BatchStart, 4);
+            scope.stage(Stage::Exec, 1_234);
+            t.record_decision(JournalEvent {
+                t_ms: 3.0,
+                kind: JournalKind::ScaleUp,
+                network: "tiny_q8".to_string(),
+                device: None,
+                from_replicas: 1,
+                to_replicas: 2,
+                reason: "overload".to_string(),
+                inputs: vec![("overload_rate".to_string(), 0.5)],
+            });
+            t.export_json()
+        };
+        let a = build();
+        assert_eq!(a, build());
+        assert!(a.starts_with("{\n  \"obs\": {"));
+        for needle in [
+            "\"obs_spans_recorded\": 2",
+            "\"enqueue\": 1",
+            "\"batch_start\": 1",
+            names::STAGE_EXEC_NS,
+            "\"total_recorded\": 1",
+            "\"kind\": \"scale_up\"",
+        ] {
+            assert!(a.contains(needle), "missing {needle} in {a}");
+        }
+    }
+
+    #[test]
+    fn prometheus_export_carries_span_counters_and_stage_summaries() {
+        let t = Telemetry::new();
+        t.scope_for("n", 0).span_at(1, SpanKind::Enqueue, 0);
+        t.hub_scope().stage(Stage::QueueWait, 10);
+        let prom = t.export_prometheus();
+        assert!(prom.contains("obs_spans_recorded 1"));
+        assert!(prom.contains("obs_spans_dropped 0"));
+        assert!(prom.contains("# TYPE obs_stage_queue_wait_ns summary"));
+        assert!(prom.contains("obs_stage_queue_wait_ns_count 1"));
+    }
+
+    #[test]
+    fn json_escape_handles_quotes_backslashes_and_control_chars() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+        assert_eq!(json_escape("plain"), "plain");
+    }
+}

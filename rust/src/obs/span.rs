@@ -1,0 +1,336 @@
+//! Hot-path span recorder: a lock-free bounded ring of fixed-size span
+//! events, one ring per shard (plus a hub ring for virtual-clock emitters).
+//!
+//! The ring follows the same never-block discipline as the admission path it
+//! instruments (`docs/HOTPATH.md` §9): a writer claims a slot with one
+//! `Relaxed` CAS on the head cursor, stores the event fields with `Relaxed`
+//! stores, and publishes the slot with a single `Release` tag store. When the
+//! ring is full the writer gives up immediately and bumps a drop counter —
+//! recording a span can never stall `try_submit`, the worker loop, or a
+//! completion. Slots are preallocated atomics and are never freed or resized
+//! (the retire-don't-free discipline of `coordinator::epoch`, degenerated to
+//! "never retire"): a torn read during a drain race yields a stale event,
+//! never undefined behaviour, and the commit tag filters it out.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Span event kinds, one per instrumented hot-path stage (the admission →
+/// completion walkthrough of `docs/HOTPATH.md`). The discriminant is packed
+/// into the slot word, so the set is frozen at 8 bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum SpanKind {
+    /// A request entered a shard's bounded queue (per request).
+    Enqueue = 0,
+    /// The router picked a replica for a request (per request).
+    Route = 1,
+    /// A coalescing window opened on a worker (per batch).
+    WindowOpen = 2,
+    /// The window closed and the batch was frozen (per batch).
+    WindowClose = 3,
+    /// Batch execution started (per batch).
+    BatchStart = 4,
+    /// Batch execution finished (per batch).
+    BatchEnd = 5,
+    /// A request's completion guard released its admission slot
+    /// (per request).
+    GuardRelease = 6,
+}
+
+impl SpanKind {
+    /// Every kind, in discriminant order (export + parity tests iterate it).
+    pub const ALL: [SpanKind; 7] = [
+        SpanKind::Enqueue,
+        SpanKind::Route,
+        SpanKind::WindowOpen,
+        SpanKind::WindowClose,
+        SpanKind::BatchStart,
+        SpanKind::BatchEnd,
+        SpanKind::GuardRelease,
+    ];
+
+    /// Stable snake_case name used in every export format.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Enqueue => "enqueue",
+            SpanKind::Route => "route",
+            SpanKind::WindowOpen => "window_open",
+            SpanKind::WindowClose => "window_close",
+            SpanKind::BatchStart => "batch_start",
+            SpanKind::BatchEnd => "batch_end",
+            SpanKind::GuardRelease => "guard_release",
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<SpanKind> {
+        SpanKind::ALL.get(v as usize).copied()
+    }
+}
+
+/// Bits of a slot word carrying the event value; the kind rides the top byte.
+const VALUE_BITS: u32 = 56;
+const VALUE_MASK: u64 = (1 << VALUE_BITS) - 1;
+
+/// One fixed-size span event. `t_ns` counts from the telemetry epoch (live:
+/// process attach instant; simulated: virtual-clock zero), so live and
+/// simulated timelines are directly comparable. `value` is a small payload —
+/// batch size, queue depth, replica index — clamped to 56 bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanEvent {
+    /// Nanoseconds since the telemetry epoch.
+    pub t_ns: u64,
+    /// Which hot-path stage fired.
+    pub kind: SpanKind,
+    /// Stage payload (batch size, queue depth, replica index, latency ns).
+    pub value: u64,
+}
+
+impl SpanEvent {
+    /// Build an event, clamping `value` to the 56 bits a slot word carries.
+    pub fn new(t_ns: u64, kind: SpanKind, value: u64) -> SpanEvent {
+        SpanEvent { t_ns, kind, value: value & VALUE_MASK }
+    }
+}
+
+/// One preallocated slot: commit tag + the two event words, all atomic so a
+/// racing read is at worst stale, never UB.
+struct Slot {
+    /// `ticket + 1` once the event is published; 0 or a stale lap otherwise.
+    seq: AtomicU64,
+    t_ns: AtomicU64,
+    packed: AtomicU64,
+}
+
+/// Default span capacity per ring — matches the latency ring's window.
+pub const DEFAULT_SPAN_CAPACITY: usize = 4096;
+
+/// Lock-free bounded ring of [`SpanEvent`]s with drop-don't-block overflow.
+///
+/// Writers (`record`) are lock-free: one CAS claims a ticket, plain atomic
+/// stores fill the slot, and a full ring costs exactly one `Relaxed`
+/// counter bump. Readers (`snapshot`/`drain`) serialize among themselves on
+/// a mutex writers never touch; `drain` advances the tail, freeing capacity
+/// (the flight recorder's consumption side).
+pub struct SpanRing {
+    slots: Box<[Slot]>,
+    /// Tickets claimed (monotonic; equals committed spans at quiescence).
+    head: AtomicU64,
+    /// Tickets consumed by `drain`.
+    tail: AtomicU64,
+    /// Spans rejected because the ring was full.
+    dropped: AtomicU64,
+    /// Reader-side exclusion only — the hot path never locks it.
+    reader: Mutex<()>,
+}
+
+impl SpanRing {
+    /// Ring holding at most `capacity` undrained spans (min 1).
+    pub fn new(capacity: usize) -> SpanRing {
+        let cap = capacity.max(1);
+        SpanRing {
+            slots: (0..cap)
+                .map(|_| Slot {
+                    seq: AtomicU64::new(0),
+                    t_ns: AtomicU64::new(0),
+                    packed: AtomicU64::new(0),
+                })
+                .collect(),
+            head: AtomicU64::new(0),
+            tail: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            reader: Mutex::new(()),
+        }
+    }
+
+    /// Record one span, or bump the drop counter if the ring is full. Never
+    /// blocks, never overwrites an undrained span: the capacity check rides
+    /// the CAS retry loop, so claims stop exactly at `tail + capacity` and
+    /// every refused span is accounted for.
+    pub fn record(&self, ev: SpanEvent) {
+        let cap = self.slots.len() as u64;
+        let mut h = self.head.load(Ordering::Relaxed);
+        loop {
+            if h.wrapping_sub(self.tail.load(Ordering::Relaxed)) >= cap {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            match self.head.compare_exchange_weak(h, h + 1, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(cur) => h = cur,
+            }
+        }
+        let slot = &self.slots[(h % cap) as usize];
+        slot.t_ns.store(ev.t_ns, Ordering::Relaxed);
+        slot.packed.store(
+            ((ev.kind as u64) << VALUE_BITS) | (ev.value & VALUE_MASK),
+            Ordering::Relaxed,
+        );
+        // The only non-Relaxed store: publishing the tag Release-pairs with
+        // the reader's Acquire load, so a reader that sees the tag sees the
+        // event words it covers.
+        slot.seq.store(h + 1, Ordering::Release);
+    }
+
+    /// Spans successfully claimed by the ring over its lifetime.
+    pub fn recorded(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    /// Spans refused because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Undrained spans currently held (committed or mid-commit).
+    pub fn len(&self) -> usize {
+        let head = self.head.load(Ordering::Relaxed);
+        head.wrapping_sub(self.tail.load(Ordering::Relaxed)) as usize
+    }
+
+    /// True when no undrained span is held.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Maximum undrained spans.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn read_range(&self) -> Vec<SpanEvent> {
+        let cap = self.slots.len() as u64;
+        let tail = self.tail.load(Ordering::Relaxed);
+        let head = self.head.load(Ordering::Relaxed);
+        let mut out = Vec::with_capacity(head.wrapping_sub(tail) as usize);
+        for ticket in tail..head {
+            let slot = &self.slots[(ticket % cap) as usize];
+            // Skip tickets still mid-commit (tag not yet published).
+            if slot.seq.load(Ordering::Acquire) != ticket + 1 {
+                continue;
+            }
+            let packed = slot.packed.load(Ordering::Relaxed);
+            if let Some(kind) = SpanKind::from_u8((packed >> VALUE_BITS) as u8) {
+                out.push(SpanEvent {
+                    t_ns: slot.t_ns.load(Ordering::Relaxed),
+                    kind,
+                    value: packed & VALUE_MASK,
+                });
+            }
+        }
+        out
+    }
+
+    /// Copy out the committed undrained spans, oldest first, without
+    /// consuming them.
+    pub fn snapshot(&self) -> Vec<SpanEvent> {
+        let _guard = self.reader.lock().unwrap();
+        self.read_range()
+    }
+
+    /// Copy out the committed undrained spans and advance the tail, freeing
+    /// their capacity for new records.
+    pub fn drain(&self) -> Vec<SpanEvent> {
+        let _guard = self.reader.lock().unwrap();
+        let out = self.read_range();
+        let head = self.head.load(Ordering::Relaxed);
+        self.tail.store(head, Ordering::Relaxed);
+        out
+    }
+}
+
+impl std::fmt::Debug for SpanRing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SpanRing")
+            .field("capacity", &self.capacity())
+            .field("recorded", &self.recorded())
+            .field("dropped", &self.dropped())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn ev(kind: SpanKind, t_ns: u64, value: u64) -> SpanEvent {
+        SpanEvent { t_ns, kind, value }
+    }
+
+    #[test]
+    fn overflow_drops_and_accounts_instead_of_blocking() {
+        let ring = SpanRing::new(8);
+        for i in 0..20u64 {
+            ring.record(ev(SpanKind::Enqueue, i, i));
+        }
+        assert_eq!(ring.recorded(), 8, "claims stop exactly at capacity");
+        assert_eq!(ring.dropped(), 12, "every refused span is counted");
+        assert_eq!(ring.recorded() + ring.dropped(), 20, "no span unaccounted");
+        let snap = ring.snapshot();
+        assert_eq!(snap.len(), 8);
+        // Oldest-first ticket order, and the retained spans are the FIRST
+        // eight — full means drop-new, never overwrite-old.
+        for (i, e) in snap.iter().enumerate() {
+            assert_eq!(e.t_ns, i as u64);
+            assert_eq!(e.value, i as u64);
+        }
+    }
+
+    #[test]
+    fn drain_frees_capacity_and_consumes_in_order() {
+        let ring = SpanRing::new(4);
+        for i in 0..4u64 {
+            ring.record(ev(SpanKind::Route, i, 100 + i));
+        }
+        let first = ring.drain();
+        assert_eq!(first.len(), 4);
+        assert!(ring.is_empty());
+        ring.record(ev(SpanKind::BatchStart, 9, 3));
+        assert_eq!(ring.dropped(), 0, "drained slots are reusable");
+        let second = ring.drain();
+        assert_eq!(second, vec![ev(SpanKind::BatchStart, 9, 3)]);
+    }
+
+    #[test]
+    fn value_payload_is_clamped_to_56_bits() {
+        let ring = SpanRing::new(2);
+        ring.record(ev(SpanKind::GuardRelease, 1, u64::MAX));
+        let snap = ring.snapshot();
+        assert_eq!(snap[0].kind, SpanKind::GuardRelease);
+        assert_eq!(snap[0].value, VALUE_MASK);
+    }
+
+    #[test]
+    fn concurrent_storm_never_loses_the_accounting_invariant() {
+        // N threads race more records than the ring holds: claimed + dropped
+        // must equal attempts exactly, and claims never exceed capacity.
+        let ring = Arc::new(SpanRing::new(64));
+        let threads = 8usize;
+        let per_thread = 100u64;
+        std::thread::scope(|scope| {
+            for t in 0..threads {
+                let r = Arc::clone(&ring);
+                scope.spawn(move || {
+                    for i in 0..per_thread {
+                        r.record(ev(SpanKind::Enqueue, i, t as u64));
+                    }
+                });
+            }
+        });
+        let attempts = threads as u64 * per_thread;
+        assert_eq!(ring.recorded() + ring.dropped(), attempts);
+        assert_eq!(ring.recorded(), 64, "exactly capacity claims succeed");
+        assert_eq!(ring.snapshot().len(), 64, "all claims committed");
+    }
+
+    #[test]
+    fn kind_names_are_stable_and_roundtrip() {
+        for (i, k) in SpanKind::ALL.iter().enumerate() {
+            assert_eq!(SpanKind::from_u8(i as u8), Some(*k));
+            assert!(!k.name().is_empty());
+        }
+        assert_eq!(SpanKind::from_u8(200), None);
+    }
+}

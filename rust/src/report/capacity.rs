@@ -70,6 +70,19 @@ pub fn capacity_table(r: &CapacityReport) -> String {
     for d in &r.decisions {
         out.push_str(&format!("  {d}\n"));
     }
+    if !r.stages.is_empty() {
+        out.push_str("\nper-stage latency breakdown (virtual ns, telemetry plane):\n");
+        out.push_str(&format!(
+            "  {:<26} {:>9} {:>12} {:>10} {:>10} {:>10}\n",
+            "stage", "samples", "mean", "p50", "p95", "max"
+        ));
+        for s in &r.stages {
+            out.push_str(&format!(
+                "  {:<26} {:>9} {:>12.1} {:>10} {:>10} {:>10}\n",
+                s.name, s.count, s.mean_ns, s.p50_ns, s.p95_ns, s.max_ns
+            ));
+        }
+    }
     out
 }
 
@@ -112,6 +125,7 @@ mod tests {
             decisions: vec!["t=+50.000ms scale-up lenet_q8 1→2: test".into()],
             scale_ups: 1,
             scale_downs: 0,
+            stages: vec![],
         }
     }
 

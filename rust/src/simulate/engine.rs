@@ -60,9 +60,11 @@ use crate::coordinator::service::ServiceStats;
 use crate::coordinator::shard::aggregate;
 use crate::coordinator::{CoalescePolicy, Router, ShardSpec, ShardStats, ShardedStats};
 use crate::fleetplan::{Autoscaler, ScaleDecision, ScaleTarget};
+use crate::obs::{Sink, SpanEvent, SpanKind, Stage};
 use crate::util::error::{Error, Result};
 use crate::util::stats::window_mean_p95;
 use std::collections::{BTreeMap, VecDeque};
+use std::sync::Arc;
 
 /// Per-replica rolling latency window (mirrors the live service's bounded
 /// ring: stats reflect *recent* completions, not lifetime history).
@@ -210,6 +212,9 @@ struct SimReplica {
     /// Superseded deadlines stay in the heap; their events are recognized
     /// as stale (`at != dispatch_at`) and ignored.
     dispatch_at: Option<SimNs>,
+    /// Virtual time the in-flight batch started service (telemetry's exec
+    /// stage measures completion − dispatch, as the live worker does).
+    dispatched_at: SimNs,
     served: u64,
     batches: u64,
     rejected: u64,
@@ -309,6 +314,11 @@ pub struct SimFleet {
     contention_alpha: f64,
     next_id: u64,
     events: u64,
+    /// Telemetry sink ([`crate::obs::Telemetry`] in practice): when set, the
+    /// engine emits the SAME span kinds and stage samples the live
+    /// coordinator does, stamped with the virtual clock — sim/live parity is
+    /// pinned by `rust/tests/integration_obs.rs`.
+    sink: Option<Arc<dyn Sink>>,
 }
 
 impl SimFleet {
@@ -331,6 +341,7 @@ impl SimFleet {
             contention_alpha: DEFAULT_CONTENTION_ALPHA,
             next_id: 0,
             events: 0,
+            sink: None,
         };
         for m in models {
             if fleet.models.contains_key(&m.network) {
@@ -353,6 +364,13 @@ impl SimFleet {
     /// default is [`DEFAULT_CONTENTION_ALPHA`]).
     pub fn set_contention_alpha(&mut self, alpha: f64) {
         self.contention_alpha = alpha.max(0.0);
+    }
+
+    /// Attach a telemetry sink: every admission, window, batch and
+    /// completion emits the same span kinds / stage samples as the live
+    /// coordinator, stamped with virtual time.
+    pub fn set_sink(&mut self, sink: Arc<dyn Sink>) {
+        self.sink = Some(sink);
     }
 
     fn intern(&mut self, network: &str) -> u32 {
@@ -417,6 +435,7 @@ impl SimFleet {
             in_flight: Vec::new(),
             window_opened_at: 0,
             dispatch_at: None,
+            dispatched_at: 0,
             served: 0,
             batches: 0,
             rejected: 0,
@@ -542,6 +561,18 @@ impl SimFleet {
         r.in_flight.clear();
         r.in_flight.extend(r.queue.drain(..b));
         r.batches += 1;
+        r.dispatched_at = now;
+        if let Some(sink) = &self.sink {
+            // Same per-batch emission as the live worker: the window closes,
+            // the coalesce hold is sampled, the batch starts, and each rider
+            // samples its enqueue → dispatch wait.
+            sink.span(SpanEvent::new(now, SpanKind::WindowClose, b as u64));
+            sink.stage(Stage::Coalesce, now.saturating_sub(r.window_opened_at));
+            sink.span(SpanEvent::new(now, SpanKind::BatchStart, b as u64));
+            for &arrived in &r.in_flight {
+                sink.stage(Stage::QueueWait, now.saturating_sub(arrived));
+            }
+        }
         let base = r.policy.batch_ns(b as u64);
         let service = if factor <= 1.0 {
             base
@@ -557,12 +588,18 @@ impl SimFleet {
     /// policy owes the backlog no wait.
     fn open_window(&mut self, idx: usize, now: SimNs) {
         let r = &mut self.replicas[idx];
+        // Opened unconditionally (even for zero-width windows): the live
+        // worker stamps the open on the first recv, before it knows the
+        // window will close instantly, so per-batch span counts match.
+        r.window_opened_at = now;
+        if let Some(sink) = &self.sink {
+            sink.span(SpanEvent::new(now, SpanKind::WindowOpen, 1));
+        }
         let w = r.policy.window_ns(r.queue.len());
         if w == 0 {
             self.dispatch(idx, now);
         } else {
             let deadline = now.saturating_add(w);
-            r.window_opened_at = now;
             r.dispatch_at = Some(deadline);
             let id = r.id;
             self.heap.push(deadline, SimEvent::Dispatch { replica_id: id });
@@ -599,15 +636,24 @@ impl SimFleet {
             self.dispatch(idx, at);
             return;
         }
-        let (net, batch, remove) = {
+        let (net, batch, remove, dispatched_at) = {
             let r = &mut self.replicas[idx];
             let batch: Vec<SimNs> = std::mem::take(&mut r.in_flight);
             r.served += batch.len() as u64;
             for &arrived in &batch {
                 r.record_latency((at - arrived).max(1));
             }
-            (r.net as usize, batch, r.draining && r.outstanding() == 0)
+            (r.net as usize, batch, r.draining && r.outstanding() == 0, r.dispatched_at)
         };
+        if let Some(sink) = &self.sink {
+            sink.span(SpanEvent::new(at, SpanKind::BatchEnd, batch.len() as u64));
+            sink.stage(Stage::Exec, at.saturating_sub(dispatched_at));
+            // One guard-release per rider, as each live reply path frees its
+            // admission slot.
+            for _ in &batch {
+                sink.span(SpanEvent::new(at, SpanKind::GuardRelease, 0));
+            }
+        }
         let t = &mut self.totals[net];
         for arrived in batch {
             t.completed += 1;
@@ -648,6 +694,13 @@ impl SimFleet {
             if r.outstanding() < r.queue_cap {
                 r.queue.push_back(at);
                 let ordinal = r.replica;
+                if let Some(sink) = &self.sink {
+                    // Admission spans in the live shard's order: Route
+                    // (chosen ordinal), then Enqueue (outstanding after the
+                    // push).
+                    sink.span(SpanEvent::new(at, SpanKind::Route, ordinal as u64));
+                    sink.span(SpanEvent::new(at, SpanKind::Enqueue, r.outstanding() as u64));
+                }
                 if r.in_flight.is_empty() {
                     match r.dispatch_at {
                         // Idle replica: this request opens the window.

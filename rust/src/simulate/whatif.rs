@@ -28,8 +28,10 @@ use crate::fleetplan::{
     PoolPlan, ReconfigPolicy, ScaleAction, SloPolicy, SpillPlan,
 };
 use crate::models::ModelRegistry;
+use crate::obs::{HistogramRow, Telemetry};
 use crate::platform::Platform;
 use crate::util::error::{Error, Result};
+use std::sync::Arc;
 
 /// Knobs for a what-if exploration.
 #[derive(Debug, Clone)]
@@ -70,6 +72,11 @@ pub struct WhatIfOptions {
     /// When the scenario's duration is 0 (auto), size it so at least this
     /// many arrivals are generated — the ≥1M-virtual-event knob.
     pub min_arrivals: u64,
+    /// Telemetry plane attached to the MAIN controlled run (bisection probe
+    /// runs stay silent): the fleet emits spans/stages on the virtual clock,
+    /// the controllers journal their decisions into it, and the report
+    /// embeds its per-stage latency breakdown.
+    pub obs: Option<Arc<Telemetry>>,
 }
 
 impl Default for WhatIfOptions {
@@ -87,6 +94,7 @@ impl Default for WhatIfOptions {
             sustain_overload: 0.01,
             probe_arrivals: 4_000,
             min_arrivals: 1_000_000,
+            obs: None,
         }
     }
 }
@@ -155,6 +163,9 @@ pub struct CapacityReport {
     pub scale_ups: usize,
     /// Scale-down count.
     pub scale_downs: usize,
+    /// Per-stage latency breakdown from the attached telemetry plane
+    /// ([`WhatIfOptions::obs`]); empty when no plane was attached.
+    pub stages: Vec<HistogramRow>,
 }
 
 pub(crate) fn json_escape(s: &str) -> String {
@@ -191,12 +202,17 @@ impl CapacityReport {
     ///      "rejected": 10, "overload_rate": 0.01, "mean_ms": 0.005,
     ///      "p95_ms": 0.009}],
     ///   "trajectory": [{"t_ms": 0.0, "network": "tiny_q8", "replicas": 1}],
-    ///   "decisions": ["t=+50.000ms scale-up tiny_q8 1→2: ..."]}}
+    ///   "decisions": ["t=+50.000ms scale-up tiny_q8 1→2: ..."],
+    ///   "stages": [
+    ///     {"stage": "obs_stage_exec_ns", "count": 990, "mean_ns": 4100.000,
+    ///      "p50_ns": 4063, "p95_ns": 4575, "max_ns": 4501}]}}
     /// ```
     ///
     /// `networks` rows are sorted by name; `trajectory` records the initial
     /// replica counts plus every change point; `decisions` renders each
-    /// controller step with its virtual timestamp.
+    /// controller step with its virtual timestamp; `stages` is the per-stage
+    /// latency breakdown (empty without [`WhatIfOptions::obs`], diffed by
+    /// `bench_diff.py --obs` against the full `OBS_snapshot.json`).
     pub fn to_json(&self) -> String {
         let mut out = String::new();
         out.push_str("{\n  \"simulate\": {\n");
@@ -258,6 +274,20 @@ impl CapacityReport {
                 "      \"{}\"{}\n",
                 json_escape(d),
                 if i + 1 == self.decisions.len() { "" } else { "," }
+            ));
+        }
+        out.push_str("    ],\n    \"stages\": [\n");
+        for (i, s) in self.stages.iter().enumerate() {
+            out.push_str(&format!(
+                "      {{\"stage\": \"{}\", \"count\": {}, \"mean_ns\": {:.3}, \
+                 \"p50_ns\": {}, \"p95_ns\": {}, \"max_ns\": {}}}{}\n",
+                s.name,
+                s.count,
+                s.mean_ns,
+                s.p50_ns,
+                s.p95_ns,
+                s.max_ns,
+                if i + 1 == self.stages.len() { "" } else { "," }
             ));
         }
         out.push_str("    ]\n  }\n}\n");
@@ -511,6 +541,10 @@ pub(crate) fn run_controlled_rows(
     // Start at the floors; the controller earns every further replica.
     let mut fleet = sim_fleet(rows, opts, |row| row.min_replicas)?;
     let mut scalers = scalers_for(rows, pool, opts, policy);
+    if let Some(obs) = &opts.obs {
+        fleet.set_sink(Arc::clone(obs));
+        scalers = scalers.into_iter().map(|s| s.with_obs(Arc::clone(obs))).collect();
+    }
     let run = simulate_trace(
         &mut fleet,
         trace,
@@ -582,6 +616,10 @@ fn explore_with_trace(
         run.decisions.iter().map(|d| format!("t=+{:.3}ms {}", d.at_ms, d)).collect();
 
     let max_qps = max_sustainable_qps(rows, mix, seed, opts)?;
+    let stages = match &opts.obs {
+        Some(obs) => obs.registry().histogram_rows(),
+        None => Vec::new(),
+    };
     Ok(CapacityReport {
         scenario: scenario_name.to_string(),
         seed,
@@ -597,6 +635,7 @@ fn explore_with_trace(
         decisions,
         scale_ups,
         scale_downs,
+        stages,
     })
 }
 

@@ -6,6 +6,13 @@
 //! so this test greps the source tree and fails on the first match pattern
 //! found outside `blocks/`. Value uses (`BlockKind::Conv2` as an argument,
 //! `== BlockKind::Conv3` comparisons, `BlockKind::ALL`) stay legal.
+//!
+//! The same discipline covers the telemetry plane's metric names: every
+//! `MetricsRegistry::{counter,gauge,histogram}` registration must go
+//! through the `obs::names` constant table (or a helper resolving to it,
+//! like `Stage::metric_name`), never an inline string literal — ad-hoc
+//! names fragment the export namespace and dodge the `names::ALL`
+//! exhaustiveness test.
 
 use std::fs;
 use std::path::{Path, PathBuf};
@@ -79,6 +86,51 @@ fn only_the_blocks_registry_matches_on_block_kinds() {
          registry (see blocks/conv2act.rs) instead:\n  {}",
         offenders.join("\n  ")
     );
+}
+
+/// 1-based line numbers of every metrics-registry registration call whose
+/// name is an inline string literal instead of an `obs::names` constant.
+fn scan_metric_literals(src: &str) -> Vec<usize> {
+    let mut hits = Vec::new();
+    for needle in [".counter(\"", ".gauge(\"", ".histogram(\""] {
+        let mut start = 0;
+        while let Some(pos) = src[start..].find(needle) {
+            let at = start + pos;
+            hits.push(src[..at].bytes().filter(|&b| b == b'\n').count() + 1);
+            start = at + needle.len();
+        }
+    }
+    hits.sort_unstable();
+    hits
+}
+
+#[test]
+fn obs_metric_names_go_through_the_names_constant_table() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust").join("src");
+    let mut files = Vec::new();
+    rust_sources(&root, &mut files);
+    files.sort();
+    let mut offenders = Vec::new();
+    for f in &files {
+        let src = fs::read_to_string(f).unwrap_or_else(|e| panic!("read {f:?}: {e}"));
+        for line in scan_metric_literals(&src) {
+            offenders.push(format!("{}:{line}", f.display()));
+        }
+    }
+    assert!(
+        offenders.is_empty(),
+        "metric registered under an inline string literal — add a constant \
+         to `obs::names` and register through it:\n  {}",
+        offenders.join("\n  ")
+    );
+}
+
+#[test]
+fn the_metric_literal_matcher_flags_inline_names_only() {
+    assert_eq!(scan_metric_literals("reg.counter(\"adhoc\").inc();"), vec![1]);
+    assert_eq!(scan_metric_literals("r.gauge(\"g\");\nr.histogram(\"h\");"), vec![1, 2]);
+    assert!(scan_metric_literals("reg.counter(names::SPANS_RECORDED)").is_empty());
+    assert!(scan_metric_literals("reg.histogram(stage.metric_name())").is_empty());
 }
 
 #[test]

@@ -40,11 +40,22 @@ plus per-network replica totals across the pool. The plan is deterministic
 for a fixed registry and pool spec, so any delta is a real planner or
 model change — advisory, never gated.
 
+And for the telemetry-plane snapshot (``convkit simulate --obs-out`` /
+``convkit obs --out``, top-level key ``obs``): pass
+``--obs CURRENT_OBS.json PREVIOUS_OBS.json`` to append span accounting
+(recorded/dropped, per-kind counts) and per-stage histogram deltas
+(count, mean, p95). The snapshot is emitted by the same deterministic
+virtual-clock run as the capacity report, so a moved span count means a
+scheduling-semantics change, not noise — advisory, never gated (the
+*overhead* of recording is gated separately through the
+``obs_span_overhead`` bench section).
+
 Usage: bench_diff.py CURRENT.json PREVIOUS.json [--regress-pct 25]
                      [--fail-on SECTION]... [--fail-pct 20]
                      [--simulate CURRENT_SIM.json PREVIOUS_SIM.json]
                      [--policysearch CURRENT_POL.json PREVIOUS_POL.json]
                      [--pool CURRENT_POOL.json PREVIOUS_POOL.json]
+                     [--obs CURRENT_OBS.json PREVIOUS_OBS.json]
 """
 
 from __future__ import annotations
@@ -359,6 +370,81 @@ def diff_pool(current: dict, previous: dict) -> str:
     return "\n".join(lines) + "\n"
 
 
+def load_obs(path: str) -> dict:
+    """The `obs` object of a telemetry snapshot (empty when unreadable)."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"note: could not read {path}: {e}", file=sys.stderr)
+        return {}
+    return doc.get("obs", {})
+
+
+def diff_obs(current: dict, previous: dict) -> str:
+    lines = ["## Telemetry-plane diff (`convkit simulate --obs-out`)", ""]
+    if not current:
+        lines.append("_No current observability snapshot._")
+        return "\n".join(lines) + "\n"
+    spans = current.get("spans", {})
+    journal = current.get("journal", {})
+    lines.append(
+        f"{spans.get('obs_spans_recorded', 0)} span(s) recorded, "
+        f"{spans.get('obs_spans_dropped', 0)} dropped, "
+        f"{journal.get('total_recorded', 0)} journal event(s)."
+    )
+    lines.append("")
+    if not previous:
+        lines.append("_No previous observability snapshot — nothing to diff._")
+        return "\n".join(lines) + "\n"
+    prev_spans = previous.get("spans", {})
+    prev_journal = previous.get("journal", {})
+    lines.append("| metric | previous | current | delta |")
+    lines.append("|---|---:|---:|---:|")
+    scalars = [
+        ("spans recorded", prev_spans.get("obs_spans_recorded", 0),
+         spans.get("obs_spans_recorded", 0)),
+        ("spans dropped", prev_spans.get("obs_spans_dropped", 0),
+         spans.get("obs_spans_dropped", 0)),
+        ("journal events", prev_journal.get("total_recorded", 0),
+         journal.get("total_recorded", 0)),
+    ]
+    cur_kinds = spans.get("kinds", {})
+    prev_kinds = prev_spans.get("kinds", {})
+    for kind in sorted(set(cur_kinds) | set(prev_kinds)):
+        scalars.append(
+            (f"span kind `{kind}`", prev_kinds.get(kind, 0),
+             cur_kinds.get(kind, 0))
+        )
+    for label, p, c in scalars:
+        lines.append(
+            f"| {label} | {p} | {c} | {fmt_delta(float(c), float(p))} |"
+        )
+    lines.append("")
+    cur_hists = {h["name"]: h for h in current.get("histograms", [])}
+    prev_hists = {h["name"]: h for h in previous.get("histograms", [])}
+    lines.append("| stage histogram | previous mean/p95 | current mean/p95 "
+                 "| mean delta |")
+    lines.append("|---|---:|---:|---:|")
+    for name in sorted(set(cur_hists) | set(prev_hists)):
+        c, p = cur_hists.get(name), prev_hists.get(name)
+        if c is None:
+            lines.append(f"| {name} | {fmt_ns(float(p['mean_ns']))} / "
+                         f"{fmt_ns(float(p['p95_ns']))} | _removed_ | |")
+            continue
+        cur_cell = (f"{fmt_ns(float(c['mean_ns']))} / "
+                    f"{fmt_ns(float(c['p95_ns']))} (n={c.get('count', 0)})")
+        if p is None:
+            lines.append(f"| {name} | _new_ | {cur_cell} | |")
+            continue
+        prev_cell = (f"{fmt_ns(float(p['mean_ns']))} / "
+                     f"{fmt_ns(float(p['p95_ns']))} (n={p.get('count', 0)})")
+        delta = fmt_delta(float(c["mean_ns"]), float(p["mean_ns"]))
+        lines.append(f"| {name} | {prev_cell} | {cur_cell} | {delta} |")
+    lines.append("")
+    return "\n".join(lines) + "\n"
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("current")
@@ -376,6 +462,9 @@ def main() -> int:
                     help="also diff two `convkit policysearch --out` reports")
     ap.add_argument("--pool", nargs=2, metavar=("CUR_POOL", "PREV_POOL"),
                     help="also diff two `convkit plan --out` pool plans")
+    ap.add_argument("--obs", nargs=2, metavar=("CUR_OBS", "PREV_OBS"),
+                    help="also diff two `convkit simulate --obs-out` "
+                         "telemetry snapshots")
     args = ap.parse_args()
     current = load_sections(args.current)
     previous = load_sections(args.previous)
@@ -391,6 +480,9 @@ def main() -> int:
     if args.pool:
         cur_pool, prev_pool = args.pool
         print(diff_pool(load_pool(cur_pool), load_pool(prev_pool)))
+    if args.obs:
+        cur_obs, prev_obs = args.obs
+        print(diff_obs(load_obs(cur_obs), load_obs(prev_obs)))
     if args.fail_on:
         failures = gate(current, previous, args.fail_on, args.fail_pct)
         if failures:
