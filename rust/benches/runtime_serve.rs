@@ -17,7 +17,10 @@
 //! from `runtime_conv`. A second section, `obs_span_overhead`, pits a bare
 //! single-replica fleet against an identical one with the telemetry plane's
 //! span recorder attached — the gated proof that observing the hot path
-//! costs almost nothing.
+//! costs almost nothing. A third section, `obs_trace_overhead`, prices
+//! request-correlated tracing the same way: the trace-id allocation +
+//! packing added on top of plain span recording, plus the assembler that
+//! folds a ring back into per-request traces.
 
 use convkit::blocks::BlockKind;
 use convkit::cnn::zoo;
@@ -331,6 +334,71 @@ fn main() {
         );
     }
 
+    // --- obs_trace_overhead: request-correlated tracing's cost ------------
+    // The same batched, contended fleet replayed on the virtual clock twice:
+    // once with the plane attached as a plain hub sink (spans flow, no
+    // trace ids) and once with the full per-replica plane (`set_telemetry`:
+    // one Relaxed trace-id fetch_add per admission plus id packing into
+    // every span value). The delta is the entire cost of request
+    // correlation; CI archives the section and gates regressions via
+    // `bench_diff.py --fail-on obs_trace_overhead`. A third row prices
+    // `obs::trace::assemble` itself over the recorded rings.
+    let mut tb = Bench::quick();
+    let trace_ids_trace = Scenario::new(
+        ScenarioShape::Steady,
+        vec![("simnet_a".to_string(), 2.0), ("simnet_b".to_string(), 1.0)],
+        100_000.0,
+        200.0,
+        0x7_1D5,
+    )
+    .arrivals();
+    tb.run("trace_ids_off", || {
+        let mut fleet = SimFleet::new(&batched_models).expect("sim fleet");
+        fleet.set_sink(Arc::new(Telemetry::new()));
+        let run = simulate_trace(&mut fleet, &trace_ids_trace, &mut [], &SimRunOptions::default())
+            .expect("sim run");
+        run.events
+    });
+    tb.run("trace_ids_on", || {
+        let mut fleet = SimFleet::new(&batched_models).expect("sim fleet");
+        fleet.set_telemetry(Arc::new(Telemetry::new()));
+        let run = simulate_trace(&mut fleet, &trace_ids_trace, &mut [], &SimRunOptions::default())
+            .expect("sim run");
+        run.events
+    });
+    let off_on = (tb.stats("trace_ids_off"), tb.stats("trace_ids_on"));
+    if let (Some(off), Some(on)) = off_on {
+        println!(
+            "-> trace ids: off {:.2} ms/replay, on {:.2} ms/replay ({:+.2}%)",
+            off.mean_ns / 1e6,
+            on.mean_ns / 1e6,
+            100.0 * (on.mean_ns - off.mean_ns) / off.mean_ns
+        );
+    }
+    // One traced run recorded outside the timed loop; assemble every ring.
+    let assembly_telemetry = Arc::new(Telemetry::new());
+    let mut assembly_fleet = SimFleet::new(&batched_models).expect("sim fleet");
+    assembly_fleet.set_telemetry(Arc::clone(&assembly_telemetry));
+    simulate_trace(&mut assembly_fleet, &trace_ids_trace, &mut [], &SimRunOptions::default())
+        .expect("sim run");
+    let ring_snapshots = assembly_telemetry.ring_snapshots();
+    let mut assembled_complete = 0usize;
+    tb.run("trace_assemble", || {
+        assembled_complete = ring_snapshots
+            .iter()
+            .map(|(_, _, events)| convkit::obs::assemble(events).complete.len())
+            .sum();
+        assembled_complete
+    });
+    if let Some(s) = tb.stats("trace_assemble") {
+        println!(
+            "-> assemble: {} complete trace(s) over {} ring(s), {:.1} µs/pass",
+            assembled_complete,
+            ring_snapshots.len(),
+            s.mean_ns / 1e3
+        );
+    }
+
     // --- perf-trajectory baseline (multi-section: shared with runtime_conv) ---
     let path = baseline_path();
     match b.write_json_sections("runtime_serve", &path) {
@@ -340,5 +408,9 @@ fn main() {
     match ob.write_json_sections("obs_span_overhead", &path) {
         Ok(()) => println!("obs overhead section written to {}", path.display()),
         Err(e) => eprintln!("could not write obs section {}: {e}", path.display()),
+    }
+    match tb.write_json_sections("obs_trace_overhead", &path) {
+        Ok(()) => println!("trace overhead section written to {}", path.display()),
+        Err(e) => eprintln!("could not write trace section {}: {e}", path.display()),
     }
 }

@@ -15,14 +15,14 @@ use convkit::fleetplan::{
     ReconfigPolicy, SloPolicy,
 };
 use convkit::models::SelectOptions;
-use convkit::obs::Telemetry;
+use convkit::obs::{DriftMonitor, Telemetry};
 use convkit::platform::Platform;
 use convkit::report;
 use convkit::runtime::{artifacts_dir, Runtime};
 use convkit::simulate::{
-    explore, explore_pool, explore_replay, policysearch, Admission, PolicyGrid, Scenario,
-    ScenarioShape, SimFleet, SimServiceModel, Trace, TraceRecorder, WhatIfOptions,
-    DEFAULT_CONTENTION_ALPHA,
+    contention_points, explore, explore_pool, explore_replay, fit_alpha, policysearch,
+    Admission, PolicyGrid, Scenario, ScenarioShape, SimFleet, SimServiceModel, Trace,
+    TraceRecorder, WhatIfOptions, DEFAULT_CONTENTION_ALPHA,
 };
 use convkit::synth::MapOptions;
 use convkit::synthdata::SweepOptions;
@@ -65,13 +65,16 @@ COMMANDS:
               --pool SPEC --target 0.X --qps N --duration-ms N --events N
               --queue-cap N --control-ms N --max-batch N --coalesce-ms X
               --alpha X --replay FILE --out FILE --obs-out FILE
-              --no-latency-slo]
+              --drift-out FILE --no-latency-slo]
   policysearch  sweep SloPolicy grids, report the Pareto front
               [simulate's scenario/fidelity options (not --replay), plus
               --overload A,B --p95-ratio A,B --idle-queue A,B
               --window A,B --out FILE]
   obs        telemetry-plane demo + snapshot    [--seed N --events N
               --format json|prom --out FILE --flight-dir DIR]
+  drift      model-drift watchdog demo           [--true-alpha X --alpha X
+              --seed N --events N --out FILE]
+  calibrate  re-fit the contention slope α       [--samples FILE --share-u X]
   tables     regenerate paper tables             [N | all] [--french]
   figures    regenerate Figures 1-3              [N | all] [--csv]
   blocks     list block characteristics (Table 2)
@@ -100,6 +103,8 @@ pub fn dispatch(args: &ParsedArgs) -> Result<()> {
         Some("simulate") => cmd_simulate(args),
         Some("policysearch") => cmd_policysearch(args),
         Some("obs") => cmd_obs(args),
+        Some("drift") => cmd_drift(args),
+        Some("calibrate") => cmd_calibrate(args),
         Some("tables") => cmd_tables(args),
         Some("figures") => cmd_figures(args),
         Some("blocks") => {
@@ -782,11 +787,13 @@ fn cmd_simulate(args: &ParsedArgs) -> Result<()> {
     // The paper side: fitted models price every replica and service rate.
     let rep = run_report(args)?;
     let mut opts = whatif_opts_from(args, WhatIfOptions::default().min_arrivals)?;
-    // --obs-out attaches the telemetry plane to the controlled main run
-    // (bisection probes stay silent) and writes its snapshot next to the
-    // capacity report — the OBS_snapshot.json artifact CI archives and
-    // diffs (`scripts/bench_diff.py --obs`).
-    let obs = args.get("obs-out").map(|_| Arc::new(Telemetry::new()));
+    // --obs-out / --drift-out attach the telemetry plane to the controlled
+    // main run (bisection probes stay silent): --obs-out writes the plane's
+    // snapshot, --drift-out the model-drift scorecard the watchdog scores
+    // against it — the OBS_snapshot.json / DRIFT_report.json artifacts CI
+    // archives and diffs (`scripts/bench_diff.py --obs / --drift`).
+    let obs = (args.get("obs-out").is_some() || args.get("drift-out").is_some())
+        .then(|| Arc::new(Telemetry::new()));
     opts.obs = obs.clone();
 
     // --events is the auto-sizing floor: an explicit --duration-ms pins the
@@ -859,6 +866,15 @@ fn cmd_simulate(args: &ParsedArgs) -> Result<()> {
             obs.spans_recorded(),
             obs.spans_dropped(),
             obs.journal().len()
+        );
+    }
+    if let (Some(path), Some(d)) = (args.get("drift-out"), &report.drift) {
+        std::fs::write(path, d.to_json())?;
+        let flagged: usize = d.flagged().iter().map(|(_, models)| models.len()).sum();
+        println!(
+            "drift report written to {path} ({} network(s) scored, {} flagged component(s))",
+            d.networks.len(),
+            flagged
         );
     }
     Ok(())
@@ -999,6 +1015,175 @@ fn cmd_obs(args: &ParsedArgs) -> Result<()> {
         }
         None => print!("{snapshot}"),
     }
+    Ok(())
+}
+
+/// Close the telemetry loop on the virtual clock: a seeded demo fleet whose
+/// engine contends at a TRUE slope (`--true-alpha`) while the watchdog
+/// scores it against the slope the planner ASSUMES (`--alpha`, default the
+/// shipped calibration). The mis-calibration surfaces as contention-model
+/// drift — and only that: the latency residual is corrected by the
+/// re-fitted slope, so a wrong α stays pinned to the contention row — and
+/// the report proposes a slope recovered from the fleet's own span rings.
+/// Applying it stays operator-gated: re-run the planners with
+/// `--alpha <proposed>`, or recalibrate from silicon with
+/// `convkit calibrate`.
+fn cmd_drift(args: &ParsedArgs) -> Result<()> {
+    let seed = args.get_u64("seed", 42)?;
+    let events = args.get_u64("events", 8_000)?.max(1);
+    let assumed = args.get_f64("alpha", DEFAULT_CONTENTION_ALPHA)?.max(0.0);
+    let true_alpha = args.get_f64("true-alpha", 4.0)?.max(0.0);
+
+    // Two replicas of `hot` share a device at 0.3 utilization each (each
+    // sees x = 0.3 of co-located share); `lone` runs un-colocated as the
+    // control — no contention signal, nothing to mis-model.
+    let models = vec![
+        SimServiceModel::new("hot", 1.0, 8, 2)
+            .with_batching(4, 0.4)
+            .on_platform("fpga0", 0.3),
+        SimServiceModel::new("lone", 0.5, 8, 1).with_batching(4, 0.2),
+    ];
+    let mut fleet = SimFleet::new(&models)?;
+    fleet.set_contention_alpha(true_alpha);
+    let obs = Arc::new(Telemetry::new());
+    fleet.set_telemetry(Arc::clone(&obs));
+
+    // ~1.5× the stretched capacity of `hot`, comfortable for `lone`: queues
+    // churn, batch sizes vary, and every ring sees well past the watchdog's
+    // min-samples floor.
+    let qps = 3_000.0;
+    let duration_ms = events as f64 / qps * 1e3;
+    let mix = vec![("hot".to_string(), 2.0), ("lone".to_string(), 1.0)];
+    let trace = Scenario::new(ScenarioShape::Burst, mix, qps, duration_ms, seed).arrivals();
+    for e in &trace.events {
+        fleet.offer(trace.network_of(e), e.at_ns)?;
+    }
+    fleet.drain();
+
+    let mut monitor = DriftMonitor::new(fleet.drift_expectations(assumed));
+    let report = monitor.report(&obs, fleet.now_ms());
+
+    println!(
+        "drift demo: {} arrivals over {:.1} virtual ms — engine contends at α = {true_alpha:.2}, \
+         watchdog assumes α = {assumed:.2}",
+        trace.len(),
+        fleet.now_ms()
+    );
+    for nd in &report.networks {
+        let fitted = match nd.alpha_fitted {
+            Some(a) => format!("{a:.2}"),
+            None => "—".to_string(),
+        };
+        println!("  {:<6} assumed α {:.2}, re-fitted α {fitted}", nd.network, nd.alpha_assumed);
+        for m in &nd.models {
+            println!(
+                "    {:<10} MPE {:>8.2}%  MAPE {:>7.2}%  over {:>4} sample(s){}",
+                m.model,
+                100.0 * m.mpe,
+                100.0 * m.mape,
+                m.samples,
+                if m.flagged { "  << DRIFTED" } else { "" }
+            );
+        }
+    }
+    if report.spans_dropped > 0 {
+        println!(
+            "  note: {} span(s) dropped by full rings — scores cover a sample of the batches",
+            report.spans_dropped
+        );
+    }
+    match report.proposed_alpha {
+        Some(a) => println!(
+            "proposed contention slope α = {a:.3} (engine injected {true_alpha:.2}) — apply is \
+             operator-gated: re-run the planners with --alpha {a:.3}"
+        ),
+        None => println!("no component above the drift threshold; the assumed models hold"),
+    }
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, report.to_json())?;
+        println!("drift report written to {out}");
+    }
+    Ok(())
+}
+
+/// Re-fit the engine's contention slope `α` (`slowdown = 1 + α·x` through
+/// the origin) from co-location measurements: CSV rows `K,t_seconds` of
+/// per-worker pass times, including the solo `K = 1` baseline, with
+/// `--share-u` the estimated per-worker device share (see
+/// `scripts/calibrate_alpha.py` and docs/GUIDE.md). Without `--samples`
+/// the archived microbenchmark behind the shipped default is re-fitted —
+/// proof the estimator reproduces it.
+fn cmd_calibrate(args: &ParsedArgs) -> Result<()> {
+    let share_u = args.get_f64("share-u", 1.0)?;
+    if share_u <= 0.0 {
+        return Err(Error::Usage("--share-u must be > 0".into()));
+    }
+    let samples: Vec<(usize, f64)> = match args.get("samples") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)?;
+            let mut out = Vec::new();
+            for (lineno, raw) in text.lines().enumerate() {
+                let line = raw.trim();
+                if line.is_empty() || line.starts_with('#') {
+                    continue;
+                }
+                let mut it = line.split(',').map(str::trim);
+                let (Some(k), Some(t)) = (it.next(), it.next()) else {
+                    return Err(Error::Usage(format!(
+                        "{path}:{}: expected `K,t_seconds`, got `{line}`",
+                        lineno + 1
+                    )));
+                };
+                let k: usize = match k.parse() {
+                    Ok(k) => k,
+                    // A non-numeric first row is a column header.
+                    Err(_) if lineno == 0 => continue,
+                    Err(_) => {
+                        return Err(Error::Usage(format!(
+                            "{path}:{}: bad worker count `{k}`",
+                            lineno + 1
+                        )))
+                    }
+                };
+                let t: f64 = t.parse().map_err(|_| {
+                    Error::Usage(format!("{path}:{}: bad per-worker time `{t}`", lineno + 1))
+                })?;
+                out.push((k, t));
+            }
+            println!("{} measurement(s) read from {path}", out.len());
+            out
+        }
+        None => {
+            println!(
+                "no --samples given — re-fitting the archived measurement behind the \
+                 shipped default (docs/alpha_calibration.json)"
+            );
+            vec![(1, 0.005576321), (2, 0.0170981695), (4, 0.0395663512)]
+        }
+    };
+    let points = contention_points(&samples, share_u);
+    if points.is_empty() {
+        return Err(Error::Usage(
+            "no usable fit points: need a solo K=1 baseline plus ≥ 1 co-located run \
+             with x = (K−1)·u ≤ 1 (oversubscribed points extrapolate a regime the \
+             simulator never evaluates)"
+                .into(),
+        ));
+    }
+    println!("fit points (x = (K−1)·u, u = {share_u}):");
+    for &(x, s) in &points {
+        println!("  x = {x:.3}  slowdown ×{s:.4}");
+    }
+    let alpha = fit_alpha(&points);
+    let delta = 100.0 * (alpha - DEFAULT_CONTENTION_ALPHA) / DEFAULT_CONTENTION_ALPHA;
+    println!(
+        "fitted contention slope α = {alpha:.3}  ({delta:+.1}% vs the shipped default \
+         {DEFAULT_CONTENTION_ALPHA})"
+    );
+    println!(
+        "apply is operator-gated: pass --alpha {alpha:.3} to simulate / autoscale / \
+         policysearch, or install it with SimFleet::set_contention_alpha"
+    );
     Ok(())
 }
 

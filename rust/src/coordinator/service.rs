@@ -19,6 +19,7 @@
 
 use crate::cnn::GoldenCnn;
 use crate::coordinator::coalesce::CoalescePolicy;
+use crate::obs::trace::{pack, UNTRACED};
 use crate::obs::{SpanKind, SpanScope, Stage};
 use crate::util::error::{Error, Result};
 pub use crate::util::stats::percentile_nearest_rank;
@@ -222,15 +223,18 @@ enum Msg {
     /// channel, its *enqueue* timestamp — latency is measured from
     /// admission, not from when the worker dequeues it, so queue-wait under
     /// load is visible in the stats (the overload signal the sharding
-    /// layer's bounded admission exists to surface) — and an optional
-    /// [`CompletionGuard`].
-    Infer(Arc<[i32]>, mpsc::Sender<Result<Vec<i32>>>, Instant, Option<CompletionGuard>),
+    /// layer's bounded admission exists to surface) — an optional
+    /// [`CompletionGuard`], and the request's `TraceId`
+    /// ([`crate::obs::trace::UNTRACED`] when the fleet is unobserved),
+    /// packed into the guard-release span so the request's spans correlate
+    /// (docs/HOTPATH.md §10).
+    Infer(Arc<[i32]>, mpsc::Sender<Result<Vec<i32>>>, Instant, Option<CompletionGuard>, u32),
     Shutdown,
 }
 
 /// An inference request absorbed into the current batch window.
 type PendingInfer =
-    (Arc<[i32]>, mpsc::Sender<Result<Vec<i32>>>, Instant, Option<CompletionGuard>);
+    (Arc<[i32]>, mpsc::Sender<Result<Vec<i32>>>, Instant, Option<CompletionGuard>, u32);
 
 /// Default idle batching window: long enough to coalesce concurrent clients,
 /// short enough not to dominate single-client latency (§Perf: 200 µs →
@@ -334,7 +338,7 @@ fn collect_batch(
     };
     let mut pending: Vec<PendingInfer> = Vec::new();
     match rx.recv() {
-        Ok(Msg::Infer(im, reply, t0, guard)) => pending.push((im, reply, t0, guard)),
+        Ok(Msg::Infer(im, reply, t0, guard, tid)) => pending.push((im, reply, t0, guard, tid)),
         Ok(Msg::Shutdown) | Err(_) => return (pending, true),
     }
     // The first request's arrival opens the window (docs/HOTPATH.md §3); the
@@ -346,7 +350,7 @@ fn collect_batch(
     }
     while pending.len() < batch_size {
         match rx.try_recv() {
-            Ok(Msg::Infer(im, reply, t0, guard)) => pending.push((im, reply, t0, guard)),
+            Ok(Msg::Infer(im, reply, t0, guard, tid)) => pending.push((im, reply, t0, guard, tid)),
             Ok(Msg::Shutdown) => return close(pending, true, window_opened),
             Err(mpsc::TryRecvError::Empty) => break,
             Err(mpsc::TryRecvError::Disconnected) => return close(pending, true, window_opened),
@@ -360,7 +364,7 @@ fn collect_batch(
             break;
         }
         match rx.recv_timeout(deadline - now) {
-            Ok(Msg::Infer(im, reply, t0, guard)) => pending.push((im, reply, t0, guard)),
+            Ok(Msg::Infer(im, reply, t0, guard, tid)) => pending.push((im, reply, t0, guard, tid)),
             Ok(Msg::Shutdown) => return close(pending, true, window_opened),
             Err(_) => break,
         }
@@ -449,7 +453,7 @@ impl InferenceService {
                     let msg = init_err.to_string();
                     for m in rx {
                         match m {
-                            Msg::Infer(_, reply, _, guard) => {
+                            Msg::Infer(_, reply, _, guard, _) => {
                                 mirror.completed.fetch_add(1, Ordering::Relaxed);
                                 mirror.errors.fetch_add(1, Ordering::Relaxed);
                                 drop(guard);
@@ -468,11 +472,11 @@ impl InferenceService {
                     // Reference-count the shared buffers into the batch —
                     // pointer copies, not payload clones.
                     let images: Vec<Arc<[i32]>> =
-                        pending.iter().map(|(im, _, _, _)| Arc::clone(im)).collect();
+                        pending.iter().map(|(im, _, _, _, _)| Arc::clone(im)).collect();
                     let dispatched = Instant::now();
                     if let Some(o) = &obs {
                         o.span(SpanKind::BatchStart, images.len() as u64);
-                        for (_, _, t0, _) in &pending {
+                        for (_, _, t0, _, _) in &pending {
                             o.stage(
                                 Stage::QueueWait,
                                 dispatched.saturating_duration_since(*t0).as_nanos() as u64,
@@ -487,7 +491,8 @@ impl InferenceService {
                     }
                     match results {
                         Ok(outs) => {
-                            for ((_, reply, t0, guard), out) in pending.into_iter().zip(outs) {
+                            for ((_, reply, t0, guard, tid), out) in pending.into_iter().zip(outs)
+                            {
                                 mirror.latencies.record(t0.elapsed().as_micros() as u64);
                                 mirror.completed.fetch_add(1, Ordering::Relaxed);
                                 // Release the admission slot before replying so
@@ -496,19 +501,19 @@ impl InferenceService {
                                 // cap-accounting deterministic).
                                 drop(guard);
                                 if let Some(o) = &obs {
-                                    o.span(SpanKind::GuardRelease, 0);
+                                    o.span(SpanKind::GuardRelease, pack(tid, 0));
                                 }
                                 let _ = reply.send(Ok(out));
                             }
                         }
                         Err(e) => {
                             let msg = e.to_string();
-                            for (_, reply, _, guard) in pending {
+                            for (_, reply, _, guard, tid) in pending {
                                 mirror.completed.fetch_add(1, Ordering::Relaxed);
                                 mirror.errors.fetch_add(1, Ordering::Relaxed);
                                 drop(guard);
                                 if let Some(o) = &obs {
-                                    o.span(SpanKind::GuardRelease, 0);
+                                    o.span(SpanKind::GuardRelease, pack(tid, 0));
                                 }
                                 let _ = reply.send(Err(Error::Runtime(msg.clone())));
                             }
@@ -548,9 +553,25 @@ impl InferenceService {
         image: impl Into<Arc<[i32]>>,
         guard: Option<CompletionGuard>,
     ) -> Result<mpsc::Receiver<Result<Vec<i32>>>> {
+        self.enqueue_traced(image, guard, UNTRACED)
+    }
+
+    /// [`InferenceService::enqueue_with_guard`] carrying a request `TraceId`
+    /// allocated by the admission layer ([`crate::obs::SpanScope::next_trace_id`]):
+    /// the worker packs it into the guard-release span value so the
+    /// request's admission and completion spans correlate
+    /// (`obs::trace::assemble`). Pass [`crate::obs::trace::UNTRACED`] (what
+    /// `enqueue_with_guard` does) when the fleet is unobserved — the packed
+    /// value is then identical to the untraced plane's.
+    pub fn enqueue_traced(
+        &self,
+        image: impl Into<Arc<[i32]>>,
+        guard: Option<CompletionGuard>,
+        trace_id: u32,
+    ) -> Result<mpsc::Receiver<Result<Vec<i32>>>> {
         let (rtx, rrx) = mpsc::channel();
         self.tx
-            .send(Msg::Infer(image.into(), rtx, Instant::now(), guard))
+            .send(Msg::Infer(image.into(), rtx, Instant::now(), guard, trace_id))
             .map_err(|_| Error::Runtime("service stopped".into()))?;
         Ok(rrx)
     }
@@ -711,17 +732,17 @@ mod tests {
         let (r1, _keep1) = mpsc::channel();
         let (r2, _keep2) = mpsc::channel();
         let (r3, _keep3) = mpsc::channel();
-        tx.send(Msg::Infer(vec![1].into(), r1, Instant::now(), None)).unwrap();
-        tx.send(Msg::Infer(vec![2].into(), r2, Instant::now(), None)).unwrap();
+        tx.send(Msg::Infer(vec![1].into(), r1, Instant::now(), None, UNTRACED)).unwrap();
+        tx.send(Msg::Infer(vec![2].into(), r2, Instant::now(), None, UNTRACED)).unwrap();
         tx.send(Msg::Shutdown).unwrap();
-        tx.send(Msg::Infer(vec![3].into(), r3, Instant::now(), None)).unwrap();
+        tx.send(Msg::Infer(vec![3].into(), r3, Instant::now(), None, UNTRACED)).unwrap();
         let policy = CoalescePolicy::fixed(BATCH_WINDOW).with_max_batch(100);
         let (pending, shutdown) = collect_batch(&rx, 100, &policy, None);
         assert!(shutdown);
         assert_eq!(pending.len(), 2, "requests absorbed before shutdown ride the final batch");
         // The post-shutdown request was NOT absorbed: the window closed at
         // once instead of coalescing toward batch_size = 100.
-        assert!(matches!(rx.try_recv(), Ok(Msg::Infer(im, _, _, _)) if im[..] == [3]));
+        assert!(matches!(rx.try_recv(), Ok(Msg::Infer(im, _, _, _, _)) if im[..] == [3]));
     }
 
     #[test]
@@ -733,7 +754,7 @@ mod tests {
         let keep: Vec<_> = (0..3)
             .map(|i| {
                 let (r, keep) = mpsc::channel();
-                tx.send(Msg::Infer(vec![i].into(), r, Instant::now(), None)).unwrap();
+                tx.send(Msg::Infer(vec![i].into(), r, Instant::now(), None, UNTRACED)).unwrap();
                 keep
             })
             .collect();

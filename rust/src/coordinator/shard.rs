@@ -44,6 +44,7 @@ use crate::coordinator::router::Router;
 use crate::coordinator::service::{
     GoldenExecutor, InferenceService, PjrtExecutor, ServiceStats, BATCH_WINDOW,
 };
+use crate::obs::trace::{pack, UNTRACED};
 use crate::obs::{SpanKind, SpanScope, Telemetry};
 use crate::runtime::{artifacts_dir, Runtime};
 use crate::util::error::{Error, Result};
@@ -321,20 +322,29 @@ impl Shard {
     /// Non-blocking admission without a cap check (cooperative clients).
     pub fn submit(&self, image: impl Into<Arc<[i32]>>) -> Result<Ticket> {
         let slot = self.acquire();
+        let tid = self.next_trace_id();
         // If the send fails the guard inside the dead message is dropped,
         // rolling the increment back.
-        let rx = self.service.enqueue_with_guard(image, Some(Box::new(slot)))?;
-        self.note_admission();
+        let rx = self.service.enqueue_traced(image, Some(Box::new(slot)), tid)?;
+        self.note_admission(tid);
         Ok(Ticket { rx })
     }
 
-    /// Record route + enqueue spans for one admitted request. Lock-free
+    /// Allocate this request's `TraceId` from the telemetry plane — one
+    /// `Relaxed` counter increment, [`UNTRACED`] (0) on unobserved shards
+    /// so the packed span values degenerate to the plain payloads.
+    fn next_trace_id(&self) -> u32 {
+        self.obs.as_ref().map(|o| o.next_trace_id()).unwrap_or(UNTRACED)
+    }
+
+    /// Record route + enqueue spans for one admitted request, the request's
+    /// trace id packed into the high value bits (`obs::trace`). Lock-free
     /// (`SpanRing::record`), so the admission paths stay lock-free with the
     /// recorder on; a single branch with it off.
-    fn note_admission(&self) {
+    fn note_admission(&self, tid: u32) {
         if let Some(o) = &self.obs {
-            o.span(SpanKind::Route, self.replica as u64);
-            o.span(SpanKind::Enqueue, self.outstanding() as u64);
+            o.span(SpanKind::Route, pack(tid, self.replica as u64));
+            o.span(SpanKind::Enqueue, pack(tid, self.outstanding() as u64));
         }
     }
 
@@ -361,8 +371,9 @@ impl Shard {
                 self.network, self.replica, self.queue_cap
             ))
         })?;
-        let rx = self.service.enqueue_with_guard(image, Some(Box::new(slot)))?;
-        self.note_admission();
+        let tid = self.next_trace_id();
+        let rx = self.service.enqueue_traced(image, Some(Box::new(slot)), tid)?;
+        self.note_admission(tid);
         Ok(Ticket { rx })
     }
 

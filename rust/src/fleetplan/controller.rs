@@ -337,6 +337,21 @@ struct PoolAttachment {
     reconfig: ReconfigPolicy,
 }
 
+/// A decision awaiting its post-hoc audit: the SLO numbers the controller
+/// acted ON, held until the next control round's snapshot shows what the
+/// fleet actually did (see [`Autoscaler::step_target`]).
+#[derive(Debug, Clone)]
+struct PendingAudit {
+    network: String,
+    action: ScaleAction,
+    at_ms: f64,
+    from_replicas: u64,
+    to_replicas: u64,
+    p95_before_ms: f64,
+    overload_before: f64,
+    p95_target_ms: f64,
+}
+
 /// Replicas of a `unit`-priced network that fit `budget` (worst-column
 /// integer fill; 0 for a zero-cost unit — nothing real is free).
 fn replicas_that_fit(unit: &ResourceVector, budget: &ResourceVector) -> u64 {
@@ -364,6 +379,12 @@ pub struct Autoscaler {
     templates: BTreeMap<String, ShardSpec>,
     pool: Option<PoolAttachment>,
     obs: Option<Arc<Telemetry>>,
+    /// Decisions applied last round, awaiting their post-hoc audit against
+    /// the NEXT round's realized SLO rows.
+    pending_audits: Vec<PendingAudit>,
+    /// SLO rows from the most recent [`Autoscaler::decide`] — the realized
+    /// state audits are scored against.
+    last_slos: Vec<NetworkSlo>,
 }
 
 impl Autoscaler {
@@ -374,7 +395,15 @@ impl Autoscaler {
     pub fn new(plan: FleetPlan, policy: SloPolicy, templates: Vec<ShardSpec>) -> Autoscaler {
         let templates =
             templates.into_iter().map(|t| (t.network.clone(), t)).collect();
-        Autoscaler { plan, tracker: SloTracker::new(policy), templates, pool: None, obs: None }
+        Autoscaler {
+            plan,
+            tracker: SloTracker::new(policy),
+            templates,
+            pool: None,
+            obs: None,
+            pending_audits: Vec::new(),
+            last_slos: Vec::new(),
+        }
     }
 
     /// [`Autoscaler::new`] with the latency-aware SLO: each planned
@@ -402,6 +431,8 @@ impl Autoscaler {
             templates,
             pool: None,
             obs: None,
+            pending_audits: Vec::new(),
+            last_slos: Vec::new(),
         }
     }
 
@@ -438,6 +469,9 @@ impl Autoscaler {
     /// than the planned floor. Unplanned networks are left alone.
     pub fn decide(&mut self, stats: &ShardedStats) -> Vec<ScaleDecision> {
         let slos = self.tracker.observe(stats);
+        // Kept for the audit pass: this round's rows ARE the realized
+        // outcome of last round's decisions.
+        self.last_slos = slos.clone();
         // Working replica counts: starts at the live snapshot and absorbs
         // each emitted decision, so several same-round decisions are
         // budget-checked JOINTLY — two scale-ups cannot each claim the same
@@ -701,7 +735,88 @@ impl Autoscaler {
             self.apply_to(target, d)?;
             self.journal_decision(d);
         }
+        // Close the loop on LAST round's decisions: this round's SLO rows
+        // are the realized outcome one control window later — score each
+        // journaled prediction against them, then queue this round's
+        // decisions for the same treatment next round.
+        self.score_audits(now);
+        if self.obs.is_some() {
+            for d in &decisions {
+                let slo = self.last_slos.iter().find(|s| s.network == d.network);
+                self.pending_audits.push(PendingAudit {
+                    network: d.network.clone(),
+                    action: d.action,
+                    at_ms: d.at_ms,
+                    from_replicas: d.from_replicas,
+                    to_replicas: d.to_replicas,
+                    p95_before_ms: slo.map(|s| s.p95_ms).unwrap_or(0.0),
+                    overload_before: slo.map(|s| s.overload_rate).unwrap_or(0.0),
+                    p95_target_ms: slo.map(|s| s.p95_target_ms).unwrap_or(0.0),
+                });
+            }
+        }
         Ok(decisions)
+    }
+
+    /// Score every pending audit against the freshly observed SLO rows and
+    /// journal the verdict ([`JournalKind::Audit`]): a scale-up or rebind
+    /// *held* when the network left the overloaded verdict or at least moved
+    /// its overload rate / p95 in the predicted direction; a scale-down held
+    /// unless it provoked a fresh overload. A network that vanished from the
+    /// rows (drained away) audits as held — there is nothing left to breach.
+    fn score_audits(&mut self, now_ms: f64) {
+        let pending = std::mem::take(&mut self.pending_audits);
+        let Some(obs) = &self.obs else { return };
+        const EPS: f64 = 1e-9;
+        for p in pending {
+            let realized = self.last_slos.iter().find(|s| s.network == p.network);
+            let (p95_after, overload_after, verdict_after) = match realized {
+                Some(s) => (s.p95_ms, s.overload_rate, s.verdict),
+                None => (0.0, 0.0, SloVerdict::Idle),
+            };
+            let held = match p.action {
+                ScaleAction::Up | ScaleAction::Rebind => {
+                    verdict_after != SloVerdict::Overloaded
+                        || overload_after < p.overload_before - EPS
+                        || p95_after < p.p95_before_ms - EPS
+                }
+                ScaleAction::Down => verdict_after != SloVerdict::Overloaded,
+            };
+            let action_name = match p.action {
+                ScaleAction::Up => "scale_up",
+                ScaleAction::Down => "scale_down",
+                ScaleAction::Rebind => "rebind",
+            };
+            let verdict_name = if held { "held" } else { "missed" };
+            obs.record_decision(JournalEvent {
+                t_ms: now_ms,
+                kind: JournalKind::Audit,
+                network: p.network.clone(),
+                device: None,
+                from_replicas: p.from_replicas,
+                to_replicas: p.to_replicas,
+                reason: format!(
+                    "audit {action_name} {}→{} from t={:.1} ms: {verdict_name} — p95 \
+                     {:.3}→{:.3} ms (target {:.1} ms), overload {:.1}%→{:.1}%",
+                    p.from_replicas,
+                    p.to_replicas,
+                    p.at_ms,
+                    p.p95_before_ms,
+                    p95_after,
+                    p.p95_target_ms,
+                    100.0 * p.overload_before,
+                    100.0 * overload_after,
+                ),
+                inputs: vec![
+                    ("held".to_string(), if held { 1.0 } else { 0.0 }),
+                    ("p95_before_ms".to_string(), p.p95_before_ms),
+                    ("p95_after_ms".to_string(), p95_after),
+                    ("overload_before".to_string(), p.overload_before),
+                    ("overload_after".to_string(), overload_after),
+                    ("p95_target_ms".to_string(), p.p95_target_ms),
+                ],
+            });
+        }
     }
 
     /// Mirror one applied decision into the decision journal, and trip the
@@ -1115,6 +1230,55 @@ mod tests {
         assert_eq!(flights.len(), 1);
         assert_eq!(flights[0].network, "a");
         assert_eq!(flights[0].journal.len(), 1);
+    }
+
+    #[test]
+    fn an_unrecovered_overload_audits_the_scale_up_as_missed() {
+        let obs = Arc::new(crate::obs::Telemetry::new());
+        let mut a = Autoscaler::new(plan(), policy(), vec![ShardSpec::golden("a")])
+            .with_obs(Arc::clone(&obs));
+        let mut target = ScriptedTarget { stats: rows(1, 10, 10, 1.0), ups: 0 };
+        a.step_target(&mut target).unwrap();
+        // One control window later the overload has NOT receded (another
+        // 50% of the window's requests rejected, p95 unchanged): the
+        // scale-up's journaled prediction missed.
+        target.stats = rows(1, 20, 20, 1.0);
+        a.step_target(&mut target).unwrap();
+        let events = obs.journal().snapshot();
+        let audits: Vec<_> =
+            events.iter().filter(|e| e.kind == JournalKind::Audit).collect();
+        assert_eq!(audits.len(), 1, "exactly the first round's decision audited");
+        let audit = audits[0];
+        assert_eq!(audit.network, "a");
+        assert_eq!((audit.from_replicas, audit.to_replicas), (1, 2));
+        assert!(audit.reason.contains("missed"), "{}", audit.reason);
+        assert!(audit.reason.starts_with("audit scale_up 1→2"), "{}", audit.reason);
+        let input = |name: &str| {
+            audit.inputs.iter().find(|(n, _)| n == name).expect(name).1
+        };
+        assert_eq!(input("held"), 0.0);
+        assert!((input("overload_before") - 0.5).abs() < 1e-9);
+        assert!((input("overload_after") - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn a_recovered_slo_audits_the_scale_up_as_held() {
+        let obs = Arc::new(crate::obs::Telemetry::new());
+        let mut a = Autoscaler::new(plan(), policy(), vec![ShardSpec::golden("a")])
+            .with_obs(Arc::clone(&obs));
+        let mut target = ScriptedTarget { stats: rows(1, 10, 10, 1.0), ups: 0 };
+        a.step_target(&mut target).unwrap();
+        // The added replica absorbed the pressure: zero rejections over the
+        // next window, so the prediction held.
+        target.stats = rows(1, 20, 10, 1.0);
+        a.step_target(&mut target).unwrap();
+        let events = obs.journal().snapshot();
+        let audits: Vec<_> =
+            events.iter().filter(|e| e.kind == JournalKind::Audit).collect();
+        assert_eq!(audits.len(), 1);
+        assert!(audits[0].reason.contains("held"), "{}", audits[0].reason);
+        let held = audits[0].inputs.iter().find(|(n, _)| n == "held").unwrap().1;
+        assert_eq!(held, 1.0);
     }
 
     #[test]

@@ -1,0 +1,724 @@
+//! Model-drift watchdog: the paper's offline validation metrics (MPE /
+//! MAPE between model-predicted and measured behaviour) computed
+//! *continuously*, per network, against the live telemetry plane.
+//!
+//! The serving stack runs on three fitted model components per network:
+//!
+//! * **latency** — the batch pricing curve `fill + (service − fill) × b`
+//!   ([`crate::coordinator::CoalescePolicy::batch_ns`], fed by
+//!   `NetworkPlan::predicted_ms`);
+//! * **fill** — the amortizable pipeline-fill intercept of that curve
+//!   (`NetworkPlan::fill_ms`);
+//! * **contention** — the co-location stretch `1 + α·x`
+//!   (`simulate::engine`'s interference model over `util_frac` shares).
+//!
+//! [`DriftMonitor`] ingests per-batch `(size, measured ns)` samples from
+//! the span rings (`BatchStart`/`BatchEnd` pairs — the same events the
+//! flight recorder freezes), scores each component's rolling MPE/MAPE
+//! against a [`ModelExpectation`], and flags a component whose MAPE
+//! sustains above threshold: a structured [`JournalKind::ModelDrift`] event
+//! lands in the decision journal and a flight dump is armed, once per
+//! `(network, component)`. Components are scored *separately* so a single
+//! mis-calibrated input is pinned to its own model: a wrong contention `α`
+//! is first re-fitted from the observed slowdowns (via the existing
+//! [`fit_alpha`] estimator) and the latency residual is judged *after* the
+//! re-fitted stretch is divided out — so the latency and fill rows stay
+//! clean and the report proposes the corrected `α` (apply stays
+//! operator-gated through `convkit drift` / `convkit calibrate`).
+//!
+//! Everything here is plane-agnostic: the same monitor scores a live fleet
+//! (wall-clock rings) and a `SimFleet` with telemetry attached
+//! (virtual-clock rings), which is what the drift parity test in
+//! `rust/tests/integration_drift.rs` pins.
+
+use super::journal::{JournalEvent, JournalKind};
+use super::span::SpanKind;
+use super::{json_escape, RingStat, Telemetry};
+use crate::simulate::calibrate::fit_alpha;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+/// Model-component name: the batch latency curve.
+pub const MODEL_LATENCY: &str = "latency";
+/// Model-component name: the pipeline-fill intercept.
+pub const MODEL_FILL: &str = "fill";
+/// Model-component name: the co-location contention stretch.
+pub const MODEL_CONTENTION: &str = "contention";
+
+/// Contention shares below this carry no interference signal.
+const X_EPS: f64 = 1e-9;
+
+/// What the fitted models claim about one network — the prediction side of
+/// every drift score. Plain data: constructors live where the numbers do
+/// (`SimFleet::drift_expectations`, the whatif plan path).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelExpectation {
+    /// Network the expectation describes.
+    pub network: String,
+    /// Model-predicted single-request service time (ns).
+    pub service_ns: u64,
+    /// Amortizable pipeline-fill share of `service_ns` (ns).
+    pub fill_ns: u64,
+    /// Co-located utilization share on the network's device, excluding the
+    /// replica itself (the `x` of the `1 + α·x` stretch; 0 = runs alone).
+    pub contention_x: f64,
+    /// The contention slope the fleet currently assumes.
+    pub alpha: f64,
+}
+
+impl ModelExpectation {
+    /// The batch pricing curve, mirroring
+    /// [`crate::coordinator::CoalescePolicy::batch_ns`] exactly:
+    /// `fill + (service − fill) × max(b, 1)`.
+    pub fn batch_ns(&self, batch: u64) -> u64 {
+        let fill = self.fill_ns.min(self.service_ns.saturating_sub(1));
+        fill + (self.service_ns - fill).saturating_mul(batch.max(1))
+    }
+}
+
+/// When a rolling error becomes a drift verdict.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DriftPolicy {
+    /// A component is flagged when its rolling MAPE exceeds this.
+    pub mape_threshold: f64,
+    /// Samples required before any verdict fires (cold-start guard).
+    pub min_samples: usize,
+    /// Rolling sample window retained per network.
+    pub window: usize,
+}
+
+impl Default for DriftPolicy {
+    fn default() -> Self {
+        DriftPolicy { mape_threshold: 0.10, min_samples: 8, window: 512 }
+    }
+}
+
+/// One model component's rolling score for one network.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelScore {
+    /// Component name ([`MODEL_LATENCY`] / [`MODEL_FILL`] /
+    /// [`MODEL_CONTENTION`]).
+    pub model: &'static str,
+    /// Mean percentage error (signed; the paper's MPE).
+    pub mpe: f64,
+    /// Mean absolute percentage error (the paper's MAPE).
+    pub mape: f64,
+    /// Samples behind the score.
+    pub samples: u64,
+    /// True when the MAPE sustains above the policy threshold.
+    pub flagged: bool,
+}
+
+/// One network's drift standing: the three component scores plus the
+/// re-fitted contention slope recovered from its own measurements.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkDrift {
+    /// Network name.
+    pub network: String,
+    /// The contention slope the expectation assumed.
+    pub alpha_assumed: f64,
+    /// Slope re-fitted from the observed slowdowns (None without a
+    /// contention signal, i.e. `contention_x ≈ 0`).
+    pub alpha_fitted: Option<f64>,
+    /// Component scores, in [`MODEL_LATENCY`], [`MODEL_FILL`],
+    /// [`MODEL_CONTENTION`] order.
+    pub models: Vec<ModelScore>,
+}
+
+impl NetworkDrift {
+    /// The score row for one component name.
+    pub fn score(&self, model: &str) -> Option<&ModelScore> {
+        self.models.iter().find(|m| m.model == model)
+    }
+}
+
+/// The deterministic drift snapshot `convkit drift` / `convkit simulate
+/// --drift-out` export (top-level key `"drift"`). Ring drop accounting
+/// rides along so a saturated span ring can never masquerade as low
+/// traffic: a report with `spans_dropped > 0` is scored on a *sample* of
+/// the batches, and says so.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DriftReport {
+    /// Per-network standings, sorted by network name.
+    pub networks: Vec<NetworkDrift>,
+    /// Pooled re-fitted contention slope, proposed only while a contention
+    /// component is flagged (apply stays operator-gated).
+    pub proposed_alpha: Option<f64>,
+    /// Spans refused by full rings across the plane (telemetry loss).
+    pub spans_dropped: u64,
+    /// Per-ring drop/occupancy accounting, sorted by (network, replica).
+    pub rings: Vec<RingStat>,
+}
+
+impl DriftReport {
+    /// Deterministic JSON document (top-level key `"drift"`).
+    pub fn to_json(&self) -> String {
+        let fmt_opt = |v: Option<f64>| match v {
+            Some(a) => format!("{a:.6}"),
+            None => "null".to_string(),
+        };
+        let mut out = String::new();
+        out.push_str("{\n  \"drift\": {\n");
+        out.push_str(&format!(
+            "    \"proposed_alpha\": {},\n    \"spans_dropped\": {},\n",
+            fmt_opt(self.proposed_alpha),
+            self.spans_dropped
+        ));
+        out.push_str("    \"rings\": [");
+        for (i, r) in self.rings.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n      {{\"network\": \"{}\", \"replica\": {}, \"{}\": {}, \"{}\": {}, \
+                 \"capacity\": {}}}",
+                json_escape(&r.network),
+                r.replica,
+                super::names::RING_DROPPED,
+                r.dropped,
+                super::names::RING_OCCUPANCY,
+                r.occupancy,
+                r.capacity
+            ));
+        }
+        if !self.rings.is_empty() {
+            out.push_str("\n    ");
+        }
+        out.push_str("],\n    \"networks\": [");
+        for (i, nd) in self.networks.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n      {{\"network\": \"{}\", \"alpha_assumed\": {:.6}, \
+                 \"alpha_fitted\": {}, \"models\": [",
+                json_escape(&nd.network),
+                nd.alpha_assumed,
+                fmt_opt(nd.alpha_fitted)
+            ));
+            for (j, m) in nd.models.iter().enumerate() {
+                if j > 0 {
+                    out.push_str(", ");
+                }
+                out.push_str(&format!(
+                    "{{\"model\": \"{}\", \"mpe\": {:.6}, \"mape\": {:.6}, \
+                     \"samples\": {}, \"flagged\": {}}}",
+                    m.model, m.mpe, m.mape, m.samples, m.flagged
+                ));
+            }
+            out.push_str("]}");
+        }
+        if !self.networks.is_empty() {
+            out.push_str("\n    ");
+        }
+        out.push_str("]\n  }\n}\n");
+        out
+    }
+
+    /// Networks with at least one flagged component, with the components.
+    pub fn flagged(&self) -> Vec<(String, Vec<&'static str>)> {
+        self.networks
+            .iter()
+            .filter_map(|nd| {
+                let models: Vec<&'static str> = nd
+                    .models
+                    .iter()
+                    .filter(|m| m.flagged)
+                    .map(|m| m.model)
+                    .collect();
+                (!models.is_empty()).then(|| (nd.network.clone(), models))
+            })
+            .collect()
+    }
+}
+
+/// Signed-percentage-error accumulator (MPE numerator + MAPE numerator).
+#[derive(Debug, Default, Clone, Copy)]
+struct ErrAcc {
+    sum: f64,
+    abs: f64,
+    n: u64,
+}
+
+impl ErrAcc {
+    fn push(&mut self, e: f64) {
+        self.sum += e;
+        self.abs += e.abs();
+        self.n += 1;
+    }
+
+    fn mpe(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    fn mape(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.abs / self.n as f64
+        }
+    }
+}
+
+/// Running simple linear regression `y = intercept + slope·x`.
+#[derive(Debug, Default, Clone, Copy)]
+struct LinReg {
+    n: f64,
+    sx: f64,
+    sy: f64,
+    sxx: f64,
+    sxy: f64,
+}
+
+impl LinReg {
+    fn push(&mut self, x: f64, y: f64) {
+        self.n += 1.0;
+        self.sx += x;
+        self.sy += y;
+        self.sxx += x * x;
+        self.sxy += x * y;
+    }
+
+    /// Least-squares intercept; `None` when the x values carry no spread.
+    fn intercept(&self) -> Option<f64> {
+        let den = self.n * self.sxx - self.sx * self.sx;
+        if den.abs() < 1e-9 {
+            return None;
+        }
+        Some((self.sy * self.sxx - self.sx * self.sxy) / den)
+    }
+}
+
+/// The watchdog: rolling per-network batch samples scored against
+/// [`ModelExpectation`]s. Feed it with [`DriftMonitor::ingest`] (span-ring
+/// consumption — idempotent, prefix-tracked per ring) or directly with
+/// [`DriftMonitor::observe_batch`]; read it with [`DriftMonitor::report`].
+#[derive(Debug)]
+pub struct DriftMonitor {
+    policy: DriftPolicy,
+    expectations: BTreeMap<String, ModelExpectation>,
+    samples: BTreeMap<String, VecDeque<(u64, u64)>>,
+    /// Events already consumed per `(network, replica)` ring — snapshots
+    /// are prefix-stable (the ring drops new, never overwrites old), so a
+    /// plain prefix index makes repeated ingestion exactly-once.
+    consumed: BTreeMap<(String, usize), usize>,
+    /// `(network, component)` pairs already journaled, so a sustained
+    /// breach fires exactly one [`JournalKind::ModelDrift`] event.
+    flagged: BTreeSet<(String, &'static str)>,
+}
+
+impl DriftMonitor {
+    /// Monitor over `expectations` with the default [`DriftPolicy`].
+    pub fn new(expectations: Vec<ModelExpectation>) -> DriftMonitor {
+        DriftMonitor {
+            policy: DriftPolicy::default(),
+            expectations: expectations
+                .into_iter()
+                .map(|e| (e.network.clone(), e))
+                .collect(),
+            samples: BTreeMap::new(),
+            consumed: BTreeMap::new(),
+            flagged: BTreeSet::new(),
+        }
+    }
+
+    /// Override the verdict policy.
+    pub fn with_policy(mut self, policy: DriftPolicy) -> DriftMonitor {
+        self.policy = policy;
+        self
+    }
+
+    /// The active policy.
+    pub fn policy(&self) -> &DriftPolicy {
+        &self.policy
+    }
+
+    /// Record one measured batch: `batch` requests took `exec_ns` on
+    /// `network`. Networks without an expectation are ignored.
+    pub fn observe_batch(&mut self, network: &str, batch: u64, exec_ns: u64) {
+        if !self.expectations.contains_key(network) {
+            return;
+        }
+        let window = self.samples.entry(network.to_string()).or_default();
+        window.push_back((batch, exec_ns));
+        while window.len() > self.policy.window.max(1) {
+            window.pop_front();
+        }
+    }
+
+    /// Consume new `BatchStart`/`BatchEnd` pairs from every per-shard ring
+    /// of `telemetry` (the hub ring is skipped — its interleaved
+    /// multi-replica stream cannot be attributed). Returns the batches
+    /// ingested; calling again without new events ingests nothing.
+    pub fn ingest(&mut self, telemetry: &Telemetry) -> usize {
+        let mut ingested = 0;
+        for (network, replica, events) in telemetry.ring_snapshots() {
+            let key = (network.clone(), replica);
+            let start = self.consumed.get(&key).copied().unwrap_or(0);
+            let mut next_consumed = start;
+            let mut pending: Option<(u64, u64)> = None;
+            for (i, ev) in events.iter().enumerate().skip(start) {
+                match ev.kind {
+                    SpanKind::BatchStart => pending = Some((ev.t_ns, ev.value)),
+                    SpanKind::BatchEnd => {
+                        if let Some((t0, b)) = pending.take() {
+                            self.observe_batch(
+                                &network,
+                                b,
+                                ev.t_ns.saturating_sub(t0),
+                            );
+                            ingested += 1;
+                        }
+                        next_consumed = i + 1;
+                    }
+                    // Leave `next_consumed` parked at an unpaired
+                    // BatchStart so the pair is re-read once its BatchEnd
+                    // lands; everything else is consumed as scanned.
+                    _ => {
+                        if pending.is_none() {
+                            next_consumed = i + 1;
+                        }
+                    }
+                }
+            }
+            self.consumed.insert(key, next_consumed);
+        }
+        ingested
+    }
+
+    /// The contention fit points one network's window yields:
+    /// `(x, observed slowdown)` per sample, empty without a signal.
+    fn contention_points(
+        exp: &ModelExpectation,
+        samples: &VecDeque<(u64, u64)>,
+    ) -> Vec<(f64, f64)> {
+        let x = exp.contention_x.max(0.0);
+        if x <= X_EPS {
+            return Vec::new();
+        }
+        samples
+            .iter()
+            .filter_map(|&(b, obs)| {
+                let base = exp.batch_ns(b) as f64;
+                (base > 0.0).then(|| (x, obs as f64 / base))
+            })
+            .collect()
+    }
+
+    fn score_network(&self, exp: &ModelExpectation) -> NetworkDrift {
+        let empty = VecDeque::new();
+        let samples = self.samples.get(&exp.network).unwrap_or(&empty);
+        let x = exp.contention_x.max(0.0);
+        let assumed_stretch = 1.0 + exp.alpha * x;
+        let points = Self::contention_points(exp, samples);
+        let alpha_fitted = (!points.is_empty()).then(|| fit_alpha(&points));
+        let mut contention = ErrAcc::default();
+        for &(_, slow) in &points {
+            contention.push((slow - assumed_stretch) / assumed_stretch);
+        }
+        // Latency residual after dividing out the best-known stretch: the
+        // re-fitted slope when a contention signal exists, the assumed one
+        // otherwise — so a wrong α stays pinned to the contention row.
+        let stretch = 1.0 + alpha_fitted.unwrap_or(exp.alpha) * x;
+        let mut latency = ErrAcc::default();
+        let mut reg = LinReg::default();
+        let mut batch_sizes = BTreeSet::new();
+        for &(b, obs) in samples {
+            let base = exp.batch_ns(b) as f64;
+            if base <= 0.0 {
+                continue;
+            }
+            let corrected = obs as f64 / stretch;
+            latency.push((corrected - base) / base);
+            reg.push(b.max(1) as f64, corrected);
+            batch_sizes.insert(b.max(1));
+        }
+        // The fill intercept is observable only across ≥ 2 batch sizes.
+        let fill_err = if exp.fill_ns > 0 && batch_sizes.len() >= 2 {
+            reg.intercept()
+                .map(|est| (est - exp.fill_ns as f64) / exp.fill_ns as f64)
+        } else {
+            None
+        };
+        let enough = |n: u64| n >= self.policy.min_samples as u64;
+        let flag = |acc: &ErrAcc| enough(acc.n) && acc.mape() > self.policy.mape_threshold;
+        let fill_score = match fill_err {
+            Some(e) => ModelScore {
+                model: MODEL_FILL,
+                mpe: e,
+                mape: e.abs(),
+                samples: latency.n,
+                flagged: enough(latency.n) && e.abs() > self.policy.mape_threshold,
+            },
+            None => ModelScore {
+                model: MODEL_FILL,
+                mpe: 0.0,
+                mape: 0.0,
+                samples: 0,
+                flagged: false,
+            },
+        };
+        NetworkDrift {
+            network: exp.network.clone(),
+            alpha_assumed: exp.alpha,
+            alpha_fitted,
+            models: vec![
+                ModelScore {
+                    model: MODEL_LATENCY,
+                    mpe: latency.mpe(),
+                    mape: latency.mape(),
+                    samples: latency.n,
+                    flagged: flag(&latency),
+                },
+                fill_score,
+                ModelScore {
+                    model: MODEL_CONTENTION,
+                    mpe: contention.mpe(),
+                    mape: contention.mape(),
+                    samples: contention.n,
+                    flagged: flag(&contention),
+                },
+            ],
+        }
+    }
+
+    /// Score every expected network (sorted by name) without side effects.
+    pub fn score(&self) -> Vec<NetworkDrift> {
+        self.expectations.values().map(|e| self.score_network(e)).collect()
+    }
+
+    /// Ingest new telemetry, score, journal newly flagged components
+    /// (one [`JournalKind::ModelDrift`] event + armed flight dump per
+    /// `(network, component)`), and return the full [`DriftReport`].
+    /// `t_ms` stamps the journal events (wall ms live, virtual ms in a
+    /// simulation).
+    pub fn report(&mut self, telemetry: &Telemetry, t_ms: f64) -> DriftReport {
+        self.ingest(telemetry);
+        let networks = self.score();
+        for nd in &networks {
+            for m in &nd.models {
+                if m.flagged && self.flagged.insert((nd.network.clone(), m.model)) {
+                    let reason = format!(
+                        "model `{}` drift on {}: MAPE {:.1}% over {} samples \
+                         (threshold {:.1}%)",
+                        m.model,
+                        nd.network,
+                        100.0 * m.mape,
+                        m.samples,
+                        100.0 * self.policy.mape_threshold,
+                    );
+                    telemetry.record_decision(JournalEvent {
+                        t_ms,
+                        kind: JournalKind::ModelDrift,
+                        network: nd.network.clone(),
+                        device: None,
+                        from_replicas: 0,
+                        to_replicas: 0,
+                        reason: reason.clone(),
+                        inputs: vec![
+                            ("mape".to_string(), m.mape),
+                            ("mpe".to_string(), m.mpe),
+                            ("samples".to_string(), m.samples as f64),
+                            (
+                                "mape_threshold".to_string(),
+                                self.policy.mape_threshold,
+                            ),
+                        ],
+                    });
+                    telemetry.flight_on_breach(&nd.network, t_ms, &reason);
+                }
+            }
+        }
+        let contention_drifted = networks.iter().any(|nd| {
+            nd.score(MODEL_CONTENTION).map_or(false, |m| m.flagged)
+        });
+        let proposed_alpha = if contention_drifted {
+            let pooled: Vec<(f64, f64)> = self
+                .expectations
+                .values()
+                .flat_map(|e| match self.samples.get(&e.network) {
+                    Some(s) => Self::contention_points(e, s),
+                    None => Vec::new(),
+                })
+                .collect();
+            (!pooled.is_empty()).then(|| fit_alpha(&pooled))
+        } else {
+            None
+        };
+        DriftReport {
+            networks,
+            proposed_alpha,
+            spans_dropped: telemetry.spans_dropped(),
+            rings: telemetry.ring_stats(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::SpanEvent;
+
+    fn expectation(x: f64) -> ModelExpectation {
+        // 1 ms service, 0.4 ms fill: batch_ns(1)=1.0 ms, (2)=1.6, (4)=2.8.
+        ModelExpectation {
+            network: "alpha".to_string(),
+            service_ns: 1_000_000,
+            fill_ns: 400_000,
+            contention_x: x,
+            alpha: 2.07,
+        }
+    }
+
+    /// Feed `monitor` batches measured under a TRUE contention slope.
+    fn feed_stretched(monitor: &mut DriftMonitor, x: f64, true_alpha: f64) {
+        let exp = expectation(x);
+        for _ in 0..3 {
+            for b in [1u64, 2, 4] {
+                // Exact integer stretch: base × (1 + true_alpha·x) with the
+                // demo numbers (α=4.0, x=0.3 → ×2.2 = ×11/5).
+                assert_eq!((true_alpha, x), (4.0, 0.3), "helper is demo-specific");
+                let obs = exp.batch_ns(b) * 11 / 5;
+                monitor.observe_batch("alpha", b, obs);
+            }
+        }
+    }
+
+    #[test]
+    fn a_wrong_contention_alpha_flags_only_the_contention_model() {
+        // Measurements stretched by a TRUE α=4.0 at x=0.3; the monitor
+        // assumes the shipped 2.07. The contention row must flag, the
+        // re-fit must recover 4.0, and the latency/fill rows — judged
+        // after the re-fitted stretch is divided out — must stay clean.
+        let mut m = DriftMonitor::new(vec![expectation(0.3)]);
+        feed_stretched(&mut m, 0.3, 4.0);
+        let nd = &m.score()[0];
+        let cont = nd.score(MODEL_CONTENTION).unwrap();
+        assert!(cont.flagged, "{cont:?}");
+        assert!((cont.mape - (2.2 - 1.621) / 1.621).abs() < 1e-9, "{cont:?}");
+        assert!(cont.mpe > 0.0, "true slowdown exceeds the assumed one");
+        let fitted = nd.alpha_fitted.expect("contention signal present");
+        assert!((fitted - 4.0).abs() < 1e-9, "fitted {fitted}");
+        let lat = nd.score(MODEL_LATENCY).unwrap();
+        assert!(!lat.flagged, "{lat:?}");
+        assert!(lat.mape < 1e-9, "residual after the re-fit is zero");
+        let fill = nd.score(MODEL_FILL).unwrap();
+        assert!(!fill.flagged, "{fill:?}");
+    }
+
+    #[test]
+    fn a_wrong_service_prediction_flags_latency_but_not_fill_or_contention() {
+        // True service 1.5 ms against a predicted 1.0 ms, same 0.4 ms fill,
+        // no co-location: observed = fill + (true_service − fill)·b. The
+        // latency row drifts; the fill intercept is still exactly 0.4 ms
+        // and there is no contention signal to mis-blame.
+        let mut m = DriftMonitor::new(vec![expectation(0.0)]);
+        for _ in 0..3 {
+            for b in [1u64, 2, 4] {
+                let obs = 400_000 + 1_100_000 * b;
+                m.observe_batch("alpha", b, obs);
+            }
+        }
+        let nd = &m.score()[0];
+        assert!(nd.score(MODEL_LATENCY).unwrap().flagged);
+        assert!(!nd.score(MODEL_FILL).unwrap().flagged);
+        let cont = nd.score(MODEL_CONTENTION).unwrap();
+        assert!(!cont.flagged);
+        assert_eq!(cont.samples, 0, "x = 0 carries no contention signal");
+        assert_eq!(nd.alpha_fitted, None);
+    }
+
+    #[test]
+    fn accurate_models_stay_unflagged() {
+        let mut m = DriftMonitor::new(vec![expectation(0.0)]);
+        let exp = expectation(0.0);
+        for _ in 0..4 {
+            for b in [1u64, 2, 4] {
+                m.observe_batch("alpha", b, exp.batch_ns(b));
+            }
+        }
+        let nd = &m.score()[0];
+        for model in [MODEL_LATENCY, MODEL_FILL, MODEL_CONTENTION] {
+            assert!(!nd.score(model).unwrap().flagged, "{model}");
+        }
+    }
+
+    #[test]
+    fn verdicts_wait_for_min_samples() {
+        let mut m = DriftMonitor::new(vec![expectation(0.0)]);
+        for _ in 0..3 {
+            m.observe_batch("alpha", 1, 9_000_000); // wildly off, 3 < 8 samples
+        }
+        assert!(!m.score()[0].score(MODEL_LATENCY).unwrap().flagged);
+    }
+
+    #[test]
+    fn ingest_pairs_ring_batches_exactly_once() {
+        let t = Telemetry::new();
+        let scope = t.scope_for("alpha", 0);
+        scope.span_at(100, SpanKind::BatchStart, 2);
+        scope.span_at(1_700_100, SpanKind::BatchEnd, 2);
+        // An in-flight batch: BatchStart without its end yet.
+        scope.span_at(2_000_000, SpanKind::BatchStart, 1);
+        let mut m = DriftMonitor::new(vec![expectation(0.0)]);
+        assert_eq!(m.ingest(&t), 1);
+        assert_eq!(m.ingest(&t), 0, "no new events, nothing re-ingested");
+        assert_eq!(m.samples["alpha"].len(), 1);
+        assert_eq!(m.samples["alpha"][0], (2, 1_700_000));
+        // The parked pair completes: exactly one more batch lands.
+        scope.span_at(3_000_000, SpanKind::BatchEnd, 1);
+        assert_eq!(m.ingest(&t), 1);
+        assert_eq!(m.samples["alpha"].len(), 2);
+    }
+
+    #[test]
+    fn report_journals_each_flag_once_and_arms_a_flight() {
+        let t = Telemetry::new();
+        let mut m = DriftMonitor::new(vec![expectation(0.3)]);
+        feed_stretched(&mut m, 0.3, 4.0);
+        let r1 = m.report(&t, 125.0);
+        assert_eq!(
+            r1.flagged(),
+            vec![("alpha".to_string(), vec![MODEL_CONTENTION])]
+        );
+        let proposed = r1.proposed_alpha.expect("contention drift proposes α");
+        assert!((proposed - 4.0).abs() < 1e-9);
+        let events = t.journal().snapshot();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].kind, JournalKind::ModelDrift);
+        assert_eq!(events[0].network, "alpha");
+        assert_eq!(events[0].t_ms, 125.0);
+        assert!(events[0].reason.contains("model `contention` drift"));
+        assert_eq!(t.take_flights().len(), 1, "drift armed a flight dump");
+        // A second report re-states the standing but journals nothing new.
+        let r2 = m.report(&t, 250.0);
+        assert_eq!(r2.flagged(), r1.flagged());
+        assert_eq!(t.journal().len(), 1);
+        assert!(t.take_flights().is_empty());
+    }
+
+    #[test]
+    fn report_json_is_deterministic_and_carries_every_section() {
+        let t = Telemetry::new();
+        t.scope_for("alpha", 0).span_at(1, SpanKind::BatchStart, 1);
+        let mut m = DriftMonitor::new(vec![expectation(0.3)]);
+        feed_stretched(&mut m, 0.3, 4.0);
+        let json = m.report(&t, 1.0).to_json();
+        assert_eq!(json, m.report(&t, 2.0).to_json());
+        assert!(json.starts_with("{\n  \"drift\": {"));
+        for needle in [
+            "\"proposed_alpha\": 4.000000",
+            "\"spans_dropped\": 0",
+            "\"obs_ring_dropped\": 0",
+            "\"obs_ring_occupancy\": 1",
+            "\"model\": \"contention\"",
+            "\"flagged\": true",
+            "\"alpha_assumed\": 2.070000",
+        ] {
+            assert!(json.contains(needle), "missing {needle} in {json}");
+        }
+    }
+}

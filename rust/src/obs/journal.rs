@@ -27,6 +27,12 @@ pub enum JournalKind {
     Rebind,
     /// SLO policy swapped at runtime.
     PolicySwap,
+    /// A fitted model's rolling MAPE breached the drift threshold
+    /// (emitted by `obs::drift::DriftMonitor`).
+    ModelDrift,
+    /// Post-hoc verdict on an earlier decision: did the fleet move the way
+    /// the journaled prediction claimed over the next control window?
+    Audit,
 }
 
 impl JournalKind {
@@ -37,6 +43,8 @@ impl JournalKind {
             JournalKind::ScaleDown => "scale_down",
             JournalKind::Rebind => "rebind",
             JournalKind::PolicySwap => "policy_swap",
+            JournalKind::ModelDrift => "model_drift",
+            JournalKind::Audit => "audit",
         }
     }
 }
@@ -230,5 +238,7 @@ mod tests {
         assert_eq!(JournalKind::ScaleDown.name(), "scale_down");
         assert_eq!(JournalKind::Rebind.name(), "rebind");
         assert_eq!(JournalKind::PolicySwap.name(), "policy_swap");
+        assert_eq!(JournalKind::ModelDrift.name(), "model_drift");
+        assert_eq!(JournalKind::Audit.name(), "audit");
     }
 }

@@ -18,20 +18,35 @@
 //! simulated trace and a live trace of the same scenario produce
 //! comparable per-kind span timelines (pinned by
 //! `rust/tests/integration_obs.rs`).
+//!
+//! Two consumers close the loop on the raw plane: [`trace`] reassembles
+//! one request's spans into a causal per-request trace (queue-wait /
+//! coalesce / exec attribution per request, keyed by the `TraceId` packed
+//! into the span values), and [`drift`] scores the fitted models'
+//! predictions against the measured batches (the paper's MPE/MAPE
+//! validation metrics, running continuously).
 
+pub mod drift;
 pub mod flight;
 pub mod journal;
 pub mod metrics;
 pub mod span;
+pub mod trace;
 
+pub use drift::{
+    DriftMonitor, DriftPolicy, DriftReport, ModelExpectation, ModelScore,
+    NetworkDrift, MODEL_CONTENTION, MODEL_FILL, MODEL_LATENCY,
+};
 pub use flight::FlightDump;
 pub use journal::{DecisionJournal, JournalEvent, JournalKind, DEFAULT_JOURNAL_CAPACITY};
 pub use metrics::{
     Counter, Gauge, HistogramRow, LogLinearHistogram, MetricsRegistry, Stage,
 };
 pub use span::{SpanEvent, SpanKind, SpanRing, DEFAULT_SPAN_CAPACITY};
+pub use trace::{assemble, Assembly, RequestTrace};
 
 use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -57,6 +72,12 @@ pub mod names {
     pub const FLIGHTS_CAPTURED: &str = "obs_flights_captured";
     /// Current fleet replica total (gauge, set by the controller).
     pub const FLEET_REPLICAS: &str = "obs_fleet_replicas";
+    /// Spans refused by one shard's full ring (per-ring derived counter,
+    /// exported with `network`/`replica` labels).
+    pub const RING_DROPPED: &str = "obs_ring_dropped";
+    /// Events currently held by one shard's ring (per-ring derived gauge,
+    /// exported with `network`/`replica` labels).
+    pub const RING_OCCUPANCY: &str = "obs_ring_occupancy";
 
     /// Every obs metric name (export and lint tests iterate it).
     pub const ALL: &[&str] = &[
@@ -68,6 +89,8 @@ pub mod names {
         JOURNAL_EVENTS,
         FLIGHTS_CAPTURED,
         FLEET_REPLICAS,
+        RING_DROPPED,
+        RING_OCCUPANCY,
     ];
 }
 
@@ -108,6 +131,7 @@ pub trait Sink: Send + Sync {
 pub struct SpanScope {
     ring: Arc<SpanRing>,
     epoch: Instant,
+    next_trace: Arc<AtomicU64>,
     queue_wait: Arc<LogLinearHistogram>,
     coalesce: Arc<LogLinearHistogram>,
     exec: Arc<LogLinearHistogram>,
@@ -117,6 +141,14 @@ impl SpanScope {
     /// Nanoseconds since the telemetry epoch.
     pub fn now_ns(&self) -> u64 {
         self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Allocate the next request `TraceId` — one `Relaxed` `fetch_add` on
+    /// the plane-wide counter, never 0 ([`trace::UNTRACED`]), wrapping
+    /// safely past `u32::MAX`. Shared across every scope of one
+    /// [`Telemetry`] so ids stay unique fleet-wide.
+    pub fn next_trace_id(&self) -> u32 {
+        (self.next_trace.fetch_add(1, Ordering::Relaxed) % 0xFFFF_FFFF) as u32 + 1
     }
 
     /// Record a span stamped with the current time.
@@ -150,12 +182,34 @@ struct RingEntry {
     ring: Arc<SpanRing>,
 }
 
+/// One shard ring's health snapshot: lifetime drop count plus current
+/// occupancy, surfaced in both exports and in [`drift::DriftReport`] so a
+/// saturated ring can never masquerade as low traffic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RingStat {
+    /// Network the ring belongs to.
+    pub network: String,
+    /// Replica ordinal within the network.
+    pub replica: usize,
+    /// Spans committed over the ring's lifetime.
+    pub recorded: u64,
+    /// Spans refused because the ring was full.
+    pub dropped: u64,
+    /// Events currently held (committed and not yet drained).
+    pub occupancy: usize,
+    /// Ring capacity in events.
+    pub capacity: usize,
+}
+
 /// The telemetry plane: owns the span rings, the metrics registry, the
 /// decision journal, and the flight recorder. One instance per fleet
 /// (live or simulated); shared by `Arc`.
 pub struct Telemetry {
     epoch: Instant,
     span_capacity: usize,
+    /// Plane-wide request `TraceId` counter (see
+    /// [`SpanScope::next_trace_id`]).
+    next_trace: Arc<AtomicU64>,
     /// Ring for emitters without a shard identity (the [`Sink`] path the
     /// simulator uses).
     hub: Arc<SpanRing>,
@@ -192,6 +246,7 @@ impl Telemetry {
         Telemetry {
             epoch: Instant::now(),
             span_capacity,
+            next_trace: Arc::new(AtomicU64::new(0)),
             hub: Arc::new(SpanRing::new(span_capacity)),
             rings: Mutex::new(Vec::new()),
             registry,
@@ -242,6 +297,7 @@ impl Telemetry {
         SpanScope {
             ring: self.ring_for(network, replica),
             epoch: self.epoch,
+            next_trace: Arc::clone(&self.next_trace),
             queue_wait: Arc::clone(&self.queue_wait),
             coalesce: Arc::clone(&self.coalesce),
             exec: Arc::clone(&self.exec),
@@ -253,6 +309,7 @@ impl Telemetry {
         SpanScope {
             ring: Arc::clone(&self.hub),
             epoch: self.epoch,
+            next_trace: Arc::clone(&self.next_trace),
             queue_wait: Arc::clone(&self.queue_wait),
             coalesce: Arc::clone(&self.coalesce),
             exec: Arc::clone(&self.exec),
@@ -292,6 +349,44 @@ impl Telemetry {
             *counts.get_mut(s.kind.name()).unwrap() += 1;
         }
         counts
+    }
+
+    /// Per-shard ring snapshots, sorted by `(network, replica)`. Snapshots
+    /// are prefix-stable (rings drop new events, never overwrite committed
+    /// ones), so consumers like [`drift::DriftMonitor::ingest`] can track
+    /// a consumed prefix per ring across repeated calls. The hub ring is
+    /// excluded — it has no shard identity.
+    pub fn ring_snapshots(&self) -> Vec<(String, usize, Vec<SpanEvent>)> {
+        let mut out: Vec<(String, usize, Vec<SpanEvent>)> = self
+            .rings
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|e| (e.network.clone(), e.replica, e.ring.snapshot()))
+            .collect();
+        out.sort_by(|a, b| (&a.0, a.1).cmp(&(&b.0, b.1)));
+        out
+    }
+
+    /// Per-shard ring health (drops + occupancy), sorted by
+    /// `(network, replica)`. The hub ring is excluded.
+    pub fn ring_stats(&self) -> Vec<RingStat> {
+        let mut out: Vec<RingStat> = self
+            .rings
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|e| RingStat {
+                network: e.network.clone(),
+                replica: e.replica,
+                recorded: e.ring.recorded(),
+                dropped: e.ring.dropped(),
+                occupancy: e.ring.len(),
+                capacity: e.ring.capacity(),
+            })
+            .collect();
+        out.sort_by(|a, b| (&a.network, a.replica).cmp(&(&b.network, b.replica)));
+        out
     }
 
     /// Spans claimed across every ring over the plane's lifetime.
@@ -373,7 +468,24 @@ impl Telemetry {
             }
             out.push_str(&format!("\"{name}\": {n}"));
         }
-        out.push_str("}},\n");
+        out.push_str("}, \"rings\": [");
+        for (i, r) in self.ring_stats().iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!(
+                "{{\"network\": \"{}\", \"replica\": {}, \"{}\": {}, \"{}\": {}, \
+                 \"capacity\": {}}}",
+                json_escape(&r.network),
+                r.replica,
+                names::RING_DROPPED,
+                r.dropped,
+                names::RING_OCCUPANCY,
+                r.occupancy,
+                r.capacity
+            ));
+        }
+        out.push_str("]},\n");
         out.push_str(&self.registry.json_body());
         out.push_str(",\n");
         out.push_str(&format!(
@@ -400,6 +512,35 @@ impl Telemetry {
             self.spans_dropped(),
             name = names::SPANS_DROPPED
         ));
+        let rings = self.ring_stats();
+        if !rings.is_empty() {
+            out.push_str(&format!(
+                "# TYPE {} counter\n",
+                names::RING_DROPPED
+            ));
+            for r in &rings {
+                out.push_str(&format!(
+                    "{}{{network=\"{}\",replica=\"{}\"}} {}\n",
+                    names::RING_DROPPED,
+                    json_escape(&r.network),
+                    r.replica,
+                    r.dropped
+                ));
+            }
+            out.push_str(&format!(
+                "# TYPE {} gauge\n",
+                names::RING_OCCUPANCY
+            ));
+            for r in &rings {
+                out.push_str(&format!(
+                    "{}{{network=\"{}\",replica=\"{}\"}} {}\n",
+                    names::RING_OCCUPANCY,
+                    json_escape(&r.network),
+                    r.replica,
+                    r.occupancy
+                ));
+            }
+        }
         out
     }
 }
@@ -549,9 +690,45 @@ mod tests {
             names::STAGE_EXEC_NS,
             "\"total_recorded\": 1",
             "\"kind\": \"scale_up\"",
+            "\"rings\": [{\"network\": \"tiny_q8\", \"replica\": 0",
+            "\"obs_ring_dropped\": 0",
+            "\"obs_ring_occupancy\": 2",
         ] {
             assert!(a.contains(needle), "missing {needle} in {a}");
         }
+    }
+
+    #[test]
+    fn ring_stats_and_snapshots_are_sorted_and_shard_scoped() {
+        let t = Telemetry::with_span_capacity(4);
+        t.scope_for("b", 1).span_at(5, SpanKind::Enqueue, 0);
+        let a0 = t.scope_for("a", 0);
+        for i in 0..6 {
+            a0.span_at(i, SpanKind::Enqueue, i);
+        }
+        t.hub_scope().span_at(1, SpanKind::Route, 0);
+        let stats = t.ring_stats();
+        assert_eq!(stats.len(), 2, "hub ring carries no shard identity");
+        assert_eq!((stats[0].network.as_str(), stats[0].replica), ("a", 0));
+        assert_eq!((stats[1].network.as_str(), stats[1].replica), ("b", 1));
+        assert_eq!(stats[0].recorded, 4);
+        assert_eq!(stats[0].dropped, 2, "capacity-4 ring refused the overflow");
+        assert_eq!(stats[0].occupancy, 4);
+        assert_eq!(stats[0].capacity, 4);
+        let snaps = t.ring_snapshots();
+        assert_eq!(snaps.len(), 2);
+        assert_eq!(snaps[0].2.len(), 4);
+        assert_eq!(snaps[1].2.len(), 1);
+    }
+
+    #[test]
+    fn trace_ids_are_nonzero_and_unique_across_scopes() {
+        let t = Telemetry::new();
+        let a = t.scope_for("a", 0);
+        let b = t.scope_for("b", 0);
+        let ids = [a.next_trace_id(), b.next_trace_id(), a.next_trace_id()];
+        assert_eq!(ids, [1, 2, 3], "one plane-wide counter, never UNTRACED");
+        assert!(ids.iter().all(|&id| id != trace::UNTRACED));
     }
 
     #[test]
@@ -564,6 +741,9 @@ mod tests {
         assert!(prom.contains("obs_spans_dropped 0"));
         assert!(prom.contains("# TYPE obs_stage_queue_wait_ns summary"));
         assert!(prom.contains("obs_stage_queue_wait_ns_count 1"));
+        assert!(prom.contains("# TYPE obs_ring_dropped counter"));
+        assert!(prom.contains("obs_ring_dropped{network=\"n\",replica=\"0\"} 0"));
+        assert!(prom.contains("obs_ring_occupancy{network=\"n\",replica=\"0\"} 1"));
     }
 
     #[test]

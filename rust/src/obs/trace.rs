@@ -1,0 +1,318 @@
+//! Request-correlated tracing over the span ring: a compact `TraceId` rides
+//! the per-request span kinds, so one request's scattered ring events can be
+//! reassembled into a causal trace.
+//!
+//! ## The packing
+//!
+//! A span slot's value field carries 56 bits ([`crate::obs::span`]). The
+//! per-request kinds (`Route`, `Enqueue`, `GuardRelease`) split it: the top
+//! 32 bits carry the trace id, the low [`PAYLOAD_BITS`] carry the stage
+//! payload the kind always carried (replica ordinal, queue depth). Trace id
+//! 0 means "untraced" — exactly what un-packed legacy values and the
+//! per-batch kinds (whose payloads are small batch sizes) decode to, so old
+//! and new spans coexist in one ring. The id is allocated with a single
+//! `Relaxed` fetch-add on a shared counter: no new synchronization appears
+//! anywhere on the hot path (`docs/HOTPATH.md` §10), and the slot layout is
+//! untouched.
+//!
+//! ## Assembly
+//!
+//! [`assemble`] folds ONE ring's events (a single worker's serialized
+//! timeline — per-shard rings live, per-replica rings under
+//! `SimFleet::set_telemetry`) into [`RequestTrace`]s: each `GuardRelease`
+//! closes the trace opened by its `Enqueue`, riding the most recent
+//! completed batch for queue-wait / coalesce / exec attribution. Spans lost
+//! to ring overflow surface as `orphaned` / `incomplete` counts — assembly
+//! never guesses.
+
+use super::span::{SpanEvent, SpanKind};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Low bits of a packed per-request span value carrying the stage payload;
+/// the trace id rides the 32 bits above them.
+pub const PAYLOAD_BITS: u32 = 24;
+
+/// Mask selecting the stage payload of a packed value.
+pub const PAYLOAD_MASK: u64 = (1 << PAYLOAD_BITS) - 1;
+
+/// The trace id meaning "no trace attached" (legacy spans, batch kinds).
+pub const UNTRACED: u32 = 0;
+
+/// Pack a trace id over a stage payload (payload clamped to
+/// [`PAYLOAD_BITS`]). The result fits the 56-bit span value exactly.
+pub fn pack(trace: u32, payload: u64) -> u64 {
+    ((trace as u64) << PAYLOAD_BITS) | (payload & PAYLOAD_MASK)
+}
+
+/// The trace id a span value carries (0 = untraced).
+pub fn trace_of(value: u64) -> u32 {
+    (value >> PAYLOAD_BITS) as u32
+}
+
+/// The stage payload under the trace id.
+pub fn payload_of(value: u64) -> u64 {
+    value & PAYLOAD_MASK
+}
+
+/// One request's reassembled causal trace: per-stage time attribution
+/// recovered purely from ring events.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RequestTrace {
+    /// The request's trace id.
+    pub trace: u32,
+    /// Replica the router picked (the `Route` payload).
+    pub replica: u64,
+    /// Size of the batch the request rode.
+    pub batch: u64,
+    /// Enqueue instant (ns since the telemetry epoch).
+    pub enqueue_t_ns: u64,
+    /// Completion-guard release instant (ns).
+    pub release_t_ns: u64,
+    /// Enqueue → batch dispatch (admission queue wait, ns).
+    pub queue_wait_ns: u64,
+    /// Window open → window close of the request's batch (ns).
+    pub coalesce_ns: u64,
+    /// Batch dispatch → batch completion (ns).
+    pub exec_ns: u64,
+    /// Enqueue → guard release (ns) — the request's end-to-end residency.
+    pub total_ns: u64,
+}
+
+/// The result of assembling one ring's events: complete traces plus exact
+/// accounting for everything that could NOT be assembled.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Assembly {
+    /// Fully reassembled request traces, in completion order.
+    pub complete: Vec<RequestTrace>,
+    /// `GuardRelease` events whose `Enqueue` was never seen (lost to ring
+    /// overflow or a pre-attach request).
+    pub orphaned: u64,
+    /// Traces opened by an `Enqueue` but never closed by a `GuardRelease`
+    /// (in flight at snapshot time, or the release span was dropped).
+    pub incomplete: u64,
+    /// Spans that would have double-counted a trace (a second `Enqueue` or
+    /// `GuardRelease` for an id already seen) — always 0 in a correct run.
+    pub double_counted: u64,
+}
+
+/// A trace mid-assembly: what the per-request spans said so far.
+#[derive(Debug, Clone, Copy, Default)]
+struct Partial {
+    enqueue_t_ns: Option<u64>,
+    replica: Option<u64>,
+}
+
+/// The most recent completed batch's timeline (the context a
+/// `GuardRelease` attributes its stages against).
+#[derive(Debug, Clone, Copy)]
+struct BatchCtx {
+    window_open_t_ns: u64,
+    window_close_t_ns: u64,
+    start_t_ns: u64,
+    end_t_ns: u64,
+    size: u64,
+}
+
+/// Reassemble one ring's span events (oldest first, as
+/// [`crate::obs::SpanRing::snapshot`] returns them) into per-request
+/// traces. The events must come from a single worker's ring: batch kinds
+/// carry no trace id, so their pairing relies on the ring's serialized
+/// emission order (`WindowOpen → WindowClose → BatchStart → BatchEnd →
+/// riders' GuardRelease`). Untraced spans (trace id 0) contribute batch
+/// context but never open or close a trace.
+pub fn assemble(events: &[SpanEvent]) -> Assembly {
+    let mut out = Assembly::default();
+    let mut partials: BTreeMap<u32, Partial> = BTreeMap::new();
+    let mut closed: BTreeSet<u32> = BTreeSet::new();
+    let mut window_open_t: Option<u64> = None;
+    let mut window: Option<(u64, u64)> = None;
+    let mut batch_start: Option<(u64, u64)> = None;
+    let mut last_batch: Option<BatchCtx> = None;
+    for ev in events {
+        match ev.kind {
+            SpanKind::WindowOpen => window_open_t = Some(ev.t_ns),
+            SpanKind::WindowClose => {
+                window = Some((window_open_t.take().unwrap_or(ev.t_ns), ev.t_ns));
+            }
+            SpanKind::BatchStart => batch_start = Some((ev.t_ns, ev.value)),
+            SpanKind::BatchEnd => {
+                if let Some((start_t_ns, size)) = batch_start.take() {
+                    let (wo, wc) = window.take().unwrap_or((start_t_ns, start_t_ns));
+                    last_batch = Some(BatchCtx {
+                        window_open_t_ns: wo,
+                        window_close_t_ns: wc,
+                        start_t_ns,
+                        end_t_ns: ev.t_ns,
+                        size,
+                    });
+                }
+            }
+            SpanKind::Route => {
+                let trace = trace_of(ev.value);
+                if trace != UNTRACED {
+                    partials.entry(trace).or_default().replica = Some(payload_of(ev.value));
+                }
+            }
+            SpanKind::Enqueue => {
+                let trace = trace_of(ev.value);
+                if trace != UNTRACED {
+                    let p = partials.entry(trace).or_default();
+                    if p.enqueue_t_ns.is_some() {
+                        out.double_counted += 1;
+                    } else {
+                        p.enqueue_t_ns = Some(ev.t_ns);
+                    }
+                }
+            }
+            SpanKind::GuardRelease => {
+                let trace = trace_of(ev.value);
+                if trace == UNTRACED {
+                    continue;
+                }
+                if closed.contains(&trace) {
+                    out.double_counted += 1;
+                    continue;
+                }
+                let Some(p) = partials.remove(&trace) else {
+                    out.orphaned += 1;
+                    continue;
+                };
+                let Some(enqueue_t_ns) = p.enqueue_t_ns else {
+                    out.orphaned += 1;
+                    continue;
+                };
+                let Some(b) = last_batch else {
+                    out.orphaned += 1;
+                    continue;
+                };
+                closed.insert(trace);
+                out.complete.push(RequestTrace {
+                    trace,
+                    replica: p.replica.unwrap_or(0),
+                    batch: b.size,
+                    enqueue_t_ns,
+                    release_t_ns: ev.t_ns,
+                    queue_wait_ns: b.start_t_ns.saturating_sub(enqueue_t_ns),
+                    coalesce_ns: b.window_close_t_ns.saturating_sub(b.window_open_t_ns),
+                    exec_ns: b.end_t_ns.saturating_sub(b.start_t_ns),
+                    total_ns: ev.t_ns.saturating_sub(enqueue_t_ns),
+                });
+            }
+        }
+    }
+    out.incomplete = partials.len() as u64;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t_ns: u64, kind: SpanKind, value: u64) -> SpanEvent {
+        SpanEvent::new(t_ns, kind, value)
+    }
+
+    #[test]
+    fn packing_round_trips_and_zero_means_untraced() {
+        let v = pack(7, 3);
+        assert_eq!(trace_of(v), 7);
+        assert_eq!(payload_of(v), 3);
+        // Legacy/batch values — small plain payloads — decode as untraced.
+        assert_eq!(trace_of(4), UNTRACED);
+        assert_eq!(payload_of(4), 4);
+        // The packed value fits the 56-bit slot exactly: SpanEvent's clamp
+        // must not disturb it even at the extremes.
+        let top = pack(u32::MAX, PAYLOAD_MASK);
+        let stored = SpanEvent::new(0, SpanKind::Enqueue, top).value;
+        assert_eq!(stored, top);
+        assert_eq!(trace_of(stored), u32::MAX);
+        assert_eq!(payload_of(stored), PAYLOAD_MASK);
+    }
+
+    #[test]
+    fn payload_is_clamped_not_smeared_into_the_trace_bits() {
+        let v = pack(1, u64::MAX);
+        assert_eq!(trace_of(v), 1, "oversized payload must not corrupt the id");
+        assert_eq!(payload_of(v), PAYLOAD_MASK);
+    }
+
+    /// A two-request batch walked through the exact live emission order.
+    fn two_rider_timeline() -> Vec<SpanEvent> {
+        vec![
+            ev(100, SpanKind::Route, pack(1, 0)),
+            ev(110, SpanKind::Enqueue, pack(1, 1)),
+            ev(120, SpanKind::WindowOpen, 1),
+            ev(150, SpanKind::Route, pack(2, 0)),
+            ev(160, SpanKind::Enqueue, pack(2, 2)),
+            ev(300, SpanKind::WindowClose, 2),
+            ev(310, SpanKind::BatchStart, 2),
+            ev(900, SpanKind::BatchEnd, 2),
+            ev(910, SpanKind::GuardRelease, pack(1, 0)),
+            ev(920, SpanKind::GuardRelease, pack(2, 0)),
+        ]
+    }
+
+    #[test]
+    fn a_batch_of_two_assembles_into_two_complete_traces() {
+        let asm = assemble(&two_rider_timeline());
+        assert_eq!(asm.complete.len(), 2);
+        assert_eq!((asm.orphaned, asm.incomplete, asm.double_counted), (0, 0, 0));
+        let first = &asm.complete[0];
+        assert_eq!(first.trace, 1);
+        assert_eq!(first.batch, 2);
+        assert_eq!(first.queue_wait_ns, 310 - 110);
+        assert_eq!(first.coalesce_ns, 300 - 120);
+        assert_eq!(first.exec_ns, 900 - 310);
+        assert_eq!(first.total_ns, 910 - 110);
+        let second = &asm.complete[1];
+        assert_eq!(second.trace, 2);
+        assert_eq!(second.queue_wait_ns, 310 - 160);
+        assert_eq!(second.total_ns, 920 - 160);
+    }
+
+    #[test]
+    fn a_release_without_an_enqueue_is_orphaned_not_invented() {
+        // The enqueue span was dropped by a full ring: the release cannot be
+        // attributed and must surface as an orphan, never a fake trace.
+        let mut events = two_rider_timeline();
+        events.retain(|e| !(e.kind == SpanKind::Enqueue && trace_of(e.value) == 2));
+        let asm = assemble(&events);
+        assert_eq!(asm.complete.len(), 1);
+        assert_eq!(asm.orphaned, 1);
+    }
+
+    #[test]
+    fn an_unreleased_trace_counts_as_incomplete() {
+        let mut events = two_rider_timeline();
+        events.pop(); // drop trace 2's GuardRelease
+        let asm = assemble(&events);
+        assert_eq!(asm.complete.len(), 1);
+        assert_eq!(asm.incomplete, 1);
+    }
+
+    #[test]
+    fn double_releases_and_double_enqueues_are_counted_not_duplicated() {
+        let mut events = two_rider_timeline();
+        events.push(ev(930, SpanKind::GuardRelease, pack(1, 0)));
+        events.insert(2, ev(111, SpanKind::Enqueue, pack(1, 1)));
+        let asm = assemble(&events);
+        assert_eq!(asm.complete.len(), 2, "each id assembles exactly once");
+        assert_eq!(asm.double_counted, 2);
+    }
+
+    #[test]
+    fn untraced_spans_contribute_batch_context_but_no_traces() {
+        // A legacy (trace-id-0) request shares the batch with a traced one:
+        // the traced request still assembles; the legacy one is invisible.
+        let mut events = two_rider_timeline();
+        for e in events.iter_mut() {
+            if trace_of(e.value) == 2 {
+                e.value = pack(UNTRACED, payload_of(e.value));
+            }
+        }
+        let asm = assemble(&events);
+        assert_eq!(asm.complete.len(), 1);
+        assert_eq!(asm.complete[0].trace, 1);
+        assert_eq!((asm.orphaned, asm.incomplete, asm.double_counted), (0, 0, 0));
+    }
+}

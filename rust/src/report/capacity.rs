@@ -126,6 +126,7 @@ mod tests {
             scale_ups: 1,
             scale_downs: 0,
             stages: vec![],
+            drift: None,
         }
     }
 

@@ -60,7 +60,8 @@ use crate::coordinator::service::ServiceStats;
 use crate::coordinator::shard::aggregate;
 use crate::coordinator::{CoalescePolicy, Router, ShardSpec, ShardStats, ShardedStats};
 use crate::fleetplan::{Autoscaler, ScaleDecision, ScaleTarget};
-use crate::obs::{Sink, SpanEvent, SpanKind, Stage};
+use crate::obs::trace::{pack, UNTRACED};
+use crate::obs::{ModelExpectation, Sink, SpanEvent, SpanKind, SpanScope, Stage, Telemetry};
 use crate::util::error::{Error, Result};
 use crate::util::stats::window_mean_p95;
 use std::collections::{BTreeMap, VecDeque};
@@ -201,10 +202,17 @@ struct SimReplica {
     policy: CoalescePolicy,
     device: Option<u32>,
     util_frac: f64,
-    /// Arrival times of admitted requests waiting for a batch.
-    queue: VecDeque<SimNs>,
-    /// Arrival times of the batch currently in service (empty = idle).
-    in_flight: Vec<SimNs>,
+    /// Shard-identity recording scope, built when the fleet is observed
+    /// through [`SimFleet::set_telemetry`]: spans land in the SAME
+    /// per-`(network, replica)` rings the live coordinator fills, so ring
+    /// attribution and [`crate::obs::drift::DriftMonitor::ingest`] work
+    /// identically on both planes.
+    scope: Option<SpanScope>,
+    /// `(arrival time, trace id)` of admitted requests waiting for a batch
+    /// ([`crate::obs::trace::UNTRACED`] when the fleet is unobserved).
+    queue: VecDeque<(SimNs, u32)>,
+    /// `(arrival time, trace id)` of the batch in service (empty = idle).
+    in_flight: Vec<(SimNs, u32)>,
     /// Virtual time the open coalescing window started (deadlines extend
     /// from here as the backlog grows, never from "now").
     window_opened_at: SimNs,
@@ -319,6 +327,46 @@ pub struct SimFleet {
     /// coordinator does, stamped with the virtual clock — sim/live parity is
     /// pinned by `rust/tests/integration_obs.rs`.
     sink: Option<Arc<dyn Sink>>,
+    /// Full telemetry attachment ([`SimFleet::set_telemetry`]): per-replica
+    /// [`SpanScope`]s instead of the identity-less hub sink, plus request
+    /// trace ids from the plane-wide counter.
+    obs: Option<Arc<Telemetry>>,
+    /// Cached hub scope used only to allocate trace ids (one `Relaxed`
+    /// `fetch_add` per admission, mirroring the live shard).
+    tracer: Option<SpanScope>,
+}
+
+/// Emit one span through the replica's shard scope when the fleet is
+/// telemetry-attached, else through the identity-less sink. Trace-carrying
+/// values arrive pre-packed; with no telemetry the id is
+/// [`UNTRACED`] and `pack` leaves the payload untouched.
+fn emit_span(
+    scope: &Option<SpanScope>,
+    sink: &Option<Arc<dyn Sink>>,
+    t: SimNs,
+    kind: SpanKind,
+    value: u64,
+) {
+    if let Some(s) = scope {
+        s.span_at(t, kind, value);
+    } else if let Some(s) = sink {
+        s.span(SpanEvent::new(t, kind, value));
+    }
+}
+
+/// Stage-sample twin of [`emit_span`]: both paths land in the same shared
+/// stage histograms.
+fn emit_stage(
+    scope: &Option<SpanScope>,
+    sink: &Option<Arc<dyn Sink>>,
+    stage: Stage,
+    ns: u64,
+) {
+    if let Some(s) = scope {
+        s.stage(stage, ns);
+    } else if let Some(s) = sink {
+        s.stage(stage, ns);
+    }
 }
 
 impl SimFleet {
@@ -342,6 +390,8 @@ impl SimFleet {
             next_id: 0,
             events: 0,
             sink: None,
+            obs: None,
+            tracer: None,
         };
         for m in models {
             if fleet.models.contains_key(&m.network) {
@@ -371,6 +421,25 @@ impl SimFleet {
     /// coordinator, stamped with virtual time.
     pub fn set_sink(&mut self, sink: Arc<dyn Sink>) {
         self.sink = Some(sink);
+    }
+
+    /// Attach a full [`Telemetry`] plane: every replica (existing and
+    /// future) records through its own `(network, replica)` [`SpanScope`] —
+    /// the same per-shard rings the live coordinator fills — and every
+    /// admission is stamped with a request trace id from the plane-wide
+    /// counter, packed into the per-request span values exactly as the live
+    /// shard packs them (`docs/HOTPATH.md` §10). Prefer this over
+    /// [`SimFleet::set_sink`] whenever per-replica attribution,
+    /// [`crate::obs::trace::assemble`] or
+    /// [`crate::obs::drift::DriftMonitor`] will consume the spans.
+    pub fn set_telemetry(&mut self, telemetry: Arc<Telemetry>) {
+        for i in 0..self.replicas.len() {
+            let name = self.networks[self.replicas[i].net as usize].clone();
+            let ordinal = self.replicas[i].replica;
+            self.replicas[i].scope = Some(telemetry.scope_for(&name, ordinal));
+        }
+        self.tracer = Some(telemetry.hub_scope());
+        self.obs = Some(telemetry);
     }
 
     fn intern(&mut self, network: &str) -> u32 {
@@ -423,6 +492,7 @@ impl SimFleet {
             .unwrap_or(0);
         let id = self.next_id;
         self.next_id += 1;
+        let scope = self.obs.as_ref().map(|t| t.scope_for(network, ordinal));
         self.replicas.push(SimReplica {
             id,
             net,
@@ -431,6 +501,7 @@ impl SimFleet {
             policy,
             device,
             util_frac,
+            scope,
             queue: VecDeque::new(),
             in_flight: Vec::new(),
             window_opened_at: 0,
@@ -562,16 +633,15 @@ impl SimFleet {
         r.in_flight.extend(r.queue.drain(..b));
         r.batches += 1;
         r.dispatched_at = now;
-        if let Some(sink) = &self.sink {
-            // Same per-batch emission as the live worker: the window closes,
-            // the coalesce hold is sampled, the batch starts, and each rider
-            // samples its enqueue → dispatch wait.
-            sink.span(SpanEvent::new(now, SpanKind::WindowClose, b as u64));
-            sink.stage(Stage::Coalesce, now.saturating_sub(r.window_opened_at));
-            sink.span(SpanEvent::new(now, SpanKind::BatchStart, b as u64));
-            for &arrived in &r.in_flight {
-                sink.stage(Stage::QueueWait, now.saturating_sub(arrived));
-            }
+        // Same per-batch emission as the live worker: the window closes,
+        // the coalesce hold is sampled, the batch starts, and each rider
+        // samples its enqueue → dispatch wait. Batch-scoped span values
+        // stay plain batch sizes (a batch has no single trace id).
+        emit_span(&r.scope, &self.sink, now, SpanKind::WindowClose, b as u64);
+        emit_stage(&r.scope, &self.sink, Stage::Coalesce, now.saturating_sub(r.window_opened_at));
+        emit_span(&r.scope, &self.sink, now, SpanKind::BatchStart, b as u64);
+        for &(arrived, _) in &r.in_flight {
+            emit_stage(&r.scope, &self.sink, Stage::QueueWait, now.saturating_sub(arrived));
         }
         let base = r.policy.batch_ns(b as u64);
         let service = if factor <= 1.0 {
@@ -592,9 +662,7 @@ impl SimFleet {
         // worker stamps the open on the first recv, before it knows the
         // window will close instantly, so per-batch span counts match.
         r.window_opened_at = now;
-        if let Some(sink) = &self.sink {
-            sink.span(SpanEvent::new(now, SpanKind::WindowOpen, 1));
-        }
+        emit_span(&r.scope, &self.sink, now, SpanKind::WindowOpen, 1);
         let w = r.policy.window_ns(r.queue.len());
         if w == 0 {
             self.dispatch(idx, now);
@@ -638,24 +706,26 @@ impl SimFleet {
         }
         let (net, batch, remove, dispatched_at) = {
             let r = &mut self.replicas[idx];
-            let batch: Vec<SimNs> = std::mem::take(&mut r.in_flight);
+            let batch: Vec<(SimNs, u32)> = std::mem::take(&mut r.in_flight);
             r.served += batch.len() as u64;
-            for &arrived in &batch {
+            for &(arrived, _) in &batch {
                 r.record_latency((at - arrived).max(1));
             }
             (r.net as usize, batch, r.draining && r.outstanding() == 0, r.dispatched_at)
         };
-        if let Some(sink) = &self.sink {
-            sink.span(SpanEvent::new(at, SpanKind::BatchEnd, batch.len() as u64));
-            sink.stage(Stage::Exec, at.saturating_sub(dispatched_at));
+        {
+            let scope = &self.replicas[idx].scope;
+            emit_span(scope, &self.sink, at, SpanKind::BatchEnd, batch.len() as u64);
+            emit_stage(scope, &self.sink, Stage::Exec, at.saturating_sub(dispatched_at));
             // One guard-release per rider, as each live reply path frees its
-            // admission slot.
-            for _ in &batch {
-                sink.span(SpanEvent::new(at, SpanKind::GuardRelease, 0));
+            // admission slot — packed with the rider's trace id so
+            // `obs::trace::assemble` can close the request.
+            for &(_, tid) in &batch {
+                emit_span(scope, &self.sink, at, SpanKind::GuardRelease, pack(tid, 0));
             }
         }
         let t = &mut self.totals[net];
-        for arrived in batch {
+        for (arrived, _) in batch {
             t.completed += 1;
             t.lat_ns.push((at - arrived).max(1));
         }
@@ -692,15 +762,26 @@ impl SimFleet {
             let idx = self.routable[ri];
             let r = &mut self.replicas[idx];
             if r.outstanding() < r.queue_cap {
-                r.queue.push_back(at);
+                // Trace id from the plane-wide counter, exactly as the live
+                // shard allocates at admission; UNTRACED (0) when the fleet
+                // is unobserved, which `pack` passes through untouched.
+                let tid = match &self.tracer {
+                    Some(t) => t.next_trace_id(),
+                    None => UNTRACED,
+                };
+                r.queue.push_back((at, tid));
                 let ordinal = r.replica;
-                if let Some(sink) = &self.sink {
-                    // Admission spans in the live shard's order: Route
-                    // (chosen ordinal), then Enqueue (outstanding after the
-                    // push).
-                    sink.span(SpanEvent::new(at, SpanKind::Route, ordinal as u64));
-                    sink.span(SpanEvent::new(at, SpanKind::Enqueue, r.outstanding() as u64));
-                }
+                // Admission spans in the live shard's order: Route (chosen
+                // ordinal), then Enqueue (outstanding after the push) —
+                // payloads packed under the request's trace id.
+                emit_span(&r.scope, &self.sink, at, SpanKind::Route, pack(tid, ordinal as u64));
+                emit_span(
+                    &r.scope,
+                    &self.sink,
+                    at,
+                    SpanKind::Enqueue,
+                    pack(tid, r.outstanding() as u64),
+                );
                 if r.in_flight.is_empty() {
                     match r.dispatch_at {
                         // Idle replica: this request opens the window.
@@ -888,6 +969,44 @@ impl SimFleet {
                     },
                     mean_ms,
                     p95_ms,
+                }
+            })
+            .collect()
+    }
+
+    /// The fleet's current model expectations for
+    /// [`crate::obs::drift::DriftMonitor`]: one [`ModelExpectation`] per
+    /// registered network, with the contention share `x` read off the
+    /// ACTUAL device packing (mean over the network's replicas of the
+    /// co-located share excluding self — the same quantity
+    /// `contention_factor` stretches by) and `alpha` set to whatever the
+    /// monitor should ASSUME (usually the shipped calibration, not
+    /// necessarily the slope this fleet really runs with — the gap between
+    /// the two is exactly what the watchdog exists to catch).
+    pub fn drift_expectations(&self, assumed_alpha: f64) -> Vec<ModelExpectation> {
+        self.models
+            .values()
+            .map(|m| {
+                let shares: Vec<f64> = self
+                    .replicas
+                    .iter()
+                    .filter(|r| self.networks[r.net as usize] == m.network)
+                    .map(|r| match r.device {
+                        Some(d) => (self.device_load(d) - r.util_frac).max(0.0),
+                        None => 0.0,
+                    })
+                    .collect();
+                let x = if shares.is_empty() {
+                    0.0
+                } else {
+                    shares.iter().sum::<f64>() / shares.len() as f64
+                };
+                ModelExpectation {
+                    network: m.network.clone(),
+                    service_ns: m.service_ns,
+                    fill_ns: m.fill_ns,
+                    contention_x: x,
+                    alpha: assumed_alpha,
                 }
             })
             .collect()
@@ -1376,6 +1495,57 @@ mod tests {
         f.offer("a", 5_000_000).unwrap();
         f.drain();
         assert_eq!(f.network_stats()[0].completed, 1);
+    }
+
+    #[test]
+    fn telemetry_attached_fleet_assembles_complete_per_request_traces() {
+        use crate::obs::{trace, Telemetry};
+        let t = Arc::new(Telemetry::new());
+        let model = SimServiceModel::new("a", 1.0, 8, 2).with_batching(4, 0.4);
+        let mut f = SimFleet::new(&[model]).unwrap();
+        f.set_telemetry(Arc::clone(&t));
+        for i in 0..5u64 {
+            assert!(matches!(f.offer("a", i).unwrap(), Admission::Admitted { .. }));
+        }
+        f.drain();
+        // Spans landed in per-(network, replica) rings, not the hub — and
+        // each ring's serialized timeline reassembles every admitted
+        // request into exactly one complete trace.
+        assert_eq!(t.ring_stats().len(), 2, "one ring per replica");
+        let mut complete = 0u64;
+        for (network, _replica, events) in t.ring_snapshots() {
+            assert_eq!(network, "a");
+            let asm = trace::assemble(&events);
+            assert_eq!(
+                (asm.orphaned, asm.incomplete, asm.double_counted),
+                (0, 0, 0),
+                "nothing orphaned or double-counted"
+            );
+            for rt in &asm.complete {
+                assert_ne!(rt.trace, trace::UNTRACED);
+                assert!(rt.total_ns >= rt.exec_ns);
+            }
+            complete += asm.complete.len() as u64;
+        }
+        assert_eq!(complete, 5, "every admitted request assembles exactly once");
+    }
+
+    #[test]
+    fn drift_expectations_read_contention_off_the_actual_packing() {
+        let models = vec![
+            SimServiceModel::new("a", 1.0, 8, 2).with_batching(4, 0.4).on_platform("dev", 0.3),
+            SimServiceModel::new("b", 0.5, 8, 1),
+        ];
+        let f = SimFleet::new(&models).unwrap();
+        let exps = f.drift_expectations(2.07);
+        assert_eq!(exps.len(), 2);
+        let a = exps.iter().find(|e| e.network == "a").unwrap();
+        assert!((a.contention_x - 0.3).abs() < 1e-9, "the OTHER replica's share");
+        assert_eq!(a.service_ns, 1_000_000);
+        assert_eq!(a.fill_ns, 400_000);
+        assert!((a.alpha - 2.07).abs() < 1e-12);
+        let b = exps.iter().find(|e| e.network == "b").unwrap();
+        assert!(b.contention_x.abs() < 1e-12, "no platform, no contention");
     }
 
     #[test]

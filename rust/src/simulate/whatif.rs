@@ -28,7 +28,7 @@ use crate::fleetplan::{
     PoolPlan, ReconfigPolicy, ScaleAction, SloPolicy, SpillPlan,
 };
 use crate::models::ModelRegistry;
-use crate::obs::{HistogramRow, Telemetry};
+use crate::obs::{DriftMonitor, DriftReport, HistogramRow, Telemetry};
 use crate::platform::Platform;
 use crate::util::error::{Error, Result};
 use std::sync::Arc;
@@ -166,6 +166,14 @@ pub struct CapacityReport {
     /// Per-stage latency breakdown from the attached telemetry plane
     /// ([`WhatIfOptions::obs`]); empty when no plane was attached.
     pub stages: Vec<HistogramRow>,
+    /// Model-drift scorecard from the main run: every network's fitted
+    /// latency/fill/contention model scored against the batches the
+    /// telemetry plane recorded. `None` when no plane was attached.
+    /// Deliberately NOT serialized by [`CapacityReport::to_json`] — the
+    /// pinned `SIM_capacity.json` schema stays byte-stable; callers write
+    /// it as its own `DRIFT_report.json` artifact via
+    /// [`DriftReport::to_json`].
+    pub drift: Option<DriftReport>,
 }
 
 pub(crate) fn json_escape(s: &str) -> String {
@@ -525,7 +533,8 @@ pub(crate) fn run_controlled(
     policy: &SloPolicy,
     opts: &WhatIfOptions,
 ) -> Result<(super::engine::SimRun, std::collections::BTreeMap<String, usize>)> {
-    run_controlled_rows(&plan_rows(spill), None, trace, policy, opts)
+    let (run, counts, _) = run_controlled_rows(&plan_rows(spill), None, trace, policy, opts)?;
+    Ok((run, counts))
 }
 
 /// N-device generalization of [`run_controlled`]: one `(plan, host)` row per
@@ -537,12 +546,19 @@ pub(crate) fn run_controlled_rows(
     trace: &Trace,
     policy: &SloPolicy,
     opts: &WhatIfOptions,
-) -> Result<(super::engine::SimRun, std::collections::BTreeMap<String, usize>)> {
+) -> Result<(
+    super::engine::SimRun,
+    std::collections::BTreeMap<String, usize>,
+    Option<DriftReport>,
+)> {
     // Start at the floors; the controller earns every further replica.
     let mut fleet = sim_fleet(rows, opts, |row| row.min_replicas)?;
     let mut scalers = scalers_for(rows, pool, opts, policy);
     if let Some(obs) = &opts.obs {
-        fleet.set_sink(Arc::clone(obs));
+        // Full plane, not just the hub sink: per-(network, replica) rings
+        // give the drift monitor batch attribution and `obs::trace` a
+        // serialized per-worker timeline to assemble, exactly as live.
+        fleet.set_telemetry(Arc::clone(obs));
         scalers = scalers.into_iter().map(|s| s.with_obs(Arc::clone(obs))).collect();
     }
     let run = simulate_trace(
@@ -555,7 +571,16 @@ pub(crate) fn run_controlled_rows(
         },
     )?;
     let final_counts = fleet.replica_counts();
-    Ok((run, final_counts))
+    // Score the models the planner trusted against the batches the run
+    // actually recorded — same monitor, same rings, same thresholds as the
+    // live plane. Runs before the capacity probes so the rings hold only
+    // the main run's spans.
+    let drift = opts.obs.as_ref().map(|obs| {
+        let mut monitor =
+            DriftMonitor::new(fleet.drift_expectations(opts.contention_alpha));
+        monitor.report(obs, run.virtual_ms)
+    });
+    Ok((run, final_counts, drift))
 }
 
 /// Shared back half of [`explore`] / [`explore_replay`] / [`explore_pool`]:
@@ -575,7 +600,8 @@ fn explore_with_trace(
     trace: &Trace,
     opts: &WhatIfOptions,
 ) -> Result<CapacityReport> {
-    let (run, final_counts) = run_controlled_rows(rows, pool, trace, &opts.policy, opts)?;
+    let (run, final_counts, drift) =
+        run_controlled_rows(rows, pool, trace, &opts.policy, opts)?;
 
     let mut networks = Vec::new();
     for (plan, host) in rows {
@@ -636,6 +662,7 @@ fn explore_with_trace(
         scale_ups,
         scale_downs,
         stages,
+        drift,
     })
 }
 

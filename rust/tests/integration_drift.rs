@@ -1,0 +1,325 @@
+//! Integration tests closing the telemetry loop end to end, pinning the
+//! contracts `obs::drift` and `obs::trace` promise:
+//!
+//! 1. **Drift isolation** — a fleet whose engine runs a contention slope the
+//!    monitor does not assume flags the contention model ONLY (latency and
+//!    fill stay clean because the residual divides out the re-fitted
+//!    stretch), re-fits the true slope within 10%, journals exactly one
+//!    `ModelDrift` event, and arms exactly one flight dump. A correctly
+//!    calibrated fleet raises no flags at all.
+//! 2. **Trace completeness** — every admitted request reassembles into
+//!    exactly one complete [`RequestTrace`](convkit::obs::RequestTrace) on
+//!    both planes: the simulated fleet's per-replica rings and a live gated
+//!    worker whose admissions pile up before any batch runs.
+//! 3. **Live/sim parity** — a deliberately wrong latency prediction flags
+//!    `MODEL_LATENCY` and nothing else on BOTH planes, with identical model
+//!    rows in identical order; and the simulated drift report is
+//!    byte-deterministic across runs of the same scenario.
+
+use convkit::cnn::zoo;
+use convkit::coordinator::service::{BatchExecutor, InferenceService};
+use convkit::coordinator::{CoalescePolicy, Shard, ShardSpec, ShardedService};
+use convkit::obs::{
+    assemble, DriftMonitor, DriftReport, JournalKind, ModelExpectation, Telemetry,
+    MODEL_CONTENTION, MODEL_LATENCY,
+};
+use convkit::simulate::{Admission, SimFleet, SimServiceModel, DEFAULT_CONTENTION_ALPHA};
+use convkit::util::error::Result;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+/// The contention slope the demo engine really runs with. At x = 0.3 the
+/// stretch is exactly ×2.2 = ×11/5, and every base batch time below is a
+/// multiple of 200 000 ns, so the stretched times are exact integers and
+/// the re-fit recovers the slope to float precision.
+const TRUE_ALPHA: f64 = 4.0;
+
+/// Drive the mis-calibration demo on the virtual clock: two `hot` replicas
+/// co-located on one device (util 0.3 each → x = 0.3) under a contention
+/// slope of `true_alpha`, plus an un-colocated `lone` control network, then
+/// score the run against a monitor assuming `assumed_alpha`. Returns the
+/// report, the telemetry plane, and how many offers were admitted.
+fn contended_sim_report(
+    true_alpha: f64,
+    assumed_alpha: f64,
+) -> (DriftReport, Arc<Telemetry>, usize) {
+    let models = [
+        SimServiceModel::new("hot", 1.0, 8, 2).with_batching(4, 0.4).on_platform("fpga0", 0.3),
+        SimServiceModel::new("lone", 0.5, 8, 1).with_batching(4, 0.2),
+    ];
+    let mut fleet = SimFleet::new(&models).expect("sim fleet");
+    fleet.set_contention_alpha(true_alpha);
+    let obs = Arc::new(Telemetry::new());
+    fleet.set_telemetry(Arc::clone(&obs));
+    // `hot` every 0.5 ms (sustained overload against its stretched service
+    // rate, so queues churn and batch sizes vary), `lone` every 1 ms (always
+    // idle on arrival, so its observations match its model exactly).
+    let mut admitted = 0usize;
+    for i in 0..400u64 {
+        let at = i * 500_000;
+        if matches!(fleet.offer("hot", at).expect("offer hot"), Admission::Admitted { .. }) {
+            admitted += 1;
+        }
+        if i % 2 == 0
+            && matches!(fleet.offer("lone", at).expect("offer lone"), Admission::Admitted { .. })
+        {
+            admitted += 1;
+        }
+    }
+    fleet.drain();
+    let mut monitor = DriftMonitor::new(fleet.drift_expectations(assumed_alpha));
+    let report = monitor.report(&obs, fleet.now_ms());
+    (report, obs, admitted)
+}
+
+/// The e2e acceptance demo: an engine running α=4.0 scored by a monitor
+/// assuming the shipped 2.07 must flag the contention model of the
+/// co-located network — and ONLY that model — re-fit the true slope within
+/// 10%, journal the breach once, and arm one flight dump.
+#[test]
+fn a_miscalibrated_alpha_flags_contention_only_and_refits_the_true_slope() {
+    let (report, obs, _) = contended_sim_report(TRUE_ALPHA, DEFAULT_CONTENTION_ALPHA);
+
+    assert_eq!(
+        report.flagged(),
+        vec![("hot".to_string(), vec![MODEL_CONTENTION])],
+        "the wrong slope must surface as contention drift on `hot` and nothing else"
+    );
+    let hot = report.networks.iter().find(|n| n.network == "hot").expect("hot scored");
+    let fitted = hot.alpha_fitted.expect("co-located replicas yield a contention signal");
+    assert!(
+        (fitted - TRUE_ALPHA).abs() / TRUE_ALPHA <= 0.10,
+        "re-fit α {fitted} not within 10% of the true {TRUE_ALPHA}"
+    );
+    let proposed = report.proposed_alpha.expect("flagged contention proposes a slope");
+    assert!(
+        (proposed - TRUE_ALPHA).abs() / TRUE_ALPHA <= 0.10,
+        "proposed α {proposed} not within 10% of the true {TRUE_ALPHA}"
+    );
+    let lone = report.networks.iter().find(|n| n.network == "lone").expect("lone scored");
+    assert!(
+        lone.models.iter().all(|m| !m.flagged),
+        "the un-colocated control network must stay clean"
+    );
+
+    // The watchdog's side effects: one journaled breach, one armed dump.
+    let drift_events: Vec<_> = obs
+        .journal()
+        .snapshot()
+        .into_iter()
+        .filter(|e| e.kind == JournalKind::ModelDrift)
+        .collect();
+    assert_eq!(drift_events.len(), 1, "one (network, component) breach → one journal event");
+    assert_eq!(drift_events[0].network, "hot");
+    assert_eq!(obs.take_flights().len(), 1, "the breach arms exactly one flight dump");
+    assert_eq!(report.spans_dropped, 0, "this run must fit the default rings");
+}
+
+/// A fleet whose assumed slope matches the engine raises no flags: no
+/// journal events, no flight dumps, no proposed recalibration.
+#[test]
+fn a_correctly_calibrated_fleet_raises_no_flags() {
+    let (report, obs, _) = contended_sim_report(TRUE_ALPHA, TRUE_ALPHA);
+    assert!(report.flagged().is_empty(), "nothing drifts when the models are right");
+    assert!(report.proposed_alpha.is_none(), "no drift, no recalibration proposal");
+    let drift_events = obs
+        .journal()
+        .snapshot()
+        .iter()
+        .filter(|e| e.kind == JournalKind::ModelDrift)
+        .count();
+    assert_eq!(drift_events, 0);
+    assert!(obs.take_flights().is_empty(), "nothing breached, nothing dumped");
+}
+
+/// Every admitted simulated request reassembles into exactly one complete
+/// trace: per-replica rings fold with zero orphans, zero in-flight leftovers
+/// and zero double counts, trace ids are unique fleet-wide, and each
+/// trace's end-to-end residency bounds its exec time.
+#[test]
+fn every_admitted_sim_request_reassembles_into_one_complete_trace() {
+    let (report, obs, admitted) = contended_sim_report(TRUE_ALPHA, DEFAULT_CONTENTION_ALPHA);
+    assert_eq!(report.spans_dropped, 0, "assembly completeness needs a lossless ring");
+    assert!(admitted > 0, "the scenario must admit traffic");
+
+    let mut complete = 0usize;
+    let mut ids = std::collections::BTreeSet::new();
+    for (network, replica, events) in obs.ring_snapshots() {
+        let asm = assemble(&events);
+        assert_eq!(asm.orphaned, 0, "{network}/{replica}: no drops, so no orphans");
+        assert_eq!(asm.incomplete, 0, "{network}/{replica}: a drained fleet leaves nothing open");
+        assert_eq!(asm.double_counted, 0, "{network}/{replica}: ids never assemble twice");
+        for t in &asm.complete {
+            assert_ne!(t.trace, 0, "complete traces are never untraced");
+            assert!(ids.insert(t.trace), "trace id {} appeared on two requests", t.trace);
+            assert!(t.batch >= 1, "every trace rode a real batch");
+            assert!(
+                t.total_ns >= t.exec_ns,
+                "{network}/{replica}: residency {} ns below exec {} ns",
+                t.total_ns,
+                t.exec_ns
+            );
+        }
+        complete += asm.complete.len();
+    }
+    assert_eq!(complete, admitted, "every admitted request must reassemble exactly once");
+}
+
+/// An executor that refuses to run a batch until the test releases it, so
+/// admissions (and their trace-carrying spans) pile up against a wedged
+/// worker before any batch forms.
+struct GatedExecutor {
+    gate: mpsc::Receiver<()>,
+}
+
+impl BatchExecutor for GatedExecutor {
+    fn infer_batch(&mut self, images: &[Arc<[i32]>]) -> Result<Vec<Vec<i32>>> {
+        // A closed gate (test ended early) just lets the batch through.
+        let _ = self.gate.recv();
+        Ok(images.iter().map(|im| vec![im.len() as i32]).collect())
+    }
+
+    fn label(&self) -> String {
+        "gated".to_string()
+    }
+}
+
+/// Live-plane assembly under the nastiest interleaving the coordinator
+/// produces: all requests admitted while the worker is wedged inside a
+/// batch, then released to coalesce however the worker pleases. However the
+/// batching lands, every request must still reassemble exactly once.
+#[test]
+fn a_gated_live_worker_reassembles_every_request() {
+    const REQUESTS: u64 = 8;
+
+    let obs = Arc::new(Telemetry::new());
+    let scope = obs.scope_for("gated", 0);
+    let (gate_tx, gate_rx) = mpsc::channel::<()>();
+    let service = InferenceService::start_factory_observed(
+        move || Ok(GatedExecutor { gate: gate_rx }),
+        4,
+        CoalescePolicy::fixed(Duration::from_micros(100)),
+        Some(scope.clone()),
+    );
+    let shard = Shard::from_service("gated", 0, 16, service).observed(scope);
+
+    let img: Arc<[i32]> = vec![1, 2, 3].into();
+    let tickets: Vec<_> = (0..REQUESTS)
+        .map(|_| shard.submit(Arc::clone(&img)).expect("uncapped admission"))
+        .collect();
+    for _ in 0..REQUESTS {
+        gate_tx.send(()).expect("worker alive");
+    }
+    for t in tickets {
+        t.wait().expect("request served");
+    }
+    // Join the worker before snapshotting so every GuardRelease committed.
+    shard.shutdown();
+
+    let rings = obs.ring_snapshots();
+    assert_eq!(rings.len(), 1, "one shard, one ring");
+    let asm = assemble(&rings[0].2);
+    assert_eq!(asm.complete.len(), REQUESTS as usize, "all {REQUESTS} requests reassemble");
+    assert_eq!(
+        (asm.orphaned, asm.incomplete, asm.double_counted),
+        (0, 0, 0),
+        "a lossless shut-down ring accounts for everything"
+    );
+    let mut ids = std::collections::BTreeSet::new();
+    for t in &asm.complete {
+        assert_ne!(t.trace, 0);
+        assert!(ids.insert(t.trace), "trace id {} appeared on two requests", t.trace);
+        assert!(t.release_t_ns >= t.enqueue_t_ns);
+        assert!(t.total_ns >= t.exec_ns, "residency must bound exec for queued riders");
+    }
+}
+
+/// The wrong latency expectation both planes are scored against: a 1 ns
+/// service prediction no real (or simulated) batch can meet. `fill_ns = 0`
+/// and `contention_x = 0` leave those rows unscored, so ONLY the latency
+/// model can flag — which is exactly the isolation being tested.
+fn wrong_latency_expectation() -> Vec<ModelExpectation> {
+    vec![ModelExpectation {
+        network: "tiny_q8".to_string(),
+        service_ns: 1,
+        fill_ns: 0,
+        contention_x: 0.0,
+        alpha: DEFAULT_CONTENTION_ALPHA,
+    }]
+}
+
+/// Injecting a wrong `predicted_ms` must flag the latency model — and only
+/// it — identically on the live and simulated planes: same flagged set,
+/// same model rows in the same order, same sample counts.
+#[test]
+fn a_wrong_latency_prediction_flags_that_model_alone_on_both_planes() {
+    const N: usize = 24;
+
+    // Live: one golden-backed observed replica, strictly sequential client.
+    let live = Arc::new(Telemetry::new());
+    let fleet = ShardedService::start_observed(
+        &[ShardSpec::golden("tiny_q8").with_batch_size(8)],
+        Arc::clone(&live),
+    )
+    .expect("observed fleet start");
+    let imgs: Vec<Arc<[i32]>> =
+        zoo::tiny().synthetic_images_i32(4, 0xB0).into_iter().map(Into::into).collect();
+    for k in 0..N {
+        fleet
+            .infer("tiny_q8", Arc::clone(&imgs[k % imgs.len()]))
+            .expect("live inference");
+    }
+    fleet.shutdown();
+    let mut live_monitor = DriftMonitor::new(wrong_latency_expectation());
+    let live_report = live_monitor.report(&live, 0.0);
+
+    // Sim: the same shape on the virtual clock.
+    let sim = Arc::new(Telemetry::new());
+    let mut sf =
+        SimFleet::new(&[SimServiceModel::new("tiny_q8", 0.01, 8, 1)]).expect("sim fleet");
+    sf.set_telemetry(Arc::clone(&sim));
+    for k in 0..N as u64 {
+        let adm = sf.offer("tiny_q8", (k + 1) * 1_000_000).expect("offer");
+        assert!(matches!(adm, Admission::Admitted { .. }), "arrival {k} rejected");
+    }
+    sf.drain();
+    let mut sim_monitor = DriftMonitor::new(wrong_latency_expectation());
+    let sim_report = sim_monitor.report(&sim, sf.now_ms());
+
+    for (plane, report) in [("live", &live_report), ("sim", &sim_report)] {
+        assert_eq!(
+            report.flagged(),
+            vec![("tiny_q8".to_string(), vec![MODEL_LATENCY])],
+            "{plane} plane must pin the bad prediction to the latency row alone"
+        );
+        let latency = report.networks[0]
+            .models
+            .iter()
+            .find(|m| m.model == MODEL_LATENCY)
+            .expect("latency row present");
+        assert_eq!(latency.samples, N as u64, "{plane}: one batch per sequential request");
+        assert!(latency.mpe > 0.0, "{plane}: real batches run LONGER than 1 ns");
+    }
+    let rows = |r: &DriftReport| {
+        r.networks
+            .iter()
+            .map(|n| (n.network.clone(), n.models.iter().map(|m| m.model).collect::<Vec<_>>()))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(
+        rows(&live_report),
+        rows(&sim_report),
+        "both planes emit the same model rows in the same order"
+    );
+}
+
+/// Two runs of the identical scenario on the virtual clock serialize to the
+/// identical drift report, byte for byte — the property CI's archived
+/// `DRIFT_report.json` diff relies on.
+#[test]
+fn the_sim_drift_report_is_byte_deterministic() {
+    let (a, _, _) = contended_sim_report(TRUE_ALPHA, DEFAULT_CONTENTION_ALPHA);
+    let (b, _, _) = contended_sim_report(TRUE_ALPHA, DEFAULT_CONTENTION_ALPHA);
+    assert_eq!(a.to_json(), b.to_json(), "virtual-clock drift reports must reproduce exactly");
+    assert_eq!(a, b, "and the structured reports must agree field for field");
+}

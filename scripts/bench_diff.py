@@ -50,12 +50,23 @@ scheduling-semantics change, not noise — advisory, never gated (the
 *overhead* of recording is gated separately through the
 ``obs_span_overhead`` bench section).
 
+And for the model-drift scorecard (``convkit simulate --drift-out`` /
+``convkit drift --out``, top-level key ``drift``): pass
+``--drift CURRENT_DRIFT.json PREVIOUS_DRIFT.json`` to append per-network,
+per-component MPE/MAPE movement, flag transitions, the proposed re-fitted
+contention slope and span-ring drop accounting. Emitted by the same
+deterministic run as the capacity report, so a moved score means the
+models or the engine changed — advisory, never gated (the *overhead* of
+tracing is gated separately through the ``obs_trace_overhead`` bench
+section).
+
 Usage: bench_diff.py CURRENT.json PREVIOUS.json [--regress-pct 25]
                      [--fail-on SECTION]... [--fail-pct 20]
                      [--simulate CURRENT_SIM.json PREVIOUS_SIM.json]
                      [--policysearch CURRENT_POL.json PREVIOUS_POL.json]
                      [--pool CURRENT_POOL.json PREVIOUS_POOL.json]
                      [--obs CURRENT_OBS.json PREVIOUS_OBS.json]
+                     [--drift CURRENT_DRIFT.json PREVIOUS_DRIFT.json]
 """
 
 from __future__ import annotations
@@ -445,6 +456,83 @@ def diff_obs(current: dict, previous: dict) -> str:
     return "\n".join(lines) + "\n"
 
 
+def load_drift(path: str) -> dict:
+    """The `drift` object of a drift report (empty when unreadable)."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"note: could not read {path}: {e}", file=sys.stderr)
+        return {}
+    return doc.get("drift", {})
+
+
+def drift_scores(doc: dict) -> dict:
+    """{(network, model): score-row} across the report."""
+    out = {}
+    for n in doc.get("networks", []):
+        for m in n.get("models", []):
+            out[(n["network"], m["model"])] = m
+    return out
+
+
+def fmt_alpha(v) -> str:
+    return "—" if v is None else f"{float(v):.3f}"
+
+
+def diff_drift(current: dict, previous: dict) -> str:
+    lines = ["## Model-drift diff (`convkit simulate --drift-out`)", ""]
+    if not current:
+        lines.append("_No current drift report._")
+        return "\n".join(lines) + "\n"
+    cur_scores = drift_scores(current)
+    flagged = [k for k, m in cur_scores.items() if m.get("flagged")]
+    lines.append(
+        f"{len(current.get('networks', []))} network(s) scored, "
+        f"{len(flagged)} flagged component(s), "
+        f"{current.get('spans_dropped', 0)} span(s) dropped, "
+        f"proposed α {fmt_alpha(current.get('proposed_alpha'))}."
+    )
+    lines.append("")
+    if not previous:
+        lines.append("_No previous drift-report artifact — nothing to diff._")
+        return "\n".join(lines) + "\n"
+    prev_scores = drift_scores(previous)
+    lines.append("| network / model | previous MAPE | current MAPE "
+                 "| samples | flag |")
+    lines.append("|---|---:|---:|---:|---|")
+    for key in sorted(set(cur_scores) | set(prev_scores)):
+        network, model = key
+        c, p = cur_scores.get(key), prev_scores.get(key)
+        if c is None:
+            lines.append(
+                f"| {network} / {model} | {100 * float(p['mape']):.2f}% "
+                f"| _removed_ | | |"
+            )
+            continue
+        cur_mape = f"{100 * float(c['mape']):.2f}%"
+        flag_now = "DRIFTED" if c.get("flagged") else "ok"
+        if p is None:
+            lines.append(
+                f"| {network} / {model} | _new_ | {cur_mape} "
+                f"| {c.get('samples', 0)} | {flag_now} |"
+            )
+            continue
+        flag_prev = "DRIFTED" if p.get("flagged") else "ok"
+        flag = flag_now if flag_prev == flag_now else f"{flag_prev} → {flag_now}"
+        lines.append(
+            f"| {network} / {model} | {100 * float(p['mape']):.2f}% "
+            f"| {cur_mape} | {c.get('samples', 0)} | {flag} |"
+        )
+    pa_c, pa_p = current.get("proposed_alpha"), previous.get("proposed_alpha")
+    if pa_c != pa_p:
+        lines.append(
+            f"| proposed α | {fmt_alpha(pa_p)} | {fmt_alpha(pa_c)} | | |"
+        )
+    lines.append("")
+    return "\n".join(lines) + "\n"
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("current")
@@ -465,6 +553,9 @@ def main() -> int:
     ap.add_argument("--obs", nargs=2, metavar=("CUR_OBS", "PREV_OBS"),
                     help="also diff two `convkit simulate --obs-out` "
                          "telemetry snapshots")
+    ap.add_argument("--drift", nargs=2, metavar=("CUR_DRIFT", "PREV_DRIFT"),
+                    help="also diff two `convkit simulate --drift-out` "
+                         "model-drift reports")
     args = ap.parse_args()
     current = load_sections(args.current)
     previous = load_sections(args.previous)
@@ -483,6 +574,9 @@ def main() -> int:
     if args.obs:
         cur_obs, prev_obs = args.obs
         print(diff_obs(load_obs(cur_obs), load_obs(prev_obs)))
+    if args.drift:
+        cur_drift, prev_drift = args.drift
+        print(diff_drift(load_drift(cur_drift), load_drift(prev_drift)))
     if args.fail_on:
         failures = gate(current, previous, args.fail_on, args.fail_pct)
         if failures:
