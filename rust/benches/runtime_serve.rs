@@ -20,11 +20,15 @@
 //! costs almost nothing. A third section, `obs_trace_overhead`, prices
 //! request-correlated tracing the same way: the trace-id allocation +
 //! packing added on top of plain span recording, plus the assembler that
-//! folds a ring back into per-request traces.
+//! folds a ring back into per-request traces. A fourth section,
+//! `router_wfq_overhead`, prices the weighted-fair tier pick against the
+//! plain least-outstanding bulk scan it rides on.
 
 use convkit::blocks::BlockKind;
 use convkit::cnn::zoo;
-use convkit::coordinator::{drive_golden_clients, DseEngine, JobPool, ShardSpec, ShardedService};
+use convkit::coordinator::{
+    drive_golden_clients, DseEngine, JobPool, Router, ShardSpec, ShardedService,
+};
 use convkit::fleetplan::{plan_pool, DevicePool, NetworkDemand};
 use convkit::models::SelectOptions;
 use convkit::obs::Telemetry;
@@ -399,6 +403,40 @@ fn main() {
         );
     }
 
+    // --- router_wfq_overhead: pricing the weighted-fair tier pick ---------
+    // `route_chunk` is `route_many`'s least-outstanding bulk scan plus one
+    // deficit-counter pick per slot — the entire hot-path cost of priority
+    // tiers at admission. Both benches route the same number of slots
+    // across a 64-replica network per iteration (the replica scan dominates
+    // so the deficit arithmetic shows up as a small relative delta), with a
+    // 3:1 interactive/batch chunk on the WFQ side. CI archives the section
+    // and hard-gates it via `bench_diff.py --fail-on router_wfq_overhead`,
+    // which additionally enforces the intra-run bound: the WFQ pick must
+    // cost < 5% over plain least-outstanding.
+    const ROUTER_REPLICAS: usize = 64;
+    const ROUTER_CHUNK: usize = 256;
+    let mut rb = Bench::quick();
+    let router = Router::new(std::iter::repeat("net").take(ROUTER_REPLICAS));
+    let loads: Vec<usize> = (0..ROUTER_REPLICAS).map(|i| (i * 7) % 13).collect();
+    rb.run("router_least_outstanding", || {
+        let picks = router.route_many("net", ROUTER_CHUNK, |i| loads[i]).expect("route_many");
+        picks.iter().sum::<usize>()
+    });
+    rb.run("router_wfq", || {
+        let tiers = [ROUTER_CHUNK * 3 / 4, ROUTER_CHUNK / 4];
+        let picks = router.route_chunk("net", tiers, |i| loads[i]).expect("route_chunk");
+        picks.iter().map(|(_, shard)| *shard).sum::<usize>()
+    });
+    let pair = (rb.stats("router_least_outstanding"), rb.stats("router_wfq"));
+    if let (Some(base), Some(wfq)) = pair {
+        println!(
+            "-> WFQ pick: least-outstanding {:.1} ns/slot, wfq {:.1} ns/slot ({:+.2}%)",
+            base.mean_ns / ROUTER_CHUNK as f64,
+            wfq.mean_ns / ROUTER_CHUNK as f64,
+            100.0 * (wfq.mean_ns - base.mean_ns) / base.mean_ns
+        );
+    }
+
     // --- perf-trajectory baseline (multi-section: shared with runtime_conv) ---
     let path = baseline_path();
     match b.write_json_sections("runtime_serve", &path) {
@@ -412,5 +450,9 @@ fn main() {
     match tb.write_json_sections("obs_trace_overhead", &path) {
         Ok(()) => println!("trace overhead section written to {}", path.display()),
         Err(e) => eprintln!("could not write trace section {}: {e}", path.display()),
+    }
+    match rb.write_json_sections("router_wfq_overhead", &path) {
+        Ok(()) => println!("router overhead section written to {}", path.display()),
+        Err(e) => eprintln!("could not write router section {}: {e}", path.display()),
     }
 }

@@ -20,9 +20,9 @@ use convkit::platform::Platform;
 use convkit::report;
 use convkit::runtime::{artifacts_dir, Runtime};
 use convkit::simulate::{
-    contention_points, explore, explore_pool, explore_replay, fit_alpha, policysearch,
-    Admission, PolicyGrid, Scenario, ScenarioShape, SimFleet, SimServiceModel, Trace,
-    TraceRecorder, WhatIfOptions, DEFAULT_CONTENTION_ALPHA,
+    contention_points, explore, explore_chaos, explore_pool, explore_replay, fit_alpha,
+    policysearch, Admission, ChaosFault, ChaosPlan, PolicyGrid, Scenario, ScenarioShape,
+    SimFleet, SimServiceModel, Trace, TraceRecorder, WhatIfOptions, DEFAULT_CONTENTION_ALPHA,
 };
 use convkit::synth::MapOptions;
 use convkit::synthdata::SweepOptions;
@@ -70,6 +70,10 @@ COMMANDS:
               [simulate's scenario/fidelity options (not --replay), plus
               --overload A,B --p95-ratio A,B --idle-queue A,B
               --window A,B --out FILE]
+  chaos      seeded fault injection vs the planned fleet (kill/wedge/storm/
+              device outage/rebind + priority tiers) [simulate's scenario/
+              fidelity options (not --replay/--pool), plus --batch-frac X
+              --out FILE]
   obs        telemetry-plane demo + snapshot    [--seed N --events N
               --format json|prom --out FILE --flight-dir DIR]
   drift      model-drift watchdog demo           [--true-alpha X --alpha X
@@ -102,6 +106,7 @@ pub fn dispatch(args: &ParsedArgs) -> Result<()> {
         Some("autoscale") => cmd_autoscale(args),
         Some("simulate") => cmd_simulate(args),
         Some("policysearch") => cmd_policysearch(args),
+        Some("chaos") => cmd_chaos(args),
         Some("obs") => cmd_obs(args),
         Some("drift") => cmd_drift(args),
         Some("calibrate") => cmd_calibrate(args),
@@ -941,6 +946,88 @@ fn cmd_policysearch(args: &ParsedArgs) -> Result<()> {
     if let Some(out) = args.get("out") {
         std::fs::write(out, report.to_json())?;
         println!("policy-search report written to {out}");
+    }
+    Ok(())
+}
+
+/// Run one seeded chaos plan against the model-planned fleet: plan from
+/// the fitted models (exactly `simulate`'s platform-selection path), then —
+/// all on the virtual clock, while the production controllers fight back —
+/// wedge a worker, kill a replica, storm the arrivals ×3, fail the primary
+/// device and finally rebind it. Fault times are fractions of the
+/// auto-sized run, so every scenario length gets the full schedule. A
+/// `--batch-frac` slice of arrivals rides the batch tier (weighted-fair
+/// routing + shed-before-interactive). `--out` writes the deterministic
+/// `CHAOS_report.json` CI archives, byte-diffs across same-seed runs, and
+/// gates with `scripts/bench_diff.py --chaos`.
+fn cmd_chaos(args: &ParsedArgs) -> Result<()> {
+    if args.get("replay").is_some() || args.get("pool").is_some() {
+        return Err(Error::Usage(
+            "chaos plans its fleet from platform selection; --replay and --pool are \
+             not supported"
+                .into(),
+        ));
+    }
+    let (shape, seed, demands, platforms) = traffic_from(args)?;
+    let opts = whatif_opts_from(args, 100_000)?;
+    let batch_frac = args.get_f64("batch-frac", 0.10)?;
+    if !(0.0..=1.0).contains(&batch_frac) {
+        return Err(Error::Usage(format!(
+            "--batch-frac expects a fraction in [0, 1], got {batch_frac}"
+        )));
+    }
+
+    // The paper side: fitted models price every replica and service rate.
+    let rep = run_report(args)?;
+    let scenario = Scenario::new(
+        shape,
+        Vec::new(),
+        args.get_f64("qps", 0.0)?,
+        args.get_f64("duration-ms", 0.0)?,
+        seed,
+    );
+    let t0 = Instant::now();
+    let report =
+        explore_chaos(&demands, &rep.registry, &platforms, &scenario, &opts, |spill, sc| {
+            let d = sc.duration_ms;
+            let nets = spill.networks();
+            let first = nets.first().map(|n| n.network.clone()).unwrap_or_default();
+            let last = nets.last().map(|n| n.network.clone()).unwrap_or_default();
+            let device = spill.primary.platform.name.to_string();
+            ChaosPlan::new(seed, batch_frac)
+                .with_fault(ChaosFault::WedgeReplica {
+                    at_ms: 0.10 * d,
+                    network: first.clone(),
+                    ordinal: 0,
+                    stall_ms: 0.10 * d,
+                })
+                .with_fault(ChaosFault::KillReplica { at_ms: 0.25 * d, network: last })
+                .with_fault(ChaosFault::BurstStorm {
+                    at_ms: 0.40 * d,
+                    len_ms: 0.15 * d,
+                    factor: 3,
+                })
+                .with_fault(ChaosFault::FailDevice { at_ms: 0.60 * d, device: device.clone() })
+                .with_fault(ChaosFault::RebindDevice {
+                    at_ms: 0.75 * d,
+                    device,
+                    network: first,
+                    replicas: 2,
+                    downtime_ms: 0.02 * d,
+                })
+        })?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!("{}", report::chaos_table(&report));
+    println!(
+        "injected {} fault(s) across {} virtual events ({:.1} virtual ms) in {wall:.2}s \
+         wall — every run on the virtual clock, no executors",
+        report.faults.len(),
+        report.events,
+        report.virtual_ms
+    );
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, report.to_json())?;
+        println!("chaos report written to {out}");
     }
     Ok(())
 }

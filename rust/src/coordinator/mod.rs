@@ -34,8 +34,13 @@
 //!   picking the replica with the fewest outstanding requests (lowest index
 //!   on ties); bounded admission walks the full load-ordered replica list so
 //!   `Overloaded` surfaces only when every replica is at its cap, and
-//!   pipelined drivers plan a whole chunk with one scan (`route_many`). Pure
-//!   and thread-free so policy changes stay unit-testable.
+//!   pipelined drivers plan a whole chunk with one scan (`route_many`, or
+//!   `route_chunk` for mixed-priority chunks sharing one in-flight ledger).
+//!   Requests carry a [`Priority`] tier served by deficit-round-robin
+//!   weighted fair queueing (`WfqState`, reference law `wfq_schedule`), with
+//!   batch work capped to `batch_queue_share` of a bounded queue so overload
+//!   sheds batch before rejecting interactive — identical live and
+//!   simulated. Pure and thread-free so policy changes stay unit-testable.
 //!
 //! Rust owns the event loop, thread topology and metrics; Python never runs
 //! here (artifacts are pre-compiled by `make artifacts`).
@@ -52,7 +57,7 @@ pub use coalesce::{schedule, CoalescePolicy, ScheduledBatch};
 pub use dse::{DseEngine, DseReport};
 pub use epoch::EpochCell;
 pub use jobs::JobPool;
-pub use router::Router;
+pub use router::{batch_queue_share, wfq_schedule, Priority, Router, WfqState, WFQ_WEIGHTS};
 pub use shard::{
     drive_golden_clients, drive_golden_clients_traced, FleetStats, Shard, ShardBackend,
     ShardSpec, ShardedService, ShardedStats, ShardStats, Ticket, DEFAULT_QUEUE_CAP,

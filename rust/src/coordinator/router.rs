@@ -7,9 +7,159 @@
 //! breaking ties. The load signal is supplied by the caller as a closure so
 //! the router stays a pure, thread-free policy object that is trivially
 //! unit-testable without starting worker threads.
+//!
+//! Requests additionally carry a [`Priority`] tier (interactive vs batch).
+//! Tier scheduling is deficit-round-robin weighted fair queueing
+//! ([`WfqState`], weights [`WFQ_WEIGHTS`]): under contention the interactive
+//! tier is served [`Priority::weight`] slots for every batch slot, FIFO
+//! within a tier, and batch work is additionally capped to
+//! [`batch_queue_share`] of a bounded queue so overload sheds batch before
+//! it rejects interactive. The pure reference interpreter [`wfq_schedule`]
+//! is the law both the live worker and the simulator are parity-tested
+//! against (the same pattern as `coordinator::coalesce::schedule`); the
+//! ordering argument is written out in `docs/HOTPATH.md` §11.
 
 use crate::util::error::{Error, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
+
+/// Request priority tier, carried end-to-end: on the live `Msg::Infer`
+/// tuple, in the simulator's queue entries, and in [`ChaosPlan`] traffic
+/// mixes.
+///
+/// Tier index doubles as the array index everywhere per-tier state is kept
+/// (`Interactive` = 0, `Batch` = 1), and the lower index is the tier that
+/// wins WFQ deficit ties — interactive work is never starved by batch.
+///
+/// [`ChaosPlan`]: crate::simulate::ChaosPlan
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Latency-sensitive foreground traffic: full queue cap, WFQ weight 3.
+    Interactive = 0,
+    /// Offline/bulk traffic: capped at [`batch_queue_share`] of the queue,
+    /// WFQ weight 1, shed first under overload.
+    Batch = 1,
+}
+
+/// Per-tier WFQ weights, indexed by [`Priority::index`]. Interactive is
+/// served 3 slots for every batch slot when both tiers are backlogged.
+pub const WFQ_WEIGHTS: [u32; Priority::COUNT] = [3, 1];
+
+impl Priority {
+    /// Number of tiers (length of every per-tier state array).
+    pub const COUNT: usize = 2;
+    /// All tiers in index order — iteration order IS the tie-break order.
+    pub const ALL: [Priority; Priority::COUNT] = [Priority::Interactive, Priority::Batch];
+
+    /// Array index of this tier in per-tier state.
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Inverse of [`Priority::index`]; out-of-range folds to `Batch` so a
+    /// corrupted wire value degrades to the sheddable tier, never upgrades.
+    pub fn from_index(i: usize) -> Priority {
+        if i == 0 {
+            Priority::Interactive
+        } else {
+            Priority::Batch
+        }
+    }
+
+    /// WFQ weight: deficit replenished per round ([`WFQ_WEIGHTS`]).
+    pub fn weight(self) -> u32 {
+        WFQ_WEIGHTS[self.index()]
+    }
+
+    /// Stable snake_case name (report/journal vocabulary).
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+}
+
+/// The single shedding law, shared by the live shard and the simulator:
+/// batch work may hold at most its WFQ weight share of a bounded queue
+/// (`cap × 1/4` for the shipped 3:1 weights), floored at one slot so a
+/// batch-only deployment still makes progress. Interactive admission uses
+/// the full cap. A batch request arriving past this share is *shed* —
+/// accounted separately from capacity rejections, because the operator
+/// reads the two numbers differently: `rejected` means the fleet is too
+/// small, `shed` means the fleet is protecting its interactive tier.
+pub fn batch_queue_share(queue_cap: usize) -> usize {
+    let total: usize = WFQ_WEIGHTS.iter().map(|&w| w as usize).sum();
+    (queue_cap * Priority::Batch.weight() as usize / total).max(1)
+}
+
+/// Deficit-round-robin state over the priority tiers.
+///
+/// Each [`WfqState::pick`] serves one request from the chosen tier and
+/// costs that tier one deficit unit. When every backlogged tier is out of
+/// deficit, all tiers replenish by their [`Priority::weight`] at once — so
+/// with both tiers backlogged the long-run serve ratio is exactly the
+/// weight ratio. The highest deficit wins each pick; ties break toward the
+/// lowest tier index (interactive), and an *empty* tier's deficit resets
+/// to zero so idle credit cannot pile up and starve the other tier when
+/// traffic returns (classic DRR empty-queue reset).
+#[derive(Debug, Clone, Default)]
+pub struct WfqState {
+    deficit: [i64; Priority::COUNT],
+}
+
+impl WfqState {
+    /// Fresh state: all deficits zero (first pick replenishes).
+    pub fn new() -> WfqState {
+        WfqState::default()
+    }
+
+    /// Choose the tier to serve next given which tiers have work queued.
+    /// Returns `None` when every tier is empty. Mutates the deficits as
+    /// described on the type.
+    pub fn pick(&mut self, nonempty: [bool; Priority::COUNT]) -> Option<Priority> {
+        for p in Priority::ALL {
+            if !nonempty[p.index()] {
+                self.deficit[p.index()] = 0;
+            }
+        }
+        if !nonempty.iter().any(|&b| b) {
+            return None;
+        }
+        if Priority::ALL.iter().all(|p| !nonempty[p.index()] || self.deficit[p.index()] <= 0) {
+            for p in Priority::ALL {
+                self.deficit[p.index()] += i64::from(p.weight());
+            }
+        }
+        let pick = Priority::ALL
+            .into_iter()
+            .filter(|p| nonempty[p.index()])
+            .max_by_key(|p| (self.deficit[p.index()], std::cmp::Reverse(p.index())))
+            .expect("some tier is nonempty");
+        self.deficit[pick.index()] -= 1;
+        Some(pick)
+    }
+}
+
+/// Pure reference interpreter for the WFQ discipline: drain per-tier FIFO
+/// queues through a fresh [`WfqState`] and return the serve order. The live
+/// worker's batch selection and the simulator's dispatch loop are both
+/// regression-tested against this function, the same way both coalescing
+/// implementations answer to `coordinator::coalesce::schedule`.
+pub fn wfq_schedule<T: Clone>(queues: &[Vec<T>; Priority::COUNT]) -> Vec<(Priority, T)> {
+    let mut q: [VecDeque<T>; Priority::COUNT] = [
+        queues[Priority::Interactive.index()].iter().cloned().collect(),
+        queues[Priority::Batch.index()].iter().cloned().collect(),
+    ];
+    let mut wfq = WfqState::new();
+    let mut out = Vec::with_capacity(q[0].len() + q[1].len());
+    loop {
+        let nonempty = [!q[0].is_empty(), !q[1].is_empty()];
+        let Some(p) = wfq.pick(nonempty) else { break };
+        let item = q[p.index()].pop_front().expect("picked tier has work");
+        out.push((p, item));
+    }
+    out
+}
 
 /// Name-based routing table over a shard fleet.
 ///
@@ -114,6 +264,55 @@ impl Router {
         }
         Ok(out)
     }
+
+    /// Plan a mixed-priority chunk with ONE load scan and one shared
+    /// in-flight ledger across both tiers.
+    ///
+    /// Splitting a chunk by tier and calling [`Router::route_many`] per
+    /// tier loses the per-shard deltas accumulated *within the chunk*: the
+    /// second call re-seeds from the stale `load` closure, so a shard that
+    /// tied at equal load absorbs both tiers' slots instead of alternating
+    /// with its sibling. `route_chunk` seeds every replica's load once,
+    /// serves the tiers in WFQ order ([`WfqState`], weights
+    /// [`WFQ_WEIGHTS`]), and bumps the seeded count on EVERY assignment —
+    /// ties keep breaking toward the genuinely least-loaded replica across
+    /// the whole chunk regardless of tier interleaving, and within a tier
+    /// the lowest shard index still wins exactly as in `route_many`.
+    ///
+    /// `tiers[p]` is how many requests of tier `p` the chunk carries.
+    /// Returns one `(tier, shard index)` per slot in WFQ serve order.
+    pub fn route_chunk<F>(
+        &self,
+        network: &str,
+        tiers: [usize; Priority::COUNT],
+        load: F,
+    ) -> Result<Vec<(Priority, usize)>>
+    where
+        F: Fn(usize) -> usize,
+    {
+        let replicas = self.by_network.get(network).ok_or_else(|| {
+            Error::Usage(format!(
+                "no shard serves network `{network}` (known: {})",
+                self.networks().join(", ")
+            ))
+        })?;
+        let mut loads: Vec<(usize, usize)> = replicas.iter().map(|&i| (load(i), i)).collect();
+        let mut remaining = tiers;
+        let mut wfq = WfqState::new();
+        let mut out = Vec::with_capacity(remaining.iter().sum());
+        loop {
+            let nonempty = [remaining[0] > 0, remaining[1] > 0];
+            let Some(p) = wfq.pick(nonempty) else { break };
+            remaining[p.index()] -= 1;
+            let best = loads
+                .iter_mut()
+                .min_by_key(|slot| **slot)
+                .ok_or_else(|| Error::Usage(format!("network `{network}` has no replicas")))?;
+            out.push((p, best.1));
+            best.0 += 1;
+        }
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -195,5 +394,102 @@ mod tests {
         let msg = err.to_string();
         assert!(msg.contains("ghost"), "{msg}");
         assert!(msg.contains("neta"), "should list known networks: {msg}");
+    }
+
+    #[test]
+    fn wfq_serves_tiers_at_the_weight_ratio_when_both_backlogged() {
+        let mut wfq = WfqState::new();
+        let picks: Vec<Priority> =
+            (0..8).map(|_| wfq.pick([true, true]).unwrap()).collect();
+        use Priority::{Batch as B, Interactive as I};
+        // 3:1 per replenish round, interactive first (deficit ties break
+        // toward the lowest tier index).
+        assert_eq!(picks, vec![I, I, I, B, I, I, I, B]);
+    }
+
+    #[test]
+    fn wfq_empty_tier_credit_does_not_pile_up() {
+        let mut wfq = WfqState::new();
+        // A long batch-only stretch: interactive's deficit resets every
+        // pick, so it cannot bank credit while idle.
+        for _ in 0..5 {
+            assert_eq!(wfq.pick([false, true]), Some(Priority::Batch));
+        }
+        // When both tiers go backlogged, interactive resumes immediately
+        // and batch still lands within the next weight round — neither
+        // tier starves on the transition.
+        let picks: Vec<Priority> =
+            (0..8).map(|_| wfq.pick([true, true]).unwrap()).collect();
+        assert_eq!(picks[0], Priority::Interactive);
+        assert!(picks.contains(&Priority::Batch), "batch starved: {picks:?}");
+        assert!(wfq.pick([false, false]).is_none());
+    }
+
+    #[test]
+    fn wfq_schedule_is_fifo_within_tier() {
+        let order = wfq_schedule(&[
+            vec!["i1", "i2", "i3", "i4"],
+            vec!["b1", "b2"],
+        ]);
+        use Priority::{Batch as B, Interactive as I};
+        assert_eq!(
+            order,
+            vec![(I, "i1"), (I, "i2"), (I, "i3"), (B, "b1"), (I, "i4"), (B, "b2")]
+        );
+    }
+
+    #[test]
+    fn batch_share_is_the_weight_fraction_floored_at_one() {
+        assert_eq!(batch_queue_share(64), 16);
+        assert_eq!(batch_queue_share(8), 2);
+        assert_eq!(batch_queue_share(4), 1);
+        assert_eq!(batch_queue_share(2), 1, "floor: batch always gets a slot");
+        assert_eq!(batch_queue_share(1), 1);
+    }
+
+    #[test]
+    fn route_chunk_carries_same_chunk_deltas_across_tiers() {
+        use Priority::{Batch as B, Interactive as I};
+        // Two replicas tied at equal load, a chunk of one interactive plus
+        // one batch request. Splitting by tier into two route_many calls
+        // re-seeds the loads between calls, so BOTH slots land on shard 0
+        // — the tie-break never sees the first assignment.
+        let r = Router::new(["netx", "netx"]);
+        assert_eq!(r.route_many("netx", 1, |_| 0).unwrap(), vec![0]);
+        assert_eq!(r.route_many("netx", 1, |_| 0).unwrap(), vec![0]);
+        // route_chunk shares one in-flight ledger across the whole chunk:
+        // the batch slot sees the interactive assignment and spreads.
+        assert_eq!(r.route_chunk("netx", [1, 1], |_| 0).unwrap(), vec![(I, 0), (B, 1)]);
+    }
+
+    #[test]
+    fn route_chunk_interleaves_tiers_in_wfq_order() {
+        use Priority::{Batch as B, Interactive as I};
+        let r = router();
+        // neta replicas [0, 1, 3], all idle: interactive drains its weight
+        // round first, then the batch slot lands on the (now) least-loaded
+        // lowest index.
+        assert_eq!(
+            r.route_chunk("neta", [3, 1], |_| 0).unwrap(),
+            vec![(I, 0), (I, 1), (I, 3), (B, 0)]
+        );
+        assert!(r.route_chunk("neta", [0, 0], |_| 0).unwrap().is_empty());
+        assert!(r.route_chunk("ghost", [1, 0], |_| 0).is_err());
+    }
+
+    #[test]
+    fn route_chunk_single_tier_matches_route_many() {
+        use Priority::Interactive as I;
+        let r = router();
+        // An all-interactive chunk degenerates to route_many exactly,
+        // lowest-index tie-break within the tier included.
+        assert_eq!(
+            r.route_chunk("neta", [4, 0], |_| 7).unwrap(),
+            vec![(I, 0), (I, 1), (I, 3), (I, 0)]
+        );
+        let loads = [5usize, 1, 9, 4];
+        let chunk: Vec<usize> =
+            r.route_chunk("neta", [5, 0], |i| loads[i]).unwrap().into_iter().map(|(_, s)| s).collect();
+        assert_eq!(chunk, r.route_many("neta", 5, |i| loads[i]).unwrap());
     }
 }

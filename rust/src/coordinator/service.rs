@@ -19,12 +19,14 @@
 
 use crate::cnn::GoldenCnn;
 use crate::coordinator::coalesce::CoalescePolicy;
+use crate::coordinator::router::{Priority, WfqState};
 use crate::obs::trace::{pack, UNTRACED};
 use crate::obs::{SpanKind, SpanScope, Stage};
 use crate::util::error::{Error, Result};
 pub use crate::util::stats::percentile_nearest_rank;
 use crate::util::stats::{window_mean_p95, LatencyRing};
 use std::any::Any;
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
@@ -224,17 +226,90 @@ enum Msg {
     /// admission, not from when the worker dequeues it, so queue-wait under
     /// load is visible in the stats (the overload signal the sharding
     /// layer's bounded admission exists to surface) — an optional
-    /// [`CompletionGuard`], and the request's `TraceId`
+    /// [`CompletionGuard`], the request's `TraceId`
     /// ([`crate::obs::trace::UNTRACED`] when the fleet is unobserved),
     /// packed into the guard-release span so the request's spans correlate
-    /// (docs/HOTPATH.md §10).
-    Infer(Arc<[i32]>, mpsc::Sender<Result<Vec<i32>>>, Instant, Option<CompletionGuard>, u32),
+    /// (docs/HOTPATH.md §10), and the request's [`Priority`] tier, which
+    /// the worker's WFQ batch selection schedules on (docs/HOTPATH.md §11).
+    Infer(
+        Arc<[i32]>,
+        mpsc::Sender<Result<Vec<i32>>>,
+        Instant,
+        Option<CompletionGuard>,
+        u32,
+        Priority,
+    ),
     Shutdown,
 }
 
 /// An inference request absorbed into the current batch window.
-type PendingInfer =
-    (Arc<[i32]>, mpsc::Sender<Result<Vec<i32>>>, Instant, Option<CompletionGuard>, u32);
+type PendingInfer = (
+    Arc<[i32]>,
+    mpsc::Sender<Result<Vec<i32>>>,
+    Instant,
+    Option<CompletionGuard>,
+    u32,
+    Priority,
+);
+
+/// The worker's carry buffer between batch windows: one FIFO per
+/// [`Priority`] tier plus the deficit-round-robin state that schedules
+/// across them. Requests drained off the channel but not selected into the
+/// current batch (WFQ may hold batch work back while interactive drains its
+/// weight share) wait here — FIFO order within a tier is preserved, and the
+/// deficits persist across windows so the weight ratio holds long-run, not
+/// just within one batch.
+struct TierQueues {
+    tiers: [VecDeque<PendingInfer>; Priority::COUNT],
+    wfq: WfqState,
+}
+
+impl TierQueues {
+    fn new() -> TierQueues {
+        TierQueues { tiers: [VecDeque::new(), VecDeque::new()], wfq: WfqState::new() }
+    }
+
+    fn push(&mut self, p: PendingInfer) {
+        self.tiers[p.5.index()].push_back(p);
+    }
+
+    fn len(&self) -> usize {
+        self.tiers.iter().map(VecDeque::len).sum()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.tiers.iter().all(VecDeque::is_empty)
+    }
+
+    /// Pop up to `batch_size` requests in WFQ serve order — the same order
+    /// [`crate::coordinator::router::wfq_schedule`] produces over the same
+    /// per-tier FIFOs (parity-tested).
+    fn take(&mut self, batch_size: usize) -> Vec<PendingInfer> {
+        let mut out = Vec::new();
+        while out.len() < batch_size {
+            let nonempty = [!self.tiers[0].is_empty(), !self.tiers[1].is_empty()];
+            let Some(p) = self.wfq.pick(nonempty) else { break };
+            out.push(self.tiers[p.index()].pop_front().expect("picked tier has work"));
+        }
+        out
+    }
+
+    /// [`TierQueues::take`] wrapped in window open/close spans — the
+    /// shutdown flush path, where no channel window runs but the span-count
+    /// invariant (`window_open` = `window_close` = batch count) must hold.
+    fn take_flush(&mut self, batch_size: usize, obs: Option<&SpanScope>) -> Vec<PendingInfer> {
+        let opened = Instant::now();
+        let batch = self.take(batch_size);
+        if let Some(o) = obs {
+            if !batch.is_empty() {
+                o.span(SpanKind::WindowOpen, 1);
+                o.span(SpanKind::WindowClose, batch.len() as u64);
+                o.stage(Stage::Coalesce, opened.elapsed().as_nanos() as u64);
+            }
+        }
+        batch
+    }
+}
 
 /// Default idle batching window: long enough to coalesce concurrent clients,
 /// short enough not to dominate single-client latency (§Perf: 200 µs →
@@ -306,40 +381,61 @@ impl ServiceCounters {
 /// Assemble one batch. Three phases, each mirrored by the simulator and the
 /// [`crate::coordinator::coalesce::schedule`] reference interpreter:
 ///
-/// 1. Block for the first inference request (the window "opens").
-/// 2. Drain everything already queued, up to `batch_size` — backlog that
-///    accumulated while the previous batch ran is owed no window.
+/// 1. Block for the first inference request (the window "opens") — skipped
+///    when `carry` still holds work the previous window's WFQ selection
+///    left behind; carried work is owed no new blocking wait.
+/// 2. Drain everything already queued into the per-tier carry — backlog
+///    that accumulated while the previous batch ran is owed no window, and
+///    WFQ must see BOTH tiers' backlog to schedule the weight ratio.
 /// 3. Coalesce: wait out `policy.window_ns(pending)` from the open instant,
 ///    re-computing the deadline as absorbed arrivals extend it (adaptive
 ///    policies grow the window under backlog; fixed policies keep the
 ///    legacy constant window).
 ///
+/// The batch itself is then *selected* from the carry in WFQ serve order
+/// ([`TierQueues::take`]): interactive drains its weight share ahead of
+/// batch work, FIFO within a tier, with unselected requests staying in the
+/// carry for the next window (docs/HOTPATH.md §11).
+///
 /// Returns the batch and whether a shutdown was observed. `Msg::Shutdown`
 /// ends the window *immediately* (regression-tested): requests already
-/// absorbed are still served, but the worker stops coalescing instead of
-/// spinning until `batch_size` fills under a steady request stream.
+/// absorbed are still served — the worker flushes the carry in batches
+/// before exiting — but the worker stops coalescing instead of spinning
+/// until `batch_size` fills under a steady request stream.
 fn collect_batch(
     rx: &mpsc::Receiver<Msg>,
     batch_size: usize,
     policy: &CoalescePolicy,
     obs: Option<&SpanScope>,
+    carry: &mut TierQueues,
 ) -> (Vec<PendingInfer>, bool) {
-    // Close the window: one WindowClose span + one coalesce stage sample per
-    // non-empty batch, whatever path ended collection (full batch, expired
-    // window, or shutdown). `Option` check only when the recorder is off.
-    let close = |pending: Vec<PendingInfer>, shutdown: bool, opened: Instant| {
+    // Close the window: select the batch by WFQ, then one WindowClose span
+    // + one coalesce stage sample per non-empty batch, whatever path ended
+    // collection (full batch, expired window, or shutdown). `Option` check
+    // only when the recorder is off.
+    fn close(
+        carry: &mut TierQueues,
+        batch_size: usize,
+        obs: Option<&SpanScope>,
+        shutdown: bool,
+        opened: Instant,
+    ) -> (Vec<PendingInfer>, bool) {
+        let batch = carry.take(batch_size);
         if let Some(o) = obs {
-            if !pending.is_empty() {
-                o.span(SpanKind::WindowClose, pending.len() as u64);
+            if !batch.is_empty() {
+                o.span(SpanKind::WindowClose, batch.len() as u64);
                 o.stage(Stage::Coalesce, opened.elapsed().as_nanos() as u64);
             }
         }
-        (pending, shutdown)
-    };
-    let mut pending: Vec<PendingInfer> = Vec::new();
-    match rx.recv() {
-        Ok(Msg::Infer(im, reply, t0, guard, tid)) => pending.push((im, reply, t0, guard, tid)),
-        Ok(Msg::Shutdown) | Err(_) => return (pending, true),
+        (batch, shutdown)
+    }
+    if carry.is_empty() {
+        match rx.recv() {
+            Ok(Msg::Infer(im, reply, t0, guard, tid, pri)) => {
+                carry.push((im, reply, t0, guard, tid, pri))
+            }
+            Ok(Msg::Shutdown) | Err(_) => return (Vec::new(), true),
+        }
     }
     // The first request's arrival opens the window (docs/HOTPATH.md §3); the
     // span is emitted even for windows that close instantly, so per-batch
@@ -348,28 +444,34 @@ fn collect_batch(
     if let Some(o) = obs {
         o.span(SpanKind::WindowOpen, 1);
     }
-    while pending.len() < batch_size {
+    loop {
         match rx.try_recv() {
-            Ok(Msg::Infer(im, reply, t0, guard, tid)) => pending.push((im, reply, t0, guard, tid)),
-            Ok(Msg::Shutdown) => return close(pending, true, window_opened),
+            Ok(Msg::Infer(im, reply, t0, guard, tid, pri)) => {
+                carry.push((im, reply, t0, guard, tid, pri))
+            }
+            Ok(Msg::Shutdown) => return close(carry, batch_size, obs, true, window_opened),
             Err(mpsc::TryRecvError::Empty) => break,
-            Err(mpsc::TryRecvError::Disconnected) => return close(pending, true, window_opened),
+            Err(mpsc::TryRecvError::Disconnected) => {
+                return close(carry, batch_size, obs, true, window_opened)
+            }
         }
     }
     let opened = Instant::now();
-    while pending.len() < batch_size {
-        let deadline = opened + Duration::from_nanos(policy.window_ns(pending.len()));
+    while carry.len() < batch_size {
+        let deadline = opened + Duration::from_nanos(policy.window_ns(carry.len()));
         let now = Instant::now();
         if now >= deadline {
             break;
         }
         match rx.recv_timeout(deadline - now) {
-            Ok(Msg::Infer(im, reply, t0, guard, tid)) => pending.push((im, reply, t0, guard, tid)),
-            Ok(Msg::Shutdown) => return close(pending, true, window_opened),
+            Ok(Msg::Infer(im, reply, t0, guard, tid, pri)) => {
+                carry.push((im, reply, t0, guard, tid, pri))
+            }
+            Ok(Msg::Shutdown) => return close(carry, batch_size, obs, true, window_opened),
             Err(_) => break,
         }
     }
-    close(pending, false, window_opened)
+    close(carry, batch_size, obs, false, window_opened)
 }
 
 /// Handle to a running inference service.
@@ -453,7 +555,7 @@ impl InferenceService {
                     let msg = init_err.to_string();
                     for m in rx {
                         match m {
-                            Msg::Infer(_, reply, _, guard, _) => {
+                            Msg::Infer(_, reply, _, guard, _, _) => {
                                 mirror.completed.fetch_add(1, Ordering::Relaxed);
                                 mirror.errors.fetch_add(1, Ordering::Relaxed);
                                 drop(guard);
@@ -466,17 +568,30 @@ impl InferenceService {
                 }
             };
             mirror.parallelism.store(executor.parallelism() as u64, Ordering::Relaxed);
+            // The WFQ carry lives for the worker's whole life: deficits and
+            // unselected requests persist across batch windows.
+            let mut carry = TierQueues::new();
+            let mut shutdown_seen = false;
             loop {
-                let (pending, shutdown) = collect_batch(&rx, batch_size, &policy, obs.as_ref());
+                let pending = if shutdown_seen {
+                    // Shutdown flush: everything absorbed before the
+                    // shutdown message still drains, in WFQ order, in
+                    // batch_size chunks — no new channel reads.
+                    carry.take_flush(batch_size, obs.as_ref())
+                } else {
+                    let (p, sd) = collect_batch(&rx, batch_size, &policy, obs.as_ref(), &mut carry);
+                    shutdown_seen = sd;
+                    p
+                };
                 if !pending.is_empty() {
                     // Reference-count the shared buffers into the batch —
                     // pointer copies, not payload clones.
                     let images: Vec<Arc<[i32]>> =
-                        pending.iter().map(|(im, _, _, _, _)| Arc::clone(im)).collect();
+                        pending.iter().map(|(im, _, _, _, _, _)| Arc::clone(im)).collect();
                     let dispatched = Instant::now();
                     if let Some(o) = &obs {
                         o.span(SpanKind::BatchStart, images.len() as u64);
-                        for (_, _, t0, _, _) in &pending {
+                        for (_, _, t0, _, _, _) in &pending {
                             o.stage(
                                 Stage::QueueWait,
                                 dispatched.saturating_duration_since(*t0).as_nanos() as u64,
@@ -491,7 +606,8 @@ impl InferenceService {
                     }
                     match results {
                         Ok(outs) => {
-                            for ((_, reply, t0, guard, tid), out) in pending.into_iter().zip(outs)
+                            for ((_, reply, t0, guard, tid, _), out) in
+                                pending.into_iter().zip(outs)
                             {
                                 mirror.latencies.record(t0.elapsed().as_micros() as u64);
                                 mirror.completed.fetch_add(1, Ordering::Relaxed);
@@ -508,7 +624,7 @@ impl InferenceService {
                         }
                         Err(e) => {
                             let msg = e.to_string();
-                            for (_, reply, _, guard, tid) in pending {
+                            for (_, reply, _, guard, tid, _) in pending {
                                 mirror.completed.fetch_add(1, Ordering::Relaxed);
                                 mirror.errors.fetch_add(1, Ordering::Relaxed);
                                 drop(guard);
@@ -520,7 +636,7 @@ impl InferenceService {
                         }
                     }
                 }
-                if shutdown {
+                if shutdown_seen && carry.is_empty() {
                     break;
                 }
             }
@@ -569,9 +685,25 @@ impl InferenceService {
         guard: Option<CompletionGuard>,
         trace_id: u32,
     ) -> Result<mpsc::Receiver<Result<Vec<i32>>>> {
+        self.enqueue_prioritized(image, guard, trace_id, Priority::Interactive)
+    }
+
+    /// [`InferenceService::enqueue_traced`] carrying an explicit
+    /// [`Priority`] tier. The tier rides the `Msg::Infer` tuple into the
+    /// worker's per-tier carry queues, where WFQ batch selection schedules
+    /// across tiers (docs/HOTPATH.md §11). Every other enqueue entry point
+    /// defaults to `Priority::Interactive` — single-tier callers see the
+    /// legacy FIFO behavior exactly (WFQ over one nonempty tier is FIFO).
+    pub fn enqueue_prioritized(
+        &self,
+        image: impl Into<Arc<[i32]>>,
+        guard: Option<CompletionGuard>,
+        trace_id: u32,
+        priority: Priority,
+    ) -> Result<mpsc::Receiver<Result<Vec<i32>>>> {
         let (rtx, rrx) = mpsc::channel();
         self.tx
-            .send(Msg::Infer(image.into(), rtx, Instant::now(), guard, trace_id))
+            .send(Msg::Infer(image.into(), rtx, Instant::now(), guard, trace_id, priority))
             .map_err(|_| Error::Runtime("service stopped".into()))?;
         Ok(rrx)
     }
@@ -732,17 +864,20 @@ mod tests {
         let (r1, _keep1) = mpsc::channel();
         let (r2, _keep2) = mpsc::channel();
         let (r3, _keep3) = mpsc::channel();
-        tx.send(Msg::Infer(vec![1].into(), r1, Instant::now(), None, UNTRACED)).unwrap();
-        tx.send(Msg::Infer(vec![2].into(), r2, Instant::now(), None, UNTRACED)).unwrap();
+        let p = Priority::Interactive;
+        tx.send(Msg::Infer(vec![1].into(), r1, Instant::now(), None, UNTRACED, p)).unwrap();
+        tx.send(Msg::Infer(vec![2].into(), r2, Instant::now(), None, UNTRACED, p)).unwrap();
         tx.send(Msg::Shutdown).unwrap();
-        tx.send(Msg::Infer(vec![3].into(), r3, Instant::now(), None, UNTRACED)).unwrap();
+        tx.send(Msg::Infer(vec![3].into(), r3, Instant::now(), None, UNTRACED, p)).unwrap();
         let policy = CoalescePolicy::fixed(BATCH_WINDOW).with_max_batch(100);
-        let (pending, shutdown) = collect_batch(&rx, 100, &policy, None);
+        let mut carry = TierQueues::new();
+        let (pending, shutdown) = collect_batch(&rx, 100, &policy, None, &mut carry);
         assert!(shutdown);
         assert_eq!(pending.len(), 2, "requests absorbed before shutdown ride the final batch");
+        assert!(carry.is_empty());
         // The post-shutdown request was NOT absorbed: the window closed at
         // once instead of coalescing toward batch_size = 100.
-        assert!(matches!(rx.try_recv(), Ok(Msg::Infer(im, _, _, _, _)) if im[..] == [3]));
+        assert!(matches!(rx.try_recv(), Ok(Msg::Infer(im, _, _, _, _, _)) if im[..] == [3]));
     }
 
     #[test]
@@ -754,7 +889,15 @@ mod tests {
         let keep: Vec<_> = (0..3)
             .map(|i| {
                 let (r, keep) = mpsc::channel();
-                tx.send(Msg::Infer(vec![i].into(), r, Instant::now(), None, UNTRACED)).unwrap();
+                tx.send(Msg::Infer(
+                    vec![i].into(),
+                    r,
+                    Instant::now(),
+                    None,
+                    UNTRACED,
+                    Priority::Interactive,
+                ))
+                .unwrap();
                 keep
             })
             .collect();
@@ -764,10 +907,85 @@ mod tests {
             .with_model_ns(1_000_000, 400_000)
             .with_max_batch(3);
         let t0 = Instant::now();
-        let (pending, shutdown) = collect_batch(&rx, 3, &policy, None);
+        let mut carry = TierQueues::new();
+        let (pending, shutdown) = collect_batch(&rx, 3, &policy, None, &mut carry);
         assert!(t0.elapsed() < Duration::from_secs(5), "no window waited at full batch");
         assert!(!shutdown);
         assert_eq!(pending.len(), 3);
+        drop(keep);
+    }
+
+    #[test]
+    fn worker_selects_batches_in_wfq_order() {
+        // Mixed-tier backlog, FIFO on the wire: four interactive (payloads
+        // 0..4) then two batch (10, 11). Selection must match the pure
+        // reference law `wfq_schedule` over the same per-tier FIFOs:
+        // interactive drains its weight round first, batch lands every
+        // fourth slot, FIFO within each tier.
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let mut keep = Vec::new();
+        for i in 0..4i32 {
+            let (r, k) = mpsc::channel();
+            keep.push(k);
+            tx.send(Msg::Infer(
+                vec![i].into(),
+                r,
+                Instant::now(),
+                None,
+                UNTRACED,
+                Priority::Interactive,
+            ))
+            .unwrap();
+        }
+        for i in 10..12i32 {
+            let (r, k) = mpsc::channel();
+            keep.push(k);
+            tx.send(Msg::Infer(vec![i].into(), r, Instant::now(), None, UNTRACED, Priority::Batch))
+                .unwrap();
+        }
+        let policy = CoalescePolicy::fixed(BATCH_WINDOW).with_max_batch(6);
+        let mut carry = TierQueues::new();
+        let (pending, shutdown) = collect_batch(&rx, 6, &policy, None, &mut carry);
+        assert!(!shutdown);
+        let ids: Vec<i32> = pending.iter().map(|p| p.0[0]).collect();
+        let expect = crate::coordinator::router::wfq_schedule(&[vec![0, 1, 2, 3], vec![10, 11]]);
+        let expect_ids: Vec<i32> = expect.into_iter().map(|(_, id)| id).collect();
+        assert_eq!(ids, expect_ids);
+        assert_eq!(ids, vec![0, 1, 2, 10, 3, 11]);
+        assert!(carry.is_empty());
+        drop(keep);
+    }
+
+    #[test]
+    fn wfq_carry_persists_across_batch_windows() {
+        // batch_size 2 over the same six-request backlog: unselected
+        // requests wait in the carry (no second blocking recv), and the
+        // deficits persist so the three windows together still serve the
+        // weight ratio: [0,1], [2,10], [3,11].
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let mut keep = Vec::new();
+        for (i, pri) in [
+            (0i32, Priority::Interactive),
+            (1, Priority::Interactive),
+            (2, Priority::Interactive),
+            (3, Priority::Interactive),
+            (10, Priority::Batch),
+            (11, Priority::Batch),
+        ] {
+            let (r, k) = mpsc::channel();
+            keep.push(k);
+            tx.send(Msg::Infer(vec![i].into(), r, Instant::now(), None, UNTRACED, pri)).unwrap();
+        }
+        let policy = CoalescePolicy::fixed(BATCH_WINDOW).with_max_batch(2);
+        let mut carry = TierQueues::new();
+        let mut windows = Vec::new();
+        for _ in 0..3 {
+            let (pending, shutdown) = collect_batch(&rx, 2, &policy, None, &mut carry);
+            assert!(!shutdown);
+            windows.push(pending.iter().map(|p| p.0[0]).collect::<Vec<i32>>());
+        }
+        assert_eq!(windows, vec![vec![0, 1], vec![2, 10], vec![3, 11]]);
+        assert!(carry.is_empty());
         drop(keep);
     }
 

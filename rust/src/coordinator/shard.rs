@@ -9,7 +9,12 @@
 //! *bounded* — [`Shard::try_submit`]/[`ShardedService::try_infer`] reject
 //! with [`Error::Overloaded`] once a shard's outstanding count reaches its
 //! queue cap, instead of letting queues grow without bound under a traffic
-//! spike. Blocking [`infer`](ShardedService::infer) remains available for
+//! spike. Admission is also *tiered*: requests carry a
+//! [`Priority`](crate::coordinator::router::Priority), and batch-tier work
+//! is admitted only below [`batch_queue_share`] of the cap — turned away as
+//! `shed` (a separate counter from `rejected`) so overload sheds batch
+//! before it rejects interactive, identically to the simulator.
+//! Blocking [`infer`](ShardedService::infer) remains available for
 //! cooperative clients. Request payloads are shared `Arc<[i32]>` buffers:
 //! a client allocates once, and routing fallback, retries and the worker's
 //! batch assembly all reference-count that one allocation.
@@ -40,7 +45,7 @@ use crate::blocks::BlockKind;
 use crate::cnn::{zoo, GoldenCnn, NetworkSpec};
 use crate::coordinator::coalesce::CoalescePolicy;
 use crate::coordinator::epoch::EpochCell;
-use crate::coordinator::router::Router;
+use crate::coordinator::router::{batch_queue_share, Priority, Router};
 use crate::coordinator::service::{
     GoldenExecutor, InferenceService, PjrtExecutor, ServiceStats, BATCH_WINDOW,
 };
@@ -202,6 +207,13 @@ pub struct Shard {
     /// signal — executor `errors` never see these, they are turned away at
     /// the front door).
     rejected: AtomicU64,
+    /// Batch-tier admissions shed at the batch queue share
+    /// ([`batch_queue_share`]). Deliberately separate from `rejected`:
+    /// `rejected` means the fleet is too small for its interactive load,
+    /// `shed` means the fleet is protecting interactive work by turning
+    /// batch work away first — the SLO tracker must not read shedding as
+    /// overload.
+    shed: AtomicU64,
     /// Set by [`Shard::drain`] before the shutdown request: admissions that
     /// reach this replica through a stale fleet epoch observe it and
     /// redirect to a sibling instead of racing the worker's exit.
@@ -226,6 +238,7 @@ impl Shard {
             queue_cap: queue_cap.max(1),
             outstanding: Arc::new(AtomicUsize::new(0)),
             rejected: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
             closed: AtomicBool::new(false),
             obs: None,
             service,
@@ -293,6 +306,11 @@ impl Shard {
         self.rejected.load(Ordering::SeqCst)
     }
 
+    /// Batch-tier admissions shed at the batch queue share, lifetime.
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::SeqCst)
+    }
+
     /// Admission cap for `try_*` calls.
     pub fn queue_cap(&self) -> usize {
         self.queue_cap
@@ -307,12 +325,26 @@ impl Shard {
     /// Take a slot only below the cap (optimistic increment, rolled back by
     /// the guard if over) — and never on a draining replica.
     fn try_acquire(&self) -> Option<SlotGuard> {
+        self.try_acquire_tiered(Priority::Interactive)
+    }
+
+    /// [`Shard::try_acquire`] with the tier's admission cap: interactive
+    /// requests use the full queue cap; batch requests are admitted only
+    /// below [`batch_queue_share`] of it, so a batch backlog can never
+    /// crowd interactive work out of the queue. Same optimistic-increment
+    /// protocol — the RMW atomicity argument of `docs/HOTPATH.md` §1 holds
+    /// per-tier because the batch share is a constant below the cap.
+    fn try_acquire_tiered(&self, priority: Priority) -> Option<SlotGuard> {
         if self.closed.load(Ordering::SeqCst) {
             return None;
         }
+        let cap = match priority {
+            Priority::Interactive => self.queue_cap,
+            Priority::Batch => batch_queue_share(self.queue_cap),
+        };
         let prev = self.outstanding.fetch_add(1, Ordering::SeqCst);
         let guard = SlotGuard(Arc::clone(&self.outstanding));
-        if prev >= self.queue_cap {
+        if prev >= cap {
             None // guard drop rolls the increment back
         } else {
             Some(guard)
@@ -358,6 +390,24 @@ impl Shard {
         ticket
     }
 
+    /// Tier-aware bounded admission: [`Error::Overloaded`] at the tier's
+    /// cap, counted in [`Shard::shed`] for batch work and
+    /// [`Shard::rejected`] for interactive.
+    pub fn try_submit_prioritized(
+        &self,
+        image: impl Into<Arc<[i32]>>,
+        priority: Priority,
+    ) -> Result<Ticket> {
+        let ticket = self.try_submit_prioritized_quiet(image.into(), priority);
+        if matches!(ticket, Err(Error::Overloaded(_))) {
+            match priority {
+                Priority::Interactive => self.note_rejection(),
+                Priority::Batch => self.note_shed(),
+            }
+        }
+        ticket
+    }
+
     /// [`Shard::try_submit`] without rejection accounting. The fleet's
     /// fallback path probes several replicas per admission; a probe that
     /// merely redirects to a sibling is NOT a turned-away request, so the
@@ -365,14 +415,32 @@ impl Shard {
     /// [`Shard::note_rejection`]) — otherwise a healthy fleet would read as
     /// overloaded to the SLO tracker.
     fn try_submit_quiet(&self, image: Arc<[i32]>) -> Result<Ticket> {
-        let slot = self.try_acquire().ok_or_else(|| {
+        self.try_submit_prioritized_quiet(image, Priority::Interactive)
+    }
+
+    /// [`Shard::try_submit_quiet`] with an explicit tier: admission runs
+    /// against the tier's cap ([`Shard::try_acquire_tiered`]) and the tier
+    /// rides the enqueue into the worker's WFQ carry queues.
+    fn try_submit_prioritized_quiet(
+        &self,
+        image: Arc<[i32]>,
+        priority: Priority,
+    ) -> Result<Ticket> {
+        let slot = self.try_acquire_tiered(priority).ok_or_else(|| {
             Error::Overloaded(format!(
-                "shard {}#{} at queue cap {}",
-                self.network, self.replica, self.queue_cap
+                "shard {}#{} at {} queue cap {}",
+                self.network,
+                self.replica,
+                priority.name(),
+                match priority {
+                    Priority::Interactive => self.queue_cap,
+                    Priority::Batch => batch_queue_share(self.queue_cap),
+                }
             ))
         })?;
         let tid = self.next_trace_id();
-        let rx = self.service.enqueue_traced(image, Some(Box::new(slot)), tid)?;
+        let rx =
+            self.service.enqueue_prioritized(image, Some(Box::new(slot)), tid, priority)?;
         self.note_admission(tid);
         Ok(Ticket { rx })
     }
@@ -380,6 +448,11 @@ impl Shard {
     /// Record one turned-away admission (the SLO overload signal).
     fn note_rejection(&self) {
         self.rejected.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Record one shed batch-tier admission (NOT an overload signal).
+    fn note_shed(&self) {
+        self.shed.fetch_add(1, Ordering::SeqCst);
     }
 
     /// Blocking inference (uncapped admission).
@@ -719,12 +792,29 @@ impl ShardedService {
     /// requests its siblings have room for. Lock-free: one epoch load, then
     /// per-shard atomics; fallback probes share the image's allocation.
     pub fn try_submit(&self, network: &str, image: impl Into<Arc<[i32]>>) -> Result<Ticket> {
+        self.try_submit_prioritized(network, image, Priority::Interactive)
+    }
+
+    /// [`ShardedService::try_submit`] with an explicit [`Priority`] tier.
+    /// Interactive admission runs against each replica's full queue cap;
+    /// batch admission against its [`batch_queue_share`]. When EVERY
+    /// replica turns the request away, the miss is charged once against the
+    /// preferred replica — as a *rejection* for interactive work (the SLO
+    /// overload signal) but as a *shed* for batch work (the fleet is
+    /// protecting its interactive tier; the autoscaler must not read that
+    /// as overload).
+    pub fn try_submit_prioritized(
+        &self,
+        network: &str,
+        image: impl Into<Arc<[i32]>>,
+        priority: Priority,
+    ) -> Result<Ticket> {
         let image: Arc<[i32]> = image.into();
         let st = self.state.load();
         let order = st.router.route_all_by(network, |i| st.shards[i].outstanding())?;
         let mut last: Option<Error> = None;
         for &idx in &order {
-            match st.shards[idx].try_submit_quiet(Arc::clone(&image)) {
+            match st.shards[idx].try_submit_prioritized_quiet(Arc::clone(&image), priority) {
                 Ok(ticket) => return Ok(ticket),
                 Err(e @ Error::Overloaded(_)) => last = Some(e),
                 Err(e) => return Err(e),
@@ -734,7 +824,10 @@ impl ShardedService {
         // once, against the preferred replica (probes that merely redirected
         // to a sibling were not rejections and stay uncounted).
         if let Some(&first) = order.first() {
-            st.shards[first].note_rejection();
+            match priority {
+                Priority::Interactive => st.shards[first].note_rejection(),
+                Priority::Batch => st.shards[first].note_shed(),
+            }
         }
         Err(last
             .unwrap_or_else(|| Error::Usage(format!("network `{network}` has no replicas"))))
@@ -762,6 +855,58 @@ impl ShardedService {
                 Err(e) => Err(e),
             })
             .collect())
+    }
+
+    /// Bounded admission for a mixed-priority chunk: ONE load scan plans
+    /// every slot across BOTH tiers ([`Router::route_chunk`] — the plan
+    /// carries each assignment's load delta forward, so equal-load ties
+    /// spread across siblings instead of piling onto one replica), then
+    /// each image goes to its planned replica under its tier's admission
+    /// cap. Results come back in *input* order (the plan is FIFO within a
+    /// tier, so the k-th planned slot of a tier is its k-th image); per-
+    /// image `Overloaded` falls back to the tier-aware full walk exactly
+    /// like [`ShardedService::try_submit_batch`] does.
+    pub fn try_submit_chunk(
+        &self,
+        network: &str,
+        images: &[(Arc<[i32]>, Priority)],
+    ) -> Result<Vec<Result<Ticket>>> {
+        let st = self.state.load();
+        let mut tiers = [0usize; Priority::COUNT];
+        for (_, p) in images {
+            tiers[p.index()] += 1;
+        }
+        let plan = st.router.route_chunk(network, tiers, |i| st.shards[i].outstanding())?;
+        let mut per_tier: [VecDeque<usize>; Priority::COUNT] = [VecDeque::new(), VecDeque::new()];
+        for (p, shard) in plan {
+            per_tier[p.index()].push_back(shard);
+        }
+        Ok(images
+            .iter()
+            .map(|(image, p)| {
+                let idx = per_tier[p.index()].pop_front().expect("plan covers every image");
+                match st.shards[idx].try_submit_prioritized_quiet(Arc::clone(image), *p) {
+                    Ok(ticket) => Ok(ticket),
+                    Err(Error::Overloaded(_)) => {
+                        self.try_submit_prioritized(network, Arc::clone(image), *p)
+                    }
+                    Err(e) => Err(e),
+                }
+            })
+            .collect())
+    }
+
+    /// Summed [`Shard::shed`] across `network`'s replicas (every replica
+    /// when `network` is `None`) — the batch-tier conservation input:
+    /// offered = completed + rejected + shed, per tier.
+    pub fn shed_count(&self, network: Option<&str>) -> u64 {
+        self.state
+            .load()
+            .shards
+            .iter()
+            .filter(|s| network.is_none_or(|n| s.network == n))
+            .map(|s| s.shed())
+            .sum()
     }
 
     /// Blocking inference on `network` (uncapped admission).

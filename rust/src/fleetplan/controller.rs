@@ -463,6 +463,14 @@ impl Autoscaler {
         &self.plan
     }
 
+    /// The attached telemetry plane, when [`Autoscaler::with_obs`] set one
+    /// — the chaos harness journals injected faults into the SAME plane
+    /// the controller journals its reactions to, so one timeline holds
+    /// both cause and response.
+    pub fn obs(&self) -> Option<&Arc<Telemetry>> {
+        self.obs.as_ref()
+    }
+
     /// Pure decision step: fold `stats` into the SLO tracker and emit the
     /// justified reconfigurations. Scale-ups require headroom in the
     /// *predicted* budget; scale-downs require a full calm window and more

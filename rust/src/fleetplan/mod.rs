@@ -82,4 +82,4 @@ pub use pool::{
     plan_pool, DevicePlan, DevicePool, DeviceThresholds, PoolDevice, PoolPlan,
     ReconfigPolicy,
 };
-pub use slo::{NetworkSlo, SloPolicy, SloTracker, SloVerdict};
+pub use slo::{recovered, NetworkSlo, SloPolicy, SloTracker, SloVerdict};

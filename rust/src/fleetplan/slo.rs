@@ -128,6 +128,17 @@ impl NetworkSlo {
     }
 }
 
+/// True when every one of `affected` networks is present in `rows` with a
+/// verdict other than [`SloVerdict::Overloaded`] — the chaos harness's
+/// recovery law: a fault's recovery time is the first control tick this
+/// holds at. Networks absent from `rows` (e.g. fully unrouted by a device
+/// loss) count as NOT recovered — capacity has not come back yet.
+pub fn recovered(rows: &[NetworkSlo], affected: &[&str]) -> bool {
+    affected.iter().all(|net| {
+        rows.iter().any(|r| r.network == *net && r.verdict != SloVerdict::Overloaded)
+    })
+}
+
 /// Per-network window entry: admission-attempt deltas between snapshots.
 #[derive(Debug, Clone, Copy, Default)]
 struct Sample {
@@ -393,6 +404,20 @@ mod tests {
         assert_eq!(s[0].p95_target_ms, 8.0);
         assert_ne!(s[1].verdict, SloVerdict::Overloaded);
         assert_eq!(s[1].p95_target_ms, 10.0);
+    }
+
+    #[test]
+    fn recovered_requires_every_affected_network_present_and_unbreached() {
+        let mut t = tracker(1);
+        let rows = t.observe(&snapshot(vec![
+            row("a", 0, 10, 0, 1.0, 0),
+            row("b", 0, 10, 90, 1.0, 4),
+        ]));
+        assert!(recovered(&rows, &["a"]));
+        assert!(!recovered(&rows, &["b"]), "overloaded network has not recovered");
+        assert!(!recovered(&rows, &["a", "b"]));
+        assert!(!recovered(&rows, &["ghost"]), "absent network = capacity still gone");
+        assert!(recovered(&rows, &[]), "vacuously true with no affected networks");
     }
 
     #[test]

@@ -33,6 +33,10 @@ pub enum JournalKind {
     /// Post-hoc verdict on an earlier decision: did the fleet move the way
     /// the journaled prediction claimed over the next control window?
     Audit,
+    /// An injected fault from a `simulate::chaos` plan (replica kill,
+    /// wedge, device outage, rebind, burst storm) — journaled so a chaos
+    /// run's timeline interleaves faults with the controller's reactions.
+    Chaos,
 }
 
 impl JournalKind {
@@ -45,6 +49,7 @@ impl JournalKind {
             JournalKind::PolicySwap => "policy_swap",
             JournalKind::ModelDrift => "model_drift",
             JournalKind::Audit => "audit",
+            JournalKind::Chaos => "chaos",
         }
     }
 }
@@ -240,5 +245,6 @@ mod tests {
         assert_eq!(JournalKind::PolicySwap.name(), "policy_swap");
         assert_eq!(JournalKind::ModelDrift.name(), "model_drift");
         assert_eq!(JournalKind::Audit.name(), "audit");
+        assert_eq!(JournalKind::Chaos.name(), "chaos");
     }
 }

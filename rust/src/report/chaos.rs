@@ -1,0 +1,173 @@
+//! Rendering of chaos-run reports: the fault schedule with per-fault
+//! recovery-to-SLO, the tier ledger (conservation made visible), and the
+//! per-network damage table — the operator-facing face of
+//! `simulate::chaos::run_chaos`.
+
+use crate::coordinator::Priority;
+use crate::simulate::ChaosReport;
+
+/// Render one chaos report as a fixed-width text block: run header,
+/// per-tier admission ledger (with the conservation verdict), one row per
+/// injected fault (`ok`/`..` recovery mark, blast radius, recovery ms),
+/// per-network totals, and the scored summary (worst recovery, tier
+/// fairness, controller activity).
+pub fn chaos_table(r: &ChaosReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "=== chaos run: seed {}, {} fault(s), batch frac {:.0}% ===\n",
+        r.seed,
+        r.faults.len(),
+        100.0 * r.batch_frac
+    ));
+    out.push_str(&format!(
+        "{:.1} virtual ms, {} events   offered {}  admitted {}  completed {}  \
+         rejected {}  shed {}\n\n",
+        r.virtual_ms, r.events, r.offered, r.admitted, r.completed, r.rejected, r.shed
+    ));
+
+    out.push_str(&format!(
+        "  {:<12} {:>9} {:>9} {:>9} {:>7} {:>9}\n",
+        "tier", "offered", "completed", "rejected", "shed", "done"
+    ));
+    for p in Priority::ALL {
+        let i = p.index();
+        let offered = r.offered_tier[i];
+        let rate = if offered == 0 {
+            100.0
+        } else {
+            100.0 * r.completed_tier[i] as f64 / offered as f64
+        };
+        out.push_str(&format!(
+            "  {:<12} {:>9} {:>9} {:>9} {:>7} {:>8.1}%\n",
+            p.name(),
+            offered,
+            r.completed_tier[i],
+            r.rejected_tier[i],
+            r.shed_tier[i],
+            rate,
+        ));
+    }
+    out.push_str(&format!(
+        "  conservation (offered == completed + rejected + shed, per tier per \
+         network): {}\n\n",
+        if r.conserved { "HELD" } else { "VIOLATED" }
+    ));
+
+    if !r.faults.is_empty() {
+        out.push_str(&format!(
+            "  {:<2} {:>9} {:<14} {:<34} {:>11}\n",
+            "", "t ms", "fault", "blast radius", "recovery"
+        ));
+        for f in &r.faults {
+            let radius =
+                if f.affected.is_empty() { "-".to_string() } else { f.affected.join(",") };
+            out.push_str(&format!(
+                "  {:<2} {:>9.3} {:<14} {:<34} {:>9.3}ms\n",
+                if f.recovered { "ok" } else { ".." },
+                f.at_ms,
+                f.kind,
+                radius,
+                f.recovery_ms,
+            ));
+        }
+        out.push('\n');
+    }
+
+    out.push_str(&format!(
+        "  {:<14} {:>8} {:>9} {:>8} {:>7} {:>9} {:>10}\n",
+        "network", "offered", "completed", "rejected", "shed", "overload", "p95 ms"
+    ));
+    for n in &r.networks {
+        out.push_str(&format!(
+            "  {:<14} {:>8} {:>9} {:>8} {:>7} {:>8.2}% {:>10.4}\n",
+            n.network,
+            n.offered,
+            n.completed,
+            n.rejected,
+            n.shed,
+            100.0 * n.overload_rate,
+            n.p95_ms,
+        ));
+    }
+
+    out.push_str(&format!(
+        "\nworst recovery-to-SLO: {:.3} ms   tier fairness: {:.4}   \
+         controller: {} up / {} down ({} decision(s))\n",
+        r.worst_recovery_ms(),
+        r.tier_fairness(),
+        r.scale_ups,
+        r.scale_downs,
+        r.decisions.len(),
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulate::FaultReport;
+
+    fn report() -> ChaosReport {
+        ChaosReport {
+            seed: 7,
+            batch_frac: 0.10,
+            virtual_ms: 150.0,
+            events: 4321,
+            offered: 1000,
+            admitted: 960,
+            rejected: 25,
+            shed: 15,
+            completed: 960,
+            offered_tier: [890, 110],
+            rejected_tier: [25, 0],
+            shed_tier: [0, 15],
+            completed_tier: [865, 95],
+            conserved: true,
+            faults: vec![
+                FaultReport {
+                    kind: "wedge_replica".into(),
+                    label: "wedge lenet_q8#0 for 15ms".into(),
+                    at_ms: 10.0,
+                    affected: vec!["lenet_q8".into()],
+                    recovered: true,
+                    recovery_ms: 40.0,
+                },
+                FaultReport {
+                    kind: "fail_device".into(),
+                    label: "fail device dev1".into(),
+                    at_ms: 60.0,
+                    affected: vec!["tiny_q8".into()],
+                    recovered: false,
+                    recovery_ms: 90.0,
+                },
+            ],
+            networks: vec![],
+            scale_ups: 3,
+            scale_downs: 1,
+            trajectory: vec![],
+            decisions: vec!["t=+50.000ms scale up".into()],
+        }
+    }
+
+    #[test]
+    fn table_shows_tiers_faults_and_the_conservation_verdict() {
+        let text = chaos_table(&report());
+        assert!(text.contains("seed 7, 2 fault(s), batch frac 10%"), "{text}");
+        assert!(text.contains("interactive"), "{text}");
+        assert!(text.contains("batch"), "{text}");
+        assert!(text.contains("HELD"), "{text}");
+        assert!(text.contains("wedge_replica"), "{text}");
+        assert!(text.contains("fail_device"), "{text}");
+        assert!(text.contains("ok"), "{text}");
+        assert!(text.contains("tiny_q8"), "{text}");
+        assert!(text.contains("worst recovery-to-SLO: 90.000 ms"), "{text}");
+        assert!(text.contains("3 up / 1 down"), "{text}");
+    }
+
+    #[test]
+    fn violated_conservation_is_loud() {
+        let mut r = report();
+        r.conserved = false;
+        assert!(chaos_table(&r).contains("VIOLATED"));
+    }
+}

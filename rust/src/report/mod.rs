@@ -3,12 +3,14 @@
 //! text so the CLI, benches and tests share one implementation.
 
 pub mod capacity;
+pub mod chaos;
 pub mod pareto;
 pub mod pool;
 pub mod tables;
 pub mod figures;
 
 pub use capacity::capacity_table;
+pub use chaos::chaos_table;
 pub use figures::{figure_csv, figure_surface};
 pub use pareto::pareto_table;
 pub use pool::pool_table;

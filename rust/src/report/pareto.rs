@@ -25,14 +25,22 @@ pub fn pareto_table(r: &PolicySearchReport) -> String {
         r.arrivals,
         r.rows.len()
     ));
+    // Chaos-sweep columns (recovery / fairness) appear only when some row
+    // makes them live — a plain search keeps the classic narrow table.
+    let chaotic =
+        r.rows.iter().any(|x| x.recovery_ms > 0.0 || x.tier_fairness < 1.0);
     out.push_str(&format!(
-        "  {:<1} {:>8} {:>6} {:>6} {:>4} {:>12} {:>10} {:>8} {:>10} {:>5} {:>5}\n",
+        "  {:<1} {:>8} {:>6} {:>6} {:>4} {:>12} {:>10} {:>8} {:>10} {:>5} {:>5}",
         "", "overload", "ratio", "idle", "win", "sustained", "p95 ms", "reject", "repl-sec",
         "ups", "downs"
     ));
+    if chaotic {
+        out.push_str(&format!(" {:>10} {:>8}", "recover", "fairness"));
+    }
+    out.push('\n');
     for row in &r.rows {
         out.push_str(&format!(
-            "  {:<1} {:>8.4} {:>6.2} {:>6.3} {:>4} {:>9.1}qps {:>10.4} {:>7.2}% {:>10.3} {:>5} {:>5}\n",
+            "  {:<1} {:>8.4} {:>6.2} {:>6.3} {:>4} {:>9.1}qps {:>10.4} {:>7.2}% {:>10.3} {:>5} {:>5}",
             if row.pareto { "*" } else { " " },
             row.policy.overload_target,
             row.policy.p95_ratio,
@@ -45,6 +53,10 @@ pub fn pareto_table(r: &PolicySearchReport) -> String {
             row.scale_ups,
             row.scale_downs,
         ));
+        if chaotic {
+            out.push_str(&format!(" {:>8.2}ms {:>8.4}", row.recovery_ms, row.tier_fairness));
+        }
+        out.push('\n');
     }
     let front = r.front();
     out.push_str(&format!(
@@ -85,6 +97,8 @@ mod tests {
             replica_seconds: 7.5,
             scale_ups: 3,
             scale_downs: 1,
+            recovery_ms: 0.0,
+            tier_fairness: 1.0,
             pareto,
         };
         PolicySearchReport {
@@ -107,6 +121,20 @@ mod tests {
         assert!(text.contains("grid: 2 policies"), "{text}");
         assert!(text.contains("Pareto front: 1 of 2"), "{text}");
         assert!(text.contains("1400.0"), "{text}");
+    }
+
+    #[test]
+    fn chaos_columns_appear_only_when_the_axes_are_live() {
+        let plain = pareto_table(&report());
+        assert!(!plain.contains("fairness"), "{plain}");
+        let mut r = report();
+        r.rows[0].recovery_ms = 42.5;
+        r.rows[0].tier_fairness = 0.91;
+        let text = pareto_table(&r);
+        assert!(text.contains("recover"), "{text}");
+        assert!(text.contains("fairness"), "{text}");
+        assert!(text.contains("42.50ms"), "{text}");
+        assert!(text.contains("0.9100"), "{text}");
     }
 
     #[test]

@@ -1,0 +1,961 @@
+//! Seeded fault-injection plans driven through the virtual-clock fleet —
+//! chaos engineering as a pure function of `(plan, trace, policy)`.
+//!
+//! A [`ChaosPlan`] schedules faults on the virtual clock: replica deaths,
+//! wedged-worker stalls ([`super::engine::SimFleet::wedge_replica`]),
+//! whole-device outages and rebinds
+//! ([`super::engine::SimFleet::fail_device`] /
+//! [`super::engine::SimFleet::rebind_device`]), and correlated burst storms
+//! that multiply trace arrivals inside a window. [`run_chaos`] replays a
+//! [`Trace`] against a [`super::engine::SimFleet`] with the *production*
+//! [`Autoscaler`] in the loop — the same `ScaleTarget` path every capacity
+//! run exercises — injecting each fault at its scheduled instant and then
+//! watching an independent [`SloTracker`] until every affected network
+//! leaves `Overloaded` ([`crate::fleetplan::recovered`]). The first control
+//! tick at which that holds stamps the fault's `recovery_ms`.
+//!
+//! Priority tiers ride along: every arrival draws its
+//! [`Priority`] from the plan's seeded [`SplitMix64`] stream
+//! (`batch_frac` of arrivals are batch tier), so overload sheds batch work
+//! first — [`super::engine::SimFleet::offer_prioritized`] applies the SAME
+//! [`crate::coordinator::batch_queue_share`] law the live sharded service
+//! enforces. The run's accounting is closed: per network and per tier,
+//! `offered == completed + rejected + shed` exactly
+//! ([`ChaosReport::conserved`]), a property `rust/tests/property_suite.rs`
+//! fuzzes across seeds × fault classes.
+//!
+//! Every injected fault is journaled as a
+//! [`crate::obs::JournalKind::Chaos`] event into the telemetry plane the
+//! controllers journal their reactions into (when one is attached via
+//! `WhatIfOptions::obs`), so one timeline interleaves cause and response.
+//! Determinism contract: same plan + same trace + same policy ⇒
+//! [`ChaosReport::to_json`] is byte-identical — CI runs `convkit chaos`
+//! twice and diffs the bytes.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::coordinator::Priority;
+use crate::fleetplan::{
+    recovered, select_platform_or_spill, Autoscaler, NetworkDemand, ScaleAction, ScaleDecision,
+    ScaleTarget, SloPolicy, SloTracker, SpillPlan,
+};
+use crate::models::ModelRegistry;
+use crate::obs::{JournalEvent, JournalKind};
+use crate::platform::Platform;
+use crate::util::error::Result;
+use crate::util::rng::SplitMix64;
+
+use super::clock::SimNs;
+use super::engine::{SimFleet, SimNetStats, SimRunOptions, TrajectoryPoint};
+use super::whatif::{
+    autosize_scenario, json_escape, plan_rows, scalers_for, sim_fleet, WhatIfOptions,
+};
+use super::workload::{Scenario, Trace};
+
+/// One scheduled fault. All times are virtual milliseconds from run start,
+/// matching the trace's clock.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ChaosFault {
+    /// Remove one replica of `network` (highest ordinal, drain-safe) — the
+    /// simulator's `scale_down`, i.e. the live `remove_shard` semantics.
+    /// Refused (and journaled as refused) when it is the last replica.
+    KillReplica {
+        /// Injection time (virtual ms).
+        at_ms: f64,
+        /// Network to shrink.
+        network: String,
+    },
+    /// Stall one replica: admitted work keeps its queue slots but nothing
+    /// dispatches until the stall elapses — the wedged-worker failure mode.
+    /// `stats()` snapshots stay instant throughout, exactly as live.
+    WedgeReplica {
+        /// Injection time (virtual ms).
+        at_ms: f64,
+        /// Network owning the replica.
+        network: String,
+        /// Replica ordinal within the network (0-based).
+        ordinal: usize,
+        /// Stall duration (virtual ms).
+        stall_ms: f64,
+    },
+    /// Kill every replica on a device (drain-safe): a power/bitstream loss.
+    FailDevice {
+        /// Injection time (virtual ms).
+        at_ms: f64,
+        /// Device (contention group) to take down.
+        device: String,
+    },
+    /// Reprogram a device mid-trace: drain whatever it serves, pay the
+    /// reconfiguration outage, then activate fresh replicas of `network`.
+    RebindDevice {
+        /// Injection time (virtual ms).
+        at_ms: f64,
+        /// Device to reprogram.
+        device: String,
+        /// Network whose bitstream the device loads.
+        network: String,
+        /// Fresh replicas to activate after the outage.
+        replicas: usize,
+        /// Reconfiguration outage (virtual ms).
+        downtime_ms: f64,
+    },
+    /// Correlated arrival storm: every trace arrival inside
+    /// `[at_ms, at_ms + len_ms)` is offered `factor` times instead of once.
+    /// Applied when arrivals are built, so the storm is part of the
+    /// deterministic workload, not a runtime mutation.
+    BurstStorm {
+        /// Window start (virtual ms).
+        at_ms: f64,
+        /// Window length (virtual ms).
+        len_ms: f64,
+        /// Arrival multiplier (≥ 1; 1 = no-op).
+        factor: u32,
+    },
+}
+
+impl ChaosFault {
+    /// Scheduled injection time (virtual ms).
+    pub fn at_ms(&self) -> f64 {
+        match self {
+            ChaosFault::KillReplica { at_ms, .. }
+            | ChaosFault::WedgeReplica { at_ms, .. }
+            | ChaosFault::FailDevice { at_ms, .. }
+            | ChaosFault::RebindDevice { at_ms, .. }
+            | ChaosFault::BurstStorm { at_ms, .. } => *at_ms,
+        }
+    }
+
+    /// Stable snake_case class name used in JSON exports.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ChaosFault::KillReplica { .. } => "kill_replica",
+            ChaosFault::WedgeReplica { .. } => "wedge_replica",
+            ChaosFault::FailDevice { .. } => "fail_device",
+            ChaosFault::RebindDevice { .. } => "rebind_device",
+            ChaosFault::BurstStorm { .. } => "burst_storm",
+        }
+    }
+
+    /// Short human label for tables and journals.
+    pub fn label(&self) -> String {
+        match self {
+            ChaosFault::KillReplica { network, .. } => format!("kill one `{network}` replica"),
+            ChaosFault::WedgeReplica { network, ordinal, stall_ms, .. } => {
+                format!("wedge `{network}`#{ordinal} for {stall_ms:.1} ms")
+            }
+            ChaosFault::FailDevice { device, .. } => format!("fail device `{device}`"),
+            ChaosFault::RebindDevice { device, network, replicas, downtime_ms, .. } => format!(
+                "rebind `{device}` to {replicas}×`{network}` ({downtime_ms:.1} ms outage)"
+            ),
+            ChaosFault::BurstStorm { len_ms, factor, .. } => {
+                format!("burst storm ×{factor} for {len_ms:.1} ms")
+            }
+        }
+    }
+}
+
+/// A deterministic fault-injection plan: the seed that assigns arrival
+/// tiers, the batch-tier traffic fraction, and the scheduled faults.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosPlan {
+    /// Seed for the tier-assignment stream (and any future chaos draws).
+    pub seed: u64,
+    /// Fraction of arrivals offered at [`Priority::Batch`] (clamped 0..=1).
+    pub batch_frac: f64,
+    /// Faults, injected in time order (plan order breaks ties).
+    pub faults: Vec<ChaosFault>,
+}
+
+impl ChaosPlan {
+    /// Plan with no faults — a tiered baseline run.
+    pub fn new(seed: u64, batch_frac: f64) -> ChaosPlan {
+        ChaosPlan { seed, batch_frac, faults: Vec::new() }
+    }
+
+    /// Append a fault (builder style).
+    pub fn with_fault(mut self, fault: ChaosFault) -> ChaosPlan {
+        self.faults.push(fault);
+        self
+    }
+}
+
+/// Outcome of one injected fault.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultReport {
+    /// Stable class name ([`ChaosFault::kind`]).
+    pub kind: String,
+    /// Human label ([`ChaosFault::label`]).
+    pub label: String,
+    /// Injection time (virtual ms).
+    pub at_ms: f64,
+    /// Networks in the blast radius (device faults: everything the device
+    /// hosted at injection; storms: every network in the trace).
+    pub affected: Vec<String>,
+    /// Whether every affected network left `Overloaded` at some control
+    /// tick after injection, per the independent watcher
+    /// [`SloTracker`].
+    pub recovered: bool,
+    /// Virtual ms from injection to the first such tick; when the run ends
+    /// still unrecovered, the distance to run end (a lower bound).
+    pub recovery_ms: f64,
+}
+
+/// Full accounting of one chaos run. Pure function of
+/// `(fleet, trace, plan, policy, opts)` — byte-identical JSON across runs.
+#[derive(Debug, Clone)]
+pub struct ChaosReport {
+    /// Tier-assignment seed ([`ChaosPlan::seed`]).
+    pub seed: u64,
+    /// Batch-tier arrival fraction actually used (clamped).
+    pub batch_frac: f64,
+    /// Virtual duration of the run (ms).
+    pub virtual_ms: f64,
+    /// Discrete events processed.
+    pub events: u64,
+    /// Requests offered (storm amplification included).
+    pub offered: u64,
+    /// Requests admitted.
+    pub admitted: u64,
+    /// Interactive-tier requests turned away with every replica at cap.
+    pub rejected: u64,
+    /// Batch-tier requests shed at admission (interactive protection).
+    pub shed: u64,
+    /// Requests completed.
+    pub completed: u64,
+    /// `offered` by tier (index = [`Priority::index`]).
+    pub offered_tier: [u64; Priority::COUNT],
+    /// `rejected` by tier.
+    pub rejected_tier: [u64; Priority::COUNT],
+    /// `shed` by tier.
+    pub shed_tier: [u64; Priority::COUNT],
+    /// `completed` by tier.
+    pub completed_tier: [u64; Priority::COUNT],
+    /// Whether `offered == completed + rejected + shed` held per network
+    /// per tier — the conservation invariant (admitted work is never lost).
+    pub conserved: bool,
+    /// One row per scheduled fault, plan order within a tie, time order
+    /// overall.
+    pub faults: Vec<FaultReport>,
+    /// Per-network totals, name order.
+    pub networks: Vec<SimNetStats>,
+    /// Scale-up decisions the controllers took while absorbing the plan.
+    pub scale_ups: usize,
+    /// Scale-down decisions.
+    pub scale_downs: usize,
+    /// Replica trajectory: initial counts plus every change point (ticks
+    /// AND fault injections move counts here, unlike a plain trace run).
+    pub trajectory: Vec<TrajectoryPoint>,
+    /// Controller decisions, rendered with their virtual timestamps.
+    pub decisions: Vec<String>,
+}
+
+impl ChaosReport {
+    /// Worst per-fault recovery time (ms); 0 when the plan had no faults.
+    pub fn worst_recovery_ms(&self) -> f64 {
+        self.faults.iter().map(|f| f.recovery_ms).fold(0.0f64, f64::max)
+    }
+
+    /// Batch-tier completion rate relative to interactive, capped at 1:
+    /// `(batch completed/offered) / (interactive completed/offered)`.
+    /// 1.0 when either tier saw no traffic (fairness is vacuous) — and
+    /// 1.0 is the ideal: batch completes at the same rate interactive
+    /// does. Values below the WFQ weight share indicate starvation.
+    pub fn tier_fairness(&self) -> f64 {
+        let b = Priority::Batch.index();
+        let i = Priority::Interactive.index();
+        if self.offered_tier[b] == 0 || self.offered_tier[i] == 0 {
+            return 1.0;
+        }
+        let batch = self.completed_tier[b] as f64 / self.offered_tier[b] as f64;
+        let inter = self.completed_tier[i] as f64 / self.offered_tier[i] as f64;
+        if inter <= 0.0 {
+            return 1.0;
+        }
+        (batch / inter).min(1.0)
+    }
+}
+
+impl ChaosReport {
+    /// Deterministic JSON under a top-level `"chaos"` key — the
+    /// `CHAOS_report.json` CI archives and byte-diffs.
+    pub fn to_json(&self) -> String {
+        fn tier(v: &[u64; Priority::COUNT]) -> String {
+            let inner: Vec<String> = v.iter().map(|x| x.to_string()).collect();
+            format!("[{}]", inner.join(", "))
+        }
+        let mut out = String::from("{\n  \"chaos\": {\n");
+        out.push_str(&format!(
+            "    \"seed\": {}, \"batch_frac\": {:.3}, \"virtual_ms\": {:.3}, \"events\": {},\n",
+            self.seed, self.batch_frac, self.virtual_ms, self.events
+        ));
+        out.push_str(&format!(
+            "    \"offered\": {}, \"admitted\": {}, \"rejected\": {}, \"shed\": {}, \"completed\": {},\n",
+            self.offered, self.admitted, self.rejected, self.shed, self.completed
+        ));
+        out.push_str(&format!(
+            "    \"offered_tier\": {}, \"rejected_tier\": {}, \"shed_tier\": {}, \"completed_tier\": {},\n",
+            tier(&self.offered_tier),
+            tier(&self.rejected_tier),
+            tier(&self.shed_tier),
+            tier(&self.completed_tier)
+        ));
+        out.push_str(&format!("    \"conserved\": {},\n", self.conserved));
+        out.push_str(&format!(
+            "    \"scale_ups\": {}, \"scale_downs\": {}, \"worst_recovery_ms\": {:.3}, \"tier_fairness\": {:.4},\n",
+            self.scale_ups,
+            self.scale_downs,
+            self.worst_recovery_ms(),
+            self.tier_fairness()
+        ));
+        out.push_str("    \"faults\": [\n");
+        for (i, f) in self.faults.iter().enumerate() {
+            let affected: Vec<String> =
+                f.affected.iter().map(|n| format!("\"{}\"", json_escape(n))).collect();
+            out.push_str(&format!(
+                "      {{\"kind\": \"{}\", \"label\": \"{}\", \"at_ms\": {:.3}, \"affected\": [{}], \"recovered\": {}, \"recovery_ms\": {:.3}}}{}\n",
+                f.kind,
+                json_escape(&f.label),
+                f.at_ms,
+                affected.join(", "),
+                f.recovered,
+                f.recovery_ms,
+                if i + 1 == self.faults.len() { "" } else { "," }
+            ));
+        }
+        out.push_str("    ],\n    \"networks\": [\n");
+        for (i, n) in self.networks.iter().enumerate() {
+            out.push_str(&format!(
+                "      {{\"network\": \"{}\", \"offered\": {}, \"admitted\": {}, \"rejected\": {}, \"shed\": {}, \"completed\": {}, \"offered_tier\": {}, \"rejected_tier\": {}, \"shed_tier\": {}, \"completed_tier\": {}, \"overload_rate\": {:.6}, \"mean_ms\": {:.6}, \"p95_ms\": {:.6}}}{}\n",
+                json_escape(&n.network),
+                n.offered,
+                n.admitted,
+                n.rejected,
+                n.shed,
+                n.completed,
+                tier(&n.offered_tier),
+                tier(&n.rejected_tier),
+                tier(&n.shed_tier),
+                tier(&n.completed_tier),
+                n.overload_rate,
+                n.mean_ms,
+                n.p95_ms,
+                if i + 1 == self.networks.len() { "" } else { "," }
+            ));
+        }
+        out.push_str("    ],\n    \"trajectory\": [\n");
+        for (i, p) in self.trajectory.iter().enumerate() {
+            out.push_str(&format!(
+                "      {{\"t_ms\": {:.3}, \"network\": \"{}\", \"replicas\": {}}}{}\n",
+                p.t_ms,
+                json_escape(&p.network),
+                p.replicas,
+                if i + 1 == self.trajectory.len() { "" } else { "," }
+            ));
+        }
+        out.push_str("    ],\n    \"decisions\": [\n");
+        for (i, d) in self.decisions.iter().enumerate() {
+            out.push_str(&format!(
+                "      \"{}\"{}\n",
+                json_escape(d),
+                if i + 1 == self.decisions.len() { "" } else { "," }
+            ));
+        }
+        out.push_str("    ]\n  }\n}\n");
+        out
+    }
+}
+
+/// One arrival after tier assignment and storm amplification.
+struct ChaosArrival {
+    at_ns: SimNs,
+    net: String,
+    priority: Priority,
+}
+
+/// A scheduled fault plus its runtime bookkeeping.
+struct PendingFault {
+    at_ns: SimNs,
+    fault: ChaosFault,
+    affected: Vec<String>,
+    injected: bool,
+    recovered_at: Option<SimNs>,
+}
+
+/// Distinct (sorted) network names appearing in the trace — a storm's
+/// blast radius.
+fn trace_networks(trace: &Trace) -> Vec<String> {
+    let mut nets = trace.networks.clone();
+    nets.sort();
+    nets.dedup();
+    nets
+}
+
+/// Expand the trace into tier-tagged arrivals. The tier of EVERY offered
+/// copy is drawn from the plan's seeded stream in arrival order, so the
+/// workload is a pure function of `(trace, plan)` — storms amplify
+/// arrivals at build time (copies share the timestamp; insertion order
+/// keeps the expansion stable).
+fn build_arrivals(trace: &Trace, plan: &ChaosPlan) -> Vec<ChaosArrival> {
+    let mut rng = SplitMix64::new(plan.seed);
+    let frac = plan.batch_frac.clamp(0.0, 1.0);
+    let mut out = Vec::with_capacity(trace.events.len());
+    for e in &trace.events {
+        let mut copies = 1u64;
+        for f in &plan.faults {
+            if let ChaosFault::BurstStorm { at_ms, len_ms, factor } = f {
+                let start = (at_ms.max(0.0) * 1e6) as SimNs;
+                let end = start.saturating_add((len_ms.max(0.0) * 1e6) as SimNs);
+                if e.at_ns >= start && e.at_ns < end {
+                    copies += u64::from((*factor).saturating_sub(1));
+                }
+            }
+        }
+        for _ in 0..copies {
+            let priority =
+                if rng.next_f64() < frac { Priority::Batch } else { Priority::Interactive };
+            out.push(ChaosArrival {
+                at_ns: e.at_ns,
+                net: trace.network_of(e).to_string(),
+                priority,
+            });
+        }
+    }
+    out
+}
+
+/// Apply one fault to the fleet and journal it (when any scaler carries a
+/// telemetry plane). Device blast radii are computed HERE, against the
+/// fleet as it stands at injection — not at plan time.
+fn inject(fleet: &mut SimFleet, scalers: &mut [Autoscaler], pf: &mut PendingFault) -> Result<()> {
+    fleet.run_until(pf.at_ns);
+    let t_ms = pf.at_ns as f64 / 1e6;
+    let (network, device, from, to, reason) = match &pf.fault {
+        ChaosFault::KillReplica { network, .. } => {
+            let from = fleet.replica_count(network) as u64;
+            let outcome = fleet.scale_down(network);
+            let to = fleet.replica_count(network) as u64;
+            let reason = match outcome {
+                Ok(()) => format!("chaos: killed one `{network}` replica"),
+                Err(e) => format!("chaos: kill refused ({e})"),
+            };
+            (network.clone(), None, from, to, reason)
+        }
+        ChaosFault::WedgeReplica { network, ordinal, stall_ms, .. } => {
+            let until = pf.at_ns.saturating_add((stall_ms.max(0.0) * 1e6) as SimNs);
+            let hit = fleet.wedge_replica(network, *ordinal, until);
+            let n = fleet.replica_count(network) as u64;
+            let reason = if hit {
+                format!("chaos: wedged `{network}`#{ordinal} for {stall_ms:.1} ms")
+            } else {
+                format!("chaos: wedge target `{network}`#{ordinal} not found")
+            };
+            (network.clone(), None, n, n, reason)
+        }
+        ChaosFault::FailDevice { device, .. } => {
+            pf.affected = fleet.networks_on_device(device);
+            let lost = fleet.fail_device(device);
+            let reason = format!("chaos: device `{device}` lost ({lost} replicas draining out)");
+            let first = pf.affected.first().cloned().unwrap_or_default();
+            (first, Some(device.clone()), lost as u64, 0, reason)
+        }
+        ChaosFault::RebindDevice { device, network, replicas, downtime_ms, .. } => {
+            let mut affected = fleet.networks_on_device(device);
+            if !affected.contains(network) {
+                affected.push(network.clone());
+                affected.sort();
+            }
+            let drained = fleet.rebind_device(device, network, *replicas, *downtime_ms)?;
+            pf.affected = affected;
+            let reason = format!(
+                "chaos: rebound `{device}` to {replicas}×`{network}` ({drained} drained, {downtime_ms:.1} ms outage)"
+            );
+            (network.clone(), Some(device.clone()), drained as u64, *replicas as u64, reason)
+        }
+        ChaosFault::BurstStorm { factor, len_ms, .. } => {
+            // The amplified arrivals were built into the workload; the
+            // injection only marks the storm on the journal timeline.
+            let reason = format!("chaos: burst storm ×{factor} for {len_ms:.1} ms");
+            (String::new(), None, 0, 0, reason)
+        }
+    };
+    pf.injected = true;
+    if let Some(obs) = scalers.iter().find_map(|s| s.obs()) {
+        obs.record_decision(JournalEvent {
+            t_ms,
+            kind: JournalKind::Chaos,
+            network,
+            device,
+            from_replicas: from,
+            to_replicas: to,
+            reason,
+            inputs: vec![("at_ms".to_string(), t_ms)],
+        });
+    }
+    Ok(())
+}
+
+/// Runtime state threaded through one chaos run: the production scalers,
+/// the independent SLO watcher, the sorted fault schedule, the control
+/// cadence, and the replica trajectory.
+struct Driver<'a> {
+    scalers: &'a mut [Autoscaler],
+    watcher: SloTracker,
+    faults: Vec<PendingFault>,
+    next_fault: usize,
+    next_tick: SimNs,
+    interval: SimNs,
+    decisions: Vec<ScaleDecision>,
+    trajectory: Vec<TrajectoryPoint>,
+    last_counts: BTreeMap<String, usize>,
+}
+
+impl Driver<'_> {
+    /// Record any replica-count change as a trajectory point. Unlike a
+    /// plain trace run, counts here move at fault injections too, not just
+    /// at control ticks.
+    fn note_counts(&mut self, fleet: &SimFleet) {
+        let counts = fleet.replica_counts();
+        if counts != self.last_counts {
+            let t_ms = fleet.now_ms();
+            for (net, n) in &counts {
+                if self.last_counts.get(net) != Some(n) {
+                    self.trajectory.push(TrajectoryPoint {
+                        t_ms,
+                        network: net.clone(),
+                        replicas: *n,
+                    });
+                }
+            }
+            self.last_counts = counts;
+        }
+    }
+
+    /// Inject the next scheduled fault.
+    fn inject_next(&mut self, fleet: &mut SimFleet) -> Result<()> {
+        inject(fleet, self.scalers, &mut self.faults[self.next_fault])?;
+        self.next_fault += 1;
+        self.note_counts(fleet);
+        Ok(())
+    }
+
+    /// One control tick: every scaler steps the fleet, then the
+    /// independent watcher judges SLO state and stamps any
+    /// injected-but-unrecovered fault whose whole blast radius has left
+    /// `Overloaded`.
+    fn tick(&mut self, fleet: &mut SimFleet, at: SimNs) -> Result<()> {
+        fleet.note_tick();
+        for sc in self.scalers.iter_mut() {
+            self.decisions.extend(sc.step_target(fleet)?);
+        }
+        let rows = self.watcher.observe(&fleet.stats());
+        for pf in self.faults.iter_mut() {
+            if pf.injected && pf.recovered_at.is_none() {
+                let affected: Vec<&str> = pf.affected.iter().map(|s| s.as_str()).collect();
+                if recovered(&rows, &affected) {
+                    pf.recovered_at = Some(at);
+                }
+            }
+        }
+        self.note_counts(fleet);
+        Ok(())
+    }
+
+    /// Advance the run to `t`, firing every due fault and control tick in
+    /// time order on the way (a fault scheduled at a tick instant injects
+    /// BEFORE the tick, so the controller sees the damage on the same
+    /// cadence it would live).
+    fn advance(&mut self, fleet: &mut SimFleet, t: SimNs) -> Result<()> {
+        loop {
+            let fault_at =
+                self.faults.get(self.next_fault).map(|f| f.at_ns).filter(|&a| a <= t);
+            let tick_at = if self.next_tick <= t { Some(self.next_tick) } else { None };
+            match (fault_at, tick_at) {
+                (Some(fa), ta) if ta.is_none_or(|ta| fa <= ta) => self.inject_next(fleet)?,
+                (_, Some(ta)) => {
+                    fleet.run_until(ta);
+                    self.tick(fleet, ta)?;
+                    self.next_tick += self.interval;
+                }
+                _ => return Ok(()),
+            }
+        }
+    }
+}
+
+/// Replay `trace` against `fleet` under `plan`, with the production
+/// controllers in the loop and an independent watcher tracking
+/// recovery-to-SLO per fault. See the module docs for the full contract;
+/// `policy` parameterizes the watcher (it should match the scalers' policy
+/// so "recovered" means what the controller means by healthy).
+pub fn run_chaos(
+    fleet: &mut SimFleet,
+    trace: &Trace,
+    scalers: &mut [Autoscaler],
+    policy: &SloPolicy,
+    plan: &ChaosPlan,
+    opts: &SimRunOptions,
+) -> Result<ChaosReport> {
+    let interval = ((opts.control_interval_ms.max(1e-3)) * 1e6) as SimNs;
+    let mut faults: Vec<PendingFault> = plan
+        .faults
+        .iter()
+        .map(|f| PendingFault {
+            at_ns: (f.at_ms().max(0.0) * 1e6) as SimNs,
+            affected: match f {
+                ChaosFault::KillReplica { network, .. }
+                | ChaosFault::WedgeReplica { network, .. } => vec![network.clone()],
+                ChaosFault::BurstStorm { .. } => trace_networks(trace),
+                // Device blast radii are computed at injection.
+                ChaosFault::FailDevice { .. } | ChaosFault::RebindDevice { .. } => Vec::new(),
+            },
+            fault: f.clone(),
+            injected: false,
+            recovered_at: None,
+        })
+        .collect();
+    // Stable sort: same-instant faults inject in plan order.
+    faults.sort_by_key(|f| f.at_ns);
+    let arrivals = build_arrivals(trace, plan);
+    let mut drv = Driver {
+        scalers,
+        watcher: SloTracker::new(policy.clone()),
+        faults,
+        next_fault: 0,
+        next_tick: fleet.now_ns() + interval,
+        interval,
+        decisions: Vec::new(),
+        trajectory: Vec::new(),
+        last_counts: fleet.replica_counts(),
+    };
+    let t0_ms = fleet.now_ms();
+    for (net, n) in &drv.last_counts {
+        drv.trajectory.push(TrajectoryPoint {
+            t_ms: t0_ms,
+            network: net.clone(),
+            replicas: *n,
+        });
+    }
+
+    for a in &arrivals {
+        drv.advance(fleet, a.at_ns)?;
+        fleet.run_until(a.at_ns);
+        fleet.offer_prioritized(&a.net, a.at_ns, a.priority)?;
+    }
+    // Drain: interleave remaining completions, faults, and the control
+    // cadence until the heap and the fault schedule are both exhausted
+    // (trailing faults — e.g. a rebind whose activations land after the
+    // last arrival — still inject and still get recovery tracking).
+    loop {
+        let next_fault_at = drv.faults.get(drv.next_fault).map(|f| f.at_ns);
+        let target = match (fleet.next_completion_at(), next_fault_at) {
+            (None, None) => break,
+            (Some(a), Some(b)) => a.min(b),
+            (Some(a), None) => a,
+            (None, Some(b)) => b,
+        };
+        drv.advance(fleet, target)?;
+        fleet.run_until(target);
+    }
+    // Cooldown ticks: give idle hysteresis its scale-down tail and give
+    // late faults their recovery verdicts.
+    for _ in 0..opts.cooldown_ticks {
+        let at = drv.next_tick;
+        fleet.run_until(at);
+        drv.tick(fleet, at)?;
+        drv.next_tick += interval;
+    }
+
+    let end_ns = fleet.now_ns();
+    let networks = fleet.network_stats();
+    let mut offered_tier = [0u64; Priority::COUNT];
+    let mut rejected_tier = [0u64; Priority::COUNT];
+    let mut shed_tier = [0u64; Priority::COUNT];
+    let mut completed_tier = [0u64; Priority::COUNT];
+    let mut conserved = true;
+    for n in &networks {
+        for i in 0..Priority::COUNT {
+            offered_tier[i] += n.offered_tier[i];
+            rejected_tier[i] += n.rejected_tier[i];
+            shed_tier[i] += n.shed_tier[i];
+            completed_tier[i] += n.completed_tier[i];
+            if n.offered_tier[i] != n.completed_tier[i] + n.rejected_tier[i] + n.shed_tier[i] {
+                conserved = false;
+            }
+        }
+    }
+    let fault_reports: Vec<FaultReport> = drv
+        .faults
+        .iter()
+        .map(|pf| FaultReport {
+            kind: pf.fault.kind().to_string(),
+            label: pf.fault.label(),
+            at_ms: pf.at_ns as f64 / 1e6,
+            affected: pf.affected.clone(),
+            recovered: pf.recovered_at.is_some(),
+            recovery_ms: (pf.recovered_at.unwrap_or(end_ns).saturating_sub(pf.at_ns)) as f64
+                / 1e6,
+        })
+        .collect();
+    Ok(ChaosReport {
+        seed: plan.seed,
+        batch_frac: plan.batch_frac.clamp(0.0, 1.0),
+        virtual_ms: fleet.now_ms(),
+        events: fleet.events_processed(),
+        offered: networks.iter().map(|n| n.offered).sum(),
+        admitted: networks.iter().map(|n| n.admitted).sum(),
+        rejected: networks.iter().map(|n| n.rejected).sum(),
+        shed: networks.iter().map(|n| n.shed).sum(),
+        completed: networks.iter().map(|n| n.completed).sum(),
+        offered_tier,
+        rejected_tier,
+        shed_tier,
+        completed_tier,
+        conserved,
+        faults: fault_reports,
+        networks,
+        scale_ups: drv.decisions.iter().filter(|d| d.action == ScaleAction::Up).count(),
+        scale_downs: drv.decisions.iter().filter(|d| d.action == ScaleAction::Down).count(),
+        trajectory: drv.trajectory,
+        decisions: drv
+            .decisions
+            .iter()
+            .map(|d| format!("t=+{:.3}ms {}", d.at_ms, d))
+            .collect(),
+    })
+}
+
+/// Plan-level entry point: build the fleet from a [`SpillPlan`] at its
+/// replica floors, arm the production controllers (and the telemetry plane,
+/// when `opts.obs` carries one), and run the chaos plan — the same wiring
+/// `whatif::explore`'s controlled run uses.
+pub fn run_planned_chaos(
+    spill: &SpillPlan,
+    trace: &Trace,
+    policy: &SloPolicy,
+    opts: &WhatIfOptions,
+    plan: &ChaosPlan,
+) -> Result<ChaosReport> {
+    let rows = plan_rows(spill);
+    let mut fleet = sim_fleet(&rows, opts, |row| row.min_replicas)?;
+    let mut scalers = scalers_for(&rows, None, opts, policy);
+    if let Some(obs) = &opts.obs {
+        fleet.set_telemetry(Arc::clone(obs));
+        scalers = scalers.into_iter().map(|s| s.with_obs(Arc::clone(obs))).collect();
+    }
+    run_chaos(
+        &mut fleet,
+        trace,
+        &mut scalers,
+        policy,
+        plan,
+        &SimRunOptions {
+            control_interval_ms: opts.control_interval_ms,
+            cooldown_ticks: opts.cooldown_ticks,
+        },
+    )
+}
+
+/// CLI-facing entry point (`convkit chaos`): select a platform for
+/// `demands` (with the two-device spill fallback), auto-size `scenario`
+/// against the planned replica floors, let `plan_fn` build the fault
+/// schedule from what was actually planned — the spill split names the
+/// device a `FailDevice` can target, the sized scenario's `duration_ms`
+/// anchors fault times as fractions of the run — and drive it all through
+/// [`run_planned_chaos`]. Pure function of its inputs, like
+/// `whatif::explore`.
+pub fn explore_chaos<F>(
+    demands: &[NetworkDemand],
+    registry: &ModelRegistry,
+    platforms: &[Platform],
+    scenario: &Scenario,
+    opts: &WhatIfOptions,
+    plan_fn: F,
+) -> Result<ChaosReport>
+where
+    F: FnOnce(&SpillPlan, &Scenario) -> ChaosPlan,
+{
+    let spill = select_platform_or_spill(demands, registry, platforms, opts.cap)?;
+    let sc = autosize_scenario(scenario, demands, &spill, opts)?;
+    let trace = sc.arrivals();
+    let plan = plan_fn(&spill, &sc);
+    run_planned_chaos(&spill, &trace, &opts.policy, opts, &plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::engine::SimServiceModel;
+    use super::super::workload::{Scenario, ScenarioShape};
+    use super::*;
+
+    fn fleet() -> SimFleet {
+        SimFleet::new(&[
+            SimServiceModel::new("a", 0.5, 8, 2).on_platform("dev0", 0.2),
+            SimServiceModel::new("b", 0.5, 8, 2).on_platform("dev1", 0.2),
+        ])
+        .unwrap()
+    }
+
+    fn trace() -> Trace {
+        Scenario::new(
+            ScenarioShape::Steady,
+            vec![("a".to_string(), 1.0), ("b".to_string(), 1.0)],
+            200.0,
+            100.0,
+            42,
+        )
+        .arrivals()
+    }
+
+    fn full_plan() -> ChaosPlan {
+        ChaosPlan::new(7, 0.10)
+            .with_fault(ChaosFault::WedgeReplica {
+                at_ms: 10.0,
+                network: "a".to_string(),
+                ordinal: 0,
+                stall_ms: 15.0,
+            })
+            .with_fault(ChaosFault::KillReplica { at_ms: 25.0, network: "b".to_string() })
+            .with_fault(ChaosFault::BurstStorm { at_ms: 40.0, len_ms: 20.0, factor: 3 })
+            .with_fault(ChaosFault::FailDevice { at_ms: 60.0, device: "dev1".to_string() })
+            .with_fault(ChaosFault::RebindDevice {
+                at_ms: 75.0,
+                device: "dev1".to_string(),
+                network: "b".to_string(),
+                replicas: 2,
+                downtime_ms: 5.0,
+            })
+    }
+
+    #[test]
+    fn storm_amplifies_only_its_window_and_tiers_are_seeded() {
+        let tr = trace();
+        let base = build_arrivals(&tr, &ChaosPlan::new(7, 0.10));
+        let plan = ChaosPlan::new(7, 0.10).with_fault(ChaosFault::BurstStorm {
+            at_ms: 40.0,
+            len_ms: 20.0,
+            factor: 3,
+        });
+        let stormy = build_arrivals(&tr, &plan);
+        let in_window = |a: &ChaosArrival| a.at_ns >= 40_000_000 && a.at_ns < 60_000_000;
+        let base_in = base.iter().filter(|a| in_window(a)).count();
+        let storm_in = stormy.iter().filter(|a| in_window(a)).count();
+        assert_eq!(storm_in, base_in * 3, "×3 inside the window");
+        assert_eq!(
+            stormy.len() - storm_in,
+            base.len() - base_in,
+            "arrivals outside the window are untouched"
+        );
+        // Monotone timestamps survive amplification (copies share an instant).
+        assert!(stormy.windows(2).all(|w| w[0].at_ns <= w[1].at_ns));
+        // Tier assignment is a pure function of the seed.
+        let again = build_arrivals(&tr, &plan);
+        assert!(stormy
+            .iter()
+            .zip(again.iter())
+            .all(|(x, y)| x.priority == y.priority && x.at_ns == y.at_ns && x.net == y.net));
+        assert!(stormy.iter().any(|a| a.priority == Priority::Batch));
+        assert!(stormy.iter().any(|a| a.priority == Priority::Interactive));
+    }
+
+    #[test]
+    fn chaos_run_is_byte_deterministic_and_conserves_every_tier() {
+        let tr = trace();
+        let opts = SimRunOptions { control_interval_ms: 5.0, cooldown_ticks: 4 };
+        let policy = SloPolicy::default();
+        let run = || {
+            let mut f = fleet();
+            run_chaos(&mut f, &tr, &mut [], &policy, &full_plan(), &opts).unwrap()
+        };
+        let one = run();
+        let two = run();
+        assert_eq!(one.to_json(), two.to_json(), "same plan ⇒ same bytes");
+        assert!(one.conserved, "offered == completed + rejected + shed per tier");
+        assert_eq!(one.faults.len(), 5);
+        assert_eq!(one.offered, one.completed + one.rejected + one.shed);
+        assert!(one.offered_tier[Priority::Batch.index()] > 0, "batch traffic present");
+        // The storm tripled a 20 ms window, so offered exceeds the trace.
+        assert!(one.offered > tr.len() as u64);
+        for f in &one.faults {
+            assert!(!f.affected.is_empty() || f.kind == "burst_storm");
+        }
+        // Faults land in time order regardless of plan order.
+        assert!(one.faults.windows(2).all(|w| w[0].at_ms <= w[1].at_ms));
+    }
+
+    #[test]
+    fn healthy_fleet_recovers_at_the_first_tick_after_a_wedge() {
+        let tr = trace();
+        let plan = ChaosPlan::new(1, 0.0).with_fault(ChaosFault::WedgeReplica {
+            at_ms: 10.0,
+            network: "a".to_string(),
+            ordinal: 0,
+            stall_ms: 5.0,
+        });
+        let mut f = fleet();
+        let opts = SimRunOptions { control_interval_ms: 5.0, cooldown_ticks: 4 };
+        let report =
+            run_chaos(&mut f, &tr, &mut [], &SloPolicy::default(), &plan, &opts).unwrap();
+        let fr = &report.faults[0];
+        assert_eq!(fr.kind, "wedge_replica");
+        assert_eq!(fr.affected, vec!["a".to_string()]);
+        assert!(fr.recovered, "lightly-loaded fleet is never Overloaded");
+        assert!(
+            fr.recovery_ms <= opts.control_interval_ms + 1e-9,
+            "stamped at the first tick after injection, got {} ms",
+            fr.recovery_ms
+        );
+        assert!(report.conserved);
+    }
+
+    #[test]
+    fn device_fault_records_blast_radius_at_injection() {
+        let tr = trace();
+        let plan = ChaosPlan::new(3, 0.0)
+            .with_fault(ChaosFault::FailDevice { at_ms: 30.0, device: "dev1".to_string() });
+        let mut f = fleet();
+        let report = run_chaos(
+            &mut f,
+            &tr,
+            &mut [],
+            &SloPolicy::default(),
+            &plan,
+            &SimRunOptions { control_interval_ms: 5.0, cooldown_ticks: 2 },
+        )
+        .unwrap();
+        assert_eq!(report.faults[0].affected, vec!["b".to_string()]);
+        assert!(report.conserved, "drained replicas still complete admitted work");
+        // `b` lost every replica at 30 ms; later offers are rejected, not lost.
+        let b = report.networks.iter().find(|n| n.network == "b").unwrap();
+        assert!(b.rejected > 0, "offers to a dead network are rejected");
+        assert_eq!(b.offered, b.completed + b.rejected + b.shed);
+    }
+
+    #[test]
+    fn report_json_shape_is_stable() {
+        let tr = trace();
+        let mut f = fleet();
+        let report = run_chaos(
+            &mut f,
+            &tr,
+            &mut [],
+            &SloPolicy::default(),
+            &ChaosPlan::new(5, 0.25),
+            &SimRunOptions::default(),
+        )
+        .unwrap();
+        let json = report.to_json();
+        assert!(json.starts_with("{\n  \"chaos\": {\n"));
+        for key in [
+            "\"seed\": 5",
+            "\"batch_frac\": 0.250",
+            "\"offered_tier\": [",
+            "\"conserved\": true",
+            "\"faults\": [",
+            "\"networks\": [",
+            "\"decisions\": [",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+    }
+}

@@ -53,12 +53,32 @@
 //! and `observe` synthesizes the same [`ShardedStats`] rows the live stats
 //! plane produces — so SLO windows, hysteresis and budget checks behave
 //! identically in rehearsal and in production.
+//!
+//! ## Priority tiers & fault injection
+//!
+//! Requests carry a [`Priority`] tier, mirrored from the live coordinator:
+//! each replica keeps per-tier FIFO queues drained by the SAME
+//! deficit-round-robin [`WfqState`] the live worker's carry runs, and batch
+//! admission is capped at [`batch_queue_share`] of the replica cap — batch
+//! work past its share is turned away as [`Admission::Shed`] (accounted
+//! separately from `Rejected`, which remains the fleet-too-small overload
+//! signal). [`SimFleet::offer`] defaults to interactive, so single-tier
+//! runs are byte-identical to the pre-tier engine. Fault injection rides
+//! the same virtual clock: [`SimFleet::fail_device`] /
+//! [`SimFleet::rebind_device`] model outages, and
+//! [`SimFleet::wedge_replica`] models a wedged worker — new dispatches on
+//! the stalled replica defer until the wake time while `stats()` stays an
+//! instant memory read, exactly the live stale-stats behavior
+//! (`simulate::chaos` schedules these into seeded plans).
 
 use super::clock::{EventHeap, SimNs, VirtualClock};
 use super::workload::Trace;
 use crate::coordinator::service::ServiceStats;
 use crate::coordinator::shard::aggregate;
-use crate::coordinator::{CoalescePolicy, Router, ShardSpec, ShardStats, ShardedStats};
+use crate::coordinator::{
+    batch_queue_share, CoalescePolicy, Priority, Router, ShardSpec, ShardStats, ShardedStats,
+    WfqState,
+};
 use crate::fleetplan::{Autoscaler, ScaleDecision, ScaleTarget};
 use crate::obs::trace::{pack, UNTRACED};
 use crate::obs::{ModelExpectation, Sink, SpanEvent, SpanKind, SpanScope, Stage, Telemetry};
@@ -208,11 +228,20 @@ struct SimReplica {
     /// attribution and [`crate::obs::drift::DriftMonitor::ingest`] work
     /// identically on both planes.
     scope: Option<SpanScope>,
-    /// `(arrival time, trace id)` of admitted requests waiting for a batch
+    /// `(arrival time, trace id)` of admitted requests waiting for a
+    /// batch, one FIFO per [`Priority`] tier
     /// ([`crate::obs::trace::UNTRACED`] when the fleet is unobserved).
-    queue: VecDeque<(SimNs, u32)>,
-    /// `(arrival time, trace id)` of the batch in service (empty = idle).
-    in_flight: Vec<(SimNs, u32)>,
+    queues: [VecDeque<(SimNs, u32)>; Priority::COUNT],
+    /// Deficit-round-robin state draining `queues` — the SAME weighted
+    /// fair queueing law the live worker's carry runs.
+    wfq: WfqState,
+    /// Virtual time a wedged-worker stall clears (0 = healthy): while
+    /// `now < wedged_until` NEW dispatches defer to the wake time, but the
+    /// in-flight batch completes and `stats()` stays instant.
+    wedged_until: SimNs,
+    /// `(arrival time, trace id, tier)` of the batch in service
+    /// (empty = idle).
+    in_flight: Vec<(SimNs, u32, Priority)>,
     /// Virtual time the open coalescing window started (deadlines extend
     /// from here as the backlog grows, never from "now").
     window_opened_at: SimNs,
@@ -236,7 +265,12 @@ impl SimReplica {
     /// Admitted-but-incomplete requests (queued + in service) — the live
     /// shard's slot accounting, where a slot frees at *completion*.
     fn outstanding(&self) -> usize {
-        self.queue.len() + self.in_flight.len()
+        self.queued() + self.in_flight.len()
+    }
+
+    /// Requests waiting for a batch, across both tiers.
+    fn queued(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
     }
 
     fn record_latency(&mut self, ns: u64) {
@@ -249,12 +283,16 @@ impl SimReplica {
     }
 }
 
-/// All-time per-network accounting for the final capacity report.
+/// All-time per-network accounting for the final capacity report, kept
+/// per [`Priority`] tier (index = `Priority::index()`); network totals are
+/// the sums. The conservation law the chaos harness pins:
+/// `offered == completed + rejected + shed` per tier, after a drain.
 #[derive(Debug, Clone, Default)]
 struct NetTotals {
-    offered: u64,
-    rejected: u64,
-    completed: u64,
+    offered: [u64; Priority::COUNT],
+    rejected: [u64; Priority::COUNT],
+    shed: [u64; Priority::COUNT],
+    completed: [u64; Priority::COUNT],
     lat_ns: Vec<u64>,
 }
 
@@ -280,6 +318,11 @@ pub enum Admission {
     },
     /// Every replica of the network was at its cap.
     Rejected,
+    /// Batch-tier request turned away with every replica past
+    /// [`batch_queue_share`] of its cap: the fleet is protecting
+    /// interactive headroom, NOT undersized — shed is accounted apart from
+    /// `Rejected` so the SLO overload signal stays interactive-only.
+    Shed,
 }
 
 /// Per-network roll-up of a finished (or running) simulation.
@@ -287,16 +330,28 @@ pub enum Admission {
 pub struct SimNetStats {
     /// Network name.
     pub network: String,
-    /// Requests offered (admitted + rejected).
+    /// Requests offered (admitted + rejected + shed).
     pub offered: u64,
     /// Requests admitted.
     pub admitted: u64,
-    /// Requests turned away with every replica at cap.
+    /// Requests turned away with every replica at cap (interactive tier —
+    /// the fleet-too-small overload signal).
     pub rejected: u64,
+    /// Batch-tier requests turned away past [`batch_queue_share`] of every
+    /// cap (the fleet protecting interactive headroom; NOT overload).
+    pub shed: u64,
     /// Requests completed (admitted ones still in queue at the end of a
     /// run are drained by the runner, so this equals `admitted` then).
     pub completed: u64,
-    /// rejected / offered.
+    /// `offered` split by [`Priority`] tier (index = `Priority::index()`).
+    pub offered_tier: [u64; Priority::COUNT],
+    /// `rejected` split by tier.
+    pub rejected_tier: [u64; Priority::COUNT],
+    /// `shed` split by tier (only the batch slot can be nonzero).
+    pub shed_tier: [u64; Priority::COUNT],
+    /// `completed` split by tier.
+    pub completed_tier: [u64; Priority::COUNT],
+    /// rejected / offered (shed excluded by design).
     pub overload_rate: f64,
     /// Mean completion latency (virtual ms, all-time).
     pub mean_ms: f64,
@@ -502,7 +557,9 @@ impl SimFleet {
             device,
             util_frac,
             scope,
-            queue: VecDeque::new(),
+            queues: [VecDeque::new(), VecDeque::new()],
+            wfq: WfqState::new(),
+            wedged_until: 0,
             in_flight: Vec::new(),
             window_opened_at: 0,
             dispatch_at: None,
@@ -624,13 +681,33 @@ impl SimFleet {
     fn dispatch(&mut self, idx: usize, now: SimNs) {
         let factor = self.contention_factor(idx);
         let r = &mut self.replicas[idx];
+        if now < r.wedged_until {
+            // Wedged worker: the batch that would form now defers to the
+            // wake time. Re-arm through the `dispatch_at` guard so any
+            // earlier deadline still in the heap goes stale.
+            let wake = r.wedged_until;
+            r.dispatch_at = Some(wake);
+            let id = r.id;
+            self.heap.push(wake, SimEvent::Dispatch { replica_id: id });
+            return;
+        }
         r.dispatch_at = None;
-        let b = r.queue.len().min(r.policy.max_batch);
+        let b = r.queued().min(r.policy.max_batch);
         if b == 0 {
             return;
         }
         r.in_flight.clear();
-        r.in_flight.extend(r.queue.drain(..b));
+        // Weighted fair selection across tiers, FIFO within each — the
+        // same `WfqState` law the live worker's carry runs, so a mixed
+        // backlog forms the identical batch on both planes.
+        for _ in 0..b {
+            let nonempty =
+                [!r.queues[0].is_empty(), !r.queues[1].is_empty()];
+            let p = r.wfq.pick(nonempty).expect("b > 0: some tier is nonempty");
+            let (arrived, tid) =
+                r.queues[p.index()].pop_front().expect("picked tier is nonempty");
+            r.in_flight.push((arrived, tid, p));
+        }
         r.batches += 1;
         r.dispatched_at = now;
         // Same per-batch emission as the live worker: the window closes,
@@ -640,7 +717,7 @@ impl SimFleet {
         emit_span(&r.scope, &self.sink, now, SpanKind::WindowClose, b as u64);
         emit_stage(&r.scope, &self.sink, Stage::Coalesce, now.saturating_sub(r.window_opened_at));
         emit_span(&r.scope, &self.sink, now, SpanKind::BatchStart, b as u64);
-        for &(arrived, _) in &r.in_flight {
+        for &(arrived, _, _) in &r.in_flight {
             emit_stage(&r.scope, &self.sink, Stage::QueueWait, now.saturating_sub(arrived));
         }
         let base = r.policy.batch_ns(b as u64);
@@ -663,7 +740,7 @@ impl SimFleet {
         // window will close instantly, so per-batch span counts match.
         r.window_opened_at = now;
         emit_span(&r.scope, &self.sink, now, SpanKind::WindowOpen, 1);
-        let w = r.policy.window_ns(r.queue.len());
+        let w = r.policy.window_ns(r.queued());
         if w == 0 {
             self.dispatch(idx, now);
         } else {
@@ -706,9 +783,9 @@ impl SimFleet {
         }
         let (net, batch, remove, dispatched_at) = {
             let r = &mut self.replicas[idx];
-            let batch: Vec<(SimNs, u32)> = std::mem::take(&mut r.in_flight);
+            let batch: Vec<(SimNs, u32, Priority)> = std::mem::take(&mut r.in_flight);
             r.served += batch.len() as u64;
-            for &(arrived, _) in &batch {
+            for &(arrived, _, _) in &batch {
                 r.record_latency((at - arrived).max(1));
             }
             (r.net as usize, batch, r.draining && r.outstanding() == 0, r.dispatched_at)
@@ -720,19 +797,19 @@ impl SimFleet {
             // One guard-release per rider, as each live reply path frees its
             // admission slot — packed with the rider's trace id so
             // `obs::trace::assemble` can close the request.
-            for &(_, tid) in &batch {
+            for &(_, tid, _) in &batch {
                 emit_span(scope, &self.sink, at, SpanKind::GuardRelease, pack(tid, 0));
             }
         }
         let t = &mut self.totals[net];
-        for (arrived, _) in batch {
-            t.completed += 1;
+        for (arrived, _, p) in batch {
+            t.completed[p.index()] += 1;
             t.lat_ns.push((at - arrived).max(1));
         }
         if remove {
             self.replicas.remove(idx);
             self.rebuild_routing();
-        } else if !self.replicas[idx].queue.is_empty() {
+        } else if self.replicas[idx].queued() > 0 {
             // Backlog absorbed at completion is owed `window_ns(backlog)`
             // from this instant — the live worker drains the channel and
             // only then opens a deadline for MORE arrivals. A full (or
@@ -741,27 +818,54 @@ impl SimFleet {
         }
     }
 
+    /// Offer one interactive request to `network`'s bounded admission at
+    /// virtual time `at` — [`SimFleet::offer_prioritized`] with
+    /// [`Priority::Interactive`], the pre-tier engine's exact behavior.
+    pub fn offer(&mut self, network: &str, at: SimNs) -> Result<Admission> {
+        self.offer_prioritized(network, at, Priority::Interactive)
+    }
+
     /// Offer one request to `network`'s bounded admission at virtual time
     /// `at`: due service events are processed first, then the replicas are
     /// tried in load order (fewest outstanding, lowest fleet index on ties
-    /// — the live `try_submit` fallback walk), and `Rejected` is returned
-    /// only when EVERY replica is at cap, charging one rejection to the
-    /// preferred replica.
-    pub fn offer(&mut self, network: &str, at: SimNs) -> Result<Admission> {
+    /// — the live `try_submit` fallback walk). The tier sets the cap it is
+    /// admitted under, exactly the live shard's `try_acquire` law:
+    /// interactive uses the full replica cap and is `Rejected` only when
+    /// EVERY replica is at it (one rejection charged to the preferred
+    /// replica) — or when none is routable at all, a device outage mid
+    /// rebind or chaos run; batch is admitted only below
+    /// [`batch_queue_share`] of each cap and is `Shed` past every share.
+    pub fn offer_prioritized(
+        &mut self,
+        network: &str,
+        at: SimNs,
+        priority: Priority,
+    ) -> Result<Admission> {
         self.run_until(at);
         self.events += 1;
         let net = self.networks.iter().position(|n| n == network).ok_or_else(|| {
             Error::Usage(format!("no simulated replica serves network `{network}`"))
         })? as usize;
-        self.totals[net].offered += 1;
+        self.totals[net].offered[priority.index()] += 1;
         let replicas = &self.replicas;
         let routable = &self.routable;
-        let order =
-            self.router.route_all_by(network, |ri| replicas[routable[ri]].outstanding())?;
+        // A known network can be momentarily unrouted (device outage,
+        // rebind downtime): the offer is then the admission failure
+        // itself, not a usage error — the empty order falls through to the
+        // tier's rejection/shed arm exactly as if every replica were at
+        // cap.
+        let order = self
+            .router
+            .route_all_by(network, |ri| replicas[routable[ri]].outstanding())
+            .unwrap_or_default();
         for &ri in &order {
             let idx = self.routable[ri];
             let r = &mut self.replicas[idx];
-            if r.outstanding() < r.queue_cap {
+            let cap = match priority {
+                Priority::Interactive => r.queue_cap,
+                Priority::Batch => batch_queue_share(r.queue_cap),
+            };
+            if r.outstanding() < cap {
                 // Trace id from the plane-wide counter, exactly as the live
                 // shard allocates at admission; UNTRACED (0) when the fleet
                 // is unobserved, which `pack` passes through untouched.
@@ -769,7 +873,7 @@ impl SimFleet {
                     Some(t) => t.next_trace_id(),
                     None => UNTRACED,
                 };
-                r.queue.push_back((at, tid));
+                r.queues[priority.index()].push_back((at, tid));
                 let ordinal = r.replica;
                 // Admission spans in the live shard's order: Route (chosen
                 // ordinal), then Enqueue (outstanding after the push) —
@@ -792,7 +896,7 @@ impl SimFleet {
                         // (monotone in the backlog, so it never moves
                         // earlier; the superseded event goes stale).
                         Some(current) => {
-                            let queued = r.queue.len();
+                            let queued = r.queued();
                             if queued >= r.policy.max_batch {
                                 self.dispatch(idx, at);
                             } else {
@@ -812,17 +916,70 @@ impl SimFleet {
                 return Ok(Admission::Admitted { replica: ordinal });
             }
         }
-        if let Some(&first) = order.first() {
-            self.replicas[self.routable[first]].rejected += 1;
+        match priority {
+            Priority::Interactive => {
+                if let Some(&first) = order.first() {
+                    self.replicas[self.routable[first]].rejected += 1;
+                }
+                self.totals[net].rejected[priority.index()] += 1;
+                Ok(Admission::Rejected)
+            }
+            // Batch past every replica's share is shed, never rejected —
+            // the live shard's `note_shed`, kept out of the per-replica
+            // `rejected` counter the SLO tracker reads as overload.
+            Priority::Batch => {
+                self.totals[net].shed[priority.index()] += 1;
+                Ok(Admission::Shed)
+            }
         }
-        self.totals[net].rejected += 1;
-        Ok(Admission::Rejected)
+    }
+
+    /// Wedge `network`'s replica `ordinal` until virtual time `until`: a
+    /// stalled worker whose in-flight batch still completes, whose queues
+    /// stop draining (new dispatches defer to the wake), and whose
+    /// `stats()` row stays an instant memory read — the live wedged-worker
+    /// stale-stats behavior, on the virtual clock. Extends (never
+    /// shortens) an existing stall. Returns false when no such replica
+    /// exists.
+    pub fn wedge_replica(&mut self, network: &str, ordinal: usize, until: SimNs) -> bool {
+        let Some(net) = self.networks.iter().position(|n| n == network) else {
+            return false;
+        };
+        let net = net as u32;
+        for r in &mut self.replicas {
+            if r.net == net && r.replica == ordinal {
+                r.wedged_until = r.wedged_until.max(until);
+                return true;
+            }
+        }
+        false
     }
 
     /// Count one control tick as a virtual event (the runner calls this at
     /// every controller invocation so "events" covers the whole run).
     pub fn note_tick(&mut self) {
         self.events += 1;
+    }
+
+    /// Distinct (sorted) network names with a routable replica on `device`
+    /// — the blast radius the chaos harness records for a device fault
+    /// before applying it.
+    pub fn networks_on_device(&self, device: &str) -> Vec<String> {
+        let Some(d) = self.devices.iter().position(|x| x == device) else {
+            return Vec::new();
+        };
+        let d = d as u32;
+        let mut out: Vec<String> = Vec::new();
+        for r in &self.replicas {
+            if r.device == Some(d) && !r.draining {
+                let name = &self.networks[r.net as usize];
+                if !out.contains(name) {
+                    out.push(name.clone());
+                }
+            }
+        }
+        out.sort();
+        out
     }
 
     /// Take every replica on `device` out of service *drain-safely*: each is
@@ -956,16 +1113,24 @@ impl SimFleet {
                 let t = &self.totals[i];
                 let (mean_ns, p95_ns) = window_mean_p95(&t.lat_ns);
                 let (mean_ms, p95_ms) = (mean_ns / 1e6, p95_ns as f64 / 1e6);
+                let offered: u64 = t.offered.iter().sum();
+                let rejected: u64 = t.rejected.iter().sum();
+                let shed: u64 = t.shed.iter().sum();
                 SimNetStats {
                     network: self.networks[i].clone(),
-                    offered: t.offered,
-                    admitted: t.offered - t.rejected,
-                    rejected: t.rejected,
-                    completed: t.completed,
-                    overload_rate: if t.offered == 0 {
+                    offered,
+                    admitted: offered - rejected - shed,
+                    rejected,
+                    shed,
+                    completed: t.completed.iter().sum(),
+                    offered_tier: t.offered,
+                    rejected_tier: t.rejected,
+                    shed_tier: t.shed,
+                    completed_tier: t.completed,
+                    overload_rate: if offered == 0 {
                         0.0
                     } else {
-                        t.rejected as f64 / t.offered as f64
+                        rejected as f64 / offered as f64
                     },
                     mean_ms,
                     p95_ms,
@@ -1111,8 +1276,10 @@ pub struct SimRun {
     pub offered: u64,
     /// Requests admitted.
     pub admitted: u64,
-    /// Requests rejected at admission.
+    /// Requests rejected at admission (interactive overload).
     pub rejected: u64,
+    /// Batch-tier requests shed at admission (interactive protection).
+    pub shed: u64,
     /// Requests completed.
     pub completed: u64,
     /// Virtual end time of the run (ms).
@@ -1205,11 +1372,13 @@ pub fn simulate_trace(
     }
 
     let networks = fleet.network_stats();
-    let (mut offered, mut admitted, mut rejected, mut completed) = (0u64, 0u64, 0u64, 0u64);
+    let (mut offered, mut admitted, mut rejected, mut shed, mut completed) =
+        (0u64, 0u64, 0u64, 0u64, 0u64);
     for n in &networks {
         offered += n.offered;
         admitted += n.admitted;
         rejected += n.rejected;
+        shed += n.shed;
         completed += n.completed;
     }
     Ok(SimRun {
@@ -1217,6 +1386,7 @@ pub fn simulate_trace(
         offered,
         admitted,
         rejected,
+        shed,
         completed,
         virtual_ms: fleet.now_ms(),
         networks,
@@ -1418,6 +1588,88 @@ mod tests {
         let s = f.stats();
         assert_eq!(s.shards[0].rejected, 1, "charged to the preferred replica");
         assert_eq!(s.shards[1].rejected, 0);
+    }
+
+    #[test]
+    fn batch_tier_is_shed_past_its_queue_share() {
+        // Cap 4 → batch share max(1, 4/4) = 1; nothing ever completes, so
+        // admission outcomes are purely the tiered-cap law.
+        let mut f = SimFleet::new(&[SimServiceModel {
+            service_ns: u64::MAX / 4,
+            ..SimServiceModel::new("a", 1.0, 4, 1)
+        }])
+        .unwrap();
+        assert_eq!(
+            f.offer_prioritized("a", 0, Priority::Batch).unwrap(),
+            Admission::Admitted { replica: 0 }
+        );
+        assert_eq!(f.offer_prioritized("a", 1, Priority::Batch).unwrap(), Admission::Shed);
+        for t in 2..5 {
+            assert_eq!(
+                f.offer_prioritized("a", t, Priority::Interactive).unwrap(),
+                Admission::Admitted { replica: 0 },
+                "interactive rides the full cap"
+            );
+        }
+        assert_eq!(
+            f.offer_prioritized("a", 5, Priority::Interactive).unwrap(),
+            Admission::Rejected
+        );
+        let ns = &f.network_stats()[0];
+        assert_eq!((ns.offered, ns.admitted, ns.rejected, ns.shed), (6, 4, 1, 1));
+        assert_eq!(ns.offered_tier, [4, 2]);
+        assert_eq!(ns.rejected_tier, [1, 0]);
+        assert_eq!(ns.shed_tier, [0, 1]);
+        assert!((ns.overload_rate - 1.0 / 6.0).abs() < 1e-12, "shed is NOT overload");
+        // Only the interactive rejection is charged to the replica row the
+        // SLO tracker reads; the shed batch request is not.
+        assert_eq!(f.stats().shards[0].rejected, 1);
+    }
+
+    #[test]
+    fn wedged_replica_defers_dispatch_but_stats_stay_instant() {
+        let mut f = SimFleet::new(&[SimServiceModel::new("a", 1.0, 8, 1)]).unwrap();
+        assert!(f.wedge_replica("a", 0, 5_000_000));
+        assert!(!f.wedge_replica("ghost", 0, 1), "unknown network is a no-op");
+        assert!(!f.wedge_replica("a", 7, 1), "unknown ordinal is a no-op");
+        f.offer("a", 0).unwrap();
+        // The wedged worker admits but does not dispatch — and the stats
+        // plane still answers instantly from the queue counters, exactly
+        // the live stats()-stays-instant behavior under a stalled worker.
+        let s = f.stats();
+        assert_eq!(s.shards[0].queue_depth, 1);
+        assert_eq!(s.shards[0].service.requests, 0);
+        f.run_until(4_999_999);
+        assert_eq!(f.network_stats()[0].completed, 0, "stalled through the wedge");
+        f.drain();
+        assert_eq!(f.network_stats()[0].completed, 1, "the backlog survives the stall");
+        assert!((f.now_ms() - 6.0).abs() < 1e-9, "wake at 5 ms + 1 ms service");
+    }
+
+    #[test]
+    fn dispatch_serves_mixed_backlog_in_wfq_order() {
+        // Wedge the lone replica so a mixed backlog accumulates, then let
+        // the serial (max_batch 1) drain reveal the pick order: weights
+        // 3:1 over queues I=[2 reqs], B=[1 req] serve I, I, B.
+        let mut f = SimFleet::new(&[SimServiceModel::new("a", 1.0, 8, 1)]).unwrap();
+        assert!(f.wedge_replica("a", 0, 1_000_000));
+        assert_eq!(
+            f.offer_prioritized("a", 0, Priority::Batch).unwrap(),
+            Admission::Admitted { replica: 0 }
+        );
+        for _ in 0..2 {
+            assert_eq!(
+                f.offer_prioritized("a", 0, Priority::Interactive).unwrap(),
+                Admission::Admitted { replica: 0 }
+            );
+        }
+        f.run_until(2_000_000);
+        assert_eq!(f.network_stats()[0].completed_tier, [1, 0], "interactive first");
+        f.run_until(3_000_000);
+        assert_eq!(f.network_stats()[0].completed_tier, [2, 0]);
+        f.drain();
+        assert_eq!(f.network_stats()[0].completed_tier, [2, 1]);
+        assert!((f.now_ms() - 4.0).abs() < 1e-9, "wake at 1 ms + 3 serial services");
     }
 
     #[test]

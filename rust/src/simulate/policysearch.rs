@@ -19,17 +19,25 @@
 //! * **replica-seconds** — the trajectory's ∫ replicas dt cost,
 //!
 //! and marks the policies no other policy beats on every axis
-//! ([`pareto_front`]). Everything is a pure function of
+//! ([`pareto_front`]). [`search_chaos`] runs the same sweep with a seeded
+//! [`ChaosPlan`] injected into every run — replica kills, wedged workers,
+//! device outages, burst storms — and scores two extra axes: worst
+//! **recovery-to-SLO** per fault and batch/interactive **tier fairness**,
+//! so the front trades resilience against fleet cost, not just latency.
+//! Everything is a pure function of
 //! `(scenario, seed, registry, grid, options)`, so the report JSON is
 //! byte-identical across runs and CI archives and diffs it like
 //! `SIM_capacity.json`. Surfaces: `convkit policysearch`,
 //! [`crate::report::pareto_table`].
 
+use super::chaos::{run_planned_chaos, ChaosPlan};
 use super::whatif::{
     autosize_scenario, json_escape, plan_rows, run_controlled, WhatIfOptions,
 };
 use super::workload::Scenario;
-use crate::fleetplan::{select_platform_or_spill, NetworkDemand, ScaleAction, SloPolicy};
+use crate::fleetplan::{
+    select_platform_or_spill, NetworkDemand, ScaleAction, SloPolicy, SpillPlan,
+};
 use crate::models::ModelRegistry;
 use crate::platform::Platform;
 use crate::simulate::TrajectoryPoint;
@@ -117,6 +125,13 @@ pub struct PolicyScore {
     pub scale_ups: usize,
     /// Scale-down decisions taken.
     pub scale_downs: usize,
+    /// Worst recovery-to-SLO over the run's injected faults (virtual ms) —
+    /// 0 for a plain (fault-free) search, where the axis is inert.
+    pub recovery_ms: f64,
+    /// Batch-tier completion rate relative to interactive, in `[0, 1]`
+    /// (`ChaosReport::tier_fairness`) — 1 for a plain search, where every
+    /// request is interactive and the axis is inert.
+    pub tier_fairness: f64,
     /// On the Pareto front (no other row is at least as good on every
     /// objective and strictly better on one).
     pub pareto: bool,
@@ -165,8 +180,14 @@ impl PolicySearchReport {
     ///      "idle_queue_util": 0.050, "window": 2,
     ///      "sustained_qps": 1200.0, "p95_ms": 0.012345,
     ///      "reject_rate": 0.001000, "replica_seconds": 12.345,
-    ///      "scale_ups": 3, "scale_downs": 2, "pareto": true}]}}
+    ///      "scale_ups": 3, "scale_downs": 2,
+    ///      "recovery_ms": 0.000, "tier_fairness": 1.0000,
+    ///      "pareto": true}]}}
     /// ```
+    ///
+    /// `recovery_ms` and `tier_fairness` are live axes only for
+    /// [`search_chaos`] sweeps; plain [`search`] rows pin them to their
+    /// inert values (0 / 1) so both report kinds share one schema.
     ///
     /// `front` lists the indices of `rows` on the Pareto front; row order
     /// is the grid's nested iteration order.
@@ -201,7 +222,9 @@ impl PolicySearchReport {
                  \"idle_queue_util\": {:.3}, \"window\": {}, \
                  \"sustained_qps\": {:.1}, \"p95_ms\": {:.6}, \
                  \"reject_rate\": {:.6}, \"replica_seconds\": {:.3}, \
-                 \"scale_ups\": {}, \"scale_downs\": {}, \"pareto\": {}}}{}\n",
+                 \"scale_ups\": {}, \"scale_downs\": {}, \
+                 \"recovery_ms\": {:.3}, \"tier_fairness\": {:.4}, \
+                 \"pareto\": {}}}{}\n",
                 r.policy.overload_target,
                 r.policy.p95_ratio,
                 r.policy.idle_queue_util,
@@ -212,6 +235,8 @@ impl PolicySearchReport {
                 r.replica_seconds,
                 r.scale_ups,
                 r.scale_downs,
+                r.recovery_ms,
+                r.tier_fairness,
                 r.pareto,
                 if i + 1 == self.rows.len() { "" } else { "," }
             ));
@@ -310,30 +335,111 @@ pub fn search(
             replica_seconds: replica_seconds(&run.trajectory, run.virtual_ms),
             scale_ups,
             scale_downs,
+            recovery_ms: 0.0,
+            tier_fairness: 1.0,
             pareto: false,
         });
     }
+    mark_front(&mut rows);
+    Ok(assemble_report(&spill, &sc, trace.len(), opts.cap, rows))
+}
 
-    // Objectives as a minimization problem: −QPS, p95, rejects, cost.
+/// Sweep `grid` as [`search`] does, but inject `plan`'s fault schedule into
+/// every run ([`run_planned_chaos`]): each policy faces the identical seeded
+/// chaos — replica kills, wedged workers, device outages and rebinds, burst
+/// storms — on the identical trace, and two extra objectives go live:
+/// worst recovery-to-SLO across the injected faults and batch/interactive
+/// tier fairness. The report stays byte-deterministic, so CI can archive a
+/// resilience front next to the plain one.
+pub fn search_chaos(
+    demands: &[NetworkDemand],
+    registry: &ModelRegistry,
+    platforms: &[Platform],
+    scenario: &Scenario,
+    grid: &PolicyGrid,
+    opts: &WhatIfOptions,
+    plan: &ChaosPlan,
+) -> Result<PolicySearchReport> {
+    if grid.is_empty() {
+        return Err(Error::InvalidConfig(
+            "policy grid is empty: every axis needs at least one value".into(),
+        ));
+    }
+    let spill = select_platform_or_spill(demands, registry, platforms, opts.cap)?;
+    let sc = autosize_scenario(scenario, demands, &spill, opts)?;
+    let trace = sc.arrivals();
+    if trace.is_empty() {
+        return Err(Error::InvalidConfig("policy search trace has no arrivals".into()));
+    }
+
+    let mut rows = Vec::with_capacity(grid.len());
+    for policy in grid.policies(&opts.policy) {
+        let report = run_planned_chaos(&spill, &trace, &policy, opts, plan)?;
+        let virtual_s = (report.virtual_ms / 1e3).max(1e-9);
+        let p95_ms = report.networks.iter().map(|n| n.p95_ms).fold(0.0f64, f64::max);
+        let reject_rate = if report.offered == 0 {
+            0.0
+        } else {
+            report.rejected as f64 / report.offered as f64
+        };
+        rows.push(PolicyScore {
+            policy,
+            sustained_qps: report.completed as f64 / virtual_s,
+            p95_ms,
+            reject_rate,
+            replica_seconds: replica_seconds(&report.trajectory, report.virtual_ms),
+            scale_ups: report.scale_ups,
+            scale_downs: report.scale_downs,
+            recovery_ms: report.worst_recovery_ms(),
+            tier_fairness: report.tier_fairness(),
+            pareto: false,
+        });
+    }
+    mark_front(&mut rows);
+    Ok(assemble_report(&spill, &sc, trace.len(), opts.cap, rows))
+}
+
+/// Flag the Pareto front over the six scored objectives, all as
+/// minimizations: −QPS, p95, reject rate, replica-seconds, recovery time,
+/// 1 − fairness. The chaos-only axes are inert constants in plain-search
+/// rows (0 and 1 respectively), so they never decide dominance there.
+fn mark_front(rows: &mut [PolicyScore]) {
     let points: Vec<Vec<f64>> = rows
         .iter()
-        .map(|r| vec![-r.sustained_qps, r.p95_ms, r.reject_rate, r.replica_seconds])
+        .map(|r| {
+            vec![
+                -r.sustained_qps,
+                r.p95_ms,
+                r.reject_rate,
+                r.replica_seconds,
+                r.recovery_ms,
+                1.0 - r.tier_fairness,
+            ]
+        })
         .collect();
     for (row, flag) in rows.iter_mut().zip(pareto_front(&points)) {
         row.pareto = flag;
     }
+}
 
-    let hosts = plan_rows(&spill);
-    Ok(PolicySearchReport {
+fn assemble_report(
+    spill: &SpillPlan,
+    sc: &Scenario,
+    arrivals: usize,
+    cap: f64,
+    rows: Vec<PolicyScore>,
+) -> PolicySearchReport {
+    let hosts = plan_rows(spill);
+    PolicySearchReport {
         scenario: sc.shape.name().to_string(),
         seed: sc.seed,
         platform: hosts[0].1.clone(),
         spill_platform: hosts.get(1).map(|(_, h)| h.clone()),
-        cap: opts.cap,
+        cap,
         qps: sc.qps,
-        arrivals: trace.len() as u64,
+        arrivals: arrivals as u64,
         rows,
-    })
+    }
 }
 
 #[cfg(test)]
@@ -378,6 +484,29 @@ mod tests {
         // a: 1×1s + 3×1s = 4; b: 2×2s = 4.
         let got = replica_seconds(&traj, 2000.0);
         assert!((got - 8.0).abs() < 1e-9, "{got}");
+    }
+
+    #[test]
+    fn mark_front_scores_recovery_and_fairness_as_live_axes() {
+        let row = |recovery_ms: f64, tier_fairness: f64| PolicyScore {
+            policy: SloPolicy::default(),
+            sustained_qps: 100.0,
+            p95_ms: 1.0,
+            reject_rate: 0.0,
+            replica_seconds: 10.0,
+            scale_ups: 0,
+            scale_downs: 0,
+            recovery_ms,
+            tier_fairness,
+            pareto: false,
+        };
+        // Identical on the four plain axes; chaos axes decide dominance.
+        let mut rows = vec![row(5.0, 1.0), row(50.0, 1.0), row(5.0, 0.5)];
+        mark_front(&mut rows);
+        let flags: Vec<bool> = rows.iter().map(|r| r.pareto).collect();
+        // Row 1 recovers slower at equal fairness → dominated by row 0;
+        // row 2 is less fair at equal recovery → also dominated by row 0.
+        assert_eq!(flags, vec![true, false, false]);
     }
 
     #[test]

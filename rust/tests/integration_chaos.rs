@@ -1,0 +1,369 @@
+//! Chaos + priority-tier integration: the live worker's weighted-fair drain
+//! against the `wfq_schedule` reference interpreter, live/sim telemetry
+//! parity under a wedged worker, the full fault-injection loop with the
+//! production autoscaler in control, and the overload shed/starvation laws.
+//!
+//! These tests pin the contracts `simulate/chaos.rs` builds on: the sim is
+//! only a trustworthy chaos rig because the live stack provably drains,
+//! sheds, and emits spans the same way the virtual clock does.
+
+use convkit::coordinator::service::{BatchExecutor, InferenceService};
+use convkit::coordinator::{
+    batch_queue_share, wfq_schedule, CoalescePolicy, Priority, Shard, ShardSpec,
+};
+use convkit::fleetplan::{Autoscaler, FleetPlan, NetworkPlan, SloPolicy};
+use convkit::obs::Telemetry;
+use convkit::platform::Platform;
+use convkit::simulate::{
+    run_chaos, Admission, ChaosFault, ChaosPlan, ChaosReport, Scenario, ScenarioShape, SimFleet,
+    SimRunOptions, SimServiceModel, Trace,
+};
+use convkit::synth::ResourceVector;
+use convkit::util::error::Result;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+/// A gated executor that records the first pixel of every image it serves,
+/// in service order — the probe that makes the worker's WFQ drain order
+/// observable. `entered` fires on entry to every batch so tests can
+/// synchronize with the worker deterministically.
+struct RecordingGatedExecutor {
+    gate: mpsc::Receiver<()>,
+    entered: mpsc::Sender<()>,
+    seen: Arc<Mutex<Vec<i32>>>,
+}
+
+impl BatchExecutor for RecordingGatedExecutor {
+    fn infer_batch(&mut self, images: &[Arc<[i32]>]) -> Result<Vec<Vec<i32>>> {
+        let _ = self.entered.send(());
+        // A closed gate (test tore down early) just lets the batch through.
+        let _ = self.gate.recv();
+        let mut seen = self.seen.lock().unwrap();
+        for im in images {
+            seen.push(im[0]);
+        }
+        Ok(images.iter().map(|_| vec![0]).collect())
+    }
+
+    fn label(&self) -> String {
+        "recording-gated".to_string()
+    }
+}
+
+/// The live worker drains a mixed two-tier backlog in EXACTLY the order the
+/// pure [`wfq_schedule`] reference interpreter predicts — the law the
+/// simulator and the policy-search objectives assume.
+///
+/// Construction: batch size 1 makes every WFQ pick its own batch. A
+/// batch-tier plug occupies the worker first (a batch-tier pick leaves the
+/// deficit counters exactly at the fresh-state values the reference
+/// interpreter starts from), the backlog accumulates behind it in the
+/// channel, and releasing the gate drains it one pick per batch.
+#[test]
+fn live_worker_drains_a_mixed_backlog_in_wfq_reference_order() {
+    let (gate_tx, gate_rx) = mpsc::channel::<()>();
+    let (entered_tx, entered_rx) = mpsc::channel::<()>();
+    let seen = Arc::new(Mutex::new(Vec::new()));
+    let svc = InferenceService::start(
+        RecordingGatedExecutor {
+            gate: gate_rx,
+            entered: entered_tx,
+            seen: Arc::clone(&seen),
+        },
+        1,
+    );
+    let shard = Shard::from_service("net", 0, 16, svc);
+
+    // Batch-tier admission is capped at the share of the TOTAL outstanding
+    // count, so the batch backlog must be in before interactive fills the
+    // queue: plug + 3 batch requests stay under `batch_queue_share(16)`.
+    assert_eq!(batch_queue_share(16), 4, "share law moved; rebuild this test's arithmetic");
+    let plug = shard.try_submit_prioritized(vec![99], Priority::Batch).expect("plug admitted");
+    entered_rx.recv().expect("worker entered the plug batch");
+    let mut tickets = Vec::new();
+    for v in [11, 12, 13] {
+        tickets.push(shard.try_submit_prioritized(vec![v], Priority::Batch).expect("batch"));
+    }
+    for v in [1, 2, 3] {
+        tickets.push(shard.try_submit_prioritized(vec![v], Priority::Interactive).expect("int"));
+    }
+    // One gate token per batch: 7 requests at batch size 1 = 7 batches.
+    for _ in 0..7 {
+        gate_tx.send(()).expect("worker alive");
+    }
+    plug.wait().expect("plug served");
+    for t in tickets {
+        t.wait().expect("backlog served");
+    }
+    shard.shutdown();
+
+    let reference: Vec<i32> = wfq_schedule(&[vec![1, 2, 3], vec![11, 12, 13]])
+        .into_iter()
+        .map(|(_, v)| v)
+        .collect();
+    assert_eq!(
+        reference,
+        vec![1, 2, 3, 11, 12, 13],
+        "reference interpreter pins the 3:1 replenish law"
+    );
+    let seen = seen.lock().unwrap().clone();
+    assert_eq!(seen[0], 99, "plug batch must be served first");
+    assert_eq!(
+        &seen[1..],
+        &reference[..],
+        "live worker's drain order diverged from the wfq_schedule reference"
+    );
+}
+
+/// A wedged worker must look identical on both planes: the live executor
+/// blocked inside `infer_batch` and the simulator's wedged replica both
+/// pile the same backlog into one recovery batch, emit the same per-kind
+/// span counts through the shared [`Telemetry`] sink, and keep stats
+/// readable mid-wedge (the flight recorder never blocks on a sick worker).
+#[test]
+fn wedged_worker_emits_identical_span_counts_live_and_simulated() {
+    // --- live: one observed replica, wedged inside batch 1 of 1 request ---
+    let live = Arc::new(Telemetry::new());
+    let scope = live.scope_for("net", 0);
+    let (gate_tx, gate_rx) = mpsc::channel::<()>();
+    let (entered_tx, entered_rx) = mpsc::channel::<()>();
+    let seen = Arc::new(Mutex::new(Vec::new()));
+    let svc = InferenceService::start_factory_observed(
+        move || Ok(RecordingGatedExecutor { gate: gate_rx, entered: entered_tx, seen }),
+        8,
+        CoalescePolicy::fixed(Duration::from_micros(100)),
+        Some(scope.clone()),
+    );
+    let shard = Shard::from_service("net", 0, 16, svc).observed(scope);
+    let first = shard.try_submit(vec![0]).expect("first admitted");
+    entered_rx.recv().expect("worker wedged inside batch 1");
+    let tickets: Vec<_> =
+        (1..8).map(|k| shard.try_submit(vec![k]).expect("queued behind wedge")).collect();
+    // Stats stay readable while the worker is wedged.
+    let mid = shard.stats();
+    assert_eq!(mid.queue_depth, 8, "8 outstanding while wedged");
+    assert_eq!(mid.service.batches, 0, "no batch completed yet");
+    gate_tx.send(()).expect("release batch 1");
+    gate_tx.send(()).expect("release recovery batch");
+    first.wait().expect("wedged request served");
+    for t in tickets {
+        t.wait().expect("backlog served after wake");
+    }
+    let live_stats = shard.stats();
+    assert_eq!(live_stats.service.requests, 8);
+    assert_eq!(live_stats.service.batches, 2, "wedge coalesces the backlog into [1, 7]");
+    shard.shutdown();
+
+    // --- sim: the same timeline on the virtual clock ---
+    let sim = Arc::new(Telemetry::new());
+    let mut sf = SimFleet::new(&[SimServiceModel::new("net", 1.0, 16, 1).with_batching(8, 0.1)])
+        .expect("sim fleet");
+    sf.set_telemetry(Arc::clone(&sim));
+    assert!(matches!(sf.offer("net", 0).expect("offer"), Admission::Admitted { .. }));
+    for k in 1u64..8 {
+        let adm = sf.offer("net", k * 10_000).expect("offer");
+        assert!(matches!(adm, Admission::Admitted { .. }), "arrival {k} rejected");
+    }
+    // Wedge past the in-flight completion (1 ms service): the first request
+    // finishes on time, the 7 queued behind it defer to the 3 ms wake.
+    assert!(sf.wedge_replica("net", 0, 3_000_000), "replica exists");
+    sf.run_until(2_000_000);
+    let mid = sf.stats();
+    assert_eq!(mid.shards[0].queue_depth, 7, "stats stay instant while wedged");
+    assert_eq!(mid.shards[0].service.requests, 1, "in-flight batch completed on time");
+    sf.drain();
+    let sim_stats = sf.stats();
+    assert_eq!(sim_stats.shards[0].service.requests, 8);
+    assert_eq!(sim_stats.shards[0].service.batches, 2, "same [1, 7] batch shape");
+
+    let live_counts = live.span_kind_counts();
+    let sim_counts = sim.span_kind_counts();
+    assert_eq!(live_counts, sim_counts, "span timelines diverged under the wedge");
+    assert_eq!(live_counts["window_open"], 2, "one window per batch on both planes");
+    assert_eq!(live_counts["guard_release"], 8, "one release per request on both planes");
+}
+
+/// Two-network fleet plan for the e2e chaos run: a and b, floors at the
+/// seeded replica counts so idle ticks never scale below the fault rig's
+/// assumptions, headroom to 4 so overload recovery can scale up.
+fn chaos_scaler_plan() -> FleetPlan {
+    let platform = Platform::zcu104();
+    let unit = ResourceVector::new(1_000, 0, 0, 0, 100);
+    let net = |name: &str| NetworkPlan {
+        network: name.to_string(),
+        unit,
+        predicted_ms: 0.5,
+        fill_ms: 0.1,
+        util_frac: 100.0 / 1382.0,
+        replicas: 2,
+        min_replicas: 2,
+        max_replicas: 4,
+        weight: 1.0,
+    };
+    FleetPlan {
+        platform: platform.clone(),
+        cap: 0.8,
+        networks: vec![net("a"), net("b")],
+        total: unit.scaled(4),
+        utilization: platform.utilization(&unit.scaled(4)),
+    }
+}
+
+fn chaos_fleet() -> SimFleet {
+    SimFleet::new(&[
+        SimServiceModel::new("a", 0.5, 8, 2).on_platform("dev0", 0.2),
+        SimServiceModel::new("b", 0.5, 8, 2).on_platform("dev1", 0.2),
+    ])
+    .expect("two-device fleet")
+}
+
+fn chaos_trace() -> Trace {
+    Scenario::new(
+        ScenarioShape::Steady,
+        vec![("a".to_string(), 1.0), ("b".to_string(), 1.0)],
+        800.0,
+        100.0,
+        42,
+    )
+    .arrivals()
+}
+
+/// All five fault classes on one timeline, with the device failure paired
+/// with a rebind so the dead network comes back — the controller only sees
+/// networks that report SLO rows, so an unrebound device is unrecoverable
+/// by design and would (correctly) fail the recovery assertion.
+fn chaos_full_plan() -> ChaosPlan {
+    ChaosPlan::new(0xC0FFEE, 0.10)
+        .with_fault(ChaosFault::WedgeReplica {
+            at_ms: 20.0,
+            network: "a".to_string(),
+            ordinal: 0,
+            stall_ms: 15.0,
+        })
+        .with_fault(ChaosFault::KillReplica { at_ms: 30.0, network: "b".to_string() })
+        .with_fault(ChaosFault::FailDevice { at_ms: 50.0, device: "dev0".to_string() })
+        .with_fault(ChaosFault::RebindDevice {
+            at_ms: 58.0,
+            device: "dev0".to_string(),
+            network: "a".to_string(),
+            replicas: 2,
+            downtime_ms: 4.0,
+        })
+        .with_fault(ChaosFault::BurstStorm { at_ms: 70.0, len_ms: 15.0, factor: 2 })
+}
+
+fn run_e2e_chaos(trace: &Trace) -> ChaosReport {
+    let policy = SloPolicy { window: 1, ..SloPolicy::default() };
+    let templates = vec![
+        ShardSpec::golden("a").with_queue_cap(8),
+        ShardSpec::golden("b").with_queue_cap(8),
+    ];
+    let mut scalers = [Autoscaler::new(chaos_scaler_plan(), policy.clone(), templates)];
+    let opts = SimRunOptions { control_interval_ms: 5.0, cooldown_ticks: 8 };
+    let mut fleet = chaos_fleet();
+    run_chaos(&mut fleet, trace, &mut scalers, &policy, &chaos_full_plan(), &opts)
+        .expect("chaos run")
+}
+
+/// The whole loop, end to end: every fault class injected against the
+/// PRODUCTION [`Autoscaler`], every fault recovered within a handful of
+/// control ticks, conservation intact, no interactive request ever shed —
+/// and the entire report a pure function of its inputs (two fresh runs are
+/// byte-identical, which is what lets CI diff archived chaos reports).
+#[test]
+fn chaos_run_with_production_autoscaler_recovers_every_fault_deterministically() {
+    let trace = chaos_trace();
+    let one = run_e2e_chaos(&trace);
+    let two = run_e2e_chaos(&trace);
+    assert_eq!(one.to_json(), two.to_json(), "chaos report must be byte-deterministic");
+
+    assert!(one.conserved, "offered == completed + rejected + shed per network per tier");
+    assert_eq!(one.admitted, one.completed, "drained run completes everything it admitted");
+    assert_eq!(
+        one.shed_tier[Priority::Interactive.index()],
+        0,
+        "interactive work is never shed"
+    );
+    assert_eq!(one.faults.len(), 5, "all five fault classes injected");
+    for f in &one.faults {
+        assert!(f.recovered, "fault `{}` never left Overloaded: {:?}", f.label, one.faults);
+    }
+    let bound = 6.0 * 5.0;
+    assert!(
+        one.worst_recovery_ms() <= bound,
+        "worst recovery {:.1} ms exceeds {bound} ms (6 control ticks)",
+        one.worst_recovery_ms()
+    );
+    // The storm window amplifies arrivals beyond the base trace.
+    assert!(
+        one.offered > trace.len() as u64,
+        "storm should amplify offered load: {} offered vs {} traced",
+        one.offered,
+        trace.len()
+    );
+    let fairness = one.tier_fairness();
+    assert!(
+        fairness > 0.0 && fairness <= 1.0,
+        "fairness must be a capped completion-rate ratio, got {fairness}"
+    );
+}
+
+/// Sustained 2x overload with a 90/10 interactive/batch mix: overload
+/// protection sheds batch (never interactive), rejects interactive (never
+/// batch), and interactive's completion rate stays at least batch's — while
+/// the pure WFQ law still guarantees batch its 1-in-4 drain share for as
+/// long as both tiers are backlogged (the anti-starvation floor).
+#[test]
+fn overload_sheds_batch_first_but_wfq_floors_its_drain_share() {
+    let mut fleet =
+        SimFleet::new(&[SimServiceModel::new("hot", 1.0, 8, 1)]).expect("single hot replica");
+    let trace = Scenario::new(
+        ScenarioShape::Steady,
+        vec![("hot".to_string(), 1.0)],
+        2_000.0,
+        200.0,
+        7,
+    )
+    .arrivals();
+    let policy = SloPolicy::default();
+    let opts = SimRunOptions { control_interval_ms: 5.0, cooldown_ticks: 2 };
+    let mut scalers: [Autoscaler; 0] = [];
+    let plan = ChaosPlan::new(0xFA1, 0.10);
+    let r = run_chaos(&mut fleet, &trace, &mut scalers, &policy, &plan, &opts)
+        .expect("overload run");
+
+    let i = Priority::Interactive.index();
+    let b = Priority::Batch.index();
+    assert!(r.conserved, "conservation must survive sustained overload");
+    assert_eq!(r.offered, trace.len() as u64, "no storm: offered == traced");
+    assert_eq!(r.shed_tier[i], 0, "interactive is never shed");
+    assert_eq!(r.rejected_tier[b], 0, "batch is shed, never rejected");
+    assert!(r.shed_tier[b] > 0, "2x overload must shed batch work");
+    assert!(r.rejected_tier[i] > 0, "2x overload must reject interactive past cap");
+    assert!(r.completed_tier[b] > 0, "admitted batch work still completes");
+    // Interactive protection: its completion rate >= batch's (cross-
+    // multiplied to stay in integers).
+    assert!(
+        r.completed_tier[i] * r.offered_tier[b] >= r.completed_tier[b] * r.offered_tier[i],
+        "interactive completion rate fell below batch under overload: {:?} / {:?}",
+        r.completed_tier,
+        r.offered_tier
+    );
+    assert_eq!(r.scale_ups + r.scale_downs, 0, "no controllers attached");
+
+    // The anti-starvation floor, straight from the reference interpreter:
+    // with 90 interactive and 10 batch requests backlogged, batch holds its
+    // 1-in-4 pick share (weights 3:1) until its queue empties at pick 40.
+    let interactive: Vec<u32> = (0..90).collect();
+    let batch: Vec<u32> = (0..10).collect();
+    let order = wfq_schedule(&[interactive, batch]);
+    assert_eq!(order.len(), 100);
+    for (k, (tier, _)) in order.iter().enumerate().take(40) {
+        let expect = if k % 4 == 3 { Priority::Batch } else { Priority::Interactive };
+        assert_eq!(*tier, expect, "pick {k} broke the 3:1 cadence");
+    }
+    assert!(
+        order.iter().skip(40).all(|(t, _)| *t == Priority::Interactive),
+        "batch queue empties after its 10th pick; the tail is all interactive"
+    );
+}

@@ -168,6 +168,7 @@ fn simulated_admission_matches_a_real_gated_fleet_on_the_same_trace() {
         .map(|i| match sim.offer("net", i).unwrap() {
             Admission::Admitted { replica } => Some(replica),
             Admission::Rejected => None,
+            Admission::Shed => unreachable!("interactive offers are never shed"),
         })
         .collect();
     assert_eq!(

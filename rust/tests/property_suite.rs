@@ -343,3 +343,90 @@ fn prop_allocations_never_exceed_any_platform_budget_column() {
         },
     );
 }
+
+#[test]
+fn prop_chaos_conserves_every_request_per_tier() {
+    // The chaos engine's ledger law: across random seeds, batch fractions
+    // and every fault class, `offered == completed + rejected + shed` holds
+    // globally AND per tier — faults may delay or deny work, but no request
+    // is ever lost or double-counted, which is what makes recovery-to-SLO
+    // a trustworthy objective.
+    use convkit::fleetplan::{Autoscaler, SloPolicy};
+    use convkit::simulate::{
+        run_chaos, ChaosFault, ChaosPlan, Scenario, ScenarioShape, SimFleet, SimRunOptions,
+        SimServiceModel,
+    };
+
+    forall(
+        &Config { cases: 30, ..Default::default() },
+        "chaos conserves offered == completed + rejected + shed",
+        |rng| (rng.range_i64(1, 1 << 20), rng.range_i64(0, 1 << 20)),
+        shrink_pair(0),
+        |&(a, b)| {
+            let seed = a as u64;
+            let batch_frac = (seed % 100) as f64 / 100.0;
+            let fault = match (b as u64) % 5 {
+                0 => ChaosFault::KillReplica { at_ms: 25.0, network: "a".to_string() },
+                1 => ChaosFault::WedgeReplica {
+                    at_ms: 10.0,
+                    network: "a".to_string(),
+                    ordinal: 0,
+                    stall_ms: 20.0,
+                },
+                2 => ChaosFault::FailDevice { at_ms: 30.0, device: "dev1".to_string() },
+                // Rebinding dev0 AWAY from its network leaves `a` dead for
+                // the rest of the run — the harshest accounting case.
+                3 => ChaosFault::RebindDevice {
+                    at_ms: 40.0,
+                    device: "dev0".to_string(),
+                    network: "b".to_string(),
+                    replicas: 2,
+                    downtime_ms: 5.0,
+                },
+                _ => ChaosFault::BurstStorm { at_ms: 20.0, len_ms: 30.0, factor: 3 },
+            };
+            let mut fleet = SimFleet::new(&[
+                SimServiceModel::new("a", 0.5, 8, 2).on_platform("dev0", 0.2),
+                SimServiceModel::new("b", 0.5, 8, 2).on_platform("dev1", 0.2),
+            ])
+            .map_err(|e| e.to_string())?;
+            let trace = Scenario::new(
+                ScenarioShape::Steady,
+                vec![("a".to_string(), 1.0), ("b".to_string(), 1.0)],
+                300.0,
+                80.0,
+                seed,
+            )
+            .arrivals();
+            let plan = ChaosPlan::new(seed, batch_frac).with_fault(fault);
+            let opts = SimRunOptions { control_interval_ms: 5.0, cooldown_ticks: 3 };
+            let mut scalers: [Autoscaler; 0] = [];
+            let policy = SloPolicy::default();
+            let r = run_chaos(&mut fleet, &trace, &mut scalers, &policy, &plan, &opts)
+                .map_err(|e| e.to_string())?;
+            if !r.conserved {
+                return Err(format!("engine reported a conservation break: {}", r.to_json()));
+            }
+            let tier_sum: u64 = r.offered_tier.iter().sum();
+            if r.offered != tier_sum {
+                return Err(format!("tier split lost arrivals: {} != {tier_sum}", r.offered));
+            }
+            if r.offered != r.completed + r.rejected + r.shed {
+                return Err(format!(
+                    "global ledger broke: {} != {} + {} + {}",
+                    r.offered, r.completed, r.rejected, r.shed
+                ));
+            }
+            for t in 0..r.offered_tier.len() {
+                let back = r.completed_tier[t] + r.rejected_tier[t] + r.shed_tier[t];
+                if r.offered_tier[t] != back {
+                    return Err(format!(
+                        "tier {t} ledger broke: {} != {back}",
+                        r.offered_tier[t]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}

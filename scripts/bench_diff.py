@@ -60,6 +60,18 @@ models or the engine changed — advisory, never gated (the *overhead* of
 tracing is gated separately through the ``obs_trace_overhead`` bench
 section).
 
+And for the chaos report (``convkit chaos --out``, top-level key
+``chaos``): pass ``--chaos CURRENT_CHAOS.json PREVIOUS_CHAOS.json`` to
+append the fault-injection scorecard — conservation, shed/rejected counts
+by tier, per-fault recovery-to-SLO deltas and tier fairness. The report is
+byte-deterministic for a fixed seed/plan (CI separately runs the command
+twice and ``cmp``s the outputs), so any delta is a real scheduling or
+control change — advisory, never gated. The *overhead* of the weighted-
+fair tier pick is gated through the ``router_wfq_overhead`` bench section,
+which carries an extra intra-run bound: ``router_wfq`` must stay within
+5% of ``router_least_outstanding`` in the CURRENT baseline, regardless of
+the archived one.
+
 Usage: bench_diff.py CURRENT.json PREVIOUS.json [--regress-pct 25]
                      [--fail-on SECTION]... [--fail-pct 20]
                      [--simulate CURRENT_SIM.json PREVIOUS_SIM.json]
@@ -67,6 +79,7 @@ Usage: bench_diff.py CURRENT.json PREVIOUS.json [--regress-pct 25]
                      [--pool CURRENT_POOL.json PREVIOUS_POOL.json]
                      [--obs CURRENT_OBS.json PREVIOUS_OBS.json]
                      [--drift CURRENT_DRIFT.json PREVIOUS_DRIFT.json]
+                     [--chaos CURRENT_CHAOS.json PREVIOUS_CHAOS.json]
 """
 
 from __future__ import annotations
@@ -141,13 +154,25 @@ def diff(current: dict, previous: dict, regress_pct: float) -> str:
     return "\n".join(lines) + "\n"
 
 
+# Intra-run bound for the weighted-fair router section: the WFQ pick must
+# stay within this percentage of the plain least-outstanding scan measured
+# in the SAME baseline (runner-speed independent, so it can be hard-gated
+# even though both absolute timings wobble with the machine).
+WFQ_SECTION = "router_wfq_overhead"
+WFQ_BASE_BENCH = "router_least_outstanding"
+WFQ_BENCH = "router_wfq"
+WFQ_OVERHEAD_PCT = 5.0
+
+
 def gate(current: dict, previous: dict, sections: list, fail_pct: float) -> list:
     """Hard-gate failures: entries in a gated section slower by > fail_pct.
 
     Returns a list of human-readable failure strings (empty = gate passes).
     With no previous baseline there is nothing to regress against, so the
     gate passes vacuously — but a gated section missing from the *current*
-    baseline is a failure (the bench was removed or did not run).
+    baseline is a failure (the bench was removed or did not run). Gating
+    ``router_wfq_overhead`` additionally enforces the intra-run WFQ bound
+    (see ``WFQ_OVERHEAD_PCT``), which needs no previous baseline at all.
     """
     failures = []
     for section in sections:
@@ -157,6 +182,22 @@ def gate(current: dict, previous: dict, sections: list, fail_pct: float) -> list
                 f"{section}: gated section missing from the current baseline"
             )
             continue
+        if section == WFQ_SECTION:
+            base = cur.get(WFQ_BASE_BENCH, 0.0)
+            wfq = cur.get(WFQ_BENCH, 0.0)
+            if base <= 0 or wfq <= 0:
+                failures.append(
+                    f"{section}: needs both {WFQ_BASE_BENCH} and {WFQ_BENCH} "
+                    "in the current baseline"
+                )
+            else:
+                pct = 100.0 * (wfq - base) / base
+                if pct > WFQ_OVERHEAD_PCT:
+                    failures.append(
+                        f"{section}: {WFQ_BENCH} {fmt_ns(wfq)} is "
+                        f"{pct:+.1f}% over {WFQ_BASE_BENCH} {fmt_ns(base)} "
+                        f"(intra-run limit +{WFQ_OVERHEAD_PCT:.0f}%)"
+                    )
         if not previous:
             continue
         prev = previous.get(section, {})
@@ -533,6 +574,89 @@ def diff_drift(current: dict, previous: dict) -> str:
     return "\n".join(lines) + "\n"
 
 
+def load_chaos(path: str) -> dict:
+    """The `chaos` object of a chaos report (empty when unreadable)."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"note: could not read {path}: {e}", file=sys.stderr)
+        return {}
+    return doc.get("chaos", {})
+
+
+def tier_cell(doc: dict, key: str) -> str:
+    """Render a `[interactive, batch]` tier counter pair."""
+    pair = doc.get(key, [0, 0])
+    if not isinstance(pair, list) or len(pair) != 2:
+        return "?"
+    return f"{pair[0]} / {pair[1]}"
+
+
+def diff_chaos(current: dict, previous: dict) -> str:
+    lines = ["## Chaos-run diff (`convkit chaos`)", ""]
+    if not current:
+        lines.append("_No current chaos report._")
+        return "\n".join(lines) + "\n"
+    faults = current.get("faults", [])
+    recovered = sum(1 for f in faults if f.get("recovered"))
+    conserved = "conserved" if current.get("conserved") else "**LEAKED REQUESTS**"
+    lines.append(
+        f"Seed {current.get('seed', '?')}, batch fraction "
+        f"{current.get('batch_frac', 0)}: {current.get('offered', 0)} offered "
+        f"over {current.get('virtual_ms', 0)} virtual ms, {conserved}; "
+        f"{recovered}/{len(faults)} fault(s) recovered."
+    )
+    lines.append("")
+    if not previous:
+        lines.append("_No previous chaos-report artifact — nothing to diff._")
+        return "\n".join(lines) + "\n"
+    lines.append("| metric | previous | current | delta |")
+    lines.append("|---|---:|---:|---:|")
+    for key in ["offered", "admitted", "rejected", "shed", "completed"]:
+        c = float(current.get(key, 0))
+        p = float(previous.get(key, 0))
+        lines.append(f"| {key} | {p:.0f} | {c:.0f} | {fmt_delta(c, p)} |")
+    for key in ["rejected_tier", "shed_tier", "completed_tier"]:
+        lines.append(
+            f"| {key} (int / batch) | {tier_cell(previous, key)} "
+            f"| {tier_cell(current, key)} | |"
+        )
+    for key, fmt in [("worst_recovery_ms", "{:.3f}"), ("tier_fairness", "{:.4f}")]:
+        c = float(current.get(key, 0.0))
+        p = float(previous.get(key, 0.0))
+        lines.append(
+            f"| {key} | {fmt.format(p)} | {fmt.format(c)} | {fmt_delta(c, p)} |"
+        )
+    lines.append("")
+    prev_faults = {f.get("label", f.get("kind", "?")): f
+                   for f in previous.get("faults", [])}
+    cur_names = set()
+    lines.append("| fault | previous recovery | current recovery | recovered |")
+    lines.append("|---|---:|---:|---|")
+    for f in faults:
+        name = f.get("label", f.get("kind", "?"))
+        cur_names.add(name)
+        c_ms = float(f.get("recovery_ms", 0.0))
+        c_ok = "yes" if f.get("recovered") else "NO"
+        p = prev_faults.get(name)
+        if p is None:
+            lines.append(f"| {name} | _new_ | {c_ms:.3f} ms | {c_ok} |")
+            continue
+        p_ms = float(p.get("recovery_ms", 0.0))
+        p_ok = "yes" if p.get("recovered") else "NO"
+        ok = c_ok if p_ok == c_ok else f"{p_ok} → {c_ok}"
+        lines.append(f"| {name} | {p_ms:.3f} ms | {c_ms:.3f} ms | {ok} |")
+    for name in sorted(set(prev_faults) - cur_names):
+        p = prev_faults[name]
+        lines.append(
+            f"| {name} | {float(p.get('recovery_ms', 0.0)):.3f} ms "
+            f"| _removed_ | |"
+        )
+    lines.append("")
+    return "\n".join(lines) + "\n"
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("current")
@@ -556,6 +680,9 @@ def main() -> int:
     ap.add_argument("--drift", nargs=2, metavar=("CUR_DRIFT", "PREV_DRIFT"),
                     help="also diff two `convkit simulate --drift-out` "
                          "model-drift reports")
+    ap.add_argument("--chaos", nargs=2, metavar=("CUR_CHAOS", "PREV_CHAOS"),
+                    help="also diff two `convkit chaos --out` fault-injection "
+                         "reports")
     args = ap.parse_args()
     current = load_sections(args.current)
     previous = load_sections(args.previous)
@@ -577,6 +704,9 @@ def main() -> int:
     if args.drift:
         cur_drift, prev_drift = args.drift
         print(diff_drift(load_drift(cur_drift), load_drift(prev_drift)))
+    if args.chaos:
+        cur_chaos, prev_chaos = args.chaos
+        print(diff_chaos(load_chaos(cur_chaos), load_chaos(prev_chaos)))
     if args.fail_on:
         failures = gate(current, previous, args.fail_on, args.fail_pct)
         if failures:
